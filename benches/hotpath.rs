@@ -1,0 +1,134 @@
+//! L3 hot-path microbenches (the §Perf baseline): the pieces on or
+//! near the request path, measured in real wall time.
+//!
+//! * PJRT execute (per chunk, per mult) for both matmul geometries;
+//! * FIFO push/pop round trip;
+//! * link-arbiter accounting per chunk;
+//! * JSON encode/decode of an RPC envelope;
+//! * end-to-end RPC round trip over loopback TCP;
+//! * gcs/ucs controller access (lock + charge).
+
+use std::sync::Arc;
+
+use rc3e::fifo::AsyncFifo;
+use rc3e::middleware::{Client, ManagementServer};
+use rc3e::pcie::BandwidthArbiter;
+use rc3e::runtime::{Engine, Tensor};
+use rc3e::testing::Bencher;
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::json::Json;
+use rc3e::util::rng::Rng;
+
+fn bench_engine() {
+    let dir = rc3e::runtime::artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("engine: SKIPPED (run `make artifacts`)");
+        return;
+    }
+    let mut engine = Engine::new(&dir).unwrap();
+    let mut rng = Rng::new(7);
+    for (artifact, batch, n) in
+        [("matmul16_b256", 256usize, 16usize), ("matmul32_b64", 64, 32)]
+    {
+        engine.load(artifact).unwrap();
+        let xs = Tensor::random(vec![batch, n, n], &mut rng);
+        let ys = Tensor::random(vec![batch, n, n], &mut rng);
+        let r = Bencher::new(3, 20).run(&format!("pjrt {artifact}"), || {
+            engine
+                .matmul(artifact, xs.clone(), ys.clone())
+                .unwrap()
+                .data[0]
+        });
+        let per_mult_us = r.median_s / batch as f64 * 1e6;
+        let in_mbps =
+            (2 * batch * n * n * 4) as f64 / 1e6 / r.median_s;
+        println!(
+            "{}\n    -> {per_mult_us:.2} us/mult, input-side {in_mbps:.0} \
+             MB/s on this host",
+            r.line()
+        );
+    }
+}
+
+fn bench_fifo() {
+    let fifo = AsyncFifo::rc2f_default("bench");
+    let chunk = vec![0u8; 256 * 1024];
+    let r = Bencher::new(10, 1000).run("fifo push+pop 256KiB", || {
+        fifo.push(chunk.clone()).unwrap();
+        fifo.pop().unwrap()
+    });
+    println!("{}", r.line());
+}
+
+fn bench_arbiter() {
+    let clock = VirtualClock::new();
+    let arb = BandwidthArbiter::new(clock, 800.0);
+    let mut s = arb.open_stream();
+    let r = Bencher::new(10, 1000).run("arbiter transfer accounting", || {
+        s.transfer(256 * 1024)
+    });
+    println!("{}", r.line());
+}
+
+fn bench_json() {
+    let envelope = Json::obj(vec![
+        ("method", Json::from("stream")),
+        (
+            "params",
+            Json::obj(vec![
+                ("user", Json::from("user-3")),
+                ("alloc", Json::from("alloc-17")),
+                ("core", Json::from("matmul16")),
+                ("mults", Json::from(100_000u64)),
+            ]),
+        ),
+    ]);
+    let text = envelope.to_string();
+    let r = Bencher::new(10, 2000).run("json encode RPC envelope", || {
+        envelope.to_string()
+    });
+    println!("{}", r.line());
+    let r = Bencher::new(10, 2000).run("json parse RPC envelope", || {
+        Json::parse(&text).unwrap()
+    });
+    println!("{}", r.line());
+}
+
+fn bench_rpc() {
+    let hv = Arc::new(
+        rc3e::hypervisor::Hypervisor::boot(
+            &rc3e::config::ClusterConfig::single_vc707(),
+            VirtualClock::new(),
+            rc3e::hypervisor::PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    let server = ManagementServer::spawn(hv, 69.0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let r = Bencher::new(5, 200).run("rpc hello round trip (wall)", || {
+        client.call("hello", Json::obj(vec![])).unwrap()
+    });
+    println!("{}", r.line());
+}
+
+fn bench_controller() {
+    let clock = VirtualClock::new();
+    let ids: Vec<_> = (0..4).map(rc3e::util::ids::VfpgaId).collect();
+    let c = rc3e::rc2f::Controller::new(clock, &ids);
+    let r = Bencher::new(10, 2000).run("gcs read (wall, ex-model)", || {
+        c.gcs_read(rc3e::rc2f::controller::gcs_reg::STATUS).unwrap()
+    });
+    println!("{}", r.line());
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    println!("L3 hot-path microbenches (wall time)\n");
+    bench_engine();
+    bench_fifo();
+    bench_arbiter();
+    bench_json();
+    bench_rpc();
+    bench_controller();
+    println!("\nhotpath OK");
+}

@@ -1,0 +1,163 @@
+//! Table II regenerator: RC2F component resource utilization,
+//! configuration-space access latency and per-core max FIFO
+//! throughput for designs with 1, 2 and 4 vFPGAs.
+//!
+//! Resources come from the component model (calibrated, asserted
+//! exact); latency and throughput are *measured* on the live system:
+//! gcs/ucs accesses through a controller charging the virtual clock,
+//! and loopback-style streams saturating the link arbiter.
+
+use std::sync::Arc;
+
+use rc3e::pcie::{BandwidthArbiter, DeviceLink, LinkParams};
+use rc3e::rc2f::components::{ComponentModel, Rc2fDesign};
+use rc3e::rc2f::controller::{gcs_reg, Controller};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::ids::VfpgaId;
+use rc3e::util::table::Table;
+
+/// Measure per-core FIFO throughput with `n` concurrent saturating
+/// streams on one link (loopback cores: link-bound by construction).
+fn measured_fifo_mbps(n: usize) -> f64 {
+    let clock = VirtualClock::new();
+    let link = DeviceLink::new(Arc::clone(&clock), LinkParams::gen2_x4());
+    let chunk: u64 = 256 * 1024;
+    let per_stream: u64 = 100_000_000; // 100 MB each
+    let handles: Vec<_> = (0..n).map(|_| link.inbound.open_stream()).collect();
+    let mut worst = f64::MAX;
+    for mut s in handles {
+        let start = s.cursor();
+        for _ in 0..(per_stream / chunk) {
+            s.transfer(chunk);
+        }
+        let secs = s.elapsed_since(start).as_secs_f64();
+        worst = worst.min(per_stream as f64 / 1e6 / secs);
+    }
+    worst
+}
+
+/// Measure the config-space access latency of an n-slot design:
+/// one gcs status read + one ucs read (the paper's "latency" row is
+/// gcs + ucs total).
+fn measured_config_latency_ms(n: usize) -> f64 {
+    let clock = VirtualClock::new();
+    let ids: Vec<VfpgaId> = (0..n as u64).map(VfpgaId).collect();
+    let c = Controller::new(Arc::clone(&clock), &ids);
+    let v0 = clock.now();
+    c.gcs_read(gcs_reg::STATUS).unwrap();
+    c.ucs_read(VfpgaId(0), 0).unwrap();
+    clock.since(v0).as_millis_f64()
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    let device = rc3e::fpga::BoardSpec::vc707().resources;
+
+    // ---------------- resource rows --------------------------------
+    let mut res = Table::new(
+        "Table II: RC2F component resources (XC7VX485T)",
+        &["component", "LUT", "FF", "BRAM", "paper LUT/FF/BRAM"],
+    );
+    let pcie = ComponentModel::pcie_endpoint();
+    let gcs = ComponentModel::control_gcs();
+    res.row(&[
+        "PCIe endpoint".into(),
+        pcie.lut.to_string(),
+        pcie.ff.to_string(),
+        pcie.bram.to_string(),
+        "3,268 / 3,592 / 8".into(),
+    ]);
+    res.row(&[
+        "RC2F control (gcs)".into(),
+        gcs.lut.to_string(),
+        gcs.ff.to_string(),
+        gcs.bram.to_string(),
+        "125 / 255 / 1".into(),
+    ]);
+    let paper_totals = [
+        (1usize, (7_082u64, 6_974u64, 13u64), (2.3, 1.2, 1.3)),
+        (2, (7_807, 7_637, 17), (2.6, 1.3, 1.7)),
+        (4, (8_532, 8_318, 25), (2.8, 1.4, 2.3)),
+    ];
+    for (n, (plut, pff, pbram), _) in paper_totals {
+        let design = Rc2fDesign::new(n);
+        let total = design.total_resources();
+        res.row(&[
+            format!("total, {n} vFPGA design"),
+            total.lut.to_string(),
+            total.ff.to_string(),
+            total.bram.to_string(),
+            format!("{plut} / {pff} / {pbram}"),
+        ]);
+        assert_eq!(total.lut, plut);
+        assert_eq!(total.ff, pff);
+        assert_eq!(total.bram, pbram);
+    }
+    println!("{}", res.render());
+
+    // ---------------- utilization + latency + throughput -----------
+    let mut t = Table::new(
+        "Table II: utilization, latency, per-core max throughput",
+        &[
+            "vFPGAs",
+            "util % (LUT/FF/BRAM)",
+            "paper util %",
+            "latency",
+            "paper",
+            "per-core max",
+            "paper",
+        ],
+    );
+    let paper_lat = [0.208, 0.221, 0.273];
+    let paper_tp = [798.0, 397.0, 196.0];
+    for (i, n) in [1usize, 2, 4].into_iter().enumerate() {
+        let design = Rc2fDesign::new(n);
+        let (lut, ff, bram, _) = design.utilization_pct(device);
+        let lat = measured_config_latency_ms(n);
+        let tp = measured_fifo_mbps(n);
+        let (_, _, pcts) = paper_totals[i];
+        t.row(&[
+            n.to_string(),
+            format!("{lut:.1} / {ff:.1} / {bram:.1}"),
+            format!("{} / {} / {}", pcts.0, pcts.1, pcts.2),
+            format!("{lat:.3} ms"),
+            format!("{:.3} ms", paper_lat[i]),
+            format!("{tp:.0} MB/s"),
+            format!("{:.0} MB/s", paper_tp[i]),
+        ]);
+        assert!(
+            (lat / paper_lat[i] - 1.0).abs() < 0.02,
+            "latency {n}v: {lat} vs {}",
+            paper_lat[i]
+        );
+        assert!(
+            (tp / paper_tp[i] - 1.0).abs() < 0.03,
+            "throughput {n}v: {tp} vs {}",
+            paper_tp[i]
+        );
+    }
+    println!("{}", t.render());
+
+    // Headline claim: <3% of the device for the 4-vFPGA basic design.
+    let max_pct = {
+        let (l, f, b, d) = Rc2fDesign::new(4).utilization_pct(device);
+        l.max(f).max(b).max(d)
+    };
+    assert!(max_pct < 3.0);
+    println!(
+        "headline check OK: 4-vFPGA basic design uses {max_pct:.1}% of the \
+         XC7VX485T (paper: <3%)"
+    );
+
+    // Arbiter sanity: aggregated throughput never exceeds the cap.
+    let clock = VirtualClock::new();
+    let arb = BandwidthArbiter::new(Arc::clone(&clock), 800.0);
+    let mut streams: Vec<_> = (0..4).map(|_| arb.open_stream()).collect();
+    for s in &mut streams {
+        s.transfer(10_000_000);
+    }
+    let agg =
+        arb.bytes_total() as f64 / 1e6 / clock.now().as_secs_f64();
+    assert!(agg <= 801.0, "aggregate {agg} exceeds link cap");
+    println!("aggregate link check OK: {agg:.0} MB/s <= 800 MB/s");
+}

@@ -1,0 +1,25 @@
+// Perf probe: wall-time composition of one stream.
+use std::sync::Arc;
+use rc3e::pcie::{DeviceLink, LinkParams};
+use rc3e::rc2f::{StreamConfig, StreamRunner};
+use rc3e::util::clock::VirtualClock;
+
+fn main() {
+    rc3e::util::logging::init();
+    for (name, cfg) in [
+        ("16x16", StreamConfig { validate_first_chunk: false, ..StreamConfig::matmul16(50_000) }),
+        ("16x16+val", StreamConfig::matmul16(50_000)),
+        ("32x32", StreamConfig { validate_first_chunk: false, ..StreamConfig::matmul32(20_000) }),
+    ] {
+        let clock = VirtualClock::new();
+        let link = DeviceLink::new(Arc::clone(&clock), LinkParams::gen2_x4());
+        let runner = StreamRunner::new(clock, link);
+        let out = runner.run(&cfg).unwrap();
+        println!(
+            "{name}: wall {:.3}s compute {:.3}s ({:.0}%) -> {:.0} MB/s wall",
+            out.wall_secs, out.compute_wall_secs,
+            100.0 * out.compute_wall_secs / out.wall_secs,
+            out.wall_mbps()
+        );
+    }
+}

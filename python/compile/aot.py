@@ -1,0 +1,117 @@
+"""AOT compile path: lower every registered user-core variant to HLO text.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).
+The HLO text parser on the Rust side reassigns ids, so text round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Besides the ``.hlo.txt`` module, a small ``.meta.json`` sidecar is
+written per variant carrying the shape/dtype contract the Rust runtime
+validates at load time — the same role the paper's bitfile metadata
+plays for vFPGA region compatibility.
+
+Run via ``make artifacts``; it is a no-op when artifacts are newer than
+their Python inputs (Make-level dependency check).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text.
+
+    ``return_tuple=False``: every registered variant returns exactly
+    one array, so the module root is that array directly. This lets
+    the Rust runtime read results with a single
+    ``copy_raw_to_host_sync`` instead of materializing a tuple Literal
+    (one fewer copy on the per-chunk hot path — EXPERIMENTS.md §Perf).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_meta(avals):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)} for a in avals
+    ]
+
+
+def export_variant(name: str, outdir: str) -> dict:
+    """Lower one variant; write <name>.hlo.txt + <name>.meta.json."""
+    lowered = model.lower_variant(name)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    args_info = jax_tree_leaves(lowered)
+    meta = {
+        "name": name,
+        "inputs": args_info["inputs"],
+        "outputs": args_info["outputs"],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "hlo_bytes": len(text),
+    }
+    with open(os.path.join(outdir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def jax_tree_leaves(lowered):
+    """Extract flat input/output shape+dtype lists from a Lowered."""
+    import jax
+
+    in_leaves = jax.tree_util.tree_leaves(lowered.in_avals)
+    out_leaves = jax.tree_util.tree_leaves(lowered.out_info)
+    return {
+        "inputs": _shape_meta(in_leaves),
+        "outputs": _shape_meta(out_leaves),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts",
+        help="artifact directory (default: ../artifacts)",
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated variant names (default: all)",
+    )
+    args = ap.parse_args()
+    outdir = args.out
+    # `make artifacts` passes a file path for compatibility with the
+    # original skeleton; accept either a dir or a path ending in .hlo.txt.
+    if outdir.endswith(".hlo.txt"):
+        outdir = os.path.dirname(outdir)
+    os.makedirs(outdir, exist_ok=True)
+
+    names = args.only.split(",") if args.only else list(model.VARIANTS)
+    manifest = {}
+    for name in names:
+        meta = export_variant(name, outdir)
+        manifest[name] = meta["sha256"]
+        print(f"wrote {name}: {meta['hlo_bytes']} chars")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Sentinel consumed by the Makefile dependency rule.
+    with open(os.path.join(outdir, "model.hlo.txt"), "w") as f:
+        f.write("# see per-variant artifacts; manifest.json lists them\n")
+
+
+if __name__ == "__main__":
+    main()

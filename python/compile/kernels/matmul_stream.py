@@ -1,0 +1,138 @@
+"""L1 Pallas kernel: the paper's streaming matrix-multiplication user core.
+
+The RC3E paper's example application (Section V) streams 100,000 matrix
+pairs through an HLS-generated multiply core sitting behind the RC2F
+FIFO interface. The TPU re-thinking of that design (DESIGN.md
+§Hardware-Adaptation):
+
+* the PCIe input FIFO becomes the grid's batch dimension — one matrix
+  pair per grid step is "popped" from HBM into VMEM by the BlockSpec
+  schedule, which Pallas double-buffers automatically (the role the
+  paper's asynchronous FIFOs play);
+* the HLS multiply datapath becomes one MXU matmul over the
+  VMEM-resident (N, N) tiles;
+* the output FIFO becomes the output BlockSpec writing the product tile
+  back to HBM.
+
+``interpret=True`` is mandatory on this image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode
+lowers to plain HLO ops, so the very same module text runs under the
+Rust PJRT runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Matrices per grid step. For the small paper geometries (16x16, 32x32,
+# fp32) a single pair underuses a VMEM tile; packing GROUP pairs per
+# grid step amortizes grid/launch overhead exactly the way the paper
+# streams 100k multiplications to amortize PCIe setup cost.
+DEFAULT_GROUP = 8
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One grid step: multiply a group of G matrix pairs resident in VMEM.
+
+    Block shapes are (G, N, N). A single dot_general with batch dims maps
+    each pair onto the MXU; fp32 accumulate is requested explicitly so the
+    result matches the f32 oracle bit-for-bit on CPU interpret mode.
+    """
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def matmul_stream(xs, ys, *, group=DEFAULT_GROUP):
+    """Streaming batched matmul: f32[B,N,N] x f32[B,N,N] -> f32[B,N,N].
+
+    B must be divisible by ``group`` (the AOT wrapper pads the final
+    chunk host-side; the Rust streaming path always sends full chunks).
+    """
+    b, n, _ = xs.shape
+    if b % group != 0:
+        raise ValueError(f"batch {b} not divisible by group {group}")
+    grid = (b // group,)
+    spec = pl.BlockSpec((group, n, n), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, n, n), jnp.float32),
+        interpret=True,
+    )(xs, ys)
+
+
+def _loopback_kernel(x_ref, o_ref):
+    """RC2F test-loopback: copy the input block unmodified."""
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def loopback_stream(xs, *, group=DEFAULT_GROUP):
+    """Identity over the stream — backs the RC2F 'test loopback' signal."""
+    b, n, _ = xs.shape
+    if b % group != 0:
+        raise ValueError(f"batch {b} not divisible by group {group}")
+    spec = pl.BlockSpec((group, n, n), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _loopback_kernel,
+        grid=(b // group,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(xs.shape, xs.dtype),
+        interpret=True,
+    )(xs)
+
+
+def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    """Elementwise a*x + y on a VMEM block (VPU, not MXU, bound)."""
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def saxpy_stream(a, xs, ys, *, group=DEFAULT_GROUP):
+    """Secondary user core for the BAaaS demo service: a*x + y."""
+    b, n, _ = xs.shape
+    if b % group != 0:
+        raise ValueError(f"batch {b} not divisible by group {group}")
+    spec = pl.BlockSpec((group, n, n), lambda i: (i, 0, 0))
+    a_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _saxpy_kernel,
+        grid=(b // group,),
+        in_specs=[a_spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(xs.shape, jnp.float32),
+        interpret=True,
+    )(a.reshape(1), xs, ys)
+
+
+def _checksum_kernel(x_ref, o_ref):
+    """Reduce each matrix in the group to a scalar sum."""
+    o_ref[...] = jnp.sum(x_ref[...], axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def checksum_stream(xs, *, group=DEFAULT_GROUP):
+    """Per-matrix checksum core for the RC2F status-monitor demo."""
+    b, n, _ = xs.shape
+    if b % group != 0:
+        raise ValueError(f"batch {b} not divisible by group {group}")
+    in_spec = pl.BlockSpec((group, n, n), lambda i: (i, 0, 0))
+    out_spec = pl.BlockSpec((group,), lambda i: (i,))
+    return pl.pallas_call(
+        _checksum_kernel,
+        grid=(b // group,),
+        in_specs=[in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(xs)

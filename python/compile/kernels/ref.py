@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks the Pallas
+implementations against (L1 correctness signal). They intentionally use
+only `jnp` primitives — no pallas — so a bug in the kernel plumbing
+cannot hide in the oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_stream_ref(xs, ys):
+    """Batched matrix multiply: the paper's streaming user core.
+
+    Args:
+      xs: f32[B, N, N] stream of left matrices.
+      ys: f32[B, N, N] stream of right matrices.
+
+    Returns:
+      f32[B, N, N] — element i is ``xs[i] @ ys[i]``.
+    """
+    return jnp.einsum(
+        "bij,bjk->bik", xs, ys, preferred_element_type=jnp.float32
+    )
+
+
+def loopback_ref(xs):
+    """RC2F test-loopback control path: identity over the stream."""
+    return xs
+
+
+def saxpy_stream_ref(a, xs, ys):
+    """Secondary user core (BAaaS demo service): a*x + y elementwise."""
+    return a * xs + ys
+
+
+def checksum_stream_ref(xs):
+    """Per-matrix float checksum used by the RC2F status monitor demo."""
+    return jnp.sum(xs, axis=(-2, -1))

@@ -1,0 +1,88 @@
+"""L2: JAX compute-graph definitions of the vFPGA user cores.
+
+Each function here is one *user core variant* the RC3E cloud can load
+into a vFPGA slot. They are thin jit-able wrappers over the L1 Pallas
+kernels so that `aot.py` can lower each (variant, geometry, chunk)
+combination to a single fused HLO module. The Rust runtime
+(`rust/src/runtime/`) loads those modules and executes them on the
+PJRT CPU client — Python never runs on the request path.
+
+Variant registry
+----------------
+``VARIANTS`` maps a stable artifact name to a (fn, example-args builder)
+pair. The artifact name doubles as the *core identifier* the Rust side
+uses in bitstream metadata (`hls::CoreSpec::artifact`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul_stream as k
+
+
+def matmul_model(xs, ys):
+    """Streaming matmul core: the paper's Section-V example application.
+
+    Lowered with ``group = batch`` (one grid step per streaming chunk):
+    on CPU-interpret the Pallas grid loop is pure interpreter overhead
+    (16x slower at group=8 — see EXPERIMENTS.md §Perf), while the
+    VMEM-budget argument that motivates smaller groups only applies on
+    real TPUs (DESIGN.md §Hardware-Adaptation). Correctness across
+    group sizes is covered by the pytest group-invariance sweep.
+    """
+    return (k.matmul_stream(xs, ys, group=xs.shape[0]),)
+
+
+def loopback_model(xs):
+    """Test-loopback core (RC2F control signal 'test loopback')."""
+    return (k.loopback_stream(xs, group=xs.shape[0]),)
+
+
+def saxpy_model(a, xs, ys):
+    """SAXPY core: the BAaaS background-acceleration demo service."""
+    return (k.saxpy_stream(a, xs, ys, group=xs.shape[0]),)
+
+
+def checksum_model(xs):
+    """Checksum core: feeds the RC2F status monitor demo."""
+    return (k.checksum_stream(xs, group=xs.shape[0]),)
+
+
+def _mm_args(batch, n):
+    spec = jax.ShapeDtypeStruct((batch, n, n), jnp.float32)
+    return (spec, spec)
+
+
+def _lb_args(batch, n):
+    return (jax.ShapeDtypeStruct((batch, n, n), jnp.float32),)
+
+
+def _saxpy_args(batch, n):
+    spec = jax.ShapeDtypeStruct((batch, n, n), jnp.float32)
+    return (jax.ShapeDtypeStruct((), jnp.float32), spec, spec)
+
+
+def _ck_args(batch, n):
+    return (jax.ShapeDtypeStruct((batch, n, n), jnp.float32),)
+
+
+# artifact name -> (model fn, example-arg builder, (batch, n))
+# Chunk sizes: 256 is the default streaming chunk for 16x16 (256*16*16*4B
+# = 256 KiB per operand buffer); 32x32 uses 64 to keep per-chunk bytes
+# equal (64*32*32*4B = 256 KiB) so the PCIe-link accounting in Rust sees
+# identical DMA granularity, like the paper's fixed FIFO depth.
+VARIANTS = {
+    "matmul16_b256": (matmul_model, _mm_args, (256, 16)),
+    "matmul16_b64": (matmul_model, _mm_args, (64, 16)),
+    "matmul32_b64": (matmul_model, _mm_args, (64, 32)),
+    "matmul32_b16": (matmul_model, _mm_args, (16, 32)),
+    "loopback16_b256": (loopback_model, _lb_args, (256, 16)),
+    "saxpy16_b256": (saxpy_model, _saxpy_args, (256, 16)),
+    "checksum16_b256": (checksum_model, _ck_args, (256, 16)),
+}
+
+
+def lower_variant(name):
+    """Lower one registered variant; returns the jax ``Lowered`` object."""
+    fn, builder, (batch, n) = VARIANTS[name]
+    return jax.jit(fn).lower(*builder(batch, n))

@@ -1,0 +1,188 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer: everything
+the Rust runtime executes was lowered from these kernels, so agreement
+with `ref.py` here transfers to the request path.
+
+Hypothesis sweeps shapes, groups and value distributions; fixed tests
+pin the exact geometries the AOT variants ship.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_stream as k
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(
+        rng.standard_normal(shape, dtype=np.float32) * scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fixed geometries: exactly what the AOT variants ship.
+# ---------------------------------------------------------------------------
+
+AOT_GEOMETRIES = [
+    (256, 16, 8),  # matmul16_b256
+    (64, 16, 8),  # matmul16_b64
+    (64, 32, 8),  # matmul32_b64
+    (16, 32, 8),  # matmul32_b16
+]
+
+
+@pytest.mark.parametrize("batch,n,group", AOT_GEOMETRIES)
+def test_matmul_aot_geometry(batch, n, group):
+    rng = np.random.default_rng(42)
+    xs, ys = _rand(rng, (batch, n, n)), _rand(rng, (batch, n, n))
+    out = k.matmul_stream(xs, ys, group=group)
+    np.testing.assert_allclose(
+        out, ref.matmul_stream_ref(xs, ys), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_identity():
+    """A @ I == A for every matrix in the stream."""
+    rng = np.random.default_rng(0)
+    xs = _rand(rng, (32, 16, 16))
+    eye = jnp.broadcast_to(jnp.eye(16, dtype=jnp.float32), (32, 16, 16))
+    np.testing.assert_allclose(
+        k.matmul_stream(xs, eye, group=8), xs, rtol=1e-6
+    )
+
+
+def test_matmul_zeros():
+    xs = jnp.zeros((16, 16, 16), jnp.float32)
+    ys = jnp.ones((16, 16, 16), jnp.float32)
+    assert np.all(np.asarray(k.matmul_stream(xs, ys, group=8)) == 0.0)
+
+
+def test_matmul_batch_independence():
+    """Each stream element is multiplied only with its partner."""
+    rng = np.random.default_rng(7)
+    xs, ys = _rand(rng, (8, 16, 16)), _rand(rng, (8, 16, 16))
+    full = np.asarray(k.matmul_stream(xs, ys, group=8))
+    for i in range(8):
+        np.testing.assert_allclose(
+            full[i], np.asarray(xs[i]) @ np.asarray(ys[i]), rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+def test_matmul_rejects_nondivisible_batch():
+    xs = jnp.zeros((10, 16, 16), jnp.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        k.matmul_stream(xs, xs, group=8)
+
+
+def test_matmul_group_invariance():
+    """Group (VMEM packing factor) must not change the numerics."""
+    rng = np.random.default_rng(3)
+    xs, ys = _rand(rng, (32, 16, 16)), _rand(rng, (32, 16, 16))
+    a = k.matmul_stream(xs, ys, group=4)
+    b = k.matmul_stream(xs, ys, group=32)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, dtypes-on-input, scales, degenerate values.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16, 32]),
+    groups=st.integers(min_value=1, max_value=4),
+    group=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_matmul_hypothesis(n, groups, group, seed, scale):
+    batch = groups * group
+    rng = np.random.default_rng(seed)
+    xs = _rand(rng, (batch, n, n), scale)
+    ys = _rand(rng, (batch, n, n), scale)
+    out = k.matmul_stream(xs, ys, group=group)
+    np.testing.assert_allclose(
+        out,
+        ref.matmul_stream_ref(xs, ys),
+        rtol=1e-4,
+        atol=1e-4 * scale * scale * n,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 16]),
+    batch=st.sampled_from([8, 24]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_loopback_hypothesis(n, batch, seed):
+    rng = np.random.default_rng(seed)
+    xs = _rand(rng, (batch, n, n))
+    np.testing.assert_array_equal(
+        np.asarray(k.loopback_stream(xs, group=8 if batch % 8 == 0 else 4)),
+        np.asarray(xs),
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    a=st.floats(
+        min_value=-1e3, max_value=1e3, allow_nan=False, width=32
+    ),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_saxpy_hypothesis(a, seed):
+    rng = np.random.default_rng(seed)
+    xs, ys = _rand(rng, (16, 16, 16)), _rand(rng, (16, 16, 16))
+    av = jnp.float32(a)
+    np.testing.assert_allclose(
+        k.saxpy_stream(av, xs, ys, group=8),
+        ref.saxpy_stream_ref(av, xs, ys),
+        rtol=1e-5,
+        atol=1e-3,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_checksum_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    xs = _rand(rng, (16, n, n))
+    np.testing.assert_allclose(
+        k.checksum_stream(xs, group=8),
+        ref.checksum_stream_ref(xs),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Special values: the stream must propagate inf/nan like the oracle.
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_inf_propagation():
+    xs = jnp.full((8, 16, 16), jnp.inf, jnp.float32)
+    ys = jnp.ones((8, 16, 16), jnp.float32)
+    out = np.asarray(k.matmul_stream(xs, ys, group=8))
+    assert np.all(np.isinf(out))
+
+
+def test_matmul_nan_propagation():
+    xs = jnp.ones((8, 16, 16), jnp.float32).at[0, 0, 0].set(jnp.nan)
+    ys = jnp.ones((8, 16, 16), jnp.float32)
+    out = np.asarray(k.matmul_stream(xs, ys, group=8))
+    assert np.all(np.isnan(out[0, 0, :]))  # row 0 of matrix 0 contaminated
+    assert not np.any(np.isnan(out[1:]))  # other matrices untouched

@@ -1,0 +1,95 @@
+"""L2 + AOT path tests: variant registry shapes, HLO text lowering,
+metadata contract consumed by the Rust runtime.
+"""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("name", sorted(model.VARIANTS))
+def test_variant_lowers(name):
+    lowered = model.lower_variant(name)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:60]
+    # return_tuple=True => root is a tuple instruction
+    assert "ROOT" in text and "tuple(" in text
+
+
+@pytest.mark.parametrize("name", sorted(model.VARIANTS))
+def test_variant_meta_contract(name):
+    """The .meta.json sidecar must match the registered geometry."""
+    with tempfile.TemporaryDirectory() as d:
+        meta = aot.export_variant(name, d)
+        assert os.path.exists(os.path.join(d, f"{name}.hlo.txt"))
+        on_disk = json.load(open(os.path.join(d, f"{name}.meta.json")))
+    assert on_disk == meta
+    _, _, (batch, n) = model.VARIANTS[name]
+    if name.startswith("matmul"):
+        assert meta["inputs"] == [
+            {"shape": [batch, n, n], "dtype": "float32"}
+        ] * 2
+        assert meta["outputs"] == [
+            {"shape": [batch, n, n], "dtype": "float32"}
+        ]
+    for io in meta["inputs"] + meta["outputs"]:
+        assert io["dtype"] == "float32"
+
+
+def test_matmul_model_matches_kernel():
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(11)
+    xs = jnp.asarray(rng.standard_normal((64, 16, 16), dtype=np.float32))
+    ys = jnp.asarray(rng.standard_normal((64, 16, 16), dtype=np.float32))
+    (out,) = model.matmul_model(xs, ys)
+    np.testing.assert_allclose(
+        out, ref.matmul_stream_ref(xs, ys), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_lowered_hlo_is_deterministic():
+    """Same variant must lower to byte-identical HLO text (cacheable)."""
+    a = aot.to_hlo_text(model.lower_variant("matmul16_b64"))
+    b = aot.to_hlo_text(model.lower_variant("matmul16_b64"))
+    assert a == b
+
+
+def test_hlo_has_no_custom_calls():
+    """interpret=True must lower to plain HLO ops — a Mosaic custom-call
+    would be unexecutable on the Rust CPU PJRT client."""
+    for name in model.VARIANTS:
+        text = aot.to_hlo_text(model.lower_variant(name))
+        assert "custom-call" not in text, f"{name} contains custom-call"
+
+
+def test_manifest_written(tmp_path):
+    import subprocess
+    import sys
+
+    out = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out",
+            str(tmp_path),
+            "--only",
+            "matmul16_b64,loopback16_b256",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+    )
+    assert out.returncode == 0, out.stderr
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert set(manifest) == {"matmul16_b64", "loopback16_b256"}
+    for name, digest in manifest.items():
+        assert len(digest) == 64

@@ -1,0 +1,305 @@
+//! The batch system.
+//!
+//! Section IV-C: "we integrated a batch system for long-running
+//! applications without direct user interaction to improve overall
+//! system utilization. A job of the batch system is to specify the
+//! type as well as a configuration file for the FPGAs."
+//!
+//! Jobs carry a service model, a bitfile (or BAaaS service name) and
+//! a stream workload. The scheduler thread drains the queue FIFO
+//! with retry-on-no-capacity: when every vFPGA is leased, the job
+//! waits until a release frees one — exactly the utilization-
+//! smoothing role the paper gives the batch system on its tiny
+//! 2-node / 4-FPGA testbed.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::bitstream::Bitstream;
+use crate::config::ServiceModel;
+use crate::hypervisor::{Hypervisor, HypervisorError};
+use crate::rc2f::stream::{StreamConfig, StreamOutcome, StreamRunner};
+use crate::util::ids::{JobId, UserId};
+
+/// A submitted job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub user: UserId,
+    /// RAaaS job: user bitfile; BAaaS job: provider service name.
+    pub payload: JobPayload,
+    /// The stream workload to run once configured.
+    pub stream: StreamConfig,
+}
+
+/// What configures the vFPGA for this job.
+#[derive(Debug, Clone)]
+pub enum JobPayload {
+    /// RAaaS: user-supplied partial bitfile (slot-retargeted by the
+    /// scheduler to wherever the allocation lands).
+    UserBitfile(Bitstream),
+    /// BAaaS: provider-registered service bitfile.
+    Service(String),
+}
+
+/// Job lifecycle.
+#[derive(Debug, Clone)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done(Box<StreamOutcome>),
+    Failed(String),
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+struct QueueInner {
+    pending: VecDeque<(JobId, JobSpec)>,
+    states: std::collections::BTreeMap<JobId, JobState>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+/// The batch queue + scheduler.
+pub struct BatchSystem {
+    hv: Arc<Hypervisor>,
+    inner: Mutex<QueueInner>,
+    work: Condvar,
+    idle: Condvar,
+}
+
+impl BatchSystem {
+    pub fn new(hv: Arc<Hypervisor>) -> Arc<BatchSystem> {
+        Arc::new(BatchSystem {
+            hv,
+            inner: Mutex::new(QueueInner {
+                pending: VecDeque::new(),
+                states: std::collections::BTreeMap::new(),
+                next_id: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        })
+    }
+
+    /// Enqueue a job; returns its id immediately.
+    pub fn submit(&self, spec: JobSpec) -> JobId {
+        let mut inner = self.inner.lock().unwrap();
+        let id = JobId(inner.next_id);
+        inner.next_id += 1;
+        inner.states.insert(id, JobState::Queued);
+        inner.pending.push_back((id, spec));
+        drop(inner);
+        self.work.notify_one();
+        id
+    }
+
+    pub fn state(&self, id: JobId) -> Option<JobState> {
+        self.inner.lock().unwrap().states.get(&id).cloned()
+    }
+
+    /// Run the scheduler until the queue is drained (single worker —
+    /// the paper's testbed scale). Each job: allocate → retarget &
+    /// program → stream → release.
+    pub fn run_to_completion(&self) {
+        loop {
+            let job = {
+                let mut inner = self.inner.lock().unwrap();
+                loop {
+                    if let Some(job) = inner.pending.pop_front() {
+                        break Some(job);
+                    }
+                    if inner.shutdown || inner.pending.is_empty() {
+                        break None;
+                    }
+                }
+            };
+            let Some((id, spec)) = job else {
+                self.idle.notify_all();
+                return;
+            };
+            self.set_state(id, JobState::Running);
+            match self.execute(&spec) {
+                Ok(outcome) => {
+                    self.set_state(id, JobState::Done(Box::new(outcome)))
+                }
+                Err(e) => self.set_state(id, JobState::Failed(e.to_string())),
+            }
+        }
+    }
+
+    fn set_state(&self, id: JobId, st: JobState) {
+        self.inner.lock().unwrap().states.insert(id, st);
+    }
+
+    fn execute(&self, spec: &JobSpec) -> Result<StreamOutcome, HypervisorError> {
+        let model = match &spec.payload {
+            JobPayload::UserBitfile(_) => ServiceModel::RAaaS,
+            JobPayload::Service(_) => ServiceModel::BAaaS,
+        };
+        let (alloc, vfpga, fpga, _node) =
+            self.hv.alloc_vfpga(spec.user, model)?;
+        let result = (|| {
+            let bitfile = match &spec.payload {
+                JobPayload::UserBitfile(bs) => bs.clone(),
+                JobPayload::Service(name) => self.hv.service_bitfile(name)?,
+            };
+            // Retarget the relocatable bitfile to wherever placement
+            // put us (the paper's hide-the-region future-work item).
+            let dev = self.hv.device(fpga)?;
+            let slot = dev.slot_of[&vfpga];
+            let quarters = {
+                let hw = dev.fpga.lock().unwrap();
+                hw.region(vfpga)
+                    .map_err(|e| HypervisorError::Device(e.to_string()))?
+                    .shape
+                    .quarters()
+            };
+            let placed = crate::hls::flow::DesignFlow::retarget(
+                &bitfile, slot, quarters,
+            );
+            self.hv.program_vfpga(alloc, spec.user, &placed)?;
+            let runner = StreamRunner::new(
+                Arc::clone(&self.hv.clock),
+                Arc::clone(&self.hv.device(fpga)?.link),
+            );
+            runner
+                .run(&spec.stream)
+                .map_err(HypervisorError::Db)
+        })();
+        // Always release, success or failure.
+        let _ = self.hv.release(alloc);
+        result
+    }
+
+    /// Spawn `n` scheduler worker threads and wait for the queue to
+    /// drain (multi-worker variant used by the BAaaS example).
+    pub fn drain_with_workers(self: &Arc<Self>, n: usize) {
+        std::thread::scope(|scope| {
+            for _ in 0..n.max(1) {
+                let me = Arc::clone(self);
+                scope.spawn(move || me.run_to_completion());
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    fn system() -> Option<Arc<BatchSystem>> {
+        if !crate::runtime::artifact_dir().join("manifest.json").exists() {
+            eprintln!("skipping batch test: run `make artifacts`");
+            return None;
+        }
+        let hv =
+            Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap());
+        Some(BatchSystem::new(hv))
+    }
+
+    fn mm16_bitfile() -> Bitstream {
+        crate::bitstream::BitstreamBuilder::partial("xc7vx485t", "matmul16")
+            .resources(crate::fpga::resources::Resources::new(
+                25_298, 41_654, 14, 80,
+            ))
+            .frames(crate::hls::flow::region_window(0, 1))
+            .artifact("matmul16_b256")
+            .build()
+    }
+
+    fn job(bs: &BatchSystem, mults: u64) -> JobSpec {
+        let user = bs.hv.add_user("batcher");
+        JobSpec {
+            user,
+            payload: JobPayload::UserBitfile(mm16_bitfile()),
+            stream: StreamConfig::matmul16(mults),
+        }
+    }
+
+    #[test]
+    fn job_runs_to_done() {
+        let Some(bs) = system() else { return };
+        let id = bs.submit(job(&bs, 512));
+        assert!(matches!(bs.state(id), Some(JobState::Queued)));
+        bs.run_to_completion();
+        match bs.state(id) {
+            Some(JobState::Done(out)) => {
+                assert_eq!(out.mults, 512);
+                assert_eq!(out.validation_failures, 0);
+            }
+            st => panic!("unexpected state {st:?}"),
+        }
+    }
+
+    #[test]
+    fn jobs_release_their_leases() {
+        let Some(bs) = system() else { return };
+        for _ in 0..3 {
+            bs.submit(job(&bs, 256));
+        }
+        bs.run_to_completion();
+        // All leases returned: 16 free regions again.
+        let db = bs.hv.db.lock().unwrap();
+        let free: usize = bs
+            .hv
+            .device_ids()
+            .iter()
+            .map(|f| db.free_regions(*f).len())
+            .sum();
+        assert_eq!(free, 16);
+    }
+
+    #[test]
+    fn baaas_job_uses_service_store() {
+        let Some(bs) = system() else { return };
+        bs.hv.register_service("mm16", mm16_bitfile());
+        let user = bs.hv.add_user("enduser");
+        let id = bs.submit(JobSpec {
+            user,
+            payload: JobPayload::Service("mm16".to_string()),
+            stream: StreamConfig::matmul16(256),
+        });
+        bs.run_to_completion();
+        assert!(matches!(bs.state(id), Some(JobState::Done(_))));
+    }
+
+    #[test]
+    fn unknown_service_fails_job() {
+        let Some(bs) = system() else { return };
+        let user = bs.hv.add_user("enduser");
+        let id = bs.submit(JobSpec {
+            user,
+            payload: JobPayload::Service("nope".to_string()),
+            stream: StreamConfig::matmul16(256),
+        });
+        bs.run_to_completion();
+        match bs.state(id) {
+            Some(JobState::Failed(msg)) => {
+                assert!(msg.contains("nope"), "{msg}")
+            }
+            st => panic!("unexpected {st:?}"),
+        }
+    }
+
+    #[test]
+    fn queue_order_preserved() {
+        let Some(bs) = system() else { return };
+        let a = bs.submit(job(&bs, 256));
+        let b = bs.submit(job(&bs, 256));
+        assert!(a < b);
+        bs.run_to_completion();
+        assert!(matches!(bs.state(a), Some(JobState::Done(_))));
+        assert!(matches!(bs.state(b), Some(JobState::Done(_))));
+    }
+}

@@ -1,0 +1,177 @@
+//! Bitstream construction (the output side of the HLS flow and the
+//! provider's BAaaS bitfile store).
+
+use sha2::{Digest, Sha256};
+
+use super::{Bitstream, BitstreamKind, BitstreamMeta, FrameRange};
+use crate::fpga::resources::Resources;
+
+/// Fluent builder for synthetic bitstreams.
+#[derive(Debug)]
+pub struct BitstreamBuilder {
+    kind: BitstreamKind,
+    meta: BitstreamMeta,
+    payload_len: usize,
+    sign_key: Option<String>,
+    payload_seed: u64,
+}
+
+impl BitstreamBuilder {
+    pub fn full(part: &str, core: &str) -> BitstreamBuilder {
+        BitstreamBuilder::new(BitstreamKind::Full, part, core)
+    }
+
+    pub fn partial(part: &str, core: &str) -> BitstreamBuilder {
+        BitstreamBuilder::new(BitstreamKind::Partial, part, core)
+    }
+
+    fn new(kind: BitstreamKind, part: &str, core: &str) -> BitstreamBuilder {
+        BitstreamBuilder {
+            kind,
+            meta: BitstreamMeta {
+                part: part.to_string(),
+                core: core.to_string(),
+                artifact: None,
+                resources: Resources::ZERO,
+                frames: FrameRange { start: 0, end: 1 },
+                vfpga_regions: None,
+            },
+            payload_len: 256,
+            sign_key: None,
+            payload_seed: 0x5eed,
+        }
+    }
+
+    /// Synthesized resource footprint.
+    pub fn resources(mut self, r: Resources) -> Self {
+        self.meta.resources = r;
+        self
+    }
+
+    /// Claimed configuration-frame window.
+    pub fn frames(mut self, f: FrameRange) -> Self {
+        self.meta.frames = f;
+        self
+    }
+
+    /// Bind to an HLO artifact variant (the real compute).
+    pub fn artifact(mut self, name: &str) -> Self {
+        self.meta.artifact = Some(name.to_string());
+        self
+    }
+
+    /// Mark as an RC2F basic design carving `n` vFPGA regions.
+    pub fn vfpga_regions(mut self, n: usize) -> Self {
+        self.meta.vfpga_regions = Some(n);
+        self
+    }
+
+    /// Synthetic payload size in bytes.
+    pub fn payload_len(mut self, len: usize) -> Self {
+        self.payload_len = len;
+        self
+    }
+
+    /// Vary the payload content (distinct shas for equal metadata).
+    pub fn payload_seed(mut self, seed: u64) -> Self {
+        self.payload_seed = seed;
+        self
+    }
+
+    /// Sign with the provider key (BAaaS bitfiles).
+    pub fn signed_with(mut self, key: &str) -> Self {
+        self.sign_key = Some(key.to_string());
+        self
+    }
+
+    /// Finalize: generate payload, CRC, sha256 and signature.
+    pub fn build(self) -> Bitstream {
+        let mut rng = crate::util::rng::Rng::new(self.payload_seed);
+        let payload: Vec<u8> = (0..self.payload_len)
+            .map(|_| rng.next_u64() as u8)
+            .collect();
+        let crc32 = crc32fast::hash(&payload);
+        let header = Bitstream::header_bytes(&self.meta, self.kind);
+        let mut hasher = Sha256::new();
+        hasher.update(&header);
+        hasher.update(&payload);
+        let sha256 = hex(&hasher.finalize());
+        let signature = self.sign_key.map(|key| sign(&key, &sha256));
+        Bitstream {
+            kind: self.kind,
+            meta: self.meta,
+            payload,
+            crc32,
+            sha256,
+            signature,
+        }
+    }
+}
+
+/// Provider signature: sha256(key || content-sha). A stand-in for an
+/// HMAC with the provider secret — what matters for the system is the
+/// verify path, not the primitive.
+pub fn sign(key: &str, content_sha: &str) -> String {
+    let mut hasher = Sha256::new();
+    hasher.update(key.as_bytes());
+    hasher.update(content_sha.as_bytes());
+    hex(&hasher.finalize())
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let bs = BitstreamBuilder::partial("xc7vx485t", "m").build();
+        assert_eq!(bs.kind, BitstreamKind::Partial);
+        assert_eq!(bs.payload.len(), 256);
+        assert!(bs.crc_ok());
+        assert!(bs.signature.is_none());
+    }
+
+    #[test]
+    fn sha_covers_header() {
+        let a = BitstreamBuilder::partial("xc7vx485t", "m").build();
+        let b = BitstreamBuilder::partial("xc6vlx240t", "m").build();
+        // Same payload seed, different part → different sha.
+        assert_eq!(a.payload, b.payload);
+        assert_ne!(a.sha256, b.sha256);
+    }
+
+    #[test]
+    fn payload_seed_varies_content() {
+        let a = BitstreamBuilder::partial("p", "c").payload_seed(1).build();
+        let b = BitstreamBuilder::partial("p", "c").payload_seed(2).build();
+        assert_ne!(a.payload, b.payload);
+        assert_ne!(a.sha256, b.sha256);
+    }
+
+    #[test]
+    fn signature_is_deterministic_per_key() {
+        let a = BitstreamBuilder::partial("p", "c")
+            .signed_with("provider-secret")
+            .build();
+        let b = BitstreamBuilder::partial("p", "c")
+            .signed_with("provider-secret")
+            .build();
+        let c = BitstreamBuilder::partial("p", "c")
+            .signed_with("other-key")
+            .build();
+        assert_eq!(a.signature, b.signature);
+        assert_ne!(a.signature, c.signature);
+    }
+
+    #[test]
+    fn artifact_binding() {
+        let bs = BitstreamBuilder::partial("p", "matmul16")
+            .artifact("matmul16_b256")
+            .build();
+        assert_eq!(bs.meta.artifact.as_deref(), Some("matmul16_b256"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Bitstream container format + sanity checking.
+//!
+//! The paper (Section VI) names "sanity checking for (partial)
+//! bitfiles to avoid both damage by a tampered bitstream and access to
+//! the parts not reconfigurable by the users" as its most important
+//! future-work item — we implement it as a first-class feature.
+//!
+//! A [`Bitstream`] is a synthetic but structurally faithful container:
+//! a header with the target part and metadata (core name, resource
+//! footprint, claimed frame range), a frame payload, a CRC32 per the
+//! Xilinx config logic, and an optional provider signature (sha256
+//! over header+payload keyed by the provider secret — stand-in for
+//! the vendor signing flow).
+
+pub mod builder;
+pub mod sanity;
+
+pub use builder::BitstreamBuilder;
+pub use sanity::{SanityChecker, SanityError, SanityPolicy};
+
+use crate::fpga::resources::Resources;
+use crate::util::json::Json;
+
+/// Full-device bitstream vs PR region bitstream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BitstreamKind {
+    Full,
+    Partial,
+}
+
+impl BitstreamKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BitstreamKind::Full => "full",
+            BitstreamKind::Partial => "partial",
+        }
+    }
+}
+
+/// Frame-address range the bitstream claims to touch. The sanity
+/// checker compares this against the region's allowed window — a
+/// tampered bitstream that addresses frames outside its PR region is
+/// exactly the attack the paper wants caught.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameRange {
+    pub start: u64,
+    pub end: u64, // exclusive
+}
+
+impl FrameRange {
+    pub fn contains(self, other: FrameRange) -> bool {
+        self.start <= other.start && other.end <= self.end
+    }
+    pub fn len(self) -> u64 {
+        self.end.saturating_sub(self.start)
+    }
+    pub fn is_empty(self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Descriptive metadata carried in the container header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitstreamMeta {
+    /// Target FPGA part marking (e.g. "xc7vx485t").
+    pub part: String,
+    /// Core / design name (e.g. "matmul16", "rc2f_basic_4v").
+    pub core: String,
+    /// HLO artifact variant implementing the core's compute, if any
+    /// (binds the simulated design to a real PJRT executable).
+    pub artifact: Option<String>,
+    /// Synthesized resource footprint.
+    pub resources: Resources,
+    /// Claimed configuration frame window.
+    pub frames: FrameRange,
+    /// For RC2F basic (full) designs: how many vFPGA regions it carves.
+    pub vfpga_regions: Option<usize>,
+}
+
+/// A (synthetic) bitstream: header + frames + integrity data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bitstream {
+    pub kind: BitstreamKind,
+    pub meta: BitstreamMeta,
+    /// Frame payload (synthetic bytes; size models config time).
+    pub payload: Vec<u8>,
+    /// CRC32 over the payload (Xilinx config-logic style).
+    pub crc32: u32,
+    /// sha256 hex over header+payload — the identity the database and
+    /// the region state reference.
+    pub sha256: String,
+    /// Provider signature (BAaaS bitfiles are provider-signed).
+    pub signature: Option<String>,
+}
+
+impl Bitstream {
+    /// Size in bytes (drives configuration-time modeling).
+    pub fn size(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Recompute the payload CRC and compare (integrity check).
+    pub fn crc_ok(&self) -> bool {
+        crc32fast::hash(&self.payload) == self.crc32
+    }
+
+    /// Canonical header bytes (input to sha256/signature).
+    pub fn header_bytes(meta: &BitstreamMeta, kind: BitstreamKind) -> Vec<u8> {
+        let mut buf = Vec::new();
+        crate::util::bytes::put_str(&mut buf, kind.name());
+        crate::util::bytes::put_str(&mut buf, &meta.part);
+        crate::util::bytes::put_str(&mut buf, &meta.core);
+        crate::util::bytes::put_str(
+            &mut buf,
+            meta.artifact.as_deref().unwrap_or(""),
+        );
+        for v in [
+            meta.resources.lut,
+            meta.resources.ff,
+            meta.resources.bram,
+            meta.resources.dsp,
+            meta.frames.start,
+            meta.frames.end,
+            meta.vfpga_regions.unwrap_or(0) as u64,
+        ] {
+            crate::util::bytes::put_u64(&mut buf, v);
+        }
+        buf
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::from(self.kind.name())),
+            ("part", Json::from(self.meta.part.as_str())),
+            ("core", Json::from(self.meta.core.as_str())),
+            (
+                "artifact",
+                match &self.meta.artifact {
+                    Some(a) => Json::from(a.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            ("resources", self.meta.resources.to_json()),
+            ("bytes", Json::from(self.payload.len())),
+            ("sha256", Json::from(self.sha256.as_str())),
+            ("signed", Json::from(self.signature.is_some())),
+        ])
+    }
+}
+
+/// Helpers shared by tests across modules (device, hypervisor, rc2f).
+pub mod tests_support {
+    use super::*;
+
+    /// An RC2F basic design full bitstream carving `n` regions, with
+    /// the Table II footprint for the chosen region count.
+    pub fn rc2f_full_bs(part: &str, n: usize) -> Bitstream {
+        let resources = match n {
+            1 => Resources::new(7_082, 6_974, 13, 0),
+            2 => Resources::new(7_807, 7_637, 17, 0),
+            _ => Resources::new(8_532, 8_318, 25, 0),
+        };
+        BitstreamBuilder::full(part, &format!("rc2f_basic_{n}v"))
+            .resources(resources)
+            .vfpga_regions(n)
+            .payload_len(1024)
+            .build()
+    }
+
+    /// A quarter-region partial bitstream for a named core.
+    pub fn partial_bs(part: &str, core: &str) -> Bitstream {
+        BitstreamBuilder::partial(part, core)
+            .resources(Resources::new(25_298, 41_654, 14, 80))
+            .frames(FrameRange {
+                start: 0,
+                end: 100,
+            })
+            .payload_len(512)
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_range_containment() {
+        let outer = FrameRange { start: 10, end: 50 };
+        assert!(outer.contains(FrameRange { start: 10, end: 50 }));
+        assert!(outer.contains(FrameRange { start: 20, end: 30 }));
+        assert!(!outer.contains(FrameRange { start: 5, end: 20 }));
+        assert!(!outer.contains(FrameRange { start: 40, end: 51 }));
+        assert_eq!(outer.len(), 40);
+        assert!(FrameRange { start: 3, end: 3 }.is_empty());
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut bs = tests_support::partial_bs("xc7vx485t", "m");
+        assert!(bs.crc_ok());
+        bs.payload[0] ^= 0xFF;
+        assert!(!bs.crc_ok());
+    }
+
+    #[test]
+    fn sha_identifies_content() {
+        let a = tests_support::partial_bs("xc7vx485t", "core_a");
+        let b = tests_support::partial_bs("xc7vx485t", "core_b");
+        assert_ne!(a.sha256, b.sha256);
+        assert_eq!(a.sha256.len(), 64);
+    }
+
+    #[test]
+    fn json_summary() {
+        let bs = tests_support::rc2f_full_bs("xc7vx485t", 4);
+        let j = bs.to_json();
+        assert_eq!(j.get("kind").as_str().unwrap(), "full");
+        assert_eq!(j.get("core").as_str().unwrap(), "rc2f_basic_4v");
+    }
+}

@@ -1,0 +1,356 @@
+//! Bitfile sanity checking — the paper's headline future-work item.
+//!
+//! Section VI: "we plan to implement sanity checking for (partial)
+//! bitfiles to avoid both damage by a tampered bitstream and access to
+//! the parts not reconfigurable by the users as for example physical
+//! ports."
+//!
+//! Checks, in order:
+//! 1. payload CRC (bit-rot / truncation),
+//! 2. target part matches the device,
+//! 3. kind matches the operation (full vs partial),
+//! 4. claimed frame window inside the region's allowed window
+//!    (the "tampered bitstream addressing foreign frames" attack),
+//! 5. resource footprint fits the region envelope,
+//! 6. optional provider-signature verification (policy-dependent —
+//!    BAaaS bitfiles must be signed by the provider; RSaaS research
+//!    systems may allow unsigned).
+
+use super::{Bitstream, BitstreamKind, FrameRange};
+use crate::fpga::resources::Resources;
+
+/// What a deployment requires of incoming bitfiles.
+#[derive(Debug, Clone)]
+pub struct SanityPolicy {
+    /// Require a valid provider signature.
+    pub require_signature: bool,
+    /// Provider key used to verify signatures.
+    pub provider_key: String,
+    /// Reject bitstreams whose claimed frames exceed this fraction of
+    /// the window even if contained (defense in depth against
+    /// over-broad claims).
+    pub max_window_fill: f64,
+}
+
+impl SanityPolicy {
+    /// Research/education deployment: signatures optional.
+    pub fn research() -> SanityPolicy {
+        SanityPolicy {
+            require_signature: false,
+            provider_key: "rc3e-provider".to_string(),
+            max_window_fill: 1.0,
+        }
+    }
+
+    /// Production BAaaS deployment: provider-signed bitfiles only.
+    pub fn production() -> SanityPolicy {
+        SanityPolicy {
+            require_signature: true,
+            provider_key: "rc3e-provider".to_string(),
+            max_window_fill: 1.0,
+        }
+    }
+}
+
+/// Why a bitstream was rejected.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SanityError {
+    #[error("payload CRC mismatch (corrupted or truncated bitfile)")]
+    BadCrc,
+    #[error("bitstream targets part '{0}', device is '{1}'")]
+    WrongPart(String, String),
+    #[error("expected a {expected:?} bitstream, got {got:?}")]
+    WrongKind {
+        expected: BitstreamKind,
+        got: BitstreamKind,
+    },
+    #[error(
+        "frames [{claim_start},{claim_end}) escape region window \
+         [{win_start},{win_end}) — tampered bitstream?"
+    )]
+    FrameEscape {
+        claim_start: u64,
+        claim_end: u64,
+        win_start: u64,
+        win_end: u64,
+    },
+    #[error("design needs {needed} but region offers {offered}")]
+    TooLarge { needed: String, offered: String },
+    #[error("bitfile is unsigned but policy requires a provider signature")]
+    Unsigned,
+    #[error("provider signature verification failed")]
+    BadSignature,
+    #[error("empty frame window claimed")]
+    EmptyFrames,
+}
+
+/// Stateless checker configured with a policy.
+#[derive(Debug, Clone)]
+pub struct SanityChecker {
+    policy: SanityPolicy,
+}
+
+impl SanityChecker {
+    pub fn new(policy: SanityPolicy) -> SanityChecker {
+        SanityChecker { policy }
+    }
+
+    /// Validate a *partial* bitstream against a region's constraints.
+    pub fn check_partial(
+        &self,
+        bs: &Bitstream,
+        device_part: &str,
+        region_window: FrameRange,
+        region_capacity: Resources,
+    ) -> Result<(), SanityError> {
+        self.check_common(bs, device_part)?;
+        if bs.kind != BitstreamKind::Partial {
+            return Err(SanityError::WrongKind {
+                expected: BitstreamKind::Partial,
+                got: bs.kind,
+            });
+        }
+        if bs.meta.frames.is_empty() {
+            return Err(SanityError::EmptyFrames);
+        }
+        if !region_window.contains(bs.meta.frames) {
+            return Err(SanityError::FrameEscape {
+                claim_start: bs.meta.frames.start,
+                claim_end: bs.meta.frames.end,
+                win_start: region_window.start,
+                win_end: region_window.end,
+            });
+        }
+        let fill =
+            bs.meta.frames.len() as f64 / region_window.len().max(1) as f64;
+        if fill > self.policy.max_window_fill {
+            return Err(SanityError::FrameEscape {
+                claim_start: bs.meta.frames.start,
+                claim_end: bs.meta.frames.end,
+                win_start: region_window.start,
+                win_end: region_window.end,
+            });
+        }
+        if !bs.meta.resources.fits_in(region_capacity) {
+            return Err(SanityError::TooLarge {
+                needed: bs.meta.resources.to_string(),
+                offered: region_capacity.to_string(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Validate a *full* bitstream (RSaaS or the RC2F basic design).
+    pub fn check_full(
+        &self,
+        bs: &Bitstream,
+        device_part: &str,
+    ) -> Result<(), SanityError> {
+        self.check_common(bs, device_part)?;
+        if bs.kind != BitstreamKind::Full {
+            return Err(SanityError::WrongKind {
+                expected: BitstreamKind::Full,
+                got: bs.kind,
+            });
+        }
+        Ok(())
+    }
+
+    fn check_common(
+        &self,
+        bs: &Bitstream,
+        device_part: &str,
+    ) -> Result<(), SanityError> {
+        if !bs.crc_ok() {
+            return Err(SanityError::BadCrc);
+        }
+        if bs.meta.part != device_part {
+            return Err(SanityError::WrongPart(
+                bs.meta.part.clone(),
+                device_part.to_string(),
+            ));
+        }
+        if self.policy.require_signature {
+            match &bs.signature {
+                None => return Err(SanityError::Unsigned),
+                Some(sig) => {
+                    let expected = super::builder::sign(
+                        &self.policy.provider_key,
+                        &bs.sha256,
+                    );
+                    if *sig != expected {
+                        return Err(SanityError::BadSignature);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::BitstreamBuilder;
+
+    const PART: &str = "xc7vx485t";
+    const WINDOW: FrameRange = FrameRange {
+        start: 100,
+        end: 200,
+    };
+
+    fn capacity() -> Resources {
+        Resources::new(60_000, 120_000, 200, 560)
+    }
+
+    fn good_partial() -> Bitstream {
+        BitstreamBuilder::partial(PART, "matmul16")
+            .resources(Resources::new(25_298, 41_654, 14, 80))
+            .frames(FrameRange {
+                start: 110,
+                end: 190,
+            })
+            .build()
+    }
+
+    fn checker() -> SanityChecker {
+        SanityChecker::new(SanityPolicy::research())
+    }
+
+    #[test]
+    fn accepts_well_formed_partial() {
+        assert_eq!(
+            checker().check_partial(&good_partial(), PART, WINDOW, capacity()),
+            Ok(())
+        );
+    }
+
+    #[test]
+    fn rejects_corrupt_payload() {
+        let mut bs = good_partial();
+        bs.payload[3] ^= 0x40;
+        assert_eq!(
+            checker().check_partial(&bs, PART, WINDOW, capacity()),
+            Err(SanityError::BadCrc)
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_part() {
+        let bs = good_partial();
+        let err = checker()
+            .check_partial(&bs, "xc6vlx240t", WINDOW, capacity())
+            .unwrap_err();
+        assert!(matches!(err, SanityError::WrongPart(..)));
+    }
+
+    #[test]
+    fn rejects_frame_escape_low_and_high() {
+        for frames in [
+            FrameRange { start: 50, end: 150 },
+            FrameRange {
+                start: 150,
+                end: 250,
+            },
+            FrameRange { start: 0, end: 300 },
+        ] {
+            let bs = BitstreamBuilder::partial(PART, "evil")
+                .resources(Resources::new(1, 1, 1, 1))
+                .frames(frames)
+                .build();
+            let err = checker()
+                .check_partial(&bs, PART, WINDOW, capacity())
+                .unwrap_err();
+            assert!(
+                matches!(err, SanityError::FrameEscape { .. }),
+                "frames {frames:?} gave {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_empty_frame_claim() {
+        let bs = BitstreamBuilder::partial(PART, "odd")
+            .frames(FrameRange {
+                start: 150,
+                end: 150,
+            })
+            .build();
+        assert_eq!(
+            checker().check_partial(&bs, PART, WINDOW, capacity()),
+            Err(SanityError::EmptyFrames)
+        );
+    }
+
+    #[test]
+    fn rejects_oversized_design() {
+        let bs = BitstreamBuilder::partial(PART, "big")
+            .resources(Resources::new(999_999, 1, 1, 1))
+            .frames(FrameRange {
+                start: 110,
+                end: 120,
+            })
+            .build();
+        let err = checker()
+            .check_partial(&bs, PART, WINDOW, capacity())
+            .unwrap_err();
+        assert!(matches!(err, SanityError::TooLarge { .. }));
+    }
+
+    #[test]
+    fn rejects_full_bitstream_in_partial_slot() {
+        let bs = BitstreamBuilder::full(PART, "whole").build();
+        let err = checker()
+            .check_partial(&bs, PART, WINDOW, capacity())
+            .unwrap_err();
+        assert!(matches!(err, SanityError::WrongKind { .. }));
+    }
+
+    #[test]
+    fn production_policy_requires_valid_signature() {
+        let prod = SanityChecker::new(SanityPolicy::production());
+        // Unsigned → rejected.
+        let unsigned = good_partial();
+        assert_eq!(
+            prod.check_partial(&unsigned, PART, WINDOW, capacity()),
+            Err(SanityError::Unsigned)
+        );
+        // Correctly signed → accepted.
+        let signed = BitstreamBuilder::partial(PART, "matmul16")
+            .resources(Resources::new(25_298, 41_654, 14, 80))
+            .frames(FrameRange {
+                start: 110,
+                end: 190,
+            })
+            .signed_with("rc3e-provider")
+            .build();
+        assert_eq!(
+            prod.check_partial(&signed, PART, WINDOW, capacity()),
+            Ok(())
+        );
+        // Signed with the wrong key → rejected.
+        let forged = BitstreamBuilder::partial(PART, "matmul16")
+            .resources(Resources::new(25_298, 41_654, 14, 80))
+            .frames(FrameRange {
+                start: 110,
+                end: 190,
+            })
+            .signed_with("attacker-key")
+            .build();
+        assert_eq!(
+            prod.check_partial(&forged, PART, WINDOW, capacity()),
+            Err(SanityError::BadSignature)
+        );
+    }
+
+    #[test]
+    fn check_full_accepts_and_rejects_kind() {
+        let full = BitstreamBuilder::full(PART, "rsaas_user").build();
+        assert_eq!(checker().check_full(&full, PART), Ok(()));
+        let partial = good_partial();
+        assert!(matches!(
+            checker().check_full(&partial, PART),
+            Err(SanityError::WrongKind { .. })
+        ));
+    }
+}

@@ -1,0 +1,318 @@
+//! Cluster configuration.
+//!
+//! A deployment is described by a JSON document (parsed with the
+//! in-tree [`crate::util::json`]): the management node, the FPGA
+//! nodes with their boards, the service models enabled per device,
+//! the sanity policy, and the calibration constants' overrides.
+//!
+//! `ClusterConfig::paper_testbed()` is the paper's own setup
+//! (Section IV-A): two nodes, ML605 + VC707 boards, four vFPGAs per
+//! device — used by the examples and benches as the default.
+
+use crate::fpga::board::BoardKind;
+use crate::util::json::Json;
+
+/// Which service models a device may serve (Section III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceModel {
+    /// Reconfigurable Silicon as a Service — full physical FPGA.
+    RSaaS,
+    /// Reconfigurable Accelerators as a Service — vFPGAs via RC2F.
+    RAaaS,
+    /// Background Acceleration as a Service — provider services.
+    BAaaS,
+}
+
+impl ServiceModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServiceModel::RSaaS => "rsaas",
+            ServiceModel::RAaaS => "raaas",
+            ServiceModel::BAaaS => "baaas",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ServiceModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "rsaas" => Some(ServiceModel::RSaaS),
+            "raaas" => Some(ServiceModel::RAaaS),
+            "baaas" => Some(ServiceModel::BAaaS),
+            _ => None,
+        }
+    }
+}
+
+/// One FPGA board entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FpgaConfig {
+    pub board: BoardKind,
+    /// vFPGA regions the RC2F basic design carves (1, 2 or 4).
+    pub vfpgas: usize,
+    /// Models this device is assigned to. A device assigned to RSaaS
+    /// is excluded from vFPGA allocation (Section IV-B).
+    pub models: Vec<ServiceModel>,
+}
+
+/// One cluster node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeConfig {
+    pub name: String,
+    pub fpgas: Vec<FpgaConfig>,
+}
+
+/// The whole deployment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeConfig>,
+    /// Require provider-signed bitfiles (production BAaaS policy).
+    pub require_signatures: bool,
+    /// Middleware RPC overhead in ms added to remote calls
+    /// (Table I: 80 ms status via RC3E vs 11 ms local → ~69 ms).
+    pub rpc_overhead_ms: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's two-node academic testbed (Section IV-A/C).
+    pub fn paper_testbed() -> ClusterConfig {
+        let fpga = |board| FpgaConfig {
+            board,
+            vfpgas: 4,
+            models: vec![ServiceModel::RAaaS, ServiceModel::BAaaS],
+        };
+        ClusterConfig {
+            nodes: vec![
+                NodeConfig {
+                    name: "node-a".to_string(),
+                    fpgas: vec![fpga(BoardKind::Vc707), fpga(BoardKind::Vc707)],
+                },
+                NodeConfig {
+                    name: "node-b".to_string(),
+                    fpgas: vec![fpga(BoardKind::Ml605), fpga(BoardKind::Ml605)],
+                },
+            ],
+            require_signatures: false,
+            rpc_overhead_ms: crate::paper::STATUS_RC3E_MS
+                - crate::paper::STATUS_LOCAL_MS,
+        }
+    }
+
+    /// Single-node, single-FPGA config for the quickstart example.
+    pub fn single_vc707() -> ClusterConfig {
+        ClusterConfig {
+            nodes: vec![NodeConfig {
+                name: "node-a".to_string(),
+                fpgas: vec![FpgaConfig {
+                    board: BoardKind::Vc707,
+                    vfpgas: 4,
+                    models: vec![
+                        ServiceModel::RSaaS,
+                        ServiceModel::RAaaS,
+                        ServiceModel::BAaaS,
+                    ],
+                }],
+            }],
+            require_signatures: false,
+            rpc_overhead_ms: 69.0,
+        }
+    }
+
+    pub fn total_fpgas(&self) -> usize {
+        self.nodes.iter().map(|n| n.fpgas.len()).sum()
+    }
+
+    pub fn total_vfpgas(&self) -> usize {
+        self.nodes
+            .iter()
+            .flat_map(|n| &n.fpgas)
+            .map(|f| f.vfpgas)
+            .sum()
+    }
+
+    // ------------------------------------------------- JSON (de)ser
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::obj(vec![
+                                ("name", Json::from(n.name.as_str())),
+                                (
+                                    "fpgas",
+                                    Json::Arr(
+                                        n.fpgas
+                                            .iter()
+                                            .map(|f| {
+                                                Json::obj(vec![
+                                                    (
+                                                        "board",
+                                                        Json::from(
+                                                            f.board.name(),
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "vfpgas",
+                                                        Json::from(f.vfpgas),
+                                                    ),
+                                                    (
+                                                        "models",
+                                                        Json::Arr(
+                                                            f.models
+                                                                .iter()
+                                                                .map(|m| {
+                                                                    Json::from(
+                                                                        m.name(),
+                                                                    )
+                                                                })
+                                                                .collect(),
+                                                        ),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("require_signatures", Json::from(self.require_signatures)),
+            ("rpc_overhead_ms", Json::from(self.rpc_overhead_ms)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ClusterConfig, String> {
+        let nodes = v
+            .get("nodes")
+            .as_arr()
+            .ok_or("config missing 'nodes'")?
+            .iter()
+            .map(|n| {
+                let name = n.str_field("name")?.to_string();
+                let fpgas = n
+                    .get("fpgas")
+                    .as_arr()
+                    .ok_or_else(|| format!("node {name} missing fpgas"))?
+                    .iter()
+                    .map(|f| {
+                        let board = BoardKind::parse(f.str_field("board")?)
+                            .ok_or_else(|| {
+                                format!("unknown board in node {name}")
+                            })?;
+                        let vfpgas = f.u64_field("vfpgas")? as usize;
+                        if !(1..=crate::paper::MAX_VFPGAS).contains(&vfpgas) {
+                            return Err(format!(
+                                "vfpgas must be 1..=4, got {vfpgas}"
+                            ));
+                        }
+                        let models = f
+                            .get("models")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|m| {
+                                m.as_str().and_then(ServiceModel::parse)
+                            })
+                            .collect();
+                        Ok(FpgaConfig {
+                            board,
+                            vfpgas,
+                            models,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok(NodeConfig { name, fpgas })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ClusterConfig {
+            nodes,
+            require_signatures: v
+                .get("require_signatures")
+                .as_bool()
+                .unwrap_or(false),
+            rpc_overhead_ms: v
+                .get("rpc_overhead_ms")
+                .as_f64()
+                .unwrap_or(69.0),
+        })
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &std::path::Path) -> Result<ClusterConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| e.to_string())?;
+        ClusterConfig::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let c = ClusterConfig::paper_testbed();
+        assert_eq!(c.nodes.len(), 2);
+        assert_eq!(c.total_fpgas(), 4);
+        assert_eq!(c.total_vfpgas(), 16);
+        assert!((c.rpc_overhead_ms - 69.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ClusterConfig::paper_testbed();
+        let j = c.to_json();
+        let back = ClusterConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn rejects_bad_vfpga_count() {
+        let mut j = ClusterConfig::single_vc707().to_json();
+        // Corrupt: set vfpgas to 9.
+        let text = j.to_string().replace("\"vfpgas\":4", "\"vfpgas\":9");
+        j = Json::parse(&text).unwrap();
+        assert!(ClusterConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_board() {
+        let text = ClusterConfig::single_vc707()
+            .to_json()
+            .to_string()
+            .replace("vc707", "zcu999");
+        let j = Json::parse(&text).unwrap();
+        assert!(ClusterConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn service_model_parse_roundtrip() {
+        for m in [
+            ServiceModel::RSaaS,
+            ServiceModel::RAaaS,
+            ServiceModel::BAaaS,
+        ] {
+            assert_eq!(ServiceModel::parse(m.name()), Some(m));
+        }
+        assert_eq!(ServiceModel::parse("paas"), None);
+    }
+
+    #[test]
+    fn file_load_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("rc3e_cfg_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            ClusterConfig::paper_testbed().to_json().to_pretty(),
+        )
+        .unwrap();
+        let c = ClusterConfig::load(&path).unwrap();
+        assert_eq!(c, ClusterConfig::paper_testbed());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,331 @@
+//! Asynchronous FIFOs — the RC2F streaming interface.
+//!
+//! Section IV-D2: "Streaming access is implemented using asynchronous
+//! FIFOs, which also divide the system clock from the user clock."
+//! On the FPGA these are dual-clock BRAM FIFOs between the PCIe/system
+//! clock domain and each vFPGA's user clock domain; here they are
+//! bounded byte queues with blocking semantics and backpressure —
+//! *real* queues on the Rust request path (host threads push chunks,
+//! core workers pop them), not simulations.
+//!
+//! Capacity is expressed in bytes like the hardware's BRAM depth; a
+//! full FIFO blocks the producer (the hardware asserts almost-full
+//! toward the PCIe core — that is exactly the backpressure the 800
+//! MB/s shared link propagates to slow cores).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Errors from FIFO operations.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FifoError {
+    #[error("fifo closed")]
+    Closed,
+    #[error("timed out after {0:?}")]
+    Timeout(Duration),
+    #[error("chunk of {chunk} bytes exceeds fifo capacity {capacity}")]
+    ChunkTooLarge { chunk: usize, capacity: usize },
+}
+
+#[derive(Debug)]
+struct Inner {
+    queue: VecDeque<Vec<u8>>,
+    bytes: usize,
+    closed: bool,
+}
+
+/// Occupancy statistics (status-monitor feed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FifoStats {
+    pub pushed_chunks: u64,
+    pub pushed_bytes: u64,
+    pub popped_chunks: u64,
+    pub popped_bytes: u64,
+    /// High-water mark of buffered bytes.
+    pub max_occupancy: u64,
+}
+
+/// A bounded, blocking, closable byte-chunk FIFO.
+#[derive(Debug)]
+pub struct AsyncFifo {
+    name: String,
+    capacity: usize,
+    inner: Mutex<Inner>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    pushed_chunks: AtomicU64,
+    pushed_bytes: AtomicU64,
+    popped_chunks: AtomicU64,
+    popped_bytes: AtomicU64,
+    max_occupancy: AtomicU64,
+}
+
+impl AsyncFifo {
+    /// `capacity` is the max buffered bytes (like BRAM depth).
+    pub fn new(name: &str, capacity: usize) -> Arc<AsyncFifo> {
+        assert!(capacity > 0);
+        Arc::new(AsyncFifo {
+            name: name.to_string(),
+            capacity,
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                bytes: 0,
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            pushed_chunks: AtomicU64::new(0),
+            pushed_bytes: AtomicU64::new(0),
+            popped_chunks: AtomicU64::new(0),
+            popped_bytes: AtomicU64::new(0),
+            max_occupancy: AtomicU64::new(0),
+        })
+    }
+
+    /// RC2F default: 2x 256 KiB chunks in flight (double buffering).
+    pub fn rc2f_default(name: &str) -> Arc<AsyncFifo> {
+        AsyncFifo::new(name, 512 * 1024)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Buffered bytes right now.
+    pub fn occupancy(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Blocking push with backpressure; errors if closed.
+    pub fn push(&self, chunk: Vec<u8>) -> Result<(), FifoError> {
+        if chunk.len() > self.capacity {
+            return Err(FifoError::ChunkTooLarge {
+                chunk: chunk.len(),
+                capacity: self.capacity,
+            });
+        }
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(FifoError::Closed);
+            }
+            if inner.bytes + chunk.len() <= self.capacity
+                || inner.queue.is_empty()
+            {
+                break;
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        inner.bytes += chunk.len();
+        self.pushed_chunks.fetch_add(1, Ordering::Relaxed);
+        self.pushed_bytes
+            .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+        self.max_occupancy
+            .fetch_max(inner.bytes as u64, Ordering::Relaxed);
+        inner.queue.push_back(chunk);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `Ok(None)` when the FIFO is closed *and* drained.
+    pub fn pop(&self) -> Result<Option<Vec<u8>>, FifoError> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(chunk) = inner.queue.pop_front() {
+                inner.bytes -= chunk.len();
+                self.popped_chunks.fetch_add(1, Ordering::Relaxed);
+                self.popped_bytes
+                    .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                drop(inner);
+                self.not_full.notify_one();
+                return Ok(Some(chunk));
+            }
+            if inner.closed {
+                return Ok(None);
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Pop with a timeout (used by failure-injection tests and the
+    /// batch system's watchdog).
+    pub fn pop_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<Option<Vec<u8>>, FifoError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(chunk) = inner.queue.pop_front() {
+                inner.bytes -= chunk.len();
+                self.popped_chunks.fetch_add(1, Ordering::Relaxed);
+                self.popped_bytes
+                    .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                drop(inner);
+                self.not_full.notify_one();
+                return Ok(Some(chunk));
+            }
+            if inner.closed {
+                return Ok(None);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(FifoError::Timeout(timeout));
+            }
+            let (guard, res) = self
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+            if res.timed_out() && inner.queue.is_empty() && !inner.closed {
+                return Err(FifoError::Timeout(timeout));
+            }
+        }
+    }
+
+    /// Close: producers fail, consumers drain then see `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Hard reset: drop buffered data and reopen (RC2F "full reset").
+    pub fn reset(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.queue.clear();
+        inner.bytes = 0;
+        inner.closed = false;
+        drop(inner);
+        self.not_full.notify_all();
+    }
+
+    pub fn stats(&self) -> FifoStats {
+        FifoStats {
+            pushed_chunks: self.pushed_chunks.load(Ordering::Relaxed),
+            pushed_bytes: self.pushed_bytes.load(Ordering::Relaxed),
+            popped_chunks: self.popped_chunks.load(Ordering::Relaxed),
+            popped_bytes: self.popped_bytes.load(Ordering::Relaxed),
+            max_occupancy: self.max_occupancy.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn push_pop_order() {
+        let f = AsyncFifo::new("t", 1024);
+        f.push(vec![1, 2]).unwrap();
+        f.push(vec![3]).unwrap();
+        assert_eq!(f.pop().unwrap(), Some(vec![1, 2]));
+        assert_eq!(f.pop().unwrap(), Some(vec![3]));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let f = AsyncFifo::new("t", 1024);
+        f.push(vec![9]).unwrap();
+        f.close();
+        assert_eq!(f.pop().unwrap(), Some(vec![9]));
+        assert_eq!(f.pop().unwrap(), None);
+        assert_eq!(f.push(vec![1]), Err(FifoError::Closed));
+    }
+
+    #[test]
+    fn oversized_chunk_rejected() {
+        let f = AsyncFifo::new("t", 8);
+        assert!(matches!(
+            f.push(vec![0; 9]),
+            Err(FifoError::ChunkTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let f = AsyncFifo::new("t", 4);
+        f.push(vec![0; 4]).unwrap();
+        let f2 = Arc::clone(&f);
+        let t = thread::spawn(move || {
+            // This blocks until the consumer pops.
+            f2.push(vec![1; 4]).unwrap();
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "producer should be blocked");
+        assert_eq!(f.pop().unwrap(), Some(vec![0; 4]));
+        t.join().unwrap();
+        assert_eq!(f.pop().unwrap(), Some(vec![1; 4]));
+    }
+
+    #[test]
+    fn pop_timeout_fires() {
+        let f = AsyncFifo::new("t", 16);
+        let err = f.pop_timeout(Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, FifoError::Timeout(_)));
+    }
+
+    #[test]
+    fn pop_timeout_returns_data_when_present() {
+        let f = AsyncFifo::new("t", 16);
+        f.push(vec![5]).unwrap();
+        assert_eq!(
+            f.pop_timeout(Duration::from_millis(20)).unwrap(),
+            Some(vec![5])
+        );
+    }
+
+    #[test]
+    fn producer_consumer_threads_move_all_data() {
+        let f = AsyncFifo::new("t", 1024);
+        let f_prod = Arc::clone(&f);
+        let producer = thread::spawn(move || {
+            for i in 0..100u8 {
+                f_prod.push(vec![i; 64]).unwrap();
+            }
+            f_prod.close();
+        });
+        let mut total = 0usize;
+        let mut chunks = 0;
+        while let Some(c) = f.pop().unwrap() {
+            total += c.len();
+            chunks += 1;
+        }
+        producer.join().unwrap();
+        assert_eq!(chunks, 100);
+        assert_eq!(total, 6400);
+        let st = f.stats();
+        assert_eq!(st.pushed_bytes, 6400);
+        assert_eq!(st.popped_bytes, 6400);
+        assert!(st.max_occupancy <= 1024);
+    }
+
+    #[test]
+    fn reset_reopens_and_clears() {
+        let f = AsyncFifo::new("t", 64);
+        f.push(vec![1]).unwrap();
+        f.close();
+        f.reset();
+        assert_eq!(f.occupancy(), 0);
+        f.push(vec![2]).unwrap();
+        assert_eq!(f.pop().unwrap(), Some(vec![2]));
+    }
+
+    #[test]
+    fn stats_track_highwater() {
+        let f = AsyncFifo::new("t", 1024);
+        f.push(vec![0; 100]).unwrap();
+        f.push(vec![0; 200]).unwrap();
+        f.pop().unwrap();
+        assert_eq!(f.stats().max_occupancy, 300);
+    }
+}

@@ -1,0 +1,156 @@
+//! Board specifications for the paper's testbed.
+//!
+//! Section IV-A: "Our current architecture consists of two nodes using
+//! Xilinx ML605 and VC707 development boards." The VC707 carries a
+//! Virtex-7 XC7VX485T (Table II's utilization denominator); the ML605
+//! a Virtex-6 LX240T. Device capacities come from the Xilinx data
+//! sheets; configuration timing is calibrated to Table I.
+
+use super::resources::Resources;
+use crate::util::json::Json;
+
+/// Supported development boards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BoardKind {
+    /// Xilinx VC707 (Virtex-7 XC7VX485T).
+    Vc707,
+    /// Xilinx ML605 (Virtex-6 LX240T).
+    Ml605,
+}
+
+impl BoardKind {
+    pub fn parse(s: &str) -> Option<BoardKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "vc707" => Some(BoardKind::Vc707),
+            "ml605" => Some(BoardKind::Ml605),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BoardKind::Vc707 => "vc707",
+            BoardKind::Ml605 => "ml605",
+        }
+    }
+}
+
+/// Full board data: part, capacity, configuration timing, power.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardSpec {
+    pub kind: BoardKind,
+    /// FPGA part marking (for bitstream target checks).
+    pub part: &'static str,
+    /// Total device resources.
+    pub resources: Resources,
+    /// Full-bitstream size in bytes (Virtex config frames).
+    pub full_bitstream_bytes: u64,
+    /// Full configuration time via JTAG+USB — Table I: 28.370 s.
+    pub jtag_config_s: f64,
+    /// Partial reconfiguration time for a quarter-device region —
+    /// Table I: 732 ms. Scaled by actual region size at PR time.
+    pub pr_quarter_region_ms: f64,
+    /// Static design power with clocks running, in watts.
+    pub static_power_w: f64,
+    /// Fully-idle floor (no allocation, clocks gated), in watts.
+    pub idle_power_w: f64,
+    /// Additional power per active vFPGA region in watts.
+    pub active_region_power_w: f64,
+}
+
+impl BoardSpec {
+    /// VC707 / XC7VX485T — Table II's reference device.
+    pub fn vc707() -> BoardSpec {
+        BoardSpec {
+            kind: BoardKind::Vc707,
+            part: "xc7vx485t",
+            // XC7VX485T: 303,600 LUTs; 607,200 FFs; 1,030 RAMB36;
+            // 2,800 DSP48E1 (Xilinx DS180).
+            resources: Resources::new(303_600, 607_200, 1_030, 2_800),
+            // 485T config image ≈ 19.3 MB.
+            full_bitstream_bytes: 19_300_000,
+            jtag_config_s: crate::paper::CONFIG_LOCAL_S,
+            pr_quarter_region_ms: crate::paper::PR_LOCAL_MS,
+            static_power_w: 7.5,
+            idle_power_w: 2.5,
+            active_region_power_w: 4.0,
+        }
+    }
+
+    /// ML605 / Virtex-6 LX240T — the second testbed board.
+    pub fn ml605() -> BoardSpec {
+        BoardSpec {
+            kind: BoardKind::Ml605,
+            part: "xc6vlx240t",
+            // LX240T: 150,720 LUTs; 301,440 FFs; 416 RAMB36; 768 DSP48E1.
+            resources: Resources::new(150_720, 301_440, 416, 768),
+            // LX240T config image ≈ 9.2 MB; JTAG time scales with size.
+            full_bitstream_bytes: 9_200_000,
+            jtag_config_s: crate::paper::CONFIG_LOCAL_S * 9.2 / 19.3,
+            pr_quarter_region_ms: crate::paper::PR_LOCAL_MS * 9.2 / 19.3,
+            static_power_w: 6.0,
+            idle_power_w: 2.0,
+            active_region_power_w: 3.5,
+        }
+    }
+
+    pub fn of(kind: BoardKind) -> BoardSpec {
+        match kind {
+            BoardKind::Vc707 => BoardSpec::vc707(),
+            BoardKind::Ml605 => BoardSpec::ml605(),
+        }
+    }
+
+    /// PR bitstream size for a region covering `frac` of the device.
+    pub fn partial_bitstream_bytes(&self, frac: f64) -> u64 {
+        (self.full_bitstream_bytes as f64 * frac) as u64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::from(self.kind.name())),
+            ("part", Json::from(self.part)),
+            ("resources", self.resources.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(BoardKind::parse("VC707"), Some(BoardKind::Vc707));
+        assert_eq!(BoardKind::parse("ml605"), Some(BoardKind::Ml605));
+        assert_eq!(BoardKind::parse("zcu102"), None);
+    }
+
+    #[test]
+    fn vc707_is_table2_device() {
+        let b = BoardSpec::vc707();
+        assert_eq!(b.part, "xc7vx485t");
+        assert_eq!(b.resources.lut, 303_600);
+        assert!((b.jtag_config_s - 28.370).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ml605_scales_config_time_with_image() {
+        let b = BoardSpec::ml605();
+        assert!(b.jtag_config_s < BoardSpec::vc707().jtag_config_s);
+        assert!(b.jtag_config_s > 10.0);
+    }
+
+    #[test]
+    fn partial_bitstream_fraction() {
+        let b = BoardSpec::vc707();
+        let q = b.partial_bitstream_bytes(0.25);
+        assert_eq!(q, 19_300_000 / 4);
+    }
+
+    #[test]
+    fn of_matches_constructor() {
+        assert_eq!(BoardSpec::of(BoardKind::Vc707), BoardSpec::vc707());
+        assert_eq!(BoardSpec::of(BoardKind::Ml605), BoardSpec::ml605());
+    }
+}

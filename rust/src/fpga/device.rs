@@ -1,0 +1,519 @@
+//! The physical FPGA device: regions + configuration ports + power.
+//!
+//! Owns the timed operations of Table I:
+//! * full configuration via JTAG/USB (28.370 s on the VC707),
+//! * partial reconfiguration of one region (732 ms for a quarter
+//!   region, scaled by region size),
+//! and the clock-gating hooks the hypervisor's energy manager uses.
+//!
+//! PCIe link-parameter save/restore (hot-plug after a full
+//! reconfiguration, Section IV-C) lives here too: a full bitstream
+//! replaces the PCIe endpoint, so the hypervisor snapshots the link
+//! parameters first and restores them afterwards.
+
+use std::sync::Arc;
+
+use super::board::BoardSpec;
+use super::power::{EnergyMeter, PowerState};
+use super::region::{equal_split, Region, RegionShape, RegionState};
+use super::resources::Resources;
+use crate::bitstream::{Bitstream, BitstreamKind};
+use crate::util::clock::{VirtualClock, VirtualTime};
+use crate::util::ids::{FpgaId, VfpgaId};
+use crate::util::json::Json;
+
+/// Which configuration port an operation uses (affects timing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigPort {
+    /// External JTAG/USB cable — slow, used for full bitstreams
+    /// (Table I footnote: "Configuration using JTAG and USB").
+    Jtag,
+    /// Internal configuration access port — fast, used for PR.
+    Icap,
+}
+
+/// Errors raised by device operations.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DeviceError {
+    #[error("bitstream targets part '{bitstream}' but device is '{device}'")]
+    WrongPart { bitstream: String, device: String },
+    #[error("region {0} not present on device")]
+    NoSuchRegion(VfpgaId),
+    #[error("bitstream is {kind:?} but operation needs {needed:?}")]
+    WrongKind {
+        kind: BitstreamKind,
+        needed: BitstreamKind,
+    },
+    #[error("design needs {needed} but region offers {offered}")]
+    DoesNotFit { needed: String, offered: String },
+    #[error("device has no static (RC2F) design loaded")]
+    NoStaticDesign,
+    #[error("bitstream failed sanity check: {0}")]
+    Insane(String),
+}
+
+/// Status snapshot (what the RC2F status call returns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceStatus {
+    pub fpga: FpgaId,
+    pub board: &'static str,
+    pub static_design: Option<String>,
+    pub regions_total: usize,
+    pub regions_configured: usize,
+    pub regions_clocked: usize,
+    pub power_w: f64,
+}
+
+/// One physical FPGA board attached to a node.
+#[derive(Debug)]
+pub struct FpgaDevice {
+    pub id: FpgaId,
+    pub board: BoardSpec,
+    clock: Arc<VirtualClock>,
+    /// Name+sha of the loaded static design (None right after power-on).
+    static_design: Option<(String, String)>,
+    /// Static design footprint (subtracted from the PR budget).
+    static_footprint: Resources,
+    regions: Vec<Region>,
+    energy: EnergyMeter,
+    /// Saved PCIe link parameters for hot-plug restore.
+    saved_link: Option<crate::pcie::LinkParams>,
+}
+
+impl FpgaDevice {
+    pub fn new(
+        id: FpgaId,
+        board: BoardSpec,
+        clock: Arc<VirtualClock>,
+    ) -> FpgaDevice {
+        let power = PowerState {
+            base_w: board.static_power_w,
+            idle_w: board.idle_power_w,
+            active_regions: 0,
+            region_w: board.active_region_power_w,
+        };
+        let energy = EnergyMeter::new(Arc::clone(&clock), power);
+        FpgaDevice {
+            id,
+            board,
+            clock,
+            static_design: None,
+            static_footprint: Resources::ZERO,
+            regions: Vec::new(),
+            energy,
+            saved_link: None,
+        }
+    }
+
+    // ------------------------------------------------------ accessors
+
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    pub fn region(&self, id: VfpgaId) -> Result<&Region, DeviceError> {
+        self.regions
+            .iter()
+            .find(|r| r.id == id)
+            .ok_or(DeviceError::NoSuchRegion(id))
+    }
+
+    fn region_mut(&mut self, id: VfpgaId) -> Result<&mut Region, DeviceError> {
+        self.regions
+            .iter_mut()
+            .find(|r| r.id == id)
+            .ok_or(DeviceError::NoSuchRegion(id))
+    }
+
+    pub fn has_static_design(&self) -> bool {
+        self.static_design.is_some()
+    }
+
+    pub fn static_design_name(&self) -> Option<&str> {
+        self.static_design.as_ref().map(|(n, _)| n.as_str())
+    }
+
+    /// Status snapshot — the payload of the RC2F status call.
+    pub fn status(&self) -> DeviceStatus {
+        DeviceStatus {
+            fpga: self.id,
+            board: self.board.kind.name(),
+            static_design: self.static_design.as_ref().map(|(n, _)| n.clone()),
+            regions_total: self.regions.len(),
+            regions_configured: self
+                .regions
+                .iter()
+                .filter(|r| r.is_configured())
+                .count(),
+            regions_clocked: self.clocked_regions(),
+            power_w: self.energy.draw_w(),
+        }
+    }
+
+    pub fn clocked_regions(&self) -> usize {
+        self.regions.iter().filter(|r| r.clock_enabled).count()
+    }
+
+    /// Integrated energy so far (virtual time).
+    pub fn energy_joules(&mut self) -> f64 {
+        self.energy.joules()
+    }
+
+    // --------------------------------------------- full configuration
+
+    /// Load a *full* bitstream (RSaaS user design or the RC2F static
+    /// design). Charges the JTAG configuration time from Table I and
+    /// wipes all regions (a full bitstream replaces everything).
+    ///
+    /// Returns the charged virtual duration.
+    pub fn configure_full(
+        &mut self,
+        bs: &Bitstream,
+    ) -> Result<VirtualTime, DeviceError> {
+        self.check_part(bs)?;
+        if bs.kind != BitstreamKind::Full {
+            return Err(DeviceError::WrongKind {
+                kind: bs.kind,
+                needed: BitstreamKind::Full,
+            });
+        }
+        let d = VirtualTime::from_secs_f64(self.board.jtag_config_s);
+        self.clock.advance(d);
+        self.regions.clear();
+        self.static_design = Some((bs.meta.core.clone(), bs.sha256.clone()));
+        self.static_footprint = bs.meta.resources;
+        // If this is an RC2F basic design, carve out its vFPGA regions.
+        if let Some(n) = bs.meta.vfpga_regions {
+            self.carve_regions(n);
+        }
+        self.energy.set_active_regions(0);
+        Ok(d)
+    }
+
+    /// Floorplan `n` equal quarter/half/full regions out of the PR
+    /// budget (device minus static footprint). Region ids are derived
+    /// from the device id so they are cluster-unique.
+    fn carve_regions(&mut self, n: usize) {
+        assert!(n >= 1 && n <= crate::paper::MAX_VFPGAS);
+        // Keep a 20% routing/clocking margin like a real floorplan.
+        let free = self.board.resources.minus(self.static_footprint);
+        let budget = Resources::new(
+            free.lut * 8 / 10,
+            free.ff * 8 / 10,
+            free.bram * 8 / 10,
+            free.dsp * 8 / 10,
+        );
+        let per = equal_split(budget, n);
+        let shape = match n {
+            1 => RegionShape::Full,
+            2 => RegionShape::Half,
+            _ => RegionShape::Quarter,
+        };
+        self.regions = (0..n)
+            .map(|i| {
+                Region::new(
+                    VfpgaId(self.id.0 * crate::paper::MAX_VFPGAS as u64 + i as u64),
+                    shape,
+                    per,
+                )
+            })
+            .collect();
+    }
+
+    // ------------------------------------------ partial reconfiguration
+
+    /// Partially reconfigure one region with a user design. Charges
+    /// the ICAP PR time from Table I, scaled by the region's share of
+    /// the device. Requires the RC2F static design to be present.
+    pub fn configure_partial(
+        &mut self,
+        region_id: VfpgaId,
+        bs: &Bitstream,
+    ) -> Result<VirtualTime, DeviceError> {
+        self.check_part(bs)?;
+        if self.static_design.is_none() {
+            return Err(DeviceError::NoStaticDesign);
+        }
+        let BitstreamKind::Partial = bs.kind else {
+            return Err(DeviceError::WrongKind {
+                kind: bs.kind,
+                needed: BitstreamKind::Partial,
+            });
+        };
+        let pr_ms = {
+            let region = self.region(region_id)?;
+            if !bs.meta.resources.fits_in(region.capacity) {
+                return Err(DeviceError::DoesNotFit {
+                    needed: bs.meta.resources.to_string(),
+                    offered: region.capacity.to_string(),
+                });
+            }
+            // PR time scales with configured area: a quarter region is
+            // the paper's measured 732 ms.
+            self.board.pr_quarter_region_ms
+                * (region.shape.fraction() / 0.25)
+        };
+        let d = VirtualTime::from_millis_f64(pr_ms);
+        self.clock.advance(d);
+        let sha = bs.sha256.clone();
+        let core = bs.meta.core.clone();
+        let region = self.region_mut(region_id)?;
+        region.state = RegionState::Configured {
+            bitstream_sha: sha,
+            core,
+        };
+        region.clock_enabled = true;
+        let active = self.clocked_regions();
+        self.energy.set_active_regions(active);
+        Ok(d)
+    }
+
+    /// Blank a region (PR with the blanking bitstream) and gate its
+    /// clock. Charged like a PR operation.
+    pub fn clear_region(
+        &mut self,
+        region_id: VfpgaId,
+    ) -> Result<VirtualTime, DeviceError> {
+        let pr_ms = {
+            let region = self.region(region_id)?;
+            self.board.pr_quarter_region_ms
+                * (region.shape.fraction() / 0.25)
+        };
+        let d = VirtualTime::from_millis_f64(pr_ms);
+        self.clock.advance(d);
+        self.region_mut(region_id)?.clear();
+        let active = self.clocked_regions();
+        self.energy.set_active_regions(active);
+        Ok(d)
+    }
+
+    /// Gate/ungate a region clock without reconfiguring (idle power
+    /// management; instantaneous from the host's perspective).
+    pub fn set_region_clock(
+        &mut self,
+        region_id: VfpgaId,
+        enabled: bool,
+    ) -> Result<(), DeviceError> {
+        self.region_mut(region_id)?.clock_enabled = enabled;
+        let active = self.clocked_regions();
+        self.energy.set_active_regions(active);
+        Ok(())
+    }
+
+    // ------------------------------------------------- PCIe hot-plug
+
+    /// Snapshot link parameters before a full reconfiguration.
+    pub fn save_link_params(&mut self, params: crate::pcie::LinkParams) {
+        self.saved_link = Some(params);
+    }
+
+    /// Restore the snapshot after reconfiguration (hot-plug).
+    pub fn restore_link_params(&mut self) -> Option<crate::pcie::LinkParams> {
+        self.saved_link
+    }
+
+    fn check_part(&self, bs: &Bitstream) -> Result<(), DeviceError> {
+        if bs.meta.part != self.board.part {
+            return Err(DeviceError::WrongPart {
+                bitstream: bs.meta.part.clone(),
+                device: self.board.part.to_string(),
+            });
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::from(self.id.to_string())),
+            ("board", self.board.to_json()),
+            (
+                "static_design",
+                match &self.static_design {
+                    Some((n, sha)) => Json::obj(vec![
+                        ("name", Json::from(n.as_str())),
+                        ("sha256", Json::from(sha.as_str())),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "regions",
+                Json::Arr(self.regions.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::tests_support::{partial_bs, rc2f_full_bs};
+
+    fn device() -> (FpgaDevice, Arc<VirtualClock>) {
+        let clock = VirtualClock::new();
+        (
+            FpgaDevice::new(FpgaId(0), BoardSpec::vc707(), Arc::clone(&clock)),
+            clock,
+        )
+    }
+
+    #[test]
+    fn full_configuration_charges_table1_time() {
+        let (mut dev, clock) = device();
+        let bs = rc2f_full_bs("xc7vx485t", 4);
+        let d = dev.configure_full(&bs).unwrap();
+        assert!((d.as_secs_f64() - 28.370).abs() < 1e-6);
+        assert!((clock.now().as_secs_f64() - 28.370).abs() < 1e-6);
+        assert_eq!(dev.regions().len(), 4);
+        assert!(dev.has_static_design());
+    }
+
+    #[test]
+    fn partial_reconfiguration_charges_732ms() {
+        let (mut dev, clock) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let t0 = clock.now();
+        let region = dev.regions()[0].id;
+        let d = dev
+            .configure_partial(region, &partial_bs("xc7vx485t", "matmul16"))
+            .unwrap();
+        assert!((d.as_millis_f64() - 732.0).abs() < 1e-6);
+        assert!(
+            (clock.since(t0).as_millis_f64() - 732.0).abs() < 1e-6
+        );
+        assert!(dev.region(region).unwrap().is_configured());
+    }
+
+    #[test]
+    fn pr_scales_with_region_shape() {
+        let (mut dev, _clock) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 2)).unwrap();
+        let region = dev.regions()[0].id;
+        let d = dev
+            .configure_partial(region, &partial_bs("xc7vx485t", "matmul32"))
+            .unwrap();
+        // Half region = 2x the quarter-region PR time.
+        assert!((d.as_millis_f64() - 1464.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pr_requires_static_design() {
+        let (mut dev, _) = device();
+        let err = dev
+            .configure_partial(VfpgaId(0), &partial_bs("xc7vx485t", "m"))
+            .unwrap_err();
+        assert_eq!(err, DeviceError::NoStaticDesign);
+    }
+
+    #[test]
+    fn wrong_part_rejected() {
+        let (mut dev, _) = device();
+        let err = dev
+            .configure_full(&rc2f_full_bs("xc6vlx240t", 4))
+            .unwrap_err();
+        assert!(matches!(err, DeviceError::WrongPart { .. }));
+    }
+
+    #[test]
+    fn wrong_kind_rejected() {
+        let (mut dev, _) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let region = dev.regions()[0].id;
+        let err = dev
+            .configure_partial(region, &rc2f_full_bs("xc7vx485t", 4))
+            .unwrap_err();
+        assert!(matches!(err, DeviceError::WrongKind { .. }));
+        let err2 = dev
+            .configure_full(&partial_bs("xc7vx485t", "m"))
+            .unwrap_err();
+        assert!(matches!(err2, DeviceError::WrongKind { .. }));
+    }
+
+    #[test]
+    fn oversized_design_rejected() {
+        let (mut dev, _) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let region = dev.regions()[0].id;
+        let mut bs = partial_bs("xc7vx485t", "huge");
+        bs.meta.resources = Resources::new(10_000_000, 0, 0, 0);
+        let err = dev.configure_partial(region, &bs).unwrap_err();
+        assert!(matches!(err, DeviceError::DoesNotFit { .. }));
+    }
+
+    #[test]
+    fn regions_fit_device_budget() {
+        let (mut dev, _) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let total = dev
+            .regions()
+            .iter()
+            .fold(Resources::ZERO, |acc, r| acc.plus(r.capacity));
+        assert!(total
+            .plus(Resources::new(8532, 8318, 25, 0))
+            .fits_in(dev.board.resources));
+    }
+
+    #[test]
+    fn clock_gating_updates_power() {
+        let (mut dev, _) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let idle = dev.status().power_w;
+        let region = dev.regions()[0].id;
+        dev.configure_partial(region, &partial_bs("xc7vx485t", "m"))
+            .unwrap();
+        let active = dev.status().power_w;
+        assert!(active > idle);
+        dev.set_region_clock(region, false).unwrap();
+        assert_eq!(dev.status().power_w, idle);
+    }
+
+    #[test]
+    fn clear_region_blanks_and_charges() {
+        let (mut dev, clock) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let region = dev.regions()[0].id;
+        dev.configure_partial(region, &partial_bs("xc7vx485t", "m"))
+            .unwrap();
+        let t0 = clock.now();
+        dev.clear_region(region).unwrap();
+        assert!(!dev.region(region).unwrap().is_configured());
+        assert!(clock.since(t0).as_millis_f64() > 0.0);
+    }
+
+    #[test]
+    fn hotplug_roundtrip() {
+        let (mut dev, _) = device();
+        let params = crate::pcie::LinkParams::gen2_x4();
+        dev.save_link_params(params);
+        assert_eq!(dev.restore_link_params(), Some(params));
+    }
+
+    #[test]
+    fn status_counts() {
+        let (mut dev, _) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let r0 = dev.regions()[0].id;
+        let r1 = dev.regions()[1].id;
+        dev.configure_partial(r0, &partial_bs("xc7vx485t", "a"))
+            .unwrap();
+        dev.configure_partial(r1, &partial_bs("xc7vx485t", "b"))
+            .unwrap();
+        dev.set_region_clock(r1, false).unwrap();
+        let st = dev.status();
+        assert_eq!(st.regions_total, 4);
+        assert_eq!(st.regions_configured, 2);
+        assert_eq!(st.regions_clocked, 1);
+    }
+
+    #[test]
+    fn full_reconfig_wipes_regions() {
+        let (mut dev, _) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let r0 = dev.regions()[0].id;
+        dev.configure_partial(r0, &partial_bs("xc7vx485t", "a"))
+            .unwrap();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 2)).unwrap();
+        assert_eq!(dev.regions().len(), 2);
+        assert!(dev.regions().iter().all(|r| !r.is_configured()));
+    }
+}

@@ -1,0 +1,24 @@
+//! Simulated FPGA device substrate.
+//!
+//! The paper's testbed is two nodes with Xilinx ML605 / VC707 boards
+//! (Section IV-A). We do not have that hardware, so this module
+//! implements the device model the rest of the stack manages:
+//! resource inventories, partial-reconfiguration regions, timed
+//! configuration ports (JTAG full configuration, ICAP partial
+//! reconfiguration), clock gating and a power/energy model.
+//!
+//! Everything time-like is charged to the shared
+//! [`crate::util::clock::VirtualClock`], calibrated to Table I of the
+//! paper; see DESIGN.md §3 for the substitution argument.
+
+pub mod board;
+pub mod device;
+pub mod power;
+pub mod region;
+pub mod resources;
+
+pub use board::{BoardKind, BoardSpec};
+pub use device::{ConfigPort, DeviceError, DeviceStatus, FpgaDevice};
+pub use power::{EnergyMeter, PowerState};
+pub use region::{Region, RegionShape, RegionState};
+pub use resources::Resources;

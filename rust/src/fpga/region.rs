@@ -1,0 +1,195 @@
+//! Partial-reconfiguration regions (the vFPGA substrate).
+//!
+//! Each physical FPGA is floorplanned into up to four predefined PR
+//! regions (Section IV-A: "Each physical FPGA can host up to four
+//! virtual FPGAs"). A region has a fixed resource envelope carved out
+//! of the device, a configuration state, and an independent clock
+//! enable (the hypervisor gates clocks of idle regions to save power,
+//! Section IV-B).
+
+use super::resources::Resources;
+use crate::util::ids::VfpgaId;
+use crate::util::json::Json;
+
+/// Size classes for vFPGA regions (the RAaaS model offers "vFPGAs of
+/// different sizes", Section III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RegionShape {
+    /// 1/4 of the device PR budget (the default paper config).
+    Quarter,
+    /// 1/2 of the device PR budget.
+    Half,
+    /// The whole PR budget as one region.
+    Full,
+}
+
+impl RegionShape {
+    /// Fraction of the device's reconfigurable area.
+    pub fn fraction(self) -> f64 {
+        match self {
+            RegionShape::Quarter => 0.25,
+            RegionShape::Half => 0.5,
+            RegionShape::Full => 1.0,
+        }
+    }
+
+    /// Number of quarter-slots the shape occupies.
+    pub fn quarters(self) -> usize {
+        match self {
+            RegionShape::Quarter => 1,
+            RegionShape::Half => 2,
+            RegionShape::Full => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RegionShape::Quarter => "quarter",
+            RegionShape::Half => "half",
+            RegionShape::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RegionShape> {
+        match s {
+            "quarter" => Some(RegionShape::Quarter),
+            "half" => Some(RegionShape::Half),
+            "full" => Some(RegionShape::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Configuration state of one region.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegionState {
+    /// Blanked (after boot or explicit clear).
+    Empty,
+    /// Holds a user design identified by its bitstream id/core name.
+    Configured {
+        bitstream_sha: String,
+        core: String,
+    },
+}
+
+/// One PR region on a device.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub id: VfpgaId,
+    pub shape: RegionShape,
+    /// Resource envelope available to the user design inside.
+    pub capacity: Resources,
+    pub state: RegionState,
+    /// Clock enable — gated off when idle (energy management).
+    pub clock_enabled: bool,
+}
+
+impl Region {
+    pub fn new(id: VfpgaId, shape: RegionShape, capacity: Resources) -> Region {
+        Region {
+            id,
+            shape,
+            capacity,
+            state: RegionState::Empty,
+            clock_enabled: false,
+        }
+    }
+
+    pub fn is_configured(&self) -> bool {
+        matches!(self.state, RegionState::Configured { .. })
+    }
+
+    /// Blank the region (what PR with a blanking bitstream does).
+    pub fn clear(&mut self) {
+        self.state = RegionState::Empty;
+        self.clock_enabled = false;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let state = match &self.state {
+            RegionState::Empty => Json::from("empty"),
+            RegionState::Configured {
+                bitstream_sha,
+                core,
+            } => Json::obj(vec![
+                ("bitstream_sha", Json::from(bitstream_sha.as_str())),
+                ("core", Json::from(core.as_str())),
+            ]),
+        };
+        Json::obj(vec![
+            ("id", Json::from(self.id.to_string())),
+            ("shape", Json::from(self.shape.name())),
+            ("capacity", self.capacity.to_json()),
+            ("state", state),
+            ("clock_enabled", Json::from(self.clock_enabled)),
+        ])
+    }
+}
+
+/// Compute the per-region envelope for `n` equal regions on a board
+/// whose *reconfigurable* budget is the device minus the static
+/// (RC2F) design footprint.
+pub fn equal_split(budget: Resources, n: usize) -> Resources {
+    let n = n as u64;
+    Resources::new(
+        budget.lut / n,
+        budget.ff / n,
+        budget.bram / n,
+        budget.dsp / n,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_fractions() {
+        assert_eq!(RegionShape::Quarter.fraction(), 0.25);
+        assert_eq!(RegionShape::Half.quarters(), 2);
+        assert_eq!(RegionShape::Full.quarters(), 4);
+        assert_eq!(RegionShape::parse("half"), Some(RegionShape::Half));
+        assert_eq!(RegionShape::parse("eighth"), None);
+    }
+
+    #[test]
+    fn lifecycle() {
+        let mut r = Region::new(
+            VfpgaId(0),
+            RegionShape::Quarter,
+            Resources::new(100, 100, 10, 10),
+        );
+        assert!(!r.is_configured());
+        r.state = RegionState::Configured {
+            bitstream_sha: "abc".into(),
+            core: "matmul16".into(),
+        };
+        r.clock_enabled = true;
+        assert!(r.is_configured());
+        r.clear();
+        assert!(!r.is_configured());
+        assert!(!r.clock_enabled);
+    }
+
+    #[test]
+    fn equal_split_divides() {
+        let budget = Resources::new(100, 200, 40, 80);
+        let q = equal_split(budget, 4);
+        assert_eq!(q, Resources::new(25, 50, 10, 20));
+        // n regions never exceed the budget
+        assert!(q.times(4).fits_in(budget));
+    }
+
+    #[test]
+    fn json_shape() {
+        let r = Region::new(
+            VfpgaId(3),
+            RegionShape::Half,
+            Resources::new(1, 2, 3, 4),
+        );
+        let j = r.to_json();
+        assert_eq!(j.get("id").as_str().unwrap(), "vfpga-3");
+        assert_eq!(j.get("shape").as_str().unwrap(), "half");
+        assert_eq!(j.get("state").as_str().unwrap(), "empty");
+    }
+}

@@ -1,0 +1,195 @@
+//! FPGA resource vectors (LUT / FF / BRAM / DSP).
+//!
+//! The unit of accounting for Table II (framework utilization) and
+//! Table III (user-core area), and the quantity the placement engine
+//! packs into PR regions.
+
+use crate::util::json::Json;
+
+/// A resource vector. BRAM counts RAMB36 blocks like Xilinx reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram: u64,
+    pub dsp: u64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources {
+        lut: 0,
+        ff: 0,
+        bram: 0,
+        dsp: 0,
+    };
+
+    pub fn new(lut: u64, ff: u64, bram: u64, dsp: u64) -> Resources {
+        Resources { lut, ff, bram, dsp }
+    }
+
+    /// Component-wise sum.
+    pub fn plus(self, other: Resources) -> Resources {
+        Resources {
+            lut: self.lut + other.lut,
+            ff: self.ff + other.ff,
+            bram: self.bram + other.bram,
+            dsp: self.dsp + other.dsp,
+        }
+    }
+
+    /// Component-wise saturating difference.
+    pub fn minus(self, other: Resources) -> Resources {
+        Resources {
+            lut: self.lut.saturating_sub(other.lut),
+            ff: self.ff.saturating_sub(other.ff),
+            bram: self.bram.saturating_sub(other.bram),
+            dsp: self.dsp.saturating_sub(other.dsp),
+        }
+    }
+
+    /// Scale by an integer factor (n identical cores).
+    pub fn times(self, n: u64) -> Resources {
+        Resources {
+            lut: self.lut * n,
+            ff: self.ff * n,
+            bram: self.bram * n,
+            dsp: self.dsp * n,
+        }
+    }
+
+    /// Does `self` fit inside `capacity` on every axis?
+    pub fn fits_in(self, capacity: Resources) -> bool {
+        self.lut <= capacity.lut
+            && self.ff <= capacity.ff
+            && self.bram <= capacity.bram
+            && self.dsp <= capacity.dsp
+    }
+
+    /// Largest per-axis utilization fraction (0.0–1.0+) — the number
+    /// the paper quotes as "<3 % of the device".
+    pub fn utilization_of(self, capacity: Resources) -> f64 {
+        let frac = |a: u64, b: u64| {
+            if b == 0 {
+                0.0
+            } else {
+                a as f64 / b as f64
+            }
+        };
+        frac(self.lut, capacity.lut)
+            .max(frac(self.ff, capacity.ff))
+            .max(frac(self.bram, capacity.bram))
+            .max(frac(self.dsp, capacity.dsp))
+    }
+
+    /// Per-axis utilization percentages `(lut, ff, bram, dsp)`.
+    pub fn utilization_pct(self, capacity: Resources) -> (f64, f64, f64, f64) {
+        let pct = |a: u64, b: u64| {
+            if b == 0 {
+                0.0
+            } else {
+                100.0 * a as f64 / b as f64
+            }
+        };
+        (
+            pct(self.lut, capacity.lut),
+            pct(self.ff, capacity.ff),
+            pct(self.bram, capacity.bram),
+            pct(self.dsp, capacity.dsp),
+        )
+    }
+
+    pub fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("lut", Json::from(self.lut)),
+            ("ff", Json::from(self.ff)),
+            ("bram", Json::from(self.bram)),
+            ("dsp", Json::from(self.dsp)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Resources> {
+        Some(Resources {
+            lut: v.get("lut").as_u64()?,
+            ff: v.get("ff").as_u64()?,
+            bram: v.get("bram").as_u64()?,
+            dsp: v.get("dsp").as_u64()?,
+        })
+    }
+}
+
+impl std::fmt::Display for Resources {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "LUT {} / FF {} / BRAM {} / DSP {}",
+            self.lut, self.ff, self.bram, self.dsp
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(100, 200, 4, 8);
+        let b = Resources::new(50, 25, 1, 2);
+        assert_eq!(a.plus(b), Resources::new(150, 225, 5, 10));
+        assert_eq!(a.minus(b), Resources::new(50, 175, 3, 6));
+        assert_eq!(b.times(4), Resources::new(200, 100, 4, 8));
+    }
+
+    #[test]
+    fn minus_saturates() {
+        let a = Resources::new(1, 1, 1, 1);
+        let b = Resources::new(5, 5, 5, 5);
+        assert_eq!(a.minus(b), Resources::ZERO);
+    }
+
+    #[test]
+    fn fits_requires_every_axis() {
+        let cap = Resources::new(100, 100, 10, 10);
+        assert!(Resources::new(100, 100, 10, 10).fits_in(cap));
+        assert!(!Resources::new(101, 1, 1, 1).fits_in(cap));
+        assert!(!Resources::new(1, 1, 11, 1).fits_in(cap));
+    }
+
+    #[test]
+    fn utilization_is_max_axis() {
+        let cap = Resources::new(1000, 1000, 100, 100);
+        let used = Resources::new(10, 500, 3, 0);
+        assert!((used.utilization_of(cap) - 0.5).abs() < 1e-12);
+        let (l, f, b, d) = used.utilization_pct(cap);
+        assert!((l - 1.0).abs() < 1e-12);
+        assert!((f - 50.0).abs() < 1e-12);
+        assert!((b - 3.0).abs() < 1e-12);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn paper_table2_utilization_reproduced() {
+        // Table II: 4-vFPGA total 8,532 LUT / 8,318 FF / 25 BRAM on a
+        // XC7VX485T is quoted as 2.8 % / 1.4 % / 2.3 %.
+        let cap = crate::fpga::board::BoardSpec::vc707().resources;
+        let total = Resources::new(8_532, 8_318, 25, 0);
+        let (l, f, b, _) = total.utilization_pct(cap);
+        assert!((l - 2.8).abs() < 0.1, "lut {l}");
+        assert!((f - 1.4).abs() < 0.1, "ff {f}");
+        assert!((b - 2.3).abs() < 0.2, "bram {b}");
+    }
+
+    #[test]
+    fn zero_capacity_is_zero_utilization() {
+        assert_eq!(
+            Resources::new(5, 5, 5, 5).utilization_of(Resources::ZERO),
+            0.0
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = Resources::new(3268, 3592, 8, 0);
+        assert_eq!(Resources::from_json(&r.to_json()), Some(r));
+    }
+}

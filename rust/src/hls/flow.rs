@@ -1,0 +1,295 @@
+//! The design flow: spec → synthesis → place&route → partial bitfile.
+//!
+//! Fig. 5 of the paper: an application is split into a host program
+//! (linked against the RC2F host library) and a C function that HLS
+//! turns into a user core embedded in a vFPGA region. The flow here
+//! produces a [`crate::bitstream::Bitstream`] bound to the HLO
+//! artifact that executes the core's math for real.
+//!
+//! Region relocatability (paper future work, Section VI: "manipulate
+//! the partial configuration file to utilize every feasible vFPGA
+//! region") is implemented: `place_and_route` emits a *relocatable*
+//! design, and [`DesignFlow::retarget`] rewrites the frame window for
+//! any compatible region without re-synthesis.
+
+use std::sync::Arc;
+
+use super::synth::{CoreSpec, SynthReport, Synthesizer};
+use crate::bitstream::{Bitstream, BitstreamBuilder, FrameRange};
+use crate::fpga::region::RegionShape;
+use crate::util::clock::{VirtualClock, VirtualTime};
+
+/// Flow errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FlowError {
+    #[error("core '{core}' does not fit a {shape:?} region: {detail}")]
+    DoesNotFit {
+        core: String,
+        shape: RegionShape,
+        detail: String,
+    },
+    #[error("timing not met: needs {needed_mhz:.0} MHz, closed {closed_mhz:.0} MHz")]
+    TimingFailure { needed_mhz: f64, closed_mhz: f64 },
+}
+
+/// Result of a full flow run.
+#[derive(Debug, Clone)]
+pub struct FlowOutput {
+    pub report: SynthReport,
+    pub bitstream: Bitstream,
+    /// Virtual build time charged (synthesis + P&R).
+    pub build_time: VirtualTime,
+}
+
+/// Frame window assigned to each quarter slot of a device (the
+/// static floorplan the flow targets). Slot `i` of 4 gets
+/// `[i*QUARTER_FRAMES, (i+1)*QUARTER_FRAMES)`.
+pub const QUARTER_FRAMES: u64 = 4_000;
+
+/// Frame window of a region occupying `quarters` slots at `slot`.
+pub fn region_window(slot: usize, quarters: usize) -> FrameRange {
+    FrameRange {
+        start: slot as u64 * QUARTER_FRAMES,
+        end: (slot + quarters) as u64 * QUARTER_FRAMES,
+    }
+}
+
+/// The Vivado-HLS-plus-Vivado stand-in.
+#[derive(Debug)]
+pub struct DesignFlow {
+    synth: Synthesizer,
+    clock: Arc<VirtualClock>,
+    /// Modeled synthesis+P&R wall time per core (charged virtually;
+    /// Vivado-era flows took tens of minutes).
+    build_minutes: f64,
+}
+
+impl DesignFlow {
+    pub fn new(clock: Arc<VirtualClock>) -> DesignFlow {
+        DesignFlow {
+            synth: Synthesizer::new(),
+            clock,
+            build_minutes: 23.0,
+        }
+    }
+
+    /// Run the full flow for one core targeting a region shape at a
+    /// given quarter slot. `batch` selects the HLO artifact chunking.
+    pub fn run(
+        &self,
+        spec: &CoreSpec,
+        shape: RegionShape,
+        slot: usize,
+        batch: usize,
+        region_capacity: crate::fpga::resources::Resources,
+    ) -> Result<FlowOutput, FlowError> {
+        let report = self.synth.synthesize(spec);
+        let total = report.total_for(1);
+        if !total.fits_in(region_capacity) {
+            return Err(FlowError::DoesNotFit {
+                core: spec.kind.name(),
+                shape,
+                detail: format!(
+                    "needs {total}, region offers {region_capacity}"
+                ),
+            });
+        }
+        // P&R timing model: dense designs close slower; past ~90% LUT
+        // fill of the region the clock collapses below target.
+        let fill = total.utilization_of(region_capacity);
+        let closed_mhz = if fill < 0.9 {
+            spec.clock_mhz
+        } else {
+            spec.clock_mhz * (1.0 - (fill - 0.9) * 5.0)
+        };
+        if closed_mhz < spec.clock_mhz {
+            return Err(FlowError::TimingFailure {
+                needed_mhz: spec.clock_mhz,
+                closed_mhz,
+            });
+        }
+        let window = region_window(slot, shape.quarters());
+        // Frames used scale with area fill inside the window.
+        let used = ((window.len() as f64) * fill.max(0.05)) as u64;
+        let frames = FrameRange {
+            start: window.start,
+            end: window.start + used.max(1),
+        };
+        let build_time =
+            VirtualTime::from_secs_f64(self.build_minutes * 60.0);
+        self.clock.advance(build_time);
+        let bitstream = BitstreamBuilder::partial(&spec.part, &spec.kind.name())
+            .resources(total)
+            .frames(frames)
+            .artifact(
+                &spec
+                    .artifact(batch)
+                    .unwrap_or_else(|| spec.kind.name()),
+            )
+            .payload_len(
+                (crate::fpga::board::BoardSpec::vc707()
+                    .partial_bitstream_bytes(shape.fraction())
+                    / 1024) as usize,
+            )
+            .build();
+        Ok(FlowOutput {
+            report,
+            bitstream,
+            build_time,
+        })
+    }
+
+    /// Retarget a relocatable partial bitfile to another slot (the
+    /// future-work feature): rewrites the frame window, preserving
+    /// the design content; the sha changes because the header does.
+    pub fn retarget(
+        bitstream: &Bitstream,
+        new_slot: usize,
+        quarters: usize,
+    ) -> Bitstream {
+        let window = region_window(new_slot, quarters);
+        let used = bitstream.meta.frames.len().min(window.len());
+        let mut rebuilt = BitstreamBuilder::partial(
+            &bitstream.meta.part,
+            &bitstream.meta.core,
+        )
+        .resources(bitstream.meta.resources)
+        .frames(FrameRange {
+            start: window.start,
+            end: window.start + used.max(1),
+        })
+        .payload_len(bitstream.payload.len());
+        if let Some(a) = &bitstream.meta.artifact {
+            rebuilt = rebuilt.artifact(a);
+        }
+        rebuilt.build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resources::Resources;
+
+    const PART: &str = "xc7vx485t";
+
+    fn quarter_capacity() -> Resources {
+        // A quarter of the VC707 PR budget (roughly).
+        Resources::new(59_000, 119_000, 200, 560)
+    }
+
+    fn flow() -> (DesignFlow, Arc<VirtualClock>) {
+        let clock = VirtualClock::new();
+        (DesignFlow::new(Arc::clone(&clock)), clock)
+    }
+
+    #[test]
+    fn matmul16_flow_produces_bound_bitstream() {
+        let (flow, clock) = flow();
+        let out = flow
+            .run(
+                &CoreSpec::matmul(16, PART),
+                RegionShape::Quarter,
+                0,
+                256,
+                quarter_capacity(),
+            )
+            .unwrap();
+        assert_eq!(out.bitstream.meta.core, "matmul16");
+        assert_eq!(
+            out.bitstream.meta.artifact.as_deref(),
+            Some("matmul16_b256")
+        );
+        assert!(region_window(0, 1).contains(out.bitstream.meta.frames));
+        // Build time charged virtually.
+        assert!(clock.now().as_secs_f64() > 1000.0);
+    }
+
+    #[test]
+    fn oversized_core_rejected() {
+        let (flow, _) = flow();
+        let err = flow
+            .run(
+                &CoreSpec::matmul(64, PART),
+                RegionShape::Quarter,
+                0,
+                64,
+                quarter_capacity(),
+            )
+            .unwrap_err();
+        assert!(matches!(err, FlowError::DoesNotFit { .. }));
+    }
+
+    #[test]
+    fn matmul32_needs_half_region() {
+        let (flow, _) = flow();
+        // 32x32 (64,711 LUT) exceeds a quarter (59k) but fits a half.
+        assert!(flow
+            .run(
+                &CoreSpec::matmul(32, PART),
+                RegionShape::Quarter,
+                0,
+                64,
+                quarter_capacity(),
+            )
+            .is_err());
+        let half = quarter_capacity().times(2);
+        let out = flow
+            .run(
+                &CoreSpec::matmul(32, PART),
+                RegionShape::Half,
+                0,
+                64,
+                half,
+            )
+            .unwrap();
+        assert!(region_window(0, 2).contains(out.bitstream.meta.frames));
+    }
+
+    #[test]
+    fn slots_get_disjoint_windows() {
+        for a in 0..4 {
+            for b in 0..4 {
+                if a == b {
+                    continue;
+                }
+                let wa = region_window(a, 1);
+                let wb = region_window(b, 1);
+                assert!(wa.end <= wb.start || wb.end <= wa.start);
+            }
+        }
+    }
+
+    #[test]
+    fn retarget_moves_window_and_keeps_core() {
+        let (flow, _) = flow();
+        let out = flow
+            .run(
+                &CoreSpec::matmul(16, PART),
+                RegionShape::Quarter,
+                0,
+                256,
+                quarter_capacity(),
+            )
+            .unwrap();
+        let moved = DesignFlow::retarget(&out.bitstream, 3, 1);
+        assert!(region_window(3, 1).contains(moved.meta.frames));
+        assert_eq!(moved.meta.core, out.bitstream.meta.core);
+        assert_eq!(moved.meta.resources, out.bitstream.meta.resources);
+        assert_eq!(moved.meta.artifact, out.bitstream.meta.artifact);
+        assert_ne!(moved.sha256, out.bitstream.sha256); // header changed
+        // The sanity checker accepts the retargeted file in its new slot.
+        let checker = crate::bitstream::SanityChecker::new(
+            crate::bitstream::SanityPolicy::research(),
+        );
+        assert_eq!(
+            checker.check_partial(
+                &moved,
+                PART,
+                region_window(3, 1),
+                quarter_capacity()
+            ),
+            Ok(())
+        );
+    }
+}

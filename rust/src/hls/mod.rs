@@ -1,0 +1,27 @@
+//! High-level-synthesis flow simulator.
+//!
+//! Section IV-E: the RC2F design flow takes a C function, runs Vivado
+//! HLS to produce a user core, wraps it with the RC2F HDL interface
+//! and emits a partial bitstream for a vFPGA region. We reproduce the
+//! *flow* — spec → synthesis report → place&route → partial bitfile —
+//! with a synthesis model calibrated to Table III's measured areas,
+//! and bind each produced bitfile to the HLO artifact that implements
+//! its compute for real (DESIGN.md §3).
+//!
+//! Calibration: the Table III matmul cores (Vivado HLS 2014.x-era,
+//! float32, streaming interface):
+//!
+//! | core      | LUT/core* | FF/core* | DSP | BRAM  | rate      |
+//! |-----------|-----------|----------|-----|-------|-----------|
+//! | matmul16  | 18,821    | 35,107   | 80  | ~4.7  | 509 MB/s  |
+//! | matmul32  | 58,538    | 119,388  | 160 | ~4.7  | 279 MB/s  |
+//!
+//! *marginal area per extra core; the first instance additionally
+//! pays a one-off interface block (the difference between Table III's
+//! 1-core row and the marginal slope).
+
+pub mod flow;
+pub mod synth;
+
+pub use flow::{DesignFlow, FlowError, FlowOutput};
+pub use synth::{CoreKind, CoreSpec, SynthReport, Synthesizer};

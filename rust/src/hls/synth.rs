@@ -1,0 +1,275 @@
+//! Synthesis model: core spec → resource + performance report.
+//!
+//! The constants are fitted to Table III (see module docs in
+//! `hls/mod.rs`); `bench table3` prints the fit against the paper
+//! rows. For matrix sizes the paper did not build, a documented
+//! analytic model extrapolates: DSP = 5·N (float MAC chains), LUT/FF
+//! scale with the unrolled datapath, and the streaming rate follows
+//! the DSP-limited initiation interval.
+
+use crate::fpga::resources::Resources;
+
+/// What the user's C function computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreKind {
+    /// N×N float32 streaming matrix multiplication (the paper's
+    /// Section-V example application).
+    MatMul { n: usize },
+    /// Identity / test loopback.
+    Loopback,
+    /// Elementwise a·x + y (BAaaS demo service).
+    Saxpy,
+    /// Per-matrix checksum reduction (monitoring demo).
+    Checksum,
+}
+
+impl CoreKind {
+    pub fn name(self) -> String {
+        match self {
+            CoreKind::MatMul { n } => format!("matmul{n}"),
+            CoreKind::Loopback => "loopback".to_string(),
+            CoreKind::Saxpy => "saxpy".to_string(),
+            CoreKind::Checksum => "checksum".to_string(),
+        }
+    }
+}
+
+/// Input to the HLS flow — the "C function plus pragmas".
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreSpec {
+    pub kind: CoreKind,
+    /// Target FPGA part.
+    pub part: String,
+    /// Target clock in MHz (paper-era Virtex-7 designs close ~200 MHz).
+    pub clock_mhz: f64,
+}
+
+impl CoreSpec {
+    pub fn matmul(n: usize, part: &str) -> CoreSpec {
+        CoreSpec {
+            kind: CoreKind::MatMul { n },
+            part: part.to_string(),
+            clock_mhz: 200.0,
+        }
+    }
+
+    pub fn named(kind: CoreKind, part: &str) -> CoreSpec {
+        CoreSpec {
+            kind,
+            part: part.to_string(),
+            clock_mhz: 200.0,
+        }
+    }
+
+    /// The HLO artifact variant that implements this core's compute
+    /// for real on the PJRT runtime, given the streaming chunk batch.
+    pub fn artifact(&self, batch: usize) -> Option<String> {
+        match self.kind {
+            CoreKind::MatMul { n } => Some(format!("matmul{n}_b{batch}")),
+            CoreKind::Loopback => Some(format!("loopback16_b{batch}")),
+            CoreKind::Saxpy => Some(format!("saxpy16_b{batch}")),
+            CoreKind::Checksum => Some(format!("checksum16_b{batch}")),
+        }
+    }
+}
+
+/// Synthesis output: area + performance of ONE core instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthReport {
+    pub spec: CoreSpec,
+    /// Marginal resources of one core instance.
+    pub core_resources: Resources,
+    /// One-off interface/control block shared by all instances of
+    /// this core on a device (paid once).
+    pub interface_resources: Resources,
+    /// Streaming processing rate of the core in MB/s (input side) —
+    /// the compute-bound rate before any link sharing.
+    pub rate_mbps: f64,
+    /// Initiation interval in cycles (reporting only).
+    pub ii_cycles: u64,
+}
+
+impl SynthReport {
+    /// Total area for `n` instances (Table III's rows).
+    pub fn total_for(&self, n: u64) -> Resources {
+        self.interface_resources.plus(self.core_resources.times(n))
+    }
+}
+
+/// The synthesis model.
+#[derive(Debug, Default)]
+pub struct Synthesizer;
+
+impl Synthesizer {
+    pub fn new() -> Synthesizer {
+        Synthesizer
+    }
+
+    /// Run "HLS synthesis" for a spec.
+    pub fn synthesize(&self, spec: &CoreSpec) -> SynthReport {
+        match spec.kind {
+            CoreKind::MatMul { n } => self.synth_matmul(spec, n),
+            CoreKind::Loopback => SynthReport {
+                spec: spec.clone(),
+                core_resources: Resources::new(450, 620, 1, 0),
+                interface_resources: Resources::new(210, 300, 0, 0),
+                // Pure wire: the FIFO (link) is always the bottleneck.
+                rate_mbps: 10_000.0,
+                ii_cycles: 1,
+            },
+            CoreKind::Saxpy => SynthReport {
+                spec: spec.clone(),
+                core_resources: Resources::new(2_850, 4_100, 2, 5),
+                interface_resources: Resources::new(900, 1_200, 0, 0),
+                rate_mbps: 1_400.0, // elementwise, near link speed
+                ii_cycles: 1,
+            },
+            CoreKind::Checksum => SynthReport {
+                spec: spec.clone(),
+                core_resources: Resources::new(1_900, 2_700, 1, 2),
+                interface_resources: Resources::new(700, 950, 0, 0),
+                rate_mbps: 1_600.0,
+                ii_cycles: 1,
+            },
+        }
+    }
+
+    /// Matmul calibration + extrapolation (see hls/mod.rs table).
+    fn synth_matmul(&self, spec: &CoreSpec, n: usize) -> SynthReport {
+        // Calibrated points from Table III.
+        let (core, iface, rate) = match n {
+            16 => (
+                Resources::new(18_821, 35_107, 5, 80),
+                Resources::new(6_477, 6_547, 9, 0),
+                crate::paper::MM16_1C_MBPS,
+            ),
+            32 => (
+                Resources::new(58_538, 119_388, 5, 160),
+                Resources::new(6_173, 6_327, 9, 0),
+                crate::paper::MM32_1C_MBPS,
+            ),
+            _ => {
+                // Analytic extrapolation: the unrolled row-dot datapath
+                // uses 5·N DSP48s; LUT/FF grow ~N^1.64 (fit through the
+                // two calibrated points); rate follows the DSP-limited
+                // initiation interval at the target clock.
+                let nf = n as f64;
+                let lut = (18_821.0 * (nf / 16.0).powf(1.64)) as u64;
+                let ff = (35_107.0 * (nf / 16.0).powf(1.77)) as u64;
+                let dsp = 5 * n as u64;
+                let bram = (5.0 * (nf / 16.0).powi(2)).ceil() as u64;
+                // Bytes per matrix pair: 2·N²·4; cycles per pair fitted
+                // through the same two points (805 @16, 5,872 @32).
+                let cycles = 805.0 * (nf / 16.0).powf(2.87);
+                let rate = (2.0 * nf * nf * 4.0)
+                    / (cycles / (spec.clock_mhz * 1e6))
+                    / 1e6;
+                (
+                    Resources::new(lut, ff, bram.max(1), dsp),
+                    Resources::new(6_300, 6_400, 9, 0),
+                    rate,
+                )
+            }
+        };
+        let ii = (2.0 * (n as f64).powi(2) * 4.0 / rate * spec.clock_mhz)
+            .round() as u64;
+        SynthReport {
+            spec: spec.clone(),
+            core_resources: core,
+            interface_resources: iface,
+            rate_mbps: rate,
+            ii_cycles: ii.max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PART: &str = "xc7vx485t";
+
+    #[test]
+    fn matmul16_matches_table3_one_core() {
+        let r = Synthesizer::new().synthesize(&CoreSpec::matmul(16, PART));
+        let total = r.total_for(1);
+        // Table III row "1 vCore": 25,298 LUT / 41,654 FF / 80 DSP / 14 BRAM
+        assert_eq!(total.lut, 25_298);
+        assert_eq!(total.ff, 41_654);
+        assert_eq!(total.dsp, 80);
+        assert_eq!(total.bram, 14);
+        assert!((r.rate_mbps - 509.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matmul16_scales_close_to_table3() {
+        let r = Synthesizer::new().synthesize(&CoreSpec::matmul(16, PART));
+        // Table III: 2 cores 44,408 LUT; 4 cores 81,761 LUT.
+        let two = r.total_for(2);
+        let four = r.total_for(4);
+        assert!((two.lut as f64 - 44_408.0).abs() / 44_408.0 < 0.02);
+        assert!((four.lut as f64 - 81_761.0).abs() / 81_761.0 < 0.01);
+        assert_eq!(two.dsp, 160);
+        assert_eq!(four.dsp, 320);
+    }
+
+    #[test]
+    fn matmul32_matches_table3() {
+        let r = Synthesizer::new().synthesize(&CoreSpec::matmul(32, PART));
+        let one = r.total_for(1);
+        let two = r.total_for(2);
+        assert_eq!(one.lut, 64_711);
+        assert_eq!(one.ff, 125_715);
+        assert_eq!(one.dsp, 160);
+        assert!((two.lut as f64 - 123_249.0).abs() / 123_249.0 < 0.01);
+        assert!((r.rate_mbps - 279.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extrapolated_sizes_are_monotone() {
+        let s = Synthesizer::new();
+        let r8 = s.synthesize(&CoreSpec::matmul(8, PART));
+        let r16 = s.synthesize(&CoreSpec::matmul(16, PART));
+        let r64 = s.synthesize(&CoreSpec::matmul(64, PART));
+        assert!(r8.core_resources.lut < r16.core_resources.lut);
+        assert!(r16.core_resources.lut < r64.core_resources.lut);
+        assert_eq!(r64.core_resources.dsp, 320);
+        // Bigger matrices are more compute-bound: rate drops.
+        assert!(r8.rate_mbps > r16.rate_mbps);
+        assert!(r16.rate_mbps > r64.rate_mbps);
+    }
+
+    #[test]
+    fn artifact_binding_names() {
+        assert_eq!(
+            CoreSpec::matmul(16, PART).artifact(256).as_deref(),
+            Some("matmul16_b256")
+        );
+        assert_eq!(
+            CoreSpec::named(CoreKind::Loopback, PART)
+                .artifact(256)
+                .as_deref(),
+            Some("loopback16_b256")
+        );
+    }
+
+    #[test]
+    fn non_matmul_cores_are_small() {
+        let s = Synthesizer::new();
+        for kind in [CoreKind::Loopback, CoreKind::Saxpy, CoreKind::Checksum] {
+            let r = s.synthesize(&CoreSpec::named(kind, PART));
+            assert!(r.core_resources.lut < 5_000, "{kind:?}");
+            assert!(r.rate_mbps > crate::paper::LINK_MBPS);
+        }
+    }
+
+    #[test]
+    fn ii_cycles_consistent_with_rate() {
+        let r = Synthesizer::new().synthesize(&CoreSpec::matmul(16, PART));
+        // rate = bytes_per_pair / (ii / clock)
+        let bytes_per_pair = 2.0 * 16.0 * 16.0 * 4.0;
+        let implied_rate =
+            bytes_per_pair / (r.ii_cycles as f64 / (200.0 * 1e6)) / 1e6;
+        assert!((implied_rate - r.rate_mbps).abs() / r.rate_mbps < 0.01);
+    }
+}

@@ -1,0 +1,723 @@
+//! The RC3E hypervisor proper.
+//!
+//! Owns every managed device (simulated board + RC2F controller +
+//! PCIe link + device-file namespace), the device database, the
+//! bitfile sanity checker and the placement policy. All timed
+//! operations charge the shared virtual clock; the middleware layer
+//! on top adds the RPC hop, which together reproduce Table I's
+//! local-vs-over-RC3E deltas.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::db::{AllocKind, DeviceDb, DeviceEntry};
+use super::overhead;
+use super::placement::{Candidate, PlacementPolicy};
+use crate::bitstream::{Bitstream, SanityChecker, SanityPolicy};
+use crate::config::{ClusterConfig, ServiceModel};
+use crate::fpga::board::BoardSpec;
+use crate::fpga::device::{DeviceStatus, FpgaDevice};
+use crate::hls::flow::region_window;
+use crate::pcie::devfile::DeviceFileRegistry;
+use crate::pcie::{DeviceLink, LinkParams};
+use crate::rc2f::components::Rc2fDesign;
+use crate::rc2f::controller::Controller;
+use crate::rc2f::host_api::HostApi;
+use crate::util::clock::{VirtualClock, VirtualTime};
+use crate::util::ids::{AllocationId, FpgaId, NodeId, UserId, VfpgaId, VmId};
+
+/// Errors from hypervisor operations.
+#[derive(Debug, thiserror::Error)]
+pub enum HypervisorError {
+    #[error("no capacity for the request")]
+    NoCapacity,
+    #[error("database: {0}")]
+    Db(String),
+    #[error("device: {0}")]
+    Device(String),
+    #[error("sanity: {0}")]
+    Sanity(#[from] crate::bitstream::SanityError),
+    #[error("allocation {0} not found or not yours")]
+    BadAllocation(AllocationId),
+    #[error("allocation {0} is not of the required kind")]
+    WrongKind(AllocationId),
+    #[error("unknown device {0}")]
+    UnknownDevice(FpgaId),
+    #[error("unknown service '{0}'")]
+    UnknownService(String),
+}
+
+/// Everything the hypervisor holds for one physical board.
+pub struct ManagedDevice {
+    pub node: NodeId,
+    pub fpga: Mutex<FpgaDevice>,
+    pub controller: Arc<Mutex<Controller>>,
+    pub link: Arc<DeviceLink>,
+    pub models: Vec<ServiceModel>,
+    /// Slot index of each region id (for frame-window lookup).
+    pub slot_of: BTreeMap<VfpgaId, usize>,
+}
+
+/// The hypervisor.
+pub struct Hypervisor {
+    pub clock: Arc<VirtualClock>,
+    pub db: Mutex<DeviceDb>,
+    devices: BTreeMap<FpgaId, ManagedDevice>,
+    registries: BTreeMap<NodeId, Arc<DeviceFileRegistry>>,
+    checker: SanityChecker,
+    policy: PlacementPolicy,
+    /// Last bitstream programmed into each region (migration input).
+    programmed: Mutex<BTreeMap<VfpgaId, Bitstream>>,
+    /// Provider bitfile store for BAaaS services.
+    services: Mutex<BTreeMap<String, Bitstream>>,
+    pub metrics: Arc<crate::metrics::Registry>,
+}
+
+impl Hypervisor {
+    /// Boot the cloud from a configuration: create devices, load the
+    /// RC2F basic design on every RAaaS/BAaaS device (charging the
+    /// full JTAG configuration time per device) and register
+    /// everything in the database.
+    pub fn boot(
+        config: &ClusterConfig,
+        clock: Arc<VirtualClock>,
+        policy: PlacementPolicy,
+    ) -> Result<Hypervisor, HypervisorError> {
+        let sanity = if config.require_signatures {
+            SanityPolicy::production()
+        } else {
+            SanityPolicy::research()
+        };
+        let mut hv = Hypervisor {
+            clock: Arc::clone(&clock),
+            db: Mutex::new(DeviceDb::new()),
+            devices: BTreeMap::new(),
+            registries: BTreeMap::new(),
+            checker: SanityChecker::new(sanity),
+            policy,
+            programmed: Mutex::new(BTreeMap::new()),
+            services: Mutex::new(BTreeMap::new()),
+            metrics: Arc::new(crate::metrics::Registry::new()),
+        };
+        let mut fpga_seq = 0u64;
+        for (ni, node) in config.nodes.iter().enumerate() {
+            let node_id = NodeId(ni as u64);
+            let registry = Arc::new(DeviceFileRegistry::new());
+            hv.registries.insert(node_id, registry.clone());
+            for fc in &node.fpgas {
+                let fpga_id = FpgaId(fpga_seq);
+                fpga_seq += 1;
+                let board = BoardSpec::of(fc.board);
+                let mut dev =
+                    FpgaDevice::new(fpga_id, board, Arc::clone(&clock));
+                let serves_vfpgas = fc.models.iter().any(|m| {
+                    matches!(m, ServiceModel::RAaaS | ServiceModel::BAaaS)
+                });
+                let mut regions = Vec::new();
+                if serves_vfpgas {
+                    let design = Rc2fDesign::new(fc.vfpgas);
+                    let bs = crate::bitstream::BitstreamBuilder::full(
+                        dev.board.part,
+                        &design.name(),
+                    )
+                    .resources(design.total_resources())
+                    .vfpga_regions(fc.vfpgas)
+                    .payload_len(dev.board.full_bitstream_bytes as usize / 1024)
+                    .build();
+                    dev.configure_full(&bs)
+                        .map_err(|e| HypervisorError::Device(e.to_string()))?;
+                    regions =
+                        dev.regions().iter().map(|r| r.id).collect::<Vec<_>>();
+                }
+                let slot_of = regions
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| (v, i))
+                    .collect();
+                let controller = Arc::new(Mutex::new(Controller::new(
+                    Arc::clone(&clock),
+                    &regions,
+                )));
+                registry.create_gcs(fpga_id);
+                let link =
+                    DeviceLink::new(Arc::clone(&clock), LinkParams::gen2_x4());
+                hv.db.lock().unwrap().add_device(DeviceEntry {
+                    id: fpga_id,
+                    node: node_id,
+                    board: fc.board,
+                    regions,
+                    models: fc.models.clone(),
+                    exclusive_alloc: None,
+                });
+                hv.devices.insert(
+                    fpga_id,
+                    ManagedDevice {
+                        node: node_id,
+                        fpga: Mutex::new(dev),
+                        controller,
+                        link,
+                        models: fc.models.clone(),
+                        slot_of,
+                    },
+                );
+            }
+        }
+        Ok(hv)
+    }
+
+    /// Paper testbed with consolidate-first placement.
+    pub fn boot_paper_testbed(
+        clock: Arc<VirtualClock>,
+    ) -> Result<Hypervisor, HypervisorError> {
+        Hypervisor::boot(
+            &ClusterConfig::paper_testbed(),
+            clock,
+            PlacementPolicy::ConsolidateFirst,
+        )
+    }
+
+    pub fn device(&self, id: FpgaId) -> Result<&ManagedDevice, HypervisorError> {
+        self.devices.get(&id).ok_or(HypervisorError::UnknownDevice(id))
+    }
+
+    pub fn device_ids(&self) -> Vec<FpgaId> {
+        self.devices.keys().copied().collect()
+    }
+
+    pub fn registry(&self, node: NodeId) -> Option<&Arc<DeviceFileRegistry>> {
+        self.registries.get(&node)
+    }
+
+    pub fn add_user(&self, name: &str) -> UserId {
+        self.db.lock().unwrap().add_user(name)
+    }
+
+    // --------------------------------------------------- allocation
+
+    /// Allocate one vFPGA under RAaaS/BAaaS using the placement
+    /// policy. Creates the user's device files.
+    pub fn alloc_vfpga(
+        &self,
+        user: UserId,
+        model: ServiceModel,
+    ) -> Result<(AllocationId, VfpgaId, FpgaId, NodeId), HypervisorError>
+    {
+        assert!(
+            !matches!(model, ServiceModel::RSaaS),
+            "RSaaS uses alloc_physical"
+        );
+        let mut db = self.db.lock().unwrap();
+        let candidates: Vec<Candidate> = self
+            .devices
+            .iter()
+            .filter(|(_, d)| d.models.contains(&model))
+            .map(|(id, _)| Candidate {
+                fpga: *id,
+                used: db.used_regions(*id),
+                free: db.free_regions(*id),
+            })
+            .collect();
+        let (fpga, vfpga) = self
+            .policy
+            .choose(&candidates)
+            .ok_or(HypervisorError::NoCapacity)?;
+        let alloc = db
+            .allocate_vfpga(user, vfpga, model, self.clock.now().0)
+            .map_err(HypervisorError::Db)?;
+        drop(db);
+        let dev = self.device(fpga)?;
+        dev.controller
+            .lock()
+            .unwrap()
+            .allocate(vfpga, user)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        self.registries[&dev.node]
+            .create_vfpga_files(vfpga, user)
+            .map_err(|e| HypervisorError::Db(e.to_string()))?;
+        self.metrics.counter("hv.alloc.vfpga").inc();
+        Ok((alloc, vfpga, fpga, dev.node))
+    }
+
+    /// Allocate a whole physical FPGA (RSaaS), optionally wrapped in
+    /// a VM with the device passed through.
+    pub fn alloc_physical(
+        &self,
+        user: UserId,
+        vm: Option<VmId>,
+    ) -> Result<(AllocationId, FpgaId, NodeId), HypervisorError> {
+        let mut db = self.db.lock().unwrap();
+        // Deterministic scan: first RSaaS-capable device with no
+        // leases at all.
+        let target = self
+            .devices
+            .iter()
+            .find(|(id, d)| {
+                d.models.contains(&ServiceModel::RSaaS)
+                    && db.used_regions(**id) == 0
+                    && db
+                        .device(**id)
+                        .map(|e| e.exclusive_alloc.is_none())
+                        .unwrap_or(false)
+            })
+            .map(|(id, d)| (*id, d.node));
+        let (fpga, node) = target.ok_or(HypervisorError::NoCapacity)?;
+        let alloc = db
+            .allocate_physical(user, fpga, vm, self.clock.now().0)
+            .map_err(HypervisorError::Db)?;
+        self.metrics.counter("hv.alloc.physical").inc();
+        Ok((alloc, fpga, node))
+    }
+
+    /// Release any allocation: blanks regions, gates clocks, removes
+    /// device files, updates the database.
+    pub fn release(&self, id: AllocationId) -> Result<(), HypervisorError> {
+        let alloc = self
+            .db
+            .lock()
+            .unwrap()
+            .release(id)
+            .map_err(HypervisorError::Db)?;
+        match alloc.kind {
+            AllocKind::Vfpga(v) => {
+                let entry = {
+                    let db = self.db.lock().unwrap();
+                    db.device_of_vfpga(v).map(|d| (d.id, d.node))
+                };
+                if let Some((fpga, node)) = entry {
+                    let dev = self.device(fpga)?;
+                    let mut hw = dev.fpga.lock().unwrap();
+                    if hw.region(v).map(|r| r.is_configured()).unwrap_or(false)
+                    {
+                        hw.clear_region(v).map_err(|e| {
+                            HypervisorError::Device(e.to_string())
+                        })?;
+                    }
+                    drop(hw);
+                    dev.controller
+                        .lock()
+                        .unwrap()
+                        .release(v)
+                        .map_err(|e| HypervisorError::Device(e.to_string()))?;
+                    self.registries[&node].remove_vfpga_files(v);
+                    self.programmed.lock().unwrap().remove(&v);
+                }
+            }
+            AllocKind::Physical(_) | AllocKind::Vm(_, _) => {}
+        }
+        self.metrics.counter("hv.release").inc();
+        Ok(())
+    }
+
+    // ------------------------------------------------- programming
+
+    /// Partially reconfigure an allocated vFPGA with a user bitfile.
+    /// Runs the sanity checker first (frame window + capacity +
+    /// integrity + signature policy), then PR, then updates the
+    /// controller. Charges the RC3E PR orchestration overhead.
+    /// Returns the total charged duration.
+    pub fn program_vfpga(
+        &self,
+        alloc_id: AllocationId,
+        user: UserId,
+        bs: &Bitstream,
+    ) -> Result<VirtualTime, HypervisorError> {
+        let vfpga = self.check_vfpga_lease(alloc_id, user)?;
+        let (fpga, _) = {
+            let db = self.db.lock().unwrap();
+            let d = db
+                .device_of_vfpga(vfpga)
+                .ok_or(HypervisorError::BadAllocation(alloc_id))?;
+            (d.id, d.node)
+        };
+        let dev = self.device(fpga)?;
+        let t0 = self.clock.now();
+        // Orchestration: sanity check + db/controller updates.
+        {
+            let hw = dev.fpga.lock().unwrap();
+            let slot = dev.slot_of[&vfpga];
+            let region = hw
+                .region(vfpga)
+                .map_err(|e| HypervisorError::Device(e.to_string()))?;
+            self.checker.check_partial(
+                bs,
+                hw.board.part,
+                region_window(slot, region.shape.quarters()),
+                region.capacity,
+            )?;
+        }
+        self.clock
+            .advance(VirtualTime::from_millis_f64(overhead::PR_ORCH_MS));
+        dev.fpga
+            .lock()
+            .unwrap()
+            .configure_partial(vfpga, bs)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        dev.controller
+            .lock()
+            .unwrap()
+            .mark_configured(vfpga, &bs.meta.core)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        self.programmed
+            .lock()
+            .unwrap()
+            .insert(vfpga, bs.clone());
+        self.metrics.counter("hv.pr").inc();
+        self.metrics
+            .histogram("hv.pr.ms")
+            .record_us((self.clock.since(t0).as_millis_f64() * 1e3) as u64);
+        Ok(self.clock.since(t0))
+    }
+
+    /// Full reconfiguration of an exclusively-held device (RSaaS):
+    /// snapshot PCIe link params, configure, restore (hot-plug).
+    pub fn program_full(
+        &self,
+        alloc_id: AllocationId,
+        user: UserId,
+        bs: &Bitstream,
+    ) -> Result<VirtualTime, HypervisorError> {
+        let fpga = {
+            let db = self.db.lock().unwrap();
+            let alloc = db
+                .allocation(alloc_id)
+                .filter(|a| a.user == user)
+                .ok_or(HypervisorError::BadAllocation(alloc_id))?;
+            match alloc.kind {
+                AllocKind::Physical(f) | AllocKind::Vm(_, f) => f,
+                _ => return Err(HypervisorError::WrongKind(alloc_id)),
+            }
+        };
+        let dev = self.device(fpga)?;
+        let t0 = self.clock.now();
+        let mut hw = dev.fpga.lock().unwrap();
+        self.checker.check_full(bs, hw.board.part)?;
+        // PCIe hot-plug: save params, reconfigure, restore.
+        hw.save_link_params(dev.link.params);
+        self.clock.advance(VirtualTime::from_millis_f64(
+            overhead::FULL_CONFIG_ORCH_MS,
+        ));
+        hw.configure_full(bs)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        let _restored = hw.restore_link_params();
+        self.metrics.counter("hv.full_config").inc();
+        Ok(self.clock.since(t0))
+    }
+
+    // ------------------------------------------------------ status
+
+    /// RC2F status call as the node sees it ("local without RC3E"):
+    /// device-file open + gcs read. Reproduces Table I's ~11 ms.
+    pub fn status_local(
+        &self,
+        fpga: FpgaId,
+    ) -> Result<DeviceStatus, HypervisorError> {
+        let dev = self.device(fpga)?;
+        self.clock.advance(VirtualTime::from_millis_f64(
+            overhead::STATUS_DEVFILE_MS,
+        ));
+        // gcs access through the controller charges Table II latency.
+        let _ = dev
+            .controller
+            .lock()
+            .unwrap()
+            .gcs_read(crate::rc2f::controller::gcs_reg::STATUS)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        Ok(dev.fpga.lock().unwrap().status())
+    }
+
+    // ------------------------------------------------------ energy
+
+    /// Total instantaneous power across devices.
+    pub fn total_power_w(&self) -> f64 {
+        self.devices
+            .values()
+            .map(|d| d.fpga.lock().unwrap().status().power_w)
+            .sum()
+    }
+
+    /// Total integrated energy across devices.
+    pub fn total_energy_joules(&self) -> f64 {
+        self.devices
+            .values()
+            .map(|d| d.fpga.lock().unwrap().energy_joules())
+            .sum()
+    }
+
+    // ---------------------------------------------------- services
+
+    /// Register a provider bitfile for a BAaaS service.
+    pub fn register_service(&self, name: &str, bs: Bitstream) {
+        self.services.lock().unwrap().insert(name.to_string(), bs);
+    }
+
+    pub fn service_bitfile(
+        &self,
+        name: &str,
+    ) -> Result<Bitstream, HypervisorError> {
+        self.services
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| HypervisorError::UnknownService(name.to_string()))
+    }
+
+    pub fn service_names(&self) -> Vec<String> {
+        self.services.lock().unwrap().keys().cloned().collect()
+    }
+
+    // ---------------------------------------------------- sessions
+
+    /// Host API endpoint for a device (RAaaS user side).
+    pub fn host_api(&self, fpga: FpgaId) -> Result<Arc<HostApi>, HypervisorError> {
+        let dev = self.device(fpga)?;
+        Ok(Arc::new(HostApi::new(
+            Arc::clone(&dev.controller),
+            Arc::clone(&self.registries[&dev.node]),
+            Arc::clone(&dev.link),
+            Arc::clone(&self.clock),
+        )))
+    }
+
+    /// Verify a lease and return its vFPGA.
+    pub fn check_vfpga_lease(
+        &self,
+        alloc_id: AllocationId,
+        user: UserId,
+    ) -> Result<VfpgaId, HypervisorError> {
+        let db = self.db.lock().unwrap();
+        let alloc = db
+            .allocation(alloc_id)
+            .filter(|a| a.user == user)
+            .ok_or(HypervisorError::BadAllocation(alloc_id))?;
+        match alloc.kind {
+            AllocKind::Vfpga(v) => Ok(v),
+            _ => Err(HypervisorError::WrongKind(alloc_id)),
+        }
+    }
+
+    /// The bitstream last programmed into a region (migration input).
+    pub fn programmed_bitstream(&self, v: VfpgaId) -> Option<Bitstream> {
+        self.programmed.lock().unwrap().get(&v).cloned()
+    }
+
+    pub fn placement_policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::tests_support::partial_bs;
+
+    fn hv() -> Hypervisor {
+        let clock = VirtualClock::new();
+        Hypervisor::boot_paper_testbed(clock).unwrap()
+    }
+
+    #[test]
+    fn boot_registers_everything() {
+        let hv = hv();
+        assert_eq!(hv.device_ids().len(), 4);
+        let db = hv.db.lock().unwrap();
+        assert_eq!(db.devices.len(), 4);
+        // 4 devices x 4 vFPGAs.
+        let total_regions: usize =
+            db.devices.values().map(|d| d.regions.len()).sum();
+        assert_eq!(total_regions, 16);
+    }
+
+    #[test]
+    fn boot_charges_configuration_time() {
+        let clock = VirtualClock::new();
+        let _hv = Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap();
+        // 2x VC707 at 28.37 s + 2x ML605 (scaled) — well over 80 s.
+        assert!(clock.now().as_secs_f64() > 80.0);
+    }
+
+    #[test]
+    fn vfpga_allocation_consolidates() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (_, _, f0, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let (_, _, f1, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        // Consolidate-first: same device until full.
+        assert_eq!(f0, f1);
+    }
+
+    #[test]
+    fn allocation_creates_device_files() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (_, vfpga, _, node) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let reg = hv.registry(node).unwrap();
+        let path = crate::pcie::devfile::DeviceFileRegistry::vfpga_path(
+            vfpga,
+            crate::pcie::devfile::DeviceFileKind::FifoIn,
+            0,
+        );
+        assert!(reg.open(&path, Some(user)).is_ok());
+    }
+
+    #[test]
+    fn capacity_exhausts_at_16() {
+        let hv = hv();
+        let user = hv.add_user("greedy");
+        for _ in 0..16 {
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        }
+        assert!(matches!(
+            hv.alloc_vfpga(user, ServiceModel::RAaaS),
+            Err(HypervisorError::NoCapacity)
+        ));
+    }
+
+    #[test]
+    fn program_and_release_lifecycle() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, vfpga, fpga, node) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let slot = hv.device(fpga).unwrap().slot_of[&vfpga];
+        let bs = crate::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            "matmul16",
+        )
+        .resources(crate::fpga::resources::Resources::new(
+            25_298, 41_654, 14, 80,
+        ))
+        .frames(crate::hls::flow::region_window(slot, 1))
+        .artifact("matmul16_b256")
+        .build();
+        let d = hv.program_vfpga(alloc, user, &bs).unwrap();
+        // PR (732 ms) + orchestration (111 ms).
+        assert!((d.as_millis_f64() - 843.0).abs() < 1.0, "{d}");
+        assert!(hv.programmed_bitstream(vfpga).is_some());
+        hv.release(alloc).unwrap();
+        assert!(hv.programmed_bitstream(vfpga).is_none());
+        // Device files are gone.
+        let reg = hv.registry(node).unwrap();
+        let path = crate::pcie::devfile::DeviceFileRegistry::vfpga_path(
+            vfpga,
+            crate::pcie::devfile::DeviceFileKind::FifoIn,
+            0,
+        );
+        assert!(reg.open(&path, Some(user)).is_err());
+    }
+
+    #[test]
+    fn program_rejects_wrong_user() {
+        let hv = hv();
+        let alice = hv.add_user("alice");
+        let mallory = hv.add_user("mallory");
+        let (alloc, _, _, _) =
+            hv.alloc_vfpga(alice, ServiceModel::RAaaS).unwrap();
+        let bs = partial_bs("xc7vx485t", "evil");
+        assert!(matches!(
+            hv.program_vfpga(alloc, mallory, &bs),
+            Err(HypervisorError::BadAllocation(_))
+        ));
+    }
+
+    #[test]
+    fn program_rejects_frame_escape() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, vfpga, fpga, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let slot = hv.device(fpga).unwrap().slot_of[&vfpga];
+        // Claim frames of the NEIGHBORING slot.
+        let bs = crate::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            "evil",
+        )
+        .resources(crate::fpga::resources::Resources::new(1, 1, 1, 1))
+        .frames(crate::hls::flow::region_window((slot + 1) % 4, 1))
+        .build();
+        assert!(matches!(
+            hv.program_vfpga(alloc, user, &bs),
+            Err(HypervisorError::Sanity(_))
+        ));
+    }
+
+    #[test]
+    fn status_local_is_11ms() {
+        let hv = hv();
+        let t0 = hv.clock.now();
+        let st = hv.status_local(FpgaId(0)).unwrap();
+        let ms = hv.clock.since(t0).as_millis_f64();
+        assert!(
+            (ms - crate::paper::STATUS_LOCAL_MS).abs() < 0.01,
+            "status took {ms} ms"
+        );
+        assert_eq!(st.regions_total, 4);
+    }
+
+    #[test]
+    fn rsaas_takes_whole_device() {
+        // Config where one device offers RSaaS.
+        let clock = VirtualClock::new();
+        let hv = Hypervisor::boot(
+            &ClusterConfig::single_vc707(),
+            clock,
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap();
+        let user = hv.add_user("rs");
+        let (alloc, fpga, _) = hv.alloc_physical(user, None).unwrap();
+        // vFPGA allocation on the same device now fails (NoCapacity —
+        // the only device is exclusively held).
+        assert!(matches!(
+            hv.alloc_vfpga(user, ServiceModel::RAaaS),
+            Err(HypervisorError::NoCapacity)
+        ));
+        // Full reconfiguration works for the holder.
+        let bs = crate::bitstream::BitstreamBuilder::full(
+            "xc7vx485t",
+            "user_design",
+        )
+        .build();
+        let d = hv.program_full(alloc, user, &bs).unwrap();
+        assert!(d.as_secs_f64() > 28.0);
+        let _ = fpga;
+        hv.release(alloc).unwrap();
+        assert!(hv.alloc_vfpga(user, ServiceModel::RAaaS).is_ok());
+    }
+
+    #[test]
+    fn energy_rises_with_active_regions() {
+        let hv = hv();
+        let idle = hv.total_power_w();
+        let user = hv.add_user("alice");
+        let (alloc, vfpga, fpga, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let slot = hv.device(fpga).unwrap().slot_of[&vfpga];
+        let bs = crate::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            "matmul16",
+        )
+        .resources(crate::fpga::resources::Resources::new(1000, 1000, 1, 1))
+        .frames(crate::hls::flow::region_window(slot, 1))
+        .build();
+        hv.program_vfpga(alloc, user, &bs).unwrap();
+        assert!(hv.total_power_w() > idle);
+        hv.release(alloc).unwrap();
+        assert_eq!(hv.total_power_w(), idle);
+    }
+
+    #[test]
+    fn baaas_service_registry() {
+        let hv = hv();
+        assert!(hv.service_bitfile("imgproc").is_err());
+        hv.register_service(
+            "imgproc",
+            partial_bs("xc7vx485t", "imgproc"),
+        );
+        assert!(hv.service_bitfile("imgproc").is_ok());
+        assert_eq!(hv.service_names(), vec!["imgproc".to_string()]);
+    }
+}

@@ -1,0 +1,578 @@
+//! The device database.
+//!
+//! Section IV-B: "The hypervisor has access to a database containing
+//! all physical and virtual FPGA devices in the cloud system and
+//! their allocation status. Each device is assigned to its physical
+//! host system (node)."
+//!
+//! The database is the *bookkeeping* view (who holds what); the
+//! *device* view (what is actually configured) lives in
+//! [`crate::fpga::FpgaDevice`]. Persistence is a pretty-printed JSON
+//! file so operators can inspect it (and tests diff it).
+
+use std::collections::BTreeMap;
+
+use crate::config::ServiceModel;
+use crate::fpga::board::BoardKind;
+use crate::util::ids::{AllocationId, FpgaId, IdGen, NodeId, UserId, VfpgaId, VmId};
+use crate::util::json::Json;
+
+/// What an allocation leases.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AllocKind {
+    /// One vFPGA region (RAaaS / BAaaS).
+    Vfpga(VfpgaId),
+    /// A whole physical device (RSaaS).
+    Physical(FpgaId),
+    /// A VM with a physical device passed through (RSaaS extension).
+    Vm(VmId, FpgaId),
+}
+
+/// One lease.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub id: AllocationId,
+    pub user: UserId,
+    pub kind: AllocKind,
+    pub model: ServiceModel,
+    /// Virtual timestamp of creation (for accounting).
+    pub created_ns: u64,
+}
+
+/// One physical device row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceEntry {
+    pub id: FpgaId,
+    pub node: NodeId,
+    pub board: BoardKind,
+    /// vFPGA regions carved on the device.
+    pub regions: Vec<VfpgaId>,
+    /// Service models this device is assigned to.
+    pub models: Vec<ServiceModel>,
+    /// Set when an RSaaS lease takes the whole device ("has to be
+    /// marked separately in the device database and is therefore
+    /// excluded from vFPGA allocations").
+    pub exclusive_alloc: Option<AllocationId>,
+}
+
+/// The database.
+#[derive(Debug, Default)]
+pub struct DeviceDb {
+    pub users: BTreeMap<UserId, String>,
+    pub devices: BTreeMap<FpgaId, DeviceEntry>,
+    pub allocations: BTreeMap<AllocationId, Allocation>,
+    /// vFPGA → holding allocation (fast owner lookup).
+    pub vfpga_owner: BTreeMap<VfpgaId, AllocationId>,
+    pub alloc_ids: IdGen,
+    pub user_ids: IdGen,
+    pub vm_ids: IdGen,
+}
+
+impl DeviceDb {
+    pub fn new() -> DeviceDb {
+        DeviceDb::default()
+    }
+
+    // -------------------------------------------------------- users
+
+    pub fn add_user(&mut self, name: &str) -> UserId {
+        let id = UserId(self.user_ids.next());
+        self.users.insert(id, name.to_string());
+        id
+    }
+
+    pub fn user_name(&self, id: UserId) -> Option<&str> {
+        self.users.get(&id).map(|s| s.as_str())
+    }
+
+    // ------------------------------------------------------ devices
+
+    pub fn add_device(&mut self, entry: DeviceEntry) {
+        self.devices.insert(entry.id, entry);
+    }
+
+    pub fn device(&self, id: FpgaId) -> Option<&DeviceEntry> {
+        self.devices.get(&id)
+    }
+
+    /// Device hosting a given vFPGA region.
+    pub fn device_of_vfpga(&self, v: VfpgaId) -> Option<&DeviceEntry> {
+        self.devices.values().find(|d| d.regions.contains(&v))
+    }
+
+    // -------------------------------------------------- allocations
+
+    /// Record a vFPGA lease.
+    pub fn allocate_vfpga(
+        &mut self,
+        user: UserId,
+        vfpga: VfpgaId,
+        model: ServiceModel,
+        now_ns: u64,
+    ) -> Result<AllocationId, String> {
+        if self.vfpga_owner.contains_key(&vfpga) {
+            return Err(format!("{vfpga} already allocated"));
+        }
+        let dev = self
+            .device_of_vfpga(vfpga)
+            .ok_or_else(|| format!("{vfpga} not in database"))?;
+        if dev.exclusive_alloc.is_some() {
+            return Err(format!(
+                "device {} exclusively allocated (RSaaS)",
+                dev.id
+            ));
+        }
+        let id = AllocationId(self.alloc_ids.next());
+        self.allocations.insert(
+            id,
+            Allocation {
+                id,
+                user,
+                kind: AllocKind::Vfpga(vfpga),
+                model,
+                created_ns: now_ns,
+            },
+        );
+        self.vfpga_owner.insert(vfpga, id);
+        Ok(id)
+    }
+
+    /// Record an exclusive physical lease (RSaaS), optionally inside
+    /// a VM.
+    pub fn allocate_physical(
+        &mut self,
+        user: UserId,
+        fpga: FpgaId,
+        vm: Option<VmId>,
+        now_ns: u64,
+    ) -> Result<AllocationId, String> {
+        // Reject if any region of the device is currently leased.
+        let dev = self
+            .devices
+            .get(&fpga)
+            .ok_or_else(|| format!("{fpga} not in database"))?;
+        if dev.exclusive_alloc.is_some() {
+            return Err(format!("{fpga} already exclusively allocated"));
+        }
+        if let Some(v) = dev
+            .regions
+            .iter()
+            .find(|v| self.vfpga_owner.contains_key(v))
+        {
+            return Err(format!("{fpga} has active vFPGA lease on {v}"));
+        }
+        let id = AllocationId(self.alloc_ids.next());
+        let kind = match vm {
+            Some(vm) => AllocKind::Vm(vm, fpga),
+            None => AllocKind::Physical(fpga),
+        };
+        self.allocations.insert(
+            id,
+            Allocation {
+                id,
+                user,
+                kind,
+                model: ServiceModel::RSaaS,
+                created_ns: now_ns,
+            },
+        );
+        self.devices.get_mut(&fpga).unwrap().exclusive_alloc = Some(id);
+        Ok(id)
+    }
+
+    /// Release any lease.
+    pub fn release(&mut self, id: AllocationId) -> Result<Allocation, String> {
+        let alloc = self
+            .allocations
+            .remove(&id)
+            .ok_or_else(|| format!("{id} not found"))?;
+        match &alloc.kind {
+            AllocKind::Vfpga(v) => {
+                self.vfpga_owner.remove(v);
+            }
+            AllocKind::Physical(f) | AllocKind::Vm(_, f) => {
+                if let Some(dev) = self.devices.get_mut(f) {
+                    dev.exclusive_alloc = None;
+                }
+            }
+        }
+        Ok(alloc)
+    }
+
+    pub fn allocation(&self, id: AllocationId) -> Option<&Allocation> {
+        self.allocations.get(&id)
+    }
+
+    /// The allocation holding a vFPGA, if any.
+    pub fn owner_of(&self, v: VfpgaId) -> Option<&Allocation> {
+        self.vfpga_owner
+            .get(&v)
+            .and_then(|id| self.allocations.get(id))
+    }
+
+    /// All leases of one user.
+    pub fn user_allocations(&self, user: UserId) -> Vec<&Allocation> {
+        self.allocations
+            .values()
+            .filter(|a| a.user == user)
+            .collect()
+    }
+
+    /// Free (unleased) regions of a device, in id order.
+    pub fn free_regions(&self, fpga: FpgaId) -> Vec<VfpgaId> {
+        self.devices
+            .get(&fpga)
+            .map(|d| {
+                if d.exclusive_alloc.is_some() {
+                    return Vec::new();
+                }
+                d.regions
+                    .iter()
+                    .filter(|v| !self.vfpga_owner.contains_key(v))
+                    .copied()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Leased-region count of a device (placement input).
+    pub fn used_regions(&self, fpga: FpgaId) -> usize {
+        self.devices
+            .get(&fpga)
+            .map(|d| {
+                d.regions
+                    .iter()
+                    .filter(|v| self.vfpga_owner.contains_key(v))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    // -------------------------------------------------- persistence
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "users",
+                Json::Obj(
+                    self.users
+                        .iter()
+                        .map(|(id, name)| {
+                            (id.to_string(), Json::from(name.as_str()))
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "devices",
+                Json::Arr(
+                    self.devices
+                        .values()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("id", Json::from(d.id.to_string())),
+                                ("node", Json::from(d.node.to_string())),
+                                ("board", Json::from(d.board.name())),
+                                (
+                                    "regions",
+                                    Json::Arr(
+                                        d.regions
+                                            .iter()
+                                            .map(|r| {
+                                                Json::from(r.to_string())
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "models",
+                                    Json::Arr(
+                                        d.models
+                                            .iter()
+                                            .map(|m| Json::from(m.name()))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "exclusive_alloc",
+                                    match d.exclusive_alloc {
+                                        Some(a) => {
+                                            Json::from(a.to_string())
+                                        }
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "allocations",
+                Json::Arr(
+                    self.allocations
+                        .values()
+                        .map(|a| {
+                            let (kind, target) = match &a.kind {
+                                AllocKind::Vfpga(v) => {
+                                    ("vfpga", v.to_string())
+                                }
+                                AllocKind::Physical(f) => {
+                                    ("physical", f.to_string())
+                                }
+                                AllocKind::Vm(vm, f) => {
+                                    ("vm", format!("{vm}:{f}"))
+                                }
+                            };
+                            Json::obj(vec![
+                                ("id", Json::from(a.id.to_string())),
+                                ("user", Json::from(a.user.to_string())),
+                                ("kind", Json::from(kind)),
+                                ("target", Json::from(target)),
+                                ("model", Json::from(a.model.name())),
+                                ("created_ns", Json::from(a.created_ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Restore from `to_json` output.
+    pub fn from_json(v: &Json) -> Result<DeviceDb, String> {
+        let mut db = DeviceDb::new();
+        if let Some(users) = v.get("users").as_obj() {
+            for (id, name) in users {
+                let uid = UserId::parse(id).ok_or("bad user id")?;
+                db.users.insert(
+                    uid,
+                    name.as_str().ok_or("bad user name")?.to_string(),
+                );
+                db.user_ids.bump_past(uid.0);
+            }
+        }
+        for d in v.get("devices").as_arr().unwrap_or(&[]) {
+            let id = FpgaId::parse(d.str_field("id")?).ok_or("bad fpga id")?;
+            let node =
+                NodeId::parse(d.str_field("node")?).ok_or("bad node id")?;
+            let board = BoardKind::parse(d.str_field("board")?)
+                .ok_or("bad board")?;
+            let regions = d
+                .get("regions")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|r| {
+                    r.as_str()
+                        .and_then(VfpgaId::parse)
+                        .ok_or("bad region id".to_string())
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let models = d
+                .get("models")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|m| m.as_str().and_then(ServiceModel::parse))
+                .collect();
+            let exclusive_alloc = d
+                .get("exclusive_alloc")
+                .as_str()
+                .and_then(AllocationId::parse);
+            db.add_device(DeviceEntry {
+                id,
+                node,
+                board,
+                regions,
+                models,
+                exclusive_alloc,
+            });
+        }
+        for a in v.get("allocations").as_arr().unwrap_or(&[]) {
+            let id = AllocationId::parse(a.str_field("id")?)
+                .ok_or("bad alloc id")?;
+            let user =
+                UserId::parse(a.str_field("user")?).ok_or("bad user")?;
+            let model = ServiceModel::parse(a.str_field("model")?)
+                .ok_or("bad model")?;
+            let target = a.str_field("target")?;
+            let kind = match a.str_field("kind")? {
+                "vfpga" => AllocKind::Vfpga(
+                    VfpgaId::parse(target).ok_or("bad vfpga")?,
+                ),
+                "physical" => AllocKind::Physical(
+                    FpgaId::parse(target).ok_or("bad fpga")?,
+                ),
+                "vm" => {
+                    let (vm, f) =
+                        target.split_once(':').ok_or("bad vm target")?;
+                    AllocKind::Vm(
+                        VmId::parse(vm).ok_or("bad vm id")?,
+                        FpgaId::parse(f).ok_or("bad fpga id")?,
+                    )
+                }
+                k => return Err(format!("bad alloc kind {k}")),
+            };
+            if let AllocKind::Vfpga(v) = &kind {
+                db.vfpga_owner.insert(*v, id);
+            }
+            db.allocations.insert(
+                id,
+                Allocation {
+                    id,
+                    user,
+                    kind,
+                    model,
+                    created_ns: a.get("created_ns").as_u64().unwrap_or(0),
+                },
+            );
+            db.alloc_ids.bump_past(id.0);
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<DeviceDb, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        DeviceDb::from_json(
+            &Json::parse(&text).map_err(|e| e.to_string())?,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db_with_two_devices() -> DeviceDb {
+        let mut db = DeviceDb::new();
+        db.add_device(DeviceEntry {
+            id: FpgaId(0),
+            node: NodeId(0),
+            board: BoardKind::Vc707,
+            regions: (0..4).map(VfpgaId).collect(),
+            models: vec![ServiceModel::RAaaS, ServiceModel::BAaaS],
+            exclusive_alloc: None,
+        });
+        db.add_device(DeviceEntry {
+            id: FpgaId(1),
+            node: NodeId(0),
+            board: BoardKind::Vc707,
+            regions: (4..8).map(VfpgaId).collect(),
+            models: vec![ServiceModel::RSaaS, ServiceModel::RAaaS],
+            exclusive_alloc: None,
+        });
+        db
+    }
+
+    #[test]
+    fn vfpga_lease_lifecycle() {
+        let mut db = db_with_two_devices();
+        let u = db.add_user("alice");
+        let a = db
+            .allocate_vfpga(u, VfpgaId(0), ServiceModel::RAaaS, 1)
+            .unwrap();
+        assert_eq!(db.owner_of(VfpgaId(0)).unwrap().user, u);
+        assert_eq!(db.free_regions(FpgaId(0)).len(), 3);
+        assert_eq!(db.used_regions(FpgaId(0)), 1);
+        // Double allocation rejected.
+        assert!(db
+            .allocate_vfpga(u, VfpgaId(0), ServiceModel::RAaaS, 2)
+            .is_err());
+        db.release(a).unwrap();
+        assert!(db.owner_of(VfpgaId(0)).is_none());
+        assert_eq!(db.free_regions(FpgaId(0)).len(), 4);
+    }
+
+    #[test]
+    fn rsaas_excludes_vfpga_allocation() {
+        let mut db = db_with_two_devices();
+        let u = db.add_user("bob");
+        let a = db.allocate_physical(u, FpgaId(1), None, 0).unwrap();
+        // Regions of an exclusively-held device are not allocatable.
+        assert!(db
+            .allocate_vfpga(u, VfpgaId(4), ServiceModel::RAaaS, 0)
+            .is_err());
+        assert!(db.free_regions(FpgaId(1)).is_empty());
+        // And vice versa: active vFPGA lease blocks exclusive.
+        db.release(a).unwrap();
+        db.allocate_vfpga(u, VfpgaId(4), ServiceModel::RAaaS, 0)
+            .unwrap();
+        assert!(db.allocate_physical(u, FpgaId(1), None, 0).is_err());
+    }
+
+    #[test]
+    fn vm_allocation_is_exclusive() {
+        let mut db = db_with_two_devices();
+        let u = db.add_user("carol");
+        let vm = VmId(db.vm_ids.next());
+        db.allocate_physical(u, FpgaId(0), Some(vm), 0).unwrap();
+        assert!(db.allocate_physical(u, FpgaId(0), None, 0).is_err());
+        let dev = db.device(FpgaId(0)).unwrap();
+        assert!(dev.exclusive_alloc.is_some());
+    }
+
+    #[test]
+    fn unknown_ids_are_errors() {
+        let mut db = db_with_two_devices();
+        let u = db.add_user("dave");
+        assert!(db
+            .allocate_vfpga(u, VfpgaId(99), ServiceModel::RAaaS, 0)
+            .is_err());
+        assert!(db.allocate_physical(u, FpgaId(9), None, 0).is_err());
+        assert!(db.release(AllocationId(404)).is_err());
+    }
+
+    #[test]
+    fn user_allocations_filter() {
+        let mut db = db_with_two_devices();
+        let alice = db.add_user("alice");
+        let bob = db.add_user("bob");
+        db.allocate_vfpga(alice, VfpgaId(0), ServiceModel::RAaaS, 0)
+            .unwrap();
+        db.allocate_vfpga(bob, VfpgaId(1), ServiceModel::RAaaS, 0)
+            .unwrap();
+        db.allocate_vfpga(alice, VfpgaId(2), ServiceModel::BAaaS, 0)
+            .unwrap();
+        assert_eq!(db.user_allocations(alice).len(), 2);
+        assert_eq!(db.user_allocations(bob).len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut db = db_with_two_devices();
+        let u = db.add_user("alice");
+        db.allocate_vfpga(u, VfpgaId(2), ServiceModel::BAaaS, 42)
+            .unwrap();
+        let vm = VmId(db.vm_ids.next());
+        db.allocate_physical(u, FpgaId(1), Some(vm), 43).unwrap();
+        let j = db.to_json();
+        let back = DeviceDb::from_json(&j).unwrap();
+        assert_eq!(back.to_json(), j);
+        assert_eq!(back.owner_of(VfpgaId(2)).unwrap().user, u);
+        assert_eq!(back.used_regions(FpgaId(0)), 1);
+        // Id generators resume past reloaded ids.
+        let next = AllocationId(back.alloc_ids.next());
+        assert!(next.0 >= 2);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let mut db = db_with_two_devices();
+        let u = db.add_user("eve");
+        db.allocate_vfpga(u, VfpgaId(3), ServiceModel::RAaaS, 7)
+            .unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("rc3e_db_{}.json", std::process::id()));
+        db.save(&path).unwrap();
+        let back = DeviceDb::load(&path).unwrap();
+        assert_eq!(back.to_json(), db.to_json());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,317 @@
+//! Design migration between vFPGA regions — a paper future-work item
+//! ("A migration of user designs between vFPGAs and physical FPGAs is
+//! also intended", Section VI), implemented as a first-class feature.
+//!
+//! Procedure (cold migration, the user's stream is quiesced):
+//! 1. pick a target region on another (or the same) device via the
+//!    placement policy;
+//! 2. retarget the relocatable partial bitfile to the target slot's
+//!    frame window ([`crate::hls::flow::DesignFlow::retarget`]);
+//! 3. PR the target region (sanity-checked like any PR);
+//! 4. rebind the lease in the database, move the device files,
+//!    blank the source region and gate its clock.
+
+use super::core::{Hypervisor, HypervisorError};
+use super::db::AllocKind;
+use crate::hls::flow::DesignFlow;
+use crate::util::clock::VirtualTime;
+use crate::util::ids::{AllocationId, UserId, VfpgaId};
+
+/// Outcome of a migration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationReport {
+    pub from: VfpgaId,
+    pub to: VfpgaId,
+    pub moved_across_devices: bool,
+    /// Total virtual downtime (PR + orchestration).
+    pub downtime: VirtualTime,
+}
+
+impl Hypervisor {
+    /// Migrate a configured vFPGA lease to a new region. `prefer`
+    /// optionally pins the target region; otherwise the placement
+    /// policy chooses among free regions on *other* devices first.
+    pub fn migrate_vfpga(
+        &self,
+        alloc_id: AllocationId,
+        user: UserId,
+        prefer: Option<VfpgaId>,
+    ) -> Result<MigrationReport, HypervisorError> {
+        let source = self.check_vfpga_lease(alloc_id, user)?;
+        let bitstream = self
+            .programmed_bitstream(source)
+            .ok_or(HypervisorError::WrongKind(alloc_id))?;
+
+        // -------- choose target ---------------------------------
+        let (src_fpga, target) = {
+            let db = self.db.lock().unwrap();
+            let src_fpga = db
+                .device_of_vfpga(source)
+                .ok_or(HypervisorError::BadAllocation(alloc_id))?
+                .id;
+            let target = match prefer {
+                Some(t) => t,
+                None => {
+                    // Free regions on other devices first, then same
+                    // device (deterministic order).
+                    let mut candidates: Vec<VfpgaId> = Vec::new();
+                    for (id, _) in self.db_devices(&db) {
+                        if id != src_fpga {
+                            candidates.extend(db.free_regions(id));
+                        }
+                    }
+                    candidates.extend(db.free_regions(src_fpga));
+                    *candidates
+                        .first()
+                        .ok_or(HypervisorError::NoCapacity)?
+                }
+            };
+            if db.owner_of(target).is_some() || target == source {
+                return Err(HypervisorError::NoCapacity);
+            }
+            (src_fpga, target)
+        };
+
+        let t0 = self.clock.now();
+        let (dst_fpga, dst_node) = {
+            let db = self.db.lock().unwrap();
+            let d = db
+                .device_of_vfpga(target)
+                .ok_or(HypervisorError::NoCapacity)?;
+            (d.id, d.node)
+        };
+        let dst_dev = self.device(dst_fpga)?;
+        let dst_slot = dst_dev.slot_of[&target];
+        let dst_quarters = {
+            let hw = dst_dev.fpga.lock().unwrap();
+            hw.region(target)
+                .map_err(|e| HypervisorError::Device(e.to_string()))?
+                .shape
+                .quarters()
+        };
+
+        // -------- retarget + rebind lease ------------------------
+        let moved = DesignFlow::retarget(&bitstream, dst_slot, dst_quarters);
+        {
+            // Rebind in the database: swap the vfpga inside the
+            // existing allocation record.
+            let mut db = self.db.lock().unwrap();
+            let alloc = db
+                .allocations
+                .get_mut(&alloc_id)
+                .ok_or(HypervisorError::BadAllocation(alloc_id))?;
+            alloc.kind = AllocKind::Vfpga(target);
+            db.vfpga_owner.remove(&source);
+            db.vfpga_owner.insert(target, alloc_id);
+        }
+        dst_dev
+            .controller
+            .lock()
+            .unwrap()
+            .allocate(target, user)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        self.registries_of(dst_node)
+            .create_vfpga_files(target, user)
+            .map_err(|e| HypervisorError::Db(e.to_string()))?;
+
+        // -------- program target (sanity-checked PR) -------------
+        let program_result = self.program_vfpga(alloc_id, user, &moved);
+        if let Err(e) = program_result {
+            // Roll back the rebind so the lease still points at the
+            // (still configured) source region.
+            let mut db = self.db.lock().unwrap();
+            if let Some(alloc) = db.allocations.get_mut(&alloc_id) {
+                alloc.kind = AllocKind::Vfpga(source);
+            }
+            db.vfpga_owner.remove(&target);
+            db.vfpga_owner.insert(source, alloc_id);
+            drop(db);
+            self.registries_of(dst_node).remove_vfpga_files(target);
+            let _ = dst_dev.controller.lock().unwrap().release(target);
+            return Err(e);
+        }
+
+        // -------- blank the source ------------------------------
+        let (src_node, src_dev_id) = {
+            let db = self.db.lock().unwrap();
+            // device_of_vfpga no longer finds `source` via ownership —
+            // look through device entries directly.
+            let d = db
+                .devices
+                .values()
+                .find(|d| d.regions.contains(&source))
+                .ok_or(HypervisorError::NoCapacity)?;
+            (d.node, d.id)
+        };
+        let src_dev = self.device(src_dev_id)?;
+        src_dev
+            .fpga
+            .lock()
+            .unwrap()
+            .clear_region(source)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        src_dev
+            .controller
+            .lock()
+            .unwrap()
+            .release(source)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        self.registries_of(src_node).remove_vfpga_files(source);
+
+        self.metrics.counter("hv.migrations").inc();
+        Ok(MigrationReport {
+            from: source,
+            to: target,
+            moved_across_devices: src_fpga != dst_fpga,
+            downtime: self.clock.since(t0),
+        })
+    }
+
+    fn db_devices<'a>(
+        &self,
+        db: &'a crate::hypervisor::db::DeviceDb,
+    ) -> Vec<(crate::util::ids::FpgaId, &'a crate::hypervisor::db::DeviceEntry)>
+    {
+        db.devices.iter().map(|(id, e)| (*id, e)).collect()
+    }
+
+    fn registries_of(
+        &self,
+        node: crate::util::ids::NodeId,
+    ) -> &crate::pcie::devfile::DeviceFileRegistry {
+        self.registry(node).expect("node registry").as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceModel;
+    use crate::util::clock::VirtualClock;
+
+    fn hv() -> Hypervisor {
+        Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap()
+    }
+
+    fn programmed_lease(
+        hv: &Hypervisor,
+        user: UserId,
+    ) -> (AllocationId, VfpgaId, crate::util::ids::FpgaId) {
+        let (alloc, vfpga, fpga, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let slot = hv.device(fpga).unwrap().slot_of[&vfpga];
+        let bs = crate::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            "matmul16",
+        )
+        .resources(crate::fpga::resources::Resources::new(
+            25_298, 41_654, 14, 80,
+        ))
+        .frames(crate::hls::flow::region_window(slot, 1))
+        .artifact("matmul16_b256")
+        .build();
+        hv.program_vfpga(alloc, user, &bs).unwrap();
+        (alloc, vfpga, fpga)
+    }
+
+    #[test]
+    fn migration_moves_design_across_devices() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, source, src_fpga) = programmed_lease(&hv, user);
+        let report = hv.migrate_vfpga(alloc, user, None).unwrap();
+        assert_eq!(report.from, source);
+        assert_ne!(report.to, source);
+        assert!(report.moved_across_devices);
+        // Lease now points at the target.
+        assert_eq!(hv.check_vfpga_lease(alloc, user).unwrap(), report.to);
+        // Target is configured with the same core; source blanked.
+        let db = hv.db.lock().unwrap();
+        let dst_fpga = db.device_of_vfpga(report.to).unwrap().id;
+        drop(db);
+        let dst = hv.device(dst_fpga).unwrap();
+        let hw = dst.fpga.lock().unwrap();
+        assert!(hw.region(report.to).unwrap().is_configured());
+        drop(hw);
+        let src = hv.device(src_fpga).unwrap();
+        assert!(!src
+            .fpga
+            .lock()
+            .unwrap()
+            .region(source)
+            .unwrap()
+            .is_configured());
+        // Downtime ≈ PR + orchestration.
+        assert!(report.downtime.as_millis_f64() > 700.0);
+    }
+
+    #[test]
+    fn migration_to_pinned_target() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, source, src_fpga) = programmed_lease(&hv, user);
+        // Pin to a free region on the same device.
+        let target = {
+            let db = hv.db.lock().unwrap();
+            db.free_regions(src_fpga)[0]
+        };
+        let report = hv.migrate_vfpga(alloc, user, Some(target)).unwrap();
+        assert_eq!(report.to, target);
+        assert!(!report.moved_across_devices);
+        assert_ne!(report.from, report.to);
+        let _ = source;
+    }
+
+    #[test]
+    fn migration_requires_configured_design() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, _, _, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        // Never programmed → nothing to migrate.
+        assert!(hv.migrate_vfpga(alloc, user, None).is_err());
+    }
+
+    #[test]
+    fn migration_rejects_taken_target() {
+        let hv = hv();
+        let alice = hv.add_user("alice");
+        let bob = hv.add_user("bob");
+        let (alloc_a, _, _) = programmed_lease(&hv, alice);
+        let (_, vfpga_b, _, _) =
+            hv.alloc_vfpga(bob, ServiceModel::RAaaS).unwrap();
+        assert!(matches!(
+            hv.migrate_vfpga(alloc_a, alice, Some(vfpga_b)),
+            Err(HypervisorError::NoCapacity)
+        ));
+    }
+
+    #[test]
+    fn migrated_files_follow_the_lease() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, source, _) = programmed_lease(&hv, user);
+        let report = hv.migrate_vfpga(alloc, user, None).unwrap();
+        let db = hv.db.lock().unwrap();
+        let dst_node = db.device_of_vfpga(report.to).unwrap().node;
+        drop(db);
+        let reg = hv.registry(dst_node).unwrap();
+        let new_path = crate::pcie::devfile::DeviceFileRegistry::vfpga_path(
+            report.to,
+            crate::pcie::devfile::DeviceFileKind::FifoIn,
+            0,
+        );
+        assert!(reg.open(&new_path, Some(user)).is_ok());
+        let old_path = crate::pcie::devfile::DeviceFileRegistry::vfpga_path(
+            source,
+            crate::pcie::devfile::DeviceFileKind::FifoIn,
+            0,
+        );
+        // Old files removed on every node.
+        for node in [0u64, 1] {
+            if let Some(r) = hv.registry(crate::util::ids::NodeId(node)) {
+                assert!(r.open(&old_path, Some(user)).is_err());
+            }
+        }
+    }
+}

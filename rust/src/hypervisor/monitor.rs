@@ -1,0 +1,249 @@
+//! Resource monitoring — "The system includes resource management and
+//! monitoring of FPGA resources" (Section IV).
+//!
+//! The monitor samples every managed device through the same status
+//! path the middleware uses (so monitoring load is visible in the
+//! latency accounting), maintains utilization/power time series, and
+//! renders the operator report the CLI's `rc3e cli monitor` shows.
+
+use std::collections::BTreeMap;
+
+use super::core::Hypervisor;
+use crate::util::clock::VirtualTime;
+use crate::util::ids::FpgaId;
+use crate::util::json::Json;
+
+/// One sample of one device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub at: VirtualTime,
+    pub regions_total: usize,
+    pub regions_configured: usize,
+    pub regions_clocked: usize,
+    pub power_w: f64,
+}
+
+/// Aggregated view over a sampling window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSummary {
+    pub fpga: FpgaId,
+    pub samples: usize,
+    pub mean_configured: f64,
+    pub peak_configured: usize,
+    pub mean_power_w: f64,
+    pub peak_power_w: f64,
+    /// Fraction of samples with at least one active region.
+    pub busy_fraction: f64,
+}
+
+/// The monitoring store.
+#[derive(Debug, Default)]
+pub struct Monitor {
+    series: BTreeMap<FpgaId, Vec<Sample>>,
+}
+
+impl Monitor {
+    pub fn new() -> Monitor {
+        Monitor::default()
+    }
+
+    /// Sample every device once (charges the status-call latency per
+    /// device, like a real monitoring daemon would).
+    pub fn sample_all(&mut self, hv: &Hypervisor) {
+        for fpga in hv.device_ids() {
+            if let Ok(st) = hv.status_local(fpga) {
+                self.series.entry(fpga).or_default().push(Sample {
+                    at: hv.clock.now(),
+                    regions_total: st.regions_total,
+                    regions_configured: st.regions_configured,
+                    regions_clocked: st.regions_clocked,
+                    power_w: st.power_w,
+                });
+            }
+        }
+    }
+
+    pub fn samples(&self, fpga: FpgaId) -> &[Sample] {
+        self.series.get(&fpga).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Summaries per device.
+    pub fn summaries(&self) -> Vec<DeviceSummary> {
+        self.series
+            .iter()
+            .map(|(fpga, samples)| {
+                let n = samples.len().max(1) as f64;
+                DeviceSummary {
+                    fpga: *fpga,
+                    samples: samples.len(),
+                    mean_configured: samples
+                        .iter()
+                        .map(|s| s.regions_configured as f64)
+                        .sum::<f64>()
+                        / n,
+                    peak_configured: samples
+                        .iter()
+                        .map(|s| s.regions_configured)
+                        .max()
+                        .unwrap_or(0),
+                    mean_power_w: samples
+                        .iter()
+                        .map(|s| s.power_w)
+                        .sum::<f64>()
+                        / n,
+                    peak_power_w: samples
+                        .iter()
+                        .map(|s| s.power_w)
+                        .fold(0.0, f64::max),
+                    busy_fraction: samples
+                        .iter()
+                        .filter(|s| s.regions_clocked > 0)
+                        .count() as f64
+                        / n,
+                }
+            })
+            .collect()
+    }
+
+    /// Cloud-wide utilization: configured regions / total regions in
+    /// the latest sample (the quantity consolidation maximizes).
+    pub fn cloud_utilization(&self) -> f64 {
+        let (mut configured, mut total) = (0usize, 0usize);
+        for samples in self.series.values() {
+            if let Some(last) = samples.last() {
+                configured += last.regions_configured;
+                total += last.regions_total;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            configured as f64 / total as f64
+        }
+    }
+
+    /// Operator report (JSON, served by the middleware's `monitor`
+    /// method).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.summaries()
+                .into_iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("fpga", Json::from(s.fpga.to_string())),
+                        ("samples", Json::from(s.samples)),
+                        (
+                            "mean_configured",
+                            Json::from(s.mean_configured),
+                        ),
+                        (
+                            "peak_configured",
+                            Json::from(s.peak_configured),
+                        ),
+                        ("mean_power_w", Json::from(s.mean_power_w)),
+                        ("peak_power_w", Json::from(s.peak_power_w)),
+                        ("busy_fraction", Json::from(s.busy_fraction)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceModel;
+    use crate::hypervisor::PlacementPolicy;
+    use crate::util::clock::VirtualClock;
+
+    fn hv() -> Hypervisor {
+        Hypervisor::boot(
+            &crate::config::ClusterConfig::paper_testbed(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap()
+    }
+
+    fn program_one(hv: &Hypervisor) -> crate::util::ids::AllocationId {
+        let user = hv.add_user("mon");
+        let (alloc, vfpga, fpga, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let slot = hv.device(fpga).unwrap().slot_of[&vfpga];
+        let part =
+            hv.device(fpga).unwrap().fpga.lock().unwrap().board.part;
+        let bs = crate::bitstream::BitstreamBuilder::partial(part, "m")
+            .resources(crate::fpga::Resources::new(10, 10, 1, 1))
+            .frames(crate::hls::flow::region_window(slot, 1))
+            .build();
+        hv.program_vfpga(alloc, user, &bs).unwrap();
+        alloc
+    }
+
+    #[test]
+    fn sampling_builds_series() {
+        let hv = hv();
+        let mut mon = Monitor::new();
+        mon.sample_all(&hv);
+        mon.sample_all(&hv);
+        for fpga in hv.device_ids() {
+            assert_eq!(mon.samples(fpga).len(), 2);
+        }
+    }
+
+    #[test]
+    fn sampling_charges_status_latency() {
+        let hv = hv();
+        let mut mon = Monitor::new();
+        let t0 = hv.clock.now();
+        mon.sample_all(&hv);
+        // 4 devices x ~11 ms local status.
+        let ms = hv.clock.since(t0).as_millis_f64();
+        assert!((ms - 44.0).abs() < 0.5, "{ms}");
+    }
+
+    #[test]
+    fn utilization_tracks_configuration() {
+        let hv = hv();
+        let mut mon = Monitor::new();
+        mon.sample_all(&hv);
+        assert_eq!(mon.cloud_utilization(), 0.0);
+        let alloc = program_one(&hv);
+        mon.sample_all(&hv);
+        assert!((mon.cloud_utilization() - 1.0 / 16.0).abs() < 1e-9);
+        hv.release(alloc).unwrap();
+        mon.sample_all(&hv);
+        assert_eq!(mon.cloud_utilization(), 0.0);
+    }
+
+    #[test]
+    fn summaries_capture_peaks() {
+        let hv = hv();
+        let mut mon = Monitor::new();
+        mon.sample_all(&hv); // idle
+        let alloc = program_one(&hv);
+        mon.sample_all(&hv); // busy
+        hv.release(alloc).unwrap();
+        mon.sample_all(&hv); // idle again
+        let summaries = mon.summaries();
+        let busy = summaries
+            .iter()
+            .find(|s| s.peak_configured == 1)
+            .expect("one device saw a configured region");
+        assert_eq!(busy.samples, 3);
+        assert!(busy.busy_fraction > 0.0 && busy.busy_fraction < 1.0);
+        assert!(busy.peak_power_w > busy.mean_power_w);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let hv = hv();
+        let mut mon = Monitor::new();
+        mon.sample_all(&hv);
+        let j = mon.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert!(arr[0].get("mean_power_w").as_f64().is_some());
+    }
+}

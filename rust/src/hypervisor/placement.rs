@@ -1,0 +1,197 @@
+//! vFPGA placement policies.
+//!
+//! Section IV-B: "The resource manager always tries to minimize the
+//! number of active vFPGAs and to maximize the utilization of
+//! physical FPGAs to thereby reduce energy consumption." That is
+//! consolidate-first (bin-packing) placement; round-robin (spread) is
+//! implemented as the ablation baseline — `bench ablation_placement`
+//! shows the energy difference, and also the throughput flip side:
+//! spreading gives each core more PCIe bandwidth.
+
+use crate::util::ids::{FpgaId, VfpgaId};
+
+/// A device the allocator may place into.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub fpga: FpgaId,
+    /// Regions currently leased on the device.
+    pub used: usize,
+    /// Free regions, in preference order.
+    pub free: Vec<VfpgaId>,
+}
+
+/// Placement strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Pack onto the most-utilized device that still has room — the
+    /// paper's energy-minimizing rule.
+    ConsolidateFirst,
+    /// Spread across least-utilized devices (bandwidth-friendly
+    /// ablation baseline).
+    RoundRobin,
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "consolidate" => Some(PlacementPolicy::ConsolidateFirst),
+            "roundrobin" => Some(PlacementPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    /// Choose a device + region among candidates. Ties break on the
+    /// lower device id (determinism). Candidates with no free region
+    /// are skipped.
+    pub fn choose(
+        self,
+        candidates: &[Candidate],
+    ) -> Option<(FpgaId, VfpgaId)> {
+        let viable = candidates.iter().filter(|c| !c.free.is_empty());
+        let best = match self {
+            PlacementPolicy::ConsolidateFirst => viable.min_by_key(|c| {
+                (std::cmp::Reverse(c.used), c.fpga.0)
+            }),
+            PlacementPolicy::RoundRobin => {
+                viable.min_by_key(|c| (c.used, c.fpga.0))
+            }
+        }?;
+        Some((best.fpga, best.free[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn candidates() -> Vec<Candidate> {
+        vec![
+            Candidate {
+                fpga: FpgaId(0),
+                used: 1,
+                free: vec![VfpgaId(1), VfpgaId(2), VfpgaId(3)],
+            },
+            Candidate {
+                fpga: FpgaId(1),
+                used: 3,
+                free: vec![VfpgaId(7)],
+            },
+            Candidate {
+                fpga: FpgaId(2),
+                used: 0,
+                free: (8..12).map(VfpgaId).collect(),
+            },
+        ]
+    }
+
+    #[test]
+    fn consolidate_picks_fullest_with_room() {
+        let (fpga, v) =
+            PlacementPolicy::ConsolidateFirst.choose(&candidates()).unwrap();
+        assert_eq!(fpga, FpgaId(1));
+        assert_eq!(v, VfpgaId(7));
+    }
+
+    #[test]
+    fn round_robin_picks_emptiest() {
+        let (fpga, v) =
+            PlacementPolicy::RoundRobin.choose(&candidates()).unwrap();
+        assert_eq!(fpga, FpgaId(2));
+        assert_eq!(v, VfpgaId(8));
+    }
+
+    #[test]
+    fn full_devices_skipped() {
+        let cands = vec![
+            Candidate {
+                fpga: FpgaId(0),
+                used: 4,
+                free: vec![],
+            },
+            Candidate {
+                fpga: FpgaId(1),
+                used: 2,
+                free: vec![VfpgaId(5)],
+            },
+        ];
+        for p in [
+            PlacementPolicy::ConsolidateFirst,
+            PlacementPolicy::RoundRobin,
+        ] {
+            assert_eq!(p.choose(&cands), Some((FpgaId(1), VfpgaId(5))));
+        }
+    }
+
+    #[test]
+    fn no_capacity_returns_none() {
+        let cands = vec![Candidate {
+            fpga: FpgaId(0),
+            used: 4,
+            free: vec![],
+        }];
+        assert_eq!(PlacementPolicy::ConsolidateFirst.choose(&cands), None);
+        assert_eq!(PlacementPolicy::RoundRobin.choose(&cands), None);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let cands = vec![
+            Candidate {
+                fpga: FpgaId(3),
+                used: 1,
+                free: vec![VfpgaId(13)],
+            },
+            Candidate {
+                fpga: FpgaId(1),
+                used: 1,
+                free: vec![VfpgaId(5)],
+            },
+        ];
+        assert_eq!(
+            PlacementPolicy::ConsolidateFirst.choose(&cands),
+            Some((FpgaId(1), VfpgaId(5)))
+        );
+        assert_eq!(
+            PlacementPolicy::RoundRobin.choose(&cands),
+            Some((FpgaId(1), VfpgaId(5)))
+        );
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            PlacementPolicy::parse("consolidate"),
+            Some(PlacementPolicy::ConsolidateFirst)
+        );
+        assert_eq!(
+            PlacementPolicy::parse("roundrobin"),
+            Some(PlacementPolicy::RoundRobin)
+        );
+        assert_eq!(PlacementPolicy::parse("bestfit"), None);
+    }
+
+    #[test]
+    fn consolidation_sequence_fills_one_device_first() {
+        // Simulate 8 sequential placements over two empty devices.
+        let mut used = [0usize, 0];
+        let mut placements = Vec::new();
+        for _ in 0..8 {
+            let cands: Vec<Candidate> = (0..2)
+                .map(|i| Candidate {
+                    fpga: FpgaId(i as u64),
+                    used: used[i],
+                    free: (0..(4 - used[i]))
+                        .map(|k| VfpgaId((i * 4 + used[i] + k) as u64))
+                        .collect(),
+                })
+                .collect();
+            let (f, _) = PlacementPolicy::ConsolidateFirst
+                .choose(&cands)
+                .unwrap();
+            used[f.0 as usize] += 1;
+            placements.push(f.0);
+        }
+        // First four land on device 0, next four on device 1.
+        assert_eq!(placements, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+}

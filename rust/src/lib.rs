@@ -1,0 +1,112 @@
+//! # RC3E — Reconfigurable Common Cloud Computing Environment
+//!
+//! A full reproduction of *Knodel & Spallek, "RC3E: Provision and
+//! Management of Reconfigurable Hardware Accelerators in a Cloud
+//! Environment"* (2015) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organized exactly as DESIGN.md describes:
+//!
+//! * [`util`] — substrates built in-tree (JSON, virtual clock, PRNG,
+//!   CLI parsing, logging, wire encoding) since the build is offline.
+//! * [`config`] — typed cluster/board/calibration configuration.
+//! * [`fpga`] — the simulated FPGA device model (boards, regions,
+//!   resources, configuration ports, clock gating, power).
+//! * [`bitstream`] — full/partial bitfile format plus the sanity
+//!   checker the paper lists as future work.
+//! * [`pcie`] — PCIe link simulator: shared-bandwidth arbiter, device
+//!   files, DMA channels, hot-plug link restoration.
+//! * [`fifo`] — asynchronous FIFO with clock-domain-crossing
+//!   semantics and backpressure (the RC2F streaming interface).
+//! * [`runtime`] — PJRT execution engine: loads the AOT-lowered HLO
+//!   artifacts and runs them as the vFPGA "user cores".
+//! * [`rc2f`] — the computing framework: controller, configuration
+//!   spaces (gcs/ucs), vFPGA slots and the CUDA/OpenCL-style host API.
+//! * [`hls`] — the high-level-synthesis flow simulator producing
+//!   partial bitstreams from core specifications.
+//! * [`hypervisor`] — RC3E itself: device database, allocation for
+//!   the three service models, placement, energy, migration.
+//! * [`middleware`] — management-node RPC server, node agents, client
+//!   library and the CLI command surface.
+//! * [`batch`] — batch system for long-running unattended jobs.
+//! * [`vm`] — virtual-machine allocation extension (RSaaS).
+//! * [`service`] — RSaaS / RAaaS / BAaaS façades.
+//! * [`metrics`] — counters, histograms and report tables.
+//! * [`testing`] — property-testing mini-framework + failure
+//!   injection used across the test suite and benches.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`);
+//! the binary serves everything from the compiled HLO artifacts.
+
+pub mod batch;
+pub mod bitstream;
+pub mod config;
+pub mod fifo;
+pub mod fpga;
+pub mod hls;
+pub mod hypervisor;
+pub mod metrics;
+pub mod middleware;
+pub mod pcie;
+pub mod rc2f;
+pub mod runtime;
+pub mod service;
+pub mod testing;
+pub mod util;
+pub mod vm;
+
+/// Crate version string reported by the CLI and the RPC `hello` call.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Paper constants used throughout the calibration layer.
+///
+/// All timing constants are the measured values of the paper's tables;
+/// the simulator reproduces them through the virtual clock, and the
+/// benches print paper-vs-measured rows next to each other.
+pub mod paper {
+    /// Table I: local RC2F status call latency.
+    pub const STATUS_LOCAL_MS: f64 = 11.0;
+    /// Table I: status call via the RC3E middleware.
+    pub const STATUS_RC3E_MS: f64 = 80.0;
+    /// Table I: full configuration (JTAG + USB), local.
+    pub const CONFIG_LOCAL_S: f64 = 28.370;
+    /// Table I: full configuration via RC3E.
+    pub const CONFIG_RC3E_S: f64 = 29.513;
+    /// Table I: partial reconfiguration, local.
+    pub const PR_LOCAL_MS: f64 = 732.0;
+    /// Table I: partial reconfiguration via RC3E.
+    pub const PR_RC3E_MS: f64 = 912.0;
+    /// Table II / Section IV-D2: Xillybus-limited PCIe throughput.
+    pub const LINK_MBPS: f64 = 800.0;
+    /// Table II: single-vFPGA max FIFO throughput.
+    pub const FIFO_1V_MBPS: f64 = 798.0;
+    /// Table II: per-core throughput with two vFPGAs.
+    pub const FIFO_2V_MBPS: f64 = 397.0;
+    /// Table II: per-core throughput with four vFPGAs.
+    pub const FIFO_4V_MBPS: f64 = 196.0;
+    /// Table II: gcs access latency with one vFPGA design (ms).
+    pub const GCS_LATENCY_MS: f64 = 0.198;
+    /// Table II: total config-space latency, 1 vFPGA design (ms).
+    pub const UCS_1V_LATENCY_MS: f64 = 0.208;
+    /// Table II: total config-space latency, 2 vFPGA design (ms).
+    pub const UCS_2V_LATENCY_MS: f64 = 0.221;
+    /// Table II: total config-space latency, 4 vFPGA design (ms).
+    pub const UCS_4V_LATENCY_MS: f64 = 0.273;
+    /// Table III: compute-bound 16x16 single-core throughput.
+    pub const MM16_1C_MBPS: f64 = 509.0;
+    /// Table III: link-bound 16x16 two-core per-core throughput.
+    pub const MM16_2C_MBPS: f64 = 398.0;
+    /// Table III: 16x16 four-core per-core throughput.
+    pub const MM16_4C_MBPS: f64 = 198.0;
+    /// Table III: 32x32 single-core throughput (compute bound).
+    pub const MM32_1C_MBPS: f64 = 279.0;
+    /// Table III: 32x32 two-core per-core throughput.
+    pub const MM32_2C_MBPS: f64 = 277.0;
+    /// Table III: 16x16 runtimes per core (s) for 1/2/4 cores.
+    pub const MM16_RUNTIME_S: [f64; 3] = [0.73, 0.86, 1.41];
+    /// Table III: 32x32 runtimes per core (s) for 1/2 cores.
+    pub const MM32_RUNTIME_S: [f64; 2] = [3.27, 3.43];
+    /// Section V: matrices streamed per run.
+    pub const STREAM_MULTS: u64 = 100_000;
+    /// Max vFPGAs per physical device (Section I / IV-A).
+    pub const MAX_VFPGAS: usize = 4;
+}

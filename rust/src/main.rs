@@ -1,0 +1,311 @@
+//! `rc3e` — the RC3E cloud CLI and daemon launcher.
+//!
+//! Subcommands:
+//! * `serve`  — boot the cloud (management server + node agents) and
+//!   print the management address; Ctrl-C to stop.
+//! * `cli <method> [--param value ...]` — one middleware call against
+//!   a running server (`--addr host:port`).
+//! * `demo` — self-contained end-to-end demo on an in-process cloud:
+//!   allocate → program → stream → report (no server needed).
+//! * `status|alloc|program|stream|release|migrate` — sugar over `cli`.
+
+use std::sync::Arc;
+
+use rc3e::config::ClusterConfig;
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::middleware::{Client, ManagementServer, NodeAgent};
+use rc3e::util::cli::{Args, FlagSpec};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::ids::NodeId;
+use rc3e::util::json::Json;
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec {
+            name: "addr",
+            takes_value: true,
+            help: "management server address (host:port)",
+        },
+        FlagSpec {
+            name: "config",
+            takes_value: true,
+            help: "cluster config JSON (default: paper testbed)",
+        },
+        FlagSpec {
+            name: "user",
+            takes_value: true,
+            help: "user id (user-N)",
+        },
+        FlagSpec {
+            name: "alloc",
+            takes_value: true,
+            help: "allocation id (alloc-N)",
+        },
+        FlagSpec {
+            name: "fpga",
+            takes_value: true,
+            help: "device id (fpga-N)",
+        },
+        FlagSpec {
+            name: "core",
+            takes_value: true,
+            help: "user core name (matmul16, matmul32, ...)",
+        },
+        FlagSpec {
+            name: "mults",
+            takes_value: true,
+            help: "matrix multiplications to stream",
+        },
+        FlagSpec {
+            name: "name",
+            takes_value: true,
+            help: "user name",
+        },
+        FlagSpec {
+            name: "timescale",
+            takes_value: true,
+            help: "virtual-clock wall divisor for serve (0 = no sleep)",
+        },
+        FlagSpec {
+            name: "verbose",
+            takes_value: false,
+            help: "debug logging",
+        },
+    ]
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = flag_specs();
+    let args = match Args::parse(&argv, &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("verbose") {
+        rc3e::util::logging::init_with_level(log::LevelFilter::Debug);
+    }
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "serve" => cmd_serve(&args),
+        "demo" => cmd_demo(&args),
+        "cli" => cmd_cli(&args),
+        "status" => forward(&args, "status", &[("fpga", "fpga")]),
+        "adduser" => forward(&args, "add_user", &[("name", "name")]),
+        "alloc" => forward(&args, "alloc_vfpga", &[("user", "user")]),
+        "program" => forward(
+            &args,
+            "program_core",
+            &[("user", "user"), ("alloc", "alloc"), ("core", "core")],
+        ),
+        "stream" => cmd_stream(&args),
+        "release" => forward(&args, "release", &[("alloc", "alloc")]),
+        "migrate" => forward(
+            &args,
+            "migrate",
+            &[("user", "user"), ("alloc", "alloc")],
+        ),
+        "energy" => forward(&args, "energy", &[]),
+        _ => {
+            print!("{}", usage());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    let mut out = String::from(
+        "rc3e — Reconfigurable Common Cloud Computing Environment\n\n\
+         Subcommands:\n\
+         \x20 serve      boot management server + node agents\n\
+         \x20 demo       in-process end-to-end demo\n\
+         \x20 cli        raw middleware call: rc3e cli <method> [--flags]\n\
+         \x20 adduser    --name <s>\n\
+         \x20 status     --fpga fpga-N\n\
+         \x20 alloc      --user user-N\n\
+         \x20 program    --user user-N --alloc alloc-N --core matmul16\n\
+         \x20 stream     --user user-N --alloc alloc-N --core matmul16 \
+         --mults 100000\n\
+         \x20 release    --alloc alloc-N\n\
+         \x20 migrate    --user user-N --alloc alloc-N\n\
+         \x20 energy\n\n",
+    );
+    out.push_str(&rc3e::util::cli::usage("rc3e", "flags", &flag_specs()));
+    out
+}
+
+fn load_config(args: &Args) -> Result<ClusterConfig, String> {
+    match args.get("config") {
+        Some(path) => ClusterConfig::load(std::path::Path::new(path)),
+        None => Ok(ClusterConfig::paper_testbed()),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let config = load_config(args)?;
+    let scale = args.get_u64("timescale", 0).map_err(|e| e.to_string())?;
+    let clock = if scale > 0 {
+        VirtualClock::with_scale(scale)
+    } else {
+        VirtualClock::new()
+    };
+    eprintln!(
+        "booting cloud: {} nodes, {} FPGAs, {} vFPGAs...",
+        config.nodes.len(),
+        config.total_fpgas(),
+        config.total_vfpgas()
+    );
+    let hv = Arc::new(
+        Hypervisor::boot(&config, clock, PlacementPolicy::ConsolidateFirst)
+            .map_err(|e| e.to_string())?,
+    );
+    let server = ManagementServer::spawn(
+        Arc::clone(&hv),
+        config.rpc_overhead_ms,
+    )
+    .map_err(|e| e.to_string())?;
+    let mut agents = Vec::new();
+    for (i, node) in config.nodes.iter().enumerate() {
+        let agent = NodeAgent::spawn(Arc::clone(&hv), NodeId(i as u64), None)
+            .map_err(|e| e.to_string())?;
+        eprintln!("node agent for {} at {}", node.name, agent.addr());
+        server.register_agent(NodeId(i as u64), agent.addr());
+        agents.push(agent);
+    }
+    println!("{}", server.addr());
+    eprintln!(
+        "management server ready at {} (Ctrl-C to stop)",
+        server.addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn connect(args: &Args) -> Result<Client, String> {
+    let addr = args
+        .get("addr")
+        .ok_or("missing --addr (management server)")?;
+    let addr: std::net::SocketAddr =
+        addr.parse().map_err(|e| format!("bad --addr: {e}"))?;
+    Client::connect(addr)
+}
+
+/// Forward a subcommand to a middleware method, mapping flags to
+/// string params.
+fn forward(
+    args: &Args,
+    method: &str,
+    mapping: &[(&str, &str)],
+) -> Result<(), String> {
+    let mut client = connect(args)?;
+    let mut params = Json::obj(vec![]);
+    for (flag, param) in mapping {
+        let v = args
+            .get(flag)
+            .ok_or_else(|| format!("missing --{flag}"))?;
+        params.set(param, Json::from(v));
+    }
+    let body = client.call(method, params)?;
+    println!("{}", body.to_pretty());
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<(), String> {
+    let mut client = connect(args)?;
+    let mut params = Json::obj(vec![]);
+    for (flag, param) in
+        [("user", "user"), ("alloc", "alloc"), ("core", "core")]
+    {
+        let v = args
+            .get(flag)
+            .ok_or_else(|| format!("missing --{flag}"))?;
+        params.set(param, Json::from(v));
+    }
+    params.set(
+        "mults",
+        Json::from(
+            args.get_u64("mults", 100_000).map_err(|e| e.to_string())?,
+        ),
+    );
+    let body = client.call("stream", params)?;
+    println!("{}", body.to_pretty());
+    Ok(())
+}
+
+fn cmd_cli(args: &Args) -> Result<(), String> {
+    let method = args
+        .positional()
+        .get(1)
+        .ok_or("usage: rc3e cli <method> [--user ... --alloc ...]")?;
+    let mut client = connect(args)?;
+    let mut params = Json::obj(vec![]);
+    for flag in ["user", "alloc", "fpga", "core", "name"] {
+        if let Some(v) = args.get(flag) {
+            params.set(flag, Json::from(v));
+        }
+    }
+    if let Some(m) = args.get("mults") {
+        params.set(
+            "mults",
+            Json::from(m.parse::<u64>().map_err(|e| e.to_string())?),
+        );
+    }
+    let body = client.call(method, params)?;
+    println!("{}", body.to_pretty());
+    Ok(())
+}
+
+/// In-process demo: the full RAaaS path without a server.
+fn cmd_demo(args: &Args) -> Result<(), String> {
+    let config = load_config(args)?;
+    let clock = VirtualClock::new();
+    eprintln!("booting in-process cloud...");
+    let hv = Arc::new(
+        Hypervisor::boot(&config, clock, PlacementPolicy::ConsolidateFirst)
+            .map_err(|e| e.to_string())?,
+    );
+    let svc = rc3e::service::RaaasService::new(Arc::clone(&hv));
+    let user = hv.add_user("demo");
+    let (alloc, vfpga) = svc.alloc(user).map_err(|e| e.to_string())?;
+    eprintln!("allocated {vfpga} (lease {alloc})");
+    let synth = rc3e::hls::Synthesizer::new();
+    let spec = rc3e::hls::CoreSpec::matmul(16, "xc7vx485t");
+    let report = synth.synthesize(&spec);
+    let bitfile = rc3e::bitstream::BitstreamBuilder::partial(
+        "xc7vx485t",
+        "matmul16",
+    )
+    .resources(report.total_for(1))
+    .frames(rc3e::hls::flow::region_window(0, 1))
+    .artifact("matmul16_b256")
+    .build();
+    svc.program(alloc, user, &bitfile)
+        .map_err(|e| e.to_string())?;
+    eprintln!("programmed matmul16 (PR done)");
+    let mults = args.get_u64("mults", 20_000).map_err(|e| e.to_string())?;
+    let out = svc
+        .stream(alloc, user, &rc3e::rc2f::StreamConfig::matmul16(mults))
+        .map_err(|e| e.to_string())?;
+    println!(
+        "streamed {} mults: modeled {:.3} s ({:.0} MB/s), wall {:.3} s \
+         ({:.0} MB/s), checksum {:.3e}, validation failures {}",
+        out.mults,
+        out.virtual_stream.as_secs_f64(),
+        out.virtual_mbps(),
+        out.wall_secs,
+        out.wall_mbps(),
+        out.checksum,
+        out.validation_failures
+    );
+    svc.release(alloc).map_err(|e| e.to_string())?;
+    eprintln!("released {vfpga}");
+    Ok(())
+}

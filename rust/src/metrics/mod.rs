@@ -1,0 +1,255 @@
+//! Metrics: counters, histograms and throughput meters.
+//!
+//! The hypervisor monitors FPGA resources (Section IV: "resource
+//! management and monitoring of FPGA resources"); this module is the
+//! store those monitors write into and the benches read out of.
+//! Counters are lock-free atomics so the streaming hot path never
+//! takes a lock to record progress.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A lock-free monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-boundary latency histogram (microsecond buckets, powers of 2
+/// from 1 µs to ~17 s). Lock-free recording.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    const BUCKETS: usize = 25;
+
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        ((64 - us.max(1).leading_zeros()) as usize).min(Self::BUCKETS - 1)
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn record_secs(&self, s: f64) {
+        self.record_us((s * 1e6) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        self.max_us()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Named metrics registry (one per node / per hypervisor).
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Counter::new()))
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Render all metrics as a report (CLI `rc3e stats`).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name} = {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name}: n={} mean={:.1}us p50<={}us p99<={}us max={}us\n",
+                h.count(),
+                h.mean_us(),
+                h.quantile_us(0.5),
+                h.quantile_us(0.99),
+                h.max_us()
+            ));
+        }
+        out
+    }
+}
+
+/// Throughput meter: bytes over a time window.
+#[derive(Debug, Default)]
+pub struct Throughput {
+    bytes: AtomicU64,
+}
+
+impl Throughput {
+    pub fn new() -> Throughput {
+        Throughput::default()
+    }
+    pub fn add_bytes(&self, n: u64) {
+        self.bytes.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+    /// MB/s given an elapsed wall/virtual duration in seconds.
+    pub fn mbps(&self, secs: f64) -> f64 {
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.bytes() as f64 / 1e6 / secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::new();
+        for us in [100, 200, 400, 800] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_us() - 375.0).abs() < 1e-9);
+        assert_eq!(h.max_us(), 800);
+        assert!(h.quantile_us(0.5) >= 200);
+        assert!(h.quantile_us(1.0) >= 800);
+    }
+
+    #[test]
+    fn histogram_bucket_monotone() {
+        assert!(Histogram::bucket_of(1) < Histogram::bucket_of(1000));
+        assert!(
+            Histogram::bucket_of(1000) < Histogram::bucket_of(1_000_000)
+        );
+        // Saturates at the top bucket.
+        assert_eq!(Histogram::bucket_of(u64::MAX), Histogram::BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_record_secs() {
+        let h = Histogram::new();
+        h.record_secs(0.001);
+        assert_eq!(h.count(), 1);
+        assert!((h.mean_us() - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn registry_reuses_instruments() {
+        let r = Registry::new();
+        r.counter("allocs").inc();
+        r.counter("allocs").inc();
+        assert_eq!(r.counter("allocs").get(), 2);
+        r.histogram("lat").record_us(5);
+        let report = r.report();
+        assert!(report.contains("allocs = 2"));
+        assert!(report.contains("lat: n=1"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput::new();
+        t.add_bytes(200_000_000);
+        assert!((t.mbps(2.0) - 100.0).abs() < 1e-9);
+        assert_eq!(t.mbps(0.0), 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

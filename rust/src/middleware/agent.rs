@@ -1,0 +1,214 @@
+//! Node agent: the per-FPGA-node daemon.
+//!
+//! Runs on every node that hosts boards; the management server routes
+//! device-local operations (status queries, in a full deployment also
+//! configuration writes) through the agent over TCP — the paper's
+//! management-node → node hop over Gigabit Ethernet.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::proto::{read_frame, write_frame, Request, Response};
+use crate::hypervisor::Hypervisor;
+use crate::util::ids::{FpgaId, NodeId};
+use crate::util::json::Json;
+
+/// A running node agent (owns its listener thread).
+pub struct NodeAgent {
+    pub node: NodeId,
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NodeAgent {
+    /// Spawn an agent for `node`, serving device ops from the shared
+    /// hypervisor state (the process model is simulated; the wire is
+    /// real TCP on loopback).
+    pub fn spawn(
+        hv: Arc<Hypervisor>,
+        node: NodeId,
+        fail_plan: Option<Arc<crate::testing::FailPlan>>,
+    ) -> std::io::Result<NodeAgent> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let hv = Arc::clone(&hv);
+                let plan = fail_plan.clone();
+                std::thread::spawn(move || {
+                    let _ = serve_conn(stream, hv, node, plan);
+                });
+            }
+        });
+        Ok(NodeAgent {
+            node,
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting (kicks the listener with a dummy connection).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NodeAgent {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(
+    mut stream: TcpStream,
+    hv: Arc<Hypervisor>,
+    node: NodeId,
+    plan: Option<Arc<crate::testing::FailPlan>>,
+) -> std::io::Result<()> {
+    while let Some(frame) = read_frame(&mut stream)? {
+        if let Some(p) = &plan {
+            if p.should_fail("agent.drop_conn") {
+                // Simulated agent crash mid-request.
+                stream.flush()?;
+                return Ok(());
+            }
+        }
+        let resp = match Request::from_json(&frame) {
+            Err(e) => Response::error(&e),
+            Ok(req) => dispatch(&hv, node, &req),
+        };
+        write_frame(&mut stream, &resp.to_json())?;
+    }
+    Ok(())
+}
+
+fn dispatch(hv: &Hypervisor, node: NodeId, req: &Request) -> Response {
+    match req.method.as_str() {
+        "agent.hello" => Response::success(Json::obj(vec![
+            ("node", Json::from(node.to_string())),
+            ("version", Json::from(crate::VERSION)),
+        ])),
+        "agent.status" => {
+            let Ok(fpga_str) = req.params.str_field("fpga") else {
+                return Response::error("missing fpga");
+            };
+            let Some(fpga) = FpgaId::parse(fpga_str) else {
+                return Response::error("bad fpga id");
+            };
+            // The agent performs the *local* status call (Table I's
+            // 11 ms path); the management server adds the RPC charge.
+            match hv.status_local(fpga) {
+                Ok(st) => Response::success(Json::obj(vec![
+                    ("fpga", Json::from(st.fpga.to_string())),
+                    ("board", Json::from(st.board)),
+                    (
+                        "static_design",
+                        st.static_design
+                            .map(Json::from)
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("regions_total", Json::from(st.regions_total)),
+                    (
+                        "regions_configured",
+                        Json::from(st.regions_configured),
+                    ),
+                    ("regions_clocked", Json::from(st.regions_clocked)),
+                    ("power_w", Json::from(st.power_w)),
+                ])),
+                Err(e) => Response::error(&e.to_string()),
+            }
+        }
+        m => Response::error(&format!("agent: unknown method '{m}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::middleware::client::Client;
+    use crate::util::clock::VirtualClock;
+
+    fn hv() -> Arc<Hypervisor> {
+        Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap())
+    }
+
+    #[test]
+    fn agent_serves_status_over_tcp() {
+        let hv = hv();
+        let agent = NodeAgent::spawn(Arc::clone(&hv), NodeId(0), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        let body = client
+            .call(
+                "agent.status",
+                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
+            )
+            .unwrap();
+        assert_eq!(body.get("regions_total").as_u64(), Some(4));
+        assert_eq!(body.get("board").as_str(), Some("vc707"));
+    }
+
+    #[test]
+    fn agent_hello_reports_node() {
+        let hv = hv();
+        let agent =
+            NodeAgent::spawn(Arc::clone(&hv), NodeId(1), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        let body = client.call("agent.hello", Json::obj(vec![])).unwrap();
+        assert_eq!(body.get("node").as_str(), Some("node-1"));
+    }
+
+    #[test]
+    fn unknown_method_is_error() {
+        let hv = hv();
+        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        assert!(client.call("agent.reboot", Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn bad_fpga_id_is_error_not_crash() {
+        let hv = hv();
+        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        assert!(client
+            .call(
+                "agent.status",
+                Json::obj(vec![("fpga", Json::from("fpga-99"))])
+            )
+            .is_err());
+        // Connection still usable after the error.
+        assert!(client.call("agent.hello", Json::obj(vec![])).is_ok());
+    }
+
+    #[test]
+    fn injected_connection_drop_surfaces_as_io_error() {
+        let hv = hv();
+        let plan = crate::testing::FailPlan::new();
+        plan.arm("agent.drop_conn", crate::testing::FailPoint::OnHit(1));
+        let agent = NodeAgent::spawn(hv, NodeId(0), Some(plan)).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        let err = client.call("agent.hello", Json::obj(vec![])).unwrap_err();
+        assert!(err.contains("io") || err.contains("eof"), "{err}");
+        // Reconnect works (the node came back).
+        let mut c2 = Client::connect(agent.addr()).unwrap();
+        assert!(c2.call("agent.hello", Json::obj(vec![])).is_ok());
+    }
+}

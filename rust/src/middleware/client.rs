@@ -1,0 +1,109 @@
+//! Middleware client library (used by the CLI and by the management
+//! server when it talks to node agents).
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use super::proto::{read_frame, write_frame, Request, Response};
+use crate::util::json::Json;
+
+/// A connected middleware client.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client, String> {
+        let stream = TcpStream::connect_timeout(
+            &addr,
+            Duration::from_secs(5),
+        )
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .map_err(|e| e.to_string())?;
+        Ok(Client { stream })
+    }
+
+    /// One round trip. Errors are strings: either transport ("io: …")
+    /// or application (the server's error body).
+    pub fn call(&mut self, method: &str, params: Json) -> Result<Json, String> {
+        let req = Request::new(method, params);
+        write_frame(&mut self.stream, &req.to_json())
+            .map_err(|e| format!("io: {e}"))?;
+        let frame = read_frame(&mut self.stream)
+            .map_err(|e| format!("io: {e}"))?
+            .ok_or_else(|| "io: eof (server closed connection)".to_string())?;
+        Response::from_json(&frame)?.into_result()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Minimal echo server for client-side tests.
+    fn echo_server() -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { continue };
+                std::thread::spawn(move || {
+                    while let Ok(Some(frame)) = read_frame(&mut stream) {
+                        let req = Request::from_json(&frame).unwrap();
+                        let resp = if req.method == "fail" {
+                            Response::error("requested failure")
+                        } else {
+                            Response::success(req.params)
+                        };
+                        if write_frame(&mut stream, &resp.to_json()).is_err()
+                        {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn call_roundtrips_params() {
+        let addr = echo_server();
+        let mut c = Client::connect(addr).unwrap();
+        let params = Json::obj(vec![("x", Json::from(7u64))]);
+        let body = c.call("echo", params.clone()).unwrap();
+        assert_eq!(body, params);
+    }
+
+    #[test]
+    fn application_errors_surface() {
+        let addr = echo_server();
+        let mut c = Client::connect(addr).unwrap();
+        assert_eq!(
+            c.call("fail", Json::obj(vec![])),
+            Err("requested failure".to_string())
+        );
+    }
+
+    #[test]
+    fn connect_refused_is_error() {
+        // Port 1 on loopback is almost certainly closed.
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        assert!(Client::connect(addr).is_err());
+    }
+
+    #[test]
+    fn sequential_calls_reuse_connection() {
+        let addr = echo_server();
+        let mut c = Client::connect(addr).unwrap();
+        for i in 0..5u64 {
+            let body = c
+                .call("echo", Json::obj(vec![("i", Json::from(i))]))
+                .unwrap();
+            assert_eq!(body.get("i").as_u64(), Some(i));
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! The RC3E middleware: RPC protocol, management-node server, node
+//! agents and the client library the CLI uses.
+//!
+//! Section IV-C: "The RC3E hypervisor is running on the management
+//! node and can access each FPGA node. Users can access the cloud
+//! services directly through a middleware with a command line
+//! interface on the management node."
+//!
+//! Topology: one [`server::ManagementServer`] (the management node)
+//! fronting the hypervisor, plus one [`agent::NodeAgent`] per FPGA
+//! node. Device-local operations (status) are routed management →
+//! agent over a second TCP hop, mirroring the paper's
+//! node-over-Gigabit-Ethernet structure; Table I's finding — the
+//! RC3E overhead dominates and local vs remote node makes no
+//! difference — reproduces because the dominant charge is the
+//! middleware's virtual RPC overhead, not the wire.
+//!
+//! Wire format: 4-byte little-endian length + JSON
+//! (`{"method": ..., "params": {...}}` / `{"ok": ..., ...}`).
+
+pub mod agent;
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use agent::NodeAgent;
+pub use client::Client;
+pub use proto::{read_frame, write_frame, Request, Response};
+pub use server::ManagementServer;

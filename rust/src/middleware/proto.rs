@@ -1,0 +1,185 @@
+//! Length-prefixed JSON framing + request/response envelopes.
+
+use std::io::{Read, Write};
+
+use crate::util::json::Json;
+
+/// Max frame we accept (a full bitstream upload fits comfortably).
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// An RPC request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub method: String,
+    pub params: Json,
+}
+
+impl Request {
+    pub fn new(method: &str, params: Json) -> Request {
+        Request {
+            method: method.to_string(),
+            params,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::from(self.method.as_str())),
+            ("params", self.params.clone()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Request, String> {
+        Ok(Request {
+            method: v.str_field("method")?.to_string(),
+            params: v.get("params").clone(),
+        })
+    }
+}
+
+/// An RPC response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub ok: bool,
+    pub body: Json,
+}
+
+impl Response {
+    pub fn success(body: Json) -> Response {
+        Response { ok: true, body }
+    }
+
+    pub fn error(msg: &str) -> Response {
+        Response {
+            ok: false,
+            body: Json::from(msg),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::from(self.ok)),
+            ("body", self.body.clone()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Response, String> {
+        Ok(Response {
+            ok: v
+                .get("ok")
+                .as_bool()
+                .ok_or("response missing 'ok'")?,
+            body: v.get("body").clone(),
+        })
+    }
+
+    /// Unwrap into Result for client ergonomics.
+    pub fn into_result(self) -> Result<Json, String> {
+        if self.ok {
+            Ok(self.body)
+        } else {
+            Err(self
+                .body
+                .as_str()
+                .unwrap_or("unknown error")
+                .to_string())
+        }
+    }
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, v: &Json) -> std::io::Result<()> {
+    let text = v.to_string();
+    let len = text.len() as u32;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(text.as_bytes())?;
+    w.flush()
+}
+
+/// Read one frame; `Ok(None)` on clean EOF before the header.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Ok(None)
+        }
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds limit"),
+        ));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    let text = String::from_utf8(buf).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "bad utf-8")
+    })?;
+    Json::parse(&text)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let v = Request::new(
+            "alloc_vfpga",
+            Json::obj(vec![("user", Json::from("user-3"))]),
+        )
+        .to_json();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let back = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(back, v);
+        // EOF afterwards.
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn request_envelope_roundtrip() {
+        let req = Request::new("status", Json::obj(vec![]));
+        let back = Request::from_json(&req.to_json()).unwrap();
+        assert_eq!(back, req);
+        assert!(Request::from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn response_into_result() {
+        assert_eq!(
+            Response::success(Json::from(5u64)).into_result(),
+            Ok(Json::Num(5.0))
+        );
+        assert_eq!(
+            Response::error("nope").into_result(),
+            Err("nope".to_string())
+        );
+        let rt =
+            Response::from_json(&Response::error("e").to_json()).unwrap();
+        assert!(!rt.ok);
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.extend_from_slice(b"abc"); // claims 10, has 3
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

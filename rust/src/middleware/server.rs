@@ -1,0 +1,646 @@
+//! The management-node server: the middleware entry point users talk
+//! to (the CLI connects here).
+//!
+//! Every incoming request charges the cluster's RPC overhead to the
+//! virtual clock (Table I: the RC3E hop turns an 11 ms local status
+//! call into 80 ms) and then dispatches into the hypervisor. Device
+//! status is routed through the owning node's [`super::NodeAgent`]
+//! when one is registered — the management→node Ethernet hop.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::client::Client;
+use super::proto::{read_frame, write_frame, Request, Response};
+use crate::bitstream::Bitstream;
+use crate::config::ServiceModel;
+use crate::hls::synth::{CoreKind, CoreSpec, Synthesizer};
+use crate::hypervisor::Hypervisor;
+use crate::rc2f::stream::StreamConfig;
+use crate::util::clock::VirtualTime;
+use crate::util::ids::{AllocationId, FpgaId, NodeId, UserId};
+use crate::util::json::Json;
+
+/// The management server (owns its accept thread).
+pub struct ManagementServer {
+    inner: Arc<ServerInner>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+struct ServerInner {
+    hv: Arc<Hypervisor>,
+    rpc_overhead_ms: f64,
+    /// Prebuilt relocatable user-core bitfiles ("the user uploads a
+    /// bitfile" — kept server-side so the CLI can reference cores by
+    /// name).
+    cores: BTreeMap<String, Bitstream>,
+    /// node → agent address for routed device ops.
+    agents: Mutex<BTreeMap<NodeId, SocketAddr>>,
+}
+
+impl ManagementServer {
+    /// Spawn on an ephemeral loopback port.
+    pub fn spawn(
+        hv: Arc<Hypervisor>,
+        rpc_overhead_ms: f64,
+    ) -> std::io::Result<ManagementServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let inner = Arc::new(ServerInner {
+            hv,
+            rpc_overhead_ms,
+            cores: build_core_library(),
+            agents: Mutex::new(BTreeMap::new()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let inner2 = Arc::clone(&inner);
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let inner = Arc::clone(&inner2);
+                std::thread::spawn(move || {
+                    let _ = serve_conn(stream, inner);
+                });
+            }
+        });
+        Ok(ManagementServer {
+            inner,
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Register a node agent for routed status calls.
+    pub fn register_agent(&self, node: NodeId, addr: SocketAddr) {
+        self.inner.agents.lock().unwrap().insert(node, addr);
+    }
+
+    /// Names of the prebuilt user cores the server can program.
+    pub fn core_names(&self) -> Vec<String> {
+        self.inner.cores.keys().cloned().collect()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ManagementServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Build the server's core library: one relocatable bitfile per known
+/// core (synth report resources, slot-0 frames — retargeted at
+/// program time).
+fn build_core_library() -> BTreeMap<String, Bitstream> {
+    let synth = Synthesizer::new();
+    let mut lib = BTreeMap::new();
+    let entries: Vec<(&str, CoreKind, usize)> = vec![
+        ("matmul16", CoreKind::MatMul { n: 16 }, 256),
+        ("matmul16_small", CoreKind::MatMul { n: 16 }, 64),
+        ("matmul32", CoreKind::MatMul { n: 32 }, 64),
+        ("loopback", CoreKind::Loopback, 256),
+        ("saxpy", CoreKind::Saxpy, 256),
+        ("checksum", CoreKind::Checksum, 256),
+    ];
+    for (name, kind, batch) in entries {
+        let spec = CoreSpec::named(kind, "xc7vx485t");
+        let report = synth.synthesize(&spec);
+        let total = report.total_for(1);
+        let mut b = crate::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            &kind.name(),
+        )
+        .resources(total)
+        .frames(crate::hls::flow::region_window(0, 1));
+        if let Some(a) = spec.artifact(batch) {
+            b = b.artifact(&a);
+        }
+        lib.insert(name.to_string(), b.build());
+    }
+    lib
+}
+
+fn serve_conn(
+    mut stream: TcpStream,
+    inner: Arc<ServerInner>,
+) -> std::io::Result<()> {
+    while let Some(frame) = read_frame(&mut stream)? {
+        let resp = match Request::from_json(&frame) {
+            Err(e) => Response::error(&e),
+            Ok(req) => {
+                // The RC3E middleware hop (Table I's +69 ms).
+                inner.hv.clock.advance(VirtualTime::from_millis_f64(
+                    inner.rpc_overhead_ms,
+                ));
+                dispatch(&inner, &req)
+                    .unwrap_or_else(|e| Response::error(&e))
+            }
+        };
+        write_frame(&mut stream, &resp.to_json())?;
+    }
+    Ok(())
+}
+
+fn parse_user(params: &Json) -> Result<UserId, String> {
+    UserId::parse(params.str_field("user")?)
+        .ok_or_else(|| "bad user id".to_string())
+}
+
+fn parse_alloc(params: &Json) -> Result<AllocationId, String> {
+    AllocationId::parse(params.str_field("alloc")?)
+        .ok_or_else(|| "bad alloc id".to_string())
+}
+
+fn stream_config_for(
+    core: &str,
+    mults: u64,
+) -> Result<StreamConfig, String> {
+    match core {
+        "matmul16" => Ok(StreamConfig::matmul16(mults)),
+        "matmul32" => Ok(StreamConfig::matmul32(mults)),
+        c => Err(format!("no stream profile for core '{c}'")),
+    }
+}
+
+fn outcome_json(out: &crate::rc2f::stream::StreamOutcome) -> Json {
+    Json::obj(vec![
+        ("artifact", Json::from(out.artifact.as_str())),
+        ("mults", Json::from(out.mults)),
+        ("input_bytes", Json::from(out.input_bytes)),
+        ("output_bytes", Json::from(out.output_bytes)),
+        (
+            "virtual_stream_s",
+            Json::from(out.virtual_stream.as_secs_f64()),
+        ),
+        (
+            "virtual_total_s",
+            Json::from(out.virtual_total.as_secs_f64()),
+        ),
+        ("virtual_mbps", Json::from(out.virtual_mbps())),
+        ("wall_s", Json::from(out.wall_secs)),
+        ("wall_mbps", Json::from(out.wall_mbps())),
+        ("checksum", Json::from(out.checksum)),
+        (
+            "validation_failures",
+            Json::from(out.validation_failures),
+        ),
+    ])
+}
+
+fn dispatch(inner: &ServerInner, req: &Request) -> Result<Response, String> {
+    let hv = &inner.hv;
+    let p = &req.params;
+    let ok = |j: Json| Ok(Response::success(j));
+    match req.method.as_str() {
+        "hello" => ok(Json::obj(vec![
+            ("version", Json::from(crate::VERSION)),
+            ("service", Json::from("rc3e-management")),
+        ])),
+        "add_user" => {
+            let name = p.str_field("name")?;
+            let id = hv.add_user(name);
+            ok(Json::obj(vec![("user", Json::from(id.to_string()))]))
+        }
+        "status" => {
+            let fpga = FpgaId::parse(p.str_field("fpga")?)
+                .ok_or("bad fpga id")?;
+            // Route via the owning node's agent when registered.
+            let node = hv
+                .device(fpga)
+                .map_err(|e| e.to_string())?
+                .node;
+            let agent_addr =
+                inner.agents.lock().unwrap().get(&node).copied();
+            if let Some(addr) = agent_addr {
+                let mut agent = Client::connect(addr)?;
+                let body = agent.call(
+                    "agent.status",
+                    Json::obj(vec![(
+                        "fpga",
+                        Json::from(fpga.to_string()),
+                    )]),
+                )?;
+                return Ok(Response::success(body));
+            }
+            let st = hv.status_local(fpga).map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![
+                ("fpga", Json::from(st.fpga.to_string())),
+                ("board", Json::from(st.board)),
+                ("regions_total", Json::from(st.regions_total)),
+                (
+                    "regions_configured",
+                    Json::from(st.regions_configured),
+                ),
+                ("regions_clocked", Json::from(st.regions_clocked)),
+                ("power_w", Json::from(st.power_w)),
+            ]))
+        }
+        "alloc_vfpga" => {
+            let user = parse_user(p)?;
+            let model = p
+                .get("model")
+                .as_str()
+                .and_then(ServiceModel::parse)
+                .unwrap_or(ServiceModel::RAaaS);
+            let (alloc, vfpga, fpga, node) = hv
+                .alloc_vfpga(user, model)
+                .map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![
+                ("alloc", Json::from(alloc.to_string())),
+                ("vfpga", Json::from(vfpga.to_string())),
+                ("fpga", Json::from(fpga.to_string())),
+                ("node", Json::from(node.to_string())),
+            ]))
+        }
+        "alloc_physical" => {
+            let user = parse_user(p)?;
+            let (alloc, fpga, node) = hv
+                .alloc_physical(user, None)
+                .map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![
+                ("alloc", Json::from(alloc.to_string())),
+                ("fpga", Json::from(fpga.to_string())),
+                ("node", Json::from(node.to_string())),
+            ]))
+        }
+        "release" => {
+            let alloc = parse_alloc(p)?;
+            hv.release(alloc).map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![("released", Json::from(true))]))
+        }
+        "program_core" => {
+            let user = parse_user(p)?;
+            let alloc = parse_alloc(p)?;
+            let core = p.str_field("core")?;
+            let bitfile = inner
+                .cores
+                .get(core)
+                .ok_or_else(|| format!("unknown core '{core}'"))?;
+            let vfpga = hv
+                .check_vfpga_lease(alloc, user)
+                .map_err(|e| e.to_string())?;
+            let (slot, quarters) = {
+                let db = hv.db.lock().unwrap();
+                let fpga = db
+                    .device_of_vfpga(vfpga)
+                    .ok_or("vfpga has no device")?
+                    .id;
+                drop(db);
+                let dev = hv.device(fpga).map_err(|e| e.to_string())?;
+                let slot = dev.slot_of[&vfpga];
+                let q = dev
+                    .fpga
+                    .lock()
+                    .unwrap()
+                    .region(vfpga)
+                    .map_err(|e| e.to_string())?
+                    .shape
+                    .quarters();
+                (slot, q)
+            };
+            let placed = crate::hls::flow::DesignFlow::retarget(
+                bitfile, slot, quarters,
+            );
+            let d = hv
+                .program_vfpga(alloc, user, &placed)
+                .map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![
+                ("programmed", Json::from(core)),
+                ("pr_ms", Json::from(d.as_millis_f64())),
+            ]))
+        }
+        "stream" => {
+            let user = parse_user(p)?;
+            let alloc = parse_alloc(p)?;
+            let core = p.str_field("core")?;
+            let mults = p.u64_field("mults")?;
+            let cfg = stream_config_for(core, mults)?;
+            let svc = crate::service::RaaasService::new(Arc::clone(hv));
+            let out = svc
+                .stream(alloc, user, &cfg)
+                .map_err(|e| e.to_string())?;
+            ok(outcome_json(&out))
+        }
+        "program_full" => {
+            // RSaaS: write a full user bitstream to an exclusively
+            // held device (server builds the synthetic image; a real
+            // deployment would receive an upload).
+            let user = parse_user(p)?;
+            let alloc = parse_alloc(p)?;
+            let name = p.get("name").as_str().unwrap_or("user_design");
+            let part = {
+                let db = hv.db.lock().unwrap();
+                let fpga = db
+                    .allocations
+                    .get(&alloc)
+                    .and_then(|a| match a.kind {
+                        crate::hypervisor::AllocKind::Physical(f)
+                        | crate::hypervisor::AllocKind::Vm(_, f) => Some(f),
+                        _ => None,
+                    })
+                    .ok_or("allocation is not physical")?;
+                drop(db);
+                hv.device(fpga).map_err(|e| e.to_string())?.fpga
+                    .lock()
+                    .unwrap()
+                    .board
+                    .part
+            };
+            let bs = crate::bitstream::BitstreamBuilder::full(part, name)
+                .build();
+            let d = hv
+                .program_full(alloc, user, &bs)
+                .map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![
+                ("programmed", Json::from(name)),
+                ("config_s", Json::from(d.as_secs_f64())),
+            ]))
+        }
+        "migrate" => {
+            let user = parse_user(p)?;
+            let alloc = parse_alloc(p)?;
+            let report = hv
+                .migrate_vfpga(alloc, user, None)
+                .map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![
+                ("from", Json::from(report.from.to_string())),
+                ("to", Json::from(report.to.to_string())),
+                (
+                    "cross_device",
+                    Json::from(report.moved_across_devices),
+                ),
+                (
+                    "downtime_ms",
+                    Json::from(report.downtime.as_millis_f64()),
+                ),
+            ]))
+        }
+        "services" => ok(Json::Arr(
+            hv.service_names().into_iter().map(Json::from).collect(),
+        )),
+        "invoke_service" => {
+            let user = parse_user(p)?;
+            let service = p.str_field("service")?;
+            let mults = p.u64_field("mults")?;
+            let core = if service.contains("32") {
+                "matmul32"
+            } else {
+                "matmul16"
+            };
+            let cfg = stream_config_for(core, mults)?;
+            let svc = crate::service::BaaasService::new(Arc::clone(hv));
+            let out = svc
+                .invoke(user, service, &cfg)
+                .map_err(|e| e.to_string())?;
+            ok(outcome_json(&out))
+        }
+        "monitor" => {
+            // One monitoring sweep over every device + report.
+            let mut mon = crate::hypervisor::Monitor::new();
+            mon.sample_all(hv);
+            let report = mon.to_json();
+            ok(Json::obj(vec![
+                ("devices", report),
+                (
+                    "cloud_utilization",
+                    Json::from(mon.cloud_utilization()),
+                ),
+            ]))
+        }
+        "workload" => {
+            // Run a synthetic session workload (operator tooling /
+            // capacity planning). Params: sessions, rate, hold_s.
+            let w = crate::hypervisor::CloudWorkload {
+                arrival_rate: p.get("rate").as_f64().unwrap_or(0.05),
+                mean_hold_s: p.get("hold_s").as_f64().unwrap_or(120.0),
+                sessions: p.get("sessions").as_u64().unwrap_or(40) as usize,
+                seed: p.get("seed").as_u64().unwrap_or(0x10AD),
+            };
+            let report = crate::hypervisor::workload::run(hv, &w)
+                .map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![
+                ("served", Json::from(report.served)),
+                ("rejected", Json::from(report.rejected)),
+                (
+                    "admission_rate",
+                    Json::from(report.admission_rate()),
+                ),
+                (
+                    "mean_setup_ms",
+                    Json::from(report.mean_setup_ms),
+                ),
+                (
+                    "mean_utilization",
+                    Json::from(report.mean_utilization),
+                ),
+                (
+                    "makespan_s",
+                    Json::from(report.makespan.as_secs_f64()),
+                ),
+                ("energy_j", Json::from(report.energy_j)),
+            ]))
+        }
+        "energy" => ok(Json::obj(vec![
+            ("joules", Json::from(hv.total_energy_joules())),
+            ("power_w", Json::from(hv.total_power_w())),
+        ])),
+        "db_dump" => ok(hv.db.lock().unwrap().to_json()),
+        "cores" => ok(Json::Arr(
+            inner.cores.keys().cloned().map(Json::from).collect(),
+        )),
+        m => Err(format!("unknown method '{m}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    fn setup() -> (ManagementServer, Client, Arc<Hypervisor>) {
+        let hv = Arc::new(
+            Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+        );
+        let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+        let client = Client::connect(server.addr()).unwrap();
+        (server, client, hv)
+    }
+
+    #[test]
+    fn hello_and_cores() {
+        let (_s, mut c, _hv) = setup();
+        let body = c.call("hello", Json::obj(vec![])).unwrap();
+        assert_eq!(body.get("version").as_str(), Some(crate::VERSION));
+        let cores = c.call("cores", Json::obj(vec![])).unwrap();
+        assert!(cores
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|c| c.as_str() == Some("matmul16")));
+    }
+
+    #[test]
+    fn status_over_rc3e_costs_80ms() {
+        let (_s, mut c, hv) = setup();
+        let t0 = hv.clock.now();
+        let body = c
+            .call(
+                "status",
+                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
+            )
+            .unwrap();
+        let ms = hv.clock.since(t0).as_millis_f64();
+        assert!(
+            (ms - crate::paper::STATUS_RC3E_MS).abs() < 0.5,
+            "status over RC3E took {ms} ms"
+        );
+        assert_eq!(body.get("regions_total").as_u64(), Some(4));
+    }
+
+    #[test]
+    fn status_routes_through_registered_agent() {
+        let (s, mut c, hv) = setup();
+        let agent = super::super::agent::NodeAgent::spawn(
+            Arc::clone(&hv),
+            NodeId(0),
+            None,
+        )
+        .unwrap();
+        s.register_agent(NodeId(0), agent.addr());
+        let t0 = hv.clock.now();
+        let body = c
+            .call(
+                "status",
+                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
+            )
+            .unwrap();
+        assert_eq!(body.get("board").as_str(), Some("vc707"));
+        // Same virtual cost as the unrouted path (Table I: local vs
+        // remote node over RC3E are both 80 ms).
+        let ms = hv.clock.since(t0).as_millis_f64();
+        assert!((ms - 80.0).abs() < 0.5, "{ms}");
+    }
+
+    #[test]
+    fn full_lease_cycle_over_rpc() {
+        let (_s, mut c, _hv) = setup();
+        let user = c
+            .call("add_user", Json::obj(vec![("name", Json::from("cli"))]))
+            .unwrap()
+            .get("user")
+            .as_str()
+            .unwrap()
+            .to_string();
+        let lease = c
+            .call(
+                "alloc_vfpga",
+                Json::obj(vec![("user", Json::from(user.as_str()))]),
+            )
+            .unwrap();
+        let alloc = lease.get("alloc").as_str().unwrap().to_string();
+        let prog = c
+            .call(
+                "program_core",
+                Json::obj(vec![
+                    ("user", Json::from(user.as_str())),
+                    ("alloc", Json::from(alloc.as_str())),
+                    ("core", Json::from("matmul16")),
+                ]),
+            )
+            .unwrap();
+        // PR over RC3E ≈ 732 + 111 (orchestration); the RPC hop is
+        // charged before dispatch.
+        let pr_ms = prog.get("pr_ms").as_f64().unwrap();
+        assert!((pr_ms - 843.0).abs() < 1.0, "{pr_ms}");
+        c.call(
+            "release",
+            Json::obj(vec![("alloc", Json::from(alloc.as_str()))]),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn stream_over_rpc_returns_outcome() {
+        if !crate::runtime::artifact_dir().join("manifest.json").exists() {
+            return;
+        }
+        let (_s, mut c, _hv) = setup();
+        let user = c
+            .call("add_user", Json::obj(vec![("name", Json::from("u"))]))
+            .unwrap()
+            .get("user")
+            .as_str()
+            .unwrap()
+            .to_string();
+        let lease = c
+            .call(
+                "alloc_vfpga",
+                Json::obj(vec![("user", Json::from(user.as_str()))]),
+            )
+            .unwrap();
+        let alloc = lease.get("alloc").as_str().unwrap().to_string();
+        c.call(
+            "program_core",
+            Json::obj(vec![
+                ("user", Json::from(user.as_str())),
+                ("alloc", Json::from(alloc.as_str())),
+                ("core", Json::from("matmul16")),
+            ]),
+        )
+        .unwrap();
+        let out = c
+            .call(
+                "stream",
+                Json::obj(vec![
+                    ("user", Json::from(user.as_str())),
+                    ("alloc", Json::from(alloc.as_str())),
+                    ("core", Json::from("matmul16")),
+                    ("mults", Json::from(512u64)),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(out.get("validation_failures").as_u64(), Some(0));
+        assert!(out.get("virtual_mbps").as_f64().unwrap() > 400.0);
+    }
+
+    #[test]
+    fn errors_are_application_level() {
+        let (_s, mut c, _hv) = setup();
+        // Unknown method.
+        assert!(c.call("reboot_world", Json::obj(vec![])).is_err());
+        // Bad params.
+        assert!(c
+            .call("status", Json::obj(vec![("fpga", Json::from("x"))]))
+            .is_err());
+        // Connection survives both errors.
+        assert!(c.call("hello", Json::obj(vec![])).is_ok());
+    }
+
+    #[test]
+    fn db_dump_is_valid_json_db() {
+        let (_s, mut c, _hv) = setup();
+        let dump = c.call("db_dump", Json::obj(vec![])).unwrap();
+        let db = crate::hypervisor::DeviceDb::from_json(&dump).unwrap();
+        assert_eq!(db.devices.len(), 4);
+    }
+}

@@ -1,0 +1,276 @@
+//! Shared-bandwidth fluid model for the PCIe link.
+//!
+//! The paper's Table III behaviour: one 16×16 core is compute-bound
+//! at 509 MB/s; two cores share the 800 MB/s Xillybus link and drop
+//! to ~398 MB/s each; four cores to ~198 MB/s. The arbiter reproduces
+//! this with a processor-sharing model: every open stream gets an
+//! equal share of the effective link capacity *while it is active*.
+//!
+//! Time accounting is virtual (see [`crate::util::clock`]): a
+//! transfer of `bytes` with `n` streams active charges
+//! `bytes * n / cap` to the calling stream's timeline. Each stream
+//! owns a local cursor so concurrent cores accumulate *overlapping*
+//! time (the device clock advances to the max cursor, not the sum).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::util::clock::{VirtualClock, VirtualTime};
+
+/// Per-transfer protocol overhead (descriptor setup, interrupts) —
+/// calibrated so chunked streaming lands ~1-2 % below the raw cap,
+/// matching Table II's 798 MB/s observed vs 800 MB/s nominal.
+const PER_TRANSFER_OVERHEAD_US: f64 = 0.8;
+
+/// The shared link. One per physical FPGA board.
+#[derive(Debug)]
+pub struct BandwidthArbiter {
+    clock: Arc<VirtualClock>,
+    cap_mbps: f64,
+    active: AtomicUsize,
+    /// Total bytes moved (metrics).
+    bytes_total: AtomicUsize,
+}
+
+impl BandwidthArbiter {
+    pub fn new(clock: Arc<VirtualClock>, cap_mbps: f64) -> Arc<Self> {
+        Arc::new(BandwidthArbiter {
+            clock,
+            cap_mbps,
+            active: AtomicUsize::new(0),
+            bytes_total: AtomicUsize::new(0),
+        })
+    }
+
+    /// Number of currently-open streams.
+    pub fn active_streams(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Effective link capacity in MB/s.
+    pub fn cap_mbps(&self) -> f64 {
+        self.cap_mbps
+    }
+
+    /// Total bytes transferred through the link so far.
+    pub fn bytes_total(&self) -> usize {
+        self.bytes_total.load(Ordering::SeqCst)
+    }
+
+    /// Fair-share duration for `bytes` at an *explicit* stream count
+    /// (used by run_concurrent so the model is deterministic even
+    /// when wall-clock skew lets one stream outlive the others).
+    pub fn share_duration_for(&self, bytes: u64, n: usize) -> VirtualTime {
+        let n = n.max(1) as f64;
+        let share_mbps = self.cap_mbps / n;
+        VirtualTime::from_secs_f64(
+            bytes as f64 / (share_mbps * 1e6) + PER_TRANSFER_OVERHEAD_US * 1e-6,
+        )
+    }
+
+    /// Fair-share duration for `bytes` at the current stream count,
+    /// *without* charging it (used by the pipelined streaming path
+    /// that overlaps link transfer with core compute).
+    pub fn fair_share_duration(&self, bytes: u64) -> VirtualTime {
+        let n = self.active_streams().max(1) as f64;
+        let share_mbps = self.cap_mbps / n;
+        VirtualTime::from_secs_f64(
+            bytes as f64 / (share_mbps * 1e6) + PER_TRANSFER_OVERHEAD_US * 1e-6,
+        )
+    }
+
+    /// Record bytes moved without time accounting (pipelined path).
+    pub fn note_bytes(&self, bytes: u64) {
+        self.bytes_total.fetch_add(bytes as usize, Ordering::SeqCst);
+    }
+
+    /// Open a stream (e.g. one vFPGA's FIFO pair going active).
+    pub fn open_stream(self: &Arc<Self>) -> StreamHandle {
+        self.active.fetch_add(1, Ordering::SeqCst);
+        StreamHandle {
+            arbiter: Arc::clone(self),
+            cursor: self.clock.now(),
+            bytes: 0,
+        }
+    }
+}
+
+/// One active stream's view of the link.
+///
+/// Holds a local virtual-time cursor: transfers extend the cursor by
+/// the fair-share duration, and push the global clock with
+/// `advance_max` so overlapping streams overlap in time.
+#[derive(Debug)]
+pub struct StreamHandle {
+    arbiter: Arc<BandwidthArbiter>,
+    cursor: VirtualTime,
+    bytes: u64,
+}
+
+impl StreamHandle {
+    /// Transfer `bytes` through the link; returns the virtual duration
+    /// charged to *this stream*.
+    pub fn transfer(&mut self, bytes: u64) -> VirtualTime {
+        let n = self.arbiter.active_streams().max(1) as f64;
+        let share_mbps = self.arbiter.cap_mbps / n;
+        let secs = bytes as f64 / (share_mbps * 1e6)
+            + PER_TRANSFER_OVERHEAD_US * 1e-6;
+        let d = VirtualTime::from_secs_f64(secs);
+        self.arbiter.clock.advance_max(self.cursor, d);
+        self.cursor = self.cursor + d;
+        self.bytes += bytes;
+        self.arbiter
+            .bytes_total
+            .fetch_add(bytes as usize, Ordering::SeqCst);
+        d
+    }
+
+    /// Extend this stream's cursor by a non-link duration (e.g. the
+    /// core's compute time when it, not the link, is the bottleneck).
+    pub fn occupy(&mut self, d: VirtualTime) {
+        self.arbiter.clock.advance_max(self.cursor, d);
+        self.cursor = self.cursor + d;
+    }
+
+    /// This stream's local elapsed time since `start`.
+    pub fn elapsed_since(&self, start: VirtualTime) -> VirtualTime {
+        self.cursor.saturating_sub(start)
+    }
+
+    /// Current cursor position.
+    pub fn cursor(&self) -> VirtualTime {
+        self.cursor
+    }
+
+    /// Bytes this stream moved.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for StreamHandle {
+    fn drop(&mut self) {
+        self.arbiter.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arbiter() -> (Arc<BandwidthArbiter>, Arc<VirtualClock>) {
+        let clock = VirtualClock::new();
+        (
+            BandwidthArbiter::new(Arc::clone(&clock), 800.0),
+            clock,
+        )
+    }
+
+    #[test]
+    fn single_stream_gets_full_link() {
+        let (arb, _clock) = arbiter();
+        let mut s = arb.open_stream();
+        let start = s.cursor();
+        // 80 MB at 800 MB/s = 100 ms.
+        s.transfer(80_000_000);
+        let ms = s.elapsed_since(start).as_millis_f64();
+        assert!((ms - 100.0).abs() < 0.1, "ms {ms}");
+    }
+
+    #[test]
+    fn two_streams_halve_throughput() {
+        let (arb, _clock) = arbiter();
+        let mut a = arb.open_stream();
+        let mut b = arb.open_stream();
+        let start = a.cursor();
+        a.transfer(40_000_000);
+        b.transfer(40_000_000);
+        // 40 MB at 400 MB/s = 100 ms each.
+        let ms = a.elapsed_since(start).as_millis_f64();
+        assert!((ms - 100.0).abs() < 0.1, "ms {ms}");
+        let ms_b = b.elapsed_since(start).as_millis_f64();
+        assert!((ms_b - 100.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn overlapping_streams_overlap_in_device_time() {
+        let (arb, clock) = arbiter();
+        let mut a = arb.open_stream();
+        let mut b = arb.open_stream();
+        a.transfer(40_000_000);
+        b.transfer(40_000_000);
+        // Device clock is the max cursor (~100 ms), not the sum.
+        let ms = clock.now().as_millis_f64();
+        assert!(ms < 110.0, "device clock {ms} ms");
+    }
+
+    #[test]
+    fn closing_a_stream_restores_share() {
+        let (arb, _clock) = arbiter();
+        let mut a = arb.open_stream();
+        {
+            let _b = arb.open_stream();
+            assert_eq!(arb.active_streams(), 2);
+        }
+        assert_eq!(arb.active_streams(), 1);
+        let start = a.cursor();
+        a.transfer(80_000_000);
+        let ms = a.elapsed_since(start).as_millis_f64();
+        assert!((ms - 100.0).abs() < 0.1, "full share restored: {ms}");
+    }
+
+    #[test]
+    fn occupy_extends_cursor_without_link_use() {
+        let (arb, _clock) = arbiter();
+        let mut s = arb.open_stream();
+        let start = s.cursor();
+        s.occupy(VirtualTime::from_millis_f64(5.0));
+        assert!((s.elapsed_since(start).as_millis_f64() - 5.0).abs() < 1e-9);
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn chunked_transfer_hits_table2_798() {
+        // Table II: 798 MB/s observed for one vFPGA on the 800 MB/s
+        // link — chunking overhead accounts for the ~2 MB/s gap.
+        let (arb, _clock) = arbiter();
+        let mut s = arb.open_stream();
+        let start = s.cursor();
+        let chunk = 256 * 1024; // RC2F FIFO chunk
+        let total: u64 = 200_000_000;
+        for _ in 0..(total / chunk) {
+            s.transfer(chunk);
+        }
+        let secs = s.elapsed_since(start).as_secs_f64();
+        let mbps = total as f64 / 1e6 / secs;
+        assert!(
+            (mbps - crate::paper::FIFO_1V_MBPS).abs() < 3.0,
+            "measured {mbps} MB/s"
+        );
+    }
+
+    #[test]
+    fn four_streams_quarter_share() {
+        let (arb, _clock) = arbiter();
+        let mut streams: Vec<_> = (0..4).map(|_| arb.open_stream()).collect();
+        let start = streams[0].cursor();
+        for s in &mut streams {
+            s.transfer(20_000_000);
+        }
+        // 20 MB at 200 MB/s = 100 ms.
+        for s in &streams {
+            let ms = s.elapsed_since(start).as_millis_f64();
+            assert!((ms - 100.0).abs() < 0.2, "ms {ms}");
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let (arb, _clock) = arbiter();
+        let mut s = arb.open_stream();
+        s.transfer(1000);
+        s.transfer(234);
+        assert_eq!(s.bytes(), 1234);
+        assert_eq!(arb.bytes_total(), 1234);
+    }
+}

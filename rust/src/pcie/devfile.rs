@@ -1,0 +1,261 @@
+//! Per-FIFO / per-memory device files with access rights.
+//!
+//! Section IV-D2: "On the host the FPGA is accessible by PCIe drivers
+//! which provide separate device files for each FIFO and each memory.
+//! ... For security reasons the device files are protected by access
+//! rights. Because of this additional virtualization layer concurrent
+//! users can interact with their allocated devices without
+//! influencing each other."
+//!
+//! The registry is the host-side namespace: the hypervisor creates
+//! the files when a vFPGA is allocated (chowning them to the lease
+//! holder) and removes them on release. The RC2F host API opens files
+//! through the registry, which enforces ownership.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::ids::{UserId, VfpgaId};
+
+/// What a device file fronts on the FPGA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceFileKind {
+    /// Host→FPGA streaming FIFO.
+    FifoIn,
+    /// FPGA→host streaming FIFO.
+    FifoOut,
+    /// User configuration space (dual-port memory) of a vFPGA.
+    Ucs,
+    /// Global configuration space of the RC2F controller.
+    Gcs,
+}
+
+impl DeviceFileKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceFileKind::FifoIn => "fifo_in",
+            DeviceFileKind::FifoOut => "fifo_out",
+            DeviceFileKind::Ucs => "ucs",
+            DeviceFileKind::Gcs => "gcs",
+        }
+    }
+}
+
+/// One registered device file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceFile {
+    pub path: String,
+    pub kind: DeviceFileKind,
+    pub vfpga: Option<VfpgaId>,
+    /// Owner; None = root/hypervisor only.
+    pub owner: Option<UserId>,
+}
+
+/// Access-control errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DevFileError {
+    #[error("no such device file: {0}")]
+    NotFound(String),
+    #[error("permission denied: {path} is owned by {owner:?}")]
+    Denied {
+        path: String,
+        owner: Option<UserId>,
+    },
+    #[error("device file already exists: {0}")]
+    Exists(String),
+}
+
+/// Host-side device file namespace for one node.
+#[derive(Debug, Default)]
+pub struct DeviceFileRegistry {
+    files: Mutex<BTreeMap<String, DeviceFile>>,
+}
+
+impl DeviceFileRegistry {
+    pub fn new() -> DeviceFileRegistry {
+        DeviceFileRegistry::default()
+    }
+
+    /// Canonical path for a vFPGA-scoped file, mirroring the Xillybus
+    /// naming convention (`/dev/xillybus_<name>`).
+    pub fn vfpga_path(vfpga: VfpgaId, kind: DeviceFileKind, idx: usize) -> String {
+        format!("/dev/xillybus_{}_{}_{}", vfpga, kind.name(), idx)
+    }
+
+    /// Create the standard file set for an allocated vFPGA: one FIFO
+    /// pair + its ucs, owned by the lease holder.
+    pub fn create_vfpga_files(
+        &self,
+        vfpga: VfpgaId,
+        owner: UserId,
+    ) -> Result<Vec<String>, DevFileError> {
+        let specs = [
+            (DeviceFileKind::FifoIn, 0),
+            (DeviceFileKind::FifoOut, 0),
+            (DeviceFileKind::Ucs, 0),
+        ];
+        let mut created = Vec::new();
+        let mut files = self.files.lock().unwrap();
+        for (kind, idx) in specs {
+            let path = Self::vfpga_path(vfpga, kind, idx);
+            if files.contains_key(&path) {
+                return Err(DevFileError::Exists(path));
+            }
+            files.insert(
+                path.clone(),
+                DeviceFile {
+                    path: path.clone(),
+                    kind,
+                    vfpga: Some(vfpga),
+                    owner: Some(owner),
+                },
+            );
+            created.push(path);
+        }
+        Ok(created)
+    }
+
+    /// Register the node-global gcs file (hypervisor-owned).
+    pub fn create_gcs(&self, fpga: crate::util::ids::FpgaId) -> String {
+        let path = format!("/dev/xillybus_{fpga}_gcs");
+        self.files.lock().unwrap().insert(
+            path.clone(),
+            DeviceFile {
+                path: path.clone(),
+                kind: DeviceFileKind::Gcs,
+                vfpga: None,
+                owner: None,
+            },
+        );
+        path
+    }
+
+    /// Open with access check. `user = None` means the hypervisor.
+    pub fn open(
+        &self,
+        path: &str,
+        user: Option<UserId>,
+    ) -> Result<DeviceFile, DevFileError> {
+        let files = self.files.lock().unwrap();
+        let f = files
+            .get(path)
+            .ok_or_else(|| DevFileError::NotFound(path.to_string()))?;
+        let allowed = match (f.owner, user) {
+            (_, None) => true,               // hypervisor sees all
+            (None, Some(_)) => false,        // root-only file
+            (Some(o), Some(u)) => o == u,    // owner match
+        };
+        if !allowed {
+            return Err(DevFileError::Denied {
+                path: path.to_string(),
+                owner: f.owner,
+            });
+        }
+        Ok(f.clone())
+    }
+
+    /// Remove all files of a vFPGA (lease release).
+    pub fn remove_vfpga_files(&self, vfpga: VfpgaId) -> usize {
+        let mut files = self.files.lock().unwrap();
+        let before = files.len();
+        files.retain(|_, f| f.vfpga != Some(vfpga));
+        before - files.len()
+    }
+
+    /// Re-own a vFPGA's files (lease transfer / migration).
+    pub fn chown_vfpga(&self, vfpga: VfpgaId, new_owner: UserId) -> usize {
+        let mut files = self.files.lock().unwrap();
+        let mut n = 0;
+        for f in files.values_mut() {
+            if f.vfpga == Some(vfpga) {
+                f.owner = Some(new_owner);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// All paths (diagnostics).
+    pub fn paths(&self) -> Vec<String> {
+        self.files.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::FpgaId;
+
+    #[test]
+    fn create_and_open_as_owner() {
+        let reg = DeviceFileRegistry::new();
+        let paths = reg.create_vfpga_files(VfpgaId(1), UserId(10)).unwrap();
+        assert_eq!(paths.len(), 3);
+        for p in &paths {
+            let f = reg.open(p, Some(UserId(10))).unwrap();
+            assert_eq!(f.vfpga, Some(VfpgaId(1)));
+        }
+    }
+
+    #[test]
+    fn other_user_is_denied() {
+        let reg = DeviceFileRegistry::new();
+        let paths = reg.create_vfpga_files(VfpgaId(1), UserId(10)).unwrap();
+        let err = reg.open(&paths[0], Some(UserId(11))).unwrap_err();
+        assert!(matches!(err, DevFileError::Denied { .. }));
+    }
+
+    #[test]
+    fn hypervisor_sees_everything() {
+        let reg = DeviceFileRegistry::new();
+        let paths = reg.create_vfpga_files(VfpgaId(2), UserId(1)).unwrap();
+        assert!(reg.open(&paths[0], None).is_ok());
+        let gcs = reg.create_gcs(FpgaId(0));
+        assert!(reg.open(&gcs, None).is_ok());
+    }
+
+    #[test]
+    fn gcs_is_root_only() {
+        let reg = DeviceFileRegistry::new();
+        let gcs = reg.create_gcs(FpgaId(0));
+        let err = reg.open(&gcs, Some(UserId(5))).unwrap_err();
+        assert!(matches!(err, DevFileError::Denied { .. }));
+    }
+
+    #[test]
+    fn double_create_is_error() {
+        let reg = DeviceFileRegistry::new();
+        reg.create_vfpga_files(VfpgaId(3), UserId(1)).unwrap();
+        let err = reg.create_vfpga_files(VfpgaId(3), UserId(2)).unwrap_err();
+        assert!(matches!(err, DevFileError::Exists(_)));
+    }
+
+    #[test]
+    fn release_removes_files() {
+        let reg = DeviceFileRegistry::new();
+        let paths = reg.create_vfpga_files(VfpgaId(4), UserId(1)).unwrap();
+        assert_eq!(reg.remove_vfpga_files(VfpgaId(4)), 3);
+        assert!(matches!(
+            reg.open(&paths[0], Some(UserId(1))),
+            Err(DevFileError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn chown_transfers_access() {
+        let reg = DeviceFileRegistry::new();
+        let paths = reg.create_vfpga_files(VfpgaId(5), UserId(1)).unwrap();
+        assert_eq!(reg.chown_vfpga(VfpgaId(5), UserId(2)), 3);
+        assert!(reg.open(&paths[0], Some(UserId(2))).is_ok());
+        assert!(reg.open(&paths[0], Some(UserId(1))).is_err());
+    }
+
+    #[test]
+    fn missing_path_not_found() {
+        let reg = DeviceFileRegistry::new();
+        assert!(matches!(
+            reg.open("/dev/nope", None),
+            Err(DevFileError::NotFound(_))
+        ));
+    }
+}

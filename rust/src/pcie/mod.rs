@@ -1,0 +1,126 @@
+//! PCIe link simulation.
+//!
+//! The paper's host↔FPGA path is a Xillybus PCIe IP core capped at
+//! 800 MB/s (Section IV-D2), exposed to the host as one device file
+//! per FIFO/memory. This module reproduces that substrate:
+//!
+//! * [`LinkParams`] — negotiated link state, snapshotted/restored
+//!   around full reconfigurations (PCIe hot-plug, Section IV-C);
+//! * [`arbiter::BandwidthArbiter`] — the shared-bandwidth fluid model
+//!   that produces Table III's 509 → 398 → 198 MB/s per-core
+//!   progression when multiple vFPGA streams share one link;
+//! * [`devfile`] — the per-FIFO/memory device files with access
+//!   rights ("For security reasons the device files are protected by
+//!   access rights", Section IV-D2).
+
+pub mod arbiter;
+pub mod devfile;
+
+pub use arbiter::{BandwidthArbiter, StreamHandle};
+pub use devfile::{DevFileError, DeviceFile, DeviceFileKind, DeviceFileRegistry};
+
+/// Negotiated PCIe link parameters.
+///
+/// A full reconfiguration replaces the FPGA's PCIe endpoint, dropping
+/// the link; RC3E restores these parameters afterwards so the host
+/// does not need a reboot ("the hypervisor implements PCIe
+/// hot-plugging by restoration of the PCIe link parameters after
+/// reconfiguration").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkParams {
+    /// PCIe generation (1..=3 for the paper's era).
+    pub gen: u8,
+    /// Lane count.
+    pub lanes: u8,
+    /// Max payload size in bytes.
+    pub max_payload: u16,
+}
+
+impl LinkParams {
+    /// The paper's effective configuration (Xillybus on Gen2 x4).
+    pub fn gen2_x4() -> LinkParams {
+        LinkParams {
+            gen: 2,
+            lanes: 4,
+            max_payload: 256,
+        }
+    }
+
+    /// Raw line rate in MB/s (before protocol overhead and the
+    /// Xillybus IP cap).
+    pub fn line_rate_mbps(self) -> f64 {
+        // Gen1: 250 MB/s/lane, Gen2: 500, Gen3: ~985 (128b/130b).
+        let per_lane = match self.gen {
+            1 => 250.0,
+            2 => 500.0,
+            _ => 985.0,
+        };
+        per_lane * self.lanes as f64
+    }
+
+    /// Effective application throughput cap: the Xillybus IP core
+    /// limit (800 MB/s) or the line rate, whichever is lower.
+    pub fn effective_cap_mbps(self) -> f64 {
+        self.line_rate_mbps().min(crate::paper::LINK_MBPS)
+    }
+}
+
+/// The full-duplex link of one FPGA board: PCIe moves host→FPGA and
+/// FPGA→host traffic on independent lanes, so each direction gets its
+/// own arbiter at the Xillybus cap (this is why Table III's two-core
+/// row sits at ~398 MB/s *input-side* per core: the 800 MB/s inbound
+/// direction is what saturates).
+#[derive(Debug)]
+pub struct DeviceLink {
+    pub params: LinkParams,
+    pub inbound: std::sync::Arc<BandwidthArbiter>,
+    pub outbound: std::sync::Arc<BandwidthArbiter>,
+}
+
+impl DeviceLink {
+    pub fn new(
+        clock: std::sync::Arc<crate::util::clock::VirtualClock>,
+        params: LinkParams,
+    ) -> std::sync::Arc<DeviceLink> {
+        let cap = params.effective_cap_mbps();
+        std::sync::Arc::new(DeviceLink {
+            params,
+            inbound: BandwidthArbiter::new(std::sync::Arc::clone(&clock), cap),
+            outbound: BandwidthArbiter::new(clock, cap),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_link_directions_independent() {
+        let clock = crate::util::clock::VirtualClock::new();
+        let link = DeviceLink::new(clock, LinkParams::gen2_x4());
+        let _in0 = link.inbound.open_stream();
+        let _in1 = link.inbound.open_stream();
+        assert_eq!(link.inbound.active_streams(), 2);
+        assert_eq!(link.outbound.active_streams(), 0);
+        assert_eq!(link.inbound.cap_mbps(), 800.0);
+        assert_eq!(link.outbound.cap_mbps(), 800.0);
+    }
+
+    #[test]
+    fn gen2_x4_caps_at_xillybus_limit() {
+        let p = LinkParams::gen2_x4();
+        assert_eq!(p.line_rate_mbps(), 2000.0);
+        assert_eq!(p.effective_cap_mbps(), 800.0);
+    }
+
+    #[test]
+    fn narrow_link_caps_below_ip_limit() {
+        let p = LinkParams {
+            gen: 1,
+            lanes: 1,
+            max_payload: 128,
+        };
+        assert_eq!(p.effective_cap_mbps(), 250.0);
+    }
+}

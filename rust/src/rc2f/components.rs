@@ -1,0 +1,199 @@
+//! Table II component model: resources and latencies of the RC2F
+//! static design as a function of the vFPGA count.
+//!
+//! Measured rows (Xilinx VC707 / XC7VX485T):
+//!
+//! | Component           | LUT   | FF    | BRAM | latency  | per-core max |
+//! |---------------------|-------|-------|------|----------|--------------|
+//! | PCIe endpoint       | 3,268 | 3,592 | 8    |          |              |
+//! | RC2F control (gcs)  | 125   | 255   | 1    | 0.198 ms |              |
+//! | vFPGA iface (n=1)   | 3,689 | 3,127 | 4    | 0.208 ms | ≈798 MB/s    |
+//! | vFPGA iface (n=2)   | 4,414 | 3,790 | 8    | 0.221 ms | ≈397 MB/s    |
+//! | vFPGA iface (n=4)   | 5,139 | 4,471 | 16   | 0.273 ms | ≈196 MB/s    |
+//!
+//! The vFPGA interface grows by ~725 LUT / ~670 FF per *doubling*
+//! (an arbiter-tree level), and by 4 BRAM per vFPGA (one FIFO pair).
+
+use crate::fpga::resources::Resources;
+
+/// Fixed blocks of the static design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ComponentModel;
+
+impl ComponentModel {
+    /// PCIe endpoint block.
+    pub fn pcie_endpoint() -> Resources {
+        Resources::new(3_268, 3_592, 8, 0)
+    }
+
+    /// RC2F controller with the global configuration space.
+    pub fn control_gcs() -> Resources {
+        Resources::new(125, 255, 1, 0)
+    }
+
+    /// vFPGA interface fabric for `n` slots (FIFOs, ucs memories,
+    /// arbiter tree). Exact at the measured n ∈ {1, 2, 4}.
+    pub fn vfpga_interface(n: usize) -> Resources {
+        assert!(n >= 1);
+        match n {
+            1 => Resources::new(3_689, 3_127, 4, 0),
+            2 => Resources::new(4_414, 3_790, 8, 0),
+            4 => Resources::new(5_139, 4_471, 16, 0),
+            _ => {
+                // Arbiter-tree model: +725 LUT / +672 FF per doubling,
+                // +4 BRAM per vFPGA.
+                let levels = (n as f64).log2();
+                Resources::new(
+                    3_689 + (725.0 * levels) as u64,
+                    3_127 + (672.0 * levels) as u64,
+                    4 * n as u64,
+                    0,
+                )
+            }
+        }
+    }
+
+    /// gcs access latency (host→controller register read), Table II.
+    pub fn gcs_latency_ms() -> f64 {
+        crate::paper::GCS_LATENCY_MS
+    }
+
+    /// Total configuration-space access latency (gcs in the RC2F
+    /// module and ucs in the vFPGAs) for an `n`-slot design.
+    pub fn config_space_latency_ms(n: usize) -> f64 {
+        match n {
+            0 | 1 => crate::paper::UCS_1V_LATENCY_MS,
+            2 => crate::paper::UCS_2V_LATENCY_MS,
+            3 => {
+                // Interpolated between the measured 2- and 4-slot rows.
+                (crate::paper::UCS_2V_LATENCY_MS
+                    + crate::paper::UCS_4V_LATENCY_MS)
+                    / 2.0
+            }
+            _ => crate::paper::UCS_4V_LATENCY_MS,
+        }
+    }
+
+    /// ucs-only component of the access latency.
+    pub fn ucs_latency_ms(n: usize) -> f64 {
+        Self::config_space_latency_ms(n) - Self::gcs_latency_ms()
+    }
+}
+
+/// A concrete static design for one device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rc2fDesign {
+    pub vfpgas: usize,
+}
+
+impl Rc2fDesign {
+    pub fn new(vfpgas: usize) -> Rc2fDesign {
+        assert!(vfpgas >= 1 && vfpgas <= crate::paper::MAX_VFPGAS);
+        Rc2fDesign { vfpgas }
+    }
+
+    /// Total static-design footprint (the Table II "Total" row).
+    pub fn total_resources(&self) -> Resources {
+        ComponentModel::pcie_endpoint()
+            .plus(ComponentModel::control_gcs())
+            .plus(ComponentModel::vfpga_interface(self.vfpgas))
+    }
+
+    /// Device utilization of the static design (the "<3 %" claim).
+    pub fn utilization_pct(
+        &self,
+        device: Resources,
+    ) -> (f64, f64, f64, f64) {
+        self.total_resources().utilization_pct(device)
+    }
+
+    /// Per-vFPGA max FIFO throughput (Table II's right column): the
+    /// 800 MB/s Xillybus link minus chunking overhead, shared evenly.
+    pub fn per_core_max_mbps(&self) -> f64 {
+        crate::paper::FIFO_1V_MBPS / self.vfpgas as f64
+    }
+
+    /// Bitstream name for this design.
+    pub fn name(&self) -> String {
+        format!("rc2f_basic_{}v", self.vfpgas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::board::BoardSpec;
+
+    #[test]
+    fn totals_match_table2() {
+        // Table II "Total" rows.
+        assert_eq!(
+            Rc2fDesign::new(1).total_resources(),
+            Resources::new(7_082, 6_974, 13, 0)
+        );
+        assert_eq!(
+            Rc2fDesign::new(2).total_resources(),
+            Resources::new(7_807, 7_637, 17, 0)
+        );
+        assert_eq!(
+            Rc2fDesign::new(4).total_resources(),
+            Resources::new(8_532, 8_318, 25, 0)
+        );
+    }
+
+    #[test]
+    fn utilization_below_three_percent() {
+        // The paper's headline: "<3 % of a XC7VX485T for 4 vFPGAs".
+        let device = BoardSpec::vc707().resources;
+        let (lut, ff, bram, _) = Rc2fDesign::new(4).utilization_pct(device);
+        assert!(lut < 3.0, "lut {lut}");
+        assert!(ff < 3.0, "ff {ff}");
+        assert!(bram < 3.0, "bram {bram}");
+        // And matches Table II's quoted percentages.
+        assert!((lut - 2.8).abs() < 0.1);
+        assert!((ff - 1.4).abs() < 0.1);
+        assert!((bram - 2.3).abs() < 0.2);
+    }
+
+    #[test]
+    fn interface_monotone_in_slots() {
+        let mut prev = 0;
+        for n in [1, 2, 3, 4] {
+            let r = ComponentModel::vfpga_interface(n);
+            assert!(r.lut > prev);
+            prev = r.lut;
+        }
+    }
+
+    #[test]
+    fn three_slot_interpolation_between_neighbors() {
+        let two = ComponentModel::vfpga_interface(2);
+        let three = ComponentModel::vfpga_interface(3);
+        let four = ComponentModel::vfpga_interface(4);
+        assert!(two.lut < three.lut && three.lut < four.lut);
+        assert_eq!(three.bram, 12);
+    }
+
+    #[test]
+    fn latencies_match_table2() {
+        assert_eq!(ComponentModel::gcs_latency_ms(), 0.198);
+        assert_eq!(ComponentModel::config_space_latency_ms(1), 0.208);
+        assert_eq!(ComponentModel::config_space_latency_ms(2), 0.221);
+        assert_eq!(ComponentModel::config_space_latency_ms(4), 0.273);
+        let l3 = ComponentModel::config_space_latency_ms(3);
+        assert!(l3 > 0.221 && l3 < 0.273);
+    }
+
+    #[test]
+    fn per_core_throughput_shares_link() {
+        assert!((Rc2fDesign::new(1).per_core_max_mbps() - 798.0).abs() < 1.0);
+        assert!((Rc2fDesign::new(2).per_core_max_mbps() - 399.0).abs() < 2.5);
+        assert!((Rc2fDesign::new(4).per_core_max_mbps() - 199.5).abs() < 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn more_than_four_slots_rejected() {
+        Rc2fDesign::new(5);
+    }
+}

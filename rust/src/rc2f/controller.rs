@@ -1,0 +1,410 @@
+//! The RC2F controller: configuration spaces, control signals, slot
+//! state machine.
+//!
+//! Section IV-D1/2: "The main part of the RC2F framework consists of
+//! a controller managing the configuration and the user cores as well
+//! as the monitoring of status information. The controller's memory
+//! space is accessible from the host through the API and on the FPGA
+//! via dedicated control signals (full reset, user reset, test
+//! loopback, etc.)... As interface to the user cores, a user
+//! configuration space (ucs) for user-definable commands is
+//! implemented as dual port memory."
+//!
+//! Access latencies are charged per Table II: 0.198 ms for a gcs
+//! access, rising to 0.273 ms total with four vFPGAs.
+
+use std::sync::Arc;
+
+use super::components::ComponentModel;
+use crate::util::clock::{VirtualClock, VirtualTime};
+use crate::util::ids::{UserId, VfpgaId};
+
+/// gcs register indices (word-addressed).
+pub mod gcs_reg {
+    /// Framework version word.
+    pub const VERSION: usize = 0;
+    /// Bitmap of configured slots.
+    pub const CONFIGURED: usize = 1;
+    /// Bitmap of clock-enabled slots.
+    pub const CLOCKED: usize = 2;
+    /// Device status word (composed by the controller).
+    pub const STATUS: usize = 3;
+    /// Scratch / loopback test register.
+    pub const SCRATCH: usize = 4;
+}
+
+/// Control signals the host can pulse into a slot (Section IV-D1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlSignal {
+    /// Reset the whole framework (all slots).
+    FullReset,
+    /// Reset one user core.
+    UserReset,
+    /// Route the slot's FIFOs into loopback (bypass the core).
+    TestLoopback(bool),
+}
+
+/// Lifecycle state of one vFPGA slot.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlotState {
+    /// No lease on the slot.
+    Free,
+    /// Leased to a user, not yet configured.
+    Allocated { user: UserId },
+    /// A user core is configured (and may be streaming).
+    Configured { user: UserId, core: String },
+}
+
+/// Controller errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ControllerError {
+    #[error("no slot {0} in this design")]
+    NoSuchSlot(VfpgaId),
+    #[error("slot {0} is not allocated")]
+    NotAllocated(VfpgaId),
+    #[error("ucs address {addr:#x} out of range (size {size:#x})")]
+    UcsOutOfRange { addr: usize, size: usize },
+    #[error("gcs register {0} out of range")]
+    GcsOutOfRange(usize),
+}
+
+/// ucs size per slot: 4 KiB of 32-bit words like a BRAM dual-port.
+pub const UCS_WORDS: usize = 1024;
+/// gcs size: 64 words.
+pub const GCS_WORDS: usize = 64;
+
+struct Slot {
+    id: VfpgaId,
+    state: SlotState,
+    ucs: Vec<u32>,
+    loopback: bool,
+}
+
+/// The per-device RC2F controller instance.
+pub struct Controller {
+    clock: Arc<VirtualClock>,
+    gcs: Vec<u32>,
+    slots: Vec<Slot>,
+}
+
+impl Controller {
+    /// Build a controller for a design with the given slot ids.
+    pub fn new(clock: Arc<VirtualClock>, slot_ids: &[VfpgaId]) -> Controller {
+        let mut gcs = vec![0u32; GCS_WORDS];
+        gcs[gcs_reg::VERSION] = 0x00020005; // "RC2F v2.5"
+        Controller {
+            clock,
+            gcs,
+            slots: slot_ids
+                .iter()
+                .map(|&id| Slot {
+                    id,
+                    state: SlotState::Free,
+                    ucs: vec![0u32; UCS_WORDS],
+                    loopback: false,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slot_ids(&self) -> Vec<VfpgaId> {
+        self.slots.iter().map(|s| s.id).collect()
+    }
+
+    fn charge_gcs(&self) -> VirtualTime {
+        let d = VirtualTime::from_millis_f64(ComponentModel::gcs_latency_ms());
+        self.clock.advance(d);
+        d
+    }
+
+    fn charge_ucs(&self) -> VirtualTime {
+        let d = VirtualTime::from_millis_f64(ComponentModel::ucs_latency_ms(
+            self.slots.len(),
+        ));
+        self.clock.advance(d);
+        d
+    }
+
+    fn slot(&self, id: VfpgaId) -> Result<&Slot, ControllerError> {
+        self.slots
+            .iter()
+            .find(|s| s.id == id)
+            .ok_or(ControllerError::NoSuchSlot(id))
+    }
+
+    fn slot_mut(&mut self, id: VfpgaId) -> Result<&mut Slot, ControllerError> {
+        self.slots
+            .iter_mut()
+            .find(|s| s.id == id)
+            .ok_or(ControllerError::NoSuchSlot(id))
+    }
+
+    // ------------------------------------------------------------ gcs
+
+    /// Host read of a gcs register (charges Table II's 0.198 ms).
+    pub fn gcs_read(&self, reg: usize) -> Result<u32, ControllerError> {
+        if reg >= GCS_WORDS {
+            return Err(ControllerError::GcsOutOfRange(reg));
+        }
+        self.charge_gcs();
+        Ok(match reg {
+            gcs_reg::CONFIGURED => self
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| {
+                    matches!(s.state, SlotState::Configured { .. })
+                })
+                .fold(0u32, |acc, (i, _)| acc | (1 << i)),
+            gcs_reg::STATUS => {
+                // bit0: alive; bits 8.. slot count.
+                1 | ((self.slots.len() as u32) << 8)
+            }
+            r => self.gcs[r],
+        })
+    }
+
+    /// Host write of a gcs register.
+    pub fn gcs_write(&mut self, reg: usize, value: u32) -> Result<(), ControllerError> {
+        if reg >= GCS_WORDS {
+            return Err(ControllerError::GcsOutOfRange(reg));
+        }
+        self.charge_gcs();
+        self.gcs[reg] = value;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ ucs
+
+    /// Host read of a slot's user configuration space word.
+    pub fn ucs_read(
+        &self,
+        slot: VfpgaId,
+        addr: usize,
+    ) -> Result<u32, ControllerError> {
+        let s = self.slot(slot)?;
+        if addr >= UCS_WORDS {
+            return Err(ControllerError::UcsOutOfRange {
+                addr,
+                size: UCS_WORDS,
+            });
+        }
+        self.charge_ucs();
+        Ok(s.ucs[addr])
+    }
+
+    /// Host write of a slot's ucs word (the "user-definable commands"
+    /// channel into the core).
+    pub fn ucs_write(
+        &mut self,
+        slot: VfpgaId,
+        addr: usize,
+        value: u32,
+    ) -> Result<(), ControllerError> {
+        self.charge_ucs();
+        let s = self.slot_mut(slot)?;
+        if addr >= UCS_WORDS {
+            return Err(ControllerError::UcsOutOfRange {
+                addr,
+                size: UCS_WORDS,
+            });
+        }
+        s.ucs[addr] = value;
+        Ok(())
+    }
+
+    // -------------------------------------------------- state machine
+
+    /// Lease a slot to a user.
+    pub fn allocate(
+        &mut self,
+        slot: VfpgaId,
+        user: UserId,
+    ) -> Result<(), ControllerError> {
+        let s = self.slot_mut(slot)?;
+        s.state = SlotState::Allocated { user };
+        Ok(())
+    }
+
+    /// Record a configured core (after PR succeeded on the device).
+    pub fn mark_configured(
+        &mut self,
+        slot: VfpgaId,
+        core: &str,
+    ) -> Result<(), ControllerError> {
+        let s = self.slot_mut(slot)?;
+        let user = match &s.state {
+            SlotState::Allocated { user }
+            | SlotState::Configured { user, .. } => *user,
+            SlotState::Free => {
+                return Err(ControllerError::NotAllocated(slot))
+            }
+        };
+        s.state = SlotState::Configured {
+            user,
+            core: core.to_string(),
+        };
+        Ok(())
+    }
+
+    /// Release a lease: blank state, scrub the ucs (no data leaks
+    /// between tenants).
+    pub fn release(&mut self, slot: VfpgaId) -> Result<(), ControllerError> {
+        let s = self.slot_mut(slot)?;
+        s.state = SlotState::Free;
+        s.ucs.fill(0);
+        s.loopback = false;
+        Ok(())
+    }
+
+    pub fn state(&self, slot: VfpgaId) -> Result<SlotState, ControllerError> {
+        Ok(self.slot(slot)?.state.clone())
+    }
+
+    pub fn is_loopback(&self, slot: VfpgaId) -> Result<bool, ControllerError> {
+        Ok(self.slot(slot)?.loopback)
+    }
+
+    /// Pulse a control signal.
+    pub fn signal(
+        &mut self,
+        slot: Option<VfpgaId>,
+        sig: ControlSignal,
+    ) -> Result<(), ControllerError> {
+        self.charge_gcs();
+        match sig {
+            ControlSignal::FullReset => {
+                for s in &mut self.slots {
+                    s.ucs.fill(0);
+                    s.loopback = false;
+                }
+                self.gcs[gcs_reg::SCRATCH] = 0;
+            }
+            ControlSignal::UserReset => {
+                let id = slot.expect("UserReset needs a slot");
+                let s = self.slot_mut(id)?;
+                s.ucs.fill(0);
+            }
+            ControlSignal::TestLoopback(on) => {
+                let id = slot.expect("TestLoopback needs a slot");
+                let s = self.slot_mut(id)?;
+                s.loopback = on;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for Controller {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Controller")
+            .field("slots", &self.slots.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller() -> (Controller, Arc<VirtualClock>) {
+        let clock = VirtualClock::new();
+        let ids: Vec<VfpgaId> = (0..4).map(VfpgaId).collect();
+        (Controller::new(Arc::clone(&clock), &ids), clock)
+    }
+
+    #[test]
+    fn gcs_access_charges_198us() {
+        let (c, clock) = controller();
+        c.gcs_read(gcs_reg::VERSION).unwrap();
+        assert!((clock.now().as_millis_f64() - 0.198).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ucs_access_charges_4slot_latency() {
+        let (mut c, clock) = controller();
+        c.ucs_write(VfpgaId(0), 0, 7).unwrap();
+        // 4-slot ucs-only latency = 0.273 - 0.198 = 0.075 ms.
+        assert!((clock.now().as_millis_f64() - 0.075).abs() < 1e-9);
+        assert_eq!(c.ucs_read(VfpgaId(0), 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn version_register() {
+        let (c, _) = controller();
+        assert_eq!(c.gcs_read(gcs_reg::VERSION).unwrap(), 0x00020005);
+    }
+
+    #[test]
+    fn configured_bitmap_tracks_slots() {
+        let (mut c, _) = controller();
+        assert_eq!(c.gcs_read(gcs_reg::CONFIGURED).unwrap(), 0);
+        c.allocate(VfpgaId(1), UserId(3)).unwrap();
+        c.mark_configured(VfpgaId(1), "matmul16").unwrap();
+        assert_eq!(c.gcs_read(gcs_reg::CONFIGURED).unwrap(), 0b0010);
+        c.allocate(VfpgaId(3), UserId(3)).unwrap();
+        c.mark_configured(VfpgaId(3), "matmul16").unwrap();
+        assert_eq!(c.gcs_read(gcs_reg::CONFIGURED).unwrap(), 0b1010);
+    }
+
+    #[test]
+    fn cannot_configure_unallocated_slot() {
+        let (mut c, _) = controller();
+        assert_eq!(
+            c.mark_configured(VfpgaId(0), "m"),
+            Err(ControllerError::NotAllocated(VfpgaId(0)))
+        );
+    }
+
+    #[test]
+    fn release_scrubs_ucs() {
+        let (mut c, _) = controller();
+        c.allocate(VfpgaId(0), UserId(1)).unwrap();
+        c.ucs_write(VfpgaId(0), 5, 0xDEAD).unwrap();
+        c.release(VfpgaId(0)).unwrap();
+        assert_eq!(c.ucs_read(VfpgaId(0), 5).unwrap(), 0);
+        assert_eq!(c.state(VfpgaId(0)).unwrap(), SlotState::Free);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let (mut c, _) = controller();
+        assert!(matches!(
+            c.ucs_read(VfpgaId(0), UCS_WORDS),
+            Err(ControllerError::UcsOutOfRange { .. })
+        ));
+        assert!(matches!(
+            c.gcs_write(GCS_WORDS, 0),
+            Err(ControllerError::GcsOutOfRange(_))
+        ));
+        assert!(matches!(
+            c.ucs_read(VfpgaId(99), 0),
+            Err(ControllerError::NoSuchSlot(_))
+        ));
+    }
+
+    #[test]
+    fn loopback_signal_toggles() {
+        let (mut c, _) = controller();
+        assert!(!c.is_loopback(VfpgaId(2)).unwrap());
+        c.signal(Some(VfpgaId(2)), ControlSignal::TestLoopback(true))
+            .unwrap();
+        assert!(c.is_loopback(VfpgaId(2)).unwrap());
+        c.signal(None, ControlSignal::FullReset).unwrap();
+        assert!(!c.is_loopback(VfpgaId(2)).unwrap());
+    }
+
+    #[test]
+    fn user_reset_clears_one_ucs_only() {
+        let (mut c, _) = controller();
+        c.ucs_write(VfpgaId(0), 1, 11).unwrap();
+        c.ucs_write(VfpgaId(1), 1, 22).unwrap();
+        c.signal(Some(VfpgaId(0)), ControlSignal::UserReset).unwrap();
+        assert_eq!(c.ucs_read(VfpgaId(0), 1).unwrap(), 0);
+        assert_eq!(c.ucs_read(VfpgaId(1), 1).unwrap(), 22);
+    }
+}

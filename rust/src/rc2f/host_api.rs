@@ -1,0 +1,306 @@
+//! The RC2F host API — CUDA/OpenCL-inspired (Section IV-D2).
+//!
+//! "The API calls are inspired by the interaction between host and
+//! GPU in the NVIDIA CUDA programming environment or the OpenCL
+//! framework. The three basic types are (a) global device control,
+//! status query and configuration, (b) user kernel control, status
+//! query and reconfiguration and (c) data transfers."
+//!
+//! A [`HostSession`] is a user's handle onto one allocated vFPGA; it
+//! goes through the device-file registry on every operation so the
+//! access-rights layer is actually on the path (a user who lost the
+//! lease loses API access immediately).
+
+use std::sync::{Arc, Mutex};
+
+use super::controller::{ControlSignal, Controller, SlotState};
+use super::stream::{StreamConfig, StreamOutcome, StreamRunner};
+use crate::pcie::devfile::{DeviceFileKind, DeviceFileRegistry};
+use crate::pcie::DeviceLink;
+use crate::util::clock::VirtualClock;
+use crate::util::ids::{UserId, VfpgaId};
+
+/// API-level errors.
+#[derive(Debug, thiserror::Error)]
+pub enum HostApiError {
+    #[error("access denied: {0}")]
+    Access(String),
+    #[error("controller: {0}")]
+    Controller(#[from] super::controller::ControllerError),
+    #[error("stream: {0}")]
+    Stream(String),
+    #[error("slot {0} has no configured core")]
+    NotConfigured(VfpgaId),
+}
+
+/// Node-local API endpoint for one FPGA device running RC2F.
+pub struct HostApi {
+    pub controller: Arc<Mutex<Controller>>,
+    pub registry: Arc<DeviceFileRegistry>,
+    pub link: Arc<DeviceLink>,
+    pub clock: Arc<VirtualClock>,
+    artifact_dir: std::path::PathBuf,
+}
+
+impl HostApi {
+    pub fn new(
+        controller: Arc<Mutex<Controller>>,
+        registry: Arc<DeviceFileRegistry>,
+        link: Arc<DeviceLink>,
+        clock: Arc<VirtualClock>,
+    ) -> HostApi {
+        HostApi {
+            controller,
+            registry,
+            link,
+            clock,
+            artifact_dir: crate::runtime::artifact_dir(),
+        }
+    }
+
+    pub fn with_artifact_dir(mut self, dir: &std::path::Path) -> Self {
+        self.artifact_dir = dir.to_path_buf();
+        self
+    }
+
+    /// (a) Global device status — hypervisor-side, no user check.
+    /// Charges the gcs access latency.
+    pub fn device_status_word(&self) -> Result<u32, HostApiError> {
+        Ok(self
+            .controller
+            .lock()
+            .unwrap()
+            .gcs_read(super::controller::gcs_reg::STATUS)?)
+    }
+
+    /// Open a session on an allocated vFPGA. Verifies the user owns
+    /// the slot's device files.
+    pub fn open_session(
+        self: &Arc<Self>,
+        user: UserId,
+        vfpga: VfpgaId,
+    ) -> Result<HostSession, HostApiError> {
+        let path =
+            DeviceFileRegistry::vfpga_path(vfpga, DeviceFileKind::FifoIn, 0);
+        self.registry
+            .open(&path, Some(user))
+            .map_err(|e| HostApiError::Access(e.to_string()))?;
+        Ok(HostSession {
+            api: Arc::clone(self),
+            user,
+            vfpga,
+        })
+    }
+}
+
+/// A user's bound handle on one vFPGA.
+pub struct HostSession {
+    api: Arc<HostApi>,
+    pub user: UserId,
+    pub vfpga: VfpgaId,
+}
+
+impl HostSession {
+    /// Re-verify the lease (device files still owned by this user).
+    fn check_access(&self) -> Result<(), HostApiError> {
+        let path = DeviceFileRegistry::vfpga_path(
+            self.vfpga,
+            DeviceFileKind::FifoIn,
+            0,
+        );
+        self.api
+            .registry
+            .open(&path, Some(self.user))
+            .map_err(|e| HostApiError::Access(e.to_string()))?;
+        Ok(())
+    }
+
+    /// (b) Kernel status: the configured core's name, if any.
+    pub fn kernel_status(&self) -> Result<Option<String>, HostApiError> {
+        self.check_access()?;
+        let state = self
+            .api
+            .controller
+            .lock()
+            .unwrap()
+            .state(self.vfpga)?;
+        Ok(match state {
+            SlotState::Configured { core, .. } => Some(core),
+            _ => None,
+        })
+    }
+
+    /// (b) Write a user-defined command word into the ucs.
+    pub fn write_ucs(&self, addr: usize, value: u32) -> Result<(), HostApiError> {
+        self.check_access()?;
+        Ok(self
+            .api
+            .controller
+            .lock()
+            .unwrap()
+            .ucs_write(self.vfpga, addr, value)?)
+    }
+
+    /// (b) Read a ucs word.
+    pub fn read_ucs(&self, addr: usize) -> Result<u32, HostApiError> {
+        self.check_access()?;
+        Ok(self
+            .api
+            .controller
+            .lock()
+            .unwrap()
+            .ucs_read(self.vfpga, addr)?)
+    }
+
+    /// (b) Reset the user core.
+    pub fn user_reset(&self) -> Result<(), HostApiError> {
+        self.check_access()?;
+        Ok(self.api.controller.lock().unwrap().signal(
+            Some(self.vfpga),
+            ControlSignal::UserReset,
+        )?)
+    }
+
+    /// (b) Toggle the test loopback path.
+    pub fn set_loopback(&self, on: bool) -> Result<(), HostApiError> {
+        self.check_access()?;
+        Ok(self.api.controller.lock().unwrap().signal(
+            Some(self.vfpga),
+            ControlSignal::TestLoopback(on),
+        )?)
+    }
+
+    /// (c) Data transfer: stream a job through the configured core.
+    /// The core must be configured (the hypervisor does PR before the
+    /// user can stream).
+    pub fn stream(
+        &self,
+        cfg: &StreamConfig,
+    ) -> Result<StreamOutcome, HostApiError> {
+        self.check_access()?;
+        let state = self
+            .api
+            .controller
+            .lock()
+            .unwrap()
+            .state(self.vfpga)?;
+        if !matches!(state, SlotState::Configured { .. }) {
+            return Err(HostApiError::NotConfigured(self.vfpga));
+        }
+        let runner = StreamRunner::new(
+            Arc::clone(&self.api.clock),
+            Arc::clone(&self.api.link),
+        )
+        .with_artifact_dir(&self.api.artifact_dir);
+        runner.run(cfg).map_err(HostApiError::Stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcie::LinkParams;
+
+    fn api() -> Arc<HostApi> {
+        let clock = VirtualClock::new();
+        let ids: Vec<VfpgaId> = (0..4).map(VfpgaId).collect();
+        let controller =
+            Arc::new(Mutex::new(Controller::new(Arc::clone(&clock), &ids)));
+        let registry = Arc::new(DeviceFileRegistry::new());
+        let link = DeviceLink::new(Arc::clone(&clock), LinkParams::gen2_x4());
+        Arc::new(HostApi::new(controller, registry, link, clock))
+    }
+
+    #[test]
+    fn session_requires_device_files() {
+        let api = api();
+        // No files created yet → access denied.
+        assert!(matches!(
+            api.open_session(UserId(1), VfpgaId(0)),
+            Err(HostApiError::Access(_))
+        ));
+        api.registry
+            .create_vfpga_files(VfpgaId(0), UserId(1))
+            .unwrap();
+        assert!(api.open_session(UserId(1), VfpgaId(0)).is_ok());
+        // A different user is still rejected.
+        assert!(matches!(
+            api.open_session(UserId(2), VfpgaId(0)),
+            Err(HostApiError::Access(_))
+        ));
+    }
+
+    #[test]
+    fn ucs_roundtrip_through_session() {
+        let api = api();
+        api.registry
+            .create_vfpga_files(VfpgaId(1), UserId(5))
+            .unwrap();
+        let s = api.open_session(UserId(5), VfpgaId(1)).unwrap();
+        s.write_ucs(10, 0xCAFE).unwrap();
+        assert_eq!(s.read_ucs(10).unwrap(), 0xCAFE);
+        s.user_reset().unwrap();
+        assert_eq!(s.read_ucs(10).unwrap(), 0);
+    }
+
+    #[test]
+    fn lease_revocation_cuts_api_access() {
+        let api = api();
+        api.registry
+            .create_vfpga_files(VfpgaId(2), UserId(7))
+            .unwrap();
+        let s = api.open_session(UserId(7), VfpgaId(2)).unwrap();
+        s.write_ucs(0, 1).unwrap();
+        // Hypervisor revokes the lease (removes device files).
+        api.registry.remove_vfpga_files(VfpgaId(2));
+        assert!(matches!(
+            s.write_ucs(0, 2),
+            Err(HostApiError::Access(_))
+        ));
+    }
+
+    #[test]
+    fn stream_requires_configured_core() {
+        let api = api();
+        api.registry
+            .create_vfpga_files(VfpgaId(0), UserId(1))
+            .unwrap();
+        let s = api.open_session(UserId(1), VfpgaId(0)).unwrap();
+        let err = s
+            .stream(&StreamConfig::matmul16(256))
+            .unwrap_err();
+        assert!(matches!(err, HostApiError::NotConfigured(_)));
+    }
+
+    #[test]
+    fn kernel_status_reflects_configuration() {
+        let api = api();
+        api.registry
+            .create_vfpga_files(VfpgaId(3), UserId(1))
+            .unwrap();
+        let s = api.open_session(UserId(1), VfpgaId(3)).unwrap();
+        assert_eq!(s.kernel_status().unwrap(), None);
+        {
+            let mut c = api.controller.lock().unwrap();
+            c.allocate(VfpgaId(3), UserId(1)).unwrap();
+            c.mark_configured(VfpgaId(3), "matmul16").unwrap();
+        }
+        assert_eq!(s.kernel_status().unwrap().as_deref(), Some("matmul16"));
+    }
+
+    #[test]
+    fn loopback_toggle_via_session() {
+        let api = api();
+        api.registry
+            .create_vfpga_files(VfpgaId(1), UserId(1))
+            .unwrap();
+        let s = api.open_session(UserId(1), VfpgaId(1)).unwrap();
+        s.set_loopback(true).unwrap();
+        assert!(api
+            .controller
+            .lock()
+            .unwrap()
+            .is_loopback(VfpgaId(1))
+            .unwrap());
+    }
+}

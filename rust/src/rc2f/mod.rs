@@ -1,0 +1,28 @@
+//! RC2F — the Reconfigurable Cloud Computing Framework.
+//!
+//! Section IV-D: the static FPGA design every RAaaS/BAaaS device
+//! boots: a PCIe endpoint, a controller with a *global configuration
+//! space* (gcs), and up to four vFPGA slots, each with a *user
+//! configuration space* (ucs, dual-port memory) and an asynchronous
+//! FIFO pair crossing from the system clock into the user clock
+//! domain. On the host: the CUDA/OpenCL-inspired API (device control,
+//! kernel control, data transfer).
+//!
+//! Submodules:
+//! * [`components`] — the Table II resource/latency model of the
+//!   framework blocks;
+//! * [`controller`] — gcs/ucs memories, control signals, slot state;
+//! * [`stream`] — the streaming engine: real threads moving real
+//!   data through [`crate::fifo::AsyncFifo`]s into the PJRT engine,
+//!   with virtual-time accounting against the shared PCIe link;
+//! * [`host_api`] — the user-facing API surface.
+
+pub mod components;
+pub mod controller;
+pub mod host_api;
+pub mod stream;
+
+pub use components::{ComponentModel, Rc2fDesign};
+pub use controller::{ControlSignal, Controller, ControllerError, SlotState};
+pub use host_api::{HostApi, HostApiError, HostSession};
+pub use stream::{StreamConfig, StreamOutcome, StreamRunner};

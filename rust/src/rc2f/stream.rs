@@ -1,0 +1,514 @@
+//! The RC2F streaming path: host ⇄ FIFO ⇄ user core.
+//!
+//! This is the real request path behind the paper's Section-V
+//! experiment ("we stream the data necessary for 100,000 matrix
+//! multiplications through the core"):
+//!
+//! ```text
+//!   producer thread ──► in-FIFO ──► core thread (PJRT engine)
+//!                                        │
+//!   consumer (caller) ◄── out-FIFO ◄─────┘
+//! ```
+//!
+//! Data movement and compute are real: byte chunks cross real bounded
+//! [`crate::fifo::AsyncFifo`]s with backpressure, and the core thread
+//! executes the HLO artifact on PJRT. *Hardware timing* is accounted
+//! in virtual time: each chunk charges
+//! `max(link-in share, link-out share, core compute model)` to the
+//! stream's timeline — the double-buffered pipeline of the paper's
+//! asynchronous FIFOs — which is what reproduces Table III's
+//! compute-bound → link-bound crossover.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use crate::fifo::AsyncFifo;
+use crate::pcie::DeviceLink;
+use crate::runtime::engine::{matmul_ref, Engine, Tensor};
+use crate::util::bytes::{bytes_to_f32, f32_as_bytes};
+use crate::util::clock::{VirtualClock, VirtualTime};
+use crate::util::rng::Rng;
+
+/// Host-side job setup charge (driver init, buffer allocation, thread
+/// start). Calibrated so Table III runtimes line up; reported
+/// separately so benches can show time-with and time-without.
+pub const STREAM_SETUP_MS: f64 = 200.0;
+
+/// One streaming job description.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// HLO artifact implementing the core (e.g. "matmul16_b256").
+    pub artifact: String,
+    /// Matrix dimension N.
+    pub matrix_n: usize,
+    /// Matrix pairs per chunk (must equal the artifact batch).
+    pub chunk_batch: usize,
+    /// Total multiplications to stream (paper: 100,000).
+    pub total_mults: u64,
+    /// Core's compute-bound input-side rate in MB/s (synth report).
+    pub compute_rate_mbps: f64,
+    /// Workload seed (deterministic stream).
+    pub seed: u64,
+    /// Validate the first chunk against the pure-Rust reference.
+    pub validate_first_chunk: bool,
+    /// Fixed link-contention degree. `run_concurrent` pins this to
+    /// the stream-group size so the model is deterministic even when
+    /// wall-clock skew lets one pipeline finish before the others;
+    /// `None` samples the live stream count per chunk.
+    pub contenders: Option<usize>,
+}
+
+impl StreamConfig {
+    /// The paper's 16×16 configuration.
+    pub fn matmul16(total_mults: u64) -> StreamConfig {
+        StreamConfig {
+            artifact: "matmul16_b256".to_string(),
+            matrix_n: 16,
+            chunk_batch: 256,
+            total_mults,
+            compute_rate_mbps: crate::paper::MM16_1C_MBPS,
+            seed: 0x16,
+            validate_first_chunk: true,
+            contenders: None,
+        }
+    }
+
+    /// The paper's 32×32 configuration.
+    pub fn matmul32(total_mults: u64) -> StreamConfig {
+        StreamConfig {
+            artifact: "matmul32_b64".to_string(),
+            matrix_n: 32,
+            chunk_batch: 64,
+            total_mults,
+            compute_rate_mbps: crate::paper::MM32_1C_MBPS,
+            seed: 0x32,
+            validate_first_chunk: true,
+            contenders: None,
+        }
+    }
+
+    /// Bytes entering the FPGA per chunk (two input matrices).
+    pub fn chunk_in_bytes(&self) -> u64 {
+        2 * (self.chunk_batch * self.matrix_n * self.matrix_n * 4) as u64
+    }
+
+    /// Bytes leaving the FPGA per chunk (one result matrix).
+    pub fn chunk_out_bytes(&self) -> u64 {
+        (self.chunk_batch * self.matrix_n * self.matrix_n * 4) as u64
+    }
+
+    pub fn chunks(&self) -> u64 {
+        self.total_mults.div_ceil(self.chunk_batch as u64)
+    }
+}
+
+/// Result of one stream.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    pub artifact: String,
+    pub mults: u64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+    /// Modeled per-core runtime excluding setup (Table III style).
+    pub virtual_stream: VirtualTime,
+    /// Modeled runtime including the fixed setup charge.
+    pub virtual_total: VirtualTime,
+    /// Real wall-clock of the whole pipeline on this machine.
+    pub wall_secs: f64,
+    /// Real wall-clock spent inside PJRT execute calls.
+    pub compute_wall_secs: f64,
+    /// Sum over all result elements (cheap integrity signal).
+    pub checksum: f64,
+    /// Element mismatches in the validated chunk (must be 0).
+    pub validation_failures: u64,
+}
+
+impl StreamOutcome {
+    /// Input-side throughput over the modeled stream time — the
+    /// number Table III reports per core.
+    pub fn virtual_mbps(&self) -> f64 {
+        let s = self.virtual_stream.as_secs_f64();
+        if s > 0.0 {
+            self.input_bytes as f64 / 1e6 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// Input-side throughput over real wall time on this machine.
+    pub fn wall_mbps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.input_bytes as f64 / 1e6 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Runs streaming jobs against one device link.
+pub struct StreamRunner {
+    clock: Arc<VirtualClock>,
+    link: Arc<DeviceLink>,
+    artifact_dir: std::path::PathBuf,
+}
+
+impl StreamRunner {
+    pub fn new(
+        clock: Arc<VirtualClock>,
+        link: Arc<DeviceLink>,
+    ) -> StreamRunner {
+        StreamRunner {
+            clock,
+            link,
+            artifact_dir: crate::runtime::artifact_dir(),
+        }
+    }
+
+    pub fn with_artifact_dir(mut self, dir: &std::path::Path) -> Self {
+        self.artifact_dir = dir.to_path_buf();
+        self
+    }
+
+
+    /// The core thread's work: compile/load the artifact, align on the
+    /// barrier, then pop chunks, execute on PJRT and account virtual
+    /// time until the input FIFO drains. Factored out so `run_one`
+    /// can guarantee FIFO closure on ANY exit path.
+    #[allow(clippy::too_many_arguments)]
+    fn core_body(
+        core_cfg: &StreamConfig,
+        core_in: &Arc<AsyncFifo>,
+        core_out: &Arc<AsyncFifo>,
+        link: &Arc<DeviceLink>,
+        clock: &Arc<VirtualClock>,
+        artifact_dir: &std::path::Path,
+        core_compute_wall: &Arc<AtomicU64>,
+        barrier: &Barrier,
+    ) -> Result<VirtualTime, String> {
+        let mut engine =
+            Engine::new(artifact_dir).map_err(|e| e.to_string())?;
+        engine.load(&core_cfg.artifact).map_err(|e| e.to_string())?;
+
+        // Setup charge happens before the stream opens.
+        clock.advance(VirtualTime::from_millis_f64(STREAM_SETUP_MS));
+        let mut in_stream = link.inbound.open_stream();
+        let _out_stream = link.outbound.open_stream();
+        // All concurrent cores open their handles before anyone
+        // transfers, so every chunk sees the full contention.
+        barrier.wait();
+        let stream_start = in_stream.cursor();
+
+        let n = core_cfg.matrix_n;
+        let batch = core_cfg.chunk_batch;
+        let in_bytes = core_cfg.chunk_in_bytes();
+        let out_bytes = core_cfg.chunk_out_bytes();
+        let compute_per_chunk = VirtualTime::from_secs_f64(
+            in_bytes as f64 / (core_cfg.compute_rate_mbps * 1e6),
+        );
+
+        while let Some(chunk) = core_in.pop().map_err(|e| e.to_string())? {
+            let half = chunk.len() / 2;
+            let xs = Tensor::new(
+                vec![batch, n, n],
+                bytes_to_f32(&chunk[..half]).map_err(|e| e.to_string())?,
+            );
+            let ys = Tensor::new(
+                vec![batch, n, n],
+                bytes_to_f32(&chunk[half..]).map_err(|e| e.to_string())?,
+            );
+            let t0 = Instant::now();
+            let out = engine
+                .matmul(&core_cfg.artifact, xs, ys)
+                .map_err(|e| e.to_string())?;
+            core_compute_wall
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+            // Virtual pipeline step: the slowest of {link in, link
+            // out, compute} bounds the double-buffered flow.
+            let (d_in, d_out) = match core_cfg.contenders {
+                Some(n) => (
+                    link.inbound.share_duration_for(in_bytes, n),
+                    link.outbound.share_duration_for(out_bytes, n),
+                ),
+                None => (
+                    link.inbound.fair_share_duration(in_bytes),
+                    link.outbound.fair_share_duration(out_bytes),
+                ),
+            };
+            let step =
+                VirtualTime(d_in.0.max(d_out.0).max(compute_per_chunk.0));
+            in_stream.occupy(step);
+            link.inbound.note_bytes(in_bytes);
+            link.outbound.note_bytes(out_bytes);
+
+            if core_out
+                .push(f32_as_bytes(&out.data).to_vec())
+                .is_err()
+            {
+                break;
+            }
+        }
+        Ok(in_stream.elapsed_since(stream_start))
+    }
+
+    /// Run one stream on the calling thread (plus its producer/core
+    /// threads). `barrier` aligns link-handle opening across
+    /// concurrent streams so bandwidth shares are deterministic.
+    fn run_one(
+        &self,
+        cfg: &StreamConfig,
+        barrier: Arc<Barrier>,
+    ) -> Result<StreamOutcome, String> {
+        let wall_start = Instant::now();
+        let in_fifo = AsyncFifo::rc2f_default(&format!("{}_in", cfg.artifact));
+        let out_fifo =
+            AsyncFifo::rc2f_default(&format!("{}_out", cfg.artifact));
+
+        // ---------------- producer: synthesize the matrix stream ----
+        let prod_cfg = cfg.clone();
+        let prod_fifo = Arc::clone(&in_fifo);
+        let producer = std::thread::spawn(move || {
+            let mut rng = Rng::new(prod_cfg.seed);
+            let elems =
+                prod_cfg.chunk_batch * prod_cfg.matrix_n * prod_cfg.matrix_n;
+            let mut remaining = prod_cfg.total_mults;
+            let mut xs = vec![0.0f32; elems];
+            let mut ys = vec![0.0f32; elems];
+            while remaining > 0 {
+                let take =
+                    remaining.min(prod_cfg.chunk_batch as u64) as usize;
+                rng.fill_f32(&mut xs, 1.0);
+                rng.fill_f32(&mut ys, 1.0);
+                // Short final chunk: zero-pad to the artifact batch
+                // (the engine contract is fixed-shape).
+                if take < prod_cfg.chunk_batch {
+                    let n2 = prod_cfg.matrix_n * prod_cfg.matrix_n;
+                    xs[take * n2..].fill(0.0);
+                    ys[take * n2..].fill(0.0);
+                }
+                let mut chunk =
+                    Vec::with_capacity(xs.len() * 8);
+                chunk.extend_from_slice(f32_as_bytes(&xs));
+                chunk.extend_from_slice(f32_as_bytes(&ys));
+                if prod_fifo.push(chunk).is_err() {
+                    return; // consumer gone
+                }
+                remaining -= take as u64;
+            }
+            prod_fifo.close();
+        });
+
+        // ---------------- core: PJRT execute + virtual accounting ---
+        let core_cfg = cfg.clone();
+        let core_in = Arc::clone(&in_fifo);
+        let core_out = Arc::clone(&out_fifo);
+        let link = Arc::clone(&self.link);
+        let clock = Arc::clone(&self.clock);
+        let artifact_dir = self.artifact_dir.clone();
+        let compute_wall_ns = Arc::new(AtomicU64::new(0));
+        let core_compute_wall = Arc::clone(&compute_wall_ns);
+        let core = std::thread::spawn(move || -> Result<VirtualTime, String> {
+            // Whatever happens inside (including early errors before
+            // the streaming loop), both FIFOs must end up closed:
+            // otherwise the producer blocks on backpressure and the
+            // consumer blocks on pop forever.
+            let result = Self::core_body(
+                &core_cfg,
+                &core_in,
+                &core_out,
+                &link,
+                &clock,
+                &artifact_dir,
+                &core_compute_wall,
+                &barrier,
+            );
+            core_in.close();
+            core_out.close();
+            result
+        });
+
+
+        // ---------------- consumer: drain, checksum, validate --------
+        let mut checksum = 0.0f64;
+        let mut output_bytes = 0u64;
+        let mut validation_failures = 0u64;
+        let mut first = cfg.validate_first_chunk;
+        let mut val_rng = Rng::new(cfg.seed);
+        while let Some(chunk) = out_fifo.pop().map_err(|e| e.to_string())? {
+            output_bytes += chunk.len() as u64;
+            let vals = bytes_to_f32(&chunk).map_err(|e| e.to_string())?;
+            checksum += vals.iter().map(|v| *v as f64).sum::<f64>();
+            if first {
+                first = false;
+                // Recreate the first chunk like the producer did and
+                // compare against the pure-Rust reference.
+                let elems = cfg.chunk_batch * cfg.matrix_n * cfg.matrix_n;
+                let mut xs = vec![0.0f32; elems];
+                let mut ys = vec![0.0f32; elems];
+                val_rng.fill_f32(&mut xs, 1.0);
+                val_rng.fill_f32(&mut ys, 1.0);
+                let take =
+                    cfg.total_mults.min(cfg.chunk_batch as u64) as usize;
+                let n2 = cfg.matrix_n * cfg.matrix_n;
+                if take < cfg.chunk_batch {
+                    xs[take * n2..].fill(0.0);
+                    ys[take * n2..].fill(0.0);
+                }
+                let shape = vec![cfg.chunk_batch, cfg.matrix_n, cfg.matrix_n];
+                let expect = matmul_ref(
+                    &Tensor::new(shape.clone(), xs),
+                    &Tensor::new(shape, ys),
+                );
+                let tol = 1e-3 * cfg.matrix_n as f32;
+                for (got, want) in vals.iter().zip(&expect.data) {
+                    if (got - want).abs() > tol * want.abs().max(1.0) {
+                        validation_failures += 1;
+                    }
+                }
+            }
+        }
+
+        producer.join().map_err(|_| "producer panicked")?;
+        let virtual_stream = core
+            .join()
+            .map_err(|_| "core panicked".to_string())??;
+        let wall_secs = wall_start.elapsed().as_secs_f64();
+        Ok(StreamOutcome {
+            artifact: cfg.artifact.clone(),
+            mults: cfg.total_mults,
+            input_bytes: cfg.chunk_in_bytes() * cfg.chunks(),
+            output_bytes,
+            virtual_stream,
+            virtual_total: virtual_stream
+                + VirtualTime::from_millis_f64(STREAM_SETUP_MS),
+            wall_secs,
+            compute_wall_secs: compute_wall_ns.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            checksum,
+            validation_failures,
+        })
+    }
+
+    /// Run a single stream.
+    pub fn run(&self, cfg: &StreamConfig) -> Result<StreamOutcome, String> {
+        self.run_one(cfg, Arc::new(Barrier::new(1)))
+    }
+
+    /// Run several streams concurrently (the multi-core rows of
+    /// Table III: all cores share this runner's device link).
+    pub fn run_concurrent(
+        &self,
+        cfgs: &[StreamConfig],
+    ) -> Result<Vec<StreamOutcome>, String> {
+        let barrier = Arc::new(Barrier::new(cfgs.len()));
+        // Pin the contention degree: every stream in the group models
+        // the full group sharing the link for its whole run.
+        let pinned: Vec<StreamConfig> = cfgs
+            .iter()
+            .map(|c| StreamConfig {
+                contenders: Some(c.contenders.unwrap_or(cfgs.len())),
+                ..c.clone()
+            })
+            .collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = pinned
+                .iter()
+                .map(|cfg| {
+                    let b = Arc::clone(&barrier);
+                    scope.spawn(move || self.run_one(cfg, b))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|_| "stream panicked".to_string())?)
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runner() -> Option<(StreamRunner, Arc<VirtualClock>)> {
+        let dir = crate::runtime::artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping stream test: run `make artifacts`");
+            return None;
+        }
+        let clock = VirtualClock::new();
+        let link = DeviceLink::new(
+            Arc::clone(&clock),
+            crate::pcie::LinkParams::gen2_x4(),
+        );
+        Some((StreamRunner::new(Arc::clone(&clock), link), clock))
+    }
+
+    #[test]
+    fn single_core_16x16_is_compute_bound_at_509() {
+        let Some((r, _)) = runner() else { return };
+        let cfg = StreamConfig::matmul16(4096);
+        let out = r.run(&cfg).unwrap();
+        assert_eq!(out.validation_failures, 0);
+        let mbps = out.virtual_mbps();
+        assert!(
+            (mbps - crate::paper::MM16_1C_MBPS).abs() < 12.0,
+            "virtual throughput {mbps} MB/s"
+        );
+    }
+
+    #[test]
+    fn two_cores_16x16_share_the_link() {
+        let Some((r, _)) = runner() else { return };
+        let cfgs = vec![
+            StreamConfig::matmul16(2048),
+            StreamConfig {
+                seed: 0x17,
+                ..StreamConfig::matmul16(2048)
+            },
+        ];
+        let outs = r.run_concurrent(&cfgs).unwrap();
+        for out in &outs {
+            let mbps = out.virtual_mbps();
+            // Table III: ~398 MB/s per core.
+            assert!(
+                (mbps - crate::paper::MM16_2C_MBPS).abs() < 15.0,
+                "virtual throughput {mbps}"
+            );
+            assert_eq!(out.validation_failures, 0);
+        }
+    }
+
+    #[test]
+    fn short_stream_pads_final_chunk() {
+        let Some((r, _)) = runner() else { return };
+        let mut cfg = StreamConfig::matmul16(300); // 256 + 44
+        cfg.validate_first_chunk = true;
+        let out = r.run(&cfg).unwrap();
+        assert_eq!(out.mults, 300);
+        assert_eq!(out.validation_failures, 0);
+        // Two chunks of 256 each cross the link.
+        assert_eq!(out.input_bytes, 2 * cfg.chunk_in_bytes());
+    }
+
+    #[test]
+    fn checksum_is_deterministic() {
+        let Some((r, _)) = runner() else { return };
+        let cfg = StreamConfig::matmul16(512);
+        let a = r.run(&cfg).unwrap();
+        let b = r.run(&cfg).unwrap();
+        assert_eq!(a.checksum, b.checksum);
+        assert!(a.checksum.abs() > 0.0);
+    }
+
+    #[test]
+    fn wall_time_is_positive_and_compute_nonzero() {
+        let Some((r, _)) = runner() else { return };
+        let out = r.run(&StreamConfig::matmul16(512)).unwrap();
+        assert!(out.wall_secs > 0.0);
+        assert!(out.compute_wall_secs > 0.0);
+        assert!(out.compute_wall_secs <= out.wall_secs);
+    }
+}

@@ -1,0 +1,245 @@
+//! Artifact discovery and metadata.
+//!
+//! `make artifacts` writes, per user-core variant:
+//! * `<name>.hlo.txt`  — the HLO module text (the interchange format;
+//!   serialized protos from jax ≥ 0.5 are rejected by xla_extension
+//!   0.5.1, see DESIGN.md),
+//! * `<name>.meta.json` — the shape/dtype contract this module
+//!   validates before anything is compiled or executed (the same role
+//!   the paper's bitfile metadata plays for vFPGA compatibility),
+//! plus a `manifest.json` mapping variant names to content hashes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor in the artifact contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        // All paper cores stream 32-bit floats (Table III header).
+        self.elements() * 4
+    }
+
+    fn from_json(v: &Json) -> Option<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_u64().map(|u| u as usize))
+            .collect::<Option<Vec<_>>>()?;
+        Some(TensorSpec {
+            shape,
+            dtype: v.get("dtype").as_str()?.to_string(),
+        })
+    }
+}
+
+/// Parsed `<name>.meta.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let specs = |key: &str| -> Result<Vec<TensorSpec>, String> {
+            v.get(key)
+                .as_arr()
+                .ok_or_else(|| format!("meta missing '{key}'"))?
+                .iter()
+                .map(|t| {
+                    TensorSpec::from_json(t)
+                        .ok_or_else(|| format!("bad tensor spec in '{key}'"))
+                })
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: v.str_field("name")?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            sha256: v.str_field("sha256")?.to_string(),
+        })
+    }
+
+    /// The streaming batch size (leading dim of the first input).
+    pub fn batch(&self) -> usize {
+        self.inputs
+            .iter()
+            .find(|t| !t.shape.is_empty())
+            .map(|t| t.shape[0])
+            .unwrap_or(0)
+    }
+
+    /// Bytes per invocation moved host→device (sum of input sizes).
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(|t| t.byte_len()).sum()
+    }
+
+    /// Bytes per invocation moved device→host.
+    pub fn output_bytes(&self) -> usize {
+        self.outputs.iter().map(|t| t.byte_len()).sum()
+    }
+}
+
+/// Discovered artifacts (name → paths + meta).
+#[derive(Debug, Default)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    metas: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ArtifactStore {
+    /// Scan a directory for `<name>.meta.json` + `<name>.hlo.txt`
+    /// pairs. Missing HLO for a meta (or vice versa) is an error —
+    /// a torn artifact directory should fail loudly at startup.
+    pub fn discover(dir: &Path) -> Result<ArtifactStore, String> {
+        let mut metas = BTreeMap::new();
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| format!("artifact dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let path = entry.map_err(|e| e.to_string())?.path();
+            let Some(name) = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .and_then(|n| n.strip_suffix(".meta.json"))
+            else {
+                continue;
+            };
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            let meta = ArtifactMeta::parse(&text)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            let hlo = dir.join(format!("{name}.hlo.txt"));
+            if !hlo.exists() {
+                return Err(format!(
+                    "meta for '{name}' present but {} missing",
+                    hlo.display()
+                ));
+            }
+            metas.insert(name.to_string(), meta);
+        }
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            metas,
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.metas.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+      "name": "matmul16_b64",
+      "inputs": [
+        {"shape": [64, 16, 16], "dtype": "float32"},
+        {"shape": [64, 16, 16], "dtype": "float32"}
+      ],
+      "outputs": [{"shape": [64, 16, 16], "dtype": "float32"}],
+      "sha256": "abc",
+      "hlo_bytes": 5419
+    }"#;
+
+    #[test]
+    fn parse_meta() {
+        let m = ArtifactMeta::parse(META).unwrap();
+        assert_eq!(m.name, "matmul16_b64");
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].shape, vec![64, 16, 16]);
+        assert_eq!(m.batch(), 64);
+        assert_eq!(m.input_bytes(), 2 * 64 * 16 * 16 * 4);
+        assert_eq!(m.output_bytes(), 64 * 16 * 16 * 4);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(ArtifactMeta::parse("{}").is_err());
+        assert!(ArtifactMeta::parse("not json").is_err());
+        assert!(ArtifactMeta::parse(
+            r#"{"name":"x","inputs":[{"shape":"bad"}],"outputs":[],"sha256":"s"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn discover_real_artifacts() {
+        let dir = crate::runtime::artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let store = ArtifactStore::discover(&dir).unwrap();
+        for required in [
+            "matmul16_b256",
+            "matmul16_b64",
+            "matmul32_b64",
+            "loopback16_b256",
+        ] {
+            let meta = store
+                .meta(required)
+                .unwrap_or_else(|| panic!("missing artifact {required}"));
+            assert!(store.hlo_path(required).exists());
+            assert_eq!(meta.sha256.len(), 64);
+        }
+    }
+
+    #[test]
+    fn discover_rejects_torn_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "rc3e_torn_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("x.meta.json"), META).unwrap();
+        // no x.hlo.txt
+        let err = ArtifactStore::discover(&dir).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec {
+            shape: vec![256, 16, 16],
+            dtype: "float32".into(),
+        };
+        assert_eq!(t.elements(), 65536);
+        assert_eq!(t.byte_len(), 262144);
+        let scalar = TensorSpec {
+            shape: vec![],
+            dtype: "float32".into(),
+        };
+        assert_eq!(scalar.elements(), 1);
+    }
+}

@@ -1,0 +1,378 @@
+//! Thread-local PJRT engine: compile once, execute many.
+//!
+//! Mirrors /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are cached per engine;
+//! engines are cheap enough to build one per worker thread (the
+//! `PjRtClient` is `Rc`-based and cannot cross threads).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::artifacts::{ArtifactStore, TensorSpec};
+
+/// A host-side tensor (f32, row-major) moving through the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Random tensor from the deterministic workload generator.
+    pub fn random(shape: Vec<usize>, rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        rng.fill_f32(&mut data, 1.0);
+        Tensor { shape, data }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape == spec.shape
+    }
+}
+
+/// Engine errors.
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("unknown artifact '{0}'")]
+    UnknownArtifact(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error(
+        "input {index} shape {got:?} does not match contract {want:?} \
+         for artifact '{artifact}'"
+    )]
+    ShapeMismatch {
+        artifact: String,
+        index: usize,
+        got: Vec<usize>,
+        want: Vec<usize>,
+    },
+    #[error("artifact '{artifact}' expects {want} inputs, got {got}")]
+    ArityMismatch {
+        artifact: String,
+        want: usize,
+        got: usize,
+    },
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+/// One thread's compiled-executable cache over a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    store: ArtifactStore,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Build an engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Engine, EngineError> {
+        let store = ArtifactStore::discover(artifact_dir)
+            .map_err(EngineError::Xla)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            store,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Engine over the default artifact location.
+    pub fn with_default_artifacts() -> Result<Engine, EngineError> {
+        Engine::new(&super::artifact_dir())
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&mut self, name: &str) -> Result<(), EngineError> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        if self.store.meta(name).is_none() {
+            return Err(EngineError::UnknownArtifact(name.to_string()));
+        }
+        let path = self.store.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Is an executable already compiled in this engine?
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute an artifact on a set of input tensors, validating the
+    /// shape contract first. Returns the output tensors.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>, EngineError> {
+        let meta = self
+            .store
+            .meta(name)
+            .ok_or_else(|| EngineError::UnknownArtifact(name.to_string()))?
+            .clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(EngineError::ArityMismatch {
+                artifact: name.to_string(),
+                want: meta.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if !t.matches(spec) {
+                return Err(EngineError::ShapeMismatch {
+                    artifact: name.to_string(),
+                    index: i,
+                    got: t.shape.clone(),
+                    want: spec.shape.clone(),
+                });
+            }
+        }
+        self.load(name)?;
+        let exe = self.cache.get(name).expect("just loaded");
+
+        // Hot path: host data → device buffer is a single copy
+        // (no Literal materialization), execute_b runs on buffers,
+        // and the single array output is read back with one
+        // copy_raw_to_host_sync into a pre-sized Vec.
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            })
+            .collect::<Result<_, _>>()?;
+
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        // Lowered with return_tuple=False; every registered variant
+        // has exactly one output array (enforced here so a future
+        // multi-output variant fails loudly rather than silently
+        // misreading a tuple buffer).
+        if meta.outputs.len() != 1 {
+            return Err(EngineError::Xla(format!(
+                "artifact '{name}' declares {} outputs; the fast \
+                 single-output path requires exactly 1",
+                meta.outputs.len()
+            )));
+        }
+        let spec = &meta.outputs[0];
+        // copy_raw_to_host is unimplemented on the TFRT CPU client, so
+        // the readback goes through a (non-tuple) Literal: one device→
+        // host copy + one Literal→Vec copy. Still one copy fewer than
+        // the original tuple path on both sides.
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(vec![Tensor::new(spec.shape.clone(), lit.to_vec::<f32>()?)])
+    }
+
+    /// Convenience: batched matmul through a named matmul artifact.
+    pub fn matmul(
+        &mut self,
+        name: &str,
+        xs: Tensor,
+        ys: Tensor,
+    ) -> Result<Tensor, EngineError> {
+        let mut out = self.execute(name, &[xs, ys])?;
+        Ok(out.remove(0))
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("cached", &self.cache.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+/// Pure-Rust reference matmul used by tests to validate engine output
+/// (the rust-side analogue of python's ref.py).
+pub fn matmul_ref(xs: &Tensor, ys: &Tensor) -> Tensor {
+    let (b, n) = (xs.shape[0], xs.shape[1]);
+    let mut out = vec![0.0f32; b * n * n];
+    for m in 0..b {
+        let xo = m * n * n;
+        for i in 0..n {
+            for k in 0..n {
+                let xv = xs.data[xo + i * n + k];
+                if xv == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[xo + i * n + j] += xv * ys.data[xo + k * n + j];
+                }
+            }
+        }
+    }
+    Tensor::new(xs.shape.clone(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn engine() -> Option<Engine> {
+        let dir = crate::runtime::artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping engine test: run `make artifacts`");
+            return None;
+        }
+        Some(Engine::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn executes_matmul16_and_matches_reference() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Rng::new(42);
+        let xs = Tensor::random(vec![64, 16, 16], &mut rng);
+        let ys = Tensor::random(vec![64, 16, 16], &mut rng);
+        let out = eng.matmul("matmul16_b64", xs.clone(), ys.clone()).unwrap();
+        let expect = matmul_ref(&xs, &ys);
+        assert_eq!(out.shape, expect.shape);
+        for (a, b) in out.data.iter().zip(&expect.data) {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn executes_matmul32() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Rng::new(1);
+        let xs = Tensor::random(vec![64, 32, 32], &mut rng);
+        let ys = Tensor::random(vec![64, 32, 32], &mut rng);
+        let out = eng.matmul("matmul32_b64", xs.clone(), ys.clone()).unwrap();
+        let expect = matmul_ref(&xs, &ys);
+        for (a, b) in out.data.iter().zip(&expect.data) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn loopback_is_identity() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Rng::new(2);
+        let xs = Tensor::random(vec![256, 16, 16], &mut rng);
+        let out = eng.execute("loopback16_b256", &[xs.clone()]).unwrap();
+        assert_eq!(out[0], xs);
+    }
+
+    #[test]
+    fn saxpy_matches() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Rng::new(3);
+        let a = Tensor::new(vec![], vec![2.5]);
+        let xs = Tensor::random(vec![256, 16, 16], &mut rng);
+        let ys = Tensor::random(vec![256, 16, 16], &mut rng);
+        let out = eng
+            .execute("saxpy16_b256", &[a, xs.clone(), ys.clone()])
+            .unwrap();
+        for ((o, x), y) in out[0].data.iter().zip(&xs.data).zip(&ys.data) {
+            assert!((o - (2.5 * x + y)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn checksum_matches() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Rng::new(4);
+        let xs = Tensor::random(vec![256, 16, 16], &mut rng);
+        let out = eng.execute("checksum16_b256", &[xs.clone()]).unwrap();
+        assert_eq!(out[0].shape, vec![256]);
+        for (m, o) in out[0].data.iter().enumerate() {
+            let s: f32 = xs.data[m * 256..(m + 1) * 256].iter().sum();
+            assert!((o - s).abs() < 1e-2, "{o} vs {s}");
+        }
+    }
+
+    #[test]
+    fn shape_contract_enforced() {
+        let Some(mut eng) = engine() else { return };
+        let bad = Tensor::zeros(vec![32, 16, 16]); // batch 32 != 64
+        let good = Tensor::zeros(vec![64, 16, 16]);
+        let err = eng.execute("matmul16_b64", &[bad, good]).unwrap_err();
+        assert!(matches!(err, EngineError::ShapeMismatch { .. }));
+    }
+
+    #[test]
+    fn arity_enforced() {
+        let Some(mut eng) = engine() else { return };
+        let t = Tensor::zeros(vec![64, 16, 16]);
+        let err = eng.execute("matmul16_b64", &[t]).unwrap_err();
+        assert!(matches!(err, EngineError::ArityMismatch { .. }));
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(mut eng) = engine() else { return };
+        assert!(matches!(
+            eng.load("nonexistent_core"),
+            Err(EngineError::UnknownArtifact(_))
+        ));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(mut eng) = engine() else { return };
+        assert!(!eng.is_loaded("matmul16_b64"));
+        eng.load("matmul16_b64").unwrap();
+        assert!(eng.is_loaded("matmul16_b64"));
+        eng.load("matmul16_b64").unwrap(); // second load is a no-op
+    }
+
+    #[test]
+    fn matmul_ref_is_correct_on_identity() {
+        let b = 2;
+        let n = 4;
+        let mut eye = Tensor::zeros(vec![b, n, n]);
+        for m in 0..b {
+            for i in 0..n {
+                eye.data[m * n * n + i * n + i] = 1.0;
+            }
+        }
+        let mut rng = Rng::new(5);
+        let xs = Tensor::random(vec![b, n, n], &mut rng);
+        let out = matmul_ref(&xs, &eye);
+        assert_eq!(out, xs);
+    }
+}

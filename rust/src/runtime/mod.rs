@@ -1,0 +1,34 @@
+//! PJRT execution engine — the vFPGA "user core" compute substrate.
+//!
+//! Loads the HLO-text artifacts that `make artifacts` lowered from the
+//! L2 JAX models (which call the L1 Pallas kernels), compiles them on
+//! the PJRT CPU client via the `xla` crate, and executes them on the
+//! request path. Python never runs here.
+//!
+//! Thread model: the `xla` crate's `PjRtClient` is `Rc`-based and not
+//! `Send`, so an [`engine::Engine`] is *thread-local* — every vFPGA
+//! core worker constructs its own engine (compilation of the small
+//! stream kernels takes milliseconds and is cached per thread).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactMeta, ArtifactStore, TensorSpec};
+pub use engine::{Engine, EngineError, Tensor};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `RC3E_ARTIFACTS` env var, else
+/// `artifacts/` relative to the current dir, else relative to the
+/// crate manifest (so `cargo test` works from any cwd).
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("RC3E_ARTIFACTS") {
+        return dir.into();
+    }
+    let cwd = std::path::Path::new(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.json").exists() {
+        return cwd.to_path_buf();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR)
+}

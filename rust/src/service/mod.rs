@@ -1,0 +1,297 @@
+//! The three cloud service-model façades (Section III).
+//!
+//! These are the *user-visible* surfaces; each wraps the hypervisor
+//! with exactly the rights and visibility its model grants:
+//!
+//! * [`RsaasService`] — full physical FPGAs (optionally inside a VM),
+//!   full-bitstream freedom, the whole design flow as a cloud service;
+//! * [`RaaasService`] — vFPGAs behind the RC2F framework only: users
+//!   see sizes, allocate, program *partial* bitfiles through the
+//!   sanity checker, and stream through the host API;
+//! * [`BaaasService`] — no FPGA visibility at all: users see named
+//!   services; allocation, PR and streaming happen in the background
+//!   with provider bitfiles.
+
+use std::sync::Arc;
+
+use crate::bitstream::Bitstream;
+use crate::config::ServiceModel;
+use crate::hypervisor::{Hypervisor, HypervisorError};
+use crate::rc2f::stream::{StreamConfig, StreamOutcome, StreamRunner};
+use crate::util::ids::{AllocationId, FpgaId, UserId, VfpgaId};
+
+/// RAaaS: vFPGA leases + framework streaming.
+pub struct RaaasService {
+    pub hv: Arc<Hypervisor>,
+}
+
+impl RaaasService {
+    pub fn new(hv: Arc<Hypervisor>) -> RaaasService {
+        RaaasService { hv }
+    }
+
+    /// Lease one vFPGA. The user learns the vFPGA id — but not the
+    /// physical slot; bitfiles are retargeted transparently.
+    pub fn alloc(
+        &self,
+        user: UserId,
+    ) -> Result<(AllocationId, VfpgaId), HypervisorError> {
+        let (alloc, vfpga, _, _) =
+            self.hv.alloc_vfpga(user, ServiceModel::RAaaS)?;
+        Ok((alloc, vfpga))
+    }
+
+    /// Program a user core. The bitfile may target any slot — it is
+    /// retargeted to the actual placement (region-hiding, the
+    /// future-work feature).
+    pub fn program(
+        &self,
+        alloc: AllocationId,
+        user: UserId,
+        bitfile: &Bitstream,
+    ) -> Result<(), HypervisorError> {
+        let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
+        let (fpga, slot, quarters) = {
+            let db = self.hv.db.lock().unwrap();
+            let fpga = db
+                .device_of_vfpga(vfpga)
+                .ok_or(HypervisorError::BadAllocation(alloc))?
+                .id;
+            drop(db);
+            let dev = self.hv.device(fpga)?;
+            let slot = dev.slot_of[&vfpga];
+            let quarters = dev
+                .fpga
+                .lock()
+                .unwrap()
+                .region(vfpga)
+                .map_err(|e| HypervisorError::Device(e.to_string()))?
+                .shape
+                .quarters();
+            (fpga, slot, quarters)
+        };
+        let placed =
+            crate::hls::flow::DesignFlow::retarget(bitfile, slot, quarters);
+        self.hv.program_vfpga(alloc, user, &placed)?;
+        let _ = fpga;
+        Ok(())
+    }
+
+    /// Stream a workload through the configured core.
+    pub fn stream(
+        &self,
+        alloc: AllocationId,
+        user: UserId,
+        cfg: &StreamConfig,
+    ) -> Result<StreamOutcome, HypervisorError> {
+        let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
+        let fpga = {
+            let db = self.hv.db.lock().unwrap();
+            db.device_of_vfpga(vfpga)
+                .ok_or(HypervisorError::BadAllocation(alloc))?
+                .id
+        };
+        let api = self.hv.host_api(fpga)?;
+        let session = api
+            .open_session(user, vfpga)
+            .map_err(|e| HypervisorError::Db(e.to_string()))?;
+        session
+            .stream(cfg)
+            .map_err(|e| HypervisorError::Db(e.to_string()))
+    }
+
+    pub fn release(&self, alloc: AllocationId) -> Result<(), HypervisorError> {
+        self.hv.release(alloc)
+    }
+}
+
+/// RSaaS: whole physical devices.
+pub struct RsaasService {
+    pub hv: Arc<Hypervisor>,
+}
+
+impl RsaasService {
+    pub fn new(hv: Arc<Hypervisor>) -> RsaasService {
+        RsaasService { hv }
+    }
+
+    /// Lease a full physical FPGA.
+    pub fn alloc(
+        &self,
+        user: UserId,
+    ) -> Result<(AllocationId, FpgaId), HypervisorError> {
+        let (alloc, fpga, _) = self.hv.alloc_physical(user, None)?;
+        Ok((alloc, fpga))
+    }
+
+    /// Write a full user bitstream (with PCIe hot-plug handling).
+    pub fn program_full(
+        &self,
+        alloc: AllocationId,
+        user: UserId,
+        bs: &Bitstream,
+    ) -> Result<(), HypervisorError> {
+        self.hv.program_full(alloc, user, bs)?;
+        Ok(())
+    }
+
+    pub fn release(&self, alloc: AllocationId) -> Result<(), HypervisorError> {
+        self.hv.release(alloc)
+    }
+}
+
+/// BAaaS: named provider services, FPGAs invisible.
+pub struct BaaasService {
+    pub hv: Arc<Hypervisor>,
+}
+
+impl BaaasService {
+    pub fn new(hv: Arc<Hypervisor>) -> BaaasService {
+        BaaasService { hv }
+    }
+
+    /// What end users see: the service catalogue.
+    pub fn catalogue(&self) -> Vec<String> {
+        self.hv.service_names()
+    }
+
+    /// Invoke a service: the provider allocates a vFPGA in the
+    /// background, programs the prebuilt bitfile, streams, releases.
+    /// The caller never sees device ids.
+    pub fn invoke(
+        &self,
+        user: UserId,
+        service: &str,
+        cfg: &StreamConfig,
+    ) -> Result<StreamOutcome, HypervisorError> {
+        let bitfile = self.hv.service_bitfile(service)?;
+        let (alloc, vfpga, fpga, _) =
+            self.hv.alloc_vfpga(user, ServiceModel::BAaaS)?;
+        let result = (|| {
+            let dev = self.hv.device(fpga)?;
+            let slot = dev.slot_of[&vfpga];
+            let quarters = dev
+                .fpga
+                .lock()
+                .unwrap()
+                .region(vfpga)
+                .map_err(|e| HypervisorError::Device(e.to_string()))?
+                .shape
+                .quarters();
+            let placed = crate::hls::flow::DesignFlow::retarget(
+                &bitfile, slot, quarters,
+            );
+            self.hv.program_vfpga(alloc, user, &placed)?;
+            let runner = StreamRunner::new(
+                Arc::clone(&self.hv.clock),
+                Arc::clone(&dev.link),
+            );
+            runner.run(cfg).map_err(HypervisorError::Db)
+        })();
+        let _ = self.hv.release(alloc);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    fn hv() -> Arc<Hypervisor> {
+        Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap())
+    }
+
+    fn artifacts_present() -> bool {
+        crate::runtime::artifact_dir().join("manifest.json").exists()
+    }
+
+    fn mm16_bitfile() -> Bitstream {
+        crate::bitstream::BitstreamBuilder::partial("xc7vx485t", "matmul16")
+            .resources(crate::fpga::resources::Resources::new(
+                25_298, 41_654, 14, 80,
+            ))
+            .frames(crate::hls::flow::region_window(0, 1))
+            .artifact("matmul16_b256")
+            .build()
+    }
+
+    #[test]
+    fn raaas_end_to_end() {
+        if !artifacts_present() {
+            return;
+        }
+        let svc = RaaasService::new(hv());
+        let user = svc.hv.add_user("alice");
+        let (alloc, _vfpga) = svc.alloc(user).unwrap();
+        svc.program(alloc, user, &mm16_bitfile()).unwrap();
+        let out = svc
+            .stream(alloc, user, &StreamConfig::matmul16(512))
+            .unwrap();
+        assert_eq!(out.validation_failures, 0);
+        svc.release(alloc).unwrap();
+    }
+
+    #[test]
+    fn raaas_program_retargets_foreign_slot_bitfile() {
+        let svc = RaaasService::new(hv());
+        let user = svc.hv.add_user("alice");
+        // Fill slot 0 so the next lease lands on slot 1 — the bitfile
+        // below still targets slot 0's window and must be retargeted.
+        let (a0, _) = svc.alloc(user).unwrap();
+        let (a1, _) = svc.alloc(user).unwrap();
+        svc.program(a0, user, &mm16_bitfile()).unwrap();
+        svc.program(a1, user, &mm16_bitfile()).unwrap(); // would fail unretargeted
+        svc.release(a0).unwrap();
+        svc.release(a1).unwrap();
+    }
+
+    #[test]
+    fn baaas_hides_devices_and_works() {
+        if !artifacts_present() {
+            return;
+        }
+        let svc = BaaasService::new(hv());
+        svc.hv.register_service("mm16", mm16_bitfile());
+        assert_eq!(svc.catalogue(), vec!["mm16".to_string()]);
+        let user = svc.hv.add_user("enduser");
+        let out = svc
+            .invoke(user, "mm16", &StreamConfig::matmul16(512))
+            .unwrap();
+        assert_eq!(out.validation_failures, 0);
+        // Lease returned afterwards.
+        let db = svc.hv.db.lock().unwrap();
+        assert!(db.user_allocations(user).is_empty());
+    }
+
+    #[test]
+    fn baaas_unknown_service() {
+        let svc = BaaasService::new(hv());
+        let user = svc.hv.add_user("enduser");
+        assert!(matches!(
+            svc.invoke(user, "ghost", &StreamConfig::matmul16(64)),
+            Err(HypervisorError::UnknownService(_))
+        ));
+    }
+
+    #[test]
+    fn rsaas_full_cycle() {
+        // paper_testbed has no RSaaS devices; use single_vc707.
+        let hv = Arc::new(
+            Hypervisor::boot(
+                &crate::config::ClusterConfig::single_vc707(),
+                VirtualClock::new(),
+                crate::hypervisor::PlacementPolicy::ConsolidateFirst,
+            )
+            .unwrap(),
+        );
+        let svc = RsaasService::new(hv);
+        let user = svc.hv.add_user("hwdev");
+        let (alloc, _fpga) = svc.alloc(user).unwrap();
+        let bs =
+            crate::bitstream::BitstreamBuilder::full("xc7vx485t", "mydesign")
+                .build();
+        svc.program_full(alloc, user, &bs).unwrap();
+        svc.release(alloc).unwrap();
+    }
+}

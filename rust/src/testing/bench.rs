@@ -1,0 +1,122 @@
+//! Bench harness (criterion substitute).
+//!
+//! `cargo bench` binaries use `harness = false` and drive this:
+//! warmup iterations, N measured iterations, median/mean/min/max in
+//! wall time. Virtual-time measurements are taken by the benches
+//! themselves from the [`crate::util::clock::VirtualClock`].
+
+use std::time::Instant;
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>5} iters  mean {:>10.4} ms  median {:>10.4} ms  \
+             min {:>10.4} ms  max {:>10.4} ms",
+            self.name,
+            self.iterations,
+            self.mean_s * 1e3,
+            self.median_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3
+        )
+    }
+}
+
+/// Wall-clock bench runner.
+pub struct Bencher {
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Bencher {
+        assert!(iters >= 1);
+        Bencher { warmup, iters }
+    }
+
+    /// Quick defaults for heavyweight end-to-end benches.
+    pub fn quick() -> Bencher {
+        Bencher::new(1, 3)
+    }
+
+    /// Defaults for microbenches.
+    pub fn standard() -> Bencher {
+        Bencher::new(3, 10)
+    }
+
+    /// Run `f` and collect stats.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        for _ in 0..self.warmup {
+            let _ = f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            let _ = f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iterations: self.iters,
+            mean_s: mean,
+            median_s: samples[samples.len() / 2],
+            min_s: samples[0],
+            max_s: *samples.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_ordered_stats() {
+        let b = Bencher::new(0, 5);
+        let mut n = 0u64;
+        let r = b.run("spin", || {
+            n += 1;
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert_eq!(n, 5);
+        assert_eq!(r.iterations, 5);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.median_s <= r.max_s);
+        assert!(r.mean_s > 0.0);
+    }
+
+    #[test]
+    fn warmup_not_measured() {
+        let b = Bencher::new(2, 1);
+        let mut calls = 0;
+        let r = b.run("w", || calls += 1);
+        assert_eq!(calls, 3); // 2 warmup + 1 measured
+        assert_eq!(r.iterations, 1);
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iterations: 3,
+            mean_s: 0.001,
+            median_s: 0.001,
+            min_s: 0.0009,
+            max_s: 0.0011,
+        };
+        assert!(r.line().contains("3 iters"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Failure injection.
+//!
+//! Integration tests flip named fail points on to exercise error
+//! paths that are otherwise unreachable in a healthy simulation:
+//! node-agent death mid-RPC, bitfile corruption in transit, PR
+//! timeouts. Production code queries `FailPlan::should_fail(name)`
+//! at the injection site; the default plan never fires, costs one
+//! atomic load, and is compiled in (failures must be testable in
+//! release builds too).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One named injection site's trigger rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailPoint {
+    /// Never fire (default).
+    Off,
+    /// Fire on every hit.
+    Always,
+    /// Fire on the nth hit (1-based), once.
+    OnHit(u64),
+    /// Fire on every hit after the nth.
+    AfterHit(u64),
+}
+
+/// A process-wide plan mapping site names to triggers.
+#[derive(Debug, Default)]
+pub struct FailPlan {
+    sites: Mutex<BTreeMap<String, (FailPoint, Arc<AtomicU64>)>>,
+}
+
+impl FailPlan {
+    pub fn new() -> Arc<FailPlan> {
+        Arc::new(FailPlan::default())
+    }
+
+    /// Arm a fail point.
+    pub fn arm(&self, name: &str, point: FailPoint) {
+        self.sites.lock().unwrap().insert(
+            name.to_string(),
+            (point, Arc::new(AtomicU64::new(0))),
+        );
+    }
+
+    /// Disarm (back to Off).
+    pub fn disarm(&self, name: &str) {
+        self.sites.lock().unwrap().remove(name);
+    }
+
+    /// Called at the injection site: should this hit fail?
+    pub fn should_fail(&self, name: &str) -> bool {
+        let sites = self.sites.lock().unwrap();
+        let Some((point, hits)) = sites.get(name) else {
+            return false;
+        };
+        let hit = hits.fetch_add(1, Ordering::SeqCst) + 1;
+        match point {
+            FailPoint::Off => false,
+            FailPoint::Always => true,
+            FailPoint::OnHit(n) => hit == *n,
+            FailPoint::AfterHit(n) => hit > *n,
+        }
+    }
+
+    /// Hits recorded at a site (armed sites only).
+    pub fn hits(&self, name: &str) -> u64 {
+        self.sites
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|(_, h)| h.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_never_fires() {
+        let plan = FailPlan::new();
+        for _ in 0..10 {
+            assert!(!plan.should_fail("anything"));
+        }
+    }
+
+    #[test]
+    fn always_fires_every_time() {
+        let plan = FailPlan::new();
+        plan.arm("x", FailPoint::Always);
+        assert!(plan.should_fail("x"));
+        assert!(plan.should_fail("x"));
+        assert_eq!(plan.hits("x"), 2);
+    }
+
+    #[test]
+    fn on_hit_fires_once() {
+        let plan = FailPlan::new();
+        plan.arm("x", FailPoint::OnHit(3));
+        assert!(!plan.should_fail("x"));
+        assert!(!plan.should_fail("x"));
+        assert!(plan.should_fail("x"));
+        assert!(!plan.should_fail("x"));
+    }
+
+    #[test]
+    fn after_hit_fires_from_then_on() {
+        let plan = FailPlan::new();
+        plan.arm("x", FailPoint::AfterHit(2));
+        assert!(!plan.should_fail("x"));
+        assert!(!plan.should_fail("x"));
+        assert!(plan.should_fail("x"));
+        assert!(plan.should_fail("x"));
+    }
+
+    #[test]
+    fn disarm_restores_default() {
+        let plan = FailPlan::new();
+        plan.arm("x", FailPoint::Always);
+        assert!(plan.should_fail("x"));
+        plan.disarm("x");
+        assert!(!plan.should_fail("x"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Test infrastructure built in-tree: a property-testing
+//! mini-framework (proptest is unavailable offline), a bench harness
+//! (criterion substitute) and failure-injection hooks.
+
+pub mod bench;
+pub mod failpoint;
+pub mod prop;
+
+pub use bench::{BenchResult, Bencher};
+pub use failpoint::{FailPoint, FailPlan};
+pub use prop::{forall, Gen, PropError};

@@ -1,0 +1,196 @@
+//! Property-testing mini-framework (proptest substitute).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs. On failure it *shrinks*: the generator is re-run with a
+//! shrink budget that biases sizes/magnitudes down, and the smallest
+//! failing case found is reported together with the case seed so the
+//! failure replays deterministically.
+
+use crate::util::rng::Rng;
+
+/// A generator: draws a value from randomness at a given size bound.
+pub struct Gen<'a, T> {
+    f: Box<dyn Fn(&mut Rng, usize) -> T + 'a>,
+}
+
+impl<'a, T: std::fmt::Debug + 'a> Gen<'a, T> {
+    pub fn new(f: impl Fn(&mut Rng, usize) -> T + 'a) -> Gen<'a, T> {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn gen(&self, rng: &mut Rng, size: usize) -> T {
+        (self.f)(rng, size)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: std::fmt::Debug + 'a>(
+        self,
+        g: impl Fn(T) -> U + 'a,
+    ) -> Gen<'a, U> {
+        Gen::new(move |rng, size| g(self.gen(rng, size)))
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use super::Gen;
+
+    /// u64 in [0, size].
+    pub fn small_u64<'a>() -> Gen<'a, u64> {
+        Gen::new(|rng, size| rng.next_below(size as u64 + 1))
+    }
+
+    /// u64 in [lo, hi] (size-independent).
+    pub fn u64_range<'a>(lo: u64, hi: u64) -> Gen<'a, u64> {
+        Gen::new(move |rng, _| rng.range(lo, hi))
+    }
+
+    /// Vec of length ≤ size from an element generator function.
+    pub fn vec_of<'a, T: std::fmt::Debug + 'a>(
+        elem: impl Fn(&mut crate::util::rng::Rng) -> T + 'a,
+    ) -> Gen<'a, Vec<T>> {
+        Gen::new(move |rng, size| {
+            let len = rng.next_below(size as u64 + 1) as usize;
+            (0..len).map(|_| elem(rng)).collect()
+        })
+    }
+
+    /// f64 in [-size, size].
+    pub fn f64_sym<'a>() -> Gen<'a, f64> {
+        Gen::new(|rng, size| (rng.next_f64() * 2.0 - 1.0) * size as f64)
+    }
+}
+
+/// A failing property report.
+#[derive(Debug)]
+pub struct PropError {
+    pub case_seed: u64,
+    pub shrunk_input: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed (replay seed {}): input = {}, {}",
+            self.case_seed, self.shrunk_input, self.message
+        )
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn from `gen`. Shrinks on
+/// failure by retrying the failing case seed at smaller sizes.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> Result<(), PropError> {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        // Sizes ramp up so early cases are small by construction.
+        let size = 1 + case * 64 / cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let input = gen.gen(&mut rng, size);
+        if let Err(message) = prop(&input) {
+            // Shrink: re-generate at decreasing sizes from the same
+            // case seed; keep the smallest size that still fails.
+            let mut best = (format!("{input:?}"), message);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut rng = Rng::new(case_seed);
+                let candidate = gen.gen(&mut rng, s);
+                if let Err(m) = prop(&candidate) {
+                    best = (format!("{candidate:?}"), m);
+                } else {
+                    break;
+                }
+            }
+            return Err(PropError {
+                case_seed,
+                shrunk_input: best.0,
+                message: best.1,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let gen = gens::small_u64();
+        forall(1, 200, &gen, |&x| {
+            if x.checked_add(1).is_some() {
+                Ok(())
+            } else {
+                Err("overflow".into())
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let gen = gens::small_u64();
+        let err = forall(2, 500, &gen, |&x| {
+            if x < 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        })
+        .unwrap_err();
+        // The shrunk input should still fail, and shrinking should
+        // have reduced it from the original failing size.
+        let v: u64 = err.shrunk_input.parse().unwrap();
+        assert!(v >= 10);
+        assert!(err.message.contains("too big"));
+    }
+
+    #[test]
+    fn replay_seed_reproduces() {
+        let gen = gens::small_u64();
+        let err = forall(3, 500, &gen, |&x| {
+            if x % 7 != 3 {
+                Ok(())
+            } else {
+                Err("hit".into())
+            }
+        })
+        .unwrap_err();
+        // Replaying the case seed at any size yields deterministic
+        // values; just assert the recorded input parses and fails.
+        let v: u64 = err.shrunk_input.parse().unwrap();
+        assert_eq!(v % 7, 3);
+    }
+
+    #[test]
+    fn vec_generator_respects_size() {
+        let gen = gens::vec_of(|rng| rng.next_below(100));
+        let mut rng = Rng::new(4);
+        for size in [1usize, 8, 64] {
+            let v = gen.gen(&mut rng, size);
+            assert!(v.len() <= size);
+        }
+    }
+
+    #[test]
+    fn map_transforms() {
+        let gen = gens::small_u64().map(|x| x * 2);
+        forall(5, 100, &gen, |&x| {
+            if x % 2 == 0 {
+                Ok(())
+            } else {
+                Err("odd".into())
+            }
+        })
+        .unwrap();
+    }
+}

@@ -1,0 +1,130 @@
+//! Wire/byte-buffer helpers shared by the middleware protocol, the
+//! bitstream container format and the PCIe DMA simulation.
+
+/// Append a u32 little-endian.
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a u64 little-endian.
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed UTF-8 string (u32 length).
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Cursor for reading the encodings above, with range checks.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+/// Error type for truncated/invalid reads.
+#[derive(Debug, thiserror::Error)]
+#[error("byte reader error: {0}")]
+pub struct ReadError(pub String);
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], ReadError> {
+        if self.remaining() < n {
+            return Err(ReadError(format!(
+                "need {n} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, ReadError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ReadError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, ReadError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ReadError("invalid utf-8 string".into()))
+    }
+}
+
+/// View an f32 slice as bytes (no copy) — DMA buffers.
+pub fn f32_as_bytes(data: &[f32]) -> &[u8] {
+    // Safety: f32 has no invalid bit patterns and alignment of u8 is 1.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    }
+}
+
+/// Copy bytes into an f32 vec (handles the paper's 32-bit float
+/// streaming payloads coming back from device files).
+pub fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>, ReadError> {
+    if bytes.len() % 4 != 0 {
+        return Err(ReadError(format!(
+            "byte length {} not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ints_and_strings() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEADBEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_str(&mut buf, "vfpga-0");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.str().unwrap(), "vfpga-0");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncated_reads_error() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 10);
+        let mut r = Reader::new(&buf);
+        assert!(r.str().is_err()); // claims 10 bytes, has 0
+        let mut r2 = Reader::new(&buf[..2]);
+        assert!(r2.u32().is_err());
+    }
+
+    #[test]
+    fn f32_byte_views() {
+        let data = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let bytes = f32_as_bytes(&data);
+        assert_eq!(bytes.len(), 16);
+        assert_eq!(bytes_to_f32(bytes).unwrap(), data);
+    }
+
+    #[test]
+    fn bytes_to_f32_rejects_ragged() {
+        assert!(bytes_to_f32(&[0, 0, 0]).is_err());
+    }
+}

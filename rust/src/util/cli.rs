@@ -1,0 +1,212 @@
+//! Tiny command-line argument parser (clap substitute).
+//!
+//! Supports the subcommand + flags surface the `rc3e` binary and the
+//! examples need: `--flag`, `--key value`, `--key=value`, positional
+//! arguments, typed accessors with defaults, and auto-generated usage
+//! text. Unknown flags are errors so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Declarative specification of one flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parsed arguments: flags + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Parse error with the offending token.
+#[derive(Debug, thiserror::Error)]
+#[error("argument error: {0}")]
+pub struct ArgError(pub String);
+
+impl Args {
+    /// Parse `argv` (without the program name) against `specs`.
+    pub fn parse(
+        argv: &[String],
+        specs: &[FlagSpec],
+    ) -> Result<Args, ArgError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| ArgError(format!("unknown flag --{name}")))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| {
+                                ArgError(format!("--{name} needs a value"))
+                            })?,
+                    };
+                    out.flags.insert(name.to_string(), value);
+                } else {
+                    if inline.is_some() {
+                        return Err(ArgError(format!(
+                            "--{name} takes no value"
+                        )));
+                    }
+                    out.bools.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// u64 flag with default; error if present but unparsable.
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: bad number '{s}'"))),
+        }
+    }
+
+    /// f64 flag with default.
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: bad number '{s}'"))),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, summary: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("{cmd} — {summary}\n\nFlags:\n");
+    for s in specs {
+        let arg = if s.takes_value {
+            format!("--{} <v>", s.name)
+        } else {
+            format!("--{}", s.name)
+        };
+        out.push_str(&format!("  {arg:<24} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec {
+                name: "node",
+                takes_value: true,
+                help: "node id",
+            },
+            FlagSpec {
+                name: "verbose",
+                takes_value: false,
+                help: "chatty",
+            },
+            FlagSpec {
+                name: "cores",
+                takes_value: true,
+                help: "core count",
+            },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_separate_and_inline_values() {
+        let a =
+            Args::parse(&sv(&["--node", "n0", "--cores=4"]), &specs()).unwrap();
+        assert_eq!(a.get("node"), Some("n0"));
+        assert_eq!(a.get_u64("cores", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn bool_flags_and_positionals() {
+        let a = Args::parse(
+            &sv(&["alloc", "--verbose", "vc707"]),
+            &specs(),
+        )
+        .unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["alloc", "vc707"]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Args::parse(&sv(&["--bogus"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--node"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn value_on_bool_flag_is_error() {
+        assert!(Args::parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&sv(&["--cores", "four"]), &specs()).unwrap();
+        assert!(a.get_u64("cores", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_u64("cores", 2).unwrap(), 2);
+        assert_eq!(a.get_or("node", "mgmt"), "mgmt");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn usage_lists_flags() {
+        let u = usage("rc3e alloc", "allocate a vFPGA", &specs());
+        assert!(u.contains("--node <v>"));
+        assert!(u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,238 @@
+//! Virtual clock for hardware-latency simulation.
+//!
+//! The paper's latencies span five orders of magnitude (0.2 ms ucs
+//! access → 28 s JTAG configuration). Replaying them in wall-clock
+//! would make the test suite unusable, so every hardware-timed
+//! operation charges its duration to a [`VirtualClock`] instead.
+//!
+//! A clock can optionally *sleep* a scaled-down fraction of the charged
+//! time (`TimeScale`), which the benches use to recover realistic
+//! concurrency interleavings, while unit tests run with pure
+//! accounting (scale = 0 ⇒ never sleeps).
+//!
+//! The clock is shared (`Arc` + atomics) because vFPGA cores charge it
+//! from worker threads concurrently; `advance_max` implements the
+//! "parallel section" rule: concurrent hardware operations overlap, so
+//! the clock moves to the max end-time, not the sum.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Nanosecond-resolution virtual time point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VirtualTime(pub u64);
+
+impl VirtualTime {
+    pub const ZERO: VirtualTime = VirtualTime(0);
+
+    pub fn from_secs_f64(s: f64) -> VirtualTime {
+        VirtualTime((s * 1e9) as u64)
+    }
+    pub fn from_millis_f64(ms: f64) -> VirtualTime {
+        VirtualTime((ms * 1e6) as u64)
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn saturating_sub(self, other: VirtualTime) -> VirtualTime {
+        VirtualTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl std::ops::Add for VirtualTime {
+    type Output = VirtualTime;
+    fn add(self, rhs: VirtualTime) -> VirtualTime {
+        VirtualTime(self.0 + rhs.0)
+    }
+}
+
+impl std::fmt::Display for VirtualTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ms = self.as_millis_f64();
+        if ms >= 1000.0 {
+            write!(f, "{:.3} s", ms / 1000.0)
+        } else {
+            write!(f, "{ms:.3} ms")
+        }
+    }
+}
+
+/// Shared monotonically-advancing virtual clock.
+///
+/// `scale_denominator` controls optional wall-clock sleeping:
+/// * `0` — pure accounting, never sleeps (unit tests);
+/// * `n > 0` — sleeps `charged / n` wall time (benches use e.g. 1000
+///   so a simulated 28 s JTAG configuration costs 28 ms of real time,
+///   preserving interleavings without the wait).
+#[derive(Debug)]
+pub struct VirtualClock {
+    now_ns: AtomicU64,
+    scale_denominator: u64,
+}
+
+impl VirtualClock {
+    /// Pure-accounting clock (never sleeps).
+    pub fn new() -> Arc<VirtualClock> {
+        Arc::new(VirtualClock {
+            now_ns: AtomicU64::new(0),
+            scale_denominator: 0,
+        })
+    }
+
+    /// Clock that also sleeps `charged / denominator` of wall time.
+    pub fn with_scale(denominator: u64) -> Arc<VirtualClock> {
+        Arc::new(VirtualClock {
+            now_ns: AtomicU64::new(0),
+            scale_denominator: denominator,
+        })
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> VirtualTime {
+        VirtualTime(self.now_ns.load(Ordering::SeqCst))
+    }
+
+    /// Charge a *serial* duration: the clock advances by `d`.
+    pub fn advance(&self, d: VirtualTime) -> VirtualTime {
+        self.maybe_sleep(d);
+        VirtualTime(self.now_ns.fetch_add(d.0, Ordering::SeqCst) + d.0)
+    }
+
+    /// Charge a *parallel* duration: the clock advances to at least
+    /// `start + d`. Concurrent operations that overlap in hardware
+    /// (e.g. four cores streaming simultaneously) each call this with
+    /// their own start; the clock lands on the max end-time.
+    pub fn advance_max(&self, start: VirtualTime, d: VirtualTime) {
+        self.maybe_sleep(d);
+        let end = start.0 + d.0;
+        self.now_ns.fetch_max(end, Ordering::SeqCst);
+    }
+
+    /// Elapsed virtual time since `start`.
+    pub fn since(&self, start: VirtualTime) -> VirtualTime {
+        self.now().saturating_sub(start)
+    }
+
+    fn maybe_sleep(&self, d: VirtualTime) {
+        if self.scale_denominator > 0 {
+            let ns = d.0 / self.scale_denominator;
+            if ns > 0 {
+                std::thread::sleep(Duration::from_nanos(ns));
+            }
+        }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock {
+            now_ns: AtomicU64::new(0),
+            scale_denominator: 0,
+        }
+    }
+}
+
+/// A stopwatch over a virtual clock: measures charged time in a scope.
+pub struct VirtualStopwatch {
+    clock: Arc<VirtualClock>,
+    start: VirtualTime,
+}
+
+impl VirtualStopwatch {
+    pub fn start(clock: &Arc<VirtualClock>) -> VirtualStopwatch {
+        VirtualStopwatch {
+            clock: Arc::clone(clock),
+            start: clock.now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> VirtualTime {
+        self.clock.since(self.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversion_roundtrip() {
+        let t = VirtualTime::from_millis_f64(28_370.0);
+        assert!((t.as_secs_f64() - 28.37).abs() < 1e-9);
+        assert_eq!(VirtualTime::from_secs_f64(0.5).as_millis_f64(), 500.0);
+    }
+
+    #[test]
+    fn advance_is_cumulative() {
+        let c = VirtualClock::new();
+        c.advance(VirtualTime::from_millis_f64(11.0));
+        c.advance(VirtualTime::from_millis_f64(80.0));
+        assert!((c.now().as_millis_f64() - 91.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn advance_max_models_overlap() {
+        let c = VirtualClock::new();
+        let start = c.now();
+        // Four concurrent 1 s operations overlap: clock moves 1 s, not 4.
+        for _ in 0..4 {
+            c.advance_max(start, VirtualTime::from_secs_f64(1.0));
+        }
+        assert!((c.now().as_secs_f64() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_max_monotone() {
+        let c = VirtualClock::new();
+        c.advance(VirtualTime::from_secs_f64(5.0));
+        // A parallel op that would end before `now` must not rewind.
+        c.advance_max(VirtualTime::ZERO, VirtualTime::from_secs_f64(1.0));
+        assert!((c.now().as_secs_f64() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stopwatch_measures_span() {
+        let c = VirtualClock::new();
+        c.advance(VirtualTime::from_millis_f64(3.0));
+        let sw = VirtualStopwatch::start(&c);
+        c.advance(VirtualTime::from_millis_f64(7.0));
+        assert!((sw.elapsed().as_millis_f64() - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threaded_advance_max() {
+        let c = VirtualClock::new();
+        let start = c.now();
+        let hs: Vec<_> = (1..=8)
+            .map(|i| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    c.advance_max(
+                        start,
+                        VirtualTime::from_millis_f64(i as f64 * 10.0),
+                    );
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert!((c.now().as_millis_f64() - 80.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn display_picks_unit() {
+        assert_eq!(
+            format!("{}", VirtualTime::from_millis_f64(732.0)),
+            "732.000 ms"
+        );
+        assert_eq!(
+            format!("{}", VirtualTime::from_secs_f64(28.37)),
+            "28.370 s"
+        );
+    }
+}

@@ -1,0 +1,109 @@
+//! Leveled logger backing the `log` crate facade.
+//!
+//! Initialized once per process (`init` is idempotent). Level comes
+//! from `RC3E_LOG` (error|warn|info|debug|trace, default `warn` so
+//! tests stay quiet). Output goes to stderr with a monotonic
+//! wall-clock offset, level, target and message — enough to debug
+//! middleware interleavings without pulling in env_logger.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:10.4} {lvl} {}] {}",
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Parse an `RC3E_LOG`-style level word.
+pub fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "info" => LevelFilter::Info,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Warn,
+    }
+}
+
+/// Install the logger (idempotent; later calls only adjust the level).
+pub fn init() {
+    // Quiet the XLA CPU client's INFO chatter unless the user asked
+    // for it (must be set before the first PjRtClient is created).
+    if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let level = std::env::var("RC3E_LOG")
+        .map(|v| parse_level(&v))
+        .unwrap_or(LevelFilter::Warn);
+    init_with_level(level);
+}
+
+/// Install with an explicit level (idempotent).
+pub fn init_with_level(level: LevelFilter) {
+    let logger = LOGGER.get_or_init(|| StderrLogger {
+        start: Instant::now(),
+    });
+    // set_logger fails if already set (e.g. by a previous test) —
+    // that's fine, we only need the level updated.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
+        assert_eq!(parse_level("bogus"), LevelFilter::Warn);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init_with_level(LevelFilter::Info);
+        init_with_level(LevelFilter::Debug);
+        assert_eq!(log::max_level(), LevelFilter::Debug);
+        log::info!("logger smoke test");
+        init_with_level(LevelFilter::Warn);
+    }
+}

@@ -1,0 +1,17 @@
+//! In-tree substrates.
+//!
+//! The build environment is fully offline and only the `xla` crate's
+//! transitive dependency set is vendored, so every generic facility the
+//! system needs beyond that — JSON, a virtual clock, a PRNG, CLI
+//! parsing, logging, wire encoding — is implemented here rather than
+//! pulled from crates.io. Each submodule is small, documented and
+//! fully unit-tested.
+
+pub mod bytes;
+pub mod cli;
+pub mod clock;
+pub mod ids;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,132 @@
+//! ASCII table renderer for bench reports.
+//!
+//! Every bench prints a paper-vs-measured table; this keeps the
+//! formatting consistent (and testable) across all of them.
+
+/// Column-aligned ASCII table.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add a row; must match the header arity.
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience for &str cells.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Table {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let sep: String = width
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i] - c.chars().count();
+                line.push_str(&format!("| {}{} ", c, " ".repeat(pad)));
+            }
+            line.push('|');
+            line
+        };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&format!("{sep}\n"));
+        out.push_str(&format!("{}\n", fmt_row(&self.header)));
+        out.push_str(&format!("{sep}\n"));
+        for row in &self.rows {
+            out.push_str(&format!("{}\n", fmt_row(row)));
+        }
+        out.push_str(&format!("{sep}\n"));
+        out
+    }
+}
+
+/// Format a throughput in MB/s with sensible precision.
+pub fn mbps(v: f64) -> String {
+    format!("{v:.1} MB/s")
+}
+
+/// Format a ratio like `0.98x`.
+pub fn ratio(measured: f64, paper: f64) -> String {
+    if paper == 0.0 {
+        "n/a".into()
+    } else {
+        format!("{:.2}x", measured / paper)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["col", "value"]);
+        t.row_str(&["a", "1"]).row_str(&["longer", "22"]);
+        let s = t.render();
+        assert!(s.contains("| col    | value |"));
+        assert!(s.contains("| longer | 22    |"));
+        // All separator lines equal length.
+        let seps: Vec<&str> =
+            s.lines().filter(|l| l.starts_with('+')).collect();
+        assert_eq!(seps.len(), 3);
+        assert!(seps.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        Table::new("t", &["a", "b"]).row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(mbps(797.96), "798.0 MB/s");
+        assert_eq!(ratio(509.0, 509.0), "1.00x");
+        assert_eq!(ratio(1.0, 0.0), "n/a");
+    }
+
+    #[test]
+    fn unicode_width_counts_chars() {
+        let mut t = Table::new("u", &["név"]);
+        t.row_str(&["érték"]);
+        let s = t.render();
+        assert!(s.contains("| név   |"));
+    }
+}

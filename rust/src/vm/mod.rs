@@ -1,0 +1,223 @@
+//! Virtual-machine allocation extension (RSaaS).
+//!
+//! Section IV-C: "we integrated the allocation of user-specific
+//! virtual machines with direct access to allocated FPGAs as an
+//! extension of the RSaaS service model." And III-A: "For hardware
+//! interface and driver development fully virtual machines with the
+//! necessary FPGA devices attached are allocatable by users."
+//!
+//! The VM manager models boot/shutdown with virtual-time charges and
+//! tracks PCI passthrough of the allocated device. The interesting
+//! system behaviour — an FPGA passed into a VM is invisible to the
+//! host middleware until the VM is gone — is enforced here.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::hypervisor::{Hypervisor, HypervisorError};
+use crate::util::clock::{VirtualClock, VirtualTime};
+use crate::util::ids::{AllocationId, FpgaId, UserId, VmId};
+
+/// Modeled VM boot time (cloud-image boot + driver probe).
+pub const VM_BOOT_S: f64 = 18.0;
+/// Modeled VM shutdown time.
+pub const VM_SHUTDOWN_S: f64 = 4.0;
+
+/// VM lifecycle state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VmState {
+    Booting,
+    Running,
+    Stopped,
+}
+
+/// One user VM with a passed-through FPGA.
+#[derive(Debug, Clone)]
+pub struct VmRecord {
+    pub id: VmId,
+    pub user: UserId,
+    pub fpga: FpgaId,
+    pub allocation: AllocationId,
+    pub state: VmState,
+    /// Memory assigned (GiB) — bookkeeping for the node.
+    pub mem_gib: u64,
+    pub vcpus: u64,
+}
+
+/// VM manager errors.
+#[derive(Debug, thiserror::Error)]
+pub enum VmError {
+    #[error("hypervisor: {0}")]
+    Hypervisor(#[from] HypervisorError),
+    #[error("vm {0} not found")]
+    NotFound(VmId),
+    #[error("vm {0} is not running")]
+    NotRunning(VmId),
+}
+
+/// The VM extension over the hypervisor.
+pub struct VmManager {
+    hv: Arc<Hypervisor>,
+    clock: Arc<VirtualClock>,
+    vms: Mutex<BTreeMap<VmId, VmRecord>>,
+}
+
+impl VmManager {
+    pub fn new(hv: Arc<Hypervisor>) -> VmManager {
+        let clock = Arc::clone(&hv.clock);
+        VmManager {
+            hv,
+            clock,
+            vms: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Allocate a physical FPGA and boot a VM with it passed through.
+    pub fn launch(
+        &self,
+        user: UserId,
+        vcpus: u64,
+        mem_gib: u64,
+    ) -> Result<VmRecord, VmError> {
+        let vm_id = VmId(self.hv.db.lock().unwrap().vm_ids.next());
+        let (allocation, fpga, _) =
+            self.hv.alloc_physical(user, Some(vm_id))?;
+        let mut record = VmRecord {
+            id: vm_id,
+            user,
+            fpga,
+            allocation,
+            state: VmState::Booting,
+            mem_gib,
+            vcpus,
+        };
+        self.vms.lock().unwrap().insert(vm_id, record.clone());
+        // Boot charge, then running.
+        self.clock.advance(VirtualTime::from_secs_f64(VM_BOOT_S));
+        record.state = VmState::Running;
+        self.vms.lock().unwrap().insert(vm_id, record.clone());
+        Ok(record)
+    }
+
+    /// The device is reachable from inside the VM only.
+    pub fn passthrough_visible(&self, vm: VmId) -> Result<FpgaId, VmError> {
+        let vms = self.vms.lock().unwrap();
+        let rec = vms.get(&vm).ok_or(VmError::NotFound(vm))?;
+        if rec.state != VmState::Running {
+            return Err(VmError::NotRunning(vm));
+        }
+        Ok(rec.fpga)
+    }
+
+    /// Shut down: stop the VM, release the FPGA lease back to the
+    /// cloud.
+    pub fn destroy(&self, vm: VmId) -> Result<(), VmError> {
+        let rec = {
+            let mut vms = self.vms.lock().unwrap();
+            let rec = vms.get_mut(&vm).ok_or(VmError::NotFound(vm))?;
+            rec.state = VmState::Stopped;
+            rec.clone()
+        };
+        self.clock
+            .advance(VirtualTime::from_secs_f64(VM_SHUTDOWN_S));
+        self.hv.release(rec.allocation)?;
+        self.vms.lock().unwrap().remove(&vm);
+        Ok(())
+    }
+
+    pub fn list(&self, user: Option<UserId>) -> Vec<VmRecord> {
+        self.vms
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|v| user.map(|u| v.user == u).unwrap_or(true))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ServiceModel};
+    use crate::hypervisor::PlacementPolicy;
+
+    fn manager() -> VmManager {
+        let hv = Arc::new(
+            Hypervisor::boot(
+                &ClusterConfig::single_vc707(),
+                VirtualClock::new(),
+                PlacementPolicy::ConsolidateFirst,
+            )
+            .unwrap(),
+        );
+        VmManager::new(hv)
+    }
+
+    #[test]
+    fn launch_boots_and_passes_device_through() {
+        let m = manager();
+        let user = m.hv.add_user("dev");
+        let t0 = m.clock.now();
+        let vm = m.launch(user, 4, 8).unwrap();
+        assert_eq!(vm.state, VmState::Running);
+        assert!(m.clock.since(t0).as_secs_f64() >= VM_BOOT_S);
+        assert_eq!(m.passthrough_visible(vm.id).unwrap(), vm.fpga);
+    }
+
+    #[test]
+    fn vm_holds_exclusive_device() {
+        let m = manager();
+        let user = m.hv.add_user("dev");
+        let _vm = m.launch(user, 2, 4).unwrap();
+        // The only device is inside the VM: no vFPGA or physical
+        // allocation can happen.
+        assert!(m.hv.alloc_vfpga(user, ServiceModel::RAaaS).is_err());
+        assert!(m.hv.alloc_physical(user, None).is_err());
+    }
+
+    #[test]
+    fn destroy_returns_device_to_cloud() {
+        let m = manager();
+        let user = m.hv.add_user("dev");
+        let vm = m.launch(user, 2, 4).unwrap();
+        m.destroy(vm.id).unwrap();
+        assert!(m.list(None).is_empty());
+        // Device is allocatable again.
+        assert!(m.hv.alloc_vfpga(user, ServiceModel::RAaaS).is_ok());
+    }
+
+    #[test]
+    fn stopped_vm_hides_device() {
+        let m = manager();
+        let user = m.hv.add_user("dev");
+        let vm = m.launch(user, 2, 4).unwrap();
+        m.destroy(vm.id).unwrap();
+        assert!(matches!(
+            m.passthrough_visible(vm.id),
+            Err(VmError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn list_filters_by_user() {
+        let m = manager();
+        let a = m.hv.add_user("a");
+        let _vm = m.launch(a, 1, 2).unwrap();
+        let b = m.hv.add_user("b");
+        assert_eq!(m.list(Some(a)).len(), 1);
+        assert_eq!(m.list(Some(b)).len(), 0);
+        assert_eq!(m.list(None).len(), 1);
+    }
+
+    #[test]
+    fn capacity_limits_vms() {
+        let m = manager();
+        let user = m.hv.add_user("dev");
+        m.launch(user, 1, 1).unwrap();
+        assert!(matches!(
+            m.launch(user, 1, 1),
+            Err(VmError::Hypervisor(HypervisorError::NoCapacity))
+        ));
+    }
+}

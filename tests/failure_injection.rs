@@ -1,0 +1,225 @@
+//! Failure-injection integration tests: the error paths a healthy
+//! simulation never takes.
+//!
+//! * node agent dying mid-RPC (connection drop) and recovering;
+//! * corrupted / tampered / oversized bitfiles at every entry point;
+//! * capacity exhaustion and double-release;
+//! * streaming against a missing artifact;
+//! * FIFO timeout under a stalled producer.
+
+use std::sync::Arc;
+
+use rc3e::bitstream::BitstreamBuilder;
+use rc3e::config::ServiceModel;
+use rc3e::fpga::Resources;
+use rc3e::hypervisor::{Hypervisor, HypervisorError, PlacementPolicy};
+use rc3e::middleware::{Client, ManagementServer, NodeAgent};
+use rc3e::testing::{FailPlan, FailPoint};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::ids::NodeId;
+use rc3e::util::json::Json;
+
+fn hv() -> Arc<Hypervisor> {
+    Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap())
+}
+
+#[test]
+fn agent_crash_mid_request_then_recovery() {
+    let hv = hv();
+    let plan = FailPlan::new();
+    plan.arm("agent.drop_conn", FailPoint::OnHit(2));
+    let agent =
+        NodeAgent::spawn(Arc::clone(&hv), NodeId(0), Some(plan.clone()))
+            .unwrap();
+    let mut client = Client::connect(agent.addr()).unwrap();
+    // First call fine.
+    client.call("agent.hello", Json::obj(vec![])).unwrap();
+    // Second call: the agent "crashes" (drops the connection).
+    let err = client.call("agent.hello", Json::obj(vec![])).unwrap_err();
+    assert!(err.starts_with("io:"), "{err}");
+    // A fresh connection works — the node is back.
+    let mut c2 = Client::connect(agent.addr()).unwrap();
+    c2.call("agent.hello", Json::obj(vec![])).unwrap();
+    assert_eq!(plan.hits("agent.drop_conn"), 3);
+}
+
+#[test]
+fn management_survives_dead_agent_registration() {
+    let hv = hv();
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    // Register an address nobody listens on.
+    let dead: std::net::SocketAddr = "127.0.0.1:1".parse().unwrap();
+    server.register_agent(NodeId(0), dead);
+    let mut client = Client::connect(server.addr()).unwrap();
+    // Status of a node-0 device fails cleanly (routed to the dead
+    // agent), but the server connection survives...
+    let err = client
+        .call(
+            "status",
+            Json::obj(vec![("fpga", Json::from("fpga-0"))]),
+        )
+        .unwrap_err();
+    assert!(err.contains("connect"), "{err}");
+    // ...and node-1 devices (no agent registered) still work.
+    let body = client
+        .call(
+            "status",
+            Json::obj(vec![("fpga", Json::from("fpga-2"))]),
+        )
+        .unwrap();
+    assert_eq!(body.get("regions_total").as_u64(), Some(4));
+}
+
+#[test]
+fn corrupted_bitfile_rejected_at_every_surface() {
+    let hv = hv();
+    let user = hv.add_user("evil");
+    let (alloc, _, fpga, _) =
+        hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+    let part = hv.device(fpga).unwrap().fpga.lock().unwrap().board.part;
+    let mut bs = BitstreamBuilder::partial(part, "trojan")
+        .resources(Resources::new(100, 100, 1, 1))
+        .frames(rc3e::hls::flow::region_window(0, 1))
+        .build();
+    bs.payload[7] ^= 0x01; // bit-flip in transit
+    match hv.program_vfpga(alloc, user, &bs) {
+        Err(HypervisorError::Sanity(
+            rc3e::bitstream::SanityError::BadCrc,
+        )) => {}
+        other => panic!("expected BadCrc, got {other:?}"),
+    }
+    // Region stays unconfigured; lease still usable with a good file.
+    let good = BitstreamBuilder::partial(part, "good")
+        .resources(Resources::new(100, 100, 1, 1))
+        .frames(rc3e::hls::flow::region_window(
+            hv.device(fpga).unwrap().slot_of
+                [&hv.check_vfpga_lease(alloc, user).unwrap()],
+            1,
+        ))
+        .build();
+    hv.program_vfpga(alloc, user, &good).unwrap();
+}
+
+#[test]
+fn frame_escape_attack_is_contained() {
+    let hv = hv();
+    let alice = hv.add_user("alice");
+    let mallory = hv.add_user("mallory");
+    // Alice has a running design in some region.
+    let (a_alloc, a_vfpga, fpga, _) =
+        hv.alloc_vfpga(alice, ServiceModel::RAaaS).unwrap();
+    let part = hv.device(fpga).unwrap().fpga.lock().unwrap().board.part;
+    let a_slot = hv.device(fpga).unwrap().slot_of[&a_vfpga];
+    let good = BitstreamBuilder::partial(part, "alice_core")
+        .resources(Resources::new(100, 100, 1, 1))
+        .frames(rc3e::hls::flow::region_window(a_slot, 1))
+        .build();
+    hv.program_vfpga(a_alloc, alice, &good).unwrap();
+    // Mallory leases the neighboring region and submits a bitfile
+    // whose frames overlap ALICE's window.
+    let (m_alloc, _, m_fpga, _) =
+        hv.alloc_vfpga(mallory, ServiceModel::RAaaS).unwrap();
+    assert_eq!(fpga, m_fpga, "consolidation co-locates them");
+    let attack = BitstreamBuilder::partial(part, "overwrite_alice")
+        .resources(Resources::new(100, 100, 1, 1))
+        .frames(rc3e::hls::flow::region_window(a_slot, 1))
+        .build();
+    match hv.program_vfpga(m_alloc, mallory, &attack) {
+        Err(HypervisorError::Sanity(
+            rc3e::bitstream::SanityError::FrameEscape { .. },
+        )) => {}
+        other => panic!("expected FrameEscape, got {other:?}"),
+    }
+    // Alice's design is untouched.
+    let dev = hv.device(fpga).unwrap();
+    assert!(dev
+        .fpga
+        .lock()
+        .unwrap()
+        .region(a_vfpga)
+        .unwrap()
+        .is_configured());
+}
+
+#[test]
+fn capacity_exhaustion_and_recovery() {
+    let hv = hv();
+    let user = hv.add_user("greedy");
+    let mut leases = Vec::new();
+    for _ in 0..16 {
+        leases.push(hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap().0);
+    }
+    assert!(matches!(
+        hv.alloc_vfpga(user, ServiceModel::RAaaS),
+        Err(HypervisorError::NoCapacity)
+    ));
+    // Releasing one restores exactly one slot.
+    hv.release(leases.pop().unwrap()).unwrap();
+    hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+    assert!(matches!(
+        hv.alloc_vfpga(user, ServiceModel::RAaaS),
+        Err(HypervisorError::NoCapacity)
+    ));
+}
+
+#[test]
+fn double_release_is_an_error_not_a_panic() {
+    let hv = hv();
+    let user = hv.add_user("u");
+    let (alloc, _, _, _) =
+        hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+    hv.release(alloc).unwrap();
+    assert!(matches!(hv.release(alloc), Err(HypervisorError::Db(_))));
+}
+
+#[test]
+fn stream_against_missing_artifact_fails_cleanly() {
+    if !rc3e::runtime::artifact_dir().join("manifest.json").exists() {
+        return;
+    }
+    let hv = hv();
+    let fpga = hv.device_ids()[0];
+    let link = Arc::clone(&hv.device(fpga).unwrap().link);
+    let runner = rc3e::rc2f::StreamRunner::new(
+        Arc::clone(&hv.clock),
+        link,
+    );
+    let cfg = rc3e::rc2f::StreamConfig {
+        artifact: "matmul99_b1".to_string(),
+        ..rc3e::rc2f::StreamConfig::matmul16(256)
+    };
+    let err = runner.run(&cfg).unwrap_err();
+    assert!(err.contains("matmul99"), "{err}");
+}
+
+#[test]
+fn fifo_timeout_surfaces_stalled_producer() {
+    let fifo = rc3e::fifo::AsyncFifo::new("stall", 1024);
+    let err = fifo
+        .pop_timeout(std::time::Duration::from_millis(10))
+        .unwrap_err();
+    assert!(matches!(err, rc3e::fifo::FifoError::Timeout(_)));
+}
+
+#[test]
+fn oversized_rpc_frame_rejected() {
+    let hv = hv();
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    // Hand-roll a frame that claims to be huge.
+    use std::io::Write;
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    stream
+        .write_all(&(u32::MAX).to_le_bytes())
+        .unwrap();
+    // Server closes the connection; a read yields EOF quickly.
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(2)))
+        .unwrap();
+    let mut buf = [0u8; 4];
+    use std::io::Read;
+    let n = stream.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server should drop oversized frames");
+    // And the server still serves new connections.
+    let mut client = Client::connect(server.addr()).unwrap();
+    client.call("hello", Json::obj(vec![])).unwrap();
+}

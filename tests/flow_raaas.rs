@@ -1,0 +1,271 @@
+//! Fig. 3 integration test: the full middleware → RC3E → RC2F
+//! interaction for a RAaaS user, over the real TCP middleware.
+//!
+//! Sequence (paper Fig. 3): allocate vFPGA → program (PR) →
+//! initialize (status/ucs) → execute (stream) → release — plus the
+//! bookkeeping assertions the figure implies at each arrow.
+
+use std::sync::Arc;
+
+use rc3e::hypervisor::Hypervisor;
+use rc3e::middleware::{Client, ManagementServer, NodeAgent};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::ids::NodeId;
+use rc3e::util::json::Json;
+
+fn artifacts_present() -> bool {
+    rc3e::runtime::artifact_dir().join("manifest.json").exists()
+}
+
+struct Cloud {
+    _server: ManagementServer,
+    _agents: Vec<NodeAgent>,
+    client: Client,
+    hv: Arc<Hypervisor>,
+    clock: Arc<VirtualClock>,
+}
+
+fn cloud() -> Cloud {
+    let clock = VirtualClock::new();
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut agents = Vec::new();
+    for n in [NodeId(0), NodeId(1)] {
+        let a = NodeAgent::spawn(Arc::clone(&hv), n, None).unwrap();
+        server.register_agent(n, a.addr());
+        agents.push(a);
+    }
+    let client = Client::connect(server.addr()).unwrap();
+    Cloud {
+        _server: server,
+        _agents: agents,
+        client,
+        hv,
+        clock,
+    }
+}
+
+#[test]
+fn fig3_interaction_flow() {
+    let mut c = cloud();
+
+    // -- middleware: create the user ------------------------------
+    let user = c
+        .client
+        .call("add_user", Json::obj(vec![("name", Json::from("alice"))]))
+        .unwrap()
+        .get("user")
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    // -- arrow 1: resource allocation ------------------------------
+    let lease = c
+        .client
+        .call(
+            "alloc_vfpga",
+            Json::obj(vec![("user", Json::from(user.as_str()))]),
+        )
+        .unwrap();
+    let alloc = lease.get("alloc").as_str().unwrap().to_string();
+    let vfpga = lease.get("vfpga").as_str().unwrap().to_string();
+    // DB reflects the lease.
+    {
+        let db = c.hv.db.lock().unwrap();
+        let v = rc3e::util::ids::VfpgaId::parse(&vfpga).unwrap();
+        assert!(db.owner_of(v).is_some());
+    }
+
+    // -- arrow 2: programming (PR through sanity checker) ----------
+    let prog = c
+        .client
+        .call(
+            "program_core",
+            Json::obj(vec![
+                ("user", Json::from(user.as_str())),
+                ("alloc", Json::from(alloc.as_str())),
+                ("core", Json::from("matmul16")),
+            ]),
+        )
+        .unwrap();
+    assert!(prog.get("pr_ms").as_f64().unwrap() > 700.0);
+
+    // -- arrow 3: initialization (status via the node agent) -------
+    let st = c
+        .client
+        .call(
+            "status",
+            Json::obj(vec![(
+                "fpga",
+                Json::from(lease.get("fpga").as_str().unwrap()),
+            )]),
+        )
+        .unwrap();
+    assert_eq!(st.get("regions_configured").as_u64(), Some(1));
+    assert_eq!(st.get("regions_clocked").as_u64(), Some(1));
+
+    // -- arrow 4: execution (streaming through the core) -----------
+    if artifacts_present() {
+        let out = c
+            .client
+            .call(
+                "stream",
+                Json::obj(vec![
+                    ("user", Json::from(user.as_str())),
+                    ("alloc", Json::from(alloc.as_str())),
+                    ("core", Json::from("matmul16")),
+                    ("mults", Json::from(512u64)),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(out.get("validation_failures").as_u64(), Some(0));
+        assert!(out.get("virtual_mbps").as_f64().unwrap() > 450.0);
+    }
+
+    // -- arrow 5: release -------------------------------------------
+    c.client
+        .call(
+            "release",
+            Json::obj(vec![("alloc", Json::from(alloc.as_str()))]),
+        )
+        .unwrap();
+    let st = c
+        .client
+        .call(
+            "status",
+            Json::obj(vec![(
+                "fpga",
+                Json::from(lease.get("fpga").as_str().unwrap()),
+            )]),
+        )
+        .unwrap();
+    assert_eq!(st.get("regions_configured").as_u64(), Some(0));
+    assert_eq!(st.get("regions_clocked").as_u64(), Some(0));
+}
+
+#[test]
+fn two_users_do_not_interfere() {
+    let mut c = cloud();
+    let mut ids = Vec::new();
+    for name in ["alice", "bob"] {
+        let user = c
+            .client
+            .call("add_user", Json::obj(vec![("name", Json::from(name))]))
+            .unwrap()
+            .get("user")
+            .as_str()
+            .unwrap()
+            .to_string();
+        let lease = c
+            .client
+            .call(
+                "alloc_vfpga",
+                Json::obj(vec![("user", Json::from(user.as_str()))]),
+            )
+            .unwrap();
+        ids.push((
+            user,
+            lease.get("alloc").as_str().unwrap().to_string(),
+            lease.get("vfpga").as_str().unwrap().to_string(),
+        ));
+    }
+    // Distinct vFPGAs.
+    assert_ne!(ids[0].2, ids[1].2);
+    // Bob cannot program alice's lease.
+    let err = c
+        .client
+        .call(
+            "program_core",
+            Json::obj(vec![
+                ("user", Json::from(ids[1].0.as_str())),
+                ("alloc", Json::from(ids[0].1.as_str())),
+                ("core", Json::from("matmul16")),
+            ]),
+        )
+        .unwrap_err();
+    assert!(err.contains("not found or not yours"), "{err}");
+    // Alice still can.
+    c.client
+        .call(
+            "program_core",
+            Json::obj(vec![
+                ("user", Json::from(ids[0].0.as_str())),
+                ("alloc", Json::from(ids[0].1.as_str())),
+                ("core", Json::from("matmul16")),
+            ]),
+        )
+        .unwrap();
+}
+
+#[test]
+fn migration_preserves_service_over_rpc() {
+    let mut c = cloud();
+    let user = c
+        .client
+        .call("add_user", Json::obj(vec![("name", Json::from("m"))]))
+        .unwrap()
+        .get("user")
+        .as_str()
+        .unwrap()
+        .to_string();
+    let lease = c
+        .client
+        .call(
+            "alloc_vfpga",
+            Json::obj(vec![("user", Json::from(user.as_str()))]),
+        )
+        .unwrap();
+    let alloc = lease.get("alloc").as_str().unwrap().to_string();
+    c.client
+        .call(
+            "program_core",
+            Json::obj(vec![
+                ("user", Json::from(user.as_str())),
+                ("alloc", Json::from(alloc.as_str())),
+                ("core", Json::from("matmul16")),
+            ]),
+        )
+        .unwrap();
+    let mig = c
+        .client
+        .call(
+            "migrate",
+            Json::obj(vec![
+                ("user", Json::from(user.as_str())),
+                ("alloc", Json::from(alloc.as_str())),
+            ]),
+        )
+        .unwrap();
+    assert_ne!(
+        mig.get("from").as_str().unwrap(),
+        mig.get("to").as_str().unwrap()
+    );
+    // Still streamable at the new location.
+    if artifacts_present() {
+        let out = c
+            .client
+            .call(
+                "stream",
+                Json::obj(vec![
+                    ("user", Json::from(user.as_str())),
+                    ("alloc", Json::from(alloc.as_str())),
+                    ("core", Json::from("matmul16")),
+                    ("mults", Json::from(256u64)),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(out.get("validation_failures").as_u64(), Some(0));
+    }
+}
+
+#[test]
+fn virtual_clock_is_consistent_across_surfaces() {
+    let mut c = cloud();
+    let t0 = c.clock.now();
+    c.client.call("hello", Json::obj(vec![])).unwrap();
+    // One RPC = one 69 ms charge, visible on the shared clock.
+    let d = c.clock.since(t0).as_millis_f64();
+    assert!((d - 69.0).abs() < 0.5, "{d}");
+}

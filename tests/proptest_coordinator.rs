@@ -1,0 +1,320 @@
+//! Property-based tests over the coordinator's invariants, using the
+//! in-tree property framework (`rc3e::testing::prop`).
+//!
+//! Invariants:
+//! * allocation: a vFPGA never has two owners; free + used == total;
+//!   release always restores capacity; RSaaS exclusivity holds under
+//!   arbitrary interleavings;
+//! * placement: consolidate-first never touches a second device while
+//!   the first has room; both policies are deterministic;
+//! * JSON: parse(serialize(x)) == x for arbitrary values;
+//! * link arbiter: per-stream fair shares sum to ≤ the cap; byte
+//!   accounting is conserved;
+//! * device DB: save/load is lossless under arbitrary operation
+//!   sequences.
+
+use std::sync::Arc;
+
+use rc3e::config::ServiceModel;
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::testing::prop::{forall, Gen};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::json::Json;
+use rc3e::util::rng::Rng;
+
+/// A random sequence of cloud operations.
+#[derive(Debug, Clone)]
+enum Op {
+    Alloc,
+    Release(usize),  // index into live allocations (mod len)
+    AllocPhysical,
+}
+
+fn ops_gen<'a>() -> Gen<'a, Vec<Op>> {
+    Gen::new(|rng: &mut Rng, size| {
+        let len = rng.next_below(size as u64 * 2 + 1) as usize;
+        (0..len)
+            .map(|_| match rng.next_below(4) {
+                0 | 1 => Op::Alloc,
+                2 => Op::Release(rng.next_below(16) as usize),
+                _ => Op::AllocPhysical,
+            })
+            .collect()
+    })
+}
+
+#[test]
+fn prop_allocation_invariants_under_random_interleavings() {
+    let gen = ops_gen();
+    forall(0xA110C, 60, &gen, |ops| {
+        let hv = Hypervisor::boot(
+            &rc3e::config::ClusterConfig::paper_testbed(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .map_err(|e| e.to_string())?;
+        let user = hv.add_user("prop");
+        let mut live: Vec<rc3e::util::ids::AllocationId> = Vec::new();
+        for op in ops {
+            match op {
+                Op::Alloc => {
+                    if let Ok((alloc, vfpga, _, _)) =
+                        hv.alloc_vfpga(user, ServiceModel::RAaaS)
+                    {
+                        // No double ownership.
+                        let db = hv.db.lock().unwrap();
+                        let owner = db
+                            .owner_of(vfpga)
+                            .ok_or("allocated vfpga has no owner")?;
+                        if owner.id != alloc {
+                            return Err(format!(
+                                "{vfpga} owned by {} not {alloc}",
+                                owner.id
+                            ));
+                        }
+                        drop(db);
+                        live.push(alloc);
+                    }
+                }
+                Op::Release(i) => {
+                    if !live.is_empty() {
+                        let idx = i % live.len();
+                        let alloc = live.swap_remove(idx);
+                        hv.release(alloc).map_err(|e| e.to_string())?;
+                    }
+                }
+                Op::AllocPhysical => {
+                    // paper_testbed has no RSaaS devices: must always
+                    // fail, never corrupt state.
+                    if hv.alloc_physical(user, None).is_ok() {
+                        return Err("RSaaS alloc on non-RSaaS cloud".into());
+                    }
+                }
+            }
+            // Global capacity invariant after every step.
+            let db = hv.db.lock().unwrap();
+            let mut free = 0;
+            let mut used = 0;
+            for f in hv.device_ids() {
+                free += db.free_regions(f).len();
+                used += db.used_regions(f);
+            }
+            if free + used != 16 {
+                return Err(format!("free {free} + used {used} != 16"));
+            }
+            if used != live.len() {
+                return Err(format!(
+                    "db used {used} != live leases {}",
+                    live.len()
+                ));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_consolidate_first_packs_devices() {
+    let gen = Gen::new(|rng: &mut Rng, _| rng.range(1, 16));
+    forall(0xC0450, 40, &gen, |&n| {
+        let hv = Hypervisor::boot(
+            &rc3e::config::ClusterConfig::paper_testbed(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .map_err(|e| e.to_string())?;
+        let user = hv.add_user("prop");
+        let mut devices_in_order = Vec::new();
+        for _ in 0..n {
+            let (_, _, fpga, _) = hv
+                .alloc_vfpga(user, ServiceModel::RAaaS)
+                .map_err(|e| e.to_string())?;
+            devices_in_order.push(fpga);
+        }
+        // A new device may only appear after the previous is full (4).
+        let mut counts: std::collections::BTreeMap<_, usize> =
+            Default::default();
+        let mut seen_order = Vec::new();
+        for f in &devices_in_order {
+            if !seen_order.contains(f) {
+                // All previously seen devices must be full.
+                for prev in &seen_order {
+                    if counts[prev] < 4 {
+                        return Err(format!(
+                            "opened {f} while {prev} had {} used",
+                            counts[prev]
+                        ));
+                    }
+                }
+                seen_order.push(*f);
+            }
+            *counts.entry(*f).or_default() += 1;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // Generator for arbitrary JSON trees.
+    fn json_gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) }
+        {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => {
+                // Round-trippable f64s: halves.
+                Json::Num((rng.next_below(2_000_001) as f64 - 1e6) / 2.0)
+            }
+            3 => {
+                let len = rng.next_below(12);
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            *rng.choose(&[
+                                'a', 'ß', '"', '\\', '\n', '😀', ' ', 'z',
+                            ])
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.next_below(5))
+                    .map(|_| json_gen(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.next_below(5))
+                    .map(|i| {
+                        (format!("k{i}"), json_gen(rng, depth - 1))
+                    })
+                    .collect(),
+            ),
+        }
+    }
+    let gen = Gen::new(|rng: &mut Rng, size| json_gen(rng, size.min(4)));
+    forall(0x15011, 300, &gen, |v| {
+        let compact = Json::parse(&v.to_string())
+            .map_err(|e| format!("compact: {e}"))?;
+        if &compact != v {
+            return Err(format!("compact mismatch: {v} vs {compact}"));
+        }
+        let pretty = Json::parse(&v.to_pretty())
+            .map_err(|e| format!("pretty: {e}"))?;
+        if &pretty != v {
+            return Err("pretty mismatch".into());
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_arbiter_conserves_bytes_and_caps_rate() {
+    let gen = Gen::new(|rng: &mut Rng, size| {
+        let streams = rng.range(1, 8) as usize;
+        let chunks = rng.range(1, size as u64 * 4 + 1) as usize;
+        (streams, chunks)
+    });
+    forall(0xBA2D, 60, &gen, |&(streams, chunks)| {
+        let clock = VirtualClock::new();
+        let arb = rc3e::pcie::BandwidthArbiter::new(
+            Arc::clone(&clock),
+            800.0,
+        );
+        let chunk = 256 * 1024u64;
+        let mut handles: Vec<_> =
+            (0..streams).map(|_| arb.open_stream()).collect();
+        for _ in 0..chunks {
+            for h in &mut handles {
+                h.transfer(chunk);
+            }
+        }
+        let expect = chunk * chunks as u64 * streams as u64;
+        if arb.bytes_total() as u64 != expect {
+            return Err(format!(
+                "bytes {} != {expect}",
+                arb.bytes_total()
+            ));
+        }
+        // Aggregate rate within the cap (+1% chunk-boundary slack).
+        let secs = clock.now().as_secs_f64();
+        let agg = expect as f64 / 1e6 / secs;
+        if agg > 808.0 {
+            return Err(format!("aggregate {agg:.1} MB/s beats the cap"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_device_db_save_load_lossless() {
+    let gen = ops_gen();
+    forall(0xD6DB, 40, &gen, |ops| {
+        let hv = Hypervisor::boot(
+            &rc3e::config::ClusterConfig::paper_testbed(),
+            VirtualClock::new(),
+            PlacementPolicy::RoundRobin,
+        )
+        .map_err(|e| e.to_string())?;
+        let user = hv.add_user("prop");
+        let mut live = Vec::new();
+        for op in ops {
+            match op {
+                Op::Alloc => {
+                    if let Ok((a, _, _, _)) =
+                        hv.alloc_vfpga(user, ServiceModel::RAaaS)
+                    {
+                        live.push(a);
+                    }
+                }
+                Op::Release(i) if !live.is_empty() => {
+                    let idx = i % live.len();
+                    let a = live.swap_remove(idx);
+                    hv.release(a).map_err(|e| e.to_string())?;
+                }
+                _ => {}
+            }
+        }
+        let db = hv.db.lock().unwrap();
+        let json = db.to_json();
+        let back = rc3e::hypervisor::DeviceDb::from_json(&json)
+            .map_err(|e| e.to_string())?;
+        if back.to_json() != json {
+            return Err("db json not stable across reload".into());
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_placement_is_deterministic() {
+    let gen = Gen::new(|rng: &mut Rng, _| rng.range(1, 16));
+    forall(0xDE7E, 25, &gen, |&n| {
+        let run = || -> Vec<String> {
+            let hv = Hypervisor::boot(
+                &rc3e::config::ClusterConfig::paper_testbed(),
+                VirtualClock::new(),
+                PlacementPolicy::ConsolidateFirst,
+            )
+            .unwrap();
+            let user = hv.add_user("prop");
+            (0..n)
+                .map(|_| {
+                    let (_, v, _, _) =
+                        hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+                    v.to_string()
+                })
+                .collect()
+        };
+        if run() != run() {
+            return Err("same inputs, different placements".into());
+        }
+        Ok(())
+    })
+    .unwrap();
+}

@@ -1,0 +1,204 @@
+//! Scheduler storm: hundreds of tenants contending for a 4-region
+//! testbed, plus a preemption-by-migration vignette.
+//!
+//! Part 1 — 40 tenants × 5 jobs each (200 requests, 50× the region
+//! capacity) submit through the cluster scheduler at batch class.
+//! Every tenant is capped at 1 concurrent vFPGA and carries a
+//! fair-share weight of 1, 2 or 4. The run demonstrates:
+//! * bounded wait — every admitted request eventually completes;
+//! * quota enforcement — concurrent leases never exceed the cap;
+//! * weighted fairness — heavier tenants wait less on average.
+//!
+//! Part 2 — on the heterogeneous `sched_testbed` (one RAaaS+BAaaS
+//! device, one BAaaS-only device), batch leases fill the only
+//! RAaaS-capable device; interactive requests then land by migrating
+//! batch victims to the BAaaS-only device.
+//!
+//! Run: `cargo run --release --example scheduler_storm`
+
+use std::sync::Arc;
+
+use rc3e::config::{ClusterConfig, ServiceModel};
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::sched::{RequestClass, SchedGrant, Scheduler, TenantQuota};
+use rc3e::service::RaaasService;
+use rc3e::util::clock::{VirtualClock, VirtualTime};
+use rc3e::util::ids::{TicketId, UserId};
+use rc3e::util::table::Table;
+
+const TENANTS: usize = 40;
+const JOBS_PER_TENANT: usize = 5;
+const HOLD_S: f64 = 2.0;
+
+fn boot(config: &ClusterConfig) -> Result<Arc<Scheduler>, String> {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            config,
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .map_err(|e| e.to_string())?,
+    );
+    Ok(Scheduler::new(hv))
+}
+
+fn main() -> Result<(), String> {
+    rc3e::util::logging::init();
+    storm()?;
+    preemption_vignette()?;
+    Ok(())
+}
+
+fn storm() -> Result<(), String> {
+    println!("== Part 1: admission storm on a 4-region testbed ==");
+    let sched = boot(&ClusterConfig::single_vc707())?;
+    let weights = [1u64, 2, 4];
+    let tenants: Vec<(UserId, u64)> = (0..TENANTS)
+        .map(|i| {
+            let user = sched.hv().add_user(&format!("tenant-{i:02}"));
+            let weight = weights[i % weights.len()];
+            sched.set_quota(
+                user,
+                TenantQuota {
+                    max_concurrent: 1,
+                    weight,
+                    ..TenantQuota::default()
+                },
+            );
+            (user, weight)
+        })
+        .collect();
+
+    // Submit everything up front: 200 requests, 4 regions.
+    let mut outstanding: Vec<TicketId> = Vec::new();
+    for _ in 0..JOBS_PER_TENANT {
+        for (user, _) in &tenants {
+            outstanding.push(sched.submit(
+                *user,
+                ServiceModel::RAaaS,
+                RequestClass::Batch,
+            ));
+        }
+    }
+    let total = outstanding.len();
+    println!(
+        "submitted {total} requests from {TENANTS} tenants \
+         ({}x region capacity)",
+        total / 4
+    );
+
+    // Drive to completion: hold each granted lease for {HOLD_S}s of
+    // virtual time, then release (which pumps the next admission in).
+    let mut completed = 0usize;
+    let mut quota_violations = 0usize;
+    let mut wait_by_weight: Vec<(u64, f64, usize)> =
+        weights.iter().map(|w| (*w, 0.0, 0)).collect();
+    let mut max_wait_s = 0.0f64;
+    while completed < total {
+        let mut ready: Vec<SchedGrant> = Vec::new();
+        let mut i = 0;
+        while i < outstanding.len() {
+            match sched.try_claim(outstanding[i]) {
+                Some(Ok(grant)) => {
+                    ready.push(grant);
+                    outstanding.remove(i);
+                }
+                Some(Err(e)) => return Err(format!("request failed: {e}")),
+                None => i += 1,
+            }
+        }
+        assert!(
+            !ready.is_empty(),
+            "liveness: requests outstanding but none admitted"
+        );
+        for grant in ready {
+            if sched.in_use(grant.user) > 1 {
+                quota_violations += 1;
+            }
+            let wait_s = grant.wait.as_secs_f64();
+            max_wait_s = max_wait_s.max(wait_s);
+            let weight = sched.quota(grant.user).weight;
+            if let Some(row) =
+                wait_by_weight.iter_mut().find(|(w, _, _)| *w == weight)
+            {
+                row.1 += wait_s;
+                row.2 += 1;
+            }
+            // Simulated work.
+            sched
+                .hv()
+                .clock
+                .advance(VirtualTime::from_secs_f64(HOLD_S));
+            sched.release(grant.alloc).map_err(|e| e.to_string())?;
+            completed += 1;
+        }
+    }
+
+    let mut table = Table::new(
+        "Admission waits by fair-share weight",
+        &["weight", "requests", "mean wait s", "ideal share"],
+    );
+    for (weight, total_wait, n) in &wait_by_weight {
+        table.row(&[
+            format!("{weight}"),
+            format!("{n}"),
+            format!("{:.1}", total_wait / (*n).max(1) as f64),
+            format!(
+                "{:.0}%",
+                *weight as f64 * 100.0
+                    / (weights.iter().sum::<u64>() as f64)
+            ),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "completed {completed}/{total}; quota violations: \
+         {quota_violations}; max wait {max_wait_s:.1} s (virtual)"
+    );
+    assert_eq!(quota_violations, 0, "per-tenant quota must hold");
+    assert!(outstanding.is_empty(), "no request may starve");
+    println!();
+    Ok(())
+}
+
+fn preemption_vignette() -> Result<(), String> {
+    println!("== Part 2: interactive preemption via migration ==");
+    let sched = boot(&ClusterConfig::sched_testbed())?;
+    let raaas = RaaasService::with_scheduler(Arc::clone(&sched));
+    let batcher = sched.hv().add_user("batcher");
+
+    // Fill the only RAaaS-capable device with programmed batch work.
+    rc3e::testing::fill_batch_leases(&sched, batcher, 4);
+    println!("4 batch leases programmed on the RAaaS-capable device");
+
+    // Two interactive tenants arrive on the full device: each lease
+    // relocates one batch victim to the BAaaS-only device.
+    for name in ["vip-1", "vip-2"] {
+        let vip = sched.hv().add_user(name);
+        let (alloc, vfpga) =
+            raaas.alloc(vip).map_err(|e| e.to_string())?;
+        println!(
+            "{name}: landed on {vfpga} after preempting a batch lease \
+             (migrations so far: {})",
+            sched.hv().metrics.counter("hv.migrations").get()
+        );
+        let _ = alloc;
+    }
+    let preemptions = sched.hv().metrics.counter("sched.preemptions").get();
+    assert_eq!(preemptions, 2, "both interactive leases preempted");
+
+    // Release everything and show the bill.
+    for grant in sched.active_grants() {
+        sched
+            .hv()
+            .clock
+            .advance(VirtualTime::from_secs_f64(1.0));
+        sched.release(grant.alloc).map_err(|e| e.to_string())?;
+    }
+    print!("{}", sched.usage_report());
+    println!(
+        "batcher was preempted {} times; all leases settled",
+        sched.usage(batcher).preempted
+    );
+    Ok(())
+}

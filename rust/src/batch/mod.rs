@@ -6,19 +6,22 @@
 //! type as well as a configuration file for the FPGAs."
 //!
 //! Jobs carry a service model, a bitfile (or BAaaS service name) and
-//! a stream workload. The scheduler thread drains the queue FIFO
-//! with retry-on-no-capacity: when every vFPGA is leased, the job
-//! waits until a release frees one — exactly the utilization-
-//! smoothing role the paper gives the batch system on its tiny
-//! 2-node / 4-FPGA testbed.
+//! a stream workload. Admission is *not* handled here anymore: each
+//! worker submits to the cluster [`Scheduler`] at batch class and
+//! blocks until the fair-share pump grants it a region — the old
+//! private FIFO + retry-on-`NoCapacity` loop is gone. Batch leases
+//! are preemptable: an interactive request may relocate them via
+//! migration mid-run, so workers re-resolve their vFPGA through the
+//! lease before every device operation.
 
-use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
 
 use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
 use crate::hypervisor::{Hypervisor, HypervisorError};
-use crate::rc2f::stream::{StreamConfig, StreamOutcome, StreamRunner};
+use crate::rc2f::stream::{StreamConfig, StreamOutcome};
+use crate::sched::{RequestClass, Scheduler};
 use crate::util::ids::{JobId, UserId};
 
 /// A submitted job.
@@ -63,32 +66,40 @@ impl JobState {
 
 struct QueueInner {
     pending: VecDeque<(JobId, JobSpec)>,
-    states: std::collections::BTreeMap<JobId, JobState>,
+    states: BTreeMap<JobId, JobState>,
     next_id: u64,
-    shutdown: bool,
 }
 
-/// The batch queue + scheduler.
+/// The batch queue + workers (admission delegated to the scheduler).
 pub struct BatchSystem {
     hv: Arc<Hypervisor>,
+    sched: Arc<Scheduler>,
     inner: Mutex<QueueInner>,
-    work: Condvar,
-    idle: Condvar,
 }
 
 impl BatchSystem {
+    /// Stand-alone batch system with its own scheduler.
     pub fn new(hv: Arc<Hypervisor>) -> Arc<BatchSystem> {
+        let sched = Scheduler::new(Arc::clone(&hv));
+        BatchSystem::with_scheduler(sched)
+    }
+
+    /// Batch system sharing the cluster scheduler (so batch jobs
+    /// contend fairly with the service façades).
+    pub fn with_scheduler(sched: Arc<Scheduler>) -> Arc<BatchSystem> {
         Arc::new(BatchSystem {
-            hv,
+            hv: Arc::clone(sched.hv()),
+            sched,
             inner: Mutex::new(QueueInner {
                 pending: VecDeque::new(),
-                states: std::collections::BTreeMap::new(),
+                states: BTreeMap::new(),
                 next_id: 0,
-                shutdown: false,
             }),
-            work: Condvar::new(),
-            idle: Condvar::new(),
         })
+    }
+
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.sched
     }
 
     /// Enqueue a job; returns its id immediately.
@@ -98,8 +109,6 @@ impl BatchSystem {
         inner.next_id += 1;
         inner.states.insert(id, JobState::Queued);
         inner.pending.push_back((id, spec));
-        drop(inner);
-        self.work.notify_one();
         id
     }
 
@@ -107,26 +116,13 @@ impl BatchSystem {
         self.inner.lock().unwrap().states.get(&id).cloned()
     }
 
-    /// Run the scheduler until the queue is drained (single worker —
-    /// the paper's testbed scale). Each job: allocate → retarget &
+    /// Run jobs until the queue is drained (single worker). Each job:
+    /// scheduler admission (blocking, batch class) → retarget &
     /// program → stream → release.
     pub fn run_to_completion(&self) {
         loop {
-            let job = {
-                let mut inner = self.inner.lock().unwrap();
-                loop {
-                    if let Some(job) = inner.pending.pop_front() {
-                        break Some(job);
-                    }
-                    if inner.shutdown || inner.pending.is_empty() {
-                        break None;
-                    }
-                }
-            };
-            let Some((id, spec)) = job else {
-                self.idle.notify_all();
-                return;
-            };
+            let job = self.inner.lock().unwrap().pending.pop_front();
+            let Some((id, spec)) = job else { return };
             self.set_state(id, JobState::Running);
             match self.execute(&spec) {
                 Ok(outcome) => {
@@ -146,43 +142,45 @@ impl BatchSystem {
             JobPayload::UserBitfile(_) => ServiceModel::RAaaS,
             JobPayload::Service(_) => ServiceModel::BAaaS,
         };
-        let (alloc, vfpga, fpga, _node) =
-            self.hv.alloc_vfpga(spec.user, model)?;
+        // Block until the fair-share pump admits us; the scheduler
+        // enforces quotas and skips us past capacity we cannot use.
+        let grant = self
+            .sched
+            .acquire_vfpga_blocking(spec.user, model, RequestClass::Batch)
+            .map_err(HypervisorError::from)?;
+        let alloc = grant.alloc;
         let result = (|| {
             let bitfile = match &spec.payload {
                 JobPayload::UserBitfile(bs) => bs.clone(),
                 JobPayload::Service(name) => self.hv.service_bitfile(name)?,
             };
-            // Retarget the relocatable bitfile to wherever placement
-            // put us (the paper's hide-the-region future-work item).
-            let dev = self.hv.device(fpga)?;
-            let slot = dev.slot_of[&vfpga];
-            let quarters = {
-                let hw = dev.fpga.lock().unwrap();
-                hw.region(vfpga)
-                    .map_err(|e| HypervisorError::Device(e.to_string()))?
-                    .shape
-                    .quarters()
-            };
-            let placed = crate::hls::flow::DesignFlow::retarget(
-                &bitfile, slot, quarters,
-            );
+            // Resolve placement through the lease (a preemption may
+            // have migrated us) and retarget the relocatable bitfile
+            // (the paper's hide-the-region future-work item).
+            let vfpga = self.hv.check_vfpga_lease(alloc, spec.user)?;
+            let placed = self.hv.retarget_for(vfpga, &bitfile)?;
             self.hv.program_vfpga(alloc, spec.user, &placed)?;
-            let runner = StreamRunner::new(
-                Arc::clone(&self.hv.clock),
-                Arc::clone(&self.hv.device(fpga)?.link),
-            );
-            runner
+            // Re-resolve before streaming: a preemption between PR
+            // and here migrates the lease (and its configured design)
+            // to a new region; a stale id would stream through the
+            // wrong device's link. A race inside any single step
+            // still fails cleanly (sanity check / device files), and
+            // the job reports Failed rather than corrupting state.
+            let vfpga = self.hv.check_vfpga_lease(alloc, spec.user)?;
+            self.hv
+                .stream_runner_for(vfpga)?
                 .run(&spec.stream)
                 .map_err(HypervisorError::Db)
         })();
-        // Always release, success or failure.
-        let _ = self.hv.release(alloc);
+        // Always release through the scheduler, success or failure —
+        // that is what pumps the next queued job in.
+        let _ = self.sched.release(alloc);
         result
     }
 
-    /// Spawn `n` scheduler worker threads and wait for the queue to
-    /// drain (multi-worker variant used by the BAaaS example).
+    /// Spawn `n` worker threads and wait for the queue to drain
+    /// (multi-worker variant used by the BAaaS example and the
+    /// scheduler storm).
     pub fn drain_with_workers(self: &Arc<Self>, n: usize) {
         std::thread::scope(|scope| {
             for _ in 0..n.max(1) {
@@ -199,8 +197,7 @@ mod tests {
     use crate::util::clock::VirtualClock;
 
     fn system() -> Option<Arc<BatchSystem>> {
-        if !crate::runtime::artifact_dir().join("manifest.json").exists() {
-            eprintln!("skipping batch test: run `make artifacts`");
+        if !crate::testing::artifacts_available("batch::tests") {
             return None;
         }
         let hv =
@@ -209,13 +206,7 @@ mod tests {
     }
 
     fn mm16_bitfile() -> Bitstream {
-        crate::bitstream::BitstreamBuilder::partial("xc7vx485t", "matmul16")
-            .resources(crate::fpga::resources::Resources::new(
-                25_298, 41_654, 14, 80,
-            ))
-            .frames(crate::hls::flow::region_window(0, 1))
-            .artifact("matmul16_b256")
-            .build()
+        crate::testing::mm16_partial(0)
     }
 
     fn job(bs: &BatchSystem, mults: u64) -> JobSpec {
@@ -301,5 +292,19 @@ mod tests {
         bs.run_to_completion();
         assert!(matches!(bs.state(a), Some(JobState::Done(_))));
         assert!(matches!(bs.state(b), Some(JobState::Done(_))));
+    }
+
+    #[test]
+    fn jobs_charge_the_usage_ledger() {
+        let Some(bs) = system() else { return };
+        let spec = job(&bs, 256);
+        let user = spec.user;
+        bs.submit(spec);
+        bs.run_to_completion();
+        let usage = bs.scheduler().usage(user);
+        assert_eq!(usage.granted, 1);
+        assert_eq!(usage.released, 1);
+        assert!(usage.device_seconds > 0.0);
+        assert!(usage.energy_joules > 0.0);
     }
 }

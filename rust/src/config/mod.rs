@@ -96,6 +96,40 @@ impl ClusterConfig {
         }
     }
 
+    /// Heterogeneous scheduler testbed: one VC707 serving
+    /// RAaaS + BAaaS and one serving BAaaS only. Interactive RAaaS
+    /// requests can land on the first device alone, so once batch
+    /// work fills it the scheduler must preempt-by-migration toward
+    /// the BAaaS-only device — the scenario `examples/scheduler_storm`
+    /// and the `sched` test suite exercise.
+    pub fn sched_testbed() -> ClusterConfig {
+        ClusterConfig {
+            nodes: vec![
+                NodeConfig {
+                    name: "node-a".to_string(),
+                    fpgas: vec![FpgaConfig {
+                        board: BoardKind::Vc707,
+                        vfpgas: 4,
+                        models: vec![
+                            ServiceModel::RAaaS,
+                            ServiceModel::BAaaS,
+                        ],
+                    }],
+                },
+                NodeConfig {
+                    name: "node-b".to_string(),
+                    fpgas: vec![FpgaConfig {
+                        board: BoardKind::Vc707,
+                        vfpgas: 4,
+                        models: vec![ServiceModel::BAaaS],
+                    }],
+                },
+            ],
+            require_signatures: false,
+            rpc_overhead_ms: 69.0,
+        }
+    }
+
     /// Single-node, single-FPGA config for the quickstart example.
     pub fn single_vc707() -> ClusterConfig {
         ClusterConfig {
@@ -268,6 +302,20 @@ mod tests {
         let c = ClusterConfig::paper_testbed();
         let j = c.to_json();
         let back = ClusterConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn sched_testbed_is_model_asymmetric() {
+        let c = ClusterConfig::sched_testbed();
+        assert_eq!(c.total_fpgas(), 2);
+        assert_eq!(c.total_vfpgas(), 8);
+        let models: Vec<_> =
+            c.nodes.iter().map(|n| n.fpgas[0].models.clone()).collect();
+        assert!(models[0].contains(&ServiceModel::RAaaS));
+        assert!(!models[1].contains(&ServiceModel::RAaaS));
+        // Round-trips like any other config.
+        let back = ClusterConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
     }
 

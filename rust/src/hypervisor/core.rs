@@ -45,6 +45,8 @@ pub enum HypervisorError {
     UnknownDevice(FpgaId),
     #[error("unknown service '{0}'")]
     UnknownService(String),
+    #[error("scheduler: {0}")]
+    Sched(String),
 }
 
 /// Everything the hypervisor holds for one physical board.
@@ -499,6 +501,55 @@ impl Hypervisor {
     /// The bitstream last programmed into a region (migration input).
     pub fn programmed_bitstream(&self, v: VfpgaId) -> Option<Bitstream> {
         self.programmed.lock().unwrap().get(&v).cloned()
+    }
+
+    /// Device currently hosting a vFPGA region (lease resolution).
+    fn fpga_of_vfpga(&self, vfpga: VfpgaId) -> Result<FpgaId, HypervisorError> {
+        let db = self.db.lock().unwrap();
+        db.device_of_vfpga(vfpga)
+            .map(|d| d.id)
+            .ok_or_else(|| {
+                HypervisorError::Db(format!("{vfpga} not in database"))
+            })
+    }
+
+    /// Stream runner bound to the device currently hosting `vfpga` —
+    /// the streaming half of lease resolution (see [`Self::retarget_for`]
+    /// for the programming half). Callers re-resolve through the
+    /// lease right before streaming so a preemption-migration between
+    /// steps streams through the new device's link.
+    pub fn stream_runner_for(
+        &self,
+        vfpga: VfpgaId,
+    ) -> Result<crate::rc2f::stream::StreamRunner, HypervisorError> {
+        let dev = self.device(self.fpga_of_vfpga(vfpga)?)?;
+        Ok(crate::rc2f::stream::StreamRunner::new(
+            Arc::clone(&self.clock),
+            Arc::clone(&dev.link),
+        ))
+    }
+
+    /// Retarget a relocatable partial bitfile to wherever `vfpga`
+    /// actually sits (slot + region size) — the paper's region-hiding
+    /// feature. Single device-DB lookup; every programming path
+    /// (services, batch, middleware, migration callers) shares this.
+    pub fn retarget_for(
+        &self,
+        vfpga: VfpgaId,
+        bitfile: &Bitstream,
+    ) -> Result<Bitstream, HypervisorError> {
+        let dev = self.device(self.fpga_of_vfpga(vfpga)?)?;
+        let slot = dev.slot_of[&vfpga];
+        let quarters = {
+            let hw = dev.fpga.lock().unwrap();
+            hw.region(vfpga)
+                .map_err(|e| HypervisorError::Device(e.to_string()))?
+                .shape
+                .quarters()
+        };
+        Ok(crate::hls::flow::DesignFlow::retarget(
+            bitfile, slot, quarters,
+        ))
     }
 
     pub fn placement_policy(&self) -> PlacementPolicy {

@@ -52,11 +52,19 @@ impl Hypervisor {
             let target = match prefer {
                 Some(t) => t,
                 None => {
-                    // Free regions on other devices first, then same
-                    // device (deterministic order).
+                    // Free regions on other devices *serving the
+                    // lease's service model* first, then the same
+                    // device (deterministic order) — relocation must
+                    // respect the per-device model policy that
+                    // alloc_vfpga enforces.
+                    let model = db
+                        .allocation(alloc_id)
+                        .map(|a| a.model)
+                        .ok_or(HypervisorError::BadAllocation(alloc_id))?;
                     let mut candidates: Vec<VfpgaId> = Vec::new();
-                    for (id, _) in self.db_devices(&db) {
-                        if id != src_fpga {
+                    for (id, entry) in self.db_devices(&db) {
+                        if id != src_fpga && entry.models.contains(&model)
+                        {
                             candidates.extend(db.free_regions(id));
                         }
                     }

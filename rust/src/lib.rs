@@ -25,6 +25,10 @@
 //!   partial bitstreams from core specifications.
 //! * [`hypervisor`] — RC3E itself: device database, allocation for
 //!   the three service models, placement, energy, migration.
+//! * [`sched`] — the cluster scheduler: single admission path above
+//!   the hypervisor with weighted fair-share queueing, per-tenant
+//!   quotas, time-boxed reservations, preemption-by-migration and
+//!   usage accounting.
 //! * [`middleware`] — management-node RPC server, node agents, client
 //!   library and the CLI command surface.
 //! * [`batch`] — batch system for long-running unattended jobs.
@@ -49,6 +53,7 @@ pub mod middleware;
 pub mod pcie;
 pub mod rc2f;
 pub mod runtime;
+pub mod sched;
 pub mod service;
 pub mod testing;
 pub mod util;

@@ -67,6 +67,31 @@ fn flag_specs() -> Vec<FlagSpec> {
             help: "virtual-clock wall divisor for serve (0 = no sleep)",
         },
         FlagSpec {
+            name: "max-vfpgas",
+            takes_value: true,
+            help: "quota: max concurrent vFPGAs for --user (0 = unlimited)",
+        },
+        FlagSpec {
+            name: "budget-s",
+            takes_value: true,
+            help: "quota: lifetime device-second budget (negative clears)",
+        },
+        FlagSpec {
+            name: "weight",
+            takes_value: true,
+            help: "quota: fair-share weight for --user",
+        },
+        FlagSpec {
+            name: "regions",
+            takes_value: true,
+            help: "reserve: vFPGA regions to reserve",
+        },
+        FlagSpec {
+            name: "duration-s",
+            takes_value: true,
+            help: "reserve: reservation window length in virtual seconds",
+        },
+        FlagSpec {
             name: "verbose",
             takes_value: false,
             help: "debug logging",
@@ -109,6 +134,10 @@ fn main() {
             &[("user", "user"), ("alloc", "alloc")],
         ),
         "energy" => forward(&args, "energy", &[]),
+        "sched" => forward(&args, "sched_status", &[]),
+        "usage" => cmd_usage(&args),
+        "quota" => cmd_quota(&args),
+        "reserve" => cmd_reserve(&args),
         _ => {
             print!("{}", usage());
             Ok(())
@@ -135,7 +164,12 @@ fn usage() -> String {
          --mults 100000\n\
          \x20 release    --alloc alloc-N\n\
          \x20 migrate    --user user-N --alloc alloc-N\n\
-         \x20 energy\n\n",
+         \x20 energy\n\
+         \x20 sched      scheduler queue/grant/reservation status\n\
+         \x20 quota      --user user-N [--max-vfpgas N --budget-s S \
+         --weight W]\n\
+         \x20 usage      per-tenant device-second + energy report\n\
+         \x20 reserve    --user user-N --regions N [--duration-s S]\n\n",
     );
     out.push_str(&rc3e::util::cli::usage("rc3e", "flags", &flag_specs()));
     out
@@ -236,6 +270,69 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
         ),
     );
     let body = client.call("stream", params)?;
+    println!("{}", body.to_pretty());
+    Ok(())
+}
+
+/// `rc3e quota --user user-N [--max-vfpgas N --budget-s S --weight W]`
+/// — with any limit flag present this sets the quota, otherwise it
+/// reads it.
+fn cmd_quota(args: &Args) -> Result<(), String> {
+    let user = args.get("user").ok_or("missing --user")?.to_string();
+    let mut client = connect(args)?;
+    let max_vfpgas = match args.get("max-vfpgas") {
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|e| format!("--max-vfpgas: {e}"))?)
+        }
+        None => None,
+    };
+    let budget_s = match args.get("budget-s") {
+        Some(v) => {
+            Some(v.parse::<f64>().map_err(|e| format!("--budget-s: {e}"))?)
+        }
+        None => None,
+    };
+    let weight = match args.get("weight") {
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|e| format!("--weight: {e}"))?)
+        }
+        None => None,
+    };
+    let body = if max_vfpgas.is_some() || budget_s.is_some() || weight.is_some()
+    {
+        client.quota_set(&user, max_vfpgas, budget_s, weight)?
+    } else {
+        client.quota_get(&user)?
+    };
+    println!("{}", body.to_pretty());
+    Ok(())
+}
+
+/// `rc3e usage` — print the per-tenant accounting table.
+fn cmd_usage(args: &Args) -> Result<(), String> {
+    let mut client = connect(args)?;
+    let body = client.usage_report()?;
+    match body.get("table").as_str() {
+        Some(table) => print!("{table}"),
+        None => println!("{}", body.to_pretty()),
+    }
+    Ok(())
+}
+
+/// `rc3e reserve --user user-N --regions N [--duration-s S]`.
+fn cmd_reserve(args: &Args) -> Result<(), String> {
+    let user = args.get("user").ok_or("missing --user")?.to_string();
+    let regions = args
+        .get("regions")
+        .ok_or("missing --regions")?
+        .parse::<u64>()
+        .map_err(|e| format!("--regions: {e}"))?;
+    let duration_s = match args.get("duration-s") {
+        Some(v) => v.parse::<f64>().map_err(|e| format!("--duration-s: {e}"))?,
+        None => 3600.0,
+    };
+    let mut client = connect(args)?;
+    let body = client.reserve(&user, regions, duration_s)?;
     println!("{}", body.to_pretty());
     Ok(())
 }

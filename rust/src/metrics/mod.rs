@@ -7,7 +7,7 @@
 //! takes a lock to record progress.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// A lock-free monotonic counter.
@@ -25,6 +25,29 @@ impl Counter {
         self.add(1);
     }
     pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A lock-free gauge: a value that can move both ways (queue depth,
+/// active grants). The scheduler sets it; reports read it.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -112,6 +135,7 @@ impl Default for Histogram {
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
 }
 
 impl Registry {
@@ -137,11 +161,23 @@ impl Registry {
             .clone()
     }
 
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Gauge::new()))
+            .clone()
+    }
+
     /// Render all metrics as a report (CLI `rc3e stats`).
     pub fn report(&self) -> String {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name} = {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name} = {} (gauge)\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -236,6 +272,17 @@ mod tests {
         let report = r.report();
         assert!(report.contains("allocs = 2"));
         assert!(report.contains("lat: n=1"));
+    }
+
+    #[test]
+    fn gauge_moves_both_ways() {
+        let r = Registry::new();
+        let g = r.gauge("queue.depth");
+        g.set(5);
+        g.add(3);
+        g.sub(6);
+        assert_eq!(r.gauge("queue.depth").get(), 2);
+        assert!(r.report().contains("queue.depth = 2 (gauge)"));
     }
 
     #[test]

@@ -36,6 +36,65 @@ impl Client {
             .ok_or_else(|| "io: eof (server closed connection)".to_string())?;
         Response::from_json(&frame)?.into_result()
     }
+
+    // ------------------------------------ sched-family conveniences
+
+    /// Scheduler queue/grant/reservation snapshot.
+    pub fn sched_status(&mut self) -> Result<Json, String> {
+        self.call("sched_status", Json::obj(vec![]))
+    }
+
+    /// Set (parts of) a tenant quota; unspecified fields keep their
+    /// current values server-side. `max_vfpgas: 0` restores an
+    /// unlimited cap; a negative `budget_s` clears the budget.
+    pub fn quota_set(
+        &mut self,
+        user: &str,
+        max_vfpgas: Option<u64>,
+        budget_s: Option<f64>,
+        weight: Option<u64>,
+    ) -> Result<Json, String> {
+        let mut params = Json::obj(vec![("user", Json::from(user))]);
+        if let Some(m) = max_vfpgas {
+            params.set("max_vfpgas", Json::from(m));
+        }
+        if let Some(b) = budget_s {
+            params.set("budget_s", Json::from(b));
+        }
+        if let Some(w) = weight {
+            params.set("weight", Json::from(w));
+        }
+        self.call("quota_set", params)
+    }
+
+    pub fn quota_get(&mut self, user: &str) -> Result<Json, String> {
+        self.call(
+            "quota_get",
+            Json::obj(vec![("user", Json::from(user))]),
+        )
+    }
+
+    /// Per-tenant usage rows + rendered operator table.
+    pub fn usage_report(&mut self) -> Result<Json, String> {
+        self.call("usage_report", Json::obj(vec![]))
+    }
+
+    /// Reserve vFPGA capacity for a tenant over a virtual-time window.
+    pub fn reserve(
+        &mut self,
+        user: &str,
+        regions: u64,
+        duration_s: f64,
+    ) -> Result<Json, String> {
+        self.call(
+            "reserve",
+            Json::obj(vec![
+                ("user", Json::from(user)),
+                ("regions", Json::from(regions)),
+                ("duration_s", Json::from(duration_s)),
+            ]),
+        )
+    }
 }
 
 #[cfg(test)]

@@ -19,8 +19,9 @@ use crate::config::ServiceModel;
 use crate::hls::synth::{CoreKind, CoreSpec, Synthesizer};
 use crate::hypervisor::Hypervisor;
 use crate::rc2f::stream::StreamConfig;
+use crate::sched::{RequestClass, SchedError, Scheduler, TenantQuota};
 use crate::util::clock::VirtualTime;
-use crate::util::ids::{AllocationId, FpgaId, NodeId, UserId};
+use crate::util::ids::{AllocationId, FpgaId, NodeId, ReservationId, UserId};
 use crate::util::json::Json;
 
 /// The management server (owns its accept thread).
@@ -33,6 +34,8 @@ pub struct ManagementServer {
 
 struct ServerInner {
     hv: Arc<Hypervisor>,
+    /// The cluster scheduler — every allocation RPC admits through it.
+    sched: Arc<Scheduler>,
     rpc_overhead_ms: f64,
     /// Prebuilt relocatable user-core bitfiles ("the user uploads a
     /// bitfile" — kept server-side so the CLI can reference cores by
@@ -50,8 +53,10 @@ impl ManagementServer {
     ) -> std::io::Result<ManagementServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
+        let sched = Scheduler::new(Arc::clone(&hv));
         let inner = Arc::new(ServerInner {
             hv,
+            sched,
             rpc_overhead_ms,
             cores: build_core_library(),
             agents: Mutex::new(BTreeMap::new()),
@@ -91,6 +96,11 @@ impl ManagementServer {
     /// Names of the prebuilt user cores the server can program.
     pub fn core_names(&self) -> Vec<String> {
         self.inner.cores.keys().cloned().collect()
+    }
+
+    /// The cluster scheduler behind this server.
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.inner.sched
     }
 
     pub fn shutdown(&mut self) {
@@ -182,6 +192,33 @@ fn stream_config_for(
     }
 }
 
+fn quota_json(
+    user: UserId,
+    quota: &TenantQuota,
+    in_use: u64,
+) -> Json {
+    // 0 = unlimited, mirroring quota_set's convention (u64::MAX would
+    // lose precision through the f64-backed Json number anyway).
+    let max_vfpgas = if quota.max_concurrent == u64::MAX {
+        0
+    } else {
+        quota.max_concurrent
+    };
+    Json::obj(vec![
+        ("user", Json::from(user.to_string())),
+        ("max_vfpgas", Json::from(max_vfpgas)),
+        (
+            "budget_s",
+            match quota.device_seconds_budget {
+                Some(b) => Json::from(b),
+                None => Json::Null,
+            },
+        ),
+        ("weight", Json::from(quota.weight)),
+        ("in_use", Json::from(in_use)),
+    ])
+}
+
 fn outcome_json(out: &crate::rc2f::stream::StreamOutcome) -> Json {
     Json::obj(vec![
         ("artifact", Json::from(out.artifact.as_str())),
@@ -257,35 +294,60 @@ fn dispatch(inner: &ServerInner, req: &Request) -> Result<Response, String> {
         }
         "alloc_vfpga" => {
             let user = parse_user(p)?;
-            let model = p
-                .get("model")
-                .as_str()
-                .and_then(ServiceModel::parse)
-                .unwrap_or(ServiceModel::RAaaS);
-            let (alloc, vfpga, fpga, node) = hv
-                .alloc_vfpga(user, model)
+            // Absent params default; present-but-unparsable ones are
+            // errors (a typo must not silently escalate a batch
+            // request to interactive, which could preempt someone).
+            let model = match p.get("model").as_str() {
+                Some(s) => ServiceModel::parse(s)
+                    .ok_or_else(|| format!("unknown model '{s}'"))?,
+                None => ServiceModel::RAaaS,
+            };
+            let class = match p.get("class").as_str() {
+                Some(s) => RequestClass::parse(s)
+                    .ok_or_else(|| format!("unknown class '{s}'"))?,
+                None => RequestClass::Interactive,
+            };
+            let grant = inner
+                .sched
+                .acquire_vfpga(user, model, class)
                 .map_err(|e| e.to_string())?;
             ok(Json::obj(vec![
-                ("alloc", Json::from(alloc.to_string())),
-                ("vfpga", Json::from(vfpga.to_string())),
-                ("fpga", Json::from(fpga.to_string())),
-                ("node", Json::from(node.to_string())),
+                ("alloc", Json::from(grant.alloc.to_string())),
+                (
+                    "vfpga",
+                    Json::from(
+                        grant.vfpga().expect("vfpga grant").to_string(),
+                    ),
+                ),
+                ("fpga", Json::from(grant.fpga().to_string())),
+                ("node", Json::from(grant.node().to_string())),
+                ("wait_ms", Json::from(grant.wait.as_millis_f64())),
             ]))
         }
         "alloc_physical" => {
             let user = parse_user(p)?;
-            let (alloc, fpga, node) = hv
-                .alloc_physical(user, None)
+            let grant = inner
+                .sched
+                .acquire_physical(user, None, RequestClass::Interactive)
                 .map_err(|e| e.to_string())?;
             ok(Json::obj(vec![
-                ("alloc", Json::from(alloc.to_string())),
-                ("fpga", Json::from(fpga.to_string())),
-                ("node", Json::from(node.to_string())),
+                ("alloc", Json::from(grant.alloc.to_string())),
+                ("fpga", Json::from(grant.fpga().to_string())),
+                ("node", Json::from(grant.node().to_string())),
             ]))
         }
         "release" => {
             let alloc = parse_alloc(p)?;
-            hv.release(alloc).map_err(|e| e.to_string())?;
+            // Scheduler-tracked leases release through the scheduler
+            // (quota credit + queue pump); anything allocated out of
+            // band falls back to the hypervisor.
+            match inner.sched.release(alloc) {
+                Ok(()) => {}
+                Err(SchedError::UnknownGrant(_)) => {
+                    hv.release(alloc).map_err(|e| e.to_string())?
+                }
+                Err(e) => return Err(e.to_string()),
+            }
             ok(Json::obj(vec![("released", Json::from(true))]))
         }
         "program_core" => {
@@ -299,28 +361,9 @@ fn dispatch(inner: &ServerInner, req: &Request) -> Result<Response, String> {
             let vfpga = hv
                 .check_vfpga_lease(alloc, user)
                 .map_err(|e| e.to_string())?;
-            let (slot, quarters) = {
-                let db = hv.db.lock().unwrap();
-                let fpga = db
-                    .device_of_vfpga(vfpga)
-                    .ok_or("vfpga has no device")?
-                    .id;
-                drop(db);
-                let dev = hv.device(fpga).map_err(|e| e.to_string())?;
-                let slot = dev.slot_of[&vfpga];
-                let q = dev
-                    .fpga
-                    .lock()
-                    .unwrap()
-                    .region(vfpga)
-                    .map_err(|e| e.to_string())?
-                    .shape
-                    .quarters();
-                (slot, q)
-            };
-            let placed = crate::hls::flow::DesignFlow::retarget(
-                bitfile, slot, quarters,
-            );
+            let placed = hv
+                .retarget_for(vfpga, bitfile)
+                .map_err(|e| e.to_string())?;
             let d = hv
                 .program_vfpga(alloc, user, &placed)
                 .map_err(|e| e.to_string())?;
@@ -335,7 +378,9 @@ fn dispatch(inner: &ServerInner, req: &Request) -> Result<Response, String> {
             let core = p.str_field("core")?;
             let mults = p.u64_field("mults")?;
             let cfg = stream_config_for(core, mults)?;
-            let svc = crate::service::RaaasService::new(Arc::clone(hv));
+            let svc = crate::service::RaaasService::with_scheduler(
+                Arc::clone(&inner.sched),
+            );
             let out = svc
                 .stream(alloc, user, &cfg)
                 .map_err(|e| e.to_string())?;
@@ -379,9 +424,16 @@ fn dispatch(inner: &ServerInner, req: &Request) -> Result<Response, String> {
         "migrate" => {
             let user = parse_user(p)?;
             let alloc = parse_alloc(p)?;
+            // Default target selection is model-aware (see
+            // hypervisor::migration), so the relocated lease stays
+            // within the per-device model policy.
             let report = hv
                 .migrate_vfpga(alloc, user, None)
                 .map_err(|e| e.to_string())?;
+            // Keep the scheduler's view of the lease current so
+            // preemption victim selection and sched_status stay
+            // accurate.
+            inner.sched.note_migration(alloc, report.to);
             ok(Json::obj(vec![
                 ("from", Json::from(report.from.to_string())),
                 ("to", Json::from(report.to.to_string())),
@@ -408,7 +460,9 @@ fn dispatch(inner: &ServerInner, req: &Request) -> Result<Response, String> {
                 "matmul16"
             };
             let cfg = stream_config_for(core, mults)?;
-            let svc = crate::service::BaaasService::new(Arc::clone(hv));
+            let svc = crate::service::BaaasService::with_scheduler(
+                Arc::clone(&inner.sched),
+            );
             let out = svc
                 .invoke(user, service, &cfg)
                 .map_err(|e| e.to_string())?;
@@ -459,6 +513,72 @@ fn dispatch(inner: &ServerInner, req: &Request) -> Result<Response, String> {
                 ),
                 ("energy_j", Json::from(report.energy_j)),
             ]))
+        }
+        "sched_status" => ok(inner.sched.status_json()),
+        "quota_set" => {
+            // Absent fields keep their current values; `max_vfpgas: 0`
+            // restores an unlimited cap and a negative `budget_s`
+            // clears the budget (the JSON layer cannot distinguish
+            // null from absent). The merge runs atomically under the
+            // scheduler's lock so concurrent partial updates cannot
+            // lose each other's fields.
+            let user = parse_user(p)?;
+            let quota = inner.sched.update_quota(user, |q| {
+                match p.get("max_vfpgas").as_u64() {
+                    Some(0) => q.max_concurrent = u64::MAX,
+                    Some(n) => q.max_concurrent = n,
+                    None => {}
+                }
+                match p.get("budget_s").as_f64() {
+                    Some(b) if b < 0.0 => q.device_seconds_budget = None,
+                    Some(b) => q.device_seconds_budget = Some(b),
+                    None => {}
+                }
+                if let Some(w) = p.get("weight").as_u64() {
+                    q.weight = w.max(1);
+                }
+            });
+            ok(quota_json(user, &quota, inner.sched.in_use(user)))
+        }
+        "quota_get" => {
+            let user = parse_user(p)?;
+            let quota = inner.sched.quota(user);
+            ok(quota_json(user, &quota, inner.sched.in_use(user)))
+        }
+        "usage_report" => ok(Json::obj(vec![
+            ("tenants", inner.sched.usage_json()),
+            (
+                "table",
+                Json::from(inner.sched.usage_report()),
+            ),
+        ])),
+        "reserve" => {
+            let user = parse_user(p)?;
+            let regions = p.u64_field("regions")?;
+            let start_s = p.get("start_s").as_f64().unwrap_or_else(|| {
+                hv.clock.now().as_secs_f64()
+            });
+            let duration_s =
+                p.get("duration_s").as_f64().unwrap_or(3600.0);
+            let id = inner.sched.reserve(
+                user,
+                regions,
+                VirtualTime::from_secs_f64(start_s),
+                VirtualTime::from_secs_f64(duration_s),
+            );
+            ok(Json::obj(vec![(
+                "reservation",
+                Json::from(id.to_string()),
+            )]))
+        }
+        "cancel_reservation" => {
+            let id = ReservationId::parse(p.str_field("reservation")?)
+                .ok_or("bad reservation id")?;
+            inner
+                .sched
+                .cancel_reservation(id)
+                .map_err(|e| e.to_string())?;
+            ok(Json::obj(vec![("cancelled", Json::from(true))]))
         }
         "energy" => ok(Json::obj(vec![
             ("joules", Json::from(hv.total_energy_joules())),
@@ -581,7 +701,9 @@ mod tests {
 
     #[test]
     fn stream_over_rpc_returns_outcome() {
-        if !crate::runtime::artifact_dir().join("manifest.json").exists() {
+        if !crate::testing::artifacts_available(
+            "middleware::stream_over_rpc_returns_outcome",
+        ) {
             return;
         }
         let (_s, mut c, _hv) = setup();
@@ -642,5 +764,137 @@ mod tests {
         let dump = c.call("db_dump", Json::obj(vec![])).unwrap();
         let db = crate::hypervisor::DeviceDb::from_json(&dump).unwrap();
         assert_eq!(db.devices.len(), 4);
+    }
+
+    #[test]
+    fn quota_rpcs_roundtrip_and_enforce() {
+        let (_s, mut c, _hv) = setup();
+        let user = c
+            .call("add_user", Json::obj(vec![("name", Json::from("q"))]))
+            .unwrap()
+            .get("user")
+            .as_str()
+            .unwrap()
+            .to_string();
+        let set = c
+            .call(
+                "quota_set",
+                Json::obj(vec![
+                    ("user", Json::from(user.as_str())),
+                    ("max_vfpgas", Json::from(1u64)),
+                    ("weight", Json::from(3u64)),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(set.get("max_vfpgas").as_u64(), Some(1));
+        let got = c
+            .call(
+                "quota_get",
+                Json::obj(vec![("user", Json::from(user.as_str()))]),
+            )
+            .unwrap();
+        assert_eq!(got.get("weight").as_u64(), Some(3));
+        // First lease fits the quota; the second is denied.
+        c.call(
+            "alloc_vfpga",
+            Json::obj(vec![("user", Json::from(user.as_str()))]),
+        )
+        .unwrap();
+        let err = c
+            .call(
+                "alloc_vfpga",
+                Json::obj(vec![("user", Json::from(user.as_str()))]),
+            )
+            .unwrap_err();
+        assert!(err.contains("quota"), "{err}");
+    }
+
+    #[test]
+    fn sched_status_and_usage_rpcs() {
+        let (_s, mut c, _hv) = setup();
+        let user = c
+            .call("add_user", Json::obj(vec![("name", Json::from("u"))]))
+            .unwrap()
+            .get("user")
+            .as_str()
+            .unwrap()
+            .to_string();
+        let lease = c
+            .call(
+                "alloc_vfpga",
+                Json::obj(vec![("user", Json::from(user.as_str()))]),
+            )
+            .unwrap();
+        let status =
+            c.call("sched_status", Json::obj(vec![])).unwrap();
+        assert_eq!(status.get("active_grants").as_u64(), Some(1));
+        assert_eq!(status.get("queue_depth").as_u64(), Some(0));
+        c.call(
+            "release",
+            Json::obj(vec![(
+                "alloc",
+                Json::from(lease.get("alloc").as_str().unwrap()),
+            )]),
+        )
+        .unwrap();
+        let usage = c.call("usage_report", Json::obj(vec![])).unwrap();
+        let tenants = usage.get("tenants").as_arr().unwrap();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].get("released").as_u64(), Some(1));
+        assert!(usage
+            .get("table")
+            .as_str()
+            .unwrap()
+            .contains("tenant"));
+    }
+
+    #[test]
+    fn reservation_rpcs_withhold_capacity() {
+        let (_s, mut c, _hv) = setup();
+        let mk_user = |c: &mut Client, name: &str| {
+            c.call(
+                "add_user",
+                Json::obj(vec![("name", Json::from(name))]),
+            )
+            .unwrap()
+            .get("user")
+            .as_str()
+            .unwrap()
+            .to_string()
+        };
+        let holder = mk_user(&mut c, "holder");
+        let other = mk_user(&mut c, "other");
+        // Reserve the whole 16-region testbed for the holder.
+        let r = c
+            .call(
+                "reserve",
+                Json::obj(vec![
+                    ("user", Json::from(holder.as_str())),
+                    ("regions", Json::from(16u64)),
+                    ("duration_s", Json::from(10_000.0)),
+                ]),
+            )
+            .unwrap();
+        let err = c
+            .call(
+                "alloc_vfpga",
+                Json::obj(vec![("user", Json::from(other.as_str()))]),
+            )
+            .unwrap_err();
+        assert!(err.contains("no capacity"), "{err}");
+        c.call(
+            "cancel_reservation",
+            Json::obj(vec![(
+                "reservation",
+                Json::from(r.get("reservation").as_str().unwrap()),
+            )]),
+        )
+        .unwrap();
+        assert!(c
+            .call(
+                "alloc_vfpga",
+                Json::obj(vec![("user", Json::from(other.as_str()))]),
+            )
+            .is_ok());
     }
 }

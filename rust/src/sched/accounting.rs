@@ -1,0 +1,200 @@
+//! Per-tenant usage accounting: device-seconds and energy.
+//!
+//! Every release (and preemption) flows through the scheduler, which
+//! charges the tenant's row here: lease duration in device-seconds
+//! (vFPGA-equivalents × virtual seconds held) and the energy those
+//! regions drew, priced from the board's per-region active power
+//! ([`crate::fpga::power`] model). The ledger feeds three consumers:
+//! the device-second *budget* check in [`super::quota`], the
+//! `usage_report` middleware RPC, and the operator table rendered
+//! with [`crate::util::table`].
+
+use std::collections::BTreeMap;
+
+use crate::util::ids::UserId;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// One tenant's accumulated usage.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantUsage {
+    /// Admissions granted (fast path + queue).
+    pub granted: u64,
+    /// Leases released back.
+    pub released: u64,
+    /// Times one of this tenant's leases was relocated by preemption.
+    pub preempted: u64,
+    /// Requests that went through the admission queue.
+    pub queued: u64,
+    /// Accumulated device-seconds (vFPGA-equivalents × seconds).
+    pub device_seconds: f64,
+    /// Accumulated energy in joules.
+    pub energy_joules: f64,
+    /// Longest admission wait seen (virtual ms).
+    pub max_wait_ms: f64,
+}
+
+/// The usage ledger.
+#[derive(Debug, Default)]
+pub struct UsageLedger {
+    rows: BTreeMap<UserId, TenantUsage>,
+}
+
+impl UsageLedger {
+    pub fn new() -> UsageLedger {
+        UsageLedger::default()
+    }
+
+    pub fn row_mut(&mut self, user: UserId) -> &mut TenantUsage {
+        self.rows.entry(user).or_default()
+    }
+
+    pub fn usage(&self, user: UserId) -> TenantUsage {
+        self.rows.get(&user).cloned().unwrap_or_default()
+    }
+
+    pub fn device_seconds(&self, user: UserId) -> f64 {
+        self.rows
+            .get(&user)
+            .map(|r| r.device_seconds)
+            .unwrap_or(0.0)
+    }
+
+    /// Charge a finished lease: `unit_seconds` device-seconds at
+    /// `watts` per vFPGA-equivalent.
+    pub fn charge_release(
+        &mut self,
+        user: UserId,
+        unit_seconds: f64,
+        watts: f64,
+    ) {
+        let row = self.row_mut(user);
+        row.released += 1;
+        row.device_seconds += unit_seconds;
+        row.energy_joules += unit_seconds * watts;
+    }
+
+    pub fn tenants(&self) -> Vec<UserId> {
+        self.rows.keys().copied().collect()
+    }
+
+    /// Render the operator report. `names` maps tenant ids to display
+    /// names (unknown tenants render as their id).
+    pub fn report(&self, names: &BTreeMap<UserId, String>) -> String {
+        let mut table = Table::new(
+            "Per-tenant usage (cluster scheduler accounting)",
+            &[
+                "tenant",
+                "granted",
+                "queued",
+                "preempted",
+                "device-s",
+                "energy J",
+                "max wait ms",
+            ],
+        );
+        for (user, row) in &self.rows {
+            let name = names
+                .get(user)
+                .cloned()
+                .unwrap_or_else(|| user.to_string());
+            table.row(&[
+                name,
+                row.granted.to_string(),
+                row.queued.to_string(),
+                row.preempted.to_string(),
+                format!("{:.1}", row.device_seconds),
+                format!("{:.1}", row.energy_joules),
+                format!("{:.1}", row.max_wait_ms),
+            ]);
+        }
+        table.render()
+    }
+
+    /// JSON rows for the `usage_report` RPC.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|(user, row)| {
+                    Json::obj(vec![
+                        ("user", Json::from(user.to_string())),
+                        ("granted", Json::from(row.granted)),
+                        ("released", Json::from(row.released)),
+                        ("queued", Json::from(row.queued)),
+                        ("preempted", Json::from(row.preempted)),
+                        (
+                            "device_seconds",
+                            Json::from(row.device_seconds),
+                        ),
+                        (
+                            "energy_joules",
+                            Json::from(row.energy_joules),
+                        ),
+                        ("max_wait_ms", Json::from(row.max_wait_ms)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let mut ledger = UsageLedger::new();
+        let u = UserId(0);
+        ledger.row_mut(u).granted += 1;
+        ledger.charge_release(u, 10.0, 4.0);
+        ledger.charge_release(u, 5.0, 4.0);
+        let row = ledger.usage(u);
+        assert_eq!(row.granted, 1);
+        assert_eq!(row.released, 2);
+        assert!((row.device_seconds - 15.0).abs() < 1e-9);
+        assert!((row.energy_joules - 60.0).abs() < 1e-9);
+        assert!((ledger.device_seconds(u) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_tenant_reads_zero() {
+        let ledger = UsageLedger::new();
+        assert_eq!(ledger.usage(UserId(9)), TenantUsage::default());
+        assert_eq!(ledger.device_seconds(UserId(9)), 0.0);
+        assert!(ledger.tenants().is_empty());
+    }
+
+    #[test]
+    fn report_renders_named_rows() {
+        let mut ledger = UsageLedger::new();
+        let alice = UserId(0);
+        let ghost = UserId(7);
+        ledger.charge_release(alice, 2.0, 1.0);
+        ledger.row_mut(ghost).preempted = 3;
+        let mut names = BTreeMap::new();
+        names.insert(alice, "alice".to_string());
+        let report = ledger.report(&names);
+        assert!(report.contains("alice"), "{report}");
+        assert!(report.contains("user-7"), "{report}");
+        assert!(report.contains("tenant"), "{report}");
+    }
+
+    #[test]
+    fn json_rows_roundtrip_fields() {
+        let mut ledger = UsageLedger::new();
+        let u = UserId(1);
+        ledger.row_mut(u).queued = 4;
+        ledger.charge_release(u, 1.5, 2.0);
+        let j = ledger.to_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("user").as_str(), Some("user-1"));
+        assert_eq!(rows[0].get("queued").as_u64(), Some(4));
+        assert!(
+            (rows[0].get("energy_joules").as_f64().unwrap() - 3.0).abs()
+                < 1e-9
+        );
+    }
+}

@@ -1,0 +1,1493 @@
+//! The cluster scheduler — the single admission path for every
+//! allocation in the system.
+//!
+//! The paper's resource manager (Section IV-B) only picks a slot for
+//! a request that can be satisfied *right now*; under heavy
+//! multi-tenant traffic that collapses into immediate `NoCapacity`
+//! errors and ad-hoc retry loops. This subsystem puts a real
+//! scheduler between the service façades and the hypervisor:
+//!
+//! * [`queue`] — priority admission queue with weighted fair-share
+//!   across tenants (stride scheduling);
+//! * [`quota`] — per-tenant admission control: max concurrent
+//!   vFPGA-equivalents and lifetime device-second budgets;
+//! * [`reservation`] — time-boxed capacity reservations with
+//!   virtual-clock expiry reclamation (vFPGA capacity only;
+//!   exclusive physical leases are not reservable);
+//! * [`preempt`] — relocation of lower-class leases via
+//!   [`crate::hypervisor::migration`] so interactive requests land on
+//!   a full cluster;
+//! * [`accounting`] — per-tenant usage ledger charging device-seconds
+//!   and energy (priced from the [`crate::fpga::power`] model).
+//!
+//! Everything above the hypervisor routes through [`Scheduler`]:
+//! RSaaS/RAaaS/BAaaS façades ([`crate::service`]), VM launches
+//! ([`crate::vm`]), the batch system ([`crate::batch`]) and the
+//! middleware server's RPC surface ([`crate::middleware::server`]).
+//!
+//! Admission policy, in order:
+//! 1. quota check — budget exhaustion is terminal, a concurrency cap
+//!    queues the request until the tenant releases;
+//! 2. capacity check — free regions on devices serving the requested
+//!    model, minus capacity withheld by other tenants' active
+//!    reservations;
+//! 3. grant, or (interactive only) preempt a batch lease by
+//!    migration, or queue (blocking path) / fail fast (interactive).
+//!
+//! Classes are strict (`Interactive > Normal > Batch`); within a
+//! class tenants share capacity by quota weight. Queued requests of a
+//! tenant sitting at its quota are skipped, not head-of-line
+//! blockers, so no ready request starves.
+
+pub mod accounting;
+pub mod preempt;
+pub mod queue;
+pub mod quota;
+pub mod reservation;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::ServiceModel;
+use crate::hypervisor::{Hypervisor, HypervisorError};
+use crate::util::clock::VirtualTime;
+use crate::util::ids::{
+    AllocationId, FpgaId, NodeId, ReservationId, TicketId, UserId, VfpgaId,
+    VmId,
+};
+use crate::util::json::Json;
+
+pub use accounting::{TenantUsage, UsageLedger};
+pub use preempt::{select_victim, victim_order, VictimInfo};
+pub use queue::{AdmissionQueue, QueueEntry};
+pub use quota::{QuotaBook, QuotaDenial, TenantQuota, PHYSICAL_EQUIV_UNITS};
+pub use reservation::{Reservation, ReservationBook};
+
+/// Request priority class. Strictly ordered: interactive beats
+/// normal beats batch at every admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RequestClass {
+    /// Long-running unattended work (batch system, BAaaS backfill) —
+    /// preemptable.
+    Batch,
+    /// Default service traffic.
+    Normal,
+    /// Latency-sensitive user-facing requests; may preempt batch.
+    Interactive,
+}
+
+impl RequestClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Batch => "batch",
+            RequestClass::Normal => "normal",
+            RequestClass::Interactive => "interactive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RequestClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "batch" => Some(RequestClass::Batch),
+            "normal" => Some(RequestClass::Normal),
+            "interactive" => Some(RequestClass::Interactive),
+            _ => None,
+        }
+    }
+}
+
+/// Scheduler errors.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum SchedError {
+    #[error("no capacity for the request")]
+    NoCapacity,
+    #[error("quota: {0}")]
+    QuotaBudget(String),
+    #[error("quota: {0}")]
+    QuotaConcurrency(String),
+    #[error("hypervisor: {0}")]
+    Hypervisor(String),
+    #[error("no scheduler grant for {0}")]
+    UnknownGrant(AllocationId),
+    #[error("request was cancelled")]
+    Cancelled,
+    #[error("unknown reservation {0}")]
+    UnknownReservation(ReservationId),
+}
+
+impl From<HypervisorError> for SchedError {
+    fn from(e: HypervisorError) -> SchedError {
+        match e {
+            HypervisorError::NoCapacity => SchedError::NoCapacity,
+            other => SchedError::Hypervisor(other.to_string()),
+        }
+    }
+}
+
+impl From<SchedError> for HypervisorError {
+    fn from(e: SchedError) -> HypervisorError {
+        match e {
+            SchedError::NoCapacity => HypervisorError::NoCapacity,
+            other => HypervisorError::Sched(other.to_string()),
+        }
+    }
+}
+
+/// What a grant leases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GrantTarget {
+    Vfpga(VfpgaId, FpgaId, NodeId),
+    Physical(FpgaId, NodeId),
+}
+
+/// An admitted allocation, as the scheduler tracks it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedGrant {
+    pub alloc: AllocationId,
+    pub user: UserId,
+    pub model: ServiceModel,
+    pub class: RequestClass,
+    pub target: GrantTarget,
+    /// vFPGA-equivalents charged against quota and accounting.
+    pub units: u64,
+    /// Virtual timestamp of the grant.
+    pub started_ns: u64,
+    /// Virtual time spent in the admission queue (zero on fast path).
+    pub wait: VirtualTime,
+    /// Per-unit active power (W) for energy accounting.
+    pub charge_w: f64,
+    /// Reservation this admission drew a claim from, if any — the
+    /// claim is credited back when the lease is released.
+    pub from_reservation: Option<ReservationId>,
+}
+
+impl SchedGrant {
+    pub fn vfpga(&self) -> Option<VfpgaId> {
+        match self.target {
+            GrantTarget::Vfpga(v, _, _) => Some(v),
+            GrantTarget::Physical(_, _) => None,
+        }
+    }
+
+    pub fn fpga(&self) -> FpgaId {
+        match self.target {
+            GrantTarget::Vfpga(_, f, _) | GrantTarget::Physical(f, _) => f,
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        match self.target {
+            GrantTarget::Vfpga(_, _, n) | GrantTarget::Physical(_, n) => n,
+        }
+    }
+}
+
+struct SchedState {
+    queue: AdmissionQueue,
+    quotas: QuotaBook,
+    reservations: ReservationBook,
+    ledger: UsageLedger,
+    /// Live grants by allocation id (release + victim lookup).
+    grants: BTreeMap<AllocationId, SchedGrant>,
+    /// Finished queue tickets awaiting collection by their waiter.
+    ready: BTreeMap<TicketId, Result<SchedGrant, SchedError>>,
+}
+
+/// The cluster scheduler.
+///
+/// One instance should front each hypervisor: the convenience
+/// constructors (`RaaasService::new`, `BatchSystem::new`, …) each
+/// build a private scheduler, which is fine in isolation, but when
+/// several façades share one hypervisor they should share one
+/// scheduler (`with_scheduler`) so quotas, fair-share and the
+/// admission queue see all traffic. Blocking admissions still make
+/// progress across independent instances (the wait loop re-pumps on
+/// a wall-clock tick), but quotas and fairness are per-instance.
+pub struct Scheduler {
+    hv: Arc<Hypervisor>,
+    /// Static device topology (fpga id → served models), cached at
+    /// construction — devices never change after boot.
+    devices: Vec<(FpgaId, Vec<ServiceModel>)>,
+    /// Total vFPGA regions across the cluster (reservation clamp).
+    total_regions: u64,
+    state: Mutex<SchedState>,
+    granted: Condvar,
+}
+
+/// Physically free regions on devices serving `model`, ignoring
+/// reservations.
+fn raw_free_units(
+    hv: &Hypervisor,
+    devices: &[(FpgaId, Vec<ServiceModel>)],
+    model: ServiceModel,
+) -> u64 {
+    let db = hv.db.lock().unwrap();
+    devices
+        .iter()
+        .filter(|(_, models)| models.contains(&model))
+        .map(|(f, _)| db.free_regions(*f).len() as u64)
+        .sum()
+}
+
+/// Device-seconds `user` has consumed so far: the released total in
+/// the ledger plus the accrued time of every live grant — so budgets
+/// bound consumption while leases are still held, not just after the
+/// first release.
+fn used_device_seconds(
+    ledger: &UsageLedger,
+    grants: &BTreeMap<AllocationId, SchedGrant>,
+    user: UserId,
+    now_ns: u64,
+) -> f64 {
+    let live: f64 = grants
+        .values()
+        .filter(|g| g.user == user)
+        .map(|g| {
+            VirtualTime(now_ns.saturating_sub(g.started_ns)).as_secs_f64()
+                * g.units as f64
+        })
+        .sum();
+    ledger.device_seconds(user) + live
+}
+
+/// Free vFPGA capacity usable by `user` for `model`: free regions on
+/// devices serving the model, minus capacity withheld by *other*
+/// tenants' active reservations.
+fn free_units(
+    hv: &Hypervisor,
+    devices: &[(FpgaId, Vec<ServiceModel>)],
+    reservations: &ReservationBook,
+    user: UserId,
+    model: ServiceModel,
+    now_ns: u64,
+) -> u64 {
+    raw_free_units(hv, devices, model)
+        .saturating_sub(reservations.withheld_from(user, now_ns))
+}
+
+impl Scheduler {
+    pub fn new(hv: Arc<Hypervisor>) -> Arc<Scheduler> {
+        let devices: Vec<(FpgaId, Vec<ServiceModel>)> = hv
+            .device_ids()
+            .into_iter()
+            .map(|id| {
+                let models = hv
+                    .device(id)
+                    .map(|d| d.models.clone())
+                    .unwrap_or_default();
+                (id, models)
+            })
+            .collect();
+        let total_regions = {
+            let db = hv.db.lock().unwrap();
+            db.devices
+                .values()
+                .map(|d| d.regions.len() as u64)
+                .sum()
+        };
+        Arc::new(Scheduler {
+            hv,
+            devices,
+            total_regions,
+            state: Mutex::new(SchedState {
+                queue: AdmissionQueue::new(),
+                quotas: QuotaBook::new(),
+                reservations: ReservationBook::new(),
+                ledger: UsageLedger::new(),
+                grants: BTreeMap::new(),
+                ready: BTreeMap::new(),
+            }),
+            granted: Condvar::new(),
+        })
+    }
+
+    pub fn hv(&self) -> &Arc<Hypervisor> {
+        &self.hv
+    }
+
+    // ------------------------------------------------------- quotas
+
+    pub fn set_quota(&self, user: UserId, quota: TenantQuota) {
+        self.update_quota(user, |q| *q = quota);
+    }
+
+    /// Atomic read-modify-write of a tenant's quota under the state
+    /// lock (concurrent partial updates cannot lose fields). Returns
+    /// the resulting quota. A raised cap can unblock queued requests,
+    /// so the queue is pumped before returning.
+    pub fn update_quota(
+        &self,
+        user: UserId,
+        f: impl FnOnce(&mut TenantQuota),
+    ) -> TenantQuota {
+        let mut st = self.state.lock().unwrap();
+        let mut quota = st.quotas.quota(user);
+        f(&mut quota);
+        st.quotas.set(user, quota);
+        self.pump_locked(&mut st);
+        self.granted.notify_all();
+        quota
+    }
+
+    pub fn quota(&self, user: UserId) -> TenantQuota {
+        self.state.lock().unwrap().quotas.quota(user)
+    }
+
+    /// vFPGA-equivalents the tenant currently holds via this
+    /// scheduler.
+    pub fn in_use(&self, user: UserId) -> u64 {
+        self.state.lock().unwrap().quotas.in_use(user)
+    }
+
+    pub fn usage(&self, user: UserId) -> TenantUsage {
+        self.state.lock().unwrap().ledger.usage(user)
+    }
+
+    // ------------------------------------------------- reservations
+
+    /// Reserve `regions` vFPGAs for `user` over a virtual-time
+    /// window. Expired windows are reclaimed lazily on admission.
+    /// `regions` is clamped so the total booked over any overlapping
+    /// window never exceeds the cluster's vFPGA capacity — a pile of
+    /// reservations cannot overbook and wedge all admissions (an
+    /// over-ask may thus yield a smaller, even zero-region,
+    /// reservation; duration is operator-policed — the RPC surface
+    /// has no authentication layer to gate it on).
+    pub fn reserve(
+        &self,
+        user: UserId,
+        regions: u64,
+        start: VirtualTime,
+        duration: VirtualTime,
+    ) -> ReservationId {
+        let mut st = self.state.lock().unwrap();
+        self.reap_locked(&mut st);
+        let already = st
+            .reservations
+            .reserved_overlapping(start.0, (start + duration).0);
+        let regions =
+            regions.min(self.total_regions.saturating_sub(already));
+        st.reservations.reserve(user, regions, start, duration)
+    }
+
+    pub fn cancel_reservation(
+        &self,
+        id: ReservationId,
+    ) -> Result<(), SchedError> {
+        let mut st = self.state.lock().unwrap();
+        if !st.reservations.cancel(id) {
+            return Err(SchedError::UnknownReservation(id));
+        }
+        // Freed capacity may admit queued work.
+        self.pump_locked(&mut st);
+        self.granted.notify_all();
+        Ok(())
+    }
+
+    // --------------------------------------------------- admissions
+
+    /// Non-blocking admission — the interactive fast path. Fails with
+    /// [`SchedError::NoCapacity`] rather than queueing; interactive
+    /// requests may preempt a batch lease by migration first.
+    pub fn acquire_vfpga(
+        &self,
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+    ) -> Result<SchedGrant, SchedError> {
+        let mut st = self.state.lock().unwrap();
+        self.reap_locked(&mut st);
+        // Capacity reclaimed since the last pump (reservation expiry,
+        // out-of-band release) belongs to queued strictly-higher-class
+        // requests before this caller's immediate attempt — classes
+        // are strict at every admission decision.
+        if st.queue.has_class_above(class) {
+            self.pump_locked(&mut st);
+        }
+        let result = self.try_admit_locked(
+            &mut st,
+            user,
+            model,
+            class,
+            class == RequestClass::Interactive,
+        );
+        // Reservation expiry (or a preemption) may have freed
+        // capacity queued work can use — pump before returning.
+        self.pump_locked(&mut st);
+        self.granted.notify_all();
+        result
+    }
+
+    /// Blocking admission: take the fast path when nothing of equal
+    /// or higher class is queued, otherwise join the queue and wait
+    /// for the fair-share pump.
+    pub fn acquire_vfpga_blocking(
+        &self,
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+    ) -> Result<SchedGrant, SchedError> {
+        let ticket = {
+            let mut st = self.state.lock().unwrap();
+            self.reap_locked(&mut st);
+            if !st.queue.has_class_at_or_above(class) {
+                match self.try_admit_locked(
+                    &mut st,
+                    user,
+                    model,
+                    class,
+                    class == RequestClass::Interactive,
+                ) {
+                    Ok(grant) => return Ok(grant),
+                    Err(SchedError::NoCapacity)
+                    | Err(SchedError::QuotaConcurrency(_)) => {}
+                    Err(e) => return Err(e),
+                }
+            }
+            self.enqueue_locked(&mut st, user, model, class)
+        };
+        self.wait(ticket)
+    }
+
+    /// Enqueue without waiting; pair with [`Scheduler::wait`] or
+    /// [`Scheduler::try_claim`].
+    pub fn submit(
+        &self,
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+    ) -> TicketId {
+        let mut st = self.state.lock().unwrap();
+        self.reap_locked(&mut st);
+        self.enqueue_locked(&mut st, user, model, class)
+    }
+
+    fn enqueue_locked(
+        &self,
+        st: &mut SchedState,
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+    ) -> TicketId {
+        let now_ns = self.hv.clock.now().0;
+        let ticket = st.queue.push(user, model, class, now_ns);
+        // A model no device serves can never be admitted — fail the
+        // ticket terminally instead of queueing it forever.
+        if !self
+            .devices
+            .iter()
+            .any(|(_, models)| models.contains(&model))
+        {
+            st.queue.remove(ticket);
+            st.ready.insert(
+                ticket,
+                Err(SchedError::Hypervisor(format!(
+                    "no device serves model '{}'",
+                    model.name()
+                ))),
+            );
+            self.granted.notify_all();
+            return ticket;
+        }
+        st.ledger.row_mut(user).queued += 1;
+        self.hv.metrics.counter("sched.enqueued").inc();
+        // Capacity may already be free (e.g. first submission).
+        self.pump_locked(st);
+        self.granted.notify_all();
+        ticket
+    }
+
+    /// Block until the ticket resolves.
+    ///
+    /// Wakes on this scheduler's own pump; in-instance progress never
+    /// waits on the tick. A half-second fallback tick additionally
+    /// re-pumps so capacity freed *outside* this scheduler instance
+    /// (a direct `Hypervisor::release`, or a sibling scheduler over
+    /// the same hypervisor) is still picked up instead of blocking
+    /// forever.
+    pub fn wait(&self, ticket: TicketId) -> Result<SchedGrant, SchedError> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(result) = st.ready.remove(&ticket) {
+                return result;
+            }
+            let (guard, timeout) = self
+                .granted
+                .wait_timeout(st, std::time::Duration::from_millis(500))
+                .unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                self.pump_locked(&mut st);
+                // The pump may have resolved *other* waiters' tickets.
+                self.granted.notify_all();
+            }
+        }
+    }
+
+    /// Non-blocking poll of a submitted ticket.
+    pub fn try_claim(
+        &self,
+        ticket: TicketId,
+    ) -> Option<Result<SchedGrant, SchedError>> {
+        self.state.lock().unwrap().ready.remove(&ticket)
+    }
+
+    /// Cancel a still-queued ticket. Returns false when the ticket
+    /// already left the queue (granted, failed, or never existed) —
+    /// the caller must then collect it via `wait`/`try_claim`.
+    pub fn cancel(&self, ticket: TicketId) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.queue.remove(ticket).is_some() {
+            st.ready.insert(ticket, Err(SchedError::Cancelled));
+            self.update_gauges_locked(&st);
+            self.granted.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Exclusive physical-device admission (RSaaS / VM passthrough).
+    /// Never queues; counts [`PHYSICAL_EQUIV_UNITS`] against the
+    /// concurrency quota. Physical capacity is not *reservable*, but
+    /// taking a whole device removes its regions from the vFPGA pool,
+    /// so admission is denied when that would leave other tenants'
+    /// active reservations uncoverable.
+    pub fn acquire_physical(
+        &self,
+        user: UserId,
+        vm: Option<VmId>,
+        class: RequestClass,
+    ) -> Result<SchedGrant, SchedError> {
+        let mut st = self.state.lock().unwrap();
+        self.reap_locked(&mut st);
+        // As in acquire_vfpga: queued higher-class requests get first
+        // claim on capacity reclaimed since the last pump.
+        if st.queue.has_class_above(class) {
+            self.pump_locked(&mut st);
+        }
+        let used_s = used_device_seconds(
+            &st.ledger,
+            &st.grants,
+            user,
+            self.hv.clock.now().0,
+        );
+        if let Err(d) =
+            st.quotas.admissible(user, PHYSICAL_EQUIV_UNITS, used_s)
+        {
+            return Err(self.deny(d));
+        }
+        // An exclusive lease removes a whole device's regions from
+        // the vFPGA pool; keep enough free regions to cover other
+        // tenants' active reservations (conservatively assuming the
+        // largest possible device).
+        let withheld = st
+            .reservations
+            .withheld_from(user, self.hv.clock.now().0);
+        if withheld > 0 {
+            let total_free: u64 = {
+                let db = self.hv.db.lock().unwrap();
+                self.devices
+                    .iter()
+                    .map(|(f, _)| db.free_regions(*f).len() as u64)
+                    .sum()
+            };
+            if total_free.saturating_sub(crate::paper::MAX_VFPGAS as u64)
+                < withheld
+            {
+                return Err(SchedError::NoCapacity);
+            }
+        }
+        let (alloc, fpga, node) = self
+            .hv
+            .alloc_physical(user, vm)
+            .map_err(SchedError::from)?;
+        // charge_w is *per unit*; spread the whole-board static draw
+        // over the device's vFPGA-equivalents so release() bills
+        // units x charge_w = one board's worth.
+        let charge_w = self
+            .hv
+            .device(fpga)
+            .map(|d| d.fpga.lock().unwrap().board.static_power_w)
+            .unwrap_or(0.0)
+            / PHYSICAL_EQUIV_UNITS as f64;
+        let grant = SchedGrant {
+            alloc,
+            user,
+            model: ServiceModel::RSaaS,
+            class,
+            target: GrantTarget::Physical(fpga, node),
+            units: PHYSICAL_EQUIV_UNITS,
+            started_ns: self.hv.clock.now().0,
+            wait: VirtualTime::ZERO,
+            charge_w,
+            from_reservation: None,
+        };
+        self.finish_grant_locked(&mut st, grant.clone());
+        self.pump_locked(&mut st);
+        self.granted.notify_all();
+        Ok(grant)
+    }
+
+    /// Release a scheduler-tracked allocation: returns the lease to
+    /// the hypervisor, charges the usage ledger, credits the quota
+    /// and pumps the admission queue.
+    pub fn release(&self, alloc: AllocationId) -> Result<(), SchedError> {
+        // Everything happens under the state lock (the scheduler's
+        // lock order is always state → hypervisor, same as the pump
+        // and preemption paths), so no concurrent acquire can observe
+        // the freed region with the quota still charged or vice
+        // versa.
+        let mut st = self.state.lock().unwrap();
+        let grant = st
+            .grants
+            .remove(&alloc)
+            .ok_or(SchedError::UnknownGrant(alloc))?;
+        // Hypervisor::release removes the DB allocation before its
+        // fallible device cleanup, so after an error the lease is
+        // gone either way (removed now, or it never existed).
+        // Bookkeeping must still run — restoring the grant would
+        // leak the tenant's quota units forever — and the device
+        // error is reported after the credit.
+        let release_result = self.hv.release(alloc);
+        let now = self.hv.clock.now();
+        let held =
+            VirtualTime(now.0.saturating_sub(grant.started_ns)).as_secs_f64();
+        st.ledger.charge_release(
+            grant.user,
+            held * grant.units as f64,
+            grant.charge_w,
+        );
+        st.quotas.credit(grant.user, grant.units);
+        if let Some(reservation) = grant.from_reservation {
+            // The reservation guarantees concurrent regions — return
+            // the claim now that the lease is gone (no-op if the
+            // window already expired).
+            st.reservations.release_claim(reservation);
+        }
+        self.hv.metrics.counter("sched.released").inc();
+        self.pump_locked(&mut st);
+        drop(st);
+        self.granted.notify_all();
+        release_result.map_err(|e| SchedError::Hypervisor(e.to_string()))
+    }
+
+    /// Record an out-of-band migration (e.g. the middleware `migrate`
+    /// RPC calling the hypervisor directly) so the tracked grant's
+    /// target stays accurate for victim selection and status.
+    pub fn note_migration(&self, alloc: AllocationId, to: VfpgaId) {
+        let mut st = self.state.lock().unwrap();
+        self.rebind_grant_locked(&mut st, alloc, to);
+    }
+
+    /// Point a tracked grant at the region its lease now occupies.
+    fn rebind_grant_locked(
+        &self,
+        st: &mut SchedState,
+        alloc: AllocationId,
+        to: VfpgaId,
+    ) {
+        let new_home = {
+            let db = self.hv.db.lock().unwrap();
+            db.device_of_vfpga(to).map(|d| (d.id, d.node))
+        };
+        if let Some((fpga, node)) = new_home {
+            if let Some(grant) = st.grants.get_mut(&alloc) {
+                grant.target = GrantTarget::Vfpga(to, fpga, node);
+            }
+        }
+    }
+
+    /// Live grants (status surface + tests).
+    pub fn active_grants(&self) -> Vec<SchedGrant> {
+        self.state.lock().unwrap().grants.values().cloned().collect()
+    }
+
+    // ----------------------------------------------- internal logic
+
+    /// Map a quota denial to its error, bumping the denial counter.
+    fn deny(&self, d: QuotaDenial) -> SchedError {
+        self.hv.metrics.counter("sched.quota.denied").inc();
+        match d {
+            QuotaDenial::Budget { .. } => {
+                SchedError::QuotaBudget(d.to_string())
+            }
+            QuotaDenial::Concurrency { .. } => {
+                SchedError::QuotaConcurrency(d.to_string())
+            }
+        }
+    }
+
+    fn reap_locked(&self, st: &mut SchedState) {
+        let expired = st.reservations.reap(self.hv.clock.now().0);
+        if expired > 0 {
+            self.hv
+                .metrics
+                .counter("sched.reservations.expired")
+                .add(expired as u64);
+        }
+    }
+
+    /// One immediate admission attempt under the state lock.
+    fn try_admit_locked(
+        &self,
+        st: &mut SchedState,
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+        allow_preempt: bool,
+    ) -> Result<SchedGrant, SchedError> {
+        let now_ns = self.hv.clock.now().0;
+        let used_s = used_device_seconds(&st.ledger, &st.grants, user, now_ns);
+        if let Err(d) = st.quotas.admissible(user, 1, used_s) {
+            return Err(self.deny(d));
+        }
+        if free_units(&self.hv, &self.devices, &st.reservations, user, model, now_ns)
+            == 0
+        {
+            // Preemption only helps when the model's devices are
+            // *physically* full AND no active reservation would
+            // swallow the vacated region. Otherwise migrating a
+            // victim is futile downtime: either free-but-reserved
+            // regions already exist, or the one region a preemption
+            // frees is owed to a reservation holder.
+            if raw_free_units(&self.hv, &self.devices, model) > 0
+                || st.reservations.withheld_from(user, now_ns) > 0
+            {
+                return Err(SchedError::NoCapacity);
+            }
+            if !(allow_preempt && self.try_preempt_locked(st, model, class)) {
+                return Err(SchedError::NoCapacity);
+            }
+            // A migration relocates a victim but cannot conjure
+            // capacity out of another tenant's reserved headroom: the
+            // vacated region only counts if the post-preemption free
+            // total still covers every active reservation.
+            if free_units(
+                &self.hv,
+                &self.devices,
+                &st.reservations,
+                user,
+                model,
+                now_ns,
+            ) == 0
+            {
+                return Err(SchedError::NoCapacity);
+            }
+        }
+        match self.hv.alloc_vfpga(user, model) {
+            Ok((alloc, vfpga, fpga, node)) => Ok(self.grant_vfpga_locked(
+                st, user, model, class, alloc, vfpga, fpga, node, None,
+            )),
+            Err(HypervisorError::NoCapacity) => Err(SchedError::NoCapacity),
+            Err(e) => Err(SchedError::Hypervisor(e.to_string())),
+        }
+    }
+
+    /// Record a fresh vFPGA grant. `enqueued_ns` is set for requests
+    /// that came through the queue (wait-time accounting).
+    #[allow(clippy::too_many_arguments)]
+    fn grant_vfpga_locked(
+        &self,
+        st: &mut SchedState,
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+        alloc: AllocationId,
+        vfpga: VfpgaId,
+        fpga: FpgaId,
+        node: NodeId,
+        enqueued_ns: Option<u64>,
+    ) -> SchedGrant {
+        let now_ns = self.hv.clock.now().0;
+        let wait = VirtualTime(
+            now_ns.saturating_sub(enqueued_ns.unwrap_or(now_ns)),
+        );
+        let charge_w = self
+            .hv
+            .device(fpga)
+            .map(|d| d.fpga.lock().unwrap().board.active_region_power_w)
+            .unwrap_or(0.0);
+        // Draw on the tenant's reservation only when this admission
+        // actually needed reserved headroom: with enough unreserved
+        // free capacity left (pre-alloc free = post-alloc + 1), the
+        // grant came out of the general pool and the guarantee stays
+        // intact for the real burst.
+        let raw_free_after = raw_free_units(&self.hv, &self.devices, model);
+        let from_reservation =
+            if raw_free_after + 1 <= st.reservations.withheld_total(now_ns) {
+                st.reservations.consume(user, now_ns)
+            } else {
+                None
+            };
+        let grant = SchedGrant {
+            alloc,
+            user,
+            model,
+            class,
+            target: GrantTarget::Vfpga(vfpga, fpga, node),
+            units: 1,
+            started_ns: now_ns,
+            wait,
+            charge_w,
+            from_reservation,
+        };
+        // Histogram stats render in microseconds; keep the name
+        // unit-free so `rc3e stats` reads correctly.
+        self.hv
+            .metrics
+            .histogram("sched.wait")
+            .record_us((wait.as_millis_f64() * 1e3) as u64);
+        let row = st.ledger.row_mut(user);
+        row.max_wait_ms = row.max_wait_ms.max(wait.as_millis_f64());
+        self.finish_grant_locked(st, grant.clone());
+        grant
+    }
+
+    fn finish_grant_locked(&self, st: &mut SchedState, grant: SchedGrant) {
+        st.quotas.charge(grant.user, grant.units);
+        st.ledger.row_mut(grant.user).granted += 1;
+        st.grants.insert(grant.alloc, grant);
+        self.hv.metrics.counter("sched.granted").inc();
+        self.update_gauges_locked(st);
+    }
+
+    /// Relocate the best lower-class victim via migration so a region
+    /// on a device serving `model` frees up. Returns true on success.
+    fn try_preempt_locked(
+        &self,
+        st: &mut SchedState,
+        model: ServiceModel,
+        class: RequestClass,
+    ) -> bool {
+        let candidates: Vec<VictimInfo> = st
+            .grants
+            .values()
+            .filter(|g| g.class < class)
+            .filter_map(|g| match g.target {
+                GrantTarget::Vfpga(v, f, _) => {
+                    let serves = self
+                        .devices
+                        .iter()
+                        .any(|(id, models)| *id == f && models.contains(&model));
+                    if serves {
+                        Some(VictimInfo {
+                            alloc: g.alloc,
+                            user: g.user,
+                            class: g.class,
+                            model: g.model,
+                            vfpga: v,
+                            fpga: f,
+                            started_ns: g.started_ns,
+                        })
+                    } else {
+                        None
+                    }
+                }
+                GrantTarget::Physical(_, _) => None,
+            })
+            .collect();
+        for victim in victim_order(&candidates) {
+            // Pick the migration target ourselves: a free region on a
+            // *different* device that serves the victim's own model.
+            // The hypervisor's default selection is model-aware but
+            // falls back to a same-device move, which frees nothing
+            // net — useless for preemption.
+            let target = {
+                let db = self.hv.db.lock().unwrap();
+                self.devices
+                    .iter()
+                    .filter(|(f, models)| {
+                        *f != victim.fpga && models.contains(&victim.model)
+                    })
+                    .find_map(|(f, _)| db.free_regions(*f).first().copied())
+            };
+            let Some(target) = target else { continue };
+            match self
+                .hv
+                .migrate_vfpga(victim.alloc, victim.user, Some(target))
+            {
+                Ok(report) => {
+                    self.rebind_grant_locked(st, victim.alloc, report.to);
+                    st.ledger.row_mut(victim.user).preempted += 1;
+                    self.hv.metrics.counter("sched.preemptions").inc();
+                    log::info!(
+                        "preempted {} ({} -> {}) for an incoming {} request",
+                        victim.alloc,
+                        report.from,
+                        report.to,
+                        class.name()
+                    );
+                    return true;
+                }
+                Err(e) => {
+                    log::debug!(
+                        "preemption candidate {} not movable: {e}",
+                        victim.alloc
+                    );
+                }
+            }
+        }
+        false
+    }
+
+    /// Grant queued requests while capacity and quotas allow,
+    /// fair-share order. Tenants at quota are skipped; budget-
+    /// exhausted requests fail terminally.
+    fn pump_locked(&self, st: &mut SchedState) {
+        self.reap_locked(st);
+        // Budget exhaustion never recovers: fail those tickets now.
+        // (Skipped entirely while no tenant has a budget configured —
+        // the common case.)
+        if st.quotas.has_budgets() {
+            let scan_now_ns = self.hv.clock.now().0;
+            let terminal: Vec<(TicketId, QuotaDenial)> = st
+                .queue
+                .snapshot()
+                .into_iter()
+                .filter_map(|e| {
+                    match st.quotas.admissible(
+                        e.user,
+                        1,
+                        used_device_seconds(
+                            &st.ledger,
+                            &st.grants,
+                            e.user,
+                            scan_now_ns,
+                        ),
+                    ) {
+                        Err(d @ QuotaDenial::Budget { .. }) => {
+                            Some((e.ticket, d))
+                        }
+                        _ => None,
+                    }
+                })
+                .collect();
+            for (ticket, denial) in terminal {
+                st.queue.remove(ticket);
+                st.ready.insert(ticket, Err(self.deny(denial)));
+            }
+        }
+        loop {
+            let now_ns = self.hv.clock.now().0;
+            // Snapshot physical free counts once per iteration (they
+            // only change when a grant lands) so the pop predicate
+            // does not lock the device DB per queued entry.
+            let free_by_device: Vec<u64> = {
+                let db = self.hv.db.lock().unwrap();
+                self.devices
+                    .iter()
+                    .map(|(f, _)| db.free_regions(*f).len() as u64)
+                    .collect()
+            };
+            let popped = {
+                let SchedState {
+                    queue,
+                    quotas,
+                    reservations,
+                    ledger,
+                    grants,
+                    ..
+                } = st;
+                let quotas_ro: &QuotaBook = quotas;
+                let reservations_ro: &ReservationBook = reservations;
+                let ledger_ro: &UsageLedger = ledger;
+                let grants_ro: &BTreeMap<AllocationId, SchedGrant> = grants;
+                let devices = &self.devices;
+                let free_for = |user: UserId, model: ServiceModel| -> u64 {
+                    let mut free = 0u64;
+                    for (i, (_, models)) in devices.iter().enumerate() {
+                        if models.contains(&model) {
+                            free += free_by_device[i];
+                        }
+                    }
+                    free.saturating_sub(
+                        reservations_ro.withheld_from(user, now_ns),
+                    )
+                };
+                queue.pop_best(
+                    |u| quotas_ro.weight(u),
+                    |e| {
+                        quotas_ro
+                            .admissible(
+                                e.user,
+                                1,
+                                used_device_seconds(
+                                    ledger_ro, grants_ro, e.user, now_ns,
+                                ),
+                            )
+                            .is_ok()
+                            && free_for(e.user, e.model) > 0
+                    },
+                )
+            };
+            let Some(entry) = popped else {
+                // Nothing admits into free capacity — but a queued
+                // interactive request may still land by preempting a
+                // batch lease, exactly like the fast path does.
+                if self.pump_preempt_locked(st) {
+                    continue;
+                }
+                break;
+            };
+            match self.hv.alloc_vfpga(entry.user, entry.model) {
+                Ok((alloc, vfpga, fpga, node)) => {
+                    let grant = self.grant_vfpga_locked(
+                        st,
+                        entry.user,
+                        entry.model,
+                        entry.class,
+                        alloc,
+                        vfpga,
+                        fpga,
+                        node,
+                        Some(entry.enqueued_ns),
+                    );
+                    st.ready.insert(entry.ticket, Ok(grant));
+                }
+                Err(HypervisorError::NoCapacity) => {
+                    // Raced with an out-of-band allocation: put the
+                    // entry back unchanged (refunding the fair-share
+                    // pass charge pop_best took) and stop pumping.
+                    let weight = st.quotas.weight(entry.user);
+                    st.queue.refund(entry.user, weight);
+                    st.queue.requeue(entry);
+                    break;
+                }
+                Err(e) => {
+                    // Terminal failure: refund the fair-share charge
+                    // (the tenant received nothing) and fail the
+                    // ticket.
+                    let weight = st.quotas.weight(entry.user);
+                    st.queue.refund(entry.user, weight);
+                    st.ready.insert(
+                        entry.ticket,
+                        Err(SchedError::Hypervisor(e.to_string())),
+                    );
+                }
+            }
+        }
+        self.update_gauges_locked(st);
+    }
+
+    /// Preempt on behalf of the first queued interactive request
+    /// whose tenant quota admits and whose model's devices are
+    /// physically full. Returns true when a victim was relocated (the
+    /// pump loop then re-runs and the interactive entry wins the pop
+    /// by class).
+    fn pump_preempt_locked(&self, st: &mut SchedState) -> bool {
+        let now_ns = self.hv.clock.now().0;
+        let mut candidates: Vec<QueueEntry> = st
+            .queue
+            .snapshot()
+            .into_iter()
+            .filter(|e| e.class == RequestClass::Interactive)
+            .filter(|e| {
+                st.quotas
+                    .admissible(
+                        e.user,
+                        1,
+                        used_device_seconds(
+                            &st.ledger,
+                            &st.grants,
+                            e.user,
+                            now_ns,
+                        ),
+                    )
+                    .is_ok()
+            })
+            .collect();
+        candidates.sort_by_key(|e| e.seq);
+        for entry in candidates {
+            if raw_free_units(&self.hv, &self.devices, entry.model) > 0
+                || st.reservations.withheld_from(entry.user, now_ns) > 0
+            {
+                // Capacity exists but is reservation-withheld, or the
+                // vacated region would be owed to a reservation
+                // holder; migrating a victim cannot help this entry
+                // (see try_admit_locked) — but a later queued
+                // interactive entry for another model still might.
+                continue;
+            }
+            if self.try_preempt_locked(st, entry.model, entry.class) {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn update_gauges_locked(&self, st: &SchedState) {
+        self.hv
+            .metrics
+            .gauge("sched.queue.depth")
+            .set(st.queue.len() as i64);
+        self.hv
+            .metrics
+            .gauge("sched.active_grants")
+            .set(st.grants.len() as i64);
+    }
+
+    // ------------------------------------------------------- status
+
+    /// Queue/quota/reservation snapshot for the `sched_status` RPC.
+    pub fn status_json(&self) -> Json {
+        let now_ns = self.hv.clock.now().0;
+        let st = self.state.lock().unwrap();
+        let entries = st.queue.snapshot();
+        let per_class = |c: RequestClass| {
+            entries.iter().filter(|e| e.class == c).count()
+        };
+        let mut tenants: BTreeMap<UserId, u64> = BTreeMap::new();
+        for e in &entries {
+            *tenants.entry(e.user).or_insert(0) += 1;
+        }
+        Json::obj(vec![
+            ("queue_depth", Json::from(entries.len())),
+            (
+                "queued_interactive",
+                Json::from(per_class(RequestClass::Interactive)),
+            ),
+            (
+                "queued_normal",
+                Json::from(per_class(RequestClass::Normal)),
+            ),
+            ("queued_batch", Json::from(per_class(RequestClass::Batch))),
+            ("active_grants", Json::from(st.grants.len())),
+            (
+                "queued_by_tenant",
+                Json::Obj(
+                    tenants
+                        .iter()
+                        .map(|(u, n)| (u.to_string(), Json::from(*n)))
+                        .collect(),
+                ),
+            ),
+            (
+                "reservations",
+                Json::Arr(
+                    st.reservations
+                        .snapshot(now_ns)
+                        .into_iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::from(r.id.to_string())),
+                                ("user", Json::from(r.user.to_string())),
+                                ("regions", Json::from(r.regions)),
+                                ("claimed", Json::from(r.claimed)),
+                                (
+                                    "start_s",
+                                    Json::from(
+                                        VirtualTime(r.start_ns)
+                                            .as_secs_f64(),
+                                    ),
+                                ),
+                                (
+                                    "end_s",
+                                    Json::from(
+                                        VirtualTime(r.end_ns).as_secs_f64(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Operator usage table (CLI `rc3e usage`).
+    pub fn usage_report(&self) -> String {
+        let names: BTreeMap<UserId, String> = {
+            let db = self.hv.db.lock().unwrap();
+            db.users
+                .iter()
+                .map(|(id, name)| (*id, name.clone()))
+                .collect()
+        };
+        self.state.lock().unwrap().ledger.report(&names)
+    }
+
+    /// Usage rows for the `usage_report` RPC.
+    pub fn usage_json(&self) -> Json {
+        self.state.lock().unwrap().ledger.to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::hypervisor::PlacementPolicy;
+    use crate::util::clock::VirtualClock;
+
+    fn sched() -> Arc<Scheduler> {
+        let hv = Arc::new(
+            Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+        );
+        Scheduler::new(hv)
+    }
+
+    fn sched_on(config: &ClusterConfig) -> Arc<Scheduler> {
+        let hv = Arc::new(
+            Hypervisor::boot(
+                config,
+                VirtualClock::new(),
+                PlacementPolicy::ConsolidateFirst,
+            )
+            .unwrap(),
+        );
+        Scheduler::new(hv)
+    }
+
+    #[test]
+    fn acquire_and_release_roundtrip() {
+        let s = sched();
+        let user = s.hv().add_user("alice");
+        let g = s
+            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Interactive)
+            .unwrap();
+        assert_eq!(s.in_use(user), 1);
+        assert!(g.vfpga().is_some());
+        s.release(g.alloc).unwrap();
+        assert_eq!(s.in_use(user), 0);
+        assert_eq!(s.usage(user).released, 1);
+        assert!(s.usage(user).device_seconds >= 0.0);
+        // Releasing twice is an UnknownGrant error.
+        assert!(matches!(
+            s.release(g.alloc),
+            Err(SchedError::UnknownGrant(_))
+        ));
+    }
+
+    #[test]
+    fn concurrency_quota_blocks_fast_path() {
+        let s = sched();
+        let user = s.hv().add_user("bounded");
+        s.set_quota(
+            user,
+            TenantQuota {
+                max_concurrent: 2,
+                ..TenantQuota::default()
+            },
+        );
+        let g0 = s
+            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+            .unwrap();
+        let _g1 = s
+            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+            .unwrap();
+        assert!(matches!(
+            s.acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal),
+            Err(SchedError::QuotaConcurrency(_))
+        ));
+        s.release(g0.alloc).unwrap();
+        assert!(s
+            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+            .is_ok());
+    }
+
+    #[test]
+    fn budget_quota_is_terminal() {
+        let s = sched();
+        let user = s.hv().add_user("broke");
+        s.set_quota(
+            user,
+            TenantQuota {
+                device_seconds_budget: Some(10.0),
+                ..TenantQuota::default()
+            },
+        );
+        let g = s
+            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+            .unwrap();
+        // Hold the lease for 60 virtual seconds — way over budget.
+        s.hv().clock.advance(VirtualTime::from_secs_f64(60.0));
+        s.release(g.alloc).unwrap();
+        assert!(s.usage(user).device_seconds > 10.0);
+        assert!(matches!(
+            s.acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal),
+            Err(SchedError::QuotaBudget(_))
+        ));
+    }
+
+    #[test]
+    fn queue_grants_on_release_in_fair_order() {
+        let s = sched();
+        let users: Vec<UserId> =
+            (0..4).map(|i| s.hv().add_user(&format!("u{i}"))).collect();
+        // Fill all 16 regions with user 0.
+        let mut held = Vec::new();
+        for _ in 0..16 {
+            held.push(
+                s.acquire_vfpga(
+                    users[0],
+                    ServiceModel::RAaaS,
+                    RequestClass::Normal,
+                )
+                .unwrap(),
+            );
+        }
+        // Queue one request per other tenant.
+        let tickets: Vec<TicketId> = users[1..]
+            .iter()
+            .map(|u| s.submit(*u, ServiceModel::RAaaS, RequestClass::Batch))
+            .collect();
+        assert!(s.try_claim(tickets[0]).is_none());
+        // Three releases admit all three queued tenants.
+        for g in held.drain(..3) {
+            s.release(g.alloc).unwrap();
+        }
+        for t in &tickets {
+            let res = s.try_claim(*t).expect("granted after release");
+            assert!(res.is_ok());
+        }
+    }
+
+    #[test]
+    fn interactive_preempts_batch_via_migration() {
+        let s = sched_on(&ClusterConfig::sched_testbed());
+        let batcher = s.hv().add_user("batcher");
+        let vip = s.hv().add_user("vip");
+        // Fill the RAaaS-capable device (fpga-0, consolidate-first
+        // packs it first) with programmed batch leases; the BAaaS-only
+        // device keeps free regions.
+        let batch_grants = crate::testing::fill_batch_leases(&s, batcher, 4);
+        // All four batch leases landed on the RAaaS-capable device.
+        assert!(batch_grants
+            .iter()
+            .all(|g| g.fpga() == crate::util::ids::FpgaId(0)));
+        // An interactive RAaaS request has no free RAaaS region —
+        // without preemption this is NoCapacity.
+        assert!(matches!(
+            s.acquire_vfpga(vip, ServiceModel::RAaaS, RequestClass::Batch),
+            Err(SchedError::NoCapacity)
+        ));
+        // Interactive class preempts: one batch lease migrates to the
+        // BAaaS-only device and the vip lands on fpga-0.
+        let g = s
+            .acquire_vfpga(vip, ServiceModel::RAaaS, RequestClass::Interactive)
+            .unwrap();
+        assert_eq!(g.fpga(), crate::util::ids::FpgaId(0));
+        assert_eq!(
+            s.hv().metrics.counter("sched.preemptions").get(),
+            1
+        );
+        assert_eq!(s.usage(batcher).preempted, 1);
+        // The victim's grant now points at the other device and is
+        // still releasable.
+        let moved = s
+            .active_grants()
+            .into_iter()
+            .filter(|g| g.user == batcher)
+            .find(|g| g.fpga() != crate::util::ids::FpgaId(0))
+            .expect("one batch lease migrated");
+        s.release(moved.alloc).unwrap();
+    }
+
+    #[test]
+    fn reservation_withholds_capacity_until_expiry() {
+        // Single device, 4 regions.
+        let s = sched_on(&ClusterConfig::single_vc707());
+        let holder = s.hv().add_user("holder");
+        let other = s.hv().add_user("other");
+        let now = s.hv().clock.now();
+        s.reserve(
+            holder,
+            2,
+            now,
+            VirtualTime::from_secs_f64(100.0),
+        );
+        // Other tenant can only take the 2 unreserved regions.
+        let _a = s
+            .acquire_vfpga(other, ServiceModel::RAaaS, RequestClass::Normal)
+            .unwrap();
+        let _b = s
+            .acquire_vfpga(other, ServiceModel::RAaaS, RequestClass::Normal)
+            .unwrap();
+        assert!(matches!(
+            s.acquire_vfpga(other, ServiceModel::RAaaS, RequestClass::Normal),
+            Err(SchedError::NoCapacity)
+        ));
+        // The holder draws from its reservation.
+        let _h = s
+            .acquire_vfpga(holder, ServiceModel::RAaaS, RequestClass::Normal)
+            .unwrap();
+        // Window expires: remaining reserved capacity is reclaimed.
+        s.hv().clock.advance(VirtualTime::from_secs_f64(200.0));
+        assert!(s
+            .acquire_vfpga(other, ServiceModel::RAaaS, RequestClass::Normal)
+            .is_ok());
+        assert_eq!(
+            s.hv().metrics.counter("sched.reservations.expired").get(),
+            1
+        );
+    }
+
+    #[test]
+    fn blocking_acquire_waits_for_release() {
+        let s = sched_on(&ClusterConfig::single_vc707());
+        let a = s.hv().add_user("a");
+        let b = s.hv().add_user("b");
+        let mut held = Vec::new();
+        for _ in 0..4 {
+            held.push(
+                s.acquire_vfpga(a, ServiceModel::RAaaS, RequestClass::Normal)
+                    .unwrap(),
+            );
+        }
+        let s2 = Arc::clone(&s);
+        let waiter = std::thread::spawn(move || {
+            s2.acquire_vfpga_blocking(
+                b,
+                ServiceModel::RAaaS,
+                RequestClass::Batch,
+            )
+        });
+        // Give the waiter time to enqueue, then free a region.
+        while s.hv().metrics.counter("sched.enqueued").get() == 0 {
+            std::thread::yield_now();
+        }
+        s.release(held.pop().unwrap().alloc).unwrap();
+        let grant = waiter.join().unwrap().unwrap();
+        assert_eq!(grant.user, b);
+        s.release(grant.alloc).unwrap();
+    }
+
+    #[test]
+    fn cancel_resolves_waiters() {
+        let s = sched_on(&ClusterConfig::single_vc707());
+        let a = s.hv().add_user("a");
+        let b = s.hv().add_user("b");
+        for _ in 0..4 {
+            s.acquire_vfpga(a, ServiceModel::RAaaS, RequestClass::Normal)
+                .unwrap();
+        }
+        let t = s.submit(b, ServiceModel::RAaaS, RequestClass::Batch);
+        assert!(s.cancel(t));
+        assert_eq!(s.wait(t), Err(SchedError::Cancelled));
+        assert!(!s.cancel(t));
+    }
+
+    #[test]
+    fn status_json_reports_queue_shape() {
+        let s = sched_on(&ClusterConfig::single_vc707());
+        let a = s.hv().add_user("a");
+        for _ in 0..4 {
+            s.acquire_vfpga(a, ServiceModel::RAaaS, RequestClass::Normal)
+                .unwrap();
+        }
+        s.submit(a, ServiceModel::RAaaS, RequestClass::Batch);
+        s.reserve(
+            a,
+            1,
+            s.hv().clock.now(),
+            VirtualTime::from_secs_f64(10.0),
+        );
+        let j = s.status_json();
+        assert_eq!(j.get("queue_depth").as_u64(), Some(1));
+        assert_eq!(j.get("queued_batch").as_u64(), Some(1));
+        assert_eq!(j.get("active_grants").as_u64(), Some(4));
+        assert_eq!(j.get("reservations").as_arr().unwrap().len(), 1);
+        let report = s.usage_report();
+        assert!(report.contains("tenant"), "{report}");
+    }
+}

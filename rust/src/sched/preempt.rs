@@ -1,0 +1,138 @@
+//! Preemption of lower-class leases for interactive requests.
+//!
+//! When an interactive request finds no free region on any device
+//! serving its model, the scheduler looks for a *victim*: a running
+//! lower-class (batch/BAaaS) lease on such a device. The victim is
+//! not killed — its design is relocated with the hypervisor's
+//! migration path ([`crate::hypervisor::migration`]), which retargets
+//! the relocatable bitfile and rebinds the lease, typically onto a
+//! device the interactive model cannot use (that asymmetry is why
+//! migration helps at all: if a region free for the requester
+//! existed, plain placement would have found it). The freed region
+//! then takes the interactive lease.
+//!
+//! Victim selection is deterministic and pure (unit-testable):
+//! 1. lowest request class first (batch before normal);
+//! 2. youngest lease first — the least accumulated work is lost to
+//!    the migration downtime;
+//! 3. ties break on the highest allocation id (the most recent grant).
+
+use crate::config::ServiceModel;
+use crate::util::ids::{AllocationId, FpgaId, UserId, VfpgaId};
+
+use super::RequestClass;
+
+/// A preemptable running lease.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VictimInfo {
+    pub alloc: AllocationId,
+    pub user: UserId,
+    pub class: RequestClass,
+    /// Service model of the victim's own lease — the migration
+    /// target must sit on a device serving it.
+    pub model: ServiceModel,
+    pub vfpga: VfpgaId,
+    pub fpga: FpgaId,
+    /// Virtual timestamp the lease was granted.
+    pub started_ns: u64,
+}
+
+/// The victim-ranking key: lowest class, then youngest lease, then
+/// highest allocation id.
+fn victim_key(
+    v: &VictimInfo,
+) -> (RequestClass, std::cmp::Reverse<u64>, std::cmp::Reverse<u64>) {
+    (
+        v.class,
+        std::cmp::Reverse(v.started_ns),
+        std::cmp::Reverse(v.alloc.0),
+    )
+}
+
+/// Pick the victim to relocate among `candidates`, all of which must
+/// already be below the requester's class and on a device serving the
+/// requested model. Returns `None` when the slice is empty.
+pub fn select_victim(candidates: &[VictimInfo]) -> Option<VictimInfo> {
+    victim_order(candidates).into_iter().next()
+}
+
+/// Order all candidates best-victim-first (the scheduler walks this
+/// list, skipping victims whose migration fails).
+pub fn victim_order(candidates: &[VictimInfo]) -> Vec<VictimInfo> {
+    let mut ordered = candidates.to_vec();
+    ordered.sort_by_key(victim_key);
+    ordered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn victim(
+        alloc: u64,
+        class: RequestClass,
+        started_ns: u64,
+    ) -> VictimInfo {
+        VictimInfo {
+            alloc: AllocationId(alloc),
+            user: UserId(0),
+            class,
+            model: ServiceModel::BAaaS,
+            vfpga: VfpgaId(alloc),
+            fpga: FpgaId(0),
+            started_ns,
+        }
+    }
+
+    #[test]
+    fn empty_slice_has_no_victim() {
+        assert_eq!(select_victim(&[]), None);
+    }
+
+    #[test]
+    fn lowest_class_goes_first() {
+        let cands = vec![
+            victim(0, RequestClass::Normal, 100),
+            victim(1, RequestClass::Batch, 0),
+        ];
+        assert_eq!(select_victim(&cands).unwrap().alloc, AllocationId(1));
+    }
+
+    #[test]
+    fn youngest_lease_within_class() {
+        let cands = vec![
+            victim(0, RequestClass::Batch, 10),
+            victim(1, RequestClass::Batch, 500),
+            victim(2, RequestClass::Batch, 200),
+        ];
+        // alloc-1 started last → least work lost.
+        assert_eq!(select_victim(&cands).unwrap().alloc, AllocationId(1));
+    }
+
+    #[test]
+    fn tie_breaks_on_highest_alloc_id() {
+        let cands = vec![
+            victim(3, RequestClass::Batch, 42),
+            victim(7, RequestClass::Batch, 42),
+        ];
+        assert_eq!(select_victim(&cands).unwrap().alloc, AllocationId(7));
+    }
+
+    #[test]
+    fn victim_order_is_total_and_deterministic() {
+        let cands = vec![
+            victim(0, RequestClass::Normal, 0),
+            victim(1, RequestClass::Batch, 5),
+            victim(2, RequestClass::Batch, 9),
+        ];
+        let order: Vec<u64> =
+            victim_order(&cands).iter().map(|v| v.alloc.0).collect();
+        // batch-youngest (alloc 2), batch-older (alloc 1), then normal.
+        assert_eq!(order, vec![2, 1, 0]);
+        // First of the order == select_victim.
+        assert_eq!(
+            victim_order(&cands)[0].alloc,
+            select_victim(&cands).unwrap().alloc
+        );
+    }
+}

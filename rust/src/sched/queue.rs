@@ -1,0 +1,347 @@
+//! Priority admission queue with weighted fair-share across tenants.
+//!
+//! Ordering is two-level:
+//! 1. request class — `Interactive > Normal > Batch`, strict;
+//! 2. within a class, *stride scheduling* over tenants: every tenant
+//!    carries a `pass` value that grows by `STRIDE_SCALE / weight`
+//!    each time one of its requests is admitted, and the tenant with
+//!    the smallest pass goes first. A tenant with weight 2 therefore
+//!    receives twice the admissions of a weight-1 tenant over any
+//!    contended window. Ties break on submission order (FIFO), which
+//!    also keeps a single tenant's requests in order.
+//!
+//! The queue never decides *admissibility* itself — the scheduler
+//! passes an `admissible` predicate (quota headroom + free capacity
+//! for the requested model) into [`AdmissionQueue::pop_best`], and
+//! blocked entries are skipped without losing their place. That is
+//! what prevents one tenant sitting at its quota from starving every
+//! other tenant behind it.
+
+use std::collections::BTreeMap;
+
+use crate::config::ServiceModel;
+use crate::util::ids::{TicketId, UserId};
+
+use super::RequestClass;
+
+/// Pass increment for a weight-1 tenant; a tenant of weight `w`
+/// advances by `STRIDE_SCALE / w` per admission.
+pub const STRIDE_SCALE: u64 = 1 << 20;
+
+/// One queued admission request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueueEntry {
+    pub ticket: TicketId,
+    pub user: UserId,
+    pub model: ServiceModel,
+    pub class: RequestClass,
+    /// Virtual timestamp of submission (wait-time accounting).
+    pub enqueued_ns: u64,
+    /// Global submission sequence (FIFO tie-break).
+    pub seq: u64,
+}
+
+/// The admission queue.
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    entries: Vec<QueueEntry>,
+    /// Tenant pass values (persist across pops so fairness holds over
+    /// the whole run, not just one backlog).
+    passes: BTreeMap<UserId, u64>,
+    /// High-water mark of scheduled passes — the queue's virtual
+    /// time. Newcomers join here when the queue is empty, so a tenant
+    /// arriving after a drain cannot replay the veterans' entire
+    /// history of admissions against them.
+    pass_floor: u64,
+    next_seq: u64,
+    next_ticket: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> AdmissionQueue {
+        AdmissionQueue::default()
+    }
+
+    /// Enqueue a request; returns its ticket.
+    pub fn push(
+        &mut self,
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+        now_ns: u64,
+    ) -> TicketId {
+        let ticket = TicketId(self.next_ticket);
+        self.next_ticket += 1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        // A tenant first seen now starts at the smallest live pass so
+        // it cannot leapfrog tenants that have been waiting (nor be
+        // penalized for arriving late).
+        let floor = self.min_live_pass();
+        let pass = self.passes.entry(user).or_insert(floor);
+        *pass = (*pass).max(floor);
+        self.entries.push(QueueEntry {
+            ticket,
+            user,
+            model,
+            class,
+            enqueued_ns: now_ns,
+            seq,
+        });
+        ticket
+    }
+
+    fn min_live_pass(&self) -> u64 {
+        self.entries
+            .iter()
+            .filter_map(|e| self.passes.get(&e.user).copied())
+            .min()
+            .unwrap_or(self.pass_floor)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Queued requests of one tenant.
+    pub fn depth_for(&self, user: UserId) -> usize {
+        self.entries.iter().filter(|e| e.user == user).count()
+    }
+
+    /// Any queued request at or above `class`?
+    pub fn has_class_at_or_above(&self, class: RequestClass) -> bool {
+        self.entries.iter().any(|e| e.class >= class)
+    }
+
+    /// Any queued request strictly above `class`?
+    pub fn has_class_above(&self, class: RequestClass) -> bool {
+        self.entries.iter().any(|e| e.class > class)
+    }
+
+    /// Remove a queued request (cancellation). Returns the entry if it
+    /// was still queued.
+    pub fn remove(&mut self, ticket: TicketId) -> Option<QueueEntry> {
+        let idx = self.entries.iter().position(|e| e.ticket == ticket)?;
+        Some(self.entries.remove(idx))
+    }
+
+    /// Reinsert a previously-popped entry unchanged (same ticket, seq
+    /// and enqueue time) — used when an admission raced with an
+    /// out-of-band allocation and must go back to the queue.
+    pub fn requeue(&mut self, entry: QueueEntry) {
+        self.entries.push(entry);
+    }
+
+    /// Pop the best admissible request: highest class, then smallest
+    /// tenant pass, then FIFO. Advances the winner's pass by its
+    /// stride (`STRIDE_SCALE / weight`). Entries failing `admissible`
+    /// keep their place.
+    pub fn pop_best(
+        &mut self,
+        weight_of: impl Fn(UserId) -> u64,
+        admissible: impl Fn(&QueueEntry) -> bool,
+    ) -> Option<QueueEntry> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            if !admissible(e) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let cur = &self.entries[b];
+                    let e_pass = self.passes.get(&e.user).copied().unwrap_or(0);
+                    let b_pass =
+                        self.passes.get(&cur.user).copied().unwrap_or(0);
+                    (
+                        std::cmp::Reverse(e.class),
+                        e_pass,
+                        e.seq,
+                    ) < (
+                        std::cmp::Reverse(cur.class),
+                        b_pass,
+                        cur.seq,
+                    )
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let entry = self.entries.remove(best?);
+        let stride = Self::stride(weight_of(entry.user));
+        let pass = self.passes.entry(entry.user).or_insert(0);
+        // The winner's pass is the queue's current virtual time.
+        self.pass_floor = self.pass_floor.max(*pass);
+        *pass += stride;
+        Some(entry)
+    }
+
+    /// Pass increment for one admission at `weight`. Clamped to ≥ 1
+    /// so an absurdly large weight cannot yield a zero stride and
+    /// monopolize the queue forever.
+    fn stride(weight: u64) -> u64 {
+        (STRIDE_SCALE / weight.max(1)).max(1)
+    }
+
+    /// Roll back one admission's pass charge (the admission raced
+    /// with an out-of-band allocation and was requeued).
+    pub fn refund(&mut self, user: UserId, weight: u64) {
+        if let Some(pass) = self.passes.get_mut(&user) {
+            *pass = pass.saturating_sub(Self::stride(weight));
+        }
+    }
+
+    /// Immutable view for status RPCs.
+    pub fn snapshot(&self) -> Vec<QueueEntry> {
+        self.entries.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q() -> AdmissionQueue {
+        AdmissionQueue::new()
+    }
+
+    #[test]
+    fn fifo_within_one_tenant() {
+        let mut q = q();
+        let u = UserId(0);
+        let t0 = q.push(u, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        let t1 = q.push(u, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        let a = q.pop_best(|_| 1, |_| true).unwrap();
+        let b = q.pop_best(|_| 1, |_| true).unwrap();
+        assert_eq!(a.ticket, t0);
+        assert_eq!(b.ticket, t1);
+        assert!(q.pop_best(|_| 1, |_| true).is_none());
+    }
+
+    #[test]
+    fn higher_class_preempts_queue_order() {
+        let mut q = q();
+        let u = UserId(0);
+        q.push(u, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        let hi =
+            q.push(u, ServiceModel::RAaaS, RequestClass::Interactive, 0);
+        let first = q.pop_best(|_| 1, |_| true).unwrap();
+        assert_eq!(first.ticket, hi);
+        assert_eq!(first.class, RequestClass::Interactive);
+    }
+
+    #[test]
+    fn weighted_fair_share_ratio() {
+        let mut q = q();
+        let heavy = UserId(0);
+        let light = UserId(1);
+        for _ in 0..30 {
+            q.push(heavy, ServiceModel::RAaaS, RequestClass::Batch, 0);
+            q.push(light, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        }
+        let weight = |u: UserId| if u == heavy { 2 } else { 1 };
+        // First 12 admissions: heavy should get ~2x light's share.
+        let mut heavy_n = 0;
+        let mut light_n = 0;
+        for _ in 0..12 {
+            let e = q.pop_best(weight, |_| true).unwrap();
+            if e.user == heavy {
+                heavy_n += 1;
+            } else {
+                light_n += 1;
+            }
+        }
+        assert_eq!(heavy_n, 8, "heavy {heavy_n} vs light {light_n}");
+        assert_eq!(light_n, 4);
+    }
+
+    #[test]
+    fn blocked_tenant_does_not_starve_others() {
+        let mut q = q();
+        let stuck = UserId(0);
+        let ok = UserId(1);
+        q.push(stuck, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        let t = q.push(ok, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        // `stuck` is at quota: the predicate rejects it.
+        let e = q
+            .pop_best(|_| 1, |e| e.user != stuck)
+            .unwrap();
+        assert_eq!(e.ticket, t);
+        // The blocked entry kept its place.
+        assert_eq!(q.depth_for(stuck), 1);
+    }
+
+    #[test]
+    fn late_arriving_tenant_cannot_leapfrog() {
+        let mut q = q();
+        let a = UserId(0);
+        let b = UserId(1);
+        // a gets two admissions first (its pass advances).
+        q.push(a, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        q.push(a, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        q.pop_best(|_| 1, |_| true).unwrap();
+        q.pop_best(|_| 1, |_| true).unwrap();
+        // Now both queue one request: b is new but starts at the live
+        // pass floor (a's pass), NOT at zero — so b cannot leapfrog
+        // the backlog; the tie breaks FIFO to a, then b goes next once
+        // a's pass has advanced past the floor.
+        q.push(a, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        q.push(b, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        let first = q.pop_best(|_| 1, |_| true).unwrap();
+        let second = q.pop_best(|_| 1, |_| true).unwrap();
+        assert_eq!(first.user, a, "tie at the floor breaks FIFO");
+        assert_eq!(second.user, b, "then the newcomer's floor pass wins");
+    }
+
+    #[test]
+    fn drain_does_not_reset_the_pass_floor() {
+        let mut q = q();
+        let veteran = UserId(0);
+        let newbie = UserId(1);
+        // The veteran accumulates pass through many admissions.
+        for _ in 0..50 {
+            q.push(veteran, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        }
+        for _ in 0..50 {
+            q.pop_best(|_| 1, |_| true).unwrap();
+        }
+        // Queue drained. A newcomer submitting now starts at the
+        // floor, not zero — so the veteran's next request loses at
+        // most one round, not fifty.
+        q.push(newbie, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        q.push(veteran, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        let first = q.pop_best(|_| 1, |_| true).unwrap();
+        let second = q.pop_best(|_| 1, |_| true).unwrap();
+        assert_eq!(first.user, newbie, "newcomer is at most one stride behind");
+        assert_eq!(second.user, veteran);
+    }
+
+    #[test]
+    fn remove_cancels_a_ticket() {
+        let mut q = q();
+        let u = UserId(0);
+        let t = q.push(u, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        assert_eq!(q.len(), 1);
+        assert!(q.remove(t).is_some());
+        assert!(q.remove(t).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn class_visibility_helpers() {
+        let mut q = q();
+        let u = UserId(0);
+        q.push(u, ServiceModel::BAaaS, RequestClass::Batch, 0);
+        assert!(q.has_class_at_or_above(RequestClass::Batch));
+        assert!(!q.has_class_at_or_above(RequestClass::Interactive));
+        q.push(u, ServiceModel::RAaaS, RequestClass::Interactive, 0);
+        assert!(q.has_class_at_or_above(RequestClass::Interactive));
+        assert_eq!(q.depth_for(u), 2);
+        assert_eq!(q.snapshot().len(), 2);
+    }
+}

@@ -1,0 +1,234 @@
+//! Per-tenant quotas and admission control.
+//!
+//! Two independent limits per tenant:
+//! * **concurrency** — max vFPGA-equivalents held at once (a physical
+//!   RSaaS device counts as [`PHYSICAL_EQUIV_UNITS`]); recoverable:
+//!   a request blocked on concurrency queues and is retried when the
+//!   tenant releases;
+//! * **device-second budget** — total accumulated device-seconds the
+//!   tenant may consume over the cluster's lifetime; *not*
+//!   recoverable (usage only grows), so a budget denial is a hard
+//!   error, never a queue.
+//!
+//! The scheduler consults [`QuotaBook::admissible`] on every
+//! admission (fast path *and* queue pump), so quotas hold under any
+//! interleaving — the property test in `tests/sched_invariants.rs`
+//! hammers exactly this.
+
+use std::collections::BTreeMap;
+
+use crate::util::ids::UserId;
+
+/// vFPGA-equivalents charged for a whole physical device (Section I /
+/// IV-A: up to four vFPGAs per device).
+pub const PHYSICAL_EQUIV_UNITS: u64 = crate::paper::MAX_VFPGAS as u64;
+
+/// One tenant's limits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantQuota {
+    /// Max concurrently-held vFPGA-equivalents.
+    pub max_concurrent: u64,
+    /// Lifetime device-second budget (`None` = unmetered).
+    pub device_seconds_budget: Option<f64>,
+    /// Fair-share weight (≥ 1).
+    pub weight: u64,
+}
+
+impl Default for TenantQuota {
+    fn default() -> TenantQuota {
+        TenantQuota {
+            max_concurrent: u64::MAX,
+            device_seconds_budget: None,
+            weight: 1,
+        }
+    }
+}
+
+/// Why a request was denied.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuotaDenial {
+    /// Tenant is at its concurrency cap — recoverable, queue it.
+    Concurrency { in_use: u64, max: u64 },
+    /// Tenant exhausted its device-second budget — terminal.
+    Budget { used_s: f64, budget_s: f64 },
+}
+
+impl std::fmt::Display for QuotaDenial {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuotaDenial::Concurrency { in_use, max } => write!(
+                f,
+                "{in_use} of {max} concurrent vFPGAs held"
+            ),
+            QuotaDenial::Budget { used_s, budget_s } => write!(
+                f,
+                "device-second budget exhausted ({used_s:.1} of {budget_s:.1} s)"
+            ),
+        }
+    }
+}
+
+/// The quota ledger: limits + live concurrency per tenant.
+#[derive(Debug, Default)]
+pub struct QuotaBook {
+    quotas: BTreeMap<UserId, TenantQuota>,
+    in_use: BTreeMap<UserId, u64>,
+}
+
+impl QuotaBook {
+    pub fn new() -> QuotaBook {
+        QuotaBook::default()
+    }
+
+    /// Effective quota (explicit or default-unlimited).
+    pub fn quota(&self, user: UserId) -> TenantQuota {
+        self.quotas.get(&user).copied().unwrap_or_default()
+    }
+
+    pub fn set(&mut self, user: UserId, quota: TenantQuota) {
+        self.quotas.insert(user, quota);
+    }
+
+    /// Currently-held vFPGA-equivalents.
+    pub fn in_use(&self, user: UserId) -> u64 {
+        self.in_use.get(&user).copied().unwrap_or(0)
+    }
+
+    pub fn weight(&self, user: UserId) -> u64 {
+        self.quota(user).weight.max(1)
+    }
+
+    /// Would granting `units` more keep `user` within quota?
+    /// `used_device_seconds` comes from the usage ledger.
+    pub fn admissible(
+        &self,
+        user: UserId,
+        units: u64,
+        used_device_seconds: f64,
+    ) -> Result<(), QuotaDenial> {
+        let q = self.quota(user);
+        if let Some(budget) = q.device_seconds_budget {
+            if used_device_seconds >= budget {
+                return Err(QuotaDenial::Budget {
+                    used_s: used_device_seconds,
+                    budget_s: budget,
+                });
+            }
+        }
+        let in_use = self.in_use(user);
+        if in_use.saturating_add(units) > q.max_concurrent {
+            return Err(QuotaDenial::Concurrency {
+                in_use,
+                max: q.max_concurrent,
+            });
+        }
+        Ok(())
+    }
+
+    /// Record a grant.
+    pub fn charge(&mut self, user: UserId, units: u64) {
+        *self.in_use.entry(user).or_insert(0) += units;
+    }
+
+    /// Record a release.
+    pub fn credit(&mut self, user: UserId, units: u64) {
+        if let Some(n) = self.in_use.get_mut(&user) {
+            *n = n.saturating_sub(units);
+            if *n == 0 {
+                self.in_use.remove(&user);
+            }
+        }
+    }
+
+    /// Whether any tenant has a device-second budget configured (the
+    /// scheduler skips the terminal-budget queue scan otherwise).
+    pub fn has_budgets(&self) -> bool {
+        self.quotas
+            .values()
+            .any(|q| q.device_seconds_budget.is_some())
+    }
+
+    /// All explicitly-configured quotas (RPC status).
+    pub fn snapshot(&self) -> Vec<(UserId, TenantQuota)> {
+        self.quotas.iter().map(|(u, q)| (*u, *q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_unmetered() {
+        let book = QuotaBook::new();
+        let u = UserId(0);
+        assert!(book.admissible(u, 1, 1e12).is_ok());
+        assert_eq!(book.quota(u).weight, 1);
+    }
+
+    #[test]
+    fn concurrency_cap_enforced_and_recovers() {
+        let mut book = QuotaBook::new();
+        let u = UserId(0);
+        book.set(
+            u,
+            TenantQuota {
+                max_concurrent: 2,
+                ..TenantQuota::default()
+            },
+        );
+        book.charge(u, 2);
+        assert!(matches!(
+            book.admissible(u, 1, 0.0),
+            Err(QuotaDenial::Concurrency { in_use: 2, max: 2 })
+        ));
+        book.credit(u, 1);
+        assert!(book.admissible(u, 1, 0.0).is_ok());
+        assert_eq!(book.in_use(u), 1);
+    }
+
+    #[test]
+    fn budget_denial_is_terminal_shape() {
+        let mut book = QuotaBook::new();
+        let u = UserId(3);
+        book.set(
+            u,
+            TenantQuota {
+                device_seconds_budget: Some(100.0),
+                ..TenantQuota::default()
+            },
+        );
+        assert!(book.admissible(u, 1, 99.0).is_ok());
+        let denial = book.admissible(u, 1, 100.0).unwrap_err();
+        assert!(matches!(denial, QuotaDenial::Budget { .. }));
+        assert!(denial.to_string().contains("budget"));
+    }
+
+    #[test]
+    fn credit_never_underflows() {
+        let mut book = QuotaBook::new();
+        let u = UserId(1);
+        book.credit(u, 5);
+        assert_eq!(book.in_use(u), 0);
+        book.charge(u, 4);
+        book.credit(u, 2);
+        book.credit(u, 99);
+        assert_eq!(book.in_use(u), 0);
+    }
+
+    #[test]
+    fn physical_units_count_against_concurrency() {
+        let mut book = QuotaBook::new();
+        let u = UserId(2);
+        book.set(
+            u,
+            TenantQuota {
+                max_concurrent: PHYSICAL_EQUIV_UNITS,
+                ..TenantQuota::default()
+            },
+        );
+        assert!(book.admissible(u, PHYSICAL_EQUIV_UNITS, 0.0).is_ok());
+        book.charge(u, PHYSICAL_EQUIV_UNITS);
+        assert!(book.admissible(u, 1, 0.0).is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! Time-boxed capacity reservations with virtual-clock expiry.
+//!
+//! A reservation withholds `regions` vFPGAs of cluster capacity for
+//! one tenant over a window `[start, start + duration)` of *virtual*
+//! time. While the window is active, other tenants can only be
+//! admitted into capacity beyond the reserved-but-unclaimed total;
+//! the holder draws its own admissions down from the reservation
+//! first. When the window ends, whatever was never claimed is
+//! reclaimed for general use — the scheduler calls [`reap`] lazily on
+//! every admission attempt, so expiry needs no timer thread.
+//!
+//! **Known limitation:** reservations are cluster-wide *region
+//! counts*, not bound to a service model or device set. On a
+//! heterogeneous config (devices serving different model sets),
+//! traffic for another model can still consume the only devices able
+//! to serve the holder's model while the count-based guarantee looks
+//! intact. Region-count-aware reservations per model are a ROADMAP
+//! open item.
+//!
+//! [`reap`]: ReservationBook::reap
+
+use std::collections::BTreeMap;
+
+use crate::util::clock::VirtualTime;
+use crate::util::ids::{ReservationId, UserId};
+
+/// One reservation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reservation {
+    pub id: ReservationId,
+    pub user: UserId,
+    /// Capacity reserved, in vFPGA regions.
+    pub regions: u64,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Admissions already drawn from this reservation.
+    pub claimed: u64,
+}
+
+impl Reservation {
+    pub fn active_at(&self, now_ns: u64) -> bool {
+        self.start_ns <= now_ns && now_ns < self.end_ns
+    }
+
+    pub fn unclaimed(&self) -> u64 {
+        self.regions.saturating_sub(self.claimed)
+    }
+}
+
+/// The reservation book.
+#[derive(Debug, Default)]
+pub struct ReservationBook {
+    reservations: BTreeMap<ReservationId, Reservation>,
+    next_id: u64,
+    expired_total: u64,
+}
+
+impl ReservationBook {
+    pub fn new() -> ReservationBook {
+        ReservationBook::default()
+    }
+
+    /// Book `regions` vFPGAs for `user` starting at `start` for
+    /// `duration` of virtual time.
+    pub fn reserve(
+        &mut self,
+        user: UserId,
+        regions: u64,
+        start: VirtualTime,
+        duration: VirtualTime,
+    ) -> ReservationId {
+        let id = ReservationId(self.next_id);
+        self.next_id += 1;
+        self.reservations.insert(
+            id,
+            Reservation {
+                id,
+                user,
+                regions,
+                start_ns: start.0,
+                end_ns: (start + duration).0,
+                claimed: 0,
+            },
+        );
+        id
+    }
+
+    pub fn cancel(&mut self, id: ReservationId) -> bool {
+        self.reservations.remove(&id).is_some()
+    }
+
+    pub fn get(&self, id: ReservationId) -> Option<&Reservation> {
+        self.reservations.get(&id)
+    }
+
+    /// Drop reservations whose window has passed; returns how many
+    /// expired this sweep.
+    pub fn reap(&mut self, now_ns: u64) -> usize {
+        let before = self.reservations.len();
+        self.reservations.retain(|_, r| r.end_ns > now_ns);
+        let expired = before - self.reservations.len();
+        self.expired_total += expired as u64;
+        expired
+    }
+
+    /// Reservations ever reclaimed by expiry.
+    pub fn expired_total(&self) -> u64 {
+        self.expired_total
+    }
+
+    /// Capacity currently withheld from `user`: the unclaimed regions
+    /// of every *other* tenant's active reservation.
+    pub fn withheld_from(&self, user: UserId, now_ns: u64) -> u64 {
+        self.reservations
+            .values()
+            .filter(|r| r.user != user && r.active_at(now_ns))
+            .map(|r| r.unclaimed())
+            .sum()
+    }
+
+    /// Unclaimed capacity of *every* active reservation (the
+    /// scheduler uses this to decide whether an admission actually
+    /// drew on reserved headroom).
+    pub fn withheld_total(&self, now_ns: u64) -> u64 {
+        self.reservations
+            .values()
+            .filter(|r| r.active_at(now_ns))
+            .map(|r| r.unclaimed())
+            .sum()
+    }
+
+    /// Unclaimed capacity of every reservation whose window overlaps
+    /// `[start_ns, end_ns)` — the overbooking check for new
+    /// reservations.
+    pub fn reserved_overlapping(&self, start_ns: u64, end_ns: u64) -> u64 {
+        self.reservations
+            .values()
+            .filter(|r| r.start_ns < end_ns && start_ns < r.end_ns)
+            .map(|r| r.unclaimed())
+            .sum()
+    }
+
+    /// Draw one admission from `user`'s active reservation with claim
+    /// headroom, if any. Returns the reservation drawn from so the
+    /// claim can be credited back when that lease is released
+    /// (reservations guarantee *concurrent* regions, not a count of
+    /// admissions).
+    pub fn consume(
+        &mut self,
+        user: UserId,
+        now_ns: u64,
+    ) -> Option<ReservationId> {
+        if let Some(r) = self
+            .reservations
+            .values_mut()
+            .find(|r| r.user == user && r.active_at(now_ns) && r.unclaimed() > 0)
+        {
+            r.claimed += 1;
+            Some(r.id)
+        } else {
+            None
+        }
+    }
+
+    /// Return one claim to a reservation (its lease was released
+    /// inside the window). No-op if the reservation already expired.
+    pub fn release_claim(&mut self, id: ReservationId) {
+        if let Some(r) = self.reservations.get_mut(&id) {
+            r.claimed = r.claimed.saturating_sub(1);
+        }
+    }
+
+    /// Active reservations (RPC status).
+    pub fn snapshot(&self, now_ns: u64) -> Vec<Reservation> {
+        self.reservations
+            .values()
+            .filter(|r| r.end_ns > now_ns)
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> VirtualTime {
+        VirtualTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn active_window_withholds_from_others() {
+        let mut book = ReservationBook::new();
+        let holder = UserId(0);
+        let other = UserId(1);
+        book.reserve(holder, 2, t(10.0), t(30.0));
+        // Before the window: nothing withheld.
+        assert_eq!(book.withheld_from(other, t(5.0).0), 0);
+        // Inside: two regions withheld from others, none from holder.
+        assert_eq!(book.withheld_from(other, t(20.0).0), 2);
+        assert_eq!(book.withheld_from(holder, t(20.0).0), 0);
+        // After: expired (even before reap runs, window checks apply).
+        assert_eq!(book.withheld_from(other, t(40.0).0), 0);
+    }
+
+    #[test]
+    fn holder_claims_draw_down_the_reservation() {
+        let mut book = ReservationBook::new();
+        let holder = UserId(0);
+        let other = UserId(1);
+        let id = book.reserve(holder, 2, t(0.0), t(100.0));
+        assert_eq!(book.consume(holder, t(1.0).0), Some(id));
+        assert_eq!(book.withheld_from(other, t(1.0).0), 1);
+        assert_eq!(book.consume(holder, t(2.0).0), Some(id));
+        assert_eq!(book.withheld_from(other, t(2.0).0), 0);
+        // Fully claimed: no more draws.
+        assert_eq!(book.consume(holder, t(3.0).0), None);
+        // Releasing a claimed lease restores the guarantee.
+        book.release_claim(id);
+        assert_eq!(book.withheld_from(other, t(4.0).0), 1);
+        assert_eq!(book.consume(holder, t(5.0).0), Some(id));
+        // Crediting an expired/cancelled reservation is a no-op.
+        assert!(book.cancel(id));
+        book.release_claim(id);
+        assert_eq!(book.withheld_total(t(6.0).0), 0);
+    }
+
+    #[test]
+    fn non_holder_cannot_consume() {
+        let mut book = ReservationBook::new();
+        book.reserve(UserId(0), 1, t(0.0), t(10.0));
+        assert_eq!(book.consume(UserId(1), t(1.0).0), None);
+        // Outside the window the holder cannot consume either.
+        assert_eq!(book.consume(UserId(0), t(11.0).0), None);
+    }
+
+    #[test]
+    fn reap_reclaims_expired_windows() {
+        let mut book = ReservationBook::new();
+        let a = book.reserve(UserId(0), 1, t(0.0), t(10.0));
+        book.reserve(UserId(1), 1, t(0.0), t(50.0));
+        assert_eq!(book.reap(t(20.0).0), 1);
+        assert!(book.get(a).is_none());
+        assert_eq!(book.expired_total(), 1);
+        assert_eq!(book.snapshot(t(20.0).0).len(), 1);
+        assert_eq!(book.reap(t(20.0).0), 0);
+    }
+
+    #[test]
+    fn cancel_frees_capacity_immediately() {
+        let mut book = ReservationBook::new();
+        let id = book.reserve(UserId(0), 3, t(0.0), t(100.0));
+        assert_eq!(book.withheld_from(UserId(1), t(1.0).0), 3);
+        assert!(book.cancel(id));
+        assert!(!book.cancel(id));
+        assert_eq!(book.withheld_from(UserId(1), t(1.0).0), 0);
+    }
+}

@@ -11,23 +11,42 @@
 //! * [`BaaasService`] — no FPGA visibility at all: users see named
 //!   services; allocation, PR and streaming happen in the background
 //!   with provider bitfiles.
+//!
+//! Every allocation goes through the cluster [`Scheduler`]
+//! ([`crate::sched`]) — quota, fair-share and reservation checks
+//! apply uniformly. Interactive façade calls (RAaaS/RSaaS leases) use
+//! the non-blocking fast path and may preempt batch leases; BAaaS
+//! invocations are background work and admit at batch class.
 
 use std::sync::Arc;
 
 use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
 use crate::hypervisor::{Hypervisor, HypervisorError};
-use crate::rc2f::stream::{StreamConfig, StreamOutcome, StreamRunner};
+use crate::rc2f::stream::{StreamConfig, StreamOutcome};
+use crate::sched::{RequestClass, Scheduler};
 use crate::util::ids::{AllocationId, FpgaId, UserId, VfpgaId};
 
 /// RAaaS: vFPGA leases + framework streaming.
 pub struct RaaasService {
     pub hv: Arc<Hypervisor>,
+    pub sched: Arc<Scheduler>,
 }
 
 impl RaaasService {
+    /// Stand-alone façade with its own scheduler.
     pub fn new(hv: Arc<Hypervisor>) -> RaaasService {
-        RaaasService { hv }
+        let sched = Scheduler::new(Arc::clone(&hv));
+        RaaasService { hv, sched }
+    }
+
+    /// Share one cluster scheduler across façades (quotas and
+    /// fair-share then apply across all service models).
+    pub fn with_scheduler(sched: Arc<Scheduler>) -> RaaasService {
+        RaaasService {
+            hv: Arc::clone(sched.hv()),
+            sched,
+        }
     }
 
     /// Lease one vFPGA. The user learns the vFPGA id — but not the
@@ -36,9 +55,12 @@ impl RaaasService {
         &self,
         user: UserId,
     ) -> Result<(AllocationId, VfpgaId), HypervisorError> {
-        let (alloc, vfpga, _, _) =
-            self.hv.alloc_vfpga(user, ServiceModel::RAaaS)?;
-        Ok((alloc, vfpga))
+        let grant = self
+            .sched
+            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Interactive)
+            .map_err(HypervisorError::from)?;
+        let vfpga = grant.vfpga().expect("vfpga grant");
+        Ok((grant.alloc, vfpga))
     }
 
     /// Program a user core. The bitfile may target any slot — it is
@@ -51,29 +73,8 @@ impl RaaasService {
         bitfile: &Bitstream,
     ) -> Result<(), HypervisorError> {
         let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
-        let (fpga, slot, quarters) = {
-            let db = self.hv.db.lock().unwrap();
-            let fpga = db
-                .device_of_vfpga(vfpga)
-                .ok_or(HypervisorError::BadAllocation(alloc))?
-                .id;
-            drop(db);
-            let dev = self.hv.device(fpga)?;
-            let slot = dev.slot_of[&vfpga];
-            let quarters = dev
-                .fpga
-                .lock()
-                .unwrap()
-                .region(vfpga)
-                .map_err(|e| HypervisorError::Device(e.to_string()))?
-                .shape
-                .quarters();
-            (fpga, slot, quarters)
-        };
-        let placed =
-            crate::hls::flow::DesignFlow::retarget(bitfile, slot, quarters);
+        let placed = self.hv.retarget_for(vfpga, bitfile)?;
         self.hv.program_vfpga(alloc, user, &placed)?;
-        let _ = fpga;
         Ok(())
     }
 
@@ -101,18 +102,27 @@ impl RaaasService {
     }
 
     pub fn release(&self, alloc: AllocationId) -> Result<(), HypervisorError> {
-        self.hv.release(alloc)
+        self.sched.release(alloc).map_err(HypervisorError::from)
     }
 }
 
 /// RSaaS: whole physical devices.
 pub struct RsaasService {
     pub hv: Arc<Hypervisor>,
+    pub sched: Arc<Scheduler>,
 }
 
 impl RsaasService {
     pub fn new(hv: Arc<Hypervisor>) -> RsaasService {
-        RsaasService { hv }
+        let sched = Scheduler::new(Arc::clone(&hv));
+        RsaasService { hv, sched }
+    }
+
+    pub fn with_scheduler(sched: Arc<Scheduler>) -> RsaasService {
+        RsaasService {
+            hv: Arc::clone(sched.hv()),
+            sched,
+        }
     }
 
     /// Lease a full physical FPGA.
@@ -120,8 +130,11 @@ impl RsaasService {
         &self,
         user: UserId,
     ) -> Result<(AllocationId, FpgaId), HypervisorError> {
-        let (alloc, fpga, _) = self.hv.alloc_physical(user, None)?;
-        Ok((alloc, fpga))
+        let grant = self
+            .sched
+            .acquire_physical(user, None, RequestClass::Interactive)
+            .map_err(HypervisorError::from)?;
+        Ok((grant.alloc, grant.fpga()))
     }
 
     /// Write a full user bitstream (with PCIe hot-plug handling).
@@ -136,18 +149,27 @@ impl RsaasService {
     }
 
     pub fn release(&self, alloc: AllocationId) -> Result<(), HypervisorError> {
-        self.hv.release(alloc)
+        self.sched.release(alloc).map_err(HypervisorError::from)
     }
 }
 
 /// BAaaS: named provider services, FPGAs invisible.
 pub struct BaaasService {
     pub hv: Arc<Hypervisor>,
+    pub sched: Arc<Scheduler>,
 }
 
 impl BaaasService {
     pub fn new(hv: Arc<Hypervisor>) -> BaaasService {
-        BaaasService { hv }
+        let sched = Scheduler::new(Arc::clone(&hv));
+        BaaasService { hv, sched }
+    }
+
+    pub fn with_scheduler(sched: Arc<Scheduler>) -> BaaasService {
+        BaaasService {
+            hv: Arc::clone(sched.hv()),
+            sched,
+        }
     }
 
     /// What end users see: the service catalogue.
@@ -156,8 +178,9 @@ impl BaaasService {
     }
 
     /// Invoke a service: the provider allocates a vFPGA in the
-    /// background, programs the prebuilt bitfile, streams, releases.
-    /// The caller never sees device ids.
+    /// background (batch class — preemptable by interactive leases),
+    /// programs the prebuilt bitfile, streams, releases. The caller
+    /// never sees device ids.
     pub fn invoke(
         &self,
         user: UserId,
@@ -165,30 +188,28 @@ impl BaaasService {
         cfg: &StreamConfig,
     ) -> Result<StreamOutcome, HypervisorError> {
         let bitfile = self.hv.service_bitfile(service)?;
-        let (alloc, vfpga, fpga, _) =
-            self.hv.alloc_vfpga(user, ServiceModel::BAaaS)?;
+        let grant = self
+            .sched
+            .acquire_vfpga(user, ServiceModel::BAaaS, RequestClass::Batch)
+            .map_err(HypervisorError::from)?;
+        let alloc = grant.alloc;
         let result = (|| {
-            let dev = self.hv.device(fpga)?;
-            let slot = dev.slot_of[&vfpga];
-            let quarters = dev
-                .fpga
-                .lock()
-                .unwrap()
-                .region(vfpga)
-                .map_err(|e| HypervisorError::Device(e.to_string()))?
-                .shape
-                .quarters();
-            let placed = crate::hls::flow::DesignFlow::retarget(
-                &bitfile, slot, quarters,
-            );
+            // Resolve placement through the lease — a preemption may
+            // have relocated it between any two steps.
+            let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
+            let placed = self.hv.retarget_for(vfpga, &bitfile)?;
             self.hv.program_vfpga(alloc, user, &placed)?;
-            let runner = StreamRunner::new(
-                Arc::clone(&self.hv.clock),
-                Arc::clone(&dev.link),
-            );
-            runner.run(cfg).map_err(HypervisorError::Db)
+            // Re-resolve before streaming: a preemption after PR
+            // migrates the lease (and its configured design) to a new
+            // region; stream where the lease lives now.
+            let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
+            self.hv
+                .stream_runner_for(vfpga)?
+                .run(cfg)
+                .map_err(HypervisorError::Db)
         })();
-        let _ = self.hv.release(alloc);
+        // Always release, success or failure.
+        let _ = self.sched.release(alloc);
         result
     }
 }
@@ -202,23 +223,13 @@ mod tests {
         Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap())
     }
 
-    fn artifacts_present() -> bool {
-        crate::runtime::artifact_dir().join("manifest.json").exists()
-    }
-
     fn mm16_bitfile() -> Bitstream {
-        crate::bitstream::BitstreamBuilder::partial("xc7vx485t", "matmul16")
-            .resources(crate::fpga::resources::Resources::new(
-                25_298, 41_654, 14, 80,
-            ))
-            .frames(crate::hls::flow::region_window(0, 1))
-            .artifact("matmul16_b256")
-            .build()
+        crate::testing::mm16_partial(0)
     }
 
     #[test]
     fn raaas_end_to_end() {
-        if !artifacts_present() {
+        if !crate::testing::artifacts_available("service::raaas_end_to_end") {
             return;
         }
         let svc = RaaasService::new(hv());
@@ -247,8 +258,21 @@ mod tests {
     }
 
     #[test]
+    fn raaas_allocations_are_scheduler_tracked() {
+        let svc = RaaasService::new(hv());
+        let user = svc.hv.add_user("alice");
+        let (alloc, _) = svc.alloc(user).unwrap();
+        assert_eq!(svc.sched.in_use(user), 1);
+        svc.release(alloc).unwrap();
+        assert_eq!(svc.sched.in_use(user), 0);
+        assert_eq!(svc.sched.usage(user).released, 1);
+    }
+
+    #[test]
     fn baaas_hides_devices_and_works() {
-        if !artifacts_present() {
+        if !crate::testing::artifacts_available(
+            "service::baaas_hides_devices_and_works",
+        ) {
             return;
         }
         let svc = BaaasService::new(hv());
@@ -293,5 +317,30 @@ mod tests {
                 .build();
         svc.program_full(alloc, user, &bs).unwrap();
         svc.release(alloc).unwrap();
+    }
+
+    #[test]
+    fn shared_scheduler_spans_service_models() {
+        // One scheduler under both RAaaS and BAaaS façades: a tenant
+        // quota of 1 concurrent vFPGA applies across both.
+        let sched = Scheduler::new(hv());
+        let raaas = RaaasService::with_scheduler(Arc::clone(&sched));
+        let baaas = BaaasService::with_scheduler(Arc::clone(&sched));
+        let user = sched.hv().add_user("capped");
+        sched.set_quota(
+            user,
+            crate::sched::TenantQuota {
+                max_concurrent: 1,
+                ..Default::default()
+            },
+        );
+        let (alloc, _) = raaas.alloc(user).unwrap();
+        baaas.hv.register_service("mm16", mm16_bitfile());
+        // Second concurrent lease (via BAaaS) is quota-denied.
+        let err = baaas
+            .invoke(user, "mm16", &StreamConfig::matmul16(64))
+            .unwrap_err();
+        assert!(matches!(err, HypervisorError::Sched(_)), "{err}");
+        raaas.release(alloc).unwrap();
     }
 }

@@ -9,3 +9,65 @@ pub mod prop;
 pub use bench::{BenchResult, Bencher};
 pub use failpoint::{FailPoint, FailPlan};
 pub use prop::{forall, Gen, PropError};
+
+/// The standard relocatable matmul16 partial bitfile (synth-report
+/// resources) targeting `slot` — the fixture tests and examples use
+/// to program a lease so it can stream or be migrated.
+pub fn mm16_partial(slot: usize) -> crate::bitstream::Bitstream {
+    crate::bitstream::BitstreamBuilder::partial("xc7vx485t", "matmul16")
+        .resources(crate::fpga::resources::Resources::new(
+            25_298, 41_654, 14, 80,
+        ))
+        .frames(crate::hls::flow::region_window(slot, 1))
+        .artifact("matmul16_b256")
+        .build()
+}
+
+/// Fill `n` regions with programmed batch-class BAaaS leases for
+/// `user` through the scheduler — the standard setup for preemption
+/// scenarios (a programmed lease is migratable). Returns the grants.
+/// Panics on failure; intended for tests and examples.
+pub fn fill_batch_leases(
+    sched: &crate::sched::Scheduler,
+    user: crate::util::ids::UserId,
+    n: usize,
+) -> Vec<crate::sched::SchedGrant> {
+    (0..n)
+        .map(|_| {
+            let grant = sched
+                .acquire_vfpga(
+                    user,
+                    crate::config::ServiceModel::BAaaS,
+                    crate::sched::RequestClass::Batch,
+                )
+                .expect("batch fill lease");
+            let vfpga = grant.vfpga().expect("vfpga grant");
+            let slot = sched
+                .hv()
+                .device(grant.fpga())
+                .expect("device of grant")
+                .slot_of[&vfpga];
+            sched
+                .hv()
+                .program_vfpga(grant.alloc, user, &mm16_partial(slot))
+                .expect("program fill lease");
+            grant
+        })
+        .collect()
+}
+
+/// Gate for artifact-dependent tests. Returns whether the AOT
+/// artifact bundle (`make artifacts`) is present; when it is not,
+/// logs an explicit "skipped" line through [`crate::util::logging`]
+/// so the skip is visible in test output instead of silently passing.
+pub fn artifacts_available(test: &str) -> bool {
+    let present =
+        crate::runtime::artifact_dir().join("manifest.json").exists();
+    if !present {
+        crate::util::logging::init();
+        log::warn!(
+            "{test} skipped: artifacts missing (run `make artifacts`)"
+        );
+    }
+    present
+}

@@ -68,6 +68,16 @@ typed_id!(
     VmId,
     "vm"
 );
+typed_id!(
+    /// A queued admission request in the cluster scheduler.
+    TicketId,
+    "ticket"
+);
+typed_id!(
+    /// A time-boxed capacity reservation in the cluster scheduler.
+    ReservationId,
+    "rsv"
+);
 
 /// Monotonic id generator (process-wide unique within a type).
 #[derive(Debug, Default)]

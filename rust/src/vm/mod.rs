@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::hypervisor::{Hypervisor, HypervisorError};
+use crate::sched::{RequestClass, Scheduler};
 use crate::util::clock::{VirtualClock, VirtualTime};
 use crate::util::ids::{AllocationId, FpgaId, UserId, VmId};
 
@@ -55,18 +56,29 @@ pub enum VmError {
     NotRunning(VmId),
 }
 
-/// The VM extension over the hypervisor.
+/// The VM extension over the hypervisor. Device admission goes
+/// through the cluster scheduler like every other allocation.
 pub struct VmManager {
     hv: Arc<Hypervisor>,
+    sched: Arc<Scheduler>,
     clock: Arc<VirtualClock>,
     vms: Mutex<BTreeMap<VmId, VmRecord>>,
 }
 
 impl VmManager {
     pub fn new(hv: Arc<Hypervisor>) -> VmManager {
+        let sched = Scheduler::new(Arc::clone(&hv));
+        VmManager::with_scheduler(sched)
+    }
+
+    /// Share the cluster scheduler (tenant quotas then cover VM
+    /// passthrough devices too).
+    pub fn with_scheduler(sched: Arc<Scheduler>) -> VmManager {
+        let hv = Arc::clone(sched.hv());
         let clock = Arc::clone(&hv.clock);
         VmManager {
             hv,
+            sched,
             clock,
             vms: Mutex::new(BTreeMap::new()),
         }
@@ -80,8 +92,11 @@ impl VmManager {
         mem_gib: u64,
     ) -> Result<VmRecord, VmError> {
         let vm_id = VmId(self.hv.db.lock().unwrap().vm_ids.next());
-        let (allocation, fpga, _) =
-            self.hv.alloc_physical(user, Some(vm_id))?;
+        let grant = self
+            .sched
+            .acquire_physical(user, Some(vm_id), RequestClass::Interactive)
+            .map_err(HypervisorError::from)?;
+        let (allocation, fpga) = (grant.alloc, grant.fpga());
         let mut record = VmRecord {
             id: vm_id,
             user,
@@ -120,7 +135,9 @@ impl VmManager {
         };
         self.clock
             .advance(VirtualTime::from_secs_f64(VM_SHUTDOWN_S));
-        self.hv.release(rec.allocation)?;
+        self.sched
+            .release(rec.allocation)
+            .map_err(HypervisorError::from)?;
         self.vms.lock().unwrap().remove(&vm);
         Ok(())
     }

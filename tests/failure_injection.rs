@@ -174,7 +174,9 @@ fn double_release_is_an_error_not_a_panic() {
 
 #[test]
 fn stream_against_missing_artifact_fails_cleanly() {
-    if !rc3e::runtime::artifact_dir().join("manifest.json").exists() {
+    if !rc3e::testing::artifacts_available(
+        "failure_injection::stream_against_missing_artifact_fails_cleanly",
+    ) {
         return;
     }
     let hv = hv();

@@ -14,7 +14,8 @@ use rc3e::util::ids::NodeId;
 use rc3e::util::json::Json;
 
 fn artifacts_present() -> bool {
-    rc3e::runtime::artifact_dir().join("manifest.json").exists()
+    // Logs an explicit "skipped: artifacts missing" line when absent.
+    rc3e::testing::artifacts_available("flow_raaas")
 }
 
 struct Cloud {

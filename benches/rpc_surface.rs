@@ -1,0 +1,98 @@
+//! RPC-surface bench: wall-clock calls/sec through the typed v2
+//! middleware, so API overhead enters the perf trajectory alongside
+//! the Table I latency benches.
+//!
+//! * `status` — the cheapest read path (request parse, dispatch
+//!   table, typed response, one frame each way);
+//! * `alloc→release` — the full admission round trip through the
+//!   cluster scheduler (quota check, placement, grant bookkeeping,
+//!   release + queue pump);
+//! * `job submit→wait` — the async-handle path for long operations
+//!   (registry insert, worker thread, job_wait rendezvous).
+//!
+//! Virtual time is free here — the numbers below are real host wall
+//! time for the middleware machinery itself.
+//!
+//! Run: `cargo bench --bench rpc_surface`
+
+use std::sync::Arc;
+
+use rc3e::hypervisor::Hypervisor;
+use rc3e::middleware::{Client, ManagementServer};
+use rc3e::testing::Bencher;
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::ids::FpgaId;
+
+fn calls_per_sec(median_s: f64) -> f64 {
+    if median_s > 0.0 {
+        1.0 / median_s
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let hello = client.hello().unwrap();
+    println!(
+        "rpc_surface: negotiated protocol {} (window [{}, {}])\n",
+        hello.proto, hello.proto_min, hello.proto_max
+    );
+    let user = client.add_user("bench").unwrap().user;
+
+    // -------------------------------------------------- status path
+    let r = Bencher::new(20, 200).run("v2 status (typed)", || {
+        client.status(FpgaId(0)).unwrap()
+    });
+    println!("{}\n    -> {:.0} calls/s", r.line(), calls_per_sec(r.median_s));
+
+    // ------------------------------------------- alloc→release path
+    let r = Bencher::new(5, 100).run("v2 alloc->release", || {
+        let lease = client.alloc_vfpga(user, None, None).unwrap();
+        client.release(lease.alloc).unwrap()
+    });
+    println!(
+        "{}\n    -> {:.0} cycles/s ({:.0} RPCs/s)",
+        r.line(),
+        calls_per_sec(r.median_s),
+        2.0 * calls_per_sec(r.median_s)
+    );
+
+    // ------------------------------------------ job handle overhead
+    // program_full against a non-physical lease fails fast — what is
+    // measured is the registry round trip (submit, worker, wait),
+    // not the device work.
+    let lease = client.alloc_vfpga(user, None, None).unwrap();
+    let r = Bencher::new(5, 50).run("v2 job submit->wait", || {
+        let job = client
+            .program_full(user, lease.alloc, None)
+            .unwrap()
+            .job;
+        client.job_wait(job, Some(10.0)).unwrap()
+    });
+    println!(
+        "{}\n    -> {:.0} jobs/s",
+        r.line(),
+        calls_per_sec(r.median_s)
+    );
+    client.release(lease.alloc).unwrap();
+
+    // Raw v1 envelope for comparison (same method, legacy shape).
+    let r = Bencher::new(20, 200).run("v1 status (raw call)", || {
+        client
+            .call(
+                "status",
+                rc3e::util::json::Json::obj(vec![(
+                    "fpga",
+                    rc3e::util::json::Json::from("fpga-0"),
+                )]),
+            )
+            .unwrap()
+    });
+    println!("{}\n    -> {:.0} calls/s", r.line(), calls_per_sec(r.median_s));
+}

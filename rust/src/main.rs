@@ -2,21 +2,27 @@
 //!
 //! Subcommands:
 //! * `serve`  — boot the cloud (management server + node agents) and
-//!   print the management address; Ctrl-C to stop.
-//! * `cli <method> [--param value ...]` — one middleware call against
-//!   a running server (`--addr host:port`).
+//!   print the management address; Ctrl-C to stop. `--state DIR`
+//!   persists the device DB + scheduler accounting there (quotas and
+//!   the usage ledger reload on restart).
+//! * `cli <method> [--param value ...]` — one raw middleware call
+//!   against a running server (`--addr host:port`); the protocol-1
+//!   escape hatch.
 //! * `demo` — self-contained end-to-end demo on an in-process cloud:
 //!   allocate → program → stream → report (no server needed).
-//! * `status|alloc|program|stream|release|migrate` — sugar over `cli`.
+//! * `status|alloc|program|stream|release|migrate|job|...` — typed
+//!   protocol-2 calls; errors print their machine-readable code.
 
 use std::sync::Arc;
 
-use rc3e::config::ClusterConfig;
+use rc3e::config::{ClusterConfig, ServiceModel};
 use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::middleware::api::{QuotaSetRequest, ReserveRequest};
 use rc3e::middleware::{Client, ManagementServer, NodeAgent};
+use rc3e::sched::RequestClass;
 use rc3e::util::cli::{Args, FlagSpec};
 use rc3e::util::clock::VirtualClock;
-use rc3e::util::ids::NodeId;
+use rc3e::util::ids::{AllocationId, FpgaId, JobId, NodeId, UserId};
 use rc3e::util::json::Json;
 
 fn flag_specs() -> Vec<FlagSpec> {
@@ -30,6 +36,11 @@ fn flag_specs() -> Vec<FlagSpec> {
             name: "config",
             takes_value: true,
             help: "cluster config JSON (default: paper testbed)",
+        },
+        FlagSpec {
+            name: "state",
+            takes_value: true,
+            help: "serve: directory for device DB + scheduler state",
         },
         FlagSpec {
             name: "user",
@@ -60,6 +71,31 @@ fn flag_specs() -> Vec<FlagSpec> {
             name: "name",
             takes_value: true,
             help: "user name",
+        },
+        FlagSpec {
+            name: "model",
+            takes_value: true,
+            help: "alloc: service model (raaas, baaas)",
+        },
+        FlagSpec {
+            name: "class",
+            takes_value: true,
+            help: "alloc: request class (interactive, normal, batch)",
+        },
+        FlagSpec {
+            name: "job",
+            takes_value: true,
+            help: "job id (job-N) for the job subcommand",
+        },
+        FlagSpec {
+            name: "wait",
+            takes_value: false,
+            help: "job: block until the job is terminal",
+        },
+        FlagSpec {
+            name: "cancel",
+            takes_value: false,
+            help: "job: cancel a running job",
         },
         FlagSpec {
             name: "timescale",
@@ -118,26 +154,19 @@ fn main() {
         "serve" => cmd_serve(&args),
         "demo" => cmd_demo(&args),
         "cli" => cmd_cli(&args),
-        "status" => forward(&args, "status", &[("fpga", "fpga")]),
-        "adduser" => forward(&args, "add_user", &[("name", "name")]),
-        "alloc" => forward(&args, "alloc_vfpga", &[("user", "user")]),
-        "program" => forward(
-            &args,
-            "program_core",
-            &[("user", "user"), ("alloc", "alloc"), ("core", "core")],
-        ),
+        "status" => cmd_status(&args),
+        "adduser" => cmd_adduser(&args),
+        "alloc" => cmd_alloc(&args),
+        "program" => cmd_program(&args),
         "stream" => cmd_stream(&args),
-        "release" => forward(&args, "release", &[("alloc", "alloc")]),
-        "migrate" => forward(
-            &args,
-            "migrate",
-            &[("user", "user"), ("alloc", "alloc")],
-        ),
-        "energy" => forward(&args, "energy", &[]),
-        "sched" => forward(&args, "sched_status", &[]),
+        "release" => cmd_release(&args),
+        "migrate" => cmd_migrate(&args),
+        "energy" => cmd_energy(&args),
+        "sched" => cmd_sched(&args),
         "usage" => cmd_usage(&args),
         "quota" => cmd_quota(&args),
         "reserve" => cmd_reserve(&args),
+        "job" => cmd_job(&args),
         _ => {
             print!("{}", usage());
             Ok(())
@@ -153,23 +182,25 @@ fn usage() -> String {
     let mut out = String::from(
         "rc3e — Reconfigurable Common Cloud Computing Environment\n\n\
          Subcommands:\n\
-         \x20 serve      boot management server + node agents\n\
+         \x20 serve      boot management server + node agents \
+         [--state DIR]\n\
          \x20 demo       in-process end-to-end demo\n\
          \x20 cli        raw middleware call: rc3e cli <method> [--flags]\n\
          \x20 adduser    --name <s>\n\
          \x20 status     --fpga fpga-N\n\
-         \x20 alloc      --user user-N\n\
+         \x20 alloc      --user user-N [--model raaas --class batch]\n\
          \x20 program    --user user-N --alloc alloc-N --core matmul16\n\
          \x20 stream     --user user-N --alloc alloc-N --core matmul16 \
          --mults 100000\n\
          \x20 release    --alloc alloc-N\n\
          \x20 migrate    --user user-N --alloc alloc-N\n\
          \x20 energy\n\
-         \x20 sched      scheduler queue/grant/reservation status\n\
+         \x20 sched      scheduler status + admission-wait histogram\n\
          \x20 quota      --user user-N [--max-vfpgas N --budget-s S \
          --weight W]\n\
          \x20 usage      per-tenant device-second + energy report\n\
-         \x20 reserve    --user user-N --regions N [--duration-s S]\n\n",
+         \x20 reserve    --user user-N --regions N [--duration-s S]\n\
+         \x20 job        --job job-N [--wait | --cancel]\n\n",
     );
     out.push_str(&rc3e::util::cli::usage("rc3e", "flags", &flag_specs()));
     out
@@ -205,6 +236,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         config.rpc_overhead_ms,
     )
     .map_err(|e| e.to_string())?;
+    if let Some(dir) = args.get("state") {
+        // Persist the device DB and the scheduler's quota/usage
+        // state side by side; a restarted management node reloads
+        // accounting from the same directory.
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("--state {}: {e}", dir.display()))?;
+        let db_path = dir.join("devices.json");
+        hv.db.lock().unwrap().save(&db_path)?;
+        server.scheduler().attach_persistence(&db_path)?;
+        eprintln!(
+            "state dir {} (device DB + scheduler accounting)",
+            dir.display()
+        );
+    }
     let mut agents = Vec::new();
     for (i, node) in config.nodes.iter().enumerate() {
         let agent = NodeAgent::spawn(Arc::clone(&hv), NodeId(i as u64), None)
@@ -232,45 +278,148 @@ fn connect(args: &Args) -> Result<Client, String> {
     Client::connect(addr)
 }
 
-/// Forward a subcommand to a middleware method, mapping flags to
-/// string params.
-fn forward(
-    args: &Args,
-    method: &str,
-    mapping: &[(&str, &str)],
-) -> Result<(), String> {
+// ------------------------------------------------ flag id parsing
+
+fn user_flag(args: &Args) -> Result<UserId, String> {
+    let s = args.get("user").ok_or("missing --user")?;
+    UserId::parse(s).ok_or_else(|| format!("bad --user '{s}'"))
+}
+
+fn alloc_flag(args: &Args) -> Result<AllocationId, String> {
+    let s = args.get("alloc").ok_or("missing --alloc")?;
+    AllocationId::parse(s).ok_or_else(|| format!("bad --alloc '{s}'"))
+}
+
+fn fpga_flag(args: &Args) -> Result<FpgaId, String> {
+    let s = args.get("fpga").ok_or("missing --fpga")?;
+    FpgaId::parse(s).ok_or_else(|| format!("bad --fpga '{s}'"))
+}
+
+fn job_flag(args: &Args) -> Result<JobId, String> {
+    let s = args.get("job").ok_or("missing --job")?;
+    JobId::parse(s).ok_or_else(|| format!("bad --job '{s}'"))
+}
+
+// --------------------------------------------- typed subcommands
+
+fn cmd_status(args: &Args) -> Result<(), String> {
+    let fpga = fpga_flag(args)?;
     let mut client = connect(args)?;
-    let mut params = Json::obj(vec![]);
-    for (flag, param) in mapping {
-        let v = args
-            .get(flag)
-            .ok_or_else(|| format!("missing --{flag}"))?;
-        params.set(param, Json::from(v));
-    }
-    let body = client.call(method, params)?;
-    println!("{}", body.to_pretty());
+    let resp = client.status(fpga).map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
+    Ok(())
+}
+
+fn cmd_adduser(args: &Args) -> Result<(), String> {
+    let name = args.get("name").ok_or("missing --name")?.to_string();
+    let mut client = connect(args)?;
+    let resp = client.add_user(&name).map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
+    Ok(())
+}
+
+fn cmd_alloc(args: &Args) -> Result<(), String> {
+    let user = user_flag(args)?;
+    let model = match args.get("model") {
+        Some(s) => Some(
+            ServiceModel::parse(s)
+                .ok_or_else(|| format!("bad --model '{s}'"))?,
+        ),
+        None => None,
+    };
+    let class = match args.get("class") {
+        Some(s) => Some(
+            RequestClass::parse(s)
+                .ok_or_else(|| format!("bad --class '{s}'"))?,
+        ),
+        None => None,
+    };
+    let mut client = connect(args)?;
+    let resp = client
+        .alloc_vfpga(user, model, class)
+        .map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
+    Ok(())
+}
+
+fn cmd_program(args: &Args) -> Result<(), String> {
+    let user = user_flag(args)?;
+    let alloc = alloc_flag(args)?;
+    let core = args.get("core").ok_or("missing --core")?.to_string();
+    let mut client = connect(args)?;
+    let resp = client
+        .program_core(user, alloc, &core)
+        .map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
     Ok(())
 }
 
 fn cmd_stream(args: &Args) -> Result<(), String> {
+    let user = user_flag(args)?;
+    let alloc = alloc_flag(args)?;
+    let core = args.get("core").ok_or("missing --core")?.to_string();
+    let mults =
+        args.get_u64("mults", 100_000).map_err(|e| e.to_string())?;
     let mut client = connect(args)?;
-    let mut params = Json::obj(vec![]);
-    for (flag, param) in
-        [("user", "user"), ("alloc", "alloc"), ("core", "core")]
-    {
-        let v = args
-            .get(flag)
-            .ok_or_else(|| format!("missing --{flag}"))?;
-        params.set(param, Json::from(v));
-    }
-    params.set(
-        "mults",
-        Json::from(
-            args.get_u64("mults", 100_000).map_err(|e| e.to_string())?,
-        ),
+    // Submit as a job, then wait — the CLI shows the handle so the
+    // run could also be watched from another terminal via `job`.
+    let job = client
+        .stream(user, alloc, &core, mults)
+        .map_err(|e| e.to_string())?
+        .job;
+    eprintln!("submitted {job}; waiting...");
+    let result =
+        client.job_wait_done(job).map_err(|e| e.to_string())?;
+    println!("{}", result.to_pretty());
+    Ok(())
+}
+
+fn cmd_release(args: &Args) -> Result<(), String> {
+    let alloc = alloc_flag(args)?;
+    let mut client = connect(args)?;
+    let resp = client.release(alloc).map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
+    Ok(())
+}
+
+fn cmd_migrate(args: &Args) -> Result<(), String> {
+    let user = user_flag(args)?;
+    let alloc = alloc_flag(args)?;
+    let mut client = connect(args)?;
+    let resp =
+        client.migrate(user, alloc).map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<(), String> {
+    let mut client = connect(args)?;
+    let resp = client.energy().map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
+    Ok(())
+}
+
+/// `rc3e sched` — queue snapshot plus the admission-wait histogram
+/// and queue-depth gauge served by the `monitor` RPC.
+fn cmd_sched(args: &Args) -> Result<(), String> {
+    let mut client = connect(args)?;
+    let status = client.sched_status().map_err(|e| e.to_string())?;
+    let mon = client.monitor().map_err(|e| e.to_string())?;
+    println!("{}", status.status.to_pretty());
+    let t = &mon.sched;
+    println!(
+        "queue depth {}, active grants {}",
+        t.queue_depth, t.active_grants
     );
-    let body = client.call("stream", params)?;
-    println!("{}", body.to_pretty());
+    println!(
+        "admission wait (virtual): n={} mean={:.1} ms p50<={:.1} ms \
+         p99<={:.1} ms max={:.1} ms",
+        t.wait.count,
+        t.wait.mean_ms,
+        t.wait.p50_ms,
+        t.wait.p99_ms,
+        t.wait.max_ms
+    );
     Ok(())
 }
 
@@ -278,7 +427,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
 /// — with any limit flag present this sets the quota, otherwise it
 /// reads it.
 fn cmd_quota(args: &Args) -> Result<(), String> {
-    let user = args.get("user").ok_or("missing --user")?.to_string();
+    let user = user_flag(args)?;
     let mut client = connect(args)?;
     let max_vfpgas = match args.get("max-vfpgas") {
         Some(v) => {
@@ -298,42 +447,70 @@ fn cmd_quota(args: &Args) -> Result<(), String> {
         }
         None => None,
     };
-    let body = if max_vfpgas.is_some() || budget_s.is_some() || weight.is_some()
+    let resp = if max_vfpgas.is_some() || budget_s.is_some() || weight.is_some()
     {
-        client.quota_set(&user, max_vfpgas, budget_s, weight)?
+        client.quota_set(&QuotaSetRequest {
+            user,
+            max_vfpgas,
+            budget_s,
+            weight,
+        })
     } else {
-        client.quota_get(&user)?
-    };
-    println!("{}", body.to_pretty());
+        client.quota_get(user)
+    }
+    .map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
     Ok(())
 }
 
 /// `rc3e usage` — print the per-tenant accounting table.
 fn cmd_usage(args: &Args) -> Result<(), String> {
     let mut client = connect(args)?;
-    let body = client.usage_report()?;
-    match body.get("table").as_str() {
-        Some(table) => print!("{table}"),
-        None => println!("{}", body.to_pretty()),
-    }
+    let resp = client.usage_report().map_err(|e| e.to_string())?;
+    print!("{}", resp.table);
     Ok(())
 }
 
 /// `rc3e reserve --user user-N --regions N [--duration-s S]`.
 fn cmd_reserve(args: &Args) -> Result<(), String> {
-    let user = args.get("user").ok_or("missing --user")?.to_string();
+    let user = user_flag(args)?;
     let regions = args
         .get("regions")
         .ok_or("missing --regions")?
         .parse::<u64>()
         .map_err(|e| format!("--regions: {e}"))?;
     let duration_s = match args.get("duration-s") {
-        Some(v) => v.parse::<f64>().map_err(|e| format!("--duration-s: {e}"))?,
-        None => 3600.0,
+        Some(v) => Some(
+            v.parse::<f64>().map_err(|e| format!("--duration-s: {e}"))?,
+        ),
+        None => None,
     };
     let mut client = connect(args)?;
-    let body = client.reserve(&user, regions, duration_s)?;
-    println!("{}", body.to_pretty());
+    let resp = client
+        .reserve(&ReserveRequest {
+            user,
+            regions,
+            start_s: None,
+            duration_s,
+        })
+        .map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
+    Ok(())
+}
+
+/// `rc3e job --job job-N [--wait | --cancel]`.
+fn cmd_job(args: &Args) -> Result<(), String> {
+    let job = job_flag(args)?;
+    let mut client = connect(args)?;
+    let body = if args.has("cancel") {
+        client.job_cancel(job)
+    } else if args.has("wait") {
+        client.job_wait(job, None)
+    } else {
+        client.job_status(job)
+    }
+    .map_err(|e| e.to_string())?;
+    println!("{}", body.to_json().to_pretty());
     Ok(())
 }
 
@@ -344,7 +521,7 @@ fn cmd_cli(args: &Args) -> Result<(), String> {
         .ok_or("usage: rc3e cli <method> [--user ... --alloc ...]")?;
     let mut client = connect(args)?;
     let mut params = Json::obj(vec![]);
-    for flag in ["user", "alloc", "fpga", "core", "name"] {
+    for flag in ["user", "alloc", "fpga", "core", "name", "job"] {
         if let Some(v) = args.get(flag) {
             params.set(flag, Json::from(v));
         }

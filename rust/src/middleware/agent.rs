@@ -4,15 +4,25 @@
 //! device-local operations (status queries, in a full deployment also
 //! configuration writes) through the agent over TCP — the paper's
 //! management-node → node hop over Gigabit Ethernet.
+//!
+//! The agent speaks the same typed, versioned envelopes as the
+//! management server ([`super::api`]): its two methods
+//! ([`Method::AgentHello`], [`Method::AgentStatus`]) dispatch through
+//! typed request/response structs, and protocol-1 callers keep the
+//! old string-error shape.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use super::proto::{read_frame, write_frame, Request, Response};
+use super::api::{
+    AgentHelloRequest, AgentHelloResponse, ApiError, Method,
+    StatusRequest, StatusResponse,
+};
+use super::proto::{read_frame, respond, write_frame, Request, Response};
 use crate::hypervisor::Hypervisor;
-use crate::util::ids::{FpgaId, NodeId};
+use crate::util::ids::NodeId;
 use crate::util::json::Json;
 
 /// A running node agent (owns its listener thread).
@@ -93,50 +103,46 @@ fn serve_conn(
         }
         let resp = match Request::from_json(&frame) {
             Err(e) => Response::error(&e),
-            Ok(req) => dispatch(&hv, node, &req),
+            Ok(req) => {
+                let proto = req.proto.unwrap_or(1);
+                let result = req.negotiate_proto().and_then(|_| {
+                    dispatch(&hv, node, &req.method, &req.params)
+                });
+                respond(proto, req.id, result)
+            }
         };
         write_frame(&mut stream, &resp.to_json())?;
     }
     Ok(())
 }
 
-fn dispatch(hv: &Hypervisor, node: NodeId, req: &Request) -> Response {
-    match req.method.as_str() {
-        "agent.hello" => Response::success(Json::obj(vec![
-            ("node", Json::from(node.to_string())),
-            ("version", Json::from(crate::VERSION)),
-        ])),
-        "agent.status" => {
-            let Ok(fpga_str) = req.params.str_field("fpga") else {
-                return Response::error("missing fpga");
-            };
-            let Some(fpga) = FpgaId::parse(fpga_str) else {
-                return Response::error("bad fpga id");
-            };
+fn dispatch(
+    hv: &Hypervisor,
+    node: NodeId,
+    method: &str,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    match Method::parse(method) {
+        Some(Method::AgentHello) => {
+            let _req = AgentHelloRequest::from_json(params)?;
+            Ok(AgentHelloResponse {
+                node,
+                version: crate::VERSION.to_string(),
+            }
+            .to_json())
+        }
+        Some(Method::AgentStatus) => {
+            let req = StatusRequest::from_json(params)?;
             // The agent performs the *local* status call (Table I's
             // 11 ms path); the management server adds the RPC charge.
-            match hv.status_local(fpga) {
-                Ok(st) => Response::success(Json::obj(vec![
-                    ("fpga", Json::from(st.fpga.to_string())),
-                    ("board", Json::from(st.board)),
-                    (
-                        "static_design",
-                        st.static_design
-                            .map(Json::from)
-                            .unwrap_or(Json::Null),
-                    ),
-                    ("regions_total", Json::from(st.regions_total)),
-                    (
-                        "regions_configured",
-                        Json::from(st.regions_configured),
-                    ),
-                    ("regions_clocked", Json::from(st.regions_clocked)),
-                    ("power_w", Json::from(st.power_w)),
-                ])),
-                Err(e) => Response::error(&e.to_string()),
-            }
+            let st =
+                hv.status_local(req.fpga).map_err(ApiError::from)?;
+            Ok(StatusResponse::from_status(&st).to_json())
         }
-        m => Response::error(&format!("agent: unknown method '{m}'")),
+        _ => Err(ApiError::new(
+            super::api::ErrorCode::UnknownMethod,
+            format!("agent: unknown method '{method}'"),
+        )),
     }
 }
 
@@ -145,6 +151,7 @@ mod tests {
     use super::*;
     use crate::middleware::client::Client;
     use crate::util::clock::VirtualClock;
+    use crate::util::ids::FpgaId;
 
     fn hv() -> Arc<Hypervisor> {
         Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap())
@@ -163,6 +170,20 @@ mod tests {
             .unwrap();
         assert_eq!(body.get("regions_total").as_u64(), Some(4));
         assert_eq!(body.get("board").as_str(), Some("vc707"));
+    }
+
+    #[test]
+    fn agent_serves_typed_status() {
+        let hv = hv();
+        let agent =
+            NodeAgent::spawn(Arc::clone(&hv), NodeId(0), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        let st = client.agent_status(FpgaId(0)).unwrap();
+        assert_eq!(st.regions_total, 4);
+        assert_eq!(st.board, "vc707");
+        let hello = client.agent_hello().unwrap();
+        assert_eq!(hello.node, NodeId(0));
+        assert_eq!(hello.version, crate::VERSION);
     }
 
     #[test]

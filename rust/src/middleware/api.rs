@@ -1,0 +1,2098 @@
+//! The typed, versioned middleware API (v2).
+//!
+//! The wire surface used to be a single stringly-typed `match` in
+//! [`super::server`]: every handler fished fields out of raw
+//! [`Json`] params and every failure collapsed into an opaque error
+//! string, so clients could not tell a retryable `no capacity` from a
+//! terminal `quota budget exhausted` without substring matching. This
+//! module is the typed boundary the multi-tenant literature asks the
+//! management API to be:
+//!
+//! * [`Method`] — the closed set of RPC methods; the server
+//!   dispatches through a table keyed on it.
+//! * One request + one response struct per method, each with
+//!   `to_json` / `from_json` over the in-repo [`Json`] value. Request
+//!   parsing is the *only* place wire fields are read; handlers and
+//!   the typed client work on structs.
+//! * [`ApiError`] — structured errors: a machine-readable
+//!   [`ErrorCode`] (mapped from [`SchedError`] / [`HypervisorError`]),
+//!   a human message, a `retryable` bit and an optional
+//!   `retry_after_s` hint, so clients can react programmatically
+//!   (retry on `quota_exceeded`, fail fast on `bad_lease`).
+//! * Protocol version negotiation: `hello` advertises the server's
+//!   `[PROTO_MIN, PROTO_MAX]` window and rejects clients whose range
+//!   does not overlap with [`ErrorCode::ProtocolMismatch`].
+//!
+//! Wire compatibility: requests without a `proto` field are treated
+//! as protocol 1 (the previous untyped surface) and keep their old
+//! response shapes — string errors, bare arrays, synchronous long
+//! operations — for exactly one version behind.
+
+use crate::config::ServiceModel;
+use crate::hypervisor::HypervisorError;
+use crate::rc2f::stream::StreamOutcome;
+use crate::sched::{RequestClass, SchedError};
+use crate::util::ids::{
+    AllocationId, FpgaId, JobId, NodeId, ReservationId, UserId, VfpgaId,
+};
+use crate::util::json::Json;
+
+/// Oldest protocol this server/client still speaks (the untyped v1
+/// surface).
+pub const PROTO_MIN: u32 = 1;
+/// Newest protocol this server/client speaks (the typed surface).
+pub const PROTO_MAX: u32 = 2;
+
+// ====================================================== error codes
+
+/// Machine-readable error category carried on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ErrorCode {
+    /// Malformed or missing request fields / unparsable ids.
+    BadRequest,
+    /// Method name not in [`Method`] (or not served by this peer).
+    UnknownMethod,
+    /// Client and server protocol windows do not overlap.
+    ProtocolMismatch,
+    /// No free capacity for the request right now (retryable).
+    NoCapacity,
+    /// Tenant at its concurrency quota (retryable after a release).
+    QuotaExceeded,
+    /// Tenant's device-second budget exhausted (terminal).
+    QuotaBudget,
+    /// Allocation unknown, not yours, or of the wrong kind.
+    BadLease,
+    UnknownDevice,
+    UnknownService,
+    UnknownCore,
+    UnknownJob,
+    UnknownReservation,
+    /// The request (or job) was cancelled before completion.
+    Cancelled,
+    /// Reserved: a lease preempted out from under an in-flight
+    /// operation. Not emitted yet — today that window surfaces as a
+    /// sanity/device failure; the scheduler's quiesce/pin follow-up
+    /// (ROADMAP) will report it with this code.
+    Preempted,
+    /// A wait ran out of time; the job keeps running (retryable).
+    Timeout,
+    /// Bitstream failed the sanity checker.
+    SanityRejected,
+    /// Simulated hardware / device-layer fault.
+    DeviceFault,
+    /// Anything the server cannot classify further.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Every code, for exhaustive tests and the protocol doc.
+    pub const ALL: [ErrorCode; 18] = [
+        ErrorCode::BadRequest,
+        ErrorCode::UnknownMethod,
+        ErrorCode::ProtocolMismatch,
+        ErrorCode::NoCapacity,
+        ErrorCode::QuotaExceeded,
+        ErrorCode::QuotaBudget,
+        ErrorCode::BadLease,
+        ErrorCode::UnknownDevice,
+        ErrorCode::UnknownService,
+        ErrorCode::UnknownCore,
+        ErrorCode::UnknownJob,
+        ErrorCode::UnknownReservation,
+        ErrorCode::Cancelled,
+        ErrorCode::Preempted,
+        ErrorCode::Timeout,
+        ErrorCode::SanityRejected,
+        ErrorCode::DeviceFault,
+        ErrorCode::Internal,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownMethod => "unknown_method",
+            ErrorCode::ProtocolMismatch => "protocol_mismatch",
+            ErrorCode::NoCapacity => "no_capacity",
+            ErrorCode::QuotaExceeded => "quota_exceeded",
+            ErrorCode::QuotaBudget => "quota_budget",
+            ErrorCode::BadLease => "bad_lease",
+            ErrorCode::UnknownDevice => "unknown_device",
+            ErrorCode::UnknownService => "unknown_service",
+            ErrorCode::UnknownCore => "unknown_core",
+            ErrorCode::UnknownJob => "unknown_job",
+            ErrorCode::UnknownReservation => "unknown_reservation",
+            ErrorCode::Cancelled => "cancelled",
+            ErrorCode::Preempted => "preempted",
+            ErrorCode::Timeout => "timeout",
+            ErrorCode::SanityRejected => "sanity_rejected",
+            ErrorCode::DeviceFault => "device_fault",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
+    /// Whether a client may retry the same request and reasonably
+    /// expect a different outcome.
+    pub fn retryable(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::NoCapacity
+                | ErrorCode::QuotaExceeded
+                | ErrorCode::Timeout
+        )
+    }
+
+    /// Suggested client backoff before retrying, where one applies.
+    fn default_retry_after_s(self) -> Option<f64> {
+        match self {
+            ErrorCode::NoCapacity => Some(1.0),
+            ErrorCode::QuotaExceeded => Some(5.0),
+            _ => None,
+        }
+    }
+}
+
+/// A structured API error: what went wrong, whether retrying can
+/// help, and how long to back off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+    pub retryable: bool,
+    pub retry_after_s: Option<f64>,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError {
+            code,
+            message: message.into(),
+            retryable: code.retryable(),
+            retry_after_s: code.default_retry_after_s(),
+        }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::Internal, message)
+    }
+
+    pub fn unknown_method(method: &str) -> ApiError {
+        ApiError::new(
+            ErrorCode::UnknownMethod,
+            format!("unknown method '{method}'"),
+        )
+    }
+
+    pub fn protocol_mismatch(
+        client_min: u32,
+        client_max: u32,
+    ) -> ApiError {
+        ApiError::new(
+            ErrorCode::ProtocolMismatch,
+            format!(
+                "client speaks protocols [{client_min}, {client_max}], \
+                 server speaks [{PROTO_MIN}, {PROTO_MAX}]"
+            ),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::from(self.code.name())),
+            ("message", Json::from(self.message.as_str())),
+            ("retryable", Json::from(self.retryable)),
+            (
+                "retry_after_s",
+                match self.retry_after_s {
+                    Some(s) => Json::from(s),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ApiError, String> {
+        let code = v
+            .str_field("code")
+            .ok()
+            .and_then(ErrorCode::parse)
+            .ok_or("error object missing/unknown 'code'")?;
+        Ok(ApiError {
+            code,
+            message: v.str_field("message").unwrap_or("").to_string(),
+            retryable: v
+                .get("retryable")
+                .as_bool()
+                .unwrap_or_else(|| code.retryable()),
+            retry_after_s: v.get("retry_after_s").as_f64(),
+        })
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.message)
+    }
+}
+
+impl From<&SchedError> for ApiError {
+    fn from(e: &SchedError) -> ApiError {
+        let code = match e {
+            SchedError::NoCapacity => ErrorCode::NoCapacity,
+            SchedError::QuotaBudget(_) => ErrorCode::QuotaBudget,
+            SchedError::QuotaConcurrency(_) => ErrorCode::QuotaExceeded,
+            SchedError::Hypervisor(_) => ErrorCode::Internal,
+            SchedError::UnknownGrant(_) => ErrorCode::BadLease,
+            SchedError::Cancelled => ErrorCode::Cancelled,
+            SchedError::UnknownReservation(_) => {
+                ErrorCode::UnknownReservation
+            }
+        };
+        ApiError::new(code, e.to_string())
+    }
+}
+
+impl From<SchedError> for ApiError {
+    fn from(e: SchedError) -> ApiError {
+        ApiError::from(&e)
+    }
+}
+
+impl From<&HypervisorError> for ApiError {
+    fn from(e: &HypervisorError) -> ApiError {
+        let code = match e {
+            HypervisorError::NoCapacity => ErrorCode::NoCapacity,
+            HypervisorError::Db(_) => ErrorCode::Internal,
+            HypervisorError::Device(_) => ErrorCode::DeviceFault,
+            HypervisorError::Sanity(_) => ErrorCode::SanityRejected,
+            HypervisorError::BadAllocation(_) => ErrorCode::BadLease,
+            HypervisorError::WrongKind(_) => ErrorCode::BadLease,
+            HypervisorError::UnknownDevice(_) => ErrorCode::UnknownDevice,
+            HypervisorError::UnknownService(_) => {
+                ErrorCode::UnknownService
+            }
+            HypervisorError::Sched(_) => ErrorCode::Internal,
+        };
+        ApiError::new(code, e.to_string())
+    }
+}
+
+impl From<HypervisorError> for ApiError {
+    fn from(e: HypervisorError) -> ApiError {
+        ApiError::from(&e)
+    }
+}
+
+// ========================================================== methods
+
+/// The closed set of RPC methods across the management server and the
+/// node agents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Method {
+    Hello,
+    AddUser,
+    Status,
+    AllocVfpga,
+    AllocPhysical,
+    Release,
+    ProgramCore,
+    Stream,
+    ProgramFull,
+    Migrate,
+    Services,
+    InvokeService,
+    Monitor,
+    Workload,
+    SchedStatus,
+    QuotaSet,
+    QuotaGet,
+    UsageReport,
+    Reserve,
+    CancelReservation,
+    Energy,
+    DbDump,
+    Cores,
+    JobStatus,
+    JobWait,
+    JobCancel,
+    AgentHello,
+    AgentStatus,
+}
+
+impl Method {
+    /// Every method, for dispatch-completeness tests and the docs.
+    pub const ALL: [Method; 28] = [
+        Method::Hello,
+        Method::AddUser,
+        Method::Status,
+        Method::AllocVfpga,
+        Method::AllocPhysical,
+        Method::Release,
+        Method::ProgramCore,
+        Method::Stream,
+        Method::ProgramFull,
+        Method::Migrate,
+        Method::Services,
+        Method::InvokeService,
+        Method::Monitor,
+        Method::Workload,
+        Method::SchedStatus,
+        Method::QuotaSet,
+        Method::QuotaGet,
+        Method::UsageReport,
+        Method::Reserve,
+        Method::CancelReservation,
+        Method::Energy,
+        Method::DbDump,
+        Method::Cores,
+        Method::JobStatus,
+        Method::JobWait,
+        Method::JobCancel,
+        Method::AgentHello,
+        Method::AgentStatus,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Hello => "hello",
+            Method::AddUser => "add_user",
+            Method::Status => "status",
+            Method::AllocVfpga => "alloc_vfpga",
+            Method::AllocPhysical => "alloc_physical",
+            Method::Release => "release",
+            Method::ProgramCore => "program_core",
+            Method::Stream => "stream",
+            Method::ProgramFull => "program_full",
+            Method::Migrate => "migrate",
+            Method::Services => "services",
+            Method::InvokeService => "invoke_service",
+            Method::Monitor => "monitor",
+            Method::Workload => "workload",
+            Method::SchedStatus => "sched_status",
+            Method::QuotaSet => "quota_set",
+            Method::QuotaGet => "quota_get",
+            Method::UsageReport => "usage_report",
+            Method::Reserve => "reserve",
+            Method::CancelReservation => "cancel_reservation",
+            Method::Energy => "energy",
+            Method::DbDump => "db_dump",
+            Method::Cores => "cores",
+            Method::JobStatus => "job_status",
+            Method::JobWait => "job_wait",
+            Method::JobCancel => "job_cancel",
+            Method::AgentHello => "agent.hello",
+            Method::AgentStatus => "agent.status",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Methods served by the node agent (the rest belong to the
+    /// management server).
+    pub fn is_agent(self) -> bool {
+        matches!(self, Method::AgentHello | Method::AgentStatus)
+    }
+}
+
+// ================================================== field accessors
+//
+// The only place wire params are read. Request `from_json` methods
+// use these; everything downstream is typed.
+
+fn want_str(p: &Json, key: &str) -> Result<String, ApiError> {
+    p.get(key)
+        .as_str()
+        .map(String::from)
+        .ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "missing/invalid string field '{key}'"
+            ))
+        })
+}
+
+fn want_u64(p: &Json, key: &str) -> Result<u64, ApiError> {
+    p.get(key).as_u64().ok_or_else(|| {
+        ApiError::bad_request(format!(
+            "missing/invalid u64 field '{key}'"
+        ))
+    })
+}
+
+fn want_f64(p: &Json, key: &str) -> Result<f64, ApiError> {
+    p.get(key).as_f64().ok_or_else(|| {
+        ApiError::bad_request(format!(
+            "missing/invalid number field '{key}'"
+        ))
+    })
+}
+
+fn want_bool(p: &Json, key: &str) -> Result<bool, ApiError> {
+    p.get(key).as_bool().ok_or_else(|| {
+        ApiError::bad_request(format!(
+            "missing/invalid bool field '{key}'"
+        ))
+    })
+}
+
+fn want_id<T>(
+    p: &Json,
+    key: &str,
+    parse: impl Fn(&str) -> Option<T>,
+) -> Result<T, ApiError> {
+    let s = want_str(p, key)?;
+    parse(&s).ok_or_else(|| {
+        ApiError::bad_request(format!("bad id in field '{key}': '{s}'"))
+    })
+}
+
+fn opt_str(p: &Json, key: &str) -> Option<String> {
+    p.get(key).as_str().map(String::from)
+}
+
+fn opt_u64(p: &Json, key: &str) -> Option<u64> {
+    p.get(key).as_u64()
+}
+
+fn opt_f64(p: &Json, key: &str) -> Option<f64> {
+    p.get(key).as_f64()
+}
+
+fn json_or_null_f64(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::from(x),
+        None => Json::Null,
+    }
+}
+
+// ============================================ hello / negotiation
+
+/// `hello` — version negotiation. A v1 client sends no protocol
+/// fields at all, which reads as the window `[1, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloRequest {
+    pub proto_min: u32,
+    pub proto_max: u32,
+}
+
+impl HelloRequest {
+    /// The window this crate's typed client advertises.
+    pub fn ours() -> HelloRequest {
+        HelloRequest {
+            proto_min: PROTO_MIN,
+            proto_max: PROTO_MAX,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("proto_min", Json::from(u64::from(self.proto_min))),
+            ("proto_max", Json::from(u64::from(self.proto_max))),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<HelloRequest, ApiError> {
+        let proto_min = opt_u64(p, "proto_min").unwrap_or(1) as u32;
+        let proto_max =
+            opt_u64(p, "proto_max").unwrap_or(u64::from(proto_min)) as u32;
+        if proto_max < proto_min {
+            return Err(ApiError::bad_request(format!(
+                "proto window [{proto_min}, {proto_max}] is inverted"
+            )));
+        }
+        Ok(HelloRequest {
+            proto_min,
+            proto_max,
+        })
+    }
+
+    /// The protocol both sides should use, or `None` when the windows
+    /// do not overlap.
+    pub fn negotiate(&self) -> Option<u32> {
+        let lo = self.proto_min.max(PROTO_MIN);
+        let hi = self.proto_max.min(PROTO_MAX);
+        (lo <= hi).then_some(hi)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloResponse {
+    pub version: String,
+    pub service: String,
+    pub proto_min: u32,
+    pub proto_max: u32,
+    /// The protocol the server chose for this client.
+    pub proto: u32,
+}
+
+impl HelloResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::from(self.version.as_str())),
+            ("service", Json::from(self.service.as_str())),
+            ("proto_min", Json::from(u64::from(self.proto_min))),
+            ("proto_max", Json::from(u64::from(self.proto_max))),
+            ("proto", Json::from(u64::from(self.proto))),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<HelloResponse, ApiError> {
+        Ok(HelloResponse {
+            version: want_str(p, "version")?,
+            service: want_str(p, "service")?,
+            proto_min: opt_u64(p, "proto_min").unwrap_or(1) as u32,
+            proto_max: opt_u64(p, "proto_max").unwrap_or(1) as u32,
+            proto: opt_u64(p, "proto").unwrap_or(1) as u32,
+        })
+    }
+}
+
+// ========================================================= add_user
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AddUserRequest {
+    pub name: String,
+}
+
+impl AddUserRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("name", Json::from(self.name.as_str()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<AddUserRequest, ApiError> {
+        Ok(AddUserRequest {
+            name: want_str(p, "name")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AddUserResponse {
+    pub user: UserId,
+}
+
+impl AddUserResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("user", Json::from(self.user.to_string()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<AddUserResponse, ApiError> {
+        Ok(AddUserResponse {
+            user: want_id(p, "user", UserId::parse)?,
+        })
+    }
+}
+
+// =========================================================== status
+
+/// `status` / `agent.status` — one device's live state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatusRequest {
+    pub fpga: FpgaId,
+}
+
+impl StatusRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("fpga", Json::from(self.fpga.to_string()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<StatusRequest, ApiError> {
+        Ok(StatusRequest {
+            fpga: want_id(p, "fpga", FpgaId::parse)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatusResponse {
+    pub fpga: FpgaId,
+    pub board: String,
+    pub static_design: Option<String>,
+    pub regions_total: u64,
+    pub regions_configured: u64,
+    pub regions_clocked: u64,
+    pub power_w: f64,
+}
+
+impl StatusResponse {
+    pub fn from_status(st: &crate::fpga::DeviceStatus) -> StatusResponse {
+        StatusResponse {
+            fpga: st.fpga,
+            board: st.board.to_string(),
+            static_design: st.static_design.clone(),
+            regions_total: st.regions_total as u64,
+            regions_configured: st.regions_configured as u64,
+            regions_clocked: st.regions_clocked as u64,
+            power_w: st.power_w,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fpga", Json::from(self.fpga.to_string())),
+            ("board", Json::from(self.board.as_str())),
+            (
+                "static_design",
+                match &self.static_design {
+                    Some(s) => Json::from(s.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            ("regions_total", Json::from(self.regions_total)),
+            (
+                "regions_configured",
+                Json::from(self.regions_configured),
+            ),
+            ("regions_clocked", Json::from(self.regions_clocked)),
+            ("power_w", Json::from(self.power_w)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<StatusResponse, ApiError> {
+        Ok(StatusResponse {
+            fpga: want_id(p, "fpga", FpgaId::parse)?,
+            board: want_str(p, "board")?,
+            static_design: opt_str(p, "static_design"),
+            regions_total: want_u64(p, "regions_total")?,
+            regions_configured: want_u64(p, "regions_configured")?,
+            regions_clocked: want_u64(p, "regions_clocked")?,
+            power_w: want_f64(p, "power_w")?,
+        })
+    }
+}
+
+// ====================================================== allocations
+
+/// `alloc_vfpga`. Absent `model`/`class` take the server defaults
+/// (RAaaS / interactive); present-but-unparsable values are errors so
+/// a typo cannot silently escalate a batch request to interactive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocVfpgaRequest {
+    pub user: UserId,
+    pub model: Option<ServiceModel>,
+    pub class: Option<RequestClass>,
+}
+
+impl AllocVfpgaRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j =
+            Json::obj(vec![("user", Json::from(self.user.to_string()))]);
+        if let Some(m) = self.model {
+            j.set("model", Json::from(m.name()));
+        }
+        if let Some(c) = self.class {
+            j.set("class", Json::from(c.name()));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<AllocVfpgaRequest, ApiError> {
+        let model = match opt_str(p, "model") {
+            Some(s) => Some(ServiceModel::parse(&s).ok_or_else(|| {
+                ApiError::bad_request(format!("unknown model '{s}'"))
+            })?),
+            None => None,
+        };
+        let class = match opt_str(p, "class") {
+            Some(s) => Some(RequestClass::parse(&s).ok_or_else(|| {
+                ApiError::bad_request(format!("unknown class '{s}'"))
+            })?),
+            None => None,
+        };
+        Ok(AllocVfpgaRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            model,
+            class,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocVfpgaResponse {
+    pub alloc: AllocationId,
+    pub vfpga: VfpgaId,
+    pub fpga: FpgaId,
+    pub node: NodeId,
+    pub wait_ms: f64,
+}
+
+impl AllocVfpgaResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("alloc", Json::from(self.alloc.to_string())),
+            ("vfpga", Json::from(self.vfpga.to_string())),
+            ("fpga", Json::from(self.fpga.to_string())),
+            ("node", Json::from(self.node.to_string())),
+            ("wait_ms", Json::from(self.wait_ms)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<AllocVfpgaResponse, ApiError> {
+        Ok(AllocVfpgaResponse {
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+            vfpga: want_id(p, "vfpga", VfpgaId::parse)?,
+            fpga: want_id(p, "fpga", FpgaId::parse)?,
+            node: want_id(p, "node", NodeId::parse)?,
+            wait_ms: want_f64(p, "wait_ms")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocPhysicalRequest {
+    pub user: UserId,
+}
+
+impl AllocPhysicalRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("user", Json::from(self.user.to_string()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<AllocPhysicalRequest, ApiError> {
+        Ok(AllocPhysicalRequest {
+            user: want_id(p, "user", UserId::parse)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocPhysicalResponse {
+    pub alloc: AllocationId,
+    pub fpga: FpgaId,
+    pub node: NodeId,
+}
+
+impl AllocPhysicalResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("alloc", Json::from(self.alloc.to_string())),
+            ("fpga", Json::from(self.fpga.to_string())),
+            ("node", Json::from(self.node.to_string())),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<AllocPhysicalResponse, ApiError> {
+        Ok(AllocPhysicalResponse {
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+            fpga: want_id(p, "fpga", FpgaId::parse)?,
+            node: want_id(p, "node", NodeId::parse)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReleaseRequest {
+    pub alloc: AllocationId,
+}
+
+impl ReleaseRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("alloc", Json::from(self.alloc.to_string()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<ReleaseRequest, ApiError> {
+        Ok(ReleaseRequest {
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReleaseResponse {
+    pub released: bool,
+}
+
+impl ReleaseResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("released", Json::from(self.released))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<ReleaseResponse, ApiError> {
+        Ok(ReleaseResponse {
+            released: want_bool(p, "released")?,
+        })
+    }
+}
+
+// ====================================================== programming
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramCoreRequest {
+    pub user: UserId,
+    pub alloc: AllocationId,
+    pub core: String,
+}
+
+impl ProgramCoreRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("user", Json::from(self.user.to_string())),
+            ("alloc", Json::from(self.alloc.to_string())),
+            ("core", Json::from(self.core.as_str())),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<ProgramCoreRequest, ApiError> {
+        Ok(ProgramCoreRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+            core: want_str(p, "core")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramCoreResponse {
+    pub programmed: String,
+    pub pr_ms: f64,
+}
+
+impl ProgramCoreResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("programmed", Json::from(self.programmed.as_str())),
+            ("pr_ms", Json::from(self.pr_ms)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<ProgramCoreResponse, ApiError> {
+        Ok(ProgramCoreResponse {
+            programmed: want_str(p, "programmed")?,
+            pr_ms: want_f64(p, "pr_ms")?,
+        })
+    }
+}
+
+/// `program_full` — RSaaS full-bitstream configuration of an
+/// exclusively held device. Long-running: protocol 2 returns a job
+/// handle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramFullRequest {
+    pub user: UserId,
+    pub alloc: AllocationId,
+    pub name: Option<String>,
+}
+
+impl ProgramFullRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("user", Json::from(self.user.to_string())),
+            ("alloc", Json::from(self.alloc.to_string())),
+        ]);
+        if let Some(n) = &self.name {
+            j.set("name", Json::from(n.as_str()));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<ProgramFullRequest, ApiError> {
+        Ok(ProgramFullRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+            name: opt_str(p, "name"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramFullResponse {
+    pub programmed: String,
+    pub config_s: f64,
+}
+
+impl ProgramFullResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("programmed", Json::from(self.programmed.as_str())),
+            ("config_s", Json::from(self.config_s)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<ProgramFullResponse, ApiError> {
+        Ok(ProgramFullResponse {
+            programmed: want_str(p, "programmed")?,
+            config_s: want_f64(p, "config_s")?,
+        })
+    }
+}
+
+// ======================================================== streaming
+
+/// `stream` — stream a workload through a programmed core.
+/// Long-running: protocol 2 returns a job handle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamRequest {
+    pub user: UserId,
+    pub alloc: AllocationId,
+    pub core: String,
+    pub mults: u64,
+}
+
+impl StreamRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("user", Json::from(self.user.to_string())),
+            ("alloc", Json::from(self.alloc.to_string())),
+            ("core", Json::from(self.core.as_str())),
+            ("mults", Json::from(self.mults)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<StreamRequest, ApiError> {
+        Ok(StreamRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+            core: want_str(p, "core")?,
+            mults: want_u64(p, "mults")?,
+        })
+    }
+}
+
+/// `invoke_service` — BAaaS invocation by service name. Long-running:
+/// protocol 2 returns a job handle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InvokeServiceRequest {
+    pub user: UserId,
+    pub service: String,
+    pub mults: u64,
+}
+
+impl InvokeServiceRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("user", Json::from(self.user.to_string())),
+            ("service", Json::from(self.service.as_str())),
+            ("mults", Json::from(self.mults)),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<InvokeServiceRequest, ApiError> {
+        Ok(InvokeServiceRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            service: want_str(p, "service")?,
+            mults: want_u64(p, "mults")?,
+        })
+    }
+}
+
+/// A completed stream's outcome (shared by `stream` and
+/// `invoke_service`, synchronous and job results alike).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamOutcomeBody {
+    pub artifact: String,
+    pub mults: u64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+    pub virtual_stream_s: f64,
+    pub virtual_total_s: f64,
+    pub virtual_mbps: f64,
+    pub wall_s: f64,
+    pub wall_mbps: f64,
+    pub checksum: f64,
+    pub validation_failures: u64,
+}
+
+impl StreamOutcomeBody {
+    pub fn from_outcome(out: &StreamOutcome) -> StreamOutcomeBody {
+        StreamOutcomeBody {
+            artifact: out.artifact.clone(),
+            mults: out.mults,
+            input_bytes: out.input_bytes,
+            output_bytes: out.output_bytes,
+            virtual_stream_s: out.virtual_stream.as_secs_f64(),
+            virtual_total_s: out.virtual_total.as_secs_f64(),
+            virtual_mbps: out.virtual_mbps(),
+            wall_s: out.wall_secs,
+            wall_mbps: out.wall_mbps(),
+            checksum: out.checksum,
+            validation_failures: out.validation_failures,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifact", Json::from(self.artifact.as_str())),
+            ("mults", Json::from(self.mults)),
+            ("input_bytes", Json::from(self.input_bytes)),
+            ("output_bytes", Json::from(self.output_bytes)),
+            ("virtual_stream_s", Json::from(self.virtual_stream_s)),
+            ("virtual_total_s", Json::from(self.virtual_total_s)),
+            ("virtual_mbps", Json::from(self.virtual_mbps)),
+            ("wall_s", Json::from(self.wall_s)),
+            ("wall_mbps", Json::from(self.wall_mbps)),
+            ("checksum", Json::from(self.checksum)),
+            (
+                "validation_failures",
+                Json::from(self.validation_failures),
+            ),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<StreamOutcomeBody, ApiError> {
+        Ok(StreamOutcomeBody {
+            artifact: want_str(p, "artifact")?,
+            mults: want_u64(p, "mults")?,
+            input_bytes: want_u64(p, "input_bytes")?,
+            output_bytes: want_u64(p, "output_bytes")?,
+            virtual_stream_s: want_f64(p, "virtual_stream_s")?,
+            virtual_total_s: want_f64(p, "virtual_total_s")?,
+            virtual_mbps: want_f64(p, "virtual_mbps")?,
+            wall_s: want_f64(p, "wall_s")?,
+            wall_mbps: want_f64(p, "wall_mbps")?,
+            checksum: want_f64(p, "checksum")?,
+            validation_failures: want_u64(p, "validation_failures")?,
+        })
+    }
+}
+
+// ======================================================== migration
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrateRequest {
+    pub user: UserId,
+    pub alloc: AllocationId,
+}
+
+impl MigrateRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("user", Json::from(self.user.to_string())),
+            ("alloc", Json::from(self.alloc.to_string())),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<MigrateRequest, ApiError> {
+        Ok(MigrateRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrateResponse {
+    pub from: VfpgaId,
+    pub to: VfpgaId,
+    pub cross_device: bool,
+    pub downtime_ms: f64,
+}
+
+impl MigrateResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("from", Json::from(self.from.to_string())),
+            ("to", Json::from(self.to.to_string())),
+            ("cross_device", Json::from(self.cross_device)),
+            ("downtime_ms", Json::from(self.downtime_ms)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<MigrateResponse, ApiError> {
+        Ok(MigrateResponse {
+            from: want_id(p, "from", VfpgaId::parse)?,
+            to: want_id(p, "to", VfpgaId::parse)?,
+            cross_device: want_bool(p, "cross_device")?,
+            downtime_ms: want_f64(p, "downtime_ms")?,
+        })
+    }
+}
+
+// =============================================== catalogue queries
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServicesRequest;
+
+impl ServicesRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<ServicesRequest, ApiError> {
+        Ok(ServicesRequest)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServicesResponse {
+    pub services: Vec<String>,
+}
+
+impl ServicesResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "services",
+            Json::Arr(
+                self.services.iter().cloned().map(Json::from).collect(),
+            ),
+        )])
+    }
+
+    /// Protocol-1 shape: the bare array.
+    pub fn to_legacy_json(&self) -> Json {
+        Json::Arr(
+            self.services.iter().cloned().map(Json::from).collect(),
+        )
+    }
+
+    pub fn from_json(p: &Json) -> Result<ServicesResponse, ApiError> {
+        let arr = p.get("services").as_arr().ok_or_else(|| {
+            ApiError::bad_request("missing array field 'services'")
+        })?;
+        Ok(ServicesResponse {
+            services: arr
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoresRequest;
+
+impl CoresRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<CoresRequest, ApiError> {
+        Ok(CoresRequest)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoresResponse {
+    pub cores: Vec<String>,
+}
+
+impl CoresResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "cores",
+            Json::Arr(
+                self.cores.iter().cloned().map(Json::from).collect(),
+            ),
+        )])
+    }
+
+    /// Protocol-1 shape: the bare array.
+    pub fn to_legacy_json(&self) -> Json {
+        Json::Arr(self.cores.iter().cloned().map(Json::from).collect())
+    }
+
+    pub fn from_json(p: &Json) -> Result<CoresResponse, ApiError> {
+        let arr = p.get("cores").as_arr().ok_or_else(|| {
+            ApiError::bad_request("missing array field 'cores'")
+        })?;
+        Ok(CoresResponse {
+            cores: arr
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+        })
+    }
+}
+
+// ======================================================= monitoring
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorRequest;
+
+impl MonitorRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<MonitorRequest, ApiError> {
+        Ok(MonitorRequest)
+    }
+}
+
+/// Summary of the `sched.wait` latency histogram (virtual ms).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WaitStats {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl WaitStats {
+    pub fn from_histogram(h: &crate::metrics::Histogram) -> WaitStats {
+        WaitStats {
+            count: h.count(),
+            mean_ms: h.mean_us() / 1e3,
+            p50_ms: h.quantile_us(0.5) as f64 / 1e3,
+            p99_ms: h.quantile_us(0.99) as f64 / 1e3,
+            max_ms: h.max_us() as f64 / 1e3,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count)),
+            ("mean_ms", Json::from(self.mean_ms)),
+            ("p50_ms", Json::from(self.p50_ms)),
+            ("p99_ms", Json::from(self.p99_ms)),
+            ("max_ms", Json::from(self.max_ms)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<WaitStats, ApiError> {
+        Ok(WaitStats {
+            count: want_u64(p, "count")?,
+            mean_ms: want_f64(p, "mean_ms")?,
+            p50_ms: want_f64(p, "p50_ms")?,
+            p99_ms: want_f64(p, "p99_ms")?,
+            max_ms: want_f64(p, "max_ms")?,
+        })
+    }
+}
+
+/// Scheduler telemetry block in the `monitor` response (ROADMAP item:
+/// the admission-wait histogram and queue-depth gauge, exposed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedTelemetry {
+    pub queue_depth: i64,
+    pub active_grants: i64,
+    pub wait: WaitStats,
+}
+
+impl SchedTelemetry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_depth", Json::from(self.queue_depth)),
+            ("active_grants", Json::from(self.active_grants)),
+            ("wait", self.wait.to_json()),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<SchedTelemetry, ApiError> {
+        let depth = p.get("queue_depth").as_f64().ok_or_else(|| {
+            ApiError::bad_request("missing field 'queue_depth'")
+        })?;
+        let grants = p.get("active_grants").as_f64().ok_or_else(|| {
+            ApiError::bad_request("missing field 'active_grants'")
+        })?;
+        Ok(SchedTelemetry {
+            queue_depth: depth as i64,
+            active_grants: grants as i64,
+            wait: WaitStats::from_json(p.get("wait"))?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorResponse {
+    /// Per-device summaries as rendered by [`crate::hypervisor::Monitor`].
+    pub devices: Json,
+    pub cloud_utilization: f64,
+    pub sched: SchedTelemetry,
+}
+
+impl MonitorResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("devices", self.devices.clone()),
+            (
+                "cloud_utilization",
+                Json::from(self.cloud_utilization),
+            ),
+            ("sched", self.sched.to_json()),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<MonitorResponse, ApiError> {
+        Ok(MonitorResponse {
+            devices: p.get("devices").clone(),
+            cloud_utilization: want_f64(p, "cloud_utilization")?,
+            sched: SchedTelemetry::from_json(p.get("sched"))?,
+        })
+    }
+}
+
+// ========================================================= workload
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadRequest {
+    pub rate: Option<f64>,
+    pub hold_s: Option<f64>,
+    pub sessions: Option<u64>,
+    pub seed: Option<u64>,
+}
+
+impl WorkloadRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![]);
+        if let Some(r) = self.rate {
+            j.set("rate", Json::from(r));
+        }
+        if let Some(h) = self.hold_s {
+            j.set("hold_s", Json::from(h));
+        }
+        if let Some(s) = self.sessions {
+            j.set("sessions", Json::from(s));
+        }
+        if let Some(s) = self.seed {
+            j.set("seed", Json::from(s));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<WorkloadRequest, ApiError> {
+        Ok(WorkloadRequest {
+            rate: opt_f64(p, "rate"),
+            hold_s: opt_f64(p, "hold_s"),
+            sessions: opt_u64(p, "sessions"),
+            seed: opt_u64(p, "seed"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadResponse {
+    pub served: u64,
+    pub rejected: u64,
+    pub admission_rate: f64,
+    pub mean_setup_ms: f64,
+    pub mean_utilization: f64,
+    pub makespan_s: f64,
+    pub energy_j: f64,
+}
+
+impl WorkloadResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("served", Json::from(self.served)),
+            ("rejected", Json::from(self.rejected)),
+            ("admission_rate", Json::from(self.admission_rate)),
+            ("mean_setup_ms", Json::from(self.mean_setup_ms)),
+            (
+                "mean_utilization",
+                Json::from(self.mean_utilization),
+            ),
+            ("makespan_s", Json::from(self.makespan_s)),
+            ("energy_j", Json::from(self.energy_j)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<WorkloadResponse, ApiError> {
+        Ok(WorkloadResponse {
+            served: want_u64(p, "served")?,
+            rejected: want_u64(p, "rejected")?,
+            admission_rate: want_f64(p, "admission_rate")?,
+            mean_setup_ms: want_f64(p, "mean_setup_ms")?,
+            mean_utilization: want_f64(p, "mean_utilization")?,
+            makespan_s: want_f64(p, "makespan_s")?,
+            energy_j: want_f64(p, "energy_j")?,
+        })
+    }
+}
+
+// ================================================== scheduler admin
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedStatusRequest;
+
+impl SchedStatusRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<SchedStatusRequest, ApiError> {
+        Ok(SchedStatusRequest)
+    }
+}
+
+/// The scheduler's queue/grant/reservation snapshot. The payload is
+/// the document [`crate::sched::Scheduler::status_json`] renders; the
+/// struct carries it opaquely so the shape stays owned by the
+/// scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedStatusResponse {
+    pub status: Json,
+}
+
+impl SchedStatusResponse {
+    pub fn to_json(&self) -> Json {
+        self.status.clone()
+    }
+
+    pub fn from_json(p: &Json) -> Result<SchedStatusResponse, ApiError> {
+        Ok(SchedStatusResponse { status: p.clone() })
+    }
+}
+
+/// `quota_set` — merge semantics: absent fields keep their current
+/// values; `max_vfpgas: 0` restores an unlimited cap; a negative
+/// `budget_s` clears the budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuotaSetRequest {
+    pub user: UserId,
+    pub max_vfpgas: Option<u64>,
+    pub budget_s: Option<f64>,
+    pub weight: Option<u64>,
+}
+
+impl QuotaSetRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j =
+            Json::obj(vec![("user", Json::from(self.user.to_string()))]);
+        if let Some(m) = self.max_vfpgas {
+            j.set("max_vfpgas", Json::from(m));
+        }
+        if let Some(b) = self.budget_s {
+            j.set("budget_s", Json::from(b));
+        }
+        if let Some(w) = self.weight {
+            j.set("weight", Json::from(w));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<QuotaSetRequest, ApiError> {
+        Ok(QuotaSetRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            max_vfpgas: opt_u64(p, "max_vfpgas"),
+            budget_s: opt_f64(p, "budget_s"),
+            weight: opt_u64(p, "weight"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuotaGetRequest {
+    pub user: UserId,
+}
+
+impl QuotaGetRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("user", Json::from(self.user.to_string()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<QuotaGetRequest, ApiError> {
+        Ok(QuotaGetRequest {
+            user: want_id(p, "user", UserId::parse)?,
+        })
+    }
+}
+
+/// A tenant's quota as reported on the wire. `max_vfpgas: 0` means
+/// unlimited (mirroring `quota_set`'s convention — `u64::MAX` would
+/// lose precision through the f64-backed [`Json`] number).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuotaResponse {
+    pub user: UserId,
+    pub max_vfpgas: u64,
+    pub budget_s: Option<f64>,
+    pub weight: u64,
+    pub in_use: u64,
+}
+
+impl QuotaResponse {
+    pub fn from_quota(
+        user: UserId,
+        quota: &crate::sched::TenantQuota,
+        in_use: u64,
+    ) -> QuotaResponse {
+        QuotaResponse {
+            user,
+            max_vfpgas: if quota.max_concurrent == u64::MAX {
+                0
+            } else {
+                quota.max_concurrent
+            },
+            budget_s: quota.device_seconds_budget,
+            weight: quota.weight,
+            in_use,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("user", Json::from(self.user.to_string())),
+            ("max_vfpgas", Json::from(self.max_vfpgas)),
+            ("budget_s", json_or_null_f64(self.budget_s)),
+            ("weight", Json::from(self.weight)),
+            ("in_use", Json::from(self.in_use)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<QuotaResponse, ApiError> {
+        Ok(QuotaResponse {
+            user: want_id(p, "user", UserId::parse)?,
+            max_vfpgas: want_u64(p, "max_vfpgas")?,
+            budget_s: opt_f64(p, "budget_s"),
+            weight: want_u64(p, "weight")?,
+            in_use: want_u64(p, "in_use")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct UsageReportRequest;
+
+impl UsageReportRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<UsageReportRequest, ApiError> {
+        Ok(UsageReportRequest)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct UsageReportResponse {
+    /// Per-tenant rows as rendered by the usage ledger.
+    pub tenants: Json,
+    /// Pre-rendered operator table.
+    pub table: String,
+}
+
+impl UsageReportResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenants", self.tenants.clone()),
+            ("table", Json::from(self.table.as_str())),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<UsageReportResponse, ApiError> {
+        Ok(UsageReportResponse {
+            tenants: p.get("tenants").clone(),
+            table: want_str(p, "table")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReserveRequest {
+    pub user: UserId,
+    pub regions: u64,
+    pub start_s: Option<f64>,
+    pub duration_s: Option<f64>,
+}
+
+impl ReserveRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("user", Json::from(self.user.to_string())),
+            ("regions", Json::from(self.regions)),
+        ]);
+        if let Some(s) = self.start_s {
+            j.set("start_s", Json::from(s));
+        }
+        if let Some(d) = self.duration_s {
+            j.set("duration_s", Json::from(d));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<ReserveRequest, ApiError> {
+        Ok(ReserveRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            regions: want_u64(p, "regions")?,
+            start_s: opt_f64(p, "start_s"),
+            duration_s: opt_f64(p, "duration_s"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReserveResponse {
+    pub reservation: ReservationId,
+}
+
+impl ReserveResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "reservation",
+            Json::from(self.reservation.to_string()),
+        )])
+    }
+
+    pub fn from_json(p: &Json) -> Result<ReserveResponse, ApiError> {
+        Ok(ReserveResponse {
+            reservation: want_id(
+                p,
+                "reservation",
+                ReservationId::parse,
+            )?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CancelReservationRequest {
+    pub reservation: ReservationId,
+}
+
+impl CancelReservationRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "reservation",
+            Json::from(self.reservation.to_string()),
+        )])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<CancelReservationRequest, ApiError> {
+        Ok(CancelReservationRequest {
+            reservation: want_id(
+                p,
+                "reservation",
+                ReservationId::parse,
+            )?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CancelReservationResponse {
+    pub cancelled: bool,
+}
+
+impl CancelReservationResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("cancelled", Json::from(self.cancelled))])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<CancelReservationResponse, ApiError> {
+        Ok(CancelReservationResponse {
+            cancelled: want_bool(p, "cancelled")?,
+        })
+    }
+}
+
+// =========================================================== energy
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyRequest;
+
+impl EnergyRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<EnergyRequest, ApiError> {
+        Ok(EnergyRequest)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyResponse {
+    pub joules: f64,
+    pub power_w: f64,
+}
+
+impl EnergyResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("joules", Json::from(self.joules)),
+            ("power_w", Json::from(self.power_w)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<EnergyResponse, ApiError> {
+        Ok(EnergyResponse {
+            joules: want_f64(p, "joules")?,
+            power_w: want_f64(p, "power_w")?,
+        })
+    }
+}
+
+// ========================================================== db_dump
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbDumpRequest;
+
+impl DbDumpRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<DbDumpRequest, ApiError> {
+        Ok(DbDumpRequest)
+    }
+}
+
+/// The device database document. Serialized as the raw DB JSON (both
+/// protocols) so `DeviceDb::from_json` reads it directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbDumpResponse {
+    pub db: Json,
+}
+
+impl DbDumpResponse {
+    pub fn to_json(&self) -> Json {
+        self.db.clone()
+    }
+
+    pub fn from_json(p: &Json) -> Result<DbDumpResponse, ApiError> {
+        Ok(DbDumpResponse { db: p.clone() })
+    }
+}
+
+// ============================================================= jobs
+
+/// Response to submitting a long-running operation on protocol ≥ 2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSubmitResponse {
+    pub job: JobId,
+}
+
+impl JobSubmitResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("job", Json::from(self.job.to_string()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<JobSubmitResponse, ApiError> {
+        Ok(JobSubmitResponse {
+            job: want_id(p, "job", JobId::parse)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatusRequest {
+    pub job: JobId,
+}
+
+impl JobStatusRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("job", Json::from(self.job.to_string()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<JobStatusRequest, ApiError> {
+        Ok(JobStatusRequest {
+            job: want_id(p, "job", JobId::parse)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobWaitRequest {
+    pub job: JobId,
+    /// Server-side wait bound; the server default applies when
+    /// absent, and the server clamps it below the client library's
+    /// socket read timeout (see `jobs::MAX_WAIT_S`) — long waits are
+    /// built by retrying on the retryable `timeout` code.
+    pub timeout_s: Option<f64>,
+}
+
+impl JobWaitRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j =
+            Json::obj(vec![("job", Json::from(self.job.to_string()))]);
+        if let Some(t) = self.timeout_s {
+            j.set("timeout_s", Json::from(t));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<JobWaitRequest, ApiError> {
+        Ok(JobWaitRequest {
+            job: want_id(p, "job", JobId::parse)?,
+            timeout_s: opt_f64(p, "timeout_s"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobCancelRequest {
+    pub job: JobId,
+}
+
+impl JobCancelRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("job", Json::from(self.job.to_string()))])
+    }
+
+    pub fn from_json(p: &Json) -> Result<JobCancelRequest, ApiError> {
+        Ok(JobCancelRequest {
+            job: want_id(p, "job", JobId::parse)?,
+        })
+    }
+}
+
+/// One job's wire representation (response of `job_status`,
+/// `job_wait` and `job_cancel`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobBody {
+    pub job: JobId,
+    /// The method the job runs ("stream", "program_full", ...).
+    pub method: String,
+    /// "running" | "done" | "failed" | "cancelled".
+    pub state: String,
+    /// The method's response body, when `state == "done"`.
+    pub result: Option<Json>,
+    /// The failure, when `state == "failed"`.
+    pub error: Option<ApiError>,
+}
+
+impl JobBody {
+    pub fn is_terminal(&self) -> bool {
+        self.state != "running"
+    }
+
+    /// Unwrap a finished job into its result, mapping failed /
+    /// cancelled states to errors (the synchronous-call equivalence
+    /// `submit + job_wait ≡ old blocking call` rests on this).
+    pub fn into_done(self) -> Result<Json, ApiError> {
+        match self.state.as_str() {
+            "done" => self.result.ok_or_else(|| {
+                ApiError::internal("done job carried no result")
+            }),
+            "failed" => Err(self.error.unwrap_or_else(|| {
+                ApiError::internal("failed job carried no error")
+            })),
+            "cancelled" => Err(ApiError::new(
+                ErrorCode::Cancelled,
+                format!("{} was cancelled", self.job),
+            )),
+            s => Err(ApiError::internal(format!(
+                "{} still '{s}'",
+                self.job
+            ))),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::from(self.job.to_string())),
+            ("method", Json::from(self.method.as_str())),
+            ("state", Json::from(self.state.as_str())),
+            (
+                "result",
+                self.result.clone().unwrap_or(Json::Null),
+            ),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => e.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<JobBody, ApiError> {
+        let error = match p.get("error") {
+            Json::Null => None,
+            v => Some(ApiError::from_json(v).map_err(|e| {
+                ApiError::bad_request(format!("bad job error field: {e}"))
+            })?),
+        };
+        let result = match p.get("result") {
+            Json::Null => None,
+            v => Some(v.clone()),
+        };
+        Ok(JobBody {
+            job: want_id(p, "job", JobId::parse)?,
+            method: want_str(p, "method")?,
+            state: want_str(p, "state")?,
+            result,
+            error,
+        })
+    }
+}
+
+// ============================================================ agent
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentHelloRequest;
+
+impl AgentHelloRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<AgentHelloRequest, ApiError> {
+        Ok(AgentHelloRequest)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentHelloResponse {
+    pub node: NodeId,
+    pub version: String,
+}
+
+impl AgentHelloResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", Json::from(self.node.to_string())),
+            ("version", Json::from(self.version.as_str())),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<AgentHelloResponse, ApiError> {
+        Ok(AgentHelloResponse {
+            node: want_id(p, "node", NodeId::parse)?,
+            version: want_str(p, "version")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_roundtrip_names() {
+        for code in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(code.name()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+    }
+
+    #[test]
+    fn methods_roundtrip_names() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("reboot_world"), None);
+    }
+
+    #[test]
+    fn api_error_json_roundtrip() {
+        let e = ApiError::new(ErrorCode::QuotaExceeded, "quota: 2 of 2");
+        assert!(e.retryable);
+        assert!(e.retry_after_s.is_some());
+        let back = ApiError::from_json(&e.to_json()).unwrap();
+        assert_eq!(back, e);
+        let term = ApiError::new(ErrorCode::QuotaBudget, "budget gone");
+        assert!(!term.retryable);
+        assert_eq!(term.retry_after_s, None);
+    }
+
+    #[test]
+    fn sched_error_mapping_is_total() {
+        use crate::util::ids::{AllocationId, ReservationId};
+        let cases: Vec<(SchedError, ErrorCode)> = vec![
+            (SchedError::NoCapacity, ErrorCode::NoCapacity),
+            (
+                SchedError::QuotaBudget("b".into()),
+                ErrorCode::QuotaBudget,
+            ),
+            (
+                SchedError::QuotaConcurrency("c".into()),
+                ErrorCode::QuotaExceeded,
+            ),
+            (
+                SchedError::Hypervisor("h".into()),
+                ErrorCode::Internal,
+            ),
+            (
+                SchedError::UnknownGrant(AllocationId(1)),
+                ErrorCode::BadLease,
+            ),
+            (SchedError::Cancelled, ErrorCode::Cancelled),
+            (
+                SchedError::UnknownReservation(ReservationId(2)),
+                ErrorCode::UnknownReservation,
+            ),
+        ];
+        for (e, code) in cases {
+            let api = ApiError::from(&e);
+            assert_eq!(api.code, code, "{e}");
+            assert_eq!(api.message, e.to_string());
+        }
+    }
+
+    #[test]
+    fn hello_negotiation_window() {
+        assert_eq!(HelloRequest::ours().negotiate(), Some(PROTO_MAX));
+        let legacy = HelloRequest::from_json(&Json::obj(vec![])).unwrap();
+        assert_eq!((legacy.proto_min, legacy.proto_max), (1, 1));
+        assert_eq!(legacy.negotiate(), Some(1));
+        let future = HelloRequest {
+            proto_min: PROTO_MAX + 1,
+            proto_max: PROTO_MAX + 5,
+        };
+        assert_eq!(future.negotiate(), None);
+    }
+
+    #[test]
+    fn request_structs_roundtrip() {
+        let req = AllocVfpgaRequest {
+            user: UserId(3),
+            model: Some(ServiceModel::BAaaS),
+            class: Some(RequestClass::Batch),
+        };
+        assert_eq!(
+            AllocVfpgaRequest::from_json(&req.to_json()).unwrap(),
+            req
+        );
+        // Absent optionals stay absent.
+        let bare = AllocVfpgaRequest {
+            user: UserId(0),
+            model: None,
+            class: None,
+        };
+        assert_eq!(
+            AllocVfpgaRequest::from_json(&bare.to_json()).unwrap(),
+            bare
+        );
+        // Present-but-bad class is an error, not a default.
+        let mut j = bare.to_json();
+        j.set("class", Json::from("urgentest"));
+        let err = AllocVfpgaRequest::from_json(&j).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn job_body_states_unwrap() {
+        let done = JobBody {
+            job: JobId(1),
+            method: "stream".into(),
+            state: "done".into(),
+            result: Some(Json::from(7u64)),
+            error: None,
+        };
+        let rt = JobBody::from_json(&done.to_json()).unwrap();
+        assert_eq!(rt, done);
+        assert_eq!(rt.into_done().unwrap(), Json::Num(7.0));
+        let failed = JobBody {
+            job: JobId(2),
+            method: "stream".into(),
+            state: "failed".into(),
+            result: None,
+            error: Some(ApiError::new(ErrorCode::NoCapacity, "full")),
+        };
+        let e = JobBody::from_json(&failed.to_json())
+            .unwrap()
+            .into_done()
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::NoCapacity);
+    }
+
+    #[test]
+    fn quota_response_encodes_unlimited_as_zero() {
+        let q = crate::sched::TenantQuota::default();
+        let r = QuotaResponse::from_quota(UserId(1), &q, 0);
+        assert_eq!(r.max_vfpgas, 0);
+        let back = QuotaResponse::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert!(back.budget_s.is_none());
+    }
+}

@@ -1,15 +1,37 @@
-//! Middleware client library (used by the CLI and by the management
-//! server when it talks to node agents).
+//! Middleware client library (used by the CLI, by tests, and by the
+//! management server when it talks to node agents).
+//!
+//! Two layers:
+//!
+//! * [`Client::call`] — the raw protocol-1 escape hatch: string
+//!   method + raw [`Json`] params, string errors. Kept for the `rc3e
+//!   cli` passthrough and for legacy callers.
+//! * Typed methods (`hello`, `alloc_vfpga`, `stream`, ...) — one per
+//!   [`Method`], built on [`Client::call_v2`]: protocol-2 envelopes
+//!   with correlation ids, typed request/response structs and
+//!   structured [`ApiError`]s clients can branch on
+//!   (`e.code == ErrorCode::QuotaExceeded`, `e.retry_after_s`).
+//!
+//! Long-running operations (`stream`, `program_full`,
+//! `invoke_service`) return [`JobSubmitResponse`] handles; the
+//! `*_sync` variants submit and [`Client::job_wait`] in one call,
+//! reproducing the old blocking behavior.
 
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
+use super::api::*;
 use super::proto::{read_frame, write_frame, Request, Response};
+use crate::config::ServiceModel;
+use crate::sched::RequestClass;
+use crate::util::ids::{AllocationId, FpgaId, JobId, UserId};
 use crate::util::json::Json;
 
 /// A connected middleware client.
 pub struct Client {
     stream: TcpStream,
+    /// Correlation-id counter for v2 requests.
+    next_id: u64,
 }
 
 impl Client {
@@ -22,26 +44,365 @@ impl Client {
         stream
             .set_read_timeout(Some(Duration::from_secs(120)))
             .map_err(|e| e.to_string())?;
-        Ok(Client { stream })
+        Ok(Client {
+            stream,
+            next_id: 0,
+        })
     }
 
-    /// One round trip. Errors are strings: either transport ("io: …")
-    /// or application (the server's error body).
-    pub fn call(&mut self, method: &str, params: Json) -> Result<Json, String> {
+    /// Connect and negotiate the protocol via `hello`. Fails with
+    /// [`ErrorCode::ProtocolMismatch`] when the windows don't
+    /// overlap.
+    pub fn connect_negotiated(
+        addr: SocketAddr,
+    ) -> Result<(Client, HelloResponse), ApiError> {
+        let mut client =
+            Client::connect(addr).map_err(ApiError::internal)?;
+        let hello = client.hello()?;
+        Ok((client, hello))
+    }
+
+    /// One raw protocol-1 round trip. Errors are strings: either
+    /// transport ("io: …") or application (the server's error body).
+    pub fn call(
+        &mut self,
+        method: &str,
+        params: Json,
+    ) -> Result<Json, String> {
         let req = Request::new(method, params);
         write_frame(&mut self.stream, &req.to_json())
             .map_err(|e| format!("io: {e}"))?;
         let frame = read_frame(&mut self.stream)
             .map_err(|e| format!("io: {e}"))?
-            .ok_or_else(|| "io: eof (server closed connection)".to_string())?;
+            .ok_or_else(|| {
+                "io: eof (server closed connection)".to_string()
+            })?;
         Response::from_json(&frame)?.into_result()
     }
 
-    // ------------------------------------ sched-family conveniences
+    /// One protocol-2 round trip: correlation id attached and
+    /// verified, structured errors surfaced as [`ApiError`].
+    pub fn call_v2(
+        &mut self,
+        method: &str,
+        params: Json,
+    ) -> Result<Json, ApiError> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let req = Request::v2(method, params, id);
+        write_frame(&mut self.stream, &req.to_json())
+            .map_err(|e| ApiError::internal(format!("io: {e}")))?;
+        let frame = read_frame(&mut self.stream)
+            .map_err(|e| ApiError::internal(format!("io: {e}")))?
+            .ok_or_else(|| {
+                ApiError::internal("io: eof (server closed connection)")
+            })?;
+        let resp =
+            Response::from_json(&frame).map_err(ApiError::internal)?;
+        if resp.id != Some(id) {
+            return Err(ApiError::internal(format!(
+                "response id mismatch: sent {id}, got {:?}",
+                resp.id
+            )));
+        }
+        resp.into_api_result()
+    }
+
+    // --------------------------------------------- typed: handshake
+
+    /// Version-negotiating handshake.
+    pub fn hello(&mut self) -> Result<HelloResponse, ApiError> {
+        let body = self.call_v2(
+            Method::Hello.name(),
+            HelloRequest::ours().to_json(),
+        )?;
+        HelloResponse::from_json(&body)
+    }
+
+    // ------------------------------------------------ typed: users
+
+    pub fn add_user(
+        &mut self,
+        name: &str,
+    ) -> Result<AddUserResponse, ApiError> {
+        let req = AddUserRequest {
+            name: name.to_string(),
+        };
+        let body =
+            self.call_v2(Method::AddUser.name(), req.to_json())?;
+        AddUserResponse::from_json(&body)
+    }
+
+    // ----------------------------------------------- typed: status
+
+    pub fn status(
+        &mut self,
+        fpga: FpgaId,
+    ) -> Result<StatusResponse, ApiError> {
+        let req = StatusRequest { fpga };
+        let body = self.call_v2(Method::Status.name(), req.to_json())?;
+        StatusResponse::from_json(&body)
+    }
+
+    pub fn monitor(&mut self) -> Result<MonitorResponse, ApiError> {
+        let body = self.call_v2(
+            Method::Monitor.name(),
+            MonitorRequest.to_json(),
+        )?;
+        MonitorResponse::from_json(&body)
+    }
+
+    pub fn energy(&mut self) -> Result<EnergyResponse, ApiError> {
+        let body = self
+            .call_v2(Method::Energy.name(), EnergyRequest.to_json())?;
+        EnergyResponse::from_json(&body)
+    }
+
+    pub fn db_dump(&mut self) -> Result<DbDumpResponse, ApiError> {
+        let body = self
+            .call_v2(Method::DbDump.name(), DbDumpRequest.to_json())?;
+        DbDumpResponse::from_json(&body)
+    }
+
+    pub fn workload(
+        &mut self,
+        req: &WorkloadRequest,
+    ) -> Result<WorkloadResponse, ApiError> {
+        let body =
+            self.call_v2(Method::Workload.name(), req.to_json())?;
+        WorkloadResponse::from_json(&body)
+    }
+
+    // ------------------------------------------------ typed: leases
+
+    pub fn alloc_vfpga(
+        &mut self,
+        user: UserId,
+        model: Option<ServiceModel>,
+        class: Option<RequestClass>,
+    ) -> Result<AllocVfpgaResponse, ApiError> {
+        let req = AllocVfpgaRequest { user, model, class };
+        let body =
+            self.call_v2(Method::AllocVfpga.name(), req.to_json())?;
+        AllocVfpgaResponse::from_json(&body)
+    }
+
+    pub fn alloc_physical(
+        &mut self,
+        user: UserId,
+    ) -> Result<AllocPhysicalResponse, ApiError> {
+        let req = AllocPhysicalRequest { user };
+        let body =
+            self.call_v2(Method::AllocPhysical.name(), req.to_json())?;
+        AllocPhysicalResponse::from_json(&body)
+    }
+
+    pub fn release(
+        &mut self,
+        alloc: AllocationId,
+    ) -> Result<ReleaseResponse, ApiError> {
+        let req = ReleaseRequest { alloc };
+        let body =
+            self.call_v2(Method::Release.name(), req.to_json())?;
+        ReleaseResponse::from_json(&body)
+    }
+
+    pub fn program_core(
+        &mut self,
+        user: UserId,
+        alloc: AllocationId,
+        core: &str,
+    ) -> Result<ProgramCoreResponse, ApiError> {
+        let req = ProgramCoreRequest {
+            user,
+            alloc,
+            core: core.to_string(),
+        };
+        let body =
+            self.call_v2(Method::ProgramCore.name(), req.to_json())?;
+        ProgramCoreResponse::from_json(&body)
+    }
+
+    pub fn migrate(
+        &mut self,
+        user: UserId,
+        alloc: AllocationId,
+    ) -> Result<MigrateResponse, ApiError> {
+        let req = MigrateRequest { user, alloc };
+        let body =
+            self.call_v2(Method::Migrate.name(), req.to_json())?;
+        MigrateResponse::from_json(&body)
+    }
+
+    // ------------------------------------------- typed: catalogues
+
+    pub fn services(&mut self) -> Result<ServicesResponse, ApiError> {
+        let body = self.call_v2(
+            Method::Services.name(),
+            ServicesRequest.to_json(),
+        )?;
+        ServicesResponse::from_json(&body)
+    }
+
+    pub fn cores(&mut self) -> Result<CoresResponse, ApiError> {
+        let body =
+            self.call_v2(Method::Cores.name(), CoresRequest.to_json())?;
+        CoresResponse::from_json(&body)
+    }
+
+    // ------------------------------- typed: long-running operations
+
+    /// Submit a streaming run; returns a job handle immediately.
+    pub fn stream(
+        &mut self,
+        user: UserId,
+        alloc: AllocationId,
+        core: &str,
+        mults: u64,
+    ) -> Result<JobSubmitResponse, ApiError> {
+        let req = StreamRequest {
+            user,
+            alloc,
+            core: core.to_string(),
+            mults,
+        };
+        let body =
+            self.call_v2(Method::Stream.name(), req.to_json())?;
+        JobSubmitResponse::from_json(&body)
+    }
+
+    /// Submit + wait: the old synchronous `stream` behavior.
+    pub fn stream_sync(
+        &mut self,
+        user: UserId,
+        alloc: AllocationId,
+        core: &str,
+        mults: u64,
+    ) -> Result<StreamOutcomeBody, ApiError> {
+        let job = self.stream(user, alloc, core, mults)?.job;
+        let result = self.job_wait_done(job)?;
+        StreamOutcomeBody::from_json(&result)
+    }
+
+    /// Submit a full-bitstream configuration; returns a job handle.
+    pub fn program_full(
+        &mut self,
+        user: UserId,
+        alloc: AllocationId,
+        name: Option<&str>,
+    ) -> Result<JobSubmitResponse, ApiError> {
+        let req = ProgramFullRequest {
+            user,
+            alloc,
+            name: name.map(String::from),
+        };
+        let body =
+            self.call_v2(Method::ProgramFull.name(), req.to_json())?;
+        JobSubmitResponse::from_json(&body)
+    }
+
+    /// Submit + wait: the old synchronous `program_full` behavior.
+    pub fn program_full_sync(
+        &mut self,
+        user: UserId,
+        alloc: AllocationId,
+        name: Option<&str>,
+    ) -> Result<ProgramFullResponse, ApiError> {
+        let job = self.program_full(user, alloc, name)?.job;
+        let result = self.job_wait_done(job)?;
+        ProgramFullResponse::from_json(&result)
+    }
+
+    /// Submit a BAaaS service invocation; returns a job handle.
+    pub fn invoke_service(
+        &mut self,
+        user: UserId,
+        service: &str,
+        mults: u64,
+    ) -> Result<JobSubmitResponse, ApiError> {
+        let req = InvokeServiceRequest {
+            user,
+            service: service.to_string(),
+            mults,
+        };
+        let body =
+            self.call_v2(Method::InvokeService.name(), req.to_json())?;
+        JobSubmitResponse::from_json(&body)
+    }
+
+    /// Submit + wait: the old synchronous `invoke_service` behavior.
+    pub fn invoke_service_sync(
+        &mut self,
+        user: UserId,
+        service: &str,
+        mults: u64,
+    ) -> Result<StreamOutcomeBody, ApiError> {
+        let job = self.invoke_service(user, service, mults)?.job;
+        let result = self.job_wait_done(job)?;
+        StreamOutcomeBody::from_json(&result)
+    }
+
+    // -------------------------------------------------- typed: jobs
+
+    pub fn job_status(
+        &mut self,
+        job: JobId,
+    ) -> Result<JobBody, ApiError> {
+        let req = JobStatusRequest { job };
+        let body =
+            self.call_v2(Method::JobStatus.name(), req.to_json())?;
+        JobBody::from_json(&body)
+    }
+
+    /// Wait until the job is terminal (one server-side wait round;
+    /// pass `timeout_s` to bound it, server default otherwise).
+    pub fn job_wait(
+        &mut self,
+        job: JobId,
+        timeout_s: Option<f64>,
+    ) -> Result<JobBody, ApiError> {
+        let req = JobWaitRequest { job, timeout_s };
+        let body =
+            self.call_v2(Method::JobWait.name(), req.to_json())?;
+        JobBody::from_json(&body)
+    }
+
+    /// Wait for a job and unwrap its `done` result, retrying through
+    /// server-side wait timeouts (which are retryable by contract).
+    pub fn job_wait_done(
+        &mut self,
+        job: JobId,
+    ) -> Result<Json, ApiError> {
+        loop {
+            match self.job_wait(job, None) {
+                Ok(body) => return body.into_done(),
+                Err(e) if e.code == ErrorCode::Timeout => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    pub fn job_cancel(
+        &mut self,
+        job: JobId,
+    ) -> Result<JobBody, ApiError> {
+        let req = JobCancelRequest { job };
+        let body =
+            self.call_v2(Method::JobCancel.name(), req.to_json())?;
+        JobBody::from_json(&body)
+    }
+
+    // --------------------------------------------- typed: scheduler
 
     /// Scheduler queue/grant/reservation snapshot.
-    pub fn sched_status(&mut self) -> Result<Json, String> {
-        self.call("sched_status", Json::obj(vec![]))
+    pub fn sched_status(
+        &mut self,
+    ) -> Result<SchedStatusResponse, ApiError> {
+        let body = self.call_v2(
+            Method::SchedStatus.name(),
+            SchedStatusRequest.to_json(),
+        )?;
+        SchedStatusResponse::from_json(&body)
     }
 
     /// Set (parts of) a tenant quota; unspecified fields keep their
@@ -49,51 +410,74 @@ impl Client {
     /// unlimited cap; a negative `budget_s` clears the budget.
     pub fn quota_set(
         &mut self,
-        user: &str,
-        max_vfpgas: Option<u64>,
-        budget_s: Option<f64>,
-        weight: Option<u64>,
-    ) -> Result<Json, String> {
-        let mut params = Json::obj(vec![("user", Json::from(user))]);
-        if let Some(m) = max_vfpgas {
-            params.set("max_vfpgas", Json::from(m));
-        }
-        if let Some(b) = budget_s {
-            params.set("budget_s", Json::from(b));
-        }
-        if let Some(w) = weight {
-            params.set("weight", Json::from(w));
-        }
-        self.call("quota_set", params)
+        req: &QuotaSetRequest,
+    ) -> Result<QuotaResponse, ApiError> {
+        let body =
+            self.call_v2(Method::QuotaSet.name(), req.to_json())?;
+        QuotaResponse::from_json(&body)
     }
 
-    pub fn quota_get(&mut self, user: &str) -> Result<Json, String> {
-        self.call(
-            "quota_get",
-            Json::obj(vec![("user", Json::from(user))]),
-        )
+    pub fn quota_get(
+        &mut self,
+        user: UserId,
+    ) -> Result<QuotaResponse, ApiError> {
+        let req = QuotaGetRequest { user };
+        let body =
+            self.call_v2(Method::QuotaGet.name(), req.to_json())?;
+        QuotaResponse::from_json(&body)
     }
 
     /// Per-tenant usage rows + rendered operator table.
-    pub fn usage_report(&mut self) -> Result<Json, String> {
-        self.call("usage_report", Json::obj(vec![]))
+    pub fn usage_report(
+        &mut self,
+    ) -> Result<UsageReportResponse, ApiError> {
+        let body = self.call_v2(
+            Method::UsageReport.name(),
+            UsageReportRequest.to_json(),
+        )?;
+        UsageReportResponse::from_json(&body)
     }
 
     /// Reserve vFPGA capacity for a tenant over a virtual-time window.
     pub fn reserve(
         &mut self,
-        user: &str,
-        regions: u64,
-        duration_s: f64,
-    ) -> Result<Json, String> {
-        self.call(
-            "reserve",
-            Json::obj(vec![
-                ("user", Json::from(user)),
-                ("regions", Json::from(regions)),
-                ("duration_s", Json::from(duration_s)),
-            ]),
-        )
+        req: &ReserveRequest,
+    ) -> Result<ReserveResponse, ApiError> {
+        let body =
+            self.call_v2(Method::Reserve.name(), req.to_json())?;
+        ReserveResponse::from_json(&body)
+    }
+
+    pub fn cancel_reservation(
+        &mut self,
+        reservation: crate::util::ids::ReservationId,
+    ) -> Result<CancelReservationResponse, ApiError> {
+        let req = CancelReservationRequest { reservation };
+        let body = self
+            .call_v2(Method::CancelReservation.name(), req.to_json())?;
+        CancelReservationResponse::from_json(&body)
+    }
+
+    // ------------------------------------------------- typed: agent
+
+    pub fn agent_hello(
+        &mut self,
+    ) -> Result<AgentHelloResponse, ApiError> {
+        let body = self.call_v2(
+            Method::AgentHello.name(),
+            AgentHelloRequest.to_json(),
+        )?;
+        AgentHelloResponse::from_json(&body)
+    }
+
+    pub fn agent_status(
+        &mut self,
+        fpga: FpgaId,
+    ) -> Result<StatusResponse, ApiError> {
+        let req = StatusRequest { fpga };
+        let body =
+            self.call_v2(Method::AgentStatus.name(), req.to_json())?;
+        StatusResponse::from_json(&body)
     }
 }
 
@@ -102,7 +486,8 @@ mod tests {
     use super::*;
     use std::net::TcpListener;
 
-    /// Minimal echo server for client-side tests.
+    /// Minimal echo server for client-side tests. Speaks both
+    /// envelope generations: v2 requests get their id echoed.
     fn echo_server() -> SocketAddr {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -113,7 +498,19 @@ mod tests {
                     while let Ok(Some(frame)) = read_frame(&mut stream) {
                         let req = Request::from_json(&frame).unwrap();
                         let resp = if req.method == "fail" {
-                            Response::error("requested failure")
+                            if req.proto.unwrap_or(1) >= 2 {
+                                Response::failure(
+                                    req.id,
+                                    ApiError::new(
+                                        ErrorCode::NoCapacity,
+                                        "requested failure",
+                                    ),
+                                )
+                            } else {
+                                Response::error("requested failure")
+                            }
+                        } else if req.proto.unwrap_or(1) >= 2 {
+                            Response::success_v2(req.id, req.params)
                         } else {
                             Response::success(req.params)
                         };
@@ -135,6 +532,19 @@ mod tests {
         let params = Json::obj(vec![("x", Json::from(7u64))]);
         let body = c.call("echo", params.clone()).unwrap();
         assert_eq!(body, params);
+    }
+
+    #[test]
+    fn call_v2_checks_id_and_carries_codes() {
+        let addr = echo_server();
+        let mut c = Client::connect(addr).unwrap();
+        let params = Json::obj(vec![("x", Json::from(7u64))]);
+        let body = c.call_v2("echo", params.clone()).unwrap();
+        assert_eq!(body, params);
+        let err = c.call_v2("fail", Json::obj(vec![])).unwrap_err();
+        assert_eq!(err.code, ErrorCode::NoCapacity);
+        assert!(err.retryable);
+        assert_eq!(err.message, "requested failure");
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! Server-side registry for asynchronous RPC jobs.
+//!
+//! Long-running operations (`program_full`, `stream`,
+//! `invoke_service`) used to block their connection thread for the
+//! whole virtual-time duration of the work. On protocol ≥ 2 the
+//! server instead submits the work here and answers immediately with
+//! a job id; `job_status` / `job_wait` / `job_cancel` operate on the
+//! registry. This is also the seam the ROADMAP's batch-pipelining
+//! follow-up needs: once a long operation is a job, overlapping the
+//! next job's PR with the previous job's streaming is a registry
+//! policy, not an API change.
+//!
+//! Model: one worker thread per submitted job (the same
+//! thread-per-unit idiom the server uses per connection), a
+//! [`Condvar`] for waiters, and bounded terminal-state retention —
+//! finished jobs stay queryable until [`RETAINED_TERMINAL`] newer
+//! jobs have finished, then the oldest are evicted and read as
+//! `unknown_job`.
+//!
+//! Cancellation is a state race the registry referees: `cancel` flips
+//! a *running* job to `cancelled`; when the worker later finishes, a
+//! cancelled job keeps its cancelled state and the worker's result is
+//! discarded. Terminal states never change.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::api::{ApiError, ErrorCode, JobBody};
+use crate::util::ids::{IdGen, JobId};
+use crate::util::json::Json;
+
+/// Terminal jobs kept queryable after completion.
+pub const RETAINED_TERMINAL: usize = 256;
+
+/// Default server-side bound on one `job_wait` call (wall seconds).
+pub const DEFAULT_WAIT_S: f64 = 60.0;
+
+/// Hard cap on one `job_wait` call. Deliberately below the client
+/// library's 120 s socket read timeout: a server wait that outlives
+/// the client's read leaves a stale frame on the connection and
+/// desynchronizes every later response. Longer waits are built by
+/// retrying on the (retryable) `timeout` code.
+pub const MAX_WAIT_S: f64 = 100.0;
+
+/// One job's lifecycle state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    Running,
+    Done(Json),
+    Failed(ApiError),
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Running => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed(_) => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Running)
+    }
+}
+
+/// One tracked job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub id: JobId,
+    /// RPC method the job runs ("stream", "program_full", ...).
+    pub method: String,
+    pub state: JobState,
+    /// Virtual timestamp of submission.
+    pub submitted_ns: u64,
+}
+
+impl JobRecord {
+    /// Wire form for the `job_*` RPC responses.
+    pub fn to_body(&self) -> JobBody {
+        let (result, error) = match &self.state {
+            JobState::Done(v) => (Some(v.clone()), None),
+            JobState::Failed(e) => (None, Some(e.clone())),
+            _ => (None, None),
+        };
+        JobBody {
+            job: self.id,
+            method: self.method.clone(),
+            state: self.state.name().to_string(),
+            result,
+            error,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Jobs {
+    records: BTreeMap<JobId, JobRecord>,
+    /// Terminal jobs, oldest first (eviction order).
+    terminal: VecDeque<JobId>,
+}
+
+/// The registry.
+#[derive(Debug, Default)]
+pub struct JobRegistry {
+    state: Mutex<Jobs>,
+    done: Condvar,
+    ids: IdGen,
+}
+
+impl JobRegistry {
+    pub fn new() -> Arc<JobRegistry> {
+        Arc::new(JobRegistry::default())
+    }
+
+    /// Submit `work` as a new job; it runs on its own worker thread
+    /// and the job id is returned immediately. Takes an owned `Arc`
+    /// (the worker keeps the registry alive past the caller) — clone
+    /// at the call site: `Arc::clone(&jobs).submit(...)`.
+    pub fn submit(
+        self: Arc<JobRegistry>,
+        method: &str,
+        submitted_ns: u64,
+        work: impl FnOnce() -> Result<Json, ApiError> + Send + 'static,
+    ) -> JobId {
+        let id = JobId(self.ids.next());
+        {
+            let mut st = self.state.lock().unwrap();
+            st.records.insert(
+                id,
+                JobRecord {
+                    id,
+                    method: method.to_string(),
+                    state: JobState::Running,
+                    submitted_ns,
+                },
+            );
+        }
+        std::thread::spawn(move || {
+            let result = work();
+            self.finish(id, result);
+        });
+        id
+    }
+
+    /// Record a worker's result. A job cancelled mid-flight keeps its
+    /// cancelled state and the result is discarded.
+    fn finish(&self, id: JobId, result: Result<Json, ApiError>) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(rec) = st.records.get_mut(&id) {
+            if rec.state == JobState::Running {
+                rec.state = match result {
+                    Ok(v) => JobState::Done(v),
+                    Err(e) => JobState::Failed(e),
+                };
+                Self::retire(&mut st, id);
+            }
+        }
+        self.done.notify_all();
+    }
+
+    /// Move a freshly-terminal job into the retention queue, evicting
+    /// the oldest beyond [`RETAINED_TERMINAL`]. Call with the state
+    /// lock held and only on a Running → terminal transition.
+    fn retire(st: &mut Jobs, id: JobId) {
+        st.terminal.push_back(id);
+        while st.terminal.len() > RETAINED_TERMINAL {
+            if let Some(old) = st.terminal.pop_front() {
+                st.records.remove(&old);
+            }
+        }
+    }
+
+    fn unknown(id: JobId) -> ApiError {
+        ApiError::new(
+            ErrorCode::UnknownJob,
+            format!("unknown job {id} (never existed, or evicted)"),
+        )
+    }
+
+    /// Current record of a job.
+    pub fn status(&self, id: JobId) -> Result<JobRecord, ApiError> {
+        self.state
+            .lock()
+            .unwrap()
+            .records
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Self::unknown(id))
+    }
+
+    /// Block until the job reaches a terminal state, bounded by
+    /// `timeout` of wall time. On expiry the job keeps running and
+    /// the caller gets a retryable [`ErrorCode::Timeout`].
+    pub fn wait(
+        &self,
+        id: JobId,
+        timeout: Duration,
+    ) -> Result<JobRecord, ApiError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match st.records.get(&id) {
+                None => return Err(Self::unknown(id)),
+                Some(rec) if rec.state.is_terminal() => {
+                    return Ok(rec.clone())
+                }
+                Some(_) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(ApiError::new(
+                    ErrorCode::Timeout,
+                    format!("{id} still running after {timeout:?}"),
+                ));
+            }
+            let (guard, _) = self
+                .done
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Cancel a running job. Terminal jobs are returned unchanged (a
+    /// cancel that lost the race to completion is not an error).
+    pub fn cancel(&self, id: JobId) -> Result<JobRecord, ApiError> {
+        let mut st = self.state.lock().unwrap();
+        let Some(rec) = st.records.get_mut(&id) else {
+            return Err(Self::unknown(id));
+        };
+        if rec.state == JobState::Running {
+            rec.state = JobState::Cancelled;
+            let cloned = rec.clone();
+            Self::retire(&mut st, id);
+            self.done.notify_all();
+            return Ok(cloned);
+        }
+        Ok(rec.clone())
+    }
+
+    /// Number of jobs currently running (telemetry).
+    pub fn running(&self) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .records
+            .values()
+            .filter(|r| r.state == JobState::Running)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn submit_wait_returns_result() {
+        let reg = JobRegistry::new();
+        let id = Arc::clone(&reg).submit("stream", 0, || Ok(Json::from(42u64)));
+        let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
+        assert_eq!(rec.state, JobState::Done(Json::Num(42.0)));
+        assert_eq!(rec.method, "stream");
+        // Terminal state is retained for status queries.
+        let body = reg.status(id).unwrap().to_body();
+        assert_eq!(body.state, "done");
+        assert_eq!(body.into_done().unwrap(), Json::Num(42.0));
+    }
+
+    #[test]
+    fn failed_job_carries_api_error() {
+        let reg = JobRegistry::new();
+        let id = Arc::clone(&reg).submit("program_full", 0, || {
+            Err(ApiError::new(ErrorCode::NoCapacity, "full"))
+        });
+        let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
+        match rec.state {
+            JobState::Failed(e) => {
+                assert_eq!(e.code, ErrorCode::NoCapacity)
+            }
+            s => panic!("expected failure, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_job_is_typed_error() {
+        let reg = JobRegistry::new();
+        let err = reg.status(JobId(999)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownJob);
+        let err = reg.wait(JobId(999), Duration::from_millis(1)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownJob);
+        let err = reg.cancel(JobId(999)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownJob);
+    }
+
+    #[test]
+    fn wait_times_out_on_stuck_job() {
+        let reg = JobRegistry::new();
+        let (tx, rx) = mpsc::channel::<()>();
+        let id = Arc::clone(&reg).submit("stream", 0, move || {
+            let _ = rx.recv(); // block until the test releases us
+            Ok(Json::Null)
+        });
+        let err = reg.wait(id, Duration::from_millis(50)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Timeout);
+        assert!(err.retryable);
+        drop(tx); // release the worker
+        let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
+        assert!(rec.state.is_terminal());
+    }
+
+    #[test]
+    fn cancel_beats_completion_and_sticks() {
+        let reg = JobRegistry::new();
+        let (tx, rx) = mpsc::channel::<()>();
+        let id = Arc::clone(&reg).submit("stream", 0, move || {
+            let _ = rx.recv();
+            Ok(Json::from(1u64))
+        });
+        let rec = reg.cancel(id).unwrap();
+        assert_eq!(rec.state, JobState::Cancelled);
+        // Worker finishes after the cancel: result is discarded.
+        tx.send(()).unwrap();
+        let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
+        assert_eq!(rec.state, JobState::Cancelled);
+        // Cancelling a terminal job is a no-op, not an error.
+        let rec = reg.cancel(id).unwrap();
+        assert_eq!(rec.state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn terminal_retention_evicts_oldest() {
+        let reg = JobRegistry::new();
+        let mut first = None;
+        for i in 0..(RETAINED_TERMINAL + 10) {
+            let id = Arc::clone(&reg).submit("stream", 0, move || {
+                Ok(Json::from(i as u64))
+            });
+            reg.wait(id, Duration::from_secs(5)).unwrap();
+            first.get_or_insert(id);
+        }
+        // The very first job has been evicted; the newest survives.
+        let err = reg.status(first.unwrap()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownJob);
+        assert_eq!(reg.running(), 0);
+    }
+}

@@ -15,15 +15,26 @@
 //! difference — reproduces because the dominant charge is the
 //! middleware's virtual RPC overhead, not the wire.
 //!
+//! The RPC surface is typed and versioned ([`api`]): every method has
+//! request/response structs, errors carry machine-readable
+//! [`api::ErrorCode`]s, `hello` negotiates the protocol window, and
+//! long-running operations return [`jobs`] handles on protocol ≥ 2.
+//! See `docs/PROTOCOL.md` for the wire format.
+//!
 //! Wire format: 4-byte little-endian length + JSON
-//! (`{"method": ..., "params": {...}}` / `{"ok": ..., ...}`).
+//! (`{"method", "params", "id"?, "proto"?}` /
+//! `{"ok", "body", "id"?, "error"?}`).
 
 pub mod agent;
+pub mod api;
 pub mod client;
+pub mod jobs;
 pub mod proto;
 pub mod server;
 
 pub use agent::NodeAgent;
+pub use api::{ApiError, ErrorCode, Method, PROTO_MAX, PROTO_MIN};
 pub use client::Client;
+pub use jobs::{JobRegistry, JobState};
 pub use proto::{read_frame, write_frame, Request, Response};
 pub use server::ManagementServer;

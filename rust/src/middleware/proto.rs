@@ -1,7 +1,19 @@
 //! Length-prefixed JSON framing + request/response envelopes.
+//!
+//! Two envelope generations share the frame format:
+//!
+//! * **v1** (one version behind, still readable): requests are
+//!   `{"method", "params"}`, responses `{"ok", "body"}` with a plain
+//!   string body on error.
+//! * **v2** (current): requests additionally carry a client-chosen
+//!   `id` (echoed back so pipelined callers can correlate) and a
+//!   `proto` number; error responses carry a structured
+//!   [`ApiError`] object under `"error"` (the string body is kept in
+//!   parallel so v1 readers still see a message).
 
 use std::io::{Read, Write};
 
+use super::api::ApiError;
 use crate::util::json::Json;
 
 /// Max frame we accept (a full bitstream upload fits comfortably).
@@ -12,28 +24,90 @@ pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
 pub struct Request {
     pub method: String,
     pub params: Json,
+    /// Client-chosen correlation id, echoed in the response (v2).
+    pub id: Option<u64>,
+    /// Protocol the client speaks for this request; absent = 1.
+    pub proto: Option<u32>,
 }
 
 impl Request {
+    /// A v1 (legacy-envelope) request.
     pub fn new(method: &str, params: Json) -> Request {
         Request {
             method: method.to_string(),
             params,
+            id: None,
+            proto: None,
+        }
+    }
+
+    /// A v2 request with a correlation id.
+    pub fn v2(method: &str, params: Json, id: u64) -> Request {
+        Request {
+            method: method.to_string(),
+            params,
+            id: Some(id),
+            proto: Some(super::api::PROTO_MAX),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("method", Json::from(self.method.as_str())),
             ("params", self.params.clone()),
-        ])
+        ]);
+        if let Some(id) = self.id {
+            j.set("id", Json::from(id));
+        }
+        if let Some(p) = self.proto {
+            j.set("proto", Json::from(u64::from(p)));
+        }
+        j
     }
 
     pub fn from_json(v: &Json) -> Result<Request, String> {
         Ok(Request {
             method: v.str_field("method")?.to_string(),
             params: v.get("params").clone(),
+            id: v.get("id").as_u64(),
+            proto: v.get("proto").as_u64().map(|p| p as u32),
         })
+    }
+
+    /// Envelope protocol of this request (absent = 1), or a
+    /// `protocol_mismatch` error when outside the supported window —
+    /// checked before dispatch by every peer.
+    pub fn negotiate_proto(&self) -> Result<u32, ApiError> {
+        let proto = self.proto.unwrap_or(1);
+        if (super::api::PROTO_MIN..=super::api::PROTO_MAX)
+            .contains(&proto)
+        {
+            Ok(proto)
+        } else {
+            Err(ApiError::protocol_mismatch(proto, proto))
+        }
+    }
+}
+
+/// Wrap a dispatch result in the envelope generation the request
+/// spoke — shared by the management server and the node agents.
+/// Out-of-range protocols (> 2) answer v2-shaped so a future client
+/// can still read the `protocol_mismatch` code.
+pub fn respond(
+    proto: u32,
+    id: Option<u64>,
+    result: Result<Json, ApiError>,
+) -> Response {
+    if proto >= 2 {
+        match result {
+            Ok(body) => Response::success_v2(id, body),
+            Err(e) => Response::failure(id, e),
+        }
+    } else {
+        match result {
+            Ok(body) => Response::success(body),
+            Err(e) => Response::error(&e.message),
+        }
     }
 }
 
@@ -42,47 +116,110 @@ impl Request {
 pub struct Response {
     pub ok: bool,
     pub body: Json,
+    /// Echo of the request's correlation id (v2).
+    pub id: Option<u64>,
+    /// Structured failure (v2); `body` carries the message string in
+    /// parallel for v1 readers.
+    pub error: Option<ApiError>,
 }
 
 impl Response {
     pub fn success(body: Json) -> Response {
-        Response { ok: true, body }
+        Response {
+            ok: true,
+            body,
+            id: None,
+            error: None,
+        }
     }
 
+    /// A v1 failure: string body only.
     pub fn error(msg: &str) -> Response {
         Response {
             ok: false,
             body: Json::from(msg),
+            id: None,
+            error: None,
+        }
+    }
+
+    /// A v2 success echoing the request id.
+    pub fn success_v2(id: Option<u64>, body: Json) -> Response {
+        Response {
+            ok: true,
+            body,
+            id,
+            error: None,
+        }
+    }
+
+    /// A v2 failure: structured error + message string body.
+    pub fn failure(id: Option<u64>, error: ApiError) -> Response {
+        Response {
+            ok: false,
+            body: Json::from(error.message.as_str()),
+            id,
+            error: Some(error),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("ok", Json::from(self.ok)),
             ("body", self.body.clone()),
-        ])
+        ]);
+        if let Some(id) = self.id {
+            j.set("id", Json::from(id));
+        }
+        if let Some(e) = &self.error {
+            j.set("error", e.to_json());
+        }
+        j
     }
 
     pub fn from_json(v: &Json) -> Result<Response, String> {
+        let error = match v.get("error") {
+            Json::Null => None,
+            e => Some(ApiError::from_json(e)?),
+        };
         Ok(Response {
             ok: v
                 .get("ok")
                 .as_bool()
                 .ok_or("response missing 'ok'")?,
             body: v.get("body").clone(),
+            id: v.get("id").as_u64(),
+            error,
         })
     }
 
-    /// Unwrap into Result for client ergonomics.
+    /// Unwrap into Result for client ergonomics (v1 view: errors as
+    /// strings).
     pub fn into_result(self) -> Result<Json, String> {
         if self.ok {
             Ok(self.body)
+        } else if let Some(e) = self.error {
+            Err(e.message)
         } else {
             Err(self
                 .body
                 .as_str()
                 .unwrap_or("unknown error")
                 .to_string())
+        }
+    }
+
+    /// Unwrap into Result keeping the structured error (v2 view). A
+    /// v1 string error maps to [`crate::middleware::api::ErrorCode::Internal`].
+    pub fn into_api_result(self) -> Result<Json, ApiError> {
+        if self.ok {
+            Ok(self.body)
+        } else if let Some(e) = self.error {
+            Err(e)
+        } else {
+            Err(ApiError::internal(
+                self.body.as_str().unwrap_or("unknown error"),
+            ))
         }
     }
 }
@@ -172,6 +309,45 @@ mod tests {
         let rt =
             Response::from_json(&Response::error("e").to_json()).unwrap();
         assert!(!rt.ok);
+    }
+
+    #[test]
+    fn v2_envelope_roundtrips_id_and_error() {
+        use super::super::api::{ApiError, ErrorCode};
+        let req = Request::v2(
+            "alloc_vfpga",
+            Json::obj(vec![("user", Json::from("user-1"))]),
+            7,
+        );
+        let back = Request::from_json(&req.to_json()).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(back.id, Some(7));
+        let fail = Response::failure(
+            Some(7),
+            ApiError::new(ErrorCode::NoCapacity, "no capacity"),
+        );
+        let rt = Response::from_json(&fail.to_json()).unwrap();
+        assert_eq!(rt, fail);
+        let err = rt.into_api_result().unwrap_err();
+        assert_eq!(err.code, ErrorCode::NoCapacity);
+        assert!(err.retryable);
+        // The same failure still reads as a v1 string error.
+        assert_eq!(
+            Response::from_json(&fail.to_json())
+                .unwrap()
+                .into_result(),
+            Err("no capacity".to_string())
+        );
+    }
+
+    #[test]
+    fn v1_string_error_maps_to_internal_code() {
+        use super::super::api::ErrorCode;
+        let resp =
+            Response::from_json(&Response::error("boom").to_json()).unwrap();
+        let err = resp.into_api_result().unwrap_err();
+        assert_eq!(err.code, ErrorCode::Internal);
+        assert_eq!(err.message, "boom");
     }
 
     #[test]

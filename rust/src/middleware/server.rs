@@ -3,25 +3,40 @@
 //!
 //! Every incoming request charges the cluster's RPC overhead to the
 //! virtual clock (Table I: the RC3E hop turns an 11 ms local status
-//! call into 80 ms) and then dispatches into the hypervisor. Device
-//! status is routed through the owning node's [`super::NodeAgent`]
-//! when one is registered — the management→node Ethernet hop.
+//! call into 80 ms) and then dispatches through a table of *typed*
+//! handlers — one [`Method`] → handler entry per RPC, each parsing a
+//! typed request struct from [`super::api`] and serializing a typed
+//! response. No handler reads raw params inline, and every failure
+//! leaves the server as a structured [`ApiError`].
+//!
+//! Long-running operations (`program_full`, `stream`,
+//! `invoke_service`) run synchronously for protocol-1 clients and as
+//! registry jobs ([`super::jobs`]) for protocol-2 clients, which get
+//! a `job_id` back immediately and drive `job_status` / `job_wait` /
+//! `job_cancel`.
+//!
+//! Device status is routed through the owning node's
+//! [`super::NodeAgent`] when one is registered — the management→node
+//! Ethernet hop.
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
+use super::api::*;
 use super::client::Client;
-use super::proto::{read_frame, write_frame, Request, Response};
+use super::jobs::{JobRegistry, DEFAULT_WAIT_S, MAX_WAIT_S};
+use super::proto::{read_frame, respond, write_frame, Request, Response};
 use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
 use crate::hls::synth::{CoreKind, CoreSpec, Synthesizer};
-use crate::hypervisor::Hypervisor;
+use crate::hypervisor::{AllocKind, Hypervisor};
 use crate::rc2f::stream::StreamConfig;
-use crate::sched::{RequestClass, SchedError, Scheduler, TenantQuota};
+use crate::sched::{RequestClass, SchedError, Scheduler};
 use crate::util::clock::VirtualTime;
-use crate::util::ids::{AllocationId, FpgaId, NodeId, ReservationId, UserId};
+use crate::util::ids::NodeId;
 use crate::util::json::Json;
 
 /// The management server (owns its accept thread).
@@ -36,6 +51,8 @@ struct ServerInner {
     hv: Arc<Hypervisor>,
     /// The cluster scheduler — every allocation RPC admits through it.
     sched: Arc<Scheduler>,
+    /// Async jobs for the long-running RPCs (protocol ≥ 2).
+    jobs: Arc<JobRegistry>,
     rpc_overhead_ms: f64,
     /// Prebuilt relocatable user-core bitfiles ("the user uploads a
     /// bitfile" — kept server-side so the CLI can reference cores by
@@ -57,6 +74,7 @@ impl ManagementServer {
         let inner = Arc::new(ServerInner {
             hv,
             sched,
+            jobs: JobRegistry::new(),
             rpc_overhead_ms,
             cores: build_core_library(),
             agents: Mutex::new(BTreeMap::new()),
@@ -101,6 +119,11 @@ impl ManagementServer {
     /// The cluster scheduler behind this server.
     pub fn scheduler(&self) -> &Arc<Scheduler> {
         &self.inner.sched
+    }
+
+    /// The async-job registry behind this server.
+    pub fn jobs(&self) -> &Arc<JobRegistry> {
+        &self.inner.jobs
     }
 
     pub fn shutdown(&mut self) {
@@ -162,8 +185,15 @@ fn serve_conn(
                 inner.hv.clock.advance(VirtualTime::from_millis_f64(
                     inner.rpc_overhead_ms,
                 ));
-                dispatch(&inner, &req)
-                    .unwrap_or_else(|e| Response::error(&e))
+                let proto = req.proto.unwrap_or(1);
+                let result = req.negotiate_proto().and_then(|_| {
+                    let ctx = Ctx {
+                        inner: &inner,
+                        proto,
+                    };
+                    dispatch(&ctx, &req.method, &req.params)
+                });
+                respond(proto, req.id, result)
             }
         };
         write_frame(&mut stream, &resp.to_json())?;
@@ -171,425 +201,559 @@ fn serve_conn(
     Ok(())
 }
 
-fn parse_user(params: &Json) -> Result<UserId, String> {
-    UserId::parse(params.str_field("user")?)
-        .ok_or_else(|| "bad user id".to_string())
+// ===================================================== dispatching
+
+/// Per-request handler context.
+struct Ctx<'a> {
+    inner: &'a Arc<ServerInner>,
+    /// Envelope generation of this request (1 = legacy shapes,
+    /// ≥ 2 = typed shapes + job handles for long operations).
+    proto: u32,
 }
 
-fn parse_alloc(params: &Json) -> Result<AllocationId, String> {
-    AllocationId::parse(params.str_field("alloc")?)
-        .ok_or_else(|| "bad alloc id".to_string())
+type Handler = fn(&Ctx<'_>, &Json) -> Result<Json, ApiError>;
+
+/// The dispatch table: one typed handler per management-server RPC.
+const HANDLERS: &[(Method, Handler)] = &[
+    (Method::Hello, h_hello),
+    (Method::AddUser, h_add_user),
+    (Method::Status, h_status),
+    (Method::AllocVfpga, h_alloc_vfpga),
+    (Method::AllocPhysical, h_alloc_physical),
+    (Method::Release, h_release),
+    (Method::ProgramCore, h_program_core),
+    (Method::Stream, h_stream),
+    (Method::ProgramFull, h_program_full),
+    (Method::Migrate, h_migrate),
+    (Method::Services, h_services),
+    (Method::InvokeService, h_invoke_service),
+    (Method::Monitor, h_monitor),
+    (Method::Workload, h_workload),
+    (Method::SchedStatus, h_sched_status),
+    (Method::QuotaSet, h_quota_set),
+    (Method::QuotaGet, h_quota_get),
+    (Method::UsageReport, h_usage_report),
+    (Method::Reserve, h_reserve),
+    (Method::CancelReservation, h_cancel_reservation),
+    (Method::Energy, h_energy),
+    (Method::DbDump, h_db_dump),
+    (Method::Cores, h_cores),
+    (Method::JobStatus, h_job_status),
+    (Method::JobWait, h_job_wait),
+    (Method::JobCancel, h_job_cancel),
+];
+
+/// Whether the management server serves `method` (dispatch-table
+/// completeness is asserted by tests against [`Method::ALL`]).
+pub fn method_is_served(method: Method) -> bool {
+    HANDLERS.iter().any(|(m, _)| *m == method)
 }
+
+fn dispatch(
+    ctx: &Ctx<'_>,
+    method: &str,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    let m = Method::parse(method)
+        .ok_or_else(|| ApiError::unknown_method(method))?;
+    let handler = HANDLERS
+        .iter()
+        .find(|(hm, _)| *hm == m)
+        .map(|(_, h)| *h)
+        .ok_or_else(|| ApiError::unknown_method(method))?;
+    handler(ctx, params)
+}
+
+// ========================================================= handlers
+
+fn h_hello(_ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = HelloRequest::from_json(p)?;
+    let chosen = req.negotiate().ok_or_else(|| {
+        ApiError::protocol_mismatch(req.proto_min, req.proto_max)
+    })?;
+    Ok(HelloResponse {
+        version: crate::VERSION.to_string(),
+        service: "rc3e-management".to_string(),
+        proto_min: PROTO_MIN,
+        proto_max: PROTO_MAX,
+        proto: chosen,
+    }
+    .to_json())
+}
+
+fn h_add_user(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = AddUserRequest::from_json(p)?;
+    let user = ctx.inner.hv.add_user(&req.name);
+    Ok(AddUserResponse { user }.to_json())
+}
+
+fn h_status(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = StatusRequest::from_json(p)?;
+    let inner = ctx.inner;
+    // Route via the owning node's agent when registered.
+    let node = inner.hv.device(req.fpga).map_err(ApiError::from)?.node;
+    let agent_addr = inner.agents.lock().unwrap().get(&node).copied();
+    let resp = if let Some(addr) = agent_addr {
+        let mut agent =
+            Client::connect(addr).map_err(ApiError::internal)?;
+        agent.agent_status(req.fpga)?
+    } else {
+        let st = inner
+            .hv
+            .status_local(req.fpga)
+            .map_err(ApiError::from)?;
+        StatusResponse::from_status(&st)
+    };
+    Ok(resp.to_json())
+}
+
+fn h_alloc_vfpga(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = AllocVfpgaRequest::from_json(p)?;
+    let model = req.model.unwrap_or(ServiceModel::RAaaS);
+    let class = req.class.unwrap_or(RequestClass::Interactive);
+    let grant = ctx
+        .inner
+        .sched
+        .acquire_vfpga(req.user, model, class)
+        .map_err(ApiError::from)?;
+    Ok(AllocVfpgaResponse {
+        alloc: grant.alloc,
+        vfpga: grant.vfpga().expect("vfpga grant"),
+        fpga: grant.fpga(),
+        node: grant.node(),
+        wait_ms: grant.wait.as_millis_f64(),
+    }
+    .to_json())
+}
+
+fn h_alloc_physical(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = AllocPhysicalRequest::from_json(p)?;
+    let grant = ctx
+        .inner
+        .sched
+        .acquire_physical(req.user, None, RequestClass::Interactive)
+        .map_err(ApiError::from)?;
+    Ok(AllocPhysicalResponse {
+        alloc: grant.alloc,
+        fpga: grant.fpga(),
+        node: grant.node(),
+    }
+    .to_json())
+}
+
+fn h_release(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = ReleaseRequest::from_json(p)?;
+    // Scheduler-tracked leases release through the scheduler (quota
+    // credit + queue pump); anything allocated out of band falls back
+    // to the hypervisor.
+    match ctx.inner.sched.release(req.alloc) {
+        Ok(()) => {}
+        Err(SchedError::UnknownGrant(_)) => ctx
+            .inner
+            .hv
+            .release(req.alloc)
+            .map_err(ApiError::from)?,
+        Err(e) => return Err(ApiError::from(e)),
+    }
+    Ok(ReleaseResponse { released: true }.to_json())
+}
+
+fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = ProgramCoreRequest::from_json(p)?;
+    let inner = ctx.inner;
+    let bitfile = inner.cores.get(&req.core).ok_or_else(|| {
+        ApiError::new(
+            ErrorCode::UnknownCore,
+            format!("unknown core '{}'", req.core),
+        )
+    })?;
+    let vfpga = inner
+        .hv
+        .check_vfpga_lease(req.alloc, req.user)
+        .map_err(ApiError::from)?;
+    let placed = inner
+        .hv
+        .retarget_for(vfpga, bitfile)
+        .map_err(ApiError::from)?;
+    let d = inner
+        .hv
+        .program_vfpga(req.alloc, req.user, &placed)
+        .map_err(ApiError::from)?;
+    Ok(ProgramCoreResponse {
+        programmed: req.core,
+        pr_ms: d.as_millis_f64(),
+    }
+    .to_json())
+}
+
+fn h_stream(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = StreamRequest::from_json(p)?;
+    if ctx.proto >= 2 {
+        let inner = Arc::clone(ctx.inner);
+        let now_ns = ctx.inner.hv.clock.now().0;
+        let job = Arc::clone(&ctx.inner.jobs).submit(
+            Method::Stream.name(),
+            now_ns,
+            move || run_stream(&inner, &req),
+        );
+        return Ok(JobSubmitResponse { job }.to_json());
+    }
+    run_stream(ctx.inner, &req)
+}
+
+fn h_program_full(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = ProgramFullRequest::from_json(p)?;
+    if ctx.proto >= 2 {
+        let inner = Arc::clone(ctx.inner);
+        let now_ns = ctx.inner.hv.clock.now().0;
+        let job = Arc::clone(&ctx.inner.jobs).submit(
+            Method::ProgramFull.name(),
+            now_ns,
+            move || run_program_full(&inner, &req),
+        );
+        return Ok(JobSubmitResponse { job }.to_json());
+    }
+    run_program_full(ctx.inner, &req)
+}
+
+fn h_invoke_service(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = InvokeServiceRequest::from_json(p)?;
+    if ctx.proto >= 2 {
+        let inner = Arc::clone(ctx.inner);
+        let now_ns = ctx.inner.hv.clock.now().0;
+        let job = Arc::clone(&ctx.inner.jobs).submit(
+            Method::InvokeService.name(),
+            now_ns,
+            move || run_invoke_service(&inner, &req),
+        );
+        return Ok(JobSubmitResponse { job }.to_json());
+    }
+    run_invoke_service(ctx.inner, &req)
+}
+
+fn h_migrate(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = MigrateRequest::from_json(p)?;
+    // Default target selection is model-aware (see
+    // hypervisor::migration), so the relocated lease stays within the
+    // per-device model policy.
+    let report = ctx
+        .inner
+        .hv
+        .migrate_vfpga(req.alloc, req.user, None)
+        .map_err(ApiError::from)?;
+    // Keep the scheduler's view of the lease current so preemption
+    // victim selection and sched_status stay accurate.
+    ctx.inner.sched.note_migration(req.alloc, report.to);
+    Ok(MigrateResponse {
+        from: report.from,
+        to: report.to,
+        cross_device: report.moved_across_devices,
+        downtime_ms: report.downtime.as_millis_f64(),
+    }
+    .to_json())
+}
+
+fn h_services(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = ServicesRequest::from_json(p)?;
+    let resp = ServicesResponse {
+        services: ctx.inner.hv.service_names(),
+    };
+    Ok(if ctx.proto >= 2 {
+        resp.to_json()
+    } else {
+        resp.to_legacy_json()
+    })
+}
+
+fn h_cores(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = CoresRequest::from_json(p)?;
+    let resp = CoresResponse {
+        cores: ctx.inner.cores.keys().cloned().collect(),
+    };
+    Ok(if ctx.proto >= 2 {
+        resp.to_json()
+    } else {
+        resp.to_legacy_json()
+    })
+}
+
+fn h_monitor(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = MonitorRequest::from_json(p)?;
+    let hv = &ctx.inner.hv;
+    // One monitoring sweep over every device + report, plus the
+    // scheduler's admission telemetry (ROADMAP item: expose the
+    // `sched.wait` histogram and queue-depth gauge over the wire).
+    let mut mon = crate::hypervisor::Monitor::new();
+    mon.sample_all(hv);
+    let wait = hv.metrics.histogram("sched.wait");
+    Ok(MonitorResponse {
+        devices: mon.to_json(),
+        cloud_utilization: mon.cloud_utilization(),
+        sched: SchedTelemetry {
+            queue_depth: hv.metrics.gauge("sched.queue.depth").get(),
+            active_grants: hv
+                .metrics
+                .gauge("sched.active_grants")
+                .get(),
+            wait: WaitStats::from_histogram(&wait),
+        },
+    }
+    .to_json())
+}
+
+fn h_workload(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = WorkloadRequest::from_json(p)?;
+    // Run a synthetic session workload (operator tooling / capacity
+    // planning).
+    let w = crate::hypervisor::CloudWorkload {
+        arrival_rate: req.rate.unwrap_or(0.05),
+        mean_hold_s: req.hold_s.unwrap_or(120.0),
+        sessions: req.sessions.unwrap_or(40) as usize,
+        seed: req.seed.unwrap_or(0x10AD),
+    };
+    let report = crate::hypervisor::workload::run(&ctx.inner.hv, &w)
+        .map_err(|e| ApiError::internal(e.to_string()))?;
+    Ok(WorkloadResponse {
+        served: report.served as u64,
+        rejected: report.rejected as u64,
+        admission_rate: report.admission_rate(),
+        mean_setup_ms: report.mean_setup_ms,
+        mean_utilization: report.mean_utilization,
+        makespan_s: report.makespan.as_secs_f64(),
+        energy_j: report.energy_j,
+    }
+    .to_json())
+}
+
+fn h_sched_status(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = SchedStatusRequest::from_json(p)?;
+    Ok(SchedStatusResponse {
+        status: ctx.inner.sched.status_json(),
+    }
+    .to_json())
+}
+
+fn h_quota_set(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = QuotaSetRequest::from_json(p)?;
+    // Absent fields keep their current values; `max_vfpgas: 0`
+    // restores an unlimited cap and a negative `budget_s` clears the
+    // budget (the JSON layer cannot distinguish null from absent).
+    // The merge runs atomically under the scheduler's lock so
+    // concurrent partial updates cannot lose each other's fields.
+    let quota = ctx.inner.sched.update_quota(req.user, |q| {
+        match req.max_vfpgas {
+            Some(0) => q.max_concurrent = u64::MAX,
+            Some(n) => q.max_concurrent = n,
+            None => {}
+        }
+        match req.budget_s {
+            Some(b) if b < 0.0 => q.device_seconds_budget = None,
+            Some(b) => q.device_seconds_budget = Some(b),
+            None => {}
+        }
+        if let Some(w) = req.weight {
+            q.weight = w.max(1);
+        }
+    });
+    Ok(QuotaResponse::from_quota(
+        req.user,
+        &quota,
+        ctx.inner.sched.in_use(req.user),
+    )
+    .to_json())
+}
+
+fn h_quota_get(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = QuotaGetRequest::from_json(p)?;
+    let quota = ctx.inner.sched.quota(req.user);
+    Ok(QuotaResponse::from_quota(
+        req.user,
+        &quota,
+        ctx.inner.sched.in_use(req.user),
+    )
+    .to_json())
+}
+
+fn h_usage_report(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = UsageReportRequest::from_json(p)?;
+    Ok(UsageReportResponse {
+        tenants: ctx.inner.sched.usage_json(),
+        table: ctx.inner.sched.usage_report(),
+    }
+    .to_json())
+}
+
+fn h_reserve(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = ReserveRequest::from_json(p)?;
+    let start_s = req
+        .start_s
+        .unwrap_or_else(|| ctx.inner.hv.clock.now().as_secs_f64());
+    let duration_s = req.duration_s.unwrap_or(3600.0);
+    let reservation = ctx.inner.sched.reserve(
+        req.user,
+        req.regions,
+        VirtualTime::from_secs_f64(start_s),
+        VirtualTime::from_secs_f64(duration_s),
+    );
+    Ok(ReserveResponse { reservation }.to_json())
+}
+
+fn h_cancel_reservation(
+    ctx: &Ctx<'_>,
+    p: &Json,
+) -> Result<Json, ApiError> {
+    let req = CancelReservationRequest::from_json(p)?;
+    ctx.inner
+        .sched
+        .cancel_reservation(req.reservation)
+        .map_err(ApiError::from)?;
+    Ok(CancelReservationResponse { cancelled: true }.to_json())
+}
+
+fn h_energy(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = EnergyRequest::from_json(p)?;
+    Ok(EnergyResponse {
+        joules: ctx.inner.hv.total_energy_joules(),
+        power_w: ctx.inner.hv.total_power_w(),
+    }
+    .to_json())
+}
+
+fn h_db_dump(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = DbDumpRequest::from_json(p)?;
+    Ok(DbDumpResponse {
+        db: ctx.inner.hv.db.lock().unwrap().to_json(),
+    }
+    .to_json())
+}
+
+fn h_job_status(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = JobStatusRequest::from_json(p)?;
+    Ok(ctx.inner.jobs.status(req.job)?.to_body().to_json())
+}
+
+fn h_job_wait(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = JobWaitRequest::from_json(p)?;
+    // Cap below the client library's 120 s socket read timeout: a
+    // server-side wait that outlives the client's read would leave a
+    // stale frame on the connection and desynchronize every later
+    // response. Clients long-poll by retrying on `timeout` instead
+    // (see Client::job_wait_done).
+    let timeout_s = req
+        .timeout_s
+        .unwrap_or(DEFAULT_WAIT_S)
+        .clamp(0.01, MAX_WAIT_S);
+    let rec = ctx
+        .inner
+        .jobs
+        .wait(req.job, Duration::from_secs_f64(timeout_s))?;
+    Ok(rec.to_body().to_json())
+}
+
+fn h_job_cancel(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = JobCancelRequest::from_json(p)?;
+    Ok(ctx.inner.jobs.cancel(req.job)?.to_body().to_json())
+}
+
+// ====================================== long-running operation bodies
+//
+// Shared by the synchronous protocol-1 path and the protocol-2 job
+// workers, so `submit + job_wait` reproduces the old blocking
+// behavior exactly.
 
 fn stream_config_for(
     core: &str,
     mults: u64,
-) -> Result<StreamConfig, String> {
+) -> Result<StreamConfig, ApiError> {
     match core {
         "matmul16" => Ok(StreamConfig::matmul16(mults)),
         "matmul32" => Ok(StreamConfig::matmul32(mults)),
-        c => Err(format!("no stream profile for core '{c}'")),
+        c => Err(ApiError::new(
+            ErrorCode::UnknownCore,
+            format!("no stream profile for core '{c}'"),
+        )),
     }
 }
 
-fn quota_json(
-    user: UserId,
-    quota: &TenantQuota,
-    in_use: u64,
-) -> Json {
-    // 0 = unlimited, mirroring quota_set's convention (u64::MAX would
-    // lose precision through the f64-backed Json number anyway).
-    let max_vfpgas = if quota.max_concurrent == u64::MAX {
-        0
-    } else {
-        quota.max_concurrent
+fn run_stream(
+    inner: &ServerInner,
+    req: &StreamRequest,
+) -> Result<Json, ApiError> {
+    let cfg = stream_config_for(&req.core, req.mults)?;
+    let svc = crate::service::RaaasService::with_scheduler(Arc::clone(
+        &inner.sched,
+    ));
+    let out = svc
+        .stream(req.alloc, req.user, &cfg)
+        .map_err(ApiError::from)?;
+    Ok(StreamOutcomeBody::from_outcome(&out).to_json())
+}
+
+fn run_program_full(
+    inner: &ServerInner,
+    req: &ProgramFullRequest,
+) -> Result<Json, ApiError> {
+    // RSaaS: write a full user bitstream to an exclusively held
+    // device (server builds the synthetic image; a real deployment
+    // would receive an upload).
+    let name = req
+        .name
+        .clone()
+        .unwrap_or_else(|| "user_design".to_string());
+    let fpga = {
+        let db = inner.hv.db.lock().unwrap();
+        db.allocations
+            .get(&req.alloc)
+            .and_then(|a| match a.kind {
+                AllocKind::Physical(f) | AllocKind::Vm(_, f) => Some(f),
+                _ => None,
+            })
+            .ok_or_else(|| {
+                ApiError::new(
+                    ErrorCode::BadLease,
+                    format!("allocation {} is not physical", req.alloc),
+                )
+            })?
     };
-    Json::obj(vec![
-        ("user", Json::from(user.to_string())),
-        ("max_vfpgas", Json::from(max_vfpgas)),
-        (
-            "budget_s",
-            match quota.device_seconds_budget {
-                Some(b) => Json::from(b),
-                None => Json::Null,
-            },
-        ),
-        ("weight", Json::from(quota.weight)),
-        ("in_use", Json::from(in_use)),
-    ])
-}
-
-fn outcome_json(out: &crate::rc2f::stream::StreamOutcome) -> Json {
-    Json::obj(vec![
-        ("artifact", Json::from(out.artifact.as_str())),
-        ("mults", Json::from(out.mults)),
-        ("input_bytes", Json::from(out.input_bytes)),
-        ("output_bytes", Json::from(out.output_bytes)),
-        (
-            "virtual_stream_s",
-            Json::from(out.virtual_stream.as_secs_f64()),
-        ),
-        (
-            "virtual_total_s",
-            Json::from(out.virtual_total.as_secs_f64()),
-        ),
-        ("virtual_mbps", Json::from(out.virtual_mbps())),
-        ("wall_s", Json::from(out.wall_secs)),
-        ("wall_mbps", Json::from(out.wall_mbps())),
-        ("checksum", Json::from(out.checksum)),
-        (
-            "validation_failures",
-            Json::from(out.validation_failures),
-        ),
-    ])
-}
-
-fn dispatch(inner: &ServerInner, req: &Request) -> Result<Response, String> {
-    let hv = &inner.hv;
-    let p = &req.params;
-    let ok = |j: Json| Ok(Response::success(j));
-    match req.method.as_str() {
-        "hello" => ok(Json::obj(vec![
-            ("version", Json::from(crate::VERSION)),
-            ("service", Json::from("rc3e-management")),
-        ])),
-        "add_user" => {
-            let name = p.str_field("name")?;
-            let id = hv.add_user(name);
-            ok(Json::obj(vec![("user", Json::from(id.to_string()))]))
-        }
-        "status" => {
-            let fpga = FpgaId::parse(p.str_field("fpga")?)
-                .ok_or("bad fpga id")?;
-            // Route via the owning node's agent when registered.
-            let node = hv
-                .device(fpga)
-                .map_err(|e| e.to_string())?
-                .node;
-            let agent_addr =
-                inner.agents.lock().unwrap().get(&node).copied();
-            if let Some(addr) = agent_addr {
-                let mut agent = Client::connect(addr)?;
-                let body = agent.call(
-                    "agent.status",
-                    Json::obj(vec![(
-                        "fpga",
-                        Json::from(fpga.to_string()),
-                    )]),
-                )?;
-                return Ok(Response::success(body));
-            }
-            let st = hv.status_local(fpga).map_err(|e| e.to_string())?;
-            ok(Json::obj(vec![
-                ("fpga", Json::from(st.fpga.to_string())),
-                ("board", Json::from(st.board)),
-                ("regions_total", Json::from(st.regions_total)),
-                (
-                    "regions_configured",
-                    Json::from(st.regions_configured),
-                ),
-                ("regions_clocked", Json::from(st.regions_clocked)),
-                ("power_w", Json::from(st.power_w)),
-            ]))
-        }
-        "alloc_vfpga" => {
-            let user = parse_user(p)?;
-            // Absent params default; present-but-unparsable ones are
-            // errors (a typo must not silently escalate a batch
-            // request to interactive, which could preempt someone).
-            let model = match p.get("model").as_str() {
-                Some(s) => ServiceModel::parse(s)
-                    .ok_or_else(|| format!("unknown model '{s}'"))?,
-                None => ServiceModel::RAaaS,
-            };
-            let class = match p.get("class").as_str() {
-                Some(s) => RequestClass::parse(s)
-                    .ok_or_else(|| format!("unknown class '{s}'"))?,
-                None => RequestClass::Interactive,
-            };
-            let grant = inner
-                .sched
-                .acquire_vfpga(user, model, class)
-                .map_err(|e| e.to_string())?;
-            ok(Json::obj(vec![
-                ("alloc", Json::from(grant.alloc.to_string())),
-                (
-                    "vfpga",
-                    Json::from(
-                        grant.vfpga().expect("vfpga grant").to_string(),
-                    ),
-                ),
-                ("fpga", Json::from(grant.fpga().to_string())),
-                ("node", Json::from(grant.node().to_string())),
-                ("wait_ms", Json::from(grant.wait.as_millis_f64())),
-            ]))
-        }
-        "alloc_physical" => {
-            let user = parse_user(p)?;
-            let grant = inner
-                .sched
-                .acquire_physical(user, None, RequestClass::Interactive)
-                .map_err(|e| e.to_string())?;
-            ok(Json::obj(vec![
-                ("alloc", Json::from(grant.alloc.to_string())),
-                ("fpga", Json::from(grant.fpga().to_string())),
-                ("node", Json::from(grant.node().to_string())),
-            ]))
-        }
-        "release" => {
-            let alloc = parse_alloc(p)?;
-            // Scheduler-tracked leases release through the scheduler
-            // (quota credit + queue pump); anything allocated out of
-            // band falls back to the hypervisor.
-            match inner.sched.release(alloc) {
-                Ok(()) => {}
-                Err(SchedError::UnknownGrant(_)) => {
-                    hv.release(alloc).map_err(|e| e.to_string())?
-                }
-                Err(e) => return Err(e.to_string()),
-            }
-            ok(Json::obj(vec![("released", Json::from(true))]))
-        }
-        "program_core" => {
-            let user = parse_user(p)?;
-            let alloc = parse_alloc(p)?;
-            let core = p.str_field("core")?;
-            let bitfile = inner
-                .cores
-                .get(core)
-                .ok_or_else(|| format!("unknown core '{core}'"))?;
-            let vfpga = hv
-                .check_vfpga_lease(alloc, user)
-                .map_err(|e| e.to_string())?;
-            let placed = hv
-                .retarget_for(vfpga, bitfile)
-                .map_err(|e| e.to_string())?;
-            let d = hv
-                .program_vfpga(alloc, user, &placed)
-                .map_err(|e| e.to_string())?;
-            ok(Json::obj(vec![
-                ("programmed", Json::from(core)),
-                ("pr_ms", Json::from(d.as_millis_f64())),
-            ]))
-        }
-        "stream" => {
-            let user = parse_user(p)?;
-            let alloc = parse_alloc(p)?;
-            let core = p.str_field("core")?;
-            let mults = p.u64_field("mults")?;
-            let cfg = stream_config_for(core, mults)?;
-            let svc = crate::service::RaaasService::with_scheduler(
-                Arc::clone(&inner.sched),
-            );
-            let out = svc
-                .stream(alloc, user, &cfg)
-                .map_err(|e| e.to_string())?;
-            ok(outcome_json(&out))
-        }
-        "program_full" => {
-            // RSaaS: write a full user bitstream to an exclusively
-            // held device (server builds the synthetic image; a real
-            // deployment would receive an upload).
-            let user = parse_user(p)?;
-            let alloc = parse_alloc(p)?;
-            let name = p.get("name").as_str().unwrap_or("user_design");
-            let part = {
-                let db = hv.db.lock().unwrap();
-                let fpga = db
-                    .allocations
-                    .get(&alloc)
-                    .and_then(|a| match a.kind {
-                        crate::hypervisor::AllocKind::Physical(f)
-                        | crate::hypervisor::AllocKind::Vm(_, f) => Some(f),
-                        _ => None,
-                    })
-                    .ok_or("allocation is not physical")?;
-                drop(db);
-                hv.device(fpga).map_err(|e| e.to_string())?.fpga
-                    .lock()
-                    .unwrap()
-                    .board
-                    .part
-            };
-            let bs = crate::bitstream::BitstreamBuilder::full(part, name)
-                .build();
-            let d = hv
-                .program_full(alloc, user, &bs)
-                .map_err(|e| e.to_string())?;
-            ok(Json::obj(vec![
-                ("programmed", Json::from(name)),
-                ("config_s", Json::from(d.as_secs_f64())),
-            ]))
-        }
-        "migrate" => {
-            let user = parse_user(p)?;
-            let alloc = parse_alloc(p)?;
-            // Default target selection is model-aware (see
-            // hypervisor::migration), so the relocated lease stays
-            // within the per-device model policy.
-            let report = hv
-                .migrate_vfpga(alloc, user, None)
-                .map_err(|e| e.to_string())?;
-            // Keep the scheduler's view of the lease current so
-            // preemption victim selection and sched_status stay
-            // accurate.
-            inner.sched.note_migration(alloc, report.to);
-            ok(Json::obj(vec![
-                ("from", Json::from(report.from.to_string())),
-                ("to", Json::from(report.to.to_string())),
-                (
-                    "cross_device",
-                    Json::from(report.moved_across_devices),
-                ),
-                (
-                    "downtime_ms",
-                    Json::from(report.downtime.as_millis_f64()),
-                ),
-            ]))
-        }
-        "services" => ok(Json::Arr(
-            hv.service_names().into_iter().map(Json::from).collect(),
-        )),
-        "invoke_service" => {
-            let user = parse_user(p)?;
-            let service = p.str_field("service")?;
-            let mults = p.u64_field("mults")?;
-            let core = if service.contains("32") {
-                "matmul32"
-            } else {
-                "matmul16"
-            };
-            let cfg = stream_config_for(core, mults)?;
-            let svc = crate::service::BaaasService::with_scheduler(
-                Arc::clone(&inner.sched),
-            );
-            let out = svc
-                .invoke(user, service, &cfg)
-                .map_err(|e| e.to_string())?;
-            ok(outcome_json(&out))
-        }
-        "monitor" => {
-            // One monitoring sweep over every device + report.
-            let mut mon = crate::hypervisor::Monitor::new();
-            mon.sample_all(hv);
-            let report = mon.to_json();
-            ok(Json::obj(vec![
-                ("devices", report),
-                (
-                    "cloud_utilization",
-                    Json::from(mon.cloud_utilization()),
-                ),
-            ]))
-        }
-        "workload" => {
-            // Run a synthetic session workload (operator tooling /
-            // capacity planning). Params: sessions, rate, hold_s.
-            let w = crate::hypervisor::CloudWorkload {
-                arrival_rate: p.get("rate").as_f64().unwrap_or(0.05),
-                mean_hold_s: p.get("hold_s").as_f64().unwrap_or(120.0),
-                sessions: p.get("sessions").as_u64().unwrap_or(40) as usize,
-                seed: p.get("seed").as_u64().unwrap_or(0x10AD),
-            };
-            let report = crate::hypervisor::workload::run(hv, &w)
-                .map_err(|e| e.to_string())?;
-            ok(Json::obj(vec![
-                ("served", Json::from(report.served)),
-                ("rejected", Json::from(report.rejected)),
-                (
-                    "admission_rate",
-                    Json::from(report.admission_rate()),
-                ),
-                (
-                    "mean_setup_ms",
-                    Json::from(report.mean_setup_ms),
-                ),
-                (
-                    "mean_utilization",
-                    Json::from(report.mean_utilization),
-                ),
-                (
-                    "makespan_s",
-                    Json::from(report.makespan.as_secs_f64()),
-                ),
-                ("energy_j", Json::from(report.energy_j)),
-            ]))
-        }
-        "sched_status" => ok(inner.sched.status_json()),
-        "quota_set" => {
-            // Absent fields keep their current values; `max_vfpgas: 0`
-            // restores an unlimited cap and a negative `budget_s`
-            // clears the budget (the JSON layer cannot distinguish
-            // null from absent). The merge runs atomically under the
-            // scheduler's lock so concurrent partial updates cannot
-            // lose each other's fields.
-            let user = parse_user(p)?;
-            let quota = inner.sched.update_quota(user, |q| {
-                match p.get("max_vfpgas").as_u64() {
-                    Some(0) => q.max_concurrent = u64::MAX,
-                    Some(n) => q.max_concurrent = n,
-                    None => {}
-                }
-                match p.get("budget_s").as_f64() {
-                    Some(b) if b < 0.0 => q.device_seconds_budget = None,
-                    Some(b) => q.device_seconds_budget = Some(b),
-                    None => {}
-                }
-                if let Some(w) = p.get("weight").as_u64() {
-                    q.weight = w.max(1);
-                }
-            });
-            ok(quota_json(user, &quota, inner.sched.in_use(user)))
-        }
-        "quota_get" => {
-            let user = parse_user(p)?;
-            let quota = inner.sched.quota(user);
-            ok(quota_json(user, &quota, inner.sched.in_use(user)))
-        }
-        "usage_report" => ok(Json::obj(vec![
-            ("tenants", inner.sched.usage_json()),
-            (
-                "table",
-                Json::from(inner.sched.usage_report()),
-            ),
-        ])),
-        "reserve" => {
-            let user = parse_user(p)?;
-            let regions = p.u64_field("regions")?;
-            let start_s = p.get("start_s").as_f64().unwrap_or_else(|| {
-                hv.clock.now().as_secs_f64()
-            });
-            let duration_s =
-                p.get("duration_s").as_f64().unwrap_or(3600.0);
-            let id = inner.sched.reserve(
-                user,
-                regions,
-                VirtualTime::from_secs_f64(start_s),
-                VirtualTime::from_secs_f64(duration_s),
-            );
-            ok(Json::obj(vec![(
-                "reservation",
-                Json::from(id.to_string()),
-            )]))
-        }
-        "cancel_reservation" => {
-            let id = ReservationId::parse(p.str_field("reservation")?)
-                .ok_or("bad reservation id")?;
-            inner
-                .sched
-                .cancel_reservation(id)
-                .map_err(|e| e.to_string())?;
-            ok(Json::obj(vec![("cancelled", Json::from(true))]))
-        }
-        "energy" => ok(Json::obj(vec![
-            ("joules", Json::from(hv.total_energy_joules())),
-            ("power_w", Json::from(hv.total_power_w())),
-        ])),
-        "db_dump" => ok(hv.db.lock().unwrap().to_json()),
-        "cores" => ok(Json::Arr(
-            inner.cores.keys().cloned().map(Json::from).collect(),
-        )),
-        m => Err(format!("unknown method '{m}'")),
+    let part = inner
+        .hv
+        .device(fpga)
+        .map_err(ApiError::from)?
+        .fpga
+        .lock()
+        .unwrap()
+        .board
+        .part;
+    let bs =
+        crate::bitstream::BitstreamBuilder::full(part, &name).build();
+    let d = inner
+        .hv
+        .program_full(req.alloc, req.user, &bs)
+        .map_err(ApiError::from)?;
+    Ok(ProgramFullResponse {
+        programmed: name,
+        config_s: d.as_secs_f64(),
     }
+    .to_json())
+}
+
+fn run_invoke_service(
+    inner: &ServerInner,
+    req: &InvokeServiceRequest,
+) -> Result<Json, ApiError> {
+    let core = if req.service.contains("32") {
+        "matmul32"
+    } else {
+        "matmul16"
+    };
+    let cfg = stream_config_for(core, req.mults)?;
+    let svc = crate::service::BaaasService::with_scheduler(Arc::clone(
+        &inner.sched,
+    ));
+    let out = svc
+        .invoke(req.user, &req.service, &cfg)
+        .map_err(ApiError::from)?;
+    Ok(StreamOutcomeBody::from_outcome(&out).to_json())
 }
 
 #[cfg(test)]
@@ -607,10 +771,27 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_table_covers_every_management_method() {
+        for m in Method::ALL {
+            assert_eq!(
+                method_is_served(m),
+                !m.is_agent(),
+                "dispatch entry mismatch for {}",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
     fn hello_and_cores() {
         let (_s, mut c, _hv) = setup();
         let body = c.call("hello", Json::obj(vec![])).unwrap();
         assert_eq!(body.get("version").as_str(), Some(crate::VERSION));
+        // The server advertises its protocol window.
+        assert_eq!(
+            body.get("proto_max").as_u64(),
+            Some(u64::from(PROTO_MAX))
+        );
         let cores = c.call("cores", Json::obj(vec![])).unwrap();
         assert!(cores
             .as_arr()
@@ -730,6 +911,7 @@ mod tests {
             ]),
         )
         .unwrap();
+        // A v1 (proto-less) stream request stays synchronous.
         let out = c
             .call(
                 "stream",
@@ -896,5 +1078,28 @@ mod tests {
                 Json::obj(vec![("user", Json::from(other.as_str()))]),
             )
             .is_ok());
+    }
+
+    #[test]
+    fn monitor_exposes_sched_telemetry() {
+        let (_s, mut c, _hv) = setup();
+        let user = c
+            .call("add_user", Json::obj(vec![("name", Json::from("m"))]))
+            .unwrap()
+            .get("user")
+            .as_str()
+            .unwrap()
+            .to_string();
+        c.call(
+            "alloc_vfpga",
+            Json::obj(vec![("user", Json::from(user.as_str()))]),
+        )
+        .unwrap();
+        let mon = c.call("monitor", Json::obj(vec![])).unwrap();
+        let sched = mon.get("sched");
+        assert_eq!(sched.get("active_grants").as_u64(), Some(1));
+        assert_eq!(sched.get("queue_depth").as_u64(), Some(0));
+        // The grant above recorded one admission wait sample.
+        assert!(sched.get("wait").get("count").as_u64().unwrap() >= 1);
     }
 }

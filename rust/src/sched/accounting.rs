@@ -8,6 +8,17 @@
 //! the device-second *budget* check in [`super::quota`], the
 //! `usage_report` middleware RPC, and the operator table rendered
 //! with [`crate::util::table`].
+//!
+//! Preemption cost model: the migration outage a preemption causes is
+//! billed to the *preemptor's* tenant
+//! ([`UsageLedger::charge_preemption`]) — the victim's accrual clock
+//! skips the downtime. The tenant whose interactive burst displaced a
+//! batch lease pays for the displacement, not the tenant that was
+//! displaced.
+//!
+//! The ledger serializes to/from JSON ([`UsageLedger::to_json`] /
+//! [`UsageLedger::from_json`]) so accounting survives a
+//! management-node restart (see [`super::persist`]).
 
 use std::collections::BTreeMap;
 
@@ -32,6 +43,9 @@ pub struct TenantUsage {
     pub energy_joules: f64,
     /// Longest admission wait seen (virtual ms).
     pub max_wait_ms: f64,
+    /// Migration downtime this tenant *caused* by preempting others
+    /// (device-seconds; also included in `device_seconds`).
+    pub preempt_downtime_s: f64,
 }
 
 /// The usage ledger.
@@ -74,6 +88,23 @@ impl UsageLedger {
         row.energy_joules += unit_seconds * watts;
     }
 
+    /// Charge a preemption's migration downtime to the *preemptor*:
+    /// `unit_seconds` of victim downtime (device-seconds) at the
+    /// victim's per-unit power. The victim's own accrual clock skips
+    /// this window, so the cost lands exactly once — on the tenant
+    /// that caused it.
+    pub fn charge_preemption(
+        &mut self,
+        preemptor: UserId,
+        unit_seconds: f64,
+        watts: f64,
+    ) {
+        let row = self.row_mut(preemptor);
+        row.preempt_downtime_s += unit_seconds;
+        row.device_seconds += unit_seconds;
+        row.energy_joules += unit_seconds * watts;
+    }
+
     pub fn tenants(&self) -> Vec<UserId> {
         self.rows.keys().copied().collect()
     }
@@ -91,6 +122,7 @@ impl UsageLedger {
                 "device-s",
                 "energy J",
                 "max wait ms",
+                "preempt-s",
             ],
         );
         for (user, row) in &self.rows {
@@ -106,6 +138,7 @@ impl UsageLedger {
                 format!("{:.1}", row.device_seconds),
                 format!("{:.1}", row.energy_joules),
                 format!("{:.1}", row.max_wait_ms),
+                format!("{:.1}", row.preempt_downtime_s),
             ]);
         }
         table.render()
@@ -132,10 +165,47 @@ impl UsageLedger {
                             Json::from(row.energy_joules),
                         ),
                         ("max_wait_ms", Json::from(row.max_wait_ms)),
+                        (
+                            "preempt_downtime_s",
+                            Json::from(row.preempt_downtime_s),
+                        ),
                     ])
                 })
                 .collect(),
         )
+    }
+
+    /// Restore from [`UsageLedger::to_json`] output (management-node
+    /// restart). Unknown fields are ignored; missing numeric fields
+    /// read as zero so older state files stay loadable.
+    pub fn from_json(v: &Json) -> Result<UsageLedger, String> {
+        let rows = v
+            .as_arr()
+            .ok_or("usage ledger must be a JSON array")?;
+        let mut ledger = UsageLedger::new();
+        for r in rows {
+            let user = UserId::parse(r.str_field("user")?)
+                .ok_or("bad user id in usage ledger")?;
+            let row = ledger.row_mut(user);
+            row.granted = r.get("granted").as_u64().unwrap_or(0);
+            row.released = r.get("released").as_u64().unwrap_or(0);
+            row.preempted = r.get("preempted").as_u64().unwrap_or(0);
+            row.queued = r.get("queued").as_u64().unwrap_or(0);
+            row.device_seconds =
+                r.get("device_seconds").as_f64().unwrap_or(0.0);
+            row.energy_joules =
+                r.get("energy_joules").as_f64().unwrap_or(0.0);
+            row.max_wait_ms =
+                r.get("max_wait_ms").as_f64().unwrap_or(0.0);
+            row.preempt_downtime_s =
+                r.get("preempt_downtime_s").as_f64().unwrap_or(0.0);
+        }
+        Ok(ledger)
+    }
+
+    /// Replace this ledger's rows with a reloaded snapshot.
+    pub fn restore(&mut self, other: UsageLedger) {
+        self.rows = other.rows;
     }
 }
 
@@ -196,5 +266,41 @@ mod tests {
             (rows[0].get("energy_joules").as_f64().unwrap() - 3.0).abs()
                 < 1e-9
         );
+    }
+
+    #[test]
+    fn preemption_charge_bills_preemptor() {
+        let mut ledger = UsageLedger::new();
+        let vip = UserId(0);
+        ledger.charge_preemption(vip, 0.25, 4.0);
+        let row = ledger.usage(vip);
+        assert!((row.preempt_downtime_s - 0.25).abs() < 1e-9);
+        assert!((row.device_seconds - 0.25).abs() < 1e-9);
+        assert!((row.energy_joules - 1.0).abs() < 1e-9);
+        // The charge counts against the preemptor's budgetable usage.
+        assert!((ledger.device_seconds(vip) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_serialization_roundtrip() {
+        let mut ledger = UsageLedger::new();
+        let a = UserId(0);
+        let b = UserId(3);
+        ledger.row_mut(a).granted = 5;
+        ledger.row_mut(a).queued = 2;
+        ledger.row_mut(a).max_wait_ms = 12.5;
+        ledger.charge_release(a, 10.0, 4.0);
+        ledger.charge_preemption(b, 0.5, 2.0);
+        ledger.row_mut(b).preempted = 1;
+        let back = UsageLedger::from_json(&ledger.to_json()).unwrap();
+        assert_eq!(back.usage(a), ledger.usage(a));
+        assert_eq!(back.usage(b), ledger.usage(b));
+        // Bad payloads are typed errors, not panics.
+        assert!(UsageLedger::from_json(&Json::from(3u64)).is_err());
+        let bad = Json::Arr(vec![Json::obj(vec![(
+            "user",
+            Json::from("not-an-id"),
+        )])]);
+        assert!(UsageLedger::from_json(&bad).is_err());
     }
 }

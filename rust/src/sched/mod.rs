@@ -40,12 +40,15 @@
 //! blockers, so no ready request starves.
 
 pub mod accounting;
+pub mod persist;
 pub mod preempt;
 pub mod queue;
 pub mod quota;
 pub mod reservation;
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::ServiceModel;
@@ -58,6 +61,7 @@ use crate::util::ids::{
 use crate::util::json::Json;
 
 pub use accounting::{TenantUsage, UsageLedger};
+pub use persist::PersistedState;
 pub use preempt::{select_victim, victim_order, VictimInfo};
 pub use queue::{AdmissionQueue, QueueEntry};
 pub use quota::{QuotaBook, QuotaDenial, TenantQuota, PHYSICAL_EQUIV_UNITS};
@@ -211,6 +215,18 @@ pub struct Scheduler {
     total_regions: u64,
     state: Mutex<SchedState>,
     granted: Condvar,
+    /// Where quota + ledger state persists (set by
+    /// [`Scheduler::attach_persistence`]); `None` = in-memory only.
+    /// Lock order: `state` before `persist_path`.
+    persist_path: Mutex<Option<PathBuf>>,
+    /// Monotonic snapshot counter, assigned under the state lock so
+    /// sequence order matches snapshot order.
+    persist_seq: AtomicU64,
+    /// Sequence of the newest snapshot already on disk — file writes
+    /// happen after the state lock is dropped, so without this guard
+    /// two concurrent writers could land out of order and persist a
+    /// stale snapshot last.
+    persist_written: Mutex<u64>,
 }
 
 /// Physically free regions on devices serving `model`, ignoring
@@ -297,11 +313,80 @@ impl Scheduler {
                 ready: BTreeMap::new(),
             }),
             granted: Condvar::new(),
+            persist_path: Mutex::new(None),
+            persist_seq: AtomicU64::new(1),
+            persist_written: Mutex::new(0),
         })
+    }
+
+    /// Build a scheduler whose quota + ledger state persists next to
+    /// the device DB at `db_path`, loading existing state when
+    /// present (accounting survives a management-node restart).
+    pub fn new_persistent(
+        hv: Arc<Hypervisor>,
+        db_path: &Path,
+    ) -> Result<Arc<Scheduler>, String> {
+        let sched = Scheduler::new(hv);
+        sched.attach_persistence(db_path)?;
+        Ok(sched)
     }
 
     pub fn hv(&self) -> &Arc<Hypervisor> {
         &self.hv
+    }
+
+    // -------------------------------------------------- persistence
+
+    /// Attach durable accounting: load `<db-stem>.sched.json` (next
+    /// to `db_path`) when it exists, and re-save on every accounting
+    /// mutation from now on. A raised reloaded cap can admit queued
+    /// work, so the queue is pumped after a load.
+    pub fn attach_persistence(
+        &self,
+        db_path: &Path,
+    ) -> Result<(), String> {
+        let path = persist::sched_state_path(db_path);
+        let mut st = self.state.lock().unwrap();
+        if path.exists() {
+            let loaded = persist::load(&path)?;
+            st.quotas.restore_limits(loaded.quotas);
+            st.ledger.restore(loaded.usage);
+            self.pump_locked(&mut st);
+        }
+        *self.persist_path.lock().unwrap() = Some(path);
+        drop(st);
+        self.granted.notify_all();
+        Ok(())
+    }
+
+    /// Snapshot the durable state for writing, if persistence is
+    /// attached. Called under the state lock (which also orders the
+    /// sequence numbers); the caller writes the file *after* dropping
+    /// it so disk IO never blocks admissions.
+    fn persist_snapshot_locked(
+        &self,
+        st: &SchedState,
+    ) -> Option<(u64, PathBuf, String)> {
+        let path = self.persist_path.lock().unwrap().clone()?;
+        let seq = self.persist_seq.fetch_add(1, Ordering::Relaxed);
+        Some((seq, path, persist::render(&st.quotas, &st.ledger)))
+    }
+
+    /// Write a snapshot taken by [`Scheduler::persist_snapshot_locked`],
+    /// skipping it when a newer snapshot already reached disk.
+    fn write_persisted(&self, pending: Option<(u64, PathBuf, String)>) {
+        let Some((seq, path, text)) = pending else { return };
+        let mut written = self.persist_written.lock().unwrap();
+        if *written > seq {
+            return;
+        }
+        match std::fs::write(&path, text) {
+            Ok(()) => *written = seq,
+            Err(e) => log::warn!(
+                "sched state persist to {} failed: {e}",
+                path.display()
+            ),
+        }
     }
 
     // ------------------------------------------------------- quotas
@@ -324,7 +409,10 @@ impl Scheduler {
         f(&mut quota);
         st.quotas.set(user, quota);
         self.pump_locked(&mut st);
+        let pending = self.persist_snapshot_locked(&st);
+        drop(st);
         self.granted.notify_all();
+        self.write_persisted(pending);
         quota
     }
 
@@ -413,7 +501,13 @@ impl Scheduler {
         // Reservation expiry (or a preemption) may have freed
         // capacity queued work can use — pump before returning.
         self.pump_locked(&mut st);
+        // Grants and preemption-downtime charges count against
+        // budgets, so they must reach the state file too — not just
+        // releases and quota updates.
+        let pending = self.persist_snapshot_locked(&st);
+        drop(st);
         self.granted.notify_all();
+        self.write_persisted(pending);
         result
     }
 
@@ -624,7 +718,10 @@ impl Scheduler {
         };
         self.finish_grant_locked(&mut st, grant.clone());
         self.pump_locked(&mut st);
+        let pending = self.persist_snapshot_locked(&st);
+        drop(st);
         self.granted.notify_all();
+        self.write_persisted(pending);
         Ok(grant)
     }
 
@@ -666,8 +763,10 @@ impl Scheduler {
         }
         self.hv.metrics.counter("sched.released").inc();
         self.pump_locked(&mut st);
+        let pending = self.persist_snapshot_locked(&st);
         drop(st);
         self.granted.notify_all();
+        self.write_persisted(pending);
         release_result.map_err(|e| SchedError::Hypervisor(e.to_string()))
     }
 
@@ -755,7 +854,9 @@ impl Scheduler {
             {
                 return Err(SchedError::NoCapacity);
             }
-            if !(allow_preempt && self.try_preempt_locked(st, model, class)) {
+            if !(allow_preempt
+                && self.try_preempt_locked(st, user, model, class))
+            {
                 return Err(SchedError::NoCapacity);
             }
             // A migration relocates a victim but cannot conjure
@@ -853,9 +954,15 @@ impl Scheduler {
 
     /// Relocate the best lower-class victim via migration so a region
     /// on a device serving `model` frees up. Returns true on success.
+    ///
+    /// Cost model: the migration downtime is billed to `preemptor`'s
+    /// tenant ([`UsageLedger::charge_preemption`]), and the victim's
+    /// accrual clock is advanced past the outage so the displaced
+    /// tenant is not charged for time it could not use.
     fn try_preempt_locked(
         &self,
         st: &mut SchedState,
+        preemptor: UserId,
         model: ServiceModel,
         class: RequestClass,
     ) -> bool {
@@ -908,6 +1015,28 @@ impl Scheduler {
             {
                 Ok(report) => {
                     self.rebind_grant_locked(st, victim.alloc, report.to);
+                    // Charge the outage to the preemptor, skip the
+                    // victim's accrual clock over it (migrate_vfpga
+                    // advanced the virtual clock by the downtime, so
+                    // the victim's lease would otherwise be billed
+                    // for time it was dark).
+                    let now_ns = self.hv.clock.now().0;
+                    let mut victim_rate_w = 0.0;
+                    let mut victim_units = 1u64;
+                    if let Some(g) = st.grants.get_mut(&victim.alloc) {
+                        g.started_ns = g
+                            .started_ns
+                            .saturating_add(report.downtime.0)
+                            .min(now_ns);
+                        victim_rate_w = g.charge_w;
+                        victim_units = g.units;
+                    }
+                    st.ledger.charge_preemption(
+                        preemptor,
+                        report.downtime.as_secs_f64()
+                            * victim_units as f64,
+                        victim_rate_w,
+                    );
                     st.ledger.row_mut(victim.user).preempted += 1;
                     self.hv.metrics.counter("sched.preemptions").inc();
                     log::info!(
@@ -1108,7 +1237,12 @@ impl Scheduler {
                 // interactive entry for another model still might.
                 continue;
             }
-            if self.try_preempt_locked(st, entry.model, entry.class) {
+            if self.try_preempt_locked(
+                st,
+                entry.user,
+                entry.model,
+                entry.class,
+            ) {
                 return true;
             }
         }
@@ -1381,6 +1515,93 @@ mod tests {
             .find(|g| g.fpga() != crate::util::ids::FpgaId(0))
             .expect("one batch lease migrated");
         s.release(moved.alloc).unwrap();
+    }
+
+    #[test]
+    fn preemption_downtime_charged_to_preemptor() {
+        let s = sched_on(&ClusterConfig::sched_testbed());
+        let batcher = s.hv().add_user("batcher");
+        let vip = s.hv().add_user("vip");
+        // Fill the RAaaS-capable device with programmed batch leases
+        // so the vip's interactive request must preempt.
+        let _grants = crate::testing::fill_batch_leases(&s, batcher, 4);
+        let _g = s
+            .acquire_vfpga(vip, ServiceModel::RAaaS, RequestClass::Interactive)
+            .unwrap();
+        // The migration outage lands on the preemptor's bill...
+        let vip_row = s.usage(vip);
+        assert!(
+            vip_row.preempt_downtime_s > 0.0,
+            "preemptor not charged: {vip_row:?}"
+        );
+        assert!(
+            vip_row.device_seconds >= vip_row.preempt_downtime_s
+        );
+        assert!(vip_row.energy_joules > 0.0);
+        // ...and not on the victim's.
+        let batcher_row = s.usage(batcher);
+        assert_eq!(batcher_row.preempted, 1);
+        assert_eq!(batcher_row.preempt_downtime_s, 0.0);
+        // The victim's accrual clock skipped the outage: its grant
+        // now starts at (or after) the pre-preemption timestamps.
+        let moved = s
+            .active_grants()
+            .into_iter()
+            .filter(|g| g.user == batcher)
+            .max_by_key(|g| g.started_ns)
+            .unwrap();
+        assert!(moved.started_ns <= s.hv().clock.now().0);
+    }
+
+    #[test]
+    fn persistence_survives_restart() {
+        let dir = std::env::temp_dir().join(format!(
+            "rc3e-sched-persist-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let db_path = dir.join("devices.json");
+        let state_path = persist::sched_state_path(&db_path);
+        let _ = std::fs::remove_file(&state_path);
+        let user;
+        {
+            let s = sched();
+            s.attach_persistence(&db_path).unwrap();
+            user = s.hv().add_user("durable");
+            s.set_quota(
+                user,
+                TenantQuota {
+                    max_concurrent: 3,
+                    device_seconds_budget: Some(500.0),
+                    weight: 2,
+                },
+            );
+            let g = s
+                .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+                .unwrap();
+            s.hv().clock.advance(VirtualTime::from_secs_f64(5.0));
+            s.release(g.alloc).unwrap();
+        }
+        assert!(state_path.exists());
+        // "Restart": a fresh hypervisor + scheduler reload the
+        // accounting from disk.
+        let s2 = Scheduler::new_persistent(
+            Arc::new(
+                Hypervisor::boot_paper_testbed(VirtualClock::new())
+                    .unwrap(),
+            ),
+            &db_path,
+        )
+        .unwrap();
+        let q = s2.quota(user);
+        assert_eq!(q.max_concurrent, 3);
+        assert_eq!(q.device_seconds_budget, Some(500.0));
+        assert_eq!(q.weight, 2);
+        let usage = s2.usage(user);
+        assert_eq!(usage.released, 1);
+        assert!(usage.device_seconds >= 5.0, "{usage:?}");
+        std::fs::remove_file(&state_path).unwrap();
+        let _ = std::fs::remove_dir(&dir);
     }
 
     #[test]

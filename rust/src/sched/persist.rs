@@ -1,0 +1,133 @@
+//! Scheduler state persistence: quotas + usage ledger on disk.
+//!
+//! The device database already persists as pretty-printed JSON
+//! ([`crate::hypervisor::DeviceDb::save`]); this module puts the
+//! scheduler's durable accounting — configured tenant quotas and the
+//! usage ledger — in a sibling file (`<db-stem>.sched.json`) so a
+//! management-node restart cannot reset budgets or forget consumed
+//! device-seconds (ROADMAP item). Live state (grants, queue,
+//! reservations, in-use concurrency) deliberately does *not*
+//! persist: those belong to leases that die with the process.
+//!
+//! [`crate::sched::Scheduler::attach_persistence`] loads a state file
+//! when present and re-saves at every accounting boundary —
+//! admissions (which include preemption-downtime charges), releases
+//! and quota updates. Queue-pump grants triggered from the blocking
+//! wait path's fallback tick persist at the next boundary operation.
+//! Writes are sequence-guarded so concurrent snapshots cannot land on
+//! disk out of order.
+
+use std::path::{Path, PathBuf};
+
+use super::accounting::UsageLedger;
+use super::quota::QuotaBook;
+use crate::util::json::Json;
+
+/// Format version stamped into the state file.
+pub const STATE_VERSION: u64 = 1;
+
+/// The durable scheduler state.
+#[derive(Debug, Default)]
+pub struct PersistedState {
+    pub quotas: QuotaBook,
+    pub usage: UsageLedger,
+}
+
+/// Where the scheduler state lives for a device DB at `db_path`:
+/// a sibling file named `<stem>.sched.json`.
+pub fn sched_state_path(db_path: &Path) -> PathBuf {
+    let stem = db_path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("state");
+    db_path.with_file_name(format!("{stem}.sched.json"))
+}
+
+/// Render the state document (pretty-printed, like the device DB, so
+/// operators can inspect it and tests can diff it).
+pub fn render(quotas: &QuotaBook, usage: &UsageLedger) -> String {
+    Json::obj(vec![
+        ("version", Json::from(STATE_VERSION)),
+        ("quotas", quotas.to_json()),
+        ("usage", usage.to_json()),
+    ])
+    .to_pretty()
+}
+
+/// Parse a state document produced by [`render`].
+pub fn parse(text: &str) -> Result<PersistedState, String> {
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    let version = v.get("version").as_u64().unwrap_or(0);
+    if version > STATE_VERSION {
+        return Err(format!(
+            "sched state version {version} is newer than supported \
+             {STATE_VERSION}"
+        ));
+    }
+    Ok(PersistedState {
+        quotas: QuotaBook::from_json(v.get("quotas"))?,
+        usage: UsageLedger::from_json(v.get("usage"))?,
+    })
+}
+
+/// Load a state file.
+pub fn load(path: &Path) -> Result<PersistedState, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::TenantQuota;
+    use crate::util::ids::UserId;
+
+    #[test]
+    fn state_path_sits_next_to_db() {
+        let p = sched_state_path(Path::new("/var/rc3e/devices.json"));
+        assert_eq!(p, PathBuf::from("/var/rc3e/devices.sched.json"));
+        let p = sched_state_path(Path::new("cluster.json"));
+        assert_eq!(p, PathBuf::from("cluster.sched.json"));
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let mut quotas = QuotaBook::new();
+        quotas.set(
+            UserId(2),
+            TenantQuota {
+                max_concurrent: 4,
+                device_seconds_budget: Some(50.0),
+                weight: 2,
+            },
+        );
+        let mut usage = UsageLedger::new();
+        usage.charge_release(UserId(2), 12.0, 4.0);
+        usage.row_mut(UserId(2)).granted = 3;
+        let text = render(&quotas, &usage);
+        let state = parse(&text).unwrap();
+        assert_eq!(
+            state.quotas.quota(UserId(2)),
+            quotas.quota(UserId(2))
+        );
+        assert_eq!(state.usage.usage(UserId(2)), usage.usage(UserId(2)));
+    }
+
+    #[test]
+    fn future_version_is_rejected() {
+        let doc = Json::obj(vec![
+            ("version", Json::from(STATE_VERSION + 1)),
+            ("quotas", Json::Arr(vec![])),
+            ("usage", Json::Arr(vec![])),
+        ]);
+        assert!(parse(&doc.to_string()).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_typed_error() {
+        let err =
+            load(Path::new("/nonexistent/rc3e.sched.json")).unwrap_err();
+        assert!(err.contains("rc3e.sched.json"), "{err}");
+    }
+}

@@ -16,6 +16,12 @@
 //! 2. youngest lease first — the least accumulated work is lost to
 //!    the migration downtime;
 //! 3. ties break on the highest allocation id (the most recent grant).
+//!
+//! Cost model: the migration downtime is charged to the *preemptor's*
+//! tenant, not the victim's — the scheduler bills the outage via
+//! [`super::accounting::UsageLedger::charge_preemption`] and advances
+//! the victim's accrual clock past it, so displacing someone costs
+//! the tenant who asked for it.
 
 use crate::config::ServiceModel;
 use crate::util::ids::{AllocationId, FpgaId, UserId, VfpgaId};

@@ -18,6 +18,7 @@
 use std::collections::BTreeMap;
 
 use crate::util::ids::UserId;
+use crate::util::json::Json;
 
 /// vFPGA-equivalents charged for a whole physical device (Section I /
 /// IV-A: up to four vFPGAs per device).
@@ -152,6 +153,73 @@ impl QuotaBook {
     pub fn snapshot(&self) -> Vec<(UserId, TenantQuota)> {
         self.quotas.iter().map(|(u, q)| (*u, *q)).collect()
     }
+
+    /// Serialize the configured limits (not the live `in_use` state,
+    /// which belongs to leases that do not survive a restart).
+    /// `max_concurrent: null` encodes unlimited — `u64::MAX` would
+    /// lose precision through the f64-backed [`Json`] number.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.quotas
+                .iter()
+                .map(|(user, q)| {
+                    Json::obj(vec![
+                        ("user", Json::from(user.to_string())),
+                        (
+                            "max_concurrent",
+                            if q.max_concurrent == u64::MAX {
+                                Json::Null
+                            } else {
+                                Json::from(q.max_concurrent)
+                            },
+                        ),
+                        (
+                            "budget_s",
+                            match q.device_seconds_budget {
+                                Some(b) => Json::from(b),
+                                None => Json::Null,
+                            },
+                        ),
+                        ("weight", Json::from(q.weight)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Restore limits from [`QuotaBook::to_json`] output. The
+    /// returned book has no live concurrency state.
+    pub fn from_json(v: &Json) -> Result<QuotaBook, String> {
+        let rows =
+            v.as_arr().ok_or("quota book must be a JSON array")?;
+        let mut book = QuotaBook::new();
+        for r in rows {
+            let user = UserId::parse(r.str_field("user")?)
+                .ok_or("bad user id in quota book")?;
+            book.set(
+                user,
+                TenantQuota {
+                    max_concurrent: r
+                        .get("max_concurrent")
+                        .as_u64()
+                        .unwrap_or(u64::MAX),
+                    device_seconds_budget: r.get("budget_s").as_f64(),
+                    weight: r
+                        .get("weight")
+                        .as_u64()
+                        .unwrap_or(1)
+                        .max(1),
+                },
+            );
+        }
+        Ok(book)
+    }
+
+    /// Replace the configured limits with a reloaded snapshot,
+    /// keeping this book's live concurrency state.
+    pub fn restore_limits(&mut self, other: QuotaBook) {
+        self.quotas = other.quotas;
+    }
 }
 
 #[cfg(test)]
@@ -214,6 +282,30 @@ mod tests {
         book.credit(u, 2);
         book.credit(u, 99);
         assert_eq!(book.in_use(u), 0);
+    }
+
+    #[test]
+    fn quota_book_serialization_roundtrip() {
+        let mut book = QuotaBook::new();
+        book.set(
+            UserId(0),
+            TenantQuota {
+                max_concurrent: 3,
+                device_seconds_budget: Some(120.0),
+                weight: 4,
+            },
+        );
+        book.set(UserId(5), TenantQuota::default());
+        book.charge(UserId(0), 2); // live state must NOT serialize
+        let back = QuotaBook::from_json(&book.to_json()).unwrap();
+        assert_eq!(back.quota(UserId(0)), book.quota(UserId(0)));
+        assert_eq!(back.quota(UserId(5)), TenantQuota::default());
+        assert_eq!(back.in_use(UserId(0)), 0);
+        // restore_limits keeps live concurrency.
+        book.restore_limits(back);
+        assert_eq!(book.in_use(UserId(0)), 2);
+        assert_eq!(book.quota(UserId(0)).max_concurrent, 3);
+        assert!(QuotaBook::from_json(&Json::from(1u64)).is_err());
     }
 
     #[test]

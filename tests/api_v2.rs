@@ -1,0 +1,533 @@
+//! Integration tests for the typed, versioned middleware API v2:
+//! protocol negotiation, structured error codes, async job handles,
+//! and a client↔server round trip through every typed method.
+
+use std::sync::Arc;
+
+use rc3e::config::{ClusterConfig, ServiceModel};
+use rc3e::hypervisor::{Hypervisor, HypervisorError, PlacementPolicy};
+use rc3e::middleware::api::{
+    ApiError, ErrorCode, HelloRequest, Method, QuotaSetRequest,
+    ReserveRequest, StreamOutcomeBody, WorkloadRequest, PROTO_MAX,
+    PROTO_MIN,
+};
+use rc3e::middleware::{
+    read_frame, write_frame, Client, ManagementServer, NodeAgent,
+    Response,
+};
+use rc3e::sched::{RequestClass, SchedError};
+use rc3e::util::clock::{VirtualClock, VirtualTime};
+use rc3e::util::ids::{AllocationId, FpgaId, JobId, NodeId};
+use rc3e::util::json::Json;
+
+struct Cloud {
+    server: ManagementServer,
+    agents: Vec<NodeAgent>,
+    client: Client,
+    hv: Arc<Hypervisor>,
+}
+
+fn cloud() -> Cloud {
+    let clock = VirtualClock::new();
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut agents = Vec::new();
+    for n in [NodeId(0), NodeId(1)] {
+        let a = NodeAgent::spawn(Arc::clone(&hv), n, None).unwrap();
+        server.register_agent(n, a.addr());
+        agents.push(a);
+    }
+    let client = Client::connect(server.addr()).unwrap();
+    Cloud {
+        server,
+        agents,
+        client,
+        hv,
+    }
+}
+
+/// A single-device cloud that also serves RSaaS (the paper testbed
+/// does not), for the physical-lease + program_full job path.
+fn rsaas_cloud() -> (ManagementServer, Client, Arc<Hypervisor>) {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            &ClusterConfig::single_vc707(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+    (server, client, hv)
+}
+
+// ====================================================== negotiation
+
+#[test]
+fn hello_negotiates_protocol_window() {
+    let mut c = cloud();
+    let hello = c.client.hello().unwrap();
+    assert_eq!(hello.version, rc3e::VERSION);
+    assert_eq!(hello.service, "rc3e-management");
+    assert_eq!(hello.proto_min, PROTO_MIN);
+    assert_eq!(hello.proto_max, PROTO_MAX);
+    assert_eq!(hello.proto, PROTO_MAX);
+    // connect_negotiated wraps the same handshake.
+    let (_c2, h2) =
+        Client::connect_negotiated(c.server.addr()).unwrap();
+    assert_eq!(h2.proto, PROTO_MAX);
+}
+
+#[test]
+fn version_mismatch_is_rejected_with_code() {
+    let mut c = cloud();
+    // A future-only client window is rejected at hello...
+    let future = HelloRequest {
+        proto_min: PROTO_MAX + 1,
+        proto_max: PROTO_MAX + 5,
+    };
+    let err = c
+        .client
+        .call_v2(Method::Hello.name(), future.to_json())
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::ProtocolMismatch);
+    assert!(!err.retryable);
+    // ...and a request stamped with an unsupported envelope protocol
+    // is rejected before dispatch, whatever the method.
+    let mut stream =
+        std::net::TcpStream::connect(c.server.addr()).unwrap();
+    let raw = Json::obj(vec![
+        ("method", Json::from("hello")),
+        ("params", Json::obj(vec![])),
+        ("id", Json::from(1u64)),
+        ("proto", Json::from(99u64)),
+    ]);
+    write_frame(&mut stream, &raw).unwrap();
+    let frame = read_frame(&mut stream).unwrap().unwrap();
+    let resp = Response::from_json(&frame).unwrap();
+    assert_eq!(resp.id, Some(1));
+    let err = resp.into_api_result().unwrap_err();
+    assert_eq!(err.code, ErrorCode::ProtocolMismatch);
+}
+
+// ====================================================== error codes
+
+#[test]
+fn every_error_code_roundtrips_the_wire() {
+    for code in ErrorCode::ALL {
+        let e = ApiError::new(code, format!("synthetic {}", code.name()));
+        let rt = ApiError::from_json(&e.to_json()).unwrap();
+        assert_eq!(rt.code, code);
+        assert_eq!(rt.retryable, code.retryable());
+        // The name is stable and parseable.
+        assert_eq!(ErrorCode::parse(code.name()), Some(code));
+    }
+}
+
+#[test]
+fn every_sched_and_hypervisor_error_maps_to_a_code() {
+    use rc3e::util::ids::ReservationId;
+    let sched_cases: Vec<(SchedError, ErrorCode)> = vec![
+        (SchedError::NoCapacity, ErrorCode::NoCapacity),
+        (SchedError::QuotaBudget("b".into()), ErrorCode::QuotaBudget),
+        (
+            SchedError::QuotaConcurrency("c".into()),
+            ErrorCode::QuotaExceeded,
+        ),
+        (SchedError::Hypervisor("h".into()), ErrorCode::Internal),
+        (
+            SchedError::UnknownGrant(AllocationId(7)),
+            ErrorCode::BadLease,
+        ),
+        (SchedError::Cancelled, ErrorCode::Cancelled),
+        (
+            SchedError::UnknownReservation(ReservationId(1)),
+            ErrorCode::UnknownReservation,
+        ),
+    ];
+    for (e, expect) in sched_cases {
+        assert_eq!(ApiError::from(&e).code, expect, "{e}");
+    }
+    let hv_cases: Vec<(HypervisorError, ErrorCode)> = vec![
+        (HypervisorError::NoCapacity, ErrorCode::NoCapacity),
+        (HypervisorError::Db("d".into()), ErrorCode::Internal),
+        (HypervisorError::Device("x".into()), ErrorCode::DeviceFault),
+        (
+            HypervisorError::Sanity(
+                rc3e::bitstream::SanityError::BadCrc,
+            ),
+            ErrorCode::SanityRejected,
+        ),
+        (
+            HypervisorError::BadAllocation(AllocationId(3)),
+            ErrorCode::BadLease,
+        ),
+        (
+            HypervisorError::WrongKind(AllocationId(3)),
+            ErrorCode::BadLease,
+        ),
+        (
+            HypervisorError::UnknownDevice(FpgaId(9)),
+            ErrorCode::UnknownDevice,
+        ),
+        (
+            HypervisorError::UnknownService("s".into()),
+            ErrorCode::UnknownService,
+        ),
+        (HypervisorError::Sched("s".into()), ErrorCode::Internal),
+    ];
+    for (e, expect) in hv_cases {
+        assert_eq!(ApiError::from(&e).code, expect, "{e}");
+    }
+}
+
+#[test]
+fn wire_errors_carry_machine_readable_codes() {
+    let mut c = cloud();
+    let user = c.client.add_user("coder").unwrap().user;
+
+    // Bad request: missing field.
+    let err = c
+        .client
+        .call_v2(Method::Status.name(), Json::obj(vec![]))
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+
+    // Unknown method.
+    let err = c
+        .client
+        .call_v2("reboot_world", Json::obj(vec![]))
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownMethod);
+
+    // Unknown device.
+    let err = c.client.status(FpgaId(99)).unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownDevice);
+
+    // Bad lease: release of a never-granted allocation.
+    let err = c.client.release(AllocationId(999)).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadLease);
+
+    // Unknown core.
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
+    let err = c
+        .client
+        .program_core(user, lease.alloc, "warpcore")
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownCore);
+
+    // Unknown service (BAaaS job fails with the typed code).
+    let job = c.client.invoke_service(user, "no-such", 16).unwrap().job;
+    let err = c.client.job_wait_done(job).unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownService);
+
+    // Unknown reservation.
+    let err = c
+        .client
+        .cancel_reservation(rc3e::util::ids::ReservationId(42))
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownReservation);
+
+    // Unknown job.
+    let err = c.client.job_status(JobId(4242)).unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownJob);
+    c.client.release(lease.alloc).unwrap();
+}
+
+#[test]
+fn quota_and_capacity_errors_are_actionable() {
+    let mut c = cloud();
+    let user = c.client.add_user("bounded").unwrap().user;
+    c.client
+        .quota_set(&QuotaSetRequest {
+            user,
+            max_vfpgas: Some(1),
+            budget_s: None,
+            weight: None,
+        })
+        .unwrap();
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
+    // Concurrency quota: retryable, with a backoff hint.
+    let err = c.client.alloc_vfpga(user, None, None).unwrap_err();
+    assert_eq!(err.code, ErrorCode::QuotaExceeded);
+    assert!(err.retryable);
+    assert!(err.retry_after_s.is_some());
+    c.client.release(lease.alloc).unwrap();
+
+    // Budget exhaustion: terminal, not retryable.
+    c.client
+        .quota_set(&QuotaSetRequest {
+            user,
+            max_vfpgas: Some(0),
+            budget_s: Some(1.0),
+            weight: None,
+        })
+        .unwrap();
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
+    c.hv.clock.advance(VirtualTime::from_secs_f64(10.0));
+    c.client.release(lease.alloc).unwrap();
+    let err = c.client.alloc_vfpga(user, None, None).unwrap_err();
+    assert_eq!(err.code, ErrorCode::QuotaBudget);
+    assert!(!err.retryable);
+
+    // NoCapacity: another tenant walled off by a full reservation.
+    let holder = c.client.add_user("holder").unwrap().user;
+    let other = c.client.add_user("other").unwrap().user;
+    let r = c
+        .client
+        .reserve(&ReserveRequest {
+            user: holder,
+            regions: 16,
+            start_s: None,
+            duration_s: Some(10_000.0),
+        })
+        .unwrap();
+    let err = c.client.alloc_vfpga(other, None, None).unwrap_err();
+    assert_eq!(err.code, ErrorCode::NoCapacity);
+    assert!(err.retryable);
+    c.client.cancel_reservation(r.reservation).unwrap();
+    assert!(c.client.alloc_vfpga(other, None, None).is_ok());
+}
+
+// ============================================================= jobs
+
+#[test]
+fn job_lifecycle_submit_status_wait_cancel() {
+    let (_s, mut c, _hv) = rsaas_cloud();
+    let user = c.add_user("rs").unwrap().user;
+    let lease = c.alloc_physical(user).unwrap();
+
+    // Submit: the handle comes back immediately.
+    let job = c
+        .program_full(user, lease.alloc, Some("my_design"))
+        .unwrap()
+        .job;
+
+    // Status: running or already done, never an error.
+    let body = c.job_status(job).unwrap();
+    assert!(matches!(body.state.as_str(), "running" | "done"));
+    assert_eq!(body.method, "program_full");
+
+    // Wait reproduces the old synchronous result.
+    let result = c.job_wait_done(job).unwrap();
+    let resp =
+        rc3e::middleware::api::ProgramFullResponse::from_json(&result)
+            .unwrap();
+    assert_eq!(resp.programmed, "my_design");
+    // Full config via RC3E ≈ 29.4 virtual seconds (Table I).
+    assert!(resp.config_s > 20.0, "{}", resp.config_s);
+
+    // Cancel after completion: terminal state is immutable.
+    let cancelled = c.job_cancel(job).unwrap();
+    assert_eq!(cancelled.state, "done");
+
+    // The sync convenience wrapper is the same flow in one call.
+    let resp2 = c
+        .program_full_sync(user, lease.alloc, None)
+        .unwrap();
+    assert_eq!(resp2.programmed, "user_design");
+    c.release(lease.alloc).unwrap();
+}
+
+#[test]
+fn stream_jobs_reproduce_synchronous_outcomes() {
+    let mut c = cloud();
+    let user = c.client.add_user("streamer").unwrap().user;
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
+    c.client
+        .program_core(user, lease.alloc, "matmul16")
+        .unwrap();
+    // The job handle comes back regardless of artifact availability;
+    // the job then terminates either way.
+    let job = c
+        .client
+        .stream(user, lease.alloc, "matmul16", 256)
+        .unwrap()
+        .job;
+    let body = c.client.job_wait(job, Some(60.0)).unwrap();
+    assert!(body.is_terminal(), "{:?}", body.state);
+    if rc3e::testing::artifacts_available("api_v2::stream_jobs") {
+        let out = StreamOutcomeBody::from_json(
+            &body.into_done().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(out.validation_failures, 0);
+        assert!(out.virtual_mbps > 400.0);
+        // stream_sync ≡ submit + wait.
+        let out2 = c
+            .client
+            .stream_sync(user, lease.alloc, "matmul16", 256)
+            .unwrap();
+        assert_eq!(out2.validation_failures, 0);
+    }
+    c.client.release(lease.alloc).unwrap();
+}
+
+#[test]
+fn invoke_service_runs_as_job() {
+    let mut c = cloud();
+    // Provider registers a service; end users see only its name.
+    let synth = rc3e::hls::Synthesizer::new();
+    let report =
+        synth.synthesize(&rc3e::hls::CoreSpec::matmul(16, "xc7vx485t"));
+    c.hv.register_service(
+        "linalg",
+        rc3e::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            "matmul16",
+        )
+        .resources(report.total_for(1))
+        .frames(rc3e::hls::flow::region_window(0, 1))
+        .artifact("matmul16_b256")
+        .build(),
+    );
+    let user = c.client.add_user("enduser").unwrap().user;
+    assert!(c
+        .client
+        .services()
+        .unwrap()
+        .services
+        .contains(&"linalg".to_string()));
+    let job = c.client.invoke_service(user, "linalg", 64).unwrap().job;
+    let body = c.client.job_wait(job, Some(60.0)).unwrap();
+    assert!(body.is_terminal());
+    if rc3e::testing::artifacts_available("api_v2::invoke_service") {
+        let out =
+            StreamOutcomeBody::from_json(&body.into_done().unwrap())
+                .unwrap();
+        assert_eq!(out.validation_failures, 0);
+    }
+}
+
+// ================================== typed round trips, full surface
+
+#[test]
+fn typed_roundtrip_across_the_surface() {
+    let mut c = cloud();
+
+    // add_user / alloc_vfpga with explicit model+class.
+    let user = c.client.add_user("alice").unwrap().user;
+    let lease = c
+        .client
+        .alloc_vfpga(
+            user,
+            Some(ServiceModel::RAaaS),
+            Some(RequestClass::Interactive),
+        )
+        .unwrap();
+    assert_eq!(lease.wait_ms, 0.0);
+
+    // status (routed through the node agent).
+    let st = c.client.status(lease.fpga).unwrap();
+    assert_eq!(st.fpga, lease.fpga);
+    assert_eq!(st.regions_total, 4);
+
+    // program_core + migrate.
+    let prog = c
+        .client
+        .program_core(user, lease.alloc, "matmul16")
+        .unwrap();
+    assert_eq!(prog.programmed, "matmul16");
+    assert!(prog.pr_ms > 700.0);
+    let mig = c.client.migrate(user, lease.alloc).unwrap();
+    assert_ne!(mig.from, mig.to);
+    assert!(mig.downtime_ms > 0.0);
+
+    // cores / services.
+    let cores = c.client.cores().unwrap();
+    assert!(cores.cores.contains(&"matmul16".to_string()));
+    let services = c.client.services().unwrap();
+    assert!(services.services.is_empty());
+
+    // monitor carries device summaries + scheduler telemetry.
+    let mon = c.client.monitor().unwrap();
+    assert_eq!(mon.devices.as_arr().unwrap().len(), 4);
+    assert_eq!(mon.sched.active_grants, 1);
+    assert!(mon.sched.wait.count >= 1);
+
+    // sched_status / quota / usage / reservations.
+    let sched = c.client.sched_status().unwrap();
+    assert_eq!(sched.status.get("active_grants").as_u64(), Some(1));
+    let q = c
+        .client
+        .quota_set(&QuotaSetRequest {
+            user,
+            max_vfpgas: Some(4),
+            budget_s: None,
+            weight: Some(2),
+        })
+        .unwrap();
+    assert_eq!(q.max_vfpgas, 4);
+    assert_eq!(q.in_use, 1);
+    let q2 = c.client.quota_get(user).unwrap();
+    assert_eq!(q2.weight, 2);
+    let r = c
+        .client
+        .reserve(&ReserveRequest {
+            user,
+            regions: 2,
+            start_s: None,
+            duration_s: Some(50.0),
+        })
+        .unwrap();
+    c.client.cancel_reservation(r.reservation).unwrap();
+
+    // release + usage report.
+    assert!(c.client.release(lease.alloc).unwrap().released);
+    let usage = c.client.usage_report().unwrap();
+    assert!(usage.table.contains("tenant"));
+    assert_eq!(usage.tenants.as_arr().unwrap().len(), 1);
+
+    // energy + db_dump.
+    let energy = c.client.energy().unwrap();
+    assert!(energy.joules >= 0.0);
+    let dump = c.client.db_dump().unwrap();
+    let db = rc3e::hypervisor::DeviceDb::from_json(&dump.db).unwrap();
+    assert_eq!(db.devices.len(), 4);
+
+    // workload (small synthetic run).
+    let report = c
+        .client
+        .workload(&WorkloadRequest {
+            rate: Some(0.5),
+            hold_s: Some(5.0),
+            sessions: Some(3),
+            seed: Some(7),
+        })
+        .unwrap();
+    assert_eq!(report.served + report.rejected, 3);
+
+    // agent methods, typed, straight at an agent.
+    let mut ac = Client::connect(c.agents[0].addr()).unwrap();
+    let hello = ac.agent_hello().unwrap();
+    assert_eq!(hello.node, NodeId(0));
+    let ast = ac.agent_status(FpgaId(0)).unwrap();
+    assert_eq!(ast.board, "vc707");
+}
+
+#[test]
+fn legacy_envelopes_stay_readable_one_version_behind() {
+    let mut c = cloud();
+    // v1 raw calls: bare-array catalogue shapes, string errors.
+    let cores = c.client.call("cores", Json::obj(vec![])).unwrap();
+    assert!(cores.as_arr().is_some(), "v1 cores must stay a bare array");
+    let services =
+        c.client.call("services", Json::obj(vec![])).unwrap();
+    assert!(services.as_arr().is_some());
+    let err = c
+        .client
+        .call("alloc_vfpga", Json::obj(vec![("user", Json::from("x"))]))
+        .unwrap_err();
+    assert!(err.contains("bad id"), "{err}");
+    // v2 of the same catalogue method is an object.
+    let cores2 = c
+        .client
+        .call_v2(Method::Cores.name(), Json::obj(vec![]))
+        .unwrap();
+    assert!(cores2.get("cores").as_arr().is_some());
+    // The hypervisor stayed consistent underneath both.
+    assert_eq!(c.hv.device_ids().len(), 4);
+}

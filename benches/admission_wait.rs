@@ -1,0 +1,181 @@
+//! Bounded-wait curve: sweep offered load vs admission-wait
+//! percentiles (the ROADMAP bench over the `sched.wait` histogram
+//! that the `monitor` RPC already serves).
+//!
+//! For each offered load ρ (arrival rate as a fraction of the
+//! cluster's service capacity at the mean hold time), a Poisson
+//! arrival process submits requests through the unified admission
+//! API; every granted lease is held for an exponentially-distributed
+//! virtual time and released. The `sched.wait` histogram then gives
+//! p50/p99/max of the *virtual* time requests spent queued.
+//!
+//! Two series: single-region requests and 2-region co-located gang
+//! requests (all-or-nothing admission — a gang must find two free
+//! regions on one device, so its waits grow faster with load).
+//!
+//! Everything runs on the virtual clock: the numbers are modeled
+//! scheduler behavior, not host wall time.
+//!
+//! Run: `cargo bench --bench admission_wait`
+
+use std::sync::Arc;
+
+use rc3e::config::{ClusterConfig, ServiceModel};
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::sched::{AdmissionRequest, Lease, RequestClass, Scheduler};
+use rc3e::util::clock::{VirtualClock, VirtualTime};
+use rc3e::util::ids::TicketId;
+use rc3e::util::rng::Rng;
+use rc3e::util::table::Table;
+
+/// Requests per load point (per series).
+const REQUESTS: usize = 300;
+/// Mean lease hold time (virtual seconds).
+const MEAN_HOLD_S: f64 = 8.0;
+/// Tenants generating the load.
+const TENANTS: usize = 8;
+
+struct Point {
+    p50_ms: f64,
+    p99_ms: f64,
+    max_ms: f64,
+    mean_ms: f64,
+}
+
+fn run_series(gang: u32, load: f64, seed: u64) -> Point {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            &ClusterConfig::paper_testbed(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    let sched = Scheduler::new(Arc::clone(&hv));
+    let users: Vec<_> = (0..TENANTS)
+        .map(|i| hv.add_user(&format!("tenant-{i}")))
+        .collect();
+    // 16 regions / gang concurrent leases; each occupies a slot for
+    // MEAN_HOLD_S on average → service capacity in leases/sec.
+    let capacity = 16.0 / f64::from(gang);
+    let arrival_rate = load * capacity / MEAN_HOLD_S;
+    let mut rng = Rng::new(seed);
+
+    let mut submitted = 0usize;
+    let mut next_arrival_ns =
+        hv.clock.now().0 + to_ns(rng.next_exp(arrival_rate));
+    // Outstanding tickets and live leases with their release times.
+    let mut outstanding: Vec<TicketId> = Vec::new();
+    let mut releases: Vec<(u64, Lease)> = Vec::new();
+
+    loop {
+        // Collect grants and schedule their releases.
+        let mut i = 0;
+        while i < outstanding.len() {
+            match sched.poll_ticket(outstanding[i]) {
+                Some(Ok(lease)) => {
+                    outstanding.remove(i);
+                    let hold =
+                        to_ns(rng.next_exp(1.0 / MEAN_HOLD_S)).max(1);
+                    releases.push((hv.clock.now().0 + hold, lease));
+                }
+                Some(Err(e)) => panic!("request failed: {e}"),
+                None => i += 1,
+            }
+        }
+        if submitted >= REQUESTS
+            && outstanding.is_empty()
+            && releases.is_empty()
+        {
+            break;
+        }
+        // Next event: soonest release, or the next arrival.
+        let next_release = releases.iter().map(|(t, _)| *t).min();
+        let next_event = match (submitted < REQUESTS, next_release) {
+            (true, Some(r)) => next_arrival_ns.min(r),
+            (true, None) => next_arrival_ns,
+            (false, Some(r)) => r,
+            (false, None) => {
+                // Only queued work left; nothing can free capacity —
+                // impossible by construction (grants always schedule
+                // a release), but never spin.
+                panic!("wedged: queued work with no pending release");
+            }
+        };
+        let now = hv.clock.now().0;
+        if next_event > now {
+            hv.clock.advance(VirtualTime(next_event - now));
+        }
+        let now = hv.clock.now().0;
+        // Fire due releases.
+        let mut j = 0;
+        while j < releases.len() {
+            if releases[j].0 <= now {
+                let (_, lease) = releases.remove(j);
+                lease.release().unwrap();
+            } else {
+                j += 1;
+            }
+        }
+        // Fire the arrival.
+        if submitted < REQUESTS && next_arrival_ns <= now {
+            let user = *rng.choose(&users);
+            let mut req = AdmissionRequest::new(
+                user,
+                ServiceModel::RAaaS,
+                RequestClass::Normal,
+            );
+            if gang > 1 {
+                req = req.gang(gang).co_located();
+            }
+            outstanding.push(sched.enqueue(&req));
+            submitted += 1;
+            next_arrival_ns = now + to_ns(rng.next_exp(arrival_rate));
+        }
+    }
+
+    let h = hv.metrics.histogram("sched.wait");
+    Point {
+        p50_ms: h.quantile_us(0.5) as f64 / 1e3,
+        p99_ms: h.quantile_us(0.99) as f64 / 1e3,
+        max_ms: h.max_us() as f64 / 1e3,
+        mean_ms: h.mean_us() / 1e3,
+    }
+}
+
+fn to_ns(secs: f64) -> u64 {
+    VirtualTime::from_secs_f64(secs).0
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    println!(
+        "admission_wait: offered load vs sched.wait percentiles \
+         ({REQUESTS} requests/point, mean hold {MEAN_HOLD_S} s, \
+         16-region paper testbed; virtual ms)\n"
+    );
+    for (label, gang, seed) in
+        [("single-region", 1u32, 0xBEEF), ("gang-2 co-located", 2, 0xFEED)]
+    {
+        let mut table = Table::new(
+            &format!("series: {label}"),
+            &["load", "p50 ms", "p99 ms", "max ms", "mean ms"],
+        );
+        for load in [0.25, 0.5, 0.75, 0.9, 1.1] {
+            let p = run_series(gang, load, seed);
+            table.row(&[
+                format!("{load:.2}"),
+                format!("{:.1}", p.p50_ms),
+                format!("{:.1}", p.p99_ms),
+                format!("{:.1}", p.max_ms),
+                format!("{:.1}", p.mean_ms),
+            ]);
+        }
+        print!("{}\n", table.render());
+    }
+    println!(
+        "reading: waits stay bounded below saturation and explode past \
+         it; the gang series saturates earlier because each admission \
+         needs {MEAN_HOLD_S}-second possession of 2 co-located regions."
+    );
+}

@@ -40,7 +40,8 @@ fn main() -> Result<(), String> {
     let mut leases = Vec::new();
     for name in ["alice", "bob", "carol", "dave"] {
         let user = hv.add_user(name);
-        let (alloc, vfpga) = svc.alloc(user).map_err(|e| e.to_string())?;
+        let lease = svc.alloc(user).map_err(|e| e.to_string())?;
+        let vfpga = lease.vfpga().ok_or("fresh lease unplaced")?;
         let bitfile = rc3e::bitstream::BitstreamBuilder::partial(
             "xc7vx485t",
             "matmul16",
@@ -49,9 +50,9 @@ fn main() -> Result<(), String> {
         .frames(rc3e::hls::flow::region_window(0, 1))
         .artifact("matmul16_b256")
         .build();
-        svc.program(alloc, user, &bitfile).map_err(|e| e.to_string())?;
+        lease.program(&bitfile).map_err(|e| e.to_string())?;
         println!("{name}: programmed matmul16 on {vfpga}");
-        leases.push((user, alloc));
+        leases.push(lease);
     }
 
     const MULTS: u64 = 20_000;
@@ -104,8 +105,8 @@ fn main() -> Result<(), String> {
          utilization argument for vFPGAs (Section V)."
     );
 
-    for (_, alloc) in leases {
-        svc.release(alloc).map_err(|e| e.to_string())?;
+    for lease in leases {
+        lease.release().map_err(|e| e.to_string())?;
     }
     Ok(())
 }

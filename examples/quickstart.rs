@@ -39,8 +39,13 @@ fn main() -> Result<(), String> {
     // 2. Lease a vFPGA under RAaaS.
     let svc = RaaasService::new(Arc::clone(&hv));
     let user = hv.add_user("quickstart");
-    let (alloc, vfpga) = svc.alloc(user).map_err(|e| e.to_string())?;
-    println!("leased {vfpga} (allocation {alloc})");
+    let lease = svc.alloc(user).map_err(|e| e.to_string())?;
+    let vfpga = lease.vfpga().ok_or("fresh lease unplaced")?;
+    println!(
+        "leased {vfpga} (allocation {}, token {})",
+        lease.alloc(),
+        lease.token()
+    );
 
     // 3. "HLS flow": synthesize the matmul core and build the
     //    relocatable partial bitfile bound to the HLO artifact.
@@ -61,15 +66,15 @@ fn main() -> Result<(), String> {
 
     // 4. Program (sanity check → PR → controller update).
     let t0 = clock.now();
-    svc.program(alloc, user, &bitfile).map_err(|e| e.to_string())?;
+    lease.program(&bitfile).map_err(|e| e.to_string())?;
     println!(
         "programmed in {:.0} ms (PR + RC3E orchestration)",
         clock.since(t0).as_millis_f64()
     );
 
     // 5. Stream 20,000 multiplications through the core.
-    let out = svc
-        .stream(alloc, user, &StreamConfig::matmul16(20_000))
+    let out = lease
+        .stream(&StreamConfig::matmul16(20_000))
         .map_err(|e| e.to_string())?;
     println!(
         "streamed {} mults:\n  modeled  {:.3} s → {:.0} MB/s per core \
@@ -85,7 +90,7 @@ fn main() -> Result<(), String> {
     );
 
     // 6. Release the lease (region blanked, clock gated, files gone).
-    svc.release(alloc).map_err(|e| e.to_string())?;
+    lease.release().map_err(|e| e.to_string())?;
     println!("released {vfpga}; device idle power: {:.1} W", hv.total_power_w());
     Ok(())
 }

@@ -20,7 +20,9 @@ use std::sync::Arc;
 
 use rc3e::config::{ClusterConfig, ServiceModel};
 use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
-use rc3e::sched::{RequestClass, SchedGrant, Scheduler, TenantQuota};
+use rc3e::sched::{
+    AdmissionRequest, Lease, RequestClass, Scheduler, TenantQuota,
+};
 use rc3e::service::RaaasService;
 use rc3e::util::clock::{VirtualClock, VirtualTime};
 use rc3e::util::ids::{TicketId, UserId};
@@ -73,11 +75,11 @@ fn storm() -> Result<(), String> {
     let mut outstanding: Vec<TicketId> = Vec::new();
     for _ in 0..JOBS_PER_TENANT {
         for (user, _) in &tenants {
-            outstanding.push(sched.submit(
+            outstanding.push(sched.enqueue(&AdmissionRequest::new(
                 *user,
                 ServiceModel::RAaaS,
                 RequestClass::Batch,
-            ));
+            )));
         }
     }
     let total = outstanding.len();
@@ -95,12 +97,12 @@ fn storm() -> Result<(), String> {
         weights.iter().map(|w| (*w, 0.0, 0)).collect();
     let mut max_wait_s = 0.0f64;
     while completed < total {
-        let mut ready: Vec<SchedGrant> = Vec::new();
+        let mut ready: Vec<Lease> = Vec::new();
         let mut i = 0;
         while i < outstanding.len() {
-            match sched.try_claim(outstanding[i]) {
-                Some(Ok(grant)) => {
-                    ready.push(grant);
+            match sched.poll_ticket(outstanding[i]) {
+                Some(Ok(lease)) => {
+                    ready.push(lease);
                     outstanding.remove(i);
                 }
                 Some(Err(e)) => return Err(format!("request failed: {e}")),
@@ -111,13 +113,13 @@ fn storm() -> Result<(), String> {
             !ready.is_empty(),
             "liveness: requests outstanding but none admitted"
         );
-        for grant in ready {
-            if sched.in_use(grant.user) > 1 {
+        for lease in ready {
+            if sched.in_use(lease.tenant()) > 1 {
                 quota_violations += 1;
             }
-            let wait_s = grant.wait.as_secs_f64();
+            let wait_s = lease.wait().as_secs_f64();
             max_wait_s = max_wait_s.max(wait_s);
-            let weight = sched.quota(grant.user).weight;
+            let weight = sched.quota(lease.tenant()).weight;
             if let Some(row) =
                 wait_by_weight.iter_mut().find(|(w, _, _)| *w == weight)
             {
@@ -129,7 +131,7 @@ fn storm() -> Result<(), String> {
                 .hv()
                 .clock
                 .advance(VirtualTime::from_secs_f64(HOLD_S));
-            sched.release(grant.alloc).map_err(|e| e.to_string())?;
+            lease.release().map_err(|e| e.to_string())?;
             completed += 1;
         }
     }
@@ -175,14 +177,15 @@ fn preemption_vignette() -> Result<(), String> {
     // relocates one batch victim to the BAaaS-only device.
     for name in ["vip-1", "vip-2"] {
         let vip = sched.hv().add_user(name);
-        let (alloc, vfpga) =
-            raaas.alloc(vip).map_err(|e| e.to_string())?;
+        let lease = raaas.alloc(vip).map_err(|e| e.to_string())?;
+        let vfpga = lease.vfpga().ok_or("interactive lease unplaced")?;
         println!(
             "{name}: landed on {vfpga} after preempting a batch lease \
              (migrations so far: {})",
             sched.hv().metrics.counter("hv.migrations").get()
         );
-        let _ = alloc;
+        // Keep the lease live for the usage report below.
+        let _token = lease.into_token();
     }
     let preemptions = sched.hv().metrics.counter("sched.preemptions").get();
     assert_eq!(preemptions, 2, "both interactive leases preempted");

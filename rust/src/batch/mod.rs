@@ -21,7 +21,7 @@ use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
 use crate::hypervisor::{Hypervisor, HypervisorError};
 use crate::rc2f::stream::{StreamConfig, StreamOutcome};
-use crate::sched::{RequestClass, Scheduler};
+use crate::sched::{AdmissionRequest, RequestClass, Scheduler};
 use crate::util::ids::{JobId, UserId};
 
 /// A submitted job.
@@ -142,39 +142,37 @@ impl BatchSystem {
             JobPayload::UserBitfile(_) => ServiceModel::RAaaS,
             JobPayload::Service(_) => ServiceModel::BAaaS,
         };
+        // Resolve the payload first: an unknown service must fail the
+        // job without burning an admission.
+        let bitfile = match &spec.payload {
+            JobPayload::UserBitfile(bs) => bs.clone(),
+            JobPayload::Service(name) => self.hv.service_bitfile(name)?,
+        };
         // Block until the fair-share pump admits us; the scheduler
         // enforces quotas and skips us past capacity we cannot use.
-        let grant = self
+        let lease = self
             .sched
-            .acquire_vfpga_blocking(spec.user, model, RequestClass::Batch)
+            .admit_blocking(&AdmissionRequest::new(
+                spec.user,
+                model,
+                RequestClass::Batch,
+            ))
             .map_err(HypervisorError::from)?;
-        let alloc = grant.alloc;
-        let result = (|| {
-            let bitfile = match &spec.payload {
-                JobPayload::UserBitfile(bs) => bs.clone(),
-                JobPayload::Service(name) => self.hv.service_bitfile(name)?,
-            };
-            // Resolve placement through the lease (a preemption may
-            // have migrated us) and retarget the relocatable bitfile
-            // (the paper's hide-the-region future-work item).
-            let vfpga = self.hv.check_vfpga_lease(alloc, spec.user)?;
-            let placed = self.hv.retarget_for(vfpga, &bitfile)?;
-            self.hv.program_vfpga(alloc, spec.user, &placed)?;
-            // Re-resolve before streaming: a preemption between PR
-            // and here migrates the lease (and its configured design)
-            // to a new region; a stale id would stream through the
-            // wrong device's link. A race inside any single step
-            // still fails cleanly (sanity check / device files), and
-            // the job reports Failed rather than corrupting state.
-            let vfpga = self.hv.check_vfpga_lease(alloc, spec.user)?;
-            self.hv
-                .stream_runner_for(vfpga)?
-                .run(&spec.stream)
-                .map_err(HypervisorError::Db)
-        })();
+        // Program + stream through the lease handle: each step
+        // resolves placement through the lease (a preemption may have
+        // migrated us), the bitfile is retargeted to wherever the
+        // lease lives (the paper's hide-the-region future-work item),
+        // and a preemption racing *inside* a step fails cleanly and
+        // is retried once against the new placement instead of
+        // failing the job.
+        let result = crate::service::run_setup_and_stream(
+            &lease,
+            &bitfile,
+            &spec.stream,
+        );
         // Always release through the scheduler, success or failure —
         // that is what pumps the next queued job in.
-        let _ = self.sched.release(alloc);
+        let _ = lease.release();
         result
     }
 

@@ -240,6 +240,54 @@ impl Hypervisor {
         Ok((alloc, vfpga, fpga, dev.node))
     }
 
+    /// Allocate one *specific* free vFPGA region under RAaaS/BAaaS —
+    /// the second phase of the scheduler's gang admission, which has
+    /// already picked its candidate regions and needs them claimed
+    /// exactly (no placement-policy freedom). Fails with
+    /// [`HypervisorError::NoCapacity`] when the region was taken by a
+    /// racing allocation (the caller rolls the gang back).
+    pub fn alloc_vfpga_on(
+        &self,
+        user: UserId,
+        model: ServiceModel,
+        vfpga: VfpgaId,
+    ) -> Result<(AllocationId, VfpgaId, FpgaId, NodeId), HypervisorError>
+    {
+        assert!(
+            !matches!(model, ServiceModel::RSaaS),
+            "RSaaS uses alloc_physical"
+        );
+        let mut db = self.db.lock().unwrap();
+        let fpga = db
+            .device_of_vfpga(vfpga)
+            .map(|d| d.id)
+            .ok_or_else(|| {
+                HypervisorError::Db(format!("{vfpga} not in database"))
+            })?;
+        let serves = db
+            .device(fpga)
+            .map(|d| d.models.contains(&model))
+            .unwrap_or(false);
+        if !serves || !db.free_regions(fpga).contains(&vfpga) {
+            return Err(HypervisorError::NoCapacity);
+        }
+        let alloc = db
+            .allocate_vfpga(user, vfpga, model, self.clock.now().0)
+            .map_err(|_| HypervisorError::NoCapacity)?;
+        drop(db);
+        let dev = self.device(fpga)?;
+        dev.controller
+            .lock()
+            .unwrap()
+            .allocate(vfpga, user)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        self.registries[&dev.node]
+            .create_vfpga_files(vfpga, user)
+            .map_err(|e| HypervisorError::Db(e.to_string()))?;
+        self.metrics.counter("hv.alloc.vfpga").inc();
+        Ok((alloc, vfpga, fpga, dev.node))
+    }
+
     /// Allocate a whole physical FPGA (RSaaS), optionally wrapped in
     /// a VM with the device passed through.
     pub fn alloc_physical(
@@ -612,6 +660,31 @@ mod tests {
             0,
         );
         assert!(reg.open(&path, Some(user)).is_ok());
+    }
+
+    #[test]
+    fn alloc_vfpga_on_claims_the_exact_region() {
+        let hv = hv();
+        let user = hv.add_user("gang");
+        let target = {
+            let db = hv.db.lock().unwrap();
+            db.free_regions(FpgaId(1))[2]
+        };
+        let (alloc, v, f, _) = hv
+            .alloc_vfpga_on(user, ServiceModel::RAaaS, target)
+            .unwrap();
+        assert_eq!(v, target);
+        assert_eq!(f, FpgaId(1));
+        // Claiming an already-taken region is the race the gang
+        // rollback handles — surfaced as NoCapacity.
+        assert!(matches!(
+            hv.alloc_vfpga_on(user, ServiceModel::RAaaS, target),
+            Err(HypervisorError::NoCapacity)
+        ));
+        hv.release(alloc).unwrap();
+        assert!(hv
+            .alloc_vfpga_on(user, ServiceModel::RAaaS, target)
+            .is_ok());
     }
 
     #[test]

@@ -25,10 +25,12 @@
 //!   partial bitstreams from core specifications.
 //! * [`hypervisor`] — RC3E itself: device database, allocation for
 //!   the three service models, placement, energy, migration.
-//! * [`sched`] — the cluster scheduler: single admission path above
-//!   the hypervisor with weighted fair-share queueing, per-tenant
-//!   quotas, time-boxed reservations, preemption-by-migration and
-//!   usage accounting.
+//! * [`sched`] — the cluster scheduler: the unified admission API
+//!   (`AdmissionRequest` → capability `Lease` with unguessable
+//!   tokens, atomic gang grants) above the hypervisor with weighted
+//!   fair-share queueing + aging, per-tenant quotas, model-aware
+//!   time-boxed reservations, preemption-by-migration and usage
+//!   accounting.
 //! * [`middleware`] — management-node RPC server, node agents, client
 //!   library and the CLI command surface.
 //! * [`batch`] — batch system for long-running unattended jobs.

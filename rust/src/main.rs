@@ -22,7 +22,9 @@ use rc3e::middleware::{Client, ManagementServer, NodeAgent};
 use rc3e::sched::RequestClass;
 use rc3e::util::cli::{Args, FlagSpec};
 use rc3e::util::clock::VirtualClock;
-use rc3e::util::ids::{AllocationId, FpgaId, JobId, NodeId, UserId};
+use rc3e::util::ids::{
+    AllocationId, FpgaId, JobId, LeaseToken, NodeId, UserId,
+};
 use rc3e::util::json::Json;
 
 fn flag_specs() -> Vec<FlagSpec> {
@@ -83,6 +85,22 @@ fn flag_specs() -> Vec<FlagSpec> {
             help: "alloc: request class (interactive, normal, batch)",
         },
         FlagSpec {
+            name: "lease",
+            takes_value: true,
+            help: "capability token (lt-...) from alloc; required by \
+                   mutating calls on protocol 2",
+        },
+        FlagSpec {
+            name: "co-located",
+            takes_value: false,
+            help: "alloc: place the whole gang on one device",
+        },
+        FlagSpec {
+            name: "board",
+            takes_value: true,
+            help: "alloc: restrict to a board model (vc707, ml605)",
+        },
+        FlagSpec {
             name: "job",
             takes_value: true,
             help: "job id (job-N) for the job subcommand",
@@ -120,7 +138,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec {
             name: "regions",
             takes_value: true,
-            help: "reserve: vFPGA regions to reserve",
+            help: "alloc: gang size; reserve: vFPGA regions to reserve",
         },
         FlagSpec {
             name: "duration-s",
@@ -188,19 +206,23 @@ fn usage() -> String {
          \x20 cli        raw middleware call: rc3e cli <method> [--flags]\n\
          \x20 adduser    --name <s>\n\
          \x20 status     --fpga fpga-N\n\
-         \x20 alloc      --user user-N [--model raaas --class batch]\n\
-         \x20 program    --user user-N --alloc alloc-N --core matmul16\n\
-         \x20 stream     --user user-N --alloc alloc-N --core matmul16 \
-         --mults 100000\n\
-         \x20 release    --alloc alloc-N\n\
-         \x20 migrate    --user user-N --alloc alloc-N\n\
+         \x20 alloc      --user user-N [--model raaas --class batch \
+         --regions N --co-located --board vc707]\n\
+         \x20 program    --user user-N --alloc alloc-N --lease lt-... \
+         --core matmul16\n\
+         \x20 stream     --user user-N --alloc alloc-N --lease lt-... \
+         --core matmul16 --mults 100000\n\
+         \x20 release    --alloc alloc-N --lease lt-...\n\
+         \x20 migrate    --user user-N --alloc alloc-N --lease lt-...\n\
          \x20 energy\n\
          \x20 sched      scheduler status + admission-wait histogram\n\
          \x20 quota      --user user-N [--max-vfpgas N --budget-s S \
          --weight W]\n\
          \x20 usage      per-tenant device-second + energy report\n\
-         \x20 reserve    --user user-N --regions N [--duration-s S]\n\
-         \x20 job        --job job-N [--wait | --cancel]\n\n",
+         \x20 reserve    --user user-N --regions N [--model raaas \
+         --duration-s S]\n\
+         \x20 job        --job job-N [--lease lt-...] \
+         [--wait | --cancel]\n\n",
     );
     out.push_str(&rc3e::util::cli::usage("rc3e", "flags", &flag_specs()));
     out
@@ -300,6 +322,29 @@ fn job_flag(args: &Args) -> Result<JobId, String> {
     JobId::parse(s).ok_or_else(|| format!("bad --job '{s}'"))
 }
 
+fn lease_flag(args: &Args) -> Result<Option<LeaseToken>, String> {
+    match args.get("lease") {
+        None => Ok(None),
+        Some(s) => LeaseToken::parse(s)
+            .map(Some)
+            .ok_or_else(|| format!("bad --lease '{s}'")),
+    }
+}
+
+/// Feed `--lease` into the client's token cache for `alloc` so the
+/// next mutating call carries it (each CLI invocation is a fresh
+/// process; the token from `rc3e alloc` must be passed back in).
+fn apply_lease_flag(
+    client: &mut Client,
+    args: &Args,
+    alloc: AllocationId,
+) -> Result<(), String> {
+    if let Some(token) = lease_flag(args)? {
+        client.set_lease_token(alloc, token);
+    }
+    Ok(())
+}
+
 // --------------------------------------------- typed subcommands
 
 fn cmd_status(args: &Args) -> Result<(), String> {
@@ -334,9 +379,22 @@ fn cmd_alloc(args: &Args) -> Result<(), String> {
         ),
         None => None,
     };
+    let regions = match args.get("regions") {
+        Some(v) => Some(
+            v.parse::<u32>().map_err(|e| format!("--regions: {e}"))?,
+        ),
+        None => None,
+    };
+    let mut req =
+        rc3e::middleware::api::AllocVfpgaRequest::single(user, model, class);
+    req.regions = regions;
+    if args.has("co-located") {
+        req.co_located = Some(true);
+    }
+    req.board = args.get("board").map(String::from);
     let mut client = connect(args)?;
     let resp = client
-        .alloc_vfpga(user, model, class)
+        .alloc_vfpga_with(&req)
         .map_err(|e| e.to_string())?;
     println!("{}", resp.to_json().to_pretty());
     Ok(())
@@ -347,6 +405,7 @@ fn cmd_program(args: &Args) -> Result<(), String> {
     let alloc = alloc_flag(args)?;
     let core = args.get("core").ok_or("missing --core")?.to_string();
     let mut client = connect(args)?;
+    apply_lease_flag(&mut client, args, alloc)?;
     let resp = client
         .program_core(user, alloc, &core)
         .map_err(|e| e.to_string())?;
@@ -361,6 +420,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     let mults =
         args.get_u64("mults", 100_000).map_err(|e| e.to_string())?;
     let mut client = connect(args)?;
+    apply_lease_flag(&mut client, args, alloc)?;
     // Submit as a job, then wait — the CLI shows the handle so the
     // run could also be watched from another terminal via `job`.
     let job = client
@@ -377,6 +437,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
 fn cmd_release(args: &Args) -> Result<(), String> {
     let alloc = alloc_flag(args)?;
     let mut client = connect(args)?;
+    apply_lease_flag(&mut client, args, alloc)?;
     let resp = client.release(alloc).map_err(|e| e.to_string())?;
     println!("{}", resp.to_json().to_pretty());
     Ok(())
@@ -386,6 +447,7 @@ fn cmd_migrate(args: &Args) -> Result<(), String> {
     let user = user_flag(args)?;
     let alloc = alloc_flag(args)?;
     let mut client = connect(args)?;
+    apply_lease_flag(&mut client, args, alloc)?;
     let resp =
         client.migrate(user, alloc).map_err(|e| e.to_string())?;
     println!("{}", resp.to_json().to_pretty());
@@ -485,11 +547,19 @@ fn cmd_reserve(args: &Args) -> Result<(), String> {
         ),
         None => None,
     };
+    let model = match args.get("model") {
+        Some(s) => Some(
+            ServiceModel::parse(s)
+                .ok_or_else(|| format!("bad --model '{s}'"))?,
+        ),
+        None => None,
+    };
     let mut client = connect(args)?;
     let resp = client
         .reserve(&ReserveRequest {
             user,
             regions,
+            model,
             start_s: None,
             duration_s,
         })
@@ -502,6 +572,9 @@ fn cmd_reserve(args: &Args) -> Result<(), String> {
 fn cmd_job(args: &Args) -> Result<(), String> {
     let job = job_flag(args)?;
     let mut client = connect(args)?;
+    if let Some(token) = lease_flag(args)? {
+        client.set_job_token(job, token);
+    }
     let body = if args.has("cancel") {
         client.job_cancel(job)
     } else if args.has("wait") {
@@ -521,7 +594,7 @@ fn cmd_cli(args: &Args) -> Result<(), String> {
         .ok_or("usage: rc3e cli <method> [--user ... --alloc ...]")?;
     let mut client = connect(args)?;
     let mut params = Json::obj(vec![]);
-    for flag in ["user", "alloc", "fpga", "core", "name", "job"] {
+    for flag in ["user", "alloc", "fpga", "core", "name", "job", "lease"] {
         if let Some(v) = args.get(flag) {
             params.set(flag, Json::from(v));
         }
@@ -548,8 +621,13 @@ fn cmd_demo(args: &Args) -> Result<(), String> {
     );
     let svc = rc3e::service::RaaasService::new(Arc::clone(&hv));
     let user = hv.add_user("demo");
-    let (alloc, vfpga) = svc.alloc(user).map_err(|e| e.to_string())?;
-    eprintln!("allocated {vfpga} (lease {alloc})");
+    let lease = svc.alloc(user).map_err(|e| e.to_string())?;
+    let vfpga = lease.vfpga().ok_or("fresh lease has no placement")?;
+    eprintln!(
+        "allocated {vfpga} (lease {}, token {})",
+        lease.alloc(),
+        lease.token()
+    );
     let synth = rc3e::hls::Synthesizer::new();
     let spec = rc3e::hls::CoreSpec::matmul(16, "xc7vx485t");
     let report = synth.synthesize(&spec);
@@ -561,12 +639,11 @@ fn cmd_demo(args: &Args) -> Result<(), String> {
     .frames(rc3e::hls::flow::region_window(0, 1))
     .artifact("matmul16_b256")
     .build();
-    svc.program(alloc, user, &bitfile)
-        .map_err(|e| e.to_string())?;
+    lease.program(&bitfile).map_err(|e| e.to_string())?;
     eprintln!("programmed matmul16 (PR done)");
     let mults = args.get_u64("mults", 20_000).map_err(|e| e.to_string())?;
-    let out = svc
-        .stream(alloc, user, &rc3e::rc2f::StreamConfig::matmul16(mults))
+    let out = lease
+        .stream(&rc3e::rc2f::StreamConfig::matmul16(mults))
         .map_err(|e| e.to_string())?;
     println!(
         "streamed {} mults: modeled {:.3} s ({:.0} MB/s), wall {:.3} s \
@@ -579,7 +656,7 @@ fn cmd_demo(args: &Args) -> Result<(), String> {
         out.checksum,
         out.validation_failures
     );
-    svc.release(alloc).map_err(|e| e.to_string())?;
+    lease.release().map_err(|e| e.to_string())?;
     eprintln!("released {vfpga}");
     Ok(())
 }

@@ -33,7 +33,8 @@ use crate::hypervisor::HypervisorError;
 use crate::rc2f::stream::StreamOutcome;
 use crate::sched::{RequestClass, SchedError};
 use crate::util::ids::{
-    AllocationId, FpgaId, JobId, NodeId, ReservationId, UserId, VfpgaId,
+    AllocationId, FpgaId, JobId, LeaseToken, NodeId, ReservationId,
+    UserId, VfpgaId,
 };
 use crate::util::json::Json;
 
@@ -62,6 +63,9 @@ pub enum ErrorCode {
     QuotaBudget,
     /// Allocation unknown, not yours, or of the wrong kind.
     BadLease,
+    /// Lease token missing, forged, or stale — protocol-2 mutating
+    /// RPCs authorize by capability token, not the `user` field.
+    BadToken,
     UnknownDevice,
     UnknownService,
     UnknownCore,
@@ -86,7 +90,7 @@ pub enum ErrorCode {
 
 impl ErrorCode {
     /// Every code, for exhaustive tests and the protocol doc.
-    pub const ALL: [ErrorCode; 18] = [
+    pub const ALL: [ErrorCode; 19] = [
         ErrorCode::BadRequest,
         ErrorCode::UnknownMethod,
         ErrorCode::ProtocolMismatch,
@@ -94,6 +98,7 @@ impl ErrorCode {
         ErrorCode::QuotaExceeded,
         ErrorCode::QuotaBudget,
         ErrorCode::BadLease,
+        ErrorCode::BadToken,
         ErrorCode::UnknownDevice,
         ErrorCode::UnknownService,
         ErrorCode::UnknownCore,
@@ -116,6 +121,7 @@ impl ErrorCode {
             ErrorCode::QuotaExceeded => "quota_exceeded",
             ErrorCode::QuotaBudget => "quota_budget",
             ErrorCode::BadLease => "bad_lease",
+            ErrorCode::BadToken => "bad_token",
             ErrorCode::UnknownDevice => "unknown_device",
             ErrorCode::UnknownService => "unknown_service",
             ErrorCode::UnknownCore => "unknown_core",
@@ -250,6 +256,8 @@ impl From<&SchedError> for ApiError {
             SchedError::QuotaConcurrency(_) => ErrorCode::QuotaExceeded,
             SchedError::Hypervisor(_) => ErrorCode::Internal,
             SchedError::UnknownGrant(_) => ErrorCode::BadLease,
+            SchedError::UnknownLease => ErrorCode::BadToken,
+            SchedError::Unsatisfiable(_) => ErrorCode::BadRequest,
             SchedError::Cancelled => ErrorCode::Cancelled,
             SchedError::UnknownReservation(_) => {
                 ErrorCode::UnknownReservation
@@ -466,6 +474,29 @@ fn opt_f64(p: &Json, key: &str) -> Option<f64> {
     p.get(key).as_f64()
 }
 
+/// Optional lease-token field: absent is fine, present-but-malformed
+/// is an error (a mangled capability must not silently read as "no
+/// token" and fall through to laxer handling).
+fn opt_lease(
+    p: &Json,
+    key: &str,
+) -> Result<Option<LeaseToken>, ApiError> {
+    match p.get(key).as_str() {
+        None => Ok(None),
+        Some(s) => LeaseToken::parse(s).map(Some).ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "bad lease token in field '{key}': '{s}'"
+            ))
+        }),
+    }
+}
+
+fn set_opt_lease(j: &mut Json, key: &str, lease: Option<LeaseToken>) {
+    if let Some(t) = lease {
+        j.set(key, Json::from(t.to_string()));
+    }
+}
+
 fn json_or_null_f64(v: Option<f64>) -> Json {
     match v {
         Some(x) => Json::from(x),
@@ -674,14 +705,37 @@ impl StatusResponse {
 /// `alloc_vfpga`. Absent `model`/`class` take the server defaults
 /// (RAaaS / interactive); present-but-unparsable values are errors so
 /// a typo cannot silently escalate a batch request to interactive.
+/// `regions > 1` requests an atomic gang; `co_located` pins the gang
+/// to one device; `board` restricts the device model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AllocVfpgaRequest {
     pub user: UserId,
     pub model: Option<ServiceModel>,
     pub class: Option<RequestClass>,
+    /// Gang size (absent = 1).
+    pub regions: Option<u32>,
+    pub co_located: Option<bool>,
+    /// Board-model constraint ("vc707", "ml605").
+    pub board: Option<String>,
 }
 
 impl AllocVfpgaRequest {
+    /// Single-region request (the common case).
+    pub fn single(
+        user: UserId,
+        model: Option<ServiceModel>,
+        class: Option<RequestClass>,
+    ) -> AllocVfpgaRequest {
+        AllocVfpgaRequest {
+            user,
+            model,
+            class,
+            regions: None,
+            co_located: None,
+            board: None,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j =
             Json::obj(vec![("user", Json::from(self.user.to_string()))]);
@@ -690,6 +744,15 @@ impl AllocVfpgaRequest {
         }
         if let Some(c) = self.class {
             j.set("class", Json::from(c.name()));
+        }
+        if let Some(n) = self.regions {
+            j.set("regions", Json::from(u64::from(n)));
+        }
+        if let Some(co) = self.co_located {
+            j.set("co_located", Json::from(co));
+        }
+        if let Some(b) = &self.board {
+            j.set("board", Json::from(b.as_str()));
         }
         j
     }
@@ -707,14 +770,64 @@ impl AllocVfpgaRequest {
             })?),
             None => None,
         };
+        let regions = match opt_u64(p, "regions") {
+            Some(0) => {
+                return Err(ApiError::bad_request(
+                    "'regions' must be >= 1",
+                ))
+            }
+            Some(n) if n > u64::from(u32::MAX) => {
+                return Err(ApiError::bad_request(
+                    "'regions' out of range",
+                ))
+            }
+            Some(n) => Some(n as u32),
+            None => None,
+        };
         Ok(AllocVfpgaRequest {
             user: want_id(p, "user", UserId::parse)?,
             model,
             class,
+            regions,
+            co_located: p.get("co_located").as_bool(),
+            board: opt_str(p, "board"),
         })
     }
 }
 
+/// One gang member in an `alloc_vfpga` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GangMemberBody {
+    pub alloc: AllocationId,
+    pub vfpga: VfpgaId,
+    pub fpga: FpgaId,
+    pub node: NodeId,
+}
+
+impl GangMemberBody {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("alloc", Json::from(self.alloc.to_string())),
+            ("vfpga", Json::from(self.vfpga.to_string())),
+            ("fpga", Json::from(self.fpga.to_string())),
+            ("node", Json::from(self.node.to_string())),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<GangMemberBody, ApiError> {
+        Ok(GangMemberBody {
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+            vfpga: want_id(p, "vfpga", VfpgaId::parse)?,
+            fpga: want_id(p, "fpga", FpgaId::parse)?,
+            node: want_id(p, "node", NodeId::parse)?,
+        })
+    }
+}
+
+/// `alloc_vfpga` response: the primary member's placement (top-level,
+/// wire-compatible with the pre-gang shape), the capability `lease`
+/// token every mutating RPC must present, and the full member list
+/// for gangs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AllocVfpgaResponse {
     pub alloc: AllocationId,
@@ -722,6 +835,10 @@ pub struct AllocVfpgaResponse {
     pub fpga: FpgaId,
     pub node: NodeId,
     pub wait_ms: f64,
+    /// Capability token of the lease (gangs share one token).
+    pub lease: LeaseToken,
+    /// Every gang member, primary first.
+    pub members: Vec<GangMemberBody>,
 }
 
 impl AllocVfpgaResponse {
@@ -732,16 +849,41 @@ impl AllocVfpgaResponse {
             ("fpga", Json::from(self.fpga.to_string())),
             ("node", Json::from(self.node.to_string())),
             ("wait_ms", Json::from(self.wait_ms)),
+            ("lease", Json::from(self.lease.to_string())),
+            (
+                "members",
+                Json::Arr(
+                    self.members.iter().map(|m| m.to_json()).collect(),
+                ),
+            ),
         ])
     }
 
     pub fn from_json(p: &Json) -> Result<AllocVfpgaResponse, ApiError> {
+        let alloc = want_id(p, "alloc", AllocationId::parse)?;
+        let vfpga = want_id(p, "vfpga", VfpgaId::parse)?;
+        let fpga = want_id(p, "fpga", FpgaId::parse)?;
+        let node = want_id(p, "node", NodeId::parse)?;
+        let members = match p.get("members").as_arr() {
+            Some(arr) => arr
+                .iter()
+                .map(GangMemberBody::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+            None => vec![GangMemberBody {
+                alloc,
+                vfpga,
+                fpga,
+                node,
+            }],
+        };
         Ok(AllocVfpgaResponse {
-            alloc: want_id(p, "alloc", AllocationId::parse)?,
-            vfpga: want_id(p, "vfpga", VfpgaId::parse)?,
-            fpga: want_id(p, "fpga", FpgaId::parse)?,
-            node: want_id(p, "node", NodeId::parse)?,
+            alloc,
+            vfpga,
+            fpga,
+            node,
             wait_ms: want_f64(p, "wait_ms")?,
+            lease: want_id(p, "lease", LeaseToken::parse)?,
+            members,
         })
     }
 }
@@ -768,6 +910,8 @@ pub struct AllocPhysicalResponse {
     pub alloc: AllocationId,
     pub fpga: FpgaId,
     pub node: NodeId,
+    /// Capability token of the lease.
+    pub lease: LeaseToken,
 }
 
 impl AllocPhysicalResponse {
@@ -776,6 +920,7 @@ impl AllocPhysicalResponse {
             ("alloc", Json::from(self.alloc.to_string())),
             ("fpga", Json::from(self.fpga.to_string())),
             ("node", Json::from(self.node.to_string())),
+            ("lease", Json::from(self.lease.to_string())),
         ])
     }
 
@@ -786,23 +931,32 @@ impl AllocPhysicalResponse {
             alloc: want_id(p, "alloc", AllocationId::parse)?,
             fpga: want_id(p, "fpga", FpgaId::parse)?,
             node: want_id(p, "node", NodeId::parse)?,
+            lease: want_id(p, "lease", LeaseToken::parse)?,
         })
     }
 }
 
+/// `release`. On protocol ≥ 2 the `lease` token is required and the
+/// *whole* lease (every gang member) is released; protocol 1 keeps
+/// the honor-system by-allocation shape for one version behind.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReleaseRequest {
     pub alloc: AllocationId,
+    pub lease: Option<LeaseToken>,
 }
 
 impl ReleaseRequest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![("alloc", Json::from(self.alloc.to_string()))])
+        let mut j =
+            Json::obj(vec![("alloc", Json::from(self.alloc.to_string()))]);
+        set_opt_lease(&mut j, "lease", self.lease);
+        j
     }
 
     pub fn from_json(p: &Json) -> Result<ReleaseRequest, ApiError> {
         Ok(ReleaseRequest {
             alloc: want_id(p, "alloc", AllocationId::parse)?,
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -831,15 +985,19 @@ pub struct ProgramCoreRequest {
     pub user: UserId,
     pub alloc: AllocationId,
     pub core: String,
+    /// Required on protocol ≥ 2 (capability auth).
+    pub lease: Option<LeaseToken>,
 }
 
 impl ProgramCoreRequest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("user", Json::from(self.user.to_string())),
             ("alloc", Json::from(self.alloc.to_string())),
             ("core", Json::from(self.core.as_str())),
-        ])
+        ]);
+        set_opt_lease(&mut j, "lease", self.lease);
+        j
     }
 
     pub fn from_json(p: &Json) -> Result<ProgramCoreRequest, ApiError> {
@@ -847,6 +1005,7 @@ impl ProgramCoreRequest {
             user: want_id(p, "user", UserId::parse)?,
             alloc: want_id(p, "alloc", AllocationId::parse)?,
             core: want_str(p, "core")?,
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -881,6 +1040,8 @@ pub struct ProgramFullRequest {
     pub user: UserId,
     pub alloc: AllocationId,
     pub name: Option<String>,
+    /// Required on protocol ≥ 2 (capability auth).
+    pub lease: Option<LeaseToken>,
 }
 
 impl ProgramFullRequest {
@@ -892,6 +1053,7 @@ impl ProgramFullRequest {
         if let Some(n) = &self.name {
             j.set("name", Json::from(n.as_str()));
         }
+        set_opt_lease(&mut j, "lease", self.lease);
         j
     }
 
@@ -900,6 +1062,7 @@ impl ProgramFullRequest {
             user: want_id(p, "user", UserId::parse)?,
             alloc: want_id(p, "alloc", AllocationId::parse)?,
             name: opt_str(p, "name"),
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -936,16 +1099,20 @@ pub struct StreamRequest {
     pub alloc: AllocationId,
     pub core: String,
     pub mults: u64,
+    /// Required on protocol ≥ 2 (capability auth).
+    pub lease: Option<LeaseToken>,
 }
 
 impl StreamRequest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("user", Json::from(self.user.to_string())),
             ("alloc", Json::from(self.alloc.to_string())),
             ("core", Json::from(self.core.as_str())),
             ("mults", Json::from(self.mults)),
-        ])
+        ]);
+        set_opt_lease(&mut j, "lease", self.lease);
+        j
     }
 
     pub fn from_json(p: &Json) -> Result<StreamRequest, ApiError> {
@@ -954,6 +1121,7 @@ impl StreamRequest {
             alloc: want_id(p, "alloc", AllocationId::parse)?,
             core: want_str(p, "core")?,
             mults: want_u64(p, "mults")?,
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -1063,20 +1231,25 @@ impl StreamOutcomeBody {
 pub struct MigrateRequest {
     pub user: UserId,
     pub alloc: AllocationId,
+    /// Required on protocol ≥ 2 (capability auth).
+    pub lease: Option<LeaseToken>,
 }
 
 impl MigrateRequest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("user", Json::from(self.user.to_string())),
             ("alloc", Json::from(self.alloc.to_string())),
-        ])
+        ]);
+        set_opt_lease(&mut j, "lease", self.lease);
+        j
     }
 
     pub fn from_json(p: &Json) -> Result<MigrateRequest, ApiError> {
         Ok(MigrateRequest {
             user: want_id(p, "user", UserId::parse)?,
             alloc: want_id(p, "alloc", AllocationId::parse)?,
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -1581,10 +1754,14 @@ impl UsageReportResponse {
     }
 }
 
+/// `reserve`. An optional `model` pins the reservation to one
+/// service model's device pool (region-count- and model-aware
+/// reservations); absent keeps the cluster-wide semantics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReserveRequest {
     pub user: UserId,
     pub regions: u64,
+    pub model: Option<ServiceModel>,
     pub start_s: Option<f64>,
     pub duration_s: Option<f64>,
 }
@@ -1595,6 +1772,9 @@ impl ReserveRequest {
             ("user", Json::from(self.user.to_string())),
             ("regions", Json::from(self.regions)),
         ]);
+        if let Some(m) = self.model {
+            j.set("model", Json::from(m.name()));
+        }
         if let Some(s) = self.start_s {
             j.set("start_s", Json::from(s));
         }
@@ -1605,9 +1785,16 @@ impl ReserveRequest {
     }
 
     pub fn from_json(p: &Json) -> Result<ReserveRequest, ApiError> {
+        let model = match opt_str(p, "model") {
+            Some(s) => Some(ServiceModel::parse(&s).ok_or_else(|| {
+                ApiError::bad_request(format!("unknown model '{s}'"))
+            })?),
+            None => None,
+        };
         Ok(ReserveRequest {
             user: want_id(p, "user", UserId::parse)?,
             regions: want_u64(p, "regions")?,
+            model,
             start_s: opt_f64(p, "start_s"),
             duration_s: opt_f64(p, "duration_s"),
         })
@@ -1755,19 +1942,27 @@ impl DbDumpResponse {
 // ============================================================= jobs
 
 /// Response to submitting a long-running operation on protocol ≥ 2.
+/// Carries the token that owns the job: the lease token the caller
+/// presented, or a fresh job-scoped token for leaseless operations
+/// (`invoke_service`) — `job_*` calls on an owned job must present it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSubmitResponse {
     pub job: JobId,
+    pub lease: Option<LeaseToken>,
 }
 
 impl JobSubmitResponse {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![("job", Json::from(self.job.to_string()))])
+        let mut j =
+            Json::obj(vec![("job", Json::from(self.job.to_string()))]);
+        set_opt_lease(&mut j, "lease", self.lease);
+        j
     }
 
     pub fn from_json(p: &Json) -> Result<JobSubmitResponse, ApiError> {
         Ok(JobSubmitResponse {
             job: want_id(p, "job", JobId::parse)?,
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -1775,16 +1970,22 @@ impl JobSubmitResponse {
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobStatusRequest {
     pub job: JobId,
+    /// Owner token; required on protocol ≥ 2 when the job is owned.
+    pub lease: Option<LeaseToken>,
 }
 
 impl JobStatusRequest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![("job", Json::from(self.job.to_string()))])
+        let mut j =
+            Json::obj(vec![("job", Json::from(self.job.to_string()))]);
+        set_opt_lease(&mut j, "lease", self.lease);
+        j
     }
 
     pub fn from_json(p: &Json) -> Result<JobStatusRequest, ApiError> {
         Ok(JobStatusRequest {
             job: want_id(p, "job", JobId::parse)?,
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -1797,6 +1998,8 @@ pub struct JobWaitRequest {
     /// socket read timeout (see `jobs::MAX_WAIT_S`) — long waits are
     /// built by retrying on the retryable `timeout` code.
     pub timeout_s: Option<f64>,
+    /// Owner token; required on protocol ≥ 2 when the job is owned.
+    pub lease: Option<LeaseToken>,
 }
 
 impl JobWaitRequest {
@@ -1806,6 +2009,7 @@ impl JobWaitRequest {
         if let Some(t) = self.timeout_s {
             j.set("timeout_s", Json::from(t));
         }
+        set_opt_lease(&mut j, "lease", self.lease);
         j
     }
 
@@ -1813,6 +2017,7 @@ impl JobWaitRequest {
         Ok(JobWaitRequest {
             job: want_id(p, "job", JobId::parse)?,
             timeout_s: opt_f64(p, "timeout_s"),
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -1820,16 +2025,22 @@ impl JobWaitRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobCancelRequest {
     pub job: JobId,
+    /// Owner token; required on protocol ≥ 2 when the job is owned.
+    pub lease: Option<LeaseToken>,
 }
 
 impl JobCancelRequest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![("job", Json::from(self.job.to_string()))])
+        let mut j =
+            Json::obj(vec![("job", Json::from(self.job.to_string()))]);
+        set_opt_lease(&mut j, "lease", self.lease);
+        j
     }
 
     pub fn from_json(p: &Json) -> Result<JobCancelRequest, ApiError> {
         Ok(JobCancelRequest {
             job: want_id(p, "job", JobId::parse)?,
+            lease: opt_lease(p, "lease")?,
         })
     }
 }
@@ -2006,6 +2217,11 @@ mod tests {
                 SchedError::UnknownGrant(AllocationId(1)),
                 ErrorCode::BadLease,
             ),
+            (SchedError::UnknownLease, ErrorCode::BadToken),
+            (
+                SchedError::Unsatisfiable("5 > 4".into()),
+                ErrorCode::BadRequest,
+            ),
             (SchedError::Cancelled, ErrorCode::Cancelled),
             (
                 SchedError::UnknownReservation(ReservationId(2)),
@@ -2038,17 +2254,16 @@ mod tests {
             user: UserId(3),
             model: Some(ServiceModel::BAaaS),
             class: Some(RequestClass::Batch),
+            regions: Some(4),
+            co_located: Some(true),
+            board: Some("vc707".to_string()),
         };
         assert_eq!(
             AllocVfpgaRequest::from_json(&req.to_json()).unwrap(),
             req
         );
         // Absent optionals stay absent.
-        let bare = AllocVfpgaRequest {
-            user: UserId(0),
-            model: None,
-            class: None,
-        };
+        let bare = AllocVfpgaRequest::single(UserId(0), None, None);
         assert_eq!(
             AllocVfpgaRequest::from_json(&bare.to_json()).unwrap(),
             bare
@@ -2058,6 +2273,65 @@ mod tests {
         j.set("class", Json::from("urgentest"));
         let err = AllocVfpgaRequest::from_json(&j).unwrap_err();
         assert_eq!(err.code, ErrorCode::BadRequest);
+        // A zero-region gang is an error, not a silent 1.
+        let mut j = bare.to_json();
+        j.set("regions", Json::from(0u64));
+        let err = AllocVfpgaRequest::from_json(&j).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn lease_token_fields_roundtrip_and_reject_garbage() {
+        let token = LeaseToken::mint();
+        let req = ReleaseRequest {
+            alloc: AllocationId(7),
+            lease: Some(token),
+        };
+        assert_eq!(
+            ReleaseRequest::from_json(&req.to_json()).unwrap(),
+            req
+        );
+        // Absent token parses as None (v1 compatibility)...
+        let bare = ReleaseRequest {
+            alloc: AllocationId(7),
+            lease: None,
+        };
+        assert_eq!(
+            ReleaseRequest::from_json(&bare.to_json()).unwrap(),
+            bare
+        );
+        // ...but a malformed token is an error, never None.
+        let mut j = bare.to_json();
+        j.set("lease", Json::from("lt-xyzzy"));
+        let err = ReleaseRequest::from_json(&j).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        // Gang alloc response roundtrips members + lease.
+        let resp = AllocVfpgaResponse {
+            alloc: AllocationId(0),
+            vfpga: VfpgaId(1),
+            fpga: FpgaId(2),
+            node: NodeId(0),
+            wait_ms: 1.5,
+            lease: token,
+            members: vec![
+                GangMemberBody {
+                    alloc: AllocationId(0),
+                    vfpga: VfpgaId(1),
+                    fpga: FpgaId(2),
+                    node: NodeId(0),
+                },
+                GangMemberBody {
+                    alloc: AllocationId(1),
+                    vfpga: VfpgaId(2),
+                    fpga: FpgaId(2),
+                    node: NodeId(0),
+                },
+            ],
+        };
+        let back =
+            AllocVfpgaResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(back, resp);
+        assert_eq!(back.members.len(), 2);
     }
 
     #[test]

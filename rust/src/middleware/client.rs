@@ -17,6 +17,7 @@
 //! `*_sync` variants submit and [`Client::job_wait`] in one call,
 //! reproducing the old blocking behavior.
 
+use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
@@ -24,14 +25,29 @@ use super::api::*;
 use super::proto::{read_frame, write_frame, Request, Response};
 use crate::config::ServiceModel;
 use crate::sched::RequestClass;
-use crate::util::ids::{AllocationId, FpgaId, JobId, UserId};
+use crate::util::ids::{
+    AllocationId, FpgaId, JobId, LeaseToken, UserId,
+};
 use crate::util::json::Json;
 
 /// A connected middleware client.
+///
+/// The client keeps the capability tokens returned by the
+/// `alloc_*` RPCs and attaches them automatically to every mutating
+/// call on the same allocation (`program*`, `stream`, `release`,
+/// `migrate`) and to `job_*` calls on jobs it submitted — callers
+/// work with allocation/job ids while the wire carries the token.
+/// [`Client::set_lease_token`] / [`Client::set_job_token`] inject
+/// tokens obtained elsewhere (other connections, the CLI `--lease`
+/// flag, or deliberately wrong ones in tests).
 pub struct Client {
     stream: TcpStream,
     /// Correlation-id counter for v2 requests.
     next_id: u64,
+    /// alloc → capability token, learned from alloc responses.
+    lease_tokens: BTreeMap<AllocationId, LeaseToken>,
+    /// job → owner token, learned from submit responses.
+    job_tokens: BTreeMap<JobId, LeaseToken>,
 }
 
 impl Client {
@@ -47,7 +63,29 @@ impl Client {
         Ok(Client {
             stream,
             next_id: 0,
+            lease_tokens: BTreeMap::new(),
+            job_tokens: BTreeMap::new(),
         })
+    }
+
+    /// The cached capability token for an allocation, if any.
+    pub fn lease_token(&self, alloc: AllocationId) -> Option<LeaseToken> {
+        self.lease_tokens.get(&alloc).copied()
+    }
+
+    /// Inject (or override) the token used for an allocation — for
+    /// tokens handed over out of band, or to present a wrong one.
+    pub fn set_lease_token(
+        &mut self,
+        alloc: AllocationId,
+        token: LeaseToken,
+    ) {
+        self.lease_tokens.insert(alloc, token);
+    }
+
+    /// Inject (or override) the owner token used for a job.
+    pub fn set_job_token(&mut self, job: JobId, token: LeaseToken) {
+        self.job_tokens.insert(job, token);
     }
 
     /// Connect and negotiate the protocol via `hello`. Fails with
@@ -175,16 +213,32 @@ impl Client {
 
     // ------------------------------------------------ typed: leases
 
+    /// Allocate vFPGAs: one by default, an atomic gang when the
+    /// request's `regions > 1`. The returned capability token is
+    /// cached for every member allocation.
+    pub fn alloc_vfpga_with(
+        &mut self,
+        req: &AllocVfpgaRequest,
+    ) -> Result<AllocVfpgaResponse, ApiError> {
+        let body =
+            self.call_v2(Method::AllocVfpga.name(), req.to_json())?;
+        let resp = AllocVfpgaResponse::from_json(&body)?;
+        for m in &resp.members {
+            self.lease_tokens.insert(m.alloc, resp.lease);
+        }
+        Ok(resp)
+    }
+
+    /// Single-region allocation (the common case).
     pub fn alloc_vfpga(
         &mut self,
         user: UserId,
         model: Option<ServiceModel>,
         class: Option<RequestClass>,
     ) -> Result<AllocVfpgaResponse, ApiError> {
-        let req = AllocVfpgaRequest { user, model, class };
-        let body =
-            self.call_v2(Method::AllocVfpga.name(), req.to_json())?;
-        AllocVfpgaResponse::from_json(&body)
+        self.alloc_vfpga_with(&AllocVfpgaRequest::single(
+            user, model, class,
+        ))
     }
 
     pub fn alloc_physical(
@@ -194,17 +248,28 @@ impl Client {
         let req = AllocPhysicalRequest { user };
         let body =
             self.call_v2(Method::AllocPhysical.name(), req.to_json())?;
-        AllocPhysicalResponse::from_json(&body)
+        let resp = AllocPhysicalResponse::from_json(&body)?;
+        self.lease_tokens.insert(resp.alloc, resp.lease);
+        Ok(resp)
     }
 
     pub fn release(
         &mut self,
         alloc: AllocationId,
     ) -> Result<ReleaseResponse, ApiError> {
-        let req = ReleaseRequest { alloc };
+        let req = ReleaseRequest {
+            alloc,
+            lease: self.lease_token(alloc),
+        };
         let body =
             self.call_v2(Method::Release.name(), req.to_json())?;
-        ReleaseResponse::from_json(&body)
+        let resp = ReleaseResponse::from_json(&body)?;
+        // The whole lease is gone server-side; drop every cached
+        // member token for it.
+        if let Some(token) = self.lease_tokens.remove(&alloc) {
+            self.lease_tokens.retain(|_, t| *t != token);
+        }
+        Ok(resp)
     }
 
     pub fn program_core(
@@ -217,6 +282,7 @@ impl Client {
             user,
             alloc,
             core: core.to_string(),
+            lease: self.lease_token(alloc),
         };
         let body =
             self.call_v2(Method::ProgramCore.name(), req.to_json())?;
@@ -228,7 +294,11 @@ impl Client {
         user: UserId,
         alloc: AllocationId,
     ) -> Result<MigrateResponse, ApiError> {
-        let req = MigrateRequest { user, alloc };
+        let req = MigrateRequest {
+            user,
+            alloc,
+            lease: self.lease_token(alloc),
+        };
         let body =
             self.call_v2(Method::Migrate.name(), req.to_json())?;
         MigrateResponse::from_json(&body)
@@ -265,10 +335,15 @@ impl Client {
             alloc,
             core: core.to_string(),
             mults,
+            lease: self.lease_token(alloc),
         };
         let body =
             self.call_v2(Method::Stream.name(), req.to_json())?;
-        JobSubmitResponse::from_json(&body)
+        let resp = JobSubmitResponse::from_json(&body)?;
+        if let Some(t) = resp.lease {
+            self.job_tokens.insert(resp.job, t);
+        }
+        Ok(resp)
     }
 
     /// Submit + wait: the old synchronous `stream` behavior.
@@ -295,10 +370,15 @@ impl Client {
             user,
             alloc,
             name: name.map(String::from),
+            lease: self.lease_token(alloc),
         };
         let body =
             self.call_v2(Method::ProgramFull.name(), req.to_json())?;
-        JobSubmitResponse::from_json(&body)
+        let resp = JobSubmitResponse::from_json(&body)?;
+        if let Some(t) = resp.lease {
+            self.job_tokens.insert(resp.job, t);
+        }
+        Ok(resp)
     }
 
     /// Submit + wait: the old synchronous `program_full` behavior.
@@ -327,7 +407,11 @@ impl Client {
         };
         let body =
             self.call_v2(Method::InvokeService.name(), req.to_json())?;
-        JobSubmitResponse::from_json(&body)
+        let resp = JobSubmitResponse::from_json(&body)?;
+        if let Some(t) = resp.lease {
+            self.job_tokens.insert(resp.job, t);
+        }
+        Ok(resp)
     }
 
     /// Submit + wait: the old synchronous `invoke_service` behavior.
@@ -348,7 +432,10 @@ impl Client {
         &mut self,
         job: JobId,
     ) -> Result<JobBody, ApiError> {
-        let req = JobStatusRequest { job };
+        let req = JobStatusRequest {
+            job,
+            lease: self.job_tokens.get(&job).copied(),
+        };
         let body =
             self.call_v2(Method::JobStatus.name(), req.to_json())?;
         JobBody::from_json(&body)
@@ -361,7 +448,11 @@ impl Client {
         job: JobId,
         timeout_s: Option<f64>,
     ) -> Result<JobBody, ApiError> {
-        let req = JobWaitRequest { job, timeout_s };
+        let req = JobWaitRequest {
+            job,
+            timeout_s,
+            lease: self.job_tokens.get(&job).copied(),
+        };
         let body =
             self.call_v2(Method::JobWait.name(), req.to_json())?;
         JobBody::from_json(&body)
@@ -386,7 +477,10 @@ impl Client {
         &mut self,
         job: JobId,
     ) -> Result<JobBody, ApiError> {
-        let req = JobCancelRequest { job };
+        let req = JobCancelRequest {
+            job,
+            lease: self.job_tokens.get(&job).copied(),
+        };
         let body =
             self.call_v2(Method::JobCancel.name(), req.to_json())?;
         JobBody::from_json(&body)

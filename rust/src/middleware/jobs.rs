@@ -27,7 +27,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::api::{ApiError, ErrorCode, JobBody};
-use crate::util::ids::{IdGen, JobId};
+use crate::util::ids::{IdGen, JobId, LeaseToken};
 use crate::util::json::Json;
 
 /// Terminal jobs kept queryable after completion.
@@ -76,6 +76,11 @@ pub struct JobRecord {
     pub state: JobState,
     /// Virtual timestamp of submission.
     pub submitted_ns: u64,
+    /// Capability token owning this job: the lease token presented
+    /// at submission (or a fresh job-scoped token for leaseless
+    /// operations). `None` = unowned (protocol-1 submissions) — no
+    /// token gate applies.
+    pub owner: Option<LeaseToken>,
 }
 
 impl JobRecord {
@@ -124,6 +129,7 @@ impl JobRegistry {
         self: Arc<JobRegistry>,
         method: &str,
         submitted_ns: u64,
+        owner: Option<LeaseToken>,
         work: impl FnOnce() -> Result<Json, ApiError> + Send + 'static,
     ) -> JobId {
         let id = JobId(self.ids.next());
@@ -136,6 +142,7 @@ impl JobRegistry {
                     method: method.to_string(),
                     state: JobState::Running,
                     submitted_ns,
+                    owner,
                 },
             );
         }
@@ -262,7 +269,7 @@ mod tests {
     #[test]
     fn submit_wait_returns_result() {
         let reg = JobRegistry::new();
-        let id = Arc::clone(&reg).submit("stream", 0, || Ok(Json::from(42u64)));
+        let id = Arc::clone(&reg).submit("stream", 0, None, || Ok(Json::from(42u64)));
         let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
         assert_eq!(rec.state, JobState::Done(Json::Num(42.0)));
         assert_eq!(rec.method, "stream");
@@ -275,7 +282,7 @@ mod tests {
     #[test]
     fn failed_job_carries_api_error() {
         let reg = JobRegistry::new();
-        let id = Arc::clone(&reg).submit("program_full", 0, || {
+        let id = Arc::clone(&reg).submit("program_full", 0, None, || {
             Err(ApiError::new(ErrorCode::NoCapacity, "full"))
         });
         let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
@@ -302,7 +309,7 @@ mod tests {
     fn wait_times_out_on_stuck_job() {
         let reg = JobRegistry::new();
         let (tx, rx) = mpsc::channel::<()>();
-        let id = Arc::clone(&reg).submit("stream", 0, move || {
+        let id = Arc::clone(&reg).submit("stream", 0, None, move || {
             let _ = rx.recv(); // block until the test releases us
             Ok(Json::Null)
         });
@@ -318,7 +325,7 @@ mod tests {
     fn cancel_beats_completion_and_sticks() {
         let reg = JobRegistry::new();
         let (tx, rx) = mpsc::channel::<()>();
-        let id = Arc::clone(&reg).submit("stream", 0, move || {
+        let id = Arc::clone(&reg).submit("stream", 0, None, move || {
             let _ = rx.recv();
             Ok(Json::from(1u64))
         });
@@ -338,7 +345,7 @@ mod tests {
         let reg = JobRegistry::new();
         let mut first = None;
         for i in 0..(RETAINED_TERMINAL + 10) {
-            let id = Arc::clone(&reg).submit("stream", 0, move || {
+            let id = Arc::clone(&reg).submit("stream", 0, None, move || {
                 Ok(Json::from(i as u64))
             });
             reg.wait(id, Duration::from_secs(5)).unwrap();

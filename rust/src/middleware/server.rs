@@ -31,12 +31,15 @@ use super::jobs::{JobRegistry, DEFAULT_WAIT_S, MAX_WAIT_S};
 use super::proto::{read_frame, respond, write_frame, Request, Response};
 use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
+use crate::fpga::board::BoardKind;
 use crate::hls::synth::{CoreKind, CoreSpec, Synthesizer};
-use crate::hypervisor::{AllocKind, Hypervisor};
+use crate::hypervisor::{AllocKind, Hypervisor, HypervisorError};
 use crate::rc2f::stream::StreamConfig;
-use crate::sched::{RequestClass, SchedError, Scheduler};
+use crate::sched::{
+    AdmissionRequest, Lease, RequestClass, SchedError, Scheduler,
+};
 use crate::util::clock::VirtualTime;
-use crate::util::ids::NodeId;
+use crate::util::ids::{AllocationId, LeaseToken, NodeId};
 use crate::util::json::Json;
 
 /// The management server (owns its accept thread).
@@ -264,6 +267,74 @@ fn dispatch(
     handler(ctx, params)
 }
 
+// ===================================================== capability auth
+
+/// Protocol ≥ 2 capability check for mutating RPCs: resolve the
+/// allocation (dead/foreign → `bad_lease` regardless of token), then
+/// require the presented token to own it (`bad_token` when missing,
+/// forged or stale). Returns the disarmed lease handle the handler
+/// should operate through — its tenant, not the wire `user` field, is
+/// the authorized identity. Protocol 1 returns `None` and keeps the
+/// honor-system `user` semantics for exactly one version behind.
+fn authorize(
+    ctx: &Ctx<'_>,
+    alloc: AllocationId,
+    lease: Option<LeaseToken>,
+) -> Result<Option<Lease>, ApiError> {
+    if ctx.proto < 2 {
+        return Ok(None);
+    }
+    let grant = ctx.inner.sched.grant(alloc).ok_or_else(|| {
+        ApiError::new(
+            ErrorCode::BadLease,
+            format!("no scheduler grant for {alloc}"),
+        )
+    })?;
+    let token = lease.ok_or_else(|| {
+        ApiError::new(
+            ErrorCode::BadToken,
+            "protocol 2 requires the lease token on mutating calls",
+        )
+    })?;
+    if grant.token != token {
+        return Err(ApiError::new(
+            ErrorCode::BadToken,
+            format!("lease token does not own {alloc}"),
+        ));
+    }
+    // A concurrent release between the grant check and here reads as
+    // a stale token, not a server panic.
+    ctx.inner
+        .sched
+        .lease_handle(token)
+        .map(Some)
+        .ok_or_else(|| {
+            ApiError::new(
+                ErrorCode::BadToken,
+                "lease released mid-request".to_string(),
+            )
+        })
+}
+
+/// Owner gate for `job_*` RPCs on protocol ≥ 2: an owned job only
+/// answers to the token that submitted it.
+fn authorize_job(
+    ctx: &Ctx<'_>,
+    owner: Option<LeaseToken>,
+    presented: Option<LeaseToken>,
+) -> Result<(), ApiError> {
+    if ctx.proto < 2 {
+        return Ok(());
+    }
+    match owner {
+        Some(t) if presented != Some(t) => Err(ApiError::new(
+            ErrorCode::BadToken,
+            "job is owned by a different lease token",
+        )),
+        _ => Ok(()),
+    }
+}
+
 // ========================================================= handlers
 
 fn h_hello(_ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
@@ -310,39 +381,99 @@ fn h_status(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 fn h_alloc_vfpga(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = AllocVfpgaRequest::from_json(p)?;
     let model = req.model.unwrap_or(ServiceModel::RAaaS);
-    let class = req.class.unwrap_or(RequestClass::Interactive);
-    let grant = ctx
-        .inner
-        .sched
-        .acquire_vfpga(req.user, model, class)
-        .map_err(ApiError::from)?;
-    Ok(AllocVfpgaResponse {
-        alloc: grant.alloc,
-        vfpga: grant.vfpga().expect("vfpga grant"),
-        fpga: grant.fpga(),
-        node: grant.node(),
-        wait_ms: grant.wait.as_millis_f64(),
+    if model == ServiceModel::RSaaS {
+        return Err(ApiError::bad_request(
+            "alloc_vfpga serves vFPGA models; use alloc_physical for \
+             RSaaS",
+        ));
     }
-    .to_json())
+    let class = req.class.unwrap_or(RequestClass::Interactive);
+    let mut areq = AdmissionRequest::new(req.user, model, class);
+    if let Some(n) = req.regions {
+        areq = areq.gang(n);
+    }
+    if req.co_located == Some(true) {
+        areq = areq.co_located();
+    }
+    if let Some(b) = &req.board {
+        let board = BoardKind::parse(b).ok_or_else(|| {
+            ApiError::bad_request(format!("unknown board '{b}'"))
+        })?;
+        areq = areq.on_board(board);
+    }
+    let lease = ctx.inner.sched.admit(&areq).map_err(ApiError::from)?;
+    let members: Vec<GangMemberBody> = lease
+        .placements()
+        .iter()
+        .map(|pl| GangMemberBody {
+            alloc: pl.alloc,
+            vfpga: match pl.target {
+                crate::sched::GrantTarget::Vfpga(v, _, _) => v,
+                crate::sched::GrantTarget::Physical(_, _) => {
+                    unreachable!("vFPGA admission")
+                }
+            },
+            fpga: match pl.target {
+                crate::sched::GrantTarget::Vfpga(_, f, _)
+                | crate::sched::GrantTarget::Physical(f, _) => f,
+            },
+            node: match pl.target {
+                crate::sched::GrantTarget::Vfpga(_, _, n)
+                | crate::sched::GrantTarget::Physical(_, n) => n,
+            },
+        })
+        .collect();
+    let primary = members.first().cloned().ok_or_else(|| {
+        ApiError::internal("admitted lease has no members")
+    })?;
+    let resp = AllocVfpgaResponse {
+        alloc: primary.alloc,
+        vfpga: primary.vfpga,
+        fpga: primary.fpga,
+        node: primary.node,
+        wait_ms: lease.wait().as_millis_f64(),
+        lease: lease.token(),
+        members,
+    };
+    // Disarm: the lease stays live server-side, owned by whoever
+    // holds the token.
+    let _token = lease.into_token();
+    Ok(resp.to_json())
 }
 
 fn h_alloc_physical(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = AllocPhysicalRequest::from_json(p)?;
-    let grant = ctx
+    let lease = ctx
         .inner
         .sched
-        .acquire_physical(req.user, None, RequestClass::Interactive)
+        .admit(&AdmissionRequest::physical(
+            req.user,
+            RequestClass::Interactive,
+        ))
         .map_err(ApiError::from)?;
-    Ok(AllocPhysicalResponse {
-        alloc: grant.alloc,
-        fpga: grant.fpga(),
-        node: grant.node(),
-    }
-    .to_json())
+    let resp = AllocPhysicalResponse {
+        alloc: lease.alloc(),
+        fpga: lease.fpga().ok_or_else(|| {
+            ApiError::internal("fresh physical lease has no placement")
+        })?,
+        node: lease.node().ok_or_else(|| {
+            ApiError::internal("fresh physical lease has no placement")
+        })?,
+        lease: lease.token(),
+    };
+    let _token = lease.into_token();
+    Ok(resp.to_json())
 }
 
 fn h_release(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = ReleaseRequest::from_json(p)?;
+    if let Some(handle) = authorize(ctx, req.alloc, req.lease)? {
+        // Protocol ≥ 2: the capability releases the *whole* lease
+        // (every gang member), like Lease::release everywhere else.
+        handle.release().map_err(ApiError::from)?;
+        return Ok(ReleaseResponse { released: true }.to_json());
+    }
+    // Protocol 1 (one version behind): by-allocation release.
     // Scheduler-tracked leases release through the scheduler (quota
     // credit + queue pump); anything allocated out of band falls back
     // to the hypervisor.
@@ -359,7 +490,12 @@ fn h_release(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 }
 
 fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
-    let req = ProgramCoreRequest::from_json(p)?;
+    let mut req = ProgramCoreRequest::from_json(p)?;
+    if let Some(handle) = authorize(ctx, req.alloc, req.lease)? {
+        // The token's tenant is the authorized identity — the wire
+        // `user` field is no longer trusted on protocol ≥ 2.
+        req.user = handle.tenant();
+    }
     let inner = ctx.inner;
     let bitfile = inner.cores.get(&req.core).ok_or_else(|| {
         ApiError::new(
@@ -387,31 +523,41 @@ fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 }
 
 fn h_stream(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
-    let req = StreamRequest::from_json(p)?;
+    let mut req = StreamRequest::from_json(p)?;
     if ctx.proto >= 2 {
+        let handle = authorize(ctx, req.alloc, req.lease)?
+            .expect("authorize returns a handle on proto >= 2");
+        req.user = handle.tenant();
+        let owner = req.lease;
         let inner = Arc::clone(ctx.inner);
         let now_ns = ctx.inner.hv.clock.now().0;
         let job = Arc::clone(&ctx.inner.jobs).submit(
             Method::Stream.name(),
             now_ns,
+            owner,
             move || run_stream(&inner, &req),
         );
-        return Ok(JobSubmitResponse { job }.to_json());
+        return Ok(JobSubmitResponse { job, lease: owner }.to_json());
     }
     run_stream(ctx.inner, &req)
 }
 
 fn h_program_full(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
-    let req = ProgramFullRequest::from_json(p)?;
+    let mut req = ProgramFullRequest::from_json(p)?;
     if ctx.proto >= 2 {
+        let handle = authorize(ctx, req.alloc, req.lease)?
+            .expect("authorize returns a handle on proto >= 2");
+        req.user = handle.tenant();
+        let owner = req.lease;
         let inner = Arc::clone(ctx.inner);
         let now_ns = ctx.inner.hv.clock.now().0;
         let job = Arc::clone(&ctx.inner.jobs).submit(
             Method::ProgramFull.name(),
             now_ns,
+            owner,
             move || run_program_full(&inner, &req),
         );
-        return Ok(JobSubmitResponse { job }.to_json());
+        return Ok(JobSubmitResponse { job, lease: owner }.to_json());
     }
     run_program_full(ctx.inner, &req)
 }
@@ -419,20 +565,32 @@ fn h_program_full(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 fn h_invoke_service(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = InvokeServiceRequest::from_json(p)?;
     if ctx.proto >= 2 {
+        // No lease is involved (BAaaS allocates internally); mint a
+        // job-scoped owner token so the job handle is still a
+        // capability, not an enumerable id anyone can cancel.
+        let owner = LeaseToken::mint();
         let inner = Arc::clone(ctx.inner);
         let now_ns = ctx.inner.hv.clock.now().0;
         let job = Arc::clone(&ctx.inner.jobs).submit(
             Method::InvokeService.name(),
             now_ns,
+            Some(owner),
             move || run_invoke_service(&inner, &req),
         );
-        return Ok(JobSubmitResponse { job }.to_json());
+        return Ok(JobSubmitResponse {
+            job,
+            lease: Some(owner),
+        }
+        .to_json());
     }
     run_invoke_service(ctx.inner, &req)
 }
 
 fn h_migrate(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
-    let req = MigrateRequest::from_json(p)?;
+    let mut req = MigrateRequest::from_json(p)?;
+    if let Some(handle) = authorize(ctx, req.alloc, req.lease)? {
+        req.user = handle.tenant();
+    }
     // Default target selection is model-aware (see
     // hypervisor::migration), so the relocated lease stays within the
     // per-device model policy.
@@ -592,6 +750,7 @@ fn h_reserve(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let reservation = ctx.inner.sched.reserve(
         req.user,
         req.regions,
+        req.model,
         VirtualTime::from_secs_f64(start_s),
         VirtualTime::from_secs_f64(duration_s),
     );
@@ -629,11 +788,17 @@ fn h_db_dump(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 
 fn h_job_status(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = JobStatusRequest::from_json(p)?;
-    Ok(ctx.inner.jobs.status(req.job)?.to_body().to_json())
+    let rec = ctx.inner.jobs.status(req.job)?;
+    authorize_job(ctx, rec.owner, req.lease)?;
+    Ok(rec.to_body().to_json())
 }
 
 fn h_job_wait(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = JobWaitRequest::from_json(p)?;
+    // Gate on ownership *before* blocking — a forged token must not
+    // be able to park threads on someone else's job.
+    let rec = ctx.inner.jobs.status(req.job)?;
+    authorize_job(ctx, rec.owner, req.lease)?;
     // Cap below the client library's 120 s socket read timeout: a
     // server-side wait that outlives the client's read would leave a
     // stale frame on the connection and desynchronize every later
@@ -652,6 +817,8 @@ fn h_job_wait(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 
 fn h_job_cancel(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = JobCancelRequest::from_json(p)?;
+    let rec = ctx.inner.jobs.status(req.job)?;
+    authorize_job(ctx, rec.owner, req.lease)?;
     Ok(ctx.inner.jobs.cancel(req.job)?.to_body().to_json())
 }
 
@@ -680,12 +847,29 @@ fn run_stream(
     req: &StreamRequest,
 ) -> Result<Json, ApiError> {
     let cfg = stream_config_for(&req.core, req.mults)?;
-    let svc = crate::service::RaaasService::with_scheduler(Arc::clone(
-        &inner.sched,
-    ));
-    let out = svc
-        .stream(req.alloc, req.user, &cfg)
-        .map_err(ApiError::from)?;
+    // Recover the lease handle from the grant (v1 callers present no
+    // token, but the grant knows its own) so the session-open +
+    // streaming body lives in exactly one place: Lease::stream. The
+    // handle resolves placement at run time — a migration between
+    // submit and run streams through the new device.
+    let grant = inner.sched.grant(req.alloc).ok_or_else(|| {
+        ApiError::from(HypervisorError::BadAllocation(req.alloc))
+    })?;
+    if grant.user != req.user {
+        return Err(ApiError::from(HypervisorError::BadAllocation(
+            req.alloc,
+        )));
+    }
+    let handle = inner.sched.lease_handle(grant.token).ok_or_else(|| {
+        ApiError::from(HypervisorError::BadAllocation(req.alloc))
+    })?;
+    // Stream the *requested* member (gang leases share one token).
+    let idx = handle
+        .members()
+        .iter()
+        .position(|a| *a == req.alloc)
+        .unwrap_or(0);
+    let out = handle.stream_member(idx, &cfg).map_err(ApiError::from)?;
     Ok(StreamOutcomeBody::from_outcome(&out).to_json())
 }
 

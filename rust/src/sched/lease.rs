@@ -1,0 +1,521 @@
+//! The unified admission request and the capability lease handle.
+//!
+//! [`AdmissionRequest`] is the single typed entry point for every
+//! allocation in the system — one vFPGA, a gang of N regions for a
+//! multi-core design, or a whole physical device (RSaaS) — replacing
+//! the old `acquire_vfpga` / `acquire_vfpga_blocking` /
+//! `acquire_physical` trio.
+//!
+//! [`Lease`] is what an admission returns: a capability-style RAII
+//! handle carrying an unguessable [`LeaseToken`]. Holding the token
+//! *is* the authorization — the middleware validates it on every
+//! mutating RPC instead of trusting a caller-supplied `user` field.
+//! The lease knows its current placement (the scheduler rebinds
+//! grants on migration, so the handle always answers with where the
+//! lease lives *now*), exposes `program` / `stream` / `release`
+//! itself, and returns the grant to the scheduler on drop.
+
+use std::num::NonZeroU32;
+use std::sync::Arc;
+
+use crate::bitstream::Bitstream;
+use crate::config::ServiceModel;
+use crate::fpga::board::BoardKind;
+use crate::hypervisor::HypervisorError;
+use crate::rc2f::stream::{StreamConfig, StreamOutcome};
+use crate::util::clock::VirtualTime;
+use crate::util::ids::{
+    AllocationId, FpgaId, LeaseToken, NodeId, UserId, VfpgaId, VmId,
+};
+
+use super::{GrantTarget, RequestClass, SchedError, Scheduler};
+
+/// Placement constraints on an admission.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Constraints {
+    /// Restrict to devices of this board model.
+    pub board: Option<BoardKind>,
+    /// All gang members must land on one device.
+    pub co_located: bool,
+    /// Physical admissions only: pass the device into this VM.
+    pub vm: Option<VmId>,
+}
+
+/// A typed admission request — the single allocation entry point.
+///
+/// `model == RSaaS` admits a whole physical device (never queues);
+/// any other model admits `regions` vFPGAs atomically (all-or-nothing
+/// gang grant via deadlock-free two-phase reservation of candidate
+/// regions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionRequest {
+    pub tenant: UserId,
+    pub model: ServiceModel,
+    pub class: RequestClass,
+    /// Regions to grant atomically (gang size); 1 for the common case.
+    pub regions: NonZeroU32,
+    pub constraints: Constraints,
+    /// Max queue wait (relative virtual time) before the entry is
+    /// deadline-boosted to interactive priority.
+    pub deadline: Option<VirtualTime>,
+}
+
+impl AdmissionRequest {
+    pub fn new(
+        tenant: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+    ) -> AdmissionRequest {
+        AdmissionRequest {
+            tenant,
+            model,
+            class,
+            regions: NonZeroU32::new(1).expect("1 is non-zero"),
+            constraints: Constraints::default(),
+            deadline: None,
+        }
+    }
+
+    /// Whole-device (RSaaS) admission.
+    pub fn physical(
+        tenant: UserId,
+        class: RequestClass,
+    ) -> AdmissionRequest {
+        AdmissionRequest::new(tenant, ServiceModel::RSaaS, class)
+    }
+
+    /// Request `n` regions granted atomically (clamped to ≥ 1).
+    pub fn gang(mut self, n: u32) -> AdmissionRequest {
+        self.regions = NonZeroU32::new(n.max(1)).expect("clamped ≥ 1");
+        self
+    }
+
+    pub fn co_located(mut self) -> AdmissionRequest {
+        self.constraints.co_located = true;
+        self
+    }
+
+    pub fn on_board(mut self, board: BoardKind) -> AdmissionRequest {
+        self.constraints.board = Some(board);
+        self
+    }
+
+    pub fn vm(mut self, vm: VmId) -> AdmissionRequest {
+        self.constraints.vm = Some(vm);
+        self
+    }
+
+    pub fn deadline(mut self, d: VirtualTime) -> AdmissionRequest {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// A live member of a lease and where it currently sits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemberPlacement {
+    pub alloc: AllocationId,
+    pub target: GrantTarget,
+}
+
+/// A granted lease: the capability handle over one admission.
+///
+/// Dropping an armed lease returns every member grant to the
+/// scheduler; [`Lease::into_token`] disarms it (the middleware server
+/// keeps leases alive across RPCs that way and re-materializes
+/// handles with [`Scheduler::lease_handle`]).
+pub struct Lease {
+    sched: Arc<Scheduler>,
+    token: LeaseToken,
+    tenant: UserId,
+    model: ServiceModel,
+    class: RequestClass,
+    /// Member allocations, primary first (stable over the lease's
+    /// lifetime; placements are looked up live).
+    members: Vec<AllocationId>,
+    wait: VirtualTime,
+    armed: bool,
+}
+
+impl Lease {
+    /// Internal constructor (the scheduler builds leases).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        sched: Arc<Scheduler>,
+        token: LeaseToken,
+        tenant: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+        members: Vec<AllocationId>,
+        wait: VirtualTime,
+        armed: bool,
+    ) -> Lease {
+        Lease {
+            sched,
+            token,
+            tenant,
+            model,
+            class,
+            members,
+            wait,
+            armed,
+        }
+    }
+
+    pub fn token(&self) -> LeaseToken {
+        self.token
+    }
+
+    pub fn tenant(&self) -> UserId {
+        self.tenant
+    }
+
+    pub fn model(&self) -> ServiceModel {
+        self.model
+    }
+
+    pub fn class(&self) -> RequestClass {
+        self.class
+    }
+
+    /// Member allocations, primary first.
+    pub fn members(&self) -> &[AllocationId] {
+        &self.members
+    }
+
+    /// The primary member's allocation id.
+    pub fn alloc(&self) -> AllocationId {
+        self.members[0]
+    }
+
+    /// Gang size.
+    pub fn regions(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Virtual time this admission spent queued.
+    pub fn wait(&self) -> VirtualTime {
+        self.wait
+    }
+
+    /// Live placement of every member, in member order (members whose
+    /// grants were released out-of-band are omitted).
+    pub fn placements(&self) -> Vec<MemberPlacement> {
+        self.members
+            .iter()
+            .filter_map(|a| {
+                self.sched.grant(*a).map(|g| MemberPlacement {
+                    alloc: *a,
+                    target: g.target,
+                })
+            })
+            .collect()
+    }
+
+    /// Current vFPGA of the primary member (None for physical leases
+    /// or after an out-of-band release).
+    pub fn vfpga(&self) -> Option<VfpgaId> {
+        self.sched.grant(self.alloc()).and_then(|g| g.vfpga())
+    }
+
+    /// Current device of the primary member.
+    pub fn fpga(&self) -> Option<FpgaId> {
+        self.sched.grant(self.alloc()).map(|g| g.fpga())
+    }
+
+    /// Current node of the primary member.
+    pub fn node(&self) -> Option<NodeId> {
+        self.sched.grant(self.alloc()).map(|g| g.node())
+    }
+
+    /// Total migrations (preemptions + explicit moves) the lease's
+    /// members have undergone — the signal the preemption-retry
+    /// helpers use to tell a clean mid-setup race from a real fault.
+    pub fn migrations(&self) -> u64 {
+        self.members
+            .iter()
+            .filter_map(|a| self.sched.grant(*a))
+            .map(|g| g.migrations)
+            .sum()
+    }
+
+    /// Program the primary member with a relocatable partial bitfile
+    /// (retargeted to wherever the lease currently sits).
+    pub fn program(
+        &self,
+        bitfile: &Bitstream,
+    ) -> Result<VirtualTime, HypervisorError> {
+        self.program_member(0, bitfile)
+    }
+
+    /// Program gang member `idx`.
+    pub fn program_member(
+        &self,
+        idx: usize,
+        bitfile: &Bitstream,
+    ) -> Result<VirtualTime, HypervisorError> {
+        let alloc = *self.members.get(idx).ok_or_else(|| {
+            HypervisorError::Db(format!("lease has no member {idx}"))
+        })?;
+        let hv = self.sched.hv();
+        let vfpga = hv.check_vfpga_lease(alloc, self.tenant)?;
+        let placed = hv.retarget_for(vfpga, bitfile)?;
+        hv.program_vfpga(alloc, self.tenant, &placed)
+    }
+
+    /// Write a full user bitstream to a physically-held device
+    /// (RSaaS leases only).
+    pub fn program_full(
+        &self,
+        bs: &Bitstream,
+    ) -> Result<VirtualTime, HypervisorError> {
+        self.sched.hv().program_full(self.alloc(), self.tenant, bs)
+    }
+
+    /// Stream a workload through the primary member via the RC2F host
+    /// API (the user-visible RAaaS path: session open + framework
+    /// streaming charges apply).
+    pub fn stream(
+        &self,
+        cfg: &StreamConfig,
+    ) -> Result<StreamOutcome, HypervisorError> {
+        self.stream_member(0, cfg)
+    }
+
+    /// Stream through gang member `idx` via the RC2F host API.
+    pub fn stream_member(
+        &self,
+        idx: usize,
+        cfg: &StreamConfig,
+    ) -> Result<StreamOutcome, HypervisorError> {
+        let alloc = *self.members.get(idx).ok_or_else(|| {
+            HypervisorError::Db(format!("lease has no member {idx}"))
+        })?;
+        let hv = self.sched.hv();
+        let vfpga = hv.check_vfpga_lease(alloc, self.tenant)?;
+        let fpga = {
+            let db = hv.db.lock().unwrap();
+            db.device_of_vfpga(vfpga)
+                .ok_or(HypervisorError::BadAllocation(alloc))?
+                .id
+        };
+        let api = hv.host_api(fpga)?;
+        let session = api
+            .open_session(self.tenant, vfpga)
+            .map_err(|e| HypervisorError::Db(e.to_string()))?;
+        session
+            .stream(cfg)
+            .map_err(|e| HypervisorError::Db(e.to_string()))
+    }
+
+    /// Stream through the primary member's device link directly (the
+    /// provider-side path BAaaS invocations and batch workers use).
+    /// Placement is re-resolved through the lease, so a preemption
+    /// that relocated the lease streams through the new device.
+    pub fn stream_direct(
+        &self,
+        cfg: &StreamConfig,
+    ) -> Result<StreamOutcome, HypervisorError> {
+        let hv = self.sched.hv();
+        let vfpga = hv.check_vfpga_lease(self.alloc(), self.tenant)?;
+        hv.stream_runner_for(vfpga)?
+            .run(cfg)
+            .map_err(HypervisorError::Db)
+    }
+
+    /// Return every member grant to the scheduler.
+    pub fn release(mut self) -> Result<(), SchedError> {
+        self.armed = false;
+        self.sched.release_token(self.token)
+    }
+
+    /// Disarm the handle and hand back the bare capability token —
+    /// the lease stays live in the scheduler (server-side retention
+    /// across RPCs; re-materialize with [`Scheduler::lease_handle`]).
+    pub fn into_token(mut self) -> LeaseToken {
+        self.armed = false;
+        self.token
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if self.armed {
+            // Best-effort: the lease may already have been released
+            // through the token or a member-level release.
+            let _ = self.sched.release_token(self.token);
+        }
+    }
+}
+
+/// Run `attempt`; if it fails with the *clean* failure signature a
+/// preemption race leaves behind (sanity rejection / device or
+/// device-file error) **and** the lease was migrated while the
+/// attempt ran, retry exactly once. Any other failure — or a clean
+/// failure without a migration — propagates unchanged.
+///
+/// This is the quiesce/pin stopgap the ROADMAP describes: a
+/// preemption between setup steps never corrupts state, it surfaces
+/// as a clean error; callers on unattended paths (BAaaS `invoke`,
+/// batch workers) should absorb one such race instead of failing the
+/// job to the caller.
+pub fn with_preemption_retry<T>(
+    lease: &Lease,
+    mut attempt: impl FnMut() -> Result<T, HypervisorError>,
+) -> Result<T, HypervisorError> {
+    let migrations_before = lease.migrations();
+    match attempt() {
+        Err(e)
+            if is_clean_setup_failure(&e)
+                && lease.migrations() > migrations_before =>
+        {
+            log::info!(
+                "lease {} preempted mid-setup ({e}); retrying once",
+                lease.token()
+            );
+            attempt()
+        }
+        other => other,
+    }
+}
+
+/// The error shapes a preemption race is known to surface as (sanity
+/// check against the relocated region, device/device-file access).
+fn is_clean_setup_failure(e: &HypervisorError) -> bool {
+    matches!(
+        e,
+        HypervisorError::Sanity(_)
+            | HypervisorError::Device(_)
+            | HypervisorError::Db(_)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    fn sched() -> Arc<Scheduler> {
+        let hv = Arc::new(
+            crate::hypervisor::Hypervisor::boot_paper_testbed(
+                VirtualClock::new(),
+            )
+            .unwrap(),
+        );
+        Scheduler::new(hv)
+    }
+
+    #[test]
+    fn request_builder_shapes() {
+        let u = UserId(0);
+        let r = AdmissionRequest::new(
+            u,
+            ServiceModel::RAaaS,
+            RequestClass::Normal,
+        )
+        .gang(4)
+        .co_located()
+        .on_board(BoardKind::Vc707)
+        .deadline(VirtualTime::from_secs_f64(5.0));
+        assert_eq!(r.regions.get(), 4);
+        assert!(r.constraints.co_located);
+        assert_eq!(r.constraints.board, Some(BoardKind::Vc707));
+        assert!(r.deadline.is_some());
+        let p = AdmissionRequest::physical(u, RequestClass::Interactive);
+        assert_eq!(p.model, ServiceModel::RSaaS);
+        assert_eq!(p.regions.get(), 1);
+        // gang(0) clamps instead of panicking.
+        let z = AdmissionRequest::new(
+            u,
+            ServiceModel::RAaaS,
+            RequestClass::Batch,
+        )
+        .gang(0);
+        assert_eq!(z.regions.get(), 1);
+    }
+
+    #[test]
+    fn lease_drop_returns_the_grant() {
+        let s = sched();
+        let user = s.hv().add_user("raii");
+        {
+            let _lease = s
+                .admit(&AdmissionRequest::new(
+                    user,
+                    ServiceModel::RAaaS,
+                    RequestClass::Normal,
+                ))
+                .unwrap();
+            assert_eq!(s.in_use(user), 1);
+        }
+        // Dropped without an explicit release: grant returned.
+        assert_eq!(s.in_use(user), 0);
+        assert_eq!(s.usage(user).released, 1);
+    }
+
+    #[test]
+    fn into_token_keeps_the_lease_alive() {
+        let s = sched();
+        let user = s.hv().add_user("server");
+        let lease = s
+            .admit(&AdmissionRequest::new(
+                user,
+                ServiceModel::RAaaS,
+                RequestClass::Normal,
+            ))
+            .unwrap();
+        let token = lease.into_token();
+        assert_eq!(s.in_use(user), 1, "disarmed handle must not release");
+        // Re-materialize and release through the capability.
+        let handle = s.lease_handle(token).expect("token resolves");
+        assert_eq!(handle.tenant(), user);
+        handle.release().unwrap();
+        assert_eq!(s.in_use(user), 0);
+        assert!(s.lease_handle(token).is_none(), "token is now stale");
+    }
+
+    #[test]
+    fn preemption_retry_helper_retries_exactly_once_after_migration() {
+        let s = sched();
+        let user = s.hv().add_user("retrier");
+        let lease = s
+            .admit(&AdmissionRequest::new(
+                user,
+                ServiceModel::BAaaS,
+                RequestClass::Batch,
+            ))
+            .unwrap();
+        // Clean failure without a migration: propagates.
+        let mut calls = 0;
+        let r: Result<(), _> = with_preemption_retry(&lease, || {
+            calls += 1;
+            Err(HypervisorError::Device("sanity race".into()))
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1, "no migration -> no retry");
+        // Simulate a preemption racing the first attempt: the grant's
+        // migration counter moves, the retry then succeeds.
+        let mut calls = 0;
+        let r = with_preemption_retry(&lease, || {
+            calls += 1;
+            if calls == 1 {
+                s.bump_migrations_for_test(lease.alloc());
+                Err(HypervisorError::Device("files vanished".into()))
+            } else {
+                Ok(42u32)
+            }
+        });
+        assert_eq!(r.unwrap(), 42);
+        assert_eq!(calls, 2, "exactly one retry");
+        // A terminal (non-clean) failure never retries.
+        let mut calls = 0;
+        let r: Result<(), _> = with_preemption_retry(&lease, || {
+            calls += 1;
+            s.bump_migrations_for_test(lease.alloc());
+            Err(HypervisorError::UnknownService("nope".into()))
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+        lease.release().unwrap();
+    }
+}

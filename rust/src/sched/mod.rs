@@ -20,10 +20,18 @@
 //! * [`accounting`] — per-tenant usage ledger charging device-seconds
 //!   and energy (priced from the [`crate::fpga::power`] model).
 //!
-//! Everything above the hypervisor routes through [`Scheduler`]:
-//! RSaaS/RAaaS/BAaaS façades ([`crate::service`]), VM launches
-//! ([`crate::vm`]), the batch system ([`crate::batch`]) and the
-//! middleware server's RPC surface ([`crate::middleware::server`]).
+//! Everything above the hypervisor routes through [`Scheduler`] by
+//! way of one typed entry point: an [`AdmissionRequest`] (tenant,
+//! model, class, gang size, placement constraints, deadline) admitted
+//! via [`Scheduler::admit`] / [`Scheduler::admit_blocking`] /
+//! [`Scheduler::enqueue`] yields a capability [`Lease`] carrying an
+//! unguessable [`LeaseToken`]. RSaaS/RAaaS/BAaaS façades
+//! ([`crate::service`]), VM launches ([`crate::vm`]), the batch
+//! system ([`crate::batch`]) and the middleware server's RPC surface
+//! ([`crate::middleware::server`]) all allocate exclusively through
+//! it. Gang requests (`regions > 1`) grant N regions atomically —
+//! all-or-nothing, via deadlock-free two-phase reservation of
+//! candidate regions in a fixed global order.
 //!
 //! Admission policy, in order:
 //! 1. quota check — budget exhaustion is terminal, a concurrency cap
@@ -40,6 +48,7 @@
 //! blockers, so no ready request starves.
 
 pub mod accounting;
+pub mod lease;
 pub mod persist;
 pub mod preempt;
 pub mod queue;
@@ -52,18 +61,23 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::ServiceModel;
+use crate::fpga::board::BoardKind;
 use crate::hypervisor::{Hypervisor, HypervisorError};
 use crate::util::clock::VirtualTime;
 use crate::util::ids::{
-    AllocationId, FpgaId, NodeId, ReservationId, TicketId, UserId, VfpgaId,
-    VmId,
+    AllocationId, FpgaId, LeaseToken, NodeId, ReservationId, TicketId,
+    UserId, VfpgaId, VmId,
 };
 use crate::util::json::Json;
 
 pub use accounting::{TenantUsage, UsageLedger};
+pub use lease::{
+    with_preemption_retry, AdmissionRequest, Constraints, Lease,
+    MemberPlacement,
+};
 pub use persist::PersistedState;
 pub use preempt::{select_victim, victim_order, VictimInfo};
-pub use queue::{AdmissionQueue, QueueEntry};
+pub use queue::{AdmissionQueue, QueueEntry, AGING_BOOST_GRANTS};
 pub use quota::{QuotaBook, QuotaDenial, TenantQuota, PHYSICAL_EQUIV_UNITS};
 pub use reservation::{Reservation, ReservationBook};
 
@@ -97,6 +111,15 @@ impl RequestClass {
             _ => None,
         }
     }
+
+    /// One step up the strict class ladder (aging boost); saturates
+    /// at interactive.
+    pub fn promote(self) -> RequestClass {
+        match self {
+            RequestClass::Batch => RequestClass::Normal,
+            _ => RequestClass::Interactive,
+        }
+    }
 }
 
 /// Scheduler errors.
@@ -112,6 +135,10 @@ pub enum SchedError {
     Hypervisor(String),
     #[error("no scheduler grant for {0}")]
     UnknownGrant(AllocationId),
+    #[error("unknown or stale lease token")]
+    UnknownLease,
+    #[error("request unsatisfiable: {0}")]
+    Unsatisfiable(String),
     #[error("request was cancelled")]
     Cancelled,
     #[error("unknown reservation {0}")]
@@ -162,6 +189,12 @@ pub struct SchedGrant {
     /// Reservation this admission drew a claim from, if any — the
     /// claim is credited back when the lease is released.
     pub from_reservation: Option<ReservationId>,
+    /// Capability token of the lease this grant belongs to (gang
+    /// members share one token).
+    pub token: LeaseToken,
+    /// Times this grant's region has been rebound by migration
+    /// (preemptions + explicit moves) — the preemption-retry signal.
+    pub migrations: u64,
 }
 
 impl SchedGrant {
@@ -185,6 +218,18 @@ impl SchedGrant {
     }
 }
 
+/// Scheduler-side record of one lease (the [`Lease`] handle is a
+/// re-materializable view over this).
+#[derive(Debug, Clone)]
+struct LeaseMeta {
+    tenant: UserId,
+    model: ServiceModel,
+    class: RequestClass,
+    /// Member allocations, primary first.
+    members: Vec<AllocationId>,
+    wait: VirtualTime,
+}
+
 struct SchedState {
     queue: AdmissionQueue,
     quotas: QuotaBook,
@@ -192,8 +237,76 @@ struct SchedState {
     ledger: UsageLedger,
     /// Live grants by allocation id (release + victim lookup).
     grants: BTreeMap<AllocationId, SchedGrant>,
-    /// Finished queue tickets awaiting collection by their waiter.
-    ready: BTreeMap<TicketId, Result<SchedGrant, SchedError>>,
+    /// Live leases by capability token.
+    leases: BTreeMap<LeaseToken, LeaseMeta>,
+    /// Finished queue tickets awaiting collection by their waiter
+    /// (tokens of granted leases, or the terminal error).
+    ready: BTreeMap<TicketId, Result<LeaseToken, SchedError>>,
+}
+
+/// Static facts about one device, cached at boot (devices never
+/// change after boot).
+#[derive(Debug, Clone)]
+struct DeviceInfo {
+    fpga: FpgaId,
+    models: Vec<ServiceModel>,
+    board: BoardKind,
+    /// Total vFPGA regions the device carves.
+    regions: u64,
+}
+
+impl DeviceInfo {
+    fn matches(&self, model: ServiceModel, board: Option<BoardKind>) -> bool {
+        self.models.contains(&model)
+            && board.map_or(true, |b| self.board == b)
+    }
+}
+
+/// Normalized admission work item — what the fast path and the queue
+/// pump both admit from ([`AdmissionRequest`] or a popped
+/// [`QueueEntry`]).
+struct AdmitSpec {
+    tenant: UserId,
+    model: ServiceModel,
+    class: RequestClass,
+    regions: u64,
+    co_located: bool,
+    board: Option<BoardKind>,
+    vm: Option<VmId>,
+    /// Set for requests that came through the queue (wait-time
+    /// accounting).
+    enqueued_ns: Option<u64>,
+    allow_preempt: bool,
+}
+
+impl AdmitSpec {
+    fn of_request(req: &AdmissionRequest, allow_preempt: bool) -> AdmitSpec {
+        AdmitSpec {
+            tenant: req.tenant,
+            model: req.model,
+            class: req.class,
+            regions: u64::from(req.regions.get()),
+            co_located: req.constraints.co_located,
+            board: req.constraints.board,
+            vm: req.constraints.vm,
+            enqueued_ns: None,
+            allow_preempt,
+        }
+    }
+
+    fn of_entry(entry: &QueueEntry) -> AdmitSpec {
+        AdmitSpec {
+            tenant: entry.user,
+            model: entry.model,
+            class: entry.class,
+            regions: entry.regions,
+            co_located: entry.co_located,
+            board: entry.board,
+            vm: None,
+            enqueued_ns: Some(entry.enqueued_ns),
+            allow_preempt: false,
+        }
+    }
 }
 
 /// The cluster scheduler.
@@ -208,9 +321,9 @@ struct SchedState {
 /// a wall-clock tick), but quotas and fairness are per-instance.
 pub struct Scheduler {
     hv: Arc<Hypervisor>,
-    /// Static device topology (fpga id → served models), cached at
-    /// construction — devices never change after boot.
-    devices: Vec<(FpgaId, Vec<ServiceModel>)>,
+    /// Static device topology, cached at construction — devices never
+    /// change after boot.
+    devices: Vec<DeviceInfo>,
     /// Total vFPGA regions across the cluster (reservation clamp).
     total_regions: u64,
     state: Mutex<SchedState>,
@@ -227,21 +340,6 @@ pub struct Scheduler {
     /// two concurrent writers could land out of order and persist a
     /// stale snapshot last.
     persist_written: Mutex<u64>,
-}
-
-/// Physically free regions on devices serving `model`, ignoring
-/// reservations.
-fn raw_free_units(
-    hv: &Hypervisor,
-    devices: &[(FpgaId, Vec<ServiceModel>)],
-    model: ServiceModel,
-) -> u64 {
-    let db = hv.db.lock().unwrap();
-    devices
-        .iter()
-        .filter(|(_, models)| models.contains(&model))
-        .map(|(f, _)| db.free_regions(*f).len() as u64)
-        .sum()
 }
 
 /// Device-seconds `user` has consumed so far: the released total in
@@ -265,41 +363,23 @@ fn used_device_seconds(
     ledger.device_seconds(user) + live
 }
 
-/// Free vFPGA capacity usable by `user` for `model`: free regions on
-/// devices serving the model, minus capacity withheld by *other*
-/// tenants' active reservations.
-fn free_units(
-    hv: &Hypervisor,
-    devices: &[(FpgaId, Vec<ServiceModel>)],
-    reservations: &ReservationBook,
-    user: UserId,
-    model: ServiceModel,
-    now_ns: u64,
-) -> u64 {
-    raw_free_units(hv, devices, model)
-        .saturating_sub(reservations.withheld_from(user, now_ns))
-}
-
 impl Scheduler {
     pub fn new(hv: Arc<Hypervisor>) -> Arc<Scheduler> {
-        let devices: Vec<(FpgaId, Vec<ServiceModel>)> = hv
-            .device_ids()
-            .into_iter()
-            .map(|id| {
-                let models = hv
-                    .device(id)
-                    .map(|d| d.models.clone())
-                    .unwrap_or_default();
-                (id, models)
-            })
-            .collect();
-        let total_regions = {
+        let devices: Vec<DeviceInfo> = {
             let db = hv.db.lock().unwrap();
-            db.devices
-                .values()
-                .map(|d| d.regions.len() as u64)
-                .sum()
+            hv.device_ids()
+                .into_iter()
+                .filter_map(|id| {
+                    db.device(id).map(|d| DeviceInfo {
+                        fpga: id,
+                        models: d.models.clone(),
+                        board: d.board,
+                        regions: d.regions.len() as u64,
+                    })
+                })
+                .collect()
         };
+        let total_regions = devices.iter().map(|d| d.regions).sum();
         Arc::new(Scheduler {
             hv,
             devices,
@@ -310,12 +390,65 @@ impl Scheduler {
                 reservations: ReservationBook::new(),
                 ledger: UsageLedger::new(),
                 grants: BTreeMap::new(),
+                leases: BTreeMap::new(),
                 ready: BTreeMap::new(),
             }),
             granted: Condvar::new(),
             persist_path: Mutex::new(None),
             persist_seq: AtomicU64::new(1),
             persist_written: Mutex::new(0),
+        })
+    }
+
+    // ----------------------------------------------- topology facts
+
+    /// Does a reservation pinned to `reserved` (None = cluster-wide)
+    /// withhold capacity from requests for `requested`? True when the
+    /// two models share at least one device.
+    fn models_share_device(
+        &self,
+        reserved: Option<ServiceModel>,
+        requested: ServiceModel,
+    ) -> bool {
+        match reserved {
+            None => true,
+            Some(m) => self.devices.iter().any(|d| {
+                d.models.contains(&m) && d.models.contains(&requested)
+            }),
+        }
+    }
+
+    /// Total regions on devices serving `model`.
+    fn total_regions_for(&self, model: ServiceModel) -> u64 {
+        self.devices
+            .iter()
+            .filter(|d| d.models.contains(&model))
+            .map(|d| d.regions)
+            .sum()
+    }
+
+    /// Physically free regions on devices matching `model` (+ board
+    /// constraint), ignoring reservations.
+    fn raw_free(&self, model: ServiceModel, board: Option<BoardKind>) -> u64 {
+        let db = self.hv.db.lock().unwrap();
+        self.devices
+            .iter()
+            .filter(|d| d.matches(model, board))
+            .map(|d| db.free_regions(d.fpga).len() as u64)
+            .sum()
+    }
+
+    /// Capacity withheld from `user` for a `model` request by other
+    /// tenants' active reservations whose model overlaps it.
+    fn withheld_for(
+        &self,
+        st: &SchedState,
+        user: UserId,
+        model: ServiceModel,
+        now_ns: u64,
+    ) -> u64 {
+        st.reservations.withheld_from(user, now_ns, |rm| {
+            self.models_share_device(rm, model)
         })
     }
 
@@ -433,28 +566,40 @@ impl Scheduler {
     // ------------------------------------------------- reservations
 
     /// Reserve `regions` vFPGAs for `user` over a virtual-time
-    /// window. Expired windows are reclaimed lazily on admission.
+    /// window, optionally pinned to a service model (the reservation
+    /// then only withholds capacity from requests sharing that
+    /// model's devices, and is clamped to that model's region count —
+    /// region-count- and model-aware instead of a cluster-wide
+    /// count). Expired windows are reclaimed lazily on admission.
     /// `regions` is clamped so the total booked over any overlapping
-    /// window never exceeds the cluster's vFPGA capacity — a pile of
+    /// window never exceeds the capacity it draws on — a pile of
     /// reservations cannot overbook and wedge all admissions (an
     /// over-ask may thus yield a smaller, even zero-region,
-    /// reservation; duration is operator-policed — the RPC surface
-    /// has no authentication layer to gate it on).
+    /// reservation; duration is operator-policed).
     pub fn reserve(
         &self,
         user: UserId,
         regions: u64,
+        model: Option<ServiceModel>,
         start: VirtualTime,
         duration: VirtualTime,
     ) -> ReservationId {
         let mut st = self.state.lock().unwrap();
         self.reap_locked(&mut st);
-        let already = st
-            .reservations
-            .reserved_overlapping(start.0, (start + duration).0);
-        let regions =
-            regions.min(self.total_regions.saturating_sub(already));
-        st.reservations.reserve(user, regions, start, duration)
+        let already = st.reservations.reserved_overlapping(
+            start.0,
+            (start + duration).0,
+            |rm| match (rm, model) {
+                (None, _) | (_, None) => true,
+                (Some(a), Some(b)) => self.models_share_device(Some(a), b),
+            },
+        );
+        let cap = match model {
+            Some(m) => self.total_regions_for(m),
+            None => self.total_regions,
+        };
+        let regions = regions.min(cap.saturating_sub(already));
+        st.reservations.reserve(user, regions, model, start, duration)
     }
 
     pub fn cancel_reservation(
@@ -465,42 +610,48 @@ impl Scheduler {
         if !st.reservations.cancel(id) {
             return Err(SchedError::UnknownReservation(id));
         }
-        // Freed capacity may admit queued work.
+        // Freed capacity may admit queued work — and those grants
+        // count against budgets, so they must reach the state file.
         self.pump_locked(&mut st);
+        let pending = self.persist_snapshot_locked(&st);
+        drop(st);
         self.granted.notify_all();
+        self.write_persisted(pending);
         Ok(())
     }
 
     // --------------------------------------------------- admissions
 
     /// Non-blocking admission — the interactive fast path. Fails with
-    /// [`SchedError::NoCapacity`] rather than queueing; interactive
-    /// requests may preempt a batch lease by migration first.
-    pub fn acquire_vfpga(
-        &self,
-        user: UserId,
-        model: ServiceModel,
-        class: RequestClass,
-    ) -> Result<SchedGrant, SchedError> {
+    /// [`SchedError::NoCapacity`] rather than queueing; single-region
+    /// interactive requests may preempt a batch lease by migration
+    /// first. Gang requests (`regions > 1`) grant atomically or fail.
+    pub fn admit(
+        self: &Arc<Self>,
+        req: &AdmissionRequest,
+    ) -> Result<Lease, SchedError> {
+        let spec = AdmitSpec::of_request(
+            req,
+            req.class == RequestClass::Interactive,
+        );
         let mut st = self.state.lock().unwrap();
         self.reap_locked(&mut st);
         // Capacity reclaimed since the last pump (reservation expiry,
-        // out-of-band release) belongs to queued strictly-higher-class
-        // requests before this caller's immediate attempt — classes
-        // are strict at every admission decision.
-        if st.queue.has_class_above(class) {
+        // out-of-band release) belongs to queued effectively-higher-
+        // class requests before this caller's immediate attempt —
+        // classes are strict at every admission decision.
+        let now_ns = self.hv.clock.now().0;
+        if st.queue.has_class_above(req.class, now_ns) {
             self.pump_locked(&mut st);
         }
-        let result = self.try_admit_locked(
-            &mut st,
-            user,
-            model,
-            class,
-            class == RequestClass::Interactive,
-        );
+        let result = self.try_admit_locked(&mut st, &spec);
         // Reservation expiry (or a preemption) may have freed
         // capacity queued work can use — pump before returning.
         self.pump_locked(&mut st);
+        let lease = result.and_then(|token| {
+            self.lease_locked(&st, token, true)
+                .ok_or(SchedError::UnknownLease)
+        });
         // Grants and preemption-downtime charges count against
         // budgets, so they must reach the state file too — not just
         // releases and quota updates.
@@ -508,86 +659,172 @@ impl Scheduler {
         drop(st);
         self.granted.notify_all();
         self.write_persisted(pending);
-        result
+        lease
     }
 
     /// Blocking admission: take the fast path when nothing of equal
     /// or higher class is queued, otherwise join the queue and wait
-    /// for the fair-share pump.
-    pub fn acquire_vfpga_blocking(
-        &self,
-        user: UserId,
-        model: ServiceModel,
-        class: RequestClass,
-    ) -> Result<SchedGrant, SchedError> {
+    /// for the fair-share pump. Physical (RSaaS) requests never
+    /// queue — they take the immediate path.
+    pub fn admit_blocking(
+        self: &Arc<Self>,
+        req: &AdmissionRequest,
+    ) -> Result<Lease, SchedError> {
+        if req.model == ServiceModel::RSaaS {
+            return self.admit(req);
+        }
         let ticket = {
             let mut st = self.state.lock().unwrap();
             self.reap_locked(&mut st);
-            if !st.queue.has_class_at_or_above(class) {
-                match self.try_admit_locked(
-                    &mut st,
-                    user,
-                    model,
-                    class,
-                    class == RequestClass::Interactive,
-                ) {
-                    Ok(grant) => return Ok(grant),
+            let now_ns = self.hv.clock.now().0;
+            if !st.queue.has_class_at_or_above(req.class, now_ns) {
+                let spec = AdmitSpec::of_request(
+                    req,
+                    req.class == RequestClass::Interactive,
+                );
+                match self.try_admit_locked(&mut st, &spec) {
+                    Ok(token) => {
+                        let lease = self
+                            .lease_locked(&st, token, true)
+                            .ok_or(SchedError::UnknownLease);
+                        let pending = self.persist_snapshot_locked(&st);
+                        drop(st);
+                        self.granted.notify_all();
+                        self.write_persisted(pending);
+                        return lease;
+                    }
                     Err(SchedError::NoCapacity)
                     | Err(SchedError::QuotaConcurrency(_)) => {}
                     Err(e) => return Err(e),
                 }
             }
-            self.enqueue_locked(&mut st, user, model, class)
+            self.enqueue_locked(&mut st, req)
         };
-        self.wait(ticket)
+        self.wait_ticket(ticket)
     }
 
-    /// Enqueue without waiting; pair with [`Scheduler::wait`] or
-    /// [`Scheduler::try_claim`].
-    pub fn submit(
-        &self,
-        user: UserId,
-        model: ServiceModel,
-        class: RequestClass,
-    ) -> TicketId {
+    /// Enqueue without waiting; pair with [`Scheduler::wait_ticket`]
+    /// or [`Scheduler::poll_ticket`].
+    pub fn enqueue(&self, req: &AdmissionRequest) -> TicketId {
         let mut st = self.state.lock().unwrap();
         self.reap_locked(&mut st);
-        self.enqueue_locked(&mut st, user, model, class)
+        let ticket = self.enqueue_locked(&mut st, req);
+        // enqueue_locked pumps — grants it produced count against
+        // budgets and must reach the state file.
+        let pending = self.persist_snapshot_locked(&st);
+        drop(st);
+        self.write_persisted(pending);
+        ticket
+    }
+
+    /// Can any device configuration ever satisfy this request?
+    /// Terminal-failure check for queued requests (a request no
+    /// topology can serve must not queue forever).
+    fn satisfiable(&self, req: &AdmissionRequest) -> Result<(), String> {
+        if req.model == ServiceModel::RSaaS {
+            return Err(
+                "physical (RSaaS) leases admit immediately; they do not \
+                 queue"
+                    .to_string(),
+            );
+        }
+        let board = req.constraints.board;
+        let matching: Vec<&DeviceInfo> = self
+            .devices
+            .iter()
+            .filter(|d| d.matches(req.model, board))
+            .collect();
+        if matching.is_empty() {
+            return Err(format!(
+                "no device serves model '{}'{}",
+                req.model.name(),
+                board
+                    .map(|b| format!(" on board '{}'", b.name()))
+                    .unwrap_or_default()
+            ));
+        }
+        let regions = u64::from(req.regions.get());
+        let cap: u64 = matching.iter().map(|d| d.regions).sum();
+        if cap < regions {
+            return Err(format!(
+                "gang of {regions} exceeds the {cap} regions the \
+                 matching devices have in total"
+            ));
+        }
+        if req.constraints.co_located
+            && !matching.iter().any(|d| d.regions >= regions)
+        {
+            return Err(format!(
+                "no single matching device has {regions} regions for a \
+                 co-located gang"
+            ));
+        }
+        Ok(())
     }
 
     fn enqueue_locked(
         &self,
         st: &mut SchedState,
-        user: UserId,
-        model: ServiceModel,
-        class: RequestClass,
+        req: &AdmissionRequest,
     ) -> TicketId {
         let now_ns = self.hv.clock.now().0;
-        let ticket = st.queue.push(user, model, class, now_ns);
-        // A model no device serves can never be admitted — fail the
-        // ticket terminally instead of queueing it forever.
-        if !self
-            .devices
-            .iter()
-            .any(|(_, models)| models.contains(&model))
-        {
+        let ticket = st.queue.push(req, now_ns);
+        if let Err(why) = self.satisfiable(req) {
+            st.queue.remove(ticket);
+            st.ready
+                .insert(ticket, Err(SchedError::Unsatisfiable(why)));
+            self.granted.notify_all();
+            return ticket;
+        }
+        // A gang wider than the tenant's concurrency cap can never
+        // admit even on an idle cluster — fail it now rather than
+        // queueing it forever (the pump re-checks in case a cap is
+        // lowered later).
+        let cap = st.quotas.quota(req.tenant).max_concurrent;
+        let regions = u64::from(req.regions.get());
+        if regions > cap {
             st.queue.remove(ticket);
             st.ready.insert(
                 ticket,
-                Err(SchedError::Hypervisor(format!(
-                    "no device serves model '{}'",
-                    model.name()
+                Err(SchedError::Unsatisfiable(format!(
+                    "gang of {regions} exceeds the tenant's \
+                     concurrency quota of {cap}"
                 ))),
             );
             self.granted.notify_all();
             return ticket;
         }
-        st.ledger.row_mut(user).queued += 1;
+        st.ledger.row_mut(req.tenant).queued += 1;
         self.hv.metrics.counter("sched.enqueued").inc();
         // Capacity may already be free (e.g. first submission).
         self.pump_locked(st);
         self.granted.notify_all();
         ticket
+    }
+
+    /// Materialize the [`Lease`] handle for a token whose meta is in
+    /// `st`. `armed` handles release on drop; disarmed ones are
+    /// server-side views. `None` when the lease is gone — a granted
+    /// ticket's members can be released out-of-band (by allocation
+    /// id) before the waiter collects it, and that must read as a
+    /// stale lease, not a panic under the state lock.
+    fn lease_locked(
+        self: &Arc<Self>,
+        st: &SchedState,
+        token: LeaseToken,
+        armed: bool,
+    ) -> Option<Lease> {
+        let meta = st.leases.get(&token)?;
+        Some(Lease::assemble(
+            Arc::clone(self),
+            token,
+            meta.tenant,
+            meta.model,
+            meta.class,
+            meta.members.clone(),
+            meta.wait,
+            armed,
+        ))
     }
 
     /// Block until the ticket resolves.
@@ -598,11 +835,17 @@ impl Scheduler {
     /// (a direct `Hypervisor::release`, or a sibling scheduler over
     /// the same hypervisor) is still picked up instead of blocking
     /// forever.
-    pub fn wait(&self, ticket: TicketId) -> Result<SchedGrant, SchedError> {
+    pub fn wait_ticket(
+        self: &Arc<Self>,
+        ticket: TicketId,
+    ) -> Result<Lease, SchedError> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(result) = st.ready.remove(&ticket) {
-                return result;
+                return result.and_then(|token| {
+                    self.lease_locked(&st, token, true)
+                        .ok_or(SchedError::UnknownLease)
+                });
             }
             let (guard, timeout) = self
                 .granted
@@ -611,24 +854,36 @@ impl Scheduler {
             st = guard;
             if timeout.timed_out() {
                 self.pump_locked(&mut st);
+                // The tick pump can admit queued work whose grants
+                // count against budgets — persist them (brief file
+                // write under the lock; the tick is a 500 ms
+                // fallback, not a hot path).
+                let pending = self.persist_snapshot_locked(&st);
+                self.write_persisted(pending);
                 // The pump may have resolved *other* waiters' tickets.
                 self.granted.notify_all();
             }
         }
     }
 
-    /// Non-blocking poll of a submitted ticket.
-    pub fn try_claim(
-        &self,
+    /// Non-blocking poll of an enqueued ticket.
+    pub fn poll_ticket(
+        self: &Arc<Self>,
         ticket: TicketId,
-    ) -> Option<Result<SchedGrant, SchedError>> {
-        self.state.lock().unwrap().ready.remove(&ticket)
+    ) -> Option<Result<Lease, SchedError>> {
+        let mut st = self.state.lock().unwrap();
+        let result = st.ready.remove(&ticket)?;
+        Some(result.and_then(|token| {
+            self.lease_locked(&st, token, true)
+                .ok_or(SchedError::UnknownLease)
+        }))
     }
 
     /// Cancel a still-queued ticket. Returns false when the ticket
     /// already left the queue (granted, failed, or never existed) —
-    /// the caller must then collect it via `wait`/`try_claim`.
-    pub fn cancel(&self, ticket: TicketId) -> bool {
+    /// the caller must then collect it via
+    /// `wait_ticket`/`poll_ticket`.
+    pub fn cancel_ticket(&self, ticket: TicketId) -> bool {
         let mut st = self.state.lock().unwrap();
         if st.queue.remove(ticket).is_some() {
             st.ready.insert(ticket, Err(SchedError::Cancelled));
@@ -640,25 +895,26 @@ impl Scheduler {
         }
     }
 
-    /// Exclusive physical-device admission (RSaaS / VM passthrough).
-    /// Never queues; counts [`PHYSICAL_EQUIV_UNITS`] against the
+    /// Exclusive physical-device admission (RSaaS / VM passthrough) —
+    /// the `model == RSaaS` arm of [`Scheduler::admit`]. Never
+    /// queues; counts [`PHYSICAL_EQUIV_UNITS`] against the
     /// concurrency quota. Physical capacity is not *reservable*, but
     /// taking a whole device removes its regions from the vFPGA pool,
     /// so admission is denied when that would leave other tenants'
-    /// active reservations uncoverable.
-    pub fn acquire_physical(
+    /// active reservations (of any model — conservative) uncoverable.
+    fn admit_physical_locked(
         &self,
-        user: UserId,
-        vm: Option<VmId>,
-        class: RequestClass,
-    ) -> Result<SchedGrant, SchedError> {
-        let mut st = self.state.lock().unwrap();
-        self.reap_locked(&mut st);
-        // As in acquire_vfpga: queued higher-class requests get first
-        // claim on capacity reclaimed since the last pump.
-        if st.queue.has_class_above(class) {
-            self.pump_locked(&mut st);
+        st: &mut SchedState,
+        spec: &AdmitSpec,
+    ) -> Result<LeaseToken, SchedError> {
+        if spec.regions != 1 {
+            return Err(SchedError::Unsatisfiable(
+                "physical (RSaaS) leases take whole devices; gang \
+                 regions apply to vFPGA models"
+                    .to_string(),
+            ));
         }
+        let user = spec.tenant;
         let used_s = used_device_seconds(
             &st.ledger,
             &st.grants,
@@ -670,19 +926,15 @@ impl Scheduler {
         {
             return Err(self.deny(d));
         }
-        // An exclusive lease removes a whole device's regions from
-        // the vFPGA pool; keep enough free regions to cover other
-        // tenants' active reservations (conservatively assuming the
-        // largest possible device).
         let withheld = st
             .reservations
-            .withheld_from(user, self.hv.clock.now().0);
+            .withheld_from_any(user, self.hv.clock.now().0);
         if withheld > 0 {
             let total_free: u64 = {
                 let db = self.hv.db.lock().unwrap();
                 self.devices
                     .iter()
-                    .map(|(f, _)| db.free_regions(*f).len() as u64)
+                    .map(|d| db.free_regions(d.fpga).len() as u64)
                     .sum()
             };
             if total_free.saturating_sub(crate::paper::MAX_VFPGAS as u64)
@@ -693,7 +945,7 @@ impl Scheduler {
         }
         let (alloc, fpga, node) = self
             .hv
-            .alloc_physical(user, vm)
+            .alloc_physical(user, spec.vm)
             .map_err(SchedError::from)?;
         // charge_w is *per unit*; spread the whole-board static draw
         // over the device's vFPGA-equivalents so release() bills
@@ -704,37 +956,93 @@ impl Scheduler {
             .map(|d| d.fpga.lock().unwrap().board.static_power_w)
             .unwrap_or(0.0)
             / PHYSICAL_EQUIV_UNITS as f64;
+        let token = LeaseToken::mint();
         let grant = SchedGrant {
             alloc,
             user,
             model: ServiceModel::RSaaS,
-            class,
+            class: spec.class,
             target: GrantTarget::Physical(fpga, node),
             units: PHYSICAL_EQUIV_UNITS,
             started_ns: self.hv.clock.now().0,
             wait: VirtualTime::ZERO,
             charge_w,
             from_reservation: None,
+            token,
+            migrations: 0,
         };
-        self.finish_grant_locked(&mut st, grant.clone());
+        self.finish_grant_locked(st, grant);
+        st.leases.insert(
+            token,
+            LeaseMeta {
+                tenant: user,
+                model: ServiceModel::RSaaS,
+                class: spec.class,
+                members: vec![alloc],
+                wait: VirtualTime::ZERO,
+            },
+        );
+        Ok(token)
+    }
+
+    /// Release one scheduler-tracked allocation (a single lease
+    /// member): returns it to the hypervisor, charges the usage
+    /// ledger, credits the quota and pumps the admission queue.
+    /// Whole-lease release goes through [`Scheduler::release_token`]
+    /// (or [`Lease::release`]).
+    pub fn release(&self, alloc: AllocationId) -> Result<(), SchedError> {
+        let mut st = self.state.lock().unwrap();
+        let result = self.release_member_locked(&mut st, alloc);
         self.pump_locked(&mut st);
         let pending = self.persist_snapshot_locked(&st);
         drop(st);
         self.granted.notify_all();
         self.write_persisted(pending);
-        Ok(grant)
+        result
     }
 
-    /// Release a scheduler-tracked allocation: returns the lease to
-    /// the hypervisor, charges the usage ledger, credits the quota
-    /// and pumps the admission queue.
-    pub fn release(&self, alloc: AllocationId) -> Result<(), SchedError> {
-        // Everything happens under the state lock (the scheduler's
-        // lock order is always state → hypervisor, same as the pump
-        // and preemption paths), so no concurrent acquire can observe
-        // the freed region with the quota still charged or vice
-        // versa.
+    /// Release every member of a lease by capability token — the
+    /// [`Lease`] handle's release/drop path. Members already released
+    /// out-of-band (by allocation id) are skipped, not errors.
+    pub fn release_token(
+        &self,
+        token: LeaseToken,
+    ) -> Result<(), SchedError> {
         let mut st = self.state.lock().unwrap();
+        let meta = st
+            .leases
+            .get(&token)
+            .cloned()
+            .ok_or(SchedError::UnknownLease)?;
+        let mut first_err = None;
+        for alloc in meta.members {
+            match self.release_member_locked(&mut st, alloc) {
+                Ok(()) | Err(SchedError::UnknownGrant(_)) => {}
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        st.leases.remove(&token);
+        self.pump_locked(&mut st);
+        let pending = self.persist_snapshot_locked(&st);
+        drop(st);
+        self.granted.notify_all();
+        self.write_persisted(pending);
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// One member's release bookkeeping. Everything happens under the
+    /// state lock (the scheduler's lock order is always state →
+    /// hypervisor, same as the pump and preemption paths), so no
+    /// concurrent admit can observe the freed region with the quota
+    /// still charged or vice versa.
+    fn release_member_locked(
+        &self,
+        st: &mut SchedState,
+        alloc: AllocationId,
+    ) -> Result<(), SchedError> {
         let grant = st
             .grants
             .remove(&alloc)
@@ -761,13 +1069,65 @@ impl Scheduler {
             // window already expired).
             st.reservations.release_claim(reservation);
         }
+        // Drop the member from its lease; the lease record goes with
+        // its last member.
+        if let Some(meta) = st.leases.get_mut(&grant.token) {
+            meta.members.retain(|a| *a != alloc);
+            if meta.members.is_empty() {
+                st.leases.remove(&grant.token);
+            }
+        }
         self.hv.metrics.counter("sched.released").inc();
-        self.pump_locked(&mut st);
-        let pending = self.persist_snapshot_locked(&st);
-        drop(st);
-        self.granted.notify_all();
-        self.write_persisted(pending);
         release_result.map_err(|e| SchedError::Hypervisor(e.to_string()))
+    }
+
+    // ------------------------------------------- lease capabilities
+
+    /// Re-materialize a (disarmed) lease handle from its capability
+    /// token. `None` for forged or stale tokens — possessing a valid
+    /// token IS the authorization, so this is the middleware's
+    /// auth check.
+    pub fn lease_handle(
+        self: &Arc<Self>,
+        token: LeaseToken,
+    ) -> Option<Lease> {
+        let st = self.state.lock().unwrap();
+        self.lease_locked(&st, token, false)
+    }
+
+    /// Verify that `token` owns the member allocation `alloc`.
+    /// Distinguishes "no such grant" ([`SchedError::UnknownGrant`],
+    /// the caller named a dead lease) from "grant exists but the
+    /// token does not own it" ([`SchedError::UnknownLease`], a forged
+    /// or stale capability).
+    pub fn verify_member(
+        &self,
+        token: LeaseToken,
+        alloc: AllocationId,
+    ) -> Result<(), SchedError> {
+        let st = self.state.lock().unwrap();
+        let grant = st
+            .grants
+            .get(&alloc)
+            .ok_or(SchedError::UnknownGrant(alloc))?;
+        if grant.token != token {
+            return Err(SchedError::UnknownLease);
+        }
+        Ok(())
+    }
+
+    /// A live grant by allocation id (lease placement queries,
+    /// status surfaces, tests).
+    pub fn grant(&self, alloc: AllocationId) -> Option<SchedGrant> {
+        self.state.lock().unwrap().grants.get(&alloc).cloned()
+    }
+
+    #[cfg(test)]
+    pub(crate) fn bump_migrations_for_test(&self, alloc: AllocationId) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(g) = st.grants.get_mut(&alloc) {
+            g.migrations += 1;
+        }
     }
 
     /// Record an out-of-band migration (e.g. the middleware `migrate`
@@ -792,6 +1152,9 @@ impl Scheduler {
         if let Some((fpga, node)) = new_home {
             if let Some(grant) = st.grants.get_mut(&alloc) {
                 grant.target = GrantTarget::Vfpga(to, fpga, node);
+                // Count the move so lease handles can tell a clean
+                // preemption race from a real fault (retry signal).
+                grant.migrations += 1;
             }
         }
     }
@@ -826,36 +1189,55 @@ impl Scheduler {
         }
     }
 
-    /// One immediate admission attempt under the state lock.
+    /// One immediate admission attempt under the state lock:
+    /// quota → capacity (model- and constraint-aware, minus
+    /// reservation withholdings) → allocate (placement policy for a
+    /// single region, two-phase candidate reservation for a gang) →
+    /// record the lease. All-or-nothing for gangs.
     fn try_admit_locked(
         &self,
         st: &mut SchedState,
-        user: UserId,
-        model: ServiceModel,
-        class: RequestClass,
-        allow_preempt: bool,
-    ) -> Result<SchedGrant, SchedError> {
+        spec: &AdmitSpec,
+    ) -> Result<LeaseToken, SchedError> {
+        if spec.model == ServiceModel::RSaaS {
+            return self.admit_physical_locked(st, spec);
+        }
         let now_ns = self.hv.clock.now().0;
-        let used_s = used_device_seconds(&st.ledger, &st.grants, user, now_ns);
-        if let Err(d) = st.quotas.admissible(user, 1, used_s) {
+        let used_s = used_device_seconds(
+            &st.ledger,
+            &st.grants,
+            spec.tenant,
+            now_ns,
+        );
+        // The whole gang counts against the concurrency quota at
+        // once — N regions admitted atomically are N units.
+        if let Err(d) =
+            st.quotas.admissible(spec.tenant, spec.regions, used_s)
+        {
             return Err(self.deny(d));
         }
-        if free_units(&self.hv, &self.devices, &st.reservations, user, model, now_ns)
-            == 0
-        {
-            // Preemption only helps when the model's devices are
-            // *physically* full AND no active reservation would
-            // swallow the vacated region. Otherwise migrating a
-            // victim is futile downtime: either free-but-reserved
-            // regions already exist, or the one region a preemption
-            // frees is owed to a reservation holder.
-            if raw_free_units(&self.hv, &self.devices, model) > 0
-                || st.reservations.withheld_from(user, now_ns) > 0
-            {
-                return Err(SchedError::NoCapacity);
-            }
-            if !(allow_preempt
-                && self.try_preempt_locked(st, user, model, class))
+        let raw_free = self.raw_free(spec.model, spec.board);
+        let withheld =
+            self.withheld_for(st, spec.tenant, spec.model, now_ns);
+        if raw_free.saturating_sub(withheld) < spec.regions {
+            // Preemption only helps a *single-region interactive*
+            // request when the model's devices are physically full
+            // AND no active reservation would swallow the vacated
+            // region. Otherwise migrating a victim is futile
+            // downtime: either free-but-reserved regions already
+            // exist, or the one region a preemption frees is owed to
+            // a reservation holder. Gangs never preempt — relocating
+            // N victims atomically is the quiesce/pin follow-up.
+            if spec.regions != 1
+                || !spec.allow_preempt
+                || raw_free > 0
+                || withheld > 0
+                || !self.try_preempt_locked(
+                    st,
+                    spec.tenant,
+                    spec.model,
+                    spec.class,
+                )
             {
                 return Err(SchedError::NoCapacity);
             }
@@ -863,46 +1245,140 @@ impl Scheduler {
             // capacity out of another tenant's reserved headroom: the
             // vacated region only counts if the post-preemption free
             // total still covers every active reservation.
-            if free_units(
-                &self.hv,
-                &self.devices,
-                &st.reservations,
-                user,
-                model,
-                now_ns,
-            ) == 0
+            let withheld =
+                self.withheld_for(st, spec.tenant, spec.model, now_ns);
+            if self
+                .raw_free(spec.model, spec.board)
+                .saturating_sub(withheld)
+                < 1
             {
                 return Err(SchedError::NoCapacity);
             }
         }
-        match self.hv.alloc_vfpga(user, model) {
-            Ok((alloc, vfpga, fpga, node)) => Ok(self.grant_vfpga_locked(
-                st, user, model, class, alloc, vfpga, fpga, node, None,
-            )),
-            Err(HypervisorError::NoCapacity) => Err(SchedError::NoCapacity),
-            Err(e) => Err(SchedError::Hypervisor(e.to_string())),
+        let members = self.allocate_members_locked(spec)?;
+        let now_ns = self.hv.clock.now().0;
+        let wait = VirtualTime(
+            now_ns.saturating_sub(spec.enqueued_ns.unwrap_or(now_ns)),
+        );
+        let token = LeaseToken::mint();
+        for (alloc, vfpga, fpga, node) in &members {
+            self.grant_member_locked(
+                st, spec, token, *alloc, *vfpga, *fpga, *node, wait,
+            );
         }
+        self.record_wait_locked(st, spec.tenant, wait);
+        st.leases.insert(
+            token,
+            LeaseMeta {
+                tenant: spec.tenant,
+                model: spec.model,
+                class: spec.class,
+                members: members.iter().map(|m| m.0).collect(),
+                wait,
+            },
+        );
+        Ok(token)
     }
 
-    /// Record a fresh vFPGA grant. `enqueued_ns` is set for requests
-    /// that came through the queue (wait-time accounting).
+    /// Claim the regions for one admission. A single unconstrained
+    /// region goes through the hypervisor's placement policy; a gang
+    /// (or a board-/co-location-constrained request) runs two-phase
+    /// reservation: phase 1 picks candidate regions in ascending
+    /// `(FpgaId, VfpgaId)` order — one fixed global order, so
+    /// concurrent gang admissions can never hold-and-wait in
+    /// conflicting orders (deadlock-free) — and phase 2 claims each
+    /// candidate, rolling every claimed region back if any claim
+    /// loses a race (no partial grant is ever observable).
+    fn allocate_members_locked(
+        &self,
+        spec: &AdmitSpec,
+    ) -> Result<Vec<(AllocationId, VfpgaId, FpgaId, NodeId)>, SchedError>
+    {
+        if spec.regions == 1 && spec.board.is_none() && !spec.co_located {
+            return match self.hv.alloc_vfpga(spec.tenant, spec.model) {
+                Ok(m) => Ok(vec![m]),
+                Err(HypervisorError::NoCapacity) => {
+                    Err(SchedError::NoCapacity)
+                }
+                Err(e) => Err(SchedError::Hypervisor(e.to_string())),
+            };
+        }
+        // Phase 1: candidate selection against a consistent snapshot.
+        let candidates: Vec<VfpgaId> = {
+            let db = self.hv.db.lock().unwrap();
+            let mut picked: Vec<VfpgaId> = Vec::new();
+            if spec.co_located {
+                for d in self
+                    .devices
+                    .iter()
+                    .filter(|d| d.matches(spec.model, spec.board))
+                {
+                    let free = db.free_regions(d.fpga);
+                    if free.len() as u64 >= spec.regions {
+                        picked = free
+                            .into_iter()
+                            .take(spec.regions as usize)
+                            .collect();
+                        break;
+                    }
+                }
+            } else {
+                'devices: for d in self
+                    .devices
+                    .iter()
+                    .filter(|d| d.matches(spec.model, spec.board))
+                {
+                    for v in db.free_regions(d.fpga) {
+                        picked.push(v);
+                        if picked.len() as u64 == spec.regions {
+                            break 'devices;
+                        }
+                    }
+                }
+            }
+            picked
+        };
+        if (candidates.len() as u64) < spec.regions {
+            return Err(SchedError::NoCapacity);
+        }
+        // Phase 2: claim; all-or-nothing.
+        let mut granted: Vec<(AllocationId, VfpgaId, FpgaId, NodeId)> =
+            Vec::new();
+        for v in candidates {
+            match self.hv.alloc_vfpga_on(spec.tenant, spec.model, v) {
+                Ok(m) => granted.push(m),
+                Err(e) => {
+                    for (alloc, _, _, _) in &granted {
+                        let _ = self.hv.release(*alloc);
+                    }
+                    return Err(match e {
+                        HypervisorError::NoCapacity => {
+                            SchedError::NoCapacity
+                        }
+                        other => {
+                            SchedError::Hypervisor(other.to_string())
+                        }
+                    });
+                }
+            }
+        }
+        Ok(granted)
+    }
+
+    /// Record one member grant of a fresh lease.
     #[allow(clippy::too_many_arguments)]
-    fn grant_vfpga_locked(
+    fn grant_member_locked(
         &self,
         st: &mut SchedState,
-        user: UserId,
-        model: ServiceModel,
-        class: RequestClass,
+        spec: &AdmitSpec,
+        token: LeaseToken,
         alloc: AllocationId,
         vfpga: VfpgaId,
         fpga: FpgaId,
         node: NodeId,
-        enqueued_ns: Option<u64>,
-    ) -> SchedGrant {
+        wait: VirtualTime,
+    ) {
         let now_ns = self.hv.clock.now().0;
-        let wait = VirtualTime(
-            now_ns.saturating_sub(enqueued_ns.unwrap_or(now_ns)),
-        );
         let charge_w = self
             .hv
             .device(fpga)
@@ -913,35 +1389,48 @@ impl Scheduler {
         // free capacity left (pre-alloc free = post-alloc + 1), the
         // grant came out of the general pool and the guarantee stays
         // intact for the real burst.
-        let raw_free_after = raw_free_units(&self.hv, &self.devices, model);
-        let from_reservation =
-            if raw_free_after + 1 <= st.reservations.withheld_total(now_ns) {
-                st.reservations.consume(user, now_ns)
-            } else {
-                None
-            };
+        let raw_free_after = self.raw_free(spec.model, None);
+        let reserved_total = st.reservations.withheld_total(now_ns, |rm| {
+            self.models_share_device(rm, spec.model)
+        });
+        let from_reservation = if raw_free_after + 1 <= reserved_total {
+            st.reservations.consume(spec.tenant, spec.model, now_ns)
+        } else {
+            None
+        };
         let grant = SchedGrant {
             alloc,
-            user,
-            model,
-            class,
+            user: spec.tenant,
+            model: spec.model,
+            class: spec.class,
             target: GrantTarget::Vfpga(vfpga, fpga, node),
             units: 1,
             started_ns: now_ns,
             wait,
             charge_w,
             from_reservation,
+            token,
+            migrations: 0,
         };
+        self.finish_grant_locked(st, grant);
+    }
+
+    /// One wait-histogram sample per *lease* (a gang is one
+    /// admission, not N samples).
+    fn record_wait_locked(
+        &self,
+        st: &mut SchedState,
+        tenant: UserId,
+        wait: VirtualTime,
+    ) {
         // Histogram stats render in microseconds; keep the name
         // unit-free so `rc3e stats` reads correctly.
         self.hv
             .metrics
             .histogram("sched.wait")
             .record_us((wait.as_millis_f64() * 1e3) as u64);
-        let row = st.ledger.row_mut(user);
+        let row = st.ledger.row_mut(tenant);
         row.max_wait_ms = row.max_wait_ms.max(wait.as_millis_f64());
-        self.finish_grant_locked(st, grant.clone());
-        grant
     }
 
     fn finish_grant_locked(&self, st: &mut SchedState, grant: SchedGrant) {
@@ -975,7 +1464,7 @@ impl Scheduler {
                     let serves = self
                         .devices
                         .iter()
-                        .any(|(id, models)| *id == f && models.contains(&model));
+                        .any(|d| d.fpga == f && d.models.contains(&model));
                     if serves {
                         Some(VictimInfo {
                             alloc: g.alloc,
@@ -1003,10 +1492,11 @@ impl Scheduler {
                 let db = self.hv.db.lock().unwrap();
                 self.devices
                     .iter()
-                    .filter(|(f, models)| {
-                        *f != victim.fpga && models.contains(&victim.model)
+                    .filter(|d| {
+                        d.fpga != victim.fpga
+                            && d.models.contains(&victim.model)
                     })
-                    .find_map(|(f, _)| db.free_regions(*f).first().copied())
+                    .find_map(|d| db.free_regions(d.fpga).first().copied())
             };
             let Some(target) = target else { continue };
             match self
@@ -1076,7 +1566,7 @@ impl Scheduler {
                 .filter_map(|e| {
                     match st.quotas.admissible(
                         e.user,
-                        1,
+                        e.regions,
                         used_device_seconds(
                             &st.ledger,
                             &st.grants,
@@ -1096,6 +1586,32 @@ impl Scheduler {
                 st.ready.insert(ticket, Err(self.deny(denial)));
             }
         }
+        // A queued gang wider than its tenant's concurrency cap can
+        // never admit however much is released — fail it terminally
+        // (covers caps lowered after enqueue; enqueue_locked already
+        // rejects the common case up front).
+        if !st.queue.is_empty() {
+            let oversized: Vec<(TicketId, u64, u64)> = st
+                .queue
+                .snapshot()
+                .into_iter()
+                .filter_map(|e| {
+                    let cap = st.quotas.quota(e.user).max_concurrent;
+                    (e.regions > cap)
+                        .then_some((e.ticket, e.regions, cap))
+                })
+                .collect();
+            for (ticket, regions, cap) in oversized {
+                st.queue.remove(ticket);
+                st.ready.insert(
+                    ticket,
+                    Err(SchedError::Unsatisfiable(format!(
+                        "gang of {regions} exceeds the tenant's \
+                         concurrency quota of {cap}"
+                    ))),
+                );
+            }
+        }
         loop {
             let now_ns = self.hv.clock.now().0;
             // Snapshot physical free counts once per iteration (they
@@ -1105,7 +1621,7 @@ impl Scheduler {
                 let db = self.hv.db.lock().unwrap();
                 self.devices
                     .iter()
-                    .map(|(f, _)| db.free_regions(*f).len() as u64)
+                    .map(|d| db.free_regions(d.fpga).len() as u64)
                     .collect()
             };
             let popped = {
@@ -1121,31 +1637,41 @@ impl Scheduler {
                 let reservations_ro: &ReservationBook = reservations;
                 let ledger_ro: &UsageLedger = ledger;
                 let grants_ro: &BTreeMap<AllocationId, SchedGrant> = grants;
-                let devices = &self.devices;
-                let free_for = |user: UserId, model: ServiceModel| -> u64 {
+                // Does the entry's whole shape fit free capacity:
+                // enough matching free regions after model-aware
+                // withholdings, on one device if co-located?
+                let fits = |e: &QueueEntry| -> bool {
                     let mut free = 0u64;
-                    for (i, (_, models)) in devices.iter().enumerate() {
-                        if models.contains(&model) {
+                    let mut best_single = 0u64;
+                    for (i, d) in self.devices.iter().enumerate() {
+                        if d.matches(e.model, e.board) {
                             free += free_by_device[i];
+                            best_single =
+                                best_single.max(free_by_device[i]);
                         }
                     }
-                    free.saturating_sub(
-                        reservations_ro.withheld_from(user, now_ns),
-                    )
+                    let withheld = reservations_ro.withheld_from(
+                        e.user,
+                        now_ns,
+                        |rm| self.models_share_device(rm, e.model),
+                    );
+                    free.saturating_sub(withheld) >= e.regions
+                        && (!e.co_located || best_single >= e.regions)
                 };
                 queue.pop_best(
+                    now_ns,
                     |u| quotas_ro.weight(u),
                     |e| {
                         quotas_ro
                             .admissible(
                                 e.user,
-                                1,
+                                e.regions,
                                 used_device_seconds(
                                     ledger_ro, grants_ro, e.user, now_ns,
                                 ),
                             )
                             .is_ok()
-                            && free_for(e.user, e.model) > 0
+                            && fits(e)
                     },
                 )
             };
@@ -1158,25 +1684,18 @@ impl Scheduler {
                 }
                 break;
             };
-            match self.hv.alloc_vfpga(entry.user, entry.model) {
-                Ok((alloc, vfpga, fpga, node)) => {
-                    let grant = self.grant_vfpga_locked(
-                        st,
-                        entry.user,
-                        entry.model,
-                        entry.class,
-                        alloc,
-                        vfpga,
-                        fpga,
-                        node,
-                        Some(entry.enqueued_ns),
-                    );
-                    st.ready.insert(entry.ticket, Ok(grant));
+            let spec = AdmitSpec::of_entry(&entry);
+            match self.try_admit_locked(st, &spec) {
+                Ok(token) => {
+                    st.ready.insert(entry.ticket, Ok(token));
                 }
-                Err(HypervisorError::NoCapacity) => {
-                    // Raced with an out-of-band allocation: put the
-                    // entry back unchanged (refunding the fair-share
-                    // pass charge pop_best took) and stop pumping.
+                Err(SchedError::NoCapacity)
+                | Err(SchedError::QuotaConcurrency(_)) => {
+                    // Raced with an out-of-band allocation (or the
+                    // per-member claims disagreed with the snapshot):
+                    // put the entry back unchanged (refunding the
+                    // fair-share pass charge pop_best took) and stop
+                    // pumping.
                     let weight = st.quotas.weight(entry.user);
                     st.queue.refund(entry.user, weight);
                     st.queue.requeue(entry);
@@ -1188,10 +1707,7 @@ impl Scheduler {
                     // ticket.
                     let weight = st.quotas.weight(entry.user);
                     st.queue.refund(entry.user, weight);
-                    st.ready.insert(
-                        entry.ticket,
-                        Err(SchedError::Hypervisor(e.to_string())),
-                    );
+                    st.ready.insert(entry.ticket, Err(e));
                 }
             }
         }
@@ -1209,7 +1725,13 @@ impl Scheduler {
             .queue
             .snapshot()
             .into_iter()
-            .filter(|e| e.class == RequestClass::Interactive)
+            // Only genuinely-interactive single-region entries earn a
+            // preemption — aging promotes queue *order*, not the
+            // right to migrate someone else's lease, and gangs never
+            // preempt.
+            .filter(|e| {
+                e.class == RequestClass::Interactive && e.regions == 1
+            })
             .filter(|e| {
                 st.quotas
                     .admissible(
@@ -1227,8 +1749,9 @@ impl Scheduler {
             .collect();
         candidates.sort_by_key(|e| e.seq);
         for entry in candidates {
-            if raw_free_units(&self.hv, &self.devices, entry.model) > 0
-                || st.reservations.withheld_from(entry.user, now_ns) > 0
+            if self.raw_free(entry.model, entry.board) > 0
+                || self.withheld_for(st, entry.user, entry.model, now_ns)
+                    > 0
             {
                 // Capacity exists but is reservation-withheld, or the
                 // vacated region would be owed to a reservation
@@ -1286,6 +1809,7 @@ impl Scheduler {
             ),
             ("queued_batch", Json::from(per_class(RequestClass::Batch))),
             ("active_grants", Json::from(st.grants.len())),
+            ("active_leases", Json::from(st.leases.len())),
             (
                 "queued_by_tenant",
                 Json::Obj(
@@ -1307,6 +1831,13 @@ impl Scheduler {
                                 ("user", Json::from(r.user.to_string())),
                                 ("regions", Json::from(r.regions)),
                                 ("claimed", Json::from(r.claimed)),
+                                (
+                                    "model",
+                                    match r.model {
+                                        Some(m) => Json::from(m.name()),
+                                        None => Json::Null,
+                                    },
+                                ),
                                 (
                                     "start_s",
                                     Json::from(
@@ -1349,7 +1880,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ClusterConfig;
+    use crate::config::{ClusterConfig, FpgaConfig, NodeConfig};
     use crate::hypervisor::PlacementPolicy;
     use crate::util::clock::VirtualClock;
 
@@ -1372,22 +1903,32 @@ mod tests {
         Scheduler::new(hv)
     }
 
+    fn one(
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+    ) -> AdmissionRequest {
+        AdmissionRequest::new(user, model, class)
+    }
+
     #[test]
-    fn acquire_and_release_roundtrip() {
+    fn admit_and_release_roundtrip() {
         let s = sched();
         let user = s.hv().add_user("alice");
-        let g = s
-            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Interactive)
+        let lease = s
+            .admit(&one(user, ServiceModel::RAaaS, RequestClass::Interactive))
             .unwrap();
         assert_eq!(s.in_use(user), 1);
-        assert!(g.vfpga().is_some());
-        s.release(g.alloc).unwrap();
+        assert!(lease.vfpga().is_some());
+        assert_eq!(lease.regions(), 1);
+        let alloc = lease.alloc();
+        lease.release().unwrap();
         assert_eq!(s.in_use(user), 0);
         assert_eq!(s.usage(user).released, 1);
         assert!(s.usage(user).device_seconds >= 0.0);
-        // Releasing twice is an UnknownGrant error.
+        // Releasing a dead member is an UnknownGrant error.
         assert!(matches!(
-            s.release(g.alloc),
+            s.release(alloc),
             Err(SchedError::UnknownGrant(_))
         ));
     }
@@ -1404,19 +1945,50 @@ mod tests {
             },
         );
         let g0 = s
-            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+            .admit(&one(user, ServiceModel::RAaaS, RequestClass::Normal))
             .unwrap();
         let _g1 = s
-            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+            .admit(&one(user, ServiceModel::RAaaS, RequestClass::Normal))
             .unwrap();
         assert!(matches!(
-            s.acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal),
+            s.admit(&one(user, ServiceModel::RAaaS, RequestClass::Normal)),
             Err(SchedError::QuotaConcurrency(_))
         ));
-        s.release(g0.alloc).unwrap();
+        g0.release().unwrap();
         assert!(s
-            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+            .admit(&one(user, ServiceModel::RAaaS, RequestClass::Normal))
             .is_ok());
+    }
+
+    #[test]
+    fn gang_counts_whole_gang_against_quota() {
+        let s = sched();
+        let user = s.hv().add_user("capped");
+        s.set_quota(
+            user,
+            TenantQuota {
+                max_concurrent: 2,
+                ..TenantQuota::default()
+            },
+        );
+        // A 3-gang is 3 units at once — denied even with 16 free
+        // regions.
+        assert!(matches!(
+            s.admit(
+                &one(user, ServiceModel::RAaaS, RequestClass::Normal)
+                    .gang(3)
+            ),
+            Err(SchedError::QuotaConcurrency(_))
+        ));
+        let gang = s
+            .admit(
+                &one(user, ServiceModel::RAaaS, RequestClass::Normal)
+                    .gang(2),
+            )
+            .unwrap();
+        assert_eq!(s.in_use(user), 2);
+        gang.release().unwrap();
+        assert_eq!(s.in_use(user), 0);
     }
 
     #[test]
@@ -1431,14 +2003,14 @@ mod tests {
             },
         );
         let g = s
-            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+            .admit(&one(user, ServiceModel::RAaaS, RequestClass::Normal))
             .unwrap();
         // Hold the lease for 60 virtual seconds — way over budget.
         s.hv().clock.advance(VirtualTime::from_secs_f64(60.0));
-        s.release(g.alloc).unwrap();
+        g.release().unwrap();
         assert!(s.usage(user).device_seconds > 10.0);
         assert!(matches!(
-            s.acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal),
+            s.admit(&one(user, ServiceModel::RAaaS, RequestClass::Normal)),
             Err(SchedError::QuotaBudget(_))
         ));
     }
@@ -1452,28 +2024,190 @@ mod tests {
         let mut held = Vec::new();
         for _ in 0..16 {
             held.push(
-                s.acquire_vfpga(
+                s.admit(&one(
                     users[0],
                     ServiceModel::RAaaS,
                     RequestClass::Normal,
-                )
+                ))
                 .unwrap(),
             );
         }
         // Queue one request per other tenant.
         let tickets: Vec<TicketId> = users[1..]
             .iter()
-            .map(|u| s.submit(*u, ServiceModel::RAaaS, RequestClass::Batch))
+            .map(|u| {
+                s.enqueue(&one(
+                    *u,
+                    ServiceModel::RAaaS,
+                    RequestClass::Batch,
+                ))
+            })
             .collect();
-        assert!(s.try_claim(tickets[0]).is_none());
-        // Three releases admit all three queued tenants.
-        for g in held.drain(..3) {
-            s.release(g.alloc).unwrap();
-        }
+        assert!(s.poll_ticket(tickets[0]).is_none());
+        // Three releases admit all three queued tenants (leases drop
+        // on drain, which releases them through the scheduler).
+        held.drain(..3);
         for t in &tickets {
-            let res = s.try_claim(*t).expect("granted after release");
+            let res = s.poll_ticket(*t).expect("granted after release");
             assert!(res.is_ok());
         }
+    }
+
+    #[test]
+    fn gang_admission_is_atomic_all_or_nothing() {
+        let s = sched_on(&ClusterConfig::single_vc707());
+        let u = s.hv().add_user("gang");
+        let other = s.hv().add_user("other");
+        let gang = s
+            .admit(&one(u, ServiceModel::RAaaS, RequestClass::Normal).gang(3))
+            .unwrap();
+        assert_eq!(gang.regions(), 3);
+        assert_eq!(s.in_use(u), 3);
+        assert_eq!(gang.placements().len(), 3);
+        // One region left: a 2-gang must not partially grant.
+        assert!(matches!(
+            s.admit(
+                &one(other, ServiceModel::RAaaS, RequestClass::Normal)
+                    .gang(2)
+            ),
+            Err(SchedError::NoCapacity)
+        ));
+        assert_eq!(s.in_use(other), 0, "no partial grant observable");
+        // A single still fits the leftover region.
+        let single = s
+            .admit(&one(other, ServiceModel::RAaaS, RequestClass::Normal))
+            .unwrap();
+        single.release().unwrap();
+        gang.release().unwrap();
+        assert_eq!(s.in_use(u), 0);
+        // Whole-device gang once everything is free.
+        let all = s
+            .admit(&one(u, ServiceModel::RAaaS, RequestClass::Normal).gang(4))
+            .unwrap();
+        assert_eq!(all.placements().len(), 4);
+        all.release().unwrap();
+    }
+
+    #[test]
+    fn gang_queues_until_enough_capacity_frees() {
+        let s = sched_on(&ClusterConfig::single_vc707());
+        let a = s.hv().add_user("a");
+        let b = s.hv().add_user("b");
+        let mut held: Vec<Lease> = (0..4)
+            .map(|_| {
+                s.admit(&one(a, ServiceModel::RAaaS, RequestClass::Normal))
+                    .unwrap()
+            })
+            .collect();
+        let t = s.enqueue(
+            &one(b, ServiceModel::RAaaS, RequestClass::Batch).gang(2),
+        );
+        assert!(s.poll_ticket(t).is_none());
+        // One freed region is not enough for the 2-gang.
+        held.pop().unwrap().release().unwrap();
+        assert!(s.poll_ticket(t).is_none(), "2-gang must not half-grant");
+        held.pop().unwrap().release().unwrap();
+        let lease = s
+            .poll_ticket(t)
+            .expect("2-gang granted once 2 regions free")
+            .unwrap();
+        assert_eq!(lease.regions(), 2);
+        assert_eq!(lease.tenant(), b);
+        lease.release().unwrap();
+    }
+
+    #[test]
+    fn impossible_requests_fail_terminally_not_queue_forever() {
+        let s = sched_on(&ClusterConfig::single_vc707());
+        let u = s.hv().add_user("dreamer");
+        // 5 regions on a 4-region cluster can never be granted.
+        let t = s.enqueue(
+            &one(u, ServiceModel::RAaaS, RequestClass::Batch).gang(5),
+        );
+        assert!(matches!(
+            s.poll_ticket(t),
+            Some(Err(SchedError::Unsatisfiable(_)))
+        ));
+        // Physical requests do not queue either.
+        let t2 = s.enqueue(&AdmissionRequest::physical(
+            u,
+            RequestClass::Interactive,
+        ));
+        assert!(matches!(
+            s.poll_ticket(t2),
+            Some(Err(SchedError::Unsatisfiable(_)))
+        ));
+        // A gang larger than one device cannot be co-located.
+        let t3 = s.enqueue(
+            &one(u, ServiceModel::RAaaS, RequestClass::Batch)
+                .gang(4)
+                .co_located(),
+        );
+        assert!(s.poll_ticket(t3).expect("resolved").is_ok());
+        // A gang wider than the tenant's concurrency cap can never
+        // admit — terminal error, not an eternal queue entry.
+        s.set_quota(
+            u,
+            TenantQuota {
+                max_concurrent: 2,
+                ..TenantQuota::default()
+            },
+        );
+        let t4 = s.enqueue(
+            &one(u, ServiceModel::RAaaS, RequestClass::Batch).gang(3),
+        );
+        assert!(matches!(
+            s.poll_ticket(t4),
+            Some(Err(SchedError::Unsatisfiable(_)))
+        ));
+    }
+
+    #[test]
+    fn co_located_gang_lands_on_one_device() {
+        // sched_testbed: fpga-0 (RAaaS+BAaaS) + fpga-1 (BAaaS only).
+        let s = sched_on(&ClusterConfig::sched_testbed());
+        let u = s.hv().add_user("multicore");
+        // Take 2 regions on fpga-0 so a spread gang would straddle.
+        let pins: Vec<Lease> = (0..2)
+            .map(|_| {
+                s.admit(&one(u, ServiceModel::BAaaS, RequestClass::Normal))
+                    .unwrap()
+            })
+            .collect();
+        let gang = s
+            .admit(
+                &one(u, ServiceModel::BAaaS, RequestClass::Normal)
+                    .gang(3)
+                    .co_located(),
+            )
+            .unwrap();
+        let fpgas: std::collections::BTreeSet<FpgaId> = gang
+            .placements()
+            .iter()
+            .map(|p| match p.target {
+                GrantTarget::Vfpga(_, f, _)
+                | GrantTarget::Physical(f, _) => f,
+            })
+            .collect();
+        assert_eq!(fpgas.len(), 1, "co-located gang split across devices");
+        assert_eq!(fpgas.into_iter().next(), Some(FpgaId(1)));
+        gang.release().unwrap();
+        drop(pins);
+    }
+
+    #[test]
+    fn board_constraint_restricts_devices() {
+        // paper_testbed: fpga-0/1 are VC707, fpga-2/3 are ML605.
+        let s = sched();
+        let u = s.hv().add_user("picky");
+        let lease = s
+            .admit(
+                &one(u, ServiceModel::RAaaS, RequestClass::Normal)
+                    .on_board(BoardKind::Ml605),
+            )
+            .unwrap();
+        assert_eq!(lease.fpga(), Some(FpgaId(2)));
+        lease.release().unwrap();
     }
 
     #[test]
@@ -1486,34 +2220,30 @@ mod tests {
         // device keeps free regions.
         let batch_grants = crate::testing::fill_batch_leases(&s, batcher, 4);
         // All four batch leases landed on the RAaaS-capable device.
-        assert!(batch_grants
-            .iter()
-            .all(|g| g.fpga() == crate::util::ids::FpgaId(0)));
-        // An interactive RAaaS request has no free RAaaS region —
+        assert!(batch_grants.iter().all(|g| g.fpga() == FpgaId(0)));
+        // A batch-class RAaaS request has no free RAaaS region —
         // without preemption this is NoCapacity.
         assert!(matches!(
-            s.acquire_vfpga(vip, ServiceModel::RAaaS, RequestClass::Batch),
+            s.admit(&one(vip, ServiceModel::RAaaS, RequestClass::Batch)),
             Err(SchedError::NoCapacity)
         ));
         // Interactive class preempts: one batch lease migrates to the
         // BAaaS-only device and the vip lands on fpga-0.
         let g = s
-            .acquire_vfpga(vip, ServiceModel::RAaaS, RequestClass::Interactive)
+            .admit(&one(vip, ServiceModel::RAaaS, RequestClass::Interactive))
             .unwrap();
-        assert_eq!(g.fpga(), crate::util::ids::FpgaId(0));
-        assert_eq!(
-            s.hv().metrics.counter("sched.preemptions").get(),
-            1
-        );
+        assert_eq!(g.fpga(), Some(FpgaId(0)));
+        assert_eq!(s.hv().metrics.counter("sched.preemptions").get(), 1);
         assert_eq!(s.usage(batcher).preempted, 1);
-        // The victim's grant now points at the other device and is
-        // still releasable.
+        // The victim's grant now points at the other device, counted
+        // a migration, and is still releasable.
         let moved = s
             .active_grants()
             .into_iter()
             .filter(|g| g.user == batcher)
-            .find(|g| g.fpga() != crate::util::ids::FpgaId(0))
+            .find(|g| g.fpga() != FpgaId(0))
             .expect("one batch lease migrated");
+        assert_eq!(moved.migrations, 1);
         s.release(moved.alloc).unwrap();
     }
 
@@ -1526,7 +2256,7 @@ mod tests {
         // so the vip's interactive request must preempt.
         let _grants = crate::testing::fill_batch_leases(&s, batcher, 4);
         let _g = s
-            .acquire_vfpga(vip, ServiceModel::RAaaS, RequestClass::Interactive)
+            .admit(&one(vip, ServiceModel::RAaaS, RequestClass::Interactive))
             .unwrap();
         // The migration outage lands on the preemptor's bill...
         let vip_row = s.usage(vip);
@@ -1534,9 +2264,7 @@ mod tests {
             vip_row.preempt_downtime_s > 0.0,
             "preemptor not charged: {vip_row:?}"
         );
-        assert!(
-            vip_row.device_seconds >= vip_row.preempt_downtime_s
-        );
+        assert!(vip_row.device_seconds >= vip_row.preempt_downtime_s);
         assert!(vip_row.energy_joules > 0.0);
         // ...and not on the victim's.
         let batcher_row = s.usage(batcher);
@@ -1577,10 +2305,10 @@ mod tests {
                 },
             );
             let g = s
-                .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Normal)
+                .admit(&one(user, ServiceModel::RAaaS, RequestClass::Normal))
                 .unwrap();
             s.hv().clock.advance(VirtualTime::from_secs_f64(5.0));
-            s.release(g.alloc).unwrap();
+            g.release().unwrap();
         }
         assert!(state_path.exists());
         // "Restart": a fresh hypervisor + scheduler reload the
@@ -1611,31 +2339,26 @@ mod tests {
         let holder = s.hv().add_user("holder");
         let other = s.hv().add_user("other");
         let now = s.hv().clock.now();
-        s.reserve(
-            holder,
-            2,
-            now,
-            VirtualTime::from_secs_f64(100.0),
-        );
+        s.reserve(holder, 2, None, now, VirtualTime::from_secs_f64(100.0));
         // Other tenant can only take the 2 unreserved regions.
         let _a = s
-            .acquire_vfpga(other, ServiceModel::RAaaS, RequestClass::Normal)
+            .admit(&one(other, ServiceModel::RAaaS, RequestClass::Normal))
             .unwrap();
         let _b = s
-            .acquire_vfpga(other, ServiceModel::RAaaS, RequestClass::Normal)
+            .admit(&one(other, ServiceModel::RAaaS, RequestClass::Normal))
             .unwrap();
         assert!(matches!(
-            s.acquire_vfpga(other, ServiceModel::RAaaS, RequestClass::Normal),
+            s.admit(&one(other, ServiceModel::RAaaS, RequestClass::Normal)),
             Err(SchedError::NoCapacity)
         ));
         // The holder draws from its reservation.
         let _h = s
-            .acquire_vfpga(holder, ServiceModel::RAaaS, RequestClass::Normal)
+            .admit(&one(holder, ServiceModel::RAaaS, RequestClass::Normal))
             .unwrap();
         // Window expires: remaining reserved capacity is reclaimed.
         s.hv().clock.advance(VirtualTime::from_secs_f64(200.0));
         assert!(s
-            .acquire_vfpga(other, ServiceModel::RAaaS, RequestClass::Normal)
+            .admit(&one(other, ServiceModel::RAaaS, RequestClass::Normal))
             .is_ok());
         assert_eq!(
             s.hv().metrics.counter("sched.reservations.expired").get(),
@@ -1644,33 +2367,91 @@ mod tests {
     }
 
     #[test]
-    fn blocking_acquire_waits_for_release() {
+    fn model_pinned_reservation_spares_disjoint_models() {
+        // Two devices with disjoint model sets: reserving the RAaaS
+        // pool must not wall off the BAaaS-only device (the ROADMAP's
+        // heterogeneous-config complaint).
+        let config = ClusterConfig {
+            nodes: vec![NodeConfig {
+                name: "n".to_string(),
+                fpgas: vec![
+                    FpgaConfig {
+                        board: BoardKind::Vc707,
+                        vfpgas: 4,
+                        models: vec![ServiceModel::RAaaS],
+                    },
+                    FpgaConfig {
+                        board: BoardKind::Vc707,
+                        vfpgas: 4,
+                        models: vec![ServiceModel::BAaaS],
+                    },
+                ],
+            }],
+            require_signatures: false,
+            rpc_overhead_ms: 69.0,
+        };
+        let s = sched_on(&config);
+        let holder = s.hv().add_user("holder");
+        let other = s.hv().add_user("other");
+        let now = s.hv().clock.now();
+        // Over-ask clamps to the model's own pool (4), not the
+        // cluster (8).
+        s.reserve(
+            holder,
+            99,
+            Some(ServiceModel::RAaaS),
+            now,
+            VirtualTime::from_secs_f64(100.0),
+        );
+        let status = s.status_json();
+        let rsv = &status.get("reservations").as_arr().unwrap()[0];
+        assert_eq!(rsv.get("regions").as_u64(), Some(4));
+        assert_eq!(rsv.get("model").as_str(), Some("raaas"));
+        // RAaaS capacity is fully withheld from others...
+        assert!(matches!(
+            s.admit(&one(other, ServiceModel::RAaaS, RequestClass::Normal)),
+            Err(SchedError::NoCapacity)
+        ));
+        // ...but the disjoint BAaaS pool stays usable.
+        let l = s
+            .admit(&one(other, ServiceModel::BAaaS, RequestClass::Normal))
+            .unwrap();
+        l.release().unwrap();
+        // The holder draws down its own pinned reservation.
+        let h = s
+            .admit(&one(holder, ServiceModel::RAaaS, RequestClass::Normal))
+            .unwrap();
+        h.release().unwrap();
+    }
+
+    #[test]
+    fn blocking_admit_waits_for_release() {
         let s = sched_on(&ClusterConfig::single_vc707());
         let a = s.hv().add_user("a");
         let b = s.hv().add_user("b");
         let mut held = Vec::new();
         for _ in 0..4 {
             held.push(
-                s.acquire_vfpga(a, ServiceModel::RAaaS, RequestClass::Normal)
+                s.admit(&one(a, ServiceModel::RAaaS, RequestClass::Normal))
                     .unwrap(),
             );
         }
         let s2 = Arc::clone(&s);
         let waiter = std::thread::spawn(move || {
-            s2.acquire_vfpga_blocking(
+            s2.admit_blocking(&one(
                 b,
                 ServiceModel::RAaaS,
                 RequestClass::Batch,
-            )
+            ))
         });
         // Give the waiter time to enqueue, then free a region.
         while s.hv().metrics.counter("sched.enqueued").get() == 0 {
             std::thread::yield_now();
         }
-        s.release(held.pop().unwrap().alloc).unwrap();
-        let grant = waiter.join().unwrap().unwrap();
-        assert_eq!(grant.user, b);
-        s.release(grant.alloc).unwrap();
+        held.pop().unwrap().release().unwrap();
+        let lease = waiter.join().unwrap().unwrap();
+        assert_eq!(lease.tenant(), b);
+        lease.release().unwrap();
     }
 
     #[test]
@@ -1678,28 +2459,71 @@ mod tests {
         let s = sched_on(&ClusterConfig::single_vc707());
         let a = s.hv().add_user("a");
         let b = s.hv().add_user("b");
+        let mut held = Vec::new();
         for _ in 0..4 {
-            s.acquire_vfpga(a, ServiceModel::RAaaS, RequestClass::Normal)
-                .unwrap();
+            held.push(
+                s.admit(&one(a, ServiceModel::RAaaS, RequestClass::Normal))
+                    .unwrap(),
+            );
         }
-        let t = s.submit(b, ServiceModel::RAaaS, RequestClass::Batch);
-        assert!(s.cancel(t));
-        assert_eq!(s.wait(t), Err(SchedError::Cancelled));
-        assert!(!s.cancel(t));
+        let t = s.enqueue(&one(b, ServiceModel::RAaaS, RequestClass::Batch));
+        assert!(s.cancel_ticket(t));
+        assert!(matches!(
+            s.wait_ticket(t),
+            Err(SchedError::Cancelled)
+        ));
+        assert!(!s.cancel_ticket(t));
+    }
+
+    #[test]
+    fn lease_tokens_gate_member_operations() {
+        let s = sched();
+        let user = s.hv().add_user("cap");
+        let lease = s
+            .admit(&one(user, ServiceModel::RAaaS, RequestClass::Normal).gang(2))
+            .unwrap();
+        let token = lease.token();
+        let second = lease.members()[1];
+        // The real token owns every member.
+        assert!(s.verify_member(token, lease.alloc()).is_ok());
+        assert!(s.verify_member(token, second).is_ok());
+        // A forged token is UnknownLease on a live grant...
+        assert!(matches!(
+            s.verify_member(LeaseToken(0xBAD), lease.alloc()),
+            Err(SchedError::UnknownLease)
+        ));
+        // ...and a dead allocation is UnknownGrant whatever the token.
+        assert!(matches!(
+            s.verify_member(token, AllocationId(9_999)),
+            Err(SchedError::UnknownGrant(_))
+        ));
+        // release_token tears down the whole gang.
+        s.release_token(token).unwrap();
+        assert_eq!(s.in_use(user), 0);
+        assert!(matches!(
+            s.release_token(token),
+            Err(SchedError::UnknownLease)
+        ));
+        assert!(s.lease_handle(token).is_none());
+        let _keepalive = lease.into_token();
     }
 
     #[test]
     fn status_json_reports_queue_shape() {
         let s = sched_on(&ClusterConfig::single_vc707());
         let a = s.hv().add_user("a");
+        let mut held = Vec::new();
         for _ in 0..4 {
-            s.acquire_vfpga(a, ServiceModel::RAaaS, RequestClass::Normal)
-                .unwrap();
+            held.push(
+                s.admit(&one(a, ServiceModel::RAaaS, RequestClass::Normal))
+                    .unwrap(),
+            );
         }
-        s.submit(a, ServiceModel::RAaaS, RequestClass::Batch);
+        s.enqueue(&one(a, ServiceModel::RAaaS, RequestClass::Batch));
         s.reserve(
             a,
             1,
+            None,
             s.hv().clock.now(),
             VirtualTime::from_secs_f64(10.0),
         );
@@ -1707,6 +2531,7 @@ mod tests {
         assert_eq!(j.get("queue_depth").as_u64(), Some(1));
         assert_eq!(j.get("queued_batch").as_u64(), Some(1));
         assert_eq!(j.get("active_grants").as_u64(), Some(4));
+        assert_eq!(j.get("active_leases").as_u64(), Some(4));
         assert_eq!(j.get("reservations").as_arr().unwrap().len(), 1);
         let report = s.usage_report();
         assert!(report.contains("tenant"), "{report}");

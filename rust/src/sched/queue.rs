@@ -1,7 +1,15 @@
-//! Priority admission queue with weighted fair-share across tenants.
+//! Priority admission queue with weighted fair-share across tenants
+//! and starvation-bounding aging.
 //!
 //! Ordering is two-level:
-//! 1. request class — `Interactive > Normal > Batch`, strict;
+//! 1. *effective* request class — `Interactive > Normal > Batch`,
+//!    strict, where the effective class of a waiting entry rises with
+//!    queue age: every [`AGING_BOOST_GRANTS`] grants that pass over a
+//!    still-queued entry promote it one class, and an entry past its
+//!    admission deadline is boosted straight to interactive. A
+//!    saturating interactive storm therefore cannot starve batch
+//!    work indefinitely — a batch ticket is admitted within a bounded
+//!    number of grants (see `aging_bounds_batch_starvation` below).
 //! 2. within a class, *stride scheduling* over tenants: every tenant
 //!    carries a `pass` value that grows by `STRIDE_SCALE / weight`
 //!    each time one of its requests is admitted, and the tenant with
@@ -10,23 +18,31 @@
 //!    contended window. Ties break on submission order (FIFO), which
 //!    also keeps a single tenant's requests in order.
 //!
-//! The queue never decides *admissibility* itself — the scheduler
-//! passes an `admissible` predicate (quota headroom + free capacity
-//! for the requested model) into [`AdmissionQueue::pop_best`], and
-//! blocked entries are skipped without losing their place. That is
-//! what prevents one tenant sitting at its quota from starving every
-//! other tenant behind it.
+//! Entries carry the full admission shape (gang size, co-location,
+//! board constraint, deadline) so the scheduler's pump can re-attempt
+//! the exact request. The queue never decides *admissibility* itself
+//! — the scheduler passes an `admissible` predicate (quota headroom +
+//! free capacity for the requested shape) into
+//! [`AdmissionQueue::pop_best`], and blocked entries are skipped
+//! without losing their place. That is what prevents one tenant
+//! sitting at its quota from starving every other tenant behind it.
 
 use std::collections::BTreeMap;
 
 use crate::config::ServiceModel;
+use crate::fpga::board::BoardKind;
 use crate::util::ids::{TicketId, UserId};
 
-use super::RequestClass;
+use super::{AdmissionRequest, RequestClass};
 
 /// Pass increment for a weight-1 tenant; a tenant of weight `w`
 /// advances by `STRIDE_SCALE / w` per admission.
 pub const STRIDE_SCALE: u64 = 1 << 20;
+
+/// Grants that may pass over a waiting entry before its effective
+/// class is promoted one step (aging). Batch reaches interactive
+/// after `2 * AGING_BOOST_GRANTS` skips, bounding starvation.
+pub const AGING_BOOST_GRANTS: u64 = 16;
 
 /// One queued admission request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -35,10 +51,39 @@ pub struct QueueEntry {
     pub user: UserId,
     pub model: ServiceModel,
     pub class: RequestClass,
+    /// Gang size: regions to grant atomically (all-or-nothing).
+    pub regions: u64,
+    /// All gang members must land on one device.
+    pub co_located: bool,
+    /// Restrict to devices of this board model.
+    pub board: Option<BoardKind>,
+    /// Absolute virtual deadline; past it the entry is boosted to
+    /// interactive (deadline boost).
+    pub deadline_ns: Option<u64>,
     /// Virtual timestamp of submission (wait-time accounting).
     pub enqueued_ns: u64,
     /// Global submission sequence (FIFO tie-break).
     pub seq: u64,
+    /// Grants that popped past this entry while it waited (aging).
+    pub skipped: u64,
+}
+
+impl QueueEntry {
+    /// The class this entry competes at *now*: the submitted class
+    /// promoted once per [`AGING_BOOST_GRANTS`] skipped grants, and
+    /// all the way to interactive past the deadline.
+    pub fn effective_class(&self, now_ns: u64) -> RequestClass {
+        if let Some(d) = self.deadline_ns {
+            if now_ns >= d {
+                return RequestClass::Interactive;
+            }
+        }
+        let mut class = self.class;
+        for _ in 0..(self.skipped / AGING_BOOST_GRANTS) {
+            class = class.promote();
+        }
+        class
+    }
 }
 
 /// The admission queue.
@@ -62,12 +107,11 @@ impl AdmissionQueue {
         AdmissionQueue::default()
     }
 
-    /// Enqueue a request; returns its ticket.
+    /// Enqueue a request; returns its ticket. A relative deadline in
+    /// the request becomes an absolute virtual timestamp here.
     pub fn push(
         &mut self,
-        user: UserId,
-        model: ServiceModel,
-        class: RequestClass,
+        req: &AdmissionRequest,
         now_ns: u64,
     ) -> TicketId {
         let ticket = TicketId(self.next_ticket);
@@ -78,15 +122,22 @@ impl AdmissionQueue {
         // it cannot leapfrog tenants that have been waiting (nor be
         // penalized for arriving late).
         let floor = self.min_live_pass();
-        let pass = self.passes.entry(user).or_insert(floor);
+        let pass = self.passes.entry(req.tenant).or_insert(floor);
         *pass = (*pass).max(floor);
         self.entries.push(QueueEntry {
             ticket,
-            user,
-            model,
-            class,
+            user: req.tenant,
+            model: req.model,
+            class: req.class,
+            regions: u64::from(req.regions.get()),
+            co_located: req.constraints.co_located,
+            board: req.constraints.board,
+            deadline_ns: req
+                .deadline
+                .map(|d| now_ns.saturating_add(d.0)),
             enqueued_ns: now_ns,
             seq,
+            skipped: 0,
         });
         ticket
     }
@@ -112,14 +163,26 @@ impl AdmissionQueue {
         self.entries.iter().filter(|e| e.user == user).count()
     }
 
-    /// Any queued request at or above `class`?
-    pub fn has_class_at_or_above(&self, class: RequestClass) -> bool {
-        self.entries.iter().any(|e| e.class >= class)
+    /// Any queued request effectively at or above `class`?
+    pub fn has_class_at_or_above(
+        &self,
+        class: RequestClass,
+        now_ns: u64,
+    ) -> bool {
+        self.entries
+            .iter()
+            .any(|e| e.effective_class(now_ns) >= class)
     }
 
-    /// Any queued request strictly above `class`?
-    pub fn has_class_above(&self, class: RequestClass) -> bool {
-        self.entries.iter().any(|e| e.class > class)
+    /// Any queued request effectively strictly above `class`?
+    pub fn has_class_above(
+        &self,
+        class: RequestClass,
+        now_ns: u64,
+    ) -> bool {
+        self.entries
+            .iter()
+            .any(|e| e.effective_class(now_ns) > class)
     }
 
     /// Remove a queued request (cancellation). Returns the entry if it
@@ -136,12 +199,14 @@ impl AdmissionQueue {
         self.entries.push(entry);
     }
 
-    /// Pop the best admissible request: highest class, then smallest
-    /// tenant pass, then FIFO. Advances the winner's pass by its
-    /// stride (`STRIDE_SCALE / weight`). Entries failing `admissible`
-    /// keep their place.
+    /// Pop the best admissible request: highest *effective* class,
+    /// then smallest tenant pass, then FIFO. Advances the winner's
+    /// pass by its stride (`STRIDE_SCALE / weight`) and counts one
+    /// skipped grant against every entry left waiting (aging).
+    /// Entries failing `admissible` keep their place.
     pub fn pop_best(
         &mut self,
+        now_ns: u64,
         weight_of: impl Fn(UserId) -> u64,
         admissible: impl Fn(&QueueEntry) -> bool,
     ) -> Option<QueueEntry> {
@@ -154,15 +219,16 @@ impl AdmissionQueue {
                 None => true,
                 Some(b) => {
                     let cur = &self.entries[b];
-                    let e_pass = self.passes.get(&e.user).copied().unwrap_or(0);
+                    let e_pass =
+                        self.passes.get(&e.user).copied().unwrap_or(0);
                     let b_pass =
                         self.passes.get(&cur.user).copied().unwrap_or(0);
                     (
-                        std::cmp::Reverse(e.class),
+                        std::cmp::Reverse(e.effective_class(now_ns)),
                         e_pass,
                         e.seq,
                     ) < (
-                        std::cmp::Reverse(cur.class),
+                        std::cmp::Reverse(cur.effective_class(now_ns)),
                         b_pass,
                         cur.seq,
                     )
@@ -173,6 +239,9 @@ impl AdmissionQueue {
             }
         }
         let entry = self.entries.remove(best?);
+        for waiting in &mut self.entries {
+            waiting.skipped += 1;
+        }
         let stride = Self::stride(weight_of(entry.user));
         let pass = self.passes.entry(entry.user).or_insert(0);
         // The winner's pass is the queue's current virtual time.
@@ -205,32 +274,45 @@ impl AdmissionQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::clock::VirtualTime;
 
     fn q() -> AdmissionQueue {
         AdmissionQueue::new()
+    }
+
+    fn req(
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+    ) -> AdmissionRequest {
+        AdmissionRequest::new(user, model, class)
     }
 
     #[test]
     fn fifo_within_one_tenant() {
         let mut q = q();
         let u = UserId(0);
-        let t0 = q.push(u, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        let t1 = q.push(u, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        let a = q.pop_best(|_| 1, |_| true).unwrap();
-        let b = q.pop_best(|_| 1, |_| true).unwrap();
+        let t0 =
+            q.push(&req(u, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        let t1 =
+            q.push(&req(u, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        let a = q.pop_best(0, |_| 1, |_| true).unwrap();
+        let b = q.pop_best(0, |_| 1, |_| true).unwrap();
         assert_eq!(a.ticket, t0);
         assert_eq!(b.ticket, t1);
-        assert!(q.pop_best(|_| 1, |_| true).is_none());
+        assert!(q.pop_best(0, |_| 1, |_| true).is_none());
     }
 
     #[test]
     fn higher_class_preempts_queue_order() {
         let mut q = q();
         let u = UserId(0);
-        q.push(u, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        let hi =
-            q.push(u, ServiceModel::RAaaS, RequestClass::Interactive, 0);
-        let first = q.pop_best(|_| 1, |_| true).unwrap();
+        q.push(&req(u, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        let hi = q.push(
+            &req(u, ServiceModel::RAaaS, RequestClass::Interactive),
+            0,
+        );
+        let first = q.pop_best(0, |_| 1, |_| true).unwrap();
         assert_eq!(first.ticket, hi);
         assert_eq!(first.class, RequestClass::Interactive);
     }
@@ -241,15 +323,15 @@ mod tests {
         let heavy = UserId(0);
         let light = UserId(1);
         for _ in 0..30 {
-            q.push(heavy, ServiceModel::RAaaS, RequestClass::Batch, 0);
-            q.push(light, ServiceModel::RAaaS, RequestClass::Batch, 0);
+            q.push(&req(heavy, ServiceModel::RAaaS, RequestClass::Batch), 0);
+            q.push(&req(light, ServiceModel::RAaaS, RequestClass::Batch), 0);
         }
         let weight = |u: UserId| if u == heavy { 2 } else { 1 };
         // First 12 admissions: heavy should get ~2x light's share.
         let mut heavy_n = 0;
         let mut light_n = 0;
         for _ in 0..12 {
-            let e = q.pop_best(weight, |_| true).unwrap();
+            let e = q.pop_best(0, weight, |_| true).unwrap();
             if e.user == heavy {
                 heavy_n += 1;
             } else {
@@ -265,12 +347,11 @@ mod tests {
         let mut q = q();
         let stuck = UserId(0);
         let ok = UserId(1);
-        q.push(stuck, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        let t = q.push(ok, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        q.push(&req(stuck, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        let t =
+            q.push(&req(ok, ServiceModel::RAaaS, RequestClass::Batch), 0);
         // `stuck` is at quota: the predicate rejects it.
-        let e = q
-            .pop_best(|_| 1, |e| e.user != stuck)
-            .unwrap();
+        let e = q.pop_best(0, |_| 1, |e| e.user != stuck).unwrap();
         assert_eq!(e.ticket, t);
         // The blocked entry kept its place.
         assert_eq!(q.depth_for(stuck), 1);
@@ -282,18 +363,18 @@ mod tests {
         let a = UserId(0);
         let b = UserId(1);
         // a gets two admissions first (its pass advances).
-        q.push(a, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        q.push(a, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        q.pop_best(|_| 1, |_| true).unwrap();
-        q.pop_best(|_| 1, |_| true).unwrap();
+        q.push(&req(a, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        q.push(&req(a, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        q.pop_best(0, |_| 1, |_| true).unwrap();
+        q.pop_best(0, |_| 1, |_| true).unwrap();
         // Now both queue one request: b is new but starts at the live
         // pass floor (a's pass), NOT at zero — so b cannot leapfrog
         // the backlog; the tie breaks FIFO to a, then b goes next once
         // a's pass has advanced past the floor.
-        q.push(a, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        q.push(b, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        let first = q.pop_best(|_| 1, |_| true).unwrap();
-        let second = q.pop_best(|_| 1, |_| true).unwrap();
+        q.push(&req(a, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        q.push(&req(b, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        let first = q.pop_best(0, |_| 1, |_| true).unwrap();
+        let second = q.pop_best(0, |_| 1, |_| true).unwrap();
         assert_eq!(first.user, a, "tie at the floor breaks FIFO");
         assert_eq!(second.user, b, "then the newcomer's floor pass wins");
     }
@@ -305,18 +386,21 @@ mod tests {
         let newbie = UserId(1);
         // The veteran accumulates pass through many admissions.
         for _ in 0..50 {
-            q.push(veteran, ServiceModel::RAaaS, RequestClass::Batch, 0);
+            q.push(
+                &req(veteran, ServiceModel::RAaaS, RequestClass::Batch),
+                0,
+            );
         }
         for _ in 0..50 {
-            q.pop_best(|_| 1, |_| true).unwrap();
+            q.pop_best(0, |_| 1, |_| true).unwrap();
         }
         // Queue drained. A newcomer submitting now starts at the
         // floor, not zero — so the veteran's next request loses at
         // most one round, not fifty.
-        q.push(newbie, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        q.push(veteran, ServiceModel::RAaaS, RequestClass::Batch, 0);
-        let first = q.pop_best(|_| 1, |_| true).unwrap();
-        let second = q.pop_best(|_| 1, |_| true).unwrap();
+        q.push(&req(newbie, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        q.push(&req(veteran, ServiceModel::RAaaS, RequestClass::Batch), 0);
+        let first = q.pop_best(0, |_| 1, |_| true).unwrap();
+        let second = q.pop_best(0, |_| 1, |_| true).unwrap();
         assert_eq!(first.user, newbie, "newcomer is at most one stride behind");
         assert_eq!(second.user, veteran);
     }
@@ -325,7 +409,8 @@ mod tests {
     fn remove_cancels_a_ticket() {
         let mut q = q();
         let u = UserId(0);
-        let t = q.push(u, ServiceModel::RAaaS, RequestClass::Batch, 0);
+        let t =
+            q.push(&req(u, ServiceModel::RAaaS, RequestClass::Batch), 0);
         assert_eq!(q.len(), 1);
         assert!(q.remove(t).is_some());
         assert!(q.remove(t).is_none());
@@ -336,12 +421,81 @@ mod tests {
     fn class_visibility_helpers() {
         let mut q = q();
         let u = UserId(0);
-        q.push(u, ServiceModel::BAaaS, RequestClass::Batch, 0);
-        assert!(q.has_class_at_or_above(RequestClass::Batch));
-        assert!(!q.has_class_at_or_above(RequestClass::Interactive));
-        q.push(u, ServiceModel::RAaaS, RequestClass::Interactive, 0);
-        assert!(q.has_class_at_or_above(RequestClass::Interactive));
+        q.push(&req(u, ServiceModel::BAaaS, RequestClass::Batch), 0);
+        assert!(q.has_class_at_or_above(RequestClass::Batch, 0));
+        assert!(!q.has_class_at_or_above(RequestClass::Interactive, 0));
+        q.push(&req(u, ServiceModel::RAaaS, RequestClass::Interactive), 0);
+        assert!(q.has_class_at_or_above(RequestClass::Interactive, 0));
         assert_eq!(q.depth_for(u), 2);
         assert_eq!(q.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn gang_shape_is_preserved_on_the_entry() {
+        let mut q = q();
+        let u = UserId(0);
+        let r = req(u, ServiceModel::RAaaS, RequestClass::Normal)
+            .gang(4)
+            .co_located()
+            .on_board(BoardKind::Vc707);
+        let t = q.push(&r, 7);
+        let e = q.remove(t).unwrap();
+        assert_eq!(e.regions, 4);
+        assert!(e.co_located);
+        assert_eq!(e.board, Some(BoardKind::Vc707));
+        assert_eq!(e.enqueued_ns, 7);
+    }
+
+    #[test]
+    fn aging_bounds_batch_starvation() {
+        // Satellite invariant: a saturating interactive storm still
+        // lets a batch ticket through within a bounded number of
+        // grants (2 * AGING_BOOST_GRANTS promotions + one stride
+        // round once it competes at interactive class).
+        let mut q = q();
+        let storm = UserId(0);
+        let batcher = UserId(1);
+        let batch_ticket = q.push(
+            &req(batcher, ServiceModel::RAaaS, RequestClass::Batch),
+            0,
+        );
+        let bound = (2 * AGING_BOOST_GRANTS + 4) as usize;
+        let mut admitted_after = None;
+        for round in 0..(bound + 10) {
+            // The storm always has an interactive request waiting.
+            q.push(
+                &req(storm, ServiceModel::RAaaS, RequestClass::Interactive),
+                0,
+            );
+            let e = q.pop_best(0, |_| 1, |_| true).unwrap();
+            if e.ticket == batch_ticket {
+                admitted_after = Some(round);
+                break;
+            }
+        }
+        let after = admitted_after.expect("batch ticket starved");
+        assert!(
+            after <= bound,
+            "batch admitted only after {after} grants (bound {bound})"
+        );
+    }
+
+    #[test]
+    fn deadline_boosts_to_interactive() {
+        let mut q = q();
+        let storm = UserId(0);
+        let dl = UserId(1);
+        // Deadline entry: boosted once the clock passes 100.
+        let r = req(dl, ServiceModel::RAaaS, RequestClass::Batch)
+            .deadline(VirtualTime(100));
+        let t = q.push(&r, 0);
+        q.push(&req(storm, ServiceModel::RAaaS, RequestClass::Normal), 0);
+        // Before the deadline the normal-class storm wins...
+        let first = q.pop_best(50, |_| 1, |_| true).unwrap();
+        assert_eq!(first.user, storm);
+        // ...after it, the deadline entry competes at interactive.
+        q.push(&req(storm, ServiceModel::RAaaS, RequestClass::Normal), 0);
+        let second = q.pop_best(150, |_| 1, |_| true).unwrap();
+        assert_eq!(second.ticket, t);
     }
 }

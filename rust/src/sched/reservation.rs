@@ -1,26 +1,33 @@
-//! Time-boxed capacity reservations with virtual-clock expiry.
+//! Time-boxed, model-aware capacity reservations with virtual-clock
+//! expiry.
 //!
-//! A reservation withholds `regions` vFPGAs of cluster capacity for
-//! one tenant over a window `[start, start + duration)` of *virtual*
-//! time. While the window is active, other tenants can only be
-//! admitted into capacity beyond the reserved-but-unclaimed total;
-//! the holder draws its own admissions down from the reservation
-//! first. When the window ends, whatever was never claimed is
-//! reclaimed for general use — the scheduler calls [`reap`] lazily on
-//! every admission attempt, so expiry needs no timer thread.
+//! A reservation withholds `regions` vFPGAs of capacity for one
+//! tenant over a window `[start, start + duration)` of *virtual*
+//! time. A reservation may be pinned to a service model: it then
+//! only withholds capacity from requests whose device set overlaps
+//! that model's device set — on a heterogeneous config, reserving
+//! RAaaS-capable regions no longer walls off devices that cannot
+//! serve RAaaS at all (the old cluster-wide-count limitation the
+//! ROADMAP called out). A model-less reservation behaves as before
+//! (cluster-wide).
 //!
-//! **Known limitation:** reservations are cluster-wide *region
-//! counts*, not bound to a service model or device set. On a
-//! heterogeneous config (devices serving different model sets),
-//! traffic for another model can still consume the only devices able
-//! to serve the holder's model while the count-based guarantee looks
-//! intact. Region-count-aware reservations per model are a ROADMAP
-//! open item.
+//! While the window is active, other tenants can only be admitted
+//! into capacity beyond the reserved-but-unclaimed total; the holder
+//! draws its own admissions down from the reservation first. When the
+//! window ends, whatever was never claimed is reclaimed for general
+//! use — the scheduler calls [`reap`] lazily on every admission
+//! attempt, so expiry needs no timer thread.
+//!
+//! The scheduler supplies the device-topology knowledge: every
+//! model-filtered query takes an `overlaps` predicate answering "does
+//! a reservation pinned to model `m` share devices with the request
+//! at hand?" (`None` = cluster-wide, always overlapping).
 //!
 //! [`reap`]: ReservationBook::reap
 
 use std::collections::BTreeMap;
 
+use crate::config::ServiceModel;
 use crate::util::clock::VirtualTime;
 use crate::util::ids::{ReservationId, UserId};
 
@@ -31,6 +38,9 @@ pub struct Reservation {
     pub user: UserId,
     /// Capacity reserved, in vFPGA regions.
     pub regions: u64,
+    /// Service model the reservation is pinned to (`None` =
+    /// cluster-wide, withholds from every model).
+    pub model: Option<ServiceModel>,
     pub start_ns: u64,
     pub end_ns: u64,
     /// Admissions already drawn from this reservation.
@@ -61,11 +71,12 @@ impl ReservationBook {
     }
 
     /// Book `regions` vFPGAs for `user` starting at `start` for
-    /// `duration` of virtual time.
+    /// `duration` of virtual time, optionally pinned to a model.
     pub fn reserve(
         &mut self,
         user: UserId,
         regions: u64,
+        model: Option<ServiceModel>,
         start: VirtualTime,
         duration: VirtualTime,
     ) -> ReservationId {
@@ -77,6 +88,7 @@ impl ReservationBook {
                 id,
                 user,
                 regions,
+                model,
                 start_ns: start.0,
                 end_ns: (start + duration).0,
                 claimed: 0,
@@ -108,58 +120,98 @@ impl ReservationBook {
         self.expired_total
     }
 
-    /// Capacity currently withheld from `user`: the unclaimed regions
-    /// of every *other* tenant's active reservation.
-    pub fn withheld_from(&self, user: UserId, now_ns: u64) -> u64 {
+    /// Capacity currently withheld from `user` for a request whose
+    /// device set the `overlaps` predicate describes: the unclaimed
+    /// regions of every *other* tenant's active reservation whose
+    /// model overlaps the request's.
+    pub fn withheld_from(
+        &self,
+        user: UserId,
+        now_ns: u64,
+        overlaps: impl Fn(Option<ServiceModel>) -> bool,
+    ) -> u64 {
         self.reservations
             .values()
-            .filter(|r| r.user != user && r.active_at(now_ns))
+            .filter(|r| {
+                r.user != user
+                    && r.active_at(now_ns)
+                    && overlaps(r.model)
+            })
             .map(|r| r.unclaimed())
             .sum()
     }
 
-    /// Unclaimed capacity of *every* active reservation (the
-    /// scheduler uses this to decide whether an admission actually
-    /// drew on reserved headroom).
-    pub fn withheld_total(&self, now_ns: u64) -> u64 {
+    /// Capacity withheld from `user` by *any* active reservation,
+    /// regardless of model (the conservative check exclusive physical
+    /// admissions use — taking a whole device can strand any model's
+    /// reservation).
+    pub fn withheld_from_any(&self, user: UserId, now_ns: u64) -> u64 {
+        self.withheld_from(user, now_ns, |_| true)
+    }
+
+    /// Unclaimed capacity of every active reservation overlapping the
+    /// request's device set (the scheduler uses this to decide
+    /// whether an admission actually drew on reserved headroom).
+    pub fn withheld_total(
+        &self,
+        now_ns: u64,
+        overlaps: impl Fn(Option<ServiceModel>) -> bool,
+    ) -> u64 {
         self.reservations
             .values()
-            .filter(|r| r.active_at(now_ns))
+            .filter(|r| r.active_at(now_ns) && overlaps(r.model))
             .map(|r| r.unclaimed())
             .sum()
     }
 
     /// Unclaimed capacity of every reservation whose window overlaps
-    /// `[start_ns, end_ns)` — the overbooking check for new
-    /// reservations.
-    pub fn reserved_overlapping(&self, start_ns: u64, end_ns: u64) -> u64 {
+    /// `[start_ns, end_ns)` and whose model overlaps per the
+    /// predicate — the overbooking check for new reservations.
+    pub fn reserved_overlapping(
+        &self,
+        start_ns: u64,
+        end_ns: u64,
+        overlaps: impl Fn(Option<ServiceModel>) -> bool,
+    ) -> u64 {
         self.reservations
             .values()
-            .filter(|r| r.start_ns < end_ns && start_ns < r.end_ns)
+            .filter(|r| {
+                r.start_ns < end_ns
+                    && start_ns < r.end_ns
+                    && overlaps(r.model)
+            })
             .map(|r| r.unclaimed())
             .sum()
     }
 
     /// Draw one admission from `user`'s active reservation with claim
-    /// headroom, if any. Returns the reservation drawn from so the
-    /// claim can be credited back when that lease is released
-    /// (reservations guarantee *concurrent* regions, not a count of
-    /// admissions).
+    /// headroom, if any. Prefers a reservation pinned to the
+    /// requested model, falling back to a cluster-wide one. Returns
+    /// the reservation drawn from so the claim can be credited back
+    /// when that lease is released (reservations guarantee
+    /// *concurrent* regions, not a count of admissions).
     pub fn consume(
         &mut self,
         user: UserId,
+        model: ServiceModel,
         now_ns: u64,
     ) -> Option<ReservationId> {
-        if let Some(r) = self
+        let usable = |r: &Reservation| {
+            r.user == user && r.active_at(now_ns) && r.unclaimed() > 0
+        };
+        let id = self
             .reservations
-            .values_mut()
-            .find(|r| r.user == user && r.active_at(now_ns) && r.unclaimed() > 0)
-        {
-            r.claimed += 1;
-            Some(r.id)
-        } else {
-            None
-        }
+            .values()
+            .find(|r| usable(r) && r.model == Some(model))
+            .or_else(|| {
+                self.reservations
+                    .values()
+                    .find(|r| usable(r) && r.model.is_none())
+            })
+            .map(|r| r.id)?;
+        let r = self.reservations.get_mut(&id).expect("found above");
+        r.claimed += 1;
+        Some(id)
     }
 
     /// Return one claim to a reservation (its lease was released
@@ -188,19 +240,46 @@ mod tests {
         VirtualTime::from_secs_f64(s)
     }
 
+    /// Cluster-wide predicate (the homogeneous-config behavior).
+    fn any(_: Option<ServiceModel>) -> bool {
+        true
+    }
+
     #[test]
     fn active_window_withholds_from_others() {
         let mut book = ReservationBook::new();
         let holder = UserId(0);
         let other = UserId(1);
-        book.reserve(holder, 2, t(10.0), t(30.0));
+        book.reserve(holder, 2, None, t(10.0), t(30.0));
         // Before the window: nothing withheld.
-        assert_eq!(book.withheld_from(other, t(5.0).0), 0);
+        assert_eq!(book.withheld_from(other, t(5.0).0, any), 0);
         // Inside: two regions withheld from others, none from holder.
-        assert_eq!(book.withheld_from(other, t(20.0).0), 2);
-        assert_eq!(book.withheld_from(holder, t(20.0).0), 0);
+        assert_eq!(book.withheld_from(other, t(20.0).0, any), 2);
+        assert_eq!(book.withheld_from(holder, t(20.0).0, any), 0);
         // After: expired (even before reap runs, window checks apply).
-        assert_eq!(book.withheld_from(other, t(40.0).0), 0);
+        assert_eq!(book.withheld_from(other, t(40.0).0, any), 0);
+    }
+
+    #[test]
+    fn model_pinned_reservation_only_withholds_overlapping_models() {
+        let mut book = ReservationBook::new();
+        let holder = UserId(0);
+        let other = UserId(1);
+        book.reserve(
+            holder,
+            3,
+            Some(ServiceModel::RAaaS),
+            t(0.0),
+            t(100.0),
+        );
+        // The caller's `overlaps` predicate encodes the topology: a
+        // BAaaS-only device set does not overlap the RAaaS pool.
+        let disjoint = |m: Option<ServiceModel>| m.is_none();
+        let shared = any;
+        assert_eq!(book.withheld_from(other, t(1.0).0, disjoint), 0);
+        assert_eq!(book.withheld_from(other, t(1.0).0, shared), 3);
+        // A conservative any-model query still sees it.
+        assert_eq!(book.withheld_from_any(other, t(1.0).0), 3);
     }
 
     #[test]
@@ -208,37 +287,84 @@ mod tests {
         let mut book = ReservationBook::new();
         let holder = UserId(0);
         let other = UserId(1);
-        let id = book.reserve(holder, 2, t(0.0), t(100.0));
-        assert_eq!(book.consume(holder, t(1.0).0), Some(id));
-        assert_eq!(book.withheld_from(other, t(1.0).0), 1);
-        assert_eq!(book.consume(holder, t(2.0).0), Some(id));
-        assert_eq!(book.withheld_from(other, t(2.0).0), 0);
+        let id = book.reserve(holder, 2, None, t(0.0), t(100.0));
+        assert_eq!(
+            book.consume(holder, ServiceModel::RAaaS, t(1.0).0),
+            Some(id)
+        );
+        assert_eq!(book.withheld_from(other, t(1.0).0, any), 1);
+        assert_eq!(
+            book.consume(holder, ServiceModel::RAaaS, t(2.0).0),
+            Some(id)
+        );
+        assert_eq!(book.withheld_from(other, t(2.0).0, any), 0);
         // Fully claimed: no more draws.
-        assert_eq!(book.consume(holder, t(3.0).0), None);
+        assert_eq!(
+            book.consume(holder, ServiceModel::RAaaS, t(3.0).0),
+            None
+        );
         // Releasing a claimed lease restores the guarantee.
         book.release_claim(id);
-        assert_eq!(book.withheld_from(other, t(4.0).0), 1);
-        assert_eq!(book.consume(holder, t(5.0).0), Some(id));
+        assert_eq!(book.withheld_from(other, t(4.0).0, any), 1);
+        assert_eq!(
+            book.consume(holder, ServiceModel::RAaaS, t(5.0).0),
+            Some(id)
+        );
         // Crediting an expired/cancelled reservation is a no-op.
         assert!(book.cancel(id));
         book.release_claim(id);
-        assert_eq!(book.withheld_total(t(6.0).0), 0);
+        assert_eq!(book.withheld_total(t(6.0).0, any), 0);
+    }
+
+    #[test]
+    fn consume_prefers_model_pinned_reservation() {
+        let mut book = ReservationBook::new();
+        let holder = UserId(0);
+        let wide = book.reserve(holder, 1, None, t(0.0), t(100.0));
+        let pinned = book.reserve(
+            holder,
+            1,
+            Some(ServiceModel::BAaaS),
+            t(0.0),
+            t(100.0),
+        );
+        // A BAaaS admission draws the pinned reservation first.
+        assert_eq!(
+            book.consume(holder, ServiceModel::BAaaS, t(1.0).0),
+            Some(pinned)
+        );
+        // An RAaaS admission cannot use the BAaaS pin; it falls back
+        // to the cluster-wide one.
+        assert_eq!(
+            book.consume(holder, ServiceModel::RAaaS, t(2.0).0),
+            Some(wide)
+        );
+        assert_eq!(
+            book.consume(holder, ServiceModel::RAaaS, t(3.0).0),
+            None
+        );
     }
 
     #[test]
     fn non_holder_cannot_consume() {
         let mut book = ReservationBook::new();
-        book.reserve(UserId(0), 1, t(0.0), t(10.0));
-        assert_eq!(book.consume(UserId(1), t(1.0).0), None);
+        book.reserve(UserId(0), 1, None, t(0.0), t(10.0));
+        assert_eq!(
+            book.consume(UserId(1), ServiceModel::RAaaS, t(1.0).0),
+            None
+        );
         // Outside the window the holder cannot consume either.
-        assert_eq!(book.consume(UserId(0), t(11.0).0), None);
+        assert_eq!(
+            book.consume(UserId(0), ServiceModel::RAaaS, t(11.0).0),
+            None
+        );
     }
 
     #[test]
     fn reap_reclaims_expired_windows() {
         let mut book = ReservationBook::new();
-        let a = book.reserve(UserId(0), 1, t(0.0), t(10.0));
-        book.reserve(UserId(1), 1, t(0.0), t(50.0));
+        let a = book.reserve(UserId(0), 1, None, t(0.0), t(10.0));
+        book.reserve(UserId(1), 1, None, t(0.0), t(50.0));
         assert_eq!(book.reap(t(20.0).0), 1);
         assert!(book.get(a).is_none());
         assert_eq!(book.expired_total(), 1);
@@ -249,10 +375,10 @@ mod tests {
     #[test]
     fn cancel_frees_capacity_immediately() {
         let mut book = ReservationBook::new();
-        let id = book.reserve(UserId(0), 3, t(0.0), t(100.0));
-        assert_eq!(book.withheld_from(UserId(1), t(1.0).0), 3);
+        let id = book.reserve(UserId(0), 3, None, t(0.0), t(100.0));
+        assert_eq!(book.withheld_from(UserId(1), t(1.0).0, any), 3);
         assert!(book.cancel(id));
         assert!(!book.cancel(id));
-        assert_eq!(book.withheld_from(UserId(1), t(1.0).0), 0);
+        assert_eq!(book.withheld_from(UserId(1), t(1.0).0, any), 0);
     }
 }

@@ -1,22 +1,29 @@
 //! The three cloud service-model façades (Section III).
 //!
-//! These are the *user-visible* surfaces; each wraps the hypervisor
-//! with exactly the rights and visibility its model grants:
+//! These are the *user-visible* surfaces; each wraps the scheduler's
+//! unified admission API with exactly the rights and visibility its
+//! model grants:
 //!
 //! * [`RsaasService`] — full physical FPGAs (optionally inside a VM),
 //!   full-bitstream freedom, the whole design flow as a cloud service;
 //! * [`RaaasService`] — vFPGAs behind the RC2F framework only: users
-//!   see sizes, allocate, program *partial* bitfiles through the
-//!   sanity checker, and stream through the host API;
+//!   see sizes, allocate (singly or as an atomic gang for multi-core
+//!   designs), program *partial* bitfiles through the sanity checker,
+//!   and stream through the host API;
 //! * [`BaaasService`] — no FPGA visibility at all: users see named
 //!   services; allocation, PR and streaming happen in the background
 //!   with provider bitfiles.
 //!
-//! Every allocation goes through the cluster [`Scheduler`]
-//! ([`crate::sched`]) — quota, fair-share and reservation checks
-//! apply uniformly. Interactive façade calls (RAaaS/RSaaS leases) use
-//! the non-blocking fast path and may preempt batch leases; BAaaS
-//! invocations are background work and admit at batch class.
+//! Every allocation is an [`AdmissionRequest`] admitted through the
+//! cluster [`Scheduler`] ([`crate::sched`]) and returns a capability
+//! [`Lease`] — quota, fair-share and reservation checks apply
+//! uniformly, and the lease handle itself carries the
+//! `program`/`stream`/`release` surface (placement is re-resolved
+//! through the lease, so migrations are transparent). Interactive
+//! façade calls (RAaaS/RSaaS leases) use the non-blocking fast path
+//! and may preempt batch leases; BAaaS invocations are background
+//! work and admit at batch class, absorbing one preemption race via
+//! [`with_preemption_retry`].
 
 use std::sync::Arc;
 
@@ -24,8 +31,11 @@ use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
 use crate::hypervisor::{Hypervisor, HypervisorError};
 use crate::rc2f::stream::{StreamConfig, StreamOutcome};
-use crate::sched::{RequestClass, Scheduler};
-use crate::util::ids::{AllocationId, FpgaId, UserId, VfpgaId};
+use crate::sched::{
+    with_preemption_retry, AdmissionRequest, Lease, RequestClass,
+    Scheduler,
+};
+use crate::util::ids::UserId;
 
 /// RAaaS: vFPGA leases + framework streaming.
 pub struct RaaasService {
@@ -49,60 +59,36 @@ impl RaaasService {
         }
     }
 
-    /// Lease one vFPGA. The user learns the vFPGA id — but not the
+    /// Lease one vFPGA. The lease exposes the vFPGA id — but not the
     /// physical slot; bitfiles are retargeted transparently.
-    pub fn alloc(
-        &self,
-        user: UserId,
-    ) -> Result<(AllocationId, VfpgaId), HypervisorError> {
-        let grant = self
-            .sched
-            .acquire_vfpga(user, ServiceModel::RAaaS, RequestClass::Interactive)
-            .map_err(HypervisorError::from)?;
-        let vfpga = grant.vfpga().expect("vfpga grant");
-        Ok((grant.alloc, vfpga))
+    pub fn alloc(&self, user: UserId) -> Result<Lease, HypervisorError> {
+        self.sched
+            .admit(&AdmissionRequest::new(
+                user,
+                ServiceModel::RAaaS,
+                RequestClass::Interactive,
+            ))
+            .map_err(HypervisorError::from)
     }
 
-    /// Program a user core. The bitfile may target any slot — it is
-    /// retargeted to the actual placement (region-hiding, the
-    /// future-work feature).
-    pub fn program(
+    /// Lease `n` vFPGAs atomically (multi-core designs): all regions
+    /// grant together or the request fails — no partial gang is ever
+    /// held.
+    pub fn alloc_gang(
         &self,
-        alloc: AllocationId,
         user: UserId,
-        bitfile: &Bitstream,
-    ) -> Result<(), HypervisorError> {
-        let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
-        let placed = self.hv.retarget_for(vfpga, bitfile)?;
-        self.hv.program_vfpga(alloc, user, &placed)?;
-        Ok(())
-    }
-
-    /// Stream a workload through the configured core.
-    pub fn stream(
-        &self,
-        alloc: AllocationId,
-        user: UserId,
-        cfg: &StreamConfig,
-    ) -> Result<StreamOutcome, HypervisorError> {
-        let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
-        let fpga = {
-            let db = self.hv.db.lock().unwrap();
-            db.device_of_vfpga(vfpga)
-                .ok_or(HypervisorError::BadAllocation(alloc))?
-                .id
-        };
-        let api = self.hv.host_api(fpga)?;
-        let session = api
-            .open_session(user, vfpga)
-            .map_err(|e| HypervisorError::Db(e.to_string()))?;
-        session
-            .stream(cfg)
-            .map_err(|e| HypervisorError::Db(e.to_string()))
-    }
-
-    pub fn release(&self, alloc: AllocationId) -> Result<(), HypervisorError> {
-        self.sched.release(alloc).map_err(HypervisorError::from)
+        n: u32,
+    ) -> Result<Lease, HypervisorError> {
+        self.sched
+            .admit(
+                &AdmissionRequest::new(
+                    user,
+                    ServiceModel::RAaaS,
+                    RequestClass::Interactive,
+                )
+                .gang(n),
+            )
+            .map_err(HypervisorError::from)
     }
 }
 
@@ -125,31 +111,15 @@ impl RsaasService {
         }
     }
 
-    /// Lease a full physical FPGA.
-    pub fn alloc(
-        &self,
-        user: UserId,
-    ) -> Result<(AllocationId, FpgaId), HypervisorError> {
-        let grant = self
-            .sched
-            .acquire_physical(user, None, RequestClass::Interactive)
-            .map_err(HypervisorError::from)?;
-        Ok((grant.alloc, grant.fpga()))
-    }
-
-    /// Write a full user bitstream (with PCIe hot-plug handling).
-    pub fn program_full(
-        &self,
-        alloc: AllocationId,
-        user: UserId,
-        bs: &Bitstream,
-    ) -> Result<(), HypervisorError> {
-        self.hv.program_full(alloc, user, bs)?;
-        Ok(())
-    }
-
-    pub fn release(&self, alloc: AllocationId) -> Result<(), HypervisorError> {
-        self.sched.release(alloc).map_err(HypervisorError::from)
+    /// Lease a full physical FPGA. The returned lease exposes
+    /// [`Lease::program_full`] for full-bitstream configuration.
+    pub fn alloc(&self, user: UserId) -> Result<Lease, HypervisorError> {
+        self.sched
+            .admit(&AdmissionRequest::physical(
+                user,
+                RequestClass::Interactive,
+            ))
+            .map_err(HypervisorError::from)
     }
 }
 
@@ -181,6 +151,11 @@ impl BaaasService {
     /// background (batch class — preemptable by interactive leases),
     /// programs the prebuilt bitfile, streams, releases. The caller
     /// never sees device ids.
+    ///
+    /// A preemption racing the in-flight setup surfaces as a clean
+    /// failure; the invocation absorbs one such race by re-running
+    /// program+stream against the lease's new placement instead of
+    /// failing the job to the caller.
     pub fn invoke(
         &self,
         user: UserId,
@@ -188,30 +163,34 @@ impl BaaasService {
         cfg: &StreamConfig,
     ) -> Result<StreamOutcome, HypervisorError> {
         let bitfile = self.hv.service_bitfile(service)?;
-        let grant = self
+        let lease = self
             .sched
-            .acquire_vfpga(user, ServiceModel::BAaaS, RequestClass::Batch)
+            .admit(&AdmissionRequest::new(
+                user,
+                ServiceModel::BAaaS,
+                RequestClass::Batch,
+            ))
             .map_err(HypervisorError::from)?;
-        let alloc = grant.alloc;
-        let result = (|| {
-            // Resolve placement through the lease — a preemption may
-            // have relocated it between any two steps.
-            let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
-            let placed = self.hv.retarget_for(vfpga, &bitfile)?;
-            self.hv.program_vfpga(alloc, user, &placed)?;
-            // Re-resolve before streaming: a preemption after PR
-            // migrates the lease (and its configured design) to a new
-            // region; stream where the lease lives now.
-            let vfpga = self.hv.check_vfpga_lease(alloc, user)?;
-            self.hv
-                .stream_runner_for(vfpga)?
-                .run(cfg)
-                .map_err(HypervisorError::Db)
-        })();
+        let result = run_setup_and_stream(&lease, &bitfile, cfg);
         // Always release, success or failure.
-        let _ = self.sched.release(alloc);
+        let _ = lease.release();
         result
     }
+}
+
+/// The provider-side program+stream body shared by BAaaS invocations
+/// and batch workers, wrapped in the one-shot preemption retry. Each
+/// attempt resolves placement through the lease, so the retry lands
+/// on the post-migration region.
+pub fn run_setup_and_stream(
+    lease: &Lease,
+    bitfile: &Bitstream,
+    cfg: &StreamConfig,
+) -> Result<StreamOutcome, HypervisorError> {
+    with_preemption_retry(lease, || {
+        lease.program(bitfile)?;
+        lease.stream_direct(cfg)
+    })
 }
 
 #[cfg(test)]
@@ -234,13 +213,11 @@ mod tests {
         }
         let svc = RaaasService::new(hv());
         let user = svc.hv.add_user("alice");
-        let (alloc, _vfpga) = svc.alloc(user).unwrap();
-        svc.program(alloc, user, &mm16_bitfile()).unwrap();
-        let out = svc
-            .stream(alloc, user, &StreamConfig::matmul16(512))
-            .unwrap();
+        let lease = svc.alloc(user).unwrap();
+        lease.program(&mm16_bitfile()).unwrap();
+        let out = lease.stream(&StreamConfig::matmul16(512)).unwrap();
         assert_eq!(out.validation_failures, 0);
-        svc.release(alloc).unwrap();
+        lease.release().unwrap();
     }
 
     #[test]
@@ -249,23 +226,38 @@ mod tests {
         let user = svc.hv.add_user("alice");
         // Fill slot 0 so the next lease lands on slot 1 — the bitfile
         // below still targets slot 0's window and must be retargeted.
-        let (a0, _) = svc.alloc(user).unwrap();
-        let (a1, _) = svc.alloc(user).unwrap();
-        svc.program(a0, user, &mm16_bitfile()).unwrap();
-        svc.program(a1, user, &mm16_bitfile()).unwrap(); // would fail unretargeted
-        svc.release(a0).unwrap();
-        svc.release(a1).unwrap();
+        let l0 = svc.alloc(user).unwrap();
+        let l1 = svc.alloc(user).unwrap();
+        l0.program(&mm16_bitfile()).unwrap();
+        l1.program(&mm16_bitfile()).unwrap(); // would fail unretargeted
+        l0.release().unwrap();
+        l1.release().unwrap();
     }
 
     #[test]
     fn raaas_allocations_are_scheduler_tracked() {
         let svc = RaaasService::new(hv());
         let user = svc.hv.add_user("alice");
-        let (alloc, _) = svc.alloc(user).unwrap();
+        let lease = svc.alloc(user).unwrap();
         assert_eq!(svc.sched.in_use(user), 1);
-        svc.release(alloc).unwrap();
+        lease.release().unwrap();
         assert_eq!(svc.sched.in_use(user), 0);
         assert_eq!(svc.sched.usage(user).released, 1);
+    }
+
+    #[test]
+    fn raaas_gang_is_atomic() {
+        let svc = RaaasService::new(hv());
+        let user = svc.hv.add_user("multicore");
+        let gang = svc.alloc_gang(user, 4).unwrap();
+        assert_eq!(gang.regions(), 4);
+        assert_eq!(svc.sched.in_use(user), 4);
+        // Each member programs independently (retargeted per slot).
+        for i in 0..4 {
+            gang.program_member(i, &mm16_bitfile()).unwrap();
+        }
+        gang.release().unwrap();
+        assert_eq!(svc.sched.in_use(user), 0);
     }
 
     #[test]
@@ -311,12 +303,14 @@ mod tests {
         );
         let svc = RsaasService::new(hv);
         let user = svc.hv.add_user("hwdev");
-        let (alloc, _fpga) = svc.alloc(user).unwrap();
+        let lease = svc.alloc(user).unwrap();
+        assert!(lease.fpga().is_some());
+        assert!(lease.vfpga().is_none(), "physical lease has no vFPGA");
         let bs =
             crate::bitstream::BitstreamBuilder::full("xc7vx485t", "mydesign")
                 .build();
-        svc.program_full(alloc, user, &bs).unwrap();
-        svc.release(alloc).unwrap();
+        lease.program_full(&bs).unwrap();
+        lease.release().unwrap();
     }
 
     #[test]
@@ -334,13 +328,13 @@ mod tests {
                 ..Default::default()
             },
         );
-        let (alloc, _) = raaas.alloc(user).unwrap();
+        let lease = raaas.alloc(user).unwrap();
         baaas.hv.register_service("mm16", mm16_bitfile());
         // Second concurrent lease (via BAaaS) is quota-denied.
         let err = baaas
             .invoke(user, "mm16", &StreamConfig::matmul16(64))
             .unwrap_err();
         assert!(matches!(err, HypervisorError::Sched(_)), "{err}");
-        raaas.release(alloc).unwrap();
+        lease.release().unwrap();
     }
 }

@@ -25,32 +25,31 @@ pub fn mm16_partial(slot: usize) -> crate::bitstream::Bitstream {
 
 /// Fill `n` regions with programmed batch-class BAaaS leases for
 /// `user` through the scheduler — the standard setup for preemption
-/// scenarios (a programmed lease is migratable). Returns the grants.
-/// Panics on failure; intended for tests and examples.
+/// scenarios (a programmed lease is migratable). The leases are
+/// disarmed (kept live server-side via their tokens) and returned as
+/// their scheduler grants so callers can inspect placement and
+/// release by allocation id. Panics on failure; intended for tests
+/// and examples.
 pub fn fill_batch_leases(
-    sched: &crate::sched::Scheduler,
+    sched: &std::sync::Arc<crate::sched::Scheduler>,
     user: crate::util::ids::UserId,
     n: usize,
 ) -> Vec<crate::sched::SchedGrant> {
     (0..n)
         .map(|_| {
-            let grant = sched
-                .acquire_vfpga(
+            let lease = sched
+                .admit(&crate::sched::AdmissionRequest::new(
                     user,
                     crate::config::ServiceModel::BAaaS,
                     crate::sched::RequestClass::Batch,
-                )
+                ))
                 .expect("batch fill lease");
-            let vfpga = grant.vfpga().expect("vfpga grant");
-            let slot = sched
-                .hv()
-                .device(grant.fpga())
-                .expect("device of grant")
-                .slot_of[&vfpga];
-            sched
-                .hv()
-                .program_vfpga(grant.alloc, user, &mm16_partial(slot))
-                .expect("program fill lease");
+            // Lease::program retargets the slot-0 bitfile to wherever
+            // the lease actually landed.
+            lease.program(&mm16_partial(0)).expect("program fill lease");
+            let grant =
+                sched.grant(lease.alloc()).expect("grant of fresh lease");
+            let _token = lease.into_token();
             grant
         })
         .collect()

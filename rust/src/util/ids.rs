@@ -79,6 +79,50 @@ typed_id!(
     "rsv"
 );
 
+/// Unguessable capability token for a scheduler lease.
+///
+/// Unlike the sequential [`typed ids`](AllocationId) above, a lease
+/// token is 128 bits drawn from per-process OS entropy (via
+/// `RandomState`) mixed with a process-wide counter — holding the
+/// token *is* the authorization to operate on the lease, so it must
+/// not be enumerable the way `alloc-<n>` is. Renders as
+/// `lt-<32 hex digits>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LeaseToken(pub u128);
+
+impl LeaseToken {
+    pub const PREFIX: &'static str = "lt";
+
+    /// Mint a fresh token. Two `RandomState`s contribute OS-seeded
+    /// entropy; the counter guarantees process-local uniqueness even
+    /// if the entropy source were degenerate.
+    pub fn mint() -> LeaseToken {
+        use std::collections::hash_map::RandomState;
+        use std::hash::{BuildHasher, Hasher};
+        static SALT: AtomicU64 = AtomicU64::new(0x5EED);
+        let hi = RandomState::new().build_hasher().finish();
+        let mut lo_hasher = RandomState::new().build_hasher();
+        lo_hasher.write_u64(SALT.fetch_add(1, Ordering::Relaxed));
+        let lo = lo_hasher.finish();
+        LeaseToken(((hi as u128) << 64) | lo as u128)
+    }
+
+    /// Parse from the `lt-<hex>` display form.
+    pub fn parse(s: &str) -> Option<LeaseToken> {
+        let rest = s.strip_prefix("lt-")?;
+        if rest.is_empty() || rest.len() > 32 {
+            return None;
+        }
+        u128::from_str_radix(rest, 16).ok().map(LeaseToken)
+    }
+}
+
+impl fmt::Display for LeaseToken {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lt-{:032x}", self.0)
+    }
+}
+
 /// Monotonic id generator (process-wide unique within a type).
 #[derive(Debug, Default)]
 pub struct IdGen {
@@ -132,6 +176,19 @@ mod tests {
         assert_eq!(g.next(), 11);
         g.bump_past(5); // lower floor is a no-op
         assert_eq!(g.next(), 12);
+    }
+
+    #[test]
+    fn lease_tokens_mint_unique_and_roundtrip() {
+        let a = LeaseToken::mint();
+        let b = LeaseToken::mint();
+        assert_ne!(a, b, "two minted tokens collide");
+        assert_eq!(LeaseToken::parse(&a.to_string()), Some(a));
+        assert_eq!(LeaseToken::parse("lt-zz"), None);
+        assert_eq!(LeaseToken::parse("alloc-3"), None);
+        assert_eq!(LeaseToken::parse("lt-"), None);
+        // Display is fixed-width hex.
+        assert_eq!(a.to_string().len(), "lt-".len() + 32);
     }
 
     #[test]

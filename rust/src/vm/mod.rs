@@ -15,9 +15,9 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::hypervisor::{Hypervisor, HypervisorError};
-use crate::sched::{RequestClass, Scheduler};
+use crate::sched::{AdmissionRequest, Lease, RequestClass, Scheduler};
 use crate::util::clock::{VirtualClock, VirtualTime};
-use crate::util::ids::{AllocationId, FpgaId, UserId, VmId};
+use crate::util::ids::{AllocationId, FpgaId, LeaseToken, UserId, VmId};
 
 /// Modeled VM boot time (cloud-image boot + driver probe).
 pub const VM_BOOT_S: f64 = 18.0;
@@ -39,6 +39,9 @@ pub struct VmRecord {
     pub user: UserId,
     pub fpga: FpgaId,
     pub allocation: AllocationId,
+    /// Capability token of the scheduler lease backing the
+    /// passthrough device.
+    pub lease: LeaseToken,
     pub state: VmState,
     /// Memory assigned (GiB) — bookkeeping for the node.
     pub mem_gib: u64,
@@ -63,6 +66,9 @@ pub struct VmManager {
     sched: Arc<Scheduler>,
     clock: Arc<VirtualClock>,
     vms: Mutex<BTreeMap<VmId, VmRecord>>,
+    /// Armed lease handles, released on destroy (kept out of
+    /// `VmRecord` so records stay cloneable for listings).
+    leases: Mutex<BTreeMap<VmId, Lease>>,
 }
 
 impl VmManager {
@@ -81,6 +87,7 @@ impl VmManager {
             sched,
             clock,
             vms: Mutex::new(BTreeMap::new()),
+            leases: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -92,21 +99,27 @@ impl VmManager {
         mem_gib: u64,
     ) -> Result<VmRecord, VmError> {
         let vm_id = VmId(self.hv.db.lock().unwrap().vm_ids.next());
-        let grant = self
+        let lease = self
             .sched
-            .acquire_physical(user, Some(vm_id), RequestClass::Interactive)
+            .admit(
+                &AdmissionRequest::physical(user, RequestClass::Interactive)
+                    .vm(vm_id),
+            )
             .map_err(HypervisorError::from)?;
-        let (allocation, fpga) = (grant.alloc, grant.fpga());
+        let allocation = lease.alloc();
+        let fpga = lease.fpga().expect("fresh physical lease placed");
         let mut record = VmRecord {
             id: vm_id,
             user,
             fpga,
             allocation,
+            lease: lease.token(),
             state: VmState::Booting,
             mem_gib,
             vcpus,
         };
         self.vms.lock().unwrap().insert(vm_id, record.clone());
+        self.leases.lock().unwrap().insert(vm_id, lease);
         // Boot charge, then running.
         self.clock.advance(VirtualTime::from_secs_f64(VM_BOOT_S));
         record.state = VmState::Running;
@@ -127,17 +140,17 @@ impl VmManager {
     /// Shut down: stop the VM, release the FPGA lease back to the
     /// cloud.
     pub fn destroy(&self, vm: VmId) -> Result<(), VmError> {
-        let rec = {
+        {
             let mut vms = self.vms.lock().unwrap();
             let rec = vms.get_mut(&vm).ok_or(VmError::NotFound(vm))?;
             rec.state = VmState::Stopped;
-            rec.clone()
-        };
+        }
         self.clock
             .advance(VirtualTime::from_secs_f64(VM_SHUTDOWN_S));
-        self.sched
-            .release(rec.allocation)
-            .map_err(HypervisorError::from)?;
+        let lease = self.leases.lock().unwrap().remove(&vm);
+        if let Some(lease) = lease {
+            lease.release().map_err(HypervisorError::from)?;
+        }
         self.vms.lock().unwrap().remove(&vm);
         Ok(())
     }

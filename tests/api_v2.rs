@@ -142,6 +142,11 @@ fn every_sched_and_hypervisor_error_maps_to_a_code() {
             SchedError::UnknownGrant(AllocationId(7)),
             ErrorCode::BadLease,
         ),
+        (SchedError::UnknownLease, ErrorCode::BadToken),
+        (
+            SchedError::Unsatisfiable("impossible".into()),
+            ErrorCode::BadRequest,
+        ),
         (SchedError::Cancelled, ErrorCode::Cancelled),
         (
             SchedError::UnknownReservation(ReservationId(1)),
@@ -281,6 +286,7 @@ fn quota_and_capacity_errors_are_actionable() {
         .reserve(&ReserveRequest {
             user: holder,
             regions: 16,
+            model: None,
             start_s: None,
             duration_s: Some(10_000.0),
         })
@@ -419,6 +425,11 @@ fn typed_roundtrip_across_the_surface() {
         )
         .unwrap();
     assert_eq!(lease.wait_ms, 0.0);
+    // Every alloc now returns the capability token (single-region
+    // responses carry a one-member gang list).
+    assert!(lease.lease.to_string().starts_with("lt-"));
+    assert_eq!(lease.members.len(), 1);
+    assert_eq!(lease.members[0].alloc, lease.alloc);
 
     // status (routed through the node agent).
     let st = c.client.status(lease.fpga).unwrap();
@@ -469,6 +480,7 @@ fn typed_roundtrip_across_the_surface() {
         .reserve(&ReserveRequest {
             user,
             regions: 2,
+            model: None,
             start_s: None,
             duration_s: Some(50.0),
         })

@@ -11,17 +11,28 @@
 //! * preemption: an interactive service lease lands on a full cluster
 //!   by relocating a batch lease via migration;
 //! * threads: 8 tenants × 3 jobs against 4 regions (6× capacity) all
-//!   complete through the blocking admission path.
+//!   complete through the blocking admission path;
+//! * gang atomicity: under threaded contention, a tenant whose every
+//!   admission is an N-gang is only ever observed holding multiples
+//!   of N — no partial gang is ever visible, and quotas count the
+//!   whole gang;
+//! * capability tokens: a forged or stale `LeaseToken` is rejected
+//!   (`bad_token`) on every mutating v2 RPC instead of the server
+//!   trusting the honor-system `user` field.
 
 use std::sync::Arc;
 
 use rc3e::config::{ClusterConfig, ServiceModel};
 use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
-use rc3e::sched::{RequestClass, SchedGrant, Scheduler, TenantQuota};
+use rc3e::middleware::api::ErrorCode;
+use rc3e::middleware::{Client, ManagementServer};
+use rc3e::sched::{
+    AdmissionRequest, Lease, RequestClass, Scheduler, TenantQuota,
+};
 use rc3e::service::RaaasService;
 use rc3e::testing::prop::{forall, Gen};
 use rc3e::util::clock::{VirtualClock, VirtualTime};
-use rc3e::util::ids::{TicketId, UserId};
+use rc3e::util::ids::{LeaseToken, TicketId, UserId};
 
 fn boot(config: &ClusterConfig) -> Arc<Scheduler> {
     let hv = Arc::new(
@@ -35,17 +46,25 @@ fn boot(config: &ClusterConfig) -> Arc<Scheduler> {
     Scheduler::new(hv)
 }
 
+fn one(
+    user: UserId,
+    model: ServiceModel,
+    class: RequestClass,
+) -> AdmissionRequest {
+    AdmissionRequest::new(user, model, class)
+}
+
 /// Move resolved tickets into `held`; error on failed tickets.
 fn collect(
-    sched: &Scheduler,
+    sched: &Arc<Scheduler>,
     tickets: &mut Vec<TicketId>,
-    held: &mut Vec<SchedGrant>,
+    held: &mut Vec<Lease>,
 ) -> Result<(), String> {
     let mut i = 0;
     while i < tickets.len() {
-        match sched.try_claim(tickets[i]) {
-            Some(Ok(grant)) => {
-                held.push(grant);
+        match sched.poll_ticket(tickets[i]) {
+            Some(Ok(lease)) => {
+                held.push(lease);
                 tickets.remove(i);
             }
             Some(Err(e)) => return Err(format!("ticket failed: {e}")),
@@ -57,7 +76,7 @@ fn collect(
 
 #[test]
 fn prop_quotas_hold_and_nothing_starves() {
-    // Ops: 0..=2 submit for tenant op; 3..=5 release a held grant.
+    // Ops: 0..=2 submit for tenant op; 3..=5 release a held lease.
     let gen = Gen::new(|rng: &mut rc3e::util::rng::Rng, size| {
         let len = rng.next_below(size as u64 * 2 + 1) as usize;
         (0..len).map(|_| rng.next_below(6)).collect::<Vec<u64>>()
@@ -79,7 +98,7 @@ fn prop_quotas_hold_and_nothing_starves() {
                 u
             })
             .collect();
-        let mut held: Vec<SchedGrant> = Vec::new();
+        let mut held: Vec<Lease> = Vec::new();
         let mut tickets: Vec<TicketId> = Vec::new();
         let check_quotas = |sched: &Scheduler| -> Result<(), String> {
             for (i, u) in users.iter().enumerate() {
@@ -96,19 +115,17 @@ fn prop_quotas_hold_and_nothing_starves() {
         for &op in ops {
             match op {
                 0..=2 => {
-                    tickets.push(sched.submit(
+                    tickets.push(sched.enqueue(&one(
                         users[op as usize],
                         ServiceModel::RAaaS,
                         RequestClass::Batch,
-                    ));
+                    )));
                 }
                 _ => {
                     if !held.is_empty() {
                         let idx = op as usize % held.len();
-                        let grant = held.remove(idx);
-                        sched
-                            .release(grant.alloc)
-                            .map_err(|e| e.to_string())?;
+                        let lease = held.remove(idx);
+                        lease.release().map_err(|e| e.to_string())?;
                     }
                 }
             }
@@ -128,20 +145,108 @@ fn prop_quotas_hold_and_nothing_starves() {
                     tickets.len()
                 ));
             }
-            let grant = held.remove(0);
-            sched.release(grant.alloc).map_err(|e| e.to_string())?;
+            let lease = held.remove(0);
+            lease.release().map_err(|e| e.to_string())?;
             check_quotas(&sched)?;
             rounds += 1;
             if rounds > 10_000 {
                 return Err("drain did not converge".to_string());
             }
         }
-        for grant in held.drain(..) {
-            sched.release(grant.alloc).map_err(|e| e.to_string())?;
+        for lease in held.drain(..) {
+            lease.release().map_err(|e| e.to_string())?;
         }
         Ok(())
     })
     .unwrap();
+}
+
+#[test]
+fn prop_gang_admissions_are_atomic_under_contention() {
+    // Two gang tenants (gang sizes 2 and 4) and a single-region
+    // tenant hammer a 4-region device from threads. At every
+    // observation point each gang tenant's in-use count must be a
+    // multiple of its gang size — a partial gang observable anywhere
+    // is a two-phase-reservation bug.
+    let sched = boot(&ClusterConfig::single_vc707());
+    let pair = sched.hv().add_user("pair");
+    let quad = sched.hv().add_user("quad");
+    let solo = sched.hv().add_user("solo");
+    // Quotas count the whole gang: cap `pair` at exactly one gang.
+    sched.set_quota(
+        pair,
+        TenantQuota {
+            max_concurrent: 2,
+            ..TenantQuota::default()
+        },
+    );
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let observer = {
+            let sched = Arc::clone(&sched);
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut checks = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let p = sched.in_use(pair);
+                    let q = sched.in_use(quad);
+                    assert!(
+                        p % 2 == 0 && p <= 2,
+                        "partial pair gang observable: {p}"
+                    );
+                    assert!(
+                        q % 4 == 0,
+                        "partial quad gang observable: {q}"
+                    );
+                    checks += 1;
+                    std::thread::yield_now();
+                }
+                assert!(checks > 0);
+            })
+        };
+        for (user, n, jobs) in
+            [(pair, 2u32, 12usize), (quad, 4, 8), (solo, 1, 16)]
+        {
+            let sched = Arc::clone(&sched);
+            scope.spawn(move || {
+                for _ in 0..jobs {
+                    let lease = sched
+                        .admit_blocking(
+                            &one(
+                                user,
+                                ServiceModel::RAaaS,
+                                RequestClass::Batch,
+                            )
+                            .gang(n),
+                        )
+                        .unwrap();
+                    assert_eq!(lease.regions(), n as usize);
+                    sched
+                        .hv()
+                        .clock
+                        .advance(VirtualTime::from_millis_f64(10.0));
+                    lease.release().unwrap();
+                }
+            });
+        }
+        // Scoped threads join at the end of the closure; flag the
+        // observer down once the workers are done by joining them
+        // first via a nested scope ordering trick: spawn a watchdog
+        // that flips `stop` when all worker leases settle.
+        let sched2 = Arc::clone(&sched);
+        let stop_ref = &stop;
+        scope.spawn(move || {
+            // 12*2 + 8*4 + 16*1 = 72 releases in total.
+            while sched2.hv().metrics.counter("sched.released").get() < 72 {
+                std::thread::yield_now();
+            }
+            stop_ref.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+        let _ = observer;
+    });
+    assert!(sched.active_grants().is_empty());
+    assert_eq!(sched.in_use(pair), 0);
+    assert_eq!(sched.in_use(quad), 0);
 }
 
 #[test]
@@ -169,40 +274,40 @@ fn fair_share_honors_weights_four_to_one() {
     for _ in 0..4 {
         fills.push(
             sched
-                .acquire_vfpga(
+                .admit(&one(
                     filler,
                     ServiceModel::RAaaS,
                     RequestClass::Normal,
-                )
+                ))
                 .unwrap(),
         );
     }
     let mut tickets: Vec<TicketId> = Vec::new();
     for _ in 0..10 {
-        tickets.push(sched.submit(
+        tickets.push(sched.enqueue(&one(
             heavy,
             ServiceModel::RAaaS,
             RequestClass::Batch,
-        ));
+        )));
     }
     for _ in 0..10 {
-        tickets.push(sched.submit(
+        tickets.push(sched.enqueue(&one(
             light,
             ServiceModel::RAaaS,
             RequestClass::Batch,
-        ));
+        )));
     }
     // Free one region, then recycle each admitted lease: grants
     // emerge one at a time in fair-share order.
-    sched.release(fills.pop().unwrap().alloc).unwrap();
+    fills.pop().unwrap().release().unwrap();
     let mut order: Vec<UserId> = Vec::new();
     for _ in 0..10 {
         let mut held = Vec::new();
         collect(&sched, &mut tickets, &mut held).unwrap();
         assert_eq!(held.len(), 1, "exactly one grant per free region");
-        let grant = held.pop().unwrap();
-        order.push(grant.user);
-        sched.release(grant.alloc).unwrap();
+        let lease = held.pop().unwrap();
+        order.push(lease.tenant());
+        lease.release().unwrap();
     }
     let heavy_n = order.iter().filter(|u| **u == heavy).count();
     let light_n = order.iter().filter(|u| **u == light).count();
@@ -223,11 +328,11 @@ fn interactive_service_lease_preempts_batch_on_full_cluster() {
     // The interactive RAaaS façade lease triggers a migration-based
     // preemption and lands.
     let vip = sched.hv().add_user("vip");
-    let (alloc, _vfpga) = raaas.alloc(vip).unwrap();
+    let lease = raaas.alloc(vip).unwrap();
     assert_eq!(sched.hv().metrics.counter("sched.preemptions").get(), 1);
     assert_eq!(sched.hv().metrics.counter("hv.migrations").get(), 1);
     assert_eq!(sched.usage(batcher).preempted, 1);
-    raaas.release(alloc).unwrap();
+    lease.release().unwrap();
 }
 
 #[test]
@@ -251,12 +356,12 @@ fn threaded_contention_six_times_capacity_completes() {
             let sched = Arc::clone(&sched);
             scope.spawn(move || {
                 for _ in 0..3 {
-                    let grant = sched
-                        .acquire_vfpga_blocking(
+                    let lease = sched
+                        .admit_blocking(&one(
                             user,
                             ServiceModel::RAaaS,
                             RequestClass::Batch,
-                        )
+                        ))
                         .unwrap();
                     assert!(
                         sched.in_use(user) <= 1,
@@ -267,7 +372,7 @@ fn threaded_contention_six_times_capacity_completes() {
                         .hv()
                         .clock
                         .advance(VirtualTime::from_millis_f64(50.0));
-                    sched.release(grant.alloc).unwrap();
+                    lease.release().unwrap();
                 }
             });
         }
@@ -290,20 +395,173 @@ fn reservation_expiry_is_reclaimed_for_queued_work() {
     let worker = sched.hv().add_user("worker");
     let now = sched.hv().clock.now();
     // Reserve the whole device for 100 virtual seconds, never claim.
-    sched.reserve(holder, 4, now, VirtualTime::from_secs_f64(100.0));
-    let ticket =
-        sched.submit(worker, ServiceModel::RAaaS, RequestClass::Batch);
-    assert!(sched.try_claim(ticket).is_none(), "withheld while reserved");
+    sched.reserve(holder, 4, None, now, VirtualTime::from_secs_f64(100.0));
+    let ticket = sched.enqueue(&one(
+        worker,
+        ServiceModel::RAaaS,
+        RequestClass::Batch,
+    ));
+    assert!(
+        sched.poll_ticket(ticket).is_none(),
+        "withheld while reserved"
+    );
     // Let the window lapse; the next admission attempt reaps it.
     sched.hv().clock.advance(VirtualTime::from_secs_f64(200.0));
     let g2 = sched
-        .acquire_vfpga(worker, ServiceModel::RAaaS, RequestClass::Normal)
+        .admit(&one(worker, ServiceModel::RAaaS, RequestClass::Normal))
         .unwrap();
     // The queued ticket was pumped in by the same reclamation.
     let first = sched
-        .try_claim(ticket)
+        .poll_ticket(ticket)
         .expect("queued request admitted after expiry")
         .unwrap();
-    sched.release(first.alloc).unwrap();
-    sched.release(g2.alloc).unwrap();
+    first.release().unwrap();
+    g2.release().unwrap();
+}
+
+// ===================================================== wire auth
+
+/// Every mutating v2 RPC must reject a forged (never-issued) and a
+/// stale (released) lease token with the structured `bad_token` code
+/// — acting on the honor-system `user` field instead would be the
+/// spoofing surface the redesign closes.
+#[test]
+fn forged_and_stale_tokens_are_rejected_on_every_mutating_rpc() {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            &ClusterConfig::single_vc707(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let user = c.add_user("honest").unwrap().user;
+    let lease = c.alloc_vfpga(user, None, None).unwrap();
+    let alloc = lease.alloc;
+    let real_token = lease.lease;
+
+    // Forge a token for the same (live) allocation. The `user` field
+    // is the legitimate owner's — exactly the spoofing scenario.
+    let forged = LeaseToken(0xDEAD_BEEF);
+    assert_ne!(forged, real_token);
+    c.set_lease_token(alloc, forged);
+    let mutating: Vec<(&str, Box<dyn FnMut(&mut Client) -> ErrorCode>)> = vec![
+        (
+            "program_core",
+            Box::new(move |c: &mut Client| {
+                c.program_core(user, alloc, "matmul16").unwrap_err().code
+            }),
+        ),
+        (
+            "stream",
+            Box::new(move |c: &mut Client| {
+                c.stream(user, alloc, "matmul16", 16).unwrap_err().code
+            }),
+        ),
+        (
+            "program_full",
+            Box::new(move |c: &mut Client| {
+                c.program_full(user, alloc, None).unwrap_err().code
+            }),
+        ),
+        (
+            "migrate",
+            Box::new(move |c: &mut Client| {
+                c.migrate(user, alloc).unwrap_err().code
+            }),
+        ),
+        (
+            "release",
+            Box::new(move |c: &mut Client| {
+                c.release(alloc).unwrap_err().code
+            }),
+        ),
+    ];
+    for (name, mut call) in mutating {
+        assert_eq!(
+            call(&mut c),
+            ErrorCode::BadToken,
+            "{name} accepted a forged token"
+        );
+    }
+    // Omitting the token entirely is also bad_token on v2.
+    let mut fresh = Client::connect(server.addr()).unwrap();
+    let err = fresh.release(alloc).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadToken);
+
+    // The real token works; afterwards it is stale and the
+    // allocation is gone (bad_lease, not silent success).
+    c.set_lease_token(alloc, real_token);
+    assert!(c.release(alloc).unwrap().released);
+    c.set_lease_token(alloc, real_token);
+    let err = c.release(alloc).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadLease);
+
+    // Job ownership: a job submitted under one token rejects job_*
+    // calls presenting a different one.
+    let lease2 = c.alloc_vfpga(user, None, None).unwrap();
+    let job = c.program_full(user, lease2.alloc, None).unwrap().job;
+    c.set_job_token(job, forged);
+    let err = c.job_status(job).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadToken);
+    let err = c.job_cancel(job).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadToken);
+    c.set_job_token(job, lease2.lease);
+    let body = c.job_wait(job, Some(30.0)).unwrap();
+    assert!(body.is_terminal());
+    c.release(lease2.alloc).unwrap();
+}
+
+/// A 4-region gang request over the wire either grants all four
+/// members atomically (one lease token, four placements) or queues —
+/// the heterogeneous-testbed acceptance scenario.
+#[test]
+fn wire_gang_grants_all_or_queues() {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            &ClusterConfig::sched_testbed(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let user = c.add_user("gang").unwrap().user;
+    let mut req = rc3e::middleware::api::AllocVfpgaRequest::single(
+        user,
+        Some(ServiceModel::BAaaS),
+        Some(RequestClass::Normal),
+    );
+    req.regions = Some(4);
+    req.co_located = Some(true);
+    let resp = c.alloc_vfpga_with(&req).unwrap();
+    assert_eq!(resp.members.len(), 4);
+    let fpgas: std::collections::BTreeSet<_> =
+        resp.members.iter().map(|m| m.fpga).collect();
+    assert_eq!(fpgas.len(), 1, "co-located gang split across devices");
+    // All four members share the one capability token; releasing by
+    // any member tears down the whole gang.
+    assert!(c.release(resp.members[2].alloc).unwrap().released);
+    assert_eq!(
+        server.scheduler().in_use(user),
+        0,
+        "gang fully released"
+    );
+    // A second 4-gang immediately after release fits again; a 9-gang
+    // can never fit and fails with a structured error.
+    let resp2 = c.alloc_vfpga_with(&req).unwrap();
+    assert_eq!(resp2.members.len(), 4);
+    req.regions = Some(9);
+    req.co_located = Some(false);
+    let err = c.alloc_vfpga_with(&req).unwrap_err();
+    assert!(
+        matches!(
+            err.code,
+            ErrorCode::NoCapacity | ErrorCode::BadRequest
+        ),
+        "{err}"
+    );
 }

@@ -1,0 +1,127 @@
+//! Inline vs pipelined batch throughput (the lifecycle refactor's
+//! new measurable workload).
+//!
+//! The pipelined batch mode overlaps the partial reconfiguration of
+//! job *k+1* with the streaming of job *k* on a double-buffered pair
+//! of regions (two live leases), so the per-job PR cost
+//! (732 ms PR + 111 ms orchestration on the paper testbed) hides
+//! behind the previous job's stream instead of serializing with it.
+//!
+//! Both modes run the identical job list on a *scaled* virtual clock
+//! (charged durations also sleep `charged / scale` of wall time, the
+//! bench idiom from `util::clock`), so concurrency interleavings are
+//! realistic and the wall-clock makespan shows the overlap directly;
+//! the virtual makespans are reported next to it.
+//!
+//! Environment knobs: `RC3E_BP_JOBS` (default 4), `RC3E_BP_MULTS`
+//! (default 50,000 multiplications per job), `RC3E_BP_SCALE`
+//! (default 50).
+//!
+//! Run: `cargo bench --bench batch_pipeline` (needs `make artifacts`).
+
+use std::sync::Arc;
+
+use rc3e::batch::{BatchSystem, JobPayload, JobSpec, JobState};
+use rc3e::hypervisor::Hypervisor;
+use rc3e::rc2f::StreamConfig;
+use rc3e::testing::mm16_partial;
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::table::Table;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+struct Outcome {
+    virtual_makespan_s: f64,
+    wall_s: f64,
+    done: usize,
+}
+
+fn run(pipelined: bool, jobs: usize, mults: u64, scale: u64) -> Outcome {
+    let clock = VirtualClock::with_scale(scale);
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap(),
+    );
+    let bs = BatchSystem::new(Arc::clone(&hv));
+    let user = hv.add_user("bench");
+    let ids: Vec<_> = (0..jobs)
+        .map(|i| {
+            bs.submit(JobSpec {
+                user,
+                payload: JobPayload::UserBitfile(mm16_partial(0)),
+                stream: StreamConfig {
+                    seed: 0x700 + i as u64,
+                    validate_first_chunk: i == 0,
+                    ..StreamConfig::matmul16(mults)
+                },
+            })
+        })
+        .collect();
+    let t0_virtual = clock.now();
+    let t0_wall = std::time::Instant::now();
+    if pipelined {
+        bs.run_pipelined();
+    } else {
+        bs.run_to_completion();
+    }
+    let done = ids
+        .iter()
+        .filter(|id| matches!(bs.state(**id), Some(JobState::Done(_))))
+        .count();
+    Outcome {
+        virtual_makespan_s: clock.since(t0_virtual).as_secs_f64(),
+        wall_s: t0_wall.elapsed().as_secs_f64(),
+        done,
+    }
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    if !rc3e::testing::artifacts_available("bench batch_pipeline") {
+        println!("skipped: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let jobs = env_u64("RC3E_BP_JOBS", 4) as usize;
+    let mults = env_u64("RC3E_BP_MULTS", 50_000);
+    let scale = env_u64("RC3E_BP_SCALE", 50);
+    println!(
+        "{jobs} jobs x {mults} multiplications, clock scale 1/{scale}\n"
+    );
+
+    let inline = run(false, jobs, mults, scale);
+    let piped = run(true, jobs, mults, scale);
+
+    let mut table = Table::new(
+        "Batch throughput: inline vs pipelined (PR of k+1 under stream of k)",
+        &[
+            "mode",
+            "done",
+            "virtual makespan",
+            "jobs/s (virtual)",
+            "wall",
+            "jobs/s (wall)",
+        ],
+    );
+    for (name, o) in [("inline", &inline), ("pipelined", &piped)] {
+        table.row(&[
+            name.to_string(),
+            format!("{}/{jobs}", o.done),
+            format!("{:.3} s", o.virtual_makespan_s),
+            format!("{:.3}", o.done as f64 / o.virtual_makespan_s),
+            format!("{:.3} s", o.wall_s),
+            format!("{:.3}", o.done as f64 / o.wall_s),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "wall speedup: {:.2}x, virtual speedup: {:.2}x",
+        inline.wall_s / piped.wall_s,
+        inline.virtual_makespan_s / piped.virtual_makespan_s
+    );
+    assert_eq!(inline.done, jobs, "inline jobs failed");
+    assert_eq!(piped.done, jobs, "pipelined jobs failed");
+}

@@ -11,18 +11,36 @@
 //! blocks until the fair-share pump grants it a region — the old
 //! private FIFO + retry-on-`NoCapacity` loop is gone. Batch leases
 //! are preemptable: an interactive request may relocate them via
-//! migration mid-run, so workers re-resolve their vFPGA through the
-//! lease before every device operation.
+//! migration, but never mid-operation — setup and streaming hold
+//! region pins, so a relocation waits for (or skips) a busy lease.
+//!
+//! Two execution modes exist:
+//!
+//! * **inline** ([`BatchSystem::run_to_completion`]) — each worker
+//!   runs admission → PR → stream → release serially per job;
+//! * **pipelined** ([`BatchSystem::run_pipelined`]) — each worker
+//!   overlaps the partial reconfiguration of job *k+1* with the
+//!   streaming of job *k* on a double-buffered pair of regions (two
+//!   live leases), because `Reserved`/`Programming` is a first-class
+//!   region state distinct from `Active`. The PR side rides the
+//!   server's async job registry ([`crate::middleware::jobs`]) — a
+//!   long operation is already a job there, so pipelining is registry
+//!   policy, not an API change. Results are bit-identical to inline
+//!   mode; only the makespan shrinks (PR time hides behind streams).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
 use crate::hypervisor::{Hypervisor, HypervisorError};
+use crate::middleware::api::{ApiError, ErrorCode};
+use crate::middleware::jobs::{JobRegistry, JobState as SetupState};
 use crate::rc2f::stream::{StreamConfig, StreamOutcome};
 use crate::sched::{AdmissionRequest, RequestClass, Scheduler};
-use crate::util::ids::{JobId, UserId};
+use crate::util::ids::{JobId, LeaseToken, UserId};
+use crate::util::json::Json;
 
 /// A submitted job.
 #[derive(Debug, Clone)]
@@ -70,11 +88,24 @@ struct QueueInner {
     next_id: u64,
 }
 
+/// A job whose admission + PR is in flight on the async job registry
+/// (the pipelined mode's "next" slot). The setup job's result carries
+/// the lease token once admitted + programmed.
+struct PendingSetup {
+    id: JobId,
+    spec: JobSpec,
+    /// Registry id of the in-flight admission+PR job.
+    pr: JobId,
+}
+
 /// The batch queue + workers (admission delegated to the scheduler).
 pub struct BatchSystem {
     hv: Arc<Hypervisor>,
     sched: Arc<Scheduler>,
     inner: Mutex<QueueInner>,
+    /// Async seam for pipelined PR (same registry model the RPC
+    /// server uses for long operations).
+    jobs: Arc<JobRegistry>,
 }
 
 impl BatchSystem {
@@ -95,6 +126,7 @@ impl BatchSystem {
                 states: BTreeMap::new(),
                 next_id: 0,
             }),
+            jobs: JobRegistry::new(),
         })
     }
 
@@ -186,6 +218,180 @@ impl BatchSystem {
                 scope.spawn(move || me.run_to_completion());
             }
         });
+    }
+
+    // ------------------------------------------------- pipelined mode
+
+    /// Drain the queue with PR/stream pipelining (single worker):
+    /// while job *k* streams on this thread, job *k+1*'s lease is
+    /// already admitted and its partial reconfiguration runs on a
+    /// registry worker thread — a double-buffered pair of regions.
+    /// Job outcomes are identical to [`Self::run_to_completion`];
+    /// only the makespan differs.
+    pub fn run_pipelined(&self) {
+        // Job k: programmed, waiting for its stream turn.
+        let mut ready: Option<(JobId, JobSpec, LeaseToken)> = None;
+        loop {
+            let next = self.inner.lock().unwrap().pending.pop_front();
+            let drained = next.is_none();
+            // Kick off job k+1's admission + PR before streaming job
+            // k — this is the overlap.
+            let setup = next
+                .and_then(|(id, spec)| self.start_setup(id, spec));
+            if let Some((id, spec, token)) = ready.take() {
+                self.finish_stream(id, &spec, token);
+            }
+            if let Some(pending) = setup {
+                ready = self.await_setup(pending);
+            }
+            if drained && ready.is_none() {
+                return;
+            }
+        }
+    }
+
+    /// Spawn `n` pipelined workers and wait for the queue to drain.
+    pub fn drain_pipelined(self: &Arc<Self>, n: usize) {
+        std::thread::scope(|scope| {
+            for _ in 0..n.max(1) {
+                let me = Arc::clone(self);
+                scope.spawn(move || me.run_pipelined());
+            }
+        });
+    }
+
+    /// Submit the job's admission + PR to the async registry. The
+    /// *whole* setup — including the blocking admission — runs on the
+    /// registry worker, so the batch worker always proceeds to stream
+    /// the previous job; on a one-region (or quota-capped) cluster
+    /// the setup simply waits for that stream's release instead of
+    /// wedging the pipeline. Returns `None` when the job failed fast
+    /// (state already set).
+    fn start_setup(&self, id: JobId, spec: JobSpec) -> Option<PendingSetup> {
+        self.set_state(id, JobState::Running);
+        let model = match &spec.payload {
+            JobPayload::UserBitfile(_) => ServiceModel::RAaaS,
+            JobPayload::Service(_) => ServiceModel::BAaaS,
+        };
+        // Resolve the payload first: an unknown service must fail the
+        // job without burning an admission.
+        let bitfile = match &spec.payload {
+            JobPayload::UserBitfile(bs) => bs.clone(),
+            JobPayload::Service(name) => {
+                match self.hv.service_bitfile(name) {
+                    Ok(bs) => bs,
+                    Err(e) => {
+                        self.set_state(
+                            id,
+                            JobState::Failed(e.to_string()),
+                        );
+                        return None;
+                    }
+                }
+            }
+        };
+        let request =
+            AdmissionRequest::new(spec.user, model, RequestClass::Batch);
+        let sched = Arc::clone(&self.sched);
+        let now_ns = self.hv.clock.now().0;
+        let pr = Arc::clone(&self.jobs).submit(
+            "batch_setup",
+            now_ns,
+            None,
+            move || {
+                let lease = sched
+                    .admit_blocking(&request)
+                    .map_err(|e| ApiError::from(&e))?;
+                // Disarm: the token rides the job result back to the
+                // batch worker, which streams and releases.
+                let token = lease.into_token();
+                let handle =
+                    sched.lease_handle(token).ok_or_else(|| {
+                        ApiError::internal("lease vanished before PR")
+                    })?;
+                if let Err(e) = handle.program(&bitfile) {
+                    let _ = sched.release_token(token);
+                    return Err(ApiError::from(&e));
+                }
+                Ok(Json::from(token.to_string()))
+            },
+        );
+        Some(PendingSetup { id, spec, pr })
+    }
+
+    /// Collect a setup job's outcome; on success the job is ready to
+    /// stream (token recovered from the job result), on failure it is
+    /// failed (the setup job already released anything it held).
+    fn await_setup(
+        &self,
+        pending: PendingSetup,
+    ) -> Option<(JobId, JobSpec, LeaseToken)> {
+        let PendingSetup { id, spec, pr } = pending;
+        let fail = |msg: String| {
+            self.set_state(id, JobState::Failed(msg));
+        };
+        // Wait out the setup for as long as it runs: a registry-wait
+        // timeout does NOT stop the worker, and abandoning it here
+        // would leak the lease it is still about to admit — exactly
+        // the wedge inline mode avoids by blocking in admission.
+        let outcome = loop {
+            match self.jobs.wait(pr, Duration::from_secs(60)) {
+                Err(e) if e.code == ErrorCode::Timeout => continue,
+                other => break other,
+            }
+        };
+        match outcome {
+            Ok(rec) => match rec.state {
+                SetupState::Done(body) => {
+                    let token = body
+                        .as_str()
+                        .and_then(LeaseToken::parse);
+                    match token {
+                        Some(token) => Some((id, spec, token)),
+                        None => {
+                            fail("setup returned no lease token"
+                                .to_string());
+                            None
+                        }
+                    }
+                }
+                SetupState::Failed(e) => {
+                    fail(e.to_string());
+                    None
+                }
+                other => {
+                    fail(format!("setup job ended {}", other.name()));
+                    None
+                }
+            },
+            Err(e) => {
+                fail(e.to_string());
+                None
+            }
+        }
+    }
+
+    /// Stream a programmed job and release its lease.
+    fn finish_stream(&self, id: JobId, spec: &JobSpec, token: LeaseToken) {
+        let Some(handle) = self.sched.lease_handle(token) else {
+            self.set_state(
+                id,
+                JobState::Failed(
+                    "lease vanished before stream".to_string(),
+                ),
+            );
+            return;
+        };
+        let result = handle.stream_direct(&spec.stream);
+        let _ = handle.release();
+        match result {
+            Ok(outcome) => {
+                self.set_state(id, JobState::Done(Box::new(outcome)))
+            }
+            Err(e) => {
+                self.set_state(id, JobState::Failed(e.to_string()))
+            }
+        }
     }
 }
 
@@ -290,6 +496,86 @@ mod tests {
         bs.run_to_completion();
         assert!(matches!(bs.state(a), Some(JobState::Done(_))));
         assert!(matches!(bs.state(b), Some(JobState::Done(_))));
+    }
+
+    #[test]
+    fn pipelined_results_match_inline() {
+        let Some(inline_bs) = system() else { return };
+        let Some(piped_bs) = system() else { return };
+        // Same three jobs (deterministic streams) into both systems.
+        let mults = [512u64, 256, 300];
+        let inline_ids: Vec<JobId> =
+            mults.iter().map(|m| inline_bs.submit(job(&inline_bs, *m))).collect();
+        let piped_ids: Vec<JobId> =
+            mults.iter().map(|m| piped_bs.submit(job(&piped_bs, *m))).collect();
+        inline_bs.run_to_completion();
+        piped_bs.run_pipelined();
+        for (a, b) in inline_ids.iter().zip(&piped_ids) {
+            let (Some(JobState::Done(x)), Some(JobState::Done(y))) =
+                (inline_bs.state(*a), piped_bs.state(*b))
+            else {
+                panic!(
+                    "jobs not done: {:?} / {:?}",
+                    inline_bs.state(*a),
+                    piped_bs.state(*b)
+                );
+            };
+            assert_eq!(x.mults, y.mults);
+            assert_eq!(x.checksum, y.checksum, "pipelining changed data");
+            assert_eq!(y.validation_failures, 0);
+        }
+        // All leases returned; the structural no-race invariant held.
+        let db = piped_bs.hv.db.lock().unwrap();
+        let free: usize = piped_bs
+            .hv
+            .device_ids()
+            .iter()
+            .map(|f| db.free_regions(*f).len())
+            .sum();
+        assert_eq!(free, 16);
+        drop(db);
+        assert_eq!(
+            piped_bs
+                .hv
+                .metrics
+                .counter("sched.preempt.raced")
+                .get(),
+            0
+        );
+    }
+
+    #[test]
+    fn pipelined_unknown_service_fails_cleanly() {
+        // No artifacts needed: the job fails before any stream.
+        let hv = Arc::new(
+            Hypervisor::boot_paper_testbed(
+                crate::util::clock::VirtualClock::new(),
+            )
+            .unwrap(),
+        );
+        let bs = BatchSystem::new(hv);
+        let user = bs.hv.add_user("enduser");
+        let id = bs.submit(JobSpec {
+            user,
+            payload: JobPayload::Service("ghost".to_string()),
+            stream: StreamConfig::matmul16(64),
+        });
+        bs.run_pipelined();
+        match bs.state(id) {
+            Some(JobState::Failed(msg)) => {
+                assert!(msg.contains("ghost"), "{msg}")
+            }
+            st => panic!("unexpected {st:?}"),
+        }
+        // Nothing leaked: all 16 regions free.
+        let db = bs.hv.db.lock().unwrap();
+        let free: usize = bs
+            .hv
+            .device_ids()
+            .iter()
+            .map(|f| db.free_regions(*f).len())
+            .sum();
+        assert_eq!(free, 16);
     }
 
     #[test]

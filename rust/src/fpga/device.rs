@@ -6,6 +6,13 @@
 //!   region, scaled by region size),
 //! and the clock-gating hooks the hypervisor's energy manager uses.
 //!
+//! The device is also the authority over every region's
+//! [`LifecycleState`]: all moves go through
+//! [`FpgaDevice::transition_region`], which validates them against
+//! [`LifecycleState::can_transition`] and appends them to a bounded
+//! [`TransitionLog`] — an illegal move is a typed
+//! [`DeviceError::IllegalTransition`], never silent state damage.
+//!
 //! PCIe link-parameter save/restore (hot-plug after a full
 //! reconfiguration, Section IV-C) lives here too: a full bitstream
 //! replaces the PCIe endpoint, so the hypervisor snapshots the link
@@ -14,8 +21,11 @@
 use std::sync::Arc;
 
 use super::board::BoardSpec;
+use super::lifecycle::{
+    LifecycleState, TransitionLog, TransitionRecord,
+};
 use super::power::{EnergyMeter, PowerState};
-use super::region::{equal_split, Region, RegionShape, RegionState};
+use super::region::{equal_split, Region, RegionDesign, RegionShape};
 use super::resources::Resources;
 use crate::bitstream::{Bitstream, BitstreamKind};
 use crate::util::clock::{VirtualClock, VirtualTime};
@@ -50,6 +60,12 @@ pub enum DeviceError {
     NoStaticDesign,
     #[error("bitstream failed sanity check: {0}")]
     Insane(String),
+    #[error("illegal lifecycle transition {from} -> {to} on {region}")]
+    IllegalTransition {
+        region: VfpgaId,
+        from: LifecycleState,
+        to: LifecycleState,
+    },
 }
 
 /// Status snapshot (what the RC2F status call returns).
@@ -61,6 +77,10 @@ pub struct DeviceStatus {
     pub regions_total: usize,
     pub regions_configured: usize,
     pub regions_clocked: usize,
+    /// Regions quiesced ahead of relocation/teardown.
+    pub regions_draining: usize,
+    /// Regions whose design is being relocated right now.
+    pub regions_migrating: usize,
     pub power_w: f64,
 }
 
@@ -78,6 +98,10 @@ pub struct FpgaDevice {
     energy: EnergyMeter,
     /// Saved PCIe link parameters for hot-plug restore.
     saved_link: Option<crate::pcie::LinkParams>,
+    /// Applied lifecycle transitions, newest-kept (audit + tests).
+    log: TransitionLog,
+    /// Transition counters land here when wired (set at boot).
+    metrics: Option<Arc<crate::metrics::Registry>>,
 }
 
 impl FpgaDevice {
@@ -102,7 +126,15 @@ impl FpgaDevice {
             regions: Vec::new(),
             energy,
             saved_link: None,
+            log: TransitionLog::new(),
+            metrics: None,
         }
+    }
+
+    /// Wire a metrics registry so transitions bump
+    /// `region.transitions` / `region.transition.<from>_to_<to>`.
+    pub fn set_metrics(&mut self, metrics: Arc<crate::metrics::Registry>) {
+        self.metrics = Some(metrics);
     }
 
     // ------------------------------------------------------ accessors
@@ -146,6 +178,10 @@ impl FpgaDevice {
                 .filter(|r| r.is_configured())
                 .count(),
             regions_clocked: self.clocked_regions(),
+            regions_draining: self
+                .lifecycle_count(LifecycleState::Draining),
+            regions_migrating: self
+                .lifecycle_count(LifecycleState::Migrating),
             power_w: self.energy.draw_w(),
         }
     }
@@ -154,9 +190,57 @@ impl FpgaDevice {
         self.regions.iter().filter(|r| r.clock_enabled).count()
     }
 
+    /// Regions currently in `state`.
+    pub fn lifecycle_count(&self, state: LifecycleState) -> usize {
+        self.regions.iter().filter(|r| r.lifecycle == state).count()
+    }
+
     /// Integrated energy so far (virtual time).
     pub fn energy_joules(&mut self) -> f64 {
         self.energy.joules()
+    }
+
+    // ------------------------------------------------------ lifecycle
+
+    /// Apply one validated lifecycle transition and log it. Returns
+    /// the state the region came from (callers roll back with it).
+    pub fn transition_region(
+        &mut self,
+        region_id: VfpgaId,
+        to: LifecycleState,
+    ) -> Result<LifecycleState, DeviceError> {
+        let at = self.clock.now();
+        let region = self.region_mut(region_id)?;
+        let from = region.lifecycle;
+        if !from.can_transition(to) {
+            return Err(DeviceError::IllegalTransition {
+                region: region_id,
+                from,
+                to,
+            });
+        }
+        region.lifecycle = to;
+        self.log.push(TransitionRecord {
+            region: region_id,
+            from,
+            to,
+            at,
+        });
+        if let Some(m) = &self.metrics {
+            m.counter("region.transitions").inc();
+            m.counter(&format!(
+                "region.transition.{}_to_{}",
+                from.name(),
+                to.name()
+            ))
+            .inc();
+        }
+        Ok(from)
+    }
+
+    /// Snapshot of the applied-transition log.
+    pub fn transition_log(&self) -> Vec<TransitionRecord> {
+        self.log.snapshot()
     }
 
     // --------------------------------------------- full configuration
@@ -225,6 +309,13 @@ impl FpgaDevice {
     /// Partially reconfigure one region with a user design. Charges
     /// the ICAP PR time from Table I, scaled by the region's share of
     /// the device. Requires the RC2F static design to be present.
+    ///
+    /// Drives the region's lifecycle through `Programming -> Active`.
+    /// A `Free` region is claimed (`Free -> Reserved`) on the way in —
+    /// that is two legal transitions, not a bypass — so device-level
+    /// callers (tests, benches) need no separate allocation step. A
+    /// `Draining`/`Migrating` region rejects the PR with
+    /// [`DeviceError::IllegalTransition`].
     pub fn configure_partial(
         &mut self,
         region_id: VfpgaId,
@@ -253,23 +344,34 @@ impl FpgaDevice {
             self.board.pr_quarter_region_ms
                 * (region.shape.fraction() / 0.25)
         };
+        if self.region(region_id)?.lifecycle == LifecycleState::Free {
+            self.transition_region(region_id, LifecycleState::Reserved)?;
+        }
+        if self.region(region_id)?.lifecycle != LifecycleState::Programming
+        {
+            self.transition_region(region_id, LifecycleState::Programming)?;
+        }
         let d = VirtualTime::from_millis_f64(pr_ms);
         self.clock.advance(d);
-        let sha = bs.sha256.clone();
-        let core = bs.meta.core.clone();
-        let region = self.region_mut(region_id)?;
-        region.state = RegionState::Configured {
-            bitstream_sha: sha,
-            core,
+        let design = RegionDesign {
+            bitstream_sha: bs.sha256.clone(),
+            core: bs.meta.core.clone(),
         };
-        region.clock_enabled = true;
+        {
+            let region = self.region_mut(region_id)?;
+            region.design = Some(design);
+            region.clock_enabled = true;
+        }
+        self.transition_region(region_id, LifecycleState::Active)?;
         let active = self.clocked_regions();
         self.energy.set_active_regions(active);
         Ok(d)
     }
 
     /// Blank a region (PR with the blanking bitstream) and gate its
-    /// clock. Charged like a PR operation.
+    /// clock. Charged like a PR operation. Transitions the region to
+    /// `Free`; blanking a `Programming` region is illegal (the PR
+    /// orchestration owns it — quiesce first).
     pub fn clear_region(
         &mut self,
         region_id: VfpgaId,
@@ -279,6 +381,9 @@ impl FpgaDevice {
             self.board.pr_quarter_region_ms
                 * (region.shape.fraction() / 0.25)
         };
+        if self.region(region_id)?.lifecycle != LifecycleState::Free {
+            self.transition_region(region_id, LifecycleState::Free)?;
+        }
         let d = VirtualTime::from_millis_f64(pr_ms);
         self.clock.advance(d);
         self.region_mut(region_id)?.clear();
@@ -366,6 +471,10 @@ mod tests {
         assert!((clock.now().as_secs_f64() - 28.370).abs() < 1e-6);
         assert_eq!(dev.regions().len(), 4);
         assert!(dev.has_static_design());
+        assert!(dev
+            .regions()
+            .iter()
+            .all(|r| r.lifecycle == LifecycleState::Free));
     }
 
     #[test]
@@ -382,6 +491,10 @@ mod tests {
             (clock.since(t0).as_millis_f64() - 732.0).abs() < 1e-6
         );
         assert!(dev.region(region).unwrap().is_configured());
+        assert_eq!(
+            dev.region(region).unwrap().lifecycle,
+            LifecycleState::Active
+        );
     }
 
     #[test]
@@ -438,6 +551,11 @@ mod tests {
         bs.meta.resources = Resources::new(10_000_000, 0, 0, 0);
         let err = dev.configure_partial(region, &bs).unwrap_err();
         assert!(matches!(err, DeviceError::DoesNotFit { .. }));
+        // The rejected PR never entered the state machine.
+        assert_eq!(
+            dev.region(region).unwrap().lifecycle,
+            LifecycleState::Free
+        );
     }
 
     #[test]
@@ -477,6 +595,10 @@ mod tests {
         let t0 = clock.now();
         dev.clear_region(region).unwrap();
         assert!(!dev.region(region).unwrap().is_configured());
+        assert_eq!(
+            dev.region(region).unwrap().lifecycle,
+            LifecycleState::Free
+        );
         assert!(clock.since(t0).as_millis_f64() > 0.0);
     }
 
@@ -503,6 +625,14 @@ mod tests {
         assert_eq!(st.regions_total, 4);
         assert_eq!(st.regions_configured, 2);
         assert_eq!(st.regions_clocked, 1);
+        assert_eq!(st.regions_draining, 0);
+        assert_eq!(st.regions_migrating, 0);
+        dev.transition_region(r0, LifecycleState::Draining).unwrap();
+        assert_eq!(dev.status().regions_draining, 1);
+        dev.transition_region(r0, LifecycleState::Migrating).unwrap();
+        let st = dev.status();
+        assert_eq!(st.regions_draining, 0);
+        assert_eq!(st.regions_migrating, 1);
     }
 
     #[test]
@@ -515,5 +645,49 @@ mod tests {
         dev.configure_full(&rc2f_full_bs("xc7vx485t", 2)).unwrap();
         assert_eq!(dev.regions().len(), 2);
         assert!(dev.regions().iter().all(|r| !r.is_configured()));
+    }
+
+    #[test]
+    fn illegal_transitions_are_typed_errors() {
+        let (mut dev, _) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let r0 = dev.regions()[0].id;
+        // Free -> Active skips Reserved/Programming: illegal.
+        let err = dev
+            .transition_region(r0, LifecycleState::Active)
+            .unwrap_err();
+        assert!(matches!(err, DeviceError::IllegalTransition { .. }));
+        // A quiesced region rejects PR...
+        dev.transition_region(r0, LifecycleState::Reserved).unwrap();
+        dev.transition_region(r0, LifecycleState::Draining).unwrap();
+        let err = dev
+            .configure_partial(r0, &partial_bs("xc7vx485t", "m"))
+            .unwrap_err();
+        assert!(matches!(err, DeviceError::IllegalTransition { .. }));
+        // ...and a Programming region rejects blanking.
+        dev.transition_region(r0, LifecycleState::Reserved).unwrap();
+        dev.transition_region(r0, LifecycleState::Programming)
+            .unwrap();
+        let err = dev.clear_region(r0).unwrap_err();
+        assert!(matches!(err, DeviceError::IllegalTransition { .. }));
+    }
+
+    #[test]
+    fn transition_log_records_only_legal_moves() {
+        let (mut dev, _) = device();
+        dev.configure_full(&rc2f_full_bs("xc7vx485t", 4)).unwrap();
+        let r0 = dev.regions()[0].id;
+        dev.configure_partial(r0, &partial_bs("xc7vx485t", "a"))
+            .unwrap();
+        // Rejected moves leave no trace.
+        let _ = dev.transition_region(r0, LifecycleState::Reserved);
+        dev.clear_region(r0).unwrap();
+        let log = dev.transition_log();
+        // Free->Reserved, Reserved->Programming, Programming->Active,
+        // Active->Free.
+        assert_eq!(log.len(), 4);
+        assert!(log.iter().all(|r| r.is_legal()));
+        assert_eq!(log[0].from, LifecycleState::Free);
+        assert_eq!(log[3].to, LifecycleState::Free);
     }
 }

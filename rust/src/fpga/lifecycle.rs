@@ -1,0 +1,286 @@
+//! Explicit per-region lifecycle state machine.
+//!
+//! Every vFPGA region is always in exactly one [`LifecycleState`];
+//! the legal moves between states are closed over
+//! [`LifecycleState::can_transition`] and every applied move is
+//! recorded in a bounded [`TransitionLog`]. The hypervisor used to
+//! re-derive "what is this region doing" from scattered facts
+//! (configured? clocked? owned?), which is exactly how a preemption
+//! could race an in-flight setup; with the state machine the illegal
+//! interleavings are unrepresentable — an attempt to, say, blank a
+//! `Programming` region is a typed [`super::DeviceError`] instead of
+//! silent corruption.
+//!
+//! ```text
+//!            alloc           PR start         PR done
+//!   Free ──────────► Reserved ───────► Programming ───────► Active
+//!    ▲                  │  ▲               │                 │  ▲
+//!    │          release │  └───────────────┘                 │  │ reprogram
+//!    │                  │     PR failed            quiesce   │  │ (via
+//!    │◄─────────────────┘                          won       │  │ Programming)
+//!    │                                                       ▼  │
+//!    │◄────────────── Migrating ◄──────────────────────── Draining
+//!    │   source blanked    │        relocation starts        │
+//!    │                     └── rollback ──► Active ◄─────────┘
+//!    └───────────────────────── release while quiesced ──────┘
+//! ```
+//!
+//! `Draining` and `Migrating` are only ever entered under a won
+//! region quiesce (see [`crate::hypervisor::guard`]), so a region can
+//! never be observed `Programming` by the relocation path: the pin a
+//! programmer holds blocks the quiesce until the PR orchestration is
+//! out of the region.
+
+use std::collections::VecDeque;
+
+use crate::util::clock::VirtualTime;
+use crate::util::ids::VfpgaId;
+use crate::util::json::Json;
+
+/// Lifecycle state of one PR region.
+///
+/// Declaration order is the canonical index order (`ALL`, gauges).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LifecycleState {
+    /// Unowned and blank-or-stale; allocatable.
+    Free,
+    /// Claimed by an allocation, no PR started yet.
+    Reserved,
+    /// A partial reconfiguration is in flight.
+    Programming,
+    /// Holds a configured user design.
+    Active,
+    /// Quiesce won: no new pins, relocation or teardown imminent.
+    Draining,
+    /// The design is being relocated off this region.
+    Migrating,
+}
+
+impl LifecycleState {
+    /// Every state, in canonical order.
+    pub const ALL: [LifecycleState; 6] = [
+        LifecycleState::Free,
+        LifecycleState::Reserved,
+        LifecycleState::Programming,
+        LifecycleState::Active,
+        LifecycleState::Draining,
+        LifecycleState::Migrating,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LifecycleState::Free => "free",
+            LifecycleState::Reserved => "reserved",
+            LifecycleState::Programming => "programming",
+            LifecycleState::Active => "active",
+            LifecycleState::Draining => "draining",
+            LifecycleState::Migrating => "migrating",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LifecycleState> {
+        LifecycleState::ALL.iter().copied().find(|l| l.name() == s)
+    }
+
+    /// The legal-transition relation — the single source of truth the
+    /// device validates every move against.
+    pub fn can_transition(self, to: LifecycleState) -> bool {
+        use LifecycleState::*;
+        matches!(
+            (self, to),
+            // allocation claims a region
+            (Free, Reserved)
+            // PR orchestration enters the region (first or re-program)
+            | (Reserved, Programming)
+            | (Active, Programming)
+            // PR completes / fails before touching fabric
+            | (Programming, Active)
+            | (Programming, Reserved)
+            // quiesce won ahead of relocation or teardown
+            | (Reserved, Draining)
+            | (Active, Draining)
+            // quiesce released without moving
+            | (Draining, Active)
+            | (Draining, Reserved)
+            // relocation proper
+            | (Draining, Migrating)
+            | (Migrating, Free)
+            // relocation rolled back, design still in place
+            | (Migrating, Active)
+            // release
+            | (Reserved, Free)
+            | (Active, Free)
+            | (Draining, Free)
+        )
+    }
+}
+
+impl std::fmt::Display for LifecycleState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One applied (already validated) transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransitionRecord {
+    pub region: VfpgaId,
+    pub from: LifecycleState,
+    pub to: LifecycleState,
+    /// Virtual timestamp the transition was applied at.
+    pub at: VirtualTime,
+}
+
+impl TransitionRecord {
+    /// Each record carries both endpoints, so legality is checkable
+    /// per record even after older records age out of the log.
+    pub fn is_legal(&self) -> bool {
+        self.from.can_transition(self.to)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("region", Json::from(self.region.to_string())),
+            ("from", Json::from(self.from.name())),
+            ("to", Json::from(self.to.name())),
+            ("at_s", Json::from(self.at.as_secs_f64())),
+        ])
+    }
+}
+
+/// Newest records kept when the log is full.
+pub const TRANSITION_LOG_CAP: usize = 4096;
+
+/// Bounded per-device log of applied transitions (audit + tests).
+#[derive(Debug, Default)]
+pub struct TransitionLog {
+    records: VecDeque<TransitionRecord>,
+    dropped: u64,
+}
+
+impl TransitionLog {
+    pub fn new() -> TransitionLog {
+        TransitionLog::default()
+    }
+
+    pub fn push(&mut self, rec: TransitionRecord) {
+        if self.records.len() == TRANSITION_LOG_CAP {
+            self.records.pop_front();
+            self.dropped += 1;
+        }
+        self.records.push_back(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records aged out of the bounded log so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn snapshot(&self) -> Vec<TransitionRecord> {
+        self.records.iter().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legal_edges_match_the_diagram() {
+        use LifecycleState::*;
+        for (from, to) in [
+            (Free, Reserved),
+            (Reserved, Programming),
+            (Programming, Active),
+            (Programming, Reserved),
+            (Active, Programming),
+            (Active, Draining),
+            (Reserved, Draining),
+            (Draining, Migrating),
+            (Draining, Active),
+            (Draining, Reserved),
+            (Draining, Free),
+            (Migrating, Free),
+            (Migrating, Active),
+            (Reserved, Free),
+            (Active, Free),
+        ] {
+            assert!(from.can_transition(to), "{from} -> {to} must be legal");
+        }
+    }
+
+    #[test]
+    fn illegal_edges_are_rejected() {
+        use LifecycleState::*;
+        for (from, to) in [
+            (Free, Programming),
+            (Free, Active),
+            (Free, Draining),
+            (Free, Migrating),
+            (Free, Free),
+            (Reserved, Active),
+            (Reserved, Migrating),
+            (Programming, Free),
+            (Programming, Draining),
+            (Programming, Migrating),
+            (Active, Reserved),
+            (Active, Migrating),
+            (Migrating, Reserved),
+            (Migrating, Draining),
+            (Migrating, Programming),
+            (Draining, Programming),
+        ] {
+            assert!(
+                !from.can_transition(to),
+                "{from} -> {to} must be illegal"
+            );
+        }
+    }
+
+    #[test]
+    fn every_state_named_and_parsed() {
+        for s in LifecycleState::ALL {
+            assert_eq!(LifecycleState::parse(s.name()), Some(s));
+        }
+        assert_eq!(LifecycleState::parse("broken"), None);
+    }
+
+    #[test]
+    fn log_caps_and_counts_drops() {
+        let mut log = TransitionLog::new();
+        let rec = TransitionRecord {
+            region: VfpgaId(0),
+            from: LifecycleState::Free,
+            to: LifecycleState::Reserved,
+            at: VirtualTime::ZERO,
+        };
+        for _ in 0..(TRANSITION_LOG_CAP + 10) {
+            log.push(rec);
+        }
+        assert_eq!(log.len(), TRANSITION_LOG_CAP);
+        assert_eq!(log.dropped(), 10);
+        assert!(log.snapshot().iter().all(|r| r.is_legal()));
+    }
+
+    #[test]
+    fn record_json_shape() {
+        let rec = TransitionRecord {
+            region: VfpgaId(3),
+            from: LifecycleState::Active,
+            to: LifecycleState::Draining,
+            at: VirtualTime::from_secs_f64(2.0),
+        };
+        let j = rec.to_json();
+        assert_eq!(j.get("from").as_str(), Some("active"));
+        assert_eq!(j.get("to").as_str(), Some("draining"));
+        assert!(rec.is_legal());
+    }
+}

@@ -13,12 +13,14 @@
 
 pub mod board;
 pub mod device;
+pub mod lifecycle;
 pub mod power;
 pub mod region;
 pub mod resources;
 
 pub use board::{BoardKind, BoardSpec};
 pub use device::{ConfigPort, DeviceError, DeviceStatus, FpgaDevice};
+pub use lifecycle::{LifecycleState, TransitionLog, TransitionRecord};
 pub use power::{EnergyMeter, PowerState};
-pub use region::{Region, RegionShape, RegionState};
+pub use region::{Region, RegionDesign, RegionShape};
 pub use resources::Resources;

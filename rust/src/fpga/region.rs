@@ -3,10 +3,12 @@
 //! Each physical FPGA is floorplanned into up to four predefined PR
 //! regions (Section IV-A: "Each physical FPGA can host up to four
 //! virtual FPGAs"). A region has a fixed resource envelope carved out
-//! of the device, a configuration state, and an independent clock
-//! enable (the hypervisor gates clocks of idle regions to save power,
-//! Section IV-B).
+//! of the device, an explicit [`LifecycleState`] (see
+//! [`super::lifecycle`]), the design payload it currently holds, and
+//! an independent clock enable (the hypervisor gates clocks of idle
+//! regions to save power, Section IV-B).
 
+use super::lifecycle::LifecycleState;
 use super::resources::Resources;
 use crate::util::ids::VfpgaId;
 use crate::util::json::Json;
@@ -60,16 +62,11 @@ impl RegionShape {
     }
 }
 
-/// Configuration state of one region.
+/// The design a configured region holds.
 #[derive(Debug, Clone, PartialEq)]
-pub enum RegionState {
-    /// Blanked (after boot or explicit clear).
-    Empty,
-    /// Holds a user design identified by its bitstream id/core name.
-    Configured {
-        bitstream_sha: String,
-        core: String,
-    },
+pub struct RegionDesign {
+    pub bitstream_sha: String,
+    pub core: String,
 }
 
 /// One PR region on a device.
@@ -79,7 +76,13 @@ pub struct Region {
     pub shape: RegionShape,
     /// Resource envelope available to the user design inside.
     pub capacity: Resources,
-    pub state: RegionState,
+    /// Where the region is in its lifecycle. Mutated only through
+    /// [`super::FpgaDevice::transition_region`] so every move is
+    /// validated and logged.
+    pub lifecycle: LifecycleState,
+    /// Design payload while configured (orthogonal to the lifecycle:
+    /// a `Draining`/`Migrating` region still holds its design).
+    pub design: Option<RegionDesign>,
     /// Clock enable — gated off when idle (energy management).
     pub clock_enabled: bool,
 }
@@ -90,30 +93,30 @@ impl Region {
             id,
             shape,
             capacity,
-            state: RegionState::Empty,
+            lifecycle: LifecycleState::Free,
+            design: None,
             clock_enabled: false,
         }
     }
 
     pub fn is_configured(&self) -> bool {
-        matches!(self.state, RegionState::Configured { .. })
+        self.design.is_some()
     }
 
-    /// Blank the region (what PR with a blanking bitstream does).
+    /// Blank the region's payload (what PR with a blanking bitstream
+    /// does). Lifecycle is driven separately by the device so the
+    /// transition is validated and logged.
     pub fn clear(&mut self) {
-        self.state = RegionState::Empty;
+        self.design = None;
         self.clock_enabled = false;
     }
 
     pub fn to_json(&self) -> Json {
-        let state = match &self.state {
-            RegionState::Empty => Json::from("empty"),
-            RegionState::Configured {
-                bitstream_sha,
-                core,
-            } => Json::obj(vec![
-                ("bitstream_sha", Json::from(bitstream_sha.as_str())),
-                ("core", Json::from(core.as_str())),
+        let state = match &self.design {
+            None => Json::from("empty"),
+            Some(d) => Json::obj(vec![
+                ("bitstream_sha", Json::from(d.bitstream_sha.as_str())),
+                ("core", Json::from(d.core.as_str())),
             ]),
         };
         Json::obj(vec![
@@ -121,6 +124,7 @@ impl Region {
             ("shape", Json::from(self.shape.name())),
             ("capacity", self.capacity.to_json()),
             ("state", state),
+            ("lifecycle", Json::from(self.lifecycle.name())),
             ("clock_enabled", Json::from(self.clock_enabled)),
         ])
     }
@@ -153,17 +157,18 @@ mod tests {
     }
 
     #[test]
-    fn lifecycle() {
+    fn payload_lifecycle() {
         let mut r = Region::new(
             VfpgaId(0),
             RegionShape::Quarter,
             Resources::new(100, 100, 10, 10),
         );
         assert!(!r.is_configured());
-        r.state = RegionState::Configured {
+        assert_eq!(r.lifecycle, LifecycleState::Free);
+        r.design = Some(RegionDesign {
             bitstream_sha: "abc".into(),
             core: "matmul16".into(),
-        };
+        });
         r.clock_enabled = true;
         assert!(r.is_configured());
         r.clear();
@@ -191,5 +196,6 @@ mod tests {
         assert_eq!(j.get("id").as_str().unwrap(), "vfpga-3");
         assert_eq!(j.get("shape").as_str().unwrap(), "half");
         assert_eq!(j.get("state").as_str().unwrap(), "empty");
+        assert_eq!(j.get("lifecycle").as_str().unwrap(), "free");
     }
 }

@@ -11,12 +11,14 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use super::db::{AllocKind, DeviceDb, DeviceEntry};
+use super::guard::{PinGuard, QuiesceGuard, RegionGuards};
 use super::overhead;
 use super::placement::{Candidate, PlacementPolicy};
 use crate::bitstream::{Bitstream, SanityChecker, SanityPolicy};
 use crate::config::{ClusterConfig, ServiceModel};
 use crate::fpga::board::BoardSpec;
 use crate::fpga::device::{DeviceStatus, FpgaDevice};
+use crate::fpga::lifecycle::LifecycleState;
 use crate::hls::flow::region_window;
 use crate::pcie::devfile::DeviceFileRegistry;
 use crate::pcie::{DeviceLink, LinkParams};
@@ -72,6 +74,8 @@ pub struct Hypervisor {
     programmed: Mutex<BTreeMap<VfpgaId, Bitstream>>,
     /// Provider bitfile store for BAaaS services.
     services: Mutex<BTreeMap<String, Bitstream>>,
+    /// Pin/quiesce guards over every region (see [`super::guard`]).
+    guards: Arc<RegionGuards>,
     pub metrics: Arc<crate::metrics::Registry>,
 }
 
@@ -90,6 +94,7 @@ impl Hypervisor {
         } else {
             SanityPolicy::research()
         };
+        let metrics = Arc::new(crate::metrics::Registry::new());
         let mut hv = Hypervisor {
             clock: Arc::clone(&clock),
             db: Mutex::new(DeviceDb::new()),
@@ -99,7 +104,8 @@ impl Hypervisor {
             policy,
             programmed: Mutex::new(BTreeMap::new()),
             services: Mutex::new(BTreeMap::new()),
-            metrics: Arc::new(crate::metrics::Registry::new()),
+            guards: RegionGuards::new(),
+            metrics,
         };
         let mut fpga_seq = 0u64;
         for (ni, node) in config.nodes.iter().enumerate() {
@@ -112,6 +118,7 @@ impl Hypervisor {
                 let board = BoardSpec::of(fc.board);
                 let mut dev =
                     FpgaDevice::new(fpga_id, board, Arc::clone(&clock));
+                dev.set_metrics(Arc::clone(&hv.metrics));
                 let serves_vfpgas = fc.models.iter().any(|m| {
                     matches!(m, ServiceModel::RAaaS | ServiceModel::BAaaS)
                 });
@@ -236,7 +243,14 @@ impl Hypervisor {
         self.registries[&dev.node]
             .create_vfpga_files(vfpga, user)
             .map_err(|e| HypervisorError::Db(e.to_string()))?;
+        // The region is claimed: enter the lifecycle machine.
+        dev.fpga
+            .lock()
+            .unwrap()
+            .transition_region(vfpga, LifecycleState::Reserved)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
         self.metrics.counter("hv.alloc.vfpga").inc();
+        self.refresh_region_gauges();
         Ok((alloc, vfpga, fpga, dev.node))
     }
 
@@ -284,7 +298,14 @@ impl Hypervisor {
         self.registries[&dev.node]
             .create_vfpga_files(vfpga, user)
             .map_err(|e| HypervisorError::Db(e.to_string()))?;
+        // The region is claimed: enter the lifecycle machine.
+        dev.fpga
+            .lock()
+            .unwrap()
+            .transition_region(vfpga, LifecycleState::Reserved)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
         self.metrics.counter("hv.alloc.vfpga").inc();
+        self.refresh_region_gauges();
         Ok((alloc, vfpga, fpga, dev.node))
     }
 
@@ -320,7 +341,14 @@ impl Hypervisor {
 
     /// Release any allocation: blanks regions, gates clocks, removes
     /// device files, updates the database.
+    ///
+    /// vFPGA releases first win a quiesce on the lease's region, so
+    /// an in-flight program/stream pin drains before teardown — the
+    /// same structural no-race rule relocation follows. The pinned
+    /// operation completes; its *next* lease resolution then fails
+    /// cleanly against the released allocation.
     pub fn release(&self, id: AllocationId) -> Result<(), HypervisorError> {
+        let _quiesce = self.quiesce_allocation(id);
         let alloc = self
             .db
             .lock()
@@ -341,6 +369,17 @@ impl Hypervisor {
                         hw.clear_region(v).map_err(|e| {
                             HypervisorError::Device(e.to_string())
                         })?;
+                    } else if hw
+                        .region(v)
+                        .map(|r| r.lifecycle != LifecycleState::Free)
+                        .unwrap_or(false)
+                    {
+                        // Never programmed: no blanking PR to charge,
+                        // but the claim still returns to Free.
+                        hw.transition_region(v, LifecycleState::Free)
+                            .map_err(|e| {
+                                HypervisorError::Device(e.to_string())
+                            })?;
                     }
                     drop(hw);
                     dev.controller
@@ -355,6 +394,7 @@ impl Hypervisor {
             AllocKind::Physical(_) | AllocKind::Vm(_, _) => {}
         }
         self.metrics.counter("hv.release").inc();
+        self.refresh_region_gauges();
         Ok(())
     }
 
@@ -365,23 +405,88 @@ impl Hypervisor {
     /// integrity + signature policy), then PR, then updates the
     /// controller. Charges the RC3E PR orchestration overhead.
     /// Returns the total charged duration.
+    ///
+    /// The whole orchestration runs under a region pin and marks the
+    /// region `Programming` up front, so a quiesce-based relocation
+    /// or release can neither start mid-PR nor ever observe the
+    /// region half-programmed. On failure the region returns to the
+    /// state it came from (`Reserved` or `Active`).
     pub fn program_vfpga(
         &self,
         alloc_id: AllocationId,
         user: UserId,
         bs: &Bitstream,
     ) -> Result<VirtualTime, HypervisorError> {
-        let vfpga = self.check_vfpga_lease(alloc_id, user)?;
-        let (fpga, _) = {
-            let db = self.db.lock().unwrap();
-            let d = db
-                .device_of_vfpga(vfpga)
-                .ok_or(HypervisorError::BadAllocation(alloc_id))?;
-            (d.id, d.node)
-        };
+        let (_pin, vfpga) = self.pin_current(alloc_id, user)?;
+        self.program_vfpga_at(vfpga, bs)
+    }
+
+    /// The pinless PR orchestration body: the caller must already
+    /// exclude concurrent relocation of `vfpga` — either by a pin
+    /// ([`Self::program_vfpga`]) or by a quiesce (the migration path
+    /// programs its target under the target's own quiesce, where a
+    /// pin would self-deadlock).
+    pub(crate) fn program_vfpga_at(
+        &self,
+        vfpga: VfpgaId,
+        bs: &Bitstream,
+    ) -> Result<VirtualTime, HypervisorError> {
+        let fpga = self.fpga_of_vfpga(vfpga)?;
         let dev = self.device(fpga)?;
         let t0 = self.clock.now();
-        // Orchestration: sanity check + db/controller updates.
+        let from = dev
+            .fpga
+            .lock()
+            .unwrap()
+            .transition_region(vfpga, LifecycleState::Programming)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        if let Err(e) = self.program_vfpga_inner(dev, vfpga, bs) {
+            // Distinguish "fabric untouched" (sanity/PR rejected
+            // before writing — roll back to where the region came
+            // from) from "PR landed but post-PR bookkeeping failed"
+            // (the region is already Active and holds the design —
+            // record it so the device and the programmed map agree).
+            let lifecycle = {
+                let mut hw = dev.fpga.lock().unwrap();
+                let lifecycle = hw
+                    .region(vfpga)
+                    .map(|r| r.lifecycle)
+                    .unwrap_or(from);
+                if lifecycle == LifecycleState::Programming {
+                    let _ = hw.transition_region(vfpga, from);
+                }
+                lifecycle
+            };
+            if lifecycle == LifecycleState::Active {
+                self.programmed
+                    .lock()
+                    .unwrap()
+                    .insert(vfpga, bs.clone());
+            }
+            self.refresh_region_gauges();
+            return Err(e);
+        }
+        self.programmed
+            .lock()
+            .unwrap()
+            .insert(vfpga, bs.clone());
+        self.metrics.counter("hv.pr").inc();
+        self.metrics
+            .histogram("hv.pr.ms")
+            .record_us((self.clock.since(t0).as_millis_f64() * 1e3) as u64);
+        self.refresh_region_gauges();
+        Ok(self.clock.since(t0))
+    }
+
+    /// The fallible middle of [`Self::program_vfpga`]: sanity check,
+    /// orchestration charge, PR (`Programming -> Active` on success),
+    /// controller update.
+    fn program_vfpga_inner(
+        &self,
+        dev: &ManagedDevice,
+        vfpga: VfpgaId,
+        bs: &Bitstream,
+    ) -> Result<(), HypervisorError> {
         {
             let hw = dev.fpga.lock().unwrap();
             let slot = dev.slot_of[&vfpga];
@@ -407,15 +512,115 @@ impl Hypervisor {
             .unwrap()
             .mark_configured(vfpga, &bs.meta.core)
             .map_err(|e| HypervisorError::Device(e.to_string()))?;
-        self.programmed
-            .lock()
-            .unwrap()
-            .insert(vfpga, bs.clone());
-        self.metrics.counter("hv.pr").inc();
+        Ok(())
+    }
+
+    // --------------------------------------------- region guards
+
+    /// The pin/quiesce guard table (lease handles and the scheduler
+    /// pin/quiesce through these).
+    pub fn guards(&self) -> &Arc<RegionGuards> {
+        &self.guards
+    }
+
+    /// Pin the region a lease currently occupies. If a relocation
+    /// rebinds the lease between resolving and pinning, the stale pin
+    /// is dropped and the new region pinned instead — the returned
+    /// pair is always consistent.
+    pub fn pin_current(
+        &self,
+        alloc_id: AllocationId,
+        user: UserId,
+    ) -> Result<(PinGuard, VfpgaId), HypervisorError> {
+        loop {
+            let vfpga = self.check_vfpga_lease(alloc_id, user)?;
+            let pin = self.guards.pin(vfpga);
+            if self.check_vfpga_lease(alloc_id, user)? == vfpga {
+                return Ok((pin, vfpga));
+            }
+        }
+    }
+
+    /// Retarget + program under one pin: the placement resolved for
+    /// retargeting is exactly the placement programmed (the
+    /// `program_core` RPC path; lease handles do the same through
+    /// `Lease::program_member`).
+    pub fn program_retargeted(
+        &self,
+        alloc_id: AllocationId,
+        user: UserId,
+        bitfile: &Bitstream,
+    ) -> Result<VirtualTime, HypervisorError> {
+        let (_pin, vfpga) = self.pin_current(alloc_id, user)?;
+        let placed = self.retarget_for(vfpga, bitfile)?;
+        self.program_vfpga(alloc_id, user, &placed)
+    }
+
+    /// Win a quiesce on a region, blocking while pins drain; records
+    /// the wall wait in `sched.preempt.quiesce_wait`.
+    pub fn quiesce_region(&self, vfpga: VfpgaId) -> QuiesceGuard {
+        let (guard, waited) = self.guards.quiesce_blocking(vfpga);
         self.metrics
-            .histogram("hv.pr.ms")
-            .record_us((self.clock.since(t0).as_millis_f64() * 1e3) as u64);
-        Ok(self.clock.since(t0))
+            .histogram("sched.preempt.quiesce_wait")
+            .record_us(waited.as_micros() as u64);
+        guard
+    }
+
+    /// Non-blocking quiesce (preemption's only-quiescable-victims
+    /// rule). A win records a zero wait.
+    pub fn try_quiesce_region(
+        &self,
+        vfpga: VfpgaId,
+    ) -> Option<QuiesceGuard> {
+        let guard = self.guards.try_quiesce(vfpga);
+        if guard.is_some() {
+            self.metrics
+                .histogram("sched.preempt.quiesce_wait")
+                .record_us(0);
+        }
+        guard
+    }
+
+    /// Win a quiesce on the region an allocation currently holds,
+    /// re-resolving if a relocation moved the lease while we waited.
+    /// `None` for non-vFPGA or already-gone allocations.
+    fn quiesce_allocation(&self, id: AllocationId) -> Option<QuiesceGuard> {
+        loop {
+            let vfpga = {
+                let db = self.db.lock().unwrap();
+                db.allocation(id).and_then(|a| match a.kind {
+                    AllocKind::Vfpga(v) => Some(v),
+                    _ => None,
+                })
+            }?;
+            let guard = self.quiesce_region(vfpga);
+            let still = {
+                let db = self.db.lock().unwrap();
+                db.allocation(id)
+                    .map(|a| a.kind == AllocKind::Vfpga(vfpga))
+                    .unwrap_or(false)
+            };
+            if still {
+                return Some(guard);
+            }
+        }
+    }
+
+    /// Recompute the per-state region occupancy gauges
+    /// (`region.state.<name>`). Cheap: a few devices, a few regions.
+    pub fn refresh_region_gauges(&self) {
+        let mut counts = [0i64; 6];
+        for dev in self.devices.values() {
+            let hw = dev.fpga.lock().unwrap();
+            for r in hw.regions() {
+                counts[r.lifecycle as usize] += 1;
+            }
+        }
+        for (i, s) in LifecycleState::ALL.iter().enumerate() {
+            self.metrics
+                .gauge(&format!("region.state.{}", s.name()))
+                .set(counts[i]);
+        }
     }
 
     /// Full reconfiguration of an exclusively-held device (RSaaS):
@@ -549,6 +754,12 @@ impl Hypervisor {
     /// The bitstream last programmed into a region (migration input).
     pub fn programmed_bitstream(&self, v: VfpgaId) -> Option<Bitstream> {
         self.programmed.lock().unwrap().get(&v).cloned()
+    }
+
+    /// Drop the programmed-bitstream record of a region (a vacated
+    /// migration source, or a rollback that orphaned the design).
+    pub(crate) fn forget_programmed(&self, v: VfpgaId) {
+        self.programmed.lock().unwrap().remove(&v);
     }
 
     /// Device currently hosting a vFPGA region (lease resolution).
@@ -831,6 +1042,89 @@ mod tests {
         assert!(hv.total_power_w() > idle);
         hv.release(alloc).unwrap();
         assert_eq!(hv.total_power_w(), idle);
+    }
+
+    #[test]
+    fn lifecycle_tracks_hypervisor_operations() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, vfpga, fpga, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let state = |hv: &Hypervisor| {
+            hv.device(fpga)
+                .unwrap()
+                .fpga
+                .lock()
+                .unwrap()
+                .region(vfpga)
+                .unwrap()
+                .lifecycle
+        };
+        assert_eq!(state(&hv), LifecycleState::Reserved);
+        let slot = hv.device(fpga).unwrap().slot_of[&vfpga];
+        let bs = crate::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            "matmul16",
+        )
+        .resources(crate::fpga::resources::Resources::new(100, 100, 1, 1))
+        .frames(crate::hls::flow::region_window(slot, 1))
+        .build();
+        hv.program_vfpga(alloc, user, &bs).unwrap();
+        assert_eq!(state(&hv), LifecycleState::Active);
+        hv.release(alloc).unwrap();
+        assert_eq!(state(&hv), LifecycleState::Free);
+        // Every recorded move was legal and the occupancy gauges see
+        // the final all-free state.
+        let log = hv
+            .device(fpga)
+            .unwrap()
+            .fpga
+            .lock()
+            .unwrap()
+            .transition_log();
+        assert!(!log.is_empty());
+        assert!(log.iter().all(|r| r.is_legal()));
+        assert_eq!(hv.metrics.gauge("region.state.active").get(), 0);
+        assert!(hv.metrics.counter("region.transitions").get() >= 4);
+    }
+
+    #[test]
+    fn failed_program_returns_region_to_reserved() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, vfpga, fpga, _) =
+            hv.alloc_vfpga(user, ServiceModel::RAaaS).unwrap();
+        let slot = hv.device(fpga).unwrap().slot_of[&vfpga];
+        // Frame-escaping bitfile: rejected by the sanity checker after
+        // the region already entered Programming.
+        let evil = crate::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            "evil",
+        )
+        .resources(crate::fpga::resources::Resources::new(1, 1, 1, 1))
+        .frames(crate::hls::flow::region_window((slot + 1) % 4, 1))
+        .build();
+        assert!(hv.program_vfpga(alloc, user, &evil).is_err());
+        let region_state = hv
+            .device(fpga)
+            .unwrap()
+            .fpga
+            .lock()
+            .unwrap()
+            .region(vfpga)
+            .unwrap()
+            .lifecycle;
+        assert_eq!(region_state, LifecycleState::Reserved);
+        // The region is still pinnable and programmable.
+        let good = crate::bitstream::BitstreamBuilder::partial(
+            "xc7vx485t",
+            "good",
+        )
+        .resources(crate::fpga::resources::Resources::new(1, 1, 1, 1))
+        .frames(crate::hls::flow::region_window(slot, 1))
+        .build();
+        hv.program_vfpga(alloc, user, &good).unwrap();
+        assert_eq!(hv.guards().pins(vfpga), 0, "no pin leaked");
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Pin/quiesce guards over vFPGA regions.
+//!
+//! The lifecycle state machine ([`crate::fpga::lifecycle`]) makes
+//! illegal region *states* unrepresentable; this module makes illegal
+//! region *interleavings* unrepresentable. Two kinds of guard exist
+//! per region:
+//!
+//! * a **pin** ([`PinGuard`]) — held by in-flight setup and streaming
+//!   (retarget + PR orchestration, session streaming). Any number of
+//!   pins may coexist; a pin blocks while the region is quiesced.
+//! * a **quiesce** ([`QuiesceGuard`]) — exclusive: it is granted only
+//!   when no pin is held and no other quiesce is active. Relocation
+//!   (migration, preemption) and teardown (release) must win a
+//!   quiesce before touching any region state.
+//!
+//! Because a quiesce excludes pins, a relocation can never observe a
+//! region mid-`Programming`: the race the old `with_preemption_retry`
+//! absorbed is deleted structurally, not retried around. Preemption
+//! uses [`RegionGuards::try_quiesce`] so a pinned (busy) victim is
+//! *skipped*, never raced; the explicit `migrate` RPC and release use
+//! [`RegionGuards::quiesce_blocking`] and wait for pins to drain.
+//!
+//! Waiting is wall-clock only (the virtual clock never advances while
+//! parked); the hypervisor records the measured wait in the
+//! `sched.preempt.quiesce_wait` histogram.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::ids::VfpgaId;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct GuardState {
+    pins: u32,
+    quiesced: bool,
+}
+
+impl GuardState {
+    fn is_default(self) -> bool {
+        self.pins == 0 && !self.quiesced
+    }
+}
+
+/// The per-cluster guard table (region ids are cluster-unique).
+#[derive(Debug, Default)]
+pub struct RegionGuards {
+    state: Mutex<BTreeMap<VfpgaId, GuardState>>,
+    changed: Condvar,
+}
+
+impl RegionGuards {
+    pub fn new() -> Arc<RegionGuards> {
+        Arc::new(RegionGuards::default())
+    }
+
+    /// Take a pin on `region`, waiting out any active quiesce.
+    pub fn pin(self: &Arc<Self>, region: VfpgaId) -> PinGuard {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            {
+                let entry = st.entry(region).or_default();
+                if !entry.quiesced {
+                    entry.pins += 1;
+                    return PinGuard {
+                        guards: Arc::clone(self),
+                        region,
+                    };
+                }
+            }
+            st = self.changed.wait(st).unwrap();
+        }
+    }
+
+    /// Win a quiesce on `region` only if it is immediately winnable
+    /// (no pins, no other quiesce). Never blocks — the preemption
+    /// path's "only quiescable victims" rule.
+    pub fn try_quiesce(
+        self: &Arc<Self>,
+        region: VfpgaId,
+    ) -> Option<QuiesceGuard> {
+        let mut st = self.state.lock().unwrap();
+        let entry = st.entry(region).or_default();
+        if entry.is_default() {
+            entry.quiesced = true;
+            Some(QuiesceGuard {
+                guards: Arc::clone(self),
+                region,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Win a quiesce on `region`, waiting for pins to drain. Returns
+    /// the guard and the wall time spent waiting.
+    pub fn quiesce_blocking(
+        self: &Arc<Self>,
+        region: VfpgaId,
+    ) -> (QuiesceGuard, Duration) {
+        let t0 = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        loop {
+            {
+                let entry = st.entry(region).or_default();
+                if entry.is_default() {
+                    entry.quiesced = true;
+                    return (
+                        QuiesceGuard {
+                            guards: Arc::clone(self),
+                            region,
+                        },
+                        t0.elapsed(),
+                    );
+                }
+            }
+            st = self.changed.wait(st).unwrap();
+        }
+    }
+
+    /// Would a `try_quiesce` succeed right now? (Advisory: the answer
+    /// can go stale; callers still take the real guard.)
+    pub fn is_quiescable(&self, region: VfpgaId) -> bool {
+        let st = self.state.lock().unwrap();
+        st.get(&region).map_or(true, |e| e.is_default())
+    }
+
+    /// Live pins on a region (tests, telemetry).
+    pub fn pins(&self, region: VfpgaId) -> u32 {
+        let st = self.state.lock().unwrap();
+        st.get(&region).map_or(0, |e| e.pins)
+    }
+
+    fn unpin(&self, region: VfpgaId) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st.get_mut(&region) {
+            e.pins = e.pins.saturating_sub(1);
+            if e.is_default() {
+                st.remove(&region);
+            }
+        }
+        drop(st);
+        self.changed.notify_all();
+    }
+
+    fn unquiesce(&self, region: VfpgaId) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st.get_mut(&region) {
+            e.quiesced = false;
+            if e.is_default() {
+                st.remove(&region);
+            }
+        }
+        drop(st);
+        self.changed.notify_all();
+    }
+}
+
+/// A held pin; dropping it releases the region to quiescers.
+#[derive(Debug)]
+pub struct PinGuard {
+    guards: Arc<RegionGuards>,
+    region: VfpgaId,
+}
+
+impl PinGuard {
+    pub fn region(&self) -> VfpgaId {
+        self.region
+    }
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        self.guards.unpin(self.region);
+    }
+}
+
+/// A won quiesce; dropping it re-admits pinners.
+#[derive(Debug)]
+pub struct QuiesceGuard {
+    guards: Arc<RegionGuards>,
+    region: VfpgaId,
+}
+
+impl QuiesceGuard {
+    pub fn region(&self) -> VfpgaId {
+        self.region
+    }
+}
+
+impl Drop for QuiesceGuard {
+    fn drop(&mut self) {
+        self.guards.unquiesce(self.region);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pins_block_quiesce_until_dropped() {
+        let g = RegionGuards::new();
+        let r = VfpgaId(1);
+        let pin = g.pin(r);
+        assert!(!g.is_quiescable(r));
+        assert!(g.try_quiesce(r).is_none());
+        drop(pin);
+        assert!(g.is_quiescable(r));
+        let q = g.try_quiesce(r).expect("no pins left");
+        assert_eq!(q.region(), r);
+        // Second quiesce loses.
+        assert!(g.try_quiesce(r).is_none());
+        drop(q);
+        assert!(g.try_quiesce(r).is_some());
+    }
+
+    #[test]
+    fn pins_are_counted_and_nest() {
+        let g = RegionGuards::new();
+        let r = VfpgaId(2);
+        let a = g.pin(r);
+        let b = g.pin(r);
+        assert_eq!(g.pins(r), 2);
+        drop(a);
+        assert!(g.try_quiesce(r).is_none(), "one pin still held");
+        drop(b);
+        assert_eq!(g.pins(r), 0);
+        assert!(g.try_quiesce(r).is_some());
+    }
+
+    #[test]
+    fn regions_are_independent() {
+        let g = RegionGuards::new();
+        let _pin = g.pin(VfpgaId(3));
+        assert!(g.try_quiesce(VfpgaId(4)).is_some());
+    }
+
+    #[test]
+    fn quiesce_blocking_waits_for_pin_drain() {
+        let g = RegionGuards::new();
+        let r = VfpgaId(5);
+        let pin = g.pin(r);
+        let g2 = Arc::clone(&g);
+        let waiter = std::thread::spawn(move || {
+            let (guard, waited) = g2.quiesce_blocking(r);
+            drop(guard);
+            waited
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(pin);
+        let waited = waiter.join().unwrap();
+        assert!(waited >= Duration::from_millis(10), "{waited:?}");
+    }
+
+    #[test]
+    fn pin_waits_out_a_quiesce() {
+        let g = RegionGuards::new();
+        let r = VfpgaId(6);
+        let q = g.try_quiesce(r).unwrap();
+        let g2 = Arc::clone(&g);
+        let pinner = std::thread::spawn(move || g2.pin(r));
+        std::thread::sleep(Duration::from_millis(20));
+        drop(q);
+        let pin = pinner.join().unwrap();
+        assert_eq!(pin.region(), r);
+        assert_eq!(g.pins(r), 1, "pin released on guard drop only");
+        drop(pin);
+        assert_eq!(g.pins(r), 0);
+    }
+
+    #[test]
+    fn threaded_pin_churn_never_leaks_state() {
+        let g = RegionGuards::new();
+        let r = VfpgaId(7);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let g = Arc::clone(&g);
+                scope.spawn(move || {
+                    for _ in 0..200 {
+                        let _pin = g.pin(r);
+                    }
+                });
+            }
+        });
+        assert_eq!(g.pins(r), 0);
+        assert!(g.is_quiescable(r));
+    }
+}

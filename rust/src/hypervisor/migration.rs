@@ -2,17 +2,29 @@
 //! ("A migration of user designs between vFPGAs and physical FPGAs is
 //! also intended", Section VI), implemented as a first-class feature.
 //!
-//! Procedure (cold migration, the user's stream is quiesced):
-//! 1. pick a target region on another (or the same) device via the
-//!    placement policy;
-//! 2. retarget the relocatable partial bitfile to the target slot's
+//! Procedure (cold migration — quiesce-based since the lifecycle
+//! refactor):
+//! 1. **win a quiesce** on the lease's current region
+//!    ([`crate::hypervisor::guard`]): in-flight setup/stream pins
+//!    drain first, so a migration can never observe a region
+//!    mid-`Programming` — the race the scheduler used to absorb with
+//!    a retry is structurally impossible;
+//! 2. mark the source `Draining`, pick a target region on another (or
+//!    the same) device via the placement policy;
+//! 3. retarget the relocatable partial bitfile to the target slot's
 //!    frame window ([`crate::hls::flow::DesignFlow::retarget`]);
-//! 3. PR the target region (sanity-checked like any PR);
-//! 4. rebind the lease in the database, move the device files,
-//!    blank the source region and gate its clock.
+//! 4. mark the source `Migrating`, rebind the lease in the database,
+//!    PR the target region (sanity-checked like any PR — the target
+//!    walks `Reserved -> Programming -> Active`);
+//! 5. blank the source (`Migrating -> Free`), move the device files.
+//!
+//! On a failed target PR everything rolls back: the lease re-binds to
+//! the still-configured source, which returns `Migrating -> Active`.
 
 use super::core::{Hypervisor, HypervisorError};
 use super::db::AllocKind;
+use super::guard::QuiesceGuard;
+use crate::fpga::lifecycle::LifecycleState;
 use crate::hls::flow::DesignFlow;
 use crate::util::clock::VirtualTime;
 use crate::util::ids::{AllocationId, UserId, VfpgaId};
@@ -31,13 +43,46 @@ impl Hypervisor {
     /// Migrate a configured vFPGA lease to a new region. `prefer`
     /// optionally pins the target region; otherwise the placement
     /// policy chooses among free regions on *other* devices first.
+    ///
+    /// Blocks until the region quiesce is won (pins drained); the
+    /// wall wait lands in the `sched.preempt.quiesce_wait` histogram.
+    /// The scheduler's preemption path instead pre-wins a
+    /// non-blocking quiesce and calls [`Self::migrate_quiesced`]
+    /// directly, skipping busy victims rather than waiting on them.
     pub fn migrate_vfpga(
         &self,
         alloc_id: AllocationId,
         user: UserId,
         prefer: Option<VfpgaId>,
     ) -> Result<MigrationReport, HypervisorError> {
-        let source = self.check_vfpga_lease(alloc_id, user)?;
+        // Re-resolve after winning: a concurrent relocation may have
+        // moved the lease while we waited for the quiesce.
+        let guard = loop {
+            let source = self.check_vfpga_lease(alloc_id, user)?;
+            let guard = self.quiesce_region(source);
+            if self.check_vfpga_lease(alloc_id, user)? == source {
+                break guard;
+            }
+        };
+        self.migrate_quiesced(alloc_id, user, prefer, guard)
+    }
+
+    /// Migration proper, under an already-won quiesce of the lease's
+    /// current region. The guard is held for the whole relocation and
+    /// released on return (success or failure).
+    pub fn migrate_quiesced(
+        &self,
+        alloc_id: AllocationId,
+        user: UserId,
+        prefer: Option<VfpgaId>,
+        guard: QuiesceGuard,
+    ) -> Result<MigrationReport, HypervisorError> {
+        let source = guard.region();
+        if self.check_vfpga_lease(alloc_id, user)? != source {
+            // The guard covers a region this lease no longer holds
+            // (it was relocated before the caller won the quiesce).
+            return Err(HypervisorError::NoCapacity);
+        }
         let bitstream = self
             .programmed_bitstream(source)
             .ok_or(HypervisorError::WrongKind(alloc_id))?;
@@ -80,30 +125,87 @@ impl Hypervisor {
             (src_fpga, target)
         };
 
+        let src_dev = self.device(src_fpga)?;
+        // The quiesce is won: the source leaves Active for Draining —
+        // this is where "a migration can never observe Programming"
+        // is enforced by type, not by retry.
+        src_dev
+            .fpga
+            .lock()
+            .unwrap()
+            .transition_region(source, LifecycleState::Draining)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+
         let t0 = self.clock.now();
-        let (dst_fpga, dst_node) = {
+        let dst = {
             let db = self.db.lock().unwrap();
-            let d = db
-                .device_of_vfpga(target)
-                .ok_or(HypervisorError::NoCapacity)?;
-            (d.id, d.node)
+            db.device_of_vfpga(target).map(|d| (d.id, d.node))
         };
-        let dst_dev = self.device(dst_fpga)?;
+        let Some((dst_fpga, dst_node)) = dst else {
+            self.abort_drain(src_fpga, source);
+            return Err(HypervisorError::NoCapacity);
+        };
+        let dst_dev = match self.device(dst_fpga) {
+            Ok(d) => d,
+            Err(e) => {
+                self.abort_drain(src_fpga, source);
+                return Err(e);
+            }
+        };
         let dst_slot = dst_dev.slot_of[&target];
         let dst_quarters = {
-            let hw = dst_dev.fpga.lock().unwrap();
-            hw.region(target)
-                .map_err(|e| HypervisorError::Device(e.to_string()))?
-                .shape
-                .quarters()
+            let quarters = dst_dev
+                .fpga
+                .lock()
+                .unwrap()
+                .region(target)
+                .map(|r| r.shape.quarters());
+            match quarters {
+                Ok(q) => q,
+                Err(e) => {
+                    self.abort_drain(src_fpga, source);
+                    return Err(HypervisorError::Device(e.to_string()));
+                }
+            }
         };
 
         // -------- retarget + rebind lease ------------------------
         let moved = DesignFlow::retarget(&bitstream, dst_slot, dst_quarters);
+        // Quiesce the *target* too for the whole relocation: the
+        // moment the lease is rebound below, its owner's pin_current
+        // resolves the target — the quiesce parks that pin until the
+        // target is programmed, so the owner can never stream or
+        // program a half-migrated region. (The PR below uses the
+        // pinless `program_vfpga_at`: taking a pin here would block
+        // on our own guard.)
+        let Some(_target_guard) = self.guards().try_quiesce(target)
+        else {
+            // Someone is mid-operation on a region the DB called
+            // free — treat as a lost race.
+            self.abort_drain(src_fpga, source);
+            return Err(HypervisorError::NoCapacity);
+        };
+        src_dev
+            .fpga
+            .lock()
+            .unwrap()
+            .transition_region(source, LifecycleState::Migrating)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
         {
             // Rebind in the database: swap the vfpga inside the
-            // existing allocation record.
+            // existing allocation record. Re-validate the target
+            // under this lock — a racing allocation may have claimed
+            // it since the candidate snapshot.
             let mut db = self.db.lock().unwrap();
+            if db.vfpga_owner.contains_key(&target) {
+                drop(db);
+                let _ = src_dev
+                    .fpga
+                    .lock()
+                    .unwrap()
+                    .transition_region(source, LifecycleState::Active);
+                return Err(HypervisorError::NoCapacity);
+            }
             let alloc = db
                 .allocations
                 .get_mut(&alloc_id)
@@ -121,37 +223,81 @@ impl Hypervisor {
         self.registries_of(dst_node)
             .create_vfpga_files(target, user)
             .map_err(|e| HypervisorError::Db(e.to_string()))?;
+        // The target is claimed: Free -> Reserved; programming below
+        // drives it Reserved -> Programming -> Active.
+        dst_dev
+            .fpga
+            .lock()
+            .unwrap()
+            .transition_region(target, LifecycleState::Reserved)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
 
         // -------- program target (sanity-checked PR) -------------
-        let program_result = self.program_vfpga(alloc_id, user, &moved);
+        // Pinless variant: the target quiesce above is the exclusion.
+        let program_result = self.program_vfpga_at(target, &moved);
         if let Err(e) = program_result {
             // Roll back the rebind so the lease still points at the
             // (still configured) source region.
-            let mut db = self.db.lock().unwrap();
-            if let Some(alloc) = db.allocations.get_mut(&alloc_id) {
-                alloc.kind = AllocKind::Vfpga(source);
-            }
-            db.vfpga_owner.remove(&target);
-            db.vfpga_owner.insert(source, alloc_id);
-            drop(db);
+            let lease_alive = {
+                let mut db = self.db.lock().unwrap();
+                let alive = match db.allocations.get_mut(&alloc_id) {
+                    Some(alloc) => {
+                        alloc.kind = AllocKind::Vfpga(source);
+                        true
+                    }
+                    // Released out from under us while rebound: do
+                    // not resurrect ownership of the source.
+                    None => false,
+                };
+                db.vfpga_owner.remove(&target);
+                if alive {
+                    db.vfpga_owner.insert(source, alloc_id);
+                }
+                alive
+            };
             self.registries_of(dst_node).remove_vfpga_files(target);
             let _ = dst_dev.controller.lock().unwrap().release(target);
+            let _ = dst_dev
+                .fpga
+                .lock()
+                .unwrap()
+                .transition_region(target, LifecycleState::Free);
+            if lease_alive {
+                // The design never left the source:
+                // Migrating -> Active.
+                let _ = src_dev
+                    .fpga
+                    .lock()
+                    .unwrap()
+                    .transition_region(source, LifecycleState::Active);
+            } else {
+                // The lease was released mid-rebind: nobody owns the
+                // source design any more — blank it so the region is
+                // genuinely reusable, and drop its leftovers.
+                let _ =
+                    src_dev.fpga.lock().unwrap().clear_region(source);
+                let _ =
+                    src_dev.controller.lock().unwrap().release(source);
+                if let Some(src_node) = {
+                    let db = self.db.lock().unwrap();
+                    db.device(src_fpga).map(|d| d.node)
+                } {
+                    self.registries_of(src_node)
+                        .remove_vfpga_files(source);
+                }
+                self.forget_programmed(source);
+            }
+            self.refresh_region_gauges();
             return Err(e);
         }
 
         // -------- blank the source ------------------------------
-        let (src_node, src_dev_id) = {
+        let src_node = {
             let db = self.db.lock().unwrap();
-            // device_of_vfpga no longer finds `source` via ownership —
-            // look through device entries directly.
-            let d = db
-                .devices
-                .values()
-                .find(|d| d.regions.contains(&source))
-                .ok_or(HypervisorError::NoCapacity)?;
-            (d.node, d.id)
+            db.device(src_fpga)
+                .ok_or(HypervisorError::NoCapacity)?
+                .node
         };
-        let src_dev = self.device(src_dev_id)?;
         src_dev
             .fpga
             .lock()
@@ -165,14 +311,30 @@ impl Hypervisor {
             .release(source)
             .map_err(|e| HypervisorError::Device(e.to_string()))?;
         self.registries_of(src_node).remove_vfpga_files(source);
+        // The design now lives at the target; the source's programmed
+        // record must not outlive its tenancy.
+        self.forget_programmed(source);
 
         self.metrics.counter("hv.migrations").inc();
+        self.refresh_region_gauges();
         Ok(MigrationReport {
             from: source,
             to: target,
             moved_across_devices: src_fpga != dst_fpga,
             downtime: self.clock.since(t0),
         })
+    }
+
+    /// Undo a `Draining` mark on an aborted (pre-`Migrating`)
+    /// relocation.
+    fn abort_drain(&self, src_fpga: crate::util::ids::FpgaId, source: VfpgaId) {
+        if let Ok(dev) = self.device(src_fpga) {
+            let _ = dev
+                .fpga
+                .lock()
+                .unwrap()
+                .transition_region(source, LifecycleState::Active);
+        }
     }
 
     fn db_devices<'a>(
@@ -254,6 +416,85 @@ mod tests {
     }
 
     #[test]
+    fn migration_walks_the_lifecycle() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (alloc, source, src_fpga) = programmed_lease(&hv, user);
+        let report = hv.migrate_vfpga(alloc, user, None).unwrap();
+        // Source: ... Active -> Draining -> Migrating -> Free.
+        let src_log = hv
+            .device(src_fpga)
+            .unwrap()
+            .fpga
+            .lock()
+            .unwrap()
+            .transition_log();
+        let src_moves: Vec<(LifecycleState, LifecycleState)> = src_log
+            .iter()
+            .filter(|r| r.region == source)
+            .map(|r| (r.from, r.to))
+            .collect();
+        assert!(src_moves.contains(&(
+            LifecycleState::Active,
+            LifecycleState::Draining
+        )));
+        assert!(src_moves.contains(&(
+            LifecycleState::Draining,
+            LifecycleState::Migrating
+        )));
+        assert!(src_moves.contains(&(
+            LifecycleState::Migrating,
+            LifecycleState::Free
+        )));
+        // A migration never sees Programming on the source: no
+        // source-region Programming record between Draining and Free.
+        let drain_idx = src_moves
+            .iter()
+            .position(|m| m.1 == LifecycleState::Draining)
+            .unwrap();
+        assert!(src_moves[drain_idx..]
+            .iter()
+            .all(|m| m.1 != LifecycleState::Programming));
+        // Target ends Active; every record everywhere is legal.
+        let db = hv.db.lock().unwrap();
+        let dst_fpga = db.device_of_vfpga(report.to).unwrap().id;
+        drop(db);
+        let dst_hw = hv.device(dst_fpga).unwrap().fpga.lock().unwrap();
+        assert_eq!(
+            dst_hw.region(report.to).unwrap().lifecycle,
+            LifecycleState::Active
+        );
+        assert!(dst_hw.transition_log().iter().all(|r| r.is_legal()));
+    }
+
+    #[test]
+    fn migration_waits_out_a_pinned_region() {
+        let hv = std::sync::Arc::new(hv());
+        let user = hv.add_user("alice");
+        let (alloc, source, _) = programmed_lease(&hv, user);
+        // A worker holds a pin (simulating in-flight setup/stream).
+        let pin = hv.guards().pin(source);
+        let hv2 = std::sync::Arc::clone(&hv);
+        let migrator = std::thread::spawn(move || {
+            hv2.migrate_vfpga(alloc, user, None)
+        });
+        // The migration parks on the quiesce; the lease stays put.
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert_eq!(hv.check_vfpga_lease(alloc, user).unwrap(), source);
+        drop(pin);
+        let report = migrator.join().unwrap().unwrap();
+        assert_eq!(report.from, source);
+        assert_ne!(report.to, source);
+        // The quiesce acquisition is on record.
+        assert!(
+            hv.metrics
+                .histogram("sched.preempt.quiesce_wait")
+                .count()
+                >= 1
+        );
+    }
+
+    #[test]
     fn migration_to_pinned_target() {
         let hv = hv();
         let user = hv.add_user("alice");
@@ -285,13 +526,22 @@ mod tests {
         let hv = hv();
         let alice = hv.add_user("alice");
         let bob = hv.add_user("bob");
-        let (alloc_a, _, _) = programmed_lease(&hv, alice);
+        let (alloc_a, source_a, src_fpga) = programmed_lease(&hv, alice);
         let (_, vfpga_b, _, _) =
             hv.alloc_vfpga(bob, ServiceModel::RAaaS).unwrap();
         assert!(matches!(
             hv.migrate_vfpga(alloc_a, alice, Some(vfpga_b)),
             Err(HypervisorError::NoCapacity)
         ));
+        // The rejected migration left the source running (Active) and
+        // released its quiesce.
+        let hw = hv.device(src_fpga).unwrap().fpga.lock().unwrap();
+        assert_eq!(
+            hw.region(source_a).unwrap().lifecycle,
+            LifecycleState::Active
+        );
+        drop(hw);
+        assert!(hv.guards().is_quiescable(source_a));
     }
 
     #[test]

@@ -16,10 +16,14 @@
 //!   the three service models, PR orchestration with sanity checking,
 //!   status calls, energy accounting;
 //! * [`migration`] — design migration between vFPGAs / devices (the
-//!   paper's future-work feature, implemented).
+//!   paper's future-work feature, implemented) — quiesce-based: a
+//!   relocation first wins a region quiesce ([`guard`]), so it can
+//!   never race an in-flight setup;
+//! * [`guard`] — the pin/quiesce layer backing that guarantee.
 
 pub mod core;
 pub mod db;
+pub mod guard;
 pub mod migration;
 pub mod monitor;
 pub mod placement;
@@ -27,6 +31,7 @@ pub mod workload;
 
 pub use self::core::{Hypervisor, HypervisorError, ManagedDevice};
 pub use db::{AllocKind, Allocation, DeviceDb, DeviceEntry};
+pub use guard::{PinGuard, QuiesceGuard, RegionGuards};
 pub use monitor::{DeviceSummary, Monitor};
 pub use placement::{Candidate, PlacementPolicy};
 pub use workload::{CloudWorkload, SessionOutcome, WorkloadReport};

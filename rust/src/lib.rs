@@ -10,7 +10,9 @@
 //!   CLI parsing, logging, wire encoding) since the build is offline.
 //! * [`config`] — typed cluster/board/calibration configuration.
 //! * [`fpga`] — the simulated FPGA device model (boards, regions,
-//!   resources, configuration ports, clock gating, power).
+//!   resources, configuration ports, clock gating, power) with an
+//!   explicit per-region lifecycle state machine (validated
+//!   transitions + transition log, `docs/LIFECYCLE.md`).
 //! * [`bitstream`] — full/partial bitfile format plus the sanity
 //!   checker the paper lists as future work.
 //! * [`pcie`] — PCIe link simulator: shared-bandwidth arbiter, device
@@ -24,16 +26,18 @@
 //! * [`hls`] — the high-level-synthesis flow simulator producing
 //!   partial bitstreams from core specifications.
 //! * [`hypervisor`] — RC3E itself: device database, allocation for
-//!   the three service models, placement, energy, migration.
+//!   the three service models, placement, energy, and quiesce-based
+//!   migration over a region pin/quiesce guard layer.
 //! * [`sched`] — the cluster scheduler: the unified admission API
 //!   (`AdmissionRequest` → capability `Lease` with unguessable
 //!   tokens, atomic gang grants) above the hypervisor with weighted
 //!   fair-share queueing + aging, per-tenant quotas, model-aware
-//!   time-boxed reservations, preemption-by-migration and usage
-//!   accounting.
+//!   time-boxed reservations, quiesce-based preemption (atomic gang
+//!   relocation, spread-vs-pack policy) and usage accounting.
 //! * [`middleware`] — management-node RPC server, node agents, client
 //!   library and the CLI command surface.
-//! * [`batch`] — batch system for long-running unattended jobs.
+//! * [`batch`] — batch system for long-running unattended jobs, with
+//!   an inline and a PR/stream-pipelined execution mode.
 //! * [`vm`] — virtual-machine allocation extension (RSaaS).
 //! * [`service`] — RSaaS / RAaaS / BAaaS façades.
 //! * [`metrics`] — counters, histograms and report tables.

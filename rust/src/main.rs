@@ -461,8 +461,9 @@ fn cmd_energy(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// `rc3e sched` — queue snapshot plus the admission-wait histogram
-/// and queue-depth gauge served by the `monitor` RPC.
+/// `rc3e sched` — queue snapshot plus the admission-wait histogram,
+/// queue-depth gauge and region-lifecycle telemetry served by the
+/// `monitor` RPC.
 fn cmd_sched(args: &Args) -> Result<(), String> {
     let mut client = connect(args)?;
     let status = client.sched_status().map_err(|e| e.to_string())?;
@@ -481,6 +482,27 @@ fn cmd_sched(args: &Args) -> Result<(), String> {
         t.wait.p50_ms,
         t.wait.p99_ms,
         t.wait.max_ms
+    );
+    println!(
+        "quiesce wait (wall): n={} mean={:.1} ms p50<={:.1} ms \
+         p99<={:.1} ms max={:.1} ms; preempt races absorbed: {}",
+        t.quiesce_wait.count,
+        t.quiesce_wait.mean_ms,
+        t.quiesce_wait.p50_ms,
+        t.quiesce_wait.p99_ms,
+        t.quiesce_wait.max_ms,
+        t.preempt_raced
+    );
+    let l = &t.lifecycle;
+    println!(
+        "regions: free {} reserved {} programming {} active {} \
+         draining {} migrating {}",
+        l.free,
+        l.reserved,
+        l.programming,
+        l.active,
+        l.draining,
+        l.migrating
     );
     Ok(())
 }

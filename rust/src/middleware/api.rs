@@ -650,6 +650,11 @@ pub struct StatusResponse {
     pub regions_total: u64,
     pub regions_configured: u64,
     pub regions_clocked: u64,
+    /// Regions quiesced ahead of relocation/teardown (lifecycle state
+    /// `draining`; absent on pre-lifecycle servers reads as 0).
+    pub regions_draining: u64,
+    /// Regions whose design is being relocated (`migrating`).
+    pub regions_migrating: u64,
     pub power_w: f64,
 }
 
@@ -662,6 +667,8 @@ impl StatusResponse {
             regions_total: st.regions_total as u64,
             regions_configured: st.regions_configured as u64,
             regions_clocked: st.regions_clocked as u64,
+            regions_draining: st.regions_draining as u64,
+            regions_migrating: st.regions_migrating as u64,
             power_w: st.power_w,
         }
     }
@@ -683,6 +690,8 @@ impl StatusResponse {
                 Json::from(self.regions_configured),
             ),
             ("regions_clocked", Json::from(self.regions_clocked)),
+            ("regions_draining", Json::from(self.regions_draining)),
+            ("regions_migrating", Json::from(self.regions_migrating)),
             ("power_w", Json::from(self.power_w)),
         ])
     }
@@ -695,6 +704,10 @@ impl StatusResponse {
             regions_total: want_u64(p, "regions_total")?,
             regions_configured: want_u64(p, "regions_configured")?,
             regions_clocked: want_u64(p, "regions_clocked")?,
+            regions_draining: opt_u64(p, "regions_draining")
+                .unwrap_or(0),
+            regions_migrating: opt_u64(p, "regions_migrating")
+                .unwrap_or(0),
             power_w: want_f64(p, "power_w")?,
         })
     }
@@ -1435,13 +1448,63 @@ impl WaitStats {
     }
 }
 
+/// Per-lifecycle-state region occupancy (the `region.state.*`
+/// gauges), carried by the `monitor` response so the `draining` /
+/// `migrating` states are operator-visible over the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LifecycleOccupancy {
+    pub free: i64,
+    pub reserved: i64,
+    pub programming: i64,
+    pub active: i64,
+    pub draining: i64,
+    pub migrating: i64,
+}
+
+impl LifecycleOccupancy {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("free", Json::from(self.free)),
+            ("reserved", Json::from(self.reserved)),
+            ("programming", Json::from(self.programming)),
+            ("active", Json::from(self.active)),
+            ("draining", Json::from(self.draining)),
+            ("migrating", Json::from(self.migrating)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> LifecycleOccupancy {
+        let field = |k: &str| {
+            p.get(k).as_f64().map(|v| v as i64).unwrap_or(0)
+        };
+        LifecycleOccupancy {
+            free: field("free"),
+            reserved: field("reserved"),
+            programming: field("programming"),
+            active: field("active"),
+            draining: field("draining"),
+            migrating: field("migrating"),
+        }
+    }
+}
+
 /// Scheduler telemetry block in the `monitor` response (ROADMAP item:
-/// the admission-wait histogram and queue-depth gauge, exposed).
+/// the admission-wait histogram and queue-depth gauge, exposed — plus
+/// the lifecycle refactor's quiesce-wait histogram, raced counter and
+/// per-state occupancy).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedTelemetry {
     pub queue_depth: i64,
     pub active_grants: i64,
     pub wait: WaitStats,
+    /// Wall time relocations spent winning region quiesces
+    /// (`sched.preempt.quiesce_wait`).
+    pub quiesce_wait: WaitStats,
+    /// Times the defense-in-depth preemption retry fired
+    /// (`sched.preempt.raced`) — structurally 0.
+    pub preempt_raced: u64,
+    /// Region occupancy by lifecycle state.
+    pub lifecycle: LifecycleOccupancy,
 }
 
 impl SchedTelemetry {
@@ -1450,6 +1513,9 @@ impl SchedTelemetry {
             ("queue_depth", Json::from(self.queue_depth)),
             ("active_grants", Json::from(self.active_grants)),
             ("wait", self.wait.to_json()),
+            ("quiesce_wait", self.quiesce_wait.to_json()),
+            ("preempt_raced", Json::from(self.preempt_raced)),
+            ("lifecycle", self.lifecycle.to_json()),
         ])
     }
 
@@ -1460,10 +1526,23 @@ impl SchedTelemetry {
         let grants = p.get("active_grants").as_f64().ok_or_else(|| {
             ApiError::bad_request("missing field 'active_grants'")
         })?;
+        // Lifecycle-era fields are tolerated absent (a one-version-
+        // older server) and read as empty telemetry.
+        let quiesce_wait = WaitStats::from_json(p.get("quiesce_wait"))
+            .unwrap_or(WaitStats {
+                count: 0,
+                mean_ms: 0.0,
+                p50_ms: 0.0,
+                p99_ms: 0.0,
+                max_ms: 0.0,
+            });
         Ok(SchedTelemetry {
             queue_depth: depth as i64,
             active_grants: grants as i64,
             wait: WaitStats::from_json(p.get("wait"))?,
+            quiesce_wait,
+            preempt_raced: opt_u64(p, "preempt_raced").unwrap_or(0),
+            lifecycle: LifecycleOccupancy::from_json(p.get("lifecycle")),
         })
     }
 }

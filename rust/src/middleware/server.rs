@@ -503,17 +503,11 @@ fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
             format!("unknown core '{}'", req.core),
         )
     })?;
-    let vfpga = inner
-        .hv
-        .check_vfpga_lease(req.alloc, req.user)
-        .map_err(ApiError::from)?;
-    let placed = inner
-        .hv
-        .retarget_for(vfpga, bitfile)
-        .map_err(ApiError::from)?;
+    // Retarget + PR under one region pin: a relocation cannot slip
+    // between placement resolution and programming.
     let d = inner
         .hv
-        .program_vfpga(req.alloc, req.user, &placed)
+        .program_retargeted(req.alloc, req.user, bitfile)
         .map_err(ApiError::from)?;
     Ok(ProgramCoreResponse {
         programmed: req.core,
@@ -640,10 +634,17 @@ fn h_monitor(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let hv = &ctx.inner.hv;
     // One monitoring sweep over every device + report, plus the
     // scheduler's admission telemetry (ROADMAP item: expose the
-    // `sched.wait` histogram and queue-depth gauge over the wire).
+    // `sched.wait` histogram and queue-depth gauge over the wire) and
+    // the region-lifecycle telemetry (per-state occupancy gauges,
+    // quiesce-wait histogram, raced counter).
     let mut mon = crate::hypervisor::Monitor::new();
     mon.sample_all(hv);
+    hv.refresh_region_gauges();
     let wait = hv.metrics.histogram("sched.wait");
+    let quiesce_wait =
+        hv.metrics.histogram("sched.preempt.quiesce_wait");
+    let state_gauge =
+        |name: &str| hv.metrics.gauge(&format!("region.state.{name}")).get();
     Ok(MonitorResponse {
         devices: mon.to_json(),
         cloud_utilization: mon.cloud_utilization(),
@@ -654,6 +655,19 @@ fn h_monitor(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
                 .gauge("sched.active_grants")
                 .get(),
             wait: WaitStats::from_histogram(&wait),
+            quiesce_wait: WaitStats::from_histogram(&quiesce_wait),
+            preempt_raced: hv
+                .metrics
+                .counter("sched.preempt.raced")
+                .get(),
+            lifecycle: LifecycleOccupancy {
+                free: state_gauge("free"),
+                reserved: state_gauge("reserved"),
+                programming: state_gauge("programming"),
+                active: state_gauge("active"),
+                draining: state_gauge("draining"),
+                migrating: state_gauge("migrating"),
+            },
         },
     }
     .to_json())
@@ -1285,5 +1299,27 @@ mod tests {
         assert_eq!(sched.get("queue_depth").as_u64(), Some(0));
         // The grant above recorded one admission wait sample.
         assert!(sched.get("wait").get("count").as_u64().unwrap() >= 1);
+        // Lifecycle telemetry: the allocated-but-unprogrammed region
+        // reads Reserved; nothing drains or migrates at rest; the
+        // defense-in-depth raced counter is 0.
+        let lifecycle = sched.get("lifecycle");
+        assert_eq!(lifecycle.get("reserved").as_u64(), Some(1));
+        assert_eq!(lifecycle.get("draining").as_u64(), Some(0));
+        assert_eq!(lifecycle.get("migrating").as_u64(), Some(0));
+        assert_eq!(sched.get("preempt_raced").as_u64(), Some(0));
+        assert!(sched
+            .get("quiesce_wait")
+            .get("count")
+            .as_u64()
+            .is_some());
+        // The same states are visible per device in `status`.
+        let st = c
+            .call(
+                "status",
+                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
+            )
+            .unwrap();
+        assert_eq!(st.get("regions_draining").as_u64(), Some(0));
+        assert_eq!(st.get("regions_migrating").as_u64(), Some(0));
     }
 }

@@ -248,7 +248,10 @@ impl Lease {
         self.program_member(0, bitfile)
     }
 
-    /// Program gang member `idx`.
+    /// Program gang member `idx`. The member's region is pinned for
+    /// the whole retarget + PR span, so a quiesce-based relocation
+    /// (preemption, explicit migrate, release) cannot interleave —
+    /// the placement resolved here is the placement programmed.
     pub fn program_member(
         &self,
         idx: usize,
@@ -258,7 +261,7 @@ impl Lease {
             HypervisorError::Db(format!("lease has no member {idx}"))
         })?;
         let hv = self.sched.hv();
-        let vfpga = hv.check_vfpga_lease(alloc, self.tenant)?;
+        let (_pin, vfpga) = hv.pin_current(alloc, self.tenant)?;
         let placed = hv.retarget_for(vfpga, bitfile)?;
         hv.program_vfpga(alloc, self.tenant, &placed)
     }
@@ -282,7 +285,10 @@ impl Lease {
         self.stream_member(0, cfg)
     }
 
-    /// Stream through gang member `idx` via the RC2F host API.
+    /// Stream through gang member `idx` via the RC2F host API. The
+    /// region is pinned for the whole session, so the lease cannot be
+    /// relocated out from under the stream — preemption skips pinned
+    /// victims instead of racing them.
     pub fn stream_member(
         &self,
         idx: usize,
@@ -292,7 +298,7 @@ impl Lease {
             HypervisorError::Db(format!("lease has no member {idx}"))
         })?;
         let hv = self.sched.hv();
-        let vfpga = hv.check_vfpga_lease(alloc, self.tenant)?;
+        let (_pin, vfpga) = hv.pin_current(alloc, self.tenant)?;
         let fpga = {
             let db = hv.db.lock().unwrap();
             db.device_of_vfpga(vfpga)
@@ -310,14 +316,16 @@ impl Lease {
 
     /// Stream through the primary member's device link directly (the
     /// provider-side path BAaaS invocations and batch workers use).
-    /// Placement is re-resolved through the lease, so a preemption
-    /// that relocated the lease streams through the new device.
+    /// Placement is resolved through the lease and the region pinned
+    /// for the whole stream: a migration can no longer slip between
+    /// resolution and streaming.
     pub fn stream_direct(
         &self,
         cfg: &StreamConfig,
     ) -> Result<StreamOutcome, HypervisorError> {
         let hv = self.sched.hv();
-        let vfpga = hv.check_vfpga_lease(self.alloc(), self.tenant)?;
+        let (_pin, vfpga) =
+            hv.pin_current(self.alloc(), self.tenant)?;
         hv.stream_runner_for(vfpga)?
             .run(cfg)
             .map_err(HypervisorError::Db)
@@ -354,11 +362,13 @@ impl Drop for Lease {
 /// attempt ran, retry exactly once. Any other failure — or a clean
 /// failure without a migration — propagates unchanged.
 ///
-/// This is the quiesce/pin stopgap the ROADMAP describes: a
-/// preemption between setup steps never corrupts state, it surfaces
-/// as a clean error; callers on unattended paths (BAaaS `invoke`,
-/// batch workers) should absorb one such race instead of failing the
-/// job to the caller.
+/// **Defense in depth only.** Since the region lifecycle refactor,
+/// setup and streaming hold a region pin and every relocation must
+/// win a quiesce first, so the race this helper absorbs is
+/// structurally impossible — a triggered retry means the pin/quiesce
+/// invariant broke somewhere. Each trigger bumps the
+/// `sched.preempt.raced` counter, which the tier-1 invariants suite
+/// asserts stays 0.
 pub fn with_preemption_retry<T>(
     lease: &Lease,
     mut attempt: impl FnMut() -> Result<T, HypervisorError>,
@@ -369,8 +379,16 @@ pub fn with_preemption_retry<T>(
             if is_clean_setup_failure(&e)
                 && lease.migrations() > migrations_before =>
         {
-            log::info!(
-                "lease {} preempted mid-setup ({e}); retrying once",
+            // Should be unreachable: count it loudly.
+            lease
+                .sched
+                .hv()
+                .metrics
+                .counter("sched.preempt.raced")
+                .inc();
+            log::warn!(
+                "lease {} raced a relocation mid-setup ({e}) despite \
+                 the pin/quiesce guards; retrying once",
                 lease.token()
             );
             attempt()
@@ -507,6 +525,11 @@ mod tests {
         });
         assert_eq!(r.unwrap(), 42);
         assert_eq!(calls, 2, "exactly one retry");
+        // The (simulated) race is counted — real runs keep this at 0.
+        assert_eq!(
+            s.hv().metrics.counter("sched.preempt.raced").get(),
+            1
+        );
         // A terminal (non-clean) failure never retries.
         let mut calls = 0;
         let r: Result<(), _> = with_preemption_retry(&lease, || {

@@ -16,7 +16,10 @@
 //!   exclusive physical leases are not reservable);
 //! * [`preempt`] — relocation of lower-class leases via
 //!   [`crate::hypervisor::migration`] so interactive requests land on
-//!   a full cluster;
+//!   a full cluster. Quiesce-based: only victims whose region quiesce
+//!   is immediately winnable are displaced (in-flight setup/stream
+//!   pins are never raced), gang leases relocate atomically, and the
+//!   landing spot follows a spread-vs-pack [`PreemptPolicy`] knob;
 //! * [`accounting`] — per-tenant usage ledger charging device-seconds
 //!   and energy (priced from the [`crate::fpga::power`] model).
 //!
@@ -62,6 +65,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::ServiceModel;
 use crate::fpga::board::BoardKind;
+use crate::hypervisor::migration::MigrationReport;
 use crate::hypervisor::{Hypervisor, HypervisorError};
 use crate::util::clock::VirtualTime;
 use crate::util::ids::{
@@ -76,7 +80,9 @@ pub use lease::{
     MemberPlacement,
 };
 pub use persist::PersistedState;
-pub use preempt::{select_victim, victim_order, VictimInfo};
+pub use preempt::{
+    choose_target, select_victim, victim_order, PreemptPolicy, VictimInfo,
+};
 pub use queue::{AdmissionQueue, QueueEntry, AGING_BOOST_GRANTS};
 pub use quota::{QuotaBook, QuotaDenial, TenantQuota, PHYSICAL_EQUIV_UNITS};
 pub use reservation::{Reservation, ReservationBook};
@@ -228,6 +234,10 @@ struct LeaseMeta {
     /// Member allocations, primary first.
     members: Vec<AllocationId>,
     wait: VirtualTime,
+    /// The admission's co-location constraint — relocation must
+    /// preserve it (a scattered multi-core design is broken, not
+    /// relocated).
+    co_located: bool,
 }
 
 struct SchedState {
@@ -340,6 +350,8 @@ pub struct Scheduler {
     /// two concurrent writers could land out of order and persist a
     /// stale snapshot last.
     persist_written: Mutex<u64>,
+    /// Where preemption relocates victims (spread-vs-pack knob).
+    preempt_policy: Mutex<PreemptPolicy>,
 }
 
 /// Device-seconds `user` has consumed so far: the released total in
@@ -397,7 +409,17 @@ impl Scheduler {
             persist_path: Mutex::new(None),
             persist_seq: AtomicU64::new(1),
             persist_written: Mutex::new(0),
+            preempt_policy: Mutex::new(PreemptPolicy::default()),
         })
+    }
+
+    /// Set where preemption relocates its victims (pack vs spread).
+    pub fn set_preempt_policy(&self, policy: PreemptPolicy) {
+        *self.preempt_policy.lock().unwrap() = policy;
+    }
+
+    pub fn preempt_policy(&self) -> PreemptPolicy {
+        *self.preempt_policy.lock().unwrap()
     }
 
     // ----------------------------------------------- topology facts
@@ -980,6 +1002,7 @@ impl Scheduler {
                 class: spec.class,
                 members: vec![alloc],
                 wait: VirtualTime::ZERO,
+                co_located: false,
             },
         );
         Ok(token)
@@ -1226,8 +1249,9 @@ impl Scheduler {
             // region. Otherwise migrating a victim is futile
             // downtime: either free-but-reserved regions already
             // exist, or the one region a preemption frees is owed to
-            // a reservation holder. Gangs never preempt — relocating
-            // N victims atomically is the quiesce/pin follow-up.
+            // a reservation holder. Gang *requests* never preempt;
+            // gang *victims* are relocated atomically when no single
+            // victim suffices (try_preempt_gang_locked).
             if spec.regions != 1
                 || !spec.allow_preempt
                 || raw_free > 0
@@ -1275,6 +1299,7 @@ impl Scheduler {
                 class: spec.class,
                 members: members.iter().map(|m| m.0).collect(),
                 wait,
+                co_located: spec.co_located,
             },
         );
         Ok(token)
@@ -1444,6 +1469,14 @@ impl Scheduler {
     /// Relocate the best lower-class victim via migration so a region
     /// on a device serving `model` frees up. Returns true on success.
     ///
+    /// Only *quiescable* victims are eligible: the scheduler wins a
+    /// non-blocking region quiesce before any state is touched, so a
+    /// victim with an in-flight setup or stream pin is skipped, never
+    /// raced — the old retry-on-race path is structurally dead (the
+    /// `sched.preempt.raced` counter stays 0). Single leases are
+    /// tried first (cheapest displacement); if none works, a whole
+    /// gang lease is relocated atomically.
+    ///
     /// Cost model: the migration downtime is billed to `preemptor`'s
     /// tenant ([`UsageLedger::charge_preemption`]), and the victim's
     /// accrual clock is advanced past the outage so the displaced
@@ -1455,10 +1488,18 @@ impl Scheduler {
         model: ServiceModel,
         class: RequestClass,
     ) -> bool {
+        let policy = self.preempt_policy();
         let candidates: Vec<VictimInfo> = st
             .grants
             .values()
             .filter(|g| g.class < class)
+            // Gang members never move one at a time: whole gangs
+            // relocate atomically below.
+            .filter(|g| {
+                st.leases
+                    .get(&g.token)
+                    .map_or(true, |m| m.members.len() == 1)
+            })
             .filter_map(|g| match g.target {
                 GrantTarget::Vfpga(v, f, _) => {
                     let serves = self
@@ -1483,52 +1524,32 @@ impl Scheduler {
             })
             .collect();
         for victim in victim_order(&candidates) {
-            // Pick the migration target ourselves: a free region on a
-            // *different* device that serves the victim's own model.
-            // The hypervisor's default selection is model-aware but
-            // falls back to a same-device move, which frees nothing
-            // net — useless for preemption.
-            let target = {
-                let db = self.hv.db.lock().unwrap();
-                self.devices
-                    .iter()
-                    .filter(|d| {
-                        d.fpga != victim.fpga
-                            && d.models.contains(&victim.model)
-                    })
-                    .find_map(|d| db.free_regions(d.fpga).first().copied())
+            // Win the quiesce first — or skip the victim. All further
+            // state changes happen under the guard.
+            let Some(guard) = self.hv.try_quiesce_region(victim.vfpga)
+            else {
+                continue;
             };
-            let Some(target) = target else { continue };
-            match self
-                .hv
-                .migrate_vfpga(victim.alloc, victim.user, Some(target))
-            {
+            // Policy-ordered target on a *different* device serving
+            // the victim's own model (a same-device move frees
+            // nothing net — useless for preemption).
+            let Some(target) = self.preempt_target_locked(
+                policy,
+                victim.model,
+                &[victim.fpga],
+            ) else {
+                continue;
+            };
+            match self.hv.migrate_quiesced(
+                victim.alloc,
+                victim.user,
+                Some(target),
+                guard,
+            ) {
                 Ok(report) => {
-                    self.rebind_grant_locked(st, victim.alloc, report.to);
-                    // Charge the outage to the preemptor, skip the
-                    // victim's accrual clock over it (migrate_vfpga
-                    // advanced the virtual clock by the downtime, so
-                    // the victim's lease would otherwise be billed
-                    // for time it was dark).
-                    let now_ns = self.hv.clock.now().0;
-                    let mut victim_rate_w = 0.0;
-                    let mut victim_units = 1u64;
-                    if let Some(g) = st.grants.get_mut(&victim.alloc) {
-                        g.started_ns = g
-                            .started_ns
-                            .saturating_add(report.downtime.0)
-                            .min(now_ns);
-                        victim_rate_w = g.charge_w;
-                        victim_units = g.units;
-                    }
-                    st.ledger.charge_preemption(
-                        preemptor,
-                        report.downtime.as_secs_f64()
-                            * victim_units as f64,
-                        victim_rate_w,
+                    self.settle_preemption_locked(
+                        st, preemptor, &victim, &report,
                     );
-                    st.ledger.row_mut(victim.user).preempted += 1;
-                    self.hv.metrics.counter("sched.preemptions").inc();
                     log::info!(
                         "preempted {} ({} -> {}) for an incoming {} request",
                         victim.alloc,
@@ -1546,7 +1567,327 @@ impl Scheduler {
                 }
             }
         }
+        self.try_preempt_gang_locked(st, preemptor, model, class, policy)
+    }
+
+    /// Post-migration bookkeeping for one displaced member: rebind
+    /// the tracked grant, skip the victim's accrual clock over the
+    /// outage (the migration advanced the virtual clock, so the lease
+    /// would otherwise be billed for time it was dark), and charge
+    /// the downtime to the preemptor.
+    fn settle_preemption_locked(
+        &self,
+        st: &mut SchedState,
+        preemptor: UserId,
+        victim: &VictimInfo,
+        report: &MigrationReport,
+    ) {
+        self.rebind_grant_locked(st, victim.alloc, report.to);
+        let now_ns = self.hv.clock.now().0;
+        let mut victim_rate_w = 0.0;
+        let mut victim_units = 1u64;
+        if let Some(g) = st.grants.get_mut(&victim.alloc) {
+            g.started_ns = g
+                .started_ns
+                .saturating_add(report.downtime.0)
+                .min(now_ns);
+            victim_rate_w = g.charge_w;
+            victim_units = g.units;
+        }
+        st.ledger.charge_preemption(
+            preemptor,
+            report.downtime.as_secs_f64() * victim_units as f64,
+            victim_rate_w,
+        );
+        st.ledger.row_mut(victim.user).preempted += 1;
+        self.hv.metrics.counter("sched.preemptions").inc();
+    }
+
+    /// Policy-ordered relocation target for a displaced design: a
+    /// free region on a device serving the victim's own model,
+    /// excluding the `avoid` devices being vacated (the displacement
+    /// must free capacity there, not shuffle it).
+    fn preempt_target_locked(
+        &self,
+        policy: PreemptPolicy,
+        victim_model: ServiceModel,
+        avoid: &[FpgaId],
+    ) -> Option<VfpgaId> {
+        let db = self.hv.db.lock().unwrap();
+        let rows: Vec<(FpgaId, Vec<VfpgaId>)> = self
+            .devices
+            .iter()
+            .filter(|d| {
+                !avoid.contains(&d.fpga)
+                    && d.models.contains(&victim_model)
+            })
+            .map(|d| (d.fpga, db.free_regions(d.fpga)))
+            .collect();
+        choose_target(policy, &rows)
+    }
+
+    /// Relocate a whole lower-class gang lease atomically so capacity
+    /// on `model`'s devices frees up. Every member is quiesced
+    /// two-phase in the fixed `(fpga, vfpga)` order, then migrated
+    /// all-or-nothing with rollback (see [`Self::relocate_members`]).
+    fn try_preempt_gang_locked(
+        &self,
+        st: &mut SchedState,
+        preemptor: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+        policy: PreemptPolicy,
+    ) -> bool {
+        let mut gangs: Vec<(u64, bool, Vec<VictimInfo>)> = Vec::new();
+        for meta in st.leases.values() {
+            if meta.members.len() < 2 || meta.class >= class {
+                continue;
+            }
+            let mut members = Vec::with_capacity(meta.members.len());
+            let mut frees_for_model = false;
+            for alloc in &meta.members {
+                let Some(g) = st.grants.get(alloc) else { break };
+                let GrantTarget::Vfpga(v, f, _) = g.target else {
+                    break;
+                };
+                if self
+                    .devices
+                    .iter()
+                    .any(|d| d.fpga == f && d.models.contains(&model))
+                {
+                    frees_for_model = true;
+                }
+                members.push(VictimInfo {
+                    alloc: g.alloc,
+                    user: g.user,
+                    class: g.class,
+                    model: g.model,
+                    vfpga: v,
+                    fpga: f,
+                    started_ns: g.started_ns,
+                });
+            }
+            if members.len() == meta.members.len() && frees_for_model {
+                let youngest = members
+                    .iter()
+                    .map(|m| m.started_ns)
+                    .max()
+                    .unwrap_or(0);
+                gangs.push((youngest, meta.co_located, members));
+            }
+        }
+        // Youngest gang first: least accumulated work is displaced.
+        gangs.sort_by_key(|(youngest, _, _)| std::cmp::Reverse(*youngest));
+        for (_, co_located, members) in gangs {
+            match self.relocate_members(&members, policy, co_located) {
+                Ok(done) => {
+                    for (victim, report) in &done {
+                        self.settle_preemption_locked(
+                            st, preemptor, victim, report,
+                        );
+                    }
+                    self.hv.metrics.counter("sched.preempt.gang").inc();
+                    log::info!(
+                        "atomically relocated a {}-member gang for an \
+                         incoming {} request",
+                        done.len(),
+                        class.name()
+                    );
+                    return true;
+                }
+                Err(e) => {
+                    log::debug!("gang not relocatable: {e}");
+                }
+            }
+        }
         false
+    }
+
+    /// Atomically relocate a set of lease members: phase 1 wins a
+    /// non-blocking quiesce on every region in ascending
+    /// `(fpga, vfpga)` order — the same fixed global order gang
+    /// admission claims in, so concurrent relocations never
+    /// hold-and-wait in conflicting orders; phase 2 migrates each
+    /// member to a policy-chosen target off the vacated devices,
+    /// rolling every completed move back on the first failure so no
+    /// partial relocation is ever observable.
+    fn relocate_members(
+        &self,
+        members: &[VictimInfo],
+        policy: PreemptPolicy,
+        co_located: bool,
+    ) -> Result<Vec<(VictimInfo, MigrationReport)>, SchedError> {
+        let mut ordered: Vec<VictimInfo> = members.to_vec();
+        ordered.sort_by_key(|m| (m.fpga, m.vfpga));
+        // Phase 1: all quiesces or nothing (guards release on drop).
+        let mut guards = Vec::with_capacity(ordered.len());
+        for m in &ordered {
+            match self.hv.try_quiesce_region(m.vfpga) {
+                Some(g) => guards.push(g),
+                None => return Err(SchedError::NoCapacity),
+            }
+        }
+        // The vacated devices must end up net-free.
+        let avoid: Vec<FpgaId> =
+            ordered.iter().map(|m| m.fpga).collect();
+        // A co-located gang must land co-located: pre-pick one device
+        // with room for the whole gang and hand out its free regions
+        // in order (a scattered multi-core design would be broken,
+        // not relocated).
+        let fixed_targets: Option<Vec<VfpgaId>> = if co_located
+            && !ordered.is_empty()
+        {
+            let model = ordered[0].model;
+            let rows: Vec<(FpgaId, Vec<VfpgaId>)> = {
+                let db = self.hv.db.lock().unwrap();
+                self.devices
+                    .iter()
+                    .filter(|d| {
+                        !avoid.contains(&d.fpga)
+                            && d.models.contains(&model)
+                    })
+                    .map(|d| (d.fpga, db.free_regions(d.fpga)))
+                    .filter(|(_, free)| free.len() >= ordered.len())
+                    .collect()
+            };
+            let Some(first) = choose_target(policy, &rows) else {
+                return Err(SchedError::NoCapacity);
+            };
+            let row = rows
+                .into_iter()
+                .find(|(_, free)| free.contains(&first))
+                .expect("chosen target came from these rows");
+            Some(row.1.into_iter().take(ordered.len()).collect())
+        } else {
+            None
+        };
+        // Phase 2: migrate under the held guards.
+        let mut done: Vec<(VictimInfo, MigrationReport)> = Vec::new();
+        for (i, (m, guard)) in
+            ordered.iter().zip(guards).enumerate()
+        {
+            let target = match &fixed_targets {
+                Some(targets) => Some(targets[i]),
+                None => {
+                    self.preempt_target_locked(policy, m.model, &avoid)
+                }
+            };
+            let Some(target) = target else {
+                self.rollback_relocations(&done);
+                return Err(SchedError::NoCapacity);
+            };
+            match self.hv.migrate_quiesced(
+                m.alloc,
+                m.user,
+                Some(target),
+                guard,
+            ) {
+                Ok(report) => done.push((m.clone(), report)),
+                Err(e) => {
+                    log::debug!(
+                        "gang member {} not movable: {e}",
+                        m.alloc
+                    );
+                    self.rollback_relocations(&done);
+                    return Err(SchedError::NoCapacity);
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// Best-effort rollback of a partial gang relocation: move the
+    /// already-relocated members home, newest first. Quiesce
+    /// acquisition is bounded (the caller holds the scheduler state
+    /// lock — parking it on an arbitrary-length stream pin would
+    /// stall every admission); a member whose quiesce never frees up
+    /// stays at its new — still valid — placement, logged loudly.
+    fn rollback_relocations(
+        &self,
+        done: &[(VictimInfo, MigrationReport)],
+    ) {
+        for (m, report) in done.iter().rev() {
+            let mut guard = None;
+            for _ in 0..256 {
+                match self.hv.try_quiesce_region(report.to) {
+                    Some(g) => {
+                        guard = Some(g);
+                        break;
+                    }
+                    None => std::thread::yield_now(),
+                }
+            }
+            let Some(guard) = guard else {
+                log::warn!(
+                    "gang rollback of {} skipped: {} stayed pinned; \
+                     the member remains at its new placement",
+                    m.alloc,
+                    report.to
+                );
+                continue;
+            };
+            if let Err(e) = self.hv.migrate_quiesced(
+                m.alloc,
+                m.user,
+                Some(report.from),
+                guard,
+            ) {
+                log::warn!(
+                    "gang rollback of {} to {} failed: {e}",
+                    m.alloc,
+                    report.from
+                );
+            }
+        }
+    }
+
+    /// Atomically relocate every member of a lease (gang or single)
+    /// to new regions — two-phase quiesce in the fixed
+    /// `(fpga, vfpga)` order, all-or-nothing. Operator surface for
+    /// draining a device; preemption uses the same machinery
+    /// internally. The lease and its token survive; only placements
+    /// change (and the members' migration counters advance).
+    pub fn relocate_gang(
+        &self,
+        token: LeaseToken,
+    ) -> Result<Vec<MigrationReport>, SchedError> {
+        let policy = self.preempt_policy();
+        let mut st = self.state.lock().unwrap();
+        let meta = st
+            .leases
+            .get(&token)
+            .cloned()
+            .ok_or(SchedError::UnknownLease)?;
+        let mut members = Vec::with_capacity(meta.members.len());
+        for alloc in &meta.members {
+            let g = st
+                .grants
+                .get(alloc)
+                .ok_or(SchedError::UnknownGrant(*alloc))?;
+            match g.target {
+                GrantTarget::Vfpga(v, f, _) => members.push(VictimInfo {
+                    alloc: g.alloc,
+                    user: g.user,
+                    class: g.class,
+                    model: g.model,
+                    vfpga: v,
+                    fpga: f,
+                    started_ns: g.started_ns,
+                }),
+                GrantTarget::Physical(_, _) => {
+                    return Err(SchedError::Unsatisfiable(
+                        "physical leases do not relocate".to_string(),
+                    ))
+                }
+            }
+        }
+        let done =
+            self.relocate_members(&members, policy, meta.co_located)?;
+        for (m, report) in &done {
+            self.rebind_grant_locked(&mut st, m.alloc, report.to);
+        }
+        self.update_gauges_locked(&st);
+        Ok(done.into_iter().map(|(_, r)| r).collect())
     }
 
     /// Grant queued requests while capacity and quotas allow,
@@ -2506,6 +2847,184 @@ mod tests {
         ));
         assert!(s.lease_handle(token).is_none());
         let _keepalive = lease.into_token();
+    }
+
+    #[test]
+    fn pinned_victims_are_skipped_never_raced() {
+        let s = sched_on(&ClusterConfig::sched_testbed());
+        let batcher = s.hv().add_user("batcher");
+        let vip = s.hv().add_user("vip");
+        let grants = crate::testing::fill_batch_leases(&s, batcher, 4);
+        // Pin every victim region: all of them are mid-"setup" as far
+        // as the quiesce layer is concerned.
+        let mut pins: Vec<_> = grants
+            .iter()
+            .map(|g| s.hv().guards().pin(g.vfpga().unwrap()))
+            .collect();
+        // No quiescable victim -> the interactive request fails fast
+        // instead of racing anyone.
+        assert!(matches!(
+            s.admit(&one(vip, ServiceModel::RAaaS, RequestClass::Interactive)),
+            Err(SchedError::NoCapacity)
+        ));
+        assert_eq!(s.hv().metrics.counter("sched.preemptions").get(), 0);
+        // Unpin one region: exactly that victim is now displaceable.
+        let free_region = pins[2].region();
+        drop(pins.remove(2));
+        let g = s
+            .admit(&one(vip, ServiceModel::RAaaS, RequestClass::Interactive))
+            .unwrap();
+        assert_eq!(g.vfpga(), Some(free_region));
+        assert_eq!(s.hv().metrics.counter("sched.preemptions").get(), 1);
+        assert_eq!(
+            s.hv().metrics.counter("sched.preempt.raced").get(),
+            0,
+            "quiesce makes the setup race structurally impossible"
+        );
+    }
+
+    #[test]
+    fn gang_victims_relocate_atomically() {
+        let s = sched_on(&ClusterConfig::sched_testbed());
+        let batcher = s.hv().add_user("batcher");
+        let vip = s.hv().add_user("vip");
+        // One 4-member batch gang fills the RAaaS-capable device.
+        let gang = s
+            .admit(
+                &one(batcher, ServiceModel::BAaaS, RequestClass::Batch)
+                    .gang(4)
+                    .co_located(),
+            )
+            .unwrap();
+        assert!(gang
+            .placements()
+            .iter()
+            .all(|p| matches!(p.target, GrantTarget::Vfpga(_, f, _) if f == FpgaId(0))));
+        for i in 0..4 {
+            gang.program_member(i, &crate::testing::mm16_partial(0))
+                .unwrap();
+        }
+        let token = gang.into_token();
+        // No single victim exists (all grants belong to the gang), so
+        // the interactive request relocates the whole gang to the
+        // BAaaS-only device — atomically.
+        let g = s
+            .admit(&one(vip, ServiceModel::RAaaS, RequestClass::Interactive))
+            .unwrap();
+        assert_eq!(g.fpga(), Some(FpgaId(0)));
+        assert_eq!(
+            s.hv().metrics.counter("sched.preempt.gang").get(),
+            1
+        );
+        let handle = s.lease_handle(token).expect("gang lease survives");
+        let placements = handle.placements();
+        assert_eq!(placements.len(), 4);
+        assert!(
+            placements.iter().all(|p| matches!(
+                p.target,
+                GrantTarget::Vfpga(_, f, _) if f == FpgaId(1)
+            )),
+            "all members moved together: {placements:?}"
+        );
+        assert_eq!(handle.migrations(), 4);
+        assert_eq!(s.hv().metrics.counter("sched.preempt.raced").get(), 0);
+    }
+
+    #[test]
+    fn preempt_policy_steers_victim_landing() {
+        // Three devices: A serves RAaaS+BAaaS (the contended one),
+        // B and C serve BAaaS only. B is left with fewer free
+        // regions than C, so Pack lands the victim on B and Spread
+        // on C.
+        let config = || ClusterConfig {
+            nodes: vec![NodeConfig {
+                name: "n".to_string(),
+                fpgas: vec![
+                    FpgaConfig {
+                        board: BoardKind::Vc707,
+                        vfpgas: 4,
+                        models: vec![
+                            ServiceModel::RAaaS,
+                            ServiceModel::BAaaS,
+                        ],
+                    },
+                    FpgaConfig {
+                        board: BoardKind::Vc707,
+                        vfpgas: 2,
+                        models: vec![ServiceModel::BAaaS],
+                    },
+                    FpgaConfig {
+                        board: BoardKind::Vc707,
+                        vfpgas: 4,
+                        models: vec![ServiceModel::BAaaS],
+                    },
+                ],
+            }],
+            require_signatures: false,
+            rpc_overhead_ms: 69.0,
+        };
+        let run = |policy: PreemptPolicy| -> FpgaId {
+            let s = sched_on(&config());
+            s.set_preempt_policy(policy);
+            assert_eq!(s.preempt_policy(), policy);
+            let batcher = s.hv().add_user("batcher");
+            let vip = s.hv().add_user("vip");
+            let _grants =
+                crate::testing::fill_batch_leases(&s, batcher, 4);
+            let _vip_lease = s
+                .admit(&one(
+                    vip,
+                    ServiceModel::RAaaS,
+                    RequestClass::Interactive,
+                ))
+                .unwrap();
+            let moved = s
+                .active_grants()
+                .into_iter()
+                .filter(|g| g.user == batcher)
+                .find(|g| g.fpga() != FpgaId(0))
+                .expect("one batch lease displaced");
+            moved.fpga()
+        };
+        // Pack: fewest free regions (B = fpga-1, 2 regions).
+        assert_eq!(run(PreemptPolicy::Pack), FpgaId(1));
+        // Spread: most free regions (C = fpga-2, 4 regions).
+        assert_eq!(run(PreemptPolicy::Spread), FpgaId(2));
+    }
+
+    #[test]
+    fn relocate_gang_moves_every_member_or_none() {
+        let s = sched_on(&ClusterConfig::sched_testbed());
+        let u = s.hv().add_user("gang");
+        let gang = s
+            .admit(
+                &one(u, ServiceModel::BAaaS, RequestClass::Normal)
+                    .gang(2)
+                    .co_located(),
+            )
+            .unwrap();
+        for i in 0..2 {
+            gang.program_member(i, &crate::testing::mm16_partial(0))
+                .unwrap();
+        }
+        let before: Vec<_> = gang.placements();
+        let token = gang.token();
+        let reports = s.relocate_gang(token).unwrap();
+        assert_eq!(reports.len(), 2);
+        let after = s.lease_handle(token).unwrap().placements();
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(b.alloc, a.alloc);
+            assert_ne!(b.target, a.target, "member did not move");
+        }
+        // Members stay programmed and the lease still releases whole.
+        assert_eq!(s.in_use(u), 2);
+        gang.release().unwrap();
+        assert_eq!(s.in_use(u), 0);
+        // A stale token no longer relocates.
+        assert!(matches!(
+            s.relocate_gang(token),
+            Err(SchedError::UnknownLease)
+        ));
     }
 
     #[test]

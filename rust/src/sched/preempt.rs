@@ -11,11 +11,24 @@
 //! existed, plain placement would have found it). The freed region
 //! then takes the interactive lease.
 //!
+//! Only *quiescable* victims are eligible: the scheduler wins a
+//! non-blocking region quiesce ([`crate::hypervisor::guard`]) before
+//! touching any state, so a victim with an in-flight setup or stream
+//! pin is skipped, never raced. Gang leases are relocated atomically
+//! — every member quiesced two-phase in the fixed `(fpga, vfpga)`
+//! order, then migrated all-or-nothing.
+//!
 //! Victim selection is deterministic and pure (unit-testable):
 //! 1. lowest request class first (batch before normal);
 //! 2. youngest lease first — the least accumulated work is lost to
 //!    the migration downtime;
 //! 3. ties break on the highest allocation id (the most recent grant).
+//!
+//! Where a displaced design lands is a policy knob
+//! ([`PreemptPolicy`]): `Pack` consolidates victims onto the fullest
+//! eligible device (protecting big free blocks for future gangs),
+//! `Spread` balances them onto the emptiest one (minimizing link
+//! contention with co-located tenants).
 //!
 //! Cost model: the migration downtime is charged to the *preemptor's*
 //! tenant, not the victim's — the scheduler bills the outage via
@@ -27,6 +40,70 @@ use crate::config::ServiceModel;
 use crate::util::ids::{AllocationId, FpgaId, UserId, VfpgaId};
 
 use super::RequestClass;
+
+/// Where a preemption relocates its victim (spread-vs-pack knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptPolicy {
+    /// Consolidate displaced designs onto the eligible device with
+    /// the *fewest* free regions (keeps big free blocks intact for
+    /// gangs; matches the paper's consolidate-first energy rule).
+    #[default]
+    Pack,
+    /// Balance displaced designs onto the eligible device with the
+    /// *most* free regions (minimizes per-device link contention).
+    Spread,
+}
+
+impl PreemptPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            PreemptPolicy::Pack => "pack",
+            PreemptPolicy::Spread => "spread",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PreemptPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "pack" => Some(PreemptPolicy::Pack),
+            "spread" => Some(PreemptPolicy::Spread),
+            _ => None,
+        }
+    }
+}
+
+/// Pick a relocation target among `(device, free regions)` candidate
+/// rows under `policy`. Rows with no free region are ignored; ties
+/// break on the lowest device id, and the lowest free region of the
+/// chosen device wins. Pure (unit-testable).
+pub fn choose_target(
+    policy: PreemptPolicy,
+    candidates: &[(FpgaId, Vec<VfpgaId>)],
+) -> Option<VfpgaId> {
+    let mut best: Option<(FpgaId, &Vec<VfpgaId>)> = None;
+    for (fpga, free) in candidates {
+        if free.is_empty() {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some((bf, bfree)) => {
+                let (n, bn) = (free.len(), bfree.len());
+                match policy {
+                    PreemptPolicy::Pack => {
+                        n < bn || (n == bn && fpga < bf)
+                    }
+                    PreemptPolicy::Spread => {
+                        n > bn || (n == bn && fpga < bf)
+                    }
+                }
+            }
+        };
+        if better {
+            best = Some((*fpga, free));
+        }
+    }
+    best.and_then(|(_, free)| free.iter().min().copied())
+}
 
 /// A preemptable running lease.
 #[derive(Debug, Clone, PartialEq)]
@@ -122,6 +199,54 @@ mod tests {
             victim(7, RequestClass::Batch, 42),
         ];
         assert_eq!(select_victim(&cands).unwrap().alloc, AllocationId(7));
+    }
+
+    #[test]
+    fn pack_targets_the_fullest_device_spread_the_emptiest() {
+        let candidates = vec![
+            (FpgaId(0), vec![VfpgaId(2), VfpgaId(1)]),
+            (FpgaId(1), vec![]),
+            (FpgaId(2), vec![VfpgaId(9)]),
+            (FpgaId(3), vec![VfpgaId(12), VfpgaId(13), VfpgaId(14)]),
+        ];
+        // Pack: fewest free regions (fpga-2), lowest region.
+        assert_eq!(
+            choose_target(PreemptPolicy::Pack, &candidates),
+            Some(VfpgaId(9))
+        );
+        // Spread: most free regions (fpga-3), lowest region.
+        assert_eq!(
+            choose_target(PreemptPolicy::Spread, &candidates),
+            Some(VfpgaId(12))
+        );
+        // Ties break on the lowest device id.
+        let tied = vec![
+            (FpgaId(5), vec![VfpgaId(21)]),
+            (FpgaId(4), vec![VfpgaId(20)]),
+        ];
+        assert_eq!(
+            choose_target(PreemptPolicy::Pack, &tied),
+            Some(VfpgaId(20))
+        );
+        assert_eq!(
+            choose_target(PreemptPolicy::Spread, &tied),
+            Some(VfpgaId(20))
+        );
+        // Nothing free anywhere.
+        assert_eq!(
+            choose_target(PreemptPolicy::Pack, &[(FpgaId(0), vec![])]),
+            None
+        );
+        assert_eq!(choose_target(PreemptPolicy::Spread, &[]), None);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        assert_eq!(PreemptPolicy::default(), PreemptPolicy::Pack);
+        for p in [PreemptPolicy::Pack, PreemptPolicy::Spread] {
+            assert_eq!(PreemptPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PreemptPolicy::parse("random"), None);
     }
 
     #[test]

@@ -22,8 +22,12 @@
 //! through the lease, so migrations are transparent). Interactive
 //! façade calls (RAaaS/RSaaS leases) use the non-blocking fast path
 //! and may preempt batch leases; BAaaS invocations are background
-//! work and admit at batch class, absorbing one preemption race via
-//! [`with_preemption_retry`].
+//! work and admit at batch class. Setup and streaming hold region
+//! pins, and preemption only displaces quiescable victims, so a
+//! preemption can no longer race an invocation's in-flight setup —
+//! [`with_preemption_retry`] remains wrapped around the provider-side
+//! body purely as defense in depth (a triggered retry bumps
+//! `sched.preempt.raced`, asserted 0 by the invariants suite).
 
 use std::sync::Arc;
 
@@ -152,10 +156,9 @@ impl BaaasService {
     /// programs the prebuilt bitfile, streams, releases. The caller
     /// never sees device ids.
     ///
-    /// A preemption racing the in-flight setup surfaces as a clean
-    /// failure; the invocation absorbs one such race by re-running
-    /// program+stream against the lease's new placement instead of
-    /// failing the job to the caller.
+    /// Setup and streaming pin the region, so a preemption waits its
+    /// turn (or picks another victim) instead of racing this
+    /// invocation mid-flight.
     pub fn invoke(
         &self,
         user: UserId,
@@ -179,9 +182,10 @@ impl BaaasService {
 }
 
 /// The provider-side program+stream body shared by BAaaS invocations
-/// and batch workers, wrapped in the one-shot preemption retry. Each
-/// attempt resolves placement through the lease, so the retry lands
-/// on the post-migration region.
+/// and inline batch workers. The one-shot preemption retry around it
+/// is defense in depth only — program/stream hold region pins, so
+/// the race it absorbs is structurally impossible (`sched.preempt.
+/// raced` counts any trigger and stays 0).
 pub fn run_setup_and_stream(
     lease: &Lease,
     bitfile: &Bitstream,

@@ -1,0 +1,335 @@
+//! Region-lifecycle invariants: the tentpole guarantees of the
+//! quiesce/pin refactor.
+//!
+//! * property test — arbitrary interleavings of allocate / program /
+//!   relocate / release never record an illegal transition in any
+//!   device's transition log, and settle into a db-consistent state;
+//! * threaded gang-relocation atomicity — relocations racing live
+//!   reprogramming either move every member or none, and never race
+//!   an in-flight PR (`sched.preempt.raced` stays 0);
+//! * preemption storm over streaming BAaaS invocations
+//!   (artifacts-gated) — the defense-in-depth retry never fires.
+
+use std::sync::Arc;
+
+use rc3e::config::{ClusterConfig, ServiceModel};
+use rc3e::fpga::LifecycleState;
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::rc2f::StreamConfig;
+use rc3e::sched::{AdmissionRequest, Lease, RequestClass, Scheduler};
+use rc3e::service::BaaasService;
+use rc3e::testing::prop::{forall, Gen};
+use rc3e::testing::{fill_batch_leases, mm16_partial};
+use rc3e::util::clock::VirtualClock;
+
+fn sched_on(config: &ClusterConfig) -> Arc<Scheduler> {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            config,
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    Scheduler::new(hv)
+}
+
+/// Every record in every device's transition log is a legal edge of
+/// the state machine.
+fn assert_log_legal(sched: &Scheduler) {
+    for fpga in sched.hv().device_ids() {
+        let log = sched
+            .hv()
+            .device(fpga)
+            .unwrap()
+            .fpga
+            .lock()
+            .unwrap()
+            .transition_log();
+        for rec in &log {
+            assert!(
+                rec.is_legal(),
+                "illegal transition recorded on {fpga}: {rec:?}"
+            );
+        }
+    }
+}
+
+/// With no operation in flight, every region must be in a quiescent
+/// state consistent with the device DB: owned regions are Reserved or
+/// Active, free regions are Free — never Programming / Draining /
+/// Migrating.
+fn assert_settled(sched: &Scheduler) {
+    let hv = sched.hv();
+    for fpga in hv.device_ids() {
+        let owned: Vec<_> = {
+            let db = hv.db.lock().unwrap();
+            db.device(fpga)
+                .map(|d| {
+                    d.regions
+                        .iter()
+                        .filter(|v| db.owner_of(**v).is_some())
+                        .copied()
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let hw = hv.device(fpga).unwrap().fpga.lock().unwrap();
+        for region in hw.regions() {
+            let expected_owned = owned.contains(&region.id);
+            match region.lifecycle {
+                LifecycleState::Free => assert!(
+                    !expected_owned,
+                    "{} is Free but owned",
+                    region.id
+                ),
+                LifecycleState::Reserved | LifecycleState::Active => {
+                    assert!(
+                        expected_owned,
+                        "{} is {} but unowned",
+                        region.id,
+                        region.lifecycle
+                    )
+                }
+                other => panic!(
+                    "{} settled in transient state {other}",
+                    region.id
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn no_interleaving_records_an_illegal_transition() {
+    // Ops are drawn as bytes; each case replays a fresh cluster.
+    let gen = Gen::new(|rng, size| {
+        let len = rng.next_below(size as u64 + 1) as usize + 4;
+        (0..len).map(|_| rng.next_below(64) as u8).collect::<Vec<u8>>()
+    });
+    forall(0xC3E4, 48, &gen, |ops| {
+        let sched = sched_on(&ClusterConfig::sched_testbed());
+        let user = sched.hv().add_user("prop");
+        let mut leases: Vec<Lease> = Vec::new();
+        for op in ops {
+            match op % 6 {
+                // Admit one region.
+                0 | 1 => {
+                    if let Ok(lease) = sched.admit(&AdmissionRequest::new(
+                        user,
+                        ServiceModel::BAaaS,
+                        RequestClass::Batch,
+                    )) {
+                        leases.push(lease);
+                    }
+                }
+                // Admit a gang of two.
+                2 => {
+                    if let Ok(lease) = sched.admit(
+                        &AdmissionRequest::new(
+                            user,
+                            ServiceModel::BAaaS,
+                            RequestClass::Batch,
+                        )
+                        .gang(2),
+                    ) {
+                        leases.push(lease);
+                    }
+                }
+                // Program a member of some lease (idempotent-ish:
+                // reprogramming an Active region is legal).
+                3 => {
+                    if let Some(lease) =
+                        leases.get((*op as usize / 6) % leases.len().max(1))
+                    {
+                        let idx = *op as usize % lease.regions();
+                        let _ =
+                            lease.program_member(idx, &mm16_partial(0));
+                    }
+                }
+                // Relocate a whole lease (single or gang).
+                4 => {
+                    if let Some(lease) =
+                        leases.get((*op as usize / 6) % leases.len().max(1))
+                    {
+                        let _ = sched.relocate_gang(lease.token());
+                    }
+                }
+                // Release a lease.
+                _ => {
+                    if !leases.is_empty() {
+                        let idx = (*op as usize / 6) % leases.len();
+                        let lease = leases.swap_remove(idx);
+                        let _ = lease.release();
+                    }
+                }
+            }
+        }
+        drop(leases); // release everything still held
+        assert_log_legal(&sched);
+        assert_settled(&sched);
+        if sched.hv().metrics.counter("sched.preempt.raced").get() != 0 {
+            return Err("preemption race absorbed — quiesce broken"
+                .to_string());
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn threaded_gang_relocation_is_atomic() {
+    let sched = sched_on(&ClusterConfig::sched_testbed());
+    let user = sched.hv().add_user("gang");
+    let gang = sched
+        .admit(
+            &AdmissionRequest::new(
+                user,
+                ServiceModel::BAaaS,
+                RequestClass::Batch,
+            )
+            .gang(2)
+            .co_located(),
+        )
+        .unwrap();
+    for i in 0..2 {
+        gang.program_member(i, &mm16_partial(0)).unwrap();
+    }
+    let token = gang.token();
+    std::thread::scope(|scope| {
+        // Worker: keeps reprogramming the gang members (pins regions
+        // mid-flight, chasing the gang across relocations).
+        let worker_gang = &gang;
+        scope.spawn(move || {
+            for i in 0..40 {
+                worker_gang
+                    .program_member(i % 2, &mm16_partial(0))
+                    .expect("reprogram never races a relocation");
+            }
+        });
+        // Relocator: bounces the gang between the two devices. A
+        // pinned member makes the whole relocation fail cleanly —
+        // all-or-nothing, never partial.
+        let relocator = &sched;
+        scope.spawn(move || {
+            for _ in 0..15 {
+                match relocator.relocate_gang(token) {
+                    Ok(reports) => assert_eq!(
+                        reports.len(),
+                        2,
+                        "partial gang relocation observed"
+                    ),
+                    Err(_) => std::thread::yield_now(),
+                }
+            }
+        });
+    });
+    // Both members still live, programmed, co-owned — and on one
+    // device's worth of placements each.
+    let placements = gang.placements();
+    assert_eq!(placements.len(), 2);
+    assert_log_legal(&sched);
+    assert_eq!(
+        sched.hv().metrics.counter("sched.preempt.raced").get(),
+        0
+    );
+    // Regions quiesce cleanly once the threads are done.
+    for p in &placements {
+        if let rc3e::sched::GrantTarget::Vfpga(v, _, _) = p.target {
+            assert!(sched.hv().guards().is_quiescable(v));
+        }
+    }
+    gang.release().unwrap();
+    assert_settled(&sched);
+}
+
+#[test]
+fn preemption_storm_never_trips_the_raced_counter() {
+    if !rc3e::testing::artifacts_available(
+        "lifecycle::preemption_storm_never_trips_the_raced_counter",
+    ) {
+        return;
+    }
+    let sched = sched_on(&ClusterConfig::sched_testbed());
+    let baaas = BaaasService::with_scheduler(Arc::clone(&sched));
+    baaas.hv.register_service("mm16", mm16_partial(0));
+    let vip = sched.hv().add_user("vip");
+    std::thread::scope(|scope| {
+        // Background invokers: program + stream inside the (now
+        // defense-in-depth) preemption-retry wrapper.
+        for i in 0..3 {
+            let svc = &baaas;
+            let name = format!("invoker-{i}");
+            scope.spawn(move || {
+                let user = svc.hv.add_user(&name);
+                for _ in 0..3 {
+                    svc.invoke(
+                        user,
+                        "mm16",
+                        &StreamConfig::matmul16(256),
+                    )
+                    .expect("invocation survives the storm");
+                }
+            });
+        }
+        // Interactive storm: admissions that preempt quiescable batch
+        // victims; pinned (streaming) victims are skipped, so some
+        // attempts fail NoCapacity — that is the contract.
+        let s = &sched;
+        scope.spawn(move || {
+            for _ in 0..12 {
+                if let Ok(lease) = s.admit(&AdmissionRequest::new(
+                    vip,
+                    ServiceModel::RAaaS,
+                    RequestClass::Interactive,
+                )) {
+                    let _ = lease.release();
+                }
+                std::thread::yield_now();
+            }
+        });
+    });
+    assert_eq!(
+        sched.hv().metrics.counter("sched.preempt.raced").get(),
+        0,
+        "the quiesce discipline must make the setup race impossible"
+    );
+    assert_log_legal(&sched);
+    assert_settled(&sched);
+}
+
+#[test]
+fn preemption_scenario_keeps_raced_counter_zero() {
+    // The classic preemption scenario, rerun under the lifecycle
+    // rules: quiesce-won migration, no retry fired, telemetry sane.
+    let sched = sched_on(&ClusterConfig::sched_testbed());
+    let batcher = sched.hv().add_user("batcher");
+    let vip = sched.hv().add_user("vip");
+    let _grants = fill_batch_leases(&sched, batcher, 4);
+    let lease = sched
+        .admit(&AdmissionRequest::new(
+            vip,
+            ServiceModel::RAaaS,
+            RequestClass::Interactive,
+        ))
+        .unwrap();
+    assert_eq!(
+        sched.hv().metrics.counter("sched.preemptions").get(),
+        1
+    );
+    assert_eq!(
+        sched.hv().metrics.counter("sched.preempt.raced").get(),
+        0
+    );
+    // The quiesce win was recorded (zero wall wait on the fast path).
+    assert!(
+        sched
+            .hv()
+            .metrics
+            .histogram("sched.preempt.quiesce_wait")
+            .count()
+            >= 1
+    );
+    assert_log_legal(&sched);
+    lease.release().unwrap();
+}

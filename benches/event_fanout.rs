@@ -1,0 +1,171 @@
+//! Event-surface bench (protocol 3): wall-clock measurements of the
+//! two new many-client mechanisms.
+//!
+//! * **fanout** — events/sec delivered through the [`EventBus`] as
+//!   the subscriber count grows (1 → 16). Publishing is an O(1)
+//!   enqueue; a dispatcher thread fans out into bounded
+//!   per-subscriber queues. The interesting number is delivered
+//!   events/sec (drained by subscribers), not enqueued/sec.
+//! * **coalesced vs polling `job_wait`** — wakeup latency from job
+//!   completion to the last of 16 waiters observing it. The
+//!   coalesced path parks all 16 on one shared slot (one fanout);
+//!   the polling path is what protocol-2 clients effectively did:
+//!   each caller loops `job_status` on an interval.
+//!
+//! Run: `cargo bench --bench event_fanout`
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use rc3e::metrics::Registry;
+use rc3e::middleware::api::{Event, SubscriptionFilter};
+use rc3e::middleware::{EventBus, JobRegistry, Scope};
+use rc3e::util::json::Json;
+
+const EVENTS: u64 = 20_000;
+const WAITERS: usize = 16;
+
+fn bench_fanout(subscribers: usize) {
+    let bus = EventBus::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut drains = Vec::new();
+    for _ in 0..subscribers {
+        let sub = bus.subscribe(SubscriptionFilter::all(), None, None);
+        let stop = Arc::clone(&stop);
+        drains.push(std::thread::spawn(move || {
+            let mut seen = 0u64;
+            loop {
+                match sub.next(Duration::from_millis(20)) {
+                    Some(_) => seen += 1,
+                    None if stop.load(Ordering::SeqCst) => break,
+                    None => {}
+                }
+            }
+            (seen, sub.dropped())
+        }));
+    }
+    let t0 = Instant::now();
+    for i in 0..EVENTS {
+        bus.publish(Event::QueueDepth { depth: i }, Scope::Public);
+    }
+    let publish_s = t0.elapsed().as_secs_f64();
+    // Wait for the dispatcher to finish fanning out before stopping
+    // the drains, so every queued event is observable.
+    bus.flush();
+    stop.store(true, Ordering::SeqCst);
+    let mut delivered = 0u64;
+    let mut dropped = 0u64;
+    for d in drains {
+        let (seen, lost) = d.join().unwrap();
+        delivered += seen;
+        dropped += lost;
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    println!(
+        "fanout x{subscribers:<2}: {EVENTS} events enqueued in \
+         {publish_s:.4} s -> {:.0} delivered events/s \
+         ({delivered} drained, {dropped} dropped to slow queues)",
+        delivered as f64 / total_s
+    );
+}
+
+/// Latency from completion to every coalesced waiter waking.
+fn bench_coalesced_wait() -> f64 {
+    let metrics = Arc::new(Registry::new());
+    let reg = JobRegistry::new();
+    reg.set_metrics(Arc::clone(&metrics));
+    let (tx, rx) = mpsc::channel::<()>();
+    let job = Arc::clone(&reg).submit("bench", 0, None, move |_p| {
+        let _ = rx.recv();
+        Ok(Json::Null)
+    });
+    let waiters: Vec<_> = (0..WAITERS)
+        .map(|_| {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                reg.wait(job, Duration::from_secs(30)).unwrap();
+                Instant::now()
+            })
+        })
+        .collect();
+    while reg.waiters(job) < WAITERS as u64 {
+        std::thread::sleep(Duration::from_micros(50));
+    }
+    let released = Instant::now();
+    tx.send(()).unwrap();
+    let last_wake = waiters
+        .into_iter()
+        .map(|w| w.join().unwrap())
+        .max()
+        .unwrap();
+    let lat = last_wake.duration_since(released).as_secs_f64() * 1e3;
+    println!(
+        "coalesced job_wait: {WAITERS} waiters, one fanout \
+         (counter {}), last wakeup {lat:.3} ms after completion",
+        metrics.counter("jobs.wait.coalesced").get()
+    );
+    lat
+}
+
+/// The pre-v3 shape: every client polls `job_status` on an interval.
+fn bench_polling_wait(poll_ms: u64) -> f64 {
+    let reg = JobRegistry::new();
+    let (tx, rx) = mpsc::channel::<()>();
+    let job = Arc::clone(&reg).submit("bench", 0, None, move |_p| {
+        let _ = rx.recv();
+        Ok(Json::Null)
+    });
+    let start = Arc::new(std::sync::Barrier::new(WAITERS + 1));
+    let waiters: Vec<_> = (0..WAITERS)
+        .map(|_| {
+            let reg = Arc::clone(&reg);
+            let start = Arc::clone(&start);
+            std::thread::spawn(move || {
+                start.wait();
+                loop {
+                    if reg.status(job).unwrap().state.is_terminal() {
+                        return Instant::now();
+                    }
+                    std::thread::sleep(Duration::from_millis(poll_ms));
+                }
+            })
+        })
+        .collect();
+    start.wait();
+    // Let every poller settle into its loop before completing.
+    std::thread::sleep(Duration::from_millis(2 * poll_ms));
+    let released = Instant::now();
+    tx.send(()).unwrap();
+    let last_wake = waiters
+        .into_iter()
+        .map(|w| w.join().unwrap())
+        .max()
+        .unwrap();
+    let lat = last_wake.duration_since(released).as_secs_f64() * 1e3;
+    println!(
+        "polling job_status ({poll_ms} ms interval): {WAITERS} \
+         pollers, last observation {lat:.3} ms after completion"
+    );
+    lat
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    println!("event_fanout: delivered-throughput vs subscriber count");
+    for n in [1, 2, 4, 8, 16] {
+        bench_fanout(n);
+    }
+    println!();
+    let coalesced = bench_coalesced_wait();
+    let polled = bench_polling_wait(5);
+    println!(
+        "wakeup latency: coalesced {coalesced:.3} ms vs polling \
+         {polled:.3} ms ({:.1}x)",
+        if coalesced > 0.0 {
+            polled / coalesced
+        } else {
+            f64::INFINITY
+        }
+    );
+}

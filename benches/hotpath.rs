@@ -106,7 +106,7 @@ fn bench_rpc() {
     let server = ManagementServer::spawn(hv, 69.0).unwrap();
     let mut client = Client::connect(server.addr()).unwrap();
     let r = Bencher::new(5, 200).run("rpc hello round trip (wall)", || {
-        client.call("hello", Json::obj(vec![])).unwrap()
+        client.hello().unwrap()
     });
     println!("{}", r.line());
 }

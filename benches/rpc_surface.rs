@@ -82,10 +82,10 @@ fn main() {
     );
     client.release(lease.alloc).unwrap();
 
-    // Raw v1 envelope for comparison (same method, legacy shape).
-    let r = Bencher::new(20, 200).run("v1 status (raw call)", || {
+    // Raw (untyped-params) envelope for comparison.
+    let r = Bencher::new(20, 200).run("raw status (call_v2)", || {
         client
-            .call(
+            .call_v2(
                 "status",
                 rc3e::util::json::Json::obj(vec![(
                     "fpga",

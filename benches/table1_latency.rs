@@ -21,7 +21,6 @@ use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
 use rc3e::middleware::{Client, ManagementServer, NodeAgent};
 use rc3e::util::clock::VirtualClock;
 use rc3e::util::ids::NodeId;
-use rc3e::util::json::Json;
 use rc3e::util::table::Table;
 
 fn measure_virtual(
@@ -103,62 +102,24 @@ fn main() {
     let mut cli = Client::connect(server.addr()).unwrap();
 
     let (status_rc3e, status_wall) = measure_virtual(&clock2, || {
-        cli.call(
-            "status",
-            Json::obj(vec![("fpga", Json::from("fpga-0"))]),
-        )
-        .unwrap();
+        cli.status(rc3e::util::ids::FpgaId(0)).unwrap();
     });
 
     // PR over RC3E: lease + program through the server.
-    let user = cli
-        .call("add_user", Json::obj(vec![("name", Json::from("bench"))]))
-        .unwrap()
-        .get("user")
-        .as_str()
-        .unwrap()
-        .to_string();
-    let lease = cli
-        .call(
-            "alloc_vfpga",
-            Json::obj(vec![("user", Json::from(user.as_str()))]),
-        )
-        .unwrap();
-    let alloc = lease.get("alloc").as_str().unwrap().to_string();
+    let user = cli.add_user("bench").unwrap().user;
+    let lease = cli.alloc_vfpga(user, None, None).unwrap();
+    let alloc = lease.alloc;
     let (pr_rc3e, pr_wall) = measure_virtual(&clock2, || {
-        cli.call(
-            "program_core",
-            Json::obj(vec![
-                ("user", Json::from(user.as_str())),
-                ("alloc", Json::from(alloc.as_str())),
-                ("core", Json::from("matmul16")),
-            ]),
-        )
-        .unwrap();
+        cli.program_core(user, alloc, "matmul16").unwrap();
     });
-    cli.call(
-        "release",
-        Json::obj(vec![("alloc", Json::from(alloc.as_str()))]),
-    )
-    .unwrap();
+    cli.release(alloc).unwrap();
 
-    // Full configuration over RC3E: RSaaS lease + program_full.
-    let lease = cli
-        .call(
-            "alloc_physical",
-            Json::obj(vec![("user", Json::from(user.as_str()))]),
-        )
-        .unwrap();
-    let alloc = lease.get("alloc").as_str().unwrap().to_string();
+    // Full configuration over RC3E: RSaaS lease + program_full (an
+    // async job on protocol 3 — submit + job_wait, two RPC hops).
+    let lease = cli.alloc_physical(user).unwrap();
+    let alloc = lease.alloc;
     let (config_rc3e, config_wall) = measure_virtual(&clock2, || {
-        cli.call(
-            "program_full",
-            Json::obj(vec![
-                ("user", Json::from(user.as_str())),
-                ("alloc", Json::from(alloc.as_str())),
-            ]),
-        )
-        .unwrap();
+        cli.program_full_sync(user, alloc, None).unwrap();
     });
 
     // ---------------- report ---------------------------------------

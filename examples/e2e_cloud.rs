@@ -25,7 +25,6 @@ use rc3e::middleware::{Client, ManagementServer, NodeAgent};
 use rc3e::rc2f::{StreamConfig, StreamRunner};
 use rc3e::util::clock::VirtualClock;
 use rc3e::util::ids::NodeId;
-use rc3e::util::json::Json;
 use rc3e::util::table::Table;
 
 fn main() -> Result<(), String> {
@@ -60,81 +59,43 @@ fn main() -> Result<(), String> {
     // ---------------- 1. interactive RAaaS path over TCP -----------
     let mut cli = Client::connect(server.addr())?;
     let user = cli
-        .call("add_user", Json::obj(vec![("name", Json::from("alice"))]))?
-        .get("user")
-        .as_str()
-        .unwrap()
-        .to_string();
-    let lease = cli.call(
-        "alloc_vfpga",
-        Json::obj(vec![("user", Json::from(user.as_str()))]),
-    )?;
-    let alloc = lease.get("alloc").as_str().unwrap().to_string();
+        .add_user("alice")
+        .map_err(|e| e.to_string())?
+        .user;
+    let lease =
+        cli.alloc_vfpga(user, None, None).map_err(|e| e.to_string())?;
+    let alloc = lease.alloc;
     println!(
-        "alice leased {} on {} ({})",
-        lease.get("vfpga").as_str().unwrap(),
-        lease.get("fpga").as_str().unwrap(),
-        lease.get("node").as_str().unwrap()
+        "alice leased {} on {} ({}); capability token {}",
+        lease.vfpga, lease.fpga, lease.node, lease.lease
     );
-    let prog = cli.call(
-        "program_core",
-        Json::obj(vec![
-            ("user", Json::from(user.as_str())),
-            ("alloc", Json::from(alloc.as_str())),
-            ("core", Json::from("matmul16")),
-        ]),
-    )?;
+    let prog = cli
+        .program_core(user, alloc, "matmul16")
+        .map_err(|e| e.to_string())?;
     println!(
         "programmed matmul16 over RC3E in {:.0} ms (paper PR row: 912 ms)",
-        prog.get("pr_ms").as_f64().unwrap() + 69.0
+        prog.pr_ms + 69.0
     );
-    let st = cli.call(
-        "status",
-        Json::obj(vec![(
-            "fpga",
-            Json::from(lease.get("fpga").as_str().unwrap()),
-        )]),
-    )?;
+    let st = cli.status(lease.fpga).map_err(|e| e.to_string())?;
     println!(
         "status via node agent: {} regions, {} configured, {:.1} W",
-        st.get("regions_total").as_u64().unwrap(),
-        st.get("regions_configured").as_u64().unwrap(),
-        st.get("power_w").as_f64().unwrap()
+        st.regions_total, st.regions_configured, st.power_w
     );
-    let small = cli.call(
-        "stream",
-        Json::obj(vec![
-            ("user", Json::from(user.as_str())),
-            ("alloc", Json::from(alloc.as_str())),
-            ("core", Json::from("matmul16")),
-            ("mults", Json::from(10_000u64)),
-        ]),
-    )?;
-    assert_eq!(small.get("validation_failures").as_u64(), Some(0));
+    let small = cli
+        .stream_sync(user, alloc, "matmul16", 10_000)
+        .map_err(|e| e.to_string())?;
+    assert_eq!(small.validation_failures, 0);
     println!(
         "alice streamed 10k mults: modeled {:.0} MB/s, wall {:.0} MB/s",
-        small.get("virtual_mbps").as_f64().unwrap(),
-        small.get("wall_mbps").as_f64().unwrap()
+        small.virtual_mbps, small.wall_mbps
     );
     // Live migration of alice's design.
-    let mig = cli.call(
-        "migrate",
-        Json::obj(vec![
-            ("user", Json::from(user.as_str())),
-            ("alloc", Json::from(alloc.as_str())),
-        ]),
-    )?;
+    let mig = cli.migrate(user, alloc).map_err(|e| e.to_string())?;
     println!(
         "migrated {} -> {} (cross-device: {}, downtime {:.0} ms)",
-        mig.get("from").as_str().unwrap(),
-        mig.get("to").as_str().unwrap(),
-        mig.get("cross_device").as_bool().unwrap(),
-        mig.get("downtime_ms").as_f64().unwrap()
+        mig.from, mig.to, mig.cross_device, mig.downtime_ms
     );
-    cli.call(
-        "release",
-        Json::obj(vec![("alloc", Json::from(alloc.as_str()))]),
-    )?;
+    cli.release(alloc).map_err(|e| e.to_string())?;
 
     // ---------------- 2. BAaaS background service ------------------
     let synth = rc3e::hls::Synthesizer::new();
@@ -148,23 +109,14 @@ fn main() -> Result<(), String> {
             .artifact("matmul16_b256")
             .build(),
     );
-    let enduser = cli
-        .call("add_user", Json::obj(vec![("name", Json::from("bob"))]))?
-        .get("user")
-        .as_str()
-        .unwrap()
-        .to_string();
-    let svc_out = cli.call(
-        "invoke_service",
-        Json::obj(vec![
-            ("user", Json::from(enduser.as_str())),
-            ("service", Json::from("linalg")),
-            ("mults", Json::from(10_000u64)),
-        ]),
-    )?;
+    let enduser =
+        cli.add_user("bob").map_err(|e| e.to_string())?.user;
+    let svc_out = cli
+        .invoke_service_sync(enduser, "linalg", 10_000)
+        .map_err(|e| e.to_string())?;
     println!(
         "bob invoked BAaaS 'linalg' (no FPGA visible): {:.0} MB/s modeled",
-        svc_out.get("virtual_mbps").as_f64().unwrap()
+        svc_out.virtual_mbps
     );
 
     // ---------------- 3. Section-V experiment at full scale --------
@@ -235,11 +187,10 @@ fn main() -> Result<(), String> {
     println!("{}", table.render());
 
     // ---------------- 4. energy accounting -------------------------
-    let energy = cli.call("energy", Json::obj(vec![]))?;
+    let energy = cli.energy().map_err(|e| e.to_string())?;
     println!(
         "cloud energy over the run: {:.0} J virtual, final draw {:.1} W",
-        energy.get("joules").as_f64().unwrap(),
-        energy.get("power_w").as_f64().unwrap()
+        energy.joules, energy.power_w
     );
     println!("\nE2E OK — all layers composed (TCP middleware, hypervisor, \
               RC2F streaming, PJRT compute).");

@@ -20,13 +20,23 @@
 //!   runs admission → PR → stream → release serially per job;
 //! * **pipelined** ([`BatchSystem::run_pipelined`]) — each worker
 //!   overlaps the partial reconfiguration of job *k+1* with the
-//!   streaming of job *k* on a double-buffered pair of regions (two
-//!   live leases), because `Reserved`/`Programming` is a first-class
-//!   region state distinct from `Active`. The PR side rides the
-//!   server's async job registry ([`crate::middleware::jobs`]) — a
-//!   long operation is already a job there, so pipelining is registry
-//!   policy, not an API change. Results are bit-identical to inline
-//!   mode; only the makespan shrinks (PR time hides behind streams).
+//!   streaming of job *k* on a double-buffered pair of regions,
+//!   because `Reserved`/`Programming` is a first-class region state
+//!   distinct from `Active`. The pair is **long-lived**: a worker
+//!   admits its two slots once and reuses them across consecutive
+//!   jobs of the same (tenant, model) instead of re-admitting per
+//!   job — admission latency is paid once per stretch, not once per
+//!   job. Per-job device-second accounting stays correct because the
+//!   worker splits the accrual at every job boundary
+//!   ([`Scheduler::checkpoint_accrual`]): each job's segment lands in
+//!   the ledger when the job finishes, and the final release charges
+//!   only the residual. On a capacity-capped cluster the second slot
+//!   simply never materializes (non-blocking admit) and the worker
+//!   degrades to serial program→stream on one slot — no wedge. The
+//!   PR side rides the server's async job registry
+//!   ([`crate::middleware::jobs`]). Results are bit-identical to
+//!   inline mode; only the makespan shrinks (PR time hides behind
+//!   streams).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -88,14 +98,20 @@ struct QueueInner {
     next_id: u64,
 }
 
-/// A job whose admission + PR is in flight on the async job registry
-/// (the pipelined mode's "next" slot). The setup job's result carries
-/// the lease token once admitted + programmed.
-struct PendingSetup {
+/// A pipelined worker's long-lived admitted slots: one or two
+/// single-region leases of one (tenant, model), reused across
+/// consecutive jobs.
+struct Pair {
+    user: UserId,
+    model: ServiceModel,
+    slots: Vec<LeaseToken>,
+}
+
+/// A job programmed onto `slot`, waiting for its stream turn.
+struct Ready {
     id: JobId,
     spec: JobSpec,
-    /// Registry id of the in-flight admission+PR job.
-    pr: JobId,
+    slot: usize,
 }
 
 /// The batch queue + workers (admission delegated to the scheduler).
@@ -223,29 +239,94 @@ impl BatchSystem {
     // ------------------------------------------------- pipelined mode
 
     /// Drain the queue with PR/stream pipelining (single worker):
-    /// while job *k* streams on this thread, job *k+1*'s lease is
-    /// already admitted and its partial reconfiguration runs on a
-    /// registry worker thread — a double-buffered pair of regions.
+    /// while job *k* streams on this thread, job *k+1*'s partial
+    /// reconfiguration runs on a registry worker thread — a
+    /// double-buffered pair of regions. The pair is admitted **once**
+    /// and reused across consecutive jobs of one (tenant, model);
+    /// accrual is checkpointed at every job boundary so per-job
+    /// device-second accounting matches the re-admit-per-job flow.
     /// Job outcomes are identical to [`Self::run_to_completion`];
     /// only the makespan differs.
     pub fn run_pipelined(&self) {
-        // Job k: programmed, waiting for its stream turn.
-        let mut ready: Option<(JobId, JobSpec, LeaseToken)> = None;
+        let mut pair: Option<Pair> = None;
+        // Job k: programmed on `pair.slots[ready.slot]`, waiting for
+        // its stream turn.
+        let mut ready: Option<Ready> = None;
         loop {
             let next = self.inner.lock().unwrap().pending.pop_front();
-            let drained = next.is_none();
-            // Kick off job k+1's admission + PR before streaming job
-            // k — this is the overlap.
-            let setup = next
-                .and_then(|(id, spec)| self.start_setup(id, spec));
-            if let Some((id, spec, token)) = ready.take() {
-                self.finish_stream(id, &spec, token);
-            }
-            if let Some(pending) = setup {
-                ready = self.await_setup(pending);
-            }
-            if drained && ready.is_none() {
+            let Some((id, spec)) = next else {
+                if let (Some(r), Some(p)) = (ready.take(), pair.as_ref())
+                {
+                    self.stream_slot(p, r);
+                }
+                self.retire_pair(&mut pair);
                 return;
+            };
+            self.set_state(id, JobState::Running);
+            // Resolve the payload first: an unknown service must fail
+            // the job without burning an admission.
+            let Some(bitfile) = self.resolve_payload(id, &spec) else {
+                continue;
+            };
+            let (user, model) = Self::job_identity(&spec);
+            // Tenant/model switch: finish the in-flight job, then
+            // retire the old pair (checkpointing its residual accrual
+            // through release) before admitting for the new identity.
+            if pair
+                .as_ref()
+                .is_some_and(|p| p.user != user || p.model != model)
+            {
+                if let (Some(r), Some(p)) = (ready.take(), pair.as_ref())
+                {
+                    self.stream_slot(p, r);
+                }
+                self.retire_pair(&mut pair);
+            }
+            // Ensure the primary slot (blocking — same backpressure
+            // as inline admission).
+            if pair.is_none() {
+                match self.admit_slot(user, model, true) {
+                    Ok(token) => {
+                        pair = Some(Pair {
+                            user,
+                            model,
+                            slots: vec![token],
+                        })
+                    }
+                    Err(e) => {
+                        self.set_state(id, JobState::Failed(e));
+                        continue;
+                    }
+                }
+            }
+            let p = pair.as_mut().expect("pair ensured above");
+            // Grow to the full pair only when overlap is actually
+            // possible; a capacity-capped cluster just stays serial.
+            if ready.is_some() && p.slots.len() == 1 {
+                if let Ok(token) = self.admit_slot(user, model, false) {
+                    p.slots.push(token);
+                }
+            }
+            match ready.take() {
+                Some(r) if p.slots.len() == 2 => {
+                    // Overlap: program the idle slot on the registry
+                    // while this thread streams job k.
+                    let idle = 1 - r.slot;
+                    let setup =
+                        self.start_program(p.slots[idle], bitfile);
+                    self.stream_slot(p, r);
+                    ready = self.await_program(id, spec, idle, setup);
+                }
+                Some(r) => {
+                    // One slot only: stream first, then program it.
+                    let slot = r.slot;
+                    self.stream_slot(p, r);
+                    ready =
+                        self.program_inline(id, spec, bitfile, p, slot);
+                }
+                None => {
+                    ready = self.program_inline(id, spec, bitfile, p, 0);
+                }
             }
         }
     }
@@ -260,80 +341,108 @@ impl BatchSystem {
         });
     }
 
-    /// Submit the job's admission + PR to the async registry. The
-    /// *whole* setup — including the blocking admission — runs on the
-    /// registry worker, so the batch worker always proceeds to stream
-    /// the previous job; on a one-region (or quota-capped) cluster
-    /// the setup simply waits for that stream's release instead of
-    /// wedging the pipeline. Returns `None` when the job failed fast
-    /// (state already set).
-    fn start_setup(&self, id: JobId, spec: JobSpec) -> Option<PendingSetup> {
-        self.set_state(id, JobState::Running);
+    fn job_identity(spec: &JobSpec) -> (UserId, ServiceModel) {
         let model = match &spec.payload {
             JobPayload::UserBitfile(_) => ServiceModel::RAaaS,
             JobPayload::Service(_) => ServiceModel::BAaaS,
         };
-        // Resolve the payload first: an unknown service must fail the
-        // job without burning an admission.
-        let bitfile = match &spec.payload {
-            JobPayload::UserBitfile(bs) => bs.clone(),
+        (spec.user, model)
+    }
+
+    /// Resolve the job's bitfile, failing the job (and returning
+    /// `None`) on an unknown service.
+    fn resolve_payload(
+        &self,
+        id: JobId,
+        spec: &JobSpec,
+    ) -> Option<Bitstream> {
+        match &spec.payload {
+            JobPayload::UserBitfile(bs) => Some(bs.clone()),
             JobPayload::Service(name) => {
                 match self.hv.service_bitfile(name) {
-                    Ok(bs) => bs,
+                    Ok(bs) => Some(bs),
                     Err(e) => {
                         self.set_state(
                             id,
                             JobState::Failed(e.to_string()),
                         );
-                        return None;
+                        None
                     }
                 }
             }
-        };
+        }
+    }
+
+    /// Admit one single-region batch slot for the pair. `blocking`
+    /// waits on the fair-share pump; non-blocking returns the
+    /// scheduler's immediate answer (used for the optional second
+    /// slot, where "no capacity" means "stay serial", not "fail").
+    fn admit_slot(
+        &self,
+        user: UserId,
+        model: ServiceModel,
+        blocking: bool,
+    ) -> Result<LeaseToken, String> {
         let request =
-            AdmissionRequest::new(spec.user, model, RequestClass::Batch);
+            AdmissionRequest::new(user, model, RequestClass::Batch);
+        let lease = if blocking {
+            self.sched.admit_blocking(&request)
+        } else {
+            self.sched.admit(&request)
+        }
+        .map_err(|e| e.to_string())?;
+        // Disarm: the pair owns the slot across jobs.
+        Ok(lease.into_token())
+    }
+
+    /// Release every slot of the pair (residual accrual is charged by
+    /// the release itself).
+    fn retire_pair(&self, pair: &mut Option<Pair>) {
+        if let Some(p) = pair.take() {
+            for token in p.slots {
+                let _ = self.sched.release_token(token);
+            }
+        }
+    }
+
+    /// Submit the PR of `bitfile` onto the slot's lease to the async
+    /// registry (the overlap seam).
+    fn start_program(
+        &self,
+        token: LeaseToken,
+        bitfile: Bitstream,
+    ) -> JobId {
         let sched = Arc::clone(&self.sched);
         let now_ns = self.hv.clock.now().0;
-        let pr = Arc::clone(&self.jobs).submit(
+        Arc::clone(&self.jobs).submit(
             "batch_setup",
             now_ns,
             None,
-            move || {
-                let lease = sched
-                    .admit_blocking(&request)
-                    .map_err(|e| ApiError::from(&e))?;
-                // Disarm: the token rides the job result back to the
-                // batch worker, which streams and releases.
-                let token = lease.into_token();
+            move |_progress| {
                 let handle =
                     sched.lease_handle(token).ok_or_else(|| {
-                        ApiError::internal("lease vanished before PR")
+                        ApiError::internal("slot lease vanished")
                     })?;
-                if let Err(e) = handle.program(&bitfile) {
-                    let _ = sched.release_token(token);
-                    return Err(ApiError::from(&e));
-                }
-                Ok(Json::from(token.to_string()))
+                handle
+                    .program(&bitfile)
+                    .map_err(|e| ApiError::from(&e))?;
+                Ok(Json::Null)
             },
-        );
-        Some(PendingSetup { id, spec, pr })
+        )
     }
 
-    /// Collect a setup job's outcome; on success the job is ready to
-    /// stream (token recovered from the job result), on failure it is
-    /// failed (the setup job already released anything it held).
-    fn await_setup(
+    /// Collect an overlapped PR's outcome; on success the job is
+    /// ready to stream on `slot`.
+    fn await_program(
         &self,
-        pending: PendingSetup,
-    ) -> Option<(JobId, JobSpec, LeaseToken)> {
-        let PendingSetup { id, spec, pr } = pending;
-        let fail = |msg: String| {
-            self.set_state(id, JobState::Failed(msg));
-        };
+        id: JobId,
+        spec: JobSpec,
+        slot: usize,
+        pr: JobId,
+    ) -> Option<Ready> {
         // Wait out the setup for as long as it runs: a registry-wait
-        // timeout does NOT stop the worker, and abandoning it here
-        // would leak the lease it is still about to admit — exactly
-        // the wedge inline mode avoids by blocking in admission.
+        // timeout does NOT stop the worker, and abandoning it would
+        // desynchronize the pair.
         let outcome = loop {
             match self.jobs.wait(pr, Duration::from_secs(60)) {
                 Err(e) if e.code == ErrorCode::Timeout => continue,
@@ -342,38 +451,62 @@ impl BatchSystem {
         };
         match outcome {
             Ok(rec) => match rec.state {
-                SetupState::Done(body) => {
-                    let token = body
-                        .as_str()
-                        .and_then(LeaseToken::parse);
-                    match token {
-                        Some(token) => Some((id, spec, token)),
-                        None => {
-                            fail("setup returned no lease token"
-                                .to_string());
-                            None
-                        }
-                    }
-                }
+                SetupState::Done(_) => Some(Ready { id, spec, slot }),
                 SetupState::Failed(e) => {
-                    fail(e.to_string());
+                    self.set_state(id, JobState::Failed(e.to_string()));
                     None
                 }
                 other => {
-                    fail(format!("setup job ended {}", other.name()));
+                    self.set_state(
+                        id,
+                        JobState::Failed(format!(
+                            "setup job ended {}",
+                            other.name()
+                        )),
+                    );
                     None
                 }
             },
             Err(e) => {
-                fail(e.to_string());
+                self.set_state(id, JobState::Failed(e.to_string()));
                 None
             }
         }
     }
 
-    /// Stream a programmed job and release its lease.
-    fn finish_stream(&self, id: JobId, spec: &JobSpec, token: LeaseToken) {
-        let Some(handle) = self.sched.lease_handle(token) else {
+    /// Program `slot` on this thread (no overlap available).
+    fn program_inline(
+        &self,
+        id: JobId,
+        spec: JobSpec,
+        bitfile: Bitstream,
+        pair: &Pair,
+        slot: usize,
+    ) -> Option<Ready> {
+        let Some(handle) = self.sched.lease_handle(pair.slots[slot])
+        else {
+            self.set_state(
+                id,
+                JobState::Failed("slot lease vanished".to_string()),
+            );
+            return None;
+        };
+        match handle.program(&bitfile) {
+            Ok(_) => Some(Ready { id, spec, slot }),
+            Err(e) => {
+                self.set_state(id, JobState::Failed(e.to_string()));
+                None
+            }
+        }
+    }
+
+    /// Stream a programmed job on its slot, then split the pair's
+    /// accrual at the job boundary so this job's device-seconds land
+    /// in the ledger now (the slot itself stays admitted).
+    fn stream_slot(&self, pair: &Pair, ready: Ready) {
+        let Ready { id, spec, slot } = ready;
+        let Some(handle) = self.sched.lease_handle(pair.slots[slot])
+        else {
             self.set_state(
                 id,
                 JobState::Failed(
@@ -383,7 +516,11 @@ impl BatchSystem {
             return;
         };
         let result = handle.stream_direct(&spec.stream);
-        let _ = handle.release();
+        // Job boundary: charge this job's segment (for every slot of
+        // the pair — idle time is the tenant's to pay too).
+        for token in &pair.slots {
+            let _ = self.sched.checkpoint_accrual(*token);
+        }
         match result {
             Ok(outcome) => {
                 self.set_state(id, JobState::Done(Box::new(outcome)))
@@ -568,6 +705,46 @@ mod tests {
             st => panic!("unexpected {st:?}"),
         }
         // Nothing leaked: all 16 regions free.
+        let db = bs.hv.db.lock().unwrap();
+        let free: usize = bs
+            .hv
+            .device_ids()
+            .iter()
+            .map(|f| db.free_regions(*f).len())
+            .sum();
+        assert_eq!(free, 16);
+    }
+
+    #[test]
+    fn pipelined_reuses_a_persistent_pair() {
+        let Some(bs) = system() else { return };
+        let user = bs.hv.add_user("pairy");
+        let ids: Vec<JobId> = (0..4)
+            .map(|_| {
+                bs.submit(JobSpec {
+                    user,
+                    payload: JobPayload::UserBitfile(mm16_bitfile()),
+                    stream: StreamConfig::matmul16(256),
+                })
+            })
+            .collect();
+        bs.run_pipelined();
+        for id in ids {
+            assert!(
+                matches!(bs.state(id), Some(JobState::Done(_))),
+                "{:?}",
+                bs.state(id)
+            );
+        }
+        let usage = bs.scheduler().usage(user);
+        // Four same-tenant jobs shared one long-lived pair: at most
+        // two admissions, not four.
+        assert!(usage.granted <= 2, "granted {}", usage.granted);
+        assert_eq!(usage.granted, usage.released);
+        // Accrual split at job boundaries still bills the tenant.
+        assert!(usage.device_seconds > 0.0);
+        assert!(usage.energy_joules > 0.0);
+        // The pair was retired at drain: every region is free again.
         let db = bs.hv.db.lock().unwrap();
         let free: usize = bs
             .hv

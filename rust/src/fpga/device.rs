@@ -102,6 +102,25 @@ pub struct FpgaDevice {
     log: TransitionLog,
     /// Transition counters land here when wired (set at boot).
     metrics: Option<Arc<crate::metrics::Registry>>,
+    /// Live transition events land here when wired (the middleware
+    /// server fans them to `subscribe` clients).
+    transition_sink: Option<SinkFn>,
+}
+
+/// Callback invoked on every validated lifecycle transition. Runs
+/// under the device lock: keep it cheap and never call back into the
+/// device.
+pub type TransitionSink =
+    Arc<dyn Fn(FpgaId, &TransitionRecord) + Send + Sync>;
+
+/// Debug-opaque wrapper so the closure can live inside the
+/// `#[derive(Debug)]` device.
+struct SinkFn(TransitionSink);
+
+impl std::fmt::Debug for SinkFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("TransitionSink(..)")
+    }
 }
 
 impl FpgaDevice {
@@ -128,6 +147,7 @@ impl FpgaDevice {
             saved_link: None,
             log: TransitionLog::new(),
             metrics: None,
+            transition_sink: None,
         }
     }
 
@@ -135,6 +155,11 @@ impl FpgaDevice {
     /// `region.transitions` / `region.transition.<from>_to_<to>`.
     pub fn set_metrics(&mut self, metrics: Arc<crate::metrics::Registry>) {
         self.metrics = Some(metrics);
+    }
+
+    /// Wire a live transition event sink (protocol-3 `region` topic).
+    pub fn set_transition_sink(&mut self, sink: TransitionSink) {
+        self.transition_sink = Some(SinkFn(sink));
     }
 
     // ------------------------------------------------------ accessors
@@ -220,12 +245,16 @@ impl FpgaDevice {
             });
         }
         region.lifecycle = to;
-        self.log.push(TransitionRecord {
+        let rec = TransitionRecord {
             region: region_id,
             from,
             to,
             at,
-        });
+        };
+        self.log.push(rec);
+        if let Some(sink) = &self.transition_sink {
+            (sink.0)(self.id, &rec);
+        }
         if let Some(m) = &self.metrics {
             m.counter("region.transitions").inc();
             m.counter(&format!(
@@ -241,6 +270,11 @@ impl FpgaDevice {
     /// Snapshot of the applied-transition log.
     pub fn transition_log(&self) -> Vec<TransitionRecord> {
         self.log.snapshot()
+    }
+
+    /// Records aged out of the bounded transition log so far.
+    pub fn transition_log_dropped(&self) -> u64 {
+        self.log.dropped()
     }
 
     // --------------------------------------------- full configuration

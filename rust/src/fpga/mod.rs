@@ -19,7 +19,9 @@ pub mod region;
 pub mod resources;
 
 pub use board::{BoardKind, BoardSpec};
-pub use device::{ConfigPort, DeviceError, DeviceStatus, FpgaDevice};
+pub use device::{
+    ConfigPort, DeviceError, DeviceStatus, FpgaDevice, TransitionSink,
+};
 pub use lifecycle::{LifecycleState, TransitionLog, TransitionRecord};
 pub use power::{EnergyMeter, PowerState};
 pub use region::{Region, RegionDesign, RegionShape};

@@ -193,6 +193,21 @@ impl Hypervisor {
         self.devices.keys().copied().collect()
     }
 
+    /// Install a sink invoked on every validated region lifecycle
+    /// transition, across all devices (the middleware server wires
+    /// this to the protocol-3 event bus).
+    pub fn set_region_transition_sink(
+        &self,
+        sink: crate::fpga::TransitionSink,
+    ) {
+        for dev in self.devices.values() {
+            dev.fpga
+                .lock()
+                .unwrap()
+                .set_transition_sink(Arc::clone(&sink));
+        }
+    }
+
     pub fn registry(&self, node: NodeId) -> Option<&Arc<DeviceFileRegistry>> {
         self.registries.get(&node)
     }

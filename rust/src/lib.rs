@@ -35,9 +35,12 @@
 //!   time-boxed reservations, quiesce-based preemption (atomic gang
 //!   relocation, spread-vs-pack policy) and usage accounting.
 //! * [`middleware`] — management-node RPC server, node agents, client
-//!   library and the CLI command surface.
+//!   library and the CLI command surface. Protocol 3: typed
+//!   event-stream API (server-push subscriptions, streaming job
+//!   progress, coalesced `job_wait`); protocol 1 is retired.
 //! * [`batch`] — batch system for long-running unattended jobs, with
-//!   an inline and a PR/stream-pipelined execution mode.
+//!   an inline and a PR/stream-pipelined execution mode (long-lived
+//!   per-worker region pair, accrual split at job boundaries).
 //! * [`vm`] — virtual-machine allocation extension (RSaaS).
 //! * [`service`] — RSaaS / RAaaS / BAaaS façades.
 //! * [`metrics`] — counters, histograms and report tables.

@@ -6,18 +6,25 @@
 //!   persists the device DB + scheduler accounting there (quotas and
 //!   the usage ledger reload on restart).
 //! * `cli <method> [--param value ...]` — one raw middleware call
-//!   against a running server (`--addr host:port`); the protocol-1
-//!   escape hatch.
+//!   against a running server (`--addr host:port`); untyped params
+//!   over the current envelope.
 //! * `demo` — self-contained end-to-end demo on an in-process cloud:
 //!   allocate → program → stream → report (no server needed).
 //! * `status|alloc|program|stream|release|migrate|job|...` — typed
-//!   protocol-2 calls; errors print their machine-readable code.
+//!   calls; errors print their machine-readable code.
+//! * `watch` — protocol-3 server-push subscription: print typed
+//!   events (`job`, `placement`, `region`, `sched` topics) as they
+//!   happen instead of polling. `job --follow` rides the same stream
+//!   for one job's progress frames.
 
 use std::sync::Arc;
 
 use rc3e::config::{ClusterConfig, ServiceModel};
 use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
-use rc3e::middleware::api::{QuotaSetRequest, ReserveRequest};
+use rc3e::middleware::api::{
+    Event, QuotaSetRequest, ReserveRequest, SubscribeRequest,
+    SubscriptionFilter, Topic,
+};
 use rc3e::middleware::{Client, ManagementServer, NodeAgent};
 use rc3e::sched::RequestClass;
 use rc3e::util::cli::{Args, FlagSpec};
@@ -116,6 +123,38 @@ fn flag_specs() -> Vec<FlagSpec> {
             help: "job: cancel a running job",
         },
         FlagSpec {
+            name: "follow",
+            takes_value: false,
+            help: "job: stream progress events until terminal",
+        },
+        FlagSpec {
+            name: "topics",
+            takes_value: true,
+            help: "watch: comma-separated topics \
+                   (job,placement,region,sched; default all)",
+        },
+        FlagSpec {
+            name: "timeout-s",
+            takes_value: true,
+            help: "watch: server-side stream bound per round",
+        },
+        FlagSpec {
+            name: "max-events",
+            takes_value: true,
+            help: "watch: close the stream after N events",
+        },
+        FlagSpec {
+            name: "limit",
+            takes_value: true,
+            help: "lifecycle: newest transition records to fetch",
+        },
+        FlagSpec {
+            name: "policy",
+            takes_value: true,
+            help: "sched: set the preemption landing policy \
+                   (spread|pack)",
+        },
+        FlagSpec {
             name: "timescale",
             takes_value: true,
             help: "virtual-clock wall divisor for serve (0 = no sleep)",
@@ -185,6 +224,8 @@ fn main() {
         "quota" => cmd_quota(&args),
         "reserve" => cmd_reserve(&args),
         "job" => cmd_job(&args),
+        "watch" => cmd_watch(&args),
+        "lifecycle" => cmd_lifecycle(&args),
         _ => {
             print!("{}", usage());
             Ok(())
@@ -215,14 +256,19 @@ fn usage() -> String {
          \x20 release    --alloc alloc-N --lease lt-...\n\
          \x20 migrate    --user user-N --alloc alloc-N --lease lt-...\n\
          \x20 energy\n\
-         \x20 sched      scheduler status + admission-wait histogram\n\
+         \x20 sched      scheduler status + admission-wait histogram \
+         [--policy spread|pack]\n\
          \x20 quota      --user user-N [--max-vfpgas N --budget-s S \
          --weight W]\n\
          \x20 usage      per-tenant device-second + energy report\n\
          \x20 reserve    --user user-N --regions N [--model raaas \
          --duration-s S]\n\
          \x20 job        --job job-N [--lease lt-...] \
-         [--wait | --cancel]\n\n",
+         [--wait | --cancel | --follow]\n\
+         \x20 watch      server-push events [--topics job,sched,... \
+         --lease lt-... --max-events N --timeout-s S]\n\
+         \x20 lifecycle  --fpga fpga-N [--limit N] region transition \
+         log\n\n",
     );
     out.push_str(&rc3e::util::cli::usage("rc3e", "flags", &flag_specs()));
     out
@@ -463,9 +509,20 @@ fn cmd_energy(args: &Args) -> Result<(), String> {
 
 /// `rc3e sched` — queue snapshot plus the admission-wait histogram,
 /// queue-depth gauge and region-lifecycle telemetry served by the
-/// `monitor` RPC.
+/// `monitor` RPC. `--policy spread|pack` sets the preemption landing
+/// policy first.
 fn cmd_sched(args: &Args) -> Result<(), String> {
     let mut client = connect(args)?;
+    if let Some(p) = args.get("policy") {
+        let set = client
+            .sched_policy_set(p)
+            .map_err(|e| e.to_string())?;
+        println!("preempt policy set to {}", set.policy);
+    } else {
+        let pol =
+            client.sched_policy_get().map_err(|e| e.to_string())?;
+        println!("preempt policy: {}", pol.policy);
+    }
     let status = client.sched_status().map_err(|e| e.to_string())?;
     let mon = client.monitor().map_err(|e| e.to_string())?;
     println!("{}", status.status.to_pretty());
@@ -590,12 +647,16 @@ fn cmd_reserve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// `rc3e job --job job-N [--wait | --cancel]`.
+/// `rc3e job --job job-N [--wait | --cancel | --follow]`.
 fn cmd_job(args: &Args) -> Result<(), String> {
     let job = job_flag(args)?;
     let mut client = connect(args)?;
-    if let Some(token) = lease_flag(args)? {
+    let token = lease_flag(args)?;
+    if let Some(token) = token {
         client.set_job_token(job, token);
+    }
+    if args.has("follow") {
+        return follow_job(&mut client, job, token);
     }
     let body = if args.has("cancel") {
         client.job_cancel(job)
@@ -606,6 +667,144 @@ fn cmd_job(args: &Args) -> Result<(), String> {
     }
     .map_err(|e| e.to_string())?;
     println!("{}", body.to_json().to_pretty());
+    Ok(())
+}
+
+/// `rc3e job --follow`: ride the protocol-3 event stream for one
+/// job's progress frames (short subscription rounds so each round's
+/// terminal frame arrives promptly), then print the job body.
+fn follow_job(
+    client: &mut Client,
+    job: rc3e::util::ids::JobId,
+    token: Option<LeaseToken>,
+) -> Result<(), String> {
+    let mut filter = SubscriptionFilter::topic(Topic::Job);
+    filter.job_ids = vec![job];
+    loop {
+        let mut terminal = false;
+        let stream = client
+            .subscribe(&SubscribeRequest {
+                filter: filter.clone(),
+                lease: token,
+                max_events: None,
+                timeout_s: Some(5.0),
+            })
+            .map_err(|e| e.to_string())?;
+        for frame in stream {
+            let frame = frame.map_err(|e| e.to_string())?;
+            if let Event::JobProgress {
+                phase, pct, state, ..
+            } = &frame.event
+            {
+                eprintln!("{state:>9} {pct:5.1}%  {phase}");
+                if state != "running" {
+                    terminal = true;
+                }
+            }
+        }
+        if terminal {
+            break;
+        }
+        // The job may have finished before (or between) rounds — the
+        // stream only carries live events.
+        let body =
+            client.job_status(job).map_err(|e| e.to_string())?;
+        if body.is_terminal() {
+            break;
+        }
+    }
+    let body = client.job_status(job).map_err(|e| e.to_string())?;
+    println!("{}", body.to_json().to_pretty());
+    Ok(())
+}
+
+/// `rc3e watch` — print server-push events as they happen.
+fn cmd_watch(args: &Args) -> Result<(), String> {
+    let mut client = connect(args)?;
+    let mut filter = SubscriptionFilter::all();
+    if let Some(t) = args.get("topics") {
+        for part in t.split(',') {
+            let part = part.trim();
+            filter.topics.push(Topic::parse(part).ok_or_else(
+                || format!("bad --topics entry '{part}'"),
+            )?);
+        }
+    }
+    if let Some(f) = args.get("fpga") {
+        filter.fpga_ids.push(
+            FpgaId::parse(f).ok_or_else(|| format!("bad --fpga '{f}'"))?,
+        );
+    }
+    if let Some(j) = args.get("job") {
+        filter.job_ids.push(
+            JobId::parse(j).ok_or_else(|| format!("bad --job '{j}'"))?,
+        );
+    }
+    let timeout_s = match args.get("timeout-s") {
+        Some(v) => Some(
+            v.parse::<f64>().map_err(|e| format!("--timeout-s: {e}"))?,
+        ),
+        None => None,
+    };
+    let max_events = match args.get("max-events") {
+        Some(v) => Some(
+            v.parse::<u64>().map_err(|e| format!("--max-events: {e}"))?,
+        ),
+        None => None,
+    };
+    let lease = lease_flag(args)?;
+    // Long watch: one server-side window per round, re-subscribing
+    // when the terminal frame arrives (see docs/PROTOCOL.md). An
+    // explicit --max-events bounds the watch to a single round.
+    loop {
+        let stream = client
+            .subscribe(&SubscribeRequest {
+                filter: filter.clone(),
+                lease,
+                max_events,
+                timeout_s,
+            })
+            .map_err(|e| e.to_string())?;
+        eprintln!(
+            "subscription {} open ({:.0} s window; Ctrl-C to stop)",
+            stream.header().subscription,
+            stream.header().timeout_s
+        );
+        for frame in stream {
+            let frame = frame.map_err(|e| e.to_string())?;
+            println!("#{:<5} {}", frame.seq, frame.event.to_json());
+        }
+        if max_events.is_some() {
+            return Ok(());
+        }
+    }
+}
+
+/// `rc3e lifecycle --fpga fpga-N [--limit N]` — the device's region
+/// transition log (how regions got into their current states).
+fn cmd_lifecycle(args: &Args) -> Result<(), String> {
+    let fpga = fpga_flag(args)?;
+    let limit = match args.get("limit") {
+        Some(v) => Some(
+            v.parse::<u64>().map_err(|e| format!("--limit: {e}"))?,
+        ),
+        None => None,
+    };
+    let mut client = connect(args)?;
+    let resp = client
+        .lifecycle_log(fpga, limit)
+        .map_err(|e| e.to_string())?;
+    for r in &resp.records {
+        println!(
+            "{:>10.3}s  {:<9} {} -> {}",
+            r.at_s, r.region, r.from, r.to
+        );
+    }
+    println!(
+        "{} records ({} aged out of the bounded log)",
+        resp.records.len(),
+        resp.dropped
+    );
     Ok(())
 }
 
@@ -627,7 +826,9 @@ fn cmd_cli(args: &Args) -> Result<(), String> {
             Json::from(m.parse::<u64>().map_err(|e| e.to_string())?),
         );
     }
-    let body = client.call(method, params)?;
+    let body = client
+        .call_v2(method, params)
+        .map_err(|e| e.to_string())?;
     println!("{}", body.to_pretty());
     Ok(())
 }

@@ -8,8 +8,8 @@
 //! The agent speaks the same typed, versioned envelopes as the
 //! management server ([`super::api`]): its two methods
 //! ([`Method::AgentHello`], [`Method::AgentStatus`]) dispatch through
-//! typed request/response structs, and protocol-1 callers keep the
-//! old string-error shape.
+//! typed request/response structs. Protocol 1 is retired here too —
+//! proto-less requests are rejected with `protocol_mismatch`.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -102,13 +102,12 @@ fn serve_conn(
             }
         }
         let resp = match Request::from_json(&frame) {
-            Err(e) => Response::error(&e),
+            Err(e) => Response::failure(None, ApiError::bad_request(e)),
             Ok(req) => {
-                let proto = req.proto.unwrap_or(1);
                 let result = req.negotiate_proto().and_then(|_| {
                     dispatch(&hv, node, &req.method, &req.params)
                 });
-                respond(proto, req.id, result)
+                respond(req.id, result)
             }
         };
         write_frame(&mut stream, &resp.to_json())?;
@@ -163,13 +162,36 @@ mod tests {
         let agent = NodeAgent::spawn(Arc::clone(&hv), NodeId(0), None).unwrap();
         let mut client = Client::connect(agent.addr()).unwrap();
         let body = client
-            .call(
+            .call_v2(
                 "agent.status",
                 Json::obj(vec![("fpga", Json::from("fpga-0"))]),
             )
             .unwrap();
         assert_eq!(body.get("regions_total").as_u64(), Some(4));
         assert_eq!(body.get("board").as_str(), Some("vc707"));
+    }
+
+    #[test]
+    fn agent_rejects_retired_protocol_1() {
+        let hv = hv();
+        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
+        let mut stream =
+            TcpStream::connect(agent.addr()).unwrap();
+        let raw = Json::obj(vec![
+            ("method", Json::from("agent.hello")),
+            ("params", Json::obj(vec![])),
+        ]);
+        super::write_frame(&mut stream, &raw).unwrap();
+        let frame =
+            super::read_frame(&mut stream).unwrap().unwrap();
+        let err = Response::from_json(&frame)
+            .unwrap()
+            .into_api_result()
+            .unwrap_err();
+        assert_eq!(
+            err.code,
+            super::super::api::ErrorCode::ProtocolMismatch
+        );
     }
 
     #[test]
@@ -192,8 +214,8 @@ mod tests {
         let agent =
             NodeAgent::spawn(Arc::clone(&hv), NodeId(1), None).unwrap();
         let mut client = Client::connect(agent.addr()).unwrap();
-        let body = client.call("agent.hello", Json::obj(vec![])).unwrap();
-        assert_eq!(body.get("node").as_str(), Some("node-1"));
+        let hello = client.agent_hello().unwrap();
+        assert_eq!(hello.node, NodeId(1));
     }
 
     #[test]
@@ -201,7 +223,9 @@ mod tests {
         let hv = hv();
         let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
         let mut client = Client::connect(agent.addr()).unwrap();
-        assert!(client.call("agent.reboot", Json::obj(vec![])).is_err());
+        assert!(client
+            .call_v2("agent.reboot", Json::obj(vec![]))
+            .is_err());
     }
 
     #[test]
@@ -210,13 +234,13 @@ mod tests {
         let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
         let mut client = Client::connect(agent.addr()).unwrap();
         assert!(client
-            .call(
+            .call_v2(
                 "agent.status",
                 Json::obj(vec![("fpga", Json::from("fpga-99"))])
             )
             .is_err());
         // Connection still usable after the error.
-        assert!(client.call("agent.hello", Json::obj(vec![])).is_ok());
+        assert!(client.agent_hello().is_ok());
     }
 
     #[test]
@@ -226,10 +250,13 @@ mod tests {
         plan.arm("agent.drop_conn", crate::testing::FailPoint::OnHit(1));
         let agent = NodeAgent::spawn(hv, NodeId(0), Some(plan)).unwrap();
         let mut client = Client::connect(agent.addr()).unwrap();
-        let err = client.call("agent.hello", Json::obj(vec![])).unwrap_err();
-        assert!(err.contains("io") || err.contains("eof"), "{err}");
+        let err = client.agent_hello().unwrap_err();
+        assert!(
+            err.message.contains("io") || err.message.contains("eof"),
+            "{err}"
+        );
         // Reconnect works (the node came back).
         let mut c2 = Client::connect(agent.addr()).unwrap();
-        assert!(c2.call("agent.hello", Json::obj(vec![])).is_ok());
+        assert!(c2.agent_hello().is_ok());
     }
 }

@@ -1,4 +1,4 @@
-//! The typed, versioned middleware API (v2).
+//! The typed, versioned middleware API (v2/v3).
 //!
 //! The wire surface used to be a single stringly-typed `match` in
 //! [`super::server`]: every handler fished fields out of raw
@@ -22,11 +22,17 @@
 //! * Protocol version negotiation: `hello` advertises the server's
 //!   `[PROTO_MIN, PROTO_MAX]` window and rejects clients whose range
 //!   does not overlap with [`ErrorCode::ProtocolMismatch`].
+//! * Protocol 3: the **event-stream surface** — `subscribe` opens a
+//!   multi-frame response delivering typed [`Event`]s matched by a
+//!   [`SubscriptionFilter`], so clients react to job progress,
+//!   placement changes and region lifecycle transitions by
+//!   server push instead of polling.
 //!
-//! Wire compatibility: requests without a `proto` field are treated
-//! as protocol 1 (the previous untyped surface) and keep their old
-//! response shapes — string errors, bare arrays, synchronous long
-//! operations — for exactly one version behind.
+//! Protocol 1 (the untyped surface: string errors, bare-array
+//! catalogues, synchronous long operations, honor-system `user`
+//! auth) was kept readable for exactly one version behind and is now
+//! **retired**: proto-less requests are rejected with
+//! `protocol_mismatch` before dispatch.
 
 use crate::config::ServiceModel;
 use crate::hypervisor::HypervisorError;
@@ -38,11 +44,12 @@ use crate::util::ids::{
 };
 use crate::util::json::Json;
 
-/// Oldest protocol this server/client still speaks (the untyped v1
+/// Oldest protocol this server/client still speaks (the typed v2
+/// surface; the untyped protocol 1 is retired).
+pub const PROTO_MIN: u32 = 2;
+/// Newest protocol this server/client speaks (the event-stream
 /// surface).
-pub const PROTO_MIN: u32 = 1;
-/// Newest protocol this server/client speaks (the typed surface).
-pub const PROTO_MAX: u32 = 2;
+pub const PROTO_MAX: u32 = 3;
 
 // ====================================================== error codes
 
@@ -330,13 +337,20 @@ pub enum Method {
     JobStatus,
     JobWait,
     JobCancel,
+    /// Protocol 3: open a server-push event subscription (the only
+    /// multi-frame-response method).
+    Subscribe,
+    /// The per-device region lifecycle transition log.
+    LifecycleLog,
+    SchedPolicyGet,
+    SchedPolicySet,
     AgentHello,
     AgentStatus,
 }
 
 impl Method {
     /// Every method, for dispatch-completeness tests and the docs.
-    pub const ALL: [Method; 28] = [
+    pub const ALL: [Method; 32] = [
         Method::Hello,
         Method::AddUser,
         Method::Status,
@@ -363,6 +377,10 @@ impl Method {
         Method::JobStatus,
         Method::JobWait,
         Method::JobCancel,
+        Method::Subscribe,
+        Method::LifecycleLog,
+        Method::SchedPolicyGet,
+        Method::SchedPolicySet,
         Method::AgentHello,
         Method::AgentStatus,
     ];
@@ -395,6 +413,10 @@ impl Method {
             Method::JobStatus => "job_status",
             Method::JobWait => "job_wait",
             Method::JobCancel => "job_cancel",
+            Method::Subscribe => "subscribe",
+            Method::LifecycleLog => "lifecycle_log",
+            Method::SchedPolicyGet => "sched_policy_get",
+            Method::SchedPolicySet => "sched_policy_set",
             Method::AgentHello => "agent.hello",
             Method::AgentStatus => "agent.status",
         }
@@ -506,8 +528,10 @@ fn json_or_null_f64(v: Option<f64>) -> Json {
 
 // ============================================ hello / negotiation
 
-/// `hello` — version negotiation. A v1 client sends no protocol
-/// fields at all, which reads as the window `[1, 1]`.
+/// `hello` — version negotiation. A legacy v1 client sends no
+/// protocol fields at all, which reads as the window `[1, 1]` — no
+/// overlap with the supported `[2, 3]`, so it is rejected with
+/// `protocol_mismatch`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HelloRequest {
     pub proto_min: u32,
@@ -949,9 +973,8 @@ impl AllocPhysicalResponse {
     }
 }
 
-/// `release`. On protocol ≥ 2 the `lease` token is required and the
-/// *whole* lease (every gang member) is released; protocol 1 keeps
-/// the honor-system by-allocation shape for one version behind.
+/// `release`. The `lease` token is required and the *whole* lease
+/// (every gang member) is released.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReleaseRequest {
     pub alloc: AllocationId,
@@ -1325,13 +1348,6 @@ impl ServicesResponse {
         )])
     }
 
-    /// Protocol-1 shape: the bare array.
-    pub fn to_legacy_json(&self) -> Json {
-        Json::Arr(
-            self.services.iter().cloned().map(Json::from).collect(),
-        )
-    }
-
     pub fn from_json(p: &Json) -> Result<ServicesResponse, ApiError> {
         let arr = p.get("services").as_arr().ok_or_else(|| {
             ApiError::bad_request("missing array field 'services'")
@@ -1371,11 +1387,6 @@ impl CoresResponse {
                 self.cores.iter().cloned().map(Json::from).collect(),
             ),
         )])
-    }
-
-    /// Protocol-1 shape: the bare array.
-    pub fn to_legacy_json(&self) -> Json {
-        Json::Arr(self.cores.iter().cloned().map(Json::from).collect())
     }
 
     pub fn from_json(p: &Json) -> Result<CoresResponse, ApiError> {
@@ -2206,6 +2217,605 @@ impl JobBody {
     }
 }
 
+// ==================================== protocol 3: event streaming
+
+/// Event topics a subscription can select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Topic {
+    /// Job progress frames ([`Event::JobProgress`]).
+    Job,
+    /// Lease placement changes ([`Event::LeasePlacementChanged`]).
+    Placement,
+    /// Region lifecycle transitions ([`Event::RegionTransition`]).
+    Region,
+    /// Scheduler telemetry ([`Event::QueueDepth`],
+    /// [`Event::GrantIssued`]).
+    Sched,
+}
+
+impl Topic {
+    pub const ALL: [Topic; 4] =
+        [Topic::Job, Topic::Placement, Topic::Region, Topic::Sched];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Topic::Job => "job",
+            Topic::Placement => "placement",
+            Topic::Region => "region",
+            Topic::Sched => "sched",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Topic> {
+        Topic::ALL.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+/// What a subscription wants to see. Empty vectors mean "no
+/// constraint on that axis". The *tenant* axis is not client-chosen:
+/// it comes from the lease token presented at `subscribe` time —
+/// tenant- and token-scoped events are only ever delivered to the
+/// subscription holding the matching capability.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SubscriptionFilter {
+    pub topics: Vec<Topic>,
+    pub job_ids: Vec<JobId>,
+    pub fpga_ids: Vec<FpgaId>,
+}
+
+impl SubscriptionFilter {
+    /// Everything the subscription is allowed to see.
+    pub fn all() -> SubscriptionFilter {
+        SubscriptionFilter::default()
+    }
+
+    /// Only `topic`.
+    pub fn topic(topic: Topic) -> SubscriptionFilter {
+        SubscriptionFilter {
+            topics: vec![topic],
+            ..SubscriptionFilter::default()
+        }
+    }
+
+    /// Does this filter select `event`? (Scope/tenant checks are the
+    /// bus's job — this is the client-chosen axis only.)
+    pub fn matches(&self, event: &Event) -> bool {
+        if !self.topics.is_empty()
+            && !self.topics.contains(&event.topic())
+        {
+            return false;
+        }
+        if !self.job_ids.is_empty() {
+            if let Some(job) = event.job_id() {
+                if !self.job_ids.contains(&job) {
+                    return false;
+                }
+            }
+        }
+        if !self.fpga_ids.is_empty() {
+            if let Some(fpga) = event.fpga_id() {
+                if !self.fpga_ids.contains(&fpga) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![]);
+        if !self.topics.is_empty() {
+            j.set(
+                "topics",
+                Json::Arr(
+                    self.topics
+                        .iter()
+                        .map(|t| Json::from(t.name()))
+                        .collect(),
+                ),
+            );
+        }
+        if !self.job_ids.is_empty() {
+            j.set(
+                "job_ids",
+                Json::Arr(
+                    self.job_ids
+                        .iter()
+                        .map(|id| Json::from(id.to_string()))
+                        .collect(),
+                ),
+            );
+        }
+        if !self.fpga_ids.is_empty() {
+            j.set(
+                "fpga_ids",
+                Json::Arr(
+                    self.fpga_ids
+                        .iter()
+                        .map(|id| Json::from(id.to_string()))
+                        .collect(),
+                ),
+            );
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<SubscriptionFilter, ApiError> {
+        let mut filter = SubscriptionFilter::default();
+        if let Some(arr) = p.get("topics").as_arr() {
+            for t in arr {
+                let s = t.as_str().ok_or_else(|| {
+                    ApiError::bad_request("non-string topic")
+                })?;
+                filter.topics.push(Topic::parse(s).ok_or_else(|| {
+                    ApiError::bad_request(format!("unknown topic '{s}'"))
+                })?);
+            }
+        }
+        if let Some(arr) = p.get("job_ids").as_arr() {
+            for v in arr {
+                let s = v.as_str().unwrap_or("");
+                filter.job_ids.push(JobId::parse(s).ok_or_else(|| {
+                    ApiError::bad_request(format!("bad job id '{s}'"))
+                })?);
+            }
+        }
+        if let Some(arr) = p.get("fpga_ids").as_arr() {
+            for v in arr {
+                let s = v.as_str().unwrap_or("");
+                filter.fpga_ids.push(FpgaId::parse(s).ok_or_else(
+                    || {
+                        ApiError::bad_request(format!(
+                            "bad fpga id '{s}'"
+                        ))
+                    },
+                )?);
+            }
+        }
+        Ok(filter)
+    }
+}
+
+/// A typed server-push event, delivered as `subscribe` stream
+/// frames. The wire form is tagged with `"type"`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A job moved through a phase boundary or stream checkpoint —
+    /// and, on the terminal frame, finished: `state` leaves
+    /// `"running"` and `result` carries the exact job body
+    /// `job_wait` returns.
+    JobProgress {
+        job: JobId,
+        /// RPC method the job runs ("stream", "program_full", ...).
+        method: String,
+        /// Phase label ("configuring", "streaming", "done", ...).
+        phase: String,
+        bytes_streamed: u64,
+        /// Rough completion estimate in [0, 100].
+        pct: f64,
+        /// "running" until the terminal frame.
+        state: String,
+        /// Terminal frames only: the job body (same JSON `job_wait`
+        /// returns).
+        result: Option<Json>,
+    },
+    /// A lease member was relocated (preemption, operator `migrate`,
+    /// or gang relocation): the placement the tenant cached is stale.
+    LeasePlacementChanged {
+        alloc: AllocationId,
+        /// Where the member lives now.
+        vfpga: VfpgaId,
+        fpga: FpgaId,
+        /// Lifetime move count of the member (monotonic).
+        migrations: u64,
+    },
+    /// One validated region lifecycle transition (sourced from the
+    /// per-device transition log).
+    RegionTransition {
+        fpga: FpgaId,
+        region: VfpgaId,
+        from: String,
+        to: String,
+        at_s: f64,
+    },
+    /// Admission queue depth changed.
+    QueueDepth { depth: u64 },
+    /// The scheduler issued a grant (operator telemetry).
+    GrantIssued {
+        alloc: AllocationId,
+        tenant: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+        wait_ms: f64,
+    },
+}
+
+impl Event {
+    pub fn topic(&self) -> Topic {
+        match self {
+            Event::JobProgress { .. } => Topic::Job,
+            Event::LeasePlacementChanged { .. } => Topic::Placement,
+            Event::RegionTransition { .. } => Topic::Region,
+            Event::QueueDepth { .. } | Event::GrantIssued { .. } => {
+                Topic::Sched
+            }
+        }
+    }
+
+    /// Wire tag of this event kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::JobProgress { .. } => "job_progress",
+            Event::LeasePlacementChanged { .. } => {
+                "lease_placement_changed"
+            }
+            Event::RegionTransition { .. } => "region_transition",
+            Event::QueueDepth { .. } => "queue_depth",
+            Event::GrantIssued { .. } => "grant_issued",
+        }
+    }
+
+    /// The job this event concerns, for filter matching.
+    pub fn job_id(&self) -> Option<JobId> {
+        match self {
+            Event::JobProgress { job, .. } => Some(*job),
+            _ => None,
+        }
+    }
+
+    /// The device this event concerns, for filter matching.
+    pub fn fpga_id(&self) -> Option<FpgaId> {
+        match self {
+            Event::LeasePlacementChanged { fpga, .. }
+            | Event::RegionTransition { fpga, .. } => Some(*fpga),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j =
+            Json::obj(vec![("type", Json::from(self.kind()))]);
+        match self {
+            Event::JobProgress {
+                job,
+                method,
+                phase,
+                bytes_streamed,
+                pct,
+                state,
+                result,
+            } => {
+                j.set("job", Json::from(job.to_string()));
+                j.set("method", Json::from(method.as_str()));
+                j.set("phase", Json::from(phase.as_str()));
+                j.set("bytes_streamed", Json::from(*bytes_streamed));
+                j.set("pct", Json::from(*pct));
+                j.set("state", Json::from(state.as_str()));
+                if let Some(r) = result {
+                    j.set("result", r.clone());
+                }
+            }
+            Event::LeasePlacementChanged {
+                alloc,
+                vfpga,
+                fpga,
+                migrations,
+            } => {
+                j.set("alloc", Json::from(alloc.to_string()));
+                j.set("vfpga", Json::from(vfpga.to_string()));
+                j.set("fpga", Json::from(fpga.to_string()));
+                j.set("migrations", Json::from(*migrations));
+            }
+            Event::RegionTransition {
+                fpga,
+                region,
+                from,
+                to,
+                at_s,
+            } => {
+                j.set("fpga", Json::from(fpga.to_string()));
+                j.set("region", Json::from(region.to_string()));
+                j.set("from", Json::from(from.as_str()));
+                j.set("to", Json::from(to.as_str()));
+                j.set("at_s", Json::from(*at_s));
+            }
+            Event::QueueDepth { depth } => {
+                j.set("depth", Json::from(*depth));
+            }
+            Event::GrantIssued {
+                alloc,
+                tenant,
+                model,
+                class,
+                wait_ms,
+            } => {
+                j.set("alloc", Json::from(alloc.to_string()));
+                j.set("tenant", Json::from(tenant.to_string()));
+                j.set("model", Json::from(model.name()));
+                j.set("class", Json::from(class.name()));
+                j.set("wait_ms", Json::from(*wait_ms));
+            }
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<Event, ApiError> {
+        match want_str(p, "type")?.as_str() {
+            "job_progress" => Ok(Event::JobProgress {
+                job: want_id(p, "job", JobId::parse)?,
+                method: want_str(p, "method")?,
+                phase: want_str(p, "phase")?,
+                bytes_streamed: want_u64(p, "bytes_streamed")?,
+                pct: want_f64(p, "pct")?,
+                state: want_str(p, "state")?,
+                result: match p.get("result") {
+                    Json::Null => None,
+                    v => Some(v.clone()),
+                },
+            }),
+            "lease_placement_changed" => {
+                Ok(Event::LeasePlacementChanged {
+                    alloc: want_id(p, "alloc", AllocationId::parse)?,
+                    vfpga: want_id(p, "vfpga", VfpgaId::parse)?,
+                    fpga: want_id(p, "fpga", FpgaId::parse)?,
+                    migrations: want_u64(p, "migrations")?,
+                })
+            }
+            "region_transition" => Ok(Event::RegionTransition {
+                fpga: want_id(p, "fpga", FpgaId::parse)?,
+                region: want_id(p, "region", VfpgaId::parse)?,
+                from: want_str(p, "from")?,
+                to: want_str(p, "to")?,
+                at_s: want_f64(p, "at_s")?,
+            }),
+            "queue_depth" => Ok(Event::QueueDepth {
+                depth: want_u64(p, "depth")?,
+            }),
+            "grant_issued" => Ok(Event::GrantIssued {
+                alloc: want_id(p, "alloc", AllocationId::parse)?,
+                tenant: want_id(p, "tenant", UserId::parse)?,
+                model: ServiceModel::parse(&want_str(p, "model")?)
+                    .ok_or_else(|| {
+                        ApiError::bad_request("unknown model in event")
+                    })?,
+                class: RequestClass::parse(&want_str(p, "class")?)
+                    .ok_or_else(|| {
+                        ApiError::bad_request("unknown class in event")
+                    })?,
+                wait_ms: want_f64(p, "wait_ms")?,
+            }),
+            t => Err(ApiError::bad_request(format!(
+                "unknown event type '{t}'"
+            ))),
+        }
+    }
+}
+
+/// `subscribe` — open a server-push event stream (protocol 3 only;
+/// the response is multi-frame). The optional `lease` token scopes
+/// the subscription to that capability's tenant: token- and
+/// tenant-scoped events (job progress, placement changes) are only
+/// delivered to the holder; without a token only public (operator)
+/// events arrive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubscribeRequest {
+    pub filter: SubscriptionFilter,
+    pub lease: Option<LeaseToken>,
+    /// Close the stream after this many events (None = bounded only
+    /// by the timeout).
+    pub max_events: Option<u64>,
+    /// Server-side stream bound in wall seconds (clamped like
+    /// `job_wait`; long watches re-subscribe on the terminal frame).
+    pub timeout_s: Option<f64>,
+}
+
+impl SubscribeRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = self.filter.to_json();
+        set_opt_lease(&mut j, "lease", self.lease);
+        if let Some(n) = self.max_events {
+            j.set("max_events", Json::from(n));
+        }
+        if let Some(t) = self.timeout_s {
+            j.set("timeout_s", Json::from(t));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<SubscribeRequest, ApiError> {
+        Ok(SubscribeRequest {
+            filter: SubscriptionFilter::from_json(p)?,
+            lease: opt_lease(p, "lease")?,
+            max_events: opt_u64(p, "max_events"),
+            timeout_s: opt_f64(p, "timeout_s"),
+        })
+    }
+}
+
+/// The `subscribe` stream *header* body: the subscription id plus
+/// the effective (clamped) bounds the server will honor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubscribeResponse {
+    pub subscription: u64,
+    pub timeout_s: f64,
+}
+
+impl SubscribeResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("subscription", Json::from(self.subscription)),
+            ("timeout_s", Json::from(self.timeout_s)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<SubscribeResponse, ApiError> {
+        Ok(SubscribeResponse {
+            subscription: want_u64(p, "subscription")?,
+            timeout_s: want_f64(p, "timeout_s")?,
+        })
+    }
+}
+
+// ============================================ lifecycle transition log
+
+/// One applied region lifecycle transition on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransitionBody {
+    pub region: VfpgaId,
+    pub from: String,
+    pub to: String,
+    pub at_s: f64,
+}
+
+impl TransitionBody {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("region", Json::from(self.region.to_string())),
+            ("from", Json::from(self.from.as_str())),
+            ("to", Json::from(self.to.as_str())),
+            ("at_s", Json::from(self.at_s)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<TransitionBody, ApiError> {
+        Ok(TransitionBody {
+            region: want_id(p, "region", VfpgaId::parse)?,
+            from: want_str(p, "from")?,
+            to: want_str(p, "to")?,
+            at_s: want_f64(p, "at_s")?,
+        })
+    }
+}
+
+/// `lifecycle_log` — the newest records of one device's bounded
+/// transition log (`db_dump` only shows *current* states; the log
+/// shows how regions got there).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleLogRequest {
+    pub fpga: FpgaId,
+    /// Newest records to return (absent = the whole retained log).
+    pub limit: Option<u64>,
+}
+
+impl LifecycleLogRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j =
+            Json::obj(vec![("fpga", Json::from(self.fpga.to_string()))]);
+        if let Some(n) = self.limit {
+            j.set("limit", Json::from(n));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<LifecycleLogRequest, ApiError> {
+        Ok(LifecycleLogRequest {
+            fpga: want_id(p, "fpga", FpgaId::parse)?,
+            limit: opt_u64(p, "limit"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleLogResponse {
+    pub fpga: FpgaId,
+    /// Oldest-first within the returned window.
+    pub records: Vec<TransitionBody>,
+    /// Records aged out of the bounded log before this query.
+    pub dropped: u64,
+}
+
+impl LifecycleLogResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fpga", Json::from(self.fpga.to_string())),
+            (
+                "records",
+                Json::Arr(
+                    self.records.iter().map(|r| r.to_json()).collect(),
+                ),
+            ),
+            ("dropped", Json::from(self.dropped)),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<LifecycleLogResponse, ApiError> {
+        let records = p
+            .get("records")
+            .as_arr()
+            .ok_or_else(|| {
+                ApiError::bad_request("missing array field 'records'")
+            })?
+            .iter()
+            .map(TransitionBody::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(LifecycleLogResponse {
+            fpga: want_id(p, "fpga", FpgaId::parse)?,
+            records,
+            dropped: want_u64(p, "dropped")?,
+        })
+    }
+}
+
+// ============================================== scheduler policy knob
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedPolicyGetRequest;
+
+impl SchedPolicyGetRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(
+        _p: &Json,
+    ) -> Result<SchedPolicyGetRequest, ApiError> {
+        Ok(SchedPolicyGetRequest)
+    }
+}
+
+/// `sched_policy_set` — where preemption relocates its victims
+/// ("pack" consolidates, "spread" balances).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedPolicySetRequest {
+    pub policy: String,
+}
+
+impl SchedPolicySetRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("policy", Json::from(self.policy.as_str()))])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<SchedPolicySetRequest, ApiError> {
+        Ok(SchedPolicySetRequest {
+            policy: want_str(p, "policy")?,
+        })
+    }
+}
+
+/// Response of both policy RPCs: the effective policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedPolicyResponse {
+    pub policy: String,
+}
+
+impl SchedPolicyResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("policy", Json::from(self.policy.as_str()))])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<SchedPolicyResponse, ApiError> {
+        Ok(SchedPolicyResponse {
+            policy: want_str(p, "policy")?,
+        })
+    }
+}
+
 // ============================================================ agent
 
 #[derive(Debug, Clone, PartialEq)]
@@ -2317,14 +2927,161 @@ mod tests {
     #[test]
     fn hello_negotiation_window() {
         assert_eq!(HelloRequest::ours().negotiate(), Some(PROTO_MAX));
+        // A legacy (proto-less) client reads as window [1, 1] — below
+        // the supported window now that protocol 1 is retired.
         let legacy = HelloRequest::from_json(&Json::obj(vec![])).unwrap();
         assert_eq!((legacy.proto_min, legacy.proto_max), (1, 1));
-        assert_eq!(legacy.negotiate(), Some(1));
+        assert_eq!(legacy.negotiate(), None);
+        // A pure-v2 client still negotiates v2.
+        let v2_only = HelloRequest {
+            proto_min: 2,
+            proto_max: 2,
+        };
+        assert_eq!(v2_only.negotiate(), Some(2));
         let future = HelloRequest {
             proto_min: PROTO_MAX + 1,
             proto_max: PROTO_MAX + 5,
         };
         assert_eq!(future.negotiate(), None);
+    }
+
+    #[test]
+    fn topics_and_events_roundtrip() {
+        for t in Topic::ALL {
+            assert_eq!(Topic::parse(t.name()), Some(t));
+        }
+        assert_eq!(Topic::parse("everything"), None);
+        let events = vec![
+            Event::JobProgress {
+                job: JobId(3),
+                method: "stream".into(),
+                phase: "streaming".into(),
+                bytes_streamed: 4096,
+                pct: 50.0,
+                state: "running".into(),
+                result: None,
+            },
+            Event::JobProgress {
+                job: JobId(3),
+                method: "stream".into(),
+                phase: "done".into(),
+                bytes_streamed: 8192,
+                pct: 100.0,
+                state: "done".into(),
+                result: Some(Json::obj(vec![(
+                    "state",
+                    Json::from("done"),
+                )])),
+            },
+            Event::LeasePlacementChanged {
+                alloc: AllocationId(1),
+                vfpga: VfpgaId(5),
+                fpga: FpgaId(2),
+                migrations: 1,
+            },
+            Event::RegionTransition {
+                fpga: FpgaId(0),
+                region: VfpgaId(1),
+                from: "free".into(),
+                to: "reserved".into(),
+                at_s: 0.5,
+            },
+            Event::QueueDepth { depth: 4 },
+            Event::GrantIssued {
+                alloc: AllocationId(9),
+                tenant: UserId(0),
+                model: ServiceModel::RAaaS,
+                class: RequestClass::Interactive,
+                wait_ms: 1.25,
+            },
+        ];
+        for ev in events {
+            let rt = Event::from_json(&ev.to_json()).unwrap();
+            assert_eq!(rt, ev);
+        }
+        assert!(Event::from_json(&Json::obj(vec![(
+            "type",
+            Json::from("martian")
+        )]))
+        .is_err());
+    }
+
+    #[test]
+    fn subscription_filter_matches_by_axis() {
+        let progress = Event::JobProgress {
+            job: JobId(7),
+            method: "stream".into(),
+            phase: "streaming".into(),
+            bytes_streamed: 0,
+            pct: 10.0,
+            state: "running".into(),
+            result: None,
+        };
+        let region = Event::RegionTransition {
+            fpga: FpgaId(1),
+            region: VfpgaId(4),
+            from: "free".into(),
+            to: "reserved".into(),
+            at_s: 0.0,
+        };
+        // Empty filter: everything matches.
+        assert!(SubscriptionFilter::all().matches(&progress));
+        assert!(SubscriptionFilter::all().matches(&region));
+        // Topic filter.
+        let jobs_only = SubscriptionFilter::topic(Topic::Job);
+        assert!(jobs_only.matches(&progress));
+        assert!(!jobs_only.matches(&region));
+        // Job-id filter hits only that job.
+        let mut one_job = SubscriptionFilter::topic(Topic::Job);
+        one_job.job_ids = vec![JobId(8)];
+        assert!(!one_job.matches(&progress));
+        one_job.job_ids = vec![JobId(7)];
+        assert!(one_job.matches(&progress));
+        // Fpga filter applies to events carrying a device.
+        let mut dev = SubscriptionFilter::all();
+        dev.fpga_ids = vec![FpgaId(0)];
+        assert!(!dev.matches(&region));
+        dev.fpga_ids = vec![FpgaId(1)];
+        assert!(dev.matches(&region));
+        // Wire roundtrip, including the rejection of unknown topics.
+        let rt =
+            SubscriptionFilter::from_json(&one_job.to_json()).unwrap();
+        assert_eq!(rt, one_job);
+        let mut j = Json::obj(vec![]);
+        j.set("topics", Json::Arr(vec![Json::from("martian")]));
+        assert!(SubscriptionFilter::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn lifecycle_log_and_policy_bodies_roundtrip() {
+        let resp = LifecycleLogResponse {
+            fpga: FpgaId(0),
+            records: vec![TransitionBody {
+                region: VfpgaId(0),
+                from: "free".into(),
+                to: "reserved".into(),
+                at_s: 1.0,
+            }],
+            dropped: 3,
+        };
+        let rt =
+            LifecycleLogResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(rt, resp);
+        let req = LifecycleLogRequest {
+            fpga: FpgaId(2),
+            limit: Some(16),
+        };
+        assert_eq!(
+            LifecycleLogRequest::from_json(&req.to_json()).unwrap(),
+            req
+        );
+        let pol = SchedPolicyResponse {
+            policy: "spread".into(),
+        };
+        assert_eq!(
+            SchedPolicyResponse::from_json(&pol.to_json()).unwrap(),
+            pol
+        );
     }
 
     #[test]

@@ -3,26 +3,34 @@
 //!
 //! Two layers:
 //!
-//! * [`Client::call`] — the raw protocol-1 escape hatch: string
-//!   method + raw [`Json`] params, string errors. Kept for the `rc3e
-//!   cli` passthrough and for legacy callers.
+//! * [`Client::call_v2`] — the raw escape hatch: string method + raw
+//!   [`Json`] params over the current typed envelope (used by the
+//!   `rc3e cli` passthrough). Protocol 1 — the old untyped envelope —
+//!   is retired; every request is stamped with `proto`/`id`.
 //! * Typed methods (`hello`, `alloc_vfpga`, `stream`, ...) — one per
-//!   [`Method`], built on [`Client::call_v2`]: protocol-2 envelopes
-//!   with correlation ids, typed request/response structs and
-//!   structured [`ApiError`]s clients can branch on
+//!   [`Method`]: typed request/response structs and structured
+//!   [`ApiError`]s clients can branch on
 //!   (`e.code == ErrorCode::QuotaExceeded`, `e.retry_after_s`).
 //!
 //! Long-running operations (`stream`, `program_full`,
 //! `invoke_service`) return [`JobSubmitResponse`] handles; the
 //! `*_sync` variants submit and [`Client::job_wait`] in one call,
 //! reproducing the old blocking behavior.
+//!
+//! Protocol 3: [`Client::subscribe`] opens a server-push event
+//! stream and returns an iterator-style [`EventStream`] handle over
+//! typed [`Event`] frames (`rc3e watch` / `rc3e job --follow` are
+//! thin wrappers around it). The handle drains the stream on drop so
+//! the connection returns to request/response mode cleanly.
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
 use super::api::*;
-use super::proto::{read_frame, write_frame, Request, Response};
+use super::proto::{
+    read_frame, write_frame, Request, Response, StreamFrame,
+};
 use crate::config::ServiceModel;
 use crate::sched::RequestClass;
 use crate::util::ids::{
@@ -42,7 +50,7 @@ use crate::util::json::Json;
 /// flag, or deliberately wrong ones in tests).
 pub struct Client {
     stream: TcpStream,
-    /// Correlation-id counter for v2 requests.
+    /// Correlation-id counter for requests.
     next_id: u64,
     /// alloc → capability token, learned from alloc responses.
     lease_tokens: BTreeMap<AllocationId, LeaseToken>,
@@ -100,31 +108,14 @@ impl Client {
         Ok((client, hello))
     }
 
-    /// One raw protocol-1 round trip. Errors are strings: either
-    /// transport ("io: …") or application (the server's error body).
-    pub fn call(
+    /// One request/response round trip: send the envelope, read the
+    /// (header) response, verify the correlation id. Shared by
+    /// [`Client::call_v2`] and [`Client::subscribe`].
+    fn round_trip(
         &mut self,
         method: &str,
         params: Json,
-    ) -> Result<Json, String> {
-        let req = Request::new(method, params);
-        write_frame(&mut self.stream, &req.to_json())
-            .map_err(|e| format!("io: {e}"))?;
-        let frame = read_frame(&mut self.stream)
-            .map_err(|e| format!("io: {e}"))?
-            .ok_or_else(|| {
-                "io: eof (server closed connection)".to_string()
-            })?;
-        Response::from_json(&frame)?.into_result()
-    }
-
-    /// One protocol-2 round trip: correlation id attached and
-    /// verified, structured errors surfaced as [`ApiError`].
-    pub fn call_v2(
-        &mut self,
-        method: &str,
-        params: Json,
-    ) -> Result<Json, ApiError> {
+    ) -> Result<Response, ApiError> {
         self.next_id += 1;
         let id = self.next_id;
         let req = Request::v2(method, params, id);
@@ -143,7 +134,18 @@ impl Client {
                 resp.id
             )));
         }
-        resp.into_api_result()
+        Ok(resp)
+    }
+
+    /// One raw round trip over the current envelope: correlation id
+    /// attached and verified, structured errors surfaced as
+    /// [`ApiError`]. This is the untyped escape hatch (`rc3e cli`).
+    pub fn call_v2(
+        &mut self,
+        method: &str,
+        params: Json,
+    ) -> Result<Json, ApiError> {
+        self.round_trip(method, params)?.into_api_result()
     }
 
     // --------------------------------------------- typed: handshake
@@ -209,6 +211,19 @@ impl Client {
         let body =
             self.call_v2(Method::Workload.name(), req.to_json())?;
         WorkloadResponse::from_json(&body)
+    }
+
+    /// The newest records of one device's region lifecycle
+    /// transition log.
+    pub fn lifecycle_log(
+        &mut self,
+        fpga: FpgaId,
+        limit: Option<u64>,
+    ) -> Result<LifecycleLogResponse, ApiError> {
+        let req = LifecycleLogRequest { fpga, limit };
+        let body =
+            self.call_v2(Method::LifecycleLog.name(), req.to_json())?;
+        LifecycleLogResponse::from_json(&body)
     }
 
     // ------------------------------------------------ typed: leases
@@ -486,6 +501,41 @@ impl Client {
         JobBody::from_json(&body)
     }
 
+    // --------------------------------------- typed: event streaming
+
+    /// Open a server-push subscription (protocol 3). Returns an
+    /// iterator over typed event frames; the stream ends at the
+    /// server's terminal frame (timeout or `max_events` reached).
+    /// While the [`EventStream`] lives, the connection is dedicated
+    /// to it — drop (or exhaust) the stream before issuing other
+    /// calls; dropping drains any remaining frames so the connection
+    /// stays usable. **Dropping mid-stream blocks until the server's
+    /// terminal frame**, i.e. up to the subscription's (clamped)
+    /// `timeout_s` on a quiet topic — abandon-early callers should
+    /// bound the stream with `max_events` or short `timeout_s`
+    /// rounds instead of breaking out of an unbounded one.
+    pub fn subscribe(
+        &mut self,
+        req: &SubscribeRequest,
+    ) -> Result<EventStream<'_>, ApiError> {
+        let resp =
+            self.round_trip(Method::Subscribe.name(), req.to_json())?;
+        let is_stream = resp.stream;
+        let body = resp.into_api_result()?;
+        if !is_stream {
+            return Err(ApiError::internal(
+                "subscribe response was not a stream header",
+            ));
+        }
+        let header = SubscribeResponse::from_json(&body)?;
+        Ok(EventStream {
+            client: self,
+            header,
+            last_seq: 0,
+            done: false,
+        })
+    }
+
     // --------------------------------------------- typed: scheduler
 
     /// Scheduler queue/grant/reservation snapshot.
@@ -497,6 +547,30 @@ impl Client {
             SchedStatusRequest.to_json(),
         )?;
         SchedStatusResponse::from_json(&body)
+    }
+
+    /// Where preemption relocates its victims.
+    pub fn sched_policy_get(
+        &mut self,
+    ) -> Result<SchedPolicyResponse, ApiError> {
+        let body = self.call_v2(
+            Method::SchedPolicyGet.name(),
+            SchedPolicyGetRequest.to_json(),
+        )?;
+        SchedPolicyResponse::from_json(&body)
+    }
+
+    /// Set the preemption landing policy ("spread" | "pack").
+    pub fn sched_policy_set(
+        &mut self,
+        policy: &str,
+    ) -> Result<SchedPolicyResponse, ApiError> {
+        let req = SchedPolicySetRequest {
+            policy: policy.to_string(),
+        };
+        let body = self
+            .call_v2(Method::SchedPolicySet.name(), req.to_json())?;
+        SchedPolicyResponse::from_json(&body)
     }
 
     /// Set (parts of) a tenant quota; unspecified fields keep their
@@ -575,13 +649,104 @@ impl Client {
     }
 }
 
+// ======================================================= event stream
+
+/// One delivered subscription frame: the server-assigned sequence
+/// number (strictly increasing per subscription) and the typed event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventFrame {
+    pub seq: u64,
+    pub event: Event,
+}
+
+/// Iterator-style handle over one `subscribe` stream. Yields frames
+/// until the server's terminal frame; enforces strict `seq` ordering.
+/// Dropping the handle mid-stream drains the remaining frames so the
+/// underlying connection returns to request/response mode.
+pub struct EventStream<'a> {
+    client: &'a mut Client,
+    header: SubscribeResponse,
+    last_seq: u64,
+    done: bool,
+}
+
+impl EventStream<'_> {
+    /// The stream header (subscription id + effective bounds).
+    pub fn header(&self) -> &SubscribeResponse {
+        &self.header
+    }
+
+    fn read_one(&mut self) -> Result<Option<EventFrame>, ApiError> {
+        let frame = read_frame(&mut self.client.stream)
+            .map_err(|e| ApiError::internal(format!("io: {e}")))?
+            .ok_or_else(|| {
+                ApiError::internal("io: eof mid-subscription")
+            })?;
+        let sf = StreamFrame::from_json(&frame)
+            .map_err(ApiError::internal)?;
+        if sf.seq <= self.last_seq {
+            return Err(ApiError::internal(format!(
+                "stream frames out of order: {} after {}",
+                sf.seq, self.last_seq
+            )));
+        }
+        self.last_seq = sf.seq;
+        if sf.end {
+            self.done = true;
+            return match sf.error {
+                Some(e) => Err(e),
+                None => Ok(None),
+            };
+        }
+        let event = sf.event.ok_or_else(|| {
+            ApiError::internal("non-terminal frame without event")
+        })?;
+        Ok(Some(EventFrame {
+            seq: sf.seq,
+            event: Event::from_json(&event)?,
+        }))
+    }
+}
+
+impl Iterator for EventStream<'_> {
+    type Item = Result<EventFrame, ApiError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        match self.read_one() {
+            Ok(Some(frame)) => Some(Ok(frame)),
+            Ok(None) => None,
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+impl Drop for EventStream<'_> {
+    fn drop(&mut self) {
+        // Drain to the terminal frame so the connection is clean for
+        // the next request. Bounded server-side by the subscription
+        // timeout; an IO error just poisons this connection.
+        while !self.done {
+            if self.read_one().is_err() {
+                break;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::net::TcpListener;
 
-    /// Minimal echo server for client-side tests. Speaks both
-    /// envelope generations: v2 requests get their id echoed.
+    /// Minimal typed-envelope echo server for client-side tests.
+    /// `fail` answers a structured error; `subscribe` answers a
+    /// stream header + two event frames + terminal.
     fn echo_server() -> SocketAddr {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -591,22 +756,49 @@ mod tests {
                 std::thread::spawn(move || {
                     while let Ok(Some(frame)) = read_frame(&mut stream) {
                         let req = Request::from_json(&frame).unwrap();
-                        let resp = if req.method == "fail" {
-                            if req.proto.unwrap_or(1) >= 2 {
-                                Response::failure(
-                                    req.id,
-                                    ApiError::new(
-                                        ErrorCode::NoCapacity,
-                                        "requested failure",
-                                    ),
+                        if req.method == "subscribe" {
+                            let header = Response::stream_header(
+                                req.id,
+                                SubscribeResponse {
+                                    subscription: 1,
+                                    timeout_s: 1.0,
+                                }
+                                .to_json(),
+                            );
+                            let frames = [
+                                header.to_json(),
+                                StreamFrame::event(
+                                    1,
+                                    Event::QueueDepth { depth: 1 }
+                                        .to_json(),
                                 )
-                            } else {
-                                Response::error("requested failure")
+                                .to_json(),
+                                StreamFrame::event(
+                                    2,
+                                    Event::QueueDepth { depth: 0 }
+                                        .to_json(),
+                                )
+                                .to_json(),
+                                StreamFrame::terminal(3, None).to_json(),
+                            ];
+                            for f in frames {
+                                if write_frame(&mut stream, &f).is_err()
+                                {
+                                    return;
+                                }
                             }
-                        } else if req.proto.unwrap_or(1) >= 2 {
-                            Response::success_v2(req.id, req.params)
+                            continue;
+                        }
+                        let resp = if req.method == "fail" {
+                            Response::failure(
+                                req.id,
+                                ApiError::new(
+                                    ErrorCode::NoCapacity,
+                                    "requested failure",
+                                ),
+                            )
                         } else {
-                            Response::success(req.params)
+                            Response::success_v2(req.id, req.params)
                         };
                         if write_frame(&mut stream, &resp.to_json()).is_err()
                         {
@@ -617,15 +809,6 @@ mod tests {
             }
         });
         addr
-    }
-
-    #[test]
-    fn call_roundtrips_params() {
-        let addr = echo_server();
-        let mut c = Client::connect(addr).unwrap();
-        let params = Json::obj(vec![("x", Json::from(7u64))]);
-        let body = c.call("echo", params.clone()).unwrap();
-        assert_eq!(body, params);
     }
 
     #[test]
@@ -642,13 +825,51 @@ mod tests {
     }
 
     #[test]
-    fn application_errors_surface() {
+    fn subscription_stream_iterates_frames_in_order() {
         let addr = echo_server();
         let mut c = Client::connect(addr).unwrap();
+        let frames: Vec<EventFrame> = c
+            .subscribe(&SubscribeRequest {
+                filter: SubscriptionFilter::all(),
+                lease: None,
+                max_events: None,
+                timeout_s: None,
+            })
+            .unwrap()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].seq, 1);
+        assert_eq!(frames[1].seq, 2);
         assert_eq!(
-            c.call("fail", Json::obj(vec![])),
-            Err("requested failure".to_string())
+            frames[1].event,
+            Event::QueueDepth { depth: 0 }
         );
+        // The connection is usable for plain calls afterwards.
+        let body = c.call_v2("echo", Json::obj(vec![])).unwrap();
+        assert_eq!(body, Json::obj(vec![]));
+    }
+
+    #[test]
+    fn dropping_a_stream_mid_read_drains_it() {
+        let addr = echo_server();
+        let mut c = Client::connect(addr).unwrap();
+        {
+            let mut stream = c
+                .subscribe(&SubscribeRequest {
+                    filter: SubscriptionFilter::all(),
+                    lease: None,
+                    max_events: None,
+                    timeout_s: None,
+                })
+                .unwrap();
+            // Read only the first of two frames, then drop.
+            let first = stream.next().unwrap().unwrap();
+            assert_eq!(first.seq, 1);
+        }
+        // The drain left the connection clean.
+        let params = Json::obj(vec![("y", Json::from(1u64))]);
+        assert_eq!(c.call_v2("echo", params.clone()).unwrap(), params);
     }
 
     #[test]
@@ -664,7 +885,7 @@ mod tests {
         let mut c = Client::connect(addr).unwrap();
         for i in 0..5u64 {
             let body = c
-                .call("echo", Json::obj(vec![("i", Json::from(i))]))
+                .call_v2("echo", Json::obj(vec![("i", Json::from(i))]))
                 .unwrap();
             assert_eq!(body.get("i").as_u64(), Some(i));
         }

@@ -1,0 +1,413 @@
+//! Server-side event bus behind the protocol-3 `subscribe` surface.
+//!
+//! Producers (the job registry, the scheduler sink, the per-device
+//! transition sink) publish typed [`Event`]s with a delivery
+//! [`Scope`]; the bus fans each event out to every live
+//! [`Subscription`] whose filter *and* scope admit it. Consumers (the
+//! server's subscribe loop) block on [`Subscription::next`] — one
+//! publish wakes every matching subscriber, there is no polling
+//! anywhere on the path.
+//!
+//! **Publishing is O(1) for the producer.** [`EventBus::publish`] is
+//! a channel send; a single dispatcher thread performs the
+//! per-subscriber fanout. Producers emit from hot critical sections
+//! (the scheduler's state lock, a device lock), so the fanout cost
+//! must never ride inside those locks. The channel is FIFO and the
+//! dispatcher is single-threaded, so publish order *is* delivery
+//! order for every subscriber. [`EventBus::flush`] blocks until
+//! everything published so far has been fanned out (tests, benches).
+//!
+//! Scoping is the tenant-isolation boundary: a subscription is bound
+//! at creation to the capability token it presented (and the tenant
+//! that token resolves to). Token-scoped events (job progress) only
+//! reach the subscription holding that exact token; tenant-scoped
+//! events (placement changes) only reach subscriptions of that
+//! tenant; public events (queue depth, grants, region transitions)
+//! reach everyone. A filter can narrow further but can never widen
+//! past the scope.
+//!
+//! Queues are bounded ([`SUBSCRIPTION_QUEUE_CAP`]): a subscriber that
+//! stops draining loses its *oldest* events (counted in
+//! [`Subscription::dropped`] and the `events.dropped` counter)
+//! instead of wedging the dispatcher.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use super::api::{Event, SubscriptionFilter};
+use crate::metrics::Registry;
+use crate::util::ids::{LeaseToken, UserId};
+
+/// Events a subscription may hold undelivered before the oldest are
+/// dropped.
+pub const SUBSCRIPTION_QUEUE_CAP: usize = 1024;
+
+/// Who may see an event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scope {
+    /// Operator telemetry: every subscription.
+    Public,
+    /// Only the subscription presenting this capability token.
+    Token(LeaseToken),
+    /// Only subscriptions whose token resolves to this tenant.
+    Tenant(UserId),
+}
+
+/// One live subscription's delivery queue.
+#[derive(Debug)]
+pub struct Subscription {
+    id: u64,
+    filter: SubscriptionFilter,
+    /// Capability presented at subscribe time (token-scope matching).
+    token: Option<LeaseToken>,
+    /// Tenant the token resolved to (tenant-scope matching).
+    tenant: Option<UserId>,
+    queue: Mutex<VecDeque<Event>>,
+    ready: Condvar,
+    closed: AtomicBool,
+    dropped: AtomicU64,
+}
+
+impl Subscription {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Events lost to the bounded queue so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Does this subscription's scope admit an event published with
+    /// `scope`? (The client-chosen filter is checked separately.)
+    fn scope_admits(&self, scope: Scope) -> bool {
+        match scope {
+            Scope::Public => true,
+            Scope::Token(t) => self.token == Some(t),
+            Scope::Tenant(u) => self.tenant == Some(u),
+        }
+    }
+
+    /// Enqueue one event; returns true when the bounded queue evicted
+    /// its oldest entry to make room.
+    fn push(&self, event: Event) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        let mut evicted = false;
+        if q.len() == SUBSCRIPTION_QUEUE_CAP {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            evicted = true;
+        }
+        q.push_back(event);
+        drop(q);
+        self.ready.notify_all();
+        evicted
+    }
+
+    /// Next queued event, blocking up to `timeout` of wall time.
+    /// `None` on expiry or when the subscription was closed.
+    pub fn next(&self, timeout: Duration) -> Option<Event> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(ev) = q.pop_front() {
+                return Some(ev);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) =
+                self.ready.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Drain without blocking (tests, shutdown).
+    pub fn drain(&self) -> Vec<Event> {
+        self.queue.lock().unwrap().drain(..).collect()
+    }
+}
+
+#[derive(Debug, Default)]
+struct BusState {
+    subs: BTreeMap<u64, Arc<Subscription>>,
+    next_id: u64,
+}
+
+/// The process-wide event bus. Construct with [`EventBus::new`] (it
+/// owns a dispatcher thread that exits when the bus is dropped).
+#[derive(Debug)]
+pub struct EventBus {
+    state: Mutex<BusState>,
+    /// Producer side of the dispatch channel; dropping the bus drops
+    /// it, which ends the dispatcher thread.
+    tx: mpsc::Sender<(Event, Scope)>,
+    /// Events handed to the channel so far.
+    enqueued: AtomicU64,
+    /// Events the dispatcher has fanned out so far (flush barrier).
+    processed: Mutex<u64>,
+    processed_cv: Condvar,
+    /// Counters land here when wired (`events.published`,
+    /// `events.delivered`, `events.dropped`).
+    metrics: Mutex<Option<Arc<Registry>>>,
+}
+
+impl EventBus {
+    pub fn new() -> Arc<EventBus> {
+        let (tx, rx) = mpsc::channel::<(Event, Scope)>();
+        let bus = Arc::new(EventBus {
+            state: Mutex::new(BusState::default()),
+            tx,
+            enqueued: AtomicU64::new(0),
+            processed: Mutex::new(0),
+            processed_cv: Condvar::new(),
+            metrics: Mutex::new(None),
+        });
+        // The dispatcher holds only a Weak: when the last Arc drops,
+        // the sender inside it drops, recv() errors and the thread
+        // exits.
+        let weak: Weak<EventBus> = Arc::downgrade(&bus);
+        std::thread::spawn(move || {
+            while let Ok((event, scope)) = rx.recv() {
+                let Some(bus) = weak.upgrade() else { break };
+                bus.fanout(event, scope);
+                let mut done = bus.processed.lock().unwrap();
+                *done += 1;
+                bus.processed_cv.notify_all();
+            }
+        });
+        bus
+    }
+
+    /// Wire a metrics registry for bus counters.
+    pub fn set_metrics(&self, metrics: Arc<Registry>) {
+        *self.metrics.lock().unwrap() = Some(metrics);
+    }
+
+    /// Register a subscription. `token` is the capability presented
+    /// on the wire; `tenant` is the tenant it resolved to (server
+    /// side) — both are fixed for the subscription's lifetime.
+    pub fn subscribe(
+        &self,
+        filter: SubscriptionFilter,
+        token: Option<LeaseToken>,
+        tenant: Option<UserId>,
+    ) -> Arc<Subscription> {
+        let mut st = self.state.lock().unwrap();
+        st.next_id += 1;
+        let sub = Arc::new(Subscription {
+            id: st.next_id,
+            filter,
+            token,
+            tenant,
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            closed: AtomicBool::new(false),
+            dropped: AtomicU64::new(0),
+        });
+        st.subs.insert(sub.id, Arc::clone(&sub));
+        sub
+    }
+
+    /// Remove a subscription and wake its reader.
+    pub fn unsubscribe(&self, id: u64) {
+        let sub = self.state.lock().unwrap().subs.remove(&id);
+        if let Some(sub) = sub {
+            sub.closed.store(true, Ordering::SeqCst);
+            sub.ready.notify_all();
+        }
+    }
+
+    /// Live subscriptions (telemetry, tests).
+    pub fn subscriber_count(&self) -> usize {
+        self.state.lock().unwrap().subs.len()
+    }
+
+    /// Publish one event: a channel send, O(1) for the caller —
+    /// producers emit from inside hot critical sections and must
+    /// never pay the fanout there. Delivery order equals publish
+    /// order for every subscriber (single FIFO dispatcher).
+    pub fn publish(&self, event: Event, scope: Scope) {
+        self.enqueued.fetch_add(1, Ordering::SeqCst);
+        if self.tx.send((event, scope)).is_err() {
+            // Dispatcher gone (bus mid-teardown): count it processed
+            // so a concurrent flush cannot hang.
+            let mut done = self.processed.lock().unwrap();
+            *done += 1;
+            self.processed_cv.notify_all();
+        }
+    }
+
+    /// Block until everything published so far has been fanned out
+    /// to the subscriber queues (tests and benches; servers never
+    /// need it — subscribers just block on their queues).
+    pub fn flush(&self) {
+        let target = self.enqueued.load(Ordering::SeqCst);
+        let mut done = self.processed.lock().unwrap();
+        while *done < target {
+            done = self.processed_cv.wait(done).unwrap();
+        }
+    }
+
+    /// Dispatcher half of [`EventBus::publish`]: fan one event out to
+    /// every subscription whose scope and filter admit it. Never
+    /// blocks on consumers (bounded drop-oldest queues).
+    fn fanout(&self, event: Event, scope: Scope) {
+        let subs: Vec<Arc<Subscription>> = {
+            let st = self.state.lock().unwrap();
+            st.subs.values().cloned().collect()
+        };
+        let mut delivered = 0u64;
+        let mut dropped = 0u64;
+        for sub in subs {
+            if sub.scope_admits(scope) && sub.filter.matches(&event) {
+                if sub.push(event.clone()) {
+                    dropped += 1;
+                }
+                delivered += 1;
+            }
+        }
+        if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+            m.counter("events.published").inc();
+            m.counter("events.delivered").add(delivered);
+            m.counter("events.dropped").add(dropped);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::JobId;
+
+    fn progress(job: u64) -> Event {
+        Event::JobProgress {
+            job: JobId(job),
+            method: "stream".into(),
+            phase: "streaming".into(),
+            bytes_streamed: 0,
+            pct: 10.0,
+            state: "running".into(),
+            result: None,
+        }
+    }
+
+    #[test]
+    fn publish_fans_out_to_matching_subscribers() {
+        let bus = EventBus::new();
+        let a = bus.subscribe(SubscriptionFilter::all(), None, None);
+        let b = bus.subscribe(
+            SubscriptionFilter::topic(super::super::api::Topic::Sched),
+            None,
+            None,
+        );
+        bus.publish(Event::QueueDepth { depth: 2 }, Scope::Public);
+        assert_eq!(
+            a.next(Duration::from_secs(1)),
+            Some(Event::QueueDepth { depth: 2 })
+        );
+        assert_eq!(
+            b.next(Duration::from_secs(1)),
+            Some(Event::QueueDepth { depth: 2 })
+        );
+        // A job event is off-topic for b.
+        bus.publish(progress(1), Scope::Public);
+        assert!(a.next(Duration::from_millis(500)).is_some());
+        bus.flush();
+        assert!(b.next(Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn token_scope_never_leaks_across_subscriptions() {
+        let bus = EventBus::new();
+        let mine = LeaseToken::mint();
+        let theirs = LeaseToken::mint();
+        let me = bus.subscribe(
+            SubscriptionFilter::all(),
+            Some(mine),
+            Some(UserId(0)),
+        );
+        let them = bus.subscribe(
+            SubscriptionFilter::all(),
+            Some(theirs),
+            Some(UserId(1)),
+        );
+        bus.publish(progress(7), Scope::Token(mine));
+        assert!(me.next(Duration::from_millis(500)).is_some());
+        bus.flush();
+        assert!(them.next(Duration::from_millis(10)).is_none());
+        // Tenant scope behaves the same way.
+        bus.publish(
+            Event::LeasePlacementChanged {
+                alloc: crate::util::ids::AllocationId(0),
+                vfpga: crate::util::ids::VfpgaId(1),
+                fpga: crate::util::ids::FpgaId(0),
+                migrations: 1,
+            },
+            Scope::Tenant(UserId(1)),
+        );
+        assert!(them.next(Duration::from_millis(500)).is_some());
+        bus.flush();
+        assert!(me.next(Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn bounded_queue_drops_oldest_and_counts() {
+        let metrics = Arc::new(Registry::new());
+        let bus = EventBus::new();
+        bus.set_metrics(Arc::clone(&metrics));
+        let sub = bus.subscribe(SubscriptionFilter::all(), None, None);
+        for i in 0..(SUBSCRIPTION_QUEUE_CAP as u64 + 5) {
+            bus.publish(Event::QueueDepth { depth: i }, Scope::Public);
+        }
+        bus.flush();
+        assert_eq!(sub.dropped(), 5);
+        assert_eq!(metrics.counter("events.dropped").get(), 5);
+        assert_eq!(
+            metrics.counter("events.published").get(),
+            SUBSCRIPTION_QUEUE_CAP as u64 + 5
+        );
+        // The oldest surviving event is depth 5.
+        assert_eq!(
+            sub.next(Duration::from_secs(1)),
+            Some(Event::QueueDepth { depth: 5 })
+        );
+    }
+
+    #[test]
+    fn delivery_preserves_publish_order() {
+        let bus = EventBus::new();
+        let sub = bus.subscribe(SubscriptionFilter::all(), None, None);
+        for i in 0..100u64 {
+            bus.publish(Event::QueueDepth { depth: i }, Scope::Public);
+        }
+        for i in 0..100u64 {
+            assert_eq!(
+                sub.next(Duration::from_secs(1)),
+                Some(Event::QueueDepth { depth: i })
+            );
+        }
+    }
+
+    #[test]
+    fn unsubscribe_wakes_blocked_reader() {
+        let bus = EventBus::new();
+        let sub = bus.subscribe(SubscriptionFilter::all(), None, None);
+        let bus2 = Arc::clone(&bus);
+        let id = sub.id();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            bus2.unsubscribe(id);
+        });
+        // Blocks until the unsubscribe, then yields None quickly.
+        assert!(sub.next(Duration::from_secs(10)).is_none());
+        h.join().unwrap();
+        assert_eq!(bus.subscriber_count(), 0);
+    }
+}

@@ -2,20 +2,32 @@
 //!
 //! Long-running operations (`program_full`, `stream`,
 //! `invoke_service`) used to block their connection thread for the
-//! whole virtual-time duration of the work. On protocol ≥ 2 the
-//! server instead submits the work here and answers immediately with
-//! a job id; `job_status` / `job_wait` / `job_cancel` operate on the
-//! registry. This is also the seam the ROADMAP's batch-pipelining
-//! follow-up needs: once a long operation is a job, overlapping the
-//! next job's PR with the previous job's streaming is a registry
-//! policy, not an API change.
+//! whole virtual-time duration of the work. The server submits the
+//! work here and answers immediately with a job id; `job_status` /
+//! `job_wait` / `job_cancel` operate on the registry. This is also
+//! the seam the batch pipelining rides: once a long operation is a
+//! job, overlapping the next job's PR with the previous job's
+//! streaming is a registry policy, not an API change.
 //!
 //! Model: one worker thread per submitted job (the same
-//! thread-per-unit idiom the server uses per connection), a
-//! [`Condvar`] for waiters, and bounded terminal-state retention —
-//! finished jobs stay queryable until [`RETAINED_TERMINAL`] newer
-//! jobs have finished, then the oldest are evicted and read as
-//! `unknown_job`.
+//! thread-per-unit idiom the server uses per connection), bounded
+//! terminal-state retention — finished jobs stay queryable until
+//! [`RETAINED_TERMINAL`] newer jobs have finished, then the oldest
+//! are evicted and read as `unknown_job`.
+//!
+//! **Coalesced waits** (protocol 3): all `job_wait` callers parked on
+//! one job share a single [`WaitSlot`] — the completion fans one
+//! wakeup out to every waiter instead of N independent poll loops.
+//! The `jobs.wait.coalesced` counter records how many waiters each
+//! shared wakeup served (only when more than one shared it), so the
+//! many-clients-one-job fan-in is observable.
+//!
+//! **Progress events** (protocol 3): workers receive a
+//! [`ProgressReporter`] and emit [`Event::JobProgress`] frames at
+//! phase boundaries and stream checkpoints; the registry itself
+//! emits the `submitted` frame and the terminal frame — the latter
+//! carries the *exact* job body `job_wait` returns, so a subscriber
+//! needs no final poll.
 //!
 //! Cancellation is a state race the registry referees: `cancel` flips
 //! a *running* job to `cancelled`; when the worker later finishes, a
@@ -26,7 +38,9 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::api::{ApiError, ErrorCode, JobBody};
+use super::api::{ApiError, ErrorCode, Event, JobBody};
+use super::events::{EventBus, Scope};
+use crate::metrics::Registry;
 use crate::util::ids::{IdGen, JobId, LeaseToken};
 use crate::util::json::Json;
 
@@ -78,8 +92,8 @@ pub struct JobRecord {
     pub submitted_ns: u64,
     /// Capability token owning this job: the lease token presented
     /// at submission (or a fresh job-scoped token for leaseless
-    /// operations). `None` = unowned (protocol-1 submissions) — no
-    /// token gate applies.
+    /// operations). `None` = unowned — no token gate applies and its
+    /// progress events are public.
     pub owner: Option<LeaseToken>,
 }
 
@@ -101,19 +115,58 @@ impl JobRecord {
     }
 }
 
+/// The shared parking slot all `job_wait` callers of one job coalesce
+/// on: one completion fanout wakes every waiter.
+#[derive(Debug, Default)]
+struct WaitSlot {
+    state: Mutex<SlotState>,
+    done: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct SlotState {
+    /// Filled exactly once, at the job's terminal transition.
+    result: Option<JobRecord>,
+    /// Callers currently parked on this slot.
+    waiters: u64,
+}
+
 #[derive(Debug, Default)]
 struct Jobs {
     records: BTreeMap<JobId, JobRecord>,
     /// Terminal jobs, oldest first (eviction order).
     terminal: VecDeque<JobId>,
+    /// Coalescing slots of running jobs with at least one waiter.
+    slots: BTreeMap<JobId, Arc<WaitSlot>>,
 }
 
 /// The registry.
 #[derive(Debug, Default)]
 pub struct JobRegistry {
     state: Mutex<Jobs>,
-    done: Condvar,
     ids: IdGen,
+    /// Wired by the server: `jobs.wait.coalesced` etc. land here.
+    metrics: Mutex<Option<Arc<Registry>>>,
+    /// Wired by the server: progress events are published here.
+    bus: Mutex<Option<Arc<EventBus>>>,
+}
+
+/// Handed to every job worker: emits `JobProgress` frames at phase
+/// boundaries / stream checkpoints without exposing the registry.
+pub struct ProgressReporter {
+    registry: Arc<JobRegistry>,
+    id: JobId,
+}
+
+impl ProgressReporter {
+    pub fn job(&self) -> JobId {
+        self.id
+    }
+
+    /// Emit one mid-job progress frame (`state: "running"`).
+    pub fn report(&self, phase: &str, bytes_streamed: u64, pct: f64) {
+        self.registry.progress(self.id, phase, bytes_streamed, pct);
+    }
 }
 
 impl JobRegistry {
@@ -121,8 +174,38 @@ impl JobRegistry {
         Arc::new(JobRegistry::default())
     }
 
+    /// Wire a metrics registry (wait-coalescing counters).
+    pub fn set_metrics(&self, metrics: Arc<Registry>) {
+        *self.metrics.lock().unwrap() = Some(metrics);
+    }
+
+    /// Wire the event bus progress frames are published to.
+    pub fn set_bus(&self, bus: Arc<EventBus>) {
+        *self.bus.lock().unwrap() = Some(bus);
+    }
+
+    fn with_metrics(&self, f: impl FnOnce(&Registry)) {
+        if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+            f(m);
+        }
+    }
+
+    /// Publish a job event scoped to its owner token (public when
+    /// unowned).
+    fn publish(&self, owner: Option<LeaseToken>, event: Event) {
+        let bus = self.bus.lock().unwrap().clone();
+        if let Some(bus) = bus {
+            let scope = match owner {
+                Some(t) => Scope::Token(t),
+                None => Scope::Public,
+            };
+            bus.publish(event, scope);
+        }
+    }
+
     /// Submit `work` as a new job; it runs on its own worker thread
-    /// and the job id is returned immediately. Takes an owned `Arc`
+    /// and the job id is returned immediately. The worker receives a
+    /// [`ProgressReporter`] for mid-job frames. Takes an owned `Arc`
     /// (the worker keeps the registry alive past the caller) — clone
     /// at the call site: `Arc::clone(&jobs).submit(...)`.
     pub fn submit(
@@ -130,7 +213,9 @@ impl JobRegistry {
         method: &str,
         submitted_ns: u64,
         owner: Option<LeaseToken>,
-        work: impl FnOnce() -> Result<Json, ApiError> + Send + 'static,
+        work: impl FnOnce(&ProgressReporter) -> Result<Json, ApiError>
+            + Send
+            + 'static,
     ) -> JobId {
         let id = JobId(self.ids.next());
         {
@@ -146,27 +231,126 @@ impl JobRegistry {
                 },
             );
         }
+        self.publish(
+            owner,
+            Event::JobProgress {
+                job: id,
+                method: method.to_string(),
+                phase: "submitted".to_string(),
+                bytes_streamed: 0,
+                pct: 0.0,
+                state: "running".to_string(),
+                result: None,
+            },
+        );
         std::thread::spawn(move || {
-            let result = work();
+            let reporter = ProgressReporter {
+                registry: Arc::clone(&self),
+                id,
+            };
+            let result = work(&reporter);
             self.finish(id, result);
         });
         id
+    }
+
+    /// Emit one mid-job progress frame for a still-running job.
+    /// Published while the registry lock is held (publish is an O(1)
+    /// channel send), so a cancel racing the worker can never slip a
+    /// terminal frame *under* this one — the terminal frame is always
+    /// the stream's last word for a job.
+    pub fn progress(
+        &self,
+        id: JobId,
+        phase: &str,
+        bytes_streamed: u64,
+        pct: f64,
+    ) {
+        let st = self.state.lock().unwrap();
+        let (method, owner) = match st.records.get(&id) {
+            Some(rec) if rec.state == JobState::Running => {
+                (rec.method.clone(), rec.owner)
+            }
+            // Terminal or unknown: the terminal frame already told
+            // the full story; stay silent.
+            _ => return,
+        };
+        self.publish(
+            owner,
+            Event::JobProgress {
+                job: id,
+                method,
+                phase: phase.to_string(),
+                bytes_streamed,
+                pct: pct.clamp(0.0, 100.0),
+                state: "running".to_string(),
+                result: None,
+            },
+        );
+        drop(st);
     }
 
     /// Record a worker's result. A job cancelled mid-flight keeps its
     /// cancelled state and the result is discarded.
     fn finish(&self, id: JobId, result: Result<Json, ApiError>) {
         let mut st = self.state.lock().unwrap();
-        if let Some(rec) = st.records.get_mut(&id) {
-            if rec.state == JobState::Running {
-                rec.state = match result {
-                    Ok(v) => JobState::Done(v),
-                    Err(e) => JobState::Failed(e),
-                };
-                Self::retire(&mut st, id);
-            }
+        let Some(rec) = st.records.get_mut(&id) else { return };
+        if rec.state != JobState::Running {
+            return;
         }
-        self.done.notify_all();
+        rec.state = match result {
+            Ok(v) => JobState::Done(v),
+            Err(e) => JobState::Failed(e),
+        };
+        self.settle_locked(st, id);
+    }
+
+    /// Shared Running → terminal bookkeeping: retention, the single
+    /// coalesced waiter fanout, and the terminal progress frame. Call
+    /// with the state lock held and the record already terminal. The
+    /// terminal frame is published *under* the same lock
+    /// [`JobRegistry::progress`] publishes under, so it is totally
+    /// ordered after every mid-job frame — a subscriber never sees a
+    /// stale `running` frame after the terminal one, whichever of
+    /// cancel/completion wins the race.
+    fn settle_locked(&self, mut st: std::sync::MutexGuard<'_, Jobs>, id: JobId) {
+        let rec = st.records.get(&id).cloned().expect("settled record");
+        Self::retire(&mut st, id);
+        let slot = st.slots.remove(&id);
+        // Terminal frame: the exact body `job_wait` returns, so a
+        // subscriber needs no final poll.
+        let body = rec.to_body();
+        let bytes = body
+            .result
+            .as_ref()
+            .and_then(|r| r.get("output_bytes").as_u64())
+            .unwrap_or(0);
+        self.publish(
+            rec.owner,
+            Event::JobProgress {
+                job: id,
+                method: rec.method.clone(),
+                phase: rec.state.name().to_string(),
+                bytes_streamed: bytes,
+                pct: 100.0,
+                state: rec.state.name().to_string(),
+                result: Some(body.to_json()),
+            },
+        );
+        drop(st);
+        if let Some(slot) = slot {
+            let mut s = slot.state.lock().unwrap();
+            s.result = Some(rec.clone());
+            let waiters = s.waiters;
+            drop(s);
+            if waiters > 1 {
+                // One wakeup served `waiters` parked callers.
+                self.with_metrics(|m| {
+                    m.counter("jobs.wait.coalesced").add(waiters)
+                });
+            }
+            slot.done.notify_all();
+        }
     }
 
     /// Move a freshly-terminal job into the retention queue, evicting
@@ -201,15 +385,20 @@ impl JobRegistry {
 
     /// Block until the job reaches a terminal state, bounded by
     /// `timeout` of wall time. On expiry the job keeps running and
-    /// the caller gets a retryable [`ErrorCode::Timeout`].
+    /// the caller gets a retryable [`ErrorCode::Timeout`]. All
+    /// waiters of one job park on a shared [`WaitSlot`]; the
+    /// completion wakes them with a single fanout.
     pub fn wait(
         &self,
         id: JobId,
         timeout: Duration,
     ) -> Result<JobRecord, ApiError> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.state.lock().unwrap();
-        loop {
+        // Fast path + slot registration under the registry lock (the
+        // completion path takes the same lock before it removes the
+        // slot, so a slot registered here is always woken).
+        let slot = {
+            let mut st = self.state.lock().unwrap();
             match st.records.get(&id) {
                 None => return Err(Self::unknown(id)),
                 Some(rec) if rec.state.is_terminal() => {
@@ -217,18 +406,30 @@ impl JobRegistry {
                 }
                 Some(_) => {}
             }
+            let slot = Arc::clone(
+                st.slots.entry(id).or_insert_with(Arc::default),
+            );
+            slot.state.lock().unwrap().waiters += 1;
+            slot
+        };
+        let mut s = slot.state.lock().unwrap();
+        loop {
+            if let Some(rec) = &s.result {
+                let rec = rec.clone();
+                s.waiters -= 1;
+                return Ok(rec);
+            }
             let now = Instant::now();
             if now >= deadline {
+                s.waiters -= 1;
                 return Err(ApiError::new(
                     ErrorCode::Timeout,
                     format!("{id} still running after {timeout:?}"),
                 ));
             }
-            let (guard, _) = self
-                .done
-                .wait_timeout(st, deadline - now)
-                .unwrap();
-            st = guard;
+            let (guard, _) =
+                slot.done.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
         }
     }
 
@@ -242,11 +443,22 @@ impl JobRegistry {
         if rec.state == JobState::Running {
             rec.state = JobState::Cancelled;
             let cloned = rec.clone();
-            Self::retire(&mut st, id);
-            self.done.notify_all();
+            self.settle_locked(st, id);
             return Ok(cloned);
         }
         Ok(rec.clone())
+    }
+
+    /// Callers currently parked on `id`'s coalescing slot
+    /// (telemetry, tests).
+    pub fn waiters(&self, id: JobId) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .slots
+            .get(&id)
+            .map(|s| s.state.lock().unwrap().waiters)
+            .unwrap_or(0)
     }
 
     /// Number of jobs currently running (telemetry).
@@ -269,7 +481,8 @@ mod tests {
     #[test]
     fn submit_wait_returns_result() {
         let reg = JobRegistry::new();
-        let id = Arc::clone(&reg).submit("stream", 0, None, || Ok(Json::from(42u64)));
+        let id = Arc::clone(&reg)
+            .submit("stream", 0, None, |_p| Ok(Json::from(42u64)));
         let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
         assert_eq!(rec.state, JobState::Done(Json::Num(42.0)));
         assert_eq!(rec.method, "stream");
@@ -282,7 +495,7 @@ mod tests {
     #[test]
     fn failed_job_carries_api_error() {
         let reg = JobRegistry::new();
-        let id = Arc::clone(&reg).submit("program_full", 0, None, || {
+        let id = Arc::clone(&reg).submit("program_full", 0, None, |_p| {
             Err(ApiError::new(ErrorCode::NoCapacity, "full"))
         });
         let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
@@ -309,7 +522,7 @@ mod tests {
     fn wait_times_out_on_stuck_job() {
         let reg = JobRegistry::new();
         let (tx, rx) = mpsc::channel::<()>();
-        let id = Arc::clone(&reg).submit("stream", 0, None, move || {
+        let id = Arc::clone(&reg).submit("stream", 0, None, move |_p| {
             let _ = rx.recv(); // block until the test releases us
             Ok(Json::Null)
         });
@@ -325,7 +538,7 @@ mod tests {
     fn cancel_beats_completion_and_sticks() {
         let reg = JobRegistry::new();
         let (tx, rx) = mpsc::channel::<()>();
-        let id = Arc::clone(&reg).submit("stream", 0, None, move || {
+        let id = Arc::clone(&reg).submit("stream", 0, None, move |_p| {
             let _ = rx.recv();
             Ok(Json::from(1u64))
         });
@@ -345,7 +558,7 @@ mod tests {
         let reg = JobRegistry::new();
         let mut first = None;
         for i in 0..(RETAINED_TERMINAL + 10) {
-            let id = Arc::clone(&reg).submit("stream", 0, None, move || {
+            let id = Arc::clone(&reg).submit("stream", 0, None, move |_p| {
                 Ok(Json::from(i as u64))
             });
             reg.wait(id, Duration::from_secs(5)).unwrap();
@@ -355,5 +568,67 @@ mod tests {
         let err = reg.status(first.unwrap()).unwrap_err();
         assert_eq!(err.code, ErrorCode::UnknownJob);
         assert_eq!(reg.running(), 0);
+    }
+
+    #[test]
+    fn coalesced_wait_wakes_all_waiters_with_one_fanout() {
+        let metrics = Arc::new(Registry::new());
+        let reg = JobRegistry::new();
+        reg.set_metrics(Arc::clone(&metrics));
+        let (tx, rx) = mpsc::channel::<()>();
+        let id = Arc::clone(&reg).submit("stream", 0, None, move |_p| {
+            let _ = rx.recv();
+            Ok(Json::from(7u64))
+        });
+        let waiters: Vec<_> = (0..16)
+            .map(|_| {
+                let reg = Arc::clone(&reg);
+                std::thread::spawn(move || {
+                    reg.wait(id, Duration::from_secs(30)).unwrap()
+                })
+            })
+            .collect();
+        // Let every waiter park on the shared slot, then complete.
+        while reg.waiters(id) < 16 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        tx.send(()).unwrap();
+        for w in waiters {
+            let rec = w.join().unwrap();
+            assert_eq!(rec.state, JobState::Done(Json::Num(7.0)));
+        }
+        // One fanout served all 16 parked callers.
+        assert_eq!(metrics.counter("jobs.wait.coalesced").get(), 16);
+        // The slot is gone — no leak per completed job.
+        assert!(reg.state.lock().unwrap().slots.is_empty());
+    }
+
+    #[test]
+    fn progress_frames_flow_to_the_bus_in_order() {
+        use super::super::api::{SubscriptionFilter, Topic};
+        let bus = EventBus::new();
+        let reg = JobRegistry::new();
+        reg.set_bus(Arc::clone(&bus));
+        let sub = bus.subscribe(
+            SubscriptionFilter::topic(Topic::Job),
+            None,
+            None,
+        );
+        let id = Arc::clone(&reg).submit("stream", 0, None, |p| {
+            p.report("streaming", 1024, 50.0);
+            Ok(Json::obj(vec![("output_bytes", Json::from(2048u64))]))
+        });
+        let rec = reg.wait(id, Duration::from_secs(5)).unwrap();
+        // submitted → streaming → done, strictly in publish order.
+        let phases: Vec<String> = std::iter::from_fn(|| {
+            sub.next(Duration::from_millis(500)).map(|e| match e {
+                Event::JobProgress { phase, .. } => phase,
+                other => panic!("unexpected event {other:?}"),
+            })
+        })
+        .collect();
+        assert_eq!(phases, ["submitted", "streaming", "done"]);
+        // The terminal frame carried the exact job body.
+        drop(rec);
     }
 }

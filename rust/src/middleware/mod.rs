@@ -18,23 +18,36 @@
 //! The RPC surface is typed and versioned ([`api`]): every method has
 //! request/response structs, errors carry machine-readable
 //! [`api::ErrorCode`]s, `hello` negotiates the protocol window, and
-//! long-running operations return [`jobs`] handles on protocol ≥ 2.
-//! See `docs/PROTOCOL.md` for the wire format.
+//! long-running operations return [`jobs`] handles. Protocol 3 adds
+//! the event-stream surface: `subscribe` turns a connection into a
+//! multi-frame stream of typed [`api::Event`]s fed by the [`events`]
+//! bus (job progress, placement changes, region lifecycle
+//! transitions, scheduler telemetry), and `job_wait` callers coalesce
+//! on shared per-job wakeup slots. Protocol 1 (the untyped surface)
+//! is retired. See `docs/PROTOCOL.md` for the wire format.
 //!
 //! Wire format: 4-byte little-endian length + JSON
-//! (`{"method", "params", "id"?, "proto"?}` /
-//! `{"ok", "body", "id"?, "error"?}`).
+//! (`{"method", "params", "id", "proto"}` /
+//! `{"ok", "body", "id"?, "error"?, "stream"?}`, with
+//! `{"seq", "event"?, "end"?}` frames after a stream header).
 
 pub mod agent;
 pub mod api;
 pub mod client;
+pub mod events;
 pub mod jobs;
 pub mod proto;
 pub mod server;
 
 pub use agent::NodeAgent;
-pub use api::{ApiError, ErrorCode, Method, PROTO_MAX, PROTO_MIN};
-pub use client::Client;
-pub use jobs::{JobRegistry, JobState};
-pub use proto::{read_frame, write_frame, Request, Response};
+pub use api::{
+    ApiError, ErrorCode, Event, Method, SubscriptionFilter, Topic,
+    PROTO_MAX, PROTO_MIN,
+};
+pub use client::{Client, EventFrame, EventStream};
+pub use events::{EventBus, Scope};
+pub use jobs::{JobRegistry, JobState, ProgressReporter};
+pub use proto::{
+    read_frame, write_frame, Request, Response, StreamFrame,
+};
 pub use server::ManagementServer;

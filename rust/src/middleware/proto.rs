@@ -1,15 +1,19 @@
 //! Length-prefixed JSON framing + request/response envelopes.
 //!
-//! Two envelope generations share the frame format:
+//! One envelope generation is on the wire (protocol 1 — the untyped
+//! surface — was retired when protocol 3 landed): requests carry a
+//! client-chosen `id` (echoed back so pipelined callers can
+//! correlate) and a `proto` number; error responses carry a
+//! structured [`ApiError`] object under `"error"`. A request without
+//! a `proto` stamp reads as protocol 1 and is rejected with
+//! `protocol_mismatch` before dispatch.
 //!
-//! * **v1** (one version behind, still readable): requests are
-//!   `{"method", "params"}`, responses `{"ok", "body"}` with a plain
-//!   string body on error.
-//! * **v2** (current): requests additionally carry a client-chosen
-//!   `id` (echoed back so pipelined callers can correlate) and a
-//!   `proto` number; error responses carry a structured
-//!   [`ApiError`] object under `"error"` (the string body is kept in
-//!   parallel so v1 readers still see a message).
+//! Protocol 3 adds **multi-frame responses**: a response whose
+//! envelope carries `"stream": true` is a *header* — it is followed
+//! by ordered [`StreamFrame`]s (`seq` strictly increasing) and closed
+//! by a terminal frame (`"end": true`), after which the connection
+//! returns to request/response mode. The only streaming method today
+//! is `subscribe` (see `docs/PROTOCOL.md`).
 
 use std::io::{Read, Write};
 
@@ -24,24 +28,15 @@ pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
 pub struct Request {
     pub method: String,
     pub params: Json,
-    /// Client-chosen correlation id, echoed in the response (v2).
+    /// Client-chosen correlation id, echoed in the response.
     pub id: Option<u64>,
-    /// Protocol the client speaks for this request; absent = 1.
+    /// Protocol the client speaks for this request; absent = 1,
+    /// which is below the supported window and rejected.
     pub proto: Option<u32>,
 }
 
 impl Request {
-    /// A v1 (legacy-envelope) request.
-    pub fn new(method: &str, params: Json) -> Request {
-        Request {
-            method: method.to_string(),
-            params,
-            id: None,
-            proto: None,
-        }
-    }
-
-    /// A v2 request with a correlation id.
+    /// A request stamped with the newest protocol this crate speaks.
     pub fn v2(method: &str, params: Json, id: u64) -> Request {
         Request {
             method: method.to_string(),
@@ -76,7 +71,8 @@ impl Request {
 
     /// Envelope protocol of this request (absent = 1), or a
     /// `protocol_mismatch` error when outside the supported window —
-    /// checked before dispatch by every peer.
+    /// checked before dispatch by every peer. Retired protocol 1 is
+    /// rejected here, not silently downgraded.
     pub fn negotiate_proto(&self) -> Result<u32, ApiError> {
         let proto = self.proto.unwrap_or(1);
         if (super::api::PROTO_MIN..=super::api::PROTO_MAX)
@@ -89,77 +85,66 @@ impl Request {
     }
 }
 
-/// Wrap a dispatch result in the envelope generation the request
-/// spoke — shared by the management server and the node agents.
-/// Out-of-range protocols (> 2) answer v2-shaped so a future client
-/// can still read the `protocol_mismatch` code.
-pub fn respond(
-    proto: u32,
-    id: Option<u64>,
-    result: Result<Json, ApiError>,
-) -> Response {
-    if proto >= 2 {
-        match result {
-            Ok(body) => Response::success_v2(id, body),
-            Err(e) => Response::failure(id, e),
-        }
-    } else {
-        match result {
-            Ok(body) => Response::success(body),
-            Err(e) => Response::error(&e.message),
-        }
+/// Wrap a dispatch result in a response envelope — shared by the
+/// management server and the node agents. Out-of-window protocols
+/// (including retired protocol 1) are answered in the same typed
+/// shape so the rejected client can still read the
+/// `protocol_mismatch` code.
+pub fn respond(id: Option<u64>, result: Result<Json, ApiError>) -> Response {
+    match result {
+        Ok(body) => Response::success_v2(id, body),
+        Err(e) => Response::failure(id, e),
     }
 }
 
-/// An RPC response.
+/// An RPC response (or, with `stream: true`, the header of a
+/// multi-frame response).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub ok: bool,
     pub body: Json,
-    /// Echo of the request's correlation id (v2).
+    /// Echo of the request's correlation id.
     pub id: Option<u64>,
-    /// Structured failure (v2); `body` carries the message string in
-    /// parallel for v1 readers.
+    /// Structured failure; `body` carries the message string in
+    /// parallel for log readability.
     pub error: Option<ApiError>,
+    /// Protocol-3 multi-frame marker: when true, this envelope is a
+    /// stream *header* and [`StreamFrame`]s follow on the connection
+    /// until one with `end: true`.
+    pub stream: bool,
 }
 
 impl Response {
-    pub fn success(body: Json) -> Response {
-        Response {
-            ok: true,
-            body,
-            id: None,
-            error: None,
-        }
-    }
-
-    /// A v1 failure: string body only.
-    pub fn error(msg: &str) -> Response {
-        Response {
-            ok: false,
-            body: Json::from(msg),
-            id: None,
-            error: None,
-        }
-    }
-
-    /// A v2 success echoing the request id.
+    /// A success echoing the request id.
     pub fn success_v2(id: Option<u64>, body: Json) -> Response {
         Response {
             ok: true,
             body,
             id,
             error: None,
+            stream: false,
         }
     }
 
-    /// A v2 failure: structured error + message string body.
+    /// The header of a multi-frame (streaming) response.
+    pub fn stream_header(id: Option<u64>, body: Json) -> Response {
+        Response {
+            ok: true,
+            body,
+            id,
+            error: None,
+            stream: true,
+        }
+    }
+
+    /// A failure: structured error + message string body.
     pub fn failure(id: Option<u64>, error: ApiError) -> Response {
         Response {
             ok: false,
             body: Json::from(error.message.as_str()),
             id,
             error: Some(error),
+            stream: false,
         }
     }
 
@@ -173,6 +158,9 @@ impl Response {
         }
         if let Some(e) = &self.error {
             j.set("error", e.to_json());
+        }
+        if self.stream {
+            j.set("stream", Json::from(true));
         }
         j
     }
@@ -190,27 +178,13 @@ impl Response {
             body: v.get("body").clone(),
             id: v.get("id").as_u64(),
             error,
+            stream: v.get("stream").as_bool().unwrap_or(false),
         })
     }
 
-    /// Unwrap into Result for client ergonomics (v1 view: errors as
-    /// strings).
-    pub fn into_result(self) -> Result<Json, String> {
-        if self.ok {
-            Ok(self.body)
-        } else if let Some(e) = self.error {
-            Err(e.message)
-        } else {
-            Err(self
-                .body
-                .as_str()
-                .unwrap_or("unknown error")
-                .to_string())
-        }
-    }
-
-    /// Unwrap into Result keeping the structured error (v2 view). A
-    /// v1 string error maps to [`crate::middleware::api::ErrorCode::Internal`].
+    /// Unwrap into Result keeping the structured error. A bare string
+    /// error (from a pre-v2 peer) maps to
+    /// [`crate::middleware::api::ErrorCode::Internal`].
     pub fn into_api_result(self) -> Result<Json, ApiError> {
         if self.ok {
             Ok(self.body)
@@ -221,6 +195,77 @@ impl Response {
                 self.body.as_str().unwrap_or("unknown error"),
             ))
         }
+    }
+}
+
+/// One frame of a protocol-3 multi-frame response body. Frames are
+/// ordered (`seq` strictly increasing per stream, starting at 1) and
+/// the stream is closed by a frame with `end: true` (which carries no
+/// event). A server-side failure mid-stream lands on the terminal
+/// frame's `error`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamFrame {
+    pub seq: u64,
+    /// The frame payload (a typed [`super::api::Event`] for
+    /// `subscribe` streams); `None` on the terminal frame.
+    pub event: Option<Json>,
+    /// Terminal marker: no more frames follow.
+    pub end: bool,
+    /// Why the stream ended, when it ended abnormally.
+    pub error: Option<ApiError>,
+}
+
+impl StreamFrame {
+    pub fn event(seq: u64, event: Json) -> StreamFrame {
+        StreamFrame {
+            seq,
+            event: Some(event),
+            end: false,
+            error: None,
+        }
+    }
+
+    pub fn terminal(seq: u64, error: Option<ApiError>) -> StreamFrame {
+        StreamFrame {
+            seq,
+            event: None,
+            end: true,
+            error,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![("seq", Json::from(self.seq))]);
+        if let Some(ev) = &self.event {
+            j.set("event", ev.clone());
+        }
+        if self.end {
+            j.set("end", Json::from(true));
+        }
+        if let Some(e) = &self.error {
+            j.set("error", e.to_json());
+        }
+        j
+    }
+
+    pub fn from_json(v: &Json) -> Result<StreamFrame, String> {
+        let error = match v.get("error") {
+            Json::Null => None,
+            e => Some(ApiError::from_json(e)?),
+        };
+        let event = match v.get("event") {
+            Json::Null => None,
+            e => Some(e.clone()),
+        };
+        Ok(StreamFrame {
+            seq: v
+                .get("seq")
+                .as_u64()
+                .ok_or("stream frame missing 'seq'")?,
+            event,
+            end: v.get("end").as_bool().unwrap_or(false),
+            error,
+        })
     }
 }
 
@@ -266,9 +311,10 @@ mod tests {
 
     #[test]
     fn frame_roundtrip() {
-        let v = Request::new(
+        let v = Request::v2(
             "alloc_vfpga",
             Json::obj(vec![("user", Json::from("user-3"))]),
+            3,
         )
         .to_json();
         let mut buf = Vec::new();
@@ -290,29 +336,44 @@ mod tests {
 
     #[test]
     fn request_envelope_roundtrip() {
-        let req = Request::new("status", Json::obj(vec![]));
+        let req = Request::v2("status", Json::obj(vec![]), 9);
         let back = Request::from_json(&req.to_json()).unwrap();
         assert_eq!(back, req);
         assert!(Request::from_json(&Json::obj(vec![])).is_err());
     }
 
     #[test]
-    fn response_into_result() {
-        assert_eq!(
-            Response::success(Json::from(5u64)).into_result(),
-            Ok(Json::Num(5.0))
-        );
-        assert_eq!(
-            Response::error("nope").into_result(),
-            Err("nope".to_string())
-        );
-        let rt =
-            Response::from_json(&Response::error("e").to_json()).unwrap();
-        assert!(!rt.ok);
+    fn protoless_request_negotiates_as_retired_v1() {
+        use super::super::api::ErrorCode;
+        let req = Request {
+            method: "status".to_string(),
+            params: Json::obj(vec![]),
+            id: None,
+            proto: None,
+        };
+        let err = req.negotiate_proto().unwrap_err();
+        assert_eq!(err.code, ErrorCode::ProtocolMismatch);
+        // An explicit proto-1 stamp is equally retired.
+        let req = Request {
+            proto: Some(1),
+            ..req
+        };
+        assert!(req.negotiate_proto().is_err());
+        // The supported window passes.
+        for p in [super::super::api::PROTO_MIN, super::super::api::PROTO_MAX]
+        {
+            let req = Request {
+                method: "status".to_string(),
+                params: Json::obj(vec![]),
+                id: Some(1),
+                proto: Some(p),
+            };
+            assert_eq!(req.negotiate_proto().unwrap(), p);
+        }
     }
 
     #[test]
-    fn v2_envelope_roundtrips_id_and_error() {
+    fn envelope_roundtrips_id_and_error() {
         use super::super::api::{ApiError, ErrorCode};
         let req = Request::v2(
             "alloc_vfpga",
@@ -331,23 +392,49 @@ mod tests {
         let err = rt.into_api_result().unwrap_err();
         assert_eq!(err.code, ErrorCode::NoCapacity);
         assert!(err.retryable);
-        // The same failure still reads as a v1 string error.
-        assert_eq!(
-            Response::from_json(&fail.to_json())
-                .unwrap()
-                .into_result(),
-            Err("no capacity".to_string())
-        );
     }
 
     #[test]
-    fn v1_string_error_maps_to_internal_code() {
+    fn bare_string_error_maps_to_internal_code() {
         use super::super::api::ErrorCode;
-        let resp =
-            Response::from_json(&Response::error("boom").to_json()).unwrap();
+        let resp = Response {
+            ok: false,
+            body: Json::from("boom"),
+            id: None,
+            error: None,
+            stream: false,
+        };
+        let resp = Response::from_json(&resp.to_json()).unwrap();
         let err = resp.into_api_result().unwrap_err();
         assert_eq!(err.code, ErrorCode::Internal);
         assert_eq!(err.message, "boom");
+    }
+
+    #[test]
+    fn stream_header_and_frames_roundtrip() {
+        let header = Response::stream_header(
+            Some(4),
+            Json::obj(vec![("subscription", Json::from(1u64))]),
+        );
+        let rt = Response::from_json(&header.to_json()).unwrap();
+        assert!(rt.stream);
+        assert_eq!(rt, header);
+        // A plain response reads back with stream = false.
+        let plain = Response::success_v2(Some(5), Json::Null);
+        assert!(!Response::from_json(&plain.to_json()).unwrap().stream);
+
+        let ev = StreamFrame::event(
+            1,
+            Json::obj(vec![("type", Json::from("queue_depth"))]),
+        );
+        let rt = StreamFrame::from_json(&ev.to_json()).unwrap();
+        assert_eq!(rt, ev);
+        assert!(!rt.end);
+        let term = StreamFrame::terminal(2, None);
+        let rt = StreamFrame::from_json(&term.to_json()).unwrap();
+        assert!(rt.end);
+        assert!(rt.event.is_none());
+        assert!(StreamFrame::from_json(&Json::obj(vec![])).is_err());
     }
 
     #[test]

@@ -10,10 +10,18 @@
 //! leaves the server as a structured [`ApiError`].
 //!
 //! Long-running operations (`program_full`, `stream`,
-//! `invoke_service`) run synchronously for protocol-1 clients and as
-//! registry jobs ([`super::jobs`]) for protocol-2 clients, which get
-//! a `job_id` back immediately and drive `job_status` / `job_wait` /
-//! `job_cancel`.
+//! `invoke_service`) run as registry jobs ([`super::jobs`]): the
+//! caller gets a `job_id` back immediately and drives `job_status` /
+//! `job_wait` / `job_cancel`. Workers emit [`Event::JobProgress`]
+//! frames at phase boundaries and stream checkpoints; `job_wait`
+//! callers coalesce on a shared per-job wakeup slot.
+//!
+//! Protocol 3 adds the server-push surface: `subscribe` turns the
+//! connection into a multi-frame event stream fed by the process-wide
+//! [`EventBus`] — the job registry, the scheduler sink and the
+//! per-device transition sink all publish into it. Protocol 1 (the
+//! untyped surface) is retired: proto-less requests are rejected with
+//! `protocol_mismatch` before dispatch.
 //!
 //! Device status is routed through the owning node's
 //! [`super::NodeAgent`] when one is registered — the management→node
@@ -23,12 +31,17 @@ use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::api::*;
 use super::client::Client;
-use super::jobs::{JobRegistry, DEFAULT_WAIT_S, MAX_WAIT_S};
-use super::proto::{read_frame, respond, write_frame, Request, Response};
+use super::events::{EventBus, Scope};
+use super::jobs::{
+    JobRegistry, ProgressReporter, DEFAULT_WAIT_S, MAX_WAIT_S,
+};
+use super::proto::{
+    read_frame, respond, write_frame, Request, Response, StreamFrame,
+};
 use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
 use crate::fpga::board::BoardKind;
@@ -36,7 +49,8 @@ use crate::hls::synth::{CoreKind, CoreSpec, Synthesizer};
 use crate::hypervisor::{AllocKind, Hypervisor, HypervisorError};
 use crate::rc2f::stream::StreamConfig;
 use crate::sched::{
-    AdmissionRequest, Lease, RequestClass, SchedError, Scheduler,
+    AdmissionRequest, Lease, PreemptPolicy, RequestClass, SchedEvent,
+    Scheduler,
 };
 use crate::util::clock::VirtualTime;
 use crate::util::ids::{AllocationId, LeaseToken, NodeId};
@@ -54,8 +68,10 @@ struct ServerInner {
     hv: Arc<Hypervisor>,
     /// The cluster scheduler — every allocation RPC admits through it.
     sched: Arc<Scheduler>,
-    /// Async jobs for the long-running RPCs (protocol ≥ 2).
+    /// Async jobs for the long-running RPCs.
     jobs: Arc<JobRegistry>,
+    /// The protocol-3 server-push event bus.
+    bus: Arc<EventBus>,
     rpc_overhead_ms: f64,
     /// Prebuilt relocatable user-core bitfiles ("the user uploads a
     /// bitfile" — kept server-side so the CLI can reference cores by
@@ -74,10 +90,17 @@ impl ManagementServer {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let sched = Scheduler::new(Arc::clone(&hv));
+        let bus = EventBus::new();
+        bus.set_metrics(Arc::clone(&hv.metrics));
+        let jobs = JobRegistry::new();
+        jobs.set_metrics(Arc::clone(&hv.metrics));
+        jobs.set_bus(Arc::clone(&bus));
+        wire_event_sources(&hv, &sched, &bus);
         let inner = Arc::new(ServerInner {
             hv,
             sched,
-            jobs: JobRegistry::new(),
+            jobs,
+            bus,
             rpc_overhead_ms,
             cores: build_core_library(),
             agents: Mutex::new(BTreeMap::new()),
@@ -129,6 +152,11 @@ impl ManagementServer {
         &self.inner.jobs
     }
 
+    /// The protocol-3 event bus behind this server.
+    pub fn bus(&self) -> &Arc<EventBus> {
+        &self.inner.bus
+    }
+
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(self.addr);
@@ -142,6 +170,72 @@ impl Drop for ManagementServer {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Plumb the scheduler's telemetry sink and every device's
+/// lifecycle-transition sink into the event bus. Scopes encode the
+/// tenant-isolation policy: queue depth / grants / region transitions
+/// are operator telemetry (public), placement changes are
+/// tenant-scoped, job progress is token-scoped (published by the job
+/// registry itself).
+fn wire_event_sources(
+    hv: &Arc<Hypervisor>,
+    sched: &Arc<Scheduler>,
+    bus: &Arc<EventBus>,
+) {
+    let sink_bus = Arc::clone(bus);
+    sched.set_event_sink(Arc::new(move |ev| {
+        let (event, scope) = match ev {
+            SchedEvent::QueueDepth { depth } => {
+                (Event::QueueDepth { depth }, Scope::Public)
+            }
+            SchedEvent::GrantIssued {
+                alloc,
+                tenant,
+                model,
+                class,
+                wait,
+            } => (
+                Event::GrantIssued {
+                    alloc,
+                    tenant,
+                    model,
+                    class,
+                    wait_ms: wait.as_millis_f64(),
+                },
+                Scope::Public,
+            ),
+            SchedEvent::PlacementChanged {
+                alloc,
+                tenant,
+                vfpga,
+                fpga,
+                migrations,
+            } => (
+                Event::LeasePlacementChanged {
+                    alloc,
+                    vfpga,
+                    fpga,
+                    migrations,
+                },
+                Scope::Tenant(tenant),
+            ),
+        };
+        sink_bus.publish(event, scope);
+    }));
+    let region_bus = Arc::clone(bus);
+    hv.set_region_transition_sink(Arc::new(move |fpga, rec| {
+        region_bus.publish(
+            Event::RegionTransition {
+                fpga,
+                region: rec.region,
+                from: rec.from.name().to_string(),
+                to: rec.to.name().to_string(),
+                at_s: rec.at.as_secs_f64(),
+            },
+            Scope::Public,
+        );
+    }));
 }
 
 /// Build the server's core library: one relocatable bitfile per known
@@ -182,21 +276,38 @@ fn serve_conn(
 ) -> std::io::Result<()> {
     while let Some(frame) = read_frame(&mut stream)? {
         let resp = match Request::from_json(&frame) {
-            Err(e) => Response::error(&e),
+            Err(e) => Response::failure(None, ApiError::bad_request(e)),
             Ok(req) => {
                 // The RC3E middleware hop (Table I's +69 ms).
                 inner.hv.clock.advance(VirtualTime::from_millis_f64(
                     inner.rpc_overhead_ms,
                 ));
-                let proto = req.proto.unwrap_or(1);
-                let result = req.negotiate_proto().and_then(|_| {
-                    let ctx = Ctx {
-                        inner: &inner,
-                        proto,
-                    };
-                    dispatch(&ctx, &req.method, &req.params)
-                });
-                respond(proto, req.id, result)
+                match req.negotiate_proto() {
+                    Err(e) => respond(req.id, Err(e)),
+                    Ok(proto)
+                        if req.method == Method::Subscribe.name() =>
+                    {
+                        // Multi-frame response: the handler writes the
+                        // header + event frames + terminal frame
+                        // itself, then the connection returns to
+                        // request/response mode.
+                        serve_subscription(
+                            &mut stream,
+                            &inner,
+                            proto,
+                            req.id,
+                            &req.params,
+                        )?;
+                        continue;
+                    }
+                    Ok(_proto) => {
+                        let ctx = Ctx { inner: &inner };
+                        respond(
+                            req.id,
+                            dispatch(&ctx, &req.method, &req.params),
+                        )
+                    }
+                }
             }
         };
         write_frame(&mut stream, &resp.to_json())?;
@@ -204,19 +315,109 @@ fn serve_conn(
     Ok(())
 }
 
+// ================================================== subscriptions
+
+/// Parse + authorize one `subscribe` request and register the
+/// subscription on the bus. The tenant scope comes from the
+/// presented capability, never from a client-chosen field: tokens
+/// the scheduler does not know (job-scoped owner tokens, forged
+/// tokens) resolve to no tenant — token-scoped events still match by
+/// exact token, and a forged token simply matches nothing.
+fn open_subscription(
+    inner: &Arc<ServerInner>,
+    proto: u32,
+    params: &Json,
+) -> Result<(Arc<super::events::Subscription>, SubscribeRequest), ApiError>
+{
+    if proto < 3 {
+        return Err(ApiError::bad_request(
+            "subscribe requires protocol 3",
+        ));
+    }
+    let req = SubscribeRequest::from_json(params)?;
+    let tenant = req
+        .lease
+        .and_then(|t| inner.sched.lease_handle(t))
+        .map(|h| h.tenant());
+    let sub = inner.bus.subscribe(req.filter.clone(), req.lease, tenant);
+    Ok((sub, req))
+}
+
+/// Serve one `subscribe` request: header, ordered event frames,
+/// terminal frame. Bounded by the (clamped) timeout and the optional
+/// event budget, so a subscription can never outlive the client's
+/// socket read timeout between frames.
+fn serve_subscription(
+    stream: &mut TcpStream,
+    inner: &Arc<ServerInner>,
+    proto: u32,
+    id: Option<u64>,
+    params: &Json,
+) -> std::io::Result<()> {
+    let (sub, req) = match open_subscription(inner, proto, params) {
+        Err(e) => {
+            return write_frame(
+                stream,
+                &Response::failure(id, e).to_json(),
+            )
+        }
+        Ok(v) => v,
+    };
+    let timeout_s = req
+        .timeout_s
+        .unwrap_or(DEFAULT_WAIT_S)
+        .clamp(0.01, MAX_WAIT_S);
+    let header = Response::stream_header(
+        id,
+        SubscribeResponse {
+            subscription: sub.id(),
+            timeout_s,
+        }
+        .to_json(),
+    );
+    let deadline = Instant::now() + Duration::from_secs_f64(timeout_s);
+    let max_events = req.max_events.unwrap_or(u64::MAX);
+    let mut seq = 0u64;
+    let result = (|| {
+        write_frame(stream, &header.to_json())?;
+        while seq < max_events {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match sub.next(deadline - now) {
+                Some(ev) => {
+                    seq += 1;
+                    write_frame(
+                        stream,
+                        &StreamFrame::event(seq, ev.to_json()).to_json(),
+                    )?;
+                }
+                None => break,
+            }
+        }
+        write_frame(stream, &StreamFrame::terminal(seq + 1, None).to_json())
+    })();
+    inner.bus.unsubscribe(sub.id());
+    result
+}
+
 // ===================================================== dispatching
 
-/// Per-request handler context.
+/// Per-request handler context. Every request that reaches a handler
+/// already negotiated a supported protocol (2 or 3); the only
+/// version-dependent behavior — `subscribe` being protocol-3-only —
+/// is resolved before table dispatch, so handlers are
+/// version-agnostic.
 struct Ctx<'a> {
     inner: &'a Arc<ServerInner>,
-    /// Envelope generation of this request (1 = legacy shapes,
-    /// ≥ 2 = typed shapes + job handles for long operations).
-    proto: u32,
 }
 
 type Handler = fn(&Ctx<'_>, &Json) -> Result<Json, ApiError>;
 
 /// The dispatch table: one typed handler per management-server RPC.
+/// `subscribe` is absent deliberately — its response is multi-frame
+/// and is served by [`serve_subscription`] before table dispatch.
 const HANDLERS: &[(Method, Handler)] = &[
     (Method::Hello, h_hello),
     (Method::AddUser, h_add_user),
@@ -244,12 +445,17 @@ const HANDLERS: &[(Method, Handler)] = &[
     (Method::JobStatus, h_job_status),
     (Method::JobWait, h_job_wait),
     (Method::JobCancel, h_job_cancel),
+    (Method::LifecycleLog, h_lifecycle_log),
+    (Method::SchedPolicyGet, h_sched_policy_get),
+    (Method::SchedPolicySet, h_sched_policy_set),
 ];
 
 /// Whether the management server serves `method` (dispatch-table
 /// completeness is asserted by tests against [`Method::ALL`]).
+/// `subscribe` is served out-of-table (multi-frame response).
 pub fn method_is_served(method: Method) -> bool {
-    HANDLERS.iter().any(|(m, _)| *m == method)
+    method == Method::Subscribe
+        || HANDLERS.iter().any(|(m, _)| *m == method)
 }
 
 fn dispatch(
@@ -269,21 +475,17 @@ fn dispatch(
 
 // ===================================================== capability auth
 
-/// Protocol ≥ 2 capability check for mutating RPCs: resolve the
-/// allocation (dead/foreign → `bad_lease` regardless of token), then
-/// require the presented token to own it (`bad_token` when missing,
-/// forged or stale). Returns the disarmed lease handle the handler
-/// should operate through — its tenant, not the wire `user` field, is
-/// the authorized identity. Protocol 1 returns `None` and keeps the
-/// honor-system `user` semantics for exactly one version behind.
+/// Capability check for mutating RPCs: resolve the allocation
+/// (dead/foreign → `bad_lease` regardless of token), then require the
+/// presented token to own it (`bad_token` when missing, forged or
+/// stale). Returns the disarmed lease handle the handler should
+/// operate through — its tenant, not the wire `user` field, is the
+/// authorized identity.
 fn authorize(
     ctx: &Ctx<'_>,
     alloc: AllocationId,
     lease: Option<LeaseToken>,
-) -> Result<Option<Lease>, ApiError> {
-    if ctx.proto < 2 {
-        return Ok(None);
-    }
+) -> Result<Lease, ApiError> {
     let grant = ctx.inner.sched.grant(alloc).ok_or_else(|| {
         ApiError::new(
             ErrorCode::BadLease,
@@ -293,7 +495,7 @@ fn authorize(
     let token = lease.ok_or_else(|| {
         ApiError::new(
             ErrorCode::BadToken,
-            "protocol 2 requires the lease token on mutating calls",
+            "mutating calls require the lease token",
         )
     })?;
     if grant.token != token {
@@ -304,28 +506,20 @@ fn authorize(
     }
     // A concurrent release between the grant check and here reads as
     // a stale token, not a server panic.
-    ctx.inner
-        .sched
-        .lease_handle(token)
-        .map(Some)
-        .ok_or_else(|| {
-            ApiError::new(
-                ErrorCode::BadToken,
-                "lease released mid-request".to_string(),
-            )
-        })
+    ctx.inner.sched.lease_handle(token).ok_or_else(|| {
+        ApiError::new(
+            ErrorCode::BadToken,
+            "lease released mid-request".to_string(),
+        )
+    })
 }
 
-/// Owner gate for `job_*` RPCs on protocol ≥ 2: an owned job only
-/// answers to the token that submitted it.
+/// Owner gate for `job_*` RPCs: an owned job only answers to the
+/// token that submitted it.
 fn authorize_job(
-    ctx: &Ctx<'_>,
     owner: Option<LeaseToken>,
     presented: Option<LeaseToken>,
 ) -> Result<(), ApiError> {
-    if ctx.proto < 2 {
-        return Ok(());
-    }
     match owner {
         Some(t) if presented != Some(t) => Err(ApiError::new(
             ErrorCode::BadToken,
@@ -467,35 +661,19 @@ fn h_alloc_physical(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 
 fn h_release(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = ReleaseRequest::from_json(p)?;
-    if let Some(handle) = authorize(ctx, req.alloc, req.lease)? {
-        // Protocol ≥ 2: the capability releases the *whole* lease
-        // (every gang member), like Lease::release everywhere else.
-        handle.release().map_err(ApiError::from)?;
-        return Ok(ReleaseResponse { released: true }.to_json());
-    }
-    // Protocol 1 (one version behind): by-allocation release.
-    // Scheduler-tracked leases release through the scheduler (quota
-    // credit + queue pump); anything allocated out of band falls back
-    // to the hypervisor.
-    match ctx.inner.sched.release(req.alloc) {
-        Ok(()) => {}
-        Err(SchedError::UnknownGrant(_)) => ctx
-            .inner
-            .hv
-            .release(req.alloc)
-            .map_err(ApiError::from)?,
-        Err(e) => return Err(ApiError::from(e)),
-    }
+    // The capability releases the *whole* lease (every gang member),
+    // like Lease::release everywhere else.
+    let handle = authorize(ctx, req.alloc, req.lease)?;
+    handle.release().map_err(ApiError::from)?;
     Ok(ReleaseResponse { released: true }.to_json())
 }
 
 fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
-    let mut req = ProgramCoreRequest::from_json(p)?;
-    if let Some(handle) = authorize(ctx, req.alloc, req.lease)? {
-        // The token's tenant is the authorized identity — the wire
-        // `user` field is no longer trusted on protocol ≥ 2.
-        req.user = handle.tenant();
-    }
+    let req = ProgramCoreRequest::from_json(p)?;
+    // The token's tenant is the authorized identity — the wire `user`
+    // field is not trusted.
+    let handle = authorize(ctx, req.alloc, req.lease)?;
+    let user = handle.tenant();
     let inner = ctx.inner;
     let bitfile = inner.cores.get(&req.core).ok_or_else(|| {
         ApiError::new(
@@ -507,7 +685,7 @@ fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     // between placement resolution and programming.
     let d = inner
         .hv
-        .program_retargeted(req.alloc, req.user, bitfile)
+        .program_retargeted(req.alloc, user, bitfile)
         .map_err(ApiError::from)?;
     Ok(ProgramCoreResponse {
         programmed: req.core,
@@ -518,83 +696,72 @@ fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 
 fn h_stream(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let mut req = StreamRequest::from_json(p)?;
-    if ctx.proto >= 2 {
-        let handle = authorize(ctx, req.alloc, req.lease)?
-            .expect("authorize returns a handle on proto >= 2");
-        req.user = handle.tenant();
-        let owner = req.lease;
-        let inner = Arc::clone(ctx.inner);
-        let now_ns = ctx.inner.hv.clock.now().0;
-        let job = Arc::clone(&ctx.inner.jobs).submit(
-            Method::Stream.name(),
-            now_ns,
-            owner,
-            move || run_stream(&inner, &req),
-        );
-        return Ok(JobSubmitResponse { job, lease: owner }.to_json());
-    }
-    run_stream(ctx.inner, &req)
+    let handle = authorize(ctx, req.alloc, req.lease)?;
+    req.user = handle.tenant();
+    let owner = req.lease;
+    let inner = Arc::clone(ctx.inner);
+    let now_ns = ctx.inner.hv.clock.now().0;
+    let job = Arc::clone(&ctx.inner.jobs).submit(
+        Method::Stream.name(),
+        now_ns,
+        owner,
+        move |progress| run_stream(&inner, &req, progress),
+    );
+    Ok(JobSubmitResponse { job, lease: owner }.to_json())
 }
 
 fn h_program_full(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let mut req = ProgramFullRequest::from_json(p)?;
-    if ctx.proto >= 2 {
-        let handle = authorize(ctx, req.alloc, req.lease)?
-            .expect("authorize returns a handle on proto >= 2");
-        req.user = handle.tenant();
-        let owner = req.lease;
-        let inner = Arc::clone(ctx.inner);
-        let now_ns = ctx.inner.hv.clock.now().0;
-        let job = Arc::clone(&ctx.inner.jobs).submit(
-            Method::ProgramFull.name(),
-            now_ns,
-            owner,
-            move || run_program_full(&inner, &req),
-        );
-        return Ok(JobSubmitResponse { job, lease: owner }.to_json());
-    }
-    run_program_full(ctx.inner, &req)
+    let handle = authorize(ctx, req.alloc, req.lease)?;
+    req.user = handle.tenant();
+    let owner = req.lease;
+    let inner = Arc::clone(ctx.inner);
+    let now_ns = ctx.inner.hv.clock.now().0;
+    let job = Arc::clone(&ctx.inner.jobs).submit(
+        Method::ProgramFull.name(),
+        now_ns,
+        owner,
+        move |progress| run_program_full(&inner, &req, progress),
+    );
+    Ok(JobSubmitResponse { job, lease: owner }.to_json())
 }
 
 fn h_invoke_service(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = InvokeServiceRequest::from_json(p)?;
-    if ctx.proto >= 2 {
-        // No lease is involved (BAaaS allocates internally); mint a
-        // job-scoped owner token so the job handle is still a
-        // capability, not an enumerable id anyone can cancel.
-        let owner = LeaseToken::mint();
-        let inner = Arc::clone(ctx.inner);
-        let now_ns = ctx.inner.hv.clock.now().0;
-        let job = Arc::clone(&ctx.inner.jobs).submit(
-            Method::InvokeService.name(),
-            now_ns,
-            Some(owner),
-            move || run_invoke_service(&inner, &req),
-        );
-        return Ok(JobSubmitResponse {
-            job,
-            lease: Some(owner),
-        }
-        .to_json());
+    // No lease is involved (BAaaS allocates internally); mint a
+    // job-scoped owner token so the job handle is still a capability,
+    // not an enumerable id anyone can cancel.
+    let owner = LeaseToken::mint();
+    let inner = Arc::clone(ctx.inner);
+    let now_ns = ctx.inner.hv.clock.now().0;
+    let job = Arc::clone(&ctx.inner.jobs).submit(
+        Method::InvokeService.name(),
+        now_ns,
+        Some(owner),
+        move |progress| run_invoke_service(&inner, &req, progress),
+    );
+    Ok(JobSubmitResponse {
+        job,
+        lease: Some(owner),
     }
-    run_invoke_service(ctx.inner, &req)
+    .to_json())
 }
 
 fn h_migrate(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
-    let mut req = MigrateRequest::from_json(p)?;
-    if let Some(handle) = authorize(ctx, req.alloc, req.lease)? {
-        req.user = handle.tenant();
-    }
+    let req = MigrateRequest::from_json(p)?;
+    let handle = authorize(ctx, req.alloc, req.lease)?;
+    let user = handle.tenant();
     // Default target selection is model-aware (see
     // hypervisor::migration), so the relocated lease stays within the
     // per-device model policy.
     let report = ctx
         .inner
         .hv
-        .migrate_vfpga(req.alloc, req.user, None)
+        .migrate_vfpga(req.alloc, user, None)
         .map_err(ApiError::from)?;
     // Keep the scheduler's view of the lease current so preemption
-    // victim selection and sched_status stay accurate.
+    // victim selection and sched_status stay accurate (this also
+    // publishes the tenant's LeasePlacementChanged event).
     ctx.inner.sched.note_migration(req.alloc, report.to);
     Ok(MigrateResponse {
         from: report.from,
@@ -607,36 +774,28 @@ fn h_migrate(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 
 fn h_services(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let _req = ServicesRequest::from_json(p)?;
-    let resp = ServicesResponse {
+    Ok(ServicesResponse {
         services: ctx.inner.hv.service_names(),
-    };
-    Ok(if ctx.proto >= 2 {
-        resp.to_json()
-    } else {
-        resp.to_legacy_json()
-    })
+    }
+    .to_json())
 }
 
 fn h_cores(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let _req = CoresRequest::from_json(p)?;
-    let resp = CoresResponse {
+    Ok(CoresResponse {
         cores: ctx.inner.cores.keys().cloned().collect(),
-    };
-    Ok(if ctx.proto >= 2 {
-        resp.to_json()
-    } else {
-        resp.to_legacy_json()
-    })
+    }
+    .to_json())
 }
 
 fn h_monitor(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let _req = MonitorRequest::from_json(p)?;
     let hv = &ctx.inner.hv;
     // One monitoring sweep over every device + report, plus the
-    // scheduler's admission telemetry (ROADMAP item: expose the
-    // `sched.wait` histogram and queue-depth gauge over the wire) and
-    // the region-lifecycle telemetry (per-state occupancy gauges,
-    // quiesce-wait histogram, raced counter).
+    // scheduler's admission telemetry (the `sched.wait` histogram and
+    // queue-depth gauge over the wire) and the region-lifecycle
+    // telemetry (per-state occupancy gauges, quiesce-wait histogram,
+    // raced counter).
     let mut mon = crate::hypervisor::Monitor::new();
     mon.sample_all(hv);
     hv.refresh_region_gauges();
@@ -800,10 +959,65 @@ fn h_db_dump(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     .to_json())
 }
 
+fn h_lifecycle_log(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = LifecycleLogRequest::from_json(p)?;
+    let dev = ctx.inner.hv.device(req.fpga).map_err(ApiError::from)?;
+    let (records, dropped) = {
+        let fpga = dev.fpga.lock().unwrap();
+        (fpga.transition_log(), fpga.transition_log_dropped())
+    };
+    let limit = req.limit.unwrap_or(u64::MAX) as usize;
+    let skip = records.len().saturating_sub(limit);
+    let records: Vec<TransitionBody> = records[skip..]
+        .iter()
+        .map(|r| TransitionBody {
+            region: r.region,
+            from: r.from.name().to_string(),
+            to: r.to.name().to_string(),
+            at_s: r.at.as_secs_f64(),
+        })
+        .collect();
+    Ok(LifecycleLogResponse {
+        fpga: req.fpga,
+        records,
+        dropped,
+    }
+    .to_json())
+}
+
+fn h_sched_policy_get(
+    ctx: &Ctx<'_>,
+    p: &Json,
+) -> Result<Json, ApiError> {
+    let _req = SchedPolicyGetRequest::from_json(p)?;
+    Ok(SchedPolicyResponse {
+        policy: ctx.inner.sched.preempt_policy().name().to_string(),
+    }
+    .to_json())
+}
+
+fn h_sched_policy_set(
+    ctx: &Ctx<'_>,
+    p: &Json,
+) -> Result<Json, ApiError> {
+    let req = SchedPolicySetRequest::from_json(p)?;
+    let policy = PreemptPolicy::parse(&req.policy).ok_or_else(|| {
+        ApiError::bad_request(format!(
+            "unknown policy '{}' (spread|pack)",
+            req.policy
+        ))
+    })?;
+    ctx.inner.sched.set_preempt_policy(policy);
+    Ok(SchedPolicyResponse {
+        policy: policy.name().to_string(),
+    }
+    .to_json())
+}
+
 fn h_job_status(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = JobStatusRequest::from_json(p)?;
     let rec = ctx.inner.jobs.status(req.job)?;
-    authorize_job(ctx, rec.owner, req.lease)?;
+    authorize_job(rec.owner, req.lease)?;
     Ok(rec.to_body().to_json())
 }
 
@@ -812,12 +1026,13 @@ fn h_job_wait(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     // Gate on ownership *before* blocking — a forged token must not
     // be able to park threads on someone else's job.
     let rec = ctx.inner.jobs.status(req.job)?;
-    authorize_job(ctx, rec.owner, req.lease)?;
+    authorize_job(rec.owner, req.lease)?;
     // Cap below the client library's 120 s socket read timeout: a
     // server-side wait that outlives the client's read would leave a
     // stale frame on the connection and desynchronize every later
     // response. Clients long-poll by retrying on `timeout` instead
-    // (see Client::job_wait_done).
+    // (see Client::job_wait_done). All callers parked on one job
+    // share a coalescing slot — one completion fanout wakes them all.
     let timeout_s = req
         .timeout_s
         .unwrap_or(DEFAULT_WAIT_S)
@@ -832,15 +1047,15 @@ fn h_job_wait(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 fn h_job_cancel(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = JobCancelRequest::from_json(p)?;
     let rec = ctx.inner.jobs.status(req.job)?;
-    authorize_job(ctx, rec.owner, req.lease)?;
+    authorize_job(rec.owner, req.lease)?;
     Ok(ctx.inner.jobs.cancel(req.job)?.to_body().to_json())
 }
 
 // ====================================== long-running operation bodies
 //
-// Shared by the synchronous protocol-1 path and the protocol-2 job
-// workers, so `submit + job_wait` reproduces the old blocking
-// behavior exactly.
+// Each worker emits JobProgress frames at its phase boundaries and
+// stream checkpoints; the registry adds the `submitted` and terminal
+// frames around them.
 
 fn stream_config_for(
     core: &str,
@@ -859,10 +1074,11 @@ fn stream_config_for(
 fn run_stream(
     inner: &ServerInner,
     req: &StreamRequest,
+    progress: &ProgressReporter,
 ) -> Result<Json, ApiError> {
+    progress.report("resolve", 0, 5.0);
     let cfg = stream_config_for(&req.core, req.mults)?;
-    // Recover the lease handle from the grant (v1 callers present no
-    // token, but the grant knows its own) so the session-open +
+    // Recover the lease handle from the grant so the session-open +
     // streaming body lives in exactly one place: Lease::stream. The
     // handle resolves placement at run time — a migration between
     // submit and run streams through the new device.
@@ -883,17 +1099,22 @@ fn run_stream(
         .iter()
         .position(|a| *a == req.alloc)
         .unwrap_or(0);
+    progress.report("streaming", 0, 25.0);
     let out = handle.stream_member(idx, &cfg).map_err(ApiError::from)?;
+    // Stream checkpoint: bytes are known once the session closes.
+    progress.report("streamed", out.output_bytes, 90.0);
     Ok(StreamOutcomeBody::from_outcome(&out).to_json())
 }
 
 fn run_program_full(
     inner: &ServerInner,
     req: &ProgramFullRequest,
+    progress: &ProgressReporter,
 ) -> Result<Json, ApiError> {
     // RSaaS: write a full user bitstream to an exclusively held
     // device (server builds the synthetic image; a real deployment
     // would receive an upload).
+    progress.report("build_bitstream", 0, 10.0);
     let name = req
         .name
         .clone()
@@ -924,10 +1145,12 @@ fn run_program_full(
         .part;
     let bs =
         crate::bitstream::BitstreamBuilder::full(part, &name).build();
+    progress.report("configuring", 0, 40.0);
     let d = inner
         .hv
         .program_full(req.alloc, req.user, &bs)
         .map_err(ApiError::from)?;
+    progress.report("configured", 0, 95.0);
     Ok(ProgramFullResponse {
         programmed: name,
         config_s: d.as_secs_f64(),
@@ -938,6 +1161,7 @@ fn run_program_full(
 fn run_invoke_service(
     inner: &ServerInner,
     req: &InvokeServiceRequest,
+    progress: &ProgressReporter,
 ) -> Result<Json, ApiError> {
     let core = if req.service.contains("32") {
         "matmul32"
@@ -945,9 +1169,11 @@ fn run_invoke_service(
         "matmul16"
     };
     let cfg = stream_config_for(core, req.mults)?;
+    progress.report("admitting", 0, 10.0);
     let svc = crate::service::BaaasService::with_scheduler(Arc::clone(
         &inner.sched,
     ));
+    progress.report("streaming", 0, 40.0);
     let out = svc
         .invoke(req.user, &req.service, &cfg)
         .map_err(ApiError::from)?;
@@ -958,6 +1184,7 @@ fn run_invoke_service(
 mod tests {
     use super::*;
     use crate::util::clock::VirtualClock;
+    use crate::util::ids::{FpgaId, JobId};
 
     fn setup() -> (ManagementServer, Client, Arc<Hypervisor>) {
         let hv = Arc::new(
@@ -983,37 +1210,42 @@ mod tests {
     #[test]
     fn hello_and_cores() {
         let (_s, mut c, _hv) = setup();
-        let body = c.call("hello", Json::obj(vec![])).unwrap();
-        assert_eq!(body.get("version").as_str(), Some(crate::VERSION));
+        let hello = c.hello().unwrap();
+        assert_eq!(hello.version, crate::VERSION);
         // The server advertises its protocol window.
-        assert_eq!(
-            body.get("proto_max").as_u64(),
-            Some(u64::from(PROTO_MAX))
-        );
-        let cores = c.call("cores", Json::obj(vec![])).unwrap();
-        assert!(cores
-            .as_arr()
-            .unwrap()
-            .iter()
-            .any(|c| c.as_str() == Some("matmul16")));
+        assert_eq!(hello.proto_min, PROTO_MIN);
+        assert_eq!(hello.proto_max, PROTO_MAX);
+        let cores = c.cores().unwrap();
+        assert!(cores.cores.contains(&"matmul16".to_string()));
+    }
+
+    #[test]
+    fn protoless_requests_are_rejected_as_protocol_1() {
+        let (s, _c, _hv) = setup();
+        let mut stream = TcpStream::connect(s.addr()).unwrap();
+        // A protocol-1 request: no `proto`, no `id`.
+        let raw = Json::obj(vec![
+            ("method", Json::from("hello")),
+            ("params", Json::obj(vec![])),
+        ]);
+        write_frame(&mut stream, &raw).unwrap();
+        let frame = read_frame(&mut stream).unwrap().unwrap();
+        let resp = Response::from_json(&frame).unwrap();
+        let err = resp.into_api_result().unwrap_err();
+        assert_eq!(err.code, ErrorCode::ProtocolMismatch);
     }
 
     #[test]
     fn status_over_rc3e_costs_80ms() {
         let (_s, mut c, hv) = setup();
         let t0 = hv.clock.now();
-        let body = c
-            .call(
-                "status",
-                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
-            )
-            .unwrap();
+        let st = c.status(FpgaId(0)).unwrap();
         let ms = hv.clock.since(t0).as_millis_f64();
         assert!(
             (ms - crate::paper::STATUS_RC3E_MS).abs() < 0.5,
             "status over RC3E took {ms} ms"
         );
-        assert_eq!(body.get("regions_total").as_u64(), Some(4));
+        assert_eq!(st.regions_total, 4);
     }
 
     #[test]
@@ -1027,13 +1259,8 @@ mod tests {
         .unwrap();
         s.register_agent(NodeId(0), agent.addr());
         let t0 = hv.clock.now();
-        let body = c
-            .call(
-                "status",
-                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
-            )
-            .unwrap();
-        assert_eq!(body.get("board").as_str(), Some("vc707"));
+        let st = c.status(FpgaId(0)).unwrap();
+        assert_eq!(st.board, "vc707");
         // Same virtual cost as the unrouted path (Table I: local vs
         // remote node over RC3E are both 80 ms).
         let ms = hv.clock.since(t0).as_millis_f64();
@@ -1043,39 +1270,14 @@ mod tests {
     #[test]
     fn full_lease_cycle_over_rpc() {
         let (_s, mut c, _hv) = setup();
-        let user = c
-            .call("add_user", Json::obj(vec![("name", Json::from("cli"))]))
-            .unwrap()
-            .get("user")
-            .as_str()
-            .unwrap()
-            .to_string();
-        let lease = c
-            .call(
-                "alloc_vfpga",
-                Json::obj(vec![("user", Json::from(user.as_str()))]),
-            )
-            .unwrap();
-        let alloc = lease.get("alloc").as_str().unwrap().to_string();
-        let prog = c
-            .call(
-                "program_core",
-                Json::obj(vec![
-                    ("user", Json::from(user.as_str())),
-                    ("alloc", Json::from(alloc.as_str())),
-                    ("core", Json::from("matmul16")),
-                ]),
-            )
-            .unwrap();
+        let user = c.add_user("cli").unwrap().user;
+        let lease = c.alloc_vfpga(user, None, None).unwrap();
+        let prog =
+            c.program_core(user, lease.alloc, "matmul16").unwrap();
         // PR over RC3E ≈ 732 + 111 (orchestration); the RPC hop is
         // charged before dispatch.
-        let pr_ms = prog.get("pr_ms").as_f64().unwrap();
-        assert!((pr_ms - 843.0).abs() < 1.0, "{pr_ms}");
-        c.call(
-            "release",
-            Json::obj(vec![("alloc", Json::from(alloc.as_str()))]),
-        )
-        .unwrap();
+        assert!((prog.pr_ms - 843.0).abs() < 1.0, "{}", prog.pr_ms);
+        assert!(c.release(lease.alloc).unwrap().released);
     }
 
     #[test]
@@ -1086,240 +1288,305 @@ mod tests {
             return;
         }
         let (_s, mut c, _hv) = setup();
-        let user = c
-            .call("add_user", Json::obj(vec![("name", Json::from("u"))]))
-            .unwrap()
-            .get("user")
-            .as_str()
-            .unwrap()
-            .to_string();
-        let lease = c
-            .call(
-                "alloc_vfpga",
-                Json::obj(vec![("user", Json::from(user.as_str()))]),
-            )
-            .unwrap();
-        let alloc = lease.get("alloc").as_str().unwrap().to_string();
-        c.call(
-            "program_core",
-            Json::obj(vec![
-                ("user", Json::from(user.as_str())),
-                ("alloc", Json::from(alloc.as_str())),
-                ("core", Json::from("matmul16")),
-            ]),
-        )
-        .unwrap();
-        // A v1 (proto-less) stream request stays synchronous.
-        let out = c
-            .call(
-                "stream",
-                Json::obj(vec![
-                    ("user", Json::from(user.as_str())),
-                    ("alloc", Json::from(alloc.as_str())),
-                    ("core", Json::from("matmul16")),
-                    ("mults", Json::from(512u64)),
-                ]),
-            )
-            .unwrap();
-        assert_eq!(out.get("validation_failures").as_u64(), Some(0));
-        assert!(out.get("virtual_mbps").as_f64().unwrap() > 400.0);
+        let user = c.add_user("u").unwrap().user;
+        let lease = c.alloc_vfpga(user, None, None).unwrap();
+        c.program_core(user, lease.alloc, "matmul16").unwrap();
+        let out =
+            c.stream_sync(user, lease.alloc, "matmul16", 512).unwrap();
+        assert_eq!(out.validation_failures, 0);
+        assert!(out.virtual_mbps > 400.0);
     }
 
     #[test]
     fn errors_are_application_level() {
         let (_s, mut c, _hv) = setup();
         // Unknown method.
-        assert!(c.call("reboot_world", Json::obj(vec![])).is_err());
+        let err =
+            c.call_v2("reboot_world", Json::obj(vec![])).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownMethod);
         // Bad params.
-        assert!(c
-            .call("status", Json::obj(vec![("fpga", Json::from("x"))]))
-            .is_err());
+        let err = c
+            .call_v2(
+                "status",
+                Json::obj(vec![("fpga", Json::from("x"))]),
+            )
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
         // Connection survives both errors.
-        assert!(c.call("hello", Json::obj(vec![])).is_ok());
+        assert!(c.hello().is_ok());
     }
 
     #[test]
     fn db_dump_is_valid_json_db() {
         let (_s, mut c, _hv) = setup();
-        let dump = c.call("db_dump", Json::obj(vec![])).unwrap();
-        let db = crate::hypervisor::DeviceDb::from_json(&dump).unwrap();
+        let dump = c.db_dump().unwrap();
+        let db = crate::hypervisor::DeviceDb::from_json(&dump.db).unwrap();
         assert_eq!(db.devices.len(), 4);
     }
 
     #[test]
     fn quota_rpcs_roundtrip_and_enforce() {
         let (_s, mut c, _hv) = setup();
-        let user = c
-            .call("add_user", Json::obj(vec![("name", Json::from("q"))]))
-            .unwrap()
-            .get("user")
-            .as_str()
-            .unwrap()
-            .to_string();
+        let user = c.add_user("q").unwrap().user;
         let set = c
-            .call(
-                "quota_set",
-                Json::obj(vec![
-                    ("user", Json::from(user.as_str())),
-                    ("max_vfpgas", Json::from(1u64)),
-                    ("weight", Json::from(3u64)),
-                ]),
-            )
+            .quota_set(&QuotaSetRequest {
+                user,
+                max_vfpgas: Some(1),
+                budget_s: None,
+                weight: Some(3),
+            })
             .unwrap();
-        assert_eq!(set.get("max_vfpgas").as_u64(), Some(1));
-        let got = c
-            .call(
-                "quota_get",
-                Json::obj(vec![("user", Json::from(user.as_str()))]),
-            )
-            .unwrap();
-        assert_eq!(got.get("weight").as_u64(), Some(3));
+        assert_eq!(set.max_vfpgas, 1);
+        let got = c.quota_get(user).unwrap();
+        assert_eq!(got.weight, 3);
         // First lease fits the quota; the second is denied.
-        c.call(
-            "alloc_vfpga",
-            Json::obj(vec![("user", Json::from(user.as_str()))]),
-        )
-        .unwrap();
-        let err = c
-            .call(
-                "alloc_vfpga",
-                Json::obj(vec![("user", Json::from(user.as_str()))]),
-            )
-            .unwrap_err();
-        assert!(err.contains("quota"), "{err}");
+        c.alloc_vfpga(user, None, None).unwrap();
+        let err = c.alloc_vfpga(user, None, None).unwrap_err();
+        assert_eq!(err.code, ErrorCode::QuotaExceeded);
     }
 
     #[test]
     fn sched_status_and_usage_rpcs() {
         let (_s, mut c, _hv) = setup();
-        let user = c
-            .call("add_user", Json::obj(vec![("name", Json::from("u"))]))
-            .unwrap()
-            .get("user")
-            .as_str()
-            .unwrap()
-            .to_string();
-        let lease = c
-            .call(
-                "alloc_vfpga",
-                Json::obj(vec![("user", Json::from(user.as_str()))]),
-            )
-            .unwrap();
-        let status =
-            c.call("sched_status", Json::obj(vec![])).unwrap();
-        assert_eq!(status.get("active_grants").as_u64(), Some(1));
-        assert_eq!(status.get("queue_depth").as_u64(), Some(0));
-        c.call(
-            "release",
-            Json::obj(vec![(
-                "alloc",
-                Json::from(lease.get("alloc").as_str().unwrap()),
-            )]),
-        )
-        .unwrap();
-        let usage = c.call("usage_report", Json::obj(vec![])).unwrap();
-        let tenants = usage.get("tenants").as_arr().unwrap();
+        let user = c.add_user("u").unwrap().user;
+        let lease = c.alloc_vfpga(user, None, None).unwrap();
+        let status = c.sched_status().unwrap();
+        assert_eq!(
+            status.status.get("active_grants").as_u64(),
+            Some(1)
+        );
+        assert_eq!(status.status.get("queue_depth").as_u64(), Some(0));
+        c.release(lease.alloc).unwrap();
+        let usage = c.usage_report().unwrap();
+        let tenants = usage.tenants.as_arr().unwrap();
         assert_eq!(tenants.len(), 1);
         assert_eq!(tenants[0].get("released").as_u64(), Some(1));
-        assert!(usage
-            .get("table")
-            .as_str()
-            .unwrap()
-            .contains("tenant"));
+        assert!(usage.table.contains("tenant"));
     }
 
     #[test]
     fn reservation_rpcs_withhold_capacity() {
         let (_s, mut c, _hv) = setup();
-        let mk_user = |c: &mut Client, name: &str| {
-            c.call(
-                "add_user",
-                Json::obj(vec![("name", Json::from(name))]),
-            )
-            .unwrap()
-            .get("user")
-            .as_str()
-            .unwrap()
-            .to_string()
-        };
-        let holder = mk_user(&mut c, "holder");
-        let other = mk_user(&mut c, "other");
+        let holder = c.add_user("holder").unwrap().user;
+        let other = c.add_user("other").unwrap().user;
         // Reserve the whole 16-region testbed for the holder.
         let r = c
-            .call(
-                "reserve",
-                Json::obj(vec![
-                    ("user", Json::from(holder.as_str())),
-                    ("regions", Json::from(16u64)),
-                    ("duration_s", Json::from(10_000.0)),
-                ]),
-            )
+            .reserve(&ReserveRequest {
+                user: holder,
+                regions: 16,
+                model: None,
+                start_s: None,
+                duration_s: Some(10_000.0),
+            })
             .unwrap();
-        let err = c
-            .call(
-                "alloc_vfpga",
-                Json::obj(vec![("user", Json::from(other.as_str()))]),
-            )
-            .unwrap_err();
-        assert!(err.contains("no capacity"), "{err}");
-        c.call(
-            "cancel_reservation",
-            Json::obj(vec![(
-                "reservation",
-                Json::from(r.get("reservation").as_str().unwrap()),
-            )]),
-        )
-        .unwrap();
-        assert!(c
-            .call(
-                "alloc_vfpga",
-                Json::obj(vec![("user", Json::from(other.as_str()))]),
-            )
-            .is_ok());
+        let err = c.alloc_vfpga(other, None, None).unwrap_err();
+        assert_eq!(err.code, ErrorCode::NoCapacity);
+        c.cancel_reservation(r.reservation).unwrap();
+        assert!(c.alloc_vfpga(other, None, None).is_ok());
     }
 
     #[test]
     fn monitor_exposes_sched_telemetry() {
         let (_s, mut c, _hv) = setup();
-        let user = c
-            .call("add_user", Json::obj(vec![("name", Json::from("m"))]))
-            .unwrap()
-            .get("user")
-            .as_str()
-            .unwrap()
-            .to_string();
-        c.call(
-            "alloc_vfpga",
-            Json::obj(vec![("user", Json::from(user.as_str()))]),
-        )
-        .unwrap();
-        let mon = c.call("monitor", Json::obj(vec![])).unwrap();
-        let sched = mon.get("sched");
-        assert_eq!(sched.get("active_grants").as_u64(), Some(1));
-        assert_eq!(sched.get("queue_depth").as_u64(), Some(0));
+        let user = c.add_user("m").unwrap().user;
+        c.alloc_vfpga(user, None, None).unwrap();
+        let mon = c.monitor().unwrap();
+        let sched = &mon.sched;
+        assert_eq!(sched.active_grants, 1);
+        assert_eq!(sched.queue_depth, 0);
         // The grant above recorded one admission wait sample.
-        assert!(sched.get("wait").get("count").as_u64().unwrap() >= 1);
+        assert!(sched.wait.count >= 1);
         // Lifecycle telemetry: the allocated-but-unprogrammed region
         // reads Reserved; nothing drains or migrates at rest; the
         // defense-in-depth raced counter is 0.
-        let lifecycle = sched.get("lifecycle");
-        assert_eq!(lifecycle.get("reserved").as_u64(), Some(1));
-        assert_eq!(lifecycle.get("draining").as_u64(), Some(0));
-        assert_eq!(lifecycle.get("migrating").as_u64(), Some(0));
-        assert_eq!(sched.get("preempt_raced").as_u64(), Some(0));
-        assert!(sched
-            .get("quiesce_wait")
-            .get("count")
-            .as_u64()
-            .is_some());
+        assert_eq!(sched.lifecycle.reserved, 1);
+        assert_eq!(sched.lifecycle.draining, 0);
+        assert_eq!(sched.lifecycle.migrating, 0);
+        assert_eq!(sched.preempt_raced, 0);
         // The same states are visible per device in `status`.
-        let st = c
-            .call(
-                "status",
-                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
-            )
-            .unwrap();
-        assert_eq!(st.get("regions_draining").as_u64(), Some(0));
-        assert_eq!(st.get("regions_migrating").as_u64(), Some(0));
+        let st = c.status(FpgaId(0)).unwrap();
+        assert_eq!(st.regions_draining, 0);
+        assert_eq!(st.regions_migrating, 0);
+    }
+
+    #[test]
+    fn lifecycle_log_rpc_returns_transitions() {
+        let (_s, mut c, _hv) = setup();
+        let user = c.add_user("log").unwrap().user;
+        let lease = c.alloc_vfpga(user, None, None).unwrap();
+        c.program_core(user, lease.alloc, "matmul16").unwrap();
+        let log = c.lifecycle_log(lease.fpga, None).unwrap();
+        assert_eq!(log.fpga, lease.fpga);
+        assert_eq!(log.dropped, 0);
+        // Free → Reserved → Programming → Active, in order.
+        let edges: Vec<(String, String)> = log
+            .records
+            .iter()
+            .map(|r| (r.from.clone(), r.to.clone()))
+            .collect();
+        assert_eq!(edges[0], ("free".to_string(), "reserved".to_string()));
+        assert!(edges.contains(&(
+            "programming".to_string(),
+            "active".to_string()
+        )));
+        // A limit trims from the oldest end.
+        let tail = c.lifecycle_log(lease.fpga, Some(1)).unwrap();
+        assert_eq!(tail.records.len(), 1);
+        assert_eq!(
+            tail.records[0].to,
+            log.records.last().unwrap().to
+        );
+        // Unknown device is a typed error.
+        let err = c.lifecycle_log(FpgaId(99), None).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownDevice);
+    }
+
+    #[test]
+    fn sched_policy_rpcs_roundtrip() {
+        let (s, mut c, _hv) = setup();
+        assert_eq!(c.sched_policy_get().unwrap().policy, "pack");
+        let set = c.sched_policy_set("spread").unwrap();
+        assert_eq!(set.policy, "spread");
+        assert_eq!(
+            s.scheduler().preempt_policy(),
+            PreemptPolicy::Spread
+        );
+        assert_eq!(c.sched_policy_get().unwrap().policy, "spread");
+        let err = c.sched_policy_set("randomly").unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn mutating_rpcs_require_the_lease_token() {
+        let (_s, mut c, _hv) = setup();
+        let user = c.add_user("auth").unwrap().user;
+        let lease = c.alloc_vfpga(user, None, None).unwrap();
+        // A second client without the cached token is refused.
+        let mut intruder = Client::connect(_s.addr()).unwrap();
+        let err = intruder
+            .program_core(user, lease.alloc, "matmul16")
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadToken);
+        // A forged token is refused too.
+        intruder.set_lease_token(lease.alloc, LeaseToken::mint());
+        let err = intruder.release(lease.alloc).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadToken);
+        // The rightful holder proceeds.
+        assert!(c.release(lease.alloc).unwrap().released);
+    }
+
+    #[test]
+    fn subscription_sees_sched_events() {
+        let (_s, mut c, _hv) = setup();
+        let user = c.add_user("w").unwrap().user;
+        let mut watcher = Client::connect(_s.addr()).unwrap();
+        let stream_client = std::thread::spawn({
+            let addr = _s.addr();
+            move || {
+                let mut c2 = Client::connect(addr).unwrap();
+                // Give the watcher time to register.
+                std::thread::sleep(Duration::from_millis(150));
+                let lease = c2.alloc_vfpga(user, None, None).unwrap();
+                c2.release(lease.alloc).unwrap();
+            }
+        });
+        let frames: Vec<Event> = watcher
+            .subscribe(&SubscribeRequest {
+                filter: SubscriptionFilter::topic(Topic::Sched),
+                lease: None,
+                max_events: Some(1),
+                timeout_s: Some(30.0),
+            })
+            .unwrap()
+            .map(|r| r.unwrap().event)
+            .collect();
+        stream_client.join().unwrap();
+        assert_eq!(frames.len(), 1);
+        match &frames[0] {
+            Event::GrantIssued { tenant, .. } => {
+                assert_eq!(*tenant, user)
+            }
+            other => panic!("expected a grant event, got {other:?}"),
+        }
+        // The connection returned to request/response mode.
+        assert!(watcher.hello().is_ok());
+    }
+
+    #[test]
+    fn job_progress_frames_arrive_mid_job() {
+        let (s, mut c, _hv) = setup();
+        let user = c.add_user("p").unwrap().user;
+        let lease = c.alloc_vfpga(user, None, None).unwrap();
+        let token = c.lease_token(lease.alloc).unwrap();
+        // Subscribe with the lease token (job events are
+        // token-scoped), then submit the stream job.
+        let mut watcher = Client::connect(s.addr()).unwrap();
+        watcher.set_lease_token(lease.alloc, token);
+        c.program_core(user, lease.alloc, "matmul16").unwrap();
+        let submitted = std::sync::mpsc::channel();
+        let submitter = std::thread::spawn({
+            let addr = s.addr();
+            let tx = submitted.0.clone();
+            move || {
+                let mut c2 = Client::connect(addr).unwrap();
+                c2.set_lease_token(lease.alloc, token);
+                std::thread::sleep(Duration::from_millis(150));
+                let job = c2
+                    .stream(user, lease.alloc, "matmul16", 64)
+                    .unwrap()
+                    .job;
+                tx.send(job).unwrap();
+                c2.set_job_token(job, token);
+                let _ = c2.job_wait(job, Some(60.0));
+            }
+        });
+        let frames: Vec<Event> = watcher
+            .subscribe(&SubscribeRequest {
+                filter: SubscriptionFilter::topic(Topic::Job),
+                lease: Some(token),
+                max_events: Some(2),
+                timeout_s: Some(60.0),
+            })
+            .unwrap()
+            .map(|r| r.unwrap().event)
+            .collect();
+        let job = submitted.1.recv().unwrap();
+        submitter.join().unwrap();
+        // The first frames are mid-job: running state, pct < 100.
+        assert_eq!(frames.len(), 2);
+        for f in &frames {
+            match f {
+                Event::JobProgress {
+                    job: j,
+                    state,
+                    pct,
+                    result,
+                    ..
+                } => {
+                    assert_eq!(*j, job);
+                    assert_eq!(state, "running");
+                    assert!(*pct < 100.0);
+                    assert!(result.is_none());
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn job_rpcs_still_owner_gated() {
+        let (_s, mut c, _hv) = setup();
+        let user = c.add_user("jobs").unwrap().user;
+        let job = c.invoke_service(user, "no-such", 16).unwrap();
+        // The submitter (token cached) can wait out the failure.
+        let err = c.job_wait_done(job.job).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownService);
+        // A stranger without the owner token cannot read the job.
+        let mut stranger = Client::connect(_s.addr()).unwrap();
+        let err = stranger.job_status(job.job).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadToken);
+        // Unknown jobs read as unknown for everyone.
+        let err = c.job_status(JobId(4242)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownJob);
     }
 }

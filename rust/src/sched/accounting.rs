@@ -82,8 +82,21 @@ impl UsageLedger {
         unit_seconds: f64,
         watts: f64,
     ) {
+        self.charge_accrual(user, unit_seconds, watts);
+        self.row_mut(user).released += 1;
+    }
+
+    /// Charge accrued-but-unreleased device-seconds at a job
+    /// boundary (the pipelined batch mode's accrual split): same
+    /// billing as [`UsageLedger::charge_release`] minus the release
+    /// count — the lease is still live.
+    pub fn charge_accrual(
+        &mut self,
+        user: UserId,
+        unit_seconds: f64,
+        watts: f64,
+    ) {
         let row = self.row_mut(user);
-        row.released += 1;
         row.device_seconds += unit_seconds;
         row.energy_joules += unit_seconds * watts;
     }

@@ -60,7 +60,7 @@ pub mod reservation;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::ServiceModel;
@@ -352,7 +352,44 @@ pub struct Scheduler {
     persist_written: Mutex<u64>,
     /// Where preemption relocates victims (spread-vs-pack knob).
     preempt_policy: Mutex<PreemptPolicy>,
+    /// Telemetry event sink ([`Scheduler::set_event_sink`]); the
+    /// middleware server fans these to `subscribe` clients.
+    event_sink: Mutex<Option<SchedEventSink>>,
+    /// Last queue depth pushed to the sink — depth events fire on
+    /// change, not on every gauge refresh.
+    last_queue_depth: AtomicI64,
 }
+
+/// Telemetry events the scheduler pushes to an attached sink.
+/// Variants mirror the wire [`crate::middleware::api::Event`]
+/// shapes, but live here so the scheduler never depends on the wire
+/// layer. Sinks run under scheduler locks: they must be cheap and
+/// must never call back into the scheduler.
+#[derive(Debug, Clone)]
+pub enum SchedEvent {
+    /// The admission queue depth changed.
+    QueueDepth { depth: u64 },
+    /// A grant was issued (one event per lease member).
+    GrantIssued {
+        alloc: AllocationId,
+        tenant: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+        wait: VirtualTime,
+    },
+    /// A tracked grant was rebound to a new region (preemption,
+    /// operator migrate, gang relocation).
+    PlacementChanged {
+        alloc: AllocationId,
+        tenant: UserId,
+        vfpga: VfpgaId,
+        fpga: FpgaId,
+        migrations: u64,
+    },
+}
+
+/// Callback the scheduler pushes [`SchedEvent`]s through.
+pub type SchedEventSink = Arc<dyn Fn(SchedEvent) + Send + Sync>;
 
 /// Device-seconds `user` has consumed so far: the released total in
 /// the ledger plus the accrued time of every live grant — so budgets
@@ -410,7 +447,23 @@ impl Scheduler {
             persist_seq: AtomicU64::new(1),
             persist_written: Mutex::new(0),
             preempt_policy: Mutex::new(PreemptPolicy::default()),
+            event_sink: Mutex::new(None),
+            last_queue_depth: AtomicI64::new(0),
         })
+    }
+
+    /// Install the telemetry event sink (queue depth, grants,
+    /// placement changes). One sink; installing replaces the old one.
+    pub fn set_event_sink(&self, sink: SchedEventSink) {
+        *self.event_sink.lock().unwrap() = Some(sink);
+    }
+
+    /// Push one event through the sink, if any.
+    fn emit(&self, event: SchedEvent) {
+        let sink = self.event_sink.lock().unwrap().clone();
+        if let Some(sink) = sink {
+            sink(event);
+        }
     }
 
     /// Set where preemption relocates its victims (pack vs spread).
@@ -1104,6 +1157,46 @@ impl Scheduler {
         release_result.map_err(|e| SchedError::Hypervisor(e.to_string()))
     }
 
+    /// Split a live lease's device-second accrual at a job boundary:
+    /// every member's accrued-so-far seconds are charged to the
+    /// ledger *now* (same billing as a release, without counting a
+    /// release) and the accrual clocks restart. The pipelined batch
+    /// mode calls this between jobs on its long-lived region pair so
+    /// per-job accounting stays correct without re-admitting.
+    /// Returns the unit-seconds charged.
+    pub fn checkpoint_accrual(
+        &self,
+        token: LeaseToken,
+    ) -> Result<f64, SchedError> {
+        let mut st = self.state.lock().unwrap();
+        let meta = st
+            .leases
+            .get(&token)
+            .cloned()
+            .ok_or(SchedError::UnknownLease)?;
+        let now_ns = self.hv.clock.now().0;
+        let mut charges: Vec<(UserId, f64, f64)> = Vec::new();
+        for alloc in &meta.members {
+            if let Some(g) = st.grants.get_mut(alloc) {
+                let held =
+                    VirtualTime(now_ns.saturating_sub(g.started_ns))
+                        .as_secs_f64()
+                        * g.units as f64;
+                g.started_ns = now_ns;
+                charges.push((g.user, held, g.charge_w));
+            }
+        }
+        let mut charged = 0.0;
+        for (user, held, watts) in charges {
+            st.ledger.charge_accrual(user, held, watts);
+            charged += held;
+        }
+        let pending = self.persist_snapshot_locked(&st);
+        drop(st);
+        self.write_persisted(pending);
+        Ok(charged)
+    }
+
     // ------------------------------------------- lease capabilities
 
     /// Re-materialize a (disarmed) lease handle from its capability
@@ -1178,6 +1271,13 @@ impl Scheduler {
                 // Count the move so lease handles can tell a clean
                 // preemption race from a real fault (retry signal).
                 grant.migrations += 1;
+                self.emit(SchedEvent::PlacementChanged {
+                    alloc,
+                    tenant: grant.user,
+                    vfpga: to,
+                    fpga,
+                    migrations: grant.migrations,
+                });
             }
         }
     }
@@ -1461,6 +1561,13 @@ impl Scheduler {
     fn finish_grant_locked(&self, st: &mut SchedState, grant: SchedGrant) {
         st.quotas.charge(grant.user, grant.units);
         st.ledger.row_mut(grant.user).granted += 1;
+        self.emit(SchedEvent::GrantIssued {
+            alloc: grant.alloc,
+            tenant: grant.user,
+            model: grant.model,
+            class: grant.class,
+            wait: grant.wait,
+        });
         st.grants.insert(grant.alloc, grant);
         self.hv.metrics.counter("sched.granted").inc();
         self.update_gauges_locked(st);
@@ -2114,14 +2221,19 @@ impl Scheduler {
     }
 
     fn update_gauges_locked(&self, st: &SchedState) {
-        self.hv
-            .metrics
-            .gauge("sched.queue.depth")
-            .set(st.queue.len() as i64);
+        let depth = st.queue.len() as i64;
+        self.hv.metrics.gauge("sched.queue.depth").set(depth);
         self.hv
             .metrics
             .gauge("sched.active_grants")
             .set(st.grants.len() as i64);
+        // Queue-depth events fire on change only (the gauges refresh
+        // far more often than the depth moves).
+        if self.last_queue_depth.swap(depth, Ordering::SeqCst) != depth {
+            self.emit(SchedEvent::QueueDepth {
+                depth: depth as u64,
+            });
+        }
     }
 
     // ------------------------------------------------------- status

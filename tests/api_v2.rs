@@ -521,25 +521,42 @@ fn typed_roundtrip_across_the_surface() {
 }
 
 #[test]
-fn legacy_envelopes_stay_readable_one_version_behind() {
+fn protocol_1_is_retired() {
     let mut c = cloud();
-    // v1 raw calls: bare-array catalogue shapes, string errors.
-    let cores = c.client.call("cores", Json::obj(vec![])).unwrap();
-    assert!(cores.as_arr().is_some(), "v1 cores must stay a bare array");
-    let services =
-        c.client.call("services", Json::obj(vec![])).unwrap();
-    assert!(services.as_arr().is_some());
+    // A proto-less (protocol-1) request is rejected before dispatch,
+    // whatever the method — the untyped surface stayed readable for
+    // exactly one version behind and was dropped when v3 landed.
+    let mut stream =
+        std::net::TcpStream::connect(c.server.addr()).unwrap();
+    for method in ["cores", "hello", "alloc_vfpga"] {
+        let raw = Json::obj(vec![
+            ("method", Json::from(method)),
+            ("params", Json::obj(vec![])),
+        ]);
+        write_frame(&mut stream, &raw).unwrap();
+        let frame = read_frame(&mut stream).unwrap().unwrap();
+        let err = Response::from_json(&frame)
+            .unwrap()
+            .into_api_result()
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::ProtocolMismatch, "{method}");
+    }
+    // A v1-window hello is likewise refused...
+    let legacy = HelloRequest {
+        proto_min: 1,
+        proto_max: 1,
+    };
     let err = c
         .client
-        .call("alloc_vfpga", Json::obj(vec![("user", Json::from("x"))]))
+        .call_v2(Method::Hello.name(), legacy.to_json())
         .unwrap_err();
-    assert!(err.contains("bad id"), "{err}");
-    // v2 of the same catalogue method is an object.
+    assert_eq!(err.code, ErrorCode::ProtocolMismatch);
+    // ...while the typed surface (an object-shaped catalogue) works.
     let cores2 = c
         .client
         .call_v2(Method::Cores.name(), Json::obj(vec![]))
         .unwrap();
     assert!(cores2.get("cores").as_arr().is_some());
-    // The hypervisor stayed consistent underneath both.
+    // The hypervisor stayed consistent underneath.
     assert_eq!(c.hv.device_ids().len(), 4);
 }

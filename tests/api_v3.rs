@@ -1,0 +1,472 @@
+//! Integration tests for protocol 3: the event-stream middleware
+//! surface. Negotiation window `[2, 3]` (v1 retired), ordered
+//! server-push subscriptions, job-progress frames that terminate
+//! with the exact `job_wait` result, coalesced `job_wait` fan-in,
+//! and token-scoped tenant isolation of event delivery.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rc3e::config::ClusterConfig;
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::middleware::api::{
+    ErrorCode, Event, HelloRequest, Method, SubscribeRequest,
+    SubscriptionFilter, Topic, PROTO_MAX, PROTO_MIN,
+};
+use rc3e::middleware::{
+    read_frame, write_frame, Client, ManagementServer, NodeAgent,
+    Response,
+};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::ids::NodeId;
+use rc3e::util::json::Json;
+
+struct Cloud {
+    server: ManagementServer,
+    _agents: Vec<NodeAgent>,
+    client: Client,
+    hv: Arc<Hypervisor>,
+}
+
+fn cloud() -> Cloud {
+    let clock = VirtualClock::new();
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut agents = Vec::new();
+    for n in [NodeId(0), NodeId(1)] {
+        let a = NodeAgent::spawn(Arc::clone(&hv), n, None).unwrap();
+        server.register_agent(n, a.addr());
+        agents.push(a);
+    }
+    let client = Client::connect(server.addr()).unwrap();
+    Cloud {
+        server,
+        _agents: agents,
+        client,
+        hv,
+    }
+}
+
+/// A single-device cloud that also serves RSaaS, for the
+/// physical-lease + program_full job path.
+fn rsaas_cloud() -> (ManagementServer, Client, Arc<Hypervisor>) {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            &ClusterConfig::single_vc707(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+    (server, client, hv)
+}
+
+// ====================================================== negotiation
+
+#[test]
+fn window_is_2_to_3_and_v1_is_rejected() {
+    let mut c = cloud();
+    assert_eq!(PROTO_MIN, 2);
+    assert_eq!(PROTO_MAX, 3);
+    let hello = c.client.hello().unwrap();
+    assert_eq!(hello.proto_min, 2);
+    assert_eq!(hello.proto_max, 3);
+    assert_eq!(hello.proto, 3);
+    // A v1-window hello does not overlap.
+    let err = c
+        .client
+        .call_v2(
+            Method::Hello.name(),
+            HelloRequest {
+                proto_min: 1,
+                proto_max: 1,
+            }
+            .to_json(),
+        )
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::ProtocolMismatch);
+    // A proto-less envelope (protocol 1) never reaches dispatch.
+    let mut raw =
+        std::net::TcpStream::connect(c.server.addr()).unwrap();
+    let frame = Json::obj(vec![
+        ("method", Json::from("cores")),
+        ("params", Json::obj(vec![])),
+    ]);
+    write_frame(&mut raw, &frame).unwrap();
+    let resp =
+        Response::from_json(&read_frame(&mut raw).unwrap().unwrap())
+            .unwrap();
+    let err = resp.into_api_result().unwrap_err();
+    assert_eq!(err.code, ErrorCode::ProtocolMismatch);
+}
+
+#[test]
+fn v2_stamped_envelopes_are_still_served() {
+    let c = cloud();
+    // A pure-v2 client (proto stamp 2) gets the typed surface.
+    let mut raw =
+        std::net::TcpStream::connect(c.server.addr()).unwrap();
+    let frame = Json::obj(vec![
+        ("method", Json::from("cores")),
+        ("params", Json::obj(vec![])),
+        ("id", Json::from(11u64)),
+        ("proto", Json::from(2u64)),
+    ]);
+    write_frame(&mut raw, &frame).unwrap();
+    let resp =
+        Response::from_json(&read_frame(&mut raw).unwrap().unwrap())
+            .unwrap();
+    assert_eq!(resp.id, Some(11));
+    let body = resp.into_api_result().unwrap();
+    assert!(body.get("cores").as_arr().is_some());
+    // ...but `subscribe` is protocol 3 only.
+    let frame = Json::obj(vec![
+        ("method", Json::from("subscribe")),
+        ("params", Json::obj(vec![])),
+        ("id", Json::from(12u64)),
+        ("proto", Json::from(2u64)),
+    ]);
+    write_frame(&mut raw, &frame).unwrap();
+    let resp =
+        Response::from_json(&read_frame(&mut raw).unwrap().unwrap())
+            .unwrap();
+    let err = resp.into_api_result().unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+}
+
+// ==================================================== subscriptions
+
+#[test]
+fn event_seq_is_strictly_increasing() {
+    let mut c = cloud();
+    let user = c.client.add_user("seq").unwrap().user;
+    let addr = c.server.addr();
+    let driver = std::thread::spawn(move || {
+        let mut d = Client::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        // Three grants → at least three public sched events.
+        for _ in 0..3 {
+            let lease = d.alloc_vfpga(user, None, None).unwrap();
+            d.release(lease.alloc).unwrap();
+        }
+    });
+    let mut watcher = Client::connect(addr).unwrap();
+    let frames: Vec<_> = watcher
+        .subscribe(&SubscribeRequest {
+            filter: SubscriptionFilter::topic(Topic::Sched),
+            lease: None,
+            max_events: Some(3),
+            timeout_s: Some(60.0),
+        })
+        .unwrap()
+        .map(|r| r.unwrap())
+        .collect();
+    driver.join().unwrap();
+    assert_eq!(frames.len(), 3);
+    let mut last = 0;
+    for f in &frames {
+        assert!(f.seq > last, "seq {} after {}", f.seq, last);
+        last = f.seq;
+        assert_eq!(f.event.topic(), Topic::Sched);
+    }
+}
+
+#[test]
+fn job_progress_frames_end_with_the_exact_job_wait_result() {
+    let (server, mut c, _hv) = rsaas_cloud();
+    let user = c.add_user("rs").unwrap().user;
+    let lease = c.alloc_physical(user).unwrap();
+    let token = c.lease_token(lease.alloc).unwrap();
+    let addr = server.addr();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let submitter = std::thread::spawn(move || {
+        let mut d = Client::connect(addr).unwrap();
+        d.set_lease_token(lease.alloc, token);
+        std::thread::sleep(Duration::from_millis(300));
+        let job = d
+            .program_full(user, lease.alloc, Some("my_design"))
+            .unwrap()
+            .job;
+        d.set_job_token(job, token);
+        // The wire body job_wait returns (retrying through timeouts).
+        let body = loop {
+            match d.job_wait(job, Some(60.0)) {
+                Ok(b) if b.is_terminal() => break b,
+                Ok(_) => {}
+                Err(e) if e.code == ErrorCode::Timeout => {}
+                Err(e) => panic!("job_wait failed: {e}"),
+            }
+        };
+        tx.send((job, body)).unwrap();
+    });
+    // program_full emits exactly: submitted, build_bitstream,
+    // configuring, configured, done.
+    let mut watcher = Client::connect(addr).unwrap();
+    let frames: Vec<Event> = watcher
+        .subscribe(&SubscribeRequest {
+            filter: SubscriptionFilter::topic(Topic::Job),
+            lease: Some(token),
+            max_events: Some(5),
+            timeout_s: Some(60.0),
+        })
+        .unwrap()
+        .map(|r| r.unwrap().event)
+        .collect();
+    let (job, body) = rx.recv().unwrap();
+    submitter.join().unwrap();
+    assert_eq!(frames.len(), 5);
+    // Mid-job frames first: running, pct < 100, no result (the
+    // acceptance assertion — progress is visible *during* the job).
+    for f in &frames[..4] {
+        match f {
+            Event::JobProgress {
+                job: j,
+                state,
+                pct,
+                result,
+                ..
+            } => {
+                assert_eq!(*j, job);
+                assert_eq!(state, "running");
+                assert!(*pct < 100.0);
+                assert!(result.is_none());
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    // The terminal frame carries the exact body job_wait returned.
+    match &frames[4] {
+        Event::JobProgress {
+            state,
+            pct,
+            result,
+            ..
+        } => {
+            assert_eq!(state, "done");
+            assert_eq!(*pct, 100.0);
+            assert_eq!(result.as_ref().unwrap(), &body.to_json());
+        }
+        other => panic!("unexpected terminal event {other:?}"),
+    }
+}
+
+#[test]
+fn coalesced_job_wait_wakes_16_wire_clients_at_once() {
+    let c = cloud();
+    let addr = c.server.addr();
+    // A controllable job submitted straight into the server's
+    // registry (unowned, so the wire waiters need no token).
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let now_ns = c.hv.clock.now().0;
+    let job = Arc::clone(c.server.jobs()).submit(
+        "stream",
+        now_ns,
+        None,
+        move |_p| {
+            let _ = rx.recv();
+            Ok(Json::from(99u64))
+        },
+    );
+    let waiters: Vec<_> = (0..16)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut w = Client::connect(addr).unwrap();
+                loop {
+                    match w.job_wait(job, Some(30.0)) {
+                        Ok(b) if b.is_terminal() => return b,
+                        Ok(_) => {}
+                        Err(e) if e.code == ErrorCode::Timeout => {}
+                        Err(e) => panic!("job_wait: {e}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    // Every wire client must be parked on the shared slot before the
+    // job completes — the whole point of the coalescing counter.
+    while c.server.jobs().waiters(job) < 16 {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    tx.send(()).unwrap();
+    for w in waiters {
+        let body = w.join().unwrap();
+        assert_eq!(body.state, "done");
+        assert_eq!(body.result.unwrap().as_u64(), Some(99));
+    }
+    // One fanout served all 16 parked callers.
+    assert_eq!(
+        c.hv.metrics.counter("jobs.wait.coalesced").get(),
+        16
+    );
+}
+
+#[test]
+fn subscriptions_never_leak_another_tenants_events() {
+    let mut c = cloud();
+    let alice = c.client.add_user("alice").unwrap().user;
+    let bob = c.client.add_user("bob").unwrap().user;
+    let a_lease = c.client.alloc_vfpga(alice, None, None).unwrap();
+    let a_token = c.client.lease_token(a_lease.alloc).unwrap();
+    let addr = c.server.addr();
+    // Bob runs a job on his own lease from another connection.
+    let driver = std::thread::spawn(move || {
+        let mut d = Client::connect(addr).unwrap();
+        let b_lease = d.alloc_vfpga(bob, None, None).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        // The job fails fast without artifacts — frames flow either
+        // way (submitted + terminal at minimum).
+        let job =
+            d.stream(bob, b_lease.alloc, "matmul16", 64).unwrap().job;
+        let _ = d.job_wait(job, Some(60.0));
+        d.release(b_lease.alloc).unwrap();
+    });
+    // Alice subscribes to the job topic with *her* token: Bob's job
+    // frames are scoped to his owner token and must never arrive.
+    let mut watcher = Client::connect(addr).unwrap();
+    let frames: Vec<Event> = watcher
+        .subscribe(&SubscribeRequest {
+            filter: SubscriptionFilter::topic(Topic::Job),
+            lease: Some(a_token),
+            max_events: None,
+            timeout_s: Some(3.0),
+        })
+        .unwrap()
+        .map(|r| r.unwrap().event)
+        .collect();
+    driver.join().unwrap();
+    assert!(
+        frames.is_empty(),
+        "leaked another tenant's events: {frames:?}"
+    );
+    // A subscription without any token sees no token-scoped job
+    // frames either (public topics only).
+    let mut anon = Client::connect(addr).unwrap();
+    let driver = std::thread::spawn(move || {
+        let mut d = Client::connect(addr).unwrap();
+        let lease = d.alloc_vfpga(bob, None, None).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        let job =
+            d.stream(bob, lease.alloc, "matmul16", 64).unwrap().job;
+        let _ = d.job_wait(job, Some(60.0));
+        d.release(lease.alloc).unwrap();
+    });
+    let frames: Vec<Event> = anon
+        .subscribe(&SubscribeRequest {
+            filter: SubscriptionFilter::topic(Topic::Job),
+            lease: None,
+            max_events: None,
+            timeout_s: Some(3.0),
+        })
+        .unwrap()
+        .map(|r| r.unwrap().event)
+        .collect();
+    driver.join().unwrap();
+    assert!(frames.is_empty(), "{frames:?}");
+    c.client.release(a_lease.alloc).unwrap();
+}
+
+#[test]
+fn placement_events_reach_the_moved_tenant() {
+    let mut c = cloud();
+    let user = c.client.add_user("mover").unwrap().user;
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
+    let token = c.client.lease_token(lease.alloc).unwrap();
+    c.client
+        .program_core(user, lease.alloc, "matmul16")
+        .unwrap();
+    let addr = c.server.addr();
+    let driver = std::thread::spawn(move || {
+        let mut d = Client::connect(addr).unwrap();
+        d.set_lease_token(lease.alloc, token);
+        std::thread::sleep(Duration::from_millis(300));
+        d.migrate(user, lease.alloc).unwrap()
+    });
+    let mut watcher = Client::connect(addr).unwrap();
+    let frames: Vec<Event> = watcher
+        .subscribe(&SubscribeRequest {
+            filter: SubscriptionFilter::topic(Topic::Placement),
+            lease: Some(token),
+            max_events: Some(1),
+            timeout_s: Some(30.0),
+        })
+        .unwrap()
+        .map(|r| r.unwrap().event)
+        .collect();
+    let mig = driver.join().unwrap();
+    assert_eq!(frames.len(), 1);
+    match &frames[0] {
+        Event::LeasePlacementChanged {
+            alloc,
+            vfpga,
+            migrations,
+            ..
+        } => {
+            assert_eq!(*alloc, lease.alloc);
+            assert_eq!(*vfpga, mig.to);
+            assert_eq!(*migrations, 1);
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+}
+
+#[test]
+fn region_transitions_stream_to_operators() {
+    let mut c = cloud();
+    let user = c.client.add_user("ops").unwrap().user;
+    let addr = c.server.addr();
+    let driver = std::thread::spawn(move || {
+        let mut d = Client::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        let lease = d.alloc_vfpga(user, None, None).unwrap();
+        d.program_core(user, lease.alloc, "matmul16").unwrap();
+        d.release(lease.alloc).unwrap();
+        lease.fpga
+    });
+    // Token-less operator subscription: region topic is public.
+    let mut watcher = Client::connect(addr).unwrap();
+    let frames: Vec<Event> = watcher
+        .subscribe(&SubscribeRequest {
+            filter: SubscriptionFilter::topic(Topic::Region),
+            lease: None,
+            // alloc → PR start → PR done → release = 4 transitions.
+            max_events: Some(4),
+            timeout_s: Some(30.0),
+        })
+        .unwrap()
+        .map(|r| r.unwrap().event)
+        .collect();
+    let fpga = driver.join().unwrap();
+    assert_eq!(frames.len(), 4);
+    let edges: Vec<(String, String)> = frames
+        .iter()
+        .map(|e| match e {
+            Event::RegionTransition { fpga: f, from, to, .. } => {
+                assert_eq!(*f, fpga);
+                (from.clone(), to.clone())
+            }
+            other => panic!("unexpected event {other:?}"),
+        })
+        .collect();
+    assert_eq!(
+        edges,
+        vec![
+            ("free".to_string(), "reserved".to_string()),
+            ("reserved".to_string(), "programming".to_string()),
+            ("programming".to_string(), "active".to_string()),
+            ("active".to_string(), "free".to_string()),
+        ]
+    );
+    // The same history is queryable after the fact over the
+    // lifecycle_log RPC (satellite: the PR 4 transition log RPC).
+    let log = watcher.lifecycle_log(fpga, None).unwrap();
+    let logged: Vec<(String, String)> = log
+        .records
+        .iter()
+        .map(|r| (r.from.clone(), r.to.clone()))
+        .collect();
+    assert_eq!(logged, edges);
+}

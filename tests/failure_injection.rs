@@ -16,8 +16,7 @@ use rc3e::hypervisor::{Hypervisor, HypervisorError, PlacementPolicy};
 use rc3e::middleware::{Client, ManagementServer, NodeAgent};
 use rc3e::testing::{FailPlan, FailPoint};
 use rc3e::util::clock::VirtualClock;
-use rc3e::util::ids::NodeId;
-use rc3e::util::json::Json;
+use rc3e::util::ids::{FpgaId, NodeId};
 
 fn hv() -> Arc<Hypervisor> {
     Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap())
@@ -33,13 +32,13 @@ fn agent_crash_mid_request_then_recovery() {
             .unwrap();
     let mut client = Client::connect(agent.addr()).unwrap();
     // First call fine.
-    client.call("agent.hello", Json::obj(vec![])).unwrap();
+    client.agent_hello().unwrap();
     // Second call: the agent "crashes" (drops the connection).
-    let err = client.call("agent.hello", Json::obj(vec![])).unwrap_err();
-    assert!(err.starts_with("io:"), "{err}");
+    let err = client.agent_hello().unwrap_err();
+    assert!(err.message.starts_with("io:"), "{err}");
     // A fresh connection works — the node is back.
     let mut c2 = Client::connect(agent.addr()).unwrap();
-    c2.call("agent.hello", Json::obj(vec![])).unwrap();
+    c2.agent_hello().unwrap();
     assert_eq!(plan.hits("agent.drop_conn"), 3);
 }
 
@@ -53,21 +52,11 @@ fn management_survives_dead_agent_registration() {
     let mut client = Client::connect(server.addr()).unwrap();
     // Status of a node-0 device fails cleanly (routed to the dead
     // agent), but the server connection survives...
-    let err = client
-        .call(
-            "status",
-            Json::obj(vec![("fpga", Json::from("fpga-0"))]),
-        )
-        .unwrap_err();
-    assert!(err.contains("connect"), "{err}");
+    let err = client.status(FpgaId(0)).unwrap_err();
+    assert!(err.message.contains("connect"), "{err}");
     // ...and node-1 devices (no agent registered) still work.
-    let body = client
-        .call(
-            "status",
-            Json::obj(vec![("fpga", Json::from("fpga-2"))]),
-        )
-        .unwrap();
-    assert_eq!(body.get("regions_total").as_u64(), Some(4));
+    let st = client.status(FpgaId(2)).unwrap();
+    assert_eq!(st.regions_total, 4);
 }
 
 #[test]
@@ -223,5 +212,5 @@ fn oversized_rpc_frame_rejected() {
     assert_eq!(n, 0, "server should drop oversized frames");
     // And the server still serves new connections.
     let mut client = Client::connect(server.addr()).unwrap();
-    client.call("hello", Json::obj(vec![])).unwrap();
+    client.hello().unwrap();
 }

@@ -3,15 +3,17 @@
 //!
 //! Sequence (paper Fig. 3): allocate vFPGA → program (PR) →
 //! initialize (status/ucs) → execute (stream) → release — plus the
-//! bookkeeping assertions the figure implies at each arrow.
+//! bookkeeping assertions the figure implies at each arrow. Runs on
+//! the typed protocol-3 client: every mutating call carries the
+//! capability lease token the alloc returned.
 
 use std::sync::Arc;
 
 use rc3e::hypervisor::Hypervisor;
+use rc3e::middleware::api::ErrorCode;
 use rc3e::middleware::{Client, ManagementServer, NodeAgent};
 use rc3e::util::clock::VirtualClock;
 use rc3e::util::ids::NodeId;
-use rc3e::util::json::Json;
 
 fn artifacts_present() -> bool {
     // Logs an explicit "skipped: artifacts missing" line when absent.
@@ -53,211 +55,85 @@ fn fig3_interaction_flow() {
     let mut c = cloud();
 
     // -- middleware: create the user ------------------------------
-    let user = c
-        .client
-        .call("add_user", Json::obj(vec![("name", Json::from("alice"))]))
-        .unwrap()
-        .get("user")
-        .as_str()
-        .unwrap()
-        .to_string();
+    let user = c.client.add_user("alice").unwrap().user;
 
     // -- arrow 1: resource allocation ------------------------------
-    let lease = c
-        .client
-        .call(
-            "alloc_vfpga",
-            Json::obj(vec![("user", Json::from(user.as_str()))]),
-        )
-        .unwrap();
-    let alloc = lease.get("alloc").as_str().unwrap().to_string();
-    let vfpga = lease.get("vfpga").as_str().unwrap().to_string();
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
     // DB reflects the lease.
     {
         let db = c.hv.db.lock().unwrap();
-        let v = rc3e::util::ids::VfpgaId::parse(&vfpga).unwrap();
-        assert!(db.owner_of(v).is_some());
+        assert!(db.owner_of(lease.vfpga).is_some());
     }
 
     // -- arrow 2: programming (PR through sanity checker) ----------
     let prog = c
         .client
-        .call(
-            "program_core",
-            Json::obj(vec![
-                ("user", Json::from(user.as_str())),
-                ("alloc", Json::from(alloc.as_str())),
-                ("core", Json::from("matmul16")),
-            ]),
-        )
+        .program_core(user, lease.alloc, "matmul16")
         .unwrap();
-    assert!(prog.get("pr_ms").as_f64().unwrap() > 700.0);
+    assert!(prog.pr_ms > 700.0);
 
     // -- arrow 3: initialization (status via the node agent) -------
-    let st = c
-        .client
-        .call(
-            "status",
-            Json::obj(vec![(
-                "fpga",
-                Json::from(lease.get("fpga").as_str().unwrap()),
-            )]),
-        )
-        .unwrap();
-    assert_eq!(st.get("regions_configured").as_u64(), Some(1));
-    assert_eq!(st.get("regions_clocked").as_u64(), Some(1));
+    let st = c.client.status(lease.fpga).unwrap();
+    assert_eq!(st.regions_configured, 1);
+    assert_eq!(st.regions_clocked, 1);
 
     // -- arrow 4: execution (streaming through the core) -----------
     if artifacts_present() {
         let out = c
             .client
-            .call(
-                "stream",
-                Json::obj(vec![
-                    ("user", Json::from(user.as_str())),
-                    ("alloc", Json::from(alloc.as_str())),
-                    ("core", Json::from("matmul16")),
-                    ("mults", Json::from(512u64)),
-                ]),
-            )
+            .stream_sync(user, lease.alloc, "matmul16", 512)
             .unwrap();
-        assert_eq!(out.get("validation_failures").as_u64(), Some(0));
-        assert!(out.get("virtual_mbps").as_f64().unwrap() > 450.0);
+        assert_eq!(out.validation_failures, 0);
+        assert!(out.virtual_mbps > 450.0);
     }
 
     // -- arrow 5: release -------------------------------------------
-    c.client
-        .call(
-            "release",
-            Json::obj(vec![("alloc", Json::from(alloc.as_str()))]),
-        )
-        .unwrap();
-    let st = c
-        .client
-        .call(
-            "status",
-            Json::obj(vec![(
-                "fpga",
-                Json::from(lease.get("fpga").as_str().unwrap()),
-            )]),
-        )
-        .unwrap();
-    assert_eq!(st.get("regions_configured").as_u64(), Some(0));
-    assert_eq!(st.get("regions_clocked").as_u64(), Some(0));
+    assert!(c.client.release(lease.alloc).unwrap().released);
+    let st = c.client.status(lease.fpga).unwrap();
+    assert_eq!(st.regions_configured, 0);
+    assert_eq!(st.regions_clocked, 0);
 }
 
 #[test]
 fn two_users_do_not_interfere() {
     let mut c = cloud();
-    let mut ids = Vec::new();
-    for name in ["alice", "bob"] {
-        let user = c
-            .client
-            .call("add_user", Json::obj(vec![("name", Json::from(name))]))
-            .unwrap()
-            .get("user")
-            .as_str()
-            .unwrap()
-            .to_string();
-        let lease = c
-            .client
-            .call(
-                "alloc_vfpga",
-                Json::obj(vec![("user", Json::from(user.as_str()))]),
-            )
-            .unwrap();
-        ids.push((
-            user,
-            lease.get("alloc").as_str().unwrap().to_string(),
-            lease.get("vfpga").as_str().unwrap().to_string(),
-        ));
-    }
+    let alice = c.client.add_user("alice").unwrap().user;
+    let bob = c.client.add_user("bob").unwrap().user;
+    let alice_lease = c.client.alloc_vfpga(alice, None, None).unwrap();
+    // Bob connects separately and never learns alice's token.
+    let mut bob_client = Client::connect(c._server.addr()).unwrap();
+    let bob_lease =
+        bob_client.alloc_vfpga(bob, None, None).unwrap();
     // Distinct vFPGAs.
-    assert_ne!(ids[0].2, ids[1].2);
-    // Bob cannot program alice's lease.
-    let err = c
-        .client
-        .call(
-            "program_core",
-            Json::obj(vec![
-                ("user", Json::from(ids[1].0.as_str())),
-                ("alloc", Json::from(ids[0].1.as_str())),
-                ("core", Json::from("matmul16")),
-            ]),
-        )
+    assert_ne!(alice_lease.vfpga, bob_lease.vfpga);
+    // Bob cannot program alice's lease: no capability token.
+    let err = bob_client
+        .program_core(bob, alice_lease.alloc, "matmul16")
         .unwrap_err();
-    assert!(err.contains("not found or not yours"), "{err}");
+    assert_eq!(err.code, ErrorCode::BadToken);
     // Alice still can.
     c.client
-        .call(
-            "program_core",
-            Json::obj(vec![
-                ("user", Json::from(ids[0].0.as_str())),
-                ("alloc", Json::from(ids[0].1.as_str())),
-                ("core", Json::from("matmul16")),
-            ]),
-        )
+        .program_core(alice, alice_lease.alloc, "matmul16")
         .unwrap();
 }
 
 #[test]
 fn migration_preserves_service_over_rpc() {
     let mut c = cloud();
-    let user = c
-        .client
-        .call("add_user", Json::obj(vec![("name", Json::from("m"))]))
-        .unwrap()
-        .get("user")
-        .as_str()
-        .unwrap()
-        .to_string();
-    let lease = c
-        .client
-        .call(
-            "alloc_vfpga",
-            Json::obj(vec![("user", Json::from(user.as_str()))]),
-        )
-        .unwrap();
-    let alloc = lease.get("alloc").as_str().unwrap().to_string();
+    let user = c.client.add_user("m").unwrap().user;
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
     c.client
-        .call(
-            "program_core",
-            Json::obj(vec![
-                ("user", Json::from(user.as_str())),
-                ("alloc", Json::from(alloc.as_str())),
-                ("core", Json::from("matmul16")),
-            ]),
-        )
+        .program_core(user, lease.alloc, "matmul16")
         .unwrap();
-    let mig = c
-        .client
-        .call(
-            "migrate",
-            Json::obj(vec![
-                ("user", Json::from(user.as_str())),
-                ("alloc", Json::from(alloc.as_str())),
-            ]),
-        )
-        .unwrap();
-    assert_ne!(
-        mig.get("from").as_str().unwrap(),
-        mig.get("to").as_str().unwrap()
-    );
+    let mig = c.client.migrate(user, lease.alloc).unwrap();
+    assert_ne!(mig.from, mig.to);
     // Still streamable at the new location.
     if artifacts_present() {
         let out = c
             .client
-            .call(
-                "stream",
-                Json::obj(vec![
-                    ("user", Json::from(user.as_str())),
-                    ("alloc", Json::from(alloc.as_str())),
-                    ("core", Json::from("matmul16")),
-                    ("mults", Json::from(256u64)),
-                ]),
-            )
+            .stream_sync(user, lease.alloc, "matmul16", 256)
             .unwrap();
-        assert_eq!(out.get("validation_failures").as_u64(), Some(0));
+        assert_eq!(out.validation_failures, 0);
     }
 }
 
@@ -265,7 +141,7 @@ fn migration_preserves_service_over_rpc() {
 fn virtual_clock_is_consistent_across_surfaces() {
     let mut c = cloud();
     let t0 = c.clock.now();
-    c.client.call("hello", Json::obj(vec![])).unwrap();
+    c.client.hello().unwrap();
     // One RPC = one 69 ms charge, visible on the shared clock.
     let d = c.clock.since(t0).as_millis_f64();
     assert!((d - 69.0).abs() < 0.5, "{d}");

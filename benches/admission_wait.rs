@@ -17,14 +17,18 @@
 //! scheduler behavior, not host wall time.
 //!
 //! Run: `cargo bench --bench admission_wait`
+//! (`BENCH_BASELINE_OUT=BENCH_baseline.json` also writes the curves
+//! to the shared machine-readable baseline file.)
 
 use std::sync::Arc;
 
 use rc3e::config::{ClusterConfig, ServiceModel};
 use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
 use rc3e::sched::{AdmissionRequest, Lease, RequestClass, Scheduler};
+use rc3e::testing::baseline::{self, BaselineReport};
 use rc3e::util::clock::{VirtualClock, VirtualTime};
 use rc3e::util::ids::TicketId;
+use rc3e::util::json::Json;
 use rc3e::util::rng::Rng;
 use rc3e::util::table::Table;
 
@@ -154,13 +158,20 @@ fn main() {
          ({REQUESTS} requests/point, mean hold {MEAN_HOLD_S} s, \
          16-region paper testbed; virtual ms)\n"
     );
-    for (label, gang, seed) in
-        [("single-region", 1u32, 0xBEEF), ("gang-2 co-located", 2, 0xFEED)]
-    {
+    let out = baseline::out_path();
+    let mut report = match &out {
+        Some(p) => BaselineReport::load_or_new(p),
+        None => BaselineReport::new(),
+    };
+    for (label, gang, seed, key) in [
+        ("single-region", 1u32, 0xBEEF, "admission_wait.single_region"),
+        ("gang-2 co-located", 2, 0xFEED, "admission_wait.gang2_colocated"),
+    ] {
         let mut table = Table::new(
             &format!("series: {label}"),
             &["load", "p50 ms", "p99 ms", "max ms", "mean ms"],
         );
+        let mut points = Vec::new();
         for load in [0.25, 0.5, 0.75, 0.9, 1.1] {
             let p = run_series(gang, load, seed);
             table.row(&[
@@ -170,8 +181,26 @@ fn main() {
                 format!("{:.1}", p.max_ms),
                 format!("{:.1}", p.mean_ms),
             ]);
+            points.push(Json::obj(vec![
+                ("load", Json::from(load)),
+                ("p50_ms", Json::from(p.p50_ms)),
+                ("p99_ms", Json::from(p.p99_ms)),
+                ("max_ms", Json::from(p.max_ms)),
+                ("mean_ms", Json::from(p.mean_ms)),
+            ]));
         }
         print!("{}\n", table.render());
+        report.set(
+            key,
+            Json::obj(vec![
+                ("kind", Json::from("virtual_ms_curve")),
+                ("points", Json::Arr(points)),
+            ]),
+        );
+    }
+    if let Some(p) = &out {
+        report.save(p).unwrap();
+        println!("baseline series written to {}\n", p.display());
     }
     println!(
         "reading: waits stay bounded below saturation and explode past \

@@ -13,6 +13,8 @@
 //!   each caller loops `job_status` on an interval.
 //!
 //! Run: `cargo bench --bench event_fanout`
+//! (`BENCH_BASELINE_OUT=BENCH_baseline.json` also writes the series
+//! to the shared machine-readable baseline file.)
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -21,12 +23,13 @@ use std::time::{Duration, Instant};
 use rc3e::metrics::Registry;
 use rc3e::middleware::api::{Event, SubscriptionFilter};
 use rc3e::middleware::{EventBus, JobRegistry, Scope};
+use rc3e::testing::baseline::{self, BaselineReport};
 use rc3e::util::json::Json;
 
 const EVENTS: u64 = 20_000;
 const WAITERS: usize = 16;
 
-fn bench_fanout(subscribers: usize) {
+fn bench_fanout(subscribers: usize) -> f64 {
     let bus = EventBus::new();
     let stop = Arc::new(AtomicBool::new(false));
     let mut drains = Vec::new();
@@ -62,12 +65,13 @@ fn bench_fanout(subscribers: usize) {
         dropped += lost;
     }
     let total_s = t0.elapsed().as_secs_f64();
+    let eps = delivered as f64 / total_s;
     println!(
         "fanout x{subscribers:<2}: {EVENTS} events enqueued in \
-         {publish_s:.4} s -> {:.0} delivered events/s \
-         ({delivered} drained, {dropped} dropped to slow queues)",
-        delivered as f64 / total_s
+         {publish_s:.4} s -> {eps:.0} delivered events/s \
+         ({delivered} drained, {dropped} dropped to slow queues)"
     );
+    eps
 }
 
 /// Latency from completion to every coalesced waiter waking.
@@ -153,8 +157,17 @@ fn bench_polling_wait(poll_ms: u64) -> f64 {
 fn main() {
     rc3e::util::logging::init();
     println!("event_fanout: delivered-throughput vs subscriber count");
+    let out = baseline::out_path();
+    let mut report = match &out {
+        Some(p) => BaselineReport::load_or_new(p),
+        None => BaselineReport::new(),
+    };
     for n in [1, 2, 4, 8, 16] {
-        bench_fanout(n);
+        let eps = bench_fanout(n);
+        report.record_scalar(
+            &format!("event_fanout.delivered_eps_x{n:02}"),
+            eps,
+        );
     }
     println!();
     let coalesced = bench_coalesced_wait();
@@ -168,4 +181,10 @@ fn main() {
             f64::INFINITY
         }
     );
+    report.record_scalar("event_fanout.coalesced_wakeup_ms", coalesced);
+    report.record_scalar("event_fanout.polling_wakeup_ms", polled);
+    if let Some(p) = &out {
+        report.save(p).unwrap();
+        println!("baseline series written to {}", p.display());
+    }
 }

@@ -5,8 +5,12 @@
 //! * FIFO push/pop round trip;
 //! * link-arbiter accounting per chunk;
 //! * JSON encode/decode of an RPC envelope;
-//! * end-to-end RPC round trip over loopback TCP;
+//! * end-to-end RPC round trip over loopback TCP, with the flight
+//!   recorder on and off (the tracing-overhead series);
 //! * gcs/ucs controller access (lock + charge).
+//!
+//! With `BENCH_BASELINE_OUT=BENCH_baseline.json` the series are also
+//! written to the shared machine-readable baseline file.
 
 use std::sync::Arc;
 
@@ -14,12 +18,13 @@ use rc3e::fifo::AsyncFifo;
 use rc3e::middleware::{Client, ManagementServer};
 use rc3e::pcie::BandwidthArbiter;
 use rc3e::runtime::{Engine, Tensor};
+use rc3e::testing::baseline::{self, BaselineReport};
 use rc3e::testing::Bencher;
 use rc3e::util::clock::VirtualClock;
 use rc3e::util::json::Json;
 use rc3e::util::rng::Rng;
 
-fn bench_engine() {
+fn bench_engine(report: &mut BaselineReport) {
     let dir = rc3e::runtime::artifact_dir();
     if !dir.join("manifest.json").exists() {
         println!("engine: SKIPPED (run `make artifacts`)");
@@ -47,10 +52,11 @@ fn bench_engine() {
              MB/s on this host",
             r.line()
         );
+        report.record(&format!("hotpath.pjrt_{artifact}"), &r);
     }
 }
 
-fn bench_fifo() {
+fn bench_fifo(report: &mut BaselineReport) {
     let fifo = AsyncFifo::rc2f_default("bench");
     let chunk = vec![0u8; 256 * 1024];
     let r = Bencher::new(10, 1000).run("fifo push+pop 256KiB", || {
@@ -58,9 +64,10 @@ fn bench_fifo() {
         fifo.pop().unwrap()
     });
     println!("{}", r.line());
+    report.record("hotpath.fifo_push_pop_256k", &r);
 }
 
-fn bench_arbiter() {
+fn bench_arbiter(report: &mut BaselineReport) {
     let clock = VirtualClock::new();
     let arb = BandwidthArbiter::new(clock, 800.0);
     let mut s = arb.open_stream();
@@ -68,9 +75,10 @@ fn bench_arbiter() {
         s.transfer(256 * 1024)
     });
     println!("{}", r.line());
+    report.record("hotpath.arbiter_transfer_256k", &r);
 }
 
-fn bench_json() {
+fn bench_json(report: &mut BaselineReport) {
     let envelope = Json::obj(vec![
         ("method", Json::from("stream")),
         (
@@ -88,13 +96,15 @@ fn bench_json() {
         envelope.to_string()
     });
     println!("{}", r.line());
+    report.record("hotpath.json_encode_envelope", &r);
     let r = Bencher::new(10, 2000).run("json parse RPC envelope", || {
         Json::parse(&text).unwrap()
     });
     println!("{}", r.line());
+    report.record("hotpath.json_parse_envelope", &r);
 }
 
-fn bench_rpc() {
+fn bench_rpc(report: &mut BaselineReport) {
     let hv = Arc::new(
         rc3e::hypervisor::Hypervisor::boot(
             &rc3e::config::ClusterConfig::single_vc707(),
@@ -105,13 +115,28 @@ fn bench_rpc() {
     );
     let server = ManagementServer::spawn(hv, 69.0).unwrap();
     let mut client = Client::connect(server.addr()).unwrap();
-    let r = Bencher::new(5, 200).run("rpc hello round trip (wall)", || {
-        client.hello().unwrap()
-    });
-    println!("{}", r.line());
+    // Tracing-overhead series: the same loopback round trip with the
+    // flight recorder off, then on (root span per RPC recorded).
+    server.tracer().set_enabled(false);
+    let off = Bencher::new(5, 200)
+        .run("rpc hello round trip (tracing off)", || {
+            client.hello().unwrap()
+        });
+    println!("{}", off.line());
+    server.tracer().set_enabled(true);
+    let on = Bencher::new(5, 200)
+        .run("rpc hello round trip (tracing on)", || {
+            client.hello().unwrap()
+        });
+    println!("{}", on.line());
+    let pct = baseline::overhead_pct(&off, &on);
+    println!("    -> flight-recorder overhead {pct:+.2}% of the round trip");
+    report.record("hotpath.rpc_hello_untraced", &off);
+    report.record("hotpath.rpc_hello_traced", &on);
+    report.record_scalar("hotpath.tracing_overhead_pct", pct);
 }
 
-fn bench_controller() {
+fn bench_controller(report: &mut BaselineReport) {
     let clock = VirtualClock::new();
     let ids: Vec<_> = (0..4).map(rc3e::util::ids::VfpgaId).collect();
     let c = rc3e::rc2f::Controller::new(clock, &ids);
@@ -119,16 +144,26 @@ fn bench_controller() {
         c.gcs_read(rc3e::rc2f::controller::gcs_reg::STATUS).unwrap()
     });
     println!("{}", r.line());
+    report.record("hotpath.gcs_read", &r);
 }
 
 fn main() {
     rc3e::util::logging::init();
     println!("L3 hot-path microbenches (wall time)\n");
-    bench_engine();
-    bench_fifo();
-    bench_arbiter();
-    bench_json();
-    bench_rpc();
-    bench_controller();
+    let out = baseline::out_path();
+    let mut report = match &out {
+        Some(p) => BaselineReport::load_or_new(p),
+        None => BaselineReport::new(),
+    };
+    bench_engine(&mut report);
+    bench_fifo(&mut report);
+    bench_arbiter(&mut report);
+    bench_json(&mut report);
+    bench_rpc(&mut report);
+    bench_controller(&mut report);
+    if let Some(p) = &out {
+        report.save(p).unwrap();
+        println!("\nbaseline series written to {}", p.display());
+    }
     println!("\nhotpath OK");
 }

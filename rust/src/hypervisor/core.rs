@@ -27,6 +27,7 @@ use crate::rc2f::controller::Controller;
 use crate::rc2f::host_api::HostApi;
 use crate::util::clock::{VirtualClock, VirtualTime};
 use crate::util::ids::{AllocationId, FpgaId, NodeId, UserId, VfpgaId, VmId};
+use crate::util::trace;
 
 /// Errors from hypervisor operations.
 #[derive(Debug, thiserror::Error)]
@@ -446,6 +447,9 @@ impl Hypervisor {
         vfpga: VfpgaId,
         bs: &Bitstream,
     ) -> Result<VirtualTime, HypervisorError> {
+        let sp = trace::span("hv.program");
+        sp.attr("vfpga", vfpga);
+        sp.attr("core", &bs.meta.core);
         let fpga = self.fpga_of_vfpga(vfpga)?;
         let dev = self.device(fpga)?;
         let t0 = self.clock.now();
@@ -479,6 +483,7 @@ impl Hypervisor {
                     .insert(vfpga, bs.clone());
             }
             self.refresh_region_gauges();
+            sp.fail(&e);
             return Err(e);
         }
         self.programmed
@@ -503,25 +508,40 @@ impl Hypervisor {
         bs: &Bitstream,
     ) -> Result<(), HypervisorError> {
         {
+            // Bitfile sanity gate: frame window + capacity +
+            // integrity + signature policy.
+            let load = trace::span("bitstream.load");
             let hw = dev.fpga.lock().unwrap();
             let slot = dev.slot_of[&vfpga];
             let region = hw
                 .region(vfpga)
                 .map_err(|e| HypervisorError::Device(e.to_string()))?;
-            self.checker.check_partial(
+            if let Err(e) = self.checker.check_partial(
                 bs,
                 hw.board.part,
                 region_window(slot, region.shape.quarters()),
                 region.capacity,
-            )?;
+            ) {
+                load.fail(&e);
+                return Err(e.into());
+            }
         }
-        self.clock
-            .advance(VirtualTime::from_millis_f64(overhead::PR_ORCH_MS));
-        dev.fpga
-            .lock()
-            .unwrap()
-            .configure_partial(vfpga, bs)
-            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        {
+            let pr = trace::span("fpga.pr");
+            self.clock.advance(VirtualTime::from_millis_f64(
+                overhead::PR_ORCH_MS,
+            ));
+            if let Err(e) = dev
+                .fpga
+                .lock()
+                .unwrap()
+                .configure_partial(vfpga, bs)
+                .map_err(|e| HypervisorError::Device(e.to_string()))
+            {
+                pr.fail(&e);
+                return Err(e);
+            }
+        }
         dev.controller
             .lock()
             .unwrap()
@@ -574,6 +594,8 @@ impl Hypervisor {
     /// Win a quiesce on a region, blocking while pins drain; records
     /// the wall wait in `sched.preempt.quiesce_wait`.
     pub fn quiesce_region(&self, vfpga: VfpgaId) -> QuiesceGuard {
+        let sp = trace::span("hv.quiesce");
+        sp.attr("vfpga", vfpga);
         let (guard, waited) = self.guards.quiesce_blocking(vfpga);
         self.metrics
             .histogram("sched.preempt.quiesce_wait")
@@ -646,6 +668,8 @@ impl Hypervisor {
         user: UserId,
         bs: &Bitstream,
     ) -> Result<VirtualTime, HypervisorError> {
+        let sp = trace::span("hv.full_config");
+        sp.attr("alloc", alloc_id);
         let fpga = {
             let db = self.db.lock().unwrap();
             let alloc = db
@@ -660,7 +684,13 @@ impl Hypervisor {
         let dev = self.device(fpga)?;
         let t0 = self.clock.now();
         let mut hw = dev.fpga.lock().unwrap();
-        self.checker.check_full(bs, hw.board.part)?;
+        {
+            let load = trace::span("bitstream.load");
+            if let Err(e) = self.checker.check_full(bs, hw.board.part) {
+                load.fail(&e);
+                return Err(e.into());
+            }
+        }
         // PCIe hot-plug: save params, reconfigure, restore.
         hw.save_link_params(dev.link.params);
         self.clock.advance(VirtualTime::from_millis_f64(

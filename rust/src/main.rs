@@ -16,23 +16,30 @@
 //!   events (`job`, `placement`, `region`, `sched` topics) as they
 //!   happen instead of polling. `job --follow` rides the same stream
 //!   for one job's progress frames.
+//! * `trace <job-N|trace-N>` — fetch a request trace from the
+//!   server's flight recorder and render the span tree as an
+//!   indented waterfall.
+//! * `metrics [--watch]` — dump every instrument in the server's
+//!   metrics registry (counters, gauges, histograms).
 
 use std::sync::Arc;
 
 use rc3e::config::{ClusterConfig, ServiceModel};
 use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
 use rc3e::middleware::api::{
-    Event, QuotaSetRequest, ReserveRequest, SubscribeRequest,
-    SubscriptionFilter, Topic,
+    Event, HistogramBody, MetricsExportResponse, QuotaSetRequest,
+    ReserveRequest, SpanBody, SubscribeRequest, SubscriptionFilter,
+    Topic, TraceGetRequest,
 };
 use rc3e::middleware::{Client, ManagementServer, NodeAgent};
 use rc3e::sched::RequestClass;
 use rc3e::util::cli::{Args, FlagSpec};
 use rc3e::util::clock::VirtualClock;
 use rc3e::util::ids::{
-    AllocationId, FpgaId, JobId, LeaseToken, NodeId, UserId,
+    AllocationId, FpgaId, JobId, LeaseToken, NodeId, TraceId, UserId,
 };
 use rc3e::util::json::Json;
+use rc3e::util::table::Table;
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
@@ -185,6 +192,11 @@ fn flag_specs() -> Vec<FlagSpec> {
             help: "reserve: reservation window length in virtual seconds",
         },
         FlagSpec {
+            name: "watch",
+            takes_value: false,
+            help: "metrics: reprint the registry every 2 s",
+        },
+        FlagSpec {
             name: "verbose",
             takes_value: false,
             help: "debug logging",
@@ -226,6 +238,8 @@ fn main() {
         "job" => cmd_job(&args),
         "watch" => cmd_watch(&args),
         "lifecycle" => cmd_lifecycle(&args),
+        "trace" => cmd_trace(&args),
+        "metrics" => cmd_metrics(&args),
         _ => {
             print!("{}", usage());
             Ok(())
@@ -268,7 +282,10 @@ fn usage() -> String {
          \x20 watch      server-push events [--topics job,sched,... \
          --lease lt-... --max-events N --timeout-s S]\n\
          \x20 lifecycle  --fpga fpga-N [--limit N] region transition \
-         log\n\n",
+         log\n\
+         \x20 trace      rc3e trace <job-N|trace-N> — span waterfall \
+         from the flight recorder\n\
+         \x20 metrics    dump the server metrics registry [--watch]\n\n",
     );
     out.push_str(&rc3e::util::cli::usage("rc3e", "flags", &flag_specs()));
     out
@@ -806,6 +823,170 @@ fn cmd_lifecycle(args: &Args) -> Result<(), String> {
         resp.dropped
     );
     Ok(())
+}
+
+/// `rc3e trace <job-N | trace-N>` — fetch a request trace from the
+/// server's flight recorder and render it as a waterfall: one row
+/// per span, indented by tree depth, offsets in virtual ms from the
+/// earliest span start.
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let id = args
+        .positional()
+        .get(1)
+        .ok_or("usage: rc3e trace <job-N | trace-N> --addr host:port")?;
+    let req = if let Some(job) = JobId::parse(id) {
+        TraceGetRequest::by_job(job)
+    } else if let Some(trace) = TraceId::parse(id) {
+        TraceGetRequest::by_trace(trace)
+    } else {
+        return Err(format!(
+            "'{id}' is neither a job-N nor a trace-N id"
+        ));
+    };
+    let mut client = connect(args)?;
+    let resp = client.trace_get(&req).map_err(|e| e.to_string())?;
+    print!(
+        "{}",
+        render_waterfall(&resp.trace.to_string(), &resp.spans)
+    );
+    if resp.truncated > 0 {
+        println!(
+            "({} spans dropped past the per-trace cap)",
+            resp.truncated
+        );
+    }
+    Ok(())
+}
+
+/// Render a span tree as an indented waterfall table. Spans whose
+/// parent is missing (evicted or foreign) render at the root level
+/// rather than being dropped.
+fn render_waterfall(trace: &str, spans: &[SpanBody]) -> String {
+    use std::collections::{HashMap, HashSet};
+    let t0 = spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+    let ids: HashSet<_> = spans.iter().map(|s| s.span).collect();
+    let mut children: HashMap<_, Vec<usize>> = HashMap::new();
+    let mut roots = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        match s.parent {
+            Some(p) if ids.contains(&p) => {
+                children.entry(p).or_default().push(i)
+            }
+            _ => roots.push(i),
+        }
+    }
+    let mut table = Table::new(
+        &format!("trace {trace}"),
+        &["span", "start ms", "dur ms", "outcome", "detail"],
+    );
+    // Depth-first in recorded (start) order.
+    let mut stack: Vec<(usize, usize)> =
+        roots.iter().rev().map(|&i| (i, 0)).collect();
+    while let Some((i, depth)) = stack.pop() {
+        let s = &spans[i];
+        let mut detail: Vec<String> = s
+            .attrs
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        if let Some(e) = &s.error {
+            detail.push(format!("error: {e}"));
+        }
+        table.row(&[
+            format!("{}{}", "  ".repeat(depth), s.name),
+            format!(
+                "{:.3}",
+                s.start_ns.saturating_sub(t0) as f64 / 1e6
+            ),
+            if s.end_ns.is_some() {
+                format!("{:.3}", s.duration_ms())
+            } else {
+                "open".into()
+            },
+            s.outcome.clone(),
+            detail.join(" "),
+        ]);
+        if let Some(kids) = children.get(&s.span) {
+            for &k in kids.iter().rev() {
+                stack.push((k, depth + 1));
+            }
+        }
+    }
+    table.render()
+}
+
+/// `rc3e metrics [--watch]` — dump every instrument in the server's
+/// metrics registry. `--watch` reprints the registry every 2 s until
+/// interrupted.
+fn cmd_metrics(args: &Args) -> Result<(), String> {
+    let mut client = connect(args)?;
+    loop {
+        let resp =
+            client.metrics_export().map_err(|e| e.to_string())?;
+        print!("{}", render_metrics(&resp));
+        if !args.has("watch") {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs(2));
+        println!();
+    }
+}
+
+fn render_metrics(resp: &MetricsExportResponse) -> String {
+    let mut out = String::new();
+    let mut t = Table::new("counters", &["name", "value"]);
+    for (n, v) in &resp.counters {
+        t.row(&[n.clone(), v.to_string()]);
+    }
+    out.push_str(&t.render());
+    let mut t = Table::new("gauges", &["name", "value"]);
+    for (n, v) in &resp.gauges {
+        t.row(&[n.clone(), v.to_string()]);
+    }
+    out.push_str(&t.render());
+    let mut t = Table::new(
+        "histograms (us)",
+        &["name", "n", "mean", "p50<=", "p99<=", "max"],
+    );
+    for (n, h) in &resp.histograms {
+        let mean = if h.count > 0 {
+            h.sum_us as f64 / h.count as f64
+        } else {
+            0.0
+        };
+        t.row(&[
+            n.clone(),
+            h.count.to_string(),
+            format!("{mean:.1}"),
+            quantile_bound(h, 0.50),
+            quantile_bound(h, 0.99),
+            h.max_us.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Upper-bound estimate of a quantile from exported bucket counts:
+/// the bound of the first bucket whose cumulative count reaches
+/// `q * count` (`overflow` when it lands past the last finite bound).
+fn quantile_bound(h: &HistogramBody, q: f64) -> String {
+    if h.count == 0 {
+        return "-".into();
+    }
+    let target = (q * h.count as f64).ceil() as u64;
+    let mut cum = 0u64;
+    for (i, c) in h.buckets.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return h
+                .bounds_us
+                .get(i)
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "?".into());
+        }
+    }
+    "overflow".into()
 }
 
 fn cmd_cli(args: &Args) -> Result<(), String> {

@@ -47,35 +47,71 @@ impl Gauge {
     pub fn sub(&self, n: i64) {
         self.0.fetch_sub(n, Ordering::Relaxed);
     }
+    /// Raise to `v` if larger (high-water marks).
+    pub fn fetch_max(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
 }
 
-/// Fixed-boundary latency histogram (microsecond buckets, powers of 2
-/// from 1 µs to ~17 s). Lock-free recording.
+/// Fixed-boundary latency histogram: microsecond buckets at powers of
+/// 2 from 1 µs to ~17 s, plus an explicit *overflow* bucket for
+/// anything past the last finite bound. Lock-free recording.
+///
+/// Bucket `i` holds values in `(2^(i-1), 2^i]` µs; the overflow
+/// bucket holds values `> 2^(BUCKETS-1)` µs, so exported quantiles
+/// are never silently clamped to a fake boundary — an overflow
+/// quantile reports the observed maximum instead.
 #[derive(Debug)]
 pub struct Histogram {
+    /// `BUCKETS` finite buckets followed by one overflow slot.
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
     sum_us: AtomicU64,
     max_us: AtomicU64,
 }
 
+/// A point-in-time copy of one histogram, with bucket boundaries, for
+/// the `metrics_export` RPC and bench JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+    /// Inclusive upper bound of each finite bucket, in µs.
+    pub bounds_us: Vec<u64>,
+    /// Per-finite-bucket counts; same length as `bounds_us`.
+    pub buckets: Vec<u64>,
+    /// Samples above the last finite bound.
+    pub overflow: u64,
+}
+
 impl Histogram {
+    /// Finite buckets; index [`Self::BUCKETS`] is the overflow slot.
     const BUCKETS: usize = 25;
 
     pub fn new() -> Histogram {
         Histogram {
-            buckets: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            buckets: (0..=Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_us: AtomicU64::new(0),
             max_us: AtomicU64::new(0),
         }
     }
 
+    /// Inclusive upper bound of finite bucket `i`, in µs.
+    fn bound_of(i: usize) -> u64 {
+        1u64 << i
+    }
+
+    /// Bucket index: the smallest `i` with `us <= bound_of(i)`;
+    /// returns [`Self::BUCKETS`] (overflow) past the last finite
+    /// bound.
     fn bucket_of(us: u64) -> usize {
-        ((64 - us.max(1).leading_zeros()) as usize).min(Self::BUCKETS - 1)
+        let ceil_log2 = (64 - (us.max(1) - 1).leading_zeros()) as usize;
+        ceil_log2.min(Self::BUCKETS)
     }
 
     pub fn record_us(&self, us: u64) {
@@ -106,7 +142,9 @@ impl Histogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound).
+    /// Approximate quantile from bucket boundaries (upper bound). A
+    /// quantile landing in the overflow bucket reports the observed
+    /// maximum rather than a fabricated bound.
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -114,13 +152,28 @@ impl Histogram {
         }
         let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
         let mut seen = 0;
-        for (i, b) in self.buckets.iter().enumerate() {
+        for (i, b) in self.buckets.iter().take(Self::BUCKETS).enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return 1u64 << i;
+                return Self::bound_of(i);
             }
         }
         self.max_us()
+    }
+
+    /// Copy out counts and boundary metadata.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us(),
+            bounds_us: (0..Self::BUCKETS).map(Self::bound_of).collect(),
+            buckets: self.buckets[..Self::BUCKETS]
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            overflow: self.buckets[Self::BUCKETS].load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -130,7 +183,51 @@ impl Default for Histogram {
     }
 }
 
+/// Instrument kinds a [`Registry`] name can be bound to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstrumentKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl InstrumentKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            InstrumentKind::Counter => "counter",
+            InstrumentKind::Gauge => "gauge",
+            InstrumentKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Whether `name` is a legal instrument name: non-empty dot-separated
+/// snake_case segments (`[a-z0-9_]`), e.g. `sched.preempt.quiesce_wait`.
+pub fn valid_instrument_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.split('.').all(|seg| {
+            !seg.is_empty()
+                && seg
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        })
+}
+
+/// A point-in-time copy of every instrument in a registry.
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
 /// Named metrics registry (one per node / per hypervisor).
+///
+/// Names are uniqueness-checked across instrument kinds: registering
+/// `sched.wait` as both a histogram and a counter is a programmer
+/// error and panics, as does a name that fails
+/// [`valid_instrument_name`] — the tier-1 lint test turns either into
+/// a CI failure.
 #[derive(Debug, Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
@@ -143,7 +240,31 @@ impl Registry {
         Registry::default()
     }
 
+    fn check_name(&self, name: &str, kind: InstrumentKind) {
+        assert!(
+            valid_instrument_name(name),
+            "invalid instrument name {name:?}: must be dot-separated \
+             snake_case ([a-z0-9_])"
+        );
+        let clash = [
+            (InstrumentKind::Counter, self.counters.lock().unwrap().contains_key(name)),
+            (InstrumentKind::Gauge, self.gauges.lock().unwrap().contains_key(name)),
+            (InstrumentKind::Histogram, self.histograms.lock().unwrap().contains_key(name)),
+        ]
+        .into_iter()
+        .find(|(k, present)| *present && *k != kind);
+        if let Some((other, _)) = clash {
+            panic!(
+                "instrument name collision: {name:?} already registered \
+                 as a {}, now requested as a {}",
+                other.label(),
+                kind.label()
+            );
+        }
+    }
+
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.check_name(name, InstrumentKind::Counter);
         self.counters
             .lock()
             .unwrap()
@@ -153,6 +274,7 @@ impl Registry {
     }
 
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.check_name(name, InstrumentKind::Histogram);
         self.histograms
             .lock()
             .unwrap()
@@ -162,12 +284,56 @@ impl Registry {
     }
 
     pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.check_name(name, InstrumentKind::Gauge);
         self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
             .or_insert_with(|| std::sync::Arc::new(Gauge::new()))
             .clone()
+    }
+
+    /// Copy out every instrument (the `metrics_export` payload).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(n, c)| (n.clone(), c.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(n, g)| (n.clone(), g.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(n, h)| (n.clone(), h.snapshot()))
+                .collect(),
+        }
+    }
+
+    /// Every registered instrument name with its kind.
+    pub fn names(&self) -> Vec<(String, InstrumentKind)> {
+        let mut out: Vec<(String, InstrumentKind)> = Vec::new();
+        for n in self.counters.lock().unwrap().keys() {
+            out.push((n.clone(), InstrumentKind::Counter));
+        }
+        for n in self.gauges.lock().unwrap().keys() {
+            out.push((n.clone(), InstrumentKind::Gauge));
+        }
+        for n in self.histograms.lock().unwrap().keys() {
+            out.push((n.clone(), InstrumentKind::Histogram));
+        }
+        out.sort();
+        out
     }
 
     /// Render all metrics as a report (CLI `rc3e stats`).
@@ -250,8 +416,80 @@ mod tests {
         assert!(
             Histogram::bucket_of(1000) < Histogram::bucket_of(1_000_000)
         );
-        // Saturates at the top bucket.
-        assert_eq!(Histogram::bucket_of(u64::MAX), Histogram::BUCKETS - 1);
+        // Values in (2^(i-1), 2^i] land in bucket i.
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        // The last finite bound is inclusive; past it is overflow.
+        let last = Histogram::bound_of(Histogram::BUCKETS - 1);
+        assert_eq!(Histogram::bucket_of(last), Histogram::BUCKETS - 1);
+        assert_eq!(Histogram::bucket_of(last + 1), Histogram::BUCKETS);
+        assert_eq!(Histogram::bucket_of(u64::MAX), Histogram::BUCKETS);
+    }
+
+    #[test]
+    fn histogram_snapshot_exposes_bounds_and_overflow() {
+        let h = Histogram::new();
+        h.record_us(3); // bucket 2 (bound 4)
+        h.record_us(100_000_000_000); // ~28 h: overflow
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.bounds_us.len(), s.buckets.len());
+        assert_eq!(s.bounds_us[0], 1);
+        assert_eq!(*s.bounds_us.last().unwrap(), 1 << 24);
+        assert_eq!(s.buckets[2], 1);
+        assert_eq!(s.overflow, 1);
+        assert_eq!(s.max_us, 100_000_000_000);
+        assert_eq!(s.buckets.iter().sum::<u64>() + s.overflow, s.count);
+        // An overflow quantile reports the observed max, not a
+        // fabricated bucket bound.
+        assert_eq!(h.quantile_us(1.0), 100_000_000_000);
+    }
+
+    #[test]
+    fn registry_rejects_bad_names() {
+        assert!(valid_instrument_name("sched.preempt.quiesce_wait"));
+        assert!(!valid_instrument_name("Sched.wait"));
+        assert!(!valid_instrument_name("sched..wait"));
+        assert!(!valid_instrument_name("sched.wait-ms"));
+        assert!(!valid_instrument_name(""));
+        let bad = std::panic::catch_unwind(|| {
+            Registry::new().counter("Not-Snake");
+        });
+        assert!(bad.is_err(), "invalid name accepted");
+    }
+
+    #[test]
+    fn registry_rejects_kind_collisions() {
+        let r = Registry::new();
+        r.counter("hv.pr").inc();
+        let clash = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                r.histogram("hv.pr");
+            }),
+        );
+        assert!(clash.is_err(), "kind collision accepted");
+        // Same kind re-registration stays fine.
+        assert_eq!(r.counter("hv.pr").get(), 1);
+    }
+
+    #[test]
+    fn registry_snapshot_and_names() {
+        let r = Registry::new();
+        r.counter("a.count").add(3);
+        r.gauge("b.depth").set(-2);
+        r.histogram("c.wait").record_us(7);
+        let s = r.snapshot();
+        assert_eq!(s.counters, vec![("a.count".to_string(), 3)]);
+        assert_eq!(s.gauges, vec![("b.depth".to_string(), -2)]);
+        assert_eq!(s.histograms.len(), 1);
+        assert_eq!(s.histograms[0].1.count, 1);
+        let names = r.names();
+        assert_eq!(names.len(), 3);
+        assert!(names
+            .iter()
+            .any(|(n, k)| n == "c.wait" && *k == InstrumentKind::Histogram));
     }
 
     #[test]

@@ -38,11 +38,13 @@ use crate::config::ServiceModel;
 use crate::hypervisor::HypervisorError;
 use crate::rc2f::stream::StreamOutcome;
 use crate::sched::{RequestClass, SchedError};
+use crate::metrics::{HistogramSnapshot, RegistrySnapshot};
 use crate::util::ids::{
     AllocationId, FpgaId, JobId, LeaseToken, NodeId, ReservationId,
-    UserId, VfpgaId,
+    SpanId, TraceId, UserId, VfpgaId,
 };
 use crate::util::json::Json;
+use crate::util::trace::{SpanRecord, TraceSnapshot};
 
 /// Oldest protocol this server/client still speaks (the typed v2
 /// surface; the untyped protocol 1 is retired).
@@ -344,13 +346,19 @@ pub enum Method {
     LifecycleLog,
     SchedPolicyGet,
     SchedPolicySet,
+    /// Dump every registered instrument (counters, gauges,
+    /// histograms with bucket boundaries) as typed JSON.
+    MetricsExport,
+    /// Fetch a span tree from the flight recorder, by trace id or by
+    /// the job that carried it.
+    TraceGet,
     AgentHello,
     AgentStatus,
 }
 
 impl Method {
     /// Every method, for dispatch-completeness tests and the docs.
-    pub const ALL: [Method; 32] = [
+    pub const ALL: [Method; 34] = [
         Method::Hello,
         Method::AddUser,
         Method::Status,
@@ -381,6 +389,8 @@ impl Method {
         Method::LifecycleLog,
         Method::SchedPolicyGet,
         Method::SchedPolicySet,
+        Method::MetricsExport,
+        Method::TraceGet,
         Method::AgentHello,
         Method::AgentStatus,
     ];
@@ -417,6 +427,8 @@ impl Method {
             Method::LifecycleLog => "lifecycle_log",
             Method::SchedPolicyGet => "sched_policy_get",
             Method::SchedPolicySet => "sched_policy_set",
+            Method::MetricsExport => "metrics_export",
+            Method::TraceGet => "trace_get",
             Method::AgentHello => "agent.hello",
             Method::AgentStatus => "agent.status",
         }
@@ -515,6 +527,28 @@ fn opt_lease(
 
 fn set_opt_lease(j: &mut Json, key: &str, lease: Option<LeaseToken>) {
     if let Some(t) = lease {
+        j.set(key, Json::from(t.to_string()));
+    }
+}
+
+/// Optional trace-id field: absent is fine, present-but-malformed is
+/// an error (same policy as [`opt_lease`]).
+fn opt_trace(
+    p: &Json,
+    key: &str,
+) -> Result<Option<TraceId>, ApiError> {
+    match p.get(key).as_str() {
+        None => Ok(None),
+        Some(s) => TraceId::parse(s).map(Some).ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "bad trace id in field '{key}': '{s}'"
+            ))
+        }),
+    }
+}
+
+fn set_opt_trace(j: &mut Json, key: &str, trace: Option<TraceId>) {
+    if let Some(t) = trace {
         j.set(key, Json::from(t.to_string()));
     }
 }
@@ -2148,6 +2182,9 @@ pub struct JobBody {
     pub result: Option<Json>,
     /// The failure, when `state == "failed"`.
     pub error: Option<ApiError>,
+    /// Flight-recorder trace the job runs under (inherited from the
+    /// submitting RPC), when tracing was on at submit time.
+    pub trace: Option<TraceId>,
 }
 
 impl JobBody {
@@ -2178,7 +2215,7 @@ impl JobBody {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("job", Json::from(self.job.to_string())),
             ("method", Json::from(self.method.as_str())),
             ("state", Json::from(self.state.as_str())),
@@ -2193,7 +2230,9 @@ impl JobBody {
                     None => Json::Null,
                 },
             ),
-        ])
+        ]);
+        set_opt_trace(&mut j, "trace", self.trace);
+        j
     }
 
     pub fn from_json(p: &Json) -> Result<JobBody, ApiError> {
@@ -2213,6 +2252,7 @@ impl JobBody {
             state: want_str(p, "state")?,
             result,
             error,
+            trace: opt_trace(p, "trace")?,
         })
     }
 }
@@ -2398,6 +2438,9 @@ pub enum Event {
         /// Terminal frames only: the job body (same JSON `job_wait`
         /// returns).
         result: Option<Json>,
+        /// Flight-recorder trace the job runs under, so a watcher
+        /// can pull the span tree with `trace_get`.
+        trace: Option<TraceId>,
     },
     /// A lease member was relocated (preemption, operator `migrate`,
     /// or gang relocation): the placement the tenant cached is stale.
@@ -2484,6 +2527,7 @@ impl Event {
                 pct,
                 state,
                 result,
+                trace,
             } => {
                 j.set("job", Json::from(job.to_string()));
                 j.set("method", Json::from(method.as_str()));
@@ -2494,6 +2538,7 @@ impl Event {
                 if let Some(r) = result {
                     j.set("result", r.clone());
                 }
+                set_opt_trace(&mut j, "trace", *trace);
             }
             Event::LeasePlacementChanged {
                 alloc,
@@ -2552,6 +2597,7 @@ impl Event {
                     Json::Null => None,
                     v => Some(v.clone()),
                 },
+                trace: opt_trace(p, "trace")?,
             }),
             "lease_placement_changed" => {
                 Ok(Event::LeasePlacementChanged {
@@ -2816,6 +2862,416 @@ impl SchedPolicyResponse {
     }
 }
 
+// ===================================================== observability
+
+/// `metrics_export` — dump every registered instrument.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsExportRequest;
+
+impl MetricsExportRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(
+        _p: &Json,
+    ) -> Result<MetricsExportRequest, ApiError> {
+        Ok(MetricsExportRequest)
+    }
+}
+
+/// One histogram on the wire: counts *with* boundary metadata, so a
+/// consumer can recompute percentiles instead of trusting clamped
+/// server-side summaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramBody {
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+    /// Inclusive upper bound of each finite bucket, in µs.
+    pub bounds_us: Vec<u64>,
+    /// Per-finite-bucket sample counts; same length as `bounds_us`.
+    pub buckets: Vec<u64>,
+    /// Samples above the last finite bound.
+    pub overflow: u64,
+}
+
+impl HistogramBody {
+    pub fn from_snapshot(s: &HistogramSnapshot) -> HistogramBody {
+        HistogramBody {
+            count: s.count,
+            sum_us: s.sum_us,
+            max_us: s.max_us,
+            bounds_us: s.bounds_us.clone(),
+            buckets: s.buckets.clone(),
+            overflow: s.overflow,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count)),
+            ("sum_us", Json::from(self.sum_us)),
+            ("max_us", Json::from(self.max_us)),
+            (
+                "bounds_us",
+                Json::Arr(
+                    self.bounds_us.iter().map(|b| Json::from(*b)).collect(),
+                ),
+            ),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets.iter().map(|b| Json::from(*b)).collect(),
+                ),
+            ),
+            ("overflow", Json::from(self.overflow)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<HistogramBody, ApiError> {
+        let u64_arr = |key: &str| -> Result<Vec<u64>, ApiError> {
+            p.get(key)
+                .as_arr()
+                .ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "missing array field '{key}'"
+                    ))
+                })?
+                .iter()
+                .map(|v| {
+                    v.as_u64().ok_or_else(|| {
+                        ApiError::bad_request(format!(
+                            "non-u64 entry in '{key}'"
+                        ))
+                    })
+                })
+                .collect()
+        };
+        let body = HistogramBody {
+            count: want_u64(p, "count")?,
+            sum_us: want_u64(p, "sum_us")?,
+            max_us: want_u64(p, "max_us")?,
+            bounds_us: u64_arr("bounds_us")?,
+            buckets: u64_arr("buckets")?,
+            overflow: want_u64(p, "overflow")?,
+        };
+        if body.bounds_us.len() != body.buckets.len() {
+            return Err(ApiError::bad_request(
+                "histogram bounds/buckets length mismatch",
+            ));
+        }
+        Ok(body)
+    }
+}
+
+/// `metrics_export` response: every instrument by name. Instrument
+/// names are unique across kinds (the registry enforces it).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsExportResponse {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub histograms: Vec<(String, HistogramBody)>,
+}
+
+impl MetricsExportResponse {
+    pub fn from_snapshot(s: &RegistrySnapshot) -> MetricsExportResponse {
+        MetricsExportResponse {
+            counters: s.counters.clone(),
+            gauges: s.gauges.clone(),
+            histograms: s
+                .histograms
+                .iter()
+                .map(|(n, h)| {
+                    (n.clone(), HistogramBody::from_snapshot(h))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::obj(
+            self.counters
+                .iter()
+                .map(|(n, v)| (n.as_str(), Json::from(*v)))
+                .collect(),
+        );
+        let gauges = Json::obj(
+            self.gauges
+                .iter()
+                .map(|(n, v)| {
+                    (n.as_str(), Json::from(*v as f64))
+                })
+                .collect(),
+        );
+        let histograms = Json::obj(
+            self.histograms
+                .iter()
+                .map(|(n, h)| (n.as_str(), h.to_json()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<MetricsExportResponse, ApiError> {
+        let obj = |key: &str| {
+            p.get(key).as_obj().ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "missing object field '{key}'"
+                ))
+            })
+        };
+        let mut out = MetricsExportResponse::default();
+        for (n, v) in obj("counters")? {
+            out.counters.push((
+                n.clone(),
+                v.as_u64().ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "non-u64 counter '{n}'"
+                    ))
+                })?,
+            ));
+        }
+        for (n, v) in obj("gauges")? {
+            out.gauges.push((
+                n.clone(),
+                v.as_f64().ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "non-number gauge '{n}'"
+                    ))
+                })? as i64,
+            ));
+        }
+        for (n, v) in obj("histograms")? {
+            out.histograms
+                .push((n.clone(), HistogramBody::from_json(v)?));
+        }
+        Ok(out)
+    }
+}
+
+/// `trace_get` — fetch a span tree from the flight recorder, by
+/// trace id or by the job that carried it (exactly one must be set).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceGetRequest {
+    pub trace: Option<TraceId>,
+    pub job: Option<JobId>,
+}
+
+impl TraceGetRequest {
+    pub fn by_trace(trace: TraceId) -> TraceGetRequest {
+        TraceGetRequest {
+            trace: Some(trace),
+            job: None,
+        }
+    }
+
+    pub fn by_job(job: JobId) -> TraceGetRequest {
+        TraceGetRequest {
+            trace: None,
+            job: Some(job),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![]);
+        set_opt_trace(&mut j, "trace", self.trace);
+        if let Some(job) = self.job {
+            j.set("job", Json::from(job.to_string()));
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<TraceGetRequest, ApiError> {
+        let trace = opt_trace(p, "trace")?;
+        let job = match p.get("job").as_str() {
+            None => None,
+            Some(s) => Some(JobId::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "bad id in field 'job': '{s}'"
+                ))
+            })?),
+        };
+        if trace.is_some() == job.is_some() {
+            return Err(ApiError::bad_request(
+                "trace_get takes exactly one of 'trace' or 'job'",
+            ));
+        }
+        Ok(TraceGetRequest { trace, job })
+    }
+}
+
+/// One span on the wire. Times are virtual-clock nanoseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanBody {
+    pub span: SpanId,
+    /// Absent on the trace root.
+    pub parent: Option<SpanId>,
+    pub name: String,
+    pub start_ns: u64,
+    /// Absent while the span is still open.
+    pub end_ns: Option<u64>,
+    /// "ok" | "error" | "open".
+    pub outcome: String,
+    /// The failure message when `outcome == "error"`.
+    pub error: Option<String>,
+    pub attrs: Vec<(String, String)>,
+}
+
+impl SpanBody {
+    pub fn from_record(r: &SpanRecord) -> SpanBody {
+        use crate::util::trace::SpanOutcome;
+        SpanBody {
+            span: r.id,
+            parent: r.parent,
+            name: r.name.clone(),
+            start_ns: r.start.0,
+            end_ns: r.end.map(|e| e.0),
+            outcome: r.outcome.label().to_string(),
+            error: match &r.outcome {
+                SpanOutcome::Error(e) => Some(e.clone()),
+                _ => None,
+            },
+            attrs: r.attrs.clone(),
+        }
+    }
+
+    /// Span duration in virtual milliseconds (0 while open).
+    pub fn duration_ms(&self) -> f64 {
+        match self.end_ns {
+            Some(e) => e.saturating_sub(self.start_ns) as f64 / 1e6,
+            None => 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("span", Json::from(self.span.to_string())),
+            ("name", Json::from(self.name.as_str())),
+            ("start_ns", Json::from(self.start_ns)),
+            ("outcome", Json::from(self.outcome.as_str())),
+        ]);
+        if let Some(p) = self.parent {
+            j.set("parent", Json::from(p.to_string()));
+        }
+        if let Some(e) = self.end_ns {
+            j.set("end_ns", Json::from(e));
+        }
+        if let Some(e) = &self.error {
+            j.set("error", Json::from(e.as_str()));
+        }
+        if !self.attrs.is_empty() {
+            j.set(
+                "attrs",
+                Json::obj(
+                    self.attrs
+                        .iter()
+                        .map(|(k, v)| {
+                            (k.as_str(), Json::from(v.as_str()))
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<SpanBody, ApiError> {
+        let parent = match p.get("parent").as_str() {
+            None => None,
+            Some(s) => Some(SpanId::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "bad id in field 'parent': '{s}'"
+                ))
+            })?),
+        };
+        let attrs = match p.get("attrs").as_obj() {
+            None => Vec::new(),
+            Some(m) => m
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.clone(),
+                        v.as_str()
+                            .ok_or_else(|| {
+                                ApiError::bad_request(
+                                    "non-string span attr",
+                                )
+                            })?
+                            .to_string(),
+                    ))
+                })
+                .collect::<Result<Vec<_>, ApiError>>()?,
+        };
+        Ok(SpanBody {
+            span: want_id(p, "span", SpanId::parse)?,
+            parent,
+            name: want_str(p, "name")?,
+            start_ns: want_u64(p, "start_ns")?,
+            end_ns: opt_u64(p, "end_ns"),
+            outcome: want_str(p, "outcome")?,
+            error: opt_str(p, "error"),
+            attrs,
+        })
+    }
+}
+
+/// `trace_get` response: the span tree, spans in open order (the
+/// first is the root).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceGetResponse {
+    pub trace: TraceId,
+    pub spans: Vec<SpanBody>,
+    /// Spans dropped past the per-trace cap.
+    pub truncated: u64,
+}
+
+impl TraceGetResponse {
+    pub fn from_snapshot(s: &TraceSnapshot) -> TraceGetResponse {
+        TraceGetResponse {
+            trace: s.trace,
+            spans: s.spans.iter().map(SpanBody::from_record).collect(),
+            truncated: s.truncated,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", Json::from(self.trace.to_string())),
+            (
+                "spans",
+                Json::Arr(
+                    self.spans.iter().map(|s| s.to_json()).collect(),
+                ),
+            ),
+            ("truncated", Json::from(self.truncated)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<TraceGetResponse, ApiError> {
+        let spans = p
+            .get("spans")
+            .as_arr()
+            .ok_or_else(|| {
+                ApiError::bad_request("missing array field 'spans'")
+            })?
+            .iter()
+            .map(SpanBody::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(TraceGetResponse {
+            trace: want_id(p, "trace", TraceId::parse)?,
+            spans,
+            truncated: want_u64(p, "truncated")?,
+        })
+    }
+}
+
 // ============================================================ agent
 
 #[derive(Debug, Clone, PartialEq)]
@@ -2871,6 +3327,93 @@ mod tests {
             assert_eq!(Method::parse(m.name()), Some(m));
         }
         assert_eq!(Method::parse("reboot_world"), None);
+    }
+
+    #[test]
+    fn metrics_export_bodies_roundtrip() {
+        let reg = crate::metrics::Registry::new();
+        reg.counter("hv.pr").add(4);
+        reg.gauge("sched.queue.depth").set(-1);
+        reg.histogram("sched.wait").record_us(1500);
+        let resp =
+            MetricsExportResponse::from_snapshot(&reg.snapshot());
+        let rt =
+            MetricsExportResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(rt, resp);
+        assert_eq!(rt.counters, vec![("hv.pr".to_string(), 4)]);
+        assert_eq!(
+            rt.gauges,
+            vec![("sched.queue.depth".to_string(), -1)]
+        );
+        let (name, h) = &rt.histograms[0];
+        assert_eq!(name, "sched.wait");
+        assert_eq!(h.count, 1);
+        assert_eq!(h.bounds_us.len(), h.buckets.len());
+        assert!(!h.bounds_us.is_empty());
+        // Mismatched bounds/buckets arity is rejected.
+        let mut bad = h.to_json();
+        bad.set("buckets", Json::Arr(vec![Json::from(1u64)]));
+        assert!(HistogramBody::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn trace_get_bodies_roundtrip() {
+        let req = TraceGetRequest::by_trace(TraceId(5));
+        assert_eq!(
+            TraceGetRequest::from_json(&req.to_json()).unwrap(),
+            req
+        );
+        let req = TraceGetRequest::by_job(JobId(2));
+        assert_eq!(
+            TraceGetRequest::from_json(&req.to_json()).unwrap(),
+            req
+        );
+        // Exactly one selector: neither and both are rejected.
+        assert!(
+            TraceGetRequest::from_json(&Json::obj(vec![])).is_err()
+        );
+        let both = Json::obj(vec![
+            ("trace", Json::from("trace-1")),
+            ("job", Json::from("job-1")),
+        ]);
+        assert!(TraceGetRequest::from_json(&both).is_err());
+
+        let resp = TraceGetResponse {
+            trace: TraceId(5),
+            spans: vec![
+                SpanBody {
+                    span: SpanId(0),
+                    parent: None,
+                    name: "rpc.program_full".into(),
+                    start_ns: 0,
+                    end_ns: Some(3_000_000),
+                    outcome: "ok".into(),
+                    error: None,
+                    attrs: vec![(
+                        "method".into(),
+                        "program_full".into(),
+                    )],
+                },
+                SpanBody {
+                    span: SpanId(1),
+                    parent: Some(SpanId(0)),
+                    name: "fpga.pr".into(),
+                    start_ns: 1_000_000,
+                    end_ns: None,
+                    outcome: "open".into(),
+                    error: None,
+                    attrs: vec![],
+                },
+            ],
+            truncated: 0,
+        };
+        let rt =
+            TraceGetResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(rt, resp);
+        assert!(
+            (rt.spans[0].duration_ms() - 3.0).abs() < 1e-9
+        );
+        assert_eq!(rt.spans[1].duration_ms(), 0.0);
     }
 
     #[test]
@@ -2960,6 +3503,7 @@ mod tests {
                 pct: 50.0,
                 state: "running".into(),
                 result: None,
+                trace: Some(TraceId(9)),
             },
             Event::JobProgress {
                 job: JobId(3),
@@ -2972,6 +3516,7 @@ mod tests {
                     "state",
                     Json::from("done"),
                 )])),
+                trace: None,
             },
             Event::LeasePlacementChanged {
                 alloc: AllocationId(1),
@@ -3016,6 +3561,7 @@ mod tests {
             pct: 10.0,
             state: "running".into(),
             result: None,
+            trace: None,
         };
         let region = Event::RegionTransition {
             fpga: FpgaId(1),

@@ -34,7 +34,7 @@ use super::proto::{
 use crate::config::ServiceModel;
 use crate::sched::RequestClass;
 use crate::util::ids::{
-    AllocationId, FpgaId, JobId, LeaseToken, UserId,
+    AllocationId, FpgaId, JobId, LeaseToken, TraceId, UserId,
 };
 use crate::util::json::Json;
 
@@ -56,6 +56,10 @@ pub struct Client {
     lease_tokens: BTreeMap<AllocationId, LeaseToken>,
     /// job → owner token, learned from submit responses.
     job_tokens: BTreeMap<JobId, LeaseToken>,
+    /// Trace id stamped on every outgoing request, so a multi-RPC
+    /// workflow (alloc → program → stream) records as one connected
+    /// trace in the server's flight recorder.
+    trace_context: Option<TraceId>,
 }
 
 impl Client {
@@ -73,7 +77,26 @@ impl Client {
             next_id: 0,
             lease_tokens: BTreeMap::new(),
             job_tokens: BTreeMap::new(),
+            trace_context: None,
         })
+    }
+
+    /// Mint a fresh trace id and stamp it on every request from here
+    /// on; returns the id so the caller can `trace_get` it later.
+    pub fn start_trace(&mut self) -> TraceId {
+        let trace = TraceId::mint();
+        self.trace_context = Some(trace);
+        trace
+    }
+
+    /// Set (or clear, with `None`) the trace id stamped on requests.
+    pub fn set_trace_context(&mut self, trace: Option<TraceId>) {
+        self.trace_context = trace;
+    }
+
+    /// The trace id currently stamped on outgoing requests.
+    pub fn trace_context(&self) -> Option<TraceId> {
+        self.trace_context
     }
 
     /// The cached capability token for an allocation, if any.
@@ -118,7 +141,8 @@ impl Client {
     ) -> Result<Response, ApiError> {
         self.next_id += 1;
         let id = self.next_id;
-        let req = Request::v2(method, params, id);
+        let req = Request::v2(method, params, id)
+            .with_trace(self.trace_context);
         write_frame(&mut self.stream, &req.to_json())
             .map_err(|e| ApiError::internal(format!("io: {e}")))?;
         let frame = read_frame(&mut self.stream)
@@ -533,6 +557,7 @@ impl Client {
             header,
             last_seq: 0,
             done: false,
+            stats: None,
         })
     }
 
@@ -626,6 +651,30 @@ impl Client {
         CancelReservationResponse::from_json(&body)
     }
 
+    // --------------------------------------- typed: observability
+
+    /// Dump every registered instrument (counters, gauges, histograms
+    /// with bucket boundaries).
+    pub fn metrics_export(
+        &mut self,
+    ) -> Result<MetricsExportResponse, ApiError> {
+        let body = self.call_v2(
+            Method::MetricsExport.name(),
+            MetricsExportRequest.to_json(),
+        )?;
+        MetricsExportResponse::from_json(&body)
+    }
+
+    /// Fetch a span tree from the server's flight recorder.
+    pub fn trace_get(
+        &mut self,
+        req: &TraceGetRequest,
+    ) -> Result<TraceGetResponse, ApiError> {
+        let body =
+            self.call_v2(Method::TraceGet.name(), req.to_json())?;
+        TraceGetResponse::from_json(&body)
+    }
+
     // ------------------------------------------------- typed: agent
 
     pub fn agent_hello(
@@ -668,12 +717,21 @@ pub struct EventStream<'a> {
     header: SubscribeResponse,
     last_seq: u64,
     done: bool,
+    /// Backpressure stats from the terminal frame (`delivered`,
+    /// `dropped`, `queue_high_water`), once the stream ended.
+    stats: Option<Json>,
 }
 
 impl EventStream<'_> {
     /// The stream header (subscription id + effective bounds).
     pub fn header(&self) -> &SubscribeResponse {
         &self.header
+    }
+
+    /// The terminal frame's per-subscriber delivery stats; `None`
+    /// until the stream has ended (or on old servers).
+    pub fn stats(&self) -> Option<&Json> {
+        self.stats.as_ref()
     }
 
     fn read_one(&mut self) -> Result<Option<EventFrame>, ApiError> {
@@ -693,6 +751,7 @@ impl EventStream<'_> {
         self.last_seq = sf.seq;
         if sf.end {
             self.done = true;
+            self.stats = sf.stats;
             return match sf.error {
                 Some(e) => Err(e),
                 None => Ok(None),

@@ -68,6 +68,10 @@ pub struct Subscription {
     ready: Condvar,
     closed: AtomicBool,
     dropped: AtomicU64,
+    /// Deepest the queue has ever been (backpressure telemetry).
+    high_water: AtomicU64,
+    /// Events handed to this subscriber's queue so far.
+    delivered: AtomicU64,
 }
 
 impl Subscription {
@@ -78,6 +82,17 @@ impl Subscription {
     /// Events lost to the bounded queue so far.
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Deepest this subscription's queue has ever been.
+    pub fn high_water(&self) -> u64 {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Events enqueued for this subscriber so far (whether or not
+    /// the client drained them before the stream closed).
+    pub fn delivered(&self) -> u64 {
+        self.delivered.load(Ordering::Relaxed)
     }
 
     /// Does this subscription's scope admit an event published with
@@ -101,6 +116,8 @@ impl Subscription {
             evicted = true;
         }
         q.push_back(event);
+        self.high_water.fetch_max(q.len() as u64, Ordering::Relaxed);
+        self.delivered.fetch_add(1, Ordering::Relaxed);
         drop(q);
         self.ready.notify_all();
         evicted
@@ -210,6 +227,8 @@ impl EventBus {
             ready: Condvar::new(),
             closed: AtomicBool::new(false),
             dropped: AtomicU64::new(0),
+            high_water: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
         });
         st.subs.insert(sub.id, Arc::clone(&sub));
         sub
@@ -265,18 +284,22 @@ impl EventBus {
         };
         let mut delivered = 0u64;
         let mut dropped = 0u64;
+        let mut high_water = 0u64;
         for sub in subs {
             if sub.scope_admits(scope) && sub.filter.matches(&event) {
                 if sub.push(event.clone()) {
                     dropped += 1;
                 }
                 delivered += 1;
+                high_water = high_water.max(sub.high_water());
             }
         }
         if let Some(m) = self.metrics.lock().unwrap().as_ref() {
             m.counter("events.published").inc();
             m.counter("events.delivered").add(delivered);
             m.counter("events.dropped").add(dropped);
+            m.gauge("events.queue.high_water")
+                .fetch_max(high_water as i64);
         }
     }
 }
@@ -295,6 +318,7 @@ mod tests {
             pct: 10.0,
             state: "running".into(),
             result: None,
+            trace: None,
         }
     }
 
@@ -378,6 +402,34 @@ mod tests {
             sub.next(Duration::from_secs(1)),
             Some(Event::QueueDepth { depth: 5 })
         );
+        // Backpressure stats: the queue pegged at its cap, and the
+        // bus-level high-water gauge observed it.
+        assert_eq!(sub.high_water(), SUBSCRIPTION_QUEUE_CAP as u64);
+        assert_eq!(
+            sub.delivered(),
+            SUBSCRIPTION_QUEUE_CAP as u64 + 5
+        );
+        assert_eq!(
+            metrics.gauge("events.queue.high_water").get(),
+            SUBSCRIPTION_QUEUE_CAP as i64
+        );
+    }
+
+    #[test]
+    fn high_water_tracks_peak_not_current_depth() {
+        let bus = EventBus::new();
+        let sub = bus.subscribe(SubscriptionFilter::all(), None, None);
+        for i in 0..3u64 {
+            bus.publish(Event::QueueDepth { depth: i }, Scope::Public);
+        }
+        bus.flush();
+        // Drain fully; the peak sticks at 3.
+        while sub.next(Duration::from_millis(10)).is_some() {}
+        assert_eq!(sub.high_water(), 3);
+        bus.publish(Event::QueueDepth { depth: 9 }, Scope::Public);
+        bus.flush();
+        assert_eq!(sub.high_water(), 3, "peak must not regress");
+        assert_eq!(sub.dropped(), 0);
     }
 
     #[test]

@@ -41,8 +41,9 @@ use std::time::{Duration, Instant};
 use super::api::{ApiError, ErrorCode, Event, JobBody};
 use super::events::{EventBus, Scope};
 use crate::metrics::Registry;
-use crate::util::ids::{IdGen, JobId, LeaseToken};
+use crate::util::ids::{IdGen, JobId, LeaseToken, TraceId};
 use crate::util::json::Json;
+use crate::util::trace;
 
 /// Terminal jobs kept queryable after completion.
 pub const RETAINED_TERMINAL: usize = 256;
@@ -95,6 +96,9 @@ pub struct JobRecord {
     /// operations). `None` = unowned — no token gate applies and its
     /// progress events are public.
     pub owner: Option<LeaseToken>,
+    /// Trace the submitting RPC ran under, if any. Progress events
+    /// and `trace_get { job }` lookups correlate through this.
+    pub trace: Option<TraceId>,
 }
 
 impl JobRecord {
@@ -111,6 +115,7 @@ impl JobRecord {
             state: self.state.name().to_string(),
             result,
             error,
+            trace: self.trace,
         }
     }
 }
@@ -218,6 +223,10 @@ impl JobRegistry {
             + 'static,
     ) -> JobId {
         let id = JobId(self.ids.next());
+        // Capture the submitting thread's trace context: the worker
+        // adopts it so the async job stays in the submitter's trace.
+        let ctx = trace::current();
+        let trace = ctx.as_ref().map(|c| c.trace());
         {
             let mut st = self.state.lock().unwrap();
             st.records.insert(
@@ -228,6 +237,7 @@ impl JobRegistry {
                     state: JobState::Running,
                     submitted_ns,
                     owner,
+                    trace,
                 },
             );
         }
@@ -241,14 +251,21 @@ impl JobRegistry {
                 pct: 0.0,
                 state: "running".to_string(),
                 result: None,
+                trace,
             },
         );
+        let method_name = method.to_string();
         std::thread::spawn(move || {
+            let job_span =
+                ctx.map(|c| c.adopt(&format!("job.{method_name}")));
             let reporter = ProgressReporter {
                 registry: Arc::clone(&self),
                 id,
             };
             let result = work(&reporter);
+            if let (Some(s), Err(e)) = (&job_span, &result) {
+                s.fail(&e.message);
+            }
             self.finish(id, result);
         });
         id
@@ -267,9 +284,9 @@ impl JobRegistry {
         pct: f64,
     ) {
         let st = self.state.lock().unwrap();
-        let (method, owner) = match st.records.get(&id) {
+        let (method, owner, trace) = match st.records.get(&id) {
             Some(rec) if rec.state == JobState::Running => {
-                (rec.method.clone(), rec.owner)
+                (rec.method.clone(), rec.owner, rec.trace)
             }
             // Terminal or unknown: the terminal frame already told
             // the full story; stay silent.
@@ -285,6 +302,7 @@ impl JobRegistry {
                 pct: pct.clamp(0.0, 100.0),
                 state: "running".to_string(),
                 result: None,
+                trace,
             },
         );
         drop(st);
@@ -335,6 +353,7 @@ impl JobRegistry {
                 pct: 100.0,
                 state: rec.state.name().to_string(),
                 result: Some(body.to_json()),
+                trace: rec.trace,
             },
         );
         drop(st);

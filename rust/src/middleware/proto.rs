@@ -18,6 +18,7 @@
 use std::io::{Read, Write};
 
 use super::api::ApiError;
+use crate::util::ids::TraceId;
 use crate::util::json::Json;
 
 /// Max frame we accept (a full bitstream upload fits comfortably).
@@ -33,6 +34,11 @@ pub struct Request {
     /// Protocol the client speaks for this request; absent = 1,
     /// which is below the supported window and rejected.
     pub proto: Option<u32>,
+    /// Flight-recorder correlation: when set, the server parents this
+    /// request's root span under the named trace (creating it on
+    /// first sight), so one client-minted id stitches a multi-RPC
+    /// operation into a single span tree.
+    pub trace: Option<TraceId>,
 }
 
 impl Request {
@@ -43,7 +49,14 @@ impl Request {
             params,
             id: Some(id),
             proto: Some(super::api::PROTO_MAX),
+            trace: None,
         }
+    }
+
+    /// The same request carrying a trace correlation id.
+    pub fn with_trace(mut self, trace: Option<TraceId>) -> Request {
+        self.trace = trace;
+        self
     }
 
     pub fn to_json(&self) -> Json {
@@ -57,15 +70,27 @@ impl Request {
         if let Some(p) = self.proto {
             j.set("proto", Json::from(u64::from(p)));
         }
+        if let Some(t) = self.trace {
+            j.set("trace", Json::from(t.to_string().as_str()));
+        }
         j
     }
 
     pub fn from_json(v: &Json) -> Result<Request, String> {
+        let trace = match v.get("trace") {
+            Json::Null => None,
+            t => Some(
+                t.as_str()
+                    .and_then(TraceId::parse)
+                    .ok_or_else(|| "invalid 'trace' field".to_string())?,
+            ),
+        };
         Ok(Request {
             method: v.str_field("method")?.to_string(),
             params: v.get("params").clone(),
             id: v.get("id").as_u64(),
             proto: v.get("proto").as_u64().map(|p| p as u32),
+            trace,
         })
     }
 
@@ -213,6 +238,11 @@ pub struct StreamFrame {
     pub end: bool,
     /// Why the stream ended, when it ended abnormally.
     pub error: Option<ApiError>,
+    /// Terminal-frame side data: per-subscriber delivery stats
+    /// (`delivered`, `dropped`, `queue_high_water`) so a client
+    /// learns how lossy its own subscription was, not just the
+    /// process-global counters.
+    pub stats: Option<Json>,
 }
 
 impl StreamFrame {
@@ -222,6 +252,7 @@ impl StreamFrame {
             event: Some(event),
             end: false,
             error: None,
+            stats: None,
         }
     }
 
@@ -231,6 +262,22 @@ impl StreamFrame {
             event: None,
             end: true,
             error,
+            stats: None,
+        }
+    }
+
+    /// A terminal frame carrying per-subscriber delivery stats.
+    pub fn terminal_with_stats(
+        seq: u64,
+        error: Option<ApiError>,
+        stats: Json,
+    ) -> StreamFrame {
+        StreamFrame {
+            seq,
+            event: None,
+            end: true,
+            error,
+            stats: Some(stats),
         }
     }
 
@@ -245,6 +292,9 @@ impl StreamFrame {
         if let Some(e) = &self.error {
             j.set("error", e.to_json());
         }
+        if let Some(s) = &self.stats {
+            j.set("stats", s.clone());
+        }
         j
     }
 
@@ -257,6 +307,10 @@ impl StreamFrame {
             Json::Null => None,
             e => Some(e.clone()),
         };
+        let stats = match v.get("stats") {
+            Json::Null => None,
+            s => Some(s.clone()),
+        };
         Ok(StreamFrame {
             seq: v
                 .get("seq")
@@ -265,6 +319,7 @@ impl StreamFrame {
             event,
             end: v.get("end").as_bool().unwrap_or(false),
             error,
+            stats,
         })
     }
 }
@@ -350,6 +405,7 @@ mod tests {
             params: Json::obj(vec![]),
             id: None,
             proto: None,
+            trace: None,
         };
         let err = req.negotiate_proto().unwrap_err();
         assert_eq!(err.code, ErrorCode::ProtocolMismatch);
@@ -367,6 +423,7 @@ mod tests {
                 params: Json::obj(vec![]),
                 id: Some(1),
                 proto: Some(p),
+                trace: None,
             };
             assert_eq!(req.negotiate_proto().unwrap(), p);
         }
@@ -434,7 +491,32 @@ mod tests {
         let rt = StreamFrame::from_json(&term.to_json()).unwrap();
         assert!(rt.end);
         assert!(rt.event.is_none());
+        assert!(rt.stats.is_none());
+        let term = StreamFrame::terminal_with_stats(
+            3,
+            None,
+            Json::obj(vec![("dropped", Json::from(2u64))]),
+        );
+        let rt = StreamFrame::from_json(&term.to_json()).unwrap();
+        assert_eq!(rt, term);
+        assert_eq!(rt.stats.unwrap().get("dropped").as_u64(), Some(2));
         assert!(StreamFrame::from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn request_trace_field_roundtrips() {
+        let t = TraceId::mint();
+        let req = Request::v2("status", Json::obj(vec![]), 1)
+            .with_trace(Some(t));
+        let j = req.to_json();
+        assert_eq!(j.get("trace").as_str(), Some(t.to_string().as_str()));
+        let back = Request::from_json(&j).unwrap();
+        assert_eq!(back.trace, Some(t));
+        assert_eq!(back, req);
+        // Malformed trace ids are rejected, not dropped.
+        let mut bad = req.to_json();
+        bad.set("trace", Json::from("span-7"));
+        assert!(Request::from_json(&bad).is_err());
     }
 
     #[test]

@@ -55,6 +55,7 @@ use crate::sched::{
 use crate::util::clock::VirtualTime;
 use crate::util::ids::{AllocationId, LeaseToken, NodeId};
 use crate::util::json::Json;
+use crate::util::trace::Tracer;
 
 /// The management server (owns its accept thread).
 pub struct ManagementServer {
@@ -72,6 +73,8 @@ struct ServerInner {
     jobs: Arc<JobRegistry>,
     /// The protocol-3 server-push event bus.
     bus: Arc<EventBus>,
+    /// The flight recorder: every RPC opens a root span here.
+    tracer: Arc<Tracer>,
     rpc_overhead_ms: f64,
     /// Prebuilt relocatable user-core bitfiles ("the user uploads a
     /// bitfile" — kept server-side so the CLI can reference cores by
@@ -96,11 +99,13 @@ impl ManagementServer {
         jobs.set_metrics(Arc::clone(&hv.metrics));
         jobs.set_bus(Arc::clone(&bus));
         wire_event_sources(&hv, &sched, &bus);
+        let tracer = Tracer::new(Arc::clone(&hv.clock));
         let inner = Arc::new(ServerInner {
             hv,
             sched,
             jobs,
             bus,
+            tracer,
             rpc_overhead_ms,
             cores: build_core_library(),
             agents: Mutex::new(BTreeMap::new()),
@@ -155,6 +160,11 @@ impl ManagementServer {
     /// The protocol-3 event bus behind this server.
     pub fn bus(&self) -> &Arc<EventBus> {
         &self.inner.bus
+    }
+
+    /// The flight recorder behind this server (benches toggle it).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.inner.tracer
     }
 
     pub fn shutdown(&mut self) {
@@ -290,7 +300,11 @@ fn serve_conn(
                         // Multi-frame response: the handler writes the
                         // header + event frames + terminal frame
                         // itself, then the connection returns to
-                        // request/response mode.
+                        // request/response mode. The root span covers
+                        // the whole subscription window.
+                        let _root = inner
+                            .tracer
+                            .root("rpc.subscribe", req.trace);
                         serve_subscription(
                             &mut stream,
                             &inner,
@@ -301,11 +315,22 @@ fn serve_conn(
                         continue;
                     }
                     Ok(_proto) => {
+                        // Root span per RPC: the client's `trace`
+                        // field (if any) stitches this request into an
+                        // existing trace; otherwise a fresh trace
+                        // starts here.
+                        let root = inner.tracer.root(
+                            &format!("rpc.{}", req.method),
+                            req.trace,
+                        );
                         let ctx = Ctx { inner: &inner };
-                        respond(
-                            req.id,
-                            dispatch(&ctx, &req.method, &req.params),
-                        )
+                        let result =
+                            dispatch(&ctx, &req.method, &req.params);
+                        if let Err(e) = &result {
+                            root.fail(&e.message);
+                        }
+                        drop(root);
+                        respond(req.id, result)
                     }
                 }
             }
@@ -396,7 +421,19 @@ fn serve_subscription(
                 None => break,
             }
         }
-        write_frame(stream, &StreamFrame::terminal(seq + 1, None).to_json())
+        // Terminal frame carries the subscription's backpressure
+        // stats: what was delivered, what the bounded queue dropped,
+        // and how deep it ever got.
+        let stats = Json::obj(vec![
+            ("delivered", Json::from(sub.delivered())),
+            ("dropped", Json::from(sub.dropped())),
+            ("queue_high_water", Json::from(sub.high_water())),
+        ]);
+        write_frame(
+            stream,
+            &StreamFrame::terminal_with_stats(seq + 1, None, stats)
+                .to_json(),
+        )
     })();
     inner.bus.unsubscribe(sub.id());
     result
@@ -448,6 +485,8 @@ const HANDLERS: &[(Method, Handler)] = &[
     (Method::LifecycleLog, h_lifecycle_log),
     (Method::SchedPolicyGet, h_sched_policy_get),
     (Method::SchedPolicySet, h_sched_policy_set),
+    (Method::MetricsExport, h_metrics_export),
+    (Method::TraceGet, h_trace_get),
 ];
 
 /// Whether the management server serves `method` (dispatch-table
@@ -1012,6 +1051,41 @@ fn h_sched_policy_set(
         policy: policy.name().to_string(),
     }
     .to_json())
+}
+
+fn h_metrics_export(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = MetricsExportRequest::from_json(p)?;
+    // Freshen the derived gauges so the export is a consistent view,
+    // like `monitor` does before reading them.
+    ctx.inner.hv.refresh_region_gauges();
+    let snap = ctx.inner.hv.metrics.snapshot();
+    Ok(MetricsExportResponse::from_snapshot(&snap).to_json())
+}
+
+fn h_trace_get(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let req = TraceGetRequest::from_json(p)?;
+    let trace = match (req.trace, req.job) {
+        (Some(t), _) => t,
+        (None, Some(job)) => {
+            // Resolve through the job registry: the record carries the
+            // submitting RPC's trace id.
+            let rec = ctx.inner.jobs.status(job)?;
+            rec.trace.ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{job} carries no trace (tracing was off at submit)"
+                ))
+            })?
+        }
+        // from_json enforces exactly one selector.
+        (None, None) => unreachable!("validated by from_json"),
+    };
+    let snap = ctx.inner.tracer.snapshot(trace).ok_or_else(|| {
+        ApiError::bad_request(format!(
+            "unknown trace {trace} (never recorded, or evicted from \
+             the flight recorder)"
+        ))
+    })?;
+    Ok(TraceGetResponse::from_snapshot(&snap).to_json())
 }
 
 fn h_job_status(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {

@@ -27,6 +27,7 @@ use crate::util::clock::VirtualTime;
 use crate::util::ids::{
     AllocationId, FpgaId, LeaseToken, NodeId, UserId, VfpgaId, VmId,
 };
+use crate::util::trace;
 
 use super::{GrantTarget, RequestClass, SchedError, Scheduler};
 
@@ -297,6 +298,8 @@ impl Lease {
         let alloc = *self.members.get(idx).ok_or_else(|| {
             HypervisorError::Db(format!("lease has no member {idx}"))
         })?;
+        let sp = trace::span("rc2f.stream");
+        sp.attr("alloc", alloc);
         let hv = self.sched.hv();
         let (_pin, vfpga) = hv.pin_current(alloc, self.tenant)?;
         let fpga = {
@@ -309,9 +312,13 @@ impl Lease {
         let session = api
             .open_session(self.tenant, vfpga)
             .map_err(|e| HypervisorError::Db(e.to_string()))?;
-        session
+        let out = session
             .stream(cfg)
-            .map_err(|e| HypervisorError::Db(e.to_string()))
+            .map_err(|e| HypervisorError::Db(e.to_string()));
+        if let Err(e) = &out {
+            sp.fail(e);
+        }
+        out
     }
 
     /// Stream through the primary member's device link directly (the
@@ -323,12 +330,19 @@ impl Lease {
         &self,
         cfg: &StreamConfig,
     ) -> Result<StreamOutcome, HypervisorError> {
+        let sp = trace::span("rc2f.stream");
+        sp.attr("alloc", self.alloc());
         let hv = self.sched.hv();
         let (_pin, vfpga) =
             hv.pin_current(self.alloc(), self.tenant)?;
-        hv.stream_runner_for(vfpga)?
+        let out = hv
+            .stream_runner_for(vfpga)?
             .run(cfg)
-            .map_err(HypervisorError::Db)
+            .map_err(HypervisorError::Db);
+        if let Err(e) = &out {
+            sp.fail(e);
+        }
+        out
     }
 
     /// Return every member grant to the scheduler.

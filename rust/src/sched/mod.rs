@@ -73,6 +73,7 @@ use crate::util::ids::{
     UserId, VfpgaId, VmId,
 };
 use crate::util::json::Json;
+use crate::util::trace;
 
 pub use accounting::{TenantUsage, UsageLedger};
 pub use lease::{
@@ -705,6 +706,9 @@ impl Scheduler {
         self: &Arc<Self>,
         req: &AdmissionRequest,
     ) -> Result<Lease, SchedError> {
+        let sp = trace::span("sched.admit");
+        sp.attr("model", req.model.name());
+        sp.attr("regions", req.regions.get());
         let spec = AdmitSpec::of_request(
             req,
             req.class == RequestClass::Interactive,
@@ -734,6 +738,9 @@ impl Scheduler {
         drop(st);
         self.granted.notify_all();
         self.write_persisted(pending);
+        if let Err(e) = &lease {
+            sp.fail(format!("{e:?}"));
+        }
         lease
     }
 
@@ -748,6 +755,9 @@ impl Scheduler {
         if req.model == ServiceModel::RSaaS {
             return self.admit(req);
         }
+        let sp = trace::span("sched.admit");
+        sp.attr("model", req.model.name());
+        sp.attr("regions", req.regions.get());
         let ticket = {
             let mut st = self.state.lock().unwrap();
             self.reap_locked(&mut st);
@@ -775,7 +785,11 @@ impl Scheduler {
             }
             self.enqueue_locked(&mut st, req)
         };
-        self.wait_ticket(ticket)
+        let result = self.wait_ticket(ticket);
+        if let Err(e) = &result {
+            sp.fail(format!("{e:?}"));
+        }
+        result
     }
 
     /// Enqueue without waiting; pair with [`Scheduler::wait_ticket`]
@@ -914,6 +928,7 @@ impl Scheduler {
         self: &Arc<Self>,
         ticket: TicketId,
     ) -> Result<Lease, SchedError> {
+        let _sp = trace::span("sched.queue_wait");
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(result) = st.ready.remove(&ticket) {
@@ -1334,10 +1349,15 @@ impl Scheduler {
         );
         // The whole gang counts against the concurrency quota at
         // once — N regions admitted atomically are N units.
-        if let Err(d) =
-            st.quotas.admissible(spec.tenant, spec.regions, used_s)
         {
-            return Err(self.deny(d));
+            let q = trace::span("sched.quota");
+            if let Err(d) =
+                st.quotas.admissible(spec.tenant, spec.regions, used_s)
+            {
+                let err = self.deny(d);
+                q.fail(format!("{err:?}"));
+                return Err(err);
+            }
         }
         let raw_free = self.raw_free(spec.model, spec.board);
         let withheld =
@@ -1595,6 +1615,7 @@ impl Scheduler {
         model: ServiceModel,
         class: RequestClass,
     ) -> bool {
+        let _sp = trace::span("sched.preempt");
         let policy = self.preempt_policy();
         let candidates: Vec<VictimInfo> = st
             .grants

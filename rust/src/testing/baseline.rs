@@ -1,0 +1,217 @@
+//! Machine-readable bench baselines (`BENCH_baseline.json`).
+//!
+//! Bench binaries append named series of numeric stats to a shared
+//! JSON file so performance changes diff as data, not prose. Opt in
+//! per run with `BENCH_BASELINE_OUT=<path>`; each bench replaces
+//! only the series it owns, so the baseline benches can be run in
+//! any order against the same file:
+//!
+//! ```text
+//! BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench hotpath
+//! BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench admission_wait
+//! BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench event_fanout
+//! ```
+//!
+//! The object keys sort deterministically (`Json::Obj` is a
+//! `BTreeMap`), so re-running a bench yields a minimal diff.
+
+use std::path::{Path, PathBuf};
+
+use crate::testing::BenchResult;
+use crate::util::json::Json;
+
+/// Bump when the series shape changes incompatibly.
+pub const FORMAT: u64 = 1;
+
+/// An accumulating `{ format, series: { name: stats } }` report.
+pub struct BaselineReport {
+    series: Vec<(String, Json)>,
+}
+
+impl Default for BaselineReport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BaselineReport {
+    pub fn new() -> BaselineReport {
+        BaselineReport { series: Vec::new() }
+    }
+
+    /// Parse an existing report so this run merges into it; a
+    /// missing or unreadable file starts fresh (baselines are
+    /// regenerable, never load-bearing).
+    pub fn load_or_new(path: &Path) -> BaselineReport {
+        let mut report = BaselineReport::new();
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return report;
+        };
+        let Ok(root) = Json::parse(&text) else {
+            return report;
+        };
+        if let Some(map) = root.get("series").as_obj() {
+            for (k, v) in map {
+                report.series.push((k.clone(), v.clone()));
+            }
+        }
+        report
+    }
+
+    /// Insert or replace one series.
+    pub fn set(&mut self, name: &str, value: Json) {
+        match self.series.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v = value,
+            None => self.series.push((name.to_string(), value)),
+        }
+    }
+
+    /// Record a wall-time [`BenchResult`] under `name`.
+    pub fn record(&mut self, name: &str, r: &BenchResult) {
+        self.set(name, wall_stats(r));
+    }
+
+    /// Record a bare scalar (a ratio, a percentage, a latency).
+    pub fn record_scalar(&mut self, name: &str, value: f64) {
+        self.set(name, Json::from(round3(value)));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series = Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("format", Json::from(FORMAT)),
+            ("series", series),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+/// `{ kind: "wall_us", iters, mean_us, median_us, min_us, max_us }`.
+pub fn wall_stats(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("kind", Json::from("wall_us")),
+        ("iters", Json::from(r.iterations as u64)),
+        ("mean_us", Json::from(round3(r.mean_s * 1e6))),
+        ("median_us", Json::from(round3(r.median_s * 1e6))),
+        ("min_us", Json::from(round3(r.min_s * 1e6))),
+        ("max_us", Json::from(round3(r.max_s * 1e6))),
+    ])
+}
+
+/// Percent by which `test`'s median is slower than `base`'s
+/// (negative when it is faster).
+pub fn overhead_pct(base: &BenchResult, test: &BenchResult) -> f64 {
+    if base.median_s <= 0.0 {
+        return 0.0;
+    }
+    (test.median_s / base.median_s - 1.0) * 100.0
+}
+
+/// The opt-in output path (`BENCH_BASELINE_OUT`), if set.
+pub fn out_path() -> Option<PathBuf> {
+    std::env::var_os("BENCH_BASELINE_OUT").map(PathBuf::from)
+}
+
+fn round3(v: f64) -> f64 {
+    (v * 1e3).round() / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(median_s: f64) -> BenchResult {
+        BenchResult {
+            name: "x".into(),
+            iterations: 10,
+            mean_s: median_s,
+            median_s,
+            min_s: median_s * 0.9,
+            max_s: median_s * 1.1,
+        }
+    }
+
+    #[test]
+    fn report_shape() {
+        let mut rep = BaselineReport::new();
+        rep.record("hotpath.rpc_hello", &result(0.0005));
+        rep.record_scalar("hotpath.tracing_overhead_pct", 2.123456);
+        let j = rep.to_json();
+        assert_eq!(j.get("format").as_u64(), Some(FORMAT));
+        let s = j.get("series");
+        assert_eq!(
+            s.get("hotpath.rpc_hello").get("kind").as_str(),
+            Some("wall_us")
+        );
+        assert_eq!(
+            s.get("hotpath.rpc_hello").get("median_us").as_f64(),
+            Some(500.0)
+        );
+        // Scalars are rounded to 3 decimals for diff stability.
+        assert_eq!(
+            s.get("hotpath.tracing_overhead_pct").as_f64(),
+            Some(2.123)
+        );
+    }
+
+    #[test]
+    fn set_replaces_in_place() {
+        let mut rep = BaselineReport::new();
+        rep.record_scalar("a", 1.0);
+        rep.record_scalar("b", 2.0);
+        rep.record_scalar("a", 3.0);
+        let j = rep.to_json();
+        assert_eq!(j.get("series").get("a").as_f64(), Some(3.0));
+        assert_eq!(j.get("series").get("b").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn overhead_math() {
+        let base = result(0.001);
+        let mut t = result(0.00104);
+        assert!((overhead_pct(&base, &t) - 4.0).abs() < 1e-9);
+        t.median_s = 0.00098;
+        assert!(overhead_pct(&base, &t) < 0.0);
+    }
+
+    #[test]
+    fn save_and_merge_round_trip() {
+        let path = std::env::temp_dir().join(format!(
+            "rc3e_baseline_{}.json",
+            std::process::id()
+        ));
+        let mut rep = BaselineReport::new();
+        rep.record("hotpath.fifo", &result(0.0001));
+        rep.save(&path).unwrap();
+        // A second bench run merges into the same file.
+        let mut rep2 = BaselineReport::load_or_new(&path);
+        rep2.record("event_fanout.x16", &result(0.002));
+        rep2.save(&path).unwrap();
+        let merged = BaselineReport::load_or_new(&path);
+        let j = merged.to_json();
+        assert!(j.get("series").get("hotpath.fifo").as_obj().is_some());
+        assert!(j
+            .get("series")
+            .get("event_fanout.x16")
+            .as_obj()
+            .is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_starts_fresh() {
+        let rep = BaselineReport::load_or_new(Path::new(
+            "/nonexistent/rc3e/baseline.json",
+        ));
+        assert!(rep.to_json().get("series").as_obj().unwrap().is_empty());
+    }
+}

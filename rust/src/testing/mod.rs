@@ -2,6 +2,7 @@
 //! mini-framework (proptest is unavailable offline), a bench harness
 //! (criterion substitute) and failure-injection hooks.
 
+pub mod baseline;
 pub mod bench;
 pub mod failpoint;
 pub mod prop;

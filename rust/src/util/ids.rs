@@ -78,6 +78,32 @@ typed_id!(
     ReservationId,
     "rsv"
 );
+typed_id!(
+    /// A request trace in the flight recorder (`util::trace`).
+    TraceId,
+    "trace"
+);
+typed_id!(
+    /// A single span within a trace.
+    SpanId,
+    "span"
+);
+
+impl TraceId {
+    /// Mint a client-side trace id from OS entropy mixed with a
+    /// process-wide counter. Server-minted ids are small sequential
+    /// numbers; client-minted ones live in the full 64-bit space so
+    /// independent clients joining the same flight recorder do not
+    /// collide.
+    pub fn mint() -> TraceId {
+        use std::collections::hash_map::RandomState;
+        use std::hash::{BuildHasher, Hasher};
+        static SALT: AtomicU64 = AtomicU64::new(0x7ACE);
+        let mut h = RandomState::new().build_hasher();
+        h.write_u64(SALT.fetch_add(1, Ordering::Relaxed));
+        TraceId(h.finish())
+    }
+}
 
 /// Unguessable capability token for a scheduler lease.
 ///

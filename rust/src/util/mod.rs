@@ -15,3 +15,4 @@ pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod table;
+pub mod trace;

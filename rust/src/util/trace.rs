@@ -1,0 +1,574 @@
+//! Request tracing and the flight recorder.
+//!
+//! Every RPC opens a *root span*; the layers it crosses (scheduler
+//! admission, hypervisor programming, fpga reconfiguration, rc2f
+//! streaming) open *child spans* around their expensive sections, so
+//! one trace shows where a `program_full` spent its time — queue wait
+//! vs quiesce vs partial reconfiguration vs DMA. Span timestamps come
+//! from the attached [`VirtualClock`], the same clock the simulated
+//! hardware charges, so durations line up with the model.
+//!
+//! The [`Tracer`] keeps the last [`Tracer::MAX_TRACES`] traces in a
+//! bounded ring — the **flight recorder** — so recent requests are
+//! always reconstructable post-hoc via the `trace_get` RPC or
+//! `rc3e trace <id>`.
+//!
+//! Propagation is by ambient context, not plumbed parameters: opening
+//! a span pushes a thread-local frame, and [`span`] attaches to
+//! whatever frame is on top. Deep layers therefore need no signature
+//! changes, and code running outside any request (unit tests, boot)
+//! records nothing — [`span`] hands back an inert guard. Async job
+//! workers re-establish context on their own thread by capturing
+//! [`current`] at submit time and calling [`TraceContext::adopt`].
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::clock::{VirtualClock, VirtualTime};
+use crate::util::ids::{IdGen, SpanId, TraceId};
+
+/// How a span ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Still open (or its thread died without dropping the guard).
+    Open,
+    Ok,
+    Error(String),
+}
+
+impl SpanOutcome {
+    pub fn label(&self) -> &str {
+        match self {
+            SpanOutcome::Open => "open",
+            SpanOutcome::Ok => "ok",
+            SpanOutcome::Error(_) => "error",
+        }
+    }
+}
+
+/// One recorded span: a named, timed section of a trace.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub id: SpanId,
+    pub parent: Option<SpanId>,
+    pub name: String,
+    pub start: VirtualTime,
+    pub end: Option<VirtualTime>,
+    pub attrs: Vec<(String, String)>,
+    pub outcome: SpanOutcome,
+}
+
+impl SpanRecord {
+    /// Duration if closed, else time still unaccounted (zero).
+    pub fn duration(&self) -> VirtualTime {
+        match self.end {
+            Some(e) => e.saturating_sub(self.start),
+            None => VirtualTime::ZERO,
+        }
+    }
+}
+
+/// A finished (or in-flight) trace pulled out of the recorder.
+#[derive(Debug, Clone)]
+pub struct TraceSnapshot {
+    pub trace: TraceId,
+    /// Spans in open order; the first is the root.
+    pub spans: Vec<SpanRecord>,
+    /// Spans dropped past the per-trace cap.
+    pub truncated: u64,
+}
+
+struct TraceBuf {
+    spans: Vec<SpanRecord>,
+    truncated: u64,
+}
+
+#[derive(Default)]
+struct Recorder {
+    traces: BTreeMap<TraceId, TraceBuf>,
+    /// Insertion order for ring eviction (oldest at the front).
+    order: VecDeque<TraceId>,
+}
+
+/// Per-server span recorder with a bounded trace ring.
+///
+/// Lock-cheap: recording takes one short mutex hold per span open /
+/// close; code outside a trace context never touches the lock at all.
+pub struct Tracer {
+    clock: Arc<VirtualClock>,
+    enabled: AtomicBool,
+    trace_ids: IdGen,
+    span_ids: IdGen,
+    recorder: Mutex<Recorder>,
+}
+
+struct ContextFrame {
+    tracer: Arc<Tracer>,
+    trace: TraceId,
+    span: SpanId,
+}
+
+thread_local! {
+    static CONTEXT: RefCell<Vec<ContextFrame>> = const { RefCell::new(Vec::new()) };
+}
+
+impl Tracer {
+    /// Flight-recorder depth: traces retained before ring eviction.
+    pub const MAX_TRACES: usize = 128;
+    /// Spans retained per trace; extras are counted, not stored.
+    pub const MAX_SPANS_PER_TRACE: usize = 256;
+
+    pub fn new(clock: Arc<VirtualClock>) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            clock,
+            enabled: AtomicBool::new(true),
+            trace_ids: IdGen::new(),
+            span_ids: IdGen::new(),
+            recorder: Mutex::new(Recorder::default()),
+        })
+    }
+
+    /// Turn recording on/off (benches measure the off cost).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::SeqCst);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::SeqCst)
+    }
+
+    /// Open a root span for an inbound request.
+    ///
+    /// With a `hint` naming a trace the recorder already holds, the
+    /// new span joins that trace as a child of its root — a client
+    /// that stamps one trace id across `alloc` → `program` → `stream`
+    /// gets a single connected tree. An unknown hint starts a fresh
+    /// trace under the client-minted id; no hint mints a server id.
+    pub fn root(
+        self: &Arc<Self>,
+        name: &str,
+        hint: Option<TraceId>,
+    ) -> SpanGuard {
+        if !self.is_enabled() {
+            return SpanGuard { active: None };
+        }
+        let span = SpanId(self.span_ids.next());
+        let (trace, parent) = {
+            let mut rec = self.recorder.lock().unwrap();
+            match hint {
+                Some(t) if rec.traces.contains_key(&t) => {
+                    let root = rec.traces[&t].spans.first().map(|s| s.id);
+                    (t, root)
+                }
+                Some(t) => {
+                    rec.open_trace(t);
+                    (t, None)
+                }
+                None => {
+                    let t = TraceId(self.trace_ids.next());
+                    rec.open_trace(t);
+                    (t, None)
+                }
+            }
+        };
+        self.open(trace, parent, span, name)
+    }
+
+    /// All trace ids currently in the recorder, newest first.
+    pub fn recent(&self) -> Vec<TraceId> {
+        let rec = self.recorder.lock().unwrap();
+        rec.order.iter().rev().copied().collect()
+    }
+
+    pub fn contains(&self, trace: TraceId) -> bool {
+        self.recorder.lock().unwrap().traces.contains_key(&trace)
+    }
+
+    /// Copy a trace out of the recorder.
+    pub fn snapshot(&self, trace: TraceId) -> Option<TraceSnapshot> {
+        let rec = self.recorder.lock().unwrap();
+        rec.traces.get(&trace).map(|buf| TraceSnapshot {
+            trace,
+            spans: buf.spans.clone(),
+            truncated: buf.truncated,
+        })
+    }
+
+    fn open(
+        self: &Arc<Self>,
+        trace: TraceId,
+        parent: Option<SpanId>,
+        span: SpanId,
+        name: &str,
+    ) -> SpanGuard {
+        let start = self.clock.now();
+        let recorded = {
+            let mut rec = self.recorder.lock().unwrap();
+            match rec.traces.get_mut(&trace) {
+                Some(buf) if buf.spans.len() < Self::MAX_SPANS_PER_TRACE => {
+                    buf.spans.push(SpanRecord {
+                        id: span,
+                        parent,
+                        name: name.to_string(),
+                        start,
+                        end: None,
+                        attrs: Vec::new(),
+                        outcome: SpanOutcome::Open,
+                    });
+                    true
+                }
+                Some(buf) => {
+                    buf.truncated += 1;
+                    false
+                }
+                // Trace evicted from the ring while still in flight.
+                None => false,
+            }
+        };
+        if !recorded {
+            return SpanGuard { active: None };
+        }
+        CONTEXT.with(|c| {
+            c.borrow_mut().push(ContextFrame {
+                tracer: Arc::clone(self),
+                trace,
+                span,
+            })
+        });
+        SpanGuard {
+            active: Some(ActiveSpan {
+                tracer: Arc::clone(self),
+                trace,
+                span,
+                failed: Mutex::new(None),
+            }),
+        }
+    }
+
+    fn with_span<F: FnOnce(&mut SpanRecord)>(
+        &self,
+        trace: TraceId,
+        span: SpanId,
+        f: F,
+    ) {
+        let mut rec = self.recorder.lock().unwrap();
+        if let Some(buf) = rec.traces.get_mut(&trace) {
+            if let Some(s) = buf.spans.iter_mut().find(|s| s.id == span) {
+                f(s);
+            }
+        }
+    }
+}
+
+impl Recorder {
+    fn open_trace(&mut self, trace: TraceId) {
+        while self.order.len() >= Tracer::MAX_TRACES {
+            if let Some(old) = self.order.pop_front() {
+                self.traces.remove(&old);
+            }
+        }
+        self.order.push_back(trace);
+        self.traces.insert(
+            trace,
+            TraceBuf {
+                spans: Vec::new(),
+                truncated: 0,
+            },
+        );
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.is_enabled())
+            .finish()
+    }
+}
+
+struct ActiveSpan {
+    tracer: Arc<Tracer>,
+    trace: TraceId,
+    span: SpanId,
+    /// Error message set by [`SpanGuard::fail`], applied at drop.
+    failed: Mutex<Option<String>>,
+}
+
+/// RAII handle for an open span; closing happens on drop.
+///
+/// An inert guard (no active span) is returned when tracing is off or
+/// no context is established — every method is then a no-op, so call
+/// sites never branch on "is tracing on".
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+impl SpanGuard {
+    /// Attach a key=value attribute to the span.
+    pub fn attr(&self, key: &str, value: impl ToString) {
+        if let Some(a) = &self.active {
+            let v = value.to_string();
+            a.tracer.with_span(a.trace, a.span, |s| {
+                s.attrs.push((key.to_string(), v));
+            });
+        }
+    }
+
+    /// Mark the span failed; recorded as the outcome at drop.
+    pub fn fail(&self, error: impl ToString) {
+        if let Some(a) = &self.active {
+            *a.failed.lock().unwrap() = Some(error.to_string());
+        }
+    }
+
+    /// Trace this span belongs to (None for an inert guard).
+    pub fn trace_id(&self) -> Option<TraceId> {
+        self.active.as_ref().map(|a| a.trace)
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(a) = self.active.take() else { return };
+        // Pop our context frame. Guards drop in LIFO scope order on
+        // one thread, so ours is the top — but scan defensively in
+        // case an intermediate guard was leaked.
+        CONTEXT.with(|c| {
+            let mut frames = c.borrow_mut();
+            if let Some(i) = frames.iter().rposition(|f| f.span == a.span) {
+                frames.truncate(i);
+            }
+        });
+        let end = a.tracer.clock.now();
+        let outcome = match a.failed.lock().unwrap().take() {
+            Some(e) => SpanOutcome::Error(e),
+            None => SpanOutcome::Ok,
+        };
+        a.tracer.with_span(a.trace, a.span, |s| {
+            s.end = Some(end);
+            s.outcome = outcome;
+        });
+    }
+}
+
+impl std::fmt::Debug for SpanGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpanGuard")
+            .field("active", &self.active.is_some())
+            .finish()
+    }
+}
+
+/// Open a child span under the current thread's context.
+///
+/// Inert (records nothing) when no span is open on this thread, so
+/// library layers call it unconditionally.
+pub fn span(name: &str) -> SpanGuard {
+    let frame = CONTEXT.with(|c| {
+        c.borrow().last().map(|f| {
+            (Arc::clone(&f.tracer), f.trace, f.span)
+        })
+    });
+    match frame {
+        Some((tracer, trace, parent)) => {
+            let id = SpanId(tracer.span_ids.next());
+            tracer.open(trace, Some(parent), id, name)
+        }
+        None => SpanGuard { active: None },
+    }
+}
+
+/// Capture the current thread's trace context for handoff to another
+/// thread (async job workers adopt the submitter's trace).
+pub fn current() -> Option<TraceContext> {
+    CONTEXT.with(|c| {
+        c.borrow().last().map(|f| TraceContext {
+            tracer: Arc::clone(&f.tracer),
+            trace: f.trace,
+            span: f.span,
+        })
+    })
+}
+
+/// A captured trace position, re-attachable on another thread.
+#[derive(Clone)]
+pub struct TraceContext {
+    tracer: Arc<Tracer>,
+    trace: TraceId,
+    span: SpanId,
+}
+
+impl TraceContext {
+    pub fn trace(&self) -> TraceId {
+        self.trace
+    }
+
+    /// Open a span parented at the captured position and make it the
+    /// current context on *this* thread for the guard's lifetime.
+    pub fn adopt(&self, name: &str) -> SpanGuard {
+        if !self.tracer.is_enabled() {
+            return SpanGuard { active: None };
+        }
+        let id = SpanId(self.tracer.span_ids.next());
+        self.tracer.open(self.trace, Some(self.span), id, name)
+    }
+}
+
+impl std::fmt::Debug for TraceContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceContext({}, {})", self.trace, self.span)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer() -> Arc<Tracer> {
+        Tracer::new(VirtualClock::new())
+    }
+
+    #[test]
+    fn root_and_children_form_a_tree() {
+        let t = tracer();
+        let clock = Arc::clone(&t.clock);
+        let root = t.root("rpc.program_full", None);
+        let trace = root.trace_id().unwrap();
+        clock.advance(VirtualTime::from_millis_f64(2.0));
+        {
+            let _admit = span("sched.admit");
+            clock.advance(VirtualTime::from_millis_f64(5.0));
+            {
+                let q = span("sched.quota");
+                q.attr("tenant", "user-1");
+            }
+        }
+        root.attr("method", "program_full");
+        drop(root);
+        let snap = t.snapshot(trace).unwrap();
+        assert_eq!(snap.spans.len(), 3);
+        assert_eq!(snap.spans[0].name, "rpc.program_full");
+        assert_eq!(snap.spans[0].parent, None);
+        assert_eq!(snap.spans[1].parent, Some(snap.spans[0].id));
+        assert_eq!(snap.spans[2].parent, Some(snap.spans[1].id));
+        assert_eq!(snap.spans[2].attrs, vec![(
+            "tenant".to_string(),
+            "user-1".to_string()
+        )]);
+        assert!(snap
+            .spans
+            .iter()
+            .all(|s| s.outcome == SpanOutcome::Ok && s.end.is_some()));
+        assert!(
+            (snap.spans[1].duration().as_millis_f64() - 5.0).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn no_context_means_inert_guard() {
+        let g = span("orphan");
+        assert!(g.trace_id().is_none());
+        g.attr("k", "v"); // must not panic
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = tracer();
+        t.set_enabled(false);
+        let g = t.root("rpc.hello", None);
+        assert!(g.trace_id().is_none());
+        drop(g);
+        assert!(t.recent().is_empty());
+    }
+
+    #[test]
+    fn hint_joins_existing_trace_under_its_root() {
+        let t = tracer();
+        let first = t.root("rpc.vfpga_alloc", None);
+        let trace = first.trace_id().unwrap();
+        drop(first);
+        let second = t.root("rpc.program_full", Some(trace));
+        assert_eq!(second.trace_id(), Some(trace));
+        drop(second);
+        let snap = t.snapshot(trace).unwrap();
+        assert_eq!(snap.spans.len(), 2);
+        assert_eq!(snap.spans[1].parent, Some(snap.spans[0].id));
+    }
+
+    #[test]
+    fn unknown_hint_starts_fresh_trace_with_that_id() {
+        let t = tracer();
+        let minted = TraceId::mint();
+        let g = t.root("rpc.hello", Some(minted));
+        assert_eq!(g.trace_id(), Some(minted));
+        drop(g);
+        assert_eq!(t.snapshot(minted).unwrap().spans[0].parent, None);
+    }
+
+    #[test]
+    fn failed_span_records_error_outcome() {
+        let t = tracer();
+        let g = t.root("rpc.stream", None);
+        let trace = g.trace_id().unwrap();
+        g.fail("no such core");
+        drop(g);
+        let snap = t.snapshot(trace).unwrap();
+        assert_eq!(
+            snap.spans[0].outcome,
+            SpanOutcome::Error("no such core".into())
+        );
+    }
+
+    #[test]
+    fn adopt_carries_context_across_threads() {
+        let t = tracer();
+        let root = t.root("rpc.job_submit", None);
+        let trace = root.trace_id().unwrap();
+        let ctx = current().expect("context set");
+        assert_eq!(ctx.trace(), trace);
+        let h = std::thread::spawn(move || {
+            let _job = ctx.adopt("job.stream");
+            let _child = span("rc2f.stream");
+        });
+        h.join().unwrap();
+        drop(root);
+        let snap = t.snapshot(trace).unwrap();
+        let names: Vec<&str> =
+            snap.spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["rpc.job_submit", "job.stream", "rc2f.stream"]);
+        assert_eq!(snap.spans[1].parent, Some(snap.spans[0].id));
+        assert_eq!(snap.spans[2].parent, Some(snap.spans[1].id));
+    }
+
+    #[test]
+    fn ring_evicts_oldest_trace() {
+        let t = tracer();
+        let first = {
+            let g = t.root("rpc.hello", None);
+            g.trace_id().unwrap()
+        };
+        for _ in 0..Tracer::MAX_TRACES {
+            drop(t.root("rpc.hello", None));
+        }
+        assert!(!t.contains(first), "oldest trace survived eviction");
+        assert_eq!(t.recent().len(), Tracer::MAX_TRACES);
+    }
+
+    #[test]
+    fn span_cap_truncates_not_grows() {
+        let t = tracer();
+        let root = t.root("rpc.batch", None);
+        let trace = root.trace_id().unwrap();
+        let mut guards = Vec::new();
+        for i in 0..Tracer::MAX_SPANS_PER_TRACE + 10 {
+            guards.push(span(&format!("step.{i}")));
+        }
+        guards.clear();
+        drop(root);
+        let snap = t.snapshot(trace).unwrap();
+        assert_eq!(snap.spans.len(), Tracer::MAX_SPANS_PER_TRACE);
+        assert_eq!(snap.truncated, 11);
+    }
+}

@@ -1,0 +1,320 @@
+//! Integration tests for the observability surface: end-to-end
+//! request tracing through the wire API (flight recorder), the
+//! `trace_get` / `metrics_export` RPCs, backpressure stats on the
+//! subscription terminal frame, and the instrument-name registry
+//! lint.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use rc3e::config::ClusterConfig;
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::metrics::valid_instrument_name;
+use rc3e::middleware::api::{
+    ErrorCode, SpanBody, SubscribeRequest, SubscriptionFilter, Topic,
+    TraceGetRequest,
+};
+use rc3e::middleware::{Client, ManagementServer, NodeAgent};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::ids::{NodeId, TraceId};
+
+struct Cloud {
+    server: ManagementServer,
+    _agents: Vec<NodeAgent>,
+    client: Client,
+    hv: Arc<Hypervisor>,
+}
+
+fn cloud() -> Cloud {
+    let clock = VirtualClock::new();
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut agents = Vec::new();
+    for n in [NodeId(0), NodeId(1)] {
+        let a = NodeAgent::spawn(Arc::clone(&hv), n, None).unwrap();
+        server.register_agent(n, a.addr());
+        agents.push(a);
+    }
+    let client = Client::connect(server.addr()).unwrap();
+    Cloud {
+        server,
+        _agents: agents,
+        client,
+        hv,
+    }
+}
+
+/// A single-device RSaaS cloud for the physical-lease +
+/// `program_full` job path.
+fn rsaas_cloud() -> (ManagementServer, Client, Arc<Hypervisor>) {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            &ClusterConfig::single_vc707(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+    (server, client, hv)
+}
+
+/// Assert the span set forms exactly one connected tree rooted at an
+/// RPC span: one root, every other span's parent present in the set.
+fn assert_connected(spans: &[SpanBody]) {
+    assert!(!spans.is_empty());
+    let ids: HashSet<_> = spans.iter().map(|s| s.span).collect();
+    let roots: Vec<&SpanBody> =
+        spans.iter().filter(|s| s.parent.is_none()).collect();
+    assert_eq!(
+        roots.len(),
+        1,
+        "expected one root, got {:?}",
+        roots.iter().map(|s| &s.name).collect::<Vec<_>>()
+    );
+    assert!(
+        roots[0].name.starts_with("rpc."),
+        "root span is {}, not an RPC span",
+        roots[0].name
+    );
+    for s in spans {
+        if let Some(p) = s.parent {
+            assert!(
+                ids.contains(&p),
+                "span {} ({}) has orphaned parent {p}",
+                s.span,
+                s.name
+            );
+        }
+    }
+}
+
+fn names_of(spans: &[SpanBody]) -> HashSet<&str> {
+    spans.iter().map(|s| s.name.as_str()).collect()
+}
+
+// ================================================= end-to-end trace
+
+/// One client-minted trace covers allocate → program → stream across
+/// three RPCs; the async stream job adopts the submitter's trace and
+/// `trace_get { job }` resolves the whole connected tree.
+#[test]
+fn wire_driven_flow_yields_one_connected_span_tree() {
+    let mut c = cloud();
+    // Untraced preamble — must not pollute the trace under test.
+    let user = c.client.add_user("tracer").unwrap().user;
+    let trace = c.client.start_trace();
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
+    c.client
+        .program_core(user, lease.alloc, "matmul16")
+        .unwrap();
+    let job = c
+        .client
+        .stream(user, lease.alloc, "matmul16", 256)
+        .unwrap()
+        .job;
+    // Wait for the job to settle (success needs rc2f artifacts; the
+    // span tree is recorded either way).
+    let body = loop {
+        match c.client.job_wait(job, Some(30.0)) {
+            Ok(b) if b.is_terminal() => break b,
+            Ok(_) => {}
+            Err(e) if e.code == ErrorCode::Timeout => {}
+            Err(e) => panic!("job_wait: {e}"),
+        }
+    };
+    // The job body advertises the trace it ran under.
+    assert_eq!(body.trace, Some(trace));
+    // Stop stamping the envelope so trace_get does not append itself.
+    c.client.set_trace_context(None);
+    let resp = c
+        .client
+        .trace_get(&TraceGetRequest::by_job(job))
+        .unwrap();
+    assert_eq!(resp.trace, trace);
+    assert_eq!(resp.truncated, 0);
+    assert_connected(&resp.spans);
+    let names = names_of(&resp.spans);
+    // RPC roots for each call in the workflow joined the same trace.
+    for expect in [
+        "rpc.alloc_vfpga",
+        "rpc.program_core",
+        "rpc.stream",
+        "sched.admit",
+        "hv.program",
+        "bitstream.load",
+        "fpga.pr",
+        "job.stream",
+    ] {
+        assert!(names.contains(expect), "missing span {expect}");
+    }
+    if rc3e::testing::artifacts_available("observability") {
+        assert!(names.contains("rc2f.stream"));
+    }
+    // The worker's adoption span hangs off the submitting RPC span.
+    let by_name: HashMap<&str, &SpanBody> =
+        resp.spans.iter().map(|s| (s.name.as_str(), s)).collect();
+    assert_eq!(
+        by_name["job.stream"].parent,
+        Some(by_name["rpc.stream"].span)
+    );
+    // Completed spans carry durations and an outcome label.
+    for s in &resp.spans {
+        assert!(["ok", "error", "open"].contains(&s.outcome.as_str()));
+    }
+    // `trace_get { trace }` resolves the same tree.
+    let by_trace = c
+        .client
+        .trace_get(&TraceGetRequest::by_trace(trace))
+        .unwrap();
+    assert_eq!(by_trace.spans.len(), resp.spans.len());
+}
+
+/// The RSaaS full-device path: `program_full` runs as an async job
+/// whose worker thread adopts the submitting RPC's trace.
+#[test]
+fn program_full_job_inherits_the_submitters_trace() {
+    let (_server, mut c, _hv) = rsaas_cloud();
+    let user = c.add_user("rs").unwrap().user;
+    let trace = c.start_trace();
+    let lease = c.alloc_physical(user).unwrap();
+    let job = c
+        .program_full(user, lease.alloc, Some("my_design"))
+        .unwrap()
+        .job;
+    c.job_wait_done(job).unwrap();
+    c.set_trace_context(None);
+    let resp =
+        c.trace_get(&TraceGetRequest::by_job(job)).unwrap();
+    assert_eq!(resp.trace, trace);
+    assert_connected(&resp.spans);
+    let names = names_of(&resp.spans);
+    for expect in [
+        "rpc.alloc_physical",
+        "rpc.program_full",
+        "job.program_full",
+        "hv.full_config",
+        "bitstream.load",
+    ] {
+        assert!(names.contains(expect), "missing span {expect}");
+    }
+}
+
+/// Lookups that cannot resolve fail cleanly.
+#[test]
+fn trace_get_unknown_trace_is_a_bad_request() {
+    let (_server, mut c, _hv) = rsaas_cloud();
+    let err = c
+        .trace_get(&TraceGetRequest::by_trace(TraceId(0xDEAD_BEEF)))
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+}
+
+// ======================================================== metrics
+
+/// `metrics_export` returns every instrument; histograms carry their
+/// full bucket geometry (bounds, per-bucket counts, overflow).
+#[test]
+fn metrics_export_carries_bucket_bounds() {
+    let mut c = cloud();
+    let user = c.client.add_user("m").unwrap().user;
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
+    c.client.release(lease.alloc).unwrap();
+    let snap = c.client.metrics_export().unwrap();
+    assert!(!snap.counters.is_empty());
+    assert!(!snap.gauges.is_empty());
+    assert!(!snap.histograms.is_empty());
+    for (name, h) in &snap.histograms {
+        assert!(
+            !h.bounds_us.is_empty(),
+            "{name} exported without bucket bounds"
+        );
+        assert_eq!(
+            h.bounds_us.len(),
+            h.buckets.len(),
+            "{name}: bounds/buckets arity mismatch"
+        );
+        // Bounds strictly increase; totals reconcile.
+        assert!(h.bounds_us.windows(2).all(|w| w[0] < w[1]));
+        let in_buckets: u64 =
+            h.buckets.iter().sum::<u64>() + h.overflow;
+        assert_eq!(in_buckets, h.count, "{name}: lost samples");
+    }
+    // The scheduler's admission telemetry shows up by name.
+    assert!(snap
+        .counters
+        .iter()
+        .any(|(n, v)| n == "sched.granted" && *v > 0));
+}
+
+/// Tier-1 lint: every registered instrument name is dot-separated
+/// snake_case and no name is registered twice (across kinds).
+#[test]
+fn instrument_names_are_unique_and_snake_case() {
+    let c = cloud();
+    // Exercise enough surface that lazily-created instruments exist.
+    let _ = Client::connect(c.server.addr()).unwrap().hello();
+    let names = c.hv.metrics.names();
+    assert!(!names.is_empty());
+    let mut seen = HashSet::new();
+    for (name, kind) in &names {
+        assert!(
+            valid_instrument_name(name),
+            "instrument '{name}' ({kind:?}) is not dot-separated \
+             snake_case"
+        );
+        assert!(
+            seen.insert(name.clone()),
+            "instrument '{name}' registered more than once"
+        );
+    }
+}
+
+// =================================================== backpressure
+
+/// The subscription's terminal frame reports delivery stats so
+/// clients can see drops and queue high-water without a second RPC.
+#[test]
+fn subscribe_terminal_frame_carries_backpressure_stats() {
+    let mut c = cloud();
+    let user = c.client.add_user("bp").unwrap().user;
+    let addr = c.server.addr();
+    let driver = std::thread::spawn(move || {
+        let mut d = Client::connect(addr).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let lease = d.alloc_vfpga(user, None, None).unwrap();
+        d.release(lease.alloc).unwrap();
+    });
+    let mut stream = c
+        .client
+        .subscribe(&SubscribeRequest {
+            filter: SubscriptionFilter::topic(Topic::Sched),
+            lease: None,
+            max_events: Some(2),
+            timeout_s: Some(30.0),
+        })
+        .unwrap();
+    let mut delivered = 0u64;
+    for frame in stream.by_ref() {
+        frame.unwrap();
+        delivered += 1;
+    }
+    let stats = stream
+        .stats()
+        .expect("terminal frame carried no stats object")
+        .clone();
+    drop(stream);
+    driver.join().unwrap();
+    assert_eq!(stats.get("delivered").as_u64(), Some(delivered));
+    assert_eq!(stats.get("dropped").as_u64(), Some(0));
+    assert!(stats.get("queue_high_water").as_u64().is_some());
+    // The registry-level fanout telemetry rides metrics_export.
+    let snap = c.client.metrics_export().unwrap();
+    assert!(snap
+        .gauges
+        .iter()
+        .any(|(n, _)| n == "events.queue.high_water"));
+}

@@ -1,0 +1,232 @@
+//! Journal-surface bench: raw log bandwidth and the price the
+//! scheduler pays for write-ahead durability.
+//!
+//! * **append** — records/sec (and MB/s) through [`Journal::append`]
+//!   at small (64 B, WAL-record-sized) and large (1 KiB) payloads,
+//!   with segment rotation in the loop (256 KiB segments).
+//! * **replay** — records/sec reading the whole log back with
+//!   [`Journal::replay_from`], the cold-boot recovery path.
+//! * **scheduler WAL overhead** — wall-clock admit→release cycles
+//!   with the exact per-boundary [`SchedWal`] appends (one `Grant`,
+//!   one `Release`) added to the loop, vs the bare cycle. The
+//!   boundary *snapshot* predates the journal and is priced
+//!   separately (`journal.sched_cycle_persistent`); the budget in
+//!   `BENCH_baseline.json` — `sched.journal_overhead_pct < 10` —
+//!   covers what the WAL itself adds to the admission hot path.
+//!   `sched.wait` is virtual time and invariant under journaling, so
+//!   the honest number is the wall-clock cycle.
+//!
+//! Run: `cargo bench --bench journal_throughput`
+//! (`BENCH_BASELINE_OUT=BENCH_baseline.json` also writes the series
+//! to the shared machine-readable baseline file.)
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use rc3e::config::{ClusterConfig, ServiceModel};
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::journal::{
+    Journal, JournalConfig, LeaseRecord, MemberRecord, SchedWal,
+    WalRecord,
+};
+use rc3e::sched::{
+    AdmissionRequest, GrantTarget, RequestClass, Scheduler,
+};
+use rc3e::testing::baseline::{self, BaselineReport};
+use rc3e::testing::Bencher;
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::ids::{
+    AllocationId, FpgaId, LeaseToken, NodeId, UserId, VfpgaId,
+};
+
+/// Records per append measurement.
+const SMALL_RECORDS: u64 = 20_000;
+const LARGE_RECORDS: u64 = 5_000;
+/// Admit→release cycles per measured iteration.
+const SCHED_CYCLES: usize = 200;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "rc3e-journal-bench-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Append `count` records of `payload_len` bytes; returns
+/// (recs/s, MB/s, segments rotated through).
+fn bench_append(
+    dir: &Path,
+    count: u64,
+    payload_len: usize,
+) -> (f64, f64, usize) {
+    let log = Journal::open(
+        dir,
+        JournalConfig {
+            segment_bytes: 256 * 1024,
+            max_segments: 0,
+        },
+    )
+    .unwrap();
+    let payload = vec![0xA5u8; payload_len];
+    let t0 = Instant::now();
+    for _ in 0..count {
+        log.append(&payload).unwrap();
+    }
+    log.sync().unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let recs_per_s = count as f64 / secs;
+    let mb_per_s =
+        (count as f64 * payload_len as f64) / secs / (1024.0 * 1024.0);
+    (recs_per_s, mb_per_s, log.segment_count())
+}
+
+/// Read the whole log back (the recovery path); records/sec.
+fn bench_replay(dir: &Path, expect: u64) -> f64 {
+    let log = Journal::open(dir, JournalConfig::default()).unwrap();
+    let t0 = Instant::now();
+    let records = log.replay_from(1).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(records.len() as u64, expect, "replay lost records");
+    expect as f64 / secs
+}
+
+fn boot_sched(persist_db: Option<&Path>) -> Arc<Scheduler> {
+    let hv = Arc::new(
+        Hypervisor::boot(
+            &ClusterConfig::paper_testbed(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    match persist_db {
+        Some(db) => Scheduler::new_persistent(hv, db).unwrap(),
+        None => Scheduler::new(hv),
+    }
+}
+
+/// A representative single-member grant record (what one RAaaS
+/// admission writes to the WAL).
+fn grant_record(user: UserId) -> LeaseRecord {
+    LeaseRecord {
+        token: LeaseToken::mint(),
+        tenant: user,
+        model: ServiceModel::RAaaS,
+        class: RequestClass::Normal,
+        co_located: false,
+        wait_ns: 0,
+        members: vec![MemberRecord {
+            alloc: AllocationId(1),
+            target: GrantTarget::Vfpga(VfpgaId(1), FpgaId(1), NodeId(1)),
+            units: 1,
+            started_ns: 0,
+            charge_w: 10.0,
+            migrations: 0,
+        }],
+    }
+}
+
+fn run_cycles(sched: &Arc<Scheduler>, user: UserId, wal: Option<&SchedWal>) {
+    for _ in 0..SCHED_CYCLES {
+        let lease = sched
+            .admit(&AdmissionRequest::new(
+                user,
+                ServiceModel::RAaaS,
+                RequestClass::Normal,
+            ))
+            .unwrap();
+        if let Some(w) = wal {
+            let rec = grant_record(user);
+            let token = rec.token;
+            w.append(&WalRecord::Grant(rec)).unwrap();
+            w.append(&WalRecord::Release { token }).unwrap();
+        }
+        lease.release().unwrap();
+    }
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    println!(
+        "journal_throughput: log bandwidth and scheduler WAL overhead\n"
+    );
+    let out = baseline::out_path();
+    let mut report = match &out {
+        Some(p) => BaselineReport::load_or_new(p),
+        None => BaselineReport::new(),
+    };
+
+    let dir = scratch("append64");
+    let (rps, mbps, segs) = bench_append(&dir, SMALL_RECORDS, 64);
+    println!(
+        "append  64 B x{SMALL_RECORDS}: {rps:.0} recs/s \
+         ({mbps:.1} MB/s payload, {segs} segments)"
+    );
+    report.record_scalar("journal.append_64b_recs_per_s", rps);
+    let replay_rps = bench_replay(&dir, SMALL_RECORDS);
+    println!("replay  64 B x{SMALL_RECORDS}: {replay_rps:.0} recs/s");
+    report.record_scalar("journal.replay_recs_per_s", replay_rps);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let dir = scratch("append1k");
+    let (rps, mbps, segs) = bench_append(&dir, LARGE_RECORDS, 1024);
+    println!(
+        "append 1 KiB x{LARGE_RECORDS}: {rps:.0} recs/s \
+         ({mbps:.1} MB/s payload, {segs} segments)"
+    );
+    report.record_scalar("journal.append_1k_mb_per_s", mbps);
+    let _ = std::fs::remove_dir_all(&dir);
+    println!();
+
+    // WAL overhead on the admission hot path: the bare admit→release
+    // cycle vs the same cycle plus the two records a journaled
+    // boundary appends. Isolates the journal's marginal cost — the
+    // boundary snapshot is priced separately below.
+    let b = Bencher::new(1, 5);
+    let plain = boot_sched(None);
+    let user = plain.hv().add_user("bench");
+    let base = b.run("admit_release bare", || {
+        run_cycles(&plain, user, None);
+    });
+    println!("{}", base.line());
+
+    let wal_dir = scratch("wal");
+    let wal = SchedWal::open(&wal_dir).unwrap();
+    let test = b.run("admit_release + WAL appends", || {
+        run_cycles(&plain, user, Some(&wal));
+    });
+    println!("{}", test.line());
+    let overhead = baseline::overhead_pct(&base, &test);
+    println!(
+        "scheduler WAL overhead: {overhead:.2}% per admit->release \
+         cycle (budget < 10%)"
+    );
+    let _ = std::fs::remove_dir_all(&wal_dir);
+
+    // Full persistent mode for context: WAL plus the per-boundary
+    // snapshot (atomic temp+rename+fsync), i.e. what `serve --state`
+    // actually runs.
+    let state = scratch("sched");
+    std::fs::create_dir_all(&state).unwrap();
+    let db_path = state.join("devices.json");
+    let persistent = boot_sched(Some(&db_path));
+    let user = persistent.hv().add_user("bench");
+    let full = b.run("admit_release persistent", || {
+        run_cycles(&persistent, user, None);
+    });
+    println!("{}", full.line());
+    let _ = std::fs::remove_dir_all(&state);
+
+    report.record("journal.sched_cycle_bare", &base);
+    report.record("journal.sched_cycle_walled", &test);
+    report.record("journal.sched_cycle_persistent", &full);
+    report.record_scalar("sched.journal_overhead_pct", overhead);
+
+    if let Some(p) = &out {
+        report.save(p).unwrap();
+        println!("\nbaseline series written to {}", p.display());
+    }
+}

@@ -355,6 +355,87 @@ impl Hypervisor {
         Ok((alloc, fpga, node))
     }
 
+    /// Re-adopt a vFPGA allocation recovered from the scheduler's
+    /// write-ahead log after a restart: re-insert it into the device
+    /// database under its *original* [`AllocationId`], re-register the
+    /// clock domain with the RC2F controller, re-create the tenant's
+    /// device files and re-enter the lifecycle machine at `Reserved`.
+    /// The bitstream itself does not survive the crash — the tenant
+    /// reprograms, exactly as after a relocation.
+    pub fn adopt_vfpga(
+        &self,
+        alloc: AllocationId,
+        user: UserId,
+        model: ServiceModel,
+        vfpga: VfpgaId,
+    ) -> Result<(FpgaId, NodeId), HypervisorError> {
+        assert!(
+            !matches!(model, ServiceModel::RSaaS),
+            "RSaaS uses adopt_physical"
+        );
+        let mut db = self.db.lock().unwrap();
+        let fpga = db
+            .device_of_vfpga(vfpga)
+            .map(|d| d.id)
+            .ok_or_else(|| {
+                HypervisorError::Db(format!("{vfpga} not in database"))
+            })?;
+        db.adopt_allocation(
+            alloc,
+            user,
+            AllocKind::Vfpga(vfpga),
+            model,
+            self.clock.now().0,
+        )
+        .map_err(HypervisorError::Db)?;
+        drop(db);
+        let dev = self.device(fpga)?;
+        dev.controller
+            .lock()
+            .unwrap()
+            .allocate(vfpga, user)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        self.registries[&dev.node]
+            .create_vfpga_files(vfpga, user)
+            .map_err(|e| HypervisorError::Db(e.to_string()))?;
+        dev.fpga
+            .lock()
+            .unwrap()
+            .transition_region(vfpga, LifecycleState::Reserved)
+            .map_err(|e| HypervisorError::Device(e.to_string()))?;
+        self.metrics.counter("hv.adopt").inc();
+        self.refresh_region_gauges();
+        Ok((fpga, dev.node))
+    }
+
+    /// Re-adopt an exclusive physical allocation (RSaaS) recovered
+    /// from the scheduler's write-ahead log. Database-only, like
+    /// [`Hypervisor::alloc_physical`]. VM passthrough identity is not
+    /// journaled, so a lease born as `AllocKind::Vm` is re-adopted as
+    /// plain `Physical` — the exclusivity and accounting are
+    /// identical; the tenant re-attaches the VM out of band.
+    pub fn adopt_physical(
+        &self,
+        alloc: AllocationId,
+        user: UserId,
+        fpga: FpgaId,
+    ) -> Result<NodeId, HypervisorError> {
+        let node = self.device(fpga)?.node;
+        self.db
+            .lock()
+            .unwrap()
+            .adopt_allocation(
+                alloc,
+                user,
+                AllocKind::Physical(fpga),
+                ServiceModel::RSaaS,
+                self.clock.now().0,
+            )
+            .map_err(HypervisorError::Db)?;
+        self.metrics.counter("hv.adopt").inc();
+        Ok(node)
+    }
+
     /// Release any allocation: blanks regions, gates clocks, removes
     /// device files, updates the database.
     ///
@@ -889,6 +970,40 @@ mod tests {
         let _hv = Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap();
         // 2x VC707 at 28.37 s + 2x ML605 (scaled) — well over 80 s.
         assert!(clock.now().as_secs_f64() > 80.0);
+    }
+
+    #[test]
+    fn adopt_vfpga_restores_lease_machinery() {
+        let hv = hv();
+        let user = hv.add_user("alice");
+        let (fpga, node) = hv
+            .adopt_vfpga(AllocationId(42), user, ServiceModel::RAaaS, VfpgaId(1))
+            .unwrap();
+        // Same machinery a fresh allocation gets: DB row under the
+        // original id, clock domain, device files, Reserved lifecycle.
+        {
+            let db = hv.db.lock().unwrap();
+            let a = db.allocation(AllocationId(42)).unwrap();
+            assert_eq!(a.user, user);
+            assert_eq!(db.owner_of(VfpgaId(1)).unwrap().id, AllocationId(42));
+        }
+        let fifo = crate::pcie::devfile::DeviceFileRegistry::vfpga_path(
+            VfpgaId(1),
+            crate::pcie::devfile::DeviceFileKind::FifoIn,
+            0,
+        );
+        assert!(hv.registry(node).unwrap().paths().contains(&fifo));
+        let dev = hv.device(fpga).unwrap();
+        assert_eq!(
+            dev.fpga.lock().unwrap().region(VfpgaId(1)).unwrap().lifecycle,
+            LifecycleState::Reserved
+        );
+        // Double adoption of the same region is rejected.
+        assert!(hv
+            .adopt_vfpga(AllocationId(43), user, ServiceModel::RAaaS, VfpgaId(1))
+            .is_err());
+        // And the adopted lease releases like any other.
+        hv.release(AllocationId(42)).unwrap();
     }
 
     #[test]

@@ -180,6 +180,70 @@ impl DeviceDb {
         Ok(id)
     }
 
+    /// Re-insert an allocation recovered from the scheduler journal,
+    /// preserving its original [`AllocationId`] so lease tokens minted
+    /// before the crash keep referring to the same allocation. The
+    /// id generator is bumped past the adopted id so fresh
+    /// allocations never collide with recovered ones.
+    pub fn adopt_allocation(
+        &mut self,
+        id: AllocationId,
+        user: UserId,
+        kind: AllocKind,
+        model: ServiceModel,
+        now_ns: u64,
+    ) -> Result<(), String> {
+        if self.allocations.contains_key(&id) {
+            return Err(format!("{id} already in database"));
+        }
+        match kind {
+            AllocKind::Vfpga(v) => {
+                if self.vfpga_owner.contains_key(&v) {
+                    return Err(format!("{v} already allocated"));
+                }
+                let dev = self
+                    .device_of_vfpga(v)
+                    .ok_or_else(|| format!("{v} not in database"))?;
+                if dev.exclusive_alloc.is_some() {
+                    return Err(format!(
+                        "device {} exclusively allocated (RSaaS)",
+                        dev.id
+                    ));
+                }
+                self.vfpga_owner.insert(v, id);
+            }
+            AllocKind::Physical(f) | AllocKind::Vm(_, f) => {
+                let dev = self
+                    .devices
+                    .get(&f)
+                    .ok_or_else(|| format!("{f} not in database"))?;
+                if dev.exclusive_alloc.is_some() {
+                    return Err(format!("{f} already exclusively allocated"));
+                }
+                if let Some(v) = dev
+                    .regions
+                    .iter()
+                    .find(|v| self.vfpga_owner.contains_key(v))
+                {
+                    return Err(format!("{f} has active vFPGA lease on {v}"));
+                }
+                self.devices.get_mut(&f).unwrap().exclusive_alloc = Some(id);
+            }
+        }
+        self.allocations.insert(
+            id,
+            Allocation {
+                id,
+                user,
+                kind,
+                model,
+                created_ns: now_ns,
+            },
+        );
+        self.alloc_ids.bump_past(id.0);
+        Ok(())
+    }
+
     /// Release any lease.
     pub fn release(&mut self, id: AllocationId) -> Result<Allocation, String> {
         let alloc = self
@@ -432,8 +496,10 @@ impl DeviceDb {
         Ok(db)
     }
 
+    /// Durably save the database (temp file + fsync + atomic rename,
+    /// so a crash mid-save can never leave a torn file).
     pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
-        std::fs::write(path, self.to_json().to_pretty())
+        crate::util::fsx::write_atomic(path, &self.to_json().to_pretty())
             .map_err(|e| format!("{}: {e}", path.display()))
     }
 
@@ -488,6 +554,55 @@ mod tests {
         db.release(a).unwrap();
         assert!(db.owner_of(VfpgaId(0)).is_none());
         assert_eq!(db.free_regions(FpgaId(0)).len(), 4);
+    }
+
+    #[test]
+    fn adopt_preserves_id_and_bumps_generator() {
+        let mut db = db_with_two_devices();
+        let u = db.add_user("alice");
+        db.adopt_allocation(
+            AllocationId(7),
+            u,
+            AllocKind::Vfpga(VfpgaId(2)),
+            ServiceModel::RAaaS,
+            10,
+        )
+        .unwrap();
+        assert_eq!(db.owner_of(VfpgaId(2)).unwrap().id, AllocationId(7));
+        // Duplicate id and already-owned region both rejected.
+        assert!(db
+            .adopt_allocation(
+                AllocationId(7),
+                u,
+                AllocKind::Vfpga(VfpgaId(3)),
+                ServiceModel::RAaaS,
+                10,
+            )
+            .is_err());
+        assert!(db
+            .adopt_allocation(
+                AllocationId(8),
+                u,
+                AllocKind::Vfpga(VfpgaId(2)),
+                ServiceModel::RAaaS,
+                10,
+            )
+            .is_err());
+        // Fresh ids mint past the adopted one.
+        let fresh = db
+            .allocate_vfpga(u, VfpgaId(0), ServiceModel::RAaaS, 11)
+            .unwrap();
+        assert!(fresh.0 > 7, "fresh {fresh:?} must not collide");
+        // Exclusive adoption marks the device.
+        db.adopt_allocation(
+            AllocationId(20),
+            u,
+            AllocKind::Physical(FpgaId(1)),
+            ServiceModel::RSaaS,
+            12,
+        )
+        .unwrap();
+        assert!(db.free_regions(FpgaId(1)).is_empty());
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! The event journal: durable backing store for the [`EventBus`].
+//!
+//! Every event published on the bus is appended here *before* fan-out
+//! to subscriber queues, so the journal sequence number doubles as the
+//! event's **cursor**: the dense, monotonically increasing position
+//! that `subscribe` clients quote (`from_cursor`) to resume a dropped
+//! stream. Because the append happens first, any event a live
+//! subscriber ever saw is on disk, and a resume can replay the gap
+//! from the journal and then switch to live delivery with no gaps and
+//! no duplicates (`docs/DURABILITY.md`).
+//!
+//! Each record is a JSON object carrying the delivery [`Scope`]
+//! alongside the event, so replay can re-apply the same visibility
+//! rules fan-out used (`Public` vs. lease-token vs. tenant scoped):
+//!
+//! ```text
+//! { "scope": "public",                      "event": { ... } }
+//! { "scope": "token",  "token": "lt-..",    "event": { ... } }
+//! { "scope": "tenant", "tenant": "user-0",  "event": { ... } }
+//! ```
+//!
+//! The journal keeps a bounded window of history (segment-count
+//! retention); a `from_cursor` older than the window resumes from the
+//! oldest retained record — the client's cursor arithmetic still
+//! detects the gap because cursors are dense.
+//!
+//! [`EventBus`]: crate::middleware::EventBus
+//! [`Scope`]: crate::middleware::Scope
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::journal::log::{Journal, JournalConfig};
+use crate::metrics::Registry;
+use crate::middleware::api::Event;
+use crate::middleware::Scope;
+use crate::util::ids::{LeaseToken, UserId};
+use crate::util::json::Json;
+
+/// Segment size for the event journal. Events are small (a few
+/// hundred bytes) so 256 KiB segments keep rotation frequent enough
+/// for retention to matter without syncing constantly.
+const EVENT_SEGMENT_BYTES: u64 = 256 * 1024;
+
+/// How many segments of event history to retain. With ~256 KiB
+/// segments this bounds the journal at a few MiB while keeping
+/// thousands of events available for cursor resume.
+const EVENT_MAX_SEGMENTS: usize = 16;
+
+/// Durable, scope-tagged event log with cursor-addressed replay.
+pub struct EventJournal {
+    log: Journal,
+}
+
+impl EventJournal {
+    /// Open (or create) the event journal at `dir`.
+    pub fn open(dir: &Path) -> std::io::Result<EventJournal> {
+        let cfg = JournalConfig {
+            segment_bytes: EVENT_SEGMENT_BYTES,
+            max_segments: EVENT_MAX_SEGMENTS,
+        };
+        Ok(EventJournal { log: Journal::open(dir, cfg)? })
+    }
+
+    /// Register `journal.events.*` instruments on `metrics`.
+    pub fn set_metrics(&self, metrics: Arc<Registry>) {
+        self.log.set_metrics(metrics, "events");
+    }
+
+    /// Append one event with its delivery scope; returns the cursor
+    /// assigned to it.
+    pub fn append(&self, event: &Event, scope: Scope) -> std::io::Result<u64> {
+        let mut rec = match scope {
+            Scope::Public => {
+                Json::obj(vec![("scope", Json::from("public"))])
+            }
+            Scope::Token(token) => Json::obj(vec![
+                ("scope", Json::from("token")),
+                ("token", Json::from(token.to_string())),
+            ]),
+            Scope::Tenant(user) => Json::obj(vec![
+                ("scope", Json::from("tenant")),
+                ("tenant", Json::from(user.to_string())),
+            ]),
+        };
+        rec.set("event", event.to_json());
+        self.log.append(rec.to_string().as_bytes())
+    }
+
+    /// The cursor the *next* append will receive.
+    pub fn next_cursor(&self) -> u64 {
+        self.log.next_seq()
+    }
+
+    /// Replay every retained record with cursor >= `from`, in cursor
+    /// order. Records that fail to parse (foreign-version residue)
+    /// are skipped rather than failing the whole replay.
+    pub fn replay_from(
+        &self,
+        from: u64,
+    ) -> std::io::Result<Vec<(u64, Event, Scope)>> {
+        let raw = self.log.replay_from(from)?;
+        let mut out = Vec::with_capacity(raw.len());
+        for (cursor, payload) in raw {
+            if let Some((event, scope)) = decode(&payload) {
+                out.push((cursor, event, scope));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Force buffered appends to stable storage.
+    pub fn sync(&self) -> std::io::Result<()> {
+        self.log.sync()
+    }
+
+    /// Number of live segments (exposed for tests and metrics).
+    pub fn segment_count(&self) -> usize {
+        self.log.segment_count()
+    }
+}
+
+fn decode(payload: &[u8]) -> Option<(Event, Scope)> {
+    let text = std::str::from_utf8(payload).ok()?;
+    let json = Json::parse(text).ok()?;
+    let scope = match json.get("scope").as_str()? {
+        "public" => Scope::Public,
+        "token" => {
+            Scope::Token(LeaseToken::parse(json.get("token").as_str()?)?)
+        }
+        "tenant" => {
+            Scope::Tenant(UserId::parse(json.get("tenant").as_str()?)?)
+        }
+        _ => return None,
+    };
+    let event = Event::from_json(json.get("event")).ok()?;
+    Some((event, scope))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::JobId;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "rc3e_evjournal_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn depth_event(depth: u64) -> Event {
+        Event::QueueDepth { depth }
+    }
+
+    #[test]
+    fn append_assigns_dense_cursors_and_replays_in_order() {
+        let dir = tmp_dir("dense");
+        let j = EventJournal::open(&dir).unwrap();
+        for i in 0..10 {
+            let c = j.append(&depth_event(i), Scope::Public).unwrap();
+            assert_eq!(c, i + 1);
+        }
+        let replay = j.replay_from(4).unwrap();
+        assert_eq!(replay.len(), 7);
+        assert_eq!(replay[0].0, 4);
+        assert_eq!(replay.last().unwrap().0, 10);
+        for (cursor, event, scope) in &replay {
+            assert_eq!(*scope, Scope::Public);
+            match event {
+                Event::QueueDepth { depth } => {
+                    assert_eq!(*depth, cursor - 1)
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scopes_round_trip_through_disk() {
+        let dir = tmp_dir("scopes");
+        let token = LeaseToken::mint();
+        let user = UserId(7);
+        {
+            let j = EventJournal::open(&dir).unwrap();
+            j.append(&depth_event(1), Scope::Public).unwrap();
+            j.append(&depth_event(2), Scope::Token(token)).unwrap();
+            j.append(&depth_event(3), Scope::Tenant(user)).unwrap();
+        }
+        // Reopen from disk: cursors and scopes must survive.
+        let j = EventJournal::open(&dir).unwrap();
+        assert_eq!(j.next_cursor(), 4);
+        let replay = j.replay_from(1).unwrap();
+        assert_eq!(replay.len(), 3);
+        assert_eq!(replay[0].2, Scope::Public);
+        assert_eq!(replay[1].2, Scope::Token(token));
+        assert_eq!(replay[2].2, Scope::Tenant(user));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn job_progress_payload_survives_replay() {
+        let dir = tmp_dir("payload");
+        let j = EventJournal::open(&dir).unwrap();
+        let ev = Event::JobProgress {
+            job: JobId(3),
+            method: "stream_mm".into(),
+            phase: "running".into(),
+            bytes_streamed: 4096,
+            pct: 62.5,
+            state: "running".into(),
+            result: None,
+            trace: None,
+        };
+        let cursor = j.append(&ev, Scope::Public).unwrap();
+        let replay = j.replay_from(cursor).unwrap();
+        assert_eq!(replay.len(), 1);
+        assert_eq!(replay[0].1, ev);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

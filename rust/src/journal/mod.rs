@@ -1,0 +1,34 @@
+//! Durability subsystem: the segmented record log and its two
+//! clients.
+//!
+//! RC3E's control plane owns state that outlives any single process —
+//! tenant designs stay resident on the devices across a management
+//! restart — so the middleware must be able to fail and recover
+//! independently of the hardware it manages. This module provides the
+//! three layers that make that honest (`docs/DURABILITY.md`):
+//!
+//! * [`log`] — a segmented, append-only, CRC-checked record log with
+//!   monotonic sequence numbers exposed as **cursors**, atomic
+//!   segment rotation, bounded retention and a replay that stops
+//!   cleanly at a torn tail.
+//! * [`eventlog`] — the [`crate::middleware::EventBus`] backing
+//!   store: every published event is appended (with its delivery
+//!   scope) before fan-out, giving each event a durable cursor that
+//!   `subscribe` clients use to resume a dropped stream with no gaps
+//!   and no duplicates.
+//! * [`walsched`] — the scheduler write-ahead log: admissions,
+//!   releases, relocations, queue and quota mutations append
+//!   intent/commit records next to the `sched/persist.rs` snapshot;
+//!   on boot the snapshot plus the log suffix reconstructs every live
+//!   lease so the restarted scheduler **re-adopts** them (tokens
+//!   still validate, placements match the hypervisor).
+
+pub mod eventlog;
+pub mod log;
+pub mod walsched;
+
+pub use eventlog::EventJournal;
+pub use log::{Journal, JournalConfig};
+pub use walsched::{
+    LeaseRecord, MemberRecord, RecoveredLive, SchedWal, WalRecord,
+};

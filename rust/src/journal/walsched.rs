@@ -1,0 +1,705 @@
+//! The scheduler write-ahead log: durable grant/queue/quota records.
+//!
+//! Every scheduler mutation that affects durable state appends one
+//! [`WalRecord`] here *while still holding the scheduler state lock*,
+//! so the log order is exactly the order the mutations were applied
+//! in-memory. On boot, `rc3e serve --state DIR` loads the latest
+//! snapshot (`sched/persist.rs`) and folds the WAL suffix past the
+//! snapshot's `wal_cursor` into it via [`RecoveredLive::apply`]; the
+//! result is the set of live leases and queued admissions at the
+//! moment of the crash, which the scheduler then **re-adopts**
+//! (tokens validate again, placements are re-registered with the
+//! hypervisor, queue entries resume waiting).
+//!
+//! Record taxonomy (JSON payloads, `"type"`-tagged):
+//!
+//! * `intent` — an admission is about to be attempted. Never paired
+//!   with state on replay; it exists so a crash *during* an admission
+//!   is diagnosable. Unpaired intents are ignored by recovery.
+//! * `grant` — an admission committed: the full lease (token, tenant,
+//!   gang members with placements).
+//! * `release` / `release_member` — a whole lease or one gang member
+//!   was torn down.
+//! * `rebind` — a member was migrated to a new target region.
+//! * `enqueue` / `dequeue` — an admission entered / permanently left
+//!   the wait queue (grant, terminal rejection or cancel).
+//! * `quota` — a tenant's quota limits changed.
+//!
+//! Compaction: every durable snapshot write records the WAL cursor it
+//! covers; segments at or below that cursor are dropped with
+//! [`SchedWal::retain_from`], bounding replay work to one snapshot
+//! plus the live suffix. See `docs/DURABILITY.md`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::ServiceModel;
+use crate::fpga::board::BoardKind;
+use crate::journal::log::{Journal, JournalConfig};
+use crate::metrics::Registry;
+use crate::sched::{
+    GrantTarget, QueueEntry, RequestClass, TenantQuota,
+};
+use crate::util::ids::{
+    AllocationId, FpgaId, LeaseToken, NodeId, TicketId, UserId, VfpgaId,
+};
+use crate::util::json::Json;
+
+/// Segment size for the scheduler WAL. Grant records are the largest
+/// (a few hundred bytes per gang member); 1 MiB segments give
+/// compaction useful granularity without constant rotation.
+const WAL_SEGMENT_BYTES: u64 = 1024 * 1024;
+
+/// One gang member of a persisted lease: the allocation, where it is
+/// placed, and the accounting facts needed to re-adopt it.
+///
+/// `from_reservation` is deliberately absent: reservations are
+/// in-memory claims that do not survive a restart, so recovery
+/// re-adopts members with no reservation linkage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberRecord {
+    pub alloc: AllocationId,
+    pub target: GrantTarget,
+    /// vFPGA-equivalents charged against quota and accounting.
+    pub units: u64,
+    /// Virtual timestamp of the grant.
+    pub started_ns: u64,
+    /// Per-unit active power (W) for energy accounting.
+    pub charge_w: f64,
+    /// Rebind count carried across restarts (preemption-retry
+    /// signal).
+    pub migrations: u64,
+}
+
+/// One live lease as the WAL (and the snapshot) records it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseRecord {
+    pub token: LeaseToken,
+    pub tenant: UserId,
+    pub model: ServiceModel,
+    pub class: RequestClass,
+    pub co_located: bool,
+    /// Virtual time the admission spent queued before the grant.
+    pub wait_ns: u64,
+    pub members: Vec<MemberRecord>,
+}
+
+/// One scheduler mutation, as appended to the WAL.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// An admission attempt is starting (forensic only — recovery
+    /// ignores intents with no matching `grant`).
+    Intent {
+        user: UserId,
+        model: ServiceModel,
+        class: RequestClass,
+        regions: u64,
+        co_located: bool,
+    },
+    /// An admission committed.
+    Grant(LeaseRecord),
+    /// A whole lease was released.
+    Release { token: LeaseToken },
+    /// One gang member was released (lease may live on).
+    ReleaseMember { alloc: AllocationId },
+    /// A member was migrated to a new target.
+    Rebind {
+        alloc: AllocationId,
+        vfpga: Option<VfpgaId>,
+        fpga: FpgaId,
+        node: NodeId,
+    },
+    /// An admission entered the wait queue.
+    Enqueue(QueueEntry),
+    /// An admission permanently left the queue (granted, rejected
+    /// or cancelled).
+    Dequeue { ticket: TicketId },
+    /// A tenant's quota limits changed.
+    Quota { user: UserId, quota: TenantQuota },
+}
+
+/// The live scheduler state a snapshot + WAL-suffix fold produces.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveredLive {
+    /// Live leases in grant order.
+    pub leases: Vec<LeaseRecord>,
+    /// Still-waiting queue entries in enqueue order.
+    pub queue: Vec<QueueEntry>,
+    /// Quota limits set via the WAL (upserted over the snapshot's).
+    pub quotas: Vec<(UserId, TenantQuota)>,
+}
+
+impl RecoveredLive {
+    /// Fold one WAL record into the recovered state. Application is
+    /// idempotent for re-delivered records (a `grant` with a known
+    /// token replaces, releases of unknown tokens are no-ops).
+    pub fn apply(&mut self, rec: &WalRecord) {
+        match rec {
+            WalRecord::Intent { .. } => {}
+            WalRecord::Grant(lease) => {
+                self.leases.retain(|l| l.token != lease.token);
+                self.leases.push(lease.clone());
+            }
+            WalRecord::Release { token } => {
+                self.leases.retain(|l| l.token != *token);
+            }
+            WalRecord::ReleaseMember { alloc } => {
+                for lease in &mut self.leases {
+                    lease.members.retain(|m| m.alloc != *alloc);
+                }
+                self.leases.retain(|l| !l.members.is_empty());
+            }
+            WalRecord::Rebind { alloc, vfpga, fpga, node } => {
+                for lease in &mut self.leases {
+                    for m in &mut lease.members {
+                        if m.alloc == *alloc {
+                            m.target = match vfpga {
+                                Some(v) => {
+                                    GrantTarget::Vfpga(*v, *fpga, *node)
+                                }
+                                None => {
+                                    GrantTarget::Physical(*fpga, *node)
+                                }
+                            };
+                            m.migrations += 1;
+                        }
+                    }
+                }
+            }
+            WalRecord::Enqueue(entry) => {
+                self.queue.retain(|e| e.ticket != entry.ticket);
+                self.queue.push(entry.clone());
+            }
+            WalRecord::Dequeue { ticket } => {
+                self.queue.retain(|e| e.ticket != *ticket);
+            }
+            WalRecord::Quota { user, quota } => {
+                match self.quotas.iter_mut().find(|(u, _)| u == user) {
+                    Some((_, q)) => *q = *quota,
+                    None => self.quotas.push((*user, *quota)),
+                }
+            }
+        }
+    }
+}
+
+/// Durable, append-only scheduler mutation log.
+///
+/// Retention is unbounded at the log layer; compaction (snapshot +
+/// [`SchedWal::retain_from`]) is what bounds disk usage.
+pub struct SchedWal {
+    log: Journal,
+}
+
+impl SchedWal {
+    /// Open (or create) the scheduler WAL at `dir`.
+    pub fn open(dir: &Path) -> std::io::Result<SchedWal> {
+        let cfg = JournalConfig {
+            segment_bytes: WAL_SEGMENT_BYTES,
+            max_segments: 0,
+        };
+        Ok(SchedWal { log: Journal::open(dir, cfg)? })
+    }
+
+    /// Register `journal.sched.*` instruments on `metrics`.
+    pub fn set_metrics(&self, metrics: Arc<Registry>) {
+        self.log.set_metrics(metrics, "sched");
+    }
+
+    /// Append one record; returns its WAL cursor.
+    pub fn append(&self, rec: &WalRecord) -> std::io::Result<u64> {
+        self.log.append(record_to_json(rec).to_string().as_bytes())
+    }
+
+    /// The cursor the *next* append will receive.
+    pub fn next_cursor(&self) -> u64 {
+        self.log.next_seq()
+    }
+
+    /// Replay every retained record with cursor >= `from`, in
+    /// order. Unparseable records are skipped.
+    pub fn replay_from(
+        &self,
+        from: u64,
+    ) -> std::io::Result<Vec<(u64, WalRecord)>> {
+        let raw = self.log.replay_from(from)?;
+        let mut out = Vec::with_capacity(raw.len());
+        for (cursor, payload) in raw {
+            let Ok(text) = std::str::from_utf8(&payload) else {
+                continue;
+            };
+            let Ok(json) = Json::parse(text) else { continue };
+            if let Some(rec) = record_from_json(&json) {
+                out.push((cursor, rec));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Drop whole segments made redundant by a snapshot covering
+    /// `snapshot_cursor` (the last WAL cursor folded into it).
+    pub fn retain_from(
+        &self,
+        snapshot_cursor: u64,
+    ) -> std::io::Result<usize> {
+        self.log.retain_from(snapshot_cursor.saturating_add(1))
+    }
+
+    /// Force buffered appends to stable storage.
+    pub fn sync(&self) -> std::io::Result<()> {
+        self.log.sync()
+    }
+
+    /// Number of live segments (exposed for tests and metrics).
+    pub fn segment_count(&self) -> usize {
+        self.log.segment_count()
+    }
+}
+
+/// Serialize a lease record (shared by the WAL and snapshot v2).
+pub fn lease_to_json(lease: &LeaseRecord) -> Json {
+    Json::obj(vec![
+        ("token", Json::from(lease.token.to_string())),
+        ("tenant", Json::from(lease.tenant.to_string())),
+        ("model", Json::from(lease.model.name())),
+        ("class", Json::from(lease.class.name())),
+        ("co_located", Json::from(lease.co_located)),
+        ("wait_ns", Json::from(lease.wait_ns)),
+        (
+            "members",
+            Json::Arr(lease.members.iter().map(member_to_json).collect()),
+        ),
+    ])
+}
+
+/// Parse a lease record; `None` on any malformed field.
+pub fn lease_from_json(j: &Json) -> Option<LeaseRecord> {
+    let members = j
+        .get("members")
+        .as_arr()?
+        .iter()
+        .map(member_from_json)
+        .collect::<Option<Vec<_>>>()?;
+    Some(LeaseRecord {
+        token: LeaseToken::parse(j.get("token").as_str()?)?,
+        tenant: UserId::parse(j.get("tenant").as_str()?)?,
+        model: ServiceModel::parse(j.get("model").as_str()?)?,
+        class: RequestClass::parse(j.get("class").as_str()?)?,
+        co_located: j.get("co_located").as_bool()?,
+        wait_ns: j.get("wait_ns").as_u64()?,
+        members,
+    })
+}
+
+fn member_to_json(m: &MemberRecord) -> Json {
+    let mut j = Json::obj(vec![
+        ("alloc", Json::from(m.alloc.to_string())),
+        ("units", Json::from(m.units)),
+        ("started_ns", Json::from(m.started_ns)),
+        ("charge_w", Json::from(m.charge_w)),
+        ("migrations", Json::from(m.migrations)),
+    ]);
+    set_target(&mut j, m.target);
+    j
+}
+
+fn member_from_json(j: &Json) -> Option<MemberRecord> {
+    Some(MemberRecord {
+        alloc: AllocationId::parse(j.get("alloc").as_str()?)?,
+        target: get_target(j)?,
+        units: j.get("units").as_u64()?,
+        started_ns: j.get("started_ns").as_u64()?,
+        charge_w: j.get("charge_w").as_f64()?,
+        migrations: j.get("migrations").as_u64()?,
+    })
+}
+
+fn set_target(j: &mut Json, target: GrantTarget) {
+    match target {
+        GrantTarget::Vfpga(v, f, n) => {
+            j.set("kind", Json::from("vfpga"));
+            j.set("vfpga", Json::from(v.to_string()));
+            j.set("fpga", Json::from(f.to_string()));
+            j.set("node", Json::from(n.to_string()));
+        }
+        GrantTarget::Physical(f, n) => {
+            j.set("kind", Json::from("physical"));
+            j.set("fpga", Json::from(f.to_string()));
+            j.set("node", Json::from(n.to_string()));
+        }
+    }
+}
+
+fn get_target(j: &Json) -> Option<GrantTarget> {
+    let fpga = FpgaId::parse(j.get("fpga").as_str()?)?;
+    let node = NodeId::parse(j.get("node").as_str()?)?;
+    match j.get("kind").as_str()? {
+        "vfpga" => {
+            let v = VfpgaId::parse(j.get("vfpga").as_str()?)?;
+            Some(GrantTarget::Vfpga(v, fpga, node))
+        }
+        "physical" => Some(GrantTarget::Physical(fpga, node)),
+        _ => None,
+    }
+}
+
+/// Serialize a queue entry (shared by the WAL and snapshot v2).
+pub fn queue_entry_to_json(e: &QueueEntry) -> Json {
+    let mut j = Json::obj(vec![
+        ("ticket", Json::from(e.ticket.to_string())),
+        ("user", Json::from(e.user.to_string())),
+        ("model", Json::from(e.model.name())),
+        ("class", Json::from(e.class.name())),
+        ("regions", Json::from(e.regions)),
+        ("co_located", Json::from(e.co_located)),
+        ("enqueued_ns", Json::from(e.enqueued_ns)),
+        ("seq", Json::from(e.seq)),
+        ("skipped", Json::from(e.skipped)),
+    ]);
+    if let Some(board) = e.board {
+        j.set("board", Json::from(board.name()));
+    }
+    if let Some(deadline) = e.deadline_ns {
+        j.set("deadline_ns", Json::from(deadline));
+    }
+    j
+}
+
+/// Parse a queue entry; `None` on any malformed field.
+pub fn queue_entry_from_json(j: &Json) -> Option<QueueEntry> {
+    let board = match j.get("board").as_str() {
+        Some(s) => Some(BoardKind::parse(s)?),
+        None => None,
+    };
+    Some(QueueEntry {
+        ticket: TicketId::parse(j.get("ticket").as_str()?)?,
+        user: UserId::parse(j.get("user").as_str()?)?,
+        model: ServiceModel::parse(j.get("model").as_str()?)?,
+        class: RequestClass::parse(j.get("class").as_str()?)?,
+        regions: j.get("regions").as_u64()?,
+        co_located: j.get("co_located").as_bool()?,
+        board,
+        deadline_ns: j.get("deadline_ns").as_u64(),
+        enqueued_ns: j.get("enqueued_ns").as_u64()?,
+        seq: j.get("seq").as_u64()?,
+        skipped: j.get("skipped").as_u64()?,
+    })
+}
+
+fn quota_to_json(user: UserId, q: TenantQuota) -> Json {
+    let mut j = Json::obj(vec![
+        ("user", Json::from(user.to_string())),
+        ("max_concurrent", Json::from(q.max_concurrent)),
+        ("weight", Json::from(q.weight)),
+    ]);
+    if let Some(budget) = q.device_seconds_budget {
+        j.set("budget_s", Json::from(budget));
+    }
+    j
+}
+
+fn quota_from_json(j: &Json) -> Option<(UserId, TenantQuota)> {
+    Some((
+        UserId::parse(j.get("user").as_str()?)?,
+        TenantQuota {
+            max_concurrent: j.get("max_concurrent").as_u64()?,
+            device_seconds_budget: j.get("budget_s").as_f64(),
+            weight: j.get("weight").as_u64()?,
+        },
+    ))
+}
+
+fn record_to_json(rec: &WalRecord) -> Json {
+    match rec {
+        WalRecord::Intent { user, model, class, regions, co_located } => {
+            Json::obj(vec![
+                ("type", Json::from("intent")),
+                ("user", Json::from(user.to_string())),
+                ("model", Json::from(model.name())),
+                ("class", Json::from(class.name())),
+                ("regions", Json::from(*regions)),
+                ("co_located", Json::from(*co_located)),
+            ])
+        }
+        WalRecord::Grant(lease) => Json::obj(vec![
+            ("type", Json::from("grant")),
+            ("lease", lease_to_json(lease)),
+        ]),
+        WalRecord::Release { token } => Json::obj(vec![
+            ("type", Json::from("release")),
+            ("token", Json::from(token.to_string())),
+        ]),
+        WalRecord::ReleaseMember { alloc } => Json::obj(vec![
+            ("type", Json::from("release_member")),
+            ("alloc", Json::from(alloc.to_string())),
+        ]),
+        WalRecord::Rebind { alloc, vfpga, fpga, node } => {
+            let mut j = Json::obj(vec![
+                ("type", Json::from("rebind")),
+                ("alloc", Json::from(alloc.to_string())),
+                ("fpga", Json::from(fpga.to_string())),
+                ("node", Json::from(node.to_string())),
+            ]);
+            if let Some(v) = vfpga {
+                j.set("vfpga", Json::from(v.to_string()));
+            }
+            j
+        }
+        WalRecord::Enqueue(entry) => Json::obj(vec![
+            ("type", Json::from("enqueue")),
+            ("entry", queue_entry_to_json(entry)),
+        ]),
+        WalRecord::Dequeue { ticket } => Json::obj(vec![
+            ("type", Json::from("dequeue")),
+            ("ticket", Json::from(ticket.to_string())),
+        ]),
+        WalRecord::Quota { user, quota } => {
+            let mut j = quota_to_json(*user, *quota);
+            j.set("type", Json::from("quota"));
+            j
+        }
+    }
+}
+
+fn record_from_json(j: &Json) -> Option<WalRecord> {
+    match j.get("type").as_str()? {
+        "intent" => Some(WalRecord::Intent {
+            user: UserId::parse(j.get("user").as_str()?)?,
+            model: ServiceModel::parse(j.get("model").as_str()?)?,
+            class: RequestClass::parse(j.get("class").as_str()?)?,
+            regions: j.get("regions").as_u64()?,
+            co_located: j.get("co_located").as_bool()?,
+        }),
+        "grant" => Some(WalRecord::Grant(lease_from_json(j.get("lease"))?)),
+        "release" => Some(WalRecord::Release {
+            token: LeaseToken::parse(j.get("token").as_str()?)?,
+        }),
+        "release_member" => Some(WalRecord::ReleaseMember {
+            alloc: AllocationId::parse(j.get("alloc").as_str()?)?,
+        }),
+        "rebind" => Some(WalRecord::Rebind {
+            alloc: AllocationId::parse(j.get("alloc").as_str()?)?,
+            vfpga: match j.get("vfpga").as_str() {
+                Some(s) => Some(VfpgaId::parse(s)?),
+                None => None,
+            },
+            fpga: FpgaId::parse(j.get("fpga").as_str()?)?,
+            node: NodeId::parse(j.get("node").as_str()?)?,
+        }),
+        "enqueue" => Some(WalRecord::Enqueue(queue_entry_from_json(
+            j.get("entry"),
+        )?)),
+        "dequeue" => Some(WalRecord::Dequeue {
+            ticket: TicketId::parse(j.get("ticket").as_str()?)?,
+        }),
+        "quota" => {
+            let (user, quota) = quota_from_json(j)?;
+            Some(WalRecord::Quota { user, quota })
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "rc3e_walsched_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn lease(token_bits: u128, allocs: &[u64]) -> LeaseRecord {
+        LeaseRecord {
+            token: LeaseToken(token_bits),
+            tenant: UserId(1),
+            model: ServiceModel::RAaaS,
+            class: RequestClass::Normal,
+            co_located: allocs.len() > 1,
+            wait_ns: 1_500_000,
+            members: allocs
+                .iter()
+                .map(|&a| MemberRecord {
+                    alloc: AllocationId(a),
+                    target: GrantTarget::Vfpga(
+                        VfpgaId(a * 10),
+                        FpgaId(2),
+                        NodeId(0),
+                    ),
+                    units: 1,
+                    started_ns: 42,
+                    charge_w: 4.5,
+                    migrations: 0,
+                })
+                .collect(),
+        }
+    }
+
+    fn entry(ticket: u64) -> QueueEntry {
+        QueueEntry {
+            ticket: TicketId(ticket),
+            user: UserId(2),
+            model: ServiceModel::RAaaS,
+            class: RequestClass::Batch,
+            regions: 2,
+            co_located: true,
+            board: Some(BoardKind::Vc707),
+            deadline_ns: Some(9_000_000_000),
+            enqueued_ns: 77,
+            seq: ticket,
+            skipped: 3,
+        }
+    }
+
+    #[test]
+    fn every_record_type_round_trips() {
+        let records = vec![
+            WalRecord::Intent {
+                user: UserId(4),
+                model: ServiceModel::RSaaS,
+                class: RequestClass::Interactive,
+                regions: 1,
+                co_located: false,
+            },
+            WalRecord::Grant(lease(0xABCD, &[7, 8])),
+            WalRecord::Release { token: LeaseToken(0xABCD) },
+            WalRecord::ReleaseMember { alloc: AllocationId(8) },
+            WalRecord::Rebind {
+                alloc: AllocationId(7),
+                vfpga: Some(VfpgaId(3)),
+                fpga: FpgaId(1),
+                node: NodeId(1),
+            },
+            WalRecord::Rebind {
+                alloc: AllocationId(9),
+                vfpga: None,
+                fpga: FpgaId(5),
+                node: NodeId(2),
+            },
+            WalRecord::Enqueue(entry(11)),
+            WalRecord::Dequeue { ticket: TicketId(11) },
+            WalRecord::Quota {
+                user: UserId(2),
+                quota: TenantQuota {
+                    max_concurrent: 3,
+                    device_seconds_budget: Some(120.5),
+                    weight: 2,
+                },
+            },
+        ];
+        for rec in &records {
+            let json = record_to_json(rec);
+            let parsed =
+                Json::parse(&json.to_string()).expect("wire form parses");
+            assert_eq!(
+                record_from_json(&parsed).as_ref(),
+                Some(rec),
+                "round trip of {rec:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn wal_append_and_replay_across_reopen() {
+        let dir = tmp_dir("reopen");
+        let granted = lease(0x51, &[1, 2]);
+        {
+            let wal = SchedWal::open(&dir).unwrap();
+            assert_eq!(
+                wal.append(&WalRecord::Grant(granted.clone())).unwrap(),
+                1
+            );
+            wal.append(&WalRecord::Enqueue(entry(5))).unwrap();
+        }
+        let wal = SchedWal::open(&dir).unwrap();
+        assert_eq!(wal.next_cursor(), 3);
+        let replay = wal.replay_from(1).unwrap();
+        assert_eq!(replay.len(), 2);
+        assert_eq!(replay[0].1, WalRecord::Grant(granted));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fold_reconstructs_live_state() {
+        let mut live = RecoveredLive::default();
+        // Two grants, one fully released, one loses a member then
+        // migrates the survivor.
+        live.apply(&WalRecord::Grant(lease(0xA, &[1, 2])));
+        live.apply(&WalRecord::Grant(lease(0xB, &[3])));
+        live.apply(&WalRecord::Release { token: LeaseToken(0xB) });
+        live.apply(&WalRecord::ReleaseMember { alloc: AllocationId(2) });
+        live.apply(&WalRecord::Rebind {
+            alloc: AllocationId(1),
+            vfpga: Some(VfpgaId(9)),
+            fpga: FpgaId(3),
+            node: NodeId(1),
+        });
+        assert_eq!(live.leases.len(), 1);
+        let survivor = &live.leases[0];
+        assert_eq!(survivor.token, LeaseToken(0xA));
+        assert_eq!(survivor.members.len(), 1);
+        assert_eq!(
+            survivor.members[0].target,
+            GrantTarget::Vfpga(VfpgaId(9), FpgaId(3), NodeId(1))
+        );
+        assert_eq!(survivor.members[0].migrations, 1);
+        // Queue: enqueue two, dequeue one.
+        live.apply(&WalRecord::Enqueue(entry(1)));
+        live.apply(&WalRecord::Enqueue(entry(2)));
+        live.apply(&WalRecord::Dequeue { ticket: TicketId(1) });
+        assert_eq!(live.queue.len(), 1);
+        assert_eq!(live.queue[0].ticket, TicketId(2));
+        // Quota upsert.
+        let q1 = TenantQuota {
+            max_concurrent: 9,
+            device_seconds_budget: None,
+            weight: 1,
+        };
+        let q2 = TenantQuota { max_concurrent: 2, ..q1 };
+        live.apply(&WalRecord::Quota { user: UserId(2), quota: q1 });
+        live.apply(&WalRecord::Quota { user: UserId(2), quota: q2 });
+        assert_eq!(live.quotas, vec![(UserId(2), q2)]);
+        // A member release that empties a lease drops the lease.
+        live.apply(&WalRecord::ReleaseMember { alloc: AllocationId(1) });
+        assert!(live.leases.is_empty());
+    }
+
+    #[test]
+    fn release_of_unknown_lease_is_noop() {
+        let mut live = RecoveredLive::default();
+        live.apply(&WalRecord::Grant(lease(0xA, &[1])));
+        live.apply(&WalRecord::Release { token: LeaseToken(0xFF) });
+        live.apply(&WalRecord::Dequeue { ticket: TicketId(99) });
+        assert_eq!(live.leases.len(), 1);
+    }
+
+    #[test]
+    fn compaction_drops_covered_segments() {
+        let dir = tmp_dir("compact");
+        // Small segments so rotation happens without megabytes of
+        // appends; the production path only differs in size.
+        let cfg = JournalConfig { segment_bytes: 2048, max_segments: 0 };
+        let wal = SchedWal { log: Journal::open(&dir, cfg).unwrap() };
+        // Force several rotations with bulky grant records.
+        let mut last = 0;
+        while wal.segment_count() < 4 {
+            last = wal
+                .append(&WalRecord::Grant(lease(
+                    last as u128 + 1,
+                    &[1, 2, 3, 4],
+                )))
+                .unwrap();
+        }
+        let before = wal.segment_count();
+        wal.retain_from(last).unwrap();
+        assert!(wal.segment_count() < before);
+        // Replay from past the snapshot cursor still works.
+        let replay = wal.replay_from(last + 1).unwrap();
+        assert!(replay.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -43,6 +43,11 @@
 //!   per-worker region pair, accrual split at job boundaries).
 //! * [`vm`] — virtual-machine allocation extension (RSaaS).
 //! * [`service`] — RSaaS / RAaaS / BAaaS façades.
+//! * [`journal`] — durability subsystem: segmented CRC-checked
+//!   record log with cursors, the event-journal backing store for
+//!   resumable subscriptions, and the scheduler write-ahead log that
+//!   lets `rc3e serve --state DIR` re-adopt live leases after a
+//!   crash (`docs/DURABILITY.md`).
 //! * [`metrics`] — counters, histograms and report tables.
 //! * [`testing`] — property-testing mini-framework + failure
 //!   injection used across the test suite and benches.
@@ -57,6 +62,7 @@ pub mod fifo;
 pub mod fpga;
 pub mod hls;
 pub mod hypervisor;
+pub mod journal;
 pub mod metrics;
 pub mod middleware;
 pub mod pcie;

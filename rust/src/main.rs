@@ -146,6 +146,12 @@ fn flag_specs() -> Vec<FlagSpec> {
             help: "watch: server-side stream bound per round",
         },
         FlagSpec {
+            name: "resume",
+            takes_value: true,
+            help: "watch: replay journaled events from this cursor \
+                   before going live (gapless across restarts)",
+        },
+        FlagSpec {
             name: "max-events",
             takes_value: true,
             help: "watch: close the stream after N events",
@@ -316,23 +322,61 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Hypervisor::boot(&config, clock, PlacementPolicy::ConsolidateFirst)
             .map_err(|e| e.to_string())?,
     );
-    let server = ManagementServer::spawn(
+    let state_dir = match args.get("state") {
+        Some(dir) => {
+            let dir = std::path::PathBuf::from(dir);
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("--state {}: {e}", dir.display()))?;
+            Some(dir)
+        }
+        None => None,
+    };
+    if let Some(dir) = &state_dir {
+        // A restarted management node must mint the same UserIds for
+        // the same tenants (lease recovery matches on tenant id) and
+        // must never reuse a pre-crash AllocationId for a fresh
+        // lease: restore the user table and the id-generator floors
+        // from the previous life's device DB before re-saving it.
+        let db_path = dir.join("devices.json");
+        if db_path.exists() {
+            let old = rc3e::hypervisor::DeviceDb::load(&db_path)?;
+            let mut db = hv.db.lock().unwrap();
+            for (id, name) in &old.users {
+                db.users.insert(*id, name.clone());
+                db.user_ids.bump_past(id.0);
+            }
+            for id in old.allocations.keys() {
+                db.alloc_ids.bump_past(id.0);
+            }
+            for a in old.allocations.values() {
+                if let rc3e::hypervisor::AllocKind::Vm(vm, _) = a.kind {
+                    db.vm_ids.bump_past(vm.0);
+                }
+            }
+            eprintln!(
+                "restart: restored {} users from {}",
+                old.users.len(),
+                db_path.display()
+            );
+        }
+    }
+    let server = ManagementServer::spawn_with_state(
         Arc::clone(&hv),
         config.rpc_overhead_ms,
+        state_dir.as_deref(),
     )
     .map_err(|e| e.to_string())?;
-    if let Some(dir) = args.get("state") {
-        // Persist the device DB and the scheduler's quota/usage
-        // state side by side; a restarted management node reloads
-        // accounting from the same directory.
-        let dir = std::path::PathBuf::from(dir);
-        std::fs::create_dir_all(&dir)
-            .map_err(|e| format!("--state {}: {e}", dir.display()))?;
+    if let Some(dir) = &state_dir {
+        // Persist the device DB, the event journal and the
+        // scheduler's snapshot + WAL side by side; a restarted
+        // management node reloads accounting AND re-adopts live
+        // leases + queued admissions from the same directory.
         let db_path = dir.join("devices.json");
         hv.db.lock().unwrap().save(&db_path)?;
         server.scheduler().attach_persistence(&db_path)?;
         eprintln!(
-            "state dir {} (device DB + scheduler accounting)",
+            "state dir {} (device DB + event journal + scheduler \
+             snapshot/WAL)",
             dir.display()
         );
     }
@@ -705,6 +749,7 @@ fn follow_job(
                 lease: token,
                 max_events: None,
                 timeout_s: Some(5.0),
+                from_cursor: None,
             })
             .map_err(|e| e.to_string())?;
         for frame in stream {
@@ -770,6 +815,21 @@ fn cmd_watch(args: &Args) -> Result<(), String> {
         None => None,
     };
     let lease = lease_flag(args)?;
+    // Resume position: replay journaled events from this cursor
+    // before going live (survives server restarts — cursors are
+    // journal sequence numbers). The last cursor seen is carried into
+    // every re-subscription, so a long watch never sees a gap or a
+    // duplicate across rounds. Delivery is at-least-once on the wire;
+    // the `c <= last` skip below is the client-side dedup that makes
+    // it exactly-once (docs/PROTOCOL.md, docs/DURABILITY.md).
+    let mut last_cursor: Option<u64> = match args.get("resume") {
+        Some(v) => {
+            let from =
+                v.parse::<u64>().map_err(|e| format!("--resume: {e}"))?;
+            from.checked_sub(1)
+        }
+        None => None,
+    };
     // Long watch: one server-side window per round, re-subscribing
     // when the terminal frame arrives (see docs/PROTOCOL.md). An
     // explicit --max-events bounds the watch to a single round.
@@ -780,6 +840,7 @@ fn cmd_watch(args: &Args) -> Result<(), String> {
                 lease,
                 max_events,
                 timeout_s,
+                from_cursor: last_cursor.map(|c| c + 1),
             })
             .map_err(|e| e.to_string())?;
         eprintln!(
@@ -789,7 +850,15 @@ fn cmd_watch(args: &Args) -> Result<(), String> {
         );
         for frame in stream {
             let frame = frame.map_err(|e| e.to_string())?;
-            println!("#{:<5} {}", frame.seq, frame.event.to_json());
+            if let Some(c) = frame.cursor {
+                if last_cursor.map_or(false, |last| c <= last) {
+                    continue;
+                }
+                last_cursor = Some(c);
+                println!("@{:<6} {}", c, frame.event.to_json());
+            } else {
+                println!("#{:<5} {}", frame.seq, frame.event.to_json());
+            }
         }
         if max_events.is_some() {
             return Ok(());

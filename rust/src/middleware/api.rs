@@ -2653,6 +2653,11 @@ pub struct SubscribeRequest {
     /// Server-side stream bound in wall seconds (clamped like
     /// `job_wait`; long watches re-subscribe on the terminal frame).
     pub timeout_s: Option<f64>,
+    /// Resume position: replay journaled events with cursor >= this
+    /// before switching to live delivery (gapless when the cursor is
+    /// still within the journal's retention window). Clients quote
+    /// the cursor from the last frame they saw, plus one.
+    pub from_cursor: Option<u64>,
 }
 
 impl SubscribeRequest {
@@ -2665,6 +2670,9 @@ impl SubscribeRequest {
         if let Some(t) = self.timeout_s {
             j.set("timeout_s", Json::from(t));
         }
+        if let Some(c) = self.from_cursor {
+            j.set("from_cursor", Json::from(c));
+        }
         j
     }
 
@@ -2674,6 +2682,7 @@ impl SubscribeRequest {
             lease: opt_lease(p, "lease")?,
             max_events: opt_u64(p, "max_events"),
             timeout_s: opt_f64(p, "timeout_s"),
+            from_cursor: opt_u64(p, "from_cursor"),
         })
     }
 }

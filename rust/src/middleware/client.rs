@@ -706,6 +706,11 @@ impl Client {
 pub struct EventFrame {
     pub seq: u64,
     pub event: Event,
+    /// Durable journal cursor of the event. Quote `cursor + 1` as
+    /// `SubscribeRequest::from_cursor` to resume after this frame
+    /// with no gaps and (after client-side dedup) no duplicates.
+    /// `None` from servers without an event journal surface.
+    pub cursor: Option<u64>,
 }
 
 /// Iterator-style handle over one `subscribe` stream. Yields frames
@@ -763,6 +768,7 @@ impl EventStream<'_> {
         Ok(Some(EventFrame {
             seq: sf.seq,
             event: Event::from_json(&event)?,
+            cursor: sf.cursor,
         }))
     }
 }
@@ -893,6 +899,7 @@ mod tests {
                 lease: None,
                 max_events: None,
                 timeout_s: None,
+                from_cursor: None,
             })
             .unwrap()
             .map(|r| r.unwrap())
@@ -920,6 +927,7 @@ mod tests {
                     lease: None,
                     max_events: None,
                     timeout_s: None,
+                    from_cursor: None,
                 })
                 .unwrap();
             // Read only the first of two frames, then drop.

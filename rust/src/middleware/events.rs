@@ -30,6 +30,18 @@
 //! stops draining loses its *oldest* events (counted in
 //! [`Subscription::dropped`] and the `events.dropped` counter)
 //! instead of wedging the dispatcher.
+//!
+//! **Cursors.** Every fanned-out event carries a cursor: a dense,
+//! monotonically increasing position in the bus history. When an
+//! [`EventJournal`] is attached ([`EventBus::attach_journal`]) the
+//! cursor is the journal sequence number and the event is appended to
+//! disk *before* any subscriber queue sees it — so a reconnecting
+//! client can quote `from_cursor`, have the server replay the gap
+//! from the journal ([`EventBus::replay_for`]) and then switch to
+//! live delivery with no gaps and no duplicates (dedup by cursor).
+//! Without a journal the cursor is a process-local counter: resume
+//! only works within one server lifetime, but the frame format is
+//! identical. See `docs/DURABILITY.md`.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -37,6 +49,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use super::api::{Event, SubscriptionFilter};
+use crate::journal::EventJournal;
 use crate::metrics::Registry;
 use crate::util::ids::{LeaseToken, UserId};
 
@@ -64,7 +77,7 @@ pub struct Subscription {
     token: Option<LeaseToken>,
     /// Tenant the token resolved to (tenant-scope matching).
     tenant: Option<UserId>,
-    queue: Mutex<VecDeque<Event>>,
+    queue: Mutex<VecDeque<(u64, Event)>>,
     ready: Condvar,
     closed: AtomicBool,
     dropped: AtomicU64,
@@ -105,9 +118,9 @@ impl Subscription {
         }
     }
 
-    /// Enqueue one event; returns true when the bounded queue evicted
-    /// its oldest entry to make room.
-    fn push(&self, event: Event) -> bool {
+    /// Enqueue one cursor-stamped event; returns true when the
+    /// bounded queue evicted its oldest entry to make room.
+    fn push(&self, cursor: u64, event: Event) -> bool {
         let mut q = self.queue.lock().unwrap();
         let mut evicted = false;
         if q.len() == SUBSCRIPTION_QUEUE_CAP {
@@ -115,7 +128,7 @@ impl Subscription {
             self.dropped.fetch_add(1, Ordering::Relaxed);
             evicted = true;
         }
-        q.push_back(event);
+        q.push_back((cursor, event));
         self.high_water.fetch_max(q.len() as u64, Ordering::Relaxed);
         self.delivered.fetch_add(1, Ordering::Relaxed);
         drop(q);
@@ -126,11 +139,20 @@ impl Subscription {
     /// Next queued event, blocking up to `timeout` of wall time.
     /// `None` on expiry or when the subscription was closed.
     pub fn next(&self, timeout: Duration) -> Option<Event> {
+        self.next_with_cursor(timeout).map(|(_, ev)| ev)
+    }
+
+    /// Like [`Subscription::next`], but also yields the event's
+    /// cursor (the position resume clients quote as `from_cursor`).
+    pub fn next_with_cursor(
+        &self,
+        timeout: Duration,
+    ) -> Option<(u64, Event)> {
         let deadline = Instant::now() + timeout;
         let mut q = self.queue.lock().unwrap();
         loop {
-            if let Some(ev) = q.pop_front() {
-                return Some(ev);
+            if let Some(entry) = q.pop_front() {
+                return Some(entry);
             }
             if self.closed.load(Ordering::SeqCst) {
                 return None;
@@ -147,7 +169,7 @@ impl Subscription {
 
     /// Drain without blocking (tests, shutdown).
     pub fn drain(&self) -> Vec<Event> {
-        self.queue.lock().unwrap().drain(..).collect()
+        self.queue.lock().unwrap().drain(..).map(|(_, ev)| ev).collect()
     }
 }
 
@@ -173,6 +195,12 @@ pub struct EventBus {
     /// Counters land here when wired (`events.published`,
     /// `events.delivered`, `events.dropped`).
     metrics: Mutex<Option<Arc<Registry>>>,
+    /// Durable backing store; when attached, every event is appended
+    /// here (assigning its cursor) before any subscriber sees it.
+    journal: Mutex<Option<Arc<EventJournal>>>,
+    /// Last cursor assigned. Without a journal this counter mints
+    /// cursors; with one it mirrors the journal sequence.
+    cursor: AtomicU64,
 }
 
 impl EventBus {
@@ -185,6 +213,8 @@ impl EventBus {
             processed: Mutex::new(0),
             processed_cv: Condvar::new(),
             metrics: Mutex::new(None),
+            journal: Mutex::new(None),
+            cursor: AtomicU64::new(0),
         });
         // The dispatcher holds only a Weak: when the last Arc drops,
         // the sender inside it drops, recv() errors and the thread
@@ -205,6 +235,23 @@ impl EventBus {
     /// Wire a metrics registry for bus counters.
     pub fn set_metrics(&self, metrics: Arc<Registry>) {
         *self.metrics.lock().unwrap() = Some(metrics);
+    }
+
+    /// Attach the durable event journal. Cursors continue from the
+    /// journal's persisted history, so an event published after a
+    /// restart never reuses a pre-crash cursor. Call before serving
+    /// traffic (cursors minted earlier would not be on disk).
+    pub fn attach_journal(&self, journal: Arc<EventJournal>) {
+        self.cursor.store(
+            journal.next_cursor().saturating_sub(1),
+            Ordering::SeqCst,
+        );
+        *self.journal.lock().unwrap() = Some(journal);
+    }
+
+    /// Last cursor assigned to any event (0 before the first one).
+    pub fn last_cursor(&self) -> u64 {
+        self.cursor.load(Ordering::SeqCst)
     }
 
     /// Register a subscription. `token` is the capability presented
@@ -274,10 +321,64 @@ impl EventBus {
         }
     }
 
-    /// Dispatcher half of [`EventBus::publish`]: fan one event out to
-    /// every subscription whose scope and filter admit it. Never
-    /// blocks on consumers (bounded drop-oldest queues).
+    /// Replay journaled history for one subscription: every retained
+    /// event with cursor >= `from` that the subscription's scope and
+    /// filter admit, in cursor order. Empty without a journal. The
+    /// server's subscribe loop calls this *after* registering the
+    /// subscription, then skips live events at or below the last
+    /// replayed cursor — that overlap discipline is what makes resume
+    /// gapless and duplicate-free.
+    pub fn replay_for(
+        &self,
+        sub: &Subscription,
+        from: u64,
+    ) -> Vec<(u64, Event)> {
+        let journal = self.journal.lock().unwrap().clone();
+        let Some(journal) = journal else { return Vec::new() };
+        let t0 = Instant::now();
+        let records = match journal.replay_from(from) {
+            Ok(records) => records,
+            Err(e) => {
+                log::warn!("event journal replay failed: {e}");
+                return Vec::new();
+            }
+        };
+        let out: Vec<(u64, Event)> = records
+            .into_iter()
+            .filter(|(_, ev, scope)| {
+                sub.scope_admits(*scope) && sub.filter.matches(ev)
+            })
+            .map(|(cursor, ev, _)| (cursor, ev))
+            .collect();
+        if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+            m.histogram("journal.events.replay")
+                .record_us(t0.elapsed().as_micros() as u64);
+        }
+        out
+    }
+
+    /// Dispatcher half of [`EventBus::publish`]: assign the event its
+    /// cursor (journal append first, when attached — the disk sees an
+    /// event before any subscriber can), then fan it out to every
+    /// subscription whose scope and filter admit it. Never blocks on
+    /// consumers (bounded drop-oldest queues).
     fn fanout(&self, event: Event, scope: Scope) {
+        let cursor = {
+            let journal = self.journal.lock().unwrap();
+            match journal.as_ref().map(|j| j.append(&event, scope)) {
+                Some(Ok(cursor)) => {
+                    self.cursor.store(cursor, Ordering::SeqCst);
+                    cursor
+                }
+                Some(Err(e)) => {
+                    // Degrade to live-only delivery rather than
+                    // wedging the bus; resume loses this event.
+                    log::warn!("event journal append failed: {e}");
+                    self.cursor.fetch_add(1, Ordering::SeqCst) + 1
+                }
+                None => self.cursor.fetch_add(1, Ordering::SeqCst) + 1,
+            }
+        };
         let subs: Vec<Arc<Subscription>> = {
             let st = self.state.lock().unwrap();
             st.subs.values().cloned().collect()
@@ -287,7 +388,7 @@ impl EventBus {
         let mut high_water = 0u64;
         for sub in subs {
             if sub.scope_admits(scope) && sub.filter.matches(&event) {
-                if sub.push(event.clone()) {
+                if sub.push(cursor, event.clone()) {
                     dropped += 1;
                 }
                 delivered += 1;
@@ -445,6 +546,98 @@ mod tests {
                 Some(Event::QueueDepth { depth: i })
             );
         }
+    }
+
+    #[test]
+    fn cursors_are_dense_without_a_journal() {
+        let bus = EventBus::new();
+        let sub = bus.subscribe(SubscriptionFilter::all(), None, None);
+        for i in 0..5u64 {
+            bus.publish(Event::QueueDepth { depth: i }, Scope::Public);
+        }
+        bus.flush();
+        for want in 1..=5u64 {
+            let (cursor, _) =
+                sub.next_with_cursor(Duration::from_secs(1)).unwrap();
+            assert_eq!(cursor, want);
+        }
+        assert_eq!(bus.last_cursor(), 5);
+    }
+
+    #[test]
+    fn journal_replay_respects_scope_and_filter() {
+        let dir = std::env::temp_dir().join(format!(
+            "rc3e_bus_journal_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let journal = Arc::new(EventJournal::open(&dir).unwrap());
+        let bus = EventBus::new();
+        bus.attach_journal(Arc::clone(&journal));
+        let mine = LeaseToken::mint();
+        // Publish with nobody subscribed: one public, one scoped to
+        // a token this subscriber won't hold.
+        bus.publish(Event::QueueDepth { depth: 1 }, Scope::Public);
+        bus.publish(progress(9), Scope::Token(mine));
+        bus.publish(Event::QueueDepth { depth: 2 }, Scope::Public);
+        bus.flush();
+        // A late public subscriber replays only what it could have
+        // seen live: the two public events, in cursor order.
+        let sub = bus.subscribe(SubscriptionFilter::all(), None, None);
+        let replayed = bus.replay_for(&sub, 1);
+        assert_eq!(replayed.len(), 2);
+        assert_eq!(replayed[0].0, 1);
+        assert_eq!(replayed[1].0, 3);
+        // The token holder additionally sees its scoped event.
+        let owner = bus.subscribe(
+            SubscriptionFilter::all(),
+            Some(mine),
+            None,
+        );
+        assert_eq!(bus.replay_for(&owner, 1).len(), 3);
+        // Live cursors continue past the journaled history.
+        bus.publish(Event::QueueDepth { depth: 3 }, Scope::Public);
+        bus.flush();
+        let (cursor, _) =
+            sub.next_with_cursor(Duration::from_secs(1)).unwrap();
+        assert_eq!(cursor, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn attached_journal_resumes_cursors_across_bus_restart() {
+        let dir = std::env::temp_dir().join(format!(
+            "rc3e_bus_restart_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let journal = Arc::new(EventJournal::open(&dir).unwrap());
+            let bus = EventBus::new();
+            bus.attach_journal(journal);
+            bus.publish(Event::QueueDepth { depth: 0 }, Scope::Public);
+            bus.publish(Event::QueueDepth { depth: 1 }, Scope::Public);
+            bus.flush();
+        }
+        // A fresh bus over the same directory continues at cursor 3 —
+        // pre-crash cursors are never reused.
+        let journal = Arc::new(EventJournal::open(&dir).unwrap());
+        let bus = EventBus::new();
+        bus.attach_journal(journal);
+        assert_eq!(bus.last_cursor(), 2);
+        let sub = bus.subscribe(SubscriptionFilter::all(), None, None);
+        bus.publish(Event::QueueDepth { depth: 2 }, Scope::Public);
+        bus.flush();
+        let (cursor, _) =
+            sub.next_with_cursor(Duration::from_secs(1)).unwrap();
+        assert_eq!(cursor, 3);
+        // The gap (cursors 1..=2) replays from disk.
+        let replayed = bus.replay_for(&sub, 1);
+        assert_eq!(
+            replayed.iter().map(|(c, _)| *c).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -234,6 +234,11 @@ pub struct StreamFrame {
     /// The frame payload (a typed [`super::api::Event`] for
     /// `subscribe` streams); `None` on the terminal frame.
     pub event: Option<Json>,
+    /// Durable position of this event in the server's event journal.
+    /// A client quotes it back as `subscribe.from_cursor` to resume a
+    /// dropped stream without gaps; dense per server history (unlike
+    /// `seq`, which is per stream). Absent on terminal frames.
+    pub cursor: Option<u64>,
     /// Terminal marker: no more frames follow.
     pub end: bool,
     /// Why the stream ended, when it ended abnormally.
@@ -250,16 +255,24 @@ impl StreamFrame {
         StreamFrame {
             seq,
             event: Some(event),
+            cursor: None,
             end: false,
             error: None,
             stats: None,
         }
     }
 
+    /// Stamp the frame with its durable journal cursor.
+    pub fn with_cursor(mut self, cursor: u64) -> StreamFrame {
+        self.cursor = Some(cursor);
+        self
+    }
+
     pub fn terminal(seq: u64, error: Option<ApiError>) -> StreamFrame {
         StreamFrame {
             seq,
             event: None,
+            cursor: None,
             end: true,
             error,
             stats: None,
@@ -275,6 +288,7 @@ impl StreamFrame {
         StreamFrame {
             seq,
             event: None,
+            cursor: None,
             end: true,
             error,
             stats: Some(stats),
@@ -285,6 +299,9 @@ impl StreamFrame {
         let mut j = Json::obj(vec![("seq", Json::from(self.seq))]);
         if let Some(ev) = &self.event {
             j.set("event", ev.clone());
+        }
+        if let Some(c) = self.cursor {
+            j.set("cursor", Json::from(c));
         }
         if self.end {
             j.set("end", Json::from(true));
@@ -317,6 +334,7 @@ impl StreamFrame {
                 .as_u64()
                 .ok_or("stream frame missing 'seq'")?,
             event,
+            cursor: v.get("cursor").as_u64(),
             end: v.get("end").as_bool().unwrap_or(false),
             error,
             stats,
@@ -487,6 +505,11 @@ mod tests {
         let rt = StreamFrame::from_json(&ev.to_json()).unwrap();
         assert_eq!(rt, ev);
         assert!(!rt.end);
+        assert_eq!(rt.cursor, None);
+        // A cursor-stamped frame round-trips the cursor.
+        let stamped = StreamFrame::event(2, Json::Null).with_cursor(41);
+        let rt = StreamFrame::from_json(&stamped.to_json()).unwrap();
+        assert_eq!(rt.cursor, Some(41));
         let term = StreamFrame::terminal(2, None);
         let rt = StreamFrame::from_json(&term.to_json()).unwrap();
         assert!(rt.end);

@@ -85,16 +85,38 @@ struct ServerInner {
 }
 
 impl ManagementServer {
-    /// Spawn on an ephemeral loopback port.
+    /// Spawn on an ephemeral loopback port (no durable state).
     pub fn spawn(
         hv: Arc<Hypervisor>,
         rpc_overhead_ms: f64,
+    ) -> std::io::Result<ManagementServer> {
+        ManagementServer::spawn_with_state(hv, rpc_overhead_ms, None)
+    }
+
+    /// Spawn with an optional durable state directory. When set, the
+    /// event bus journals every published event under
+    /// `state_dir/events/` (opened *before* any traffic, so every
+    /// cursor a client ever sees is on disk) and `subscribe` resume
+    /// via `from_cursor` replays across restarts. Scheduler WAL state
+    /// lives next to the snapshot and is wired separately via
+    /// [`crate::sched::Scheduler::attach_persistence`].
+    pub fn spawn_with_state(
+        hv: Arc<Hypervisor>,
+        rpc_overhead_ms: f64,
+        state_dir: Option<&std::path::Path>,
     ) -> std::io::Result<ManagementServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let sched = Scheduler::new(Arc::clone(&hv));
         let bus = EventBus::new();
         bus.set_metrics(Arc::clone(&hv.metrics));
+        if let Some(dir) = state_dir {
+            let journal = crate::journal::EventJournal::open(
+                &dir.join("events"),
+            )?;
+            journal.set_metrics(Arc::clone(&hv.metrics));
+            bus.attach_journal(Arc::new(journal));
+        }
         let jobs = JobRegistry::new();
         jobs.set_metrics(Arc::clone(&hv.metrics));
         jobs.set_bus(Arc::clone(&bus));
@@ -405,17 +427,44 @@ fn serve_subscription(
     let mut seq = 0u64;
     let result = (|| {
         write_frame(stream, &header.to_json())?;
+        // Resume: replay the journaled gap first. The subscription is
+        // already registered on the bus, so any event published after
+        // the replay read lands in its live queue; events seen both
+        // ways are deduplicated by cursor below. That overlap
+        // discipline makes resume gapless and duplicate-free.
+        let mut last_cursor = 0u64;
+        if let Some(from) = req.from_cursor {
+            for (cursor, ev) in inner.bus.replay_for(&sub, from) {
+                if seq >= max_events {
+                    break;
+                }
+                seq += 1;
+                last_cursor = cursor;
+                write_frame(
+                    stream,
+                    &StreamFrame::event(seq, ev.to_json())
+                        .with_cursor(cursor)
+                        .to_json(),
+                )?;
+            }
+        }
         while seq < max_events {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            match sub.next(deadline - now) {
-                Some(ev) => {
+            match sub.next_with_cursor(deadline - now) {
+                Some((cursor, ev)) => {
+                    // Already delivered during replay.
+                    if cursor <= last_cursor {
+                        continue;
+                    }
                     seq += 1;
                     write_frame(
                         stream,
-                        &StreamFrame::event(seq, ev.to_json()).to_json(),
+                        &StreamFrame::event(seq, ev.to_json())
+                            .with_cursor(cursor)
+                            .to_json(),
                     )?;
                 }
                 None => break,
@@ -1570,6 +1619,7 @@ mod tests {
                 lease: None,
                 max_events: Some(1),
                 timeout_s: Some(30.0),
+                from_cursor: None,
             })
             .unwrap()
             .map(|r| r.unwrap().event)
@@ -1620,6 +1670,7 @@ mod tests {
                 lease: Some(token),
                 max_events: Some(2),
                 timeout_s: Some(60.0),
+                from_cursor: None,
             })
             .unwrap()
             .map(|r| r.unwrap().event)

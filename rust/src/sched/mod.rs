@@ -67,6 +67,9 @@ use crate::config::ServiceModel;
 use crate::fpga::board::BoardKind;
 use crate::hypervisor::migration::MigrationReport;
 use crate::hypervisor::{Hypervisor, HypervisorError};
+use crate::journal::{
+    LeaseRecord, MemberRecord, RecoveredLive, SchedWal, WalRecord,
+};
 use crate::util::clock::VirtualTime;
 use crate::util::ids::{
     AllocationId, FpgaId, LeaseToken, NodeId, ReservationId, TicketId,
@@ -343,6 +346,11 @@ pub struct Scheduler {
     /// [`Scheduler::attach_persistence`]); `None` = in-memory only.
     /// Lock order: `state` before `persist_path`.
     persist_path: Mutex<Option<PathBuf>>,
+    /// Write-ahead log for grant/queue/quota mutations (set by
+    /// [`Scheduler::attach_persistence`]); `None` = in-memory only.
+    /// Lock order: `state` before `wal` — records are appended while
+    /// the state lock is held, so WAL order equals application order.
+    wal: Mutex<Option<Arc<SchedWal>>>,
     /// Monotonic snapshot counter, assigned under the state lock so
     /// sequence order matches snapshot order.
     persist_seq: AtomicU64,
@@ -391,6 +399,18 @@ pub enum SchedEvent {
 
 /// Callback the scheduler pushes [`SchedEvent`]s through.
 pub type SchedEventSink = Arc<dyn Fn(SchedEvent) + Send + Sync>;
+
+/// A durable snapshot prepared under the state lock and written after
+/// it drops (disk IO never blocks admissions). Carries the WAL handle
+/// and the cursor the snapshot covers so a landed write can compact
+/// the log.
+struct PersistPending {
+    seq: u64,
+    path: PathBuf,
+    text: String,
+    wal: Option<Arc<SchedWal>>,
+    wal_cursor: u64,
+}
 
 /// Device-seconds `user` has consumed so far: the released total in
 /// the ledger plus the accrued time of every live grant — so budgets
@@ -445,6 +465,7 @@ impl Scheduler {
             }),
             granted: Condvar::new(),
             persist_path: Mutex::new(None),
+            wal: Mutex::new(None),
             persist_seq: AtomicU64::new(1),
             persist_written: Mutex::new(0),
             preempt_policy: Mutex::new(PreemptPolicy::default()),
@@ -546,25 +567,65 @@ impl Scheduler {
 
     // -------------------------------------------------- persistence
 
-    /// Attach durable accounting: load `<db-stem>.sched.json` (next
-    /// to `db_path`) when it exists, and re-save on every accounting
-    /// mutation from now on. A raised reloaded cap can admit queued
-    /// work, so the queue is pumped after a load.
+    /// Attach durable state: open the write-ahead log
+    /// (`<db-stem>.sched.wal/` next to `db_path`), load the snapshot
+    /// (`<db-stem>.sched.json`) when it exists, fold the WAL suffix
+    /// past the snapshot's cursor into it, and **re-adopt** the
+    /// recovered live state — leases re-register their placements
+    /// with the hypervisor (tokens keep validating), queued
+    /// admissions resume waiting, quota limits and the usage ledger
+    /// are restored. From now on every grant/queue/quota mutation
+    /// appends a WAL record and accounting boundaries re-snapshot
+    /// (which compacts the WAL). Recovered capacity or raised caps
+    /// can admit queued work, so the queue is pumped before
+    /// returning.
     pub fn attach_persistence(
         &self,
         db_path: &Path,
     ) -> Result<(), String> {
         let path = persist::sched_state_path(db_path);
+        let wal_dir = persist::sched_wal_dir(db_path);
+        let wal = SchedWal::open(&wal_dir)
+            .map_err(|e| format!("{}: {e}", wal_dir.display()))?;
+        wal.set_metrics(Arc::clone(&self.hv.metrics));
+        let wal = Arc::new(wal);
         let mut st = self.state.lock().unwrap();
+        let mut recovered = RecoveredLive::default();
+        let mut replay_from = 1;
         if path.exists() {
             let loaded = persist::load(&path)?;
             st.quotas.restore_limits(loaded.quotas);
             st.ledger.restore(loaded.usage);
-            self.pump_locked(&mut st);
+            // Seed the fold with the snapshot's live state; WAL
+            // records past its cursor then replay over it (apply is
+            // idempotent, so a record the snapshot already covers is
+            // harmless).
+            for lease in loaded.leases {
+                recovered.apply(&WalRecord::Grant(lease));
+            }
+            for entry in loaded.queue {
+                recovered.apply(&WalRecord::Enqueue(entry));
+            }
+            replay_from = loaded.wal_cursor + 1;
         }
+        for (_, record) in wal
+            .replay_from(replay_from)
+            .map_err(|e| format!("{}: {e}", wal_dir.display()))?
+        {
+            recovered.apply(&record);
+        }
+        self.adopt_recovered_locked(&mut st, recovered);
+        // Install the WAL *before* pumping so grants the pump issues
+        // are journaled like any others.
+        *self.wal.lock().unwrap() = Some(Arc::clone(&wal));
+        self.pump_locked(&mut st);
         *self.persist_path.lock().unwrap() = Some(path);
+        // A fresh snapshot covers everything just recovered; writing
+        // it (below, off the lock) compacts the recovered WAL away.
+        let pending = self.persist_snapshot_locked(&st);
         drop(st);
         self.granted.notify_all();
+        self.write_persisted(pending);
         Ok(())
     }
 
@@ -575,27 +636,202 @@ impl Scheduler {
     fn persist_snapshot_locked(
         &self,
         st: &SchedState,
-    ) -> Option<(u64, PathBuf, String)> {
+    ) -> Option<PersistPending> {
         let path = self.persist_path.lock().unwrap().clone()?;
         let seq = self.persist_seq.fetch_add(1, Ordering::Relaxed);
-        Some((seq, path, persist::render(&st.quotas, &st.ledger)))
+        let wal = self.wal.lock().unwrap().clone();
+        // Everything up to the WAL's current head is (by lock order)
+        // already reflected in `st`, so this snapshot covers it.
+        let wal_cursor = wal
+            .as_ref()
+            .map(|w| w.next_cursor().saturating_sub(1))
+            .unwrap_or(0);
+        let leases: Vec<LeaseRecord> = st
+            .leases
+            .keys()
+            .filter_map(|t| Self::lease_record_locked(st, *t))
+            .collect();
+        let queue = st.queue.snapshot();
+        Some(PersistPending {
+            seq,
+            path,
+            text: persist::render(
+                &st.quotas,
+                &st.ledger,
+                &leases,
+                &queue,
+                wal_cursor,
+            ),
+            wal,
+            wal_cursor,
+        })
     }
 
     /// Write a snapshot taken by [`Scheduler::persist_snapshot_locked`],
-    /// skipping it when a newer snapshot already reached disk.
-    fn write_persisted(&self, pending: Option<(u64, PathBuf, String)>) {
-        let Some((seq, path, text)) = pending else { return };
-        let mut written = self.persist_written.lock().unwrap();
-        if *written > seq {
-            return;
+    /// skipping it when a newer snapshot already reached disk. A
+    /// snapshot that lands compacts the WAL: segments at or below its
+    /// cursor are no longer needed for recovery.
+    fn write_persisted(&self, pending: Option<PersistPending>) {
+        let Some(p) = pending else { return };
+        {
+            let mut written = self.persist_written.lock().unwrap();
+            if *written > p.seq {
+                return;
+            }
+            match crate::util::fsx::write_atomic(&p.path, &p.text) {
+                Ok(()) => *written = p.seq,
+                Err(e) => {
+                    log::warn!(
+                        "sched state persist to {} failed: {e}",
+                        p.path.display()
+                    );
+                    return;
+                }
+            }
         }
-        match std::fs::write(&path, text) {
-            Ok(()) => *written = seq,
-            Err(e) => log::warn!(
-                "sched state persist to {} failed: {e}",
-                path.display()
-            ),
+        if let Some(wal) = p.wal {
+            if let Err(e) = wal.retain_from(p.wal_cursor) {
+                log::warn!("sched wal compaction failed: {e}");
+            }
         }
+    }
+
+    /// Append one record to the write-ahead log, if attached. Always
+    /// called under the state lock, so the log order is exactly the
+    /// order mutations were applied. On an IO error the scheduler
+    /// degrades to snapshot-only durability rather than failing the
+    /// operation (the next boundary snapshot still captures the
+    /// state).
+    fn wal_append_locked(&self, record: &WalRecord) {
+        let wal = self.wal.lock().unwrap().clone();
+        if let Some(wal) = wal {
+            if let Err(e) = wal.append(record) {
+                log::warn!("sched wal append failed: {e}");
+            }
+        }
+    }
+
+    /// The durable [`LeaseRecord`] for a live lease, assembled from
+    /// its meta + member grants.
+    fn lease_record_locked(
+        st: &SchedState,
+        token: LeaseToken,
+    ) -> Option<LeaseRecord> {
+        let meta = st.leases.get(&token)?;
+        Some(LeaseRecord {
+            token,
+            tenant: meta.tenant,
+            model: meta.model,
+            class: meta.class,
+            co_located: meta.co_located,
+            wait_ns: meta.wait.0,
+            members: meta
+                .members
+                .iter()
+                .filter_map(|a| {
+                    st.grants.get(a).map(|g| MemberRecord {
+                        alloc: *a,
+                        target: g.target,
+                        units: g.units,
+                        started_ns: g.started_ns,
+                        charge_w: g.charge_w,
+                        migrations: g.migrations,
+                    })
+                })
+                .collect(),
+        })
+    }
+
+    /// Re-adopt state recovered from snapshot + WAL: quota limits
+    /// first (upserted over the snapshot's), then each lease
+    /// all-or-nothing against the hypervisor — if any member fails to
+    /// re-adopt (its region vanished from the topology, say), the
+    /// members already adopted are rolled back and the whole lease is
+    /// dropped with a warning, never half-restored. Accrual clocks
+    /// restart at now (the downtime is not billed to the tenant) and
+    /// queue entries rebase their enqueue time and deadline window
+    /// onto the fresh virtual clock.
+    fn adopt_recovered_locked(
+        &self,
+        st: &mut SchedState,
+        recovered: RecoveredLive,
+    ) {
+        let now_ns = self.hv.clock.now().0;
+        for (user, quota) in recovered.quotas {
+            st.quotas.set(user, quota);
+        }
+        'lease: for rec in recovered.leases {
+            let mut adopted: Vec<AllocationId> = Vec::new();
+            for m in &rec.members {
+                let result = match m.target {
+                    GrantTarget::Vfpga(v, _, _) => self
+                        .hv
+                        .adopt_vfpga(m.alloc, rec.tenant, rec.model, v)
+                        .map(|_| ())
+                        .map_err(|e| e.to_string()),
+                    GrantTarget::Physical(f, _) => self
+                        .hv
+                        .adopt_physical(m.alloc, rec.tenant, f)
+                        .map(|_| ())
+                        .map_err(|e| e.to_string()),
+                };
+                match result {
+                    Ok(()) => adopted.push(m.alloc),
+                    Err(e) => {
+                        log::warn!(
+                            "recovery: lease {} member {} failed to \
+                             re-adopt ({e}); dropping the lease",
+                            rec.token,
+                            m.alloc
+                        );
+                        for a in adopted.drain(..) {
+                            let _ = self.hv.release(a);
+                        }
+                        continue 'lease;
+                    }
+                }
+            }
+            for m in &rec.members {
+                st.quotas.charge(rec.tenant, m.units);
+                st.grants.insert(
+                    m.alloc,
+                    SchedGrant {
+                        alloc: m.alloc,
+                        user: rec.tenant,
+                        model: rec.model,
+                        class: rec.class,
+                        target: m.target,
+                        units: m.units,
+                        started_ns: now_ns,
+                        wait: VirtualTime(rec.wait_ns),
+                        charge_w: m.charge_w,
+                        from_reservation: None,
+                        token: rec.token,
+                        migrations: m.migrations,
+                    },
+                );
+            }
+            st.leases.insert(
+                rec.token,
+                LeaseMeta {
+                    tenant: rec.tenant,
+                    model: rec.model,
+                    class: rec.class,
+                    members: rec.members.iter().map(|m| m.alloc).collect(),
+                    wait: VirtualTime(rec.wait_ns),
+                    co_located: rec.co_located,
+                },
+            );
+            self.hv.metrics.counter("sched.adopted").inc();
+        }
+        for mut entry in recovered.queue {
+            entry.deadline_ns = entry
+                .deadline_ns
+                .map(|d| now_ns + d.saturating_sub(entry.enqueued_ns));
+            entry.enqueued_ns = now_ns;
+            st.queue.adopt(entry);
+        }
+        self.update_gauges_locked(st);
     }
 
     // ------------------------------------------------------- quotas
@@ -617,6 +853,7 @@ impl Scheduler {
         let mut quota = st.quotas.quota(user);
         f(&mut quota);
         st.quotas.set(user, quota);
+        self.wal_append_locked(&WalRecord::Quota { user, quota });
         self.pump_locked(&mut st);
         let pending = self.persist_snapshot_locked(&st);
         drop(st);
@@ -883,6 +1120,12 @@ impl Scheduler {
             self.granted.notify_all();
             return ticket;
         }
+        // Journal only entries that actually wait — the early
+        // terminal failures above never enqueued durably, so recovery
+        // has nothing to resume for them.
+        if let Some(entry) = st.queue.entry(ticket).cloned() {
+            self.wal_append_locked(&WalRecord::Enqueue(entry));
+        }
         st.ledger.row_mut(req.tenant).queued += 1;
         self.hv.metrics.counter("sched.enqueued").inc();
         // Capacity may already be free (e.g. first submission).
@@ -976,6 +1219,7 @@ impl Scheduler {
     pub fn cancel_ticket(&self, ticket: TicketId) -> bool {
         let mut st = self.state.lock().unwrap();
         if st.queue.remove(ticket).is_some() {
+            self.wal_append_locked(&WalRecord::Dequeue { ticket });
             st.ready.insert(ticket, Err(SchedError::Cancelled));
             self.update_gauges_locked(&st);
             self.granted.notify_all();
@@ -1073,6 +1317,9 @@ impl Scheduler {
                 co_located: false,
             },
         );
+        if let Some(rec) = Self::lease_record_locked(st, token) {
+            self.wal_append_locked(&WalRecord::Grant(rec));
+        }
         Ok(token)
     }
 
@@ -1138,6 +1385,7 @@ impl Scheduler {
             .grants
             .remove(&alloc)
             .ok_or(SchedError::UnknownGrant(alloc))?;
+        self.wal_append_locked(&WalRecord::ReleaseMember { alloc });
         // Hypervisor::release removes the DB allocation before its
         // fallible device cleanup, so after an error the lease is
         // gone either way (removed now, or it never existed).
@@ -1293,6 +1541,12 @@ impl Scheduler {
                     fpga,
                     migrations: grant.migrations,
                 });
+                self.wal_append_locked(&WalRecord::Rebind {
+                    alloc,
+                    vfpga: Some(to),
+                    fpga,
+                    node,
+                });
             }
         }
     }
@@ -1340,6 +1594,17 @@ impl Scheduler {
         if spec.model == ServiceModel::RSaaS {
             return self.admit_physical_locked(st, spec);
         }
+        // Forensic marker: a crash *during* this admission leaves an
+        // unpaired intent in the WAL (recovery ignores it; operators
+        // can see what was in flight). Fires on denied attempts too —
+        // compaction keeps the log bounded.
+        self.wal_append_locked(&WalRecord::Intent {
+            user: spec.tenant,
+            model: spec.model,
+            class: spec.class,
+            regions: spec.regions,
+            co_located: spec.co_located,
+        });
         let now_ns = self.hv.clock.now().0;
         let used_s = used_device_seconds(
             &st.ledger,
@@ -1422,6 +1687,9 @@ impl Scheduler {
                 co_located: spec.co_located,
             },
         );
+        if let Some(rec) = Self::lease_record_locked(st, token) {
+            self.wal_append_locked(&WalRecord::Grant(rec));
+        }
         Ok(token)
     }
 
@@ -2052,6 +2320,7 @@ impl Scheduler {
                 .collect();
             for (ticket, denial) in terminal {
                 st.queue.remove(ticket);
+                self.wal_append_locked(&WalRecord::Dequeue { ticket });
                 st.ready.insert(ticket, Err(self.deny(denial)));
             }
         }
@@ -2072,6 +2341,7 @@ impl Scheduler {
                 .collect();
             for (ticket, regions, cap) in oversized {
                 st.queue.remove(ticket);
+                self.wal_append_locked(&WalRecord::Dequeue { ticket });
                 st.ready.insert(
                     ticket,
                     Err(SchedError::Unsatisfiable(format!(
@@ -2156,6 +2426,9 @@ impl Scheduler {
             let spec = AdmitSpec::of_entry(&entry);
             match self.try_admit_locked(st, &spec) {
                 Ok(token) => {
+                    self.wal_append_locked(&WalRecord::Dequeue {
+                        ticket: entry.ticket,
+                    });
                     st.ready.insert(entry.ticket, Ok(token));
                 }
                 Err(SchedError::NoCapacity)
@@ -2176,6 +2449,9 @@ impl Scheduler {
                     // ticket.
                     let weight = st.quotas.weight(entry.user);
                     st.queue.refund(entry.user, weight);
+                    self.wal_append_locked(&WalRecord::Dequeue {
+                        ticket: entry.ticket,
+                    });
                     st.ready.insert(entry.ticket, Err(e));
                 }
             }
@@ -2765,6 +3041,7 @@ mod tests {
         let db_path = dir.join("devices.json");
         let state_path = persist::sched_state_path(&db_path);
         let _ = std::fs::remove_file(&state_path);
+        let _ = std::fs::remove_dir_all(persist::sched_wal_dir(&db_path));
         let user;
         {
             let s = sched();
@@ -2803,7 +3080,74 @@ mod tests {
         assert_eq!(usage.released, 1);
         assert!(usage.device_seconds >= 5.0, "{usage:?}");
         std::fs::remove_file(&state_path).unwrap();
+        let _ = std::fs::remove_dir_all(persist::sched_wal_dir(&db_path));
         let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn recovery_readopts_live_leases_and_queue() {
+        let dir = std::env::temp_dir().join(format!(
+            "rc3e-sched-recover-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let db_path = dir.join("devices.json");
+        let (user, token, ticket);
+        {
+            let s = sched();
+            s.attach_persistence(&db_path).unwrap();
+            user = s.hv().add_user("alice");
+            s.set_quota(
+                user,
+                TenantQuota {
+                    max_concurrent: 2,
+                    ..TenantQuota::default()
+                },
+            );
+            // A live gang of 2 fills the quota...
+            let lease = s
+                .admit(
+                    &one(user, ServiceModel::RAaaS, RequestClass::Normal)
+                        .gang(2),
+                )
+                .unwrap();
+            // ...so this one queues behind it.
+            ticket = s.enqueue(&one(
+                user,
+                ServiceModel::RAaaS,
+                RequestClass::Normal,
+            ));
+            assert!(s.poll_ticket(ticket).is_none());
+            // "Crash": the process dies holding the lease (into_token
+            // disarms the drop-release).
+            token = lease.into_token();
+        }
+        // Second life: fresh hypervisor + scheduler over the same
+        // state dir. The same tenant name yields the same UserId.
+        let hv2 = Arc::new(
+            Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+        );
+        assert_eq!(hv2.add_user("alice"), user);
+        let s2 = Scheduler::new_persistent(hv2, &db_path).unwrap();
+        // The pre-crash token still validates and the gang is whole.
+        let handle = s2.lease_handle(token).expect("lease re-adopted");
+        assert_eq!(handle.regions(), 2);
+        assert_eq!(s2.in_use(user), 2);
+        assert_eq!(s2.active_grants().len(), 2);
+        // The placements are real again: the hypervisor DB owns them.
+        for g in s2.active_grants() {
+            assert!(s2.hv().db.lock().unwrap().allocation(g.alloc).is_some());
+        }
+        // The queued admission survived and resolves once capacity
+        // frees up.
+        assert!(s2.poll_ticket(ticket).is_none());
+        s2.release_token(token).unwrap();
+        let waited = s2.poll_ticket(ticket).expect("ticket resolved");
+        let granted = waited.unwrap();
+        assert_eq!(granted.tenant(), user);
+        granted.release().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

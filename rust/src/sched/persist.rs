@@ -1,36 +1,58 @@
-//! Scheduler state persistence: quotas + usage ledger on disk.
+//! Scheduler state persistence: snapshot + write-ahead log on disk.
 //!
 //! The device database already persists as pretty-printed JSON
 //! ([`crate::hypervisor::DeviceDb::save`]); this module puts the
-//! scheduler's durable accounting — configured tenant quotas and the
-//! usage ledger — in a sibling file (`<db-stem>.sched.json`) so a
-//! management-node restart cannot reset budgets or forget consumed
-//! device-seconds (ROADMAP item). Live state (grants, queue,
-//! reservations, in-use concurrency) deliberately does *not*
-//! persist: those belong to leases that die with the process.
+//! scheduler's durable state in a sibling file (`<db-stem>.sched.json`)
+//! plus a sibling WAL directory (`<db-stem>.sched.wal/`, see
+//! [`crate::journal::SchedWal`]).
 //!
-//! [`crate::sched::Scheduler::attach_persistence`] loads a state file
-//! when present and re-saves at every accounting boundary —
-//! admissions (which include preemption-downtime charges), releases
-//! and quota updates. Queue-pump grants triggered from the blocking
-//! wait path's fallback tick persist at the next boundary operation.
-//! Writes are sequence-guarded so concurrent snapshots cannot land on
-//! disk out of order.
+//! Format v1 persisted accounting only (quotas + usage ledger); live
+//! leases died with the process. Format v2 extends the snapshot with
+//! the live control-plane state needed for crash recovery:
+//!
+//! - `leases` — every active lease as a [`LeaseRecord`] (token, gang
+//!   members with placements, accounting inputs),
+//! - `queue` — pending admission tickets as [`QueueEntry`] documents,
+//! - `wal_cursor` — the last WAL sequence folded into this snapshot;
+//!   recovery replays the WAL strictly after this cursor and
+//!   compaction drops segments at or before it.
+//!
+//! [`crate::sched::Scheduler::attach_persistence`] loads snapshot +
+//! WAL on boot, re-adopts live leases against the hypervisor, and
+//! re-saves at every accounting boundary — admissions (which include
+//! preemption-downtime charges), releases and quota updates.
+//! Queue-pump grants triggered from the blocking wait path's fallback
+//! tick persist at the next boundary operation. Writes are
+//! sequence-guarded so concurrent snapshots cannot land on disk out
+//! of order, and go through [`crate::util::fsx::write_atomic`] so a
+//! crash mid-write can never leave a torn snapshot.
 
 use std::path::{Path, PathBuf};
 
 use super::accounting::UsageLedger;
 use super::quota::QuotaBook;
+use super::queue::QueueEntry;
+use crate::journal::walsched::{
+    lease_from_json, lease_to_json, queue_entry_from_json, queue_entry_to_json,
+};
+use crate::journal::LeaseRecord;
 use crate::util::json::Json;
 
 /// Format version stamped into the state file.
-pub const STATE_VERSION: u64 = 1;
+pub const STATE_VERSION: u64 = 2;
 
 /// The durable scheduler state.
 #[derive(Debug, Default)]
 pub struct PersistedState {
     pub quotas: QuotaBook,
     pub usage: UsageLedger,
+    /// Live leases at snapshot time (v2; empty for v0/v1 files).
+    pub leases: Vec<LeaseRecord>,
+    /// Pending admission queue at snapshot time (v2).
+    pub queue: Vec<QueueEntry>,
+    /// Last WAL sequence already folded into this snapshot; replay
+    /// resumes at `wal_cursor + 1`. Zero means "nothing folded".
+    pub wal_cursor: u64,
 }
 
 /// Where the scheduler state lives for a device DB at `db_path`:
@@ -43,18 +65,44 @@ pub fn sched_state_path(db_path: &Path) -> PathBuf {
     db_path.with_file_name(format!("{stem}.sched.json"))
 }
 
+/// Where the scheduler WAL lives for a device DB at `db_path`:
+/// a sibling directory named `<stem>.sched.wal`.
+pub fn sched_wal_dir(db_path: &Path) -> PathBuf {
+    let stem = db_path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("state");
+    db_path.with_file_name(format!("{stem}.sched.wal"))
+}
+
 /// Render the state document (pretty-printed, like the device DB, so
 /// operators can inspect it and tests can diff it).
-pub fn render(quotas: &QuotaBook, usage: &UsageLedger) -> String {
+pub fn render(
+    quotas: &QuotaBook,
+    usage: &UsageLedger,
+    leases: &[LeaseRecord],
+    queue: &[QueueEntry],
+    wal_cursor: u64,
+) -> String {
     Json::obj(vec![
         ("version", Json::from(STATE_VERSION)),
         ("quotas", quotas.to_json()),
         ("usage", usage.to_json()),
+        (
+            "leases",
+            Json::Arr(leases.iter().map(lease_to_json).collect()),
+        ),
+        (
+            "queue",
+            Json::Arr(queue.iter().map(queue_entry_to_json).collect()),
+        ),
+        ("wal_cursor", Json::from(wal_cursor)),
     ])
     .to_pretty()
 }
 
-/// Parse a state document produced by [`render`].
+/// Parse a state document produced by [`render`] (any version up to
+/// [`STATE_VERSION`]; pre-v2 files simply have no live state).
 pub fn parse(text: &str) -> Result<PersistedState, String> {
     let v = Json::parse(text).map_err(|e| e.to_string())?;
     let version = v.get("version").as_u64().unwrap_or(0);
@@ -64,9 +112,29 @@ pub fn parse(text: &str) -> Result<PersistedState, String> {
              {STATE_VERSION}"
         ));
     }
+    let mut leases = Vec::new();
+    if let Some(arr) = v.get("leases").as_arr() {
+        for l in arr {
+            leases.push(
+                lease_from_json(l).ok_or_else(|| "malformed lease record".to_string())?,
+            );
+        }
+    }
+    let mut queue = Vec::new();
+    if let Some(arr) = v.get("queue").as_arr() {
+        for q in arr {
+            queue.push(
+                queue_entry_from_json(q)
+                    .ok_or_else(|| "malformed queue entry".to_string())?,
+            );
+        }
+    }
     Ok(PersistedState {
         quotas: QuotaBook::from_json(v.get("quotas"))?,
         usage: UsageLedger::from_json(v.get("usage"))?,
+        leases,
+        queue,
+        wal_cursor: v.get("wal_cursor").as_u64().unwrap_or(0),
     })
 }
 
@@ -80,8 +148,13 @@ pub fn load(path: &Path) -> Result<PersistedState, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::TenantQuota;
-    use crate::util::ids::UserId;
+    use crate::config::ServiceModel;
+    use crate::fpga::board::BoardKind;
+    use crate::journal::MemberRecord;
+    use crate::sched::{GrantTarget, RequestClass, TenantQuota};
+    use crate::util::ids::{
+        AllocationId, FpgaId, LeaseToken, NodeId, TicketId, UserId, VfpgaId,
+    };
 
     #[test]
     fn state_path_sits_next_to_db() {
@@ -89,6 +162,8 @@ mod tests {
         assert_eq!(p, PathBuf::from("/var/rc3e/devices.sched.json"));
         let p = sched_state_path(Path::new("cluster.json"));
         assert_eq!(p, PathBuf::from("cluster.sched.json"));
+        let w = sched_wal_dir(Path::new("/var/rc3e/devices.json"));
+        assert_eq!(w, PathBuf::from("/var/rc3e/devices.sched.wal"));
     }
 
     #[test]
@@ -105,13 +180,60 @@ mod tests {
         let mut usage = UsageLedger::new();
         usage.charge_release(UserId(2), 12.0, 4.0);
         usage.row_mut(UserId(2)).granted = 3;
-        let text = render(&quotas, &usage);
+        let leases = vec![LeaseRecord {
+            token: LeaseToken::mint(),
+            tenant: UserId(2),
+            model: ServiceModel::RAaaS,
+            class: RequestClass::Batch,
+            co_located: false,
+            wait_ns: 1_500_000,
+            members: vec![MemberRecord {
+                alloc: AllocationId(9),
+                target: GrantTarget::Vfpga(VfpgaId(3), FpgaId(1), NodeId(0)),
+                units: 1,
+                started_ns: 77,
+                charge_w: 1.0,
+                migrations: 2,
+            }],
+        }];
+        let queue = vec![QueueEntry {
+            ticket: TicketId(5),
+            user: UserId(2),
+            model: ServiceModel::RAaaS,
+            class: RequestClass::Batch,
+            regions: 2,
+            co_located: true,
+            board: Some(BoardKind::Vc707),
+            deadline_ns: Some(9_000),
+            enqueued_ns: 4_000,
+            seq: 11,
+            skipped: 0,
+        }];
+        let text = render(&quotas, &usage, &leases, &queue, 42);
         let state = parse(&text).unwrap();
-        assert_eq!(
-            state.quotas.quota(UserId(2)),
-            quotas.quota(UserId(2))
-        );
+        assert_eq!(state.quotas.quota(UserId(2)), quotas.quota(UserId(2)));
         assert_eq!(state.usage.usage(UserId(2)), usage.usage(UserId(2)));
+        assert_eq!(state.wal_cursor, 42);
+        assert_eq!(state.leases.len(), 1);
+        assert_eq!(state.leases[0].token, leases[0].token);
+        assert_eq!(state.leases[0].members.len(), 1);
+        assert_eq!(state.leases[0].members[0].alloc, AllocationId(9));
+        assert_eq!(state.queue.len(), 1);
+        assert_eq!(state.queue[0].ticket, TicketId(5));
+        assert_eq!(state.queue[0].board, Some(BoardKind::Vc707));
+    }
+
+    #[test]
+    fn v1_file_parses_with_empty_live_state() {
+        let doc = Json::obj(vec![
+            ("version", Json::from(1u64)),
+            ("quotas", Json::Arr(vec![])),
+            ("usage", Json::Arr(vec![])),
+        ]);
+        let state = parse(&doc.to_string()).unwrap();
+        assert!(state.leases.is_empty());
+        assert!(state.queue.is_empty());
+        assert_eq!(state.wal_cursor, 0);
     }
 
     #[test]

@@ -199,6 +199,27 @@ impl AdmissionQueue {
         self.entries.push(entry);
     }
 
+    /// Re-insert an entry recovered from a persisted snapshot or the
+    /// write-ahead log after a restart, preserving its ticket and
+    /// sequence and bumping the generators past them so fresh
+    /// submissions never collide with recovered ones. The tenant's
+    /// pass restarts at the smallest live pass (pass history is
+    /// in-memory fairness state and does not survive a crash).
+    pub fn adopt(&mut self, entry: QueueEntry) {
+        self.next_ticket = self.next_ticket.max(entry.ticket.0 + 1);
+        self.next_seq = self.next_seq.max(entry.seq + 1);
+        let floor = self.min_live_pass();
+        let pass = self.passes.entry(entry.user).or_insert(floor);
+        *pass = (*pass).max(floor);
+        self.entries.push(entry);
+    }
+
+    /// A queued entry by ticket (the scheduler journals the full
+    /// entry document on enqueue).
+    pub fn entry(&self, ticket: TicketId) -> Option<&QueueEntry> {
+        self.entries.iter().find(|e| e.ticket == ticket)
+    }
+
     /// Pop the best admissible request: highest *effective* class,
     /// then smallest tenant pass, then FIFO. Advances the winner's
     /// pass by its stride (`STRIDE_SCALE / weight`) and counts one
@@ -301,6 +322,34 @@ mod tests {
         assert_eq!(a.ticket, t0);
         assert_eq!(b.ticket, t1);
         assert!(q.pop_best(0, |_| 1, |_| true).is_none());
+    }
+
+    #[test]
+    fn adopt_preserves_ticket_and_bumps_generators() {
+        let mut q = q();
+        let u = UserId(0);
+        q.adopt(QueueEntry {
+            ticket: TicketId(9),
+            user: u,
+            model: ServiceModel::RAaaS,
+            class: RequestClass::Batch,
+            regions: 1,
+            co_located: false,
+            board: None,
+            deadline_ns: None,
+            enqueued_ns: 5,
+            seq: 4,
+            skipped: 0,
+        });
+        assert_eq!(q.entry(TicketId(9)).unwrap().enqueued_ns, 5);
+        // A fresh submission mints past the adopted ticket and seq.
+        let fresh =
+            q.push(&req(u, ServiceModel::RAaaS, RequestClass::Batch), 6);
+        assert!(fresh.0 > 9);
+        assert!(q.entry(fresh).unwrap().seq > 4);
+        // Both still pop in FIFO order within the tenant.
+        let first = q.pop_best(6, |_| 1, |_| true).unwrap();
+        assert_eq!(first.ticket, TicketId(9));
     }
 
     #[test]

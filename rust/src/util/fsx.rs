@@ -1,0 +1,91 @@
+//! Filesystem helpers shared by the persistence layers.
+//!
+//! The control plane stores several small JSON files (device database,
+//! scheduler snapshot, bench baselines). A plain `fs::write` can leave a
+//! torn file behind if the process dies mid-write — and a torn snapshot
+//! is strictly worse than a stale one, because recovery then has nothing
+//! to fold the write-ahead log into. `write_atomic` gives the classic
+//! durable-replace sequence: write a sibling temp file, flush it to
+//! stable storage, rename it over the target, then fsync the directory
+//! so the rename itself survives a crash.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// Atomically replace `path` with `contents`.
+///
+/// The temp file lives next to the target (`<name>.tmp.<pid>`) so the
+/// rename stays within one filesystem. On any error the temp file is
+/// removed on a best-effort basis and the original file is untouched.
+pub fn write_atomic(path: &Path, contents: &str) -> io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "path has no file name"))?;
+    let mut tmp_name = file_name.to_os_string();
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    let tmp = path.with_file_name(tmp_name);
+
+    let res = (|| -> io::Result<()> {
+        let mut f = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        if let Some(d) = dir {
+            // Persist the rename. Directory fsync can fail on exotic
+            // filesystems; the data itself is already safe, so degrade
+            // rather than surface an error.
+            if let Ok(df) = File::open(d) {
+                let _ = df.sync_all();
+            }
+        }
+        Ok(())
+    })();
+
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("rc3e-fsx-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let d = tmpdir("replace");
+        let p = d.join("state.json");
+        write_atomic(&p, "one").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "one");
+        write_atomic(&p, "two").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "two");
+        // No temp litter left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files remain: {:?}", leftovers);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn rejects_bare_root() {
+        let err = write_atomic(Path::new("/"), "x").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+    }
+}

@@ -10,6 +10,7 @@
 pub mod bytes;
 pub mod cli;
 pub mod clock;
+pub mod fsx;
 pub mod ids;
 pub mod json;
 pub mod logging;

@@ -161,6 +161,7 @@ fn event_seq_is_strictly_increasing() {
             lease: None,
             max_events: Some(3),
             timeout_s: Some(60.0),
+            from_cursor: None,
         })
         .unwrap()
         .map(|r| r.unwrap())
@@ -212,6 +213,7 @@ fn job_progress_frames_end_with_the_exact_job_wait_result() {
             lease: Some(token),
             max_events: Some(5),
             timeout_s: Some(60.0),
+            from_cursor: None,
         })
         .unwrap()
         .map(|r| r.unwrap().event)
@@ -333,6 +335,7 @@ fn subscriptions_never_leak_another_tenants_events() {
             lease: Some(a_token),
             max_events: None,
             timeout_s: Some(3.0),
+            from_cursor: None,
         })
         .unwrap()
         .map(|r| r.unwrap().event)
@@ -360,6 +363,7 @@ fn subscriptions_never_leak_another_tenants_events() {
             lease: None,
             max_events: None,
             timeout_s: Some(3.0),
+            from_cursor: None,
         })
         .unwrap()
         .map(|r| r.unwrap().event)
@@ -392,6 +396,7 @@ fn placement_events_reach_the_moved_tenant() {
             lease: Some(token),
             max_events: Some(1),
             timeout_s: Some(30.0),
+            from_cursor: None,
         })
         .unwrap()
         .map(|r| r.unwrap().event)
@@ -435,6 +440,7 @@ fn region_transitions_stream_to_operators() {
             // alloc → PR start → PR done → release = 4 transitions.
             max_events: Some(4),
             timeout_s: Some(30.0),
+            from_cursor: None,
         })
         .unwrap()
         .map(|r| r.unwrap().event)

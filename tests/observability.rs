@@ -295,6 +295,7 @@ fn subscribe_terminal_frame_carries_backpressure_stats() {
             lease: None,
             max_events: Some(2),
             timeout_s: Some(30.0),
+            from_cursor: None,
         })
         .unwrap();
     let mut delivered = 0u64;

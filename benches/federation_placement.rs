@@ -1,0 +1,159 @@
+//! Federation placement bench: what does crossing a node boundary
+//! cost the admission path?
+//!
+//! Two in-process node daemons register with a federated management
+//! server over loopback TCP; the bench drives `alloc -> release`
+//! cycles through the management client so every admission routes
+//! remote (placement filter, daemon dial, `agent.admit`, token
+//! homing). The same cycle against a classic single-process server
+//! gives the local baseline. Both paths pay the identical typed-RPC
+//! envelope cost; the delta is the federation machinery itself.
+//!
+//! Virtual time is free — the numbers are host wall time for the
+//! middleware + placement machinery.
+//!
+//! Run: `cargo bench --bench federation_placement`
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use rc3e::cluster::NodeDaemon;
+use rc3e::config::ClusterConfig;
+use rc3e::hypervisor::{Hypervisor, PlacementPolicy};
+use rc3e::middleware::{Client, ManagementServer};
+use rc3e::testing::baseline::{self, BaselineReport};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::table::Table;
+
+const CYCLES: usize = 200;
+const WARMUP: usize = 20;
+
+/// Percentile over one run's samples (sorted in place), in ms.
+fn pct(samples: &mut [f64], q: f64) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
+    samples[idx]
+}
+
+/// Time `CYCLES` alloc→release round trips through `client`.
+fn cycle_samples(client: &mut Client, user: rc3e::util::ids::UserId) -> Vec<f64> {
+    for _ in 0..WARMUP {
+        let lease = client.alloc_vfpga(user, None, None).unwrap();
+        client.release(lease.alloc).unwrap();
+    }
+    let mut samples = Vec::with_capacity(CYCLES);
+    for _ in 0..CYCLES {
+        let t0 = Instant::now();
+        let lease = client.alloc_vfpga(user, None, None).unwrap();
+        client.release(lease.alloc).unwrap();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples
+}
+
+fn state_root() -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rc3e-bench-federation-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    println!(
+        "federation_placement: alloc->release round trip, remote \
+         (2-node federated cluster) vs local (single process); \
+         {CYCLES} cycles after {WARMUP} warmup\n"
+    );
+    let out = baseline::out_path();
+    let mut report = match &out {
+        Some(p) => BaselineReport::load_or_new(p),
+        None => BaselineReport::new(),
+    };
+    let root = state_root();
+
+    // ------------------------------------------------ local baseline
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+    );
+    let local = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut lc = Client::connect(local.addr()).unwrap();
+    let user = lc.add_user("bench-local").unwrap().user;
+    let mut local_ms = cycle_samples(&mut lc, user);
+
+    // ------------------------------------------- federated cluster
+    let config = ClusterConfig::paper_testbed();
+    let mgmt_hv = Arc::new(
+        Hypervisor::boot(
+            &ClusterConfig::management_only(),
+            VirtualClock::new(),
+            PlacementPolicy::ConsolidateFirst,
+        )
+        .unwrap(),
+    );
+    let server =
+        ManagementServer::spawn_federated(Arc::clone(&mgmt_hv), 69.0, None)
+            .unwrap();
+    let mut daemons = Vec::new();
+    for i in 0..config.nodes.len() {
+        let daemon = NodeDaemon::spawn(
+            &config,
+            i,
+            &root.join(format!("node{i}")),
+            VirtualClock::new(),
+        )
+        .unwrap();
+        daemon.register(server.addr()).unwrap();
+        daemons.push(daemon);
+    }
+    let mut fc = Client::connect(server.addr()).unwrap();
+    let user = fc.add_user("bench-fed").unwrap().user;
+    let mut remote_ms = cycle_samples(&mut fc, user);
+
+    // ------------------------------------------------------- report
+    let local_p50 = pct(&mut local_ms, 0.50);
+    let local_p99 = pct(&mut local_ms, 0.99);
+    let remote_p50 = pct(&mut remote_ms, 0.50);
+    let remote_p99 = pct(&mut remote_ms, 0.99);
+    let mut t = Table::new(
+        "alloc->release round trip (host wall ms)",
+        &["path", "p50 ms", "p99 ms"],
+    );
+    t.row(&[
+        "local (1 process)".to_string(),
+        format!("{local_p50:.3}"),
+        format!("{local_p99:.3}"),
+    ]);
+    t.row(&[
+        "remote (federated)".to_string(),
+        format!("{remote_p50:.3}"),
+        format!("{remote_p99:.3}"),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "\n    -> cross-node placement overhead: {:.2}x at p50",
+        if local_p50 > 0.0 {
+            remote_p50 / local_p50
+        } else {
+            0.0
+        }
+    );
+
+    report.record_scalar("federation.admit_local_p50_ms", local_p50);
+    report.record_scalar("federation.admit_local_p99_ms", local_p99);
+    report.record_scalar("federation.admit_remote_p50_ms", remote_p50);
+    report.record_scalar("federation.admit_remote_p99_ms", remote_p99);
+    if let Some(p) = &out {
+        report.save(p).unwrap();
+        println!("baseline series written to {}\n", p.display());
+    }
+    println!(
+        "reading: the remote path adds one placement filter pass and \
+         one daemon round trip per admit/release; it should stay in \
+         the same order of magnitude as local serving on loopback."
+    );
+    drop(fc);
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,614 @@
+//! The federation coordinator: the management server's cluster
+//! brain.
+//!
+//! Owns the [`NodeRegistry`], the token-home table (`LeaseToken` →
+//! owning node — tokens fence ownership across the cluster exactly
+//! as they do locally), the blocking cross-node admission loop, the
+//! orphan list that drives failure-driven re-admission, and one
+//! event-forwarder thread per node that republishes node-local bus
+//! events upstream as node-tagged federated events.
+//!
+//! Ownership rules:
+//!
+//! * A lease is homed on exactly one node. `admit_remote` records
+//!   the home at grant time, together with the admit spec so the
+//!   lease can be re-admitted elsewhere (with `adopt` preserving the
+//!   token) if its node dies.
+//! * When the health monitor declares a node `Down`, every lease
+//!   homed there becomes an *orphan*; the monitor's next ticks call
+//!   [`Coordinator::retry_orphans`], which re-admits each orphan on
+//!   a surviving node via the scheduler's adopt machinery.
+//! * A node that rejoins re-registers with the tokens its local WAL
+//!   re-adopted. Tokens the cluster has since re-homed elsewhere are
+//!   returned in the `release` list (the daemon tears them down
+//!   locally); tokens still orphaned re-home on the registrant;
+//!   tokens nobody remembers (management restart) are adopted as-is.
+//!
+//! Cursor federation: each node journals events under its own dense
+//! node-local cursor. The per-node forwarder drains `agent.events`
+//! from its last-seen cursor and republishes each record as
+//! [`Event::NodeTagged`] on the management bus, preserving the
+//! original visibility scope. The forwarder (and its cursor) lives
+//! across node restarts — it is spawned once per node, not once per
+//! registration — so one management `subscribe` stream observes
+//! every node's events gaplessly even across a daemon crash.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::placement;
+use super::registry::NodeRegistry;
+use crate::hypervisor::Hypervisor;
+use crate::middleware::api::{
+    AgentAdmitRequest, AgentEventsRequest, AllocVfpgaResponse,
+    ApiError, ClusterRegisterRequest, ClusterRegisterResponse,
+    ErrorCode, Event,
+};
+use crate::middleware::client::Client;
+use crate::middleware::events::{EventBus, Scope};
+use crate::util::ids::{LeaseToken, NodeId, UserId};
+
+/// How long `admit_remote` keeps retrying before giving up with
+/// `no_capacity` (virtual work completes in wall-milliseconds, so
+/// this bounds a genuinely stuck cluster, not a busy one).
+const ADMIT_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Backoff between admission placement rounds.
+const ADMIT_RETRY: Duration = Duration::from_millis(25);
+
+/// Forwarder long-poll duration per `agent.events` call.
+const FORWARD_POLL_S: f64 = 1.0;
+
+/// Forwarder backoff after a connect failure (the node may be dead
+/// or mid-restart).
+const FORWARD_RECONNECT: Duration = Duration::from_millis(200);
+
+/// Where a live federated lease is homed, plus the spec needed to
+/// re-admit it elsewhere if that node dies. `spec` is `None` for
+/// leases adopted from a node's registration report (the management
+/// server never saw the original admit).
+#[derive(Debug, Clone)]
+struct Home {
+    node: NodeId,
+    spec: Option<AgentAdmitRequest>,
+}
+
+/// A lease whose home node died: waiting for re-admission.
+#[derive(Debug, Clone)]
+struct Orphan {
+    token: LeaseToken,
+    spec: Option<AgentAdmitRequest>,
+}
+
+/// The management-side federation coordinator.
+pub struct Coordinator {
+    hv: Arc<Hypervisor>,
+    bus: Arc<EventBus>,
+    registry: Arc<NodeRegistry>,
+    homes: Mutex<BTreeMap<LeaseToken, Home>>,
+    orphans: Mutex<Vec<Orphan>>,
+    forwarders: Mutex<BTreeMap<NodeId, JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    pub fn new(
+        hv: Arc<Hypervisor>,
+        bus: Arc<EventBus>,
+    ) -> Arc<Coordinator> {
+        let registry = Arc::new(NodeRegistry::new());
+        registry.set_metrics(Arc::clone(&hv.metrics));
+        Arc::new(Coordinator {
+            hv,
+            bus,
+            registry,
+            homes: Mutex::new(BTreeMap::new()),
+            orphans: Mutex::new(Vec::new()),
+            forwarders: Mutex::new(BTreeMap::new()),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn registry(&self) -> &Arc<NodeRegistry> {
+        &self.registry
+    }
+
+    pub fn hv(&self) -> &Arc<Hypervisor> {
+        &self.hv
+    }
+
+    /// Handle `cluster.register` from a (re)joining node: refresh the
+    /// registry, reconcile the tokens its WAL re-adopted against the
+    /// cluster's token-home table, and make sure an event forwarder
+    /// exists for the node.
+    pub fn register(
+        self: &Arc<Self>,
+        req: &ClusterRegisterRequest,
+    ) -> Result<ClusterRegisterResponse, ApiError> {
+        let addr: SocketAddr = req.addr.parse().map_err(|e| {
+            ApiError::bad_request(format!("bad addr '{}': {e}", req.addr))
+        })?;
+        self.registry.register(
+            req.node,
+            &req.name,
+            addr,
+            req.boards.clone(),
+            req.regions_total,
+        );
+        let mut release = Vec::new();
+        {
+            let mut homes = self.homes.lock().unwrap();
+            let mut orphans = self.orphans.lock().unwrap();
+            for t in &req.tokens {
+                if let Some(home) = homes.get(t) {
+                    if home.node != req.node {
+                        // Re-homed on a survivor while this node was
+                        // away: the registrant's copy must go.
+                        release.push(*t);
+                    }
+                } else if let Some(pos) =
+                    orphans.iter().position(|o| o.token == *t)
+                {
+                    // Still orphaned: the original owner is back
+                    // first — re-home it right where it lives.
+                    let o = orphans.remove(pos);
+                    homes.insert(*t, Home { node: req.node, spec: o.spec });
+                } else {
+                    // Unknown (management restart): adopt as-is.
+                    homes.insert(
+                        *t,
+                        Home {
+                            node: req.node,
+                            spec: None,
+                        },
+                    );
+                }
+            }
+        }
+        self.spawn_forwarder(req.node);
+        Ok(ClusterRegisterResponse {
+            accepted: true,
+            release,
+        })
+    }
+
+    /// Route an admission across the cluster: rank eligible nodes
+    /// (most-free first), try each in order, and wait-and-retry when
+    /// every candidate is full — the central queue of the federated
+    /// deployment. Records the grant's home on success.
+    pub fn admit_remote(
+        &self,
+        req: &AgentAdmitRequest,
+    ) -> Result<AllocVfpgaResponse, ApiError> {
+        let deadline = Instant::now() + ADMIT_DEADLINE;
+        let regions = req.regions.unwrap_or(1);
+        loop {
+            let snaps = self.registry.snapshot();
+            for node in
+                placement::eligible(&snaps, regions, req.board.as_deref())
+            {
+                let Some(addr) = self.registry.addr_of(node) else {
+                    continue;
+                };
+                let Ok(mut client) = Client::connect(addr) else {
+                    continue;
+                };
+                match client.agent_admit(req) {
+                    Ok(resp) => {
+                        self.homes.lock().unwrap().insert(
+                            resp.lease,
+                            Home {
+                                node,
+                                spec: Some(req.clone()),
+                            },
+                        );
+                        return Ok(resp);
+                    }
+                    // The snapshot was a heartbeat stale: the node's
+                    // own scheduler is the arbiter. Try the next one.
+                    Err(e) if e.code == ErrorCode::NoCapacity => {
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if Instant::now() >= deadline {
+                return Err(ApiError::new(
+                    ErrorCode::NoCapacity,
+                    "no registered node can serve the request",
+                ));
+            }
+            std::thread::sleep(ADMIT_RETRY);
+        }
+    }
+
+    /// Which node a federated lease is homed on.
+    pub fn home_of(&self, token: LeaseToken) -> Option<NodeId> {
+        self.homes.lock().unwrap().get(&token).map(|h| h.node)
+    }
+
+    /// Forget a released lease.
+    pub fn forget(&self, token: LeaseToken) {
+        self.homes.lock().unwrap().remove(&token);
+    }
+
+    /// Count of live federated leases (telemetry).
+    pub fn lease_count(&self) -> usize {
+        self.homes.lock().unwrap().len()
+    }
+
+    /// A node was declared `Down`: every lease homed there becomes
+    /// an orphan awaiting re-admission on a survivor.
+    pub fn on_node_down(&self, node: NodeId) {
+        let mut homes = self.homes.lock().unwrap();
+        let dead: Vec<LeaseToken> = homes
+            .iter()
+            .filter(|(_, h)| h.node == node)
+            .map(|(t, _)| *t)
+            .collect();
+        let mut orphans = self.orphans.lock().unwrap();
+        for t in dead {
+            let home = homes.remove(&t).expect("collected above");
+            log::warn!("node {node} down: lease {t} orphaned");
+            orphans.push(Orphan {
+                token: t,
+                spec: home.spec,
+            });
+        }
+    }
+
+    /// Try to re-admit every orphan on a surviving node, preserving
+    /// its token via the adopt path. Orphans without a spec (adopted
+    /// from a registration report) wait for their node to rejoin.
+    pub fn retry_orphans(&self) {
+        let pending: Vec<Orphan> =
+            std::mem::take(&mut *self.orphans.lock().unwrap());
+        if pending.is_empty() {
+            return;
+        }
+        let mut still = Vec::new();
+        for o in pending {
+            match self.try_readmit(&o) {
+                Some(node) => {
+                    self.hv
+                        .metrics
+                        .counter("cluster.leases.readmitted")
+                        .inc();
+                    log::info!(
+                        "lease {} re-admitted on node {node}",
+                        o.token
+                    );
+                    self.homes.lock().unwrap().insert(
+                        o.token,
+                        Home {
+                            node,
+                            spec: o.spec,
+                        },
+                    );
+                }
+                None => still.push(o),
+            }
+        }
+        self.orphans.lock().unwrap().extend(still);
+    }
+
+    fn try_readmit(&self, o: &Orphan) -> Option<NodeId> {
+        let spec = o.spec.as_ref()?;
+        let mut req = spec.clone();
+        req.adopt = Some(o.token);
+        let snaps = self.registry.snapshot();
+        let regions = req.regions.unwrap_or(1);
+        for node in
+            placement::eligible(&snaps, regions, req.board.as_deref())
+        {
+            let Some(addr) = self.registry.addr_of(node) else {
+                continue;
+            };
+            let Ok(mut client) = Client::connect(addr) else {
+                continue;
+            };
+            if client.agent_admit(&req).is_ok() {
+                return Some(node);
+            }
+        }
+        None
+    }
+
+    /// Spawn the node's event forwarder if it does not exist yet.
+    /// One forwarder per node for the coordinator's whole life: its
+    /// in-thread cursor is what keeps the federated stream gapless
+    /// across node restarts.
+    fn spawn_forwarder(self: &Arc<Self>, node: NodeId) {
+        let mut forwarders = self.forwarders.lock().unwrap();
+        if forwarders.contains_key(&node) {
+            return;
+        }
+        let this = Arc::clone(self);
+        let handle =
+            std::thread::spawn(move || forwarder_loop(&this, node));
+        forwarders.insert(node, handle);
+    }
+
+    /// Stop and join every forwarder (management-server shutdown).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let drained: Vec<(NodeId, JoinHandle<()>)> = {
+            let mut forwarders = self.forwarders.lock().unwrap();
+            std::mem::take(&mut *forwarders).into_iter().collect()
+        };
+        for (_, h) in drained {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The per-node event pump: long-poll `agent.events` from the last
+/// seen node-local cursor and republish each record on the
+/// management bus as a node-tagged federated event under its
+/// original visibility scope. Reconnects (re-resolving the node's
+/// current address) forever; the cursor lives here, so a node that
+/// restarts at a new address resumes exactly where it left off.
+fn forwarder_loop(co: &Arc<Coordinator>, node: NodeId) {
+    let mut cursor = 1u64;
+    let mut client: Option<Client> = None;
+    while !co.stop.load(Ordering::SeqCst) {
+        let Some(c) = client.as_mut() else {
+            match co
+                .registry
+                .addr_of(node)
+                .and_then(|a| Client::connect(a).ok())
+            {
+                Some(c) => client = Some(c),
+                None => std::thread::sleep(FORWARD_RECONNECT),
+            }
+            continue;
+        };
+        match c.agent_events(&AgentEventsRequest {
+            from_cursor: cursor,
+            max_events: 256,
+            timeout_s: FORWARD_POLL_S,
+        }) {
+            Ok(resp) => {
+                for ev in resp.events {
+                    if ev.cursor < cursor {
+                        continue;
+                    }
+                    cursor = ev.cursor + 1;
+                    let scope = scope_from_wire(&co.hv, &ev.scope);
+                    co.bus.publish(
+                        Event::NodeTagged {
+                            node,
+                            node_cursor: ev.cursor,
+                            event: Box::new(ev.event),
+                        },
+                        scope,
+                    );
+                }
+                cursor = cursor.max(resp.next_cursor);
+            }
+            Err(_) => {
+                // Node unreachable mid-poll: drop the connection and
+                // re-resolve (it may re-register at a new address).
+                client = None;
+                std::thread::sleep(FORWARD_RECONNECT);
+            }
+        }
+    }
+}
+
+// ----------------------------------------- scope wire translation
+
+/// Resolve a tenant *name* to this process's local `UserId`, minting
+/// one on first sight. Federation identifies tenants by name — each
+/// process (management server, each node daemon) keeps its own id
+/// space.
+pub(crate) fn user_by_name(hv: &Hypervisor, name: &str) -> UserId {
+    let mut db = hv.db.lock().unwrap();
+    if let Some(id) = db
+        .users
+        .iter()
+        .find(|(_, n)| n.as_str() == name)
+        .map(|(id, _)| *id)
+    {
+        return id;
+    }
+    db.add_user(name)
+}
+
+/// Encode a visibility scope for the wire: `public`,
+/// `token:lt-...`, or `tenant:<name>` (names, not ids — id spaces
+/// are per-process).
+pub(crate) fn scope_to_wire(hv: &Hypervisor, scope: &Scope) -> String {
+    match scope {
+        Scope::Public => "public".to_string(),
+        Scope::Token(t) => format!("token:{t}"),
+        Scope::Tenant(u) => {
+            let db = hv.db.lock().unwrap();
+            match db.user_name(*u) {
+                Some(n) => format!("tenant:{n}"),
+                None => format!("tenant:{u}"),
+            }
+        }
+    }
+}
+
+/// Decode a wire scope back into this process's scope terms.
+/// Unparsable scopes degrade to `Public` — over-sharing telemetry is
+/// preferable to silently dropping a tenant's events; the bus filter
+/// still applies topic filters downstream.
+pub(crate) fn scope_from_wire(hv: &Hypervisor, wire: &str) -> Scope {
+    if let Some(t) = wire.strip_prefix("token:") {
+        if let Some(token) = LeaseToken::parse(t) {
+            return Scope::Token(token);
+        }
+    } else if let Some(name) = wire.strip_prefix("tenant:") {
+        return Scope::Tenant(user_by_name(hv, name));
+    }
+    Scope::Public
+}
+
+/// Render the registry snapshot as the `node_list` response body —
+/// shared by the federated handler and `rc3e nodes`.
+pub fn nodes_body(
+    snaps: &[super::registry::NodeSnapshot],
+) -> Vec<crate::middleware::api::NodeBody> {
+    snaps
+        .iter()
+        .map(|s| crate::middleware::api::NodeBody {
+            node: s.node,
+            addr: s.addr.to_string(),
+            boards: s.boards.clone(),
+            regions_free: s.regions_free,
+            regions_active: s.regions_active,
+            leases: s.leases,
+            heartbeat_age_ms: s.heartbeat_age_ms,
+            state: s.state.name().to_string(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    fn coordinator() -> Arc<Coordinator> {
+        let hv = Arc::new(
+            Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+        );
+        Coordinator::new(hv, EventBus::new())
+    }
+
+    fn admit_spec(tenant: &str) -> AgentAdmitRequest {
+        AgentAdmitRequest {
+            tenant: tenant.to_string(),
+            model: None,
+            class: None,
+            regions: None,
+            co_located: None,
+            board: None,
+            adopt: None,
+        }
+    }
+
+    #[test]
+    fn scope_round_trips_through_the_wire() {
+        let hv = Arc::new(
+            Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+        );
+        assert_eq!(scope_to_wire(&hv, &Scope::Public), "public");
+        let t = LeaseToken::mint();
+        let wire = scope_to_wire(&hv, &Scope::Token(t));
+        assert_eq!(scope_from_wire(&hv, &wire), Scope::Token(t));
+        let alice = hv.add_user("alice");
+        let wire = scope_to_wire(&hv, &Scope::Tenant(alice));
+        assert_eq!(wire, "tenant:alice");
+        assert_eq!(scope_from_wire(&hv, &wire), Scope::Tenant(alice));
+        // Unknown wire scopes degrade to public.
+        assert_eq!(scope_from_wire(&hv, "???"), Scope::Public);
+    }
+
+    #[test]
+    fn user_by_name_is_idempotent() {
+        let hv = Arc::new(
+            Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+        );
+        let a = user_by_name(&hv, "dana");
+        let b = user_by_name(&hv, "dana");
+        assert_eq!(a, b);
+        assert_ne!(a, user_by_name(&hv, "erin"));
+    }
+
+    #[test]
+    fn node_death_orphans_its_leases() {
+        let co = coordinator();
+        let t0 = LeaseToken::mint();
+        let t1 = LeaseToken::mint();
+        co.homes.lock().unwrap().insert(
+            t0,
+            Home {
+                node: NodeId(0),
+                spec: Some(admit_spec("a")),
+            },
+        );
+        co.homes.lock().unwrap().insert(
+            t1,
+            Home {
+                node: NodeId(1),
+                spec: Some(admit_spec("b")),
+            },
+        );
+        co.on_node_down(NodeId(0));
+        assert_eq!(co.home_of(t0), None);
+        assert_eq!(co.home_of(t1), Some(NodeId(1)));
+        assert_eq!(co.orphans.lock().unwrap().len(), 1);
+        // No eligible node: the orphan stays pending.
+        co.retry_orphans();
+        assert_eq!(co.orphans.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn register_reconciles_token_ownership() {
+        let co = coordinator();
+        let kept = LeaseToken::mint();
+        let rehomed = LeaseToken::mint();
+        let orphaned = LeaseToken::mint();
+        co.homes.lock().unwrap().insert(
+            kept,
+            Home {
+                node: NodeId(0),
+                spec: None,
+            },
+        );
+        // `rehomed` moved to node 1 while node 0 was away.
+        co.homes.lock().unwrap().insert(
+            rehomed,
+            Home {
+                node: NodeId(1),
+                spec: None,
+            },
+        );
+        co.orphans.lock().unwrap().push(Orphan {
+            token: orphaned,
+            spec: Some(admit_spec("a")),
+        });
+        let resp = co
+            .register(&ClusterRegisterRequest {
+                node: NodeId(0),
+                name: "node-a".to_string(),
+                addr: "127.0.0.1:4000".to_string(),
+                boards: vec!["vc707".to_string()],
+                regions_total: 8,
+                tokens: vec![kept, rehomed, orphaned],
+            })
+            .unwrap();
+        assert!(resp.accepted);
+        // Only the token the cluster re-homed elsewhere is released.
+        assert_eq!(resp.release, vec![rehomed]);
+        // The orphan re-homed on the registrant.
+        assert_eq!(co.home_of(orphaned), Some(NodeId(0)));
+        assert_eq!(co.home_of(kept), Some(NodeId(0)));
+        assert!(co.orphans.lock().unwrap().is_empty());
+        co.shutdown();
+    }
+
+    #[test]
+    fn nodes_body_renders_snapshot() {
+        let co = coordinator();
+        co.registry.register(
+            NodeId(0),
+            "node-a",
+            "127.0.0.1:4001".parse().unwrap(),
+            vec!["vc707".to_string()],
+            8,
+        );
+        let body = nodes_body(&co.registry.snapshot());
+        assert_eq!(body.len(), 1);
+        assert_eq!(body[0].state, "up");
+        assert_eq!(body[0].regions_free, 8);
+    }
+}

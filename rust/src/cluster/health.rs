@@ -1,0 +1,109 @@
+//! Heartbeat-based failure detection.
+//!
+//! One monitor thread per management server: every
+//! [`HEARTBEAT_PERIOD`] it pings each pingable node (`agent.ping`),
+//! feeding successes and misses into the registry's
+//! up → suspect → down state machine
+//! ([`super::registry::SUSPECT_AFTER_MISSES`] /
+//! [`super::registry::DOWN_AFTER_MISSES`]). A node crossing the
+//! `Down` edge orphans its leases
+//! ([`super::Coordinator::on_node_down`]); each subsequent tick then
+//! retries orphan re-admission on the survivors, so queued work and
+//! surviving leases drain back into the cluster without any client
+//! involvement. `Down` nodes are not pinged — rejoin is an explicit
+//! re-registration by the restarted daemon.
+//!
+//! Heartbeats run on the *wall* clock: failure detection is about
+//! the deployment, not the simulated workload, so a paused virtual
+//! clock must not mask a dead node.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::federation::Coordinator;
+use super::registry::NodeState;
+use crate::middleware::client::Client;
+
+/// Wall-clock interval between heartbeat rounds.
+pub const HEARTBEAT_PERIOD: Duration = Duration::from_millis(250);
+
+/// Stop-poll granularity while parked between rounds.
+const PARK_TICK: Duration = Duration::from_millis(50);
+
+/// A running heartbeat monitor (owns its thread).
+pub struct HealthMonitor {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HealthMonitor {
+    pub fn spawn(coordinator: Arc<Coordinator>) -> HealthMonitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                heartbeat_round(&coordinator);
+                coordinator.retry_orphans();
+                let mut parked = Duration::ZERO;
+                while parked < HEARTBEAT_PERIOD
+                    && !stop2.load(Ordering::SeqCst)
+                {
+                    std::thread::sleep(PARK_TICK);
+                    parked += PARK_TICK;
+                }
+            }
+        });
+        HealthMonitor {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HealthMonitor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Ping every pingable node once, recording vitals or misses.
+fn heartbeat_round(co: &Arc<Coordinator>) {
+    let metrics = Arc::clone(&co.hv().metrics);
+    for (node, addr) in co.registry().pingable() {
+        let ping = Client::connect(addr)
+            .ok()
+            .and_then(|mut c| c.agent_ping().ok());
+        match ping {
+            Some(p) => {
+                metrics.counter("cluster.heartbeat.ok").inc();
+                co.registry().record_ok(
+                    node,
+                    p.leases,
+                    p.regions_free,
+                    p.regions_active,
+                    p.next_cursor,
+                );
+            }
+            None => {
+                metrics.counter("cluster.heartbeat.missed").inc();
+                if co.registry().record_miss(node)
+                    == Some(NodeState::Down)
+                {
+                    log::warn!(
+                        "node {node} missed its heartbeat budget: down"
+                    );
+                    co.on_node_down(node);
+                }
+            }
+        }
+    }
+}

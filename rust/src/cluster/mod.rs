@@ -1,0 +1,45 @@
+//! Cluster federation: node daemons, cross-node placement, failure
+//! detection and federated event streams.
+//!
+//! The paper's deployment model (Section IV-C) is a management node
+//! fronting many FPGA nodes over Gigabit Ethernet. This module is
+//! that split made real: each node runs a [`node::NodeDaemon`] that
+//! owns its local hypervisor, devices, scheduler and per-node WAL
+//! under its own `--state` directory, and the management server
+//! routes admissions across registered nodes instead of owning any
+//! device itself.
+//!
+//! * [`node`] — the per-node daemon (grown from the old
+//!   `middleware::agent` status seam, which still lives here as
+//!   [`node::NodeAgent`]): serves the `agent.*` methods over the same
+//!   typed v3 envelopes as the management server.
+//! * [`registry`] — the management-side node table: address, boards,
+//!   cached vitals, heartbeat age and the up/suspect/down state
+//!   machine behind `node_list` and the `cluster.nodes.*` gauges.
+//! * [`placement`] — pure placement policy: filter registered nodes
+//!   by health, board constraint and free capacity, rank most-free
+//!   first. Gang and co-location constraints stay node-local — a
+//!   request lands whole on one node.
+//! * [`health`] — the heartbeat monitor: pings every node, demotes
+//!   missed beats to `suspect` then `down`, and triggers
+//!   failure-driven re-admission.
+//! * [`federation`] — the coordinator: token-home bookkeeping
+//!   (`LeaseToken`s fence ownership across the cluster exactly as
+//!   they do locally), the blocking cross-node admission loop,
+//!   orphan re-admission after node death (reusing the scheduler's
+//!   adopt machinery), and per-node event forwarders that republish
+//!   node-local bus events upstream as node-tagged federated events.
+//!
+//! See `docs/FEDERATION.md` for the full topology, the failure and
+//! rejoin sequences, and the cursor-federation contract.
+
+pub mod federation;
+pub mod health;
+pub mod node;
+pub mod placement;
+pub mod registry;
+
+pub use federation::Coordinator;
+pub use health::HealthMonitor;
+pub use node::{NodeAgent, NodeDaemon};
+pub use registry::{NodeRegistry, NodeSnapshot, NodeState};

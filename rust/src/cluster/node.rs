@@ -1,0 +1,1032 @@
+//! The per-node daemon, grown from the old `middleware::agent`
+//! status seam.
+//!
+//! Two servers live here:
+//!
+//! * [`NodeAgent`] — the original thin agent: serves `agent.hello`
+//!   and `agent.status` against a *shared* hypervisor (the
+//!   single-process deployment, where the management server owns the
+//!   devices and routes status reads through the agent for the
+//!   management-node → node Ethernet hop).
+//! * [`NodeDaemon`] — the federated node: owns its *local*
+//!   [`Hypervisor`], devices, event journal and scheduler WAL under
+//!   its own `--state` directory, and additionally serves
+//!   `agent.ping` / `agent.admit` / `agent.release` /
+//!   `agent.program` / `agent.stream` / `agent.events` so the
+//!   management server can place work on it and federate its event
+//!   stream upstream.
+//!
+//! Both speak the same typed, versioned envelopes as the management
+//! server ([`crate::middleware::api`]); protocol 1 is retired here
+//! too — proto-less requests are rejected with `protocol_mismatch`.
+//!
+//! Connection handling is shutdown-clean: the accept loop re-checks
+//! the stop flag *after* `accept` returns (the wake-up connection a
+//! shutdown sends must not spawn a handler), every per-connection
+//! thread's handle is retained and joined on shutdown, and handlers
+//! poll the stop flag on a short read timeout instead of blocking in
+//! `read` forever on an idle connection.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::bitstream::Bitstream;
+use crate::config::{ClusterConfig, ServiceModel};
+use crate::fpga::board::BoardKind;
+use crate::hypervisor::{Hypervisor, PlacementPolicy};
+use crate::journal::EventJournal;
+use crate::middleware::api::{
+    AgentAdmitRequest, AgentEventsRequest, AgentEventsResponse,
+    AgentHelloRequest, AgentHelloResponse, AgentPingResponse,
+    AgentProgramRequest, AgentReleaseRequest, AgentStreamRequest,
+    AllocVfpgaResponse, ApiError, ClusterRegisterRequest,
+    ClusterRegisterResponse, ErrorCode, GangMemberBody, Method,
+    NodeEventBody, ProgramCoreResponse, ReleaseResponse, StatusRequest,
+    StatusResponse, StreamOutcomeBody,
+};
+use crate::middleware::client::Client;
+use crate::middleware::events::EventBus;
+use crate::middleware::proto::{
+    read_frame, respond, write_frame, Request, Response,
+};
+use crate::sched::{AdmissionRequest, RequestClass, Scheduler};
+use crate::util::clock::VirtualClock;
+use crate::util::ids::NodeId;
+use crate::util::json::Json;
+
+/// How often a parked connection handler re-checks the stop flag
+/// while waiting for the next request frame.
+const CONN_POLL: Duration = Duration::from_millis(200);
+
+/// Long-poll tick for `agent.events`.
+const EVENTS_POLL: Duration = Duration::from_millis(25);
+
+/// Spawn the shared accept loop: re-checks `stop` after every accept
+/// (a shutdown wake-up connection must not spawn a handler) and
+/// retains each handler's `JoinHandle` so shutdown can join the
+/// in-flight connections instead of leaking them.
+fn spawn_accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    serve: Arc<dyn Fn(TcpStream) + Send + Sync>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            // Re-check after accept: this connection may be the
+            // shutdown wake-up, which must not get a handler.
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let serve = Arc::clone(&serve);
+            let handle = std::thread::spawn(move || serve(stream));
+            let mut held = conns.lock().unwrap();
+            // Reap handlers that already finished so the vector stays
+            // bounded by the number of *live* connections.
+            held.retain(|h: &JoinHandle<()>| !h.is_finished());
+            held.push(handle);
+        }
+    })
+}
+
+/// Join the accept thread and every connection handler.
+fn join_all(
+    handle: &mut Option<JoinHandle<()>>,
+    conns: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    if let Some(h) = handle.take() {
+        let _ = h.join();
+    }
+    let drained: Vec<JoinHandle<()>> =
+        std::mem::take(&mut *conns.lock().unwrap());
+    for h in drained {
+        let _ = h.join();
+    }
+}
+
+/// Read the next request frame on a stop-polling connection: blocks
+/// at most [`CONN_POLL`] at a time, returning `None` when the peer
+/// hung up or the server is stopping.
+fn next_frame(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> std::io::Result<Option<Json>> {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match read_frame(stream) {
+            Ok(f) => return Ok(f),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ===================================================== NodeAgent
+
+/// A running node agent (owns its listener thread).
+pub struct NodeAgent {
+    pub node: NodeId,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NodeAgent {
+    /// Spawn an agent for `node`, serving device ops from the shared
+    /// hypervisor state (the process model is simulated; the wire is
+    /// real TCP on loopback).
+    pub fn spawn(
+        hv: Arc<Hypervisor>,
+        node: NodeId,
+        fail_plan: Option<Arc<crate::testing::FailPlan>>,
+    ) -> std::io::Result<NodeAgent> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let stop2 = Arc::clone(&stop);
+        let serve: Arc<dyn Fn(TcpStream) + Send + Sync> =
+            Arc::new(move |stream| {
+                let _ = serve_agent_conn(
+                    stream,
+                    Arc::clone(&hv),
+                    node,
+                    fail_plan.clone(),
+                    &stop2,
+                );
+            });
+        let handle = spawn_accept_loop(
+            listener,
+            Arc::clone(&stop),
+            Arc::clone(&conns),
+            serve,
+        );
+        Ok(NodeAgent {
+            node,
+            addr,
+            stop,
+            handle: Some(handle),
+            conns,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting (kicks the listener with a dummy connection)
+    /// and join every in-flight connection handler.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        join_all(&mut self.handle, &self.conns);
+    }
+}
+
+impl Drop for NodeAgent {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_agent_conn(
+    mut stream: TcpStream,
+    hv: Arc<Hypervisor>,
+    node: NodeId,
+    plan: Option<Arc<crate::testing::FailPlan>>,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(CONN_POLL))?;
+    while let Some(frame) = next_frame(&mut stream, stop)? {
+        if let Some(p) = &plan {
+            if p.should_fail("agent.drop_conn") {
+                // Simulated agent crash mid-request.
+                stream.flush()?;
+                return Ok(());
+            }
+        }
+        let resp = match Request::from_json(&frame) {
+            Err(e) => Response::failure(None, ApiError::bad_request(e)),
+            Ok(req) => {
+                let result = req.negotiate_proto().and_then(|_| {
+                    dispatch_agent(&hv, node, &req.method, &req.params)
+                });
+                respond(req.id, result)
+            }
+        };
+        write_frame(&mut stream, &resp.to_json())?;
+    }
+    Ok(())
+}
+
+fn dispatch_agent(
+    hv: &Hypervisor,
+    node: NodeId,
+    method: &str,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    match Method::parse(method) {
+        Some(Method::AgentHello) => {
+            let _req = AgentHelloRequest::from_json(params)?;
+            Ok(AgentHelloResponse {
+                node,
+                version: crate::VERSION.to_string(),
+            }
+            .to_json())
+        }
+        Some(Method::AgentStatus) => {
+            let req = StatusRequest::from_json(params)?;
+            // The agent performs the *local* status call (Table I's
+            // 11 ms path); the management server adds the RPC charge.
+            let st =
+                hv.status_local(req.fpga).map_err(ApiError::from)?;
+            Ok(StatusResponse::from_status(&st).to_json())
+        }
+        _ => Err(ApiError::new(
+            ErrorCode::UnknownMethod,
+            format!("agent: unknown method '{method}'"),
+        )),
+    }
+}
+
+// ==================================================== NodeDaemon
+
+struct DaemonInner {
+    node: NodeId,
+    name: String,
+    hv: Arc<Hypervisor>,
+    sched: Arc<Scheduler>,
+    bus: Arc<EventBus>,
+    journal: Arc<EventJournal>,
+    cores: BTreeMap<String, Bitstream>,
+    stop: Arc<AtomicBool>,
+}
+
+/// A federated node daemon: owns its local hypervisor, devices,
+/// event journal and scheduler WAL, and serves the full `agent.*`
+/// surface so the management server can place and fence work here.
+pub struct NodeDaemon {
+    inner: Arc<DaemonInner>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NodeDaemon {
+    /// Boot node `index` of `config` and serve it on an ephemeral
+    /// loopback port. The daemon boots only its own boards (earlier
+    /// nodes are padded empty so the hypervisor assigns the
+    /// cluster-wide `NodeId`), restores users and id floors from a
+    /// previous life's device DB under `state_dir`, journals every
+    /// bus event to `state_dir/events/` and replays its scheduler
+    /// WAL — surviving leases are re-adopted and reported to the
+    /// management server on [`NodeDaemon::register`].
+    pub fn spawn(
+        config: &ClusterConfig,
+        index: usize,
+        state_dir: &Path,
+        clock: Arc<VirtualClock>,
+    ) -> Result<NodeDaemon, String> {
+        let local = config.for_node(index)?;
+        let name = local.nodes[index].name.clone();
+        std::fs::create_dir_all(state_dir).map_err(|e| {
+            format!("state dir {}: {e}", state_dir.display())
+        })?;
+        let hv = Arc::new(
+            Hypervisor::boot(&local, clock, PlacementPolicy::ConsolidateFirst)
+                .map_err(|e| e.to_string())?,
+        );
+        let db_path = state_dir.join("devices.json");
+        {
+            let mut db = hv.db.lock().unwrap();
+            if db_path.exists() {
+                // A restarted daemon must mint the same UserIds for
+                // the same tenants (WAL recovery matches on tenant
+                // id) and never reuse a pre-crash AllocationId.
+                let old = crate::hypervisor::DeviceDb::load(&db_path)?;
+                for (id, uname) in &old.users {
+                    db.users.insert(*id, uname.clone());
+                    db.user_ids.bump_past(id.0);
+                }
+                for id in old.allocations.keys() {
+                    db.alloc_ids.bump_past(id.0);
+                }
+            }
+            // Partition the allocation-id space per node so ids stay
+            // cluster-unique without coordination: node N mints from
+            // (N+1) << 20 upward.
+            db.alloc_ids.bump_past(((index as u64) + 1) << 20);
+        }
+        let journal = Arc::new(
+            EventJournal::open(&state_dir.join("events"))
+                .map_err(|e| format!("event journal: {e}"))?,
+        );
+        journal.set_metrics(Arc::clone(&hv.metrics));
+        let bus = EventBus::new();
+        bus.set_metrics(Arc::clone(&hv.metrics));
+        bus.attach_journal(Arc::clone(&journal));
+        let sched = Scheduler::new(Arc::clone(&hv));
+        crate::middleware::server::wire_event_sources(&hv, &sched, &bus);
+        hv.db.lock().unwrap().save(&db_path)?;
+        sched.attach_persistence(&db_path)?;
+
+        let listener =
+            TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let inner = Arc::new(DaemonInner {
+            node: NodeId(index as u64),
+            name,
+            hv,
+            sched,
+            bus,
+            journal,
+            cores: crate::middleware::server::build_core_library(),
+            stop: Arc::clone(&stop),
+        });
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let inner2 = Arc::clone(&inner);
+        let serve: Arc<dyn Fn(TcpStream) + Send + Sync> =
+            Arc::new(move |stream| {
+                let _ = serve_daemon_conn(stream, Arc::clone(&inner2));
+            });
+        let handle = spawn_accept_loop(
+            listener,
+            Arc::clone(&stop),
+            Arc::clone(&conns),
+            serve,
+        );
+        Ok(NodeDaemon {
+            inner,
+            addr,
+            stop,
+            handle: Some(handle),
+            conns,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.inner.node
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// The daemon's local hypervisor (tests and benches).
+    pub fn hv(&self) -> &Arc<Hypervisor> {
+        &self.inner.hv
+    }
+
+    /// The daemon's local scheduler (tests and benches).
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.inner.sched
+    }
+
+    /// Board kinds present on this node, deduplicated.
+    pub fn boards(&self) -> Vec<String> {
+        let db = self.inner.hv.db.lock().unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for f in self.inner.hv.device_ids() {
+            if let Some(d) = db.device(f) {
+                seen.insert(d.board.name().to_string());
+            }
+        }
+        seen.into_iter().collect()
+    }
+
+    /// Total vFPGA regions across this node's devices.
+    pub fn regions_total(&self) -> u64 {
+        let db = self.inner.hv.db.lock().unwrap();
+        self.inner
+            .hv
+            .device_ids()
+            .iter()
+            .filter_map(|f| db.device(*f))
+            .map(|d| d.regions.len() as u64)
+            .sum()
+    }
+
+    /// Register (or re-register after a restart) with the management
+    /// server at `mgmt`: report identity, inventory and every lease
+    /// the local WAL re-adopted. The response's `release` list names
+    /// tokens the cluster has since re-homed elsewhere — they are
+    /// released locally here, completing reconciliation.
+    pub fn register(
+        &self,
+        mgmt: SocketAddr,
+    ) -> Result<ClusterRegisterResponse, String> {
+        let mut client = Client::connect(mgmt)?;
+        let req = ClusterRegisterRequest {
+            node: self.inner.node,
+            name: self.inner.name.clone(),
+            addr: self.addr.to_string(),
+            boards: self.boards(),
+            regions_total: self.regions_total(),
+            tokens: self.inner.sched.live_tokens(),
+        };
+        let resp = client
+            .cluster_register(&req)
+            .map_err(|e| e.to_string())?;
+        for t in &resp.release {
+            if let Err(e) = self.inner.sched.release_token(*t) {
+                log::warn!(
+                    "reconcile: releasing re-homed lease {t}: {e}"
+                );
+            }
+        }
+        Ok(resp)
+    }
+
+    /// Stop accepting, then join the accept thread and every
+    /// connection handler (long-polls notice the stop flag).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        join_all(&mut self.handle, &self.conns);
+        self.inner.bus.flush();
+    }
+}
+
+impl Drop for NodeDaemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_daemon_conn(
+    mut stream: TcpStream,
+    inner: Arc<DaemonInner>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(CONN_POLL))?;
+    while let Some(frame) = next_frame(&mut stream, &inner.stop)? {
+        let resp = match Request::from_json(&frame) {
+            Err(e) => Response::failure(None, ApiError::bad_request(e)),
+            Ok(req) => {
+                let result = req.negotiate_proto().and_then(|_| {
+                    dispatch_daemon(&inner, &req.method, &req.params)
+                });
+                respond(req.id, result)
+            }
+        };
+        write_frame(&mut stream, &resp.to_json())?;
+    }
+    Ok(())
+}
+
+fn dispatch_daemon(
+    inner: &Arc<DaemonInner>,
+    method: &str,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    match Method::parse(method) {
+        Some(Method::AgentHello) => {
+            let _req = AgentHelloRequest::from_json(params)?;
+            Ok(AgentHelloResponse {
+                node: inner.node,
+                version: crate::VERSION.to_string(),
+            }
+            .to_json())
+        }
+        Some(Method::AgentStatus) => {
+            let req = StatusRequest::from_json(params)?;
+            let st = inner
+                .hv
+                .status_local(req.fpga)
+                .map_err(ApiError::from)?;
+            Ok(StatusResponse::from_status(&st).to_json())
+        }
+        Some(Method::AgentPing) => d_ping(inner),
+        Some(Method::AgentAdmit) => d_admit(inner, params),
+        Some(Method::AgentRelease) => d_release(inner, params),
+        Some(Method::AgentProgram) => d_program(inner, params),
+        Some(Method::AgentStream) => d_stream(inner, params),
+        Some(Method::AgentEvents) => d_events(inner, params),
+        _ => Err(ApiError::new(
+            ErrorCode::UnknownMethod,
+            format!("agent: unknown method '{method}'"),
+        )),
+    }
+}
+
+/// Heartbeat: vitals straight from the device DB (cheap — the health
+/// monitor calls this several times a second per node).
+fn d_ping(inner: &Arc<DaemonInner>) -> Result<Json, ApiError> {
+    let (free, total) = {
+        let db = inner.hv.db.lock().unwrap();
+        let mut free = 0u64;
+        let mut total = 0u64;
+        for f in inner.hv.device_ids() {
+            free += db.free_regions(f).len() as u64;
+            if let Some(d) = db.device(f) {
+                total += d.regions.len() as u64;
+            }
+        }
+        (free, total)
+    };
+    Ok(AgentPingResponse {
+        node: inner.node,
+        leases: inner.sched.live_tokens().len() as u64,
+        regions_free: free,
+        regions_active: total - free,
+        next_cursor: inner.journal.next_cursor(),
+    }
+    .to_json())
+}
+
+fn d_admit(
+    inner: &Arc<DaemonInner>,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    let req = AgentAdmitRequest::from_json(params)?;
+    let model = req.model.unwrap_or(ServiceModel::RAaaS);
+    if model == ServiceModel::RSaaS {
+        return Err(ApiError::bad_request(
+            "agent.admit serves vFPGA models",
+        ));
+    }
+    let class = req.class.unwrap_or(RequestClass::Interactive);
+    // Tenants federate by *name*: each daemon mints (or reuses) its
+    // own local UserId for the management-side tenant string.
+    let user =
+        super::federation::user_by_name(&inner.hv, &req.tenant);
+    let mut areq = AdmissionRequest::new(user, model, class);
+    if let Some(n) = req.regions {
+        areq = areq.gang(n);
+    }
+    if req.co_located == Some(true) {
+        areq = areq.co_located();
+    }
+    if let Some(b) = &req.board {
+        let board = BoardKind::parse(b).ok_or_else(|| {
+            ApiError::bad_request(format!("unknown board '{b}'"))
+        })?;
+        areq = areq.on_board(board);
+    }
+    // Adoption keeps the cluster-wide token stable across a node
+    // failure: the re-admitted lease fences with the *same*
+    // capability the client already holds.
+    let lease = match req.adopt {
+        Some(token) => inner.sched.admit_adopted(&areq, token),
+        None => inner.sched.admit(&areq),
+    }
+    .map_err(ApiError::from)?;
+    let members: Vec<GangMemberBody> = lease
+        .placements()
+        .iter()
+        .map(|pl| GangMemberBody {
+            alloc: pl.alloc,
+            vfpga: match pl.target {
+                crate::sched::GrantTarget::Vfpga(v, _, _) => v,
+                crate::sched::GrantTarget::Physical(_, _) => {
+                    unreachable!("vFPGA admission")
+                }
+            },
+            fpga: match pl.target {
+                crate::sched::GrantTarget::Vfpga(_, f, _)
+                | crate::sched::GrantTarget::Physical(f, _) => f,
+            },
+            node: match pl.target {
+                crate::sched::GrantTarget::Vfpga(_, _, n)
+                | crate::sched::GrantTarget::Physical(_, n) => n,
+            },
+        })
+        .collect();
+    let primary = members.first().cloned().ok_or_else(|| {
+        ApiError::internal("admitted lease has no members")
+    })?;
+    let resp = AllocVfpgaResponse {
+        alloc: primary.alloc,
+        vfpga: primary.vfpga,
+        fpga: primary.fpga,
+        node: primary.node,
+        wait_ms: lease.wait().as_millis_f64(),
+        lease: lease.token(),
+        members,
+    };
+    // Disarm: the lease stays live node-side, fenced by the token.
+    let _token = lease.into_token();
+    Ok(resp.to_json())
+}
+
+fn d_release(
+    inner: &Arc<DaemonInner>,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    let req = AgentReleaseRequest::from_json(params)?;
+    inner
+        .sched
+        .release_token(req.lease)
+        .map_err(ApiError::from)?;
+    Ok(ReleaseResponse { released: true }.to_json())
+}
+
+fn d_program(
+    inner: &Arc<DaemonInner>,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    let req = AgentProgramRequest::from_json(params)?;
+    let handle = authorize(inner, req.lease, req.alloc)?;
+    let user = handle.tenant();
+    let bitfile = inner.cores.get(&req.core).ok_or_else(|| {
+        ApiError::new(
+            ErrorCode::UnknownCore,
+            format!("unknown core '{}'", req.core),
+        )
+    })?;
+    let d = inner
+        .hv
+        .program_retargeted(req.alloc, user, bitfile)
+        .map_err(ApiError::from)?;
+    Ok(ProgramCoreResponse {
+        programmed: req.core,
+        pr_ms: d.as_millis_f64(),
+    }
+    .to_json())
+}
+
+fn d_stream(
+    inner: &Arc<DaemonInner>,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    let req = AgentStreamRequest::from_json(params)?;
+    let cfg =
+        crate::middleware::server::stream_config_for(&req.core, req.mults)?;
+    let handle = authorize(inner, req.lease, req.alloc)?;
+    let idx = handle
+        .members()
+        .iter()
+        .position(|a| *a == req.alloc)
+        .unwrap_or(0);
+    // Synchronous on the node: the management server wraps this call
+    // in its own async job, so the long wait lives there.
+    let out = handle.stream_member(idx, &cfg).map_err(ApiError::from)?;
+    Ok(StreamOutcomeBody::from_outcome(&out).to_json())
+}
+
+/// Long-poll the node's event journal: everything published on this
+/// node (scheduler telemetry, region transitions, job progress) is
+/// journaled with its local cursor; the management server's
+/// forwarder drains from here and republishes upstream node-tagged.
+fn d_events(
+    inner: &Arc<DaemonInner>,
+    params: &Json,
+) -> Result<Json, ApiError> {
+    let req = AgentEventsRequest::from_json(params)?;
+    let deadline = Instant::now()
+        + Duration::from_secs_f64(req.timeout_s.clamp(0.0, 30.0));
+    let max = req.max_events.clamp(1, 1024) as usize;
+    loop {
+        let records = inner
+            .journal
+            .replay_from(req.from_cursor)
+            .map_err(|e| ApiError::internal(format!("journal: {e}")))?;
+        let stopping = inner.stop.load(Ordering::SeqCst);
+        if !records.is_empty()
+            || Instant::now() >= deadline
+            || stopping
+        {
+            let events: Vec<NodeEventBody> = records
+                .into_iter()
+                .take(max)
+                .map(|(cursor, event, scope)| NodeEventBody {
+                    cursor,
+                    scope: super::federation::scope_to_wire(
+                        &inner.hv, &scope,
+                    ),
+                    event,
+                })
+                .collect();
+            let next_cursor = events
+                .last()
+                .map(|e| e.cursor + 1)
+                .unwrap_or(req.from_cursor);
+            return Ok(AgentEventsResponse {
+                next_cursor,
+                events,
+            }
+            .to_json());
+        }
+        std::thread::sleep(EVENTS_POLL);
+    }
+}
+
+/// Resolve the lease handle for a token and verify `alloc` is one of
+/// its members — the node-local analogue of the management server's
+/// `authorize`.
+fn authorize(
+    inner: &Arc<DaemonInner>,
+    token: crate::util::ids::LeaseToken,
+    alloc: crate::util::ids::AllocationId,
+) -> Result<crate::sched::Lease, ApiError> {
+    inner.sched.verify_member(token, alloc).map_err(ApiError::from)?;
+    inner.sched.lease_handle(token).ok_or_else(|| {
+        ApiError::new(
+            ErrorCode::BadToken,
+            "unknown or released lease token",
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::middleware::client::Client;
+    use crate::util::clock::VirtualClock;
+    use crate::util::ids::FpgaId;
+
+    fn hv() -> Arc<Hypervisor> {
+        Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap())
+    }
+
+    #[test]
+    fn agent_serves_status_over_tcp() {
+        let hv = hv();
+        let agent = NodeAgent::spawn(Arc::clone(&hv), NodeId(0), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        let body = client
+            .call_v2(
+                "agent.status",
+                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
+            )
+            .unwrap();
+        assert_eq!(body.get("regions_total").as_u64(), Some(4));
+        assert_eq!(body.get("board").as_str(), Some("vc707"));
+    }
+
+    #[test]
+    fn agent_rejects_retired_protocol_1() {
+        let hv = hv();
+        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
+        let mut stream = TcpStream::connect(agent.addr()).unwrap();
+        let raw = Json::obj(vec![
+            ("method", Json::from("agent.hello")),
+            ("params", Json::obj(vec![])),
+        ]);
+        write_frame(&mut stream, &raw).unwrap();
+        let frame = read_frame(&mut stream).unwrap().unwrap();
+        let err = Response::from_json(&frame)
+            .unwrap()
+            .into_api_result()
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::ProtocolMismatch);
+    }
+
+    #[test]
+    fn agent_serves_typed_status() {
+        let hv = hv();
+        let agent =
+            NodeAgent::spawn(Arc::clone(&hv), NodeId(0), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        let st = client.agent_status(FpgaId(0)).unwrap();
+        assert_eq!(st.regions_total, 4);
+        assert_eq!(st.board, "vc707");
+        let hello = client.agent_hello().unwrap();
+        assert_eq!(hello.node, NodeId(0));
+        assert_eq!(hello.version, crate::VERSION);
+    }
+
+    #[test]
+    fn agent_hello_reports_node() {
+        let hv = hv();
+        let agent =
+            NodeAgent::spawn(Arc::clone(&hv), NodeId(1), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        let hello = client.agent_hello().unwrap();
+        assert_eq!(hello.node, NodeId(1));
+    }
+
+    #[test]
+    fn unknown_method_is_error() {
+        let hv = hv();
+        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        assert!(client
+            .call_v2("agent.reboot", Json::obj(vec![]))
+            .is_err());
+    }
+
+    #[test]
+    fn bad_fpga_id_is_error_not_crash() {
+        let hv = hv();
+        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        assert!(client
+            .call_v2(
+                "agent.status",
+                Json::obj(vec![("fpga", Json::from("fpga-99"))])
+            )
+            .is_err());
+        // Connection still usable after the error.
+        assert!(client.agent_hello().is_ok());
+    }
+
+    #[test]
+    fn injected_connection_drop_surfaces_as_io_error() {
+        let hv = hv();
+        let plan = crate::testing::FailPlan::new();
+        plan.arm("agent.drop_conn", crate::testing::FailPoint::OnHit(1));
+        let agent = NodeAgent::spawn(hv, NodeId(0), Some(plan)).unwrap();
+        let mut client = Client::connect(agent.addr()).unwrap();
+        let err = client.agent_hello().unwrap_err();
+        assert!(
+            err.message.contains("io") || err.message.contains("eof"),
+            "{err}"
+        );
+        // Reconnect works (the node came back).
+        let mut c2 = Client::connect(agent.addr()).unwrap();
+        assert!(c2.agent_hello().is_ok());
+    }
+
+    #[test]
+    fn shutdown_joins_inflight_connections() {
+        let hv = hv();
+        let mut agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
+        // Park a live connection on the agent, then shut down while
+        // it is still open: shutdown must join the handler (which
+        // notices the stop flag on its poll tick) instead of hanging
+        // or leaking it.
+        let mut client = Client::connect(agent.addr()).unwrap();
+        assert!(client.agent_hello().is_ok());
+        let start = Instant::now();
+        agent.shutdown();
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "shutdown hung on an idle connection"
+        );
+        // The parked connection was closed by the join.
+        assert!(client.agent_hello().is_err());
+    }
+
+    fn daemon_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "rc3e-node-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn daemon_serves_full_lifecycle_locally() {
+        let dir = daemon_dir("lifecycle");
+        let config = ClusterConfig::paper_testbed();
+        let daemon =
+            NodeDaemon::spawn(&config, 0, &dir, VirtualClock::new()).unwrap();
+        assert_eq!(daemon.node(), NodeId(0));
+        assert_eq!(daemon.boards(), vec!["vc707".to_string()]);
+        assert_eq!(daemon.regions_total(), 8);
+
+        let mut client = Client::connect(daemon.addr()).unwrap();
+        let ping = client.agent_ping().unwrap();
+        assert_eq!(ping.node, NodeId(0));
+        assert_eq!(ping.regions_free, 8);
+        assert_eq!(ping.leases, 0);
+
+        let grant = client
+            .agent_admit(&AgentAdmitRequest {
+                tenant: "alice".to_string(),
+                model: None,
+                class: None,
+                regions: None,
+                co_located: None,
+                board: None,
+                adopt: None,
+            })
+            .unwrap();
+        assert_eq!(grant.node, NodeId(0));
+        let prog = client
+            .agent_program(&AgentProgramRequest {
+                lease: grant.lease,
+                alloc: grant.alloc,
+                core: "matmul16".to_string(),
+            })
+            .unwrap();
+        assert_eq!(prog.programmed, "matmul16");
+        let out = client
+            .agent_stream(&AgentStreamRequest {
+                lease: grant.lease,
+                alloc: grant.alloc,
+                core: "matmul16".to_string(),
+                mults: 4096,
+            })
+            .unwrap();
+        assert_eq!(out.mults, 4096);
+        assert_eq!(out.validation_failures, 0);
+        let rel = client.agent_release(grant.lease).unwrap();
+        assert!(rel.released);
+        let ping = client.agent_ping().unwrap();
+        assert_eq!(ping.regions_free, 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn daemon_wal_survives_restart_and_readopts_leases() {
+        let dir = daemon_dir("wal");
+        let config = ClusterConfig::paper_testbed();
+        let token = {
+            let daemon =
+                NodeDaemon::spawn(&config, 1, &dir, VirtualClock::new())
+                    .unwrap();
+            let mut client = Client::connect(daemon.addr()).unwrap();
+            let grant = client
+                .agent_admit(&AgentAdmitRequest {
+                    tenant: "bob".to_string(),
+                    model: None,
+                    class: None,
+                    regions: Some(2),
+                    co_located: None,
+                    board: None,
+                    adopt: None,
+                })
+                .unwrap();
+            grant.lease
+            // Daemon dropped here — simulating a crash would skip
+            // the WAL sync, which attach_persistence already did at
+            // admit time.
+        };
+        let daemon =
+            NodeDaemon::spawn(&config, 1, &dir, VirtualClock::new()).unwrap();
+        let live = daemon.scheduler().live_tokens();
+        assert_eq!(live, vec![token]);
+        let mut client = Client::connect(daemon.addr()).unwrap();
+        let ping = client.agent_ping().unwrap();
+        assert_eq!(ping.leases, 1);
+        assert_eq!(ping.regions_free, 6);
+        // The re-adopted lease still fences: release by token works.
+        assert!(client.agent_release(token).unwrap().released);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn daemon_events_long_poll_returns_node_events() {
+        let dir = daemon_dir("events");
+        let config = ClusterConfig::paper_testbed();
+        let daemon =
+            NodeDaemon::spawn(&config, 0, &dir, VirtualClock::new()).unwrap();
+        let mut client = Client::connect(daemon.addr()).unwrap();
+        let grant = client
+            .agent_admit(&AgentAdmitRequest {
+                tenant: "carol".to_string(),
+                model: None,
+                class: None,
+                regions: None,
+                co_located: None,
+                board: None,
+                adopt: None,
+            })
+            .unwrap();
+        let resp = client
+            .agent_events(&AgentEventsRequest {
+                from_cursor: 1,
+                max_events: 64,
+                timeout_s: 2.0,
+            })
+            .unwrap();
+        assert!(!resp.events.is_empty());
+        // Cursors are the node-local journal sequence: strictly
+        // increasing, and next_cursor continues past the last one.
+        let cursors: Vec<u64> =
+            resp.events.iter().map(|e| e.cursor).collect();
+        for w in cursors.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(
+            resp.next_cursor,
+            cursors.last().unwrap() + 1
+        );
+        // Grant telemetry is public-scoped on the wire.
+        assert!(resp
+            .events
+            .iter()
+            .any(|e| e.scope == "public"));
+        client.agent_release(grant.lease).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,107 @@
+//! Cross-node placement policy: pure functions over registry
+//! snapshots, unit-testable without any networking.
+//!
+//! A federated admission lands *whole* on one node — gang size and
+//! co-location are enforced by that node's local scheduler exactly
+//! as they are in a single-process deployment. What federates is the
+//! *choice of node*: [`eligible`] filters the registered nodes down
+//! to those that could serve the request (healthy, board match,
+//! enough free regions) and ranks the survivors most-free-first so
+//! load spreads across the cluster, ties broken by lowest `NodeId`
+//! for determinism.
+//!
+//! The free-region capacity filter is advisory — vitals are a
+//! heartbeat old, so the node's own scheduler is the arbiter and the
+//! coordinator simply tries the next candidate (or waits) when an
+//! admit bounces with `no_capacity`.
+
+use super::registry::{NodeSnapshot, NodeState};
+use crate::util::ids::NodeId;
+
+/// Filter and rank candidate nodes for an admission of `regions`
+/// regions with an optional board constraint. Returns node ids in
+/// placement-preference order (most free regions first, then lowest
+/// id).
+pub fn eligible(
+    nodes: &[NodeSnapshot],
+    regions: u32,
+    board: Option<&str>,
+) -> Vec<NodeId> {
+    let mut fit: Vec<&NodeSnapshot> = nodes
+        .iter()
+        .filter(|n| n.state == NodeState::Up)
+        .filter(|n| match board {
+            Some(b) => n.boards.iter().any(|have| have == b),
+            None => true,
+        })
+        .filter(|n| n.regions_free >= u64::from(regions))
+        .collect();
+    fit.sort_by(|a, b| {
+        b.regions_free
+            .cmp(&a.regions_free)
+            .then(a.node.cmp(&b.node))
+    });
+    fit.into_iter().map(|n| n.node).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(
+        node: u64,
+        state: NodeState,
+        boards: &[&str],
+        free: u64,
+    ) -> NodeSnapshot {
+        NodeSnapshot {
+            node: NodeId(node),
+            name: format!("node-{node}"),
+            addr: "127.0.0.1:9".parse().unwrap(),
+            boards: boards.iter().map(|b| b.to_string()).collect(),
+            state,
+            regions_total: 8,
+            regions_free: free,
+            regions_active: 8 - free,
+            leases: 0,
+            next_cursor: 1,
+            heartbeat_age_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn ranks_most_free_first_with_id_tiebreak() {
+        let nodes = vec![
+            snap(0, NodeState::Up, &["vc707"], 3),
+            snap(1, NodeState::Up, &["ml605"], 8),
+            snap(2, NodeState::Up, &["vc707"], 8),
+        ];
+        assert_eq!(
+            eligible(&nodes, 1, None),
+            vec![NodeId(1), NodeId(2), NodeId(0)]
+        );
+    }
+
+    #[test]
+    fn board_constraint_filters_nodes() {
+        let nodes = vec![
+            snap(0, NodeState::Up, &["vc707"], 2),
+            snap(1, NodeState::Up, &["ml605"], 8),
+        ];
+        assert_eq!(eligible(&nodes, 1, Some("vc707")), vec![NodeId(0)]);
+        assert_eq!(eligible(&nodes, 1, Some("ml605")), vec![NodeId(1)]);
+        assert!(eligible(&nodes, 1, Some("zcu102")).is_empty());
+    }
+
+    #[test]
+    fn unhealthy_and_full_nodes_are_excluded() {
+        let nodes = vec![
+            snap(0, NodeState::Down, &["vc707"], 8),
+            snap(1, NodeState::Suspect, &["vc707"], 8),
+            snap(2, NodeState::Up, &["vc707"], 1),
+        ];
+        // Gang of 2 does not fit on the only healthy node.
+        assert!(eligible(&nodes, 2, None).is_empty());
+        assert_eq!(eligible(&nodes, 1, None), vec![NodeId(2)]);
+    }
+}

@@ -1,0 +1,321 @@
+//! The management-side node table.
+//!
+//! One entry per registered node daemon: dial-back address, board
+//! inventory, the vitals cached from the last successful heartbeat
+//! ([`crate::middleware::api::AgentPingResponse`]) and the
+//! up/suspect/down state machine the health monitor drives. The
+//! registry is the single source the placement layer filters over
+//! and the `node_list` RPC renders.
+//!
+//! State machine: a node registers `Up`; [`SUSPECT_AFTER_MISSES`]
+//! consecutive missed heartbeats demote it to `Suspect`,
+//! [`DOWN_AFTER_MISSES`] to `Down`. A `Down` node is no longer
+//! pinged — it rejoins only by re-registering (`cluster.register`),
+//! which resets it to `Up`. Every transition updates the
+//! `cluster.nodes.{up,suspect,down}` gauges.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::Registry;
+use crate::util::ids::NodeId;
+
+/// Consecutive missed heartbeats before a node turns `Suspect`.
+pub const SUSPECT_AFTER_MISSES: u32 = 1;
+
+/// Consecutive missed heartbeats before a node turns `Down` (and its
+/// surviving leases become re-admission orphans).
+pub const DOWN_AFTER_MISSES: u32 = 3;
+
+/// Health of one registered node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Up,
+    Suspect,
+    Down,
+}
+
+impl NodeState {
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeState::Up => "up",
+            NodeState::Suspect => "suspect",
+            NodeState::Down => "down",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct NodeEntry {
+    name: String,
+    addr: SocketAddr,
+    boards: Vec<String>,
+    regions_total: u64,
+    regions_free: u64,
+    regions_active: u64,
+    leases: u64,
+    next_cursor: u64,
+    last_ok: Instant,
+    misses: u32,
+    state: NodeState,
+}
+
+/// A point-in-time copy of one node's registry entry (what placement
+/// filters and `node_list` renders).
+#[derive(Debug, Clone)]
+pub struct NodeSnapshot {
+    pub node: NodeId,
+    pub name: String,
+    pub addr: SocketAddr,
+    pub boards: Vec<String>,
+    pub state: NodeState,
+    pub regions_total: u64,
+    pub regions_free: u64,
+    pub regions_active: u64,
+    pub leases: u64,
+    pub next_cursor: u64,
+    pub heartbeat_age_ms: f64,
+}
+
+/// The node table. All methods take `&self`; one mutex guards the
+/// map (registration and heartbeats are rare next to admissions).
+#[derive(Debug, Default)]
+pub struct NodeRegistry {
+    nodes: Mutex<BTreeMap<NodeId, NodeEntry>>,
+    metrics: Mutex<Option<Arc<Registry>>>,
+}
+
+impl NodeRegistry {
+    pub fn new() -> NodeRegistry {
+        NodeRegistry::default()
+    }
+
+    /// Wire the `cluster.nodes.*` gauges.
+    pub fn set_metrics(&self, metrics: Arc<Registry>) {
+        *self.metrics.lock().unwrap() = Some(metrics);
+        self.update_gauges();
+    }
+
+    /// Insert or refresh a node (registration and re-registration
+    /// both land here). The node always comes back `Up` — rejoin is
+    /// an explicit re-register, never a lucky heartbeat.
+    pub fn register(
+        &self,
+        node: NodeId,
+        name: &str,
+        addr: SocketAddr,
+        boards: Vec<String>,
+        regions_total: u64,
+    ) {
+        let mut nodes = self.nodes.lock().unwrap();
+        let entry = NodeEntry {
+            name: name.to_string(),
+            addr,
+            boards,
+            regions_total,
+            // Until the first heartbeat reports real vitals, assume
+            // the node is empty so placement does not starve it.
+            regions_free: regions_total,
+            regions_active: 0,
+            leases: 0,
+            next_cursor: 1,
+            last_ok: Instant::now(),
+            misses: 0,
+            state: NodeState::Up,
+        };
+        nodes.insert(node, entry);
+        drop(nodes);
+        self.update_gauges();
+    }
+
+    /// Record a successful heartbeat with the vitals it returned.
+    pub fn record_ok(
+        &self,
+        node: NodeId,
+        leases: u64,
+        regions_free: u64,
+        regions_active: u64,
+        next_cursor: u64,
+    ) {
+        let mut changed = false;
+        {
+            let mut nodes = self.nodes.lock().unwrap();
+            if let Some(e) = nodes.get_mut(&node) {
+                e.leases = leases;
+                e.regions_free = regions_free;
+                e.regions_active = regions_active;
+                e.next_cursor = next_cursor;
+                e.last_ok = Instant::now();
+                e.misses = 0;
+                changed = e.state != NodeState::Up;
+                // A Down node never self-heals via heartbeat (it is
+                // not pinged); Suspect recovers here.
+                if e.state == NodeState::Suspect {
+                    e.state = NodeState::Up;
+                }
+            }
+        }
+        if changed {
+            self.update_gauges();
+        }
+    }
+
+    /// Record a missed heartbeat; returns the new state when the
+    /// miss caused a transition (the `Down` edge is what triggers
+    /// failure-driven re-admission).
+    pub fn record_miss(&self, node: NodeId) -> Option<NodeState> {
+        let transition = {
+            let mut nodes = self.nodes.lock().unwrap();
+            let e = nodes.get_mut(&node)?;
+            if e.state == NodeState::Down {
+                return None;
+            }
+            e.misses += 1;
+            let next = if e.misses >= DOWN_AFTER_MISSES {
+                NodeState::Down
+            } else if e.misses >= SUSPECT_AFTER_MISSES {
+                NodeState::Suspect
+            } else {
+                e.state
+            };
+            if next == e.state {
+                None
+            } else {
+                e.state = next;
+                Some(next)
+            }
+        };
+        if transition.is_some() {
+            self.update_gauges();
+        }
+        transition
+    }
+
+    /// Dial-back address of one node.
+    pub fn addr_of(&self, node: NodeId) -> Option<SocketAddr> {
+        self.nodes.lock().unwrap().get(&node).map(|e| e.addr)
+    }
+
+    /// Point-in-time copy of every entry, in `NodeId` order.
+    pub fn snapshot(&self) -> Vec<NodeSnapshot> {
+        self.nodes
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, e)| NodeSnapshot {
+                node: *id,
+                name: e.name.clone(),
+                addr: e.addr,
+                boards: e.boards.clone(),
+                state: e.state,
+                regions_total: e.regions_total,
+                regions_free: e.regions_free,
+                regions_active: e.regions_active,
+                leases: e.leases,
+                next_cursor: e.next_cursor,
+                heartbeat_age_ms: e.last_ok.elapsed().as_secs_f64()
+                    * 1e3,
+            })
+            .collect()
+    }
+
+    /// Nodes currently pingable (everything not `Down`).
+    pub fn pingable(&self) -> Vec<(NodeId, SocketAddr)> {
+        self.nodes
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| e.state != NodeState::Down)
+            .map(|(id, e)| (*id, e.addr))
+            .collect()
+    }
+
+    fn update_gauges(&self) {
+        let metrics = self.metrics.lock().unwrap().clone();
+        let Some(m) = metrics else { return };
+        let (mut up, mut suspect, mut down) = (0i64, 0i64, 0i64);
+        for e in self.nodes.lock().unwrap().values() {
+            match e.state {
+                NodeState::Up => up += 1,
+                NodeState::Suspect => suspect += 1,
+                NodeState::Down => down += 1,
+            }
+        }
+        m.gauge("cluster.nodes.up").set(up);
+        m.gauge("cluster.nodes.suspect").set(suspect);
+        m.gauge("cluster.nodes.down").set(down);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    #[test]
+    fn misses_walk_up_to_down_and_register_resets() {
+        let r = NodeRegistry::new();
+        r.register(NodeId(0), "node-a", addr(9000), vec![], 8);
+        assert_eq!(r.record_miss(NodeId(0)), Some(NodeState::Suspect));
+        assert_eq!(r.record_miss(NodeId(0)), None);
+        assert_eq!(r.record_miss(NodeId(0)), Some(NodeState::Down));
+        // Down is sticky: further misses report nothing, and an ok
+        // cannot resurrect it either.
+        assert_eq!(r.record_miss(NodeId(0)), None);
+        r.record_ok(NodeId(0), 0, 8, 0, 1);
+        assert_eq!(r.snapshot()[0].state, NodeState::Down);
+        // Only re-registration brings it back.
+        r.register(NodeId(0), "node-a", addr(9001), vec![], 8);
+        let snap = r.snapshot();
+        assert_eq!(snap[0].state, NodeState::Up);
+        assert_eq!(snap[0].addr, addr(9001));
+    }
+
+    #[test]
+    fn suspect_recovers_on_ok() {
+        let r = NodeRegistry::new();
+        r.register(NodeId(1), "node-b", addr(9002), vec![], 8);
+        assert_eq!(r.record_miss(NodeId(1)), Some(NodeState::Suspect));
+        r.record_ok(NodeId(1), 2, 5, 3, 7);
+        let snap = r.snapshot();
+        assert_eq!(snap[0].state, NodeState::Up);
+        assert_eq!(snap[0].leases, 2);
+        assert_eq!(snap[0].regions_free, 5);
+        assert_eq!(snap[0].next_cursor, 7);
+    }
+
+    #[test]
+    fn gauges_track_state_counts() {
+        let m = Arc::new(Registry::new());
+        let r = NodeRegistry::new();
+        r.set_metrics(Arc::clone(&m));
+        r.register(NodeId(0), "a", addr(9003), vec![], 8);
+        r.register(NodeId(1), "b", addr(9004), vec![], 8);
+        assert_eq!(m.gauge("cluster.nodes.up").get(), 2);
+        r.record_miss(NodeId(1));
+        assert_eq!(m.gauge("cluster.nodes.up").get(), 1);
+        assert_eq!(m.gauge("cluster.nodes.suspect").get(), 1);
+        for _ in 0..2 {
+            r.record_miss(NodeId(1));
+        }
+        assert_eq!(m.gauge("cluster.nodes.down").get(), 1);
+    }
+
+    #[test]
+    fn pingable_excludes_down_nodes() {
+        let r = NodeRegistry::new();
+        r.register(NodeId(0), "a", addr(9005), vec![], 8);
+        r.register(NodeId(1), "b", addr(9006), vec![], 8);
+        for _ in 0..3 {
+            r.record_miss(NodeId(0));
+        }
+        let p = r.pingable();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].0, NodeId(1));
+    }
+}

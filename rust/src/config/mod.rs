@@ -150,6 +150,43 @@ impl ClusterConfig {
         }
     }
 
+    /// The single-node view a federated node daemon boots: node
+    /// `index`'s boards only, with every earlier node padded empty so
+    /// the hypervisor assigns the daemon its cluster-wide
+    /// `NodeId(index)` while its device ids stay node-local (each
+    /// daemon's FPGAs number from `fpga-0`).
+    pub fn for_node(&self, index: usize) -> Result<ClusterConfig, String> {
+        let node = self.nodes.get(index).ok_or_else(|| {
+            format!(
+                "node index {index} out of range ({} nodes)",
+                self.nodes.len()
+            )
+        })?;
+        let mut nodes: Vec<NodeConfig> = (0..index)
+            .map(|i| NodeConfig {
+                name: format!("pad-{i}"),
+                fpgas: Vec::new(),
+            })
+            .collect();
+        nodes.push(node.clone());
+        Ok(ClusterConfig {
+            nodes,
+            require_signatures: self.require_signatures,
+            rpc_overhead_ms: self.rpc_overhead_ms,
+        })
+    }
+
+    /// A device-less config for `serve --federated`: the management
+    /// node owns no boards of its own; capacity arrives when node
+    /// daemons register.
+    pub fn management_only() -> ClusterConfig {
+        ClusterConfig {
+            nodes: Vec::new(),
+            require_signatures: false,
+            rpc_overhead_ms: 69.0,
+        }
+    }
+
     pub fn total_fpgas(&self) -> usize {
         self.nodes.iter().map(|n| n.fpgas.len()).sum()
     }
@@ -317,6 +354,19 @@ mod tests {
         // Round-trips like any other config.
         let back = ClusterConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn for_node_pads_to_the_cluster_node_id() {
+        let c = ClusterConfig::paper_testbed();
+        let n1 = c.for_node(1).unwrap();
+        // Two entries: one empty pad, then node-b's boards — so the
+        // hypervisor's positional NodeId assignment yields NodeId(1).
+        assert_eq!(n1.nodes.len(), 2);
+        assert!(n1.nodes[0].fpgas.is_empty());
+        assert_eq!(n1.nodes[1], c.nodes[1]);
+        assert_eq!(n1.total_fpgas(), 2);
+        assert!(c.for_node(2).is_err());
     }
 
     #[test]

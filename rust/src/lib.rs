@@ -38,6 +38,11 @@
 //!   library and the CLI command surface. Protocol 3: typed
 //!   event-stream API (server-push subscriptions, streaming job
 //!   progress, coalesced `job_wait`); protocol 1 is retired.
+//! * [`cluster`] — federation: per-node daemons owning their local
+//!   hypervisor + scheduler WAL, cross-node placement in the
+//!   management server, heartbeat failure detection with
+//!   failure-driven lease re-admission, and node-tagged federated
+//!   event streams (`docs/FEDERATION.md`).
 //! * [`batch`] — batch system for long-running unattended jobs, with
 //!   an inline and a PR/stream-pipelined execution mode (long-lived
 //!   per-worker region pair, accrual split at job boundaries).
@@ -57,6 +62,7 @@
 
 pub mod batch;
 pub mod bitstream;
+pub mod cluster;
 pub mod config;
 pub mod fifo;
 pub mod fpga;

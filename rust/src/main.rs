@@ -207,6 +207,22 @@ fn flag_specs() -> Vec<FlagSpec> {
             takes_value: false,
             help: "debug logging",
         },
+        FlagSpec {
+            name: "federated",
+            takes_value: false,
+            help: "serve: federated management server (capacity \
+                   arrives from node daemons, no local devices)",
+        },
+        FlagSpec {
+            name: "mgmt",
+            takes_value: true,
+            help: "node: management server address to register with",
+        },
+        FlagSpec {
+            name: "node-index",
+            takes_value: true,
+            help: "node: which config node this daemon serves",
+        },
     ]
 }
 
@@ -227,6 +243,8 @@ fn main() {
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "serve" => cmd_serve(&args),
+        "node" => cmd_node(&args),
+        "nodes" => cmd_nodes(&args),
         "demo" => cmd_demo(&args),
         "cli" => cmd_cli(&args),
         "status" => cmd_status(&args),
@@ -262,7 +280,11 @@ fn usage() -> String {
         "rc3e — Reconfigurable Common Cloud Computing Environment\n\n\
          Subcommands:\n\
          \x20 serve      boot management server + node agents \
-         [--state DIR]\n\
+         [--state DIR] [--federated]\n\
+         \x20 node       federated node daemon: --node-index N \
+         --mgmt host:port --state DIR\n\
+         \x20 nodes      list cluster nodes (health, capacity, \
+         heartbeat age)\n\
          \x20 demo       in-process end-to-end demo\n\
          \x20 cli        raw middleware call: rc3e cli <method> [--flags]\n\
          \x20 adduser    --name <s>\n\
@@ -305,7 +327,20 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
-    let config = load_config(args)?;
+    let federated = args.has("federated");
+    let config = if federated {
+        // A federated management node owns no boards; keep only the
+        // RPC overhead from an explicit config.
+        let mut c = ClusterConfig::management_only();
+        if let Some(path) = args.get("config") {
+            c.rpc_overhead_ms =
+                ClusterConfig::load(std::path::Path::new(path))?
+                    .rpc_overhead_ms;
+        }
+        c
+    } else {
+        load_config(args)?
+    };
     let scale = args.get_u64("timescale", 0).map_err(|e| e.to_string())?;
     let clock = if scale > 0 {
         VirtualClock::with_scale(scale)
@@ -360,12 +395,27 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             );
         }
     }
-    let server = ManagementServer::spawn_with_state(
-        Arc::clone(&hv),
-        config.rpc_overhead_ms,
-        state_dir.as_deref(),
-    )
+    let server = if federated {
+        ManagementServer::spawn_federated(
+            Arc::clone(&hv),
+            config.rpc_overhead_ms,
+            state_dir.as_deref(),
+        )
+    } else {
+        ManagementServer::spawn_with_state(
+            Arc::clone(&hv),
+            config.rpc_overhead_ms,
+            state_dir.as_deref(),
+        )
+    }
     .map_err(|e| e.to_string())?;
+    if federated {
+        eprintln!(
+            "federated: waiting for node daemons to register \
+             (rc3e node --node-index N --mgmt {} --state DIR)",
+            server.addr()
+        );
+    }
     if let Some(dir) = &state_dir {
         // Persist the device DB, the event journal and the
         // scheduler's snapshot + WAL side by side; a restarted
@@ -396,6 +446,76 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_node(args: &Args) -> Result<(), String> {
+    let config = load_config(args)?;
+    let index = args
+        .get("node-index")
+        .ok_or("missing --node-index")?
+        .parse::<usize>()
+        .map_err(|e| format!("bad --node-index: {e}"))?;
+    let mgmt: std::net::SocketAddr = args
+        .get("mgmt")
+        .ok_or("missing --mgmt (management server address)")?
+        .parse()
+        .map_err(|e| format!("bad --mgmt: {e}"))?;
+    let state = args
+        .get("state")
+        .ok_or("missing --state (per-node WAL directory)")?;
+    let scale = args.get_u64("timescale", 0).map_err(|e| e.to_string())?;
+    let clock = if scale > 0 {
+        VirtualClock::with_scale(scale)
+    } else {
+        VirtualClock::new()
+    };
+    let daemon = rc3e::cluster::NodeDaemon::spawn(
+        &config,
+        index,
+        std::path::Path::new(state),
+        clock,
+    )?;
+    // The daemon's address first, like serve: scripts read line one.
+    println!("{}", daemon.addr());
+    let resp = daemon.register(mgmt)?;
+    eprintln!(
+        "node daemon {} ({}) at {} registered with {} \
+         ({} stale leases released)",
+        daemon.node(),
+        daemon.name(),
+        daemon.addr(),
+        mgmt,
+        resp.release.len()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_nodes(args: &Args) -> Result<(), String> {
+    let mut client = connect(args)?;
+    let resp = client.node_list().map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        "cluster nodes",
+        &[
+            "node", "addr", "boards", "free", "active", "leases",
+            "hb ms", "state",
+        ],
+    );
+    for n in &resp.nodes {
+        t.row(&[
+            n.node.to_string(),
+            n.addr.clone(),
+            n.boards.join(","),
+            n.regions_free.to_string(),
+            n.regions_active.to_string(),
+            n.leases.to_string(),
+            format!("{:.0}", n.heartbeat_age_ms),
+            n.state.clone(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
 }
 
 fn connect(args: &Args) -> Result<Client, String> {

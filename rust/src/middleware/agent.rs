@@ -1,262 +1,11 @@
-//! Node agent: the per-FPGA-node daemon.
+//! Node agent: the per-FPGA-node daemon (compatibility shim).
 //!
-//! Runs on every node that hosts boards; the management server routes
-//! device-local operations (status queries, in a full deployment also
-//! configuration writes) through the agent over TCP — the paper's
-//! management-node → node hop over Gigabit Ethernet.
-//!
-//! The agent speaks the same typed, versioned envelopes as the
-//! management server ([`super::api`]): its two methods
-//! ([`Method::AgentHello`], [`Method::AgentStatus`]) dispatch through
-//! typed request/response structs. Protocol 1 is retired here too —
-//! proto-less requests are rejected with `protocol_mismatch`.
+//! The agent grew into the cluster-federation subsystem and now
+//! lives at [`crate::cluster::node`] — [`NodeAgent`] is the original
+//! shared-hypervisor status agent, and its federated sibling
+//! [`crate::cluster::node::NodeDaemon`] owns a whole node (local
+//! hypervisor, devices, scheduler WAL, event journal) and serves the
+//! full `agent.*` method surface. This module re-exports the agent
+//! so existing `middleware::agent::NodeAgent` paths keep working.
 
-use std::io::Write;
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-
-use super::api::{
-    AgentHelloRequest, AgentHelloResponse, ApiError, Method,
-    StatusRequest, StatusResponse,
-};
-use super::proto::{read_frame, respond, write_frame, Request, Response};
-use crate::hypervisor::Hypervisor;
-use crate::util::ids::NodeId;
-use crate::util::json::Json;
-
-/// A running node agent (owns its listener thread).
-pub struct NodeAgent {
-    pub node: NodeId,
-    addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
-
-impl NodeAgent {
-    /// Spawn an agent for `node`, serving device ops from the shared
-    /// hypervisor state (the process model is simulated; the wire is
-    /// real TCP on loopback).
-    pub fn spawn(
-        hv: Arc<Hypervisor>,
-        node: NodeId,
-        fail_plan: Option<Arc<crate::testing::FailPlan>>,
-    ) -> std::io::Result<NodeAgent> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let handle = std::thread::spawn(move || {
-            for conn in listener.incoming() {
-                if stop2.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(stream) = conn else { continue };
-                let hv = Arc::clone(&hv);
-                let plan = fail_plan.clone();
-                std::thread::spawn(move || {
-                    let _ = serve_conn(stream, hv, node, plan);
-                });
-            }
-        });
-        Ok(NodeAgent {
-            node,
-            addr,
-            stop,
-            handle: Some(handle),
-        })
-    }
-
-    pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
-    }
-
-    /// Stop accepting (kicks the listener with a dummy connection).
-    pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for NodeAgent {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-fn serve_conn(
-    mut stream: TcpStream,
-    hv: Arc<Hypervisor>,
-    node: NodeId,
-    plan: Option<Arc<crate::testing::FailPlan>>,
-) -> std::io::Result<()> {
-    while let Some(frame) = read_frame(&mut stream)? {
-        if let Some(p) = &plan {
-            if p.should_fail("agent.drop_conn") {
-                // Simulated agent crash mid-request.
-                stream.flush()?;
-                return Ok(());
-            }
-        }
-        let resp = match Request::from_json(&frame) {
-            Err(e) => Response::failure(None, ApiError::bad_request(e)),
-            Ok(req) => {
-                let result = req.negotiate_proto().and_then(|_| {
-                    dispatch(&hv, node, &req.method, &req.params)
-                });
-                respond(req.id, result)
-            }
-        };
-        write_frame(&mut stream, &resp.to_json())?;
-    }
-    Ok(())
-}
-
-fn dispatch(
-    hv: &Hypervisor,
-    node: NodeId,
-    method: &str,
-    params: &Json,
-) -> Result<Json, ApiError> {
-    match Method::parse(method) {
-        Some(Method::AgentHello) => {
-            let _req = AgentHelloRequest::from_json(params)?;
-            Ok(AgentHelloResponse {
-                node,
-                version: crate::VERSION.to_string(),
-            }
-            .to_json())
-        }
-        Some(Method::AgentStatus) => {
-            let req = StatusRequest::from_json(params)?;
-            // The agent performs the *local* status call (Table I's
-            // 11 ms path); the management server adds the RPC charge.
-            let st =
-                hv.status_local(req.fpga).map_err(ApiError::from)?;
-            Ok(StatusResponse::from_status(&st).to_json())
-        }
-        _ => Err(ApiError::new(
-            super::api::ErrorCode::UnknownMethod,
-            format!("agent: unknown method '{method}'"),
-        )),
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::middleware::client::Client;
-    use crate::util::clock::VirtualClock;
-    use crate::util::ids::FpgaId;
-
-    fn hv() -> Arc<Hypervisor> {
-        Arc::new(Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap())
-    }
-
-    #[test]
-    fn agent_serves_status_over_tcp() {
-        let hv = hv();
-        let agent = NodeAgent::spawn(Arc::clone(&hv), NodeId(0), None).unwrap();
-        let mut client = Client::connect(agent.addr()).unwrap();
-        let body = client
-            .call_v2(
-                "agent.status",
-                Json::obj(vec![("fpga", Json::from("fpga-0"))]),
-            )
-            .unwrap();
-        assert_eq!(body.get("regions_total").as_u64(), Some(4));
-        assert_eq!(body.get("board").as_str(), Some("vc707"));
-    }
-
-    #[test]
-    fn agent_rejects_retired_protocol_1() {
-        let hv = hv();
-        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
-        let mut stream =
-            TcpStream::connect(agent.addr()).unwrap();
-        let raw = Json::obj(vec![
-            ("method", Json::from("agent.hello")),
-            ("params", Json::obj(vec![])),
-        ]);
-        super::write_frame(&mut stream, &raw).unwrap();
-        let frame =
-            super::read_frame(&mut stream).unwrap().unwrap();
-        let err = Response::from_json(&frame)
-            .unwrap()
-            .into_api_result()
-            .unwrap_err();
-        assert_eq!(
-            err.code,
-            super::super::api::ErrorCode::ProtocolMismatch
-        );
-    }
-
-    #[test]
-    fn agent_serves_typed_status() {
-        let hv = hv();
-        let agent =
-            NodeAgent::spawn(Arc::clone(&hv), NodeId(0), None).unwrap();
-        let mut client = Client::connect(agent.addr()).unwrap();
-        let st = client.agent_status(FpgaId(0)).unwrap();
-        assert_eq!(st.regions_total, 4);
-        assert_eq!(st.board, "vc707");
-        let hello = client.agent_hello().unwrap();
-        assert_eq!(hello.node, NodeId(0));
-        assert_eq!(hello.version, crate::VERSION);
-    }
-
-    #[test]
-    fn agent_hello_reports_node() {
-        let hv = hv();
-        let agent =
-            NodeAgent::spawn(Arc::clone(&hv), NodeId(1), None).unwrap();
-        let mut client = Client::connect(agent.addr()).unwrap();
-        let hello = client.agent_hello().unwrap();
-        assert_eq!(hello.node, NodeId(1));
-    }
-
-    #[test]
-    fn unknown_method_is_error() {
-        let hv = hv();
-        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
-        let mut client = Client::connect(agent.addr()).unwrap();
-        assert!(client
-            .call_v2("agent.reboot", Json::obj(vec![]))
-            .is_err());
-    }
-
-    #[test]
-    fn bad_fpga_id_is_error_not_crash() {
-        let hv = hv();
-        let agent = NodeAgent::spawn(hv, NodeId(0), None).unwrap();
-        let mut client = Client::connect(agent.addr()).unwrap();
-        assert!(client
-            .call_v2(
-                "agent.status",
-                Json::obj(vec![("fpga", Json::from("fpga-99"))])
-            )
-            .is_err());
-        // Connection still usable after the error.
-        assert!(client.agent_hello().is_ok());
-    }
-
-    #[test]
-    fn injected_connection_drop_surfaces_as_io_error() {
-        let hv = hv();
-        let plan = crate::testing::FailPlan::new();
-        plan.arm("agent.drop_conn", crate::testing::FailPoint::OnHit(1));
-        let agent = NodeAgent::spawn(hv, NodeId(0), Some(plan)).unwrap();
-        let mut client = Client::connect(agent.addr()).unwrap();
-        let err = client.agent_hello().unwrap_err();
-        assert!(
-            err.message.contains("io") || err.message.contains("eof"),
-            "{err}"
-        );
-        // Reconnect works (the node came back).
-        let mut c2 = Client::connect(agent.addr()).unwrap();
-        assert!(c2.agent_hello().is_ok());
-    }
-}
+pub use crate::cluster::node::NodeAgent;

@@ -354,11 +354,33 @@ pub enum Method {
     TraceGet,
     AgentHello,
     AgentStatus,
+    /// Registered nodes with health, capacity and heartbeat age.
+    NodeList,
+    /// A node daemon dialing in (or rejoining after a crash): it
+    /// reports its address, capacity and the leases its local WAL
+    /// re-adopted; the response lists tokens re-homed elsewhere in
+    /// the meantime, which the node must release (reconciliation).
+    ClusterRegister,
+    /// Heartbeat probe: capacity, queue depth and journal cursor.
+    AgentPing,
+    /// Cross-node admission: the placement layer asks one node's
+    /// local scheduler for a lease (optionally re-minting it under a
+    /// pre-existing token — failure-driven re-admission).
+    AgentAdmit,
+    /// Release a node-local lease by capability token.
+    AgentRelease,
+    /// Program a prebuilt core onto a node-local lease member.
+    AgentProgram,
+    /// Synchronous streaming session on a node-local lease member.
+    AgentStream,
+    /// Multi-frame replay/follow of the node's local event journal
+    /// (the federation feed; frames carry node-local cursors).
+    AgentEvents,
 }
 
 impl Method {
     /// Every method, for dispatch-completeness tests and the docs.
-    pub const ALL: [Method; 34] = [
+    pub const ALL: [Method; 42] = [
         Method::Hello,
         Method::AddUser,
         Method::Status,
@@ -393,6 +415,14 @@ impl Method {
         Method::TraceGet,
         Method::AgentHello,
         Method::AgentStatus,
+        Method::NodeList,
+        Method::ClusterRegister,
+        Method::AgentPing,
+        Method::AgentAdmit,
+        Method::AgentRelease,
+        Method::AgentProgram,
+        Method::AgentStream,
+        Method::AgentEvents,
     ];
 
     pub fn name(self) -> &'static str {
@@ -431,6 +461,14 @@ impl Method {
             Method::TraceGet => "trace_get",
             Method::AgentHello => "agent.hello",
             Method::AgentStatus => "agent.status",
+            Method::NodeList => "node_list",
+            Method::ClusterRegister => "cluster.register",
+            Method::AgentPing => "agent.ping",
+            Method::AgentAdmit => "agent.admit",
+            Method::AgentRelease => "agent.release",
+            Method::AgentProgram => "agent.program",
+            Method::AgentStream => "agent.stream",
+            Method::AgentEvents => "agent.events",
         }
     }
 
@@ -438,10 +476,20 @@ impl Method {
         Method::ALL.iter().copied().find(|m| m.name() == s)
     }
 
-    /// Methods served by the node agent (the rest belong to the
-    /// management server).
+    /// Methods served by the node agent / node daemon (the rest
+    /// belong to the management server).
     pub fn is_agent(self) -> bool {
-        matches!(self, Method::AgentHello | Method::AgentStatus)
+        matches!(
+            self,
+            Method::AgentHello
+                | Method::AgentStatus
+                | Method::AgentPing
+                | Method::AgentAdmit
+                | Method::AgentRelease
+                | Method::AgentProgram
+                | Method::AgentStream
+                | Method::AgentEvents
+        )
     }
 }
 
@@ -2471,6 +2519,17 @@ pub enum Event {
         class: RequestClass,
         wait_ms: f64,
     },
+    /// A federated event forwarded from a node daemon's local bus:
+    /// the inner event, tagged with the originating node and that
+    /// node's *own* journal cursor. Per-node cursors are dense, so a
+    /// cluster-wide subscriber can verify gapless coverage per node;
+    /// the outer management cursor still orders the merged stream.
+    NodeTagged {
+        node: NodeId,
+        /// Position in the originating node's local event journal.
+        node_cursor: u64,
+        event: Box<Event>,
+    },
 }
 
 impl Event {
@@ -2482,6 +2541,9 @@ impl Event {
             Event::QueueDepth { .. } | Event::GrantIssued { .. } => {
                 Topic::Sched
             }
+            // Filters see through the federation wrapper: a watcher
+            // of Topic::Sched receives node-local sched events too.
+            Event::NodeTagged { event, .. } => event.topic(),
         }
     }
 
@@ -2495,6 +2557,7 @@ impl Event {
             Event::RegionTransition { .. } => "region_transition",
             Event::QueueDepth { .. } => "queue_depth",
             Event::GrantIssued { .. } => "grant_issued",
+            Event::NodeTagged { .. } => "node_event",
         }
     }
 
@@ -2502,6 +2565,7 @@ impl Event {
     pub fn job_id(&self) -> Option<JobId> {
         match self {
             Event::JobProgress { job, .. } => Some(*job),
+            Event::NodeTagged { event, .. } => event.job_id(),
             _ => None,
         }
     }
@@ -2511,6 +2575,7 @@ impl Event {
         match self {
             Event::LeasePlacementChanged { fpga, .. }
             | Event::RegionTransition { fpga, .. } => Some(*fpga),
+            Event::NodeTagged { event, .. } => event.fpga_id(),
             _ => None,
         }
     }
@@ -2580,6 +2645,15 @@ impl Event {
                 j.set("class", Json::from(class.name()));
                 j.set("wait_ms", Json::from(*wait_ms));
             }
+            Event::NodeTagged {
+                node,
+                node_cursor,
+                event,
+            } => {
+                j.set("node", Json::from(node.to_string()));
+                j.set("node_cursor", Json::from(*node_cursor));
+                j.set("event", event.to_json());
+            }
         }
         j
     }
@@ -2629,6 +2703,11 @@ impl Event {
                         ApiError::bad_request("unknown class in event")
                     })?,
                 wait_ms: want_f64(p, "wait_ms")?,
+            }),
+            "node_event" => Ok(Event::NodeTagged {
+                node: want_id(p, "node", NodeId::parse)?,
+                node_cursor: want_u64(p, "node_cursor")?,
+                event: Box::new(Event::from_json(p.get("event"))?),
             }),
             t => Err(ApiError::bad_request(format!(
                 "unknown event type '{t}'"
@@ -3316,6 +3395,551 @@ impl AgentHelloResponse {
             version: want_str(p, "version")?,
         })
     }
+}
+
+/// `agent.ping` — the heartbeat probe. Empty request; the response
+/// carries the node vitals the registry caches for `node_list` and
+/// the node's journal head so the health monitor can detect a
+/// stalled event forwarder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentPingRequest;
+
+impl AgentPingRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<AgentPingRequest, ApiError> {
+        Ok(AgentPingRequest)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentPingResponse {
+    pub node: NodeId,
+    /// Live leases held by the node-local scheduler.
+    pub leases: u64,
+    pub regions_free: u64,
+    pub regions_active: u64,
+    /// The node journal's next cursor (last assigned + 1).
+    pub next_cursor: u64,
+}
+
+impl AgentPingResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", Json::from(self.node.to_string())),
+            ("leases", Json::from(self.leases)),
+            ("regions_free", Json::from(self.regions_free)),
+            ("regions_active", Json::from(self.regions_active)),
+            ("next_cursor", Json::from(self.next_cursor)),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<AgentPingResponse, ApiError> {
+        Ok(AgentPingResponse {
+            node: want_id(p, "node", NodeId::parse)?,
+            leases: want_u64(p, "leases")?,
+            regions_free: want_u64(p, "regions_free")?,
+            regions_active: want_u64(p, "regions_active")?,
+            next_cursor: want_u64(p, "next_cursor")?,
+        })
+    }
+}
+
+/// `agent.admit` — place an admission on the node's local scheduler.
+/// The tenant travels by *name*: node daemons mint their own
+/// `UserId`s, so names are the only identity stable across the
+/// cluster. `adopt` is the re-admission path — a lease re-homed off
+/// a dead node keeps the token its holder already carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentAdmitRequest {
+    pub tenant: String,
+    pub model: Option<ServiceModel>,
+    pub class: Option<RequestClass>,
+    /// Gang size (absent = 1); gangs stay node-local.
+    pub regions: Option<u32>,
+    pub co_located: Option<bool>,
+    pub board: Option<String>,
+    /// Mint the lease under this pre-existing token.
+    pub adopt: Option<LeaseToken>,
+}
+
+impl AgentAdmitRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![(
+            "tenant",
+            Json::from(self.tenant.as_str()),
+        )]);
+        if let Some(m) = self.model {
+            j.set("model", Json::from(m.name()));
+        }
+        if let Some(c) = self.class {
+            j.set("class", Json::from(c.name()));
+        }
+        if let Some(n) = self.regions {
+            j.set("regions", Json::from(u64::from(n)));
+        }
+        if let Some(co) = self.co_located {
+            j.set("co_located", Json::from(co));
+        }
+        if let Some(b) = &self.board {
+            j.set("board", Json::from(b.as_str()));
+        }
+        set_opt_lease(&mut j, "adopt", self.adopt);
+        j
+    }
+
+    pub fn from_json(p: &Json) -> Result<AgentAdmitRequest, ApiError> {
+        let model = match opt_str(p, "model") {
+            Some(s) => Some(ServiceModel::parse(&s).ok_or_else(|| {
+                ApiError::bad_request(format!("unknown model '{s}'"))
+            })?),
+            None => None,
+        };
+        let class = match opt_str(p, "class") {
+            Some(s) => Some(RequestClass::parse(&s).ok_or_else(|| {
+                ApiError::bad_request(format!("unknown class '{s}'"))
+            })?),
+            None => None,
+        };
+        let regions = match opt_u64(p, "regions") {
+            Some(0) => {
+                return Err(ApiError::bad_request(
+                    "'regions' must be >= 1",
+                ))
+            }
+            Some(n) if n > u64::from(u32::MAX) => {
+                return Err(ApiError::bad_request(
+                    "'regions' out of range",
+                ))
+            }
+            Some(n) => Some(n as u32),
+            None => None,
+        };
+        Ok(AgentAdmitRequest {
+            tenant: want_str(p, "tenant")?,
+            model,
+            class,
+            regions,
+            co_located: p.get("co_located").as_bool(),
+            board: opt_str(p, "board"),
+            adopt: opt_lease(p, "adopt")?,
+        })
+    }
+}
+
+/// `agent.release` — tear down the lease named by `lease` (every
+/// member). The token *is* the authorization, exactly as on the
+/// management surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentReleaseRequest {
+    pub lease: LeaseToken,
+}
+
+impl AgentReleaseRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("lease", Json::from(self.lease.to_string()))])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<AgentReleaseRequest, ApiError> {
+        Ok(AgentReleaseRequest {
+            lease: want_id(p, "lease", LeaseToken::parse)?,
+        })
+    }
+}
+
+/// `agent.program` — partial-reconfigure `alloc` with `core` from the
+/// node's local library, fenced by the lease token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentProgramRequest {
+    pub lease: LeaseToken,
+    pub alloc: AllocationId,
+    pub core: String,
+}
+
+impl AgentProgramRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lease", Json::from(self.lease.to_string())),
+            ("alloc", Json::from(self.alloc.to_string())),
+            ("core", Json::from(self.core.as_str())),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<AgentProgramRequest, ApiError> {
+        Ok(AgentProgramRequest {
+            lease: want_id(p, "lease", LeaseToken::parse)?,
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+            core: want_str(p, "core")?,
+        })
+    }
+}
+
+/// `agent.stream` — run a data stream through `alloc` on the node
+/// (multi-frame response, same frames as the management `stream`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentStreamRequest {
+    pub lease: LeaseToken,
+    pub alloc: AllocationId,
+    pub core: String,
+    pub mults: u64,
+}
+
+impl AgentStreamRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lease", Json::from(self.lease.to_string())),
+            ("alloc", Json::from(self.alloc.to_string())),
+            ("core", Json::from(self.core.as_str())),
+            ("mults", Json::from(self.mults)),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<AgentStreamRequest, ApiError> {
+        Ok(AgentStreamRequest {
+            lease: want_id(p, "lease", LeaseToken::parse)?,
+            alloc: want_id(p, "alloc", AllocationId::parse)?,
+            core: want_str(p, "core")?,
+            mults: want_u64(p, "mults")?,
+        })
+    }
+}
+
+/// `agent.events` — drain a batch of the node's journal starting at
+/// `from_cursor`. Long-polls up to `timeout_s` when the journal is
+/// dry so the forwarder does not busy-spin; per-node cursors are
+/// dense, which is what makes federated gap detection possible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentEventsRequest {
+    /// First cursor wanted (cursors start at 1).
+    pub from_cursor: u64,
+    pub max_events: u64,
+    pub timeout_s: f64,
+}
+
+impl AgentEventsRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("from_cursor", Json::from(self.from_cursor)),
+            ("max_events", Json::from(self.max_events)),
+            ("timeout_s", Json::from(self.timeout_s)),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<AgentEventsRequest, ApiError> {
+        Ok(AgentEventsRequest {
+            from_cursor: want_u64(p, "from_cursor")?,
+            max_events: want_u64(p, "max_events")?,
+            timeout_s: want_f64(p, "timeout_s")?,
+        })
+    }
+}
+
+/// One journal entry in an `agent.events` batch: the node-local
+/// cursor, the visibility scope it was published under (re-applied
+/// by the management bus on forward), and the event itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeEventBody {
+    pub cursor: u64,
+    /// "public" | "token:<lease>" | "tenant:<user>".
+    pub scope: String,
+    pub event: Event,
+}
+
+impl NodeEventBody {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cursor", Json::from(self.cursor)),
+            ("scope", Json::from(self.scope.as_str())),
+            ("event", self.event.to_json()),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<NodeEventBody, ApiError> {
+        Ok(NodeEventBody {
+            cursor: want_u64(p, "cursor")?,
+            scope: want_str(p, "scope")?,
+            event: Event::from_json(p.get("event"))?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentEventsResponse {
+    /// Cursor to resume from (last delivered + 1).
+    pub next_cursor: u64,
+    pub events: Vec<NodeEventBody>,
+}
+
+impl AgentEventsResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("next_cursor", Json::from(self.next_cursor)),
+            (
+                "events",
+                Json::Arr(
+                    self.events.iter().map(|e| e.to_json()).collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<AgentEventsResponse, ApiError> {
+        let events = p
+            .get("events")
+            .as_arr()
+            .ok_or_else(|| {
+                ApiError::bad_request("missing array field 'events'")
+            })?
+            .iter()
+            .map(NodeEventBody::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(AgentEventsResponse {
+            next_cursor: want_u64(p, "next_cursor")?,
+            events,
+        })
+    }
+}
+
+// ========================================================== cluster
+
+/// `node_list` — one registered node as the registry sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeListRequest;
+
+impl NodeListRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+
+    pub fn from_json(_p: &Json) -> Result<NodeListRequest, ApiError> {
+        Ok(NodeListRequest)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeBody {
+    pub node: NodeId,
+    pub addr: String,
+    pub boards: Vec<String>,
+    pub regions_free: u64,
+    pub regions_active: u64,
+    /// Live leases homed on the node.
+    pub leases: u64,
+    /// Wall-clock ms since the last successful heartbeat.
+    pub heartbeat_age_ms: f64,
+    /// "up" | "suspect" | "down".
+    pub state: String,
+}
+
+impl NodeBody {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", Json::from(self.node.to_string())),
+            ("addr", Json::from(self.addr.as_str())),
+            (
+                "boards",
+                Json::Arr(
+                    self.boards
+                        .iter()
+                        .map(|b| Json::from(b.as_str()))
+                        .collect(),
+                ),
+            ),
+            ("regions_free", Json::from(self.regions_free)),
+            ("regions_active", Json::from(self.regions_active)),
+            ("leases", Json::from(self.leases)),
+            ("heartbeat_age_ms", Json::from(self.heartbeat_age_ms)),
+            ("state", Json::from(self.state.as_str())),
+        ])
+    }
+
+    pub fn from_json(p: &Json) -> Result<NodeBody, ApiError> {
+        let boards = want_str_arr(p, "boards")?;
+        Ok(NodeBody {
+            node: want_id(p, "node", NodeId::parse)?,
+            addr: want_str(p, "addr")?,
+            boards,
+            regions_free: want_u64(p, "regions_free")?,
+            regions_active: want_u64(p, "regions_active")?,
+            leases: want_u64(p, "leases")?,
+            heartbeat_age_ms: want_f64(p, "heartbeat_age_ms")?,
+            state: want_str(p, "state")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeListResponse {
+    pub nodes: Vec<NodeBody>,
+}
+
+impl NodeListResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "nodes",
+            Json::Arr(self.nodes.iter().map(|n| n.to_json()).collect()),
+        )])
+    }
+
+    pub fn from_json(p: &Json) -> Result<NodeListResponse, ApiError> {
+        let nodes = p
+            .get("nodes")
+            .as_arr()
+            .ok_or_else(|| {
+                ApiError::bad_request("missing array field 'nodes'")
+            })?
+            .iter()
+            .map(NodeBody::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(NodeListResponse { nodes })
+    }
+}
+
+/// `cluster.register` — a node daemon joining (or rejoining) the
+/// cluster. `tokens` lists the live leases it re-adopted from its
+/// local WAL; the response's `release` list names those the
+/// management server has since re-homed elsewhere, which the daemon
+/// must tear down locally to keep ownership single-homed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterRegisterRequest {
+    pub node: NodeId,
+    pub name: String,
+    /// Address the management server dials the daemon back on.
+    pub addr: String,
+    pub boards: Vec<String>,
+    pub regions_total: u64,
+    pub tokens: Vec<LeaseToken>,
+}
+
+impl ClusterRegisterRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", Json::from(self.node.to_string())),
+            ("name", Json::from(self.name.as_str())),
+            ("addr", Json::from(self.addr.as_str())),
+            (
+                "boards",
+                Json::Arr(
+                    self.boards
+                        .iter()
+                        .map(|b| Json::from(b.as_str()))
+                        .collect(),
+                ),
+            ),
+            ("regions_total", Json::from(self.regions_total)),
+            (
+                "tokens",
+                Json::Arr(
+                    self.tokens
+                        .iter()
+                        .map(|t| Json::from(t.to_string()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<ClusterRegisterRequest, ApiError> {
+        Ok(ClusterRegisterRequest {
+            node: want_id(p, "node", NodeId::parse)?,
+            name: want_str(p, "name")?,
+            addr: want_str(p, "addr")?,
+            boards: want_str_arr(p, "boards")?,
+            regions_total: want_u64(p, "regions_total")?,
+            tokens: want_token_arr(p, "tokens")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterRegisterResponse {
+    pub accepted: bool,
+    /// Leases the daemon must release locally (re-homed while it was
+    /// away).
+    pub release: Vec<LeaseToken>,
+}
+
+impl ClusterRegisterResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::from(self.accepted)),
+            (
+                "release",
+                Json::Arr(
+                    self.release
+                        .iter()
+                        .map(|t| Json::from(t.to_string()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<ClusterRegisterResponse, ApiError> {
+        Ok(ClusterRegisterResponse {
+            accepted: p.get("accepted").as_bool().ok_or_else(|| {
+                ApiError::bad_request("missing bool field 'accepted'")
+            })?,
+            release: want_token_arr(p, "release")?,
+        })
+    }
+}
+
+fn want_str_arr(p: &Json, key: &str) -> Result<Vec<String>, ApiError> {
+    p.get(key)
+        .as_arr()
+        .ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "missing array field '{key}'"
+            ))
+        })?
+        .iter()
+        .map(|v| {
+            v.as_str().map(str::to_string).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "non-string entry in '{key}'"
+                ))
+            })
+        })
+        .collect()
+}
+
+fn want_token_arr(
+    p: &Json,
+    key: &str,
+) -> Result<Vec<LeaseToken>, ApiError> {
+    p.get(key)
+        .as_arr()
+        .ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "missing array field '{key}'"
+            ))
+        })?
+        .iter()
+        .map(|v| {
+            v.as_str().and_then(LeaseToken::parse).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "bad lease token in '{key}'"
+                ))
+            })
+        })
+        .collect()
 }
 
 #[cfg(test)]

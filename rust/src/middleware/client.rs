@@ -696,6 +696,88 @@ impl Client {
             self.call_v2(Method::AgentStatus.name(), req.to_json())?;
         StatusResponse::from_json(&body)
     }
+
+    /// Heartbeat a node daemon: identity + live vitals.
+    pub fn agent_ping(&mut self) -> Result<AgentPingResponse, ApiError> {
+        let body = self.call_v2(
+            Method::AgentPing.name(),
+            AgentPingRequest.to_json(),
+        )?;
+        AgentPingResponse::from_json(&body)
+    }
+
+    /// Admit (or adopt) a lease on a node daemon.
+    pub fn agent_admit(
+        &mut self,
+        req: &AgentAdmitRequest,
+    ) -> Result<AllocVfpgaResponse, ApiError> {
+        let body =
+            self.call_v2(Method::AgentAdmit.name(), req.to_json())?;
+        AllocVfpgaResponse::from_json(&body)
+    }
+
+    /// Release a lease on a node daemon by token.
+    pub fn agent_release(
+        &mut self,
+        lease: LeaseToken,
+    ) -> Result<ReleaseResponse, ApiError> {
+        let req = AgentReleaseRequest { lease };
+        let body =
+            self.call_v2(Method::AgentRelease.name(), req.to_json())?;
+        ReleaseResponse::from_json(&body)
+    }
+
+    /// Program a prebuilt core on a node daemon.
+    pub fn agent_program(
+        &mut self,
+        req: &AgentProgramRequest,
+    ) -> Result<ProgramCoreResponse, ApiError> {
+        let body =
+            self.call_v2(Method::AgentProgram.name(), req.to_json())?;
+        ProgramCoreResponse::from_json(&body)
+    }
+
+    /// Stream a workload through a node daemon (synchronous on the
+    /// agent wire; the management server wraps this in an async job).
+    pub fn agent_stream(
+        &mut self,
+        req: &AgentStreamRequest,
+    ) -> Result<StreamOutcomeBody, ApiError> {
+        let body =
+            self.call_v2(Method::AgentStream.name(), req.to_json())?;
+        StreamOutcomeBody::from_json(&body)
+    }
+
+    /// Drain a node daemon's event journal from a cursor (long-poll).
+    pub fn agent_events(
+        &mut self,
+        req: &AgentEventsRequest,
+    ) -> Result<AgentEventsResponse, ApiError> {
+        let body =
+            self.call_v2(Method::AgentEvents.name(), req.to_json())?;
+        AgentEventsResponse::from_json(&body)
+    }
+
+    // ----------------------------------------------- typed: cluster
+
+    /// List the cluster's registered nodes (management server).
+    pub fn node_list(&mut self) -> Result<NodeListResponse, ApiError> {
+        let body = self.call_v2(
+            Method::NodeList.name(),
+            NodeListRequest.to_json(),
+        )?;
+        NodeListResponse::from_json(&body)
+    }
+
+    /// Register a node daemon with a federated management server.
+    pub fn cluster_register(
+        &mut self,
+        req: &ClusterRegisterRequest,
+    ) -> Result<ClusterRegisterResponse, ApiError> {
+        let body = self
+            .call_v2(Method::ClusterRegister.name(), req.to_json())?;
+        ClusterRegisterResponse::from_json(&body)
+    }
 }
 
 // ======================================================= event stream

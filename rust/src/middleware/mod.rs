@@ -13,7 +13,12 @@
 //! node-over-Gigabit-Ethernet structure; Table I's finding — the
 //! RC3E overhead dominates and local vs remote node makes no
 //! difference — reproduces because the dominant charge is the
-//! middleware's virtual RPC overhead, not the wire.
+//! middleware's virtual RPC overhead, not the wire. The agent has
+//! since grown into the full [`crate::cluster`] federation: `rc3e
+//! serve --federated` runs the management node as a placement layer
+//! over per-node daemon *processes* (`rc3e node`), each owning its
+//! local hypervisor, scheduler WAL and event journal — see
+//! `docs/FEDERATION.md`.
 //!
 //! The RPC surface is typed and versioned ([`api`]): every method has
 //! request/response structs, errors carry machine-readable

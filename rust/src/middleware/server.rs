@@ -57,12 +57,14 @@ use crate::util::ids::{AllocationId, LeaseToken, NodeId};
 use crate::util::json::Json;
 use crate::util::trace::Tracer;
 
-/// The management server (owns its accept thread).
+/// The management server (owns its accept thread, and in federated
+/// mode the heartbeat monitor too).
 pub struct ManagementServer {
     inner: Arc<ServerInner>,
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    health: Option<crate::cluster::HealthMonitor>,
 }
 
 struct ServerInner {
@@ -82,6 +84,10 @@ struct ServerInner {
     cores: BTreeMap<String, Bitstream>,
     /// node → agent address for routed device ops.
     agents: Mutex<BTreeMap<NodeId, SocketAddr>>,
+    /// Federation coordinator (`Some` on `spawn_federated` servers):
+    /// admissions route across registered node daemons instead of
+    /// the local hypervisor.
+    cluster: Option<Arc<crate::cluster::Coordinator>>,
 }
 
 impl ManagementServer {
@@ -105,6 +111,28 @@ impl ManagementServer {
         rpc_overhead_ms: f64,
         state_dir: Option<&std::path::Path>,
     ) -> std::io::Result<ManagementServer> {
+        ManagementServer::spawn_inner(hv, rpc_overhead_ms, state_dir, false)
+    }
+
+    /// Spawn a *federated* management server: the hypervisor here is
+    /// deviceless (capacity lives on node daemons that register via
+    /// `cluster.register`), admissions route across the cluster
+    /// through the [`crate::cluster::Coordinator`], and a heartbeat
+    /// monitor drives failure detection + lease re-admission.
+    pub fn spawn_federated(
+        hv: Arc<Hypervisor>,
+        rpc_overhead_ms: f64,
+        state_dir: Option<&std::path::Path>,
+    ) -> std::io::Result<ManagementServer> {
+        ManagementServer::spawn_inner(hv, rpc_overhead_ms, state_dir, true)
+    }
+
+    fn spawn_inner(
+        hv: Arc<Hypervisor>,
+        rpc_overhead_ms: f64,
+        state_dir: Option<&std::path::Path>,
+        federated: bool,
+    ) -> std::io::Result<ManagementServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let sched = Scheduler::new(Arc::clone(&hv));
@@ -122,6 +150,14 @@ impl ManagementServer {
         jobs.set_bus(Arc::clone(&bus));
         wire_event_sources(&hv, &sched, &bus);
         let tracer = Tracer::new(Arc::clone(&hv.clock));
+        let cluster = if federated {
+            Some(crate::cluster::Coordinator::new(
+                Arc::clone(&hv),
+                Arc::clone(&bus),
+            ))
+        } else {
+            None
+        };
         let inner = Arc::new(ServerInner {
             hv,
             sched,
@@ -131,6 +167,7 @@ impl ManagementServer {
             rpc_overhead_ms,
             cores: build_core_library(),
             agents: Mutex::new(BTreeMap::new()),
+            cluster,
         });
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
@@ -147,16 +184,25 @@ impl ManagementServer {
                 });
             }
         });
+        let health = inner.cluster.as_ref().map(|cl| {
+            crate::cluster::HealthMonitor::spawn(Arc::clone(cl))
+        });
         Ok(ManagementServer {
             inner,
             addr,
             stop,
             handle: Some(handle),
+            health,
         })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The federation coordinator (`None` on non-federated servers).
+    pub fn cluster(&self) -> Option<&Arc<crate::cluster::Coordinator>> {
+        self.inner.cluster.as_ref()
     }
 
     /// Register a node agent for routed status calls.
@@ -190,6 +236,12 @@ impl ManagementServer {
     }
 
     pub fn shutdown(&mut self) {
+        if let Some(h) = &mut self.health {
+            h.shutdown();
+        }
+        if let Some(cl) = &self.inner.cluster {
+            cl.shutdown();
+        }
         self.stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.handle.take() {
@@ -210,7 +262,7 @@ impl Drop for ManagementServer {
 /// are operator telemetry (public), placement changes are
 /// tenant-scoped, job progress is token-scoped (published by the job
 /// registry itself).
-fn wire_event_sources(
+pub(crate) fn wire_event_sources(
     hv: &Arc<Hypervisor>,
     sched: &Arc<Scheduler>,
     bus: &Arc<EventBus>,
@@ -273,7 +325,7 @@ fn wire_event_sources(
 /// Build the server's core library: one relocatable bitfile per known
 /// core (synth report resources, slot-0 frames — retargeted at
 /// program time).
-fn build_core_library() -> BTreeMap<String, Bitstream> {
+pub(crate) fn build_core_library() -> BTreeMap<String, Bitstream> {
     let synth = Synthesizer::new();
     let mut lib = BTreeMap::new();
     let entries: Vec<(&str, CoreKind, usize)> = vec![
@@ -536,6 +588,8 @@ const HANDLERS: &[(Method, Handler)] = &[
     (Method::SchedPolicySet, h_sched_policy_set),
     (Method::MetricsExport, h_metrics_export),
     (Method::TraceGet, h_trace_get),
+    (Method::NodeList, h_node_list),
+    (Method::ClusterRegister, h_cluster_register),
 ];
 
 /// Whether the management server serves `method` (dispatch-table
@@ -670,6 +724,36 @@ fn h_alloc_vfpga(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
         ));
     }
     let class = req.class.unwrap_or(RequestClass::Interactive);
+    if let Some(cl) = &ctx.inner.cluster {
+        // Federated: route the admission across registered node
+        // daemons. Tenants cross the node boundary by *name* (each
+        // process keeps its own id space), so the wire `user` must
+        // already exist here (`add_user`).
+        let tenant = ctx
+            .inner
+            .hv
+            .db
+            .lock()
+            .unwrap()
+            .user_name(req.user)
+            .map(|n| n.to_string())
+            .ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "unknown user {} (add_user first)",
+                    req.user
+                ))
+            })?;
+        let resp = cl.admit_remote(&AgentAdmitRequest {
+            tenant,
+            model: Some(model),
+            class: Some(class),
+            regions: req.regions,
+            co_located: req.co_located,
+            board: req.board.clone(),
+            adopt: None,
+        })?;
+        return Ok(resp.to_json());
+    }
     let mut areq = AdmissionRequest::new(req.user, model, class);
     if let Some(n) = req.regions {
         areq = areq.gang(n);
@@ -749,6 +833,15 @@ fn h_alloc_physical(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 
 fn h_release(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = ReleaseRequest::from_json(p)?;
+    if let Some(cl) = &ctx.inner.cluster {
+        // Federated: the token names the lease cluster-wide; release
+        // it on whichever node it is homed.
+        let token = require_token(req.lease)?;
+        let mut client = dial_home(cl, token)?;
+        let resp = client.agent_release(token)?;
+        cl.forget(token);
+        return Ok(resp.to_json());
+    }
     // The capability releases the *whole* lease (every gang member),
     // like Lease::release everywhere else.
     let handle = authorize(ctx, req.alloc, req.lease)?;
@@ -756,8 +849,48 @@ fn h_release(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     Ok(ReleaseResponse { released: true }.to_json())
 }
 
+/// Federated handlers authorize by token presence + home lookup; the
+/// owning node's scheduler does the actual fencing.
+fn require_token(
+    lease: Option<LeaseToken>,
+) -> Result<LeaseToken, ApiError> {
+    lease.ok_or_else(|| {
+        ApiError::new(
+            ErrorCode::BadToken,
+            "mutating calls require the lease token",
+        )
+    })
+}
+
+/// Connect to the node a federated lease is homed on.
+fn dial_home(
+    cl: &Arc<crate::cluster::Coordinator>,
+    token: LeaseToken,
+) -> Result<Client, ApiError> {
+    let node = cl.home_of(token).ok_or_else(|| {
+        ApiError::new(
+            ErrorCode::BadToken,
+            "no federated lease for this token",
+        )
+    })?;
+    let addr = cl.registry().addr_of(node).ok_or_else(|| {
+        ApiError::internal(format!("lease home {node} not registered"))
+    })?;
+    Client::connect(addr).map_err(ApiError::internal)
+}
+
 fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = ProgramCoreRequest::from_json(p)?;
+    if let Some(cl) = &ctx.inner.cluster {
+        let token = require_token(req.lease)?;
+        let mut client = dial_home(cl, token)?;
+        let resp = client.agent_program(&AgentProgramRequest {
+            lease: token,
+            alloc: req.alloc,
+            core: req.core,
+        })?;
+        return Ok(resp.to_json());
+    }
     // The token's tenant is the authorized identity — the wire `user`
     // field is not trusted.
     let handle = authorize(ctx, req.alloc, req.lease)?;
@@ -784,6 +917,46 @@ fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 
 fn h_stream(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let mut req = StreamRequest::from_json(p)?;
+    if let Some(cl) = &ctx.inner.cluster {
+        // Federated: same async-job surface, but the worker streams
+        // on the owning node (synchronously over the agent wire) and
+        // relays the outcome.
+        let token = require_token(req.lease)?;
+        let node = cl.home_of(token).ok_or_else(|| {
+            ApiError::new(
+                ErrorCode::BadToken,
+                "no federated lease for this token",
+            )
+        })?;
+        let addr = cl.registry().addr_of(node).ok_or_else(|| {
+            ApiError::internal(format!(
+                "lease home {node} not registered"
+            ))
+        })?;
+        let areq = AgentStreamRequest {
+            lease: token,
+            alloc: req.alloc,
+            core: req.core.clone(),
+            mults: req.mults,
+        };
+        let owner = req.lease;
+        let now_ns = ctx.inner.hv.clock.now().0;
+        let job = Arc::clone(&ctx.inner.jobs).submit(
+            Method::Stream.name(),
+            now_ns,
+            owner,
+            move |progress| {
+                progress.report("dial", 0, 5.0);
+                let mut client =
+                    Client::connect(addr).map_err(ApiError::internal)?;
+                progress.report("streaming", 0, 25.0);
+                let out = client.agent_stream(&areq)?;
+                progress.report("streamed", out.output_bytes, 90.0);
+                Ok(out.to_json())
+            },
+        );
+        return Ok(JobSubmitResponse { job, lease: owner }.to_json());
+    }
     let handle = authorize(ctx, req.alloc, req.lease)?;
     req.user = handle.tenant();
     let owner = req.lease;
@@ -1137,6 +1310,86 @@ fn h_trace_get(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     Ok(TraceGetResponse::from_snapshot(&snap).to_json())
 }
 
+fn h_node_list(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
+    let _req = NodeListRequest::from_json(p)?;
+    let nodes = if let Some(cl) = &ctx.inner.cluster {
+        crate::cluster::federation::nodes_body(
+            &cl.registry().snapshot(),
+        )
+    } else {
+        // Single-process topology: synthesize entries from the
+        // registered status agents and the shared device DB. These
+        // agents share the server's hypervisor, so they are `up` by
+        // construction and their vitals are read directly.
+        let agents = ctx.inner.agents.lock().unwrap().clone();
+        let mut nodes = Vec::new();
+        for (node, addr) in agents {
+            let mut boards = std::collections::BTreeSet::new();
+            let mut free = 0u64;
+            let mut total = 0u64;
+            {
+                let db = ctx.inner.hv.db.lock().unwrap();
+                for f in ctx.inner.hv.device_ids() {
+                    let Some(d) = db.device(f) else { continue };
+                    if d.node != node {
+                        continue;
+                    }
+                    boards.insert(d.board.name().to_string());
+                    free += db.free_regions(f).len() as u64;
+                    total += d.regions.len() as u64;
+                }
+            }
+            let leases = ctx
+                .inner
+                .sched
+                .live_tokens()
+                .into_iter()
+                .filter(|t| {
+                    ctx.inner
+                        .sched
+                        .lease_handle(*t)
+                        .and_then(|h| h.node())
+                        == Some(node)
+                })
+                .count() as u64;
+            nodes.push(NodeBody {
+                node,
+                addr: addr.to_string(),
+                boards: boards.into_iter().collect(),
+                regions_free: free,
+                regions_active: total - free,
+                leases,
+                heartbeat_age_ms: 0.0,
+                state: "up".to_string(),
+            });
+        }
+        nodes
+    };
+    Ok(NodeListResponse { nodes }.to_json())
+}
+
+fn h_cluster_register(
+    ctx: &Ctx<'_>,
+    p: &Json,
+) -> Result<Json, ApiError> {
+    let req = ClusterRegisterRequest::from_json(p)?;
+    let cl = ctx.inner.cluster.as_ref().ok_or_else(|| {
+        ApiError::bad_request(
+            "server is not federated (start with --federated)",
+        )
+    })?;
+    log::info!(
+        "cluster.register: {} ({}) at {} with {} boards, {} leases",
+        req.node,
+        req.name,
+        req.addr,
+        req.boards.len(),
+        req.tokens.len()
+    );
+    let resp = cl.register(&req)?;
+    Ok(resp.to_json())
+}
+
 fn h_job_status(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let req = JobStatusRequest::from_json(p)?;
     let rec = ctx.inner.jobs.status(req.job)?;
@@ -1180,7 +1433,7 @@ fn h_job_cancel(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
 // stream checkpoints; the registry adds the `submitted` and terminal
 // frames around them.
 
-fn stream_config_for(
+pub(crate) fn stream_config_for(
     core: &str,
     mults: u64,
 ) -> Result<StreamConfig, ApiError> {

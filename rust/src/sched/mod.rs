@@ -291,6 +291,11 @@ struct AdmitSpec {
     /// accounting).
     enqueued_ns: Option<u64>,
     allow_preempt: bool,
+    /// Mint the lease under this pre-existing token instead of a
+    /// fresh one — the federation re-admission path, where a lease
+    /// re-homed from a dead node must keep the capability token its
+    /// holder already carries.
+    adopt: Option<LeaseToken>,
 }
 
 impl AdmitSpec {
@@ -305,6 +310,7 @@ impl AdmitSpec {
             vm: req.constraints.vm,
             enqueued_ns: None,
             allow_preempt,
+            adopt: None,
         }
     }
 
@@ -319,6 +325,7 @@ impl AdmitSpec {
             vm: None,
             enqueued_ns: Some(entry.enqueued_ns),
             allow_preempt: false,
+            adopt: None,
         }
     }
 }
@@ -981,6 +988,42 @@ impl Scheduler {
         lease
     }
 
+    /// Non-blocking admission that mints the lease under a
+    /// pre-existing capability token instead of a fresh one — the
+    /// federation re-admission path. When a node dies, its surviving
+    /// leases are re-homed on another node *under their original
+    /// tokens*, so the capability the tenant already holds keeps
+    /// fencing the re-placed lease. Fails with
+    /// [`SchedError::Unsatisfiable`] if the token already names a
+    /// live lease here.
+    pub fn admit_adopted(
+        self: &Arc<Self>,
+        req: &AdmissionRequest,
+        token: LeaseToken,
+    ) -> Result<Lease, SchedError> {
+        let sp = trace::span("sched.admit_adopted");
+        sp.attr("model", req.model.name());
+        sp.attr("regions", req.regions.get());
+        let mut spec = AdmitSpec::of_request(req, false);
+        spec.adopt = Some(token);
+        let mut st = self.state.lock().unwrap();
+        self.reap_locked(&mut st);
+        let result = self.try_admit_locked(&mut st, &spec);
+        self.pump_locked(&mut st);
+        let lease = result.and_then(|token| {
+            self.lease_locked(&st, token, true)
+                .ok_or(SchedError::UnknownLease)
+        });
+        let pending = self.persist_snapshot_locked(&st);
+        drop(st);
+        self.granted.notify_all();
+        self.write_persisted(pending);
+        if let Err(e) = &lease {
+            sp.fail(format!("{e:?}"));
+        }
+        lease
+    }
+
     /// Blocking admission: take the fast path when nothing of equal
     /// or higher class is queued, otherwise join the queue and wait
     /// for the fair-share pump. Physical (RSaaS) requests never
@@ -1474,6 +1517,14 @@ impl Scheduler {
         self.lease_locked(&st, token, false)
     }
 
+    /// Tokens of every live lease, in token order. The node daemon
+    /// reports these at `cluster.register` so the management server
+    /// can reconcile WAL-adopted leases after a rejoin.
+    pub fn live_tokens(&self) -> Vec<LeaseToken> {
+        let st = self.state.lock().unwrap();
+        st.leases.keys().copied().collect()
+    }
+
     /// Verify that `token` owns the member allocation `alloc`.
     /// Distinguishes "no such grant" ([`SchedError::UnknownGrant`],
     /// the caller named a dead lease) from "grant exists but the
@@ -1669,7 +1720,20 @@ impl Scheduler {
         let wait = VirtualTime(
             now_ns.saturating_sub(spec.enqueued_ns.unwrap_or(now_ns)),
         );
-        let token = LeaseToken::mint();
+        let token = match spec.adopt {
+            Some(t) if st.leases.contains_key(&t) => {
+                // An adopted token must stay unambiguous: refuse to
+                // shadow a live lease (roll the claims back first).
+                for (alloc, _, _, _) in &members {
+                    let _ = self.hv.release(*alloc);
+                }
+                return Err(SchedError::Unsatisfiable(
+                    "adopt token already names a live lease".into(),
+                ));
+            }
+            Some(t) => t,
+            None => LeaseToken::mint(),
+        };
         for (alloc, vfpga, fpga, node) in &members {
             self.grant_member_locked(
                 st, spec, token, *alloc, *vfpga, *fpga, *node, wait,

@@ -1,0 +1,302 @@
+//! Cluster-federation chaos test: the full multi-process loop.
+//!
+//! Spawns the real binaries — one `rc3e serve --federated` management
+//! server plus two `rc3e node` daemons over loopback TCP — and drives
+//! the whole lifecycle through the management client:
+//!
+//! * placement: board-constrained admissions land on the node that
+//!   owns the board model; unconstrained admissions go to the node
+//!   with the most free regions;
+//! * cross-node data path: `program` and `stream` proxy to the lease's
+//!   home daemon and return the same typed responses as local serving;
+//! * failure-driven re-admission: SIGKILLing a node daemon mid-storm
+//!   re-admits its leases on the survivor **with the same capability
+//!   token**, which keeps validating (release works exactly once);
+//! * rejoin: restarting the dead daemon on its state directory
+//!   re-adopts its WAL leases, reports them at registration and
+//!   releases the ones the cluster re-homed while it was gone;
+//! * federated cursors: a single `subscribe` stream observes
+//!   node-tagged events from both nodes, with per-node journal
+//!   cursors strictly increasing across the failure.
+//!
+//! Health detection needs ~1 s of wall time (250 ms heartbeats, down
+//! after 3 misses), so every wait here polls with a generous deadline.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use rc3e::middleware::api::{
+    AllocVfpgaRequest, Event, SubscribeRequest, SubscriptionFilter,
+};
+use rc3e::middleware::Client;
+use rc3e::util::ids::NodeId;
+
+struct Proc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Proc {
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn read_addr(child: &mut Child, what: &str) -> SocketAddr {
+    let stdout = child.stdout.take().unwrap();
+    let line = BufReader::new(stdout)
+        .lines()
+        .next()
+        .unwrap_or_else(|| panic!("{what} exited before printing"))
+        .expect("read child stdout");
+    line.trim().parse().expect("child address")
+}
+
+fn spawn_mgmt(dir: &Path) -> Proc {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut child = Command::new(env!("CARGO_BIN_EXE_rc3e"))
+        .arg("serve")
+        .arg("--federated")
+        .arg("--state")
+        .arg(dir)
+        .args(["--timescale", "0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn rc3e serve --federated");
+    let addr = read_addr(&mut child, "management server");
+    Proc { child, addr }
+}
+
+fn spawn_node(index: usize, mgmt: SocketAddr, dir: &Path) -> Proc {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut child = Command::new(env!("CARGO_BIN_EXE_rc3e"))
+        .arg("node")
+        .args(["--node-index", &index.to_string()])
+        .args(["--mgmt", &mgmt.to_string()])
+        .arg("--state")
+        .arg(dir)
+        .args(["--timescale", "0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn rc3e node");
+    let addr = read_addr(&mut child, "node daemon");
+    Proc { child, addr }
+}
+
+fn test_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rc3e-federation-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if cond() {
+            return;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting: {what}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// `(state, leases, regions_free)` of one node per `node_list`.
+fn node_row(c: &mut Client, node: NodeId) -> Option<(String, u64, u64)> {
+    let resp = c.node_list().ok()?;
+    resp.nodes
+        .iter()
+        .find(|n| n.node == node)
+        .map(|n| (n.state.clone(), n.leases, n.regions_free))
+}
+
+/// Replay every public journaled event from cursor 1 and group the
+/// node-tagged ones by origin (a ~1 s live window closes the stream).
+fn node_cursors(c: &mut Client) -> BTreeMap<NodeId, Vec<u64>> {
+    let stream = c
+        .subscribe(&SubscribeRequest {
+            filter: SubscriptionFilter::all(),
+            lease: None,
+            max_events: None,
+            timeout_s: Some(1.0),
+            from_cursor: Some(1),
+        })
+        .expect("subscribe");
+    let mut by_node: BTreeMap<NodeId, Vec<u64>> = BTreeMap::new();
+    for frame in stream {
+        let frame = frame.expect("stream frame");
+        if let Event::NodeTagged {
+            node, node_cursor, ..
+        } = frame.event
+        {
+            by_node.entry(node).or_default().push(node_cursor);
+        }
+    }
+    by_node
+}
+
+fn assert_strictly_increasing(cursors: &[u64], label: &str) {
+    for w in cursors.windows(2) {
+        assert!(
+            w[1] > w[0],
+            "{label}: node cursors not strictly increasing: \
+             {} then {}",
+            w[0],
+            w[1]
+        );
+    }
+}
+
+#[test]
+fn two_node_cluster_serves_cross_node_lifecycle() {
+    let root = test_root("lifecycle");
+    let mut mgmt = spawn_mgmt(&root.join("mgmt"));
+    let mut c = Client::connect(mgmt.addr).expect("connect");
+    let mut node0 = spawn_node(0, mgmt.addr, &root.join("node0"));
+    let mut node1 = spawn_node(1, mgmt.addr, &root.join("node1"));
+    wait_until("both nodes up", || {
+        let Ok(resp) = c.node_list() else { return false };
+        resp.nodes.iter().filter(|n| n.state == "up").count() == 2
+    });
+
+    let user = c.add_user("fed-alice").expect("add_user").user;
+
+    // Board constraints are placement filters: vc707 lives on node-0
+    // of the paper testbed, ml605 on node-1.
+    let mut req = AllocVfpgaRequest::single(user, None, None);
+    req.board = Some("vc707".to_string());
+    let a0 = c.alloc_vfpga_with(&req).expect("vc707 alloc");
+    assert_eq!(a0.node, NodeId(0), "vc707 must place on node-0");
+    let mut req = AllocVfpgaRequest::single(user, None, None);
+    req.board = Some("ml605".to_string());
+    let a1 = c.alloc_vfpga_with(&req).expect("ml605 alloc");
+    assert_eq!(a1.node, NodeId(1), "ml605 must place on node-1");
+
+    // Full data path through the lease's home daemon.
+    let prog = c
+        .program_core(user, a0.alloc, "matmul16")
+        .expect("program_core via federation");
+    assert_eq!(prog.programmed, "matmul16");
+    let out = c
+        .stream_sync(user, a0.alloc, "matmul16", 4096)
+        .expect("stream via federation");
+    assert_eq!(out.mults, 4096);
+    assert!(out.output_bytes > 0);
+
+    assert!(c.release(a0.alloc).expect("release a0").released);
+    assert!(c.release(a1.alloc).expect("release a1").released);
+
+    // One subscribe stream covers the whole cluster: node-tagged
+    // events from both daemons, per-node cursors strictly increasing.
+    let mut by_node = BTreeMap::new();
+    wait_until("events forwarded from both nodes", || {
+        by_node = node_cursors(&mut c);
+        by_node.contains_key(&NodeId(0)) && by_node.contains_key(&NodeId(1))
+    });
+    for (node, cursors) in &by_node {
+        assert_strictly_increasing(cursors, &node.to_string());
+    }
+
+    node0.kill();
+    node1.kill();
+    mgmt.kill();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn killing_a_node_readmits_its_leases_on_the_survivor() {
+    let root = test_root("chaos");
+    let mut mgmt = spawn_mgmt(&root.join("mgmt"));
+    let mut c = Client::connect(mgmt.addr).expect("connect");
+    let mut node0 = spawn_node(0, mgmt.addr, &root.join("node0"));
+    let mut node1 = spawn_node(1, mgmt.addr, &root.join("node1"));
+    wait_until("both nodes up", || {
+        let Ok(resp) = c.node_list() else { return false };
+        resp.nodes.iter().filter(|n| n.state == "up").count() == 2
+    });
+
+    let user = c.add_user("fed-bob").expect("add_user").user;
+
+    // Fill node-0 down to 2 free regions so the placement choice for
+    // everything after is forced, not heuristic.
+    let mut req = AllocVfpgaRequest::single(user, None, None);
+    req.board = Some("vc707".to_string());
+    req.regions = Some(6);
+    let fill = c.alloc_vfpga_with(&req).expect("gang on node-0");
+    assert_eq!(fill.node, NodeId(0));
+    assert_eq!(fill.members.len(), 6);
+    wait_until("node-0 vitals refreshed", || {
+        node_row(&mut c, NodeId(0))
+            .is_some_and(|(_, _, free)| free == 2)
+    });
+
+    // Unconstrained admission goes to the node with the most free
+    // regions — node-1 with all 8.
+    let roam = c.alloc_vfpga(user, None, None).expect("alloc");
+    assert_eq!(roam.node, NodeId(1), "most-free placement");
+    let token = roam.lease;
+
+    // SIGKILL the daemon holding the lease: nothing graceful runs.
+    node1.kill();
+    wait_until("node-1 marked down", || {
+        node_row(&mut c, NodeId(1))
+            .is_some_and(|(state, _, _)| state == "down")
+    });
+    // The orphaned lease re-admits on the survivor, keeping its
+    // token: node-0 now homes both leases.
+    wait_until("lease re-admitted on node-0", || {
+        node_row(&mut c, NodeId(0))
+            .is_some_and(|(_, leases, _)| leases == 2)
+    });
+
+    // Rejoin: the restarted daemon re-adopts the lease from its WAL,
+    // reports it at registration, learns it was re-homed and releases
+    // its local copy — no double grant survives.
+    let mut node1b = spawn_node(1, mgmt.addr, &root.join("node1"));
+    wait_until("node-1 rejoined", || {
+        node_row(&mut c, NodeId(1))
+            .is_some_and(|(state, _, _)| state == "up")
+    });
+    wait_until("node-1 reconciled its stale lease", || {
+        node_row(&mut c, NodeId(1))
+            .is_some_and(|(_, leases, _)| leases == 0)
+    });
+
+    // The capability token stayed valid end to end: it releases
+    // exactly once, through the re-homed placement.
+    c.set_lease_token(roam.alloc, token);
+    assert!(
+        c.release(roam.alloc).expect("release after failover").released,
+        "re-admitted lease did not release"
+    );
+    c.set_lease_token(roam.alloc, token);
+    assert!(
+        c.release(roam.alloc).is_err(),
+        "re-admitted lease released twice"
+    );
+    assert!(c.release(fill.alloc).expect("release gang").released);
+
+    // Federated cursor streams survived the failure: both nodes'
+    // tagged cursors strictly increase across the kill + rejoin.
+    let mut by_node = BTreeMap::new();
+    wait_until("events forwarded from both nodes", || {
+        by_node = node_cursors(&mut c);
+        by_node.contains_key(&NodeId(0)) && by_node.contains_key(&NodeId(1))
+    });
+    for (node, cursors) in &by_node {
+        assert_strictly_increasing(cursors, &node.to_string());
+    }
+
+    node0.kill();
+    node1b.kill();
+    mgmt.kill();
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -7,22 +7,39 @@
 //! * JSON encode/decode of an RPC envelope;
 //! * end-to-end RPC round trip over loopback TCP, with the flight
 //!   recorder on and off (the tracing-overhead series);
-//! * gcs/ucs controller access (lock + charge).
+//! * gcs/ucs controller access (lock + charge);
+//! * the data plane (`dataplane.*`): copy-per-chunk vs pooled FIFO
+//!   round trips (with allocations-per-chunk from the counting
+//!   allocator) and JSON/base64 vs out-of-band binary wire framing.
 //!
 //! With `BENCH_BASELINE_OUT=BENCH_baseline.json` the series are also
-//! written to the shared machine-readable baseline file.
+//! written to the shared machine-readable baseline file. With
+//! `BENCH_QUICK=1` iteration counts are trimmed to a smoke-test
+//! scale (the CI bench-smoke step).
 
 use std::sync::Arc;
 
-use rc3e::fifo::AsyncFifo;
-use rc3e::middleware::{Client, ManagementServer};
-use rc3e::pcie::BandwidthArbiter;
+use rc3e::fifo::{AsyncFifo, Chunk};
+use rc3e::middleware::proto::{read_wire_frame, write_bin_chunk};
+use rc3e::middleware::{Client, ManagementServer, StreamFrame, WireFrame};
+use rc3e::pcie::{BandwidthArbiter, BufferPool};
 use rc3e::runtime::{Engine, Tensor};
 use rc3e::testing::baseline::{self, BaselineReport};
 use rc3e::testing::Bencher;
+use rc3e::util::bytes::{b64_decode, b64_encode};
 use rc3e::util::clock::VirtualClock;
 use rc3e::util::json::Json;
+use rc3e::util::memprobe;
 use rc3e::util::rng::Rng;
+
+/// A [`Bencher`] honoring `BENCH_QUICK=1` (CI smoke runs).
+fn bencher(warmup: usize, iters: usize) -> Bencher {
+    if std::env::var("BENCH_QUICK").as_deref() == Ok("1") {
+        Bencher::new(1, iters.min(3))
+    } else {
+        Bencher::new(warmup, iters)
+    }
+}
 
 fn bench_engine(report: &mut BaselineReport) {
     let dir = rc3e::runtime::artifact_dir();
@@ -38,7 +55,7 @@ fn bench_engine(report: &mut BaselineReport) {
         engine.load(artifact).unwrap();
         let xs = Tensor::random(vec![batch, n, n], &mut rng);
         let ys = Tensor::random(vec![batch, n, n], &mut rng);
-        let r = Bencher::new(3, 20).run(&format!("pjrt {artifact}"), || {
+        let r = bencher(3, 20).run(&format!("pjrt {artifact}"), || {
             engine
                 .matmul(artifact, xs.clone(), ys.clone())
                 .unwrap()
@@ -59,7 +76,7 @@ fn bench_engine(report: &mut BaselineReport) {
 fn bench_fifo(report: &mut BaselineReport) {
     let fifo = AsyncFifo::rc2f_default("bench");
     let chunk = vec![0u8; 256 * 1024];
-    let r = Bencher::new(10, 1000).run("fifo push+pop 256KiB", || {
+    let r = bencher(10, 1000).run("fifo push+pop 256KiB", || {
         fifo.push(chunk.clone()).unwrap();
         fifo.pop().unwrap()
     });
@@ -71,7 +88,7 @@ fn bench_arbiter(report: &mut BaselineReport) {
     let clock = VirtualClock::new();
     let arb = BandwidthArbiter::new(clock, 800.0);
     let mut s = arb.open_stream();
-    let r = Bencher::new(10, 1000).run("arbiter transfer accounting", || {
+    let r = bencher(10, 1000).run("arbiter transfer accounting", || {
         s.transfer(256 * 1024)
     });
     println!("{}", r.line());
@@ -92,12 +109,12 @@ fn bench_json(report: &mut BaselineReport) {
         ),
     ]);
     let text = envelope.to_string();
-    let r = Bencher::new(10, 2000).run("json encode RPC envelope", || {
+    let r = bencher(10, 2000).run("json encode RPC envelope", || {
         envelope.to_string()
     });
     println!("{}", r.line());
     report.record("hotpath.json_encode_envelope", &r);
-    let r = Bencher::new(10, 2000).run("json parse RPC envelope", || {
+    let r = bencher(10, 2000).run("json parse RPC envelope", || {
         Json::parse(&text).unwrap()
     });
     println!("{}", r.line());
@@ -118,13 +135,13 @@ fn bench_rpc(report: &mut BaselineReport) {
     // Tracing-overhead series: the same loopback round trip with the
     // flight recorder off, then on (root span per RPC recorded).
     server.tracer().set_enabled(false);
-    let off = Bencher::new(5, 200)
+    let off = bencher(5, 200)
         .run("rpc hello round trip (tracing off)", || {
             client.hello().unwrap()
         });
     println!("{}", off.line());
     server.tracer().set_enabled(true);
-    let on = Bencher::new(5, 200)
+    let on = bencher(5, 200)
         .run("rpc hello round trip (tracing on)", || {
             client.hello().unwrap()
         });
@@ -140,11 +157,140 @@ fn bench_controller(report: &mut BaselineReport) {
     let clock = VirtualClock::new();
     let ids: Vec<_> = (0..4).map(rc3e::util::ids::VfpgaId).collect();
     let c = rc3e::rc2f::Controller::new(clock, &ids);
-    let r = Bencher::new(10, 2000).run("gcs read (wall, ex-model)", || {
+    let r = bencher(10, 2000).run("gcs read (wall, ex-model)", || {
         c.gcs_read(rc3e::rc2f::controller::gcs_reg::STATUS).unwrap()
     });
     println!("{}", r.line());
     report.record("hotpath.gcs_read", &r);
+}
+
+/// Data-plane FIFO round trips: the old copy-per-chunk path (a fresh
+/// `Vec` allocated and cloned for every chunk) against the pooled
+/// path (producer fills a recycled slot in place; the queue and the
+/// consumer only move the handle). Steady-state allocations per
+/// chunk come from the counting global allocator.
+fn bench_dataplane_fifo(report: &mut BaselineReport) {
+    const CHUNK: usize = 256 * 1024;
+    let chunk = vec![0x5Au8; CHUNK];
+
+    let fifo = AsyncFifo::rc2f_default("dp_copy");
+    let r_copy =
+        bencher(10, 1000).run("dataplane fifo copy 256KiB", || {
+            fifo.push(chunk.clone()).unwrap();
+            fifo.pop().unwrap().unwrap().len()
+        });
+    println!("{}", r_copy.line());
+    let a0 = memprobe::thread_allocations();
+    for _ in 0..64 {
+        fifo.push(chunk.clone()).unwrap();
+        fifo.pop().unwrap();
+    }
+    let allocs_copy =
+        (memprobe::thread_allocations() - a0) as f64 / 64.0;
+
+    let fifo = AsyncFifo::rc2f_default("dp_pooled");
+    let pool = BufferPool::new("dp_pooled", CHUNK, 4);
+    let r_pooled =
+        bencher(10, 1000).run("dataplane fifo pooled 256KiB", || {
+            let mut buf = pool.acquire();
+            buf.fill_from(&chunk);
+            fifo.push_chunk(Chunk::Pooled(buf)).unwrap();
+            fifo.pop_chunk().unwrap().unwrap().len()
+        });
+    println!("{}", r_pooled.line());
+    let a0 = memprobe::thread_allocations();
+    for _ in 0..64 {
+        let mut buf = pool.acquire();
+        buf.fill_from(&chunk);
+        fifo.push_chunk(Chunk::Pooled(buf)).unwrap();
+        fifo.pop_chunk().unwrap();
+    }
+    let allocs_pooled =
+        (memprobe::thread_allocations() - a0) as f64 / 64.0;
+
+    let copy_cps = 1.0 / r_copy.median_s;
+    let pooled_cps = 1.0 / r_pooled.median_s;
+    println!(
+        "    -> copy {copy_cps:.0} chunks/s ({allocs_copy:.1} \
+         allocs/chunk), pooled {pooled_cps:.0} chunks/s \
+         ({allocs_pooled:.1} allocs/chunk), {:.2}x",
+        pooled_cps / copy_cps
+    );
+    report.record("dataplane.fifo_roundtrip_copy_256k", &r_copy);
+    report.record("dataplane.fifo_roundtrip_pooled_256k", &r_pooled);
+    report.record_scalar("dataplane.fifo_copy_chunks_per_sec", copy_cps);
+    report.record_scalar(
+        "dataplane.fifo_pooled_chunks_per_sec",
+        pooled_cps,
+    );
+    report
+        .record_scalar("dataplane.fifo_speedup", pooled_cps / copy_cps);
+    report.record_scalar("dataplane.alloc_per_chunk_copy", allocs_copy);
+    report
+        .record_scalar("dataplane.alloc_per_chunk_pooled", allocs_pooled);
+}
+
+/// Wire framing for one 256 KiB payload chunk, written to and read
+/// back from memory: the protocol-3 JSON fallback (base64 payload in
+/// a `stream_data` event frame) against the protocol-4 out-of-band
+/// binary frame.
+fn bench_dataplane_wire(report: &mut BaselineReport) {
+    const CHUNK: usize = 256 * 1024;
+    let payload = vec![0xA5u8; CHUNK];
+    let mut buf: Vec<u8> = Vec::with_capacity(2 * CHUNK);
+
+    let r_json =
+        bencher(5, 200).run("dataplane wire json+b64 256KiB", || {
+            buf.clear();
+            let b64 = b64_encode(&payload);
+            let frame = StreamFrame::event(
+                1,
+                Json::obj(vec![
+                    ("type", Json::from("stream_data")),
+                    ("b64", Json::from(b64.as_str())),
+                ]),
+            );
+            rc3e::middleware::write_frame(&mut buf, &frame.to_json())
+                .unwrap();
+            let mut r: &[u8] = &buf;
+            match read_wire_frame(&mut r).unwrap().unwrap() {
+                WireFrame::Json(v) => {
+                    let f = StreamFrame::from_json(&v).unwrap();
+                    let ev = f.event.unwrap();
+                    b64_decode(ev.get("b64").as_str().unwrap())
+                        .unwrap()
+                        .len()
+                }
+                WireFrame::Bin(_) => unreachable!("json framing"),
+            }
+        });
+    println!("{}", r_json.line());
+
+    let r_bin =
+        bencher(5, 200).run("dataplane wire binary 256KiB", || {
+            buf.clear();
+            write_bin_chunk(&mut buf, 0, 1, &payload).unwrap();
+            let mut r: &[u8] = &buf;
+            match read_wire_frame(&mut r).unwrap().unwrap() {
+                WireFrame::Bin(b) => b.payload.len(),
+                WireFrame::Json(_) => unreachable!("binary framing"),
+            }
+        });
+    println!("{}", r_bin.line());
+
+    let json_mbps = CHUNK as f64 / 1e6 / r_json.median_s;
+    let bin_mbps = CHUNK as f64 / 1e6 / r_bin.median_s;
+    println!(
+        "    -> json {json_mbps:.0} MB/s, binary {bin_mbps:.0} MB/s, \
+         {:.1}x",
+        bin_mbps / json_mbps
+    );
+    report.record("dataplane.wire_json_roundtrip_256k", &r_json);
+    report.record("dataplane.wire_binary_roundtrip_256k", &r_bin);
+    report.record_scalar("dataplane.wire_json_mbps", json_mbps);
+    report.record_scalar("dataplane.wire_binary_mbps", bin_mbps);
+    report
+        .record_scalar("dataplane.wire_speedup", bin_mbps / json_mbps);
 }
 
 fn main() {
@@ -161,6 +307,8 @@ fn main() {
     bench_json(&mut report);
     bench_rpc(&mut report);
     bench_controller(&mut report);
+    bench_dataplane_fifo(&mut report);
+    bench_dataplane_wire(&mut report);
     if let Some(p) = &out {
         report.save(p).unwrap();
         println!("\nbaseline series written to {}", p.display());

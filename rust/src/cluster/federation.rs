@@ -231,6 +231,28 @@ impl Coordinator {
         self.homes.lock().unwrap().get(&token).map(|h| h.node)
     }
 
+    /// Resolve a federated lease to its home node's daemon address —
+    /// the lookup every proxied hop (`stream`, the data-plane relay)
+    /// starts with. Distinguishes "no such lease" (`bad_token`) from
+    /// "home not registered" (internal: the node is mid-rejoin).
+    pub fn agent_addr_of(
+        &self,
+        token: LeaseToken,
+    ) -> Result<(NodeId, SocketAddr), ApiError> {
+        let node = self.home_of(token).ok_or_else(|| {
+            ApiError::new(
+                ErrorCode::BadToken,
+                "no federated lease for this token",
+            )
+        })?;
+        let addr = self.registry.addr_of(node).ok_or_else(|| {
+            ApiError::internal(format!(
+                "lease home {node} not registered"
+            ))
+        })?;
+        Ok((node, addr))
+    }
+
     /// Forget a released lease.
     pub fn forget(&self, token: LeaseToken) {
         self.homes.lock().unwrap().remove(&token);

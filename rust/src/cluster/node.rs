@@ -48,12 +48,13 @@ use crate::middleware::api::{
     AllocVfpgaResponse, ApiError, ClusterRegisterRequest,
     ClusterRegisterResponse, ErrorCode, GangMemberBody, Method,
     NodeEventBody, ProgramCoreResponse, ReleaseResponse, StatusRequest,
-    StatusResponse, StreamOutcomeBody,
+    StatusResponse, StreamOutcomeBody, PROTO_DATA_FRAMES,
 };
 use crate::middleware::client::Client;
 use crate::middleware::events::EventBus;
 use crate::middleware::proto::{
-    read_frame, respond, write_frame, Request, Response,
+    read_frame, respond, write_bin_frame, write_data_frame,
+    write_frame, BinFrame, Request, Response, StreamFrame,
 };
 use crate::sched::{AdmissionRequest, RequestClass, Scheduler};
 use crate::util::clock::VirtualClock;
@@ -488,16 +489,125 @@ fn serve_daemon_conn(
     while let Some(frame) = next_frame(&mut stream, &inner.stop)? {
         let resp = match Request::from_json(&frame) {
             Err(e) => Response::failure(None, ApiError::bad_request(e)),
-            Ok(req) => {
-                let result = req.negotiate_proto().and_then(|_| {
-                    dispatch_daemon(&inner, &req.method, &req.params)
-                });
-                respond(req.id, result)
-            }
+            Ok(req) => match req.negotiate_proto() {
+                Err(e) => respond(req.id, Err(e)),
+                Ok(proto) if wants_agent_stream_data(&req) => {
+                    // Data-plane reply: header + output frames +
+                    // terminal, written by the handler itself.
+                    serve_agent_stream_data(
+                        &mut stream,
+                        &inner,
+                        proto,
+                        req.id,
+                        &req.params,
+                    )?;
+                    continue;
+                }
+                Ok(_proto) => {
+                    let result = dispatch_daemon(
+                        &inner, &req.method, &req.params,
+                    );
+                    respond(req.id, result)
+                }
+            },
         };
         write_frame(&mut stream, &resp.to_json())?;
     }
     Ok(())
+}
+
+/// Whether a daemon request opts into the multi-frame data-plane
+/// reply (`agent.stream` with `emit_output: true`).
+fn wants_agent_stream_data(req: &Request) -> bool {
+    req.method == Method::AgentStream.name()
+        && req.params.get("emit_output").as_bool().unwrap_or(false)
+}
+
+/// Serve `agent.stream` with `emit_output`: a JSON header, the
+/// output bytes as data frames — binary for hops stamped protocol 4,
+/// base64 `stream_data` events for protocol 3 — then a JSON terminal
+/// frame carrying the [`StreamOutcomeBody`] in `stats`. In federated
+/// deployments the management server relays these frames verbatim to
+/// the end client (it stamps the hop with the client's protocol).
+fn serve_agent_stream_data(
+    stream: &mut TcpStream,
+    inner: &Arc<DaemonInner>,
+    proto: u32,
+    id: Option<u64>,
+    params: &Json,
+) -> std::io::Result<()> {
+    let binary = proto >= PROTO_DATA_FRAMES;
+    let prep = (|| {
+        if proto < 3 {
+            return Err(ApiError::bad_request(
+                "emit_output requires protocol 3",
+            ));
+        }
+        let req = AgentStreamRequest::from_json(params)?;
+        let cfg = crate::middleware::server::stream_config_for(
+            &req.core, req.mults,
+        )?;
+        let handle = authorize(inner, req.lease, req.alloc)?;
+        Ok((req, cfg, handle))
+    })();
+    let (req, cfg, handle) = match prep {
+        Err(e) => {
+            return write_frame(
+                stream,
+                &Response::failure(id, e).to_json(),
+            )
+        }
+        Ok(v) => v,
+    };
+    let idx = handle
+        .members()
+        .iter()
+        .position(|a| *a == req.alloc)
+        .unwrap_or(0);
+    write_frame(
+        stream,
+        &Response::stream_header(
+            id,
+            Json::obj(vec![
+                ("core", Json::from(req.core.as_str())),
+                ("binary", Json::from(binary)),
+            ]),
+        )
+        .to_json(),
+    )?;
+    let mut seq = 0u64;
+    let mut io_err: Option<std::io::Error> = None;
+    let streamed =
+        handle.stream_member_sink(idx, &cfg, &mut |chunk| {
+            seq += 1;
+            match write_data_frame(stream, binary, seq, chunk) {
+                Ok(()) => true,
+                Err(e) => {
+                    io_err = Some(e);
+                    false
+                }
+            }
+        });
+    if let Some(e) = io_err {
+        return Err(e);
+    }
+    let term = match streamed {
+        Ok(out) => {
+            if binary {
+                seq += 1;
+                write_bin_frame(stream, &BinFrame::end_marker(seq))?;
+            }
+            StreamFrame::terminal_with_stats(
+                seq + 1,
+                None,
+                StreamOutcomeBody::from_outcome(&out).to_json(),
+            )
+        }
+        Err(e) => {
+            StreamFrame::terminal(seq + 1, Some(ApiError::from(e)))
+        }
+    };
+    write_frame(stream, &term.to_json())
 }
 
 fn dispatch_daemon(
@@ -935,6 +1045,7 @@ mod tests {
                 alloc: grant.alloc,
                 core: "matmul16".to_string(),
                 mults: 4096,
+                emit_output: false,
             })
             .unwrap();
         assert_eq!(out.mults, 4096);

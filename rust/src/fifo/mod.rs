@@ -12,11 +12,21 @@
 //! full FIFO blocks the producer (the hardware asserts almost-full
 //! toward the PCIe core — that is exactly the backpressure the 800
 //! MB/s shared link propagates to slow cores).
+//!
+//! Since the descriptor-ring data plane (`docs/DATAPLANE.md`) the
+//! queue carries [`Chunk`]s — either heap-owned `Vec<u8>`s (legacy
+//! copy path) or pool-owned [`PooledBuf`]s handed through without
+//! copying — and each FIFO can publish its occupancy and high-water
+//! gauges into the metrics registry so `rc3e metrics` shows where
+//! backpressure is building.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
+
+use crate::metrics::{Gauge, Registry};
+use crate::pcie::ring::PooledBuf;
 
 /// Errors from FIFO operations.
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -29,11 +39,79 @@ pub enum FifoError {
     ChunkTooLarge { chunk: usize, capacity: usize },
 }
 
+/// One queued payload: heap-owned bytes, or a pooled DMA slot moved
+/// through the pipeline without copying.
+///
+/// Both variants deref to `&[u8]`, so consumers read payloads
+/// uniformly; [`Chunk::into_vec`] converts for the legacy `Vec` API
+/// (free for `Owned`, one copy for `Pooled`).
+#[derive(Debug)]
+pub enum Chunk {
+    /// Heap-allocated chunk (legacy per-call allocation path).
+    Owned(Vec<u8>),
+    /// Pool-owned slot; dropping it recycles the slot.
+    Pooled(PooledBuf),
+}
+
+impl Chunk {
+    pub fn len(&self) -> usize {
+        match self {
+            Chunk::Owned(v) => v.len(),
+            Chunk::Pooled(b) => b.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Chunk::Owned(v) => v,
+            Chunk::Pooled(b) => b,
+        }
+    }
+
+    /// Extract owned bytes; copies only when the chunk is pooled.
+    pub fn into_vec(self) -> Vec<u8> {
+        match self {
+            Chunk::Owned(v) => v,
+            Chunk::Pooled(b) => b.to_vec(),
+        }
+    }
+}
+
+impl std::ops::Deref for Chunk {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Chunk {
+    fn from(v: Vec<u8>) -> Chunk {
+        Chunk::Owned(v)
+    }
+}
+
+impl From<PooledBuf> for Chunk {
+    fn from(b: PooledBuf) -> Chunk {
+        Chunk::Pooled(b)
+    }
+}
+
 #[derive(Debug)]
 struct Inner {
-    queue: VecDeque<Vec<u8>>,
+    queue: VecDeque<Chunk>,
     bytes: usize,
     closed: bool,
+}
+
+/// Registry gauges one FIFO publishes (see [`AsyncFifo::bind_metrics`]).
+#[derive(Debug)]
+struct FifoGauges {
+    occupancy: Arc<Gauge>,
+    high_water: Arc<Gauge>,
 }
 
 /// Occupancy statistics (status-monitor feed).
@@ -60,6 +138,7 @@ pub struct AsyncFifo {
     popped_chunks: AtomicU64,
     popped_bytes: AtomicU64,
     max_occupancy: AtomicU64,
+    gauges: OnceLock<FifoGauges>,
 }
 
 impl AsyncFifo {
@@ -81,6 +160,7 @@ impl AsyncFifo {
             popped_chunks: AtomicU64::new(0),
             popped_bytes: AtomicU64::new(0),
             max_occupancy: AtomicU64::new(0),
+            gauges: OnceLock::new(),
         })
     }
 
@@ -102,8 +182,36 @@ impl AsyncFifo {
         self.inner.lock().unwrap().bytes
     }
 
-    /// Blocking push with backpressure; errors if closed.
+    /// Publish `fifo.<name>.occupancy` / `fifo.<name>.high_water`
+    /// gauges into `registry`. Idempotent; the first binding wins.
+    /// The FIFO name must be a valid instrument-name segment
+    /// (lowercase snake_case).
+    pub fn bind_metrics(&self, registry: &Registry) {
+        let _ = self.gauges.get_or_init(|| FifoGauges {
+            occupancy: registry.gauge(&format!("fifo.{}.occupancy", self.name)),
+            high_water: registry.gauge(&format!("fifo.{}.high_water", self.name)),
+        });
+        self.publish_occupancy(self.occupancy());
+    }
+
+    fn publish_occupancy(&self, bytes: usize) {
+        if let Some(g) = self.gauges.get() {
+            g.occupancy.set(bytes as i64);
+            g.high_water.fetch_max(bytes as i64);
+        }
+    }
+
+    /// Blocking push with backpressure; errors if closed. Allocating
+    /// legacy entry point — see [`AsyncFifo::push_chunk`] for the
+    /// zero-copy path.
     pub fn push(&self, chunk: Vec<u8>) -> Result<(), FifoError> {
+        self.push_chunk(Chunk::Owned(chunk))
+    }
+
+    /// Blocking push of an owned or pooled chunk with backpressure;
+    /// errors if closed. Pooled chunks move through the queue without
+    /// copying — this is the descriptor-ring data-plane entry point.
+    pub fn push_chunk(&self, chunk: Chunk) -> Result<(), FifoError> {
         if chunk.len() > self.capacity {
             return Err(FifoError::ChunkTooLarge {
                 chunk: chunk.len(),
@@ -128,14 +236,24 @@ impl AsyncFifo {
             .fetch_add(chunk.len() as u64, Ordering::Relaxed);
         self.max_occupancy
             .fetch_max(inner.bytes as u64, Ordering::Relaxed);
+        let occupancy = inner.bytes;
         inner.queue.push_back(chunk);
         drop(inner);
+        self.publish_occupancy(occupancy);
         self.not_empty.notify_one();
         Ok(())
     }
 
     /// Blocking pop; `Ok(None)` when the FIFO is closed *and* drained.
+    /// Allocation behaviour: pooled chunks are copied into a fresh
+    /// `Vec` — zero-copy consumers use [`AsyncFifo::pop_chunk`].
     pub fn pop(&self) -> Result<Option<Vec<u8>>, FifoError> {
+        Ok(self.pop_chunk()?.map(Chunk::into_vec))
+    }
+
+    /// Blocking pop preserving chunk ownership; `Ok(None)` when the
+    /// FIFO is closed *and* drained.
+    pub fn pop_chunk(&self) -> Result<Option<Chunk>, FifoError> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(chunk) = inner.queue.pop_front() {
@@ -143,7 +261,9 @@ impl AsyncFifo {
                 self.popped_chunks.fetch_add(1, Ordering::Relaxed);
                 self.popped_bytes
                     .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                let occupancy = inner.bytes;
                 drop(inner);
+                self.publish_occupancy(occupancy);
                 self.not_full.notify_one();
                 return Ok(Some(chunk));
             }
@@ -151,6 +271,21 @@ impl AsyncFifo {
                 return Ok(None);
             }
             inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Blocking pop into a caller-owned buffer: clears `out`, copies
+    /// the next payload into it (reusing its capacity — steady state
+    /// allocates nothing) and returns `Ok(true)`, or `Ok(false)` when
+    /// the FIFO is closed and drained.
+    pub fn pop_into(&self, out: &mut Vec<u8>) -> Result<bool, FifoError> {
+        match self.pop_chunk()? {
+            Some(chunk) => {
+                out.clear();
+                out.extend_from_slice(&chunk);
+                Ok(true)
+            }
+            None => Ok(false),
         }
     }
 
@@ -168,9 +303,11 @@ impl AsyncFifo {
                 self.popped_chunks.fetch_add(1, Ordering::Relaxed);
                 self.popped_bytes
                     .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                let occupancy = inner.bytes;
                 drop(inner);
+                self.publish_occupancy(occupancy);
                 self.not_full.notify_one();
-                return Ok(Some(chunk));
+                return Ok(Some(chunk.into_vec()));
             }
             if inner.closed {
                 return Ok(None);
@@ -204,6 +341,7 @@ impl AsyncFifo {
         inner.bytes = 0;
         inner.closed = false;
         drop(inner);
+        self.publish_occupancy(0);
         self.not_full.notify_all();
     }
 
@@ -327,5 +465,54 @@ mod tests {
         f.push(vec![0; 200]).unwrap();
         f.pop().unwrap();
         assert_eq!(f.stats().max_occupancy, 300);
+    }
+
+    #[test]
+    fn pooled_chunks_flow_without_copy() {
+        let pool = crate::pcie::ring::BufferPool::new("p", 64, 2);
+        let f = AsyncFifo::new("t", 1024);
+        let mut buf = pool.acquire();
+        buf.fill_from(&[7, 8, 9]);
+        f.push_chunk(Chunk::Pooled(buf)).unwrap();
+        let chunk = f.pop_chunk().unwrap().unwrap();
+        assert!(matches!(chunk, Chunk::Pooled(_)));
+        assert_eq!(&chunk[..], &[7, 8, 9]);
+        drop(chunk);
+        // Slot came back to the pool.
+        assert_eq!(pool.created_total(), 1);
+        let again = pool.try_acquire();
+        assert!(again.is_some());
+    }
+
+    #[test]
+    fn pop_into_reuses_caller_buffer() {
+        let f = AsyncFifo::new("t", 1024);
+        f.push(vec![1; 32]).unwrap();
+        f.push(vec![2; 16]).unwrap();
+        f.close();
+        let mut out = Vec::with_capacity(32);
+        let cap = out.capacity();
+        assert!(f.pop_into(&mut out).unwrap());
+        assert_eq!(out, vec![1; 32]);
+        assert!(f.pop_into(&mut out).unwrap());
+        assert_eq!(out, vec![2; 16]);
+        assert_eq!(out.capacity(), cap);
+        assert!(!f.pop_into(&mut out).unwrap());
+    }
+
+    #[test]
+    fn gauges_publish_occupancy_and_high_water() {
+        let reg = crate::metrics::Registry::new();
+        let f = AsyncFifo::new("gauged", 1024);
+        f.bind_metrics(&reg);
+        f.push(vec![0; 100]).unwrap();
+        f.push(vec![0; 200]).unwrap();
+        let occ = reg.gauge("fifo.gauged.occupancy");
+        let hw = reg.gauge("fifo.gauged.high_water");
+        assert_eq!(occ.get(), 300);
+        f.pop().unwrap();
+        f.pop().unwrap();
+        assert_eq!(occ.get(), 0);
+        assert_eq!(hw.get(), 300);
     }
 }

@@ -911,7 +911,8 @@ impl Hypervisor {
         Ok(crate::rc2f::stream::StreamRunner::new(
             Arc::clone(&self.clock),
             Arc::clone(&dev.link),
-        ))
+        )
+        .with_metrics(Arc::clone(&self.metrics)))
     }
 
     /// Retarget a relocatable partial bitfile to wherever `vfpga`

@@ -83,6 +83,13 @@ pub mod vm;
 /// Crate version string reported by the CLI and the RPC `hello` call.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
 
+/// Counting allocator backing the zero-allocation assertions of the
+/// descriptor-ring data plane (see [`util::memprobe`]). Pass-through
+/// to the system allocator plus a thread-local counter bump.
+#[global_allocator]
+static GLOBAL_ALLOC_PROBE: util::memprobe::CountingAllocator =
+    util::memprobe::CountingAllocator;
+
 /// Paper constants used throughout the calibration layer.
 ///
 /// All timing constants are the measured values of the paper's tables;

@@ -49,9 +49,13 @@ use crate::util::trace::{SpanRecord, TraceSnapshot};
 /// Oldest protocol this server/client still speaks (the typed v2
 /// surface; the untyped protocol 1 is retired).
 pub const PROTO_MIN: u32 = 2;
-/// Newest protocol this server/client speaks (the event-stream
-/// surface).
-pub const PROTO_MAX: u32 = 3;
+/// Newest protocol this server/client speaks (v4: out-of-band binary
+/// data frames for bulk stream payloads).
+pub const PROTO_MAX: u32 = 4;
+/// First protocol carrying out-of-band binary data frames. Peers
+/// negotiating v3 get the same payloads base64-packed in JSON
+/// stream frames.
+pub const PROTO_DATA_FRAMES: u32 = 4;
 
 // ====================================================== error codes
 
@@ -1219,6 +1223,12 @@ pub struct StreamRequest {
     pub mults: u64,
     /// Required on protocol ≥ 2 (capability auth).
     pub lease: Option<LeaseToken>,
+    /// When true the response is multi-frame: a stream header, the
+    /// result chunks out-of-band (binary frames on proto ≥ 4, base64
+    /// JSON frames on proto 3) and a terminal frame carrying the
+    /// [`StreamOutcomeBody`] in `stats`. When false the call returns
+    /// a job handle as before.
+    pub emit_output: bool,
 }
 
 impl StreamRequest {
@@ -1230,6 +1240,9 @@ impl StreamRequest {
             ("mults", Json::from(self.mults)),
         ]);
         set_opt_lease(&mut j, "lease", self.lease);
+        if self.emit_output {
+            j.set("emit_output", Json::from(true));
+        }
         j
     }
 
@@ -1240,6 +1253,7 @@ impl StreamRequest {
             core: want_str(p, "core")?,
             mults: want_u64(p, "mults")?,
             lease: opt_lease(p, "lease")?,
+            emit_output: p.get("emit_output").as_bool().unwrap_or(false),
         })
     }
 }
@@ -3588,16 +3602,24 @@ pub struct AgentStreamRequest {
     pub alloc: AllocationId,
     pub core: String,
     pub mults: u64,
+    /// Multi-frame reply with out-of-band result chunks (see
+    /// [`StreamRequest::emit_output`]); the management server relays
+    /// the frames to the end client without re-encoding.
+    pub emit_output: bool,
 }
 
 impl AgentStreamRequest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("lease", Json::from(self.lease.to_string())),
             ("alloc", Json::from(self.alloc.to_string())),
             ("core", Json::from(self.core.as_str())),
             ("mults", Json::from(self.mults)),
-        ])
+        ]);
+        if self.emit_output {
+            j.set("emit_output", Json::from(true));
+        }
+        j
     }
 
     pub fn from_json(
@@ -3608,6 +3630,7 @@ impl AgentStreamRequest {
             alloc: want_id(p, "alloc", AllocationId::parse)?,
             core: want_str(p, "core")?,
             mults: want_u64(p, "mults")?,
+            emit_output: p.get("emit_output").as_bool().unwrap_or(false),
         })
     }
 }

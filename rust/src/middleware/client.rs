@@ -29,7 +29,8 @@ use std::time::Duration;
 
 use super::api::*;
 use super::proto::{
-    read_frame, write_frame, Request, Response, StreamFrame,
+    read_frame, read_wire_frame, write_frame, Request, Response,
+    StreamFrame, WireFrame,
 };
 use crate::config::ServiceModel;
 use crate::sched::RequestClass;
@@ -50,6 +51,10 @@ use crate::util::json::Json;
 /// flag, or deliberately wrong ones in tests).
 pub struct Client {
     stream: TcpStream,
+    /// Protocol stamped on outgoing requests. Defaults to
+    /// [`PROTO_MAX`]; [`Client::set_proto`] pins an older version
+    /// (e.g. 3 to force the JSON data-frame fallback).
+    proto: u32,
     /// Correlation-id counter for requests.
     next_id: u64,
     /// alloc → capability token, learned from alloc responses.
@@ -74,11 +79,24 @@ impl Client {
             .map_err(|e| e.to_string())?;
         Ok(Client {
             stream,
+            proto: PROTO_MAX,
             next_id: 0,
             lease_tokens: BTreeMap::new(),
             job_tokens: BTreeMap::new(),
             trace_context: None,
         })
+    }
+
+    /// Pin the protocol stamped on outgoing requests (within the
+    /// supported window). A client pinned to 3 never receives binary
+    /// frames: the server falls back to base64 `stream_data` events.
+    pub fn set_proto(&mut self, proto: u32) {
+        self.proto = proto.clamp(PROTO_MIN, PROTO_MAX);
+    }
+
+    /// The protocol this client stamps on requests.
+    pub fn proto(&self) -> u32 {
+        self.proto
     }
 
     /// Mint a fresh trace id and stamp it on every request from here
@@ -141,8 +159,9 @@ impl Client {
     ) -> Result<Response, ApiError> {
         self.next_id += 1;
         let id = self.next_id;
-        let req = Request::v2(method, params, id)
+        let mut req = Request::v2(method, params, id)
             .with_trace(self.trace_context);
+        req.proto = Some(self.proto);
         write_frame(&mut self.stream, &req.to_json())
             .map_err(|e| ApiError::internal(format!("io: {e}")))?;
         let frame = read_frame(&mut self.stream)
@@ -375,6 +394,7 @@ impl Client {
             core: core.to_string(),
             mults,
             lease: self.lease_token(alloc),
+            emit_output: false,
         };
         let body =
             self.call_v2(Method::Stream.name(), req.to_json())?;
@@ -396,6 +416,108 @@ impl Client {
         let job = self.stream(user, alloc, core, mults)?.job;
         let result = self.job_wait_done(job)?;
         StreamOutcomeBody::from_json(&result)
+    }
+
+    /// Stream with the output payload delivered over the data plane:
+    /// the server replies with a stream header, then data frames —
+    /// out-of-band binary frames when this client speaks protocol 4,
+    /// base64 `stream_data` events on protocol 3 — then a JSON
+    /// terminal frame whose `stats` carry the [`StreamOutcomeBody`].
+    /// Output bytes are appended to `out`. Synchronous on the
+    /// connection: no job handle, the connection is dedicated to the
+    /// stream until the terminal frame.
+    pub fn stream_data(
+        &mut self,
+        user: UserId,
+        alloc: AllocationId,
+        core: &str,
+        mults: u64,
+        out: &mut Vec<u8>,
+    ) -> Result<StreamOutcomeBody, ApiError> {
+        let req = StreamRequest {
+            user,
+            alloc,
+            core: core.to_string(),
+            mults,
+            lease: self.lease_token(alloc),
+            emit_output: true,
+        };
+        self.next_id += 1;
+        let id = self.next_id;
+        let mut env =
+            Request::v2(Method::Stream.name(), req.to_json(), id)
+                .with_trace(self.trace_context);
+        env.proto = Some(self.proto);
+        write_frame(&mut self.stream, &env.to_json())
+            .map_err(|e| ApiError::internal(format!("io: {e}")))?;
+        let header = read_frame(&mut self.stream)
+            .map_err(|e| ApiError::internal(format!("io: {e}")))?
+            .ok_or_else(|| {
+                ApiError::internal("io: eof (server closed connection)")
+            })?;
+        let resp =
+            Response::from_json(&header).map_err(ApiError::internal)?;
+        let is_stream = resp.stream;
+        resp.into_api_result()?;
+        if !is_stream {
+            return Err(ApiError::internal(
+                "stream response was not a data-plane header",
+            ));
+        }
+        // Data frames until the JSON terminal. Sequence numbers are
+        // shared across both framings and strictly increasing.
+        let mut last_seq = 0u64;
+        loop {
+            let frame = read_wire_frame(&mut self.stream)
+                .map_err(|e| ApiError::internal(format!("io: {e}")))?
+                .ok_or_else(|| {
+                    ApiError::internal("io: eof mid-stream")
+                })?;
+            match frame {
+                WireFrame::Bin(b) => {
+                    if b.seq <= last_seq {
+                        return Err(ApiError::internal(
+                            "data frame sequence went backwards",
+                        ));
+                    }
+                    last_seq = b.seq;
+                    out.extend_from_slice(&b.payload);
+                }
+                WireFrame::Json(v) => {
+                    let f = StreamFrame::from_json(&v)
+                        .map_err(ApiError::internal)?;
+                    if f.end {
+                        if let Some(e) = f.error {
+                            return Err(e);
+                        }
+                        let stats = f.stats.ok_or_else(|| {
+                            ApiError::internal(
+                                "terminal frame missing outcome stats",
+                            )
+                        })?;
+                        return StreamOutcomeBody::from_json(&stats);
+                    }
+                    if f.seq <= last_seq {
+                        return Err(ApiError::internal(
+                            "data frame sequence went backwards",
+                        ));
+                    }
+                    last_seq = f.seq;
+                    if let Some(ev) = &f.event {
+                        if let Some(b64) = ev.get("b64").as_str() {
+                            let bytes =
+                                crate::util::bytes::b64_decode(b64)
+                                    .map_err(|e| {
+                                        ApiError::internal(format!(
+                                            "bad stream_data frame: {e}"
+                                        ))
+                                    })?;
+                            out.extend_from_slice(&bytes);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Submit a full-bitstream configuration; returns a job handle.

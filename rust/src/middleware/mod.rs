@@ -35,6 +35,11 @@
 //! (`{"method", "params", "id", "proto"}` /
 //! `{"ok", "body", "id"?, "error"?, "stream"?}`, with
 //! `{"seq", "event"?, "end"?}` frames after a stream header).
+//! Protocol 4 adds an out-of-band binary framing for bulk data: a
+//! length word with the top bit set carries `[flags][seq][bytes]`
+//! instead of JSON text, so `stream` output moves without base64 or
+//! envelope parsing — see [`proto::BinFrame`] and
+//! `docs/PROTOCOL.md`.
 
 pub mod agent;
 pub mod api;
@@ -47,12 +52,13 @@ pub mod server;
 pub use agent::NodeAgent;
 pub use api::{
     ApiError, ErrorCode, Event, Method, SubscriptionFilter, Topic,
-    PROTO_MAX, PROTO_MIN,
+    PROTO_DATA_FRAMES, PROTO_MAX, PROTO_MIN,
 };
 pub use client::{Client, EventFrame, EventStream};
 pub use events::{EventBus, Scope};
 pub use jobs::{JobRegistry, JobState, ProgressReporter};
 pub use proto::{
-    read_frame, write_frame, Request, Response, StreamFrame,
+    read_frame, read_wire_frame, write_bin_frame, write_frame,
+    BinFrame, Request, Response, StreamFrame, WireFrame,
 };
 pub use server::ManagementServer;

@@ -12,8 +12,18 @@
 //! envelope carries `"stream": true` is a *header* — it is followed
 //! by ordered [`StreamFrame`]s (`seq` strictly increasing) and closed
 //! by a terminal frame (`"end": true`), after which the connection
-//! returns to request/response mode. The only streaming method today
-//! is `subscribe` (see `docs/PROTOCOL.md`).
+//! returns to request/response mode (see `docs/PROTOCOL.md`).
+//!
+//! Protocol 4 adds **out-of-band binary frames** for bulk data: a
+//! length word with the top bit set introduces a [`BinFrame`]
+//! (`[len|BIN][flags u8][seq u64][payload]`) instead of JSON text.
+//! Binary frames interleave with JSON [`StreamFrame`]s inside a
+//! multi-frame response — sharing one strictly-increasing `seq`
+//! space — so stream payloads skip JSON encoding entirely while
+//! headers and terminals stay structured. Peers negotiating proto 3
+//! receive the same payloads base64-packed inside JSON frames
+//! instead. [`read_wire_frame`] reads either kind; [`read_frame`]
+//! (the pre-v4 entry point) rejects binary frames.
 
 use std::io::{Read, Write};
 
@@ -22,7 +32,62 @@ use crate::util::ids::TraceId;
 use crate::util::json::Json;
 
 /// Max frame we accept (a full bitstream upload fits comfortably).
+/// Applies to JSON frame text and to binary frame payloads alike.
 pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// Top bit of the length word marks a binary frame. `MAX_FRAME` is
+/// far below bit 31, so the two framings cannot collide.
+const BIN_FRAME_BIT: u32 = 0x8000_0000;
+
+/// Binary frame header bytes past the length word: flags(1) + seq(8).
+const BIN_HEADER_BYTES: u32 = 9;
+
+/// Flag bit: this binary frame closes the payload sequence (a JSON
+/// terminal [`StreamFrame`] still follows with the outcome).
+pub const BIN_FLAG_END: u8 = 0x01;
+
+/// An out-of-band binary frame (protocol 4): bulk payload bytes with
+/// a sequence number shared with the surrounding multi-frame
+/// response's JSON frames.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BinFrame {
+    /// [`BIN_FLAG_END`] bits.
+    pub flags: u8,
+    /// Position in the enclosing stream (strictly increasing).
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+impl BinFrame {
+    /// A data-carrying frame.
+    pub fn data(seq: u64, payload: Vec<u8>) -> BinFrame {
+        BinFrame {
+            flags: 0,
+            seq,
+            payload,
+        }
+    }
+
+    /// An empty payload-complete marker (the last binary frame).
+    pub fn end_marker(seq: u64) -> BinFrame {
+        BinFrame {
+            flags: BIN_FLAG_END,
+            seq,
+            payload: Vec::new(),
+        }
+    }
+
+    pub fn is_end(&self) -> bool {
+        self.flags & BIN_FLAG_END != 0
+    }
+}
+
+/// Either framing the wire can carry once protocol 4 is in play.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireFrame {
+    Json(Json),
+    Bin(BinFrame),
+}
 
 /// An RPC request.
 #[derive(Debug, Clone, PartialEq)]
@@ -351,8 +416,73 @@ pub fn write_frame(w: &mut impl Write, v: &Json) -> std::io::Result<()> {
     w.flush()
 }
 
-/// Read one frame; `Ok(None)` on clean EOF before the header.
-pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Json>> {
+/// Write one binary frame (protocol 4 out-of-band payload).
+pub fn write_bin_frame(
+    w: &mut impl Write,
+    frame: &BinFrame,
+) -> std::io::Result<()> {
+    write_bin_chunk(w, frame.flags, frame.seq, &frame.payload)
+}
+
+/// [`write_bin_frame`] without the owning struct: the data plane
+/// writes pooled buffers straight to the socket, so the payload is
+/// only ever borrowed.
+pub fn write_bin_chunk(
+    w: &mut impl Write,
+    flags: u8,
+    seq: u64,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    if payload.len() > MAX_FRAME as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!(
+                "binary payload of {} bytes exceeds limit",
+                payload.len()
+            ),
+        ));
+    }
+    let len = BIN_HEADER_BYTES + payload.len() as u32;
+    w.write_all(&(len | BIN_FRAME_BIT).to_le_bytes())?;
+    w.write_all(&[flags])?;
+    w.write_all(&seq.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Write one data-plane frame carrying `chunk`: an out-of-band
+/// binary frame when `binary`, otherwise a `stream_data` event
+/// (base64 payload) inside a JSON [`StreamFrame`] — the protocol-3
+/// fallback framing.
+pub fn write_data_frame(
+    w: &mut impl Write,
+    binary: bool,
+    seq: u64,
+    chunk: &[u8],
+) -> std::io::Result<()> {
+    if binary {
+        return write_bin_chunk(w, 0, seq, chunk);
+    }
+    let b64 = crate::util::bytes::b64_encode(chunk);
+    write_frame(
+        w,
+        &StreamFrame::event(
+            seq,
+            Json::obj(vec![
+                ("type", Json::from("stream_data")),
+                ("b64", Json::from(b64.as_str())),
+            ]),
+        )
+        .to_json(),
+    )
+}
+
+/// Read one frame of either kind; `Ok(None)` on clean EOF before the
+/// header. Length and header sanity are enforced before any payload
+/// allocation.
+pub fn read_wire_frame(
+    r: &mut impl Read,
+) -> std::io::Result<Option<WireFrame>> {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
         Ok(()) => {}
@@ -361,21 +491,61 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Json>> {
         }
         Err(e) => return Err(e),
     }
-    let len = u32::from_le_bytes(len_buf);
-    if len > MAX_FRAME {
+    let raw = u32::from_le_bytes(len_buf);
+    if raw & BIN_FRAME_BIT != 0 {
+        let len = raw & !BIN_FRAME_BIT;
+        if len < BIN_HEADER_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("binary frame of {len} bytes lacks its header"),
+            ));
+        }
+        let body = len - BIN_HEADER_BYTES;
+        if body > MAX_FRAME {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("binary payload of {body} bytes exceeds limit"),
+            ));
+        }
+        let mut hdr = [0u8; BIN_HEADER_BYTES as usize];
+        r.read_exact(&mut hdr)?;
+        let seq = u64::from_le_bytes(hdr[1..9].try_into().unwrap());
+        let mut payload = vec![0u8; body as usize];
+        r.read_exact(&mut payload)?;
+        return Ok(Some(WireFrame::Bin(BinFrame {
+            flags: hdr[0],
+            seq,
+            payload,
+        })));
+    }
+    if raw > MAX_FRAME {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
-            format!("frame of {len} bytes exceeds limit"),
+            format!("frame of {raw} bytes exceeds limit"),
         ));
     }
-    let mut buf = vec![0u8; len as usize];
+    let mut buf = vec![0u8; raw as usize];
     r.read_exact(&mut buf)?;
     let text = String::from_utf8(buf).map_err(|_| {
         std::io::Error::new(std::io::ErrorKind::InvalidData, "bad utf-8")
     })?;
     Json::parse(&text)
-        .map(Some)
+        .map(|v| Some(WireFrame::Json(v)))
         .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+/// Read one JSON frame; `Ok(None)` on clean EOF before the header.
+/// The pre-v4 entry point: a binary frame here is a protocol error
+/// (the peer sent v4 payloads without negotiating them).
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Json>> {
+    match read_wire_frame(r)? {
+        None => Ok(None),
+        Some(WireFrame::Json(v)) => Ok(Some(v)),
+        Some(WireFrame::Bin(_)) => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "unexpected binary frame outside a negotiated v4 stream",
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -549,5 +719,84 @@ mod tests {
         buf.extend_from_slice(b"abc"); // claims 10, has 3
         let mut cursor = std::io::Cursor::new(buf);
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn bin_frame_roundtrip_and_interleaving() {
+        let mut buf = Vec::new();
+        let data = BinFrame::data(1, vec![0xAB; 300]);
+        write_bin_frame(&mut buf, &data).unwrap();
+        // JSON frames interleave freely with binary ones.
+        write_frame(&mut buf, &StreamFrame::terminal(2, None).to_json())
+            .unwrap();
+        write_bin_frame(&mut buf, &BinFrame::end_marker(3)).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let f1 = read_wire_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(f1, WireFrame::Bin(data));
+        let f2 = read_wire_frame(&mut cursor).unwrap().unwrap();
+        assert!(matches!(f2, WireFrame::Json(_)));
+        let f3 = read_wire_frame(&mut cursor).unwrap().unwrap();
+        let WireFrame::Bin(end) = f3 else {
+            panic!("expected binary end marker")
+        };
+        assert!(end.is_end());
+        assert!(end.payload.is_empty());
+        assert_eq!(end.seq, 3);
+        assert!(read_wire_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn empty_bin_payload_roundtrips() {
+        let mut buf = Vec::new();
+        write_bin_frame(&mut buf, &BinFrame::data(7, Vec::new())).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let WireFrame::Bin(b) = read_wire_frame(&mut cursor).unwrap().unwrap()
+        else {
+            panic!("expected binary frame")
+        };
+        assert_eq!(b.seq, 7);
+        assert!(b.payload.is_empty());
+        assert!(!b.is_end());
+    }
+
+    #[test]
+    fn oversized_bin_frame_rejected_both_ways() {
+        // Writer refuses payloads beyond MAX_FRAME.
+        let huge = BinFrame::data(1, vec![0; MAX_FRAME as usize + 1]);
+        assert!(write_bin_frame(&mut Vec::new(), &huge).is_err());
+        // Reader refuses a forged oversized length word.
+        let mut buf = Vec::new();
+        let forged = (MAX_FRAME + BIN_HEADER_BYTES + 1) | BIN_FRAME_BIT;
+        buf.extend_from_slice(&forged.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_wire_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn short_bin_frame_rejected() {
+        // Length word claims binary but is shorter than the header.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(4u32 | BIN_FRAME_BIT).to_le_bytes());
+        buf.extend_from_slice(&[0; 4]);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_wire_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn v3_reader_rejects_bin_frames() {
+        let mut buf = Vec::new();
+        write_bin_frame(&mut buf, &BinFrame::data(1, vec![1, 2])).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_bin_payload_is_io_error() {
+        let mut buf = Vec::new();
+        write_bin_frame(&mut buf, &BinFrame::data(1, vec![9; 64])).unwrap();
+        buf.truncate(buf.len() - 10);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_wire_frame(&mut cursor).is_err());
     }
 }

@@ -40,7 +40,9 @@ use super::jobs::{
     JobRegistry, ProgressReporter, DEFAULT_WAIT_S, MAX_WAIT_S,
 };
 use super::proto::{
-    read_frame, respond, write_frame, Request, Response, StreamFrame,
+    read_frame, read_wire_frame, respond, write_bin_frame,
+    write_data_frame, write_frame, BinFrame, Request, Response,
+    StreamFrame, WireFrame,
 };
 use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
@@ -388,6 +390,22 @@ fn serve_conn(
                         )?;
                         continue;
                     }
+                    Ok(proto) if wants_stream_data(&req) => {
+                        // Data-plane reply: header + raw output
+                        // frames + terminal, synchronous on the
+                        // connection like `subscribe`.
+                        let _root = inner
+                            .tracer
+                            .root("rpc.stream_data", req.trace);
+                        serve_stream_data(
+                            &mut stream,
+                            &inner,
+                            proto,
+                            req.id,
+                            &req.params,
+                        )?;
+                        continue;
+                    }
                     Ok(_proto) => {
                         // Root span per RPC: the client's `trace`
                         // field (if any) stitches this request into an
@@ -538,6 +556,230 @@ fn serve_subscription(
     })();
     inner.bus.unsubscribe(sub.id());
     result
+}
+
+// =================================================== data plane
+
+/// Whether the request opts into the multi-frame data-plane reply
+/// (`stream` with `emit_output: true`) — served out-of-table like
+/// `subscribe`, since the response is header + data frames +
+/// terminal rather than a single envelope.
+fn wants_stream_data(req: &Request) -> bool {
+    req.method == Method::Stream.name()
+        && req.params.get("emit_output").as_bool().unwrap_or(false)
+}
+
+/// Serve one `stream` request with `emit_output`: a JSON header,
+/// then the raw output bytes as data frames — out-of-band binary
+/// frames for protocol-4 clients, base64 `stream_data` events for
+/// protocol 3 — then a JSON terminal frame whose `stats` carry the
+/// [`StreamOutcomeBody`]. The job registry is bypassed: the data
+/// plane is synchronous on the connection. Federated deployments
+/// relay the same frames from the owning node's daemon.
+fn serve_stream_data(
+    stream: &mut TcpStream,
+    inner: &Arc<ServerInner>,
+    proto: u32,
+    id: Option<u64>,
+    params: &Json,
+) -> std::io::Result<()> {
+    let binary = proto >= PROTO_DATA_FRAMES;
+    let parsed = if proto < 3 {
+        Err(ApiError::bad_request("emit_output requires protocol 3"))
+    } else {
+        StreamRequest::from_json(params)
+    };
+    let req = match parsed {
+        Err(e) => {
+            return write_frame(
+                stream,
+                &Response::failure(id, e).to_json(),
+            )
+        }
+        Ok(r) => r,
+    };
+    if let Some(cl) = &inner.cluster {
+        return relay_stream_data(stream, inner, cl, proto, id, &req);
+    }
+    // Resolve + authorize before the header: failures up to here are
+    // plain single-frame error responses.
+    let prep = (|| {
+        let cfg = stream_config_for(&req.core, req.mults)?;
+        let ctx = Ctx { inner };
+        let handle = authorize(&ctx, req.alloc, req.lease)?;
+        Ok((cfg, handle))
+    })();
+    let (cfg, handle) = match prep {
+        Err(e) => {
+            return write_frame(
+                stream,
+                &Response::failure(id, e).to_json(),
+            )
+        }
+        Ok(v) => v,
+    };
+    let idx = handle
+        .members()
+        .iter()
+        .position(|a| *a == req.alloc)
+        .unwrap_or(0);
+    write_frame(
+        stream,
+        &Response::stream_header(
+            id,
+            Json::obj(vec![
+                ("core", Json::from(req.core.as_str())),
+                ("binary", Json::from(binary)),
+            ]),
+        )
+        .to_json(),
+    )?;
+    let mut seq = 0u64;
+    let mut io_err: Option<std::io::Error> = None;
+    let streamed =
+        handle.stream_member_sink(idx, &cfg, &mut |chunk| {
+            seq += 1;
+            match write_data_frame(stream, binary, seq, chunk) {
+                Ok(()) => true,
+                Err(e) => {
+                    io_err = Some(e);
+                    false
+                }
+            }
+        });
+    if let Some(e) = io_err {
+        return Err(e);
+    }
+    let term = match streamed {
+        Ok(out) => {
+            if binary {
+                seq += 1;
+                write_bin_frame(stream, &BinFrame::end_marker(seq))?;
+            }
+            StreamFrame::terminal_with_stats(
+                seq + 1,
+                None,
+                StreamOutcomeBody::from_outcome(&out).to_json(),
+            )
+        }
+        // A mid-stream failure lands on the terminal frame's error:
+        // the header is already out, so the envelope cannot carry it.
+        Err(e) => {
+            StreamFrame::terminal(seq + 1, Some(ApiError::from(e)))
+        }
+    };
+    write_frame(stream, &term.to_json())
+}
+
+/// Relay a data-plane stream from the owning node's daemon. The hop
+/// request is stamped with the *end client's* protocol, so the
+/// daemon emits exactly the framing the client negotiated and the
+/// relay is a pure passthrough — binary frames are never inflated to
+/// base64 on the proxy hop.
+fn relay_stream_data(
+    stream: &mut TcpStream,
+    inner: &Arc<ServerInner>,
+    cl: &Arc<crate::cluster::Coordinator>,
+    proto: u32,
+    id: Option<u64>,
+    req: &StreamRequest,
+) -> std::io::Result<()> {
+    let dialed = (|| {
+        let token = require_token(req.lease)?;
+        let (_node, addr) = cl.agent_addr_of(token)?;
+        let mut agent = TcpStream::connect(addr)
+            .map_err(|e| ApiError::internal(e.to_string()))?;
+        let areq = AgentStreamRequest {
+            lease: token,
+            alloc: req.alloc,
+            core: req.core.clone(),
+            mults: req.mults,
+            emit_output: true,
+        };
+        let hop = Request {
+            method: Method::AgentStream.name().to_string(),
+            params: areq.to_json(),
+            id: Some(1),
+            proto: Some(proto),
+            trace: None,
+        };
+        write_frame(&mut agent, &hop.to_json())
+            .map_err(|e| ApiError::internal(e.to_string()))?;
+        Ok(agent)
+    })();
+    let mut agent = match dialed {
+        Err(e) => {
+            return write_frame(
+                stream,
+                &Response::failure(id, e).to_json(),
+            )
+        }
+        Ok(a) => a,
+    };
+    inner.hv.metrics.counter("cluster.stream_relay").inc();
+    // First frame back is the header (or a single-frame failure);
+    // rewrite its correlation id to the end client's.
+    let header = match read_frame(&mut agent)? {
+        Some(v) => v,
+        None => {
+            return write_frame(
+                stream,
+                &Response::failure(
+                    id,
+                    ApiError::internal(
+                        "agent closed before stream header",
+                    ),
+                )
+                .to_json(),
+            )
+        }
+    };
+    let header = match Response::from_json(&header) {
+        Ok(mut r) => {
+            r.id = id;
+            r
+        }
+        Err(e) => Response::failure(id, ApiError::internal(e)),
+    };
+    let streaming = header.stream;
+    write_frame(stream, &header.to_json())?;
+    if !streaming {
+        return Ok(());
+    }
+    let mut last_seq = 0u64;
+    loop {
+        let frame = match read_wire_frame(&mut agent)? {
+            Some(f) => f,
+            None => {
+                // Node died mid-stream: close the client's stream
+                // abnormally rather than hanging it.
+                return write_frame(
+                    stream,
+                    &StreamFrame::terminal(
+                        last_seq + 1,
+                        Some(ApiError::internal(
+                            "agent connection lost mid-stream",
+                        )),
+                    )
+                    .to_json(),
+                );
+            }
+        };
+        match frame {
+            WireFrame::Bin(b) => {
+                last_seq = b.seq;
+                write_bin_frame(stream, &b)?;
+            }
+            WireFrame::Json(v) => {
+                last_seq = v.get("seq").as_u64().unwrap_or(last_seq);
+                let end = v.get("end").as_bool().unwrap_or(false);
+                write_frame(stream, &v)?;
+                if end {
+                    return Ok(());
+                }
+            }
+        }
+    }
 }
 
 // ===================================================== dispatching
@@ -922,22 +1164,13 @@ fn h_stream(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
         // on the owning node (synchronously over the agent wire) and
         // relays the outcome.
         let token = require_token(req.lease)?;
-        let node = cl.home_of(token).ok_or_else(|| {
-            ApiError::new(
-                ErrorCode::BadToken,
-                "no federated lease for this token",
-            )
-        })?;
-        let addr = cl.registry().addr_of(node).ok_or_else(|| {
-            ApiError::internal(format!(
-                "lease home {node} not registered"
-            ))
-        })?;
+        let (_node, addr) = cl.agent_addr_of(token)?;
         let areq = AgentStreamRequest {
             lease: token,
             alloc: req.alloc,
             core: req.core.clone(),
             mults: req.mults,
+            emit_output: false,
         };
         let owner = req.lease;
         let now_ns = ctx.inner.hv.clock.now().0;

@@ -20,7 +20,11 @@ use crate::util::clock::{VirtualClock, VirtualTime};
 /// Per-transfer protocol overhead (descriptor setup, interrupts) —
 /// calibrated so chunked streaming lands ~1-2 % below the raw cap,
 /// matching Table II's 798 MB/s observed vs 800 MB/s nominal.
-const PER_TRANSFER_OVERHEAD_US: f64 = 0.8;
+///
+/// Public so the descriptor-ring data plane ([`crate::pcie::ring`])
+/// can amortise exactly this cost across a doorbell batch instead of
+/// paying it per descriptor.
+pub const PER_TRANSFER_OVERHEAD_US: f64 = 0.8;
 
 /// The shared link. One per physical FPGA board.
 #[derive(Debug)]
@@ -61,10 +65,24 @@ impl BandwidthArbiter {
     /// (used by run_concurrent so the model is deterministic even
     /// when wall-clock skew lets one stream outlive the others).
     pub fn share_duration_for(&self, bytes: u64, n: usize) -> VirtualTime {
+        self.share_duration_with_overhead(bytes, n, PER_TRANSFER_OVERHEAD_US)
+    }
+
+    /// Fair-share duration for `bytes` at an explicit stream count
+    /// with an explicit per-transfer overhead charge in microseconds.
+    /// The descriptor-ring path passes the doorbell-amortised figure
+    /// (`PER_TRANSFER_OVERHEAD_US / batch`); everything else pays the
+    /// full per-transfer cost.
+    pub fn share_duration_with_overhead(
+        &self,
+        bytes: u64,
+        n: usize,
+        overhead_us: f64,
+    ) -> VirtualTime {
         let n = n.max(1) as f64;
         let share_mbps = self.cap_mbps / n;
         VirtualTime::from_secs_f64(
-            bytes as f64 / (share_mbps * 1e6) + PER_TRANSFER_OVERHEAD_US * 1e-6,
+            bytes as f64 / (share_mbps * 1e6) + overhead_us * 1e-6,
         )
     }
 

@@ -11,13 +11,18 @@
 //!   progression when multiple vFPGA streams share one link;
 //! * [`devfile`] — the per-FIFO/memory device files with access
 //!   rights ("For security reasons the device files are protected by
-//!   access rights", Section IV-D2).
+//!   access rights", Section IV-D2);
+//! * [`ring`] — the descriptor-ring DMA data plane: pooled DMA
+//!   buffers, scatter-gather descriptors with head/tail indices, and
+//!   batched doorbell accounting against the arbiter.
 
 pub mod arbiter;
 pub mod devfile;
+pub mod ring;
 
 pub use arbiter::{BandwidthArbiter, StreamHandle};
 pub use devfile::{DevFileError, DeviceFile, DeviceFileKind, DeviceFileRegistry};
+pub use ring::{BufferPool, DescriptorRing, PooledBuf, RingParams};
 
 /// Negotiated PCIe link parameters.
 ///

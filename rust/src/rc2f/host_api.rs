@@ -14,7 +14,9 @@
 use std::sync::{Arc, Mutex};
 
 use super::controller::{ControlSignal, Controller, SlotState};
-use super::stream::{StreamConfig, StreamOutcome, StreamRunner};
+use super::stream::{
+    ChunkSink, StreamConfig, StreamOutcome, StreamRunner,
+};
 use crate::pcie::devfile::{DeviceFileKind, DeviceFileRegistry};
 use crate::pcie::DeviceLink;
 use crate::util::clock::VirtualClock;
@@ -177,6 +179,25 @@ impl HostSession {
         &self,
         cfg: &StreamConfig,
     ) -> Result<StreamOutcome, HostApiError> {
+        self.runner_for_stream()?.run(cfg).map_err(HostApiError::Stream)
+    }
+
+    /// (c) Data transfer with an observer: identical accounting to
+    /// [`HostSession::stream`], but every consumed output chunk is
+    /// handed (borrowed, zero-copy) to `sink` before its pooled
+    /// buffer is recycled. The out-of-band data plane (protocol 4
+    /// binary frames) rides this path.
+    pub fn stream_with_sink(
+        &self,
+        cfg: &StreamConfig,
+        sink: ChunkSink<'_>,
+    ) -> Result<StreamOutcome, HostApiError> {
+        self.runner_for_stream()?
+            .run_with_sink(cfg, sink)
+            .map_err(HostApiError::Stream)
+    }
+
+    fn runner_for_stream(&self) -> Result<StreamRunner, HostApiError> {
         self.check_access()?;
         let state = self
             .api
@@ -187,12 +208,11 @@ impl HostSession {
         if !matches!(state, SlotState::Configured { .. }) {
             return Err(HostApiError::NotConfigured(self.vfpga));
         }
-        let runner = StreamRunner::new(
+        Ok(StreamRunner::new(
             Arc::clone(&self.api.clock),
             Arc::clone(&self.api.link),
         )
-        .with_artifact_dir(&self.api.artifact_dir);
-        runner.run(cfg).map_err(HostApiError::Stream)
+        .with_artifact_dir(&self.api.artifact_dir))
     }
 }
 

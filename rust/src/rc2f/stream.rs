@@ -18,12 +18,23 @@
 //! stream's timeline — the double-buffered pipeline of the paper's
 //! asynchronous FIFOs — which is what reproduces Table III's
 //! compute-bound → link-bound crossover.
+//!
+//! Since the descriptor-ring data plane (`docs/DATAPLANE.md`) the
+//! pipeline is zero-copy at every FIFO boundary: the producer fills
+//! pooled DMA slots in place (zero steady-state allocations,
+//! asserted below), chunks move through the FIFOs as
+//! [`Chunk::Pooled`] without copying, and each link crossing posts
+//! scatter-gather descriptors on a [`DescriptorRing`] whose batched
+//! doorbells amortise the per-transfer protocol overhead. An
+//! optional per-chunk sink lets the middleware forward result chunks
+//! out-of-band of the JSON envelope.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
-use crate::fifo::AsyncFifo;
+use crate::fifo::{AsyncFifo, Chunk};
+use crate::pcie::ring::{BufferPool, DescriptorRing, RingParams};
 use crate::pcie::DeviceLink;
 use crate::runtime::engine::{matmul_ref, Engine, Tensor};
 use crate::util::bytes::{bytes_to_f32, f32_as_bytes};
@@ -146,11 +157,52 @@ impl StreamOutcome {
     }
 }
 
+/// Per-chunk result callback for out-of-band delivery: receives each
+/// output chunk's bytes in order; returning `false` detaches the sink
+/// (the pipeline keeps draining so accounting stays intact).
+pub type ChunkSink<'a> = &'a mut dyn FnMut(&[u8]) -> bool;
+
+/// In-flight DMA slots per pool — double buffering on both sides of
+/// the FIFO plus one slot in the core.
+const POOL_SLOTS: usize = 4;
+
+/// One producer iteration: synthesize `take` matrix pairs into the
+/// scratch halves, fill a pooled DMA slot in place and push it
+/// downstream without copying. Returns `false` when the consumer
+/// side is gone. Steady state performs **zero heap allocations**
+/// (asserted by `producer_steady_state_allocates_zero`).
+fn produce_one(
+    rng: &mut Rng,
+    xs: &mut [f32],
+    ys: &mut [f32],
+    n2: usize,
+    take: usize,
+    pool: &Arc<BufferPool>,
+    fifo: &AsyncFifo,
+) -> bool {
+    rng.fill_f32(xs, 1.0);
+    rng.fill_f32(ys, 1.0);
+    // Short final chunk: zero-pad to the artifact batch (the engine
+    // contract is fixed-shape).
+    if take * n2 < xs.len() {
+        xs[take * n2..].fill(0.0);
+        ys[take * n2..].fill(0.0);
+    }
+    let half = xs.len() * 4;
+    let mut buf = pool.acquire();
+    let slot = buf.slot_mut();
+    slot[..half].copy_from_slice(f32_as_bytes(xs));
+    slot[half..2 * half].copy_from_slice(f32_as_bytes(ys));
+    buf.set_len(2 * half);
+    fifo.push_chunk(Chunk::Pooled(buf)).is_ok()
+}
+
 /// Runs streaming jobs against one device link.
 pub struct StreamRunner {
     clock: Arc<VirtualClock>,
     link: Arc<DeviceLink>,
     artifact_dir: std::path::PathBuf,
+    metrics: Option<Arc<crate::metrics::Registry>>,
 }
 
 impl StreamRunner {
@@ -162,11 +214,23 @@ impl StreamRunner {
             clock,
             link,
             artifact_dir: crate::runtime::artifact_dir(),
+            metrics: None,
         }
     }
 
     pub fn with_artifact_dir(mut self, dir: &std::path::Path) -> Self {
         self.artifact_dir = dir.to_path_buf();
+        self
+    }
+
+    /// Publish the stream FIFOs' occupancy gauges into `registry`
+    /// (`fifo.<artifact>_in.occupancy` etc.) so `rc3e metrics` shows
+    /// data-plane backpressure.
+    pub fn with_metrics(
+        mut self,
+        registry: Arc<crate::metrics::Registry>,
+    ) -> Self {
+        self.metrics = Some(registry);
         self
     }
 
@@ -207,7 +271,30 @@ impl StreamRunner {
             in_bytes as f64 / (core_cfg.compute_rate_mbps * 1e6),
         );
 
-        while let Some(chunk) = core_in.pop().map_err(|e| e.to_string())? {
+        // Descriptor rings for both link directions: each chunk posts
+        // a scatter-gather span, the batched doorbell amortises the
+        // per-transfer overhead, and `charge` produces the fair-share
+        // duration folded into the pipeline step below.
+        let ring_params = RingParams::default();
+        let in_ring = DescriptorRing::new(
+            &format!("{}_in", core_cfg.artifact),
+            Arc::clone(&link.inbound),
+            ring_params,
+        );
+        let out_ring = DescriptorRing::new(
+            &format!("{}_out", core_cfg.artifact),
+            Arc::clone(&link.outbound),
+            ring_params,
+        );
+        let out_pool = BufferPool::new(
+            &format!("{}_out", core_cfg.artifact),
+            out_bytes as usize,
+            POOL_SLOTS,
+        );
+
+        while let Some(chunk) =
+            core_in.pop_chunk().map_err(|e| e.to_string())?
+        {
             let half = chunk.len() / 2;
             let xs = Tensor::new(
                 vec![batch, n, n],
@@ -217,6 +304,9 @@ impl StreamRunner {
                 vec![batch, n, n],
                 bytes_to_f32(&chunk[half..]).map_err(|e| e.to_string())?,
             );
+            // Input slot goes back to the producer's pool before the
+            // engine runs — that is what keeps the pool bounded.
+            drop(chunk);
             let t0 = Instant::now();
             let out = engine
                 .matmul(&core_cfg.artifact, xs, ys)
@@ -224,31 +314,32 @@ impl StreamRunner {
             core_compute_wall
                 .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
+            // DMA descriptor flow: post scatter-gather spans for both
+            // directions, charge the link shares (doorbell-amortised
+            // overhead), retire the spans once the step is accounted.
+            let sg_in = in_ring.post(in_bytes).map_err(|e| e.to_string())?;
+            let sg_out =
+                out_ring.post(out_bytes).map_err(|e| e.to_string())?;
+            let d_in = in_ring.charge(in_bytes, core_cfg.contenders);
+            let d_out = out_ring.charge(out_bytes, core_cfg.contenders);
+
             // Virtual pipeline step: the slowest of {link in, link
             // out, compute} bounds the double-buffered flow.
-            let (d_in, d_out) = match core_cfg.contenders {
-                Some(n) => (
-                    link.inbound.share_duration_for(in_bytes, n),
-                    link.outbound.share_duration_for(out_bytes, n),
-                ),
-                None => (
-                    link.inbound.fair_share_duration(in_bytes),
-                    link.outbound.fair_share_duration(out_bytes),
-                ),
-            };
             let step =
                 VirtualTime(d_in.0.max(d_out.0).max(compute_per_chunk.0));
             in_stream.occupy(step);
-            link.inbound.note_bytes(in_bytes);
-            link.outbound.note_bytes(out_bytes);
+            in_ring.complete(sg_in);
+            out_ring.complete(sg_out);
 
-            if core_out
-                .push(f32_as_bytes(&out.data).to_vec())
-                .is_err()
-            {
+            let src = f32_as_bytes(&out.data);
+            let mut obuf = out_pool.acquire();
+            obuf.fill_from(src);
+            if core_out.push_chunk(Chunk::Pooled(obuf)).is_err() {
                 break;
             }
         }
+        in_ring.flush_doorbell();
+        out_ring.flush_doorbell();
         Ok(in_stream.elapsed_since(stream_start))
     }
 
@@ -259,39 +350,38 @@ impl StreamRunner {
         &self,
         cfg: &StreamConfig,
         barrier: Arc<Barrier>,
+        mut sink: Option<ChunkSink<'_>>,
     ) -> Result<StreamOutcome, String> {
         let wall_start = Instant::now();
         let in_fifo = AsyncFifo::rc2f_default(&format!("{}_in", cfg.artifact));
         let out_fifo =
             AsyncFifo::rc2f_default(&format!("{}_out", cfg.artifact));
+        if let Some(reg) = &self.metrics {
+            in_fifo.bind_metrics(reg);
+            out_fifo.bind_metrics(reg);
+        }
 
         // ---------------- producer: synthesize the matrix stream ----
         let prod_cfg = cfg.clone();
         let prod_fifo = Arc::clone(&in_fifo);
         let producer = std::thread::spawn(move || {
             let mut rng = Rng::new(prod_cfg.seed);
-            let elems =
-                prod_cfg.chunk_batch * prod_cfg.matrix_n * prod_cfg.matrix_n;
+            let n2 = prod_cfg.matrix_n * prod_cfg.matrix_n;
+            let elems = prod_cfg.chunk_batch * n2;
+            let pool = BufferPool::new(
+                &format!("{}_in", prod_cfg.artifact),
+                prod_cfg.chunk_in_bytes() as usize,
+                POOL_SLOTS,
+            );
             let mut remaining = prod_cfg.total_mults;
             let mut xs = vec![0.0f32; elems];
             let mut ys = vec![0.0f32; elems];
             while remaining > 0 {
                 let take =
                     remaining.min(prod_cfg.chunk_batch as u64) as usize;
-                rng.fill_f32(&mut xs, 1.0);
-                rng.fill_f32(&mut ys, 1.0);
-                // Short final chunk: zero-pad to the artifact batch
-                // (the engine contract is fixed-shape).
-                if take < prod_cfg.chunk_batch {
-                    let n2 = prod_cfg.matrix_n * prod_cfg.matrix_n;
-                    xs[take * n2..].fill(0.0);
-                    ys[take * n2..].fill(0.0);
-                }
-                let mut chunk =
-                    Vec::with_capacity(xs.len() * 8);
-                chunk.extend_from_slice(f32_as_bytes(&xs));
-                chunk.extend_from_slice(f32_as_bytes(&ys));
-                if prod_fifo.push(chunk).is_err() {
+                if !produce_one(
+                    &mut rng, &mut xs, &mut ys, n2, take, &pool, &prod_fifo,
+                ) {
                     return; // consumer gone
                 }
                 remaining -= take as u64;
@@ -335,8 +425,15 @@ impl StreamRunner {
         let mut validation_failures = 0u64;
         let mut first = cfg.validate_first_chunk;
         let mut val_rng = Rng::new(cfg.seed);
-        while let Some(chunk) = out_fifo.pop().map_err(|e| e.to_string())? {
+        while let Some(chunk) =
+            out_fifo.pop_chunk().map_err(|e| e.to_string())?
+        {
             output_bytes += chunk.len() as u64;
+            if let Some(cb) = sink.as_mut() {
+                if !cb(&chunk) {
+                    sink = None; // receiver gone; keep draining
+                }
+            }
             let vals = bytes_to_f32(&chunk).map_err(|e| e.to_string())?;
             checksum += vals.iter().map(|v| *v as f64).sum::<f64>();
             if first {
@@ -393,7 +490,18 @@ impl StreamRunner {
 
     /// Run a single stream.
     pub fn run(&self, cfg: &StreamConfig) -> Result<StreamOutcome, String> {
-        self.run_one(cfg, Arc::new(Barrier::new(1)))
+        self.run_one(cfg, Arc::new(Barrier::new(1)), None)
+    }
+
+    /// Run a single stream, delivering every output chunk to `sink`
+    /// in order (the middleware's out-of-band data path). The sink
+    /// runs on the calling thread.
+    pub fn run_with_sink(
+        &self,
+        cfg: &StreamConfig,
+        sink: ChunkSink<'_>,
+    ) -> Result<StreamOutcome, String> {
+        self.run_one(cfg, Arc::new(Barrier::new(1)), Some(sink))
     }
 
     /// Run several streams concurrently (the multi-core rows of
@@ -417,7 +525,7 @@ impl StreamRunner {
                 .iter()
                 .map(|cfg| {
                     let b = Arc::clone(&barrier);
-                    scope.spawn(move || self.run_one(cfg, b))
+                    scope.spawn(move || self.run_one(cfg, b, None))
                 })
                 .collect();
             handles
@@ -510,5 +618,67 @@ mod tests {
         assert!(out.wall_secs > 0.0);
         assert!(out.compute_wall_secs > 0.0);
         assert!(out.compute_wall_secs <= out.wall_secs);
+    }
+
+    #[test]
+    fn producer_steady_state_allocates_zero() {
+        use crate::util::memprobe;
+        let pool = BufferPool::new("alloc_probe", 2048, POOL_SLOTS);
+        let fifo = AsyncFifo::new("alloc_probe", 8192);
+        let mut rng = Rng::new(7);
+        let elems = 256; // two 1 KiB halves per chunk
+        let mut xs = vec![0.0f32; elems];
+        let mut ys = vec![0.0f32; elems];
+        // Warm-up: create the pool slot and grow the queue storage.
+        for _ in 0..8 {
+            assert!(produce_one(
+                &mut rng, &mut xs, &mut ys, elems, 1, &pool, &fifo
+            ));
+            fifo.pop_chunk().unwrap().unwrap();
+        }
+        let before = memprobe::thread_allocations();
+        for _ in 0..64 {
+            assert!(produce_one(
+                &mut rng, &mut xs, &mut ys, elems, 1, &pool, &fifo
+            ));
+            let chunk = fifo.pop_chunk().unwrap().unwrap();
+            assert_eq!(chunk.len(), 2048);
+        }
+        let allocs = memprobe::thread_allocations() - before;
+        assert_eq!(allocs, 0, "steady-state producer allocated {allocs}x");
+        assert_eq!(pool.created_total(), 1);
+    }
+
+    #[test]
+    fn sink_receives_all_output_chunks_in_order() {
+        let Some((r, _)) = runner() else { return };
+        let cfg = StreamConfig::matmul16(512);
+        let mut seen = 0u64;
+        let mut bytes = 0u64;
+        let out = r
+            .run_with_sink(&cfg, &mut |chunk: &[u8]| {
+                seen += 1;
+                bytes += chunk.len() as u64;
+                true
+            })
+            .unwrap();
+        assert_eq!(seen, cfg.chunks());
+        assert_eq!(bytes, out.output_bytes);
+        assert_eq!(out.validation_failures, 0);
+    }
+
+    #[test]
+    fn sink_detach_keeps_pipeline_draining() {
+        let Some((r, _)) = runner() else { return };
+        let cfg = StreamConfig::matmul16(1024); // 4 chunks
+        let mut seen = 0u64;
+        let out = r
+            .run_with_sink(&cfg, &mut |_: &[u8]| {
+                seen += 1;
+                seen < 2
+            })
+            .unwrap();
+        assert_eq!(seen, 2, "sink detached after refusing a chunk");
+        assert_eq!(out.output_bytes, cfg.chunk_out_bytes() * cfg.chunks());
     }
 }

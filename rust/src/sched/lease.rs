@@ -22,7 +22,7 @@ use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
 use crate::fpga::board::BoardKind;
 use crate::hypervisor::HypervisorError;
-use crate::rc2f::stream::{StreamConfig, StreamOutcome};
+use crate::rc2f::stream::{ChunkSink, StreamConfig, StreamOutcome};
 use crate::util::clock::VirtualTime;
 use crate::util::ids::{
     AllocationId, FpgaId, LeaseToken, NodeId, UserId, VfpgaId, VmId,
@@ -295,6 +295,28 @@ impl Lease {
         idx: usize,
         cfg: &StreamConfig,
     ) -> Result<StreamOutcome, HypervisorError> {
+        self.stream_member_body(idx, cfg, None)
+    }
+
+    /// [`Lease::stream_member`] with a chunk sink: each consumed
+    /// output chunk is lent to `sink` before its buffer is recycled,
+    /// so callers (the protocol-4 data plane) can forward payload
+    /// bytes without a server-side copy of the whole output.
+    pub fn stream_member_sink(
+        &self,
+        idx: usize,
+        cfg: &StreamConfig,
+        sink: ChunkSink<'_>,
+    ) -> Result<StreamOutcome, HypervisorError> {
+        self.stream_member_body(idx, cfg, Some(sink))
+    }
+
+    fn stream_member_body(
+        &self,
+        idx: usize,
+        cfg: &StreamConfig,
+        sink: Option<ChunkSink<'_>>,
+    ) -> Result<StreamOutcome, HypervisorError> {
         let alloc = *self.members.get(idx).ok_or_else(|| {
             HypervisorError::Db(format!("lease has no member {idx}"))
         })?;
@@ -312,9 +334,11 @@ impl Lease {
         let session = api
             .open_session(self.tenant, vfpga)
             .map_err(|e| HypervisorError::Db(e.to_string()))?;
-        let out = session
-            .stream(cfg)
-            .map_err(|e| HypervisorError::Db(e.to_string()));
+        let out = match sink {
+            Some(cb) => session.stream_with_sink(cfg, cb),
+            None => session.stream(cfg),
+        }
+        .map_err(|e| HypervisorError::Db(e.to_string()));
         if let Err(e) = &out {
             sp.fail(e);
         }

@@ -88,6 +88,102 @@ pub fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>, ReadError> {
         .collect())
 }
 
+/// Decode bytes into a caller-owned f32 buffer without allocating
+/// (beyond the buffer's first growth) — the data-plane core loop
+/// reuses one scratch vec across every chunk.
+pub fn bytes_to_f32_into(
+    bytes: &[u8],
+    out: &mut Vec<f32>,
+) -> Result<(), ReadError> {
+    if bytes.len() % 4 != 0 {
+        return Err(ReadError(format!(
+            "byte length {} not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    out.clear();
+    out.reserve(bytes.len() / 4);
+    out.extend(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+    );
+    Ok(())
+}
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with padding — the protocol-v3 fallback encoding
+/// for bulk stream payloads carried inside JSON frames.
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let triple = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64_ALPHABET[(triple >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(triple >> 12) as usize & 63] as char);
+        if chunk.len() > 1 {
+            out.push(B64_ALPHABET[(triple >> 6) as usize & 63] as char);
+        } else {
+            out.push('=');
+        }
+        if chunk.len() > 2 {
+            out.push(B64_ALPHABET[triple as usize & 63] as char);
+        } else {
+            out.push('=');
+        }
+    }
+    out
+}
+
+fn b64_value(c: u8) -> Result<u32, ReadError> {
+    match c {
+        b'A'..=b'Z' => Ok((c - b'A') as u32),
+        b'a'..=b'z' => Ok((c - b'a' + 26) as u32),
+        b'0'..=b'9' => Ok((c - b'0' + 52) as u32),
+        b'+' => Ok(62),
+        b'/' => Ok(63),
+        _ => Err(ReadError(format!("invalid base64 byte 0x{c:02x}"))),
+    }
+}
+
+/// Decode standard padded base64 (inverse of [`b64_encode`]).
+pub fn b64_decode(s: &str) -> Result<Vec<u8>, ReadError> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(ReadError(format!(
+            "base64 length {} not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    let n_quads = bytes.len() / 4;
+    let mut out = Vec::with_capacity(n_quads * 3);
+    for (qi, quad) in bytes.chunks_exact(4).enumerate() {
+        let pad = quad.iter().filter(|&&c| c == b'=').count();
+        let at_end = quad[4 - pad.min(4)..].iter().all(|&c| c == b'=');
+        let last = qi + 1 == n_quads;
+        if pad > 2 || !at_end || (pad > 0 && !last) {
+            return Err(ReadError("misplaced base64 padding".into()));
+        }
+        let mut triple = 0u32;
+        for (i, &c) in quad.iter().enumerate() {
+            let v = if c == b'=' { 0 } else { b64_value(c)? };
+            triple |= v << (18 - 6 * i as u32);
+        }
+        out.push((triple >> 16) as u8);
+        if pad < 2 {
+            out.push((triple >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(triple as u8);
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +222,43 @@ mod tests {
     #[test]
     fn bytes_to_f32_rejects_ragged() {
         assert!(bytes_to_f32(&[0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn bytes_to_f32_into_reuses_buffer() {
+        let data = vec![3.5f32, -0.25];
+        let mut out = Vec::new();
+        bytes_to_f32_into(f32_as_bytes(&data), &mut out).unwrap();
+        assert_eq!(out, data);
+        // Second decode reuses the same capacity.
+        let cap = out.capacity();
+        bytes_to_f32_into(f32_as_bytes(&data), &mut out).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(out.capacity(), cap);
+        assert!(bytes_to_f32_into(&[0, 0, 0], &mut out).is_err());
+    }
+
+    #[test]
+    fn base64_known_vectors() {
+        assert_eq!(b64_encode(b""), "");
+        assert_eq!(b64_encode(b"f"), "Zg==");
+        assert_eq!(b64_encode(b"fo"), "Zm8=");
+        assert_eq!(b64_encode(b"foo"), "Zm9v");
+        assert_eq!(b64_encode(b"foobar"), "Zm9vYmFy");
+        assert_eq!(b64_decode("Zm9vYmE=").unwrap(), b"fooba");
+    }
+
+    #[test]
+    fn base64_roundtrip_binary() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1023).collect();
+        assert_eq!(b64_decode(&b64_encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn base64_rejects_malformed() {
+        assert!(b64_decode("Zg=").is_err()); // ragged length
+        assert!(b64_decode("Z!==").is_err()); // bad alphabet
+        assert!(b64_decode("=Zg=").is_err()); // misplaced pad
+        assert!(b64_decode("Zg==Zg==").is_err()); // pad mid-stream
     }
 }

@@ -14,6 +14,7 @@ pub mod fsx;
 pub mod ids;
 pub mod json;
 pub mod logging;
+pub mod memprobe;
 pub mod rng;
 pub mod table;
 pub mod trace;

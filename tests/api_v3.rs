@@ -68,14 +68,14 @@ fn rsaas_cloud() -> (ManagementServer, Client, Arc<Hypervisor>) {
 // ====================================================== negotiation
 
 #[test]
-fn window_is_2_to_3_and_v1_is_rejected() {
+fn window_is_2_to_4_and_v1_is_rejected() {
     let mut c = cloud();
     assert_eq!(PROTO_MIN, 2);
-    assert_eq!(PROTO_MAX, 3);
+    assert_eq!(PROTO_MAX, 4);
     let hello = c.client.hello().unwrap();
     assert_eq!(hello.proto_min, 2);
-    assert_eq!(hello.proto_max, 3);
-    assert_eq!(hello.proto, 3);
+    assert_eq!(hello.proto_max, 4);
+    assert_eq!(hello.proto, 4);
     // A v1-window hello does not overlap.
     let err = c
         .client

@@ -1,0 +1,222 @@
+//! Integration tests for the protocol-4 data plane: out-of-band
+//! binary wire frames (`[len|BIN][flags][seq][payload]`) and the
+//! `stream.emit_output` path that carries RC2F stream output over
+//! them — with the protocol-3 base64 JSON fallback producing
+//! byte-identical payloads.
+
+use std::sync::Arc;
+
+use rc3e::hypervisor::Hypervisor;
+use rc3e::middleware::proto::{
+    read_frame, read_wire_frame, write_bin_chunk, write_bin_frame,
+    write_frame, BinFrame, WireFrame, BIN_FLAG_END, MAX_FRAME,
+};
+use rc3e::middleware::{Client, ManagementServer, StreamFrame};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::json::Json;
+
+/// Deterministic payload pattern (cheap, position-dependent).
+fn pattern(size: usize) -> Vec<u8> {
+    (0..size)
+        .map(|i| (i as u8).wrapping_mul(31).wrapping_add(7))
+        .collect()
+}
+
+// ================================================== binary framing
+
+#[test]
+fn bin_frame_roundtrip_across_sizes_including_empty_and_max() {
+    // Sizes straddle the header length, typical chunk sizes and both
+    // limits of the accepted payload range.
+    for size in
+        [0usize, 1, 8, 9, 255, 4096, 65536, MAX_FRAME as usize]
+    {
+        let payload = pattern(size);
+        let mut buf = Vec::new();
+        write_bin_frame(&mut buf, &BinFrame::data(7, payload.clone()))
+            .unwrap();
+        let mut r: &[u8] = &buf;
+        match read_wire_frame(&mut r).unwrap().unwrap() {
+            WireFrame::Bin(b) => {
+                assert_eq!(b.flags, 0, "size {size}");
+                assert_eq!(b.seq, 7, "size {size}");
+                assert!(!b.is_end());
+                assert_eq!(b.payload, payload, "size {size}");
+            }
+            WireFrame::Json(v) => panic!("json frame back: {v}"),
+        }
+        // Clean EOF after the single frame.
+        assert!(read_wire_frame(&mut r).unwrap().is_none());
+    }
+}
+
+#[test]
+fn end_marker_roundtrips_with_flag_and_no_payload() {
+    let mut buf = Vec::new();
+    write_bin_frame(&mut buf, &BinFrame::end_marker(42)).unwrap();
+    let mut r: &[u8] = &buf;
+    match read_wire_frame(&mut r).unwrap().unwrap() {
+        WireFrame::Bin(b) => {
+            assert_eq!(b.flags, BIN_FLAG_END);
+            assert!(b.is_end());
+            assert_eq!(b.seq, 42);
+            assert!(b.payload.is_empty());
+        }
+        WireFrame::Json(v) => panic!("json frame back: {v}"),
+    }
+}
+
+#[test]
+fn binary_and_json_frames_interleave_on_one_connection() {
+    // A v4 multi-frame response mixes both framings on one byte
+    // stream; the reader must hand each back in order.
+    let mut buf = Vec::new();
+    let header = Json::obj(vec![("stream", Json::from(true))]);
+    write_frame(&mut buf, &header).unwrap();
+    write_bin_frame(&mut buf, &BinFrame::data(1, pattern(1000)))
+        .unwrap();
+    write_bin_frame(&mut buf, &BinFrame::end_marker(2)).unwrap();
+    let terminal = StreamFrame::terminal(3, None);
+    write_frame(&mut buf, &terminal.to_json()).unwrap();
+
+    let mut r: &[u8] = &buf;
+    assert!(matches!(
+        read_wire_frame(&mut r).unwrap().unwrap(),
+        WireFrame::Json(_)
+    ));
+    match read_wire_frame(&mut r).unwrap().unwrap() {
+        WireFrame::Bin(b) => {
+            assert_eq!(b.seq, 1);
+            assert_eq!(b.payload, pattern(1000));
+        }
+        WireFrame::Json(v) => panic!("json frame back: {v}"),
+    }
+    match read_wire_frame(&mut r).unwrap().unwrap() {
+        WireFrame::Bin(b) => assert!(b.is_end()),
+        WireFrame::Json(v) => panic!("json frame back: {v}"),
+    }
+    match read_wire_frame(&mut r).unwrap().unwrap() {
+        WireFrame::Json(v) => {
+            let f = StreamFrame::from_json(&v).unwrap();
+            assert!(f.end);
+            assert_eq!(f.seq, 3);
+        }
+        WireFrame::Bin(_) => panic!("binary frame back"),
+    }
+    assert!(read_wire_frame(&mut r).unwrap().is_none());
+}
+
+#[test]
+fn malformed_binary_frames_are_rejected() {
+    const BIN: u32 = 0x8000_0000;
+    // Declared length shorter than the flags+seq header.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&(4u32 | BIN).to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]);
+    let mut r: &[u8] = &buf;
+    assert!(read_wire_frame(&mut r).is_err());
+
+    // Declared payload above the limit: rejected from the length
+    // word alone, before any payload allocation.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&((9 + MAX_FRAME + 1) | BIN).to_le_bytes());
+    let mut r: &[u8] = &buf;
+    assert!(read_wire_frame(&mut r).is_err());
+
+    // Truncated mid-payload: hard error, not a clean EOF.
+    let mut buf = Vec::new();
+    write_bin_frame(&mut buf, &BinFrame::data(1, pattern(64)))
+        .unwrap();
+    buf.truncate(buf.len() - 10);
+    let mut r: &[u8] = &buf;
+    assert!(read_wire_frame(&mut r).is_err());
+
+    // The writer refuses oversized payloads symmetrically.
+    let huge = vec![0u8; MAX_FRAME as usize + 1];
+    let mut sink = Vec::new();
+    assert!(write_bin_chunk(&mut sink, 0, 1, &huge).is_err());
+}
+
+#[test]
+fn pre_v4_reader_rejects_binary_frames() {
+    // `read_frame` is the pre-v4 entry point: a binary frame there
+    // means the peer skipped negotiation — protocol error.
+    let mut buf = Vec::new();
+    write_bin_frame(&mut buf, &BinFrame::data(1, vec![1, 2, 3]))
+        .unwrap();
+    let mut r: &[u8] = &buf;
+    assert!(read_frame(&mut r).is_err());
+}
+
+// ============================================ end-to-end data plane
+
+#[test]
+fn v3_fallback_delivers_byte_identical_output() {
+    let dir = rc3e::runtime::artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping data-plane test: run `make artifacts`");
+        return;
+    }
+    let clock = VirtualClock::new();
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+
+    // A protocol-4 client receives the payload as binary frames.
+    let mut c4 = Client::connect(server.addr()).unwrap();
+    assert_eq!(c4.proto(), 4);
+    let user = c4.add_user("dp").unwrap().user;
+    let lease = c4.alloc_vfpga(user, None, None).unwrap();
+    c4.program_core(user, lease.alloc, "matmul16").unwrap();
+    let mut out4 = Vec::new();
+    let body4 = c4
+        .stream_data(user, lease.alloc, "matmul16", 512, &mut out4)
+        .unwrap();
+    assert_eq!(out4.len() as u64, body4.output_bytes);
+    // 512 mults of 16x16 f32 results.
+    assert_eq!(out4.len(), 512 * 16 * 16 * 4);
+    assert_eq!(body4.validation_failures, 0);
+
+    // A protocol-3 client on the same lease gets the same bytes via
+    // base64 `stream_data` events inside JSON frames.
+    let token = c4.lease_token(lease.alloc).unwrap();
+    let mut c3 = Client::connect(server.addr()).unwrap();
+    c3.set_proto(3);
+    assert_eq!(c3.proto(), 3);
+    c3.set_lease_token(lease.alloc, token);
+    let mut out3 = Vec::new();
+    let body3 = c3
+        .stream_data(user, lease.alloc, "matmul16", 512, &mut out3)
+        .unwrap();
+    assert_eq!(out3, out4, "fallback payload differs from binary");
+    assert_eq!(body3.checksum, body4.checksum);
+    assert_eq!(body3.output_bytes, body4.output_bytes);
+
+    // The connections return to request/response mode afterwards.
+    assert!(c4.hello().is_ok());
+    assert!(c3.hello().is_ok());
+    c4.release(lease.alloc).unwrap();
+}
+
+#[test]
+fn stream_data_failure_arrives_as_a_single_json_error() {
+    // Unknown core: the server answers with one non-streaming error
+    // frame before any header — no artifacts needed.
+    let clock = VirtualClock::new();
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(Arc::clone(&clock)).unwrap(),
+    );
+    let server = ManagementServer::spawn(Arc::clone(&hv), 69.0).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let user = c.add_user("dp-err").unwrap().user;
+    let lease = c.alloc_vfpga(user, None, None).unwrap();
+    let mut out = Vec::new();
+    let err = c
+        .stream_data(user, lease.alloc, "no_such_core", 64, &mut out)
+        .unwrap_err();
+    assert!(out.is_empty());
+    // The connection survives the refusal.
+    assert!(c.hello().is_ok(), "connection broken after {err}");
+    c.release(lease.alloc).unwrap();
+}

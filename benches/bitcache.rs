@@ -1,0 +1,183 @@
+//! Bitstream-cache bench: what does each program-latency tier cost,
+//! and what does a bounded cache buy under a skewed request mix?
+//!
+//! Tiers (virtual ms, deterministic — the paper's timing model, not
+//! host wall time):
+//!
+//! * **cold** — no cached artifact: one AOT flow run (23 virtual
+//!   minutes of synthesis + P&R) plus partial reconfiguration;
+//! * **warm** — artifact in the cluster cache: PR only;
+//! * **resident** — the region already holds the design: the
+//!   hypervisor skips reconfiguration entirely.
+//!
+//! A zipfian request mix over a core universe twice the cache
+//! capacity then measures the steady-state hit rate LRU sustains.
+//!
+//! With `BENCH_BASELINE_OUT=BENCH_baseline.json` the series are
+//! written to the shared baseline file; `BENCH_QUICK=1` trims the
+//! zipf draw count (CI bench-smoke).
+
+use std::sync::Arc;
+
+use rc3e::bitcache::{BitstreamCache, CacheKey};
+use rc3e::bitstream::{Bitstream, BitstreamBuilder};
+use rc3e::fpga::resources::Resources;
+use rc3e::hls::flow::region_window;
+use rc3e::hypervisor::Hypervisor;
+use rc3e::metrics::Registry;
+use rc3e::middleware::api::CompileSubmitRequest;
+use rc3e::middleware::{Client, ManagementServer};
+use rc3e::testing::baseline::{self, BaselineReport};
+use rc3e::util::clock::VirtualClock;
+use rc3e::util::rng::Rng;
+use rc3e::util::table::Table;
+
+/// Zipf draws for the hit-rate measurement.
+fn zipf_draws() -> usize {
+    if std::env::var("BENCH_QUICK").as_deref() == Ok("1") {
+        200
+    } else {
+        2000
+    }
+}
+
+/// Measure the three program tiers over the wire (virtual ms).
+fn tier_latencies() -> (f64, f64, f64) {
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+    );
+    let server = ManagementServer::spawn(hv, 69.0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let user = client.add_user("bench").unwrap().user;
+
+    // Cold: the AOT flow builds the artifact, then first use pays PR.
+    let sub = client
+        .compile_submit(&CompileSubmitRequest {
+            user,
+            core: "matmul16".to_string(),
+            part: None,
+        })
+        .unwrap();
+    let result = client.job_wait_done(sub.job.unwrap()).unwrap();
+    let build_ms = result.get("build_ms").as_f64().unwrap();
+    let a = client.alloc_vfpga(user, None, None).unwrap();
+    let first = client.program_core(user, a.alloc, "matmul16").unwrap();
+    let cold_ms = build_ms + first.pr_ms;
+
+    // Warm: a second region, same artifact — PR only.
+    let b = client.alloc_vfpga(user, None, None).unwrap();
+    let warm = client.program_core(user, b.alloc, "matmul16").unwrap();
+
+    // Resident: the region already holds the design.
+    let resident =
+        client.program_core(user, b.alloc, "matmul16").unwrap();
+    (cold_ms, warm.pr_ms, resident.pr_ms)
+}
+
+fn synthetic_bs(core: &str) -> Bitstream {
+    BitstreamBuilder::partial("xc7vx485t", core)
+        .resources(Resources::new(100, 100, 1, 1))
+        .frames(region_window(0, 1))
+        .payload_seed(core.len() as u64)
+        .build()
+}
+
+/// Steady-state hit rate of a capacity-`cap` LRU cache under a
+/// zipfian mix over `universe` distinct cores.
+fn zipf_hit_rate(cap: usize, universe: usize, draws: usize) -> f64 {
+    let cache =
+        BitstreamCache::open(cap, None, Arc::new(Registry::new()));
+    // Zipf weights 1/rank, drawn via the cumulative mass.
+    let weights: Vec<f64> =
+        (1..=universe).map(|k| 1.0 / k as f64).collect();
+    let mass: f64 = weights.iter().sum();
+    let mut rng = Rng::new(0x21BF);
+    let mut hits = 0usize;
+    for _ in 0..draws {
+        let mut x = rng.next_f64() * mass;
+        let mut pick = universe - 1;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                pick = i;
+                break;
+            }
+            x -= *w;
+        }
+        let core = format!("core{pick:02}");
+        let key = CacheKey::new(&core, "xc7vx485t");
+        if cache.lookup(&key.digest()).is_some() {
+            hits += 1;
+        } else {
+            cache
+                .admit(&key, synthetic_bs(&core), region_window(0, 1))
+                .unwrap();
+        }
+    }
+    hits as f64 / draws as f64
+}
+
+fn main() {
+    rc3e::util::logging::init();
+    println!(
+        "bitcache: program-latency tiers (virtual ms, deterministic) \
+         and zipfian LRU hit rate\n"
+    );
+    let out = baseline::out_path();
+    let mut report = match &out {
+        Some(p) => BaselineReport::load_or_new(p),
+        None => BaselineReport::new(),
+    };
+
+    let (cold_ms, warm_ms, resident_ms) = tier_latencies();
+    // The resident tier is virtually free; clamp for a finite ratio.
+    let warm_speedup = cold_ms / warm_ms;
+    let resident_speedup = cold_ms / resident_ms.max(1.0);
+    let mut t = Table::new(
+        "program tiers (virtual ms)",
+        &["tier", "ms", "speedup vs cold"],
+    );
+    t.row(&[
+        "cold (flow + PR)".to_string(),
+        format!("{cold_ms:.1}"),
+        "1.0x".to_string(),
+    ]);
+    t.row(&[
+        "warm (PR only)".to_string(),
+        format!("{warm_ms:.1}"),
+        format!("{warm_speedup:.0}x"),
+    ]);
+    t.row(&[
+        "resident (skip)".to_string(),
+        format!("{resident_ms:.1}"),
+        format!("{resident_speedup:.0}x"),
+    ]);
+    print!("{}", t.render());
+
+    let draws = zipf_draws();
+    let hit_rate = zipf_hit_rate(8, 16, draws);
+    println!(
+        "\n    -> zipfian mix, 16 cores through a capacity-8 LRU \
+         cache: {:.1}% hits over {draws} draws",
+        hit_rate * 100.0
+    );
+
+    report.record_scalar("bitcache.cold_program_virtual_ms", cold_ms);
+    report.record_scalar("bitcache.warm_program_virtual_ms", warm_ms);
+    report.record_scalar(
+        "bitcache.resident_program_virtual_ms",
+        resident_ms,
+    );
+    report.record_scalar("bitcache.warm_speedup", warm_speedup);
+    report.record_scalar("bitcache.resident_speedup", resident_speedup);
+    report.record_scalar("bitcache.zipf_hit_rate", hit_rate);
+    if let Some(p) = &out {
+        report.save(p).unwrap();
+        println!("baseline series written to {}\n", p.display());
+    }
+    println!(
+        "reading: warm skips the 23-virtual-minute AOT flow and \
+         resident additionally skips reconfiguration, so the tiers \
+         should separate by orders of magnitude; the zipf hit rate \
+         is what a half-sized cache holds onto under skew."
+    );
+}

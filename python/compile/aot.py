@@ -24,6 +24,24 @@ from jax._src.lib import xla_client as xc
 
 from compile import model
 
+# Version of the RC2F static shell partial bitstreams are
+# floorplanned against. Must match rust/src/bitcache/mod.rs
+# SHELL_VERSION: the Rust cluster cache addresses artifacts by
+# sha256("core|part|shell") and a mismatch here would orphan every
+# AOT artifact this exporter stamps.
+SHELL_VERSION = "rc2f-2.1"
+
+# Default FPGA part the exported variants target (the VC707's).
+DEFAULT_PART = "xc7vx485t"
+
+
+def cache_key(core: str, part: str = DEFAULT_PART) -> str:
+    """Content address of one compiled artifact, mirroring the Rust
+    side's ``CacheKey::digest``: sha256 over the canonical
+    ``core|part|shell`` triple."""
+    triple = f"{core}|{part}|{SHELL_VERSION}"
+    return hashlib.sha256(triple.encode()).hexdigest()
+
 
 def to_hlo_text(lowered) -> str:
     """StableHLO -> XlaComputation -> HLO text.
@@ -62,6 +80,9 @@ def export_variant(name: str, outdir: str) -> dict:
         "outputs": args_info["outputs"],
         "sha256": hashlib.sha256(text.encode()).hexdigest(),
         "hlo_bytes": len(text),
+        "part": DEFAULT_PART,
+        "shell": SHELL_VERSION,
+        "cache_key": cache_key(name),
     }
     with open(os.path.join(outdir, f"{name}.meta.json"), "w") as f:
         json.dump(meta, f, indent=2)

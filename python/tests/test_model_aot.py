@@ -41,6 +41,21 @@ def test_variant_meta_contract(name):
         ]
     for io in meta["inputs"] + meta["outputs"]:
         assert io["dtype"] == "float32"
+    # Cluster bitstream-cache address: stable, sha256-shaped, and
+    # derived from the (core, part, shell) triple the Rust side uses.
+    assert meta["shell"] == aot.SHELL_VERSION
+    assert meta["part"] == aot.DEFAULT_PART
+    assert len(meta["cache_key"]) == 64
+    assert meta["cache_key"] == aot.cache_key(name)
+
+
+def test_cache_key_discriminates():
+    """Mirrors rust/src/bitcache CacheKey::digest: any element of the
+    (core, part, shell) triple changing must move the address."""
+    a = aot.cache_key("matmul16_b64")
+    assert a == aot.cache_key("matmul16_b64")
+    assert a != aot.cache_key("matmul32_b64")
+    assert a != aot.cache_key("matmul16_b64", part="xc6vlx240t")
 
 
 def test_matmul_model_matches_kernel():

@@ -1,0 +1,404 @@
+//! Ahead-of-time compile service fronting the HLS design flow.
+//!
+//! `compile_submit` turns "I will need core X on part Y" into a cache
+//! artifact *before* any lease programs it, so the program path later
+//! pays PR only (warm tier). The service rides the async-job
+//! machinery ([`crate::middleware::jobs::JobRegistry`]): a submit
+//! answers immediately with a job id, and the 23 virtual minutes of
+//! synthesis + P&R happen on a worker thread.
+//!
+//! **Coalescing:** concurrent submits for one digest share a single
+//! flow run — the second tenant gets the first tenant's job id back
+//! (`bitcache.coalesced`) instead of a duplicate compile. The
+//! in-flight table is keyed by the same content digest the cache is,
+//! so coalescing falls out of content addressing.
+//!
+//! **Clocking:** the service owns a private [`VirtualClock`]. The
+//! paper runs synthesis on dedicated build servers, not on the
+//! management node — a background compile must not advance the
+//! RPC-visible clock and distort the Table I latency model.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::store::BitstreamCache;
+use super::CacheKey;
+use crate::fpga::board::BoardSpec;
+use crate::fpga::region::{equal_split, RegionShape};
+use crate::fpga::resources::Resources;
+use crate::hls::flow::{region_window, DesignFlow};
+use crate::hls::synth::{CoreKind, CoreSpec, Synthesizer};
+use crate::metrics::Registry;
+use crate::middleware::api::{ApiError, ErrorCode};
+use crate::middleware::jobs::{JobRegistry, ProgressReporter};
+use crate::rc2f::Rc2fDesign;
+use crate::util::clock::VirtualClock;
+use crate::util::ids::{JobId, LeaseToken};
+use crate::util::json::Json;
+
+/// What a `compile_submit` / `compile_status` caller gets back.
+#[derive(Debug, Clone)]
+pub struct CompileTicket {
+    /// Content digest of the requested `(core, part, shell)` triple.
+    pub digest: String,
+    /// `cached` | `submitted` | `coalesced` | `running` | `unknown`.
+    pub state: &'static str,
+    /// The flow job to `job_wait` on, when one is running.
+    pub job: Option<JobId>,
+    /// Owner token of that job (subscribes to its progress events).
+    pub token: Option<LeaseToken>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Inflight {
+    job: JobId,
+    token: LeaseToken,
+}
+
+/// The AOT compile service.
+#[derive(Debug)]
+pub struct CompileService {
+    jobs: Arc<JobRegistry>,
+    cache: Arc<BitstreamCache>,
+    /// Private build-server clock (see module docs).
+    clock: Arc<VirtualClock>,
+    metrics: Arc<Registry>,
+    /// Digest → running flow job, for coalescing. Shared with the
+    /// worker closures, which clear their entry on completion.
+    inflight: Arc<Mutex<BTreeMap<String, Inflight>>>,
+}
+
+/// The AOT core library: request name → (HLS kind, artifact batch).
+/// Mirrors the server's prebuilt core library so `compile_submit`
+/// accepts exactly the names `run` does.
+fn core_entry(core: &str) -> Option<(CoreKind, usize)> {
+    Some(match core {
+        "matmul16" => (CoreKind::MatMul { n: 16 }, 256),
+        "matmul16_small" => (CoreKind::MatMul { n: 16 }, 64),
+        "matmul32" => (CoreKind::MatMul { n: 32 }, 64),
+        "loopback" => (CoreKind::Loopback, 256),
+        "saxpy" => (CoreKind::Saxpy, 256),
+        "checksum" => (CoreKind::Checksum, 256),
+        _ => return None,
+    })
+}
+
+/// Resolve a part marking to its board (the flow needs bitstream
+/// sizing and the PR budget).
+fn board_of_part(part: &str) -> Option<BoardSpec> {
+    let vc707 = BoardSpec::vc707();
+    let ml605 = BoardSpec::ml605();
+    if part == vc707.part {
+        Some(vc707)
+    } else if part == ml605.part {
+        Some(ml605)
+    } else {
+        None
+    }
+}
+
+/// PR budget of a region spanning `quarters` slots, mirroring the
+/// device floorplan: board minus the 4-vFPGA RC2F shell, 20% routing
+/// margin, split four ways.
+fn region_budget(board: &BoardSpec, quarters: u64) -> Resources {
+    let free = board
+        .resources
+        .minus(Rc2fDesign::new(4).total_resources());
+    let budget = Resources::new(
+        free.lut * 8 / 10,
+        free.ff * 8 / 10,
+        free.bram * 8 / 10,
+        free.dsp * 8 / 10,
+    );
+    equal_split(budget, 4).times(quarters)
+}
+
+impl CompileService {
+    pub fn new(
+        jobs: Arc<JobRegistry>,
+        cache: Arc<BitstreamCache>,
+        metrics: Arc<Registry>,
+    ) -> CompileService {
+        CompileService {
+            jobs,
+            cache,
+            clock: VirtualClock::new(),
+            metrics,
+            inflight: Arc::new(Mutex::new(BTreeMap::new())),
+        }
+    }
+
+    /// The store this service admits into.
+    pub fn cache(&self) -> &Arc<BitstreamCache> {
+        &self.cache
+    }
+
+    /// Request an artifact for `core` on `part`. Returns immediately:
+    /// `cached` (nothing to do), `coalesced` (another tenant's flow
+    /// run is already building this digest — share its job), or
+    /// `submitted` (a fresh flow job was started). Unknown cores and
+    /// parts fail synchronously.
+    pub fn submit(
+        &self,
+        core: &str,
+        part: &str,
+    ) -> Result<CompileTicket, ApiError> {
+        let key = CacheKey::new(core, part);
+        let digest = key.digest();
+        if self.cache.contains(&digest) {
+            return Ok(CompileTicket {
+                digest,
+                state: "cached",
+                job: None,
+                token: None,
+            });
+        }
+        let (kind, batch) = core_entry(core).ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "unknown core '{core}' — not in the AOT library"
+            ))
+        })?;
+        if board_of_part(part).is_none() {
+            return Err(ApiError::bad_request(format!(
+                "unknown part '{part}'"
+            )));
+        }
+        // The inflight lock spans job submission *and* table insert;
+        // the worker closure takes the same lock to clear its entry,
+        // so it cannot race past us before the entry exists.
+        let mut inflight = self.inflight.lock().unwrap();
+        // Re-check the cache under the lock: the worker admits its
+        // artifact *before* clearing its inflight entry, so a digest
+        // absent from the table but present in the cache means the
+        // run finished between our first check and here — without
+        // this, that window would start a duplicate flow run.
+        if self.cache.contains(&digest) {
+            return Ok(CompileTicket {
+                digest,
+                state: "cached",
+                job: None,
+                token: None,
+            });
+        }
+        if let Some(f) = inflight.get(&digest) {
+            self.metrics.counter("bitcache.coalesced").inc();
+            return Ok(CompileTicket {
+                digest,
+                state: "coalesced",
+                job: Some(f.job),
+                token: Some(f.token),
+            });
+        }
+        let token = LeaseToken::mint();
+        let cache = Arc::clone(&self.cache);
+        let clock = Arc::clone(&self.clock);
+        let metrics = Arc::clone(&self.metrics);
+        let table = Arc::clone(&self.inflight);
+        let worker_key = key.clone();
+        let worker_digest = digest.clone();
+        let job = Arc::clone(&self.jobs).submit(
+            "compile_submit",
+            self.clock.now().0,
+            Some(token),
+            move |progress| {
+                let result = run_flow(
+                    &cache,
+                    &clock,
+                    &metrics,
+                    progress,
+                    &worker_key,
+                    kind,
+                    batch,
+                );
+                table.lock().unwrap().remove(&worker_digest);
+                result
+            },
+        );
+        inflight.insert(digest.clone(), Inflight { job, token });
+        Ok(CompileTicket {
+            digest,
+            state: "submitted",
+            job: Some(job),
+            token: Some(token),
+        })
+    }
+
+    /// Poll a digest: `cached`, `running` (with the job to wait on),
+    /// or `unknown`.
+    pub fn status(&self, digest: &str) -> CompileTicket {
+        if self.cache.contains(digest) {
+            return CompileTicket {
+                digest: digest.to_string(),
+                state: "cached",
+                job: None,
+                token: None,
+            };
+        }
+        if let Some(f) = self.inflight.lock().unwrap().get(digest) {
+            return CompileTicket {
+                digest: digest.to_string(),
+                state: "running",
+                job: Some(f.job),
+                token: Some(f.token),
+            };
+        }
+        CompileTicket {
+            digest: digest.to_string(),
+            state: "unknown",
+            job: None,
+            token: None,
+        }
+    }
+}
+
+/// One flow run on the worker thread: synthesize, pick the smallest
+/// region shape the core fits, place & route, admit into the cache.
+fn run_flow(
+    cache: &BitstreamCache,
+    clock: &Arc<VirtualClock>,
+    metrics: &Registry,
+    progress: &ProgressReporter,
+    key: &CacheKey,
+    kind: CoreKind,
+    batch: usize,
+) -> Result<Json, ApiError> {
+    let board = board_of_part(&key.part).ok_or_else(|| {
+        ApiError::internal(format!("part '{}' vanished", key.part))
+    })?;
+    let spec = CoreSpec::named(kind, &key.part);
+    progress.report("synthesis", 0, 10.0);
+    let total = Synthesizer::new().synthesize(&spec).total_for(1);
+    let quarter = region_budget(&board, 1);
+    let (shape, quarters) = if total.fits_in(quarter) {
+        (RegionShape::Quarter, 1u64)
+    } else {
+        (RegionShape::Half, 2u64)
+    };
+    let flow = DesignFlow::new(Arc::clone(clock));
+    let out = flow
+        .run(
+            &spec,
+            shape,
+            0,
+            batch,
+            region_budget(&board, quarters),
+        )
+        .map_err(|e| {
+            ApiError::bad_request(format!("design flow failed: {e}"))
+        })?;
+    progress.report("place_route", 0, 80.0);
+    let digest = cache
+        .admit(
+            key,
+            out.bitstream.clone(),
+            region_window(0, quarters as usize),
+        )
+        .map_err(|e| {
+            ApiError::new(ErrorCode::CacheRejected, e.to_string())
+        })?;
+    metrics.counter("bitcache.compile_runs").inc();
+    Ok(Json::obj(vec![
+        ("digest", Json::from(digest.as_str())),
+        ("core", Json::from(key.core.as_str())),
+        ("part", Json::from(key.part.as_str())),
+        ("quarters", Json::from(quarters)),
+        ("build_ms", Json::from(out.build_time.as_millis_f64())),
+        ("bytes", Json::from(out.bitstream.payload.len())),
+        ("sha256", Json::from(out.bitstream.sha256.as_str())),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::middleware::jobs::JobState;
+    use std::time::Duration;
+
+    fn service() -> (CompileService, Arc<JobRegistry>) {
+        let metrics = Arc::new(Registry::new());
+        let cache = Arc::new(BitstreamCache::open(
+            8,
+            None,
+            Arc::clone(&metrics),
+        ));
+        let jobs = JobRegistry::new();
+        (
+            CompileService::new(Arc::clone(&jobs), cache, metrics),
+            jobs,
+        )
+    }
+
+    fn wait_done(
+        jobs: &Arc<JobRegistry>,
+        ticket: &CompileTicket,
+    ) -> Json {
+        let rec = jobs
+            .wait(ticket.job.unwrap(), Duration::from_secs(30))
+            .unwrap();
+        match rec.state {
+            JobState::Done(v) => v,
+            s => panic!("compile job ended {s:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_core_and_part_fail_synchronously() {
+        let (svc, _) = service();
+        assert!(svc.submit("warpdrive", "xc7vx485t").is_err());
+        assert!(svc.submit("matmul16", "xcvu9p").is_err());
+        assert_eq!(svc.jobs.running(), 0);
+    }
+
+    #[test]
+    fn cold_submit_runs_the_flow_then_reads_cached() {
+        let (svc, jobs) = service();
+        let t = svc.submit("matmul16", "xc7vx485t").unwrap();
+        assert_eq!(t.state, "submitted");
+        let body = wait_done(&jobs, &t);
+        assert_eq!(body.get("digest").as_str().unwrap(), t.digest);
+        assert!(body.get("build_ms").as_f64().unwrap() > 1000.0);
+        assert!(svc.cache.contains(&t.digest));
+        // Same request again: no second flow run.
+        let again = svc.submit("matmul16", "xc7vx485t").unwrap();
+        assert_eq!(again.state, "cached");
+        assert_eq!(again.digest, t.digest);
+        assert_eq!(
+            svc.metrics.counter("bitcache.compile_runs").get(),
+            1
+        );
+        assert_eq!(svc.status(&t.digest).state, "cached");
+        assert_eq!(svc.status("no-such-digest").state, "unknown");
+    }
+
+    #[test]
+    fn oversized_core_is_floorplanned_into_a_half_region() {
+        let (svc, jobs) = service();
+        // matmul32 (64,711 LUT) exceeds the ~59k quarter budget.
+        let t = svc.submit("matmul32", "xc7vx485t").unwrap();
+        let body = wait_done(&jobs, &t);
+        assert_eq!(body.get("quarters").as_u64(), Some(2));
+        let bs = svc.cache.lookup(&t.digest).unwrap();
+        assert_eq!(bs.meta.resources.lut, 64_711);
+        assert!(region_window(0, 2).contains(bs.meta.frames));
+    }
+
+    #[test]
+    fn build_time_lands_on_the_private_clock_only() {
+        let (svc, jobs) = service();
+        let t = svc.submit("saxpy", "xc7vx485t").unwrap();
+        wait_done(&jobs, &t);
+        // 23 virtual minutes charged to the build-server clock.
+        assert!(svc.clock.now().as_secs_f64() >= 23.0 * 60.0);
+    }
+
+    #[test]
+    fn distinct_batches_get_distinct_digests() {
+        let (svc, jobs) = service();
+        let a = svc.submit("matmul16", "xc7vx485t").unwrap();
+        wait_done(&jobs, &a);
+        let b = svc.submit("matmul16_small", "xc7vx485t").unwrap();
+        wait_done(&jobs, &b);
+        assert_ne!(a.digest, b.digest);
+        assert_eq!(svc.cache.len(), 2);
+    }
+}

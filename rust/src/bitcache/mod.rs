@@ -1,0 +1,98 @@
+//! Cluster-wide bitstream cache + AOT compile service.
+//!
+//! Every `program` path used to pay the full HLS flow (23 virtual
+//! minutes of synthesis + P&R) plus partial reconfiguration, even
+//! when the identical design had just been built for another tenant
+//! or was still resident in the target region. This subsystem turns
+//! that cost into three latency tiers (see `docs/BITCACHE.md`):
+//!
+//! * **cold** — nothing cached: the AOT compile service runs the
+//!   [`crate::hls::flow::DesignFlow`] once, admits the artifact into
+//!   the store, then PR programs it (flow + ~843 ms).
+//! * **warm** — the artifact is in the [`store::BitstreamCache`]:
+//!   programming skips the flow entirely and pays only PR (~843 ms).
+//! * **resident** — the target region still holds exactly this
+//!   design (same content sha tracked on
+//!   [`crate::fpga::region::RegionDesign`]): the hypervisor skips
+//!   reconfiguration too (`bitcache.resident_skip`) and the program
+//!   call is virtually free.
+//!
+//! Artifacts are **content-addressed** by [`CacheKey`] — the
+//! `(model, part, shell version)` triple hashed to one digest — so N
+//! tenants asking for the same core on the same board share one
+//! artifact and one compile ([`compile::CompileService`] coalesces
+//! concurrent `compile_submit`s per digest). The store is bounded
+//! (LRU eviction), verifies CRC and frame-window containment at
+//! admission, and persists under `--state DIR` so a restarted
+//! management server comes back warm. Queued admissions prefetch
+//! through [`prefetch::Prefetcher`]; federated node daemons fetch
+//! missing artifacts from the management cache over
+//! `agent.fetch_bitstream` (protocol-4 binary frames).
+
+pub mod compile;
+pub mod prefetch;
+pub mod store;
+
+pub use compile::{CompileService, CompileTicket};
+pub use prefetch::Prefetcher;
+pub use store::{BitstreamCache, CacheError};
+
+/// Version of the RC2F static shell the cached partial bitstreams
+/// are floorplanned against. Part of every cache key: a shell
+/// revision that moves region boundaries invalidates the whole cache
+/// by construction, never by flag day.
+pub const SHELL_VERSION: &str = "rc2f-2.1";
+
+/// Content-address key of one compiled artifact: the accelerator
+/// model (core name), the FPGA part it targets and the shell version
+/// it was floorplanned against.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CacheKey {
+    pub core: String,
+    pub part: String,
+    pub shell: String,
+}
+
+impl CacheKey {
+    /// Key for a core/part pair under the current [`SHELL_VERSION`].
+    pub fn new(core: &str, part: &str) -> CacheKey {
+        CacheKey {
+            core: core.to_string(),
+            part: part.to_string(),
+            shell: SHELL_VERSION.to_string(),
+        }
+    }
+
+    /// The content address: sha256 over the canonical triple.
+    pub fn digest(&self) -> String {
+        crate::util::hash::sha256_hex(
+            format!("{}|{}|{}", self.core, self.part, self.shell)
+                .as_bytes(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_is_stable_and_discriminates() {
+        let a = CacheKey::new("matmul16", "xc7vx485t");
+        assert_eq!(a.digest(), a.digest());
+        assert_eq!(a.digest().len(), 64);
+        assert_ne!(
+            a.digest(),
+            CacheKey::new("matmul32", "xc7vx485t").digest()
+        );
+        assert_ne!(
+            a.digest(),
+            CacheKey::new("matmul16", "xc6vlx240t").digest()
+        );
+        let other_shell = CacheKey {
+            shell: "rc2f-9.9".to_string(),
+            ..a.clone()
+        };
+        assert_ne!(a.digest(), other_shell.digest());
+    }
+}

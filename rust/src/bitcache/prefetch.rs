@@ -1,0 +1,142 @@
+//! Admission-driven prefetch: queued admissions warm the cache.
+//!
+//! The scheduler announces every enqueued request through its
+//! [`crate::sched::PrefetchSink`] (see
+//! [`crate::sched::Scheduler::set_prefetch_sink`]). A queued tenant
+//! is *waiting* — that wait is exactly the window in which the AOT
+//! compile of their artifact is free. The prefetcher maps the hint's
+//! tenant to the last core that tenant named (recorded by the program
+//! / compile RPC paths) and fires a best-effort [`CompileService`]
+//! submit for it on the hinted board's part.
+//!
+//! Deliberately heuristic: a wrong guess costs one coalescable
+//! background compile on the private build clock; a right guess turns
+//! the tenant's cold program into a warm one.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::compile::{CompileService, CompileTicket};
+use crate::fpga::board::BoardSpec;
+use crate::metrics::Registry;
+use crate::sched::PrefetchHint;
+use crate::util::ids::UserId;
+
+/// The prefetcher. Cheap enough to run under scheduler locks (one map
+/// lookup + an async job submit) — the contract the sink requires.
+#[derive(Debug)]
+pub struct Prefetcher {
+    compile: Arc<CompileService>,
+    /// Tenant → last core name that tenant asked for.
+    last_core: Mutex<BTreeMap<UserId, String>>,
+    metrics: Arc<Registry>,
+}
+
+impl Prefetcher {
+    pub fn new(
+        compile: Arc<CompileService>,
+        metrics: Arc<Registry>,
+    ) -> Prefetcher {
+        Prefetcher {
+            compile,
+            last_core: Mutex::new(BTreeMap::new()),
+            metrics,
+        }
+    }
+
+    /// Record that `tenant` asked for `core` (program or compile
+    /// RPC). Future queue waits prefetch this core.
+    pub fn note_core(&self, tenant: UserId, core: &str) {
+        self.last_core
+            .lock()
+            .unwrap()
+            .insert(tenant, core.to_string());
+    }
+
+    /// React to one queued admission: best-effort compile of the
+    /// tenant's last-named core for the hinted board. Returns the
+    /// ticket when a prediction existed and the submit was accepted
+    /// (`None` = nothing known about this tenant yet).
+    pub fn hint(&self, hint: &PrefetchHint) -> Option<CompileTicket> {
+        let core =
+            self.last_core.lock().unwrap().get(&hint.tenant).cloned()?;
+        let board = hint
+            .board
+            .map(BoardSpec::of)
+            .unwrap_or_else(BoardSpec::vc707);
+        self.metrics.counter("bitcache.prefetch").inc();
+        match self.compile.submit(&core, &board.part) {
+            Ok(ticket) => Some(ticket),
+            Err(_) => None, // wrong guesses never surface to tenants
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitcache::store::BitstreamCache;
+    use crate::fpga::board::BoardKind;
+    use crate::middleware::jobs::JobRegistry;
+    use std::time::Duration;
+
+    fn fixture() -> (Prefetcher, Arc<JobRegistry>, Arc<Registry>) {
+        let metrics = Arc::new(Registry::new());
+        let cache = Arc::new(BitstreamCache::open(
+            8,
+            None,
+            Arc::clone(&metrics),
+        ));
+        let jobs = JobRegistry::new();
+        let compile = Arc::new(CompileService::new(
+            Arc::clone(&jobs),
+            cache,
+            Arc::clone(&metrics),
+        ));
+        (
+            Prefetcher::new(compile, Arc::clone(&metrics)),
+            jobs,
+            metrics,
+        )
+    }
+
+    #[test]
+    fn unknown_tenant_is_a_silent_no_op() {
+        let (pf, _jobs, metrics) = fixture();
+        let hint = PrefetchHint {
+            tenant: UserId(1),
+            board: None,
+            regions: 1,
+        };
+        assert!(pf.hint(&hint).is_none());
+        assert_eq!(metrics.counter("bitcache.prefetch").get(), 0);
+    }
+
+    #[test]
+    fn known_tenant_warms_the_cache_while_queued() {
+        let (pf, jobs, metrics) = fixture();
+        let tenant = UserId(7);
+        pf.note_core(tenant, "matmul16");
+        let ticket = pf
+            .hint(&PrefetchHint {
+                tenant,
+                board: Some(BoardKind::Vc707),
+                regions: 1,
+            })
+            .unwrap();
+        assert_eq!(ticket.state, "submitted");
+        jobs.wait(ticket.job.unwrap(), Duration::from_secs(30))
+            .unwrap();
+        assert!(pf.compile.cache().contains(&ticket.digest));
+        assert_eq!(metrics.counter("bitcache.prefetch").get(), 1);
+        // A second hint for the same tenant reads straight from cache.
+        let again = pf
+            .hint(&PrefetchHint {
+                tenant,
+                board: Some(BoardKind::Vc707),
+                regions: 1,
+            })
+            .unwrap();
+        assert_eq!(again.state, "cached");
+    }
+}

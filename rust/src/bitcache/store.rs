@@ -1,0 +1,427 @@
+//! Content-addressed bitstream store: bounded, LRU-evicted,
+//! CRC-verified at admission, persistent under `--state DIR`.
+//!
+//! Layout: one JSON file per artifact at
+//! `<state>/bitcache/<digest>.json` holding the [`CacheKey`] and the
+//! full [`Bitstream::to_transfer_json`] encoding (payload inline as
+//! base64). Files are written with [`crate::util::fsx::write_atomic`]
+//! so a crash mid-admission never leaves a torn artifact; a reopened
+//! cache re-verifies every file's CRC and digest and silently drops
+//! anything corrupt — a lost cache entry costs one recompile, a
+//! poisoned one would program garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::CacheKey;
+use crate::bitstream::{Bitstream, FrameRange};
+use crate::metrics::Registry;
+
+/// Typed admission failures (surfaced as the `cache_rejected` RPC
+/// error code).
+#[derive(Debug, Clone, thiserror::Error, PartialEq, Eq)]
+pub enum CacheError {
+    #[error("bitstream payload fails CRC verification")]
+    BadCrc,
+    #[error(
+        "claimed frames [{claimed_start},{claimed_end}) escape the \
+         target region window [{window_start},{window_end})"
+    )]
+    FrameEscape {
+        claimed_start: u64,
+        claimed_end: u64,
+        window_start: u64,
+        window_end: u64,
+    },
+}
+
+#[derive(Debug)]
+struct Entry {
+    key: CacheKey,
+    bitstream: Bitstream,
+    /// LRU clock value of the last admit/lookup touch.
+    last_used: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    entries: BTreeMap<String, Entry>,
+    tick: u64,
+}
+
+/// The store. All methods are `&self`; one mutex guards the map (a
+/// handful of entries, microsecond critical sections).
+#[derive(Debug)]
+pub struct BitstreamCache {
+    capacity: usize,
+    dir: Option<PathBuf>,
+    metrics: Arc<Registry>,
+    inner: Mutex<Inner>,
+}
+
+impl BitstreamCache {
+    /// Open a cache bounded to `capacity` artifacts. With a state
+    /// directory the on-disk layout is loaded (corrupt files are
+    /// dropped) and every later admission/eviction is mirrored to
+    /// disk; without one the cache is memory-only.
+    pub fn open(
+        capacity: usize,
+        state_dir: Option<&Path>,
+        metrics: Arc<Registry>,
+    ) -> BitstreamCache {
+        let dir = state_dir.map(|s| s.join("bitcache"));
+        let cache = BitstreamCache {
+            capacity: capacity.max(1),
+            dir,
+            metrics,
+            inner: Mutex::new(Inner::default()),
+        };
+        cache.load();
+        cache
+    }
+
+    /// Verify and admit one artifact; returns its digest. The frame
+    /// window check pins the artifact to the region window it was
+    /// compiled for — a bitstream claiming frames outside it is the
+    /// tampering case the sanity checker exists for, and it must not
+    /// be served from cache to other tenants.
+    pub fn admit(
+        &self,
+        key: &CacheKey,
+        bitstream: Bitstream,
+        window: FrameRange,
+    ) -> Result<String, CacheError> {
+        if !bitstream.crc_ok() {
+            self.metrics.counter("bitcache.rejected").inc();
+            return Err(CacheError::BadCrc);
+        }
+        if !window.contains(bitstream.meta.frames) {
+            self.metrics.counter("bitcache.rejected").inc();
+            return Err(CacheError::FrameEscape {
+                claimed_start: bitstream.meta.frames.start,
+                claimed_end: bitstream.meta.frames.end,
+                window_start: window.start,
+                window_end: window.end,
+            });
+        }
+        let digest = key.digest();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.entries.insert(
+            digest.clone(),
+            Entry {
+                key: key.clone(),
+                bitstream,
+                last_used: tick,
+            },
+        );
+        self.persist(&inner, &digest);
+        while inner.entries.len() > self.capacity {
+            let victim = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(d, _)| d.clone())
+                .expect("non-empty over capacity");
+            inner.entries.remove(&victim);
+            self.unpersist(&victim);
+            self.metrics.counter("bitcache.evicted").inc();
+        }
+        self.metrics.counter("bitcache.admitted").inc();
+        self.metrics
+            .gauge("bitcache.entries")
+            .set(inner.entries.len() as i64);
+        Ok(digest)
+    }
+
+    /// Fetch by digest, bumping recency. Counts `bitcache.hit` /
+    /// `bitcache.miss`.
+    pub fn lookup(&self, digest: &str) -> Option<Bitstream> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.entries.get_mut(digest) {
+            Some(e) => {
+                e.last_used = tick;
+                self.metrics.counter("bitcache.hit").inc();
+                Some(e.bitstream.clone())
+            }
+            None => {
+                self.metrics.counter("bitcache.miss").inc();
+                None
+            }
+        }
+    }
+
+    /// Fetch by core/part under the current shell version.
+    pub fn lookup_core(
+        &self,
+        core: &str,
+        part: &str,
+    ) -> Option<Bitstream> {
+        self.lookup(&CacheKey::new(core, part).digest())
+    }
+
+    /// Presence check without touching recency or hit/miss counters.
+    pub fn contains(&self, digest: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(digest)
+    }
+
+    /// Keys of every resident artifact (most-recent last).
+    pub fn keys(&self) -> Vec<CacheKey> {
+        let inner = self.inner.lock().unwrap();
+        let mut entries: Vec<(&u64, &CacheKey)> = inner
+            .entries
+            .values()
+            .map(|e| (&e.last_used, &e.key))
+            .collect();
+        entries.sort_by_key(|(t, _)| **t);
+        entries.into_iter().map(|(_, k)| k.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    // ------------------------------------------------- persistence
+
+    fn artifact_path(dir: &Path, digest: &str) -> PathBuf {
+        dir.join(format!("{digest}.json"))
+    }
+
+    fn persist(&self, inner: &Inner, digest: &str) {
+        let Some(dir) = &self.dir else { return };
+        let Some(e) = inner.entries.get(digest) else { return };
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let body = crate::util::json::Json::obj(vec![
+            (
+                "key",
+                crate::util::json::Json::obj(vec![
+                    (
+                        "core",
+                        crate::util::json::Json::from(
+                            e.key.core.as_str(),
+                        ),
+                    ),
+                    (
+                        "part",
+                        crate::util::json::Json::from(
+                            e.key.part.as_str(),
+                        ),
+                    ),
+                    (
+                        "shell",
+                        crate::util::json::Json::from(
+                            e.key.shell.as_str(),
+                        ),
+                    ),
+                ]),
+            ),
+            ("bitstream", e.bitstream.to_transfer_json(true)),
+        ]);
+        let path = Self::artifact_path(dir, digest);
+        if let Err(err) =
+            crate::util::fsx::write_atomic(&path, &body.to_string())
+        {
+            log::warn!("bitcache: persist {digest} failed: {err}");
+        }
+    }
+
+    fn unpersist(&self, digest: &str) {
+        if let Some(dir) = &self.dir {
+            let _ =
+                std::fs::remove_file(Self::artifact_path(dir, digest));
+        }
+    }
+
+    /// Load the on-disk layout: every `<digest>.json` whose content
+    /// parses, passes CRC and whose key re-hashes to its file name.
+    fn load(&self) {
+        let Some(dir) = self.dir.clone() else { return };
+        let Ok(listing) = std::fs::read_dir(&dir) else { return };
+        let mut loaded = 0u64;
+        for entry in listing.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(digest) = name.strip_suffix(".json") else {
+                continue;
+            };
+            let Ok(text) = std::fs::read_to_string(entry.path())
+            else {
+                continue;
+            };
+            let Ok(body) = crate::util::json::Json::parse(&text)
+            else {
+                continue;
+            };
+            let k = body.get("key");
+            let (Some(core), Some(part), Some(shell)) = (
+                k.get("core").as_str(),
+                k.get("part").as_str(),
+                k.get("shell").as_str(),
+            ) else {
+                continue;
+            };
+            let key = CacheKey {
+                core: core.to_string(),
+                part: part.to_string(),
+                shell: shell.to_string(),
+            };
+            let Some(bitstream) = Bitstream::from_transfer_json(
+                body.get("bitstream"),
+                None,
+            ) else {
+                continue;
+            };
+            if key.digest() != digest || !bitstream.crc_ok() {
+                log::warn!("bitcache: dropping corrupt {name}");
+                continue;
+            }
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            inner.entries.insert(
+                digest.to_string(),
+                Entry {
+                    key,
+                    bitstream,
+                    last_used: tick,
+                },
+            );
+            loaded += 1;
+        }
+        if loaded > 0 {
+            self.metrics.counter("bitcache.loaded").add(loaded);
+            self.metrics
+                .gauge("bitcache.entries")
+                .set(self.len() as i64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::BitstreamBuilder;
+    use crate::fpga::resources::Resources;
+    use crate::hls::flow::region_window;
+
+    fn bs(core: &str, seed: u64) -> Bitstream {
+        BitstreamBuilder::partial("xc7vx485t", core)
+            .resources(Resources::new(100, 100, 1, 1))
+            .frames(region_window(0, 1))
+            .payload_seed(seed)
+            .build()
+    }
+
+    fn cache(cap: usize) -> BitstreamCache {
+        BitstreamCache::open(
+            cap,
+            None,
+            Arc::new(Registry::new()),
+        )
+    }
+
+    #[test]
+    fn admit_lookup_roundtrip_counts_hits_and_misses() {
+        let c = cache(4);
+        let key = CacheKey::new("matmul16", "xc7vx485t");
+        let digest = c
+            .admit(&key, bs("matmul16", 1), region_window(0, 1))
+            .unwrap();
+        assert_eq!(digest, key.digest());
+        assert_eq!(
+            c.lookup(&digest).unwrap().meta.core,
+            "matmul16"
+        );
+        assert!(c.lookup("no-such-digest").is_none());
+        assert_eq!(c.metrics.counter("bitcache.hit").get(), 1);
+        assert_eq!(c.metrics.counter("bitcache.miss").get(), 1);
+    }
+
+    #[test]
+    fn admission_rejects_bad_crc_and_frame_escape() {
+        let c = cache(4);
+        let key = CacheKey::new("evil", "xc7vx485t");
+        let mut corrupt = bs("evil", 1);
+        corrupt.payload[0] ^= 0xFF;
+        assert_eq!(
+            c.admit(&key, corrupt, region_window(0, 1)),
+            Err(CacheError::BadCrc)
+        );
+        // Claims slot-1 frames while targeting the slot-0 window.
+        let escaping = BitstreamBuilder::partial("xc7vx485t", "evil")
+            .resources(Resources::new(1, 1, 1, 1))
+            .frames(region_window(1, 1))
+            .build();
+        assert!(matches!(
+            c.admit(&key, escaping, region_window(0, 1)),
+            Err(CacheError::FrameEscape { .. })
+        ));
+        assert!(c.is_empty());
+        assert_eq!(c.metrics.counter("bitcache.rejected").get(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = cache(2);
+        let ka = CacheKey::new("a", "p");
+        let kb = CacheKey::new("b", "p");
+        let kc = CacheKey::new("c", "p");
+        c.admit(&ka, bs("a", 1), region_window(0, 1)).unwrap();
+        c.admit(&kb, bs("b", 2), region_window(0, 1)).unwrap();
+        // Touch `a`, then admit `c`: `b` is the LRU victim.
+        assert!(c.lookup(&ka.digest()).is_some());
+        c.admit(&kc, bs("c", 3), region_window(0, 1)).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(&ka.digest()));
+        assert!(!c.contains(&kb.digest()));
+        assert!(c.contains(&kc.digest()));
+        assert_eq!(c.metrics.counter("bitcache.evicted").get(), 1);
+    }
+
+    #[test]
+    fn persists_across_reopen_and_drops_corrupt_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "rc3e_bitcache_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let key = CacheKey::new("matmul16", "xc7vx485t");
+        {
+            let c = BitstreamCache::open(
+                4,
+                Some(&dir),
+                Arc::new(Registry::new()),
+            );
+            c.admit(&key, bs("matmul16", 7), region_window(0, 1))
+                .unwrap();
+        }
+        // Plant a corrupt sibling: parses, but fails the digest check.
+        std::fs::write(
+            dir.join("bitcache").join(format!("{:064}.json", 0)),
+            "{\"key\":{\"core\":\"x\",\"part\":\"p\",\
+             \"shell\":\"s\"}}",
+        )
+        .unwrap();
+        let c = BitstreamCache::open(
+            4,
+            Some(&dir),
+            Arc::new(Registry::new()),
+        );
+        assert_eq!(c.len(), 1);
+        let back = c.lookup(&key.digest()).unwrap();
+        assert_eq!(back.meta.core, "matmul16");
+        assert!(back.crc_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,10 +1,9 @@
 //! Bitstream construction (the output side of the HLS flow and the
 //! provider's BAaaS bitfile store).
 
-use sha2::{Digest, Sha256};
-
 use super::{Bitstream, BitstreamKind, BitstreamMeta, FrameRange};
 use crate::fpga::resources::Resources;
+use crate::util::hash::{hex, Sha256};
 
 /// Fluent builder for synthetic bitstreams.
 #[derive(Debug)]
@@ -90,7 +89,7 @@ impl BitstreamBuilder {
         let payload: Vec<u8> = (0..self.payload_len)
             .map(|_| rng.next_u64() as u8)
             .collect();
-        let crc32 = crc32fast::hash(&payload);
+        let crc32 = crate::util::hash::crc32(&payload);
         let header = Bitstream::header_bytes(&self.meta, self.kind);
         let mut hasher = Sha256::new();
         hasher.update(&header);
@@ -116,10 +115,6 @@ pub fn sign(key: &str, content_sha: &str) -> String {
     hasher.update(key.as_bytes());
     hasher.update(content_sha.as_bytes());
     hex(&hasher.finalize())
-}
-
-fn hex(bytes: &[u8]) -> String {
-    bytes.iter().map(|b| format!("{b:02x}")).collect()
 }
 
 #[cfg(test)]

@@ -101,7 +101,7 @@ impl Bitstream {
 
     /// Recompute the payload CRC and compare (integrity check).
     pub fn crc_ok(&self) -> bool {
-        crc32fast::hash(&self.payload) == self.crc32
+        crate::util::hash::crc32(&self.payload) == self.crc32
     }
 
     /// Canonical header bytes (input to sha256/signature).
@@ -126,6 +126,103 @@ impl Bitstream {
             crate::util::bytes::put_u64(&mut buf, v);
         }
         buf
+    }
+
+    /// Full transfer/persistence encoding: every field, losslessly.
+    /// With `include_payload` the frame payload rides inline as
+    /// base64; pass `false` for transports that carry the payload
+    /// out-of-band (protocol-4 `BIN` frames) or stores that keep it
+    /// elsewhere, and supply it to [`Bitstream::from_transfer_json`].
+    pub fn to_transfer_json(&self, include_payload: bool) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::from(self.kind.name())),
+            ("part", Json::from(self.meta.part.as_str())),
+            ("core", Json::from(self.meta.core.as_str())),
+            (
+                "artifact",
+                match &self.meta.artifact {
+                    Some(a) => Json::from(a.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            ("resources", self.meta.resources.to_json()),
+            ("frames_start", Json::from(self.meta.frames.start)),
+            ("frames_end", Json::from(self.meta.frames.end)),
+            (
+                "vfpga_regions",
+                match self.meta.vfpga_regions {
+                    Some(n) => Json::from(n),
+                    None => Json::Null,
+                },
+            ),
+            ("crc32", Json::from(self.crc32 as u64)),
+            ("sha256", Json::from(self.sha256.as_str())),
+            (
+                "signature",
+                match &self.signature {
+                    Some(s) => Json::from(s.as_str()),
+                    None => Json::Null,
+                },
+            ),
+        ];
+        if include_payload {
+            pairs.push((
+                "payload",
+                Json::from(
+                    crate::util::bytes::b64_encode(&self.payload)
+                        .as_str(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Decode a [`Bitstream::to_transfer_json`] body. The payload
+    /// comes from `payload_oob` when the transport carried it
+    /// out-of-band, else from the inline base64 `payload` field.
+    pub fn from_transfer_json(
+        v: &Json,
+        payload_oob: Option<Vec<u8>>,
+    ) -> Option<Bitstream> {
+        let kind = match v.get("kind").as_str()? {
+            "full" => BitstreamKind::Full,
+            "partial" => BitstreamKind::Partial,
+            _ => return None,
+        };
+        let payload = match payload_oob {
+            Some(p) => p,
+            None => crate::util::bytes::b64_decode(
+                v.get("payload").as_str()?,
+            )
+            .ok()?,
+        };
+        Some(Bitstream {
+            kind,
+            meta: BitstreamMeta {
+                part: v.get("part").as_str()?.to_string(),
+                core: v.get("core").as_str()?.to_string(),
+                artifact: v
+                    .get("artifact")
+                    .as_str()
+                    .map(str::to_string),
+                resources: Resources::from_json(v.get("resources"))?,
+                frames: FrameRange {
+                    start: v.get("frames_start").as_u64()?,
+                    end: v.get("frames_end").as_u64()?,
+                },
+                vfpga_regions: v
+                    .get("vfpga_regions")
+                    .as_u64()
+                    .map(|n| n as usize),
+            },
+            payload,
+            crc32: v.get("crc32").as_u64()? as u32,
+            sha256: v.get("sha256").as_str()?.to_string(),
+            signature: v
+                .get("signature")
+                .as_str()
+                .map(str::to_string),
+        })
     }
 
     pub fn to_json(&self) -> Json {
@@ -209,6 +306,30 @@ mod tests {
         let b = tests_support::partial_bs("xc7vx485t", "core_b");
         assert_ne!(a.sha256, b.sha256);
         assert_eq!(a.sha256.len(), 64);
+    }
+
+    #[test]
+    fn transfer_json_roundtrips_inline_and_oob() {
+        let bs = tests_support::partial_bs("xc7vx485t", "matmul16");
+        // Inline payload (v3 base64 fallback / on-disk cache layout).
+        let inline =
+            Bitstream::from_transfer_json(&bs.to_transfer_json(true), None)
+                .unwrap();
+        assert_eq!(inline, bs);
+        assert!(inline.crc_ok());
+        // Out-of-band payload (protocol-4 BIN frames).
+        let oob = Bitstream::from_transfer_json(
+            &bs.to_transfer_json(false),
+            Some(bs.payload.clone()),
+        )
+        .unwrap();
+        assert_eq!(oob, bs);
+        // A missing payload on both channels fails to decode.
+        assert!(Bitstream::from_transfer_json(
+            &bs.to_transfer_json(false),
+            None
+        )
+        .is_none());
     }
 
     #[test]

@@ -92,6 +92,10 @@ pub struct Coordinator {
     homes: Mutex<BTreeMap<LeaseToken, Home>>,
     orphans: Mutex<Vec<Orphan>>,
     forwarders: Mutex<BTreeMap<NodeId, JoinHandle<()>>>,
+    /// Which bitstream artifacts each node is known to hold — fed by
+    /// served `agent.fetch_bitstream` calls and placed core hints,
+    /// consumed as the warm tiebreak in [`placement::eligible_warm`].
+    served: Mutex<placement::ResidentMap>,
     stop: Arc<AtomicBool>,
 }
 
@@ -109,6 +113,7 @@ impl Coordinator {
             homes: Mutex::new(BTreeMap::new()),
             orphans: Mutex::new(Vec::new()),
             forwarders: Mutex::new(BTreeMap::new()),
+            served: Mutex::new(placement::ResidentMap::new()),
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -188,9 +193,17 @@ impl Coordinator {
         let regions = req.regions.unwrap_or(1);
         loop {
             let snaps = self.registry.snapshot();
-            for node in
-                placement::eligible(&snaps, regions, req.board.as_deref())
-            {
+            let ranked = {
+                let served = self.served.lock().unwrap();
+                placement::eligible_warm(
+                    &snaps,
+                    regions,
+                    req.board.as_deref(),
+                    req.core.as_deref(),
+                    &served,
+                )
+            };
+            for node in ranked {
                 let Some(addr) = self.registry.addr_of(node) else {
                     continue;
                 };
@@ -206,6 +219,12 @@ impl Coordinator {
                                 spec: Some(req.clone()),
                             },
                         );
+                        if let Some(core) = &req.core {
+                            // The daemon fetches the artifact on its
+                            // program path; count the node warm for
+                            // future placements of the same design.
+                            self.note_cached(node, core);
+                        }
                         return Ok(resp);
                     }
                     // The snapshot was a heartbeat stale: the node's
@@ -224,6 +243,26 @@ impl Coordinator {
             }
             std::thread::sleep(ADMIT_RETRY);
         }
+    }
+
+    /// Record that `node` holds the bitstream artifact for `core` —
+    /// called when the management cache serves a node's
+    /// `agent.fetch_bitstream` and when a placement carries the core
+    /// hint. Future admissions of the same design prefer warm nodes
+    /// on free-capacity ties.
+    pub fn note_cached(&self, node: NodeId, core: &str) {
+        self.served
+            .lock()
+            .unwrap()
+            .entry(node)
+            .or_default()
+            .insert(core.to_string());
+    }
+
+    /// Snapshot of the per-node resident-artifact map (telemetry and
+    /// tests).
+    pub fn resident_map(&self) -> placement::ResidentMap {
+        self.served.lock().unwrap().clone()
     }
 
     /// Which node a federated lease is homed on.
@@ -513,6 +552,7 @@ mod tests {
             regions: None,
             co_located: None,
             board: None,
+            core: None,
             adopt: None,
         }
     }
@@ -616,6 +656,18 @@ mod tests {
         assert_eq!(co.home_of(kept), Some(NodeId(0)));
         assert!(co.orphans.lock().unwrap().is_empty());
         co.shutdown();
+    }
+
+    #[test]
+    fn note_cached_builds_the_resident_map() {
+        let co = coordinator();
+        co.note_cached(NodeId(1), "matmul16");
+        co.note_cached(NodeId(1), "matmul16");
+        co.note_cached(NodeId(2), "saxpy");
+        let map = co.resident_map();
+        assert_eq!(map[&NodeId(1)].len(), 1);
+        assert!(map[&NodeId(1)].contains("matmul16"));
+        assert!(map[&NodeId(2)].contains("saxpy"));
     }
 
     #[test]

@@ -281,6 +281,13 @@ struct DaemonInner {
     bus: Arc<EventBus>,
     journal: Arc<EventJournal>,
     cores: BTreeMap<String, Bitstream>,
+    /// Management server address, recorded at registration — where
+    /// `agent.program` fetches artifacts the local library lacks.
+    home: Mutex<Option<SocketAddr>>,
+    /// Artifacts pulled from the management cache, by core name.
+    /// CRC-verified on receipt (the client rejects corrupt
+    /// transfers), retained for the daemon's life.
+    fetched: Mutex<BTreeMap<String, Bitstream>>,
     stop: Arc<AtomicBool>,
 }
 
@@ -365,6 +372,8 @@ impl NodeDaemon {
             bus,
             journal,
             cores: crate::middleware::server::build_core_library(),
+            home: Mutex::new(None),
+            fetched: Mutex::new(BTreeMap::new()),
             stop: Arc::clone(&stop),
         });
         let conns = Arc::new(Mutex::new(Vec::new()));
@@ -444,6 +453,9 @@ impl NodeDaemon {
         mgmt: SocketAddr,
     ) -> Result<ClusterRegisterResponse, String> {
         let mut client = Client::connect(mgmt)?;
+        // Remember the management address: `agent.program` fetches
+        // missing artifacts from its bitstream cache on demand.
+        *self.inner.home.lock().unwrap() = Some(mgmt);
         let req = ClusterRegisterRequest {
             node: self.inner.node,
             name: self.inner.name.clone(),
@@ -463,6 +475,18 @@ impl NodeDaemon {
             }
         }
         Ok(resp)
+    }
+
+    /// Warm this node for `core` now by pulling its artifact from
+    /// the management bitstream cache — the prefetch the coordinator
+    /// relies on when it places a same-design admission here.
+    /// Requires a prior [`NodeDaemon::register`]; a no-op when the
+    /// artifact is already held.
+    pub fn prefetch_core(&self, core: &str) -> Result<(), ApiError> {
+        if self.inner.fetched.lock().unwrap().contains_key(core) {
+            return Ok(());
+        }
+        fetch_from_home(&self.inner, core).map(|_| ())
     }
 
     /// Stop accepting, then join the accept thread and every
@@ -764,21 +788,68 @@ fn d_program(
     let req = AgentProgramRequest::from_json(params)?;
     let handle = authorize(inner, req.lease, req.alloc)?;
     let user = handle.tenant();
-    let bitfile = inner.cores.get(&req.core).ok_or_else(|| {
-        ApiError::new(
-            ErrorCode::UnknownCore,
-            format!("unknown core '{}'", req.core),
-        )
-    })?;
-    let d = inner
-        .hv
-        .program_retargeted(req.alloc, user, bitfile)
-        .map_err(ApiError::from)?;
+    // Artifact preference mirrors the management server: a fetched
+    // cache artifact first, the prebuilt library next, and on a full
+    // miss a cross-node pull from the management cache.
+    let cached = inner.fetched.lock().unwrap().get(&req.core).cloned();
+    let d = match &cached {
+        Some(bs) => inner.hv.program_retargeted(req.alloc, user, bs),
+        None => match inner.cores.get(&req.core) {
+            Some(bs) => {
+                inner.hv.program_retargeted(req.alloc, user, bs)
+            }
+            None => {
+                let bs = fetch_from_home(inner, &req.core)?;
+                inner.hv.program_retargeted(req.alloc, user, &bs)
+            }
+        },
+    }
+    .map_err(ApiError::from)?;
     Ok(ProgramCoreResponse {
         programmed: req.core,
         pr_ms: d.as_millis_f64(),
     }
     .to_json())
+}
+
+/// Pull an artifact this daemon is missing from the management
+/// bitstream cache (`agent.fetch_bitstream`), self-identifying so
+/// the coordinator marks this node warm for the core. The verified
+/// bitstream is retained in the daemon's fetched map.
+fn fetch_from_home(
+    inner: &Arc<DaemonInner>,
+    core: &str,
+) -> Result<Bitstream, ApiError> {
+    let Some(home) = *inner.home.lock().unwrap() else {
+        return Err(ApiError::new(
+            ErrorCode::UnknownCore,
+            format!(
+                "unknown core '{core}' (no management cache to fetch \
+                 from)"
+            ),
+        ));
+    };
+    let part = {
+        let db = inner.hv.db.lock().unwrap();
+        inner
+            .hv
+            .device_ids()
+            .first()
+            .and_then(|f| db.device(*f))
+            .map(|d| crate::fpga::board::BoardSpec::of(d.board).part)
+            .unwrap_or(crate::fpga::board::BoardSpec::vc707().part)
+    };
+    let mut client = Client::connect(home).map_err(|e| {
+        ApiError::internal(format!("fetch from management: {e}"))
+    })?;
+    let bs = client.fetch_bitstream(core, part, Some(inner.node))?;
+    inner.hv.metrics.counter("bitcache.node_fetch").inc();
+    inner
+        .fetched
+        .lock()
+        .unwrap()
+        .insert(core.to_string(), bs.clone());
+    Ok(bs)
 }
 
 fn d_stream(
@@ -1027,6 +1098,7 @@ mod tests {
                 regions: None,
                 co_located: None,
                 board: None,
+                core: None,
                 adopt: None,
             })
             .unwrap();
@@ -1074,6 +1146,7 @@ mod tests {
                     regions: Some(2),
                     co_located: None,
                     board: None,
+                    core: None,
                     adopt: None,
                 })
                 .unwrap();
@@ -1110,6 +1183,7 @@ mod tests {
                 regions: None,
                 co_located: None,
                 board: None,
+                core: None,
                 adopt: None,
             })
             .unwrap();

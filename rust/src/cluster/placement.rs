@@ -14,9 +14,23 @@
 //! heartbeat old, so the node's own scheduler is the arbiter and the
 //! coordinator simply tries the next candidate (or waits) when an
 //! admit bounces with `no_capacity`.
+//!
+//! When the admission names an intended core, [`eligible_warm`] uses
+//! the coordinator's record of which artifacts each node already
+//! fetched ([`ResidentMap`]) as a tiebreak: among equally-free nodes,
+//! one that already holds the bitstream programs without a cross-node
+//! artifact transfer. Cache affinity never outranks load spreading —
+//! a warm-but-busier node still loses to a colder, freer one.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::registry::{NodeSnapshot, NodeState};
 use crate::util::ids::NodeId;
+
+/// Which cores each node is known to hold a bitstream artifact for —
+/// the coordinator records a node as warm once it serves that node an
+/// `agent.fetch_bitstream` or places an admission carrying the hint.
+pub type ResidentMap = BTreeMap<NodeId, BTreeSet<String>>;
 
 /// Filter and rank candidate nodes for an admission of `regions`
 /// regions with an optional board constraint. Returns node ids in
@@ -27,6 +41,28 @@ pub fn eligible(
     regions: u32,
     board: Option<&str>,
 ) -> Vec<NodeId> {
+    eligible_warm(nodes, regions, board, None, &ResidentMap::new())
+}
+
+/// [`eligible`] with a cache-affinity tiebreak: `design` is the core
+/// the tenant intends to program (from the admission's hint) and
+/// `resident` the coordinator's artifact map. Ordering is most free
+/// regions first, then warm-before-cold, then lowest id.
+pub fn eligible_warm(
+    nodes: &[NodeSnapshot],
+    regions: u32,
+    board: Option<&str>,
+    design: Option<&str>,
+    resident: &ResidentMap,
+) -> Vec<NodeId> {
+    let warm = |n: &NodeSnapshot| -> bool {
+        match design {
+            Some(d) => resident
+                .get(&n.node)
+                .is_some_and(|cores| cores.contains(d)),
+            None => false,
+        }
+    };
     let mut fit: Vec<&NodeSnapshot> = nodes
         .iter()
         .filter(|n| n.state == NodeState::Up)
@@ -39,6 +75,7 @@ pub fn eligible(
     fit.sort_by(|a, b| {
         b.regions_free
             .cmp(&a.regions_free)
+            .then(warm(b).cmp(&warm(a)))
             .then(a.node.cmp(&b.node))
     });
     fit.into_iter().map(|n| n.node).collect()
@@ -91,6 +128,35 @@ mod tests {
         assert_eq!(eligible(&nodes, 1, Some("vc707")), vec![NodeId(0)]);
         assert_eq!(eligible(&nodes, 1, Some("ml605")), vec![NodeId(1)]);
         assert!(eligible(&nodes, 1, Some("zcu102")).is_empty());
+    }
+
+    #[test]
+    fn warm_node_wins_ties_but_never_outranks_free_capacity() {
+        let nodes = vec![
+            snap(0, NodeState::Up, &["vc707"], 4),
+            snap(1, NodeState::Up, &["vc707"], 4),
+            snap(2, NodeState::Up, &["vc707"], 8),
+        ];
+        let mut resident = ResidentMap::new();
+        resident
+            .entry(NodeId(1))
+            .or_default()
+            .insert("matmul16".to_string());
+        // Tie at 4 free regions: the warm node 1 beats node 0, but
+        // the freer (cold) node 2 still ranks first.
+        assert_eq!(
+            eligible_warm(&nodes, 1, None, Some("matmul16"), &resident),
+            vec![NodeId(2), NodeId(1), NodeId(0)]
+        );
+        // A different design (or no hint) falls back to id order.
+        assert_eq!(
+            eligible_warm(&nodes, 1, None, Some("saxpy"), &resident),
+            vec![NodeId(2), NodeId(0), NodeId(1)]
+        );
+        assert_eq!(
+            eligible_warm(&nodes, 1, None, None, &resident),
+            eligible(&nodes, 1, None)
+        );
     }
 
     #[test]

@@ -42,6 +42,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use crate::metrics::Registry;
+use crate::util::hash::crc32_update;
 
 /// Tuning for one [`Journal`].
 #[derive(Debug, Clone)]
@@ -387,43 +388,11 @@ fn committed_prefix(bytes: &[u8], first_seq: u64) -> (u64, u64) {
     (off as u64, expected)
 }
 
-/// CRC over `seq || payload`.
+/// CRC over `seq || payload` (shared CRC-32 from [`crate::util::hash`]).
 fn record_crc(seq: u64, payload: &[u8]) -> u32 {
     let mut crc = crc32_update(0xFFFF_FFFF, &seq.to_le_bytes());
     crc = crc32_update(crc, payload);
     !crc
-}
-
-/// Standard CRC-32 (IEEE 802.3, reflected), table built at compile
-/// time — the build is offline, so no external crc crate.
-const CRC32_TABLE: [u32; 256] = build_crc32_table();
-
-const fn build_crc32_table() -> [u32; 256] {
-    let mut table = [0u32; 256];
-    let mut i = 0;
-    while i < 256 {
-        let mut c = i as u32;
-        let mut k = 0;
-        while k < 8 {
-            c = if c & 1 != 0 {
-                0xEDB8_8320 ^ (c >> 1)
-            } else {
-                c >> 1
-            };
-            k += 1;
-        }
-        table[i] = c;
-        i += 1;
-    }
-    table
-}
-
-fn crc32_update(mut crc: u32, bytes: &[u8]) -> u32 {
-    for &b in bytes {
-        crc = CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize]
-            ^ (crc >> 8);
-    }
-    crc
 }
 
 #[cfg(test)]

@@ -15,6 +15,10 @@
 //!   transitions + transition log, `docs/LIFECYCLE.md`).
 //! * [`bitstream`] — full/partial bitfile format plus the sanity
 //!   checker the paper lists as future work.
+//! * [`bitcache`] — cluster-wide content-addressed bitstream cache +
+//!   AOT compile service: cold/warm/resident program tiers,
+//!   per-digest compile coalescing, admission-driven prefetch, and
+//!   federated artifact fetch (`docs/BITCACHE.md`).
 //! * [`pcie`] — PCIe link simulator: shared-bandwidth arbiter, device
 //!   files, DMA channels, hot-plug link restoration.
 //! * [`fifo`] — asynchronous FIFO with clock-domain-crossing
@@ -61,6 +65,7 @@
 //! the binary serves everything from the compiled HLO artifacts.
 
 pub mod batch;
+pub mod bitcache;
 pub mod bitstream;
 pub mod cluster;
 pub mod config;

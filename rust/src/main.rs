@@ -84,6 +84,17 @@ fn flag_specs() -> Vec<FlagSpec> {
             help: "matrix multiplications to stream",
         },
         FlagSpec {
+            name: "part",
+            takes_value: true,
+            help: "compile: target FPGA part (default: VC707's)",
+        },
+        FlagSpec {
+            name: "digest",
+            takes_value: true,
+            help: "compile: poll this artifact digest instead of \
+                   submitting",
+        },
+        FlagSpec {
             name: "name",
             takes_value: true,
             help: "user name",
@@ -251,6 +262,7 @@ fn main() {
         "adduser" => cmd_adduser(&args),
         "alloc" => cmd_alloc(&args),
         "program" => cmd_program(&args),
+        "compile" => cmd_compile(&args),
         "stream" => cmd_stream(&args),
         "release" => cmd_release(&args),
         "migrate" => cmd_migrate(&args),
@@ -293,6 +305,8 @@ fn usage() -> String {
          --regions N --co-located --board vc707]\n\
          \x20 program    --user user-N --alloc alloc-N --lease lt-... \
          --core matmul16\n\
+         \x20 compile    --user user-N --core matmul16 [--part xc...] \
+         [--wait] | --digest <sha>\n\
          \x20 stream     --user user-N --alloc alloc-N --lease lt-... \
          --core matmul16 --mults 100000\n\
          \x20 release    --alloc alloc-N --lease lt-...\n\
@@ -637,6 +651,39 @@ fn cmd_program(args: &Args) -> Result<(), String> {
         .program_core(user, alloc, &core)
         .map_err(|e| e.to_string())?;
     println!("{}", resp.to_json().to_pretty());
+    Ok(())
+}
+
+/// `rc3e compile` — ahead-of-time compile of a core into the cluster
+/// bitstream cache, so a later `program` hits the warm path. With
+/// `--digest` it polls an earlier submission instead; with `--wait`
+/// it blocks on the flow job until the artifact is cached.
+fn cmd_compile(args: &Args) -> Result<(), String> {
+    let mut client = connect(args)?;
+    if let Some(d) = args.get("digest") {
+        let resp =
+            client.compile_status(d).map_err(|e| e.to_string())?;
+        println!("{}", resp.to_json().to_pretty());
+        return Ok(());
+    }
+    let user = user_flag(args)?;
+    let core = args.get("core").ok_or("missing --core")?.to_string();
+    let req = rc3e::middleware::api::CompileSubmitRequest {
+        user,
+        core,
+        part: args.get("part").map(String::from),
+    };
+    let resp =
+        client.compile_submit(&req).map_err(|e| e.to_string())?;
+    println!("{}", resp.to_json().to_pretty());
+    if args.has("wait") {
+        if let Some(job) = resp.job {
+            eprintln!("waiting on {job}...");
+            let result =
+                client.job_wait_done(job).map_err(|e| e.to_string())?;
+            println!("{}", result.to_pretty());
+        }
+    }
     Ok(())
 }
 

@@ -95,6 +95,9 @@ pub enum ErrorCode {
     Timeout,
     /// Bitstream failed the sanity checker.
     SanityRejected,
+    /// Bitstream refused admission into the cluster cache (bad CRC
+    /// or a frame window escaping the target region).
+    CacheRejected,
     /// Simulated hardware / device-layer fault.
     DeviceFault,
     /// Anything the server cannot classify further.
@@ -103,7 +106,7 @@ pub enum ErrorCode {
 
 impl ErrorCode {
     /// Every code, for exhaustive tests and the protocol doc.
-    pub const ALL: [ErrorCode; 19] = [
+    pub const ALL: [ErrorCode; 20] = [
         ErrorCode::BadRequest,
         ErrorCode::UnknownMethod,
         ErrorCode::ProtocolMismatch,
@@ -121,6 +124,7 @@ impl ErrorCode {
         ErrorCode::Preempted,
         ErrorCode::Timeout,
         ErrorCode::SanityRejected,
+        ErrorCode::CacheRejected,
         ErrorCode::DeviceFault,
         ErrorCode::Internal,
     ];
@@ -144,6 +148,7 @@ impl ErrorCode {
             ErrorCode::Preempted => "preempted",
             ErrorCode::Timeout => "timeout",
             ErrorCode::SanityRejected => "sanity_rejected",
+            ErrorCode::CacheRejected => "cache_rejected",
             ErrorCode::DeviceFault => "device_fault",
             ErrorCode::Internal => "internal",
         }
@@ -356,6 +361,12 @@ pub enum Method {
     /// Fetch a span tree from the flight recorder, by trace id or by
     /// the job that carried it.
     TraceGet,
+    /// Ahead-of-time compile of a core for a part into the cluster
+    /// bitstream cache; answers immediately with a digest + async
+    /// flow job (concurrent submits for one digest coalesce).
+    CompileSubmit,
+    /// Poll a cache digest: cached / running / unknown.
+    CompileStatus,
     AgentHello,
     AgentStatus,
     /// Registered nodes with health, capacity and heartbeat age.
@@ -380,11 +391,17 @@ pub enum Method {
     /// Multi-frame replay/follow of the node's local event journal
     /// (the federation feed; frames carry node-local cursors).
     AgentEvents,
+    /// A node daemon pulling a cached artifact it is missing from
+    /// the management cache (multi-frame reply; protocol-4 `BIN`
+    /// payload frames, base64 fallback on v3). `agent.`-prefixed
+    /// because it belongs to the agent↔management protocol — but the
+    /// *agent is the caller*, so the management server serves it.
+    AgentFetchBitstream,
 }
 
 impl Method {
     /// Every method, for dispatch-completeness tests and the docs.
-    pub const ALL: [Method; 42] = [
+    pub const ALL: [Method; 45] = [
         Method::Hello,
         Method::AddUser,
         Method::Status,
@@ -417,6 +434,8 @@ impl Method {
         Method::SchedPolicySet,
         Method::MetricsExport,
         Method::TraceGet,
+        Method::CompileSubmit,
+        Method::CompileStatus,
         Method::AgentHello,
         Method::AgentStatus,
         Method::NodeList,
@@ -427,6 +446,7 @@ impl Method {
         Method::AgentProgram,
         Method::AgentStream,
         Method::AgentEvents,
+        Method::AgentFetchBitstream,
     ];
 
     pub fn name(self) -> &'static str {
@@ -463,6 +483,8 @@ impl Method {
             Method::SchedPolicySet => "sched_policy_set",
             Method::MetricsExport => "metrics_export",
             Method::TraceGet => "trace_get",
+            Method::CompileSubmit => "compile_submit",
+            Method::CompileStatus => "compile_status",
             Method::AgentHello => "agent.hello",
             Method::AgentStatus => "agent.status",
             Method::NodeList => "node_list",
@@ -473,6 +495,7 @@ impl Method {
             Method::AgentProgram => "agent.program",
             Method::AgentStream => "agent.stream",
             Method::AgentEvents => "agent.events",
+            Method::AgentFetchBitstream => "agent.fetch_bitstream",
         }
     }
 
@@ -840,6 +863,11 @@ pub struct AllocVfpgaRequest {
     pub co_located: Option<bool>,
     /// Board-model constraint ("vc707", "ml605").
     pub board: Option<String>,
+    /// Core the tenant intends to program — a prefetch hint: the
+    /// bitstream cache starts warming this design while the request
+    /// queues, and federated placement prefers nodes already holding
+    /// it. Never a constraint; an unknown name is simply ignored.
+    pub core: Option<String>,
 }
 
 impl AllocVfpgaRequest {
@@ -856,6 +884,7 @@ impl AllocVfpgaRequest {
             regions: None,
             co_located: None,
             board: None,
+            core: None,
         }
     }
 
@@ -876,6 +905,9 @@ impl AllocVfpgaRequest {
         }
         if let Some(b) = &self.board {
             j.set("board", Json::from(b.as_str()));
+        }
+        if let Some(c) = &self.core {
+            j.set("core", Json::from(c.as_str()));
         }
         j
     }
@@ -914,6 +946,7 @@ impl AllocVfpgaRequest {
             regions,
             co_located: p.get("co_located").as_bool(),
             board: opt_str(p, "board"),
+            core: opt_str(p, "core"),
         })
     }
 }
@@ -3374,6 +3407,198 @@ impl TraceGetResponse {
     }
 }
 
+// ================================================== bitstream cache
+
+/// `compile_submit` — ahead-of-time compile of `core` for `part`
+/// into the cluster bitstream cache. Absent `part` takes the default
+/// VC707 part; an unknown core or part fails synchronously.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompileSubmitRequest {
+    pub user: UserId,
+    pub core: String,
+    pub part: Option<String>,
+}
+
+impl CompileSubmitRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("user", Json::from(self.user.to_string())),
+            ("core", Json::from(self.core.as_str())),
+        ]);
+        if let Some(p) = &self.part {
+            j.set("part", Json::from(p.as_str()));
+        }
+        j
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<CompileSubmitRequest, ApiError> {
+        Ok(CompileSubmitRequest {
+            user: want_id(p, "user", UserId::parse)?,
+            core: want_str(p, "core")?,
+            part: opt_str(p, "part"),
+        })
+    }
+}
+
+/// `compile_submit` response: the artifact's content digest and how
+/// the request resolved — `cached` (already in the store),
+/// `submitted` (a fresh flow job started; wait on `job`), or
+/// `coalesced` (another tenant's in-flight flow job is building this
+/// digest; `job` is theirs, shared).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompileSubmitResponse {
+    pub digest: String,
+    pub state: String,
+    pub job: Option<JobId>,
+    /// Owner token of the flow job — subscribe with it to watch the
+    /// job's progress events.
+    pub lease: Option<LeaseToken>,
+}
+
+impl CompileSubmitResponse {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("digest", Json::from(self.digest.as_str())),
+            ("state", Json::from(self.state.as_str())),
+        ]);
+        if let Some(job) = self.job {
+            j.set("job", Json::from(job.to_string()));
+        }
+        if let Some(t) = self.lease {
+            j.set("lease", Json::from(t.to_string()));
+        }
+        j
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<CompileSubmitResponse, ApiError> {
+        let job = match p.get("job").as_str() {
+            None => None,
+            Some(s) => Some(JobId::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "bad id in field 'job': '{s}'"
+                ))
+            })?),
+        };
+        Ok(CompileSubmitResponse {
+            digest: want_str(p, "digest")?,
+            state: want_str(p, "state")?,
+            job,
+            lease: opt_lease(p, "lease")?,
+        })
+    }
+}
+
+/// `compile_status` — poll a cache digest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompileStatusRequest {
+    pub digest: String,
+}
+
+impl CompileStatusRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("digest", Json::from(self.digest.as_str()))])
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<CompileStatusRequest, ApiError> {
+        Ok(CompileStatusRequest {
+            digest: want_str(p, "digest")?,
+        })
+    }
+}
+
+/// `compile_status` response: `cached` | `running` (with the job to
+/// wait on) | `unknown`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompileStatusResponse {
+    pub digest: String,
+    pub state: String,
+    pub job: Option<JobId>,
+}
+
+impl CompileStatusResponse {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("digest", Json::from(self.digest.as_str())),
+            ("state", Json::from(self.state.as_str())),
+        ]);
+        if let Some(job) = self.job {
+            j.set("job", Json::from(job.to_string()));
+        }
+        j
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<CompileStatusResponse, ApiError> {
+        let job = match p.get("job").as_str() {
+            None => None,
+            Some(s) => Some(JobId::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "bad id in field 'job': '{s}'"
+                ))
+            })?),
+        };
+        Ok(CompileStatusResponse {
+            digest: want_str(p, "digest")?,
+            state: want_str(p, "state")?,
+            job,
+        })
+    }
+}
+
+/// `agent.fetch_bitstream` — a node daemon pulling an artifact it is
+/// missing from the management cache, by core/part. The reply is
+/// multi-frame: a stream header carrying the transfer metadata
+/// ([`crate::bitstream::Bitstream::to_transfer_json`] without the
+/// payload), then the payload as protocol-4 `BIN` frames (base64
+/// stream frames on v3), then the terminal frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FetchBitstreamRequest {
+    pub core: String,
+    pub part: String,
+    /// Self-identification of the fetching node daemon (absent for
+    /// plain clients) — the coordinator marks that node warm for the
+    /// core so later placements of the same design prefer it.
+    pub node: Option<NodeId>,
+}
+
+impl FetchBitstreamRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("core", Json::from(self.core.as_str())),
+            ("part", Json::from(self.part.as_str())),
+        ]);
+        if let Some(n) = self.node {
+            j.set("node", Json::from(n.to_string()));
+        }
+        j
+    }
+
+    pub fn from_json(
+        p: &Json,
+    ) -> Result<FetchBitstreamRequest, ApiError> {
+        let node = match p.get("node").as_str() {
+            None => None,
+            Some(s) => Some(NodeId::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "bad id in field 'node': '{s}'"
+                ))
+            })?),
+        };
+        Ok(FetchBitstreamRequest {
+            core: want_str(p, "core")?,
+            part: want_str(p, "part")?,
+            node,
+        })
+    }
+}
+
 // ============================================================ agent
 
 #[derive(Debug, Clone, PartialEq)]
@@ -3475,6 +3700,10 @@ pub struct AgentAdmitRequest {
     pub regions: Option<u32>,
     pub co_located: Option<bool>,
     pub board: Option<String>,
+    /// Core the tenant intends to program — a cache-affinity hint
+    /// for placement (nodes already holding the artifact win ties),
+    /// never a constraint.
+    pub core: Option<String>,
     /// Mint the lease under this pre-existing token.
     pub adopt: Option<LeaseToken>,
 }
@@ -3499,6 +3728,9 @@ impl AgentAdmitRequest {
         }
         if let Some(b) = &self.board {
             j.set("board", Json::from(b.as_str()));
+        }
+        if let Some(c) = &self.core {
+            j.set("core", Json::from(c.as_str()));
         }
         set_opt_lease(&mut j, "adopt", self.adopt);
         j
@@ -3538,6 +3770,7 @@ impl AgentAdmitRequest {
             regions,
             co_located: p.get("co_located").as_bool(),
             board: opt_str(p, "board"),
+            core: opt_str(p, "core"),
             adopt: opt_lease(p, "adopt")?,
         })
     }
@@ -4295,6 +4528,7 @@ mod tests {
             regions: Some(4),
             co_located: Some(true),
             board: Some("vc707".to_string()),
+            core: Some("matmul16".to_string()),
         };
         assert_eq!(
             AllocVfpgaRequest::from_json(&req.to_json()).unwrap(),
@@ -4316,6 +4550,60 @@ mod tests {
         j.set("regions", Json::from(0u64));
         let err = AllocVfpgaRequest::from_json(&j).unwrap_err();
         assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn compile_structs_roundtrip() {
+        let req = CompileSubmitRequest {
+            user: UserId(4),
+            core: "matmul16".to_string(),
+            part: Some("xc7vx485t".to_string()),
+        };
+        assert_eq!(
+            CompileSubmitRequest::from_json(&req.to_json()).unwrap(),
+            req
+        );
+        let resp = CompileSubmitResponse {
+            digest: "d".repeat(64),
+            state: "submitted".to_string(),
+            job: Some(JobId(9)),
+            lease: Some(LeaseToken::mint()),
+        };
+        assert_eq!(
+            CompileSubmitResponse::from_json(&resp.to_json()).unwrap(),
+            resp
+        );
+        // Cached responses carry no job/lease and stay that way.
+        let cached = CompileSubmitResponse {
+            digest: "d".repeat(64),
+            state: "cached".to_string(),
+            job: None,
+            lease: None,
+        };
+        assert_eq!(
+            CompileSubmitResponse::from_json(&cached.to_json())
+                .unwrap(),
+            cached
+        );
+        let status = CompileStatusResponse {
+            digest: "d".repeat(64),
+            state: "running".to_string(),
+            job: Some(JobId(9)),
+        };
+        assert_eq!(
+            CompileStatusResponse::from_json(&status.to_json())
+                .unwrap(),
+            status
+        );
+        let fetch = FetchBitstreamRequest {
+            core: "matmul16".to_string(),
+            part: "xc7vx485t".to_string(),
+            node: Some(NodeId(3)),
+        };
+        assert_eq!(
+            FetchBitstreamRequest::from_json(&fetch.to_json()).unwrap(),
+            fetch
+        );
     }
 
     #[test]

@@ -797,6 +797,132 @@ impl Client {
         TraceGetResponse::from_json(&body)
     }
 
+    // --------------------------------------- typed: bitstream cache
+
+    /// Submit an ahead-of-time compile for a core. Returns a digest
+    /// ticket: `cached` immediately, or `submitted` / `coalesced`
+    /// with the flow job to `job_wait` on.
+    pub fn compile_submit(
+        &mut self,
+        req: &CompileSubmitRequest,
+    ) -> Result<CompileSubmitResponse, ApiError> {
+        let body =
+            self.call_v2(Method::CompileSubmit.name(), req.to_json())?;
+        let resp = CompileSubmitResponse::from_json(&body)?;
+        if let (Some(job), Some(t)) = (resp.job, resp.lease) {
+            self.job_tokens.insert(job, t);
+        }
+        Ok(resp)
+    }
+
+    /// Poll a compile digest: `cached`, `running`, or `unknown`.
+    pub fn compile_status(
+        &mut self,
+        digest: &str,
+    ) -> Result<CompileStatusResponse, ApiError> {
+        let req = CompileStatusRequest {
+            digest: digest.to_string(),
+        };
+        let body =
+            self.call_v2(Method::CompileStatus.name(), req.to_json())?;
+        CompileStatusResponse::from_json(&body)
+    }
+
+    /// Pull a bitstream artifact from the management cache — the node
+    /// daemon's warm-up path (`agent.fetch_bitstream`). The reply is
+    /// a stream: a JSON header with the lossless transfer metadata
+    /// (payload out-of-band), then the payload as data frames —
+    /// binary when this client speaks protocol 4, base64
+    /// `stream_data` events on protocol 3 — then a terminal frame
+    /// whose stats carry the byte count and sha256. The reassembled
+    /// bitstream is CRC-verified before it is returned. `node` is the
+    /// caller's self-identification when it is a node daemon — the
+    /// management side marks that node warm for the core.
+    pub fn fetch_bitstream(
+        &mut self,
+        core: &str,
+        part: &str,
+        node: Option<crate::util::ids::NodeId>,
+    ) -> Result<crate::bitstream::Bitstream, ApiError> {
+        let req = FetchBitstreamRequest {
+            core: core.to_string(),
+            part: part.to_string(),
+            node,
+        };
+        let resp = self.round_trip(
+            Method::AgentFetchBitstream.name(),
+            req.to_json(),
+        )?;
+        let is_stream = resp.stream;
+        let meta = resp.into_api_result()?;
+        if !is_stream {
+            return Err(ApiError::internal(
+                "fetch_bitstream response was not a stream header",
+            ));
+        }
+        let mut payload = Vec::new();
+        let mut last_seq = 0u64;
+        loop {
+            let frame = read_wire_frame(&mut self.stream)
+                .map_err(|e| ApiError::internal(format!("io: {e}")))?
+                .ok_or_else(|| {
+                    ApiError::internal("io: eof mid-transfer")
+                })?;
+            match frame {
+                WireFrame::Bin(b) => {
+                    if b.seq <= last_seq {
+                        return Err(ApiError::internal(
+                            "transfer frame sequence went backwards",
+                        ));
+                    }
+                    last_seq = b.seq;
+                    payload.extend_from_slice(&b.payload);
+                }
+                WireFrame::Json(v) => {
+                    let f = StreamFrame::from_json(&v)
+                        .map_err(ApiError::internal)?;
+                    if f.end {
+                        if let Some(e) = f.error {
+                            return Err(e);
+                        }
+                        break;
+                    }
+                    if f.seq <= last_seq {
+                        return Err(ApiError::internal(
+                            "transfer frame sequence went backwards",
+                        ));
+                    }
+                    last_seq = f.seq;
+                    if let Some(ev) = &f.event {
+                        if let Some(b64) = ev.get("b64").as_str() {
+                            let bytes =
+                                crate::util::bytes::b64_decode(b64)
+                                    .map_err(|e| {
+                                        ApiError::internal(format!(
+                                            "bad transfer frame: {e}"
+                                        ))
+                                    })?;
+                            payload.extend_from_slice(&bytes);
+                        }
+                    }
+                }
+            }
+        }
+        let bs = crate::bitstream::Bitstream::from_transfer_json(
+            &meta,
+            Some(payload),
+        )
+        .ok_or_else(|| {
+            ApiError::internal("unparsable bitstream transfer header")
+        })?;
+        if !bs.crc_ok() {
+            return Err(ApiError::internal(
+                "bitstream transfer corrupted: CRC mismatch",
+            ));
+        }
+        Ok(bs)
+    }
+
     // ------------------------------------------------- typed: agent
 
     pub fn agent_hello(

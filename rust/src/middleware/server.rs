@@ -44,9 +44,10 @@ use super::proto::{
     write_data_frame, write_frame, BinFrame, Request, Response,
     StreamFrame, WireFrame,
 };
+use crate::bitcache::{BitstreamCache, CompileService, Prefetcher};
 use crate::bitstream::Bitstream;
 use crate::config::ServiceModel;
-use crate::fpga::board::BoardKind;
+use crate::fpga::board::{BoardKind, BoardSpec};
 use crate::hls::synth::{CoreKind, CoreSpec, Synthesizer};
 use crate::hypervisor::{AllocKind, Hypervisor, HypervisorError};
 use crate::rc2f::stream::StreamConfig;
@@ -90,7 +91,20 @@ struct ServerInner {
     /// admissions route across registered node daemons instead of
     /// the local hypervisor.
     cluster: Option<Arc<crate::cluster::Coordinator>>,
+    /// Cluster-wide content-addressed bitstream cache (the warm
+    /// program tier; persists under `--state DIR/bitcache`).
+    cache: Arc<BitstreamCache>,
+    /// AOT compile service fronting the HLS flow (`compile_submit`).
+    compiler: Arc<CompileService>,
+    /// Admission-driven prefetcher fed by the scheduler's queue sink.
+    prefetch: Arc<Prefetcher>,
 }
+
+/// Artifacts the management cache keeps resident before LRU eviction.
+const BITCACHE_CAPACITY: usize = 32;
+
+/// Payload chunk size for `agent.fetch_bitstream` data frames.
+const FETCH_CHUNK: usize = 4096;
 
 impl ManagementServer {
     /// Spawn on an ephemeral loopback port (no durable state).
@@ -151,6 +165,26 @@ impl ManagementServer {
         jobs.set_metrics(Arc::clone(&hv.metrics));
         jobs.set_bus(Arc::clone(&bus));
         wire_event_sources(&hv, &sched, &bus);
+        let cache = Arc::new(BitstreamCache::open(
+            BITCACHE_CAPACITY,
+            state_dir,
+            Arc::clone(&hv.metrics),
+        ));
+        let compiler = Arc::new(CompileService::new(
+            Arc::clone(&jobs),
+            Arc::clone(&cache),
+            Arc::clone(&hv.metrics),
+        ));
+        let prefetch = Arc::new(Prefetcher::new(
+            Arc::clone(&compiler),
+            Arc::clone(&hv.metrics),
+        ));
+        // Queued admissions warm the cache: the sink stays cheap (map
+        // lookup + async job submit) per the scheduler's contract.
+        let sink_prefetch = Arc::clone(&prefetch);
+        sched.set_prefetch_sink(Arc::new(move |hint| {
+            let _ = sink_prefetch.hint(&hint);
+        }));
         let tracer = Tracer::new(Arc::clone(&hv.clock));
         let cluster = if federated {
             Some(crate::cluster::Coordinator::new(
@@ -170,6 +204,9 @@ impl ManagementServer {
             cores: build_core_library(),
             agents: Mutex::new(BTreeMap::new()),
             cluster,
+            cache,
+            compiler,
+            prefetch,
         });
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
@@ -235,6 +272,16 @@ impl ManagementServer {
     /// The flight recorder behind this server (benches toggle it).
     pub fn tracer(&self) -> &Arc<Tracer> {
         &self.inner.tracer
+    }
+
+    /// The cluster bitstream cache behind this server.
+    pub fn bitcache(&self) -> &Arc<BitstreamCache> {
+        &self.inner.cache
+    }
+
+    /// The AOT compile service behind this server.
+    pub fn compiler(&self) -> &Arc<CompileService> {
+        &self.inner.compiler
     }
 
     pub fn shutdown(&mut self) {
@@ -382,6 +429,25 @@ fn serve_conn(
                             .tracer
                             .root("rpc.subscribe", req.trace);
                         serve_subscription(
+                            &mut stream,
+                            &inner,
+                            proto,
+                            req.id,
+                            &req.params,
+                        )?;
+                        continue;
+                    }
+                    Ok(proto)
+                        if req.method
+                            == Method::AgentFetchBitstream.name() =>
+                    {
+                        // Artifact transfer: header + payload frames
+                        // + terminal, served out-of-table like the
+                        // data plane below.
+                        let _root = inner
+                            .tracer
+                            .root("rpc.fetch_bitstream", req.trace);
+                        serve_fetch_bitstream(
                             &mut stream,
                             &inner,
                             proto,
@@ -782,6 +848,86 @@ fn relay_stream_data(
     }
 }
 
+/// Serve `agent.fetch_bitstream`: the artifact-transfer plane a node
+/// daemon uses to pull a missing bitstream off the management cache
+/// before programming (the caller is the *agent*; the management
+/// server serves). A JSON header carries the lossless transfer
+/// metadata with the payload out-of-band, then the payload bytes
+/// follow as data frames — binary for protocol-4 callers, base64
+/// `stream_data` events for protocol 3 — then a JSON terminal frame
+/// whose stats carry the byte count and sha256 for the receiver to
+/// verify reassembly against. A cache miss falls back to the
+/// prebuilt core library so a cold cluster can still seed its nodes.
+fn serve_fetch_bitstream(
+    stream: &mut TcpStream,
+    inner: &Arc<ServerInner>,
+    proto: u32,
+    id: Option<u64>,
+    params: &Json,
+) -> std::io::Result<()> {
+    let binary = proto >= PROTO_DATA_FRAMES;
+    let looked = (|| {
+        if proto < 3 {
+            return Err(ApiError::bad_request(
+                "fetch_bitstream requires protocol 3",
+            ));
+        }
+        let req = FetchBitstreamRequest::from_json(params)?;
+        let bs = inner
+            .cache
+            .lookup_core(&req.core, &req.part)
+            .or_else(|| inner.cores.get(&req.core).cloned())
+            .ok_or_else(|| {
+                ApiError::new(
+                    ErrorCode::UnknownCore,
+                    format!(
+                        "no cached artifact or library core '{}'",
+                        req.core
+                    ),
+                )
+            })?;
+        Ok((req, bs))
+    })();
+    let (req, bs) = match looked {
+        Err(e) => {
+            return write_frame(
+                stream,
+                &Response::failure(id, e).to_json(),
+            )
+        }
+        Ok(found) => found,
+    };
+    if let (Some(cl), Some(node)) = (inner.cluster.as_ref(), req.node) {
+        // A daemon identified itself: it now holds this artifact, so
+        // placement can prefer it for future same-design admissions.
+        cl.note_cached(node, &req.core);
+    }
+    inner.hv.metrics.counter("bitcache.fetch_served").inc();
+    write_frame(
+        stream,
+        &Response::stream_header(id, bs.to_transfer_json(false))
+            .to_json(),
+    )?;
+    let mut seq = 0u64;
+    for chunk in bs.payload.chunks(FETCH_CHUNK) {
+        seq += 1;
+        write_data_frame(stream, binary, seq, chunk)?;
+    }
+    if binary {
+        seq += 1;
+        write_bin_frame(stream, &BinFrame::end_marker(seq))?;
+    }
+    let stats = Json::obj(vec![
+        ("bytes", Json::from(bs.payload.len() as u64)),
+        ("sha256", Json::from(bs.sha256.as_str())),
+    ]);
+    write_frame(
+        stream,
+        &StreamFrame::terminal_with_stats(seq + 1, None, stats)
+            .to_json(),
+    )
+}
+
 // ===================================================== dispatching
 
 /// Per-request handler context. Every request that reaches a handler
@@ -830,15 +976,19 @@ const HANDLERS: &[(Method, Handler)] = &[
     (Method::SchedPolicySet, h_sched_policy_set),
     (Method::MetricsExport, h_metrics_export),
     (Method::TraceGet, h_trace_get),
+    (Method::CompileSubmit, h_compile_submit),
+    (Method::CompileStatus, h_compile_status),
     (Method::NodeList, h_node_list),
     (Method::ClusterRegister, h_cluster_register),
 ];
 
 /// Whether the management server serves `method` (dispatch-table
 /// completeness is asserted by tests against [`Method::ALL`]).
-/// `subscribe` is served out-of-table (multi-frame response).
+/// `subscribe` and `agent.fetch_bitstream` are served out-of-table
+/// (multi-frame responses).
 pub fn method_is_served(method: Method) -> bool {
     method == Method::Subscribe
+        || method == Method::AgentFetchBitstream
         || HANDLERS.iter().any(|(m, _)| *m == method)
 }
 
@@ -966,6 +1116,11 @@ fn h_alloc_vfpga(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
         ));
     }
     let class = req.class.unwrap_or(RequestClass::Interactive);
+    if let Some(core) = &req.core {
+        // Prefetch hint, never a constraint: remember the intended
+        // core so a queue wait warms the cache for this tenant.
+        ctx.inner.prefetch.note_core(req.user, core);
+    }
     if let Some(cl) = &ctx.inner.cluster {
         // Federated: route the admission across registered node
         // daemons. Tenants cross the node boundary by *name* (each
@@ -992,6 +1147,7 @@ fn h_alloc_vfpga(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
             regions: req.regions,
             co_located: req.co_located,
             board: req.board.clone(),
+            core: req.core.clone(),
             adopt: None,
         })?;
         return Ok(resp.to_json());
@@ -1138,12 +1294,31 @@ fn h_program_core(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     let handle = authorize(ctx, req.alloc, req.lease)?;
     let user = handle.tenant();
     let inner = ctx.inner;
-    let bitfile = inner.cores.get(&req.core).ok_or_else(|| {
-        ApiError::new(
-            ErrorCode::UnknownCore,
-            format!("unknown core '{}'", req.core),
-        )
-    })?;
+    inner.prefetch.note_core(user, &req.core);
+    // Warm tier first: an AOT artifact in the cache programs without
+    // any compile (`bitcache.hit`); a miss (`bitcache.miss`) falls
+    // back to the prebuilt library. The resident tier below both —
+    // region already holding this exact design — is the hypervisor's
+    // call (`bitcache.resident_skip`).
+    let cached = {
+        let part = handle
+            .fpga()
+            .and_then(|f| {
+                let db = inner.hv.db.lock().unwrap();
+                db.device(f).map(|d| BoardSpec::of(d.board).part)
+            })
+            .unwrap_or(BoardSpec::vc707().part);
+        inner.cache.lookup_core(&req.core, part)
+    };
+    let bitfile = match &cached {
+        Some(bs) => bs,
+        None => inner.cores.get(&req.core).ok_or_else(|| {
+            ApiError::new(
+                ErrorCode::UnknownCore,
+                format!("unknown core '{}'", req.core),
+            )
+        })?,
+    };
     // Retarget + PR under one region pin: a relocation cannot slip
     // between placement resolution and programming.
     let d = inner
@@ -1515,6 +1690,42 @@ fn h_metrics_export(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {
     ctx.inner.hv.refresh_region_gauges();
     let snap = ctx.inner.hv.metrics.snapshot();
     Ok(MetricsExportResponse::from_snapshot(&snap).to_json())
+}
+
+fn h_compile_submit(
+    ctx: &Ctx<'_>,
+    p: &Json,
+) -> Result<Json, ApiError> {
+    let req = CompileSubmitRequest::from_json(p)?;
+    let part = req
+        .part
+        .clone()
+        .unwrap_or_else(|| BoardSpec::vc707().part.to_string());
+    // Remember the ask: a later queued admission from this tenant
+    // prefetches the same core.
+    ctx.inner.prefetch.note_core(req.user, &req.core);
+    let ticket = ctx.inner.compiler.submit(&req.core, &part)?;
+    Ok(CompileSubmitResponse {
+        digest: ticket.digest,
+        state: ticket.state.to_string(),
+        job: ticket.job,
+        lease: ticket.token,
+    }
+    .to_json())
+}
+
+fn h_compile_status(
+    ctx: &Ctx<'_>,
+    p: &Json,
+) -> Result<Json, ApiError> {
+    let req = CompileStatusRequest::from_json(p)?;
+    let ticket = ctx.inner.compiler.status(&req.digest);
+    Ok(CompileStatusResponse {
+        digest: ticket.digest,
+        state: ticket.state.to_string(),
+        job: ticket.job,
+    }
+    .to_json())
 }
 
 fn h_trace_get(ctx: &Ctx<'_>, p: &Json) -> Result<Json, ApiError> {

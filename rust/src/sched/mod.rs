@@ -371,6 +371,11 @@ pub struct Scheduler {
     /// Telemetry event sink ([`Scheduler::set_event_sink`]); the
     /// middleware server fans these to `subscribe` clients.
     event_sink: Mutex<Option<SchedEventSink>>,
+    /// Admission-driven prefetch sink
+    /// ([`Scheduler::set_prefetch_sink`]): every enqueued request is
+    /// announced so the bitstream cache can compile or fetch the
+    /// tenant's artifact while the request waits in the queue.
+    prefetch_sink: Mutex<Option<PrefetchSink>>,
     /// Last queue depth pushed to the sink — depth events fire on
     /// change, not on every gauge refresh.
     last_queue_depth: AtomicI64,
@@ -406,6 +411,24 @@ pub enum SchedEvent {
 
 /// Callback the scheduler pushes [`SchedEvent`]s through.
 pub type SchedEventSink = Arc<dyn Fn(SchedEvent) + Send + Sync>;
+
+/// What the scheduler knows about a queued admission at enqueue time
+/// — enough for the bitstream cache to warm the right artifact before
+/// the grant lands. Deliberately *not* a [`SchedEvent`]: it feeds the
+/// cache, not the telemetry stream.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchHint {
+    pub tenant: UserId,
+    /// Board constraint, when the request pinned one.
+    pub board: Option<BoardKind>,
+    /// Gang width (how many regions will want the artifact).
+    pub regions: u32,
+}
+
+/// Callback the scheduler pushes [`PrefetchHint`]s through. Runs
+/// under scheduler locks: it must be cheap and must never call back
+/// into the scheduler.
+pub type PrefetchSink = Arc<dyn Fn(PrefetchHint) + Send + Sync>;
 
 /// A durable snapshot prepared under the state lock and written after
 /// it drops (disk IO never blocks admissions). Carries the WAL handle
@@ -477,6 +500,7 @@ impl Scheduler {
             persist_written: Mutex::new(0),
             preempt_policy: Mutex::new(PreemptPolicy::default()),
             event_sink: Mutex::new(None),
+            prefetch_sink: Mutex::new(None),
             last_queue_depth: AtomicI64::new(0),
         })
     }
@@ -485,6 +509,12 @@ impl Scheduler {
     /// placement changes). One sink; installing replaces the old one.
     pub fn set_event_sink(&self, sink: SchedEventSink) {
         *self.event_sink.lock().unwrap() = Some(sink);
+    }
+
+    /// Install the admission-driven prefetch sink (the bitstream
+    /// cache). One sink; installing replaces the old one.
+    pub fn set_prefetch_sink(&self, sink: PrefetchSink) {
+        *self.prefetch_sink.lock().unwrap() = Some(sink);
     }
 
     /// Push one event through the sink, if any.
@@ -1171,6 +1201,17 @@ impl Scheduler {
         }
         st.ledger.row_mut(req.tenant).queued += 1;
         self.hv.metrics.counter("sched.enqueued").inc();
+        // Announce the queued admission to the bitstream cache: the
+        // wait in this queue is exactly the window in which an AOT
+        // compile or a cross-node artifact fetch is free.
+        let prefetch = self.prefetch_sink.lock().unwrap().clone();
+        if let Some(prefetch) = prefetch {
+            prefetch(PrefetchHint {
+                tenant: req.tenant,
+                board: req.constraints.board,
+                regions: req.regions.get(),
+            });
+        }
         // Capacity may already be free (e.g. first submission).
         self.pump_locked(st);
         self.granted.notify_all();

@@ -11,6 +11,7 @@ pub mod bytes;
 pub mod cli;
 pub mod clock;
 pub mod fsx;
+pub mod hash;
 pub mod ids;
 pub mod json;
 pub mod logging;

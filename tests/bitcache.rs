@@ -1,0 +1,344 @@
+//! Integration tests for the cluster bitstream cache + AOT compile
+//! service: the cold → warm → resident program-latency tiers over
+//! the wire, compile coalescing under concurrent submits, the
+//! `agent.fetch_bitstream` transfer plane (binary and base64), and
+//! an LRU + persistence property test against the on-disk store.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+
+use rc3e::bitcache::{BitstreamCache, CacheKey};
+use rc3e::bitstream::BitstreamBuilder;
+use rc3e::fpga::resources::Resources;
+use rc3e::hls::flow::region_window;
+use rc3e::hypervisor::Hypervisor;
+use rc3e::metrics::Registry;
+use rc3e::middleware::api::{CompileSubmitRequest, ErrorCode};
+use rc3e::middleware::{Client, ManagementServer};
+use rc3e::testing::prop::{forall, Gen};
+use rc3e::util::clock::VirtualClock;
+
+struct Cloud {
+    server: ManagementServer,
+    client: Client,
+}
+
+fn cloud() -> Cloud {
+    let hv = Arc::new(
+        Hypervisor::boot_paper_testbed(VirtualClock::new()).unwrap(),
+    );
+    let server = ManagementServer::spawn(hv, 69.0).unwrap();
+    let client = Client::connect(server.addr()).unwrap();
+    Cloud { server, client }
+}
+
+/// Counter value from a metrics export, 0 when unregistered.
+fn counter(c: &mut Client, name: &str) -> u64 {
+    c.metrics_export()
+        .unwrap()
+        .counters
+        .iter()
+        .find(|(n, _)| n.as_str() == name)
+        .map(|(_, v)| *v)
+        .unwrap_or(0)
+}
+
+// ================================================== latency tiers
+
+/// The tentpole contract: cold (flow + PR) must dwarf warm (PR
+/// only), which must dwarf resident (no reconfiguration at all) —
+/// and all three tiers must be visible as `bitcache.*` counters on
+/// the operator metrics surface.
+#[test]
+fn cold_warm_resident_program_tiers() {
+    let mut c = cloud();
+    let user = c.client.add_user("tenant").unwrap().user;
+    let lease = c.client.alloc_vfpga(user, None, None).unwrap();
+
+    // An uncompiled core programs from the prebuilt library — a
+    // cache miss, not an error.
+    c.client.program_core(user, lease.alloc, "loopback").unwrap();
+    assert!(counter(&mut c.client, "bitcache.miss") >= 1);
+
+    // Cold: one AOT flow run (background job on the build server's
+    // private clock), then PR on first use of the artifact.
+    let sub = c
+        .client
+        .compile_submit(&CompileSubmitRequest {
+            user,
+            core: "matmul16".to_string(),
+            part: None,
+        })
+        .unwrap();
+    assert_eq!(sub.state, "submitted");
+    let result = c.client.job_wait_done(sub.job.unwrap()).unwrap();
+    assert_eq!(result.get("digest").as_str().unwrap(), sub.digest);
+    let build_ms = result.get("build_ms").as_f64().unwrap();
+
+    // Warm: the artifact is cached, programming pays only PR.
+    let warm =
+        c.client.program_core(user, lease.alloc, "matmul16").unwrap();
+    assert!(warm.pr_ms > 0.0, "warm PR must cost real time");
+    assert!(counter(&mut c.client, "bitcache.hit") >= 1);
+    let cold_ms = build_ms + warm.pr_ms;
+
+    // Resident: the region already holds this exact design — the
+    // hypervisor skips reconfiguration entirely.
+    let resident =
+        c.client.program_core(user, lease.alloc, "matmul16").unwrap();
+    assert_eq!(resident.pr_ms, 0.0);
+    assert!(counter(&mut c.client, "bitcache.resident_skip") >= 1);
+
+    // Tier ordering (the acceptance floor is 5x / 20x; the model
+    // puts the true ratios orders of magnitude higher).
+    assert!(
+        cold_ms >= 5.0 * warm.pr_ms,
+        "cold {cold_ms} ms vs warm {} ms",
+        warm.pr_ms
+    );
+    assert!(cold_ms >= 20.0 * resident.pr_ms.max(1.0));
+
+    // The digest now answers `cached` without a job.
+    let status = c.client.compile_status(&sub.digest).unwrap();
+    assert_eq!(status.state, "cached");
+    assert_eq!(status.job, None);
+}
+
+// ==================================================== coalescing
+
+/// N tenants racing `compile_submit` for one digest share a single
+/// flow run: every ticket names the same digest and the server runs
+/// the HLS flow exactly once.
+#[test]
+fn concurrent_submits_coalesce_to_one_flow_run() {
+    let mut c = cloud();
+    let addr = c.server.addr();
+    const N: usize = 4;
+    let barrier = Arc::new(Barrier::new(N));
+    let digests: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|i| {
+                let barrier = Arc::clone(&barrier);
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let user = client
+                        .add_user(&format!("racer-{i}"))
+                        .unwrap()
+                        .user;
+                    barrier.wait();
+                    let sub = client
+                        .compile_submit(&CompileSubmitRequest {
+                            user,
+                            core: "saxpy".to_string(),
+                            part: None,
+                        })
+                        .unwrap();
+                    assert!(matches!(
+                        sub.state.as_str(),
+                        "submitted" | "coalesced" | "cached"
+                    ));
+                    if let Some(job) = sub.job {
+                        client.job_wait_done(job).unwrap();
+                    }
+                    sub.digest
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(digests.iter().all(|d| d == &digests[0]));
+    assert_eq!(
+        counter(&mut c.client, "bitcache.compile_runs"),
+        1,
+        "coalescing must collapse {N} submits into one flow run"
+    );
+    // And a late submit finds the artifact already cached.
+    let user = c.client.add_user("late").unwrap().user;
+    let late = c
+        .client
+        .compile_submit(&CompileSubmitRequest {
+            user,
+            core: "saxpy".to_string(),
+            part: None,
+        })
+        .unwrap();
+    assert_eq!(late.state, "cached");
+    assert_eq!(late.digest, digests[0]);
+}
+
+// ============================================== artifact transfer
+
+/// `agent.fetch_bitstream` over both wire encodings: protocol-4
+/// binary data frames and the protocol-3 base64 fallback must
+/// reassemble byte-identical, CRC-clean artifacts.
+#[test]
+fn fetch_bitstream_binary_and_base64_agree() {
+    let mut c = cloud();
+    let part = "xc7vx485t";
+    let bin = c.client.fetch_bitstream("matmul16", part, None).unwrap();
+    assert!(bin.crc_ok());
+    assert_eq!(bin.meta.core, "matmul16");
+    assert!(!bin.payload.is_empty());
+
+    c.client.set_proto(3);
+    let b64 = c.client.fetch_bitstream("matmul16", part, None).unwrap();
+    assert!(b64.crc_ok());
+    assert_eq!(b64.sha256, bin.sha256);
+    assert_eq!(b64.payload, bin.payload);
+
+    let err = c
+        .client
+        .fetch_bitstream("no_such_core", part, None)
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownCore);
+}
+
+// ======================================= LRU + persistence (prop)
+
+const PROP_CORES: [&str; 6] =
+    ["alpha", "beta", "gamma", "delta", "eps", "zeta"];
+const PROP_CAP: usize = 3;
+
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    Admit(usize),
+    Lookup(usize),
+}
+
+fn prop_state_dir(tag: u64) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "rc3e-bitcache-prop-{}-{tag}",
+        std::process::id()
+    ))
+}
+
+/// Random admit/lookup sequences against a capacity-3 store, checked
+/// against a reference LRU model, then reopened from disk: the
+/// surviving set must match the model exactly and every reloaded
+/// artifact must still pass CRC.
+#[test]
+fn lru_eviction_and_persistence_survive_restart() {
+    let gen = Gen::new(|rng: &mut rc3e::util::rng::Rng, size| {
+        let len = 4 + rng.next_below(4 * size as u64 + 1) as usize;
+        (0..len)
+            .map(|_| {
+                let core =
+                    rng.next_below(PROP_CORES.len() as u64) as usize;
+                if rng.chance(0.4) {
+                    Op::Lookup(core)
+                } else {
+                    Op::Admit(core)
+                }
+            })
+            .collect::<Vec<Op>>()
+    });
+    let case = AtomicU64::new(0);
+    forall(0xB17CA, 30, &gen, |ops| {
+        let dir = prop_state_dir(case.fetch_add(1, Ordering::Relaxed));
+        let _ = std::fs::remove_dir_all(&dir);
+        let verdict = check_lru_case(ops, &dir);
+        let _ = std::fs::remove_dir_all(&dir);
+        verdict
+    })
+    .unwrap();
+}
+
+fn prop_bs(core: &str) -> rc3e::bitstream::Bitstream {
+    BitstreamBuilder::partial("xc7vx485t", core)
+        .resources(Resources::new(100, 100, 1, 1))
+        .frames(region_window(0, 1))
+        .payload_seed(0xB5 ^ core.len() as u64)
+        .build()
+}
+
+fn check_lru_case(ops: &[Op], dir: &Path) -> Result<(), String> {
+    let cache = BitstreamCache::open(
+        PROP_CAP,
+        Some(dir),
+        Arc::new(Registry::new()),
+    );
+    // Reference model: digest → last-touch tick, exact LRU.
+    let mut model: Vec<(String, u64)> = Vec::new();
+    let mut tick = 0u64;
+    for op in ops {
+        tick += 1;
+        match *op {
+            Op::Admit(i) => {
+                let core = PROP_CORES[i];
+                let key = CacheKey::new(core, "xc7vx485t");
+                let digest = cache
+                    .admit(&key, prop_bs(core), region_window(0, 1))
+                    .map_err(|e| format!("admit {core}: {e}"))?;
+                model.retain(|(d, _)| d != &digest);
+                model.push((digest, tick));
+                if model.len() > PROP_CAP {
+                    let victim = model
+                        .iter()
+                        .min_by_key(|(_, t)| *t)
+                        .unwrap()
+                        .0
+                        .clone();
+                    model.retain(|(d, _)| d != &victim);
+                }
+            }
+            Op::Lookup(i) => {
+                let digest =
+                    CacheKey::new(PROP_CORES[i], "xc7vx485t").digest();
+                let got = cache.lookup(&digest);
+                let want = model.iter().any(|(d, _)| d == &digest);
+                if got.is_some() != want {
+                    return Err(format!(
+                        "lookup {}: cache {} but model {}",
+                        PROP_CORES[i],
+                        if got.is_some() { "hit" } else { "missed" },
+                        if want { "holds it" } else { "does not" },
+                    ));
+                }
+                if want {
+                    model.retain(|(d, _)| d != &digest);
+                    model.push((digest, tick));
+                }
+            }
+        }
+    }
+    if cache.len() > PROP_CAP {
+        return Err(format!("over capacity: {}", cache.len()));
+    }
+    // Recency order must match the model (most-recent last).
+    let mut want: Vec<(String, u64)> = model.clone();
+    want.sort_by_key(|(_, t)| *t);
+    let got: Vec<String> =
+        cache.keys().iter().map(|k| k.digest()).collect();
+    let want: Vec<String> = want.into_iter().map(|(d, _)| d).collect();
+    if got != want {
+        return Err(format!("LRU order {got:?} != model {want:?}"));
+    }
+    // Restart: a reopened cache must hold exactly the survivors,
+    // each still CRC-clean.
+    drop(cache);
+    let reopened = BitstreamCache::open(
+        PROP_CAP,
+        Some(dir),
+        Arc::new(Registry::new()),
+    );
+    if reopened.len() != model.len() {
+        return Err(format!(
+            "reopened {} entries, model {}",
+            reopened.len(),
+            model.len()
+        ));
+    }
+    for (digest, _) in &model {
+        match reopened.lookup(digest) {
+            Some(bs) if bs.crc_ok() => {}
+            Some(_) => {
+                return Err(format!("{digest} reloaded corrupt"))
+            }
+            None => {
+                return Err(format!("{digest} lost across restart"))
+            }
+        }
+    }
+    Ok(())
+}
